@@ -1,0 +1,86 @@
+//! END-TO-END VALIDATION (E12): MicroNet inference through the full
+//! stack — build-time-trained weights (JAX, `make artifacts`), every
+//! multiplication executed in-memory on the crossbar simulator (Q8.8
+//! MultPIM batches across rows), soft errors injected in the gate
+//! stream, reliability policies compared. Reports accuracy vs p_gate for
+//! baseline / TMR, the in-simulator analogue of the paper's Fig. 4
+//! bottom, and cross-checks the PJRT (AOT JAX/Pallas) forward pass.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example nn_inference -- --samples 48
+//! ```
+//!
+//! Results are recorded in EXPERIMENTS.md §E12.
+
+use anyhow::Result;
+use remus::errs::ErrorModel;
+use remus::mmpu::{Mmpu, MmpuConfig, ReliabilityPolicy};
+use remus::nn::micronet::{EvalSet, MicroNet};
+use remus::runtime::{Manifest, Runtime};
+use remus::tmr::TmrMode;
+use remus::util::cli::Args;
+use remus::util::table::Table;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let samples = args.get_or("samples", 48usize);
+
+    let manifest = Manifest::load_default()?;
+    let net = MicroNet::load(&manifest)?;
+    let eval = EvalSet::load(&manifest)?.take(samples);
+    println!(
+        "MicroNet {}-{}-{} trained at build time; evaluating {} held-out samples\n",
+        net.indim, net.hidden, net.classes, eval.n
+    );
+
+    // Float reference.
+    let ref_logits = net.forward_f32(&eval.x, eval.n);
+    let ref_acc = net.accuracy(&ref_logits, &eval.labels);
+    println!("float32 reference accuracy: {:.1}%", 100.0 * ref_acc);
+
+    // PJRT (AOT JAX/Pallas) cross-check with identity fault masks.
+    if eval.n <= 64 {
+        let mut rt = Runtime::new()?;
+        let batch = 64;
+        let mut x = eval.x.clone();
+        x.resize(batch * net.indim, 0.0);
+        let ones1 = vec![1f32; net.indim * net.hidden];
+        let zeros1 = vec![0f32; net.indim * net.hidden];
+        let ones2 = vec![1f32; net.hidden * net.classes];
+        let zeros2 = vec![0f32; net.hidden * net.classes];
+        let logits = rt.run_micronet(
+            batch, &x, &net.w1, &net.b1, &net.w2, &net.b2, &ones1, &zeros1, &ones2, &zeros2,
+        )?;
+        let acc = net.accuracy(&logits[..eval.n * net.classes], &eval.labels);
+        println!("PJRT (AOT Pallas) accuracy:  {:.1}%  (platform: {})", 100.0 * acc, rt.platform());
+    }
+
+    // The full in-memory path across p_gate and policies.
+    let mut t = Table::new(
+        "in-memory inference accuracy (every multiply on the crossbar)",
+        &["p_gate", "baseline", "serial TMR"],
+    );
+    for &p in &[0.0, 1e-6, 1e-5, 1e-4] {
+        let mut row = vec![if p == 0.0 { "0".into() } else { format!("{p:.0e}") }];
+        for tmr in [TmrMode::Off, TmrMode::Serial] {
+            let mut mmpu = Mmpu::new(MmpuConfig {
+                rows: 128,
+                cols: 2048,
+                num_crossbars: 1,
+                policy: ReliabilityPolicy { ecc_m: None, tmr },
+                errors: if p == 0.0 { ErrorModel::none() } else { ErrorModel::direct_only(p) },
+                seed: 0xE2E,
+            });
+            let logits = net.forward_mmpu(&mut mmpu, &eval.x, eval.n)?;
+            let acc = net.accuracy(&logits, &eval.labels);
+            row.push(format!("{:.1}%", 100.0 * acc));
+        }
+        t.row(&row);
+    }
+    t.print();
+    println!(
+        "\nshape check (paper Fig. 4 bottom): baseline accuracy collapses with p_gate;\n\
+         TMR holds it at/near the clean accuracy until far higher error rates."
+    );
+    Ok(())
+}

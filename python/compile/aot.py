@@ -1,0 +1,150 @@
+"""AOT lowering: JAX/Pallas -> HLO text artifacts for the rust runtime.
+
+Interchange format is HLO *text*, not a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Every artifact is listed in `manifest.txt` (simple `key=value` lines)
+which `rust/src/runtime/artifacts.rs` parses. Shapes are static: one
+artifact per configuration.
+
+Usage: (cd python && python -m compile.aot --out ../artifacts)
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model, train
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+# (rows, cols, steps) configurations for the crossbar program executor.
+# s=256 covers N-bit adders; s=4096 covers 32-bit MultPIM (~3.5k gates).
+GATE_SCAN_CFGS = [(64, 64, 64), (128, 128, 256), (128, 128, 4096)]
+VOTE_CFGS = [(64, 64), (128, 128)]
+DIAG_CFGS = [(64, 16)]  # (blocks, m)
+MICRONET_BATCHES = [64, 512]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def emit(outdir, name, fn, specs, manifest, **meta):
+    lowered = jax.jit(fn).lower(*specs)
+    text = to_hlo_text(lowered)
+    fname = f"{name}.hlo.txt"
+    with open(os.path.join(outdir, fname), "w") as f:
+        f.write(text)
+    kv = " ".join(f"{k}={v}" for k, v in meta.items())
+    manifest.append(f"artifact name={name} file={fname} {kv}".strip())
+    print(f"  {fname}: {len(text)} chars")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--skip-train", action="store_true", help="HLO only (tests)")
+    args = ap.parse_args()
+    outdir = args.out
+    os.makedirs(outdir, exist_ok=True)
+    manifest = []
+
+    print("[aot] lowering gate_scan executors")
+    for r, c, s in GATE_SCAN_CFGS:
+        emit(
+            outdir,
+            f"gate_scan_r{r}_c{c}_s{s}",
+            model.gate_scan,
+            (
+                jax.ShapeDtypeStruct((r, c), F32),
+                jax.ShapeDtypeStruct((s,), I32),
+                jax.ShapeDtypeStruct((s, 4), I32),
+                jax.ShapeDtypeStruct((s, r), F32),
+            ),
+            manifest,
+            kind="gate_scan",
+            r=r,
+            c=c,
+            s=s,
+        )
+
+    print("[aot] lowering vote3 kernels")
+    for r, c in VOTE_CFGS:
+        spec = jax.ShapeDtypeStruct((r, c), F32)
+        emit(
+            outdir,
+            f"vote3_r{r}_c{c}",
+            model.vote3,
+            (spec,) * 5,
+            manifest,
+            kind="vote3",
+            r=r,
+            c=c,
+        )
+
+    print("[aot] lowering diag_parity kernels")
+    for b, m in DIAG_CFGS:
+        emit(
+            outdir,
+            f"diag_parity_b{b}_m{m}",
+            model.diag_parity,
+            (jax.ShapeDtypeStruct((b, m, m), F32),),
+            manifest,
+            kind="diag_parity",
+            b=b,
+            m=m,
+        )
+
+    h = train.HIDDEN
+    print("[aot] lowering micronet forward")
+    for b in MICRONET_BATCHES:
+        emit(
+            outdir,
+            f"micronet_fwd_b{b}",
+            model.micronet_fwd,
+            (
+                jax.ShapeDtypeStruct((b, train.IN_DIM), F32),
+                jax.ShapeDtypeStruct((train.IN_DIM, h), F32),
+                jax.ShapeDtypeStruct((h,), F32),
+                jax.ShapeDtypeStruct((h, train.N_CLASSES), F32),
+                jax.ShapeDtypeStruct((train.N_CLASSES,), F32),
+                jax.ShapeDtypeStruct((train.IN_DIM, h), F32),
+                jax.ShapeDtypeStruct((train.IN_DIM, h), F32),
+                jax.ShapeDtypeStruct((h, train.N_CLASSES), F32),
+                jax.ShapeDtypeStruct((h, train.N_CLASSES), F32),
+            ),
+            manifest,
+            kind="micronet",
+            b=b,
+            h=h,
+            indim=train.IN_DIM,
+            classes=train.N_CLASSES,
+        )
+
+    if not args.skip_train:
+        print("[aot] training MicroNet (build-time only)")
+        acc = train.export(outdir)
+        manifest.append(
+            f"weights file=weights.bin h={h} indim={train.IN_DIM} "
+            f"classes={train.N_CLASSES} train_acc={acc:.4f}"
+        )
+        manifest.append(f"evalset file=evalset.bin n={train.N_EVAL} indim={train.IN_DIM}")
+
+    with open(os.path.join(outdir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print(f"[aot] wrote {len(manifest)} manifest entries to {outdir}/manifest.txt")
+
+
+if __name__ == "__main__":
+    main()

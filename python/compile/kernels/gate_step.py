@@ -1,0 +1,103 @@
+"""Layer-1 Pallas kernel: one row-parallel stateful-gate step.
+
+This is the compute hot-spot of the whole stack: a single crossbar cycle
+applies the same in-row gate across *all* rows simultaneously (Fig. 1a of
+the paper). On the crossbar that parallelism is free; here it maps onto the
+TPU as follows (DESIGN.md "Hardware adaptation"):
+
+* operand gather  `V = S @ sel^T`  — a (block_R, C) x (C, 4) matmul on the
+  MXU (sel holds one-hot column selectors for i1, i2, i3, out);
+* gate evaluation — branchless VPU arithmetic over the four (block_R,)
+  operand vectors, blended by a one-hot opcode vector;
+* error injection — XOR with the per-row flip mask (`p_gate` model);
+* scatter         — rank-1 update `S' = S + (res - old) outer out_sel`,
+  again MXU/VPU friendly (no dynamic indexing inside the kernel).
+
+The kernel is tiled over rows with BlockSpec: each grid step holds one
+(BLOCK_R, C) state tile plus the (C, 4) selector in VMEM. VMEM footprint
+is ~ (BLOCK_R * C + C * 4 + 5 * BLOCK_R) * 4 B; with BLOCK_R = 128 and
+C = 1024 that is ~0.5 MiB << 16 MiB, leaving room for double buffering.
+
+interpret=True everywhere: the CPU PJRT client cannot execute Mosaic
+custom-calls, so the kernel lowers to plain HLO (see /opt/xla-example).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+DEFAULT_BLOCK_R = 128
+
+
+def _gate_step_kernel(sel_ref, opv_ref, state_ref, err_ref, out_ref):
+    """One (BLOCK_R, C) tile of the crossbar state.
+
+    sel_ref: (C, 4) one-hot selectors [i1 | i2 | i3 | out]
+    opv_ref: (NUM_OPCODES,) one-hot opcode
+    state_ref: (BLOCK_R, C) state tile;  err_ref: (BLOCK_R,) flip mask
+    out_ref: (BLOCK_R, C) new state tile
+    """
+    s = state_ref[...]
+    sel = sel_ref[...]
+    opv = opv_ref[...]
+    err = err_ref[...]
+
+    # MXU gather: (BLOCK_R, C) @ (C, 4) -> (BLOCK_R, 4)
+    v = jnp.dot(s, sel, preferred_element_type=jnp.float32)
+    v1, v2, v3, old = v[:, 0], v[:, 1], v[:, 2], v[:, 3]
+
+    or2 = v1 + v2 - v1 * v2
+    or3 = or2 + v3 - or2 * v3
+    maj = v1 * v2 + v1 * v3 + v2 * v3 - 2.0 * v1 * v2 * v3
+
+    # Branchless opcode blend (opv is one-hot over ref.NUM_OPCODES).
+    res = (
+        opv[ref.NOP] * old
+        + opv[ref.NOT] * (1.0 - v1)
+        + opv[ref.NOR2] * (1.0 - or2)
+        + opv[ref.NOR3] * (1.0 - or3)
+        + opv[ref.OR2] * or2
+        + opv[ref.NAND2] * (1.0 - v1 * v2)
+        + opv[ref.MIN3] * (1.0 - maj)
+        + opv[ref.SET1] * 1.0
+        + opv[ref.SET0] * 0.0
+    )
+    # Direct soft error: flip produced bit where err == 1 (never on NOP).
+    res = res + (1.0 - opv[ref.NOP]) * (err - 2.0 * res * err)
+
+    # Rank-1 scatter back into the out column.
+    out_sel = sel[:, 3]  # (C,)
+    out_ref[...] = s + (res - old)[:, None] * out_sel[None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("block_r",))
+def gate_step(state, op, idx, err, *, block_r=DEFAULT_BLOCK_R):
+    """Apply one micro-op to the full (R, C) crossbar state.
+
+    state: (R, C) f32 {0,1};  op: scalar int32;  idx: (4,) int32
+    [i1,i2,i3,out];  err: (R,) f32 flip mask. Returns new state.
+    Matches `ref.gate_step_ref` bit-exactly.
+    """
+    r, c = state.shape
+    block_r = min(block_r, r)
+    assert r % block_r == 0, (r, block_r)
+    sel = (jnp.arange(c, dtype=jnp.int32)[:, None] == idx[None, :]).astype(jnp.float32)
+    opv = (jnp.arange(ref.NUM_OPCODES, dtype=jnp.int32) == op).astype(jnp.float32)
+    grid = (r // block_r,)
+    return pl.pallas_call(
+        _gate_step_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((c, 4), lambda i: (0, 0)),
+            pl.BlockSpec((ref.NUM_OPCODES,), lambda i: (0,)),
+            pl.BlockSpec((block_r, c), lambda i: (i, 0)),
+            pl.BlockSpec((block_r,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block_r, c), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, c), jnp.float32),
+        interpret=True,
+    )(sel, opv, state, err)

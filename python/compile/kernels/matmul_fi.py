@@ -1,0 +1,45 @@
+"""Layer-1 Pallas kernel: fault-injected matmul for the NN case study.
+
+y = x @ (w * mmul + madd): the masks perturb weight operands at value
+level, modeling direct soft errors in the in-memory (MultPIM) multiplier
+during a FloatPIM-style feed-forward pass. The rust campaign driver
+generates masks from bit-flip models on the Q16.16 encoding and sweeps
+p_gate (paper Fig. 4 bottom).
+
+Classic MXU tiling: grid over (rows of x) x (cols of w); the full K
+dimension stays resident (K <= 64 for MicroNet). VMEM per step:
+(BM*K + K*BN * 3 + BM*BN) * 4 B.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BM = 64
+DEFAULT_BN = 64
+
+
+def _matmul_fi_kernel(x_ref, w_ref, mm_ref, ma_ref, out_ref):
+    w_eff = w_ref[...] * mm_ref[...] + ma_ref[...]
+    out_ref[...] = jnp.dot(x_ref[...], w_eff, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn"))
+def matmul_fi(x, w, mmul, madd, *, bm=DEFAULT_BM, bn=DEFAULT_BN):
+    """(B, K) @ fault-masked (K, N) -> (B, N). Matches `ref.matmul_fi_ref`."""
+    b, k = x.shape
+    _, n = w.shape
+    bm = min(bm, b)
+    bn = min(bn, n)
+    assert b % bm == 0 and n % bn == 0, (b, n, bm, bn)
+    wspec = pl.BlockSpec((k, bn), lambda i, j: (0, j))
+    return pl.pallas_call(
+        _matmul_fi_kernel,
+        grid=(b // bm, n // bn),
+        in_specs=[pl.BlockSpec((bm, k), lambda i, j: (i, 0)), wspec, wspec, wspec],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, n), jnp.float32),
+        interpret=True,
+    )(x, w, mmul, madd)

@@ -1,0 +1,144 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the CORE correctness signal for Layer 1: every Pallas kernel in
+this package is checked against the corresponding function here by pytest
+(hypothesis sweeps shapes / contents) before anything is AOT-lowered.
+
+Bit convention: logical state is carried in float32 with values in {0.0, 1.0}
+(low resistance = 1, high resistance = 0). f32 is used because the PJRT
+interchange path (rust `xla` crate) round-trips f32 literals natively.
+
+Micro-op encoding (MUST match `rust/src/isa/encode.rs`):
+
+    opcode  semantics (row-parallel, in-row gate at columns i1,i2,i3 -> out)
+    ------  ------------------------------------------------------------
+    0 NOP   state unchanged (padding)
+    1 NOT   out = !i1                      (MAGIC NOT)
+    2 NOR2  out = !(i1 | i2)               (MAGIC NOR)
+    3 NOR3  out = !(i1 | i2 | i3)          (MAGIC 3-input NOR)
+    4 OR2   out = i1 | i2                  (FELIX OR)
+    5 NAND2 out = !(i1 & i2)               (FELIX NAND)
+    6 MIN3  out = !maj(i1, i2, i3)         (FELIX Minority3)
+    7 SET1  out = 1                        (output initialization)
+    8 SET0  out = 0
+
+Direct soft errors are injected as an XOR flip mask on the produced output
+column (one bit per row per step), exactly the `p_gate` model of the paper
+(Section II-B "incorrect logic").
+"""
+
+import jax.numpy as jnp
+
+NUM_OPCODES = 9
+(NOP, NOT, NOR2, NOR3, OR2, NAND2, MIN3, SET1, SET0) = range(NUM_OPCODES)
+
+
+def fxor(a, b):
+    """XOR for {0,1}-valued floats."""
+    return a + b - 2.0 * a * b
+
+
+def gate_eval_ref(op, v1, v2, v3):
+    """Evaluate one stateful gate on {0,1} float operands (vectorized).
+
+    `op` is a scalar int; v1/v2/v3 are (R,) float arrays.
+    """
+    or2 = v1 + v2 - v1 * v2
+    or3 = or2 + v3 - or2 * v3
+    maj = v1 * v2 + v1 * v3 + v2 * v3 - 2.0 * v1 * v2 * v3
+    ones = jnp.ones_like(v1)
+    zeros = jnp.zeros_like(v1)
+    table = jnp.stack(
+        [
+            v1,  # NOP placeholder (unused: NOP keeps old column)
+            1.0 - v1,  # NOT
+            1.0 - or2,  # NOR2
+            1.0 - or3,  # NOR3
+            or2,  # OR2
+            1.0 - v1 * v2,  # NAND2
+            1.0 - maj,  # MIN3
+            ones,  # SET1
+            zeros,  # SET0
+        ]
+    )
+    return table[op]
+
+
+def gate_step_ref(state, op, idx, err):
+    """One row-parallel stateful-gate step on the whole crossbar.
+
+    state: (R, C) float {0,1};  op: scalar int32;  idx: (4,) int32
+    [i1, i2, i3, out];  err: (R,) float {0,1} flip mask applied to the
+    produced output (direct soft error model).
+    Returns the new (R, C) state.
+    """
+    i1, i2, i3, out = idx[0], idx[1], idx[2], idx[3]
+    v1 = state[:, i1]
+    v2 = state[:, i2]
+    v3 = state[:, i3]
+    res = gate_eval_ref(op, v1, v2, v3)
+    res = fxor(res, err)
+    newcol = jnp.where(op == NOP, state[:, out], res)
+    return state.at[:, out].set(newcol)
+
+
+def gate_scan_ref(state, ops, idxs, errs):
+    """Execute a full micro-op program (the L2 executor semantics).
+
+    ops: (S,) int32;  idxs: (S, 4) int32;  errs: (S, R) float.
+    """
+    for s in range(ops.shape[0]):
+        state = gate_step_ref(state, ops[s], idxs[s], errs[s])
+    return state
+
+
+def vote3_ref(a, b, c, err_min, err_not):
+    """Per-bit TMR voting via the in-memory Minority3 gate + NOT.
+
+    maj(a,b,c) is realized as NOT(Minority3(a,b,c)); both stateful gates
+    are themselves vulnerable, hence the two flip masks (paper Section V:
+    "also vulnerable to soft-errors").
+    All arrays (R, C) float {0,1}.
+    """
+    maj = a * b + a * c + b * c - 2.0 * a * b * c
+    minority = fxor(1.0 - maj, err_min)
+    return fxor(1.0 - minority, err_not)
+
+
+def diag_parity_ref(blocks):
+    """Leading + counter wrap-around diagonal parities per m x m block.
+
+    blocks: (B, m, m) float {0,1}.
+    Returns (B, 2m): [:, :m] leading parities  lead[d] = XOR_i b[i, (i+d)%m]
+                     [:, m:] counter parities  cnt[d]  = XOR_i b[i, (d-i)%m]
+    This is the diagonal check-bit pattern of Fig. 2(b,c): each output is
+    what the barrel shifter accumulates along one wrap-around diagonal.
+    """
+    B, m, _ = blocks.shape
+    i = jnp.arange(m)[:, None]
+    d = jnp.arange(m)[None, :]
+    lead_cols = (i + d) % m  # (m, m): column of row i on leading diag d
+    cnt_cols = (d - i) % m
+    lead_bits = jnp.take_along_axis(blocks, jnp.broadcast_to(lead_cols, (B, m, m)), axis=2)
+    cnt_bits = jnp.take_along_axis(blocks, jnp.broadcast_to(cnt_cols, (B, m, m)), axis=2)
+    lead = jnp.mod(jnp.sum(lead_bits, axis=1), 2.0)
+    cnt = jnp.mod(jnp.sum(cnt_bits, axis=1), 2.0)
+    return jnp.concatenate([lead, cnt], axis=1)
+
+
+def matmul_fi_ref(x, w, mmul, madd):
+    """Fault-injected matmul: y = x @ (w * mmul + madd).
+
+    The multiplicative/additive masks model value-level corruption of the
+    weight operands caused by direct soft errors in the in-memory
+    multiplier (rust generates them from bit-flip models on the Q16.16
+    encoding). Identity masks (mmul=1, madd=0) give a clean matmul.
+    """
+    return x @ (w * mmul + madd)
+
+
+def micronet_fwd_ref(x, w1, b1, w2, b2, m1, a1, m2, a2):
+    """Case-study MicroNet forward pass (64 -> H -> 10 MLP, relu),
+    with per-layer weight fault masks."""
+    h = jnp.maximum(matmul_fi_ref(x, w1, m1, a1) + b1, 0.0)
+    return matmul_fi_ref(h, w2, m2, a2) + b2

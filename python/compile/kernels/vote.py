@@ -1,0 +1,49 @@
+"""Layer-1 Pallas kernel: per-bit TMR voting (paper Section V).
+
+Majority-of-three is realized the way the mMPU does it: a FELIX Minority3
+gate followed by a MAGIC NOT, each itself subject to direct soft errors
+(the `err_min` / `err_not` flip masks). Voting is *per-bit*, which the
+paper shows strictly dominates per-element voting.
+
+Pure VPU elementwise kernel; tiled over rows with BlockSpec. VMEM holds
+six (BLOCK_R, C) tiles -> footprint 6 * BLOCK_R * C * 4 B (0.75 MiB at
+128 x 256), trivially within budget.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_R = 128
+
+
+def _vote3_kernel(a_ref, b_ref, c_ref, em_ref, en_ref, out_ref):
+    a, b, c = a_ref[...], b_ref[...], c_ref[...]
+    em, en = em_ref[...], en_ref[...]
+    maj = a * b + a * c + b * c - 2.0 * a * b * c
+    minority = 1.0 - maj
+    minority = minority + em - 2.0 * minority * em  # faulty Minority3 output
+    out = 1.0 - minority
+    out_ref[...] = out + en - 2.0 * out * en  # faulty NOT output
+
+
+@functools.partial(jax.jit, static_argnames=("block_r",))
+def vote3(a, b, c, err_min, err_not, *, block_r=DEFAULT_BLOCK_R):
+    """Per-bit majority vote of three (R, C) {0,1} planes with faulty gates.
+
+    Matches `ref.vote3_ref` bit-exactly.
+    """
+    r, cc = a.shape
+    block_r = min(block_r, r)
+    assert r % block_r == 0, (r, block_r)
+    spec = pl.BlockSpec((block_r, cc), lambda i: (i, 0))
+    return pl.pallas_call(
+        _vote3_kernel,
+        grid=(r // block_r,),
+        in_specs=[spec] * 5,
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((r, cc), jnp.float32),
+        interpret=True,
+    )(a, b, c, err_min, err_not)

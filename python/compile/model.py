@@ -1,0 +1,71 @@
+"""Layer-2 JAX compute graphs (build-time only; AOT-lowered by aot.py).
+
+Two graph families, both calling the Layer-1 Pallas kernels:
+
+* `gate_scan` — the vectorized crossbar program executor: a `lax.scan`
+  over an encoded micro-op program, each step applying the row-parallel
+  Pallas gate kernel to the full crossbar state. This is what lets the
+  rust coordinator run an entire in-memory arithmetic function (e.g. a
+  32-bit MultPIM multiplication across all rows) in ONE PJRT call.
+* `micronet_fwd` — the case-study MLP forward pass with per-layer weight
+  fault masks (paper Section VI), built from the fault-masked matmul
+  kernel.
+
+Everything is static-shape: aot.py lowers one HLO artifact per
+(R, C, S) / (B, H) configuration listed in its manifest.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import gate_step as k_gate
+from .kernels import matmul_fi as k_mm
+from .kernels import vote as k_vote
+from .kernels import diag_parity as k_diag
+from .kernels import ref
+
+
+def gate_scan(state, ops, idxs, errs):
+    """Execute a padded micro-op program on the crossbar state.
+
+    state: (R, C) f32 {0,1}
+    ops:   (S,)   i32 opcodes (ref.NOP pads)
+    idxs:  (S, 4) i32 [i1, i2, i3, out]
+    errs:  (S, R) f32 direct-soft-error flip masks (zeros = clean run)
+    Returns the final (R, C) state. Semantics == ref.gate_scan_ref.
+    """
+
+    def step(s, xs):
+        op, idx, err = xs
+        return k_gate.gate_step(s, op, idx, err), ()
+
+    final, _ = jax.lax.scan(step, state, (ops, idxs, errs))
+    return (final,)
+
+
+def vote3(a, b, c, err_min, err_not):
+    """Per-bit TMR majority vote of three state planes (faulty gates)."""
+    return (k_vote.vote3(a, b, c, err_min, err_not),)
+
+
+def diag_parity(blocks):
+    """ECC diagonal check-bit computation for a batch of m x m blocks."""
+    return (k_diag.diag_parity(blocks),)
+
+
+def micronet_fwd(x, w1, b1, w2, b2, m1, a1, m2, a2):
+    """Fault-injected MicroNet forward: logits (B, 10).
+
+    x: (B, 64); w1: (64, H); w2: (H, 10); m*/a* are the per-layer
+    multiplicative/additive weight fault masks (identity = clean).
+    """
+    h = jnp.maximum(k_mm.matmul_fi(x, w1, m1, a1) + b1[None, :], 0.0)
+    logits = k_mm.matmul_fi(h, w2, m2, a2) + b2[None, :]
+    return (logits,)
+
+
+def micronet_fwd_clean_ref(x, w1, b1, w2, b2):
+    """Mask-free oracle used by tests and by train.py evaluation."""
+    ones1, zeros1 = jnp.ones_like(w1), jnp.zeros_like(w1)
+    ones2, zeros2 = jnp.ones_like(w2), jnp.zeros_like(w2)
+    return ref.micronet_fwd_ref(x, w1, b1, w2, b2, ones1, zeros1, ones2, zeros2)

@@ -1,0 +1,89 @@
+"""Build-time training of MicroNet, the end-to-end case-study model.
+
+The paper's case study uses AlexNet/ImageNet on FloatPIM, which it treats
+*analytically* (constants M, W, p_mask). To validate the error-propagation
+mechanism on a network the crossbar simulator can actually execute
+end-to-end, we train a small MLP ("MicroNet", 64 -> H -> 10) on a
+synthetic 8x8 digit-prototype dataset. Training happens HERE, once, at
+`make artifacts` time; rust only ever loads the exported weights.
+
+Exports (consumed by `rust/src/nn/micronet.rs`):
+  weights.bin  f32 LE: w1 (64*H row-major), b1 (H), w2 (H*10), b2 (10)
+  evalset.bin  f32 LE: N_EVAL * 64 pixels, then N_EVAL labels
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from . import model
+
+IN_DIM = 64  # 8x8
+HIDDEN = 32
+N_CLASSES = 10
+N_TRAIN = 2048
+N_EVAL = 512
+FLIP_P = 0.08  # per-pixel noise on the prototypes
+SEED = 0x5EED
+STEPS = 400
+LR = 0.5
+
+
+def make_dataset(rng, n):
+    """n noisy samples of 10 random-but-fixed 8x8 binary prototypes."""
+    protos = (rng.random((N_CLASSES, IN_DIM)) < 0.5).astype(np.float32)
+    labels = rng.integers(0, N_CLASSES, size=n)
+    x = protos[labels].copy()
+    flips = rng.random((n, IN_DIM)) < FLIP_P
+    x[flips] = 1.0 - x[flips]
+    return x.astype(np.float32), labels.astype(np.int64)
+
+
+def loss_fn(params, x, y):
+    w1, b1, w2, b2 = params
+    logits = model.micronet_fwd_clean_ref(x, w1, b1, w2, b2)
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(logp[jnp.arange(x.shape[0]), y])
+
+
+def accuracy(params, x, y):
+    w1, b1, w2, b2 = params
+    logits = model.micronet_fwd_clean_ref(x, w1, b1, w2, b2)
+    return float(jnp.mean(jnp.argmax(logits, axis=1) == y))
+
+
+def train(verbose=False):
+    rng = np.random.default_rng(SEED)
+    xtr, ytr = make_dataset(rng, N_TRAIN)
+    xev, yev = make_dataset(np.random.default_rng(SEED), N_EVAL)  # same protos
+
+    key = jax.random.PRNGKey(SEED)
+    k1, k2 = jax.random.split(key)
+    params = [
+        jax.random.normal(k1, (IN_DIM, HIDDEN)) * 0.1,
+        jnp.zeros((HIDDEN,)),
+        jax.random.normal(k2, (HIDDEN, N_CLASSES)) * 0.1,
+        jnp.zeros((N_CLASSES,)),
+    ]
+    grad = jax.jit(jax.grad(loss_fn))
+    for step in range(STEPS):
+        g = grad(params, xtr, ytr)
+        params = [p - LR * gi for p, gi in zip(params, g)]
+        if verbose and step % 100 == 0:
+            print(f"step {step}: loss={loss_fn(params, xtr, ytr):.4f}")
+    acc = accuracy(params, xev, yev)
+    if verbose:
+        print(f"eval accuracy: {acc:.4f}")
+    return [np.asarray(p, dtype=np.float32) for p in params], (xev, yev), acc
+
+
+def export(outdir):
+    params, (xev, yev), acc = train(verbose=True)
+    w1, b1, w2, b2 = params
+    with open(f"{outdir}/weights.bin", "wb") as f:
+        for arr in (w1, b1, w2, b2):
+            f.write(np.ascontiguousarray(arr, dtype="<f4").tobytes())
+    with open(f"{outdir}/evalset.bin", "wb") as f:
+        f.write(np.ascontiguousarray(xev, dtype="<f4").tobytes())
+        f.write(np.ascontiguousarray(yev.astype(np.float32), dtype="<f4").tobytes())
+    return acc

@@ -1,0 +1,6 @@
+import os
+import sys
+
+# Make the build-time `compile` package importable regardless of how
+# pytest is invoked (it lives next to this conftest).
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))

@@ -1,0 +1,84 @@
+"""AOT pipeline tests: HLO-text emission, manifest contract, and the
+training exporter's binary formats (the rust side parses these)."""
+
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, model, train
+
+
+def test_to_hlo_text_is_parseable_hlo(tmp_path):
+    spec = jax.ShapeDtypeStruct((4, 4), jnp.float32)
+    lowered = jax.jit(lambda a, b: (a @ b,)).lower(spec, spec)
+    text = aot.to_hlo_text(lowered)
+    assert "HloModule" in text
+    assert "ROOT" in text
+    # Text (not proto) is the interchange format — see aot.py docstring.
+    assert not text.startswith(b"\x08".decode("latin1"))
+
+
+def test_emit_writes_file_and_manifest(tmp_path):
+    manifest = []
+    aot.emit(
+        str(tmp_path),
+        "gate_scan_r8_c8_s4",
+        model.gate_scan,
+        (
+            jax.ShapeDtypeStruct((8, 8), jnp.float32),
+            jax.ShapeDtypeStruct((4,), jnp.int32),
+            jax.ShapeDtypeStruct((4, 4), jnp.int32),
+            jax.ShapeDtypeStruct((4, 8), jnp.float32),
+        ),
+        manifest,
+        kind="gate_scan",
+        r=8,
+        c=8,
+        s=4,
+    )
+    assert (tmp_path / "gate_scan_r8_c8_s4.hlo.txt").exists()
+    assert len(manifest) == 1
+    line = manifest[0]
+    assert line.startswith("artifact name=gate_scan_r8_c8_s4")
+    assert "kind=gate_scan" in line and "r=8" in line and "s=4" in line
+    # Each field is a single key=value token (the rust parser contract).
+    for token in line.split()[1:]:
+        assert "=" in token, token
+
+
+def test_weights_export_roundtrip(tmp_path):
+    acc = train.export(str(tmp_path))
+    assert acc > 0.9
+    w = np.fromfile(tmp_path / "weights.bin", dtype="<f4")
+    expected = train.IN_DIM * train.HIDDEN + train.HIDDEN + train.HIDDEN * train.N_CLASSES + train.N_CLASSES
+    assert w.shape[0] == expected
+    e = np.fromfile(tmp_path / "evalset.bin", dtype="<f4")
+    assert e.shape[0] == train.N_EVAL * train.IN_DIM + train.N_EVAL
+    labels = e[train.N_EVAL * train.IN_DIM :]
+    assert labels.min() >= 0 and labels.max() < train.N_CLASSES
+    assert np.all(labels == labels.astype(int))
+
+
+def test_built_artifacts_manifest_consistent():
+    """When artifacts/ exists (make artifacts), every manifest entry must
+    point at an existing file with consistent declared shapes."""
+    root = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    manifest = os.path.join(root, "manifest.txt")
+    if not os.path.exists(manifest):
+        pytest.skip("artifacts not built")
+    with open(manifest) as f:
+        lines = [l.strip() for l in f if l.strip()]
+    assert len(lines) >= 8
+    kinds = set()
+    for line in lines:
+        fields = dict(kv.split("=", 1) for kv in line.split()[1:])
+        assert os.path.exists(os.path.join(root, fields["file"])), fields["file"]
+        if line.startswith("artifact"):
+            kinds.add(fields["kind"])
+            if fields["kind"] == "gate_scan":
+                name = fields["name"]
+                assert f"r{fields['r']}" in name and f"s{fields['s']}" in name
+    assert {"gate_scan", "vote3", "diag_parity", "micronet"} <= kinds

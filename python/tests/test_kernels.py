@@ -1,0 +1,150 @@
+"""Layer-1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+hypothesis sweeps shapes, opcodes, indices and bit contents; allclose with
+atol=0 is intentional — these kernels compute exact {0,1} arithmetic, so
+bit-exact agreement is required.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.gate_step import gate_step
+from compile.kernels.vote import vote3
+from compile.kernels.diag_parity import diag_parity
+from compile.kernels.matmul_fi import matmul_fi
+
+SHAPES = st.sampled_from([(8, 8), (16, 32), (64, 64), (128, 16)])
+
+
+def bits(rng, shape):
+    return (rng.random(shape) < 0.5).astype(np.float32)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    shape=SHAPES,
+    op=st.integers(0, ref.NUM_OPCODES - 1),
+    seed=st.integers(0, 2**31 - 1),
+    with_err=st.booleans(),
+)
+def test_gate_step_matches_ref(shape, op, seed, with_err):
+    r, c = shape
+    rng = np.random.default_rng(seed)
+    state = bits(rng, (r, c))
+    idx = rng.integers(0, c, size=4).astype(np.int32)
+    err = bits(rng, (r,)) if with_err else np.zeros((r,), np.float32)
+    got = gate_step(jnp.asarray(state), jnp.int32(op), jnp.asarray(idx), jnp.asarray(err), block_r=min(r, 32))
+    want = ref.gate_step_ref(jnp.asarray(state), jnp.int32(op), jnp.asarray(idx), jnp.asarray(err))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=0)
+
+
+@settings(max_examples=20, deadline=None)
+@given(shape=SHAPES, steps=st.integers(1, 24), seed=st.integers(0, 2**31 - 1))
+def test_gate_program_matches_ref(shape, steps, seed):
+    """A random micro-op program, applied step by step, matches the oracle."""
+    r, c = shape
+    rng = np.random.default_rng(seed)
+    state = bits(rng, (r, c))
+    ops = rng.integers(0, ref.NUM_OPCODES, size=steps).astype(np.int32)
+    idxs = rng.integers(0, c, size=(steps, 4)).astype(np.int32)
+    errs = (rng.random((steps, r)) < 0.05).astype(np.float32)
+    got = jnp.asarray(state)
+    for s in range(steps):
+        got = gate_step(got, jnp.int32(ops[s]), jnp.asarray(idxs[s]), jnp.asarray(errs[s]), block_r=min(r, 32))
+    want = ref.gate_scan_ref(jnp.asarray(state), ops, idxs, errs)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=0)
+
+
+@settings(max_examples=30, deadline=None)
+@given(shape=SHAPES, seed=st.integers(0, 2**31 - 1), faulty=st.booleans())
+def test_vote3_matches_ref(shape, seed, faulty):
+    rng = np.random.default_rng(seed)
+    a, b, c = (bits(rng, shape) for _ in range(3))
+    if faulty:
+        em, en = (rng.random(shape) < 0.1).astype(np.float32), (rng.random(shape) < 0.1).astype(np.float32)
+    else:
+        em = en = np.zeros(shape, np.float32)
+    got = vote3(*map(jnp.asarray, (a, b, c, em, en)), block_r=min(shape[0], 32))
+    want = ref.vote3_ref(*map(jnp.asarray, (a, b, c, em, en)))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=0)
+
+
+def test_vote3_clean_is_majority():
+    """With clean gates, vote3 is exactly per-bit majority."""
+    rng = np.random.default_rng(7)
+    a, b, c = (bits(rng, (32, 32)) for _ in range(3))
+    z = np.zeros((32, 32), np.float32)
+    got = np.asarray(vote3(*map(jnp.asarray, (a, b, c, z, z))))
+    want = ((a + b + c) >= 2).astype(np.float32)
+    np.testing.assert_allclose(got, want, atol=0)
+
+
+def test_vote3_paper_example():
+    """Paper Section V: voting 1000 / 0100 / 0010 per-bit yields 0000."""
+    a = jnp.asarray([[1.0, 0.0, 0.0, 0.0]])
+    b = jnp.asarray([[0.0, 1.0, 0.0, 0.0]])
+    c = jnp.asarray([[0.0, 0.0, 1.0, 0.0]])
+    z = jnp.zeros((1, 4))
+    got = np.asarray(vote3(a, b, c, z, z, block_r=1))
+    np.testing.assert_allclose(got, np.zeros((1, 4)), atol=0)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    b=st.integers(1, 16),
+    m=st.sampled_from([4, 8, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_diag_parity_matches_ref(b, m, seed):
+    rng = np.random.default_rng(seed)
+    blocks = bits(rng, (b, m, m))
+    got = diag_parity(jnp.asarray(blocks))
+    want = ref.diag_parity_ref(jnp.asarray(blocks))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=0)
+
+
+def test_diag_parity_single_flip_localizes():
+    """A single bit flip fails exactly one leading and one counter diagonal,
+    and their intersection identifies the flipped cell (the paper's
+    multidimensional-parity correction argument)."""
+    m = 8
+    rng = np.random.default_rng(3)
+    blk = bits(rng, (1, m, m))
+    base = np.asarray(diag_parity(jnp.asarray(blk)))[0]
+    for (i, j) in [(0, 0), (3, 5), (7, 7), (2, 6)]:
+        flipped = blk.copy()
+        flipped[0, i, j] = 1.0 - flipped[0, i, j]
+        par = np.asarray(diag_parity(jnp.asarray(flipped)))[0]
+        diff = np.nonzero(par != base)[0]
+        assert len(diff) == 2
+        lead_d, cnt_d = diff[0], diff[1] - m
+        assert lead_d == (j - i) % m  # cell (i,j) lies on leading diagonal (j-i) mod m
+        assert cnt_d == (i + j) % m  # ... and counter diagonal (i+j) mod m
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    dims=st.sampled_from([(8, 8, 8), (16, 32, 16), (64, 64, 64), (32, 16, 64)]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_fi_matches_ref(dims, seed):
+    b, k, n = dims
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((b, k)).astype(np.float32)
+    w = rng.standard_normal((k, n)).astype(np.float32)
+    mm = (rng.random((k, n)) < 0.9).astype(np.float32)
+    ma = (rng.random((k, n)) < 0.05).astype(np.float32) * rng.standard_normal((k, n)).astype(np.float32)
+    got = matmul_fi(*map(jnp.asarray, (x, w, mm, ma)), bm=min(b, 16), bn=min(n, 16))
+    want = ref.matmul_fi_ref(*map(jnp.asarray, (x, w, mm, ma)))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_matmul_fi_identity_masks_are_clean():
+    rng = np.random.default_rng(11)
+    x = rng.standard_normal((16, 8)).astype(np.float32)
+    w = rng.standard_normal((8, 16)).astype(np.float32)
+    got = matmul_fi(jnp.asarray(x), jnp.asarray(w), jnp.ones((8, 16)), jnp.zeros((8, 16)), bm=16, bn=16)
+    np.testing.assert_allclose(np.asarray(got), x @ w, rtol=1e-5, atol=1e-5)

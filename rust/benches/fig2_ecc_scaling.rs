@@ -1,0 +1,64 @@
+//! E2 — Fig. 2(a) vs 2(b): parity-update cost after in-row / in-column
+//! parallel operations, naive horizontal vs diagonal ECC, swept over the
+//! crossbar size n. Reproduces the O(n) vs O(1) asymmetry and measures
+//! the actual simulator wall time of the two engines.
+
+use remus::analysis::overhead::fig2_update_costs;
+use remus::bench_harness::{bench, header, throughput};
+use remus::ecc::{DiagonalEcc, HorizontalEcc};
+use remus::util::bitmat::BitMatrix;
+use remus::util::rng::Pcg64;
+use remus::util::table::Table;
+
+fn main() {
+    header(
+        "fig2_ecc_scaling",
+        "Fig 2(a,b): naive horizontal O(n) in-column update vs diagonal O(1)",
+    );
+
+    // --- cycle-model table (the figure's content) -------------------
+    let ns = [64usize, 128, 256, 512, 1024];
+    let mut t = Table::new(
+        "parity-update cycles after ONE in-column op (all columns)",
+        &["n", "horizontal (Fig 2a)", "diagonal (Fig 2b)", "gap"],
+    );
+    for (n, h, d) in fig2_update_costs(&ns) {
+        t.row(&[n.to_string(), h.to_string(), d.to_string(), format!("{}x", h / d)]);
+    }
+    t.print();
+    println!("(in-row updates are O(1)={} cycles for BOTH codes)", 4);
+
+    // --- engine wall-time at n = 512 --------------------------------
+    let n = 512;
+    let mut rng = Pcg64::new(1, 0);
+    let state = BitMatrix::from_fn(n, n, |_, _| rng.bernoulli(0.5));
+    let mut diag = DiagonalEcc::new(n, n, 16);
+    diag.encode(&state);
+    let mut horiz = HorizontalEcc::new(n, n, 8);
+    horiz.encode(&state);
+    let row = state.row_bitvec(5);
+    let col = state.col_bitvec(5);
+
+    let r = bench("diagonal.note_col_write (n=512)", 100, || {
+        for _ in 0..100 {
+            diag.note_col_write(5, &col, &col);
+        }
+    });
+    throughput(&r, "update", 100.0);
+    let r = bench("diagonal.note_row_write (n=512)", 100, || {
+        for _ in 0..100 {
+            diag.note_row_write(5, &row, &row);
+        }
+    });
+    throughput(&r, "update", 100.0);
+    let r = bench("horizontal.note_row_write (n=512)", 100, || {
+        for _ in 0..100 {
+            horiz.note_row_write(5, &row, &row);
+        }
+    });
+    throughput(&r, "update", 100.0);
+    let r = bench("diagonal.verify_all (n=512)", 1, || {
+        let _ = diag.verify_all(&state);
+    });
+    throughput(&r, "verify", 1.0);
+}

@@ -1,0 +1,52 @@
+//! E6 — Fig. 4 (bottom): AlexNet/FloatPIM soft-error-induced
+//! misclassification probability vs p_gate:
+//! `1 - (1 - p_mask * p_mult)^M`, M = 612e6, p_mask = 0.03 %.
+//! Anchors: baseline ~74 % at p_gate = 1e-9; TMR ~2 % (below the
+//! network's inherent 27 % error).
+
+use remus::analysis::fig4::MultReliability;
+use remus::bench_harness::header;
+use remus::nn::alexnet::AlexNetModel;
+use remus::util::stats::logspace;
+use remus::util::table::{sci, Table};
+
+fn main() {
+    header("fig4_network", "Fig 4 (bottom): NN failure probability vs p_gate");
+
+    let trials = std::env::var("REMUS_TRIALS").ok().and_then(|v| v.parse().ok()).unwrap_or(4000);
+    let rel = MultReliability::measure(32, trials, 0xF164);
+    let model = AlexNetModel::paper();
+    println!(
+        "AlexNet model: W = {} weights, mults/sample (layer table) = {}, using paper M = {:.3e}, p_mask = {}",
+        model.total_weights(),
+        model.total_mults(),
+        AlexNetModel::M_PAPER,
+        model.p_mask
+    );
+
+    let grid = logspace(1e-10, 1e-4, 13);
+    let mut t = Table::new(
+        "Fig 4 bottom series (CSV mirrored to fig4_bottom.csv)",
+        &["p_gate", "baseline", "tmr", "tmr_ideal"],
+    );
+    for row in rel.series(&grid) {
+        t.row(&[
+            sci(row.p_gate),
+            sci(model.p_network(row.baseline)),
+            sci(model.p_network(row.tmr)),
+            sci(model.p_network(row.tmr_ideal)),
+        ]);
+    }
+    t.print();
+    let _ = t.write_csv("fig4_bottom.csv");
+
+    let base9 = model.p_network(rel.p_mult(1e-9));
+    let tmr9 = model.p_network(rel.p_tmr(1e-9));
+    println!("\npaper anchors @ p_gate = 1e-9:");
+    println!("  baseline misclassification = {:.1}% (paper: 74%)", 100.0 * base9);
+    println!(
+        "  TMR misclassification      = {:.2}% (paper: ~2%, inherent error 27%)",
+        100.0 * tmr9
+    );
+    assert!(tmr9 < model.inherent_error, "TMR keeps compute error below inherent error");
+}

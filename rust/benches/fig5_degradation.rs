@@ -1,0 +1,112 @@
+//! E7 — Fig. 5: expected corrupted weights over T batches under indirect
+//! access errors, baseline (no ECC) vs the diagonal mMPU ECC.
+//! Anchors: baseline ~all 62M weights corrupted by T = 1e7 (p_input =
+//! 1e-8 curve); ECC ~1 corrupted weight at T = 1e7 with p_input = 1e-9.
+//! Plus a small-scale *simulated* validation of the analytical model on
+//! a real crossbar with real retention injection + ECC scrubbing.
+
+use remus::bench_harness::{bench, header};
+use remus::ecc::DiagonalEcc;
+use remus::errs::{ErrorModel, Injector};
+use remus::nn::degradation::DegradationModel;
+use remus::util::bitmat::BitMatrix;
+use remus::util::rng::Pcg64;
+use remus::util::table::{sci, Table};
+
+fn main() {
+    header("fig5_degradation", "Fig 5: weight corruption over batches, baseline vs mMPU ECC");
+
+    let model = DegradationModel::paper();
+    let mut t = Table::new(
+        "Fig 5 series (CSV mirrored to fig5.csv)",
+        &["p_input", "batches", "baseline", "ecc"],
+    );
+    for &p in &[1e-10, 1e-9, 1e-8] {
+        let mut batches = 1e0;
+        while batches <= 1e8 {
+            t.row(&[
+                sci(p),
+                format!("{batches:.0e}"),
+                sci(model.expected_corrupted_baseline(p, batches)),
+                sci(model.expected_corrupted_ecc(p, batches)),
+            ]);
+            batches *= 10.0;
+        }
+    }
+    t.print();
+    let _ = t.write_csv("fig5.csv");
+
+    println!("\npaper anchors:");
+    println!(
+        "  baseline @ p=1e-8, T=1e7: {:.1}% of weights corrupted (paper: ~all)",
+        100.0 * model.expected_corrupted_baseline(1e-8, 1e7) / model.weights
+    );
+    println!(
+        "  ECC @ p=1e-9, T=1e7: {:.2} corrupted weights (paper: ~1)",
+        model.expected_corrupted_ecc(1e-9, 1e7)
+    );
+
+    // --- micro-validation on a real simulated crossbar ---------------
+    // 128x128 array, per-"batch" access errors at a large p_input so the
+    // effect is measurable; ECC scrubbed every batch. Compare corrupted-
+    // weight counts with the analytical model after T batches.
+    let n = 128;
+    let m = 16;
+    let p_input = 2e-5;
+    let t_batches = 200u64;
+    let weights = (n * n / 32) as f64;
+    let golden = {
+        let mut rng = Pcg64::new(4, 0);
+        BitMatrix::from_fn(n, n, |_, _| rng.bernoulli(0.5))
+    };
+    let mut base_state = golden.clone();
+    let mut ecc_state = golden.clone();
+    let mut ecc = DiagonalEcc::new(n, n, m);
+    ecc.encode(&ecc_state);
+    let mut inj = Injector::new(ErrorModel::indirect_only(p_input), 9, 0);
+    let r = bench("simulate 200 batches w/ ECC scrub (128x128)", t_batches, || {
+        let mut b = golden.clone();
+        let mut e = golden.clone();
+        let mut ecc2 = DiagonalEcc::new(n, n, m);
+        ecc2.encode(&e);
+        for _ in 0..t_batches {
+            inj.input_drifts(n * n, |i| b.flip(i / n, i % n));
+            inj.input_drifts(n * n, |i| e.flip(i / n, i % n));
+            ecc2.correct(&mut e);
+        }
+        base_state = b;
+        ecc_state = e;
+    });
+    let _ = r;
+    let corrupted = |s: &BitMatrix| -> usize {
+        let mut words = 0;
+        for wr in 0..n / 32 {
+            for r0 in 0..n {
+                let mut bad = false;
+                for k in 0..32 {
+                    if s.get(r0, wr * 32 + k) != golden.get(r0, wr * 32 + k) {
+                        bad = true;
+                    }
+                }
+                words += bad as usize;
+            }
+        }
+        words
+    };
+    let model_small = DegradationModel { weights, bits: 32.0, m: m as f64 };
+    let mut v = Table::new(
+        "micro-validation: simulated vs analytical (p_input=2e-5, T=200, 512 weights)",
+        &["", "simulated", "analytical"],
+    );
+    v.row(&[
+        "baseline corrupted".into(),
+        corrupted(&base_state).to_string(),
+        format!("{:.1}", model_small.expected_corrupted_baseline(p_input, t_batches as f64)),
+    ]);
+    v.row(&[
+        "ECC corrupted".into(),
+        corrupted(&ecc_state).to_string(),
+        format!("{:.1}", model_small.expected_corrupted_ecc(p_input, t_batches as f64)),
+    ]);
+    v.print();
+}

@@ -1,0 +1,141 @@
+//! §Perf — the hot-path microbenchmarks tracked in EXPERIMENTS.md §Perf:
+//! raw row-parallel gate application, error sampling, whole-program
+//! execution (native vs PJRT), and the coordinator request path.
+
+use remus::arith::multiplier::multpim_program;
+use remus::bench_harness::{bench, header, throughput};
+use remus::errs::{ErrorModel, Injector};
+use remus::isa::microop::MicroOp;
+use remus::isa::program::Step;
+use remus::xbar::{Crossbar, Gate, Partitions};
+
+fn main() {
+    header("perf_hotpath", "EXPERIMENTS.md §Perf: simulator hot paths");
+
+    // --- L3 hot path 1: row-parallel gate application ----------------
+    let rows = 1024;
+    let mut x = Crossbar::new(rows, 64);
+    for r in 0..rows {
+        x.state_mut().set(r, 0, r % 2 == 0);
+        x.state_mut().set(r, 1, r % 3 == 0);
+    }
+    let step = Step::one(MicroOp::row(Gate::Nor2, &[0, 1], 2));
+    let iters = 100_000u64;
+    let r = bench("in-row NOR, 1024 rows (clean)", iters, || {
+        for _ in 0..iters {
+            x.apply_step(&step, None).unwrap();
+        }
+    });
+    throughput(&r, "gate", iters as f64);
+    throughput(&r, "row-gate-bit", iters as f64 * rows as f64);
+
+    // --- with error injection at realistic p -------------------------
+    let mut inj = Injector::new(ErrorModel::direct_only(1e-6), 1, 0);
+    let r = bench("in-row NOR, 1024 rows (p_gate=1e-6)", iters, || {
+        for _ in 0..iters {
+            x.apply_step(&step, Some(&mut inj)).unwrap();
+        }
+    });
+    throughput(&r, "row-gate-bit", iters as f64 * rows as f64);
+
+    let mut inj = Injector::new(ErrorModel::direct_only(1e-3), 1, 0);
+    let r = bench("in-row NOR, 1024 rows (p_gate=1e-3)", iters, || {
+        for _ in 0..iters {
+            x.apply_step(&step, Some(&mut inj)).unwrap();
+        }
+    });
+    throughput(&r, "row-gate-bit", iters as f64 * rows as f64);
+
+    // --- L3 hot path 2: full MultPIM-32 program, 128 rows -------------
+    let (prog, lay) = multpim_program(32);
+    let mut x = Crossbar::new(128, lay.width as usize);
+    x.set_col_partitions(Partitions::new(lay.width, lay.partition_starts.clone()));
+    for r0 in 0..128 {
+        for k in 0..32usize {
+            x.state_mut().set(r0, lay.a_cols[k] as usize, (r0 + k) % 2 == 0);
+            x.state_mut().set(r0, lay.b_cols[k] as usize, (r0 * k) % 3 == 0);
+        }
+    }
+    let ops = prog.num_ops() as f64;
+    let r = bench("MultPIM-32 program, 128 rows (clean)", 1, || {
+        x.run_program(&prog, None).unwrap();
+    });
+    throughput(&r, "micro-op", ops);
+    throughput(&r, "mult", 128.0);
+    let mut inj = Injector::new(ErrorModel::direct_only(1e-6), 2, 0);
+    let r = bench("MultPIM-32 program, 128 rows (p=1e-6)", 1, || {
+        x.run_program(&prog, Some(&mut inj)).unwrap();
+    });
+    throughput(&r, "mult", 128.0);
+
+    // --- MC engine: single-lane interpreter ---------------------------
+    use remus::analysis::lane::{FaultPlan, LaneSim};
+    let mut rng = remus::util::rng::Pcg64::new(5, 0);
+    let r = bench("LaneSim MultPIM-32 single lane (random faults p=1e-6)", 100, || {
+        for _ in 0..100 {
+            let mut lane = LaneSim::new(lay.width as usize);
+            lane.load(&lay.a_cols, 0xDEADBEEF);
+            lane.load(&lay.b_cols, 0x12345678);
+            lane.run(&prog, FaultPlan::Random { p: 1e-6, rng: &mut rng });
+        }
+    });
+    throughput(&r, "mult-campaign-trial", 100.0);
+
+    // --- PJRT executor (if artifacts present) -------------------------
+    if let Ok(mut rt) = remus::runtime::Runtime::new() {
+        use remus::runtime::XlaCrossbar;
+        let (prog8, lay8) = multpim_program(8);
+        let mut xla = XlaCrossbar::new(128, 128);
+        for r0 in 0..128 {
+            for k in 0..8usize {
+                xla.state_mut().set(r0, lay8.a_cols[k] as usize, (r0 + k) % 2 == 0);
+                xla.state_mut().set(r0, lay8.b_cols[k] as usize, (r0 * k) % 5 == 0);
+            }
+        }
+        // warm compile
+        xla.run_program(&mut rt, &prog8).unwrap();
+        let r = bench("PJRT gate-scan MultPIM-8, 128 rows", 1, || {
+            xla.run_program(&mut rt, &prog8).unwrap();
+        });
+        throughput(&r, "mult", 128.0);
+        // native comparison
+        let mut xn = Crossbar::new(128, 128);
+        xn.set_col_partitions(Partitions::new(128, lay8.partition_starts.clone()));
+        let r = bench("native  MultPIM-8, 128 rows", 1, || {
+            xn.run_program(&prog8, None).unwrap();
+        });
+        throughput(&r, "mult", 128.0);
+    } else {
+        println!("(artifacts not built; skipping PJRT hot path — run `make artifacts`)");
+    }
+
+    // --- coordinator request path -------------------------------------
+    use remus::coordinator::{Coordinator, CoordinatorConfig};
+    use remus::mmpu::FunctionKind;
+    let coord = Coordinator::start(CoordinatorConfig {
+        workers: 4,
+        rows: 64,
+        cols: 512,
+        max_batch: 64,
+        max_wait: std::time::Duration::from_micros(200),
+        ..Default::default()
+    })
+    .unwrap();
+    let n = 4096u64;
+    let r = bench("coordinator: 4096 mul8 requests, 4 workers", n, || {
+        let rxs: Vec<_> =
+            (0..n).map(|i| coord.submit(FunctionKind::Mul(8), i % 251, (i * 3) % 251)).collect();
+        for rx in rxs {
+            rx.recv().unwrap();
+        }
+    });
+    throughput(&r, "request", n as f64);
+    let m = coord.metrics();
+    println!(
+        "      mean batch {:.1}, p50 {} us, p99 {} us",
+        m.mean_batch_size(),
+        m.latency_percentile_us(50.0),
+        m.latency_percentile_us(99.0)
+    );
+    coord.shutdown();
+}

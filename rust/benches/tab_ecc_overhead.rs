@@ -1,0 +1,81 @@
+//! E8 — the paper's §IV claim: diagonal ECC adds a "moderate latency
+//! overhead of 26 % on average" across the function mix. Regenerates the
+//! per-function overhead table from the cost model AND measures it
+//! end-to-end through the controller (wall clock + cycle accounting).
+
+use remus::analysis::overhead::suite_overhead;
+use remus::bench_harness::{bench, header, throughput};
+use remus::errs::ErrorModel;
+use remus::mmpu::{controller::quick_exec, FunctionKind, ReliabilityPolicy};
+use remus::tmr::TmrMode;
+use remus::util::table::Table;
+
+fn main() {
+    header("tab_ecc_overhead", "§IV: ECC latency overhead, 26% average (paper)");
+
+    for m in [8usize, 16, 32] {
+        let (rows, avg) = suite_overhead(m);
+        let mut t = Table::new(
+            &format!("per-function ECC latency overhead, block m={m}"),
+            &["function", "base_cycles", "ecc_cycles", "overhead_%"],
+        );
+        for r in &rows {
+            t.row(&[
+                r.name.clone(),
+                r.base_cycles.to_string(),
+                r.ecc_cycles.to_string(),
+                format!("{:.1}", r.overhead_pct),
+            ]);
+        }
+        t.print();
+        println!("m={m}: suite average = {avg:.1}%  (paper: 26% @ m~16)\n");
+        if m == 16 {
+            let _ = t.write_csv("tab_ecc_overhead.csv");
+        }
+    }
+
+    // End-to-end measured cycles through the controller.
+    let a: Vec<u64> = (0..32).collect();
+    let b: Vec<u64> = (0..32).map(|i| i + 9).collect();
+    let mut t = Table::new(
+        "controller-measured compute vs ECC extension cycles (32 items)",
+        &["function", "compute_cycles", "ecc_cycles", "overhead_%"],
+    );
+    for kind in [FunctionKind::Xor(32), FunctionKind::Add(32), FunctionKind::Mul(16)] {
+        let r = quick_exec(
+            kind,
+            ReliabilityPolicy { ecc_m: Some(16), tmr: TmrMode::Off },
+            ErrorModel::none(),
+            7,
+            &a,
+            &b,
+        )
+        .unwrap();
+        t.row(&[
+            kind.name(),
+            r.compute_cycles.to_string(),
+            r.ecc_cycles.to_string(),
+            format!("{:.1}", 100.0 * r.ecc_cycles as f64 / r.compute_cycles as f64),
+        ]);
+    }
+    t.print();
+
+    // Wall-clock impact of maintaining ECC in the simulator.
+    let run = |ecc: Option<usize>| {
+        move || {
+            let _ = quick_exec(
+                FunctionKind::Mul(16),
+                ReliabilityPolicy { ecc_m: ecc, tmr: TmrMode::Off },
+                ErrorModel::none(),
+                3,
+                &[7; 32],
+                &[9; 32],
+            )
+            .unwrap();
+        }
+    };
+    let r0 = bench("controller mul16 x32 rows (no ECC)", 32, run(None));
+    throughput(&r0, "mult", 32.0);
+    let r1 = bench("controller mul16 x32 rows (ECC m=16)", 32, run(Some(16)));
+    throughput(&r1, "mult", 32.0);
+}

@@ -1,0 +1,70 @@
+//! E9 — the §V TMR trade-off: serial = 3x latency / ~1x area;
+//! parallel = ~1x latency / 3x area; semi-parallel = 1x/1x at 1/3
+//! throughput. Measured on the real crossbar simulator for the adder and
+//! the MultPIM multiplier (cycles = crossbar cycle accounting, area =
+//! columns, throughput = items per execution).
+
+use remus::arith::adder::ripple_adder;
+use remus::arith::multiplier::multpim_program;
+use remus::bench_harness::header;
+use remus::isa::program::Program;
+use remus::tmr::{TmrEngine, TmrMode};
+use remus::util::table::Table;
+use remus::xbar::{Crossbar, Partitions};
+
+fn measure(prog: &Program, mode: TmrMode) -> (u64, u32, usize) {
+    let rows = 64;
+    let width = match mode {
+        TmrMode::Serial => TmrEngine::serial_layout(prog).width as usize,
+        TmrMode::Parallel => (3 * prog.width + prog.output_cols.len() as u32 + 2) as usize,
+        _ => prog.width as usize,
+    };
+    let mut x = Crossbar::new(rows, width);
+    if mode != TmrMode::Parallel && prog.partition_starts.len() > 1 {
+        let mut starts = prog.partition_starts.clone();
+        starts.retain(|&s| (s as usize) < width);
+        x.set_col_partitions(Partitions::new(width as u32, starts));
+    }
+    let run = TmrEngine::new(mode).execute(&mut x, prog, None).unwrap();
+    (run.cycles, run.area_cols, run.items)
+}
+
+fn main() {
+    header("tab_tmr_tradeoff", "§V: TMR latency/area/throughput trade-off (Fig 3)");
+
+    let mut t = Table::new(
+        "measured on the crossbar simulator (64 rows)",
+        &["function", "mode", "cycles", "latency_x", "area_cols", "area_x", "items", "thru_x"],
+    );
+    for (name, prog) in [
+        ("add32", ripple_adder(32).0),
+        ("multpim8", multpim_program(8).0),
+        ("multpim16", multpim_program(16).0),
+    ] {
+        let (base_cycles, base_area, base_items) = measure(&prog, TmrMode::Off);
+        for mode in [TmrMode::Off, TmrMode::Serial, TmrMode::Parallel, TmrMode::SemiParallel] {
+            // Parallel mode needs zipped-step structure; the MultPIM
+            // programs already use partition concurrency per copy, which
+            // composes (3N partitions) but needs width 3x: skip parallel
+            // for multpim16 at 64 rows if too wide for the demo budget.
+            if mode == TmrMode::Parallel && prog.width > 300 {
+                continue;
+            }
+            let (cycles, area, items) = measure(&prog, mode);
+            t.row(&[
+                name.to_string(),
+                format!("{mode:?}"),
+                cycles.to_string(),
+                format!("{:.2}", cycles as f64 / base_cycles as f64),
+                area.to_string(),
+                format!("{:.2}", area as f64 / base_area as f64),
+                items.to_string(),
+                format!("{:.2}", items as f64 / base_items as f64),
+            ]);
+        }
+    }
+    t.print();
+    let _ = t.write_csv("tab_tmr_tradeoff.csv");
+    println!("paper: serial 3x latency / 1x area; parallel 1x latency / 3x area;");
+    println!("       semi-parallel 1x/1x at 1/3 throughput (voting via Minority3)");
+}

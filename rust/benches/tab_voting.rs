@@ -1,0 +1,84 @@
+//! E10 — §V per-bit vs per-element voting: per-bit strictly dominates
+//! (they differ exactly where per-element is undefined), demonstrated
+//! exhaustively for 4-bit outputs and statistically for 64-bit, plus the
+//! paper's 1000/0100/0010 example.
+
+use remus::bench_harness::{bench, header, throughput};
+use remus::tmr::voting::{per_bit_vote_word, per_element_vote};
+use remus::util::rng::Pcg64;
+use remus::util::table::Table;
+
+fn main() {
+    header("tab_voting", "§V: per-bit vs per-element voting comparison");
+
+    println!("paper example: copies 1000 / 0100 / 0010 (truth 0000)");
+    println!("  per-element: {:?} (undefined -> error)", per_element_vote(0b1000, 0b0100, 0b0010));
+    println!("  per-bit:     {:04b} (correct)\n", per_bit_vote_word(0b1000, 0b0100, 0b0010));
+
+    // Exhaustive 4-bit: for every (truth, e1, e2, e3) single-bit-error
+    // pattern, compare success rates.
+    let mut pb_ok = 0u64;
+    let mut pe_ok = 0u64;
+    let mut total = 0u64;
+    for truth in 0..16u64 {
+        for e1 in 0..4 {
+            for e2 in 0..4 {
+                for e3 in 0..4 {
+                    let a = truth ^ (1 << e1);
+                    let b = truth ^ (1 << e2);
+                    let c = truth ^ (1 << e3);
+                    total += 1;
+                    if per_bit_vote_word(a, b, c) == truth {
+                        pb_ok += 1;
+                    }
+                    if per_element_vote(a, b, c) == Some(truth) {
+                        pe_ok += 1;
+                    }
+                }
+            }
+        }
+    }
+    let mut t = Table::new(
+        "exhaustive: one single-bit error per copy (4-bit outputs)",
+        &["scheme", "correct", "total", "success_%"],
+    );
+    t.row(&["per-bit".into(), pb_ok.to_string(), total.to_string(), format!("{:.1}", 100.0 * pb_ok as f64 / total as f64)]);
+    t.row(&["per-element".into(), pe_ok.to_string(), total.to_string(), format!("{:.1}", 100.0 * pe_ok as f64 / total as f64)]);
+    t.print();
+    assert!(pb_ok > pe_ok);
+
+    // Statistical 64-bit with Poisson-ish multi-bit errors.
+    let mut rng = Pcg64::new(2, 0);
+    let trials = 200_000u64;
+    let mut pb = 0u64;
+    let mut pe = 0u64;
+    for _ in 0..trials {
+        let truth = rng.next_u64();
+        let mut corrupt = |rng: &mut Pcg64| {
+            let mut v = truth;
+            let flips = rng.below(3);
+            for _ in 0..flips {
+                v ^= 1 << rng.below(64);
+            }
+            v
+        };
+        let (a, b, c) = (corrupt(&mut rng), corrupt(&mut rng), corrupt(&mut rng));
+        pb += (per_bit_vote_word(a, b, c) == truth) as u64;
+        pe += (per_element_vote(a, b, c) == Some(truth)) as u64;
+    }
+    println!(
+        "\n64-bit statistical (0-2 random flips/copy, {trials} trials): per-bit {:.3}% vs per-element {:.3}%",
+        100.0 * pb as f64 / trials as f64,
+        100.0 * pe as f64 / trials as f64
+    );
+    assert!(pb >= pe);
+
+    let r = bench("per_bit_vote_word", 1_000_000, || {
+        let mut acc = 0u64;
+        for i in 0..1_000_000u64 {
+            acc ^= per_bit_vote_word(i, i.wrapping_mul(3), i.wrapping_mul(7));
+        }
+        std::hint::black_box(acc);
+    });
+    throughput(&r, "vote", 1e6);
+}

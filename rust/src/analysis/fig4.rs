@@ -1,0 +1,258 @@
+//! Multiplication + network reliability analysis (paper §VI-A/B, Fig. 4).
+//!
+//! Method, mirroring the paper's:
+//! 1. Monte-Carlo fault injection on the real MultPIM micro-code
+//!    measures the **logical masking**: `alpha` = P[a single random gate
+//!    fault corrupts the product] and `gamma` = P[two independently
+//!    faulty copies share a wrong output bit].
+//! 2. Extrapolation to un-simulatable rates (p_gate down to 1e-10):
+//!    * baseline    `p_mult(p) = 1 - (1 - alpha * p)^G`,
+//!    * TMR (ideal) `3 * gamma * q^2` with `q = p_mult(p)` (two of three
+//!      copies wrong AND overlapping),
+//!    * TMR (real)  adds the in-memory voting stage: each voted bit
+//!      passes Min3 + NOT, each fallible, so a bit flips with
+//!      `2 p (1 - p)` and the product fails with
+//!      `v(p) = 1 - (1 - 2p(1-p))^bits` — this term is what overtakes
+//!      the quadratic near p = 1e-9 in the paper.
+//! 3. Direct MC validation at simulatable rates (>= ~1e-5) checks the
+//!    model before it is trusted below them.
+
+use crate::arith::multiplier::{multpim_program, MultLayout};
+use crate::isa::program::Program;
+use crate::util::rng::Pcg64;
+use crate::util::stats::{one_minus_pow, wilson_interval};
+
+use super::lane::{FaultPlan, LaneSim};
+
+/// Measured masking constants + model evaluation for one multiplier.
+#[derive(Clone, Debug)]
+pub struct MultReliability {
+    pub n_bits: u32,
+    pub gates: usize,
+    pub alpha: f64,
+    pub gamma: f64,
+    prog: Program,
+    layout: MultLayout,
+}
+
+/// One row of the Fig. 4 data series.
+#[derive(Clone, Copy, Debug)]
+pub struct Fig4Row {
+    pub p_gate: f64,
+    pub baseline: f64,
+    pub tmr: f64,
+    pub tmr_ideal: f64,
+}
+
+impl MultReliability {
+    /// Build the n-bit multiplier and measure alpha / gamma with
+    /// `trials` Monte-Carlo single-fault injections.
+    pub fn measure(n_bits: u32, trials: usize, seed: u64) -> Self {
+        let (prog, layout) = multpim_program(n_bits);
+        let gates = prog.logic_gates_per_lane();
+        let mut rng = Pcg64::new(seed, 0);
+        let mask = if n_bits == 32 { u64::MAX } else { (1u64 << (2 * n_bits)) - 1 };
+
+        // alpha: single uniform fault.
+        let mut wrong = 0usize;
+        for _ in 0..trials {
+            let a = rng.next_u64() & ((1u64 << n_bits) - 1);
+            let b = rng.next_u64() & ((1u64 << n_bits) - 1);
+            let idx = rng.below(gates as u64) as usize;
+            let mut lane = LaneSim::new(layout.width as usize);
+            lane.load(&layout.a_cols, a);
+            lane.load(&layout.b_cols, b);
+            lane.run(&prog, FaultPlan::Exact(&[idx]));
+            if lane.read(&layout.result.cols()) & mask != a.wrapping_mul(b) & mask {
+                wrong += 1;
+            }
+        }
+        let alpha = wrong as f64 / trials as f64;
+
+        // gamma: overlap of wrong bits between two independently-faulty
+        // wrong copies (conditioned on both being wrong).
+        let mut overlap = 0usize;
+        let mut both_wrong = 0usize;
+        while both_wrong < trials / 4 {
+            let a = rng.next_u64() & ((1u64 << n_bits) - 1);
+            let b = rng.next_u64() & ((1u64 << n_bits) - 1);
+            let truth = a.wrapping_mul(b) & mask;
+            let sample = |rng: &mut Pcg64| {
+                let idx = rng.below(gates as u64) as usize;
+                let mut lane = LaneSim::new(layout.width as usize);
+                lane.load(&layout.a_cols, a);
+                lane.load(&layout.b_cols, b);
+                lane.run(&prog, FaultPlan::Exact(&[idx]));
+                lane.read(&layout.result.cols()) & mask
+            };
+            let r1 = sample(&mut rng);
+            let r2 = sample(&mut rng);
+            if r1 != truth && r2 != truth {
+                both_wrong += 1;
+                if (r1 ^ truth) & (r2 ^ truth) != 0 {
+                    overlap += 1;
+                }
+            }
+        }
+        let gamma = overlap as f64 / both_wrong as f64;
+
+        Self { n_bits, gates, alpha, gamma, prog, layout }
+    }
+
+    /// Analytical baseline multiplication failure probability.
+    pub fn p_mult(&self, p_gate: f64) -> f64 {
+        one_minus_pow(self.alpha * p_gate, self.gates as f64)
+    }
+
+    /// Voting-stage failure: 2 fallible gates per output bit.
+    pub fn p_vote(&self, p_gate: f64) -> f64 {
+        let bits = 2.0 * self.n_bits as f64;
+        one_minus_pow(2.0 * p_gate * (1.0 - p_gate), bits)
+    }
+
+    /// TMR with ideal (error-free) voting — the dashed line of Fig. 4.
+    pub fn p_tmr_ideal(&self, p_gate: f64) -> f64 {
+        let q = self.p_mult(p_gate);
+        (3.0 * self.gamma * q * q).min(1.0)
+    }
+
+    /// TMR with in-memory Minority3 voting.
+    pub fn p_tmr(&self, p_gate: f64) -> f64 {
+        (self.p_tmr_ideal(p_gate) + self.p_vote(p_gate)).min(1.0)
+    }
+
+    /// Generate the Fig. 4 (top) series over a p_gate grid.
+    pub fn series(&self, p_grid: &[f64]) -> Vec<Fig4Row> {
+        p_grid
+            .iter()
+            .map(|&p| Fig4Row {
+                p_gate: p,
+                baseline: self.p_mult(p),
+                tmr: self.p_tmr(p),
+                tmr_ideal: self.p_tmr_ideal(p),
+            })
+            .collect()
+    }
+
+    /// Direct Monte-Carlo estimate of the baseline p_mult at a
+    /// simulatable p_gate (used to validate the model).
+    pub fn mc_baseline(&self, p_gate: f64, trials: usize, seed: u64) -> (f64, f64, f64) {
+        let mask =
+            if self.n_bits == 32 { u64::MAX } else { (1u64 << (2 * self.n_bits)) - 1 };
+        let mut rng = Pcg64::new(seed, 1);
+        let mut wrong = 0u64;
+        for _ in 0..trials {
+            let a = rng.next_u64() & ((1u64 << self.n_bits) - 1);
+            let b = rng.next_u64() & ((1u64 << self.n_bits) - 1);
+            let mut lane = LaneSim::new(self.layout.width as usize);
+            lane.load(&self.layout.a_cols, a);
+            lane.load(&self.layout.b_cols, b);
+            lane.run(&self.prog, FaultPlan::Random { p: p_gate, rng: &mut rng });
+            if lane.read(&self.layout.result.cols()) & mask != a.wrapping_mul(b) & mask {
+                wrong += 1;
+            }
+        }
+        let (lo, hi) = wilson_interval(wrong, trials as u64, 1.96);
+        (wrong as f64 / trials as f64, lo, hi)
+    }
+
+    /// Direct Monte-Carlo estimate of TMR (serial, faulty per-bit
+    /// voting) at a simulatable p_gate.
+    pub fn mc_tmr(&self, p_gate: f64, trials: usize, seed: u64) -> (f64, f64, f64) {
+        let mask =
+            if self.n_bits == 32 { u64::MAX } else { (1u64 << (2 * self.n_bits)) - 1 };
+        let bits = 2 * self.n_bits;
+        let mut rng = Pcg64::new(seed, 2);
+        let mut wrong = 0u64;
+        for _ in 0..trials {
+            let a = rng.next_u64() & ((1u64 << self.n_bits) - 1);
+            let b = rng.next_u64() & ((1u64 << self.n_bits) - 1);
+            let truth = a.wrapping_mul(b) & mask;
+            let copy = |rng: &mut Pcg64| {
+                let mut lane = LaneSim::new(self.layout.width as usize);
+                lane.load(&self.layout.a_cols, a);
+                lane.load(&self.layout.b_cols, b);
+                lane.run(&self.prog, FaultPlan::Random { p: p_gate, rng });
+                lane.read(&self.layout.result.cols()) & mask
+            };
+            let (r1, r2, r3) = (copy(&mut rng), copy(&mut rng), copy(&mut rng));
+            // Per-bit Min3+NOT voting with fallible gates:
+            // voted_bit = maj ^ f_min ^ f_not.
+            let mut voted = (r1 & r2) | (r1 & r3) | (r2 & r3);
+            for bit in 0..bits {
+                let f_min = rng.bernoulli(p_gate);
+                let f_not = rng.bernoulli(p_gate);
+                if f_min != f_not {
+                    voted ^= 1u64 << bit;
+                }
+            }
+            if voted & mask != truth {
+                wrong += 1;
+            }
+        }
+        let (lo, hi) = wilson_interval(wrong, trials as u64, 1.96);
+        (wrong as f64 / trials as f64, lo, hi)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rel8() -> MultReliability {
+        MultReliability::measure(8, 400, 0xF16)
+    }
+
+    #[test]
+    fn alpha_is_a_real_masking_factor() {
+        let r = rel8();
+        assert!(r.alpha > 0.05 && r.alpha < 0.95, "alpha = {}", r.alpha);
+        assert!(r.gamma > 0.0 && r.gamma <= 1.0, "gamma = {}", r.gamma);
+    }
+
+    #[test]
+    fn model_matches_mc_at_simulatable_p() {
+        let r = rel8();
+        let p = 3e-4;
+        let model = r.p_mult(p);
+        let (mc, lo, hi) = r.mc_baseline(p, 3000, 7);
+        // Model must sit within ~2x of the MC interval (binomial model vs
+        // exact masking correlations).
+        assert!(
+            model > lo * 0.5 && model < hi * 2.0,
+            "model {model} vs mc {mc} [{lo},{hi}]"
+        );
+    }
+
+    #[test]
+    fn tmr_beats_baseline_and_ideal_beats_tmr() {
+        let r = rel8();
+        for &p in &[1e-8, 1e-7, 1e-6] {
+            assert!(r.p_tmr(p) < r.p_mult(p), "p={p}");
+            assert!(r.p_tmr_ideal(p) <= r.p_tmr(p), "p={p}");
+        }
+    }
+
+    #[test]
+    fn voting_becomes_bottleneck_at_low_p() {
+        // The paper's observation: near p = 1e-9 the non-ideal voting
+        // term dominates the quadratic TMR term.
+        let r = rel8();
+        let p = 1e-9;
+        assert!(r.p_vote(p) > r.p_tmr_ideal(p), "voting dominates at {p}");
+        // And far above, the quadratic dominates.
+        let p = 1e-4;
+        assert!(r.p_vote(p) < r.p_tmr_ideal(p).max(1e-12) * 100.0);
+    }
+
+    #[test]
+    fn series_is_monotone() {
+        let r = rel8();
+        let grid: Vec<f64> = crate::util::stats::logspace(1e-10, 1e-4, 7);
+        let rows = r.series(&grid);
+        for w in rows.windows(2) {
+            assert!(w[0].baseline <= w[1].baseline + 1e-15);
+            assert!(w[0].tmr <= w[1].tmr + 1e-15);
+        }
+    }
+}

@@ -1,0 +1,11 @@
+//! Reliability analysis (paper §VI) — Monte-Carlo fault injection on the
+//! real micro-code plus the paper's analytical extrapolations. These are
+//! the engines behind every Fig. 4 / Fig. 5 / table reproduction in
+//! `rust/benches/`.
+
+pub mod fig4;
+pub mod lane;
+pub mod overhead;
+
+pub use fig4::{Fig4Row, MultReliability};
+pub use lane::{FaultPlan, LaneSim};

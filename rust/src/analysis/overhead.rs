@@ -1,0 +1,184 @@
+//! ECC latency-overhead analysis (paper §IV: "moderate latency overhead
+//! of 26 % on average") and the TMR trade-off table (paper §V).
+
+#[cfg(test)]
+use crate::arith::adder::ripple_adder;
+#[cfg(test)]
+use crate::arith::multiplier::{multpim_program, naive_mult_program};
+use crate::ecc::DiagonalEcc;
+use crate::isa::program::Program;
+use crate::mmpu::functions::{FunctionKind, FunctionSpec};
+
+/// One function's ECC overhead datapoint.
+#[derive(Clone, Debug)]
+pub struct OverheadRow {
+    pub name: String,
+    pub base_cycles: u64,
+    pub ecc_cycles: u64,
+    pub overhead_pct: f64,
+}
+
+/// The function suite the overhead average is computed over — a mix of
+/// short vector ops (where ECC is proportionally expensive) and long
+/// arithmetic (where it amortizes), like the DAC'21 evaluation.
+pub fn function_suite() -> Vec<(String, Program)> {
+    let mut suite: Vec<(String, Program)> = vec![];
+    for kind in [
+        FunctionKind::Xor(8),
+        FunctionKind::Xor(32),
+        FunctionKind::Add(16),
+        FunctionKind::Add(32),
+        FunctionKind::Mul(8),
+        FunctionKind::Mul(16),
+        FunctionKind::Mul(32),
+    ] {
+        let f = FunctionSpec::build(kind);
+        suite.push((kind.name(), f.prog));
+    }
+    // A raw copy (the cheapest possible function, worst-case ratio).
+    {
+        use crate::arith::{layout::ColAlloc, logic};
+        use crate::isa::program::RowProgramBuilder;
+        let mut b = RowProgramBuilder::new("copy32");
+        let mut alloc = ColAlloc::new(64, 128);
+        b.inputs(&(0..32).collect::<Vec<_>>());
+        for i in 0..32 {
+            logic::copy_bit(&mut b, &mut alloc, i, 32 + i);
+        }
+        b.outputs(&(32..64).collect::<Vec<_>>());
+        suite.push(("copy32".into(), b.finish()));
+    }
+    suite
+}
+
+/// ECC latency overhead for one function under the diagonal code:
+/// verify touched blocks before + update output check bits after
+/// (the extension runs in parallel; these are the serialization points).
+pub fn ecc_overhead(prog: &Program, m: usize) -> OverheadRow {
+    // Cost model constants come from the engine itself.
+    let ecc = DiagonalEcc::new(m * 4, m * 4, m);
+    let base = prog.cycles() as u64;
+    let verify = ecc.verify_cost();
+    let update = ecc.update_cost(prog.output_cols.len().max(1) as u64);
+    let total = verify + update;
+    OverheadRow {
+        name: prog.name.clone(),
+        base_cycles: base,
+        ecc_cycles: total,
+        overhead_pct: 100.0 * total as f64 / base as f64,
+    }
+}
+
+/// The suite-average ECC overhead (the paper's "26 % on average").
+pub fn suite_overhead(m: usize) -> (Vec<OverheadRow>, f64) {
+    let rows: Vec<OverheadRow> =
+        function_suite().iter().map(|(_, p)| ecc_overhead(p, m)).collect();
+    let avg = rows.iter().map(|r| r.overhead_pct).sum::<f64>() / rows.len() as f64;
+    (rows, avg)
+}
+
+/// TMR trade-off datapoint (latency/area/throughput vs the unreliable
+/// baseline), computed from the synthesized programs' cost model.
+#[derive(Clone, Debug)]
+pub struct TradeoffRow {
+    pub func: String,
+    pub mode: &'static str,
+    pub latency_x: f64,
+    pub area_x: f64,
+    pub throughput_x: f64,
+}
+
+/// Analytical trade-off rows for a function (the measured-on-crossbar
+/// version lives in benches/tab_tmr_tradeoff.rs).
+pub fn tmr_tradeoffs(name: &str, prog: &Program) -> Vec<TradeoffRow> {
+    let base_cycles = prog.cycles() as f64;
+    let base_area = prog.width as f64;
+    let o = prog.output_cols.len() as f64;
+    let vote_cycles = 4.0 * o; // Min3+NOT (+2 inits) per output bit
+    vec![
+        TradeoffRow {
+            func: name.into(),
+            mode: "serial",
+            latency_x: (3.0 * base_cycles + vote_cycles) / base_cycles,
+            area_x: (base_area + 3.0 * o + 1.0) / base_area,
+            throughput_x: base_cycles / (3.0 * base_cycles + vote_cycles),
+        },
+        TradeoffRow {
+            func: name.into(),
+            mode: "parallel",
+            latency_x: (base_cycles + vote_cycles) / base_cycles,
+            area_x: (3.0 * base_area + o + 1.0) / base_area,
+            throughput_x: base_cycles / (base_cycles + vote_cycles),
+        },
+        TradeoffRow {
+            func: name.into(),
+            mode: "semi-parallel",
+            latency_x: 1.0, // voting amortizes per item across the batch
+            area_x: 1.0,
+            throughput_x: 1.0 / 3.0,
+        },
+    ]
+}
+
+/// The Fig. 2 cycle-cost comparison: parity update cost after an
+/// in-column operation, naive horizontal vs diagonal, as n grows.
+pub fn fig2_update_costs(ns: &[usize]) -> Vec<(usize, u64, u64)> {
+    ns.iter()
+        .map(|&n| {
+            let horiz = crate::ecc::HorizontalEcc::new(n, n, 8);
+            let diag = DiagonalEcc::new(n, n, 16);
+            (n, horiz.update_cost_in_col(), diag.update_cost(1))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn suite_average_near_paper_26pct() {
+        let (rows, avg) = suite_overhead(16);
+        assert!(rows.len() >= 8);
+        // The paper reports 26 % on average over its function mix; our
+        // suite must land in the same regime (15..40 %).
+        assert!((10.0..45.0).contains(&avg), "avg overhead = {avg:.1}%");
+        // Long functions amortize: mul32 overhead must be far below the
+        // copy32 worst case.
+        let get = |n: &str| rows.iter().find(|r| r.name.contains(n)).unwrap().overhead_pct;
+        assert!(get("multpim32") < get("copy32") / 3.0);
+    }
+
+    #[test]
+    fn tradeoffs_match_paper_headline() {
+        let (prog, _) = multpim_program(16);
+        let rows = tmr_tradeoffs("mul16", &prog);
+        let serial = &rows[0];
+        assert!((2.9..3.6).contains(&serial.latency_x), "{}", serial.latency_x);
+        assert!(serial.area_x < 1.5);
+        let par = &rows[1];
+        assert!(par.latency_x < 1.3);
+        assert!((2.9..3.3).contains(&par.area_x), "{}", par.area_x);
+        let semi = &rows[2];
+        assert!((semi.throughput_x - 1.0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fig2_gap_grows_linearly() {
+        let costs = fig2_update_costs(&[64, 256, 1024]);
+        assert_eq!(costs[0].2, costs[2].2, "diagonal is O(1)");
+        assert_eq!(costs[2].1, 1024, "horizontal in-column is O(n)");
+        assert!(costs[2].1 / costs[2].2 > 200, "gap at n=1024");
+    }
+
+    #[test]
+    fn naive_vs_multpim_latency_gap() {
+        // Sanity for the ablation bench: partitions are what make TMR's
+        // "1x latency" claim meaningful.
+        let (mp, _) = multpim_program(16);
+        let (nv, _) = naive_mult_program(16);
+        assert!(nv.cycles() > 4 * mp.cycles());
+        let (add, _) = ripple_adder(32);
+        assert!(add.cycles() < nv.cycles());
+    }
+}

@@ -1,0 +1,119 @@
+//! Column layout helpers for single-row functions.
+
+/// A contiguous little-endian bit field within a row: bit `i` of the
+/// value lives in column `base + i`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BitField {
+    pub base: u32,
+    pub width: u32,
+}
+
+impl BitField {
+    pub fn new(base: u32, width: u32) -> Self {
+        assert!(width > 0);
+        Self { base, width }
+    }
+
+    /// Column of bit `i`.
+    pub fn col(&self, i: u32) -> u32 {
+        assert!(i < self.width, "bit {i} outside field of width {}", self.width);
+        self.base + i
+    }
+
+    pub fn cols(&self) -> Vec<u32> {
+        (0..self.width).map(|i| self.base + i).collect()
+    }
+
+    pub fn end(&self) -> u32 {
+        self.base + self.width
+    }
+}
+
+/// Bump allocator for work columns while synthesizing a program.
+#[derive(Clone, Debug)]
+pub struct ColAlloc {
+    next: u32,
+    limit: u32,
+    high_water: u32,
+}
+
+impl ColAlloc {
+    pub fn new(start: u32, limit: u32) -> Self {
+        assert!(start <= limit);
+        Self { next: start, limit, high_water: start }
+    }
+
+    pub fn one(&mut self) -> u32 {
+        let c = self.next;
+        assert!(c < self.limit, "out of columns (limit {})", self.limit);
+        self.next += 1;
+        self.high_water = self.high_water.max(self.next);
+        c
+    }
+
+    pub fn field(&mut self, width: u32) -> BitField {
+        let base = self.next;
+        assert!(base + width <= self.limit, "out of columns for field of {width}");
+        self.next += width;
+        self.high_water = self.high_water.max(self.next);
+        BitField::new(base, width)
+    }
+
+    /// Roll back to a checkpoint (frees everything allocated after it) —
+    /// used to reuse scratch columns across adder stages.
+    pub fn checkpoint(&self) -> u32 {
+        self.next
+    }
+
+    pub fn restore(&mut self, cp: u32) {
+        assert!(cp <= self.next);
+        self.next = cp;
+    }
+
+    /// Highest column ever allocated (area accounting).
+    pub fn high_water(&self) -> u32 {
+        self.high_water
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn field_columns() {
+        let f = BitField::new(8, 4);
+        assert_eq!(f.col(0), 8);
+        assert_eq!(f.col(3), 11);
+        assert_eq!(f.cols(), vec![8, 9, 10, 11]);
+        assert_eq!(f.end(), 12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn field_oob() {
+        BitField::new(0, 4).col(4);
+    }
+
+    #[test]
+    fn alloc_and_restore() {
+        let mut a = ColAlloc::new(0, 100);
+        let x = a.one();
+        let f = a.field(10);
+        assert_eq!(x, 0);
+        assert_eq!(f.base, 1);
+        let cp = a.checkpoint();
+        let _ = a.field(20);
+        assert_eq!(a.high_water(), 31);
+        a.restore(cp);
+        assert_eq!(a.one(), 11);
+        assert_eq!(a.high_water(), 31, "high water survives restore");
+    }
+
+    #[test]
+    #[should_panic]
+    fn alloc_exhaustion_panics() {
+        let mut a = ColAlloc::new(0, 4);
+        a.field(5);
+    }
+}

@@ -1,0 +1,134 @@
+//! Macro gates built from MAGIC/FELIX primitives.
+//!
+//! Every helper appends to a `RowProgramBuilder` and returns the output
+//! column, so larger functions compose by chaining.
+
+use crate::isa::program::RowProgramBuilder;
+use crate::xbar::gate::Gate;
+
+use super::layout::ColAlloc;
+
+/// out = !x (one MAGIC NOT).
+pub fn not(b: &mut RowProgramBuilder, x: u32, out: u32) -> u32 {
+    b.gate(Gate::Not, &[x], out)
+}
+
+/// Copy x into out (two cascaded NOTs through a scratch column).
+pub fn copy_bit(b: &mut RowProgramBuilder, alloc: &mut ColAlloc, x: u32, out: u32) -> u32 {
+    let t = alloc.one();
+    b.gate(Gate::Not, &[x], t);
+    b.gate(Gate::Not, &[t], out)
+}
+
+/// out = x & y  (FELIX NAND + MAGIC NOT).
+pub fn and2(b: &mut RowProgramBuilder, alloc: &mut ColAlloc, x: u32, y: u32, out: u32) -> u32 {
+    let t = alloc.one();
+    b.gate(Gate::Nand2, &[x, y], t);
+    b.gate(Gate::Not, &[t], out)
+}
+
+/// out = x | y  (FELIX OR).
+pub fn or2(b: &mut RowProgramBuilder, x: u32, y: u32, out: u32) -> u32 {
+    b.gate(Gate::Or2, &[x, y], out)
+}
+
+/// out = x ^ y via NOR composition:
+/// x^y = NOR(NOR(x,y), AND(x,y)); AND realized as NAND + NOT.
+/// 4 logic gates total.
+pub fn xor2(b: &mut RowProgramBuilder, alloc: &mut ColAlloc, x: u32, y: u32, out: u32) -> u32 {
+    let cp = alloc.checkpoint();
+    let nor_xy = alloc.one();
+    let nand_xy = alloc.one();
+    let and_xy = alloc.one();
+    b.gate(Gate::Nor2, &[x, y], nor_xy);
+    b.gate(Gate::Nand2, &[x, y], nand_xy);
+    b.gate(Gate::Not, &[nand_xy], and_xy);
+    b.gate(Gate::Nor2, &[nor_xy, and_xy], out);
+    alloc.restore(cp);
+    out
+}
+
+/// out = maj(x, y, z)  (FELIX Minority3 + NOT).
+pub fn maj3(b: &mut RowProgramBuilder, alloc: &mut ColAlloc, x: u32, y: u32, z: u32, out: u32) -> u32 {
+    let t = alloc.one();
+    b.gate(Gate::Min3, &[x, y, z], t);
+    b.gate(Gate::Not, &[t], out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::xbar::crossbar::Crossbar;
+
+    /// Run a 2-input macro over all 4 input combinations (one per row).
+    fn truth2(
+        build: impl Fn(&mut RowProgramBuilder, &mut ColAlloc, u32, u32, u32) -> u32,
+    ) -> Vec<bool> {
+        let mut x = Crossbar::new(4, 32);
+        for r in 0..4 {
+            x.state_mut().set(r, 0, r & 1 == 1);
+            x.state_mut().set(r, 1, r & 2 == 2);
+        }
+        let mut b = RowProgramBuilder::new("truth2");
+        let mut alloc = ColAlloc::new(3, 32);
+        build(&mut b, &mut alloc, 0, 1, 2);
+        x.run_program(&b.finish(), None).unwrap();
+        (0..4).map(|r| x.get(r, 2)).collect()
+    }
+
+    #[test]
+    fn xor2_truth_table() {
+        assert_eq!(truth2(|b, a, x, y, o| xor2(b, a, x, y, o)), vec![false, true, true, false]);
+    }
+
+    #[test]
+    fn and2_truth_table() {
+        assert_eq!(truth2(|b, a, x, y, o| and2(b, a, x, y, o)), vec![false, false, false, true]);
+    }
+
+    #[test]
+    fn or2_truth_table() {
+        assert_eq!(truth2(|b, _a, x, y, o| or2(b, x, y, o)), vec![false, true, true, true]);
+    }
+
+    #[test]
+    fn copy_preserves_value() {
+        assert_eq!(truth2(|b, a, x, _y, o| copy_bit(b, a, x, o)), vec![false, true, false, true]);
+    }
+
+    #[test]
+    fn maj3_truth_table() {
+        let mut x = Crossbar::new(8, 32);
+        for r in 0..8 {
+            x.state_mut().set(r, 0, r & 1 == 1);
+            x.state_mut().set(r, 1, r & 2 == 2);
+            x.state_mut().set(r, 2, r & 4 == 4);
+        }
+        let mut b = RowProgramBuilder::new("maj");
+        let mut alloc = ColAlloc::new(4, 32);
+        maj3(&mut b, &mut alloc, 0, 1, 2, 3);
+        x.run_program(&b.finish(), None).unwrap();
+        for r in 0..8 {
+            let ones = (r & 1) + ((r >> 1) & 1) + ((r >> 2) & 1);
+            assert_eq!(x.get(r, 3), ones >= 2, "row {r}");
+        }
+    }
+
+    #[test]
+    fn xor2_scratch_is_reusable() {
+        // Two XORs sharing the allocator must not clobber each other.
+        let mut x = Crossbar::new(4, 32);
+        for r in 0..4 {
+            x.state_mut().set(r, 0, r & 1 == 1);
+            x.state_mut().set(r, 1, r & 2 == 2);
+        }
+        let mut b = RowProgramBuilder::new("xx");
+        let mut alloc = ColAlloc::new(4, 32);
+        xor2(&mut b, &mut alloc, 0, 1, 2);
+        xor2(&mut b, &mut alloc, 2, 1, 3); // (x^y)^y = x
+        x.run_program(&b.finish(), None).unwrap();
+        for r in 0..4 {
+            assert_eq!(x.get(r, 3), r & 1 == 1, "row {r}");
+        }
+    }
+}

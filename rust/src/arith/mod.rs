@@ -1,0 +1,16 @@
+//! Arithmetic-function synthesis (paper §III-B) — substrate S4.
+//!
+//! Maps Boolean/arithmetic functions onto single-row micro-op programs so
+//! the same function repeats across every crossbar row (vectored
+//! execution). Provides the MAGIC/FELIX macro gates, the ripple-carry
+//! adder, the partition-parallel **MultPIM-style multiplier** (the
+//! paper's §VI-A workload, after [9]), and a serial shift-add baseline.
+
+pub mod adder;
+pub mod layout;
+pub mod logic;
+pub mod multiplier;
+
+pub use adder::{full_adder_gates, ripple_adder, AdderLayout};
+pub use layout::{BitField, ColAlloc};
+pub use multiplier::{multpim_program, naive_mult_program, MultLayout};

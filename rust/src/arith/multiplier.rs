@@ -1,0 +1,428 @@
+//! Fixed-point multiplication as a single-row function.
+//!
+//! Two implementations:
+//!
+//! * [`multpim_program`] — a **partition-parallel carry-save multiplier**
+//!   in the spirit of MultPIM [9] (the algorithm the paper's §VI-A
+//!   reliability case study simulates): N partitions, one per bit
+//!   position, each holding one bit of A/B plus a carry-save accumulator
+//!   slice. Every iteration broadcasts one B bit (multi-output NOT, one
+//!   cycle), forms partial products, runs the 6-gate Min3 full adder in
+//!   all partitions simultaneously, and shifts the sum one partition
+//!   right (two-phase neighbor transfers). O(N) cycles per iteration
+//!   constant, O(N) iterations; O(N^2) total gate *executions* per lane —
+//!   the soft-error sites that drive Fig. 4.
+//! * [`naive_mult_program`] — the serial shift-add baseline confined to a
+//!   single partition: O(N^2) cycles. Used for the throughput/ablation
+//!   comparisons (it is what the mMPU would do *without* partition
+//!   parallelism).
+//!
+//! Layout of the MultPIM-style program (see `MultLayout`): the low result
+//! field `r[0..2n)` lives at the start of partition 0; partition k then
+//! occupies `SLOTS` columns holding
+//! `[a, b, na, s, c, nbb, pp, t0, t1, t2, t3, sum, tmpS, tmpR]`.
+
+use crate::isa::microop::MicroOp;
+use crate::isa::program::Program;
+use crate::xbar::gate::Gate;
+
+use super::layout::BitField;
+
+/// Per-partition slot indices.
+const SLOT_A: u32 = 0;
+const SLOT_B: u32 = 1;
+const SLOT_NA: u32 = 2;
+const SLOT_S: u32 = 3;
+const SLOT_C: u32 = 4;
+const SLOT_NBB: u32 = 5; // broadcast !b_i; reused as CPA carry
+const SLOT_PP: u32 = 6;
+const SLOT_T0: u32 = 7;
+const SLOT_T1: u32 = 8;
+const SLOT_T2: u32 = 9;
+const SLOT_T3: u32 = 10;
+const SLOT_SUM: u32 = 11;
+const SLOT_TMPS: u32 = 12;
+const SLOT_TMPR: u32 = 13;
+/// Columns per partition.
+pub const SLOTS: u32 = 14;
+
+/// Interface of the synthesized multiplier.
+#[derive(Clone, Debug)]
+pub struct MultLayout {
+    pub n: u32,
+    /// Column of bit k of operand A (scattered: one per partition).
+    pub a_cols: Vec<u32>,
+    /// Column of bit k of operand B.
+    pub b_cols: Vec<u32>,
+    /// 2n-bit little-endian product field.
+    pub result: BitField,
+    /// Total columns used.
+    pub width: u32,
+    /// Column-partition starts to configure on the crossbar before
+    /// running with partition-parallel steps.
+    pub partition_starts: Vec<u32>,
+}
+
+struct Builder {
+    prog: Program,
+    n: u32,
+}
+
+impl Builder {
+    fn base(&self, k: u32) -> u32 {
+        2 * self.n + k * SLOTS
+    }
+
+    fn col(&self, k: u32, slot: u32) -> u32 {
+        self.base(k) + slot
+    }
+
+    /// One parallel logic step across partitions, preceded by its
+    /// parallel SET1 init step (MAGIC output initialization).
+    fn par(&mut self, ops: Vec<MicroOp>) {
+        let inits: Vec<MicroOp> =
+            ops.iter().map(|o| MicroOp::row(Gate::Set1, &[], o.out)).collect();
+        self.prog.push_parallel(inits);
+        self.prog.push_parallel(ops);
+    }
+
+    /// One serial gate with init.
+    fn one(&mut self, op: MicroOp) {
+        self.prog.push(MicroOp::row(Gate::Set1, &[], op.out));
+        self.prog.push(op);
+    }
+}
+
+/// Synthesize the n-bit partition-parallel multiplier.
+/// `r = a * b`, all little-endian; see module docs for cost model.
+pub fn multpim_program(n: u32) -> (Program, MultLayout) {
+    assert!(n >= 2, "multiplier needs n >= 2");
+    let mut bld = Builder { prog: Program::new(&format!("multpim{n}")), n };
+
+    // --- prologue: na_k = !a_k ; s_k = c_k = 0 ----------------------
+    let nots: Vec<MicroOp> = (0..n)
+        .map(|k| MicroOp::row(Gate::Not, &[bld.col(k, SLOT_A)], bld.col(k, SLOT_NA)))
+        .collect();
+    bld.par(nots);
+    bld.prog.push_parallel(
+        (0..n).map(|k| MicroOp::row(Gate::Set0, &[], bld.col(k, SLOT_S))).collect(),
+    );
+    bld.prog.push_parallel(
+        (0..n).map(|k| MicroOp::row(Gate::Set0, &[], bld.col(k, SLOT_C))).collect(),
+    );
+
+    // --- main loop: one iteration per B bit -------------------------
+    for i in 0..n {
+        let b_i = bld.col(i, SLOT_B);
+        // (1) broadcast !b_i into every partition (fan-out NOT, 1 cycle).
+        let bcast: Vec<MicroOp> =
+            (0..n).map(|k| MicroOp::row(Gate::Not, &[b_i], bld.col(k, SLOT_NBB))).collect();
+        bld.par(bcast);
+        // (2) partial product: pp_k = a_k & b_i = NOR(na_k, nbb_k).
+        let pps: Vec<MicroOp> = (0..n)
+            .map(|k| {
+                MicroOp::row(
+                    Gate::Nor2,
+                    &[bld.col(k, SLOT_NA), bld.col(k, SLOT_NBB)],
+                    bld.col(k, SLOT_PP),
+                )
+            })
+            .collect();
+        bld.par(pps);
+        // (3) carry-save full adder in every partition.
+        for (ins, out) in [
+            ([SLOT_PP, SLOT_S, SLOT_C], SLOT_T0),
+            ([SLOT_PP, SLOT_S, SLOT_T0], SLOT_T1),
+            ([SLOT_PP, SLOT_C, SLOT_T0], SLOT_T2),
+            ([SLOT_S, SLOT_C, SLOT_T0], SLOT_T3),
+            ([SLOT_T1, SLOT_T2, SLOT_T3], SLOT_SUM),
+        ] {
+            let ops: Vec<MicroOp> = (0..n)
+                .map(|k| {
+                    MicroOp::row(
+                        Gate::Min3,
+                        &[bld.col(k, ins[0]), bld.col(k, ins[1]), bld.col(k, ins[2])],
+                        bld.col(k, out),
+                    )
+                })
+                .collect();
+            bld.par(ops);
+        }
+        // c_k = !t0 (new carry, weight k after the shift below).
+        let carries: Vec<MicroOp> = (0..n)
+            .map(|k| MicroOp::row(Gate::Not, &[bld.col(k, SLOT_T0)], bld.col(k, SLOT_C)))
+            .collect();
+        bld.par(carries);
+        // (4) result bit i = sum_0 (2-NOT copy inside partition 0).
+        bld.one(MicroOp::row(Gate::Not, &[bld.col(0, SLOT_SUM)], bld.col(0, SLOT_TMPR)));
+        bld.one(MicroOp::row(Gate::Not, &[bld.col(0, SLOT_TMPR)], i));
+        // (5) shift: s_k = sum_{k+1} (two-phase neighbor transfers),
+        //     s_{n-1} = 0.
+        for phase in 0..2u32 {
+            let ops: Vec<MicroOp> = (0..n - 1)
+                .filter(|k| k % 2 == phase)
+                .map(|k| {
+                    MicroOp::row(
+                        Gate::Not,
+                        &[bld.col(k + 1, SLOT_SUM)],
+                        bld.col(k, SLOT_TMPS),
+                    )
+                })
+                .collect();
+            if !ops.is_empty() {
+                bld.par(ops);
+            }
+        }
+        let mut settle: Vec<MicroOp> = (0..n - 1)
+            .map(|k| MicroOp::row(Gate::Not, &[bld.col(k, SLOT_TMPS)], bld.col(k, SLOT_S)))
+            .collect();
+        let init_settle: Vec<MicroOp> =
+            settle.iter().map(|o| MicroOp::row(Gate::Set1, &[], o.out)).collect();
+        bld.prog.push_parallel(init_settle);
+        // s_{n-1} = 0 can share the settle cycle (distinct partition).
+        settle.push(MicroOp::row(Gate::Set0, &[], bld.col(n - 1, SLOT_S)));
+        bld.prog.push_parallel(settle);
+    }
+
+    // --- epilogue: carry-propagate add of (s, c) -> high result bits --
+    // carry lives in SLOT_NBB (free after the loop); serial ripple.
+    bld.prog.push(MicroOp::row(Gate::Set0, &[], bld.col(0, SLOT_NBB)));
+    for k in 0..n {
+        let (a, b, cin) = (bld.col(k, SLOT_S), bld.col(k, SLOT_C), bld.col(k, SLOT_NBB));
+        let (t0, t1, t2, t3) =
+            (bld.col(k, SLOT_T0), bld.col(k, SLOT_T1), bld.col(k, SLOT_T2), bld.col(k, SLOT_T3));
+        let (h, cout) = (bld.col(k, SLOT_SUM), bld.col(k, SLOT_TMPR));
+        bld.one(MicroOp::row(Gate::Min3, &[a, b, cin], t0));
+        bld.one(MicroOp::row(Gate::Not, &[t0], cout));
+        bld.one(MicroOp::row(Gate::Min3, &[a, b, t0], t1));
+        bld.one(MicroOp::row(Gate::Min3, &[a, cin, t0], t2));
+        bld.one(MicroOp::row(Gate::Min3, &[b, cin, t0], t3));
+        bld.one(MicroOp::row(Gate::Min3, &[t1, t2, t3], h));
+        // carry into partition k+1 first (2-NOT neighbor transfer) —
+        // must precede the result copy, which reuses tmpR_0 (= cout_0).
+        if k + 1 < n {
+            bld.one(MicroOp::row(Gate::Not, &[cout], bld.col(k, SLOT_TMPS)));
+            bld.one(MicroOp::row(
+                Gate::Not,
+                &[bld.col(k, SLOT_TMPS)],
+                bld.col(k + 1, SLOT_NBB),
+            ));
+        }
+        // result bit n+k = h (long-range 2-NOT copy through partition 0's
+        // tmpR; transistors along the path close for the cycle).
+        bld.one(MicroOp::row(Gate::Not, &[h], bld.col(0, SLOT_TMPR)));
+        bld.one(MicroOp::row(Gate::Not, &[bld.col(0, SLOT_TMPR)], n + k));
+    }
+
+    let n_ = n;
+    let a_cols: Vec<u32> = (0..n_).map(|k| bld.col(k, SLOT_A)).collect();
+    let b_cols: Vec<u32> = (0..n_).map(|k| bld.col(k, SLOT_B)).collect();
+    let width = bld.col(n_ - 1, SLOTS - 1) + 1;
+    // Partition 0 spans the result field + its slots.
+    let partition_starts: Vec<u32> =
+        std::iter::once(0).chain((1..n_).map(|k| bld.base(k))).collect();
+    let mut prog = bld.prog;
+    prog.input_cols = a_cols.iter().chain(b_cols.iter()).copied().collect();
+    prog.output_cols = (0..2 * n_).collect();
+    prog.partition_starts = partition_starts.clone();
+    let layout = MultLayout {
+        n: n_,
+        a_cols,
+        b_cols,
+        result: BitField::new(0, 2 * n_),
+        width,
+        partition_starts,
+    };
+    (prog, layout)
+}
+
+/// Serial shift-add baseline (single partition, no concurrency):
+/// acc := acc + (a & b_i) << i, fully ripple-carried, O(n^2) cycles.
+pub fn naive_mult_program(n: u32) -> (Program, MultLayout) {
+    assert!(n >= 2);
+    use crate::isa::program::RowProgramBuilder;
+    let mut b = RowProgramBuilder::new(&format!("naive_mult{n}"));
+    // layout: [a(n) | b(n) | acc(2n) | pp | t0..t3 | carry chain(2)]
+    let a = BitField::new(0, n);
+    let bf = BitField::new(n, n);
+    let acc = BitField::new(2 * n, 2 * n);
+    let pp = 4 * n;
+    let t0 = 4 * n + 1;
+    let t1 = 4 * n + 2;
+    let t2 = 4 * n + 3;
+    let t3 = 4 * n + 4;
+    let na = 4 * n + 5;
+    let nb = 4 * n + 6;
+    let carry = 4 * n + 7;
+    let carry2 = 4 * n + 8;
+    let width = 4 * n + 9;
+    b.inputs(&a.cols());
+    b.inputs(&bf.cols());
+    for i in 0..2 * n {
+        b.set0(acc.col(i));
+    }
+    for i in 0..n {
+        b.gate(Gate::Not, &[bf.col(i)], nb);
+        b.set0(carry);
+        for j in 0..n {
+            // pp = a_j & b_i = NOR(!a_j, !b_i)
+            b.gate(Gate::Not, &[a.col(j)], na);
+            b.gate(Gate::Nor2, &[na, nb], pp);
+            // acc[i+j] += pp with ripple carry.
+            let d = acc.col(i + j);
+            b.gate(Gate::Min3, &[pp, d, carry], t0);
+            b.gate(Gate::Min3, &[pp, d, t0], t1);
+            b.gate(Gate::Min3, &[pp, carry, t0], t2);
+            b.gate(Gate::Min3, &[d, carry, t0], t3);
+            // d (acc bit) is free after t3: overwrite with the sum.
+            b.gate(Gate::Min3, &[t1, t2, t3], d);
+            b.gate(Gate::Not, &[t0], carry2);
+            // carry <- carry2 (2-NOT copy through t0, now free)
+            b.gate(Gate::Not, &[carry2], t0);
+            b.gate(Gate::Not, &[t0], carry);
+        }
+        // propagate the final carry into the remaining accumulator bits.
+        let mut pos = i + n;
+        while pos < 2 * n {
+            let d = acc.col(pos);
+            // (d, carry) = half-add(d, carry):
+            //   new_d = d ^ carry ; new_carry = d & carry
+            b.gate(Gate::Nand2, &[d, carry], t0); // !(d&c)
+            b.gate(Gate::Nor2, &[d, carry], t1); // !(d|c)
+            b.gate(Gate::Not, &[t0], t2); // d&c  (new carry)
+            b.gate(Gate::Nor2, &[t1, t2], d); // d^c
+            b.gate(Gate::Not, &[t2], t3);
+            b.gate(Gate::Not, &[t3], carry);
+            pos += 1;
+        }
+    }
+    b.outputs(&acc.cols());
+    let prog = b.finish();
+    let layout = MultLayout {
+        n,
+        a_cols: a.cols(),
+        b_cols: bf.cols(),
+        result: acc,
+        width,
+        partition_starts: vec![0],
+    };
+    (prog, layout)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::prop::Cases;
+    use crate::xbar::crossbar::Crossbar;
+    use crate::xbar::partition::Partitions;
+
+    fn run_mult(
+        make: fn(u32) -> (Program, MultLayout),
+        n: u32,
+        pairs: &[(u64, u64)],
+    ) -> Vec<u64> {
+        let (prog, lay) = make(n);
+        let mut x = Crossbar::new(pairs.len(), lay.width as usize);
+        if lay.partition_starts.len() > 1 {
+            x.set_col_partitions(Partitions::new(lay.width, lay.partition_starts.clone()));
+        }
+        for (r, &(av, bv)) in pairs.iter().enumerate() {
+            for k in 0..n {
+                x.state_mut().set(r, lay.a_cols[k as usize] as usize, (av >> k) & 1 == 1);
+                x.state_mut().set(r, lay.b_cols[k as usize] as usize, (bv >> k) & 1 == 1);
+            }
+        }
+        x.run_program(&prog, None).unwrap();
+        pairs
+            .iter()
+            .enumerate()
+            .map(|(r, _)| {
+                let mut v = 0u64;
+                for i in 0..2 * n {
+                    if x.get(r, lay.result.col(i) as usize) {
+                        v |= 1 << i;
+                    }
+                }
+                v
+            })
+            .collect()
+    }
+
+    #[test]
+    fn multpim_exhaustive_4bit() {
+        let mut pairs = vec![];
+        for a in 0..16u64 {
+            for b in 0..16u64 {
+                pairs.push((a, b));
+            }
+        }
+        let got = run_mult(multpim_program, 4, &pairs);
+        for (&(a, b), &p) in pairs.iter().zip(&got) {
+            assert_eq!(p, a * b, "{a}*{b}");
+        }
+    }
+
+    #[test]
+    fn naive_exhaustive_4bit() {
+        let mut pairs = vec![];
+        for a in 0..16u64 {
+            for b in 0..16u64 {
+                pairs.push((a, b));
+            }
+        }
+        let got = run_mult(naive_mult_program, 4, &pairs);
+        for (&(a, b), &p) in pairs.iter().zip(&got) {
+            assert_eq!(p, a * b, "{a}*{b}");
+        }
+    }
+
+    #[test]
+    fn multpim_random_16bit() {
+        Cases::new(20).run(|g| {
+            let a = g.u64() & 0xFFFF;
+            let b = g.u64() & 0xFFFF;
+            let got = run_mult(multpim_program, 16, &[(a, b)]);
+            assert_eq!(got[0], a * b, "{a}*{b}");
+        });
+    }
+
+    #[test]
+    fn multpim_random_32bit_rowparallel() {
+        // 32 multiplications at once (one per row) — the §VI workload.
+        let mut pairs = vec![];
+        let mut g = crate::util::rng::Pcg64::new(99, 0);
+        for _ in 0..32 {
+            pairs.push((g.next_u64() & 0xFFFF_FFFF, g.next_u64() & 0xFFFF_FFFF));
+        }
+        let got = run_mult(multpim_program, 32, &pairs);
+        for (&(a, b), &p) in pairs.iter().zip(&got) {
+            assert_eq!(p, a * b, "{a}*{b}");
+        }
+    }
+
+    #[test]
+    fn naive_random_8bit() {
+        Cases::new(20).run(|g| {
+            let a = g.u64() & 0xFF;
+            let b = g.u64() & 0xFF;
+            let got = run_mult(naive_mult_program, 8, &[(a, b)]);
+            assert_eq!(got[0], a * b, "{a}*{b}");
+        });
+    }
+
+    #[test]
+    fn multpim_cost_model() {
+        // O(N) cycles per iteration x N iterations; O(N^2) gates; the
+        // partition-parallel latency advantage over the serial baseline.
+        let (p32, _) = multpim_program(32);
+        let (naive32, _) = naive_mult_program(32);
+        let g = p32.logic_gates_per_lane();
+        assert!(
+            (9_000..13_000).contains(&g),
+            "multpim-32 gate executions per lane = {g}"
+        );
+        assert!(p32.cycles() < naive32.cycles() / 8, "partitions must win on latency: {} vs {}", p32.cycles(), naive32.cycles());
+        assert!(p32.max_parallelism() >= 32);
+        assert_eq!(naive32.max_parallelism(), 1);
+    }
+}

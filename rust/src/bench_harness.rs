@@ -1,0 +1,91 @@
+//! In-tree micro-benchmark harness (criterion is not in the offline
+//! vendor set). Provides warmup + repeated timed runs, median/MAD
+//! reporting, and throughput lines, with output formatted consistently
+//! across all `rust/benches/*` targets so EXPERIMENTS.md can quote them.
+
+use std::time::{Duration, Instant};
+
+pub struct BenchResult {
+    pub name: String,
+    pub median: Duration,
+    pub mad: Duration,
+    pub iters_per_run: u64,
+}
+
+impl BenchResult {
+    pub fn per_iter_ns(&self) -> f64 {
+        self.median.as_nanos() as f64 / self.iters_per_run as f64
+    }
+}
+
+/// Run `f` (which performs `iters_per_run` logical iterations) repeatedly
+/// and report the median wall time.
+pub fn bench<F: FnMut()>(name: &str, iters_per_run: u64, mut f: F) -> BenchResult {
+    // Warmup: run until ~100 ms or 3 runs, whichever first.
+    let warm_start = Instant::now();
+    let mut warm_runs = 0;
+    while warm_runs < 3 || (warm_start.elapsed() < Duration::from_millis(100) && warm_runs < 50) {
+        f();
+        warm_runs += 1;
+    }
+    // Measure.
+    let runs = 9;
+    let mut samples: Vec<Duration> = Vec::with_capacity(runs);
+    for _ in 0..runs {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed());
+    }
+    samples.sort();
+    let median = samples[runs / 2];
+    let mad = {
+        let mut devs: Vec<i128> = samples
+            .iter()
+            .map(|s| (s.as_nanos() as i128 - median.as_nanos() as i128).abs())
+            .collect();
+        devs.sort();
+        Duration::from_nanos(devs[runs / 2] as u64)
+    };
+    let r = BenchResult { name: name.to_string(), median, mad, iters_per_run };
+    println!(
+        "bench {:<44} {:>12.3} ms/run  ±{:>8.3}  {:>14.1} ns/iter",
+        r.name,
+        r.median.as_secs_f64() * 1e3,
+        r.mad.as_secs_f64() * 1e3,
+        r.per_iter_ns()
+    );
+    r
+}
+
+/// Print a throughput line derived from a bench result.
+pub fn throughput(r: &BenchResult, unit: &str, units_per_run: f64) {
+    let per_sec = units_per_run / r.median.as_secs_f64();
+    println!("      -> {:.3e} {unit}/s", per_sec);
+}
+
+/// Standard bench header so every target announces itself the same way.
+pub fn header(title: &str, paper_ref: &str) {
+    println!("\n################################################################");
+    println!("# {title}");
+    println!("# reproduces: {paper_ref}");
+    println!("################################################################");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_numbers() {
+        let r = bench("noop-loop", 1000, || {
+            let mut acc = 0u64;
+            for i in 0..1000u64 {
+                acc = acc.wrapping_add(std::hint::black_box(i));
+            }
+            std::hint::black_box(acc);
+        });
+        assert!(r.median.as_nanos() > 0);
+        assert!(r.per_iter_ns() < 1e6);
+        throughput(&r, "iter", 1000.0);
+    }
+}

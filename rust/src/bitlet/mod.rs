@@ -1,0 +1,81 @@
+//! Bitlet-style analytical throughput model (paper §IV cites ~100 TB/s
+//! for 8192 crossbars of 1024x1024 at 1 GB total — after the bitlet
+//! model [35]). Used by the tab_throughput bench (E11) and to translate
+//! simulator cycle counts into wall-clock/bandwidth estimates.
+
+/// mMPU fleet parameters for the throughput model.
+#[derive(Clone, Copy, Debug)]
+pub struct BitletModel {
+    pub crossbars: u64,
+    pub rows: u64,
+    pub cols: u64,
+    /// Crossbar clock, MHz (1 GHz typical for 1 ns gate pulses).
+    pub freq_mhz: f64,
+}
+
+impl BitletModel {
+    /// The paper's configuration: 8192 crossbars x 1024^2 = 1 GiB at the
+    /// bitlet model's conservative 100 MHz memristive clock (10 ns gate
+    /// pulses) — this is the configuration behind the "~100 TB/s" quote.
+    pub fn paper() -> Self {
+        Self { crossbars: 8192, rows: 1024, cols: 1024, freq_mhz: 100.0 }
+    }
+
+    /// Total memory, bytes.
+    pub fn total_bytes(&self) -> u64 {
+        self.crossbars * self.rows * self.cols / 8
+    }
+
+    /// Peak processed bits per second: every crossbar applies one
+    /// row-parallel gate per cycle touching all rows.
+    pub fn peak_bits_per_sec(&self) -> f64 {
+        self.crossbars as f64 * self.rows as f64 * self.freq_mhz * 1e6
+    }
+
+    /// Peak throughput in TB/s (the paper's "~100 TB/s" claim).
+    pub fn peak_tb_per_sec(&self) -> f64 {
+        self.peak_bits_per_sec() / 8.0 / 1e12
+    }
+
+    /// Function-level throughput: items/s for a function of `cycles`
+    /// latency processing `items_per_xbar` rows per invocation.
+    pub fn function_throughput(&self, cycles: u64, items_per_xbar: u64) -> f64 {
+        let execs_per_sec = self.freq_mhz * 1e6 / cycles as f64;
+        execs_per_sec * items_per_xbar as f64 * self.crossbars as f64
+    }
+
+    /// Effective throughput multiplier of a reliability mode.
+    pub fn with_overhead(&self, base_cycles: u64, overhead_cycles: u64) -> f64 {
+        base_cycles as f64 / (base_cycles + overhead_cycles) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_configuration_hits_100tbs() {
+        let m = BitletModel::paper();
+        assert_eq!(m.total_bytes(), 1 << 30, "1 GiB");
+        let tbs = m.peak_tb_per_sec();
+        assert!((90.0..130.0).contains(&tbs), "{tbs} TB/s ~ paper's ~100 TB/s");
+    }
+
+    #[test]
+    fn function_throughput_scales() {
+        let m = BitletModel::paper();
+        let t1 = m.function_throughput(448, 1024);
+        let t2 = m.function_throughput(896, 1024);
+        assert!((t1 / t2 - 2.0).abs() < 1e-9);
+        // 32-bit MultPIM-ish: ~1.4k cycles, 1024 rows, 8192 xbars
+        let t = m.function_throughput(1400, 1024);
+        assert!(t > 1e11, "{t} mult/s regime");
+    }
+
+    #[test]
+    fn overhead_multiplier() {
+        let m = BitletModel::paper();
+        assert!((m.with_overhead(100, 26) - 100.0 / 126.0).abs() < 1e-12);
+    }
+}

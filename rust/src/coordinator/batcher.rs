@@ -1,0 +1,152 @@
+//! Dynamic batching: group same-function scalar requests into
+//! row-parallel crossbar batches.
+//!
+//! Policy: flush a function's pending queue when it reaches
+//! `max_batch` (a full crossbar) or when its oldest request has waited
+//! `max_wait` (tail-latency bound) — the classic dynamic-batching
+//! trade-off, applied to crossbar rows instead of GPU sequences.
+
+use std::collections::HashMap;
+use std::sync::mpsc::Sender;
+use std::time::{Duration, Instant};
+
+use crate::mmpu::FunctionKind;
+
+/// One pending scalar request.
+pub struct Pending {
+    pub a: u64,
+    pub b: u64,
+    pub reply: Sender<super::server::RequestResult>,
+    pub submitted: Instant,
+}
+
+/// A flushed batch ready for a worker.
+pub struct Batch {
+    pub kind: FunctionKind,
+    pub items: Vec<Pending>,
+}
+
+/// Accumulates pending requests per function kind.
+pub struct Batcher {
+    queues: HashMap<FunctionKind, Vec<Pending>>,
+    pub max_batch: usize,
+    pub max_wait: Duration,
+}
+
+impl Batcher {
+    pub fn new(max_batch: usize, max_wait: Duration) -> Self {
+        Self { queues: HashMap::new(), max_batch, max_wait }
+    }
+
+    /// Add a request; returns a full batch if one is ready.
+    pub fn push(&mut self, kind: FunctionKind, p: Pending) -> Option<Batch> {
+        let q = self.queues.entry(kind).or_default();
+        q.push(p);
+        if q.len() >= self.max_batch {
+            let items = std::mem::take(q);
+            Some(Batch { kind, items })
+        } else {
+            None
+        }
+    }
+
+    /// Flush queues whose oldest request exceeded max_wait.
+    pub fn flush_expired(&mut self, now: Instant) -> Vec<Batch> {
+        let mut out = vec![];
+        for (&kind, q) in self.queues.iter_mut() {
+            if let Some(first) = q.first() {
+                if now.duration_since(first.submitted) >= self.max_wait {
+                    out.push(Batch { kind, items: std::mem::take(q) });
+                }
+            }
+        }
+        out
+    }
+
+    /// Flush everything (shutdown).
+    pub fn flush_all(&mut self) -> Vec<Batch> {
+        self.queues
+            .iter_mut()
+            .filter(|(_, q)| !q.is_empty())
+            .map(|(&kind, q)| Batch { kind, items: std::mem::take(q) })
+            .collect()
+    }
+
+    /// Time until the next deadline (for the event-loop timeout).
+    pub fn next_deadline(&self, now: Instant) -> Option<Duration> {
+        self.queues
+            .values()
+            .filter_map(|q| q.first())
+            .map(|p| {
+                let age = now.duration_since(p.submitted);
+                self.max_wait.saturating_sub(age)
+            })
+            .min()
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queues.values().map(|q| q.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+
+    fn pending(at: Instant) -> Pending {
+        let (tx, _rx) = channel();
+        Pending { a: 1, b: 2, reply: tx, submitted: at }
+    }
+
+    #[test]
+    fn full_batch_flushes() {
+        let mut b = Batcher::new(3, Duration::from_millis(10));
+        let now = Instant::now();
+        assert!(b.push(FunctionKind::Add(8), pending(now)).is_none());
+        assert!(b.push(FunctionKind::Add(8), pending(now)).is_none());
+        let batch = b.push(FunctionKind::Add(8), pending(now)).expect("full");
+        assert_eq!(batch.items.len(), 3);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn kinds_batch_separately() {
+        let mut b = Batcher::new(2, Duration::from_millis(10));
+        let now = Instant::now();
+        assert!(b.push(FunctionKind::Add(8), pending(now)).is_none());
+        assert!(b.push(FunctionKind::Mul(8), pending(now)).is_none());
+        assert!(b.push(FunctionKind::Mul(8), pending(now)).is_some());
+        assert_eq!(b.pending(), 1);
+    }
+
+    #[test]
+    fn expiry_flushes_partial() {
+        let mut b = Batcher::new(100, Duration::from_millis(5));
+        let past = Instant::now() - Duration::from_millis(50);
+        b.push(FunctionKind::Xor(8), pending(past));
+        let flushed = b.flush_expired(Instant::now());
+        assert_eq!(flushed.len(), 1);
+        assert_eq!(flushed[0].items.len(), 1);
+    }
+
+    #[test]
+    fn deadline_tracking() {
+        let mut b = Batcher::new(100, Duration::from_millis(100));
+        assert!(b.next_deadline(Instant::now()).is_none());
+        let now = Instant::now();
+        b.push(FunctionKind::Add(8), pending(now));
+        let d = b.next_deadline(now).unwrap();
+        assert!(d <= Duration::from_millis(100));
+    }
+
+    #[test]
+    fn flush_all_drains() {
+        let mut b = Batcher::new(100, Duration::from_secs(1));
+        let now = Instant::now();
+        b.push(FunctionKind::Add(8), pending(now));
+        b.push(FunctionKind::Mul(8), pending(now));
+        assert_eq!(b.flush_all().len(), 2);
+        assert_eq!(b.pending(), 0);
+    }
+}

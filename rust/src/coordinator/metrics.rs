@@ -1,0 +1,110 @@
+//! Lock-free coordinator metrics (atomics + log-scale latency histogram).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Number of log2 latency bins (1us ... ~1s).
+const BINS: usize = 24;
+
+#[derive(Default)]
+pub struct Metrics {
+    pub submitted: AtomicU64,
+    pub completed: AtomicU64,
+    pub batches: AtomicU64,
+    pub batched_items: AtomicU64,
+    pub busy_ns: AtomicU64,
+    pub queue_depth: AtomicU64,
+    lat_bins: [AtomicU64; BINS],
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_latency(&self, d: Duration) {
+        let us = d.as_micros().max(1) as u64;
+        let bin = (63 - us.leading_zeros() as usize).min(BINS - 1);
+        self.lat_bins[bin].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let bins: Vec<u64> = self.lat_bins.iter().map(|b| b.load(Ordering::Relaxed)).collect();
+        MetricsSnapshot {
+            submitted: self.submitted.load(Ordering::Relaxed),
+            completed: self.completed.load(Ordering::Relaxed),
+            batches: self.batches.load(Ordering::Relaxed),
+            batched_items: self.batched_items.load(Ordering::Relaxed),
+            busy_ns: self.busy_ns.load(Ordering::Relaxed),
+            queue_depth: self.queue_depth.load(Ordering::Relaxed),
+            lat_bins: bins,
+        }
+    }
+}
+
+/// Point-in-time copy for reporting.
+#[derive(Clone, Debug)]
+pub struct MetricsSnapshot {
+    pub submitted: u64,
+    pub completed: u64,
+    pub batches: u64,
+    pub batched_items: u64,
+    pub busy_ns: u64,
+    pub queue_depth: u64,
+    lat_bins: Vec<u64>,
+}
+
+impl MetricsSnapshot {
+    pub fn mean_batch_size(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.batched_items as f64 / self.batches as f64
+        }
+    }
+
+    /// Approximate latency percentile from the log histogram (upper bin
+    /// edge, microseconds).
+    pub fn latency_percentile_us(&self, pct: f64) -> u64 {
+        let total: u64 = self.lat_bins.iter().sum();
+        if total == 0 {
+            return 0;
+        }
+        let target = (total as f64 * pct / 100.0).ceil() as u64;
+        let mut seen = 0;
+        for (i, &c) in self.lat_bins.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return 1u64 << (i + 1);
+            }
+        }
+        1u64 << BINS
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_percentiles() {
+        let m = Metrics::new();
+        for _ in 0..90 {
+            m.record_latency(Duration::from_micros(10));
+        }
+        for _ in 0..10 {
+            m.record_latency(Duration::from_micros(5000));
+        }
+        let s = m.snapshot();
+        assert!(s.latency_percentile_us(50.0) <= 32);
+        assert!(s.latency_percentile_us(99.0) >= 4096);
+    }
+
+    #[test]
+    fn batch_size_mean() {
+        let m = Metrics::new();
+        m.batches.store(4, Ordering::Relaxed);
+        m.batched_items.store(100, Ordering::Relaxed);
+        assert_eq!(m.snapshot().mean_batch_size(), 25.0);
+    }
+}

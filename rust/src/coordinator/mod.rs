@@ -1,0 +1,20 @@
+//! The request-path coordinator — Layer 3 proper.
+//!
+//! A vLLM-router-style front end for the mMPU: clients submit scalar
+//! arithmetic requests; the **batcher** groups same-function requests
+//! into row-parallel batches (the mMPU's throughput comes from filling
+//! crossbar rows); the **router** dispatches batches to the least-loaded
+//! worker; each **worker** thread owns one crossbar (its own error
+//! stream and ECC extension) and executes batches under the configured
+//! reliability policy. Bounded queues give natural backpressure.
+//!
+//! tokio is not in the offline vendor set (DESIGN.md substitutions):
+//! the implementation uses std threads + mpsc channels; the
+//! batching/routing logic is runtime-agnostic.
+
+pub mod batcher;
+pub mod metrics;
+pub mod server;
+
+pub use metrics::MetricsSnapshot;
+pub use server::{Coordinator, CoordinatorConfig, RequestResult};

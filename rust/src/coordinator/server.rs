@@ -1,0 +1,307 @@
+//! The coordinator front end: submit scalar requests, get results back
+//! through per-request channels; a batcher thread groups them and routes
+//! batches to worker threads (one crossbar each, least-loaded first).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender, SyncSender, TrySendError};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::errs::ErrorModel;
+use crate::mmpu::{FunctionKind, FunctionSpec, Mmpu, MmpuConfig, ReliabilityPolicy};
+
+use super::batcher::{Batch, Batcher, Pending};
+use super::metrics::{Metrics, MetricsSnapshot};
+
+/// Outcome delivered to the submitting client.
+#[derive(Clone, Debug)]
+pub struct RequestResult {
+    pub value: u64,
+    pub latency: Duration,
+}
+
+/// Coordinator configuration.
+#[derive(Clone, Debug)]
+pub struct CoordinatorConfig {
+    pub workers: usize,
+    pub rows: usize,
+    pub cols: usize,
+    pub policy: ReliabilityPolicy,
+    pub errors: ErrorModel,
+    pub seed: u64,
+    pub max_batch: usize,
+    pub max_wait: Duration,
+    /// Bounded per-worker queue (backpressure).
+    pub worker_queue: usize,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        Self {
+            workers: 4,
+            rows: 64,
+            cols: 1024,
+            policy: ReliabilityPolicy::none(),
+            errors: ErrorModel::none(),
+            seed: 0xC0,
+            max_batch: 64,
+            max_wait: Duration::from_micros(500),
+            worker_queue: 8,
+        }
+    }
+}
+
+enum FrontMsg {
+    Submit { kind: FunctionKind, pending: Pending },
+    Shutdown,
+}
+
+/// The running coordinator.
+pub struct Coordinator {
+    front_tx: Sender<FrontMsg>,
+    metrics: Arc<Metrics>,
+    batcher_handle: Option<JoinHandle<()>>,
+    worker_handles: Vec<JoinHandle<()>>,
+}
+
+impl Coordinator {
+    pub fn start(cfg: CoordinatorConfig) -> Result<Self> {
+        let metrics = Arc::new(Metrics::new());
+        // Workers.
+        let mut worker_txs: Vec<SyncSender<Batch>> = vec![];
+        let mut worker_handles = vec![];
+        let depths: Arc<Vec<AtomicU64>> =
+            Arc::new((0..cfg.workers).map(|_| AtomicU64::new(0)).collect());
+        for w in 0..cfg.workers {
+            let (tx, rx) = std::sync::mpsc::sync_channel::<Batch>(cfg.worker_queue);
+            worker_txs.push(tx);
+            let m = metrics.clone();
+            let d = depths.clone();
+            let cfg2 = cfg.clone();
+            worker_handles.push(std::thread::spawn(move || worker_loop(w, cfg2, rx, m, d)));
+        }
+        // Batcher / router.
+        let (front_tx, front_rx) = channel::<FrontMsg>();
+        let m = metrics.clone();
+        let cfg2 = cfg.clone();
+        let batcher_handle =
+            std::thread::spawn(move || batcher_loop(cfg2, front_rx, worker_txs, m, depths));
+        Ok(Self { front_tx, metrics, batcher_handle: Some(batcher_handle), worker_handles })
+    }
+
+    /// Submit one scalar request; the receiver yields the result.
+    pub fn submit(&self, kind: FunctionKind, a: u64, b: u64) -> Receiver<RequestResult> {
+        let (tx, rx) = channel();
+        self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
+        let _ = self.front_tx.send(FrontMsg::Submit {
+            kind,
+            pending: Pending { a, b, reply: tx, submitted: Instant::now() },
+        });
+        rx
+    }
+
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.metrics.snapshot()
+    }
+
+    /// Drain and stop all threads.
+    pub fn shutdown(mut self) {
+        let _ = self.front_tx.send(FrontMsg::Shutdown);
+        if let Some(h) = self.batcher_handle.take() {
+            let _ = h.join();
+        }
+        for h in self.worker_handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn batcher_loop(
+    cfg: CoordinatorConfig,
+    rx: Receiver<FrontMsg>,
+    worker_txs: Vec<SyncSender<Batch>>,
+    metrics: Arc<Metrics>,
+    depths: Arc<Vec<AtomicU64>>,
+) {
+    let mut batcher = Batcher::new(cfg.max_batch.min(cfg.rows), cfg.max_wait);
+    let dispatch = |batch: Batch, depths: &Arc<Vec<AtomicU64>>, metrics: &Arc<Metrics>| {
+        metrics.batches.fetch_add(1, Ordering::Relaxed);
+        metrics.batched_items.fetch_add(batch.items.len() as u64, Ordering::Relaxed);
+        // Route to the least-loaded worker; block if all queues are full
+        // (backpressure propagates to the batcher, then to clients).
+        let mut batch = batch;
+        loop {
+            let (widx, _) = depths
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, d)| d.load(Ordering::Relaxed))
+                .expect("workers");
+            depths[widx].fetch_add(1, Ordering::Relaxed);
+            match worker_txs[widx].try_send(batch) {
+                Ok(()) => return,
+                Err(TrySendError::Full(b)) => {
+                    depths[widx].fetch_sub(1, Ordering::Relaxed);
+                    batch = b;
+                    std::thread::yield_now();
+                }
+                Err(TrySendError::Disconnected(_)) => return,
+            }
+        }
+    };
+    let mut stop = false;
+    while !stop {
+        let timeout =
+            batcher.next_deadline(Instant::now()).unwrap_or(Duration::from_millis(50));
+        match rx.recv_timeout(timeout) {
+            Ok(FrontMsg::Submit { kind, pending }) => {
+                if let Some(batch) = batcher.push(kind, pending) {
+                    dispatch(batch, &depths, &metrics);
+                }
+            }
+            Ok(FrontMsg::Shutdown) => break,
+            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
+            Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => break,
+        }
+        // Drain the backlog BEFORE the expiry check: when producers are
+        // faster than this loop, popped requests carry stale timestamps
+        // and would each "expire" alone — batching them first is exactly
+        // the dynamic-batching win (found by the perf_hotpath bench; see
+        // EXPERIMENTS.md §Perf).
+        loop {
+            match rx.try_recv() {
+                Ok(FrontMsg::Submit { kind, pending }) => {
+                    if let Some(batch) = batcher.push(kind, pending) {
+                        dispatch(batch, &depths, &metrics);
+                    }
+                }
+                Ok(FrontMsg::Shutdown) => {
+                    stop = true;
+                    break;
+                }
+                Err(_) => break,
+            }
+        }
+        for batch in batcher.flush_expired(Instant::now()) {
+            dispatch(batch, &depths, &metrics);
+        }
+        metrics.queue_depth.store(batcher.pending() as u64, Ordering::Relaxed);
+    }
+    for batch in batcher.flush_all() {
+        dispatch(batch, &depths, &metrics);
+    }
+    // Dropping worker_txs closes worker queues.
+}
+
+fn worker_loop(
+    worker_id: usize,
+    cfg: CoordinatorConfig,
+    rx: Receiver<Batch>,
+    metrics: Arc<Metrics>,
+    depths: Arc<Vec<AtomicU64>>,
+) {
+    let mmpu_cfg = MmpuConfig {
+        rows: cfg.rows,
+        cols: cfg.cols,
+        num_crossbars: 1,
+        policy: cfg.policy,
+        errors: cfg.errors,
+        seed: cfg.seed.wrapping_add(worker_id as u64),
+    };
+    let mut mmpu = Mmpu::new(mmpu_cfg);
+    let mut specs: std::collections::HashMap<FunctionKind, FunctionSpec> =
+        std::collections::HashMap::new();
+    while let Ok(batch) = rx.recv() {
+        let t0 = Instant::now();
+        let spec =
+            specs.entry(batch.kind).or_insert_with(|| FunctionSpec::build(batch.kind));
+        let a: Vec<u64> = batch.items.iter().map(|p| p.a).collect();
+        let b: Vec<u64> = batch.items.iter().map(|p| p.b).collect();
+        match mmpu.exec_vector(0, spec, &a, &b) {
+            Ok(res) => {
+                for (item, &value) in batch.items.iter().zip(&res.values) {
+                    let latency = item.submitted.elapsed();
+                    metrics.record_latency(latency);
+                    metrics.completed.fetch_add(1, Ordering::Relaxed);
+                    let _ = item.reply.send(RequestResult { value, latency });
+                }
+            }
+            Err(e) => {
+                // Execution errors drop the replies (client sees a closed
+                // channel); log once per batch.
+                eprintln!("worker {worker_id}: batch failed: {e:#}");
+            }
+        }
+        metrics.busy_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        depths[worker_id].fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_small_batch() {
+        let coord = Coordinator::start(CoordinatorConfig {
+            workers: 2,
+            rows: 16,
+            cols: 256,
+            max_batch: 8,
+            max_wait: Duration::from_micros(200),
+            ..Default::default()
+        })
+        .unwrap();
+        let rxs: Vec<_> =
+            (0..32u64).map(|i| (i, coord.submit(FunctionKind::Add(8), i, 2 * i))).collect();
+        for (i, rx) in rxs {
+            let r = rx.recv_timeout(Duration::from_secs(5)).expect("result");
+            assert_eq!(r.value, 3 * i, "request {i}");
+        }
+        let m = coord.metrics();
+        assert_eq!(m.completed, 32);
+        assert!(m.mean_batch_size() >= 1.0);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn mixed_kinds_route_correctly() {
+        let coord = Coordinator::start(CoordinatorConfig {
+            workers: 2,
+            rows: 8,
+            cols: 512,
+            max_batch: 4,
+            max_wait: Duration::from_micros(100),
+            ..Default::default()
+        })
+        .unwrap();
+        let adds: Vec<_> = (0..8u64).map(|i| coord.submit(FunctionKind::Add(8), i, 1)).collect();
+        let muls: Vec<_> =
+            (0..8u64).map(|i| coord.submit(FunctionKind::Mul(8), i, 3)).collect();
+        for (i, rx) in adds.into_iter().enumerate() {
+            assert_eq!(rx.recv_timeout(Duration::from_secs(5)).unwrap().value, i as u64 + 1);
+        }
+        for (i, rx) in muls.into_iter().enumerate() {
+            assert_eq!(rx.recv_timeout(Duration::from_secs(5)).unwrap().value, i as u64 * 3);
+        }
+        coord.shutdown();
+    }
+
+    #[test]
+    fn shutdown_flushes_pending() {
+        let coord = Coordinator::start(CoordinatorConfig {
+            workers: 1,
+            rows: 64,
+            cols: 256,
+            max_batch: 64,             // never fills
+            max_wait: Duration::from_secs(60), // never expires
+            ..Default::default()
+        })
+        .unwrap();
+        let rx = coord.submit(FunctionKind::Add(8), 20, 22);
+        coord.shutdown(); // must flush the partial batch
+        assert_eq!(rx.recv_timeout(Duration::from_secs(5)).unwrap().value, 42);
+    }
+}

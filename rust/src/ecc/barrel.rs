@@ -1,0 +1,123 @@
+//! Barrel shifter — the peripheral that emulates diagonal wires between
+//! the main crossbar and the check-bit extension (paper Fig. 2c).
+//!
+//! A log-stage barrel shifter rotates an m-bit lane bundle by any amount
+//! in one cycle; the shift pattern over consecutive rows (rotate row i by
+//! i) aligns each wrap-around diagonal into a single column of the
+//! extension. Communication through the shifter remains stateful
+//! (memristor-to-memristor), like partition transfers.
+
+use crate::util::bitmat::BitVec;
+
+/// Cycle/usage accounting for the shifter periphery.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct BarrelStats {
+    pub rotations: u64,
+    pub cycles: u64,
+}
+
+/// An m-lane barrel shifter.
+#[derive(Clone, Debug)]
+pub struct BarrelShifter {
+    m: usize,
+    pub stats: BarrelStats,
+}
+
+impl BarrelShifter {
+    pub fn new(m: usize) -> Self {
+        assert!(m > 0);
+        Self { m, stats: BarrelStats::default() }
+    }
+
+    pub fn lanes(&self) -> usize {
+        self.m
+    }
+
+    /// Rotate an m-bit vector left by `k` (one cycle, any k).
+    pub fn rotate_left(&mut self, v: &BitVec, k: usize) -> BitVec {
+        assert_eq!(v.len(), self.m);
+        self.stats.rotations += 1;
+        self.stats.cycles += 1;
+        let m = self.m;
+        BitVec::from_fn(m, |i| v.get((i + k) % m))
+    }
+
+    pub fn rotate_right(&mut self, v: &BitVec, k: usize) -> BitVec {
+        let m = self.m;
+        self.rotate_left(v, m - (k % m))
+    }
+
+    /// The Fig. 2(c) alignment: given the m rows of a block (each an
+    /// m-bit vector), rotate row i left by i so that leading diagonal d
+    /// lands in column d of every rotated row. One cycle per row bundle
+    /// (rows stream through the shifter).
+    pub fn align_leading(&mut self, rows: &[BitVec]) -> Vec<BitVec> {
+        rows.iter().enumerate().map(|(i, r)| self.rotate_left(r, i)).collect()
+    }
+
+    /// Counter-diagonal alignment: rotate row i *right* by i, so counter
+    /// diagonal d lands in column d.
+    pub fn align_counter(&mut self, rows: &[BitVec]) -> Vec<BitVec> {
+        rows.iter().enumerate().map(|(i, r)| self.rotate_right(r, i)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bv(bits: &[u8]) -> BitVec {
+        BitVec::from_fn(bits.len(), |i| bits[i] == 1)
+    }
+
+    #[test]
+    fn rotate_left_basic() {
+        let mut s = BarrelShifter::new(4);
+        let v = bv(&[1, 0, 0, 0]);
+        assert_eq!(s.rotate_left(&v, 1), bv(&[0, 0, 0, 1]));
+        assert_eq!(s.rotate_left(&v, 0), v);
+        assert_eq!(s.rotate_left(&v, 4), v);
+        assert_eq!(s.stats.rotations, 3);
+    }
+
+    #[test]
+    fn rotate_right_inverts_left() {
+        let mut s = BarrelShifter::new(8);
+        let v = bv(&[1, 1, 0, 1, 0, 0, 1, 0]);
+        for k in 0..8 {
+            let l = s.rotate_left(&v, k);
+            assert_eq!(s.rotate_right(&l, k), v, "k={k}");
+        }
+    }
+
+    #[test]
+    fn leading_alignment_collects_diagonals() {
+        // block[i][j]; leading diagonal d = (j - i) mod m. After
+        // align_leading, rotated[i][d] == block[i][(i + d) % m].
+        let m = 4;
+        let block: Vec<BitVec> =
+            (0..m).map(|i| BitVec::from_fn(m, |j| (i * m + j) % 3 == 0)).collect();
+        let mut s = BarrelShifter::new(m);
+        let aligned = s.align_leading(&block);
+        for i in 0..m {
+            for d in 0..m {
+                assert_eq!(aligned[i].get(d), block[i].get((i + d) % m), "i={i} d={d}");
+            }
+        }
+    }
+
+    #[test]
+    fn counter_alignment_collects_diagonals() {
+        // counter diagonal d = (i + j) mod m: rotated[i][d] == block[i][(d - i) mod m].
+        let m = 8;
+        let block: Vec<BitVec> =
+            (0..m).map(|i| BitVec::from_fn(m, |j| (i * 7 + j * 3) % 5 == 0)).collect();
+        let mut s = BarrelShifter::new(m);
+        let aligned = s.align_counter(&block);
+        for i in 0..m {
+            for d in 0..m {
+                assert_eq!(aligned[i].get(d), block[i].get((d + m - i % m) % m), "i={i} d={d}");
+            }
+        }
+    }
+}

@@ -1,0 +1,439 @@
+//! The mMPU-compatible diagonal ECC (paper §IV, Fig. 2b,c).
+//!
+//! Per `m x m` block, the check-bit extension holds one parity bit per
+//! wrap-around **leading** diagonal (`d = (j - i) mod m`), one per
+//! **counter** diagonal (`d = (i + j) mod m`) and one per **row**.
+//!
+//! A single flipped data bit fails exactly one diagonal of each family,
+//! giving `2i = dc - dl (mod m)`. For even m (the paper's m = 16) that
+//! intersection leaves a two-candidate ambiguity `{i, i + m/2}`; the row
+//! parities disambiguate (a third dimension of the multidimensional
+//! parity [42] — see DESIGN.md §5 for the note on this divergence).
+//!
+//! Cost model (latency the extension adds to the main array):
+//! * verify of any set of touched blocks: `2m + 2` cycles — rows stream
+//!   through the barrel shifter once per diagonal family, in parallel
+//!   across blocks and block-rows;
+//! * update after an operation that wrote `k` lines: `k + 3` cycles —
+//!   the deltas are computed with the same row/column parallelism as the
+//!   user op, shifted, and XOR-folded into the parity columns. O(1) per
+//!   line for in-row AND in-column ops — the Fig. 2(b) property.
+
+use crate::util::bitmat::{BitMatrix, BitVec};
+
+use super::barrel::BarrelShifter;
+
+/// Accounting for the ECC extension.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct EccStats {
+    /// Cycles spent verifying (extension-side).
+    pub verify_cycles: u64,
+    /// Cycles spent updating check bits.
+    pub update_cycles: u64,
+    /// Verification passes run.
+    pub verifications: u64,
+    /// Data bits corrected.
+    pub corrected: u64,
+    /// Check bits repaired (parity itself was corrupted).
+    pub parity_fixes: u64,
+    /// Blocks flagged uncorrectable (>= 2 errors).
+    pub uncorrectable: u64,
+}
+
+/// Result of a correction pass.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct CorrectionOutcome {
+    pub corrected_bits: Vec<(usize, usize)>,
+    pub parity_fixes: usize,
+    pub uncorrectable_blocks: Vec<(usize, usize)>,
+}
+
+impl CorrectionOutcome {
+    pub fn is_clean(&self) -> bool {
+        self.corrected_bits.is_empty()
+            && self.parity_fixes == 0
+            && self.uncorrectable_blocks.is_empty()
+    }
+}
+
+/// Diagonal-parity ECC engine for one (rows x cols) crossbar region.
+#[derive(Clone, Debug)]
+pub struct DiagonalEcc {
+    rows: usize,
+    cols: usize,
+    m: usize,
+    blocks_r: usize,
+    blocks_c: usize,
+    /// (blocks_r, blocks_c * m): leading-diagonal parities.
+    lead: BitMatrix,
+    /// (blocks_r, blocks_c * m): counter-diagonal parities.
+    counter: BitMatrix,
+    /// (blocks_r, blocks_c * m): row parities.
+    rowp: BitMatrix,
+    shifter: BarrelShifter,
+    pub stats: EccStats,
+}
+
+impl DiagonalEcc {
+    pub fn new(rows: usize, cols: usize, m: usize) -> Self {
+        assert!(m >= 2 && rows % m == 0 && cols % m == 0, "m must divide rows and cols");
+        let blocks_r = rows / m;
+        let blocks_c = cols / m;
+        Self {
+            rows,
+            cols,
+            m,
+            blocks_r,
+            blocks_c,
+            lead: BitMatrix::zeros(blocks_r, blocks_c * m),
+            counter: BitMatrix::zeros(blocks_r, blocks_c * m),
+            rowp: BitMatrix::zeros(blocks_r, blocks_c * m),
+            shifter: BarrelShifter::new(m),
+            stats: EccStats::default(),
+        }
+    }
+
+    pub fn m(&self) -> usize {
+        self.m
+    }
+
+    /// Check-bit storage overhead: 3m per m^2 data bits.
+    pub fn overhead_ratio(&self) -> f64 {
+        3.0 / self.m as f64
+    }
+
+    /// Latency model: verifying any set of touched blocks (parallel
+    /// across blocks) — 2m + 2 cycles.
+    pub fn verify_cost(&self) -> u64 {
+        2 * self.m as u64 + 2
+    }
+
+    /// Latency model: updating parities after writing `lines` lines.
+    pub fn update_cost(&self, lines: u64) -> u64 {
+        lines + 3
+    }
+
+    /// Recompute every check bit from `state` (initial encode).
+    pub fn encode(&mut self, state: &BitMatrix) {
+        assert_eq!((state.rows(), state.cols()), (self.rows, self.cols));
+        for bi in 0..self.blocks_r {
+            for bj in 0..self.blocks_c {
+                let (lead, counter, rowp) = self.block_parities(state, bi, bj);
+                for d in 0..self.m {
+                    self.lead.set(bi, bj * self.m + d, lead.get(d));
+                    self.counter.set(bi, bj * self.m + d, counter.get(d));
+                    self.rowp.set(bi, bj * self.m + d, rowp.get(d));
+                }
+            }
+        }
+        // Extension-side encode: stream m rows through the shifter for
+        // each family (parallel across blocks).
+        self.stats.update_cycles += 3 * self.m as u64;
+    }
+
+    /// True parities of block (bi, bj) computed from the data (uses the
+    /// barrel-shifter alignment of Fig. 2c for the diagonal families).
+    fn block_parities(&mut self, state: &BitMatrix, bi: usize, bj: usize) -> (BitVec, BitVec, BitVec) {
+        let m = self.m;
+        let rows: Vec<BitVec> = (0..m)
+            .map(|i| BitVec::from_fn(m, |j| state.get(bi * m + i, bj * m + j)))
+            .collect();
+        let lead_aligned = self.shifter.align_leading(&rows);
+        let cnt_aligned = self.shifter.align_counter(&rows);
+        let fold = |aligned: &[BitVec]| {
+            BitVec::from_fn(m, |d| {
+                aligned.iter().fold(false, |acc, r| acc ^ r.get(d))
+            })
+        };
+        let rowp = BitVec::from_fn(m, |i| rows[i].parity());
+        (fold(&lead_aligned), fold(&cnt_aligned), rowp)
+    }
+
+    /// Verify the blocks intersecting the given column range; returns
+    /// per-block syndromes for failing blocks.
+    pub fn verify_cols(
+        &mut self,
+        state: &BitMatrix,
+        col_lo: usize,
+        col_hi: usize,
+    ) -> Vec<(usize, usize, Syndrome)> {
+        let bj_lo = col_lo / self.m;
+        let bj_hi = (col_hi.min(self.cols - 1)) / self.m;
+        self.stats.verifications += 1;
+        self.stats.verify_cycles += self.verify_cost();
+        let mut fails = vec![];
+        for bi in 0..self.blocks_r {
+            for bj in bj_lo..=bj_hi {
+                if let Some(s) = self.syndrome(state, bi, bj) {
+                    fails.push((bi, bj, s));
+                }
+            }
+        }
+        fails
+    }
+
+    /// Verify everything.
+    pub fn verify_all(&mut self, state: &BitMatrix) -> Vec<(usize, usize, Syndrome)> {
+        self.verify_cols(state, 0, self.cols - 1)
+    }
+
+    fn syndrome(&mut self, state: &BitMatrix, bi: usize, bj: usize) -> Option<Syndrome> {
+        let m = self.m;
+        let (lead, counter, rowp) = self.block_parities(state, bi, bj);
+        let mut s = Syndrome::default();
+        for d in 0..m {
+            if lead.get(d) != self.lead.get(bi, bj * m + d) {
+                s.lead.push(d);
+            }
+            if counter.get(d) != self.counter.get(bi, bj * m + d) {
+                s.counter.push(d);
+            }
+            if rowp.get(d) != self.rowp.get(bi, bj * m + d) {
+                s.row.push(d);
+            }
+        }
+        if s.lead.is_empty() && s.counter.is_empty() && s.row.is_empty() {
+            None
+        } else {
+            Some(s)
+        }
+    }
+
+    /// Correct single-bit errors in all failing blocks (flips data bits
+    /// in `state` / repairs check bits). Multi-error blocks are flagged.
+    pub fn correct(&mut self, state: &mut BitMatrix) -> CorrectionOutcome {
+        let mut out = CorrectionOutcome::default();
+        let fails = self.verify_all(state);
+        for (bi, bj, s) in fails {
+            let m = self.m;
+            match (s.lead.len(), s.counter.len(), s.row.len()) {
+                (1, 1, 1) => {
+                    let (dl, dc, i) = (s.lead[0], s.counter[0], s.row[0]);
+                    // consistency: dl = (j-i) mod m, dc = (i+j) mod m
+                    let j = (i + dl) % m;
+                    if (i + j) % m == dc {
+                        let (r, c) = (bi * m + i, bj * m + j);
+                        state.flip(r, c);
+                        self.stats.corrected += 1;
+                        out.corrected_bits.push((r, c));
+                    } else {
+                        self.stats.uncorrectable += 1;
+                        out.uncorrectable_blocks.push((bi, bj));
+                    }
+                }
+                // Exactly one failing check bit across all families and
+                // consistent data parities otherwise => the check bit
+                // itself drifted; recompute it.
+                (1, 0, 0) | (0, 1, 0) | (0, 0, 1) => {
+                    let (lead, counter, rowp) = self.block_parities(state, bi, bj);
+                    for d in 0..m {
+                        self.lead.set(bi, bj * m + d, lead.get(d));
+                        self.counter.set(bi, bj * m + d, counter.get(d));
+                        self.rowp.set(bi, bj * m + d, rowp.get(d));
+                    }
+                    self.stats.parity_fixes += 1;
+                    out.parity_fixes += 1;
+                }
+                _ => {
+                    self.stats.uncorrectable += 1;
+                    out.uncorrectable_blocks.push((bi, bj));
+                }
+            }
+        }
+        // Correction piggybacks on a verification pass; charge the fix-up
+        // writes (constant per failing block, done in the extension).
+        self.stats.update_cycles +=
+            (out.corrected_bits.len() + out.parity_fixes) as u64 * 2;
+        out
+    }
+
+    /// O(1) incremental update after an in-row op wrote column `c`:
+    /// `parity' = parity ^ old ^ new` for every crossed diagonal/row.
+    pub fn note_col_write(&mut self, c: usize, old: &BitVec, new: &BitVec) {
+        assert_eq!(old.len(), self.rows);
+        assert_eq!(new.len(), self.rows);
+        let m = self.m;
+        let bj = c / m;
+        let j = c % m;
+        for r in 0..self.rows {
+            if old.get(r) != new.get(r) {
+                let bi = r / m;
+                let i = r % m;
+                self.lead.flip(bi, bj * m + (j + m - i % m) % m);
+                self.counter.flip(bi, bj * m + (i + j) % m);
+                self.rowp.flip(bi, bj * m + i);
+            }
+        }
+        self.stats.update_cycles += self.update_cost(1);
+    }
+
+    /// O(1) incremental update after an in-column op wrote row `r`.
+    pub fn note_row_write(&mut self, r: usize, old: &BitVec, new: &BitVec) {
+        assert_eq!(old.len(), self.cols);
+        assert_eq!(new.len(), self.cols);
+        let m = self.m;
+        let bi = r / m;
+        let i = r % m;
+        for c in 0..self.cols {
+            if old.get(c) != new.get(c) {
+                let bj = c / m;
+                let j = c % m;
+                self.lead.flip(bi, bj * m + (j + m - i % m) % m);
+                self.counter.flip(bi, bj * m + (i + j) % m);
+                self.rowp.flip(bi, bj * m + i);
+            }
+        }
+        self.stats.update_cycles += self.update_cost(1);
+    }
+
+    pub fn barrel_stats(&self) -> super::barrel::BarrelStats {
+        self.shifter.stats
+    }
+}
+
+/// Which check bits disagree with the data, per family.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct Syndrome {
+    pub lead: Vec<usize>,
+    pub counter: Vec<usize>,
+    pub row: Vec<usize>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::prop::Cases;
+    use crate::util::rng::Pcg64;
+
+    fn random_state(rows: usize, cols: usize, seed: u64) -> BitMatrix {
+        let mut r = Pcg64::new(seed, 0);
+        BitMatrix::from_fn(rows, cols, |_, _| r.bernoulli(0.5))
+    }
+
+    #[test]
+    fn clean_state_verifies() {
+        let state = random_state(32, 32, 1);
+        let mut ecc = DiagonalEcc::new(32, 32, 8);
+        ecc.encode(&state);
+        assert!(ecc.verify_all(&state).is_empty());
+    }
+
+    #[test]
+    fn single_flip_detected_and_corrected_anywhere() {
+        Cases::new(64).run(|g| {
+            let mut state = random_state(32, 32, g.u64());
+            let mut ecc = DiagonalEcc::new(32, 32, 8);
+            ecc.encode(&state);
+            let r = g.usize_in(0..=31);
+            let c = g.usize_in(0..=31);
+            state.flip(r, c);
+            let orig = state.get(r, c);
+            let out = ecc.correct(&mut state);
+            assert_eq!(out.corrected_bits, vec![(r, c)]);
+            assert_eq!(state.get(r, c), !orig, "bit restored");
+            assert!(ecc.verify_all(&state).is_empty(), "clean after correction");
+        });
+    }
+
+    #[test]
+    fn ambiguous_pair_resolved_by_row_parity() {
+        // The even-m ambiguity: cells (i, j) and (i + m/2, j + m/2) share
+        // both diagonals. Row parity must disambiguate.
+        let m = 8;
+        let mut state = random_state(16, 16, 7);
+        let mut ecc = DiagonalEcc::new(16, 16, m);
+        ecc.encode(&state);
+        state.flip(2, 3);
+        let out = ecc.correct(&mut state);
+        assert_eq!(out.corrected_bits, vec![(2, 3)], "not (6, 7)");
+    }
+
+    #[test]
+    fn corrupted_check_bit_is_repaired_not_data() {
+        let state = random_state(16, 16, 3);
+        let mut ecc = DiagonalEcc::new(16, 16, 8);
+        ecc.encode(&state);
+        ecc.lead.flip(0, 3); // parity drifted, data fine
+        let mut s = state.clone();
+        let out = ecc.correct(&mut s);
+        assert_eq!(out.parity_fixes, 1);
+        assert!(out.corrected_bits.is_empty());
+        assert_eq!(s, state, "data untouched");
+        assert!(ecc.verify_all(&s).is_empty());
+    }
+
+    #[test]
+    fn double_error_in_block_flagged_uncorrectable() {
+        let mut state = random_state(16, 16, 5);
+        let mut ecc = DiagonalEcc::new(16, 16, 8);
+        ecc.encode(&state);
+        state.flip(1, 1);
+        state.flip(2, 5); // same block (m=8)
+        let out = ecc.correct(&mut state);
+        assert!(!out.uncorrectable_blocks.is_empty());
+    }
+
+    #[test]
+    fn two_errors_in_different_blocks_both_corrected() {
+        let mut state = random_state(32, 32, 9);
+        let mut ecc = DiagonalEcc::new(32, 32, 8);
+        ecc.encode(&state);
+        state.flip(1, 1); // block (0,0)
+        state.flip(20, 28); // block (2,3)
+        let out = ecc.correct(&mut state);
+        assert_eq!(out.corrected_bits.len(), 2);
+        assert!(ecc.verify_all(&state).is_empty());
+    }
+
+    #[test]
+    fn incremental_col_update_matches_reencode() {
+        Cases::new(32).run(|g| {
+            let mut state = random_state(32, 32, g.u64());
+            let mut ecc = DiagonalEcc::new(32, 32, 8);
+            ecc.encode(&state);
+            // Simulate an in-row op rewriting one column.
+            let c = g.usize_in(0..=31);
+            let old = state.col_bitvec(c);
+            for r in 0..32 {
+                state.set(r, c, g.bool());
+            }
+            let new = state.col_bitvec(c);
+            ecc.note_col_write(c, &old, &new);
+            assert!(ecc.verify_all(&state).is_empty(), "incremental == reencode");
+        });
+    }
+
+    #[test]
+    fn incremental_row_update_matches_reencode() {
+        Cases::new(32).run(|g| {
+            let mut state = random_state(32, 32, g.u64());
+            let mut ecc = DiagonalEcc::new(32, 32, 8);
+            ecc.encode(&state);
+            let r = g.usize_in(0..=31);
+            let old = state.row_bitvec(r);
+            for c in 0..32 {
+                state.set(r, c, g.bool());
+            }
+            let new = state.row_bitvec(r);
+            ecc.note_row_write(r, &old, &new);
+            assert!(ecc.verify_all(&state).is_empty());
+        });
+    }
+
+    #[test]
+    fn cost_model_o1_for_both_orientations() {
+        // The Fig. 2(b) claim: both in-row and in-column updates cost
+        // O(1) (independent of n).
+        for n in [16usize, 64, 256] {
+            let ecc = DiagonalEcc::new(n, n, 16);
+            assert_eq!(ecc.update_cost(1), 4);
+            assert_eq!(ecc.verify_cost(), 34);
+        }
+    }
+
+    #[test]
+    fn overhead_ratio() {
+        let ecc = DiagonalEcc::new(64, 64, 16);
+        assert!((ecc.overhead_ratio() - 3.0 / 16.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,181 @@
+//! The naive horizontal ECC baseline (paper Fig. 2a).
+//!
+//! One parity bit per `g`-bit horizontal group (the classic "eighth bit
+//! of every byte"). After an in-row operation (one column rewritten
+//! across all rows) the parity updates in O(1) cycles using row
+//! parallelism; after an in-**column** operation (one row rewritten
+//! across all columns) every parity bit of that row changes and, lacking
+//! column-parallel access to the horizontally-arranged check bits, the
+//! update costs O(n) cycles — the incompatibility that motivates the
+//! diagonal code.
+
+use crate::util::bitmat::{BitMatrix, BitVec};
+
+/// Accounting mirror of `EccStats` for the baseline.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct HorizontalStats {
+    pub verify_cycles: u64,
+    pub update_cycles: u64,
+    pub verifications: u64,
+    pub detected_groups: u64,
+}
+
+/// Horizontal parity code over a (rows x cols) region.
+#[derive(Clone, Debug)]
+pub struct HorizontalEcc {
+    rows: usize,
+    cols: usize,
+    g: usize,
+    /// (rows, cols / g) parity bits.
+    parity: BitMatrix,
+    pub stats: HorizontalStats,
+}
+
+impl HorizontalEcc {
+    pub fn new(rows: usize, cols: usize, g: usize) -> Self {
+        assert!(g >= 2 && cols % g == 0, "group size must divide cols");
+        Self { rows, cols, g, parity: BitMatrix::zeros(rows, cols / g), stats: HorizontalStats::default() }
+    }
+
+    pub fn group_size(&self) -> usize {
+        self.g
+    }
+
+    /// Storage overhead: 1 check bit per g data bits.
+    pub fn overhead_ratio(&self) -> f64 {
+        1.0 / self.g as f64
+    }
+
+    fn group_parity(&self, state: &BitMatrix, r: usize, grp: usize) -> bool {
+        (0..self.g).fold(false, |acc, k| acc ^ state.get(r, grp * self.g + k))
+    }
+
+    pub fn encode(&mut self, state: &BitMatrix) {
+        assert_eq!((state.rows(), state.cols()), (self.rows, self.cols));
+        for r in 0..self.rows {
+            for grp in 0..self.cols / self.g {
+                let p = self.group_parity(state, r, grp);
+                self.parity.set(r, grp, p);
+            }
+        }
+        self.stats.update_cycles += self.g as u64;
+    }
+
+    /// Detect groups whose parity disagrees (no correction capability —
+    /// a single horizontal parity can only localize to the group).
+    pub fn verify_all(&mut self, state: &BitMatrix) -> Vec<(usize, usize)> {
+        self.stats.verifications += 1;
+        self.stats.verify_cycles += self.g as u64 + 2;
+        let mut fails = vec![];
+        for r in 0..self.rows {
+            for grp in 0..self.cols / self.g {
+                if self.group_parity(state, r, grp) != self.parity.get(r, grp) {
+                    fails.push((r, grp));
+                }
+            }
+        }
+        self.stats.detected_groups += fails.len() as u64;
+        fails
+    }
+
+    /// In-row op wrote column `c`: O(1) — parity bits of the containing
+    /// group update with the same row parallelism (XOR linearity).
+    pub fn note_col_write(&mut self, c: usize, old: &BitVec, new: &BitVec) {
+        let grp = c / self.g;
+        for r in 0..self.rows {
+            if old.get(r) != new.get(r) {
+                self.parity.flip(r, grp);
+            }
+        }
+        self.stats.update_cycles += self.update_cost_in_row(1);
+    }
+
+    /// In-column op wrote row `r`: O(n) — every group parity of the row
+    /// must be serially recomputed (Fig. 2a's failure mode).
+    pub fn note_row_write(&mut self, r: usize, old: &BitVec, new: &BitVec) {
+        for c in 0..self.cols {
+            if old.get(c) != new.get(c) {
+                self.parity.flip(r, c / self.g);
+            }
+        }
+        self.stats.update_cycles += self.update_cost_in_col();
+    }
+
+    /// Cost model: in-row update is O(1) per written column.
+    pub fn update_cost_in_row(&self, cols_written: u64) -> u64 {
+        cols_written + 3
+    }
+
+    /// Cost model: in-column update is O(n) (n = number of columns).
+    pub fn update_cost_in_col(&self) -> u64 {
+        self.cols as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn random_state(rows: usize, cols: usize, seed: u64) -> BitMatrix {
+        let mut r = Pcg64::new(seed, 0);
+        BitMatrix::from_fn(rows, cols, |_, _| r.bernoulli(0.5))
+    }
+
+    #[test]
+    fn clean_verifies() {
+        let s = random_state(16, 32, 1);
+        let mut e = HorizontalEcc::new(16, 32, 8);
+        e.encode(&s);
+        assert!(e.verify_all(&s).is_empty());
+    }
+
+    #[test]
+    fn single_flip_detected_in_right_group() {
+        let mut s = random_state(16, 32, 2);
+        let mut e = HorizontalEcc::new(16, 32, 8);
+        e.encode(&s);
+        s.flip(5, 19);
+        assert_eq!(e.verify_all(&s), vec![(5, 2)]);
+    }
+
+    #[test]
+    fn double_flip_same_group_is_missed() {
+        // The classic parity blind spot — motivates the multidimensional
+        // diagonal code.
+        let mut s = random_state(16, 32, 3);
+        let mut e = HorizontalEcc::new(16, 32, 8);
+        e.encode(&s);
+        s.flip(5, 17);
+        s.flip(5, 18);
+        assert!(e.verify_all(&s).is_empty());
+    }
+
+    #[test]
+    fn incremental_updates_match() {
+        let mut s = random_state(16, 32, 4);
+        let mut e = HorizontalEcc::new(16, 32, 8);
+        e.encode(&s);
+        let old = s.col_bitvec(7);
+        for r in 0..16 {
+            s.set(r, 7, r % 3 == 0);
+        }
+        e.note_col_write(7, &old, &s.col_bitvec(7));
+        let old_row = s.row_bitvec(4);
+        for c in 0..32 {
+            s.set(4, c, c % 5 == 0);
+        }
+        e.note_row_write(4, &old_row, &s.row_bitvec(4));
+        assert!(e.verify_all(&s).is_empty());
+    }
+
+    #[test]
+    fn cost_asymmetry_is_the_fig2_point() {
+        // In-row O(1) vs in-column O(n): the gap grows with n.
+        for n in [64usize, 256, 1024] {
+            let e = HorizontalEcc::new(n, n, 8);
+            assert_eq!(e.update_cost_in_row(1), 4);
+            assert_eq!(e.update_cost_in_col(), n as u64);
+        }
+    }
+}

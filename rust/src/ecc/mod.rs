@@ -1,0 +1,18 @@
+//! High-throughput memristive ECC (paper §IV) — the diagonal-parity code
+//! of Fig. 2(b,c), plus the naive horizontal baseline of Fig. 2(a).
+//!
+//! Check bits are stored in a dedicated memristive extension that works
+//! in parallel to the main array; diagonal alignment between the two uses
+//! a barrel shifter (`barrel`). Updates exploit XOR linearity
+//! (`parity' = parity ^ old ^ new`) with the same row/column parallelism
+//! as the user's operation, making the added latency O(1) cycles for
+//! **both** in-row and in-column operations — the property the horizontal
+//! baseline lacks (O(n) for in-column, Fig. 2a).
+
+pub mod barrel;
+pub mod diagonal;
+pub mod horizontal;
+
+pub use barrel::BarrelShifter;
+pub use diagonal::{CorrectionOutcome, DiagonalEcc, EccStats};
+pub use horizontal::HorizontalEcc;

@@ -1,0 +1,251 @@
+//! The error injector: deterministic sampling of soft-error events.
+//!
+//! Hot-path design: error positions are sampled by geometric skipping
+//! (`Pcg64::geometric`), so a clean gate over 1024 lanes costs O(1)
+//! expected work at realistic p (1e-9..1e-4) instead of 1024 Bernoulli
+//! draws. This is what keeps reliability *on* cheap (EXPERIMENTS.md §Perf).
+
+use crate::util::rng::Pcg64;
+
+use super::model::ErrorModel;
+
+/// Tally of injected events, by class — examples and tests assert on it.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ErrorCounters {
+    pub gate_flips: u64,
+    pub write_fails: u64,
+    pub input_drifts: u64,
+    pub retention_flips: u64,
+    pub proximity_flips: u64,
+    pub abrupt_flips: u64,
+}
+
+impl ErrorCounters {
+    pub fn total(&self) -> u64 {
+        self.gate_flips
+            + self.write_fails
+            + self.input_drifts
+            + self.retention_flips
+            + self.proximity_flips
+            + self.abrupt_flips
+    }
+}
+
+/// Deterministic soft-error sampler.
+#[derive(Clone, Debug)]
+pub struct Injector {
+    pub model: ErrorModel,
+    rng: Pcg64,
+    pub counters: ErrorCounters,
+}
+
+impl Injector {
+    pub fn new(model: ErrorModel, seed: u64, stream: u64) -> Self {
+        Self { model, rng: Pcg64::new(seed, stream), counters: ErrorCounters::default() }
+    }
+
+    /// Derive an injector with an independent stream (per worker/crossbar).
+    pub fn split(&mut self) -> Injector {
+        Injector { model: self.model, rng: self.rng.split(), counters: ErrorCounters::default() }
+    }
+
+    /// Visit the indices in `0..n` where an independent Bernoulli(p) trial
+    /// fires, in increasing order (geometric skip sampling).
+    #[inline]
+    pub fn for_each_hit(&mut self, n: usize, p: f64, mut f: impl FnMut(usize)) {
+        if p <= 0.0 || n == 0 {
+            return;
+        }
+        let mut i = self.rng.geometric(p);
+        while (i as usize) < n {
+            f(i as usize);
+            i = i.saturating_add(1 + self.rng.geometric(p));
+        }
+    }
+
+    /// Direct gate-output flips for one micro-op across `lanes` lanes.
+    pub fn gate_flips(&mut self, lanes: usize, mut flip: impl FnMut(usize)) {
+        let p = self.model.p_gate;
+        let mut count = 0;
+        self.for_each_hit(lanes, p, |i| {
+            flip(i);
+            count += 1;
+        });
+        self.counters.gate_flips += count;
+    }
+
+    /// Write failures (SET init cycles and explicit writes).
+    pub fn write_fails(&mut self, lanes: usize, mut flip: impl FnMut(usize)) {
+        let p = self.model.p_write;
+        let mut count = 0;
+        self.for_each_hit(lanes, p, |i| {
+            flip(i);
+            count += 1;
+        });
+        self.counters.write_fails += count;
+    }
+
+    /// Indirect input state-drift: each of the `bits` accessed input bits
+    /// flips with `p_input`. Caller maps the flat hit index back to
+    /// (operand, lane).
+    pub fn input_drifts(&mut self, bits: usize, mut flip: impl FnMut(usize)) {
+        let p = self.model.p_input;
+        let mut count = 0;
+        self.for_each_hit(bits, p, |i| {
+            flip(i);
+            count += 1;
+        });
+        self.counters.input_drifts += count;
+    }
+
+    /// Retention over `dt` seconds across `bits` stored bits:
+    /// each bit flips with prob `1 - exp(-lambda * dt)`.
+    pub fn retention(&mut self, bits: usize, dt: f64, mut flip: impl FnMut(usize)) {
+        let lam = self.model.lambda_retention;
+        if lam <= 0.0 || dt <= 0.0 {
+            return;
+        }
+        let p = -(-lam * dt).exp_m1();
+        let mut count = 0;
+        self.for_each_hit(bits, p, |i| {
+            flip(i);
+            count += 1;
+        });
+        self.counters.retention_flips += count;
+    }
+
+    /// Proximity disturb on `neighbors` cells adjacent to a write.
+    pub fn proximity(&mut self, neighbors: usize, mut flip: impl FnMut(usize)) {
+        let p = self.model.p_proximity;
+        let mut count = 0;
+        self.for_each_hit(neighbors, p, |i| {
+            flip(i);
+            count += 1;
+        });
+        self.counters.proximity_flips += count;
+    }
+
+    /// Abrupt events over `dt` seconds: Poisson(lambda_abrupt * dt) strikes,
+    /// each hitting a uniformly random bit of `bits`.
+    pub fn abrupt(&mut self, bits: usize, dt: f64, mut flip: impl FnMut(usize)) {
+        let lam = self.model.lambda_abrupt * dt;
+        if lam <= 0.0 || bits == 0 {
+            return;
+        }
+        let strikes = self.poisson(lam);
+        for _ in 0..strikes {
+            flip(self.rng.below(bits as u64) as usize);
+        }
+        self.counters.abrupt_flips += strikes;
+    }
+
+    fn poisson(&mut self, lam: f64) -> u64 {
+        if lam < 30.0 {
+            // Knuth's method.
+            let l = (-lam).exp();
+            let mut k = 0u64;
+            let mut p = 1.0;
+            loop {
+                p *= self.rng.next_f64();
+                if p <= l {
+                    return k;
+                }
+                k += 1;
+            }
+        } else {
+            let x = lam + lam.sqrt() * self.rng.gaussian();
+            x.max(0.0).round() as u64
+        }
+    }
+
+    pub fn rng(&mut self) -> &mut Pcg64 {
+        &mut self.rng
+    }
+
+    pub fn reset_counters(&mut self) {
+        self.counters = ErrorCounters::default();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn silent_model_never_fires() {
+        let mut inj = Injector::new(ErrorModel::none(), 1, 0);
+        let mut hits = 0;
+        for _ in 0..1000 {
+            inj.gate_flips(1024, |_| hits += 1);
+            inj.input_drifts(1024, |_| hits += 1);
+            inj.retention(1024, 1.0, |_| hits += 1);
+            inj.abrupt(1024, 1.0, |_| hits += 1);
+        }
+        assert_eq!(hits, 0);
+        assert_eq!(inj.counters.total(), 0);
+    }
+
+    #[test]
+    fn gate_flip_rate_matches_p() {
+        let p = 1e-3;
+        let mut inj = Injector::new(ErrorModel::direct_only(p), 7, 0);
+        let lanes = 1024;
+        let trials = 20_000;
+        for _ in 0..trials {
+            inj.gate_flips(lanes, |i| assert!(i < lanes));
+        }
+        let rate = inj.counters.gate_flips as f64 / (lanes as f64 * trials as f64);
+        assert!((rate - p).abs() / p < 0.05, "rate={rate}");
+    }
+
+    #[test]
+    fn hits_are_sorted_unique() {
+        let mut inj = Injector::new(ErrorModel::direct_only(0.3), 3, 1);
+        for _ in 0..100 {
+            let mut last = -1i64;
+            inj.gate_flips(256, |i| {
+                assert!((i as i64) > last, "hits must be strictly increasing");
+                last = i as i64;
+            });
+        }
+    }
+
+    #[test]
+    fn retention_rate() {
+        let lam = 1e-4;
+        let dt = 100.0;
+        let model = ErrorModel { lambda_retention: lam, ..ErrorModel::none() };
+        let mut inj = Injector::new(model, 11, 0);
+        let bits = 100_000;
+        inj.retention(bits, dt, |_| {});
+        let expect = bits as f64 * (1.0 - (-lam * dt as f64).exp());
+        let got = inj.counters.retention_flips as f64;
+        assert!((got - expect).abs() < expect * 0.2 + 10.0, "got={got} expect={expect}");
+    }
+
+    #[test]
+    fn abrupt_poisson_mean() {
+        let model = ErrorModel { lambda_abrupt: 2.0, ..ErrorModel::none() };
+        let mut inj = Injector::new(model, 13, 0);
+        let trials = 5_000;
+        for _ in 0..trials {
+            inj.abrupt(4096, 1.0, |i| assert!(i < 4096));
+        }
+        let mean = inj.counters.abrupt_flips as f64 / trials as f64;
+        assert!((mean - 2.0).abs() < 0.1, "mean={mean}");
+    }
+
+    #[test]
+    fn deterministic_streams() {
+        let mut a = Injector::new(ErrorModel::direct_only(0.01), 5, 2);
+        let mut b = Injector::new(ErrorModel::direct_only(0.01), 5, 2);
+        let mut ha = vec![];
+        let mut hb = vec![];
+        for _ in 0..50 {
+            a.gate_flips(4096, |i| ha.push(i));
+            b.gate_flips(4096, |i| hb.push(i));
+        }
+        assert_eq!(ha, hb);
+        assert!(!ha.is_empty());
+    }
+}

@@ -1,0 +1,18 @@
+//! Soft-error models for memristive PIM (paper §II-B).
+//!
+//! * **Direct** errors strike an *operation*: a stateful gate produces the
+//!   wrong output bit (`p_gate`), or a write fails (`p_write`).
+//! * **Indirect** errors strike *stored state*: input state-drift on
+//!   access (`p_input`), retention drift over time (`lambda_retention`
+//!   per bit per second), proximity disturb around writes (`p_proximity`)
+//!   and abrupt events such as ion strikes (`lambda_abrupt` per crossbar
+//!   per second).
+//!
+//! The injector is deterministic given (seed, stream): every Monte-Carlo
+//! figure in EXPERIMENTS.md reproduces bit-exactly.
+
+pub mod model;
+pub mod injector;
+
+pub use injector::{ErrorCounters, Injector};
+pub use model::ErrorModel;

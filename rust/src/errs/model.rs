@@ -1,0 +1,89 @@
+//! Error-model configuration and the device-physics-derived defaults.
+
+/// Probabilities / rates for every soft-error class of paper §II-B.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ErrorModel {
+    /// Direct: probability a stateful logic gate's output bit is wrong.
+    pub p_gate: f64,
+    /// Direct: probability a write (incl. SET init cycles) fails.
+    pub p_write: f64,
+    /// Indirect: probability an accessed input bit drifts (per access).
+    pub p_input: f64,
+    /// Indirect: retention flip rate per bit per second.
+    pub lambda_retention: f64,
+    /// Indirect: probability a write disturbs each physically adjacent cell.
+    pub p_proximity: f64,
+    /// Indirect: abrupt (ion-strike-like) events per crossbar per second.
+    pub lambda_abrupt: f64,
+}
+
+impl ErrorModel {
+    /// Everything off — the "unreliable baseline" still computes correctly.
+    pub fn none() -> Self {
+        Self {
+            p_gate: 0.0,
+            p_write: 0.0,
+            p_input: 0.0,
+            lambda_retention: 0.0,
+            p_proximity: 0.0,
+            lambda_abrupt: 0.0,
+        }
+    }
+
+    /// Only direct gate errors — the Fig. 4 sweep configuration.
+    pub fn direct_only(p_gate: f64) -> Self {
+        Self { p_gate, ..Self::none() }
+    }
+
+    /// Only indirect access errors — the Fig. 5 sweep configuration.
+    pub fn indirect_only(p_input: f64) -> Self {
+        Self { p_input, ..Self::none() }
+    }
+
+    /// A "nominal technology" point assembled from the literature the
+    /// paper cites (RRAM variability studies): used by examples as a
+    /// realistic default.
+    pub fn nominal() -> Self {
+        Self {
+            p_gate: 1e-9,
+            p_write: 1e-10,
+            p_input: 1e-10,
+            lambda_retention: 1e-12,
+            p_proximity: 1e-11,
+            lambda_abrupt: 1e-9,
+        }
+    }
+
+    pub fn is_silent(&self) -> bool {
+        self.p_gate == 0.0
+            && self.p_write == 0.0
+            && self.p_input == 0.0
+            && self.lambda_retention == 0.0
+            && self.p_proximity == 0.0
+            && self.lambda_abrupt == 0.0
+    }
+}
+
+impl Default for ErrorModel {
+    fn default() -> Self {
+        Self::none()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constructors() {
+        assert!(ErrorModel::none().is_silent());
+        let d = ErrorModel::direct_only(1e-6);
+        assert_eq!(d.p_gate, 1e-6);
+        assert_eq!(d.p_input, 0.0);
+        assert!(!d.is_silent());
+        let i = ErrorModel::indirect_only(1e-7);
+        assert_eq!(i.p_input, 1e-7);
+        assert_eq!(i.p_gate, 0.0);
+        assert!(!ErrorModel::nominal().is_silent());
+    }
+}

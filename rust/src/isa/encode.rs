@@ -1,0 +1,147 @@
+//! Encoding of micro-op programs into the dense arrays consumed by the
+//! AOT gate-scan executor (`artifacts/gate_scan_*.hlo.txt`).
+//!
+//! The executor's signature (see python/compile/model.py::gate_scan):
+//!   state (R, C) f32, ops (S,) i32, idxs (S, 4) i32, errs (S, R) f32.
+//! Programs shorter than S are NOP-padded (NOP is a no-op in both the
+//! rust simulator and the executor — verified by tests on both sides).
+
+use anyhow::{bail, Result};
+
+use crate::isa::microop::{Dir, MicroOp};
+use crate::isa::program::Program;
+use crate::xbar::gate::Gate;
+
+/// Dense program encoding, ready to convert into PJRT literals.
+#[derive(Clone, Debug, PartialEq)]
+pub struct EncodedProgram {
+    /// Static step capacity S (NOP-padded).
+    pub steps: usize,
+    pub ops: Vec<i32>,
+    /// S x 4 row-major [a, b, c, out].
+    pub idxs: Vec<i32>,
+    /// Number of real (non-pad) steps.
+    pub real_steps: usize,
+}
+
+/// Lower IMPLY to the executor's gate set.
+///
+/// IMPLY reuses the output memristor as an operand, which the executor's
+/// encoding cannot express; the mMPU controller schedules IMPLY only on
+/// the native simulator path. Encoding a program containing IMPLY is an
+/// error surfaced to the caller.
+pub fn encode(prog: &Program, capacity: usize) -> Result<EncodedProgram> {
+    let flat = prog.flatten();
+    if flat.len() > capacity {
+        bail!(
+            "program {} has {} ops > executor capacity {}",
+            prog.name,
+            flat.len(),
+            capacity
+        );
+    }
+    let mut ops = Vec::with_capacity(capacity);
+    let mut idxs = Vec::with_capacity(capacity * 4);
+    for op in &flat {
+        if op.dir != Dir::InRow {
+            bail!("only in-row programs are encodable (op {:?} is in-column)", op.gate);
+        }
+        if op.gate == Gate::Imply {
+            bail!("IMPLY is not encodable for the AOT executor");
+        }
+        if op.lanes != crate::isa::microop::LaneRange::all() {
+            bail!("lane-restricted ops are not encodable (executor is all-rows)");
+        }
+        ops.push(op.gate.opcode() as i32);
+        idxs.extend([op.a as i32, op.b as i32, op.c as i32, op.out as i32]);
+    }
+    let real_steps = flat.len();
+    while ops.len() < capacity {
+        ops.push(Gate::Nop.opcode() as i32);
+        idxs.extend([0, 0, 0, 0]);
+    }
+    Ok(EncodedProgram { steps: capacity, ops, idxs, real_steps })
+}
+
+/// Decode back into a (serial) program — used by round-trip tests.
+pub fn decode(enc: &EncodedProgram) -> Result<Vec<MicroOp>> {
+    let mut out = Vec::new();
+    for s in 0..enc.real_steps {
+        let gate = match Gate::from_opcode(enc.ops[s] as u8) {
+            Some(g) => g,
+            None => bail!("bad opcode {}", enc.ops[s]),
+        };
+        let i = &enc.idxs[s * 4..s * 4 + 4];
+        let operands: Vec<u32> = match gate.arity() {
+            0 => vec![],
+            1 => vec![i[0] as u32],
+            2 => vec![i[0] as u32, i[1] as u32],
+            _ => vec![i[0] as u32, i[1] as u32, i[2] as u32],
+        };
+        out.push(MicroOp::row(gate, &operands, i[3] as u32));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::program::RowProgramBuilder;
+
+    fn sample_program() -> Program {
+        let mut b = RowProgramBuilder::new("enc-test");
+        b.gate(Gate::Nor2, &[0, 1], 2);
+        b.gate(Gate::Min3, &[0, 1, 2], 3);
+        b.gate(Gate::Not, &[3], 4);
+        b.finish()
+    }
+
+    #[test]
+    fn encode_pads_with_nops() {
+        let p = sample_program();
+        let enc = encode(&p, 16).unwrap();
+        assert_eq!(enc.steps, 16);
+        assert_eq!(enc.ops.len(), 16);
+        assert_eq!(enc.idxs.len(), 64);
+        assert_eq!(enc.real_steps, 6); // 3 logic + 3 auto-init SET1
+        assert!(enc.ops[6..].iter().all(|&o| o == 0));
+    }
+
+    #[test]
+    fn encode_rejects_overflow() {
+        let p = sample_program();
+        assert!(encode(&p, 3).is_err());
+    }
+
+    #[test]
+    fn roundtrip() {
+        let p = sample_program();
+        let enc = encode(&p, 8).unwrap();
+        let dec = decode(&enc).unwrap();
+        assert_eq!(dec, p.flatten());
+    }
+
+    #[test]
+    fn rejects_imply_and_in_col() {
+        let mut p = Program::new("imply");
+        p.push(MicroOp::row(Gate::Imply, &[0], 1));
+        assert!(encode(&p, 8).is_err());
+        let mut p = Program::new("incol");
+        p.push(MicroOp::col(Gate::Not, &[0], 1));
+        assert!(encode(&p, 8).is_err());
+    }
+
+    #[test]
+    fn opcode_values_match_python_ref() {
+        // The contract with python/compile/kernels/ref.py — keep frozen.
+        assert_eq!(Gate::Nop.opcode(), 0);
+        assert_eq!(Gate::Not.opcode(), 1);
+        assert_eq!(Gate::Nor2.opcode(), 2);
+        assert_eq!(Gate::Nor3.opcode(), 3);
+        assert_eq!(Gate::Or2.opcode(), 4);
+        assert_eq!(Gate::Nand2.opcode(), 5);
+        assert_eq!(Gate::Min3.opcode(), 6);
+        assert_eq!(Gate::Set1.opcode(), 7);
+        assert_eq!(Gate::Set0.opcode(), 8);
+    }
+}

@@ -1,0 +1,161 @@
+//! The micro-op: one stateful gate applied in parallel across lanes.
+//!
+//! The mMPU controller decomposes arithmetic functions into micro-ops
+//! (paper §III-B). An *in-row* micro-op names column indices and executes
+//! simultaneously in every lane (row) of its lane range — Fig. 1(a). An
+//! *in-column* micro-op is the transpose — Fig. 1(b).
+
+pub use crate::xbar::gate::Gate;
+
+/// Orientation of a micro-op.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Dir {
+    /// Operands are columns; one gate instance per row (row-parallel).
+    InRow,
+    /// Operands are rows; one gate instance per column (column-parallel).
+    InCol,
+}
+
+/// Lane range [start, end) — which rows (InRow) / columns (InCol)
+/// participate. `LaneRange::all()` is resolved against the crossbar size.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct LaneRange {
+    pub start: u32,
+    /// Exclusive end; `u32::MAX` means "all lanes".
+    pub end: u32,
+}
+
+impl LaneRange {
+    pub fn all() -> Self {
+        Self { start: 0, end: u32::MAX }
+    }
+
+    pub fn new(start: u32, end: u32) -> Self {
+        assert!(start < end, "empty lane range");
+        Self { start, end }
+    }
+
+    /// Resolve against an actual lane count.
+    pub fn resolve(self, lanes: usize) -> (usize, usize) {
+        let end = if self.end == u32::MAX { lanes } else { self.end as usize };
+        assert!(end <= lanes && (self.start as usize) < end, "lane range out of bounds");
+        (self.start as usize, end)
+    }
+
+    pub fn len_in(self, lanes: usize) -> usize {
+        let (s, e) = self.resolve(lanes);
+        e - s
+    }
+}
+
+/// One stateful gate execution (broadcast across its lane range).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct MicroOp {
+    pub gate: Gate,
+    pub dir: Dir,
+    /// Operand line indices (columns for InRow, rows for InCol).
+    /// Unused operands (arity < 3) must repeat `a` — keeps encode exact.
+    pub a: u32,
+    pub b: u32,
+    pub c: u32,
+    pub out: u32,
+    pub lanes: LaneRange,
+}
+
+impl MicroOp {
+    /// In-row op over all rows — the common case for single-row functions
+    /// repeated across the crossbar.
+    pub fn row(gate: Gate, operands: &[u32], out: u32) -> Self {
+        Self::with_dir(Dir::InRow, gate, operands, out, LaneRange::all())
+    }
+
+    pub fn col(gate: Gate, operands: &[u32], out: u32) -> Self {
+        Self::with_dir(Dir::InCol, gate, operands, out, LaneRange::all())
+    }
+
+    pub fn with_dir(dir: Dir, gate: Gate, operands: &[u32], out: u32, lanes: LaneRange) -> Self {
+        assert_eq!(operands.len(), gate.arity(), "{gate:?} arity mismatch");
+        let a = operands.first().copied().unwrap_or(out);
+        let b = operands.get(1).copied().unwrap_or(a);
+        let c = operands.get(2).copied().unwrap_or(a);
+        if gate.is_logic() {
+            for &o in operands {
+                assert_ne!(o, out, "{gate:?}: output line aliases an input");
+            }
+        }
+        Self { gate, dir, a, b, c, out, lanes }
+    }
+
+    /// Set the lane range (builder style).
+    pub fn over(mut self, lanes: LaneRange) -> Self {
+        self.lanes = lanes;
+        self
+    }
+
+    /// The set of line indices this op touches (operands + output).
+    pub fn lines(&self) -> Vec<u32> {
+        let mut v = Vec::with_capacity(4);
+        match self.gate.arity() {
+            0 => {}
+            1 => v.push(self.a),
+            2 => v.extend([self.a, self.b]),
+            _ => v.extend([self.a, self.b, self.c]),
+        }
+        v.push(self.out);
+        v
+    }
+
+    /// Smallest / largest line touched — used for partition validation.
+    pub fn line_span(&self) -> (u32, u32) {
+        let ls = self.lines();
+        (*ls.iter().min().unwrap(), *ls.iter().max().unwrap())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_fills_unused_operands() {
+        let op = MicroOp::row(Gate::Not, &[3], 7);
+        assert_eq!((op.a, op.b, op.c, op.out), (3, 3, 3, 7));
+        let op = MicroOp::row(Gate::Nor2, &[1, 2], 5);
+        assert_eq!((op.a, op.b, op.c), (1, 2, 1));
+        let op = MicroOp::row(Gate::Set1, &[], 9);
+        assert_eq!(op.out, 9);
+        assert_eq!(op.a, 9);
+    }
+
+    #[test]
+    #[should_panic]
+    fn arity_mismatch_panics() {
+        let _ = MicroOp::row(Gate::Nor2, &[1], 5);
+    }
+
+    #[test]
+    #[should_panic]
+    fn alias_panics() {
+        let _ = MicroOp::row(Gate::Nor2, &[1, 5], 5);
+    }
+
+    #[test]
+    fn lane_range_resolution() {
+        assert_eq!(LaneRange::all().resolve(128), (0, 128));
+        assert_eq!(LaneRange::new(8, 16).resolve(128), (8, 16));
+        assert_eq!(LaneRange::new(8, 16).len_in(128), 8);
+    }
+
+    #[test]
+    #[should_panic]
+    fn lane_range_oob_panics() {
+        LaneRange::new(8, 200).resolve(128);
+    }
+
+    #[test]
+    fn lines_and_span() {
+        let op = MicroOp::row(Gate::Min3, &[4, 9, 2], 11);
+        assert_eq!(op.lines(), vec![4, 9, 2, 11]);
+        assert_eq!(op.line_span(), (2, 11));
+    }
+}

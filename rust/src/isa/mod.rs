@@ -1,0 +1,10 @@
+//! The mMPU micro-op ISA: micro-ops, cycle-grouped programs, and the
+//! dense encoding used by the AOT (PJRT) program executor.
+
+pub mod encode;
+pub mod microop;
+pub mod program;
+
+pub use encode::{encode, EncodedProgram};
+pub use microop::{Dir, LaneRange, MicroOp};
+pub use program::{Program, RowProgramBuilder, Step};

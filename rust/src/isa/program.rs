@@ -1,0 +1,264 @@
+//! Programs: sequences of cycles, each cycle holding one or more
+//! micro-ops that execute concurrently (partition parallelism, Fig. 1c).
+
+use std::fmt;
+
+use crate::xbar::gate::Gate;
+
+use super::microop::{Dir, MicroOp};
+
+/// One crossbar cycle: all contained micro-ops fire simultaneously.
+/// Concurrency is legal only across disjoint partitions (validated by
+/// `isa::validate` against a partition configuration).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Step {
+    pub ops: Vec<MicroOp>,
+}
+
+impl Step {
+    pub fn one(op: MicroOp) -> Self {
+        Self { ops: vec![op] }
+    }
+
+    pub fn many(ops: Vec<MicroOp>) -> Self {
+        assert!(!ops.is_empty(), "empty step");
+        Self { ops }
+    }
+}
+
+/// A synthesized in-memory function: micro-op schedule plus interface
+/// metadata (which columns hold inputs/outputs, how many work columns).
+#[derive(Clone, Debug, Default)]
+pub struct Program {
+    pub name: String,
+    pub steps: Vec<Step>,
+    /// Columns holding function inputs (must be valid before execution).
+    pub input_cols: Vec<u32>,
+    /// Columns holding function outputs (ECC must cover them afterwards).
+    pub output_cols: Vec<u32>,
+    /// Total columns used (inputs + intermediates + outputs).
+    pub width: u32,
+    /// Column-partition starts this program's parallel steps assume
+    /// (empty = single partition).
+    pub partition_starts: Vec<u32>,
+}
+
+impl Program {
+    pub fn new(name: &str) -> Self {
+        Self { name: name.to_string(), ..Default::default() }
+    }
+
+    pub fn push(&mut self, op: MicroOp) {
+        self.track_width_op(&op);
+        self.steps.push(Step::one(op));
+    }
+
+    /// Push a cycle of concurrent ops (one per partition).
+    pub fn push_parallel(&mut self, ops: Vec<MicroOp>) {
+        for op in &ops {
+            self.track_width_op(op);
+        }
+        self.steps.push(Step::many(ops));
+    }
+
+    fn track_width_op(&mut self, op: &MicroOp) {
+        if op.dir == Dir::InRow {
+            let (_, hi) = op.line_span();
+            self.width = self.width.max(hi + 1);
+        }
+    }
+
+    /// Latency in crossbar cycles.
+    pub fn cycles(&self) -> usize {
+        self.steps.len()
+    }
+
+    /// Total gate executions *per lane* that are soft-error sites
+    /// (logic gates; init SETs counted separately).
+    pub fn logic_gates_per_lane(&self) -> usize {
+        self.steps.iter().flat_map(|s| &s.ops).filter(|o| o.gate.is_logic()).count()
+    }
+
+    pub fn init_writes_per_lane(&self) -> usize {
+        self.steps.iter().flat_map(|s| &s.ops).filter(|o| o.gate.is_init()).count()
+    }
+
+    /// Total micro-ops (all cycles).
+    pub fn num_ops(&self) -> usize {
+        self.steps.iter().map(|s| s.ops.len()).sum()
+    }
+
+    /// Maximum concurrent ops in any cycle (partition pressure).
+    pub fn max_parallelism(&self) -> usize {
+        self.steps.iter().map(|s| s.ops.len()).max().unwrap_or(0)
+    }
+
+    /// Serialize concurrency away: one op per cycle, program-order
+    /// preserved. Used by the AOT executor encoding (whose scan applies
+    /// one op per step) — the final state is identical because concurrent
+    /// ops touch disjoint lines.
+    pub fn flatten(&self) -> Vec<MicroOp> {
+        self.steps.iter().flat_map(|s| s.ops.iter().copied()).collect()
+    }
+
+    /// Append another program's steps (columns must already be disjoint /
+    /// coordinated by the caller).
+    pub fn extend(&mut self, other: &Program) {
+        self.steps.extend(other.steps.iter().cloned());
+        self.width = self.width.max(other.width);
+    }
+
+    /// Relocate every column index by `offset` (placing a single-row
+    /// function at a different column base, e.g. for the parallel-TMR
+    /// copies in separate partitions).
+    pub fn relocate(&self, offset: u32) -> Program {
+        let mut p = self.clone();
+        let shift = |x: &mut u32| *x += offset;
+        for s in &mut p.steps {
+            for op in &mut s.ops {
+                if op.gate.arity() >= 1 {
+                    shift(&mut op.a);
+                }
+                shift(&mut op.b);
+                shift(&mut op.c);
+                shift(&mut op.out);
+                // Unused operand convention: b/c mirror a when arity < 3;
+                // relocation preserves that because all shift equally.
+                if op.gate.arity() == 0 {
+                    op.a = op.out;
+                    op.b = op.out;
+                    op.c = op.out;
+                }
+            }
+        }
+        for c in p.input_cols.iter_mut().chain(p.output_cols.iter_mut()) {
+            *c += offset;
+        }
+        for s in p.partition_starts.iter_mut() {
+            *s += offset;
+        }
+        p.width += offset;
+        p
+    }
+}
+
+impl fmt::Display for Program {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(
+            f,
+            "program {}: {} cycles, {} ops ({} logic/lane, {} init/lane), width {}",
+            self.name,
+            self.cycles(),
+            self.num_ops(),
+            self.logic_gates_per_lane(),
+            self.init_writes_per_lane(),
+            self.width
+        )
+    }
+}
+
+/// Builder helper: sequential single-partition program writer with
+/// automatic MAGIC-style output initialization.
+pub struct RowProgramBuilder {
+    prog: Program,
+    /// Emit a SET1 init before every logic gate (MAGIC/FELIX requirement);
+    /// disable to model idealized init-free scheduling.
+    pub auto_init: bool,
+}
+
+impl RowProgramBuilder {
+    pub fn new(name: &str) -> Self {
+        Self { prog: Program::new(name), auto_init: true }
+    }
+
+    pub fn no_init(name: &str) -> Self {
+        Self { prog: Program::new(name), auto_init: false }
+    }
+
+    /// Emit `out = gate(operands)` (plus the init write when enabled).
+    pub fn gate(&mut self, gate: Gate, operands: &[u32], out: u32) -> u32 {
+        if self.auto_init && gate.is_logic() {
+            self.prog.push(MicroOp::row(Gate::Set1, &[], out));
+        }
+        self.prog.push(MicroOp::row(gate, operands, out));
+        out
+    }
+
+    pub fn set0(&mut self, out: u32) -> u32 {
+        self.prog.push(MicroOp::row(Gate::Set0, &[], out));
+        out
+    }
+
+    pub fn set1(&mut self, out: u32) -> u32 {
+        self.prog.push(MicroOp::row(Gate::Set1, &[], out));
+        out
+    }
+
+    pub fn inputs(&mut self, cols: &[u32]) {
+        self.prog.input_cols.extend_from_slice(cols);
+    }
+
+    pub fn outputs(&mut self, cols: &[u32]) {
+        self.prog.output_cols.extend_from_slice(cols);
+    }
+
+    pub fn finish(self) -> Program {
+        self.prog
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::xbar::gate::Gate;
+
+    #[test]
+    fn counts() {
+        let mut b = RowProgramBuilder::new("t");
+        b.gate(Gate::Nor2, &[0, 1], 2);
+        b.gate(Gate::Not, &[2], 3);
+        let p = b.finish();
+        assert_eq!(p.cycles(), 4); // 2 init + 2 logic
+        assert_eq!(p.logic_gates_per_lane(), 2);
+        assert_eq!(p.init_writes_per_lane(), 2);
+        assert_eq!(p.width, 4);
+    }
+
+    #[test]
+    fn no_init_builder() {
+        let mut b = RowProgramBuilder::no_init("t");
+        b.gate(Gate::Nor2, &[0, 1], 2);
+        let p = b.finish();
+        assert_eq!(p.cycles(), 1);
+        assert_eq!(p.init_writes_per_lane(), 0);
+    }
+
+    #[test]
+    fn relocate_shifts_everything() {
+        let mut b = RowProgramBuilder::no_init("t");
+        b.inputs(&[0, 1]);
+        b.gate(Gate::Nor2, &[0, 1], 2);
+        b.outputs(&[2]);
+        let p = b.finish().relocate(10);
+        let op = p.steps[0].ops[0];
+        assert_eq!((op.a, op.b, op.out), (10, 11, 12));
+        assert_eq!(p.input_cols, vec![10, 11]);
+        assert_eq!(p.output_cols, vec![12]);
+    }
+
+    #[test]
+    fn flatten_preserves_order() {
+        let mut p = Program::new("par");
+        p.push_parallel(vec![
+            MicroOp::row(Gate::Not, &[0], 1),
+            MicroOp::row(Gate::Not, &[2], 3),
+        ]);
+        p.push(MicroOp::row(Gate::Nor2, &[1, 3], 4));
+        assert_eq!(p.cycles(), 2);
+        assert_eq!(p.num_ops(), 3);
+        assert_eq!(p.max_parallelism(), 2);
+        let flat = p.flatten();
+        assert_eq!(flat.len(), 3);
+        assert_eq!(flat[2].gate, Gate::Nor2);
+    }
+}

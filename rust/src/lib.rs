@@ -1,0 +1,33 @@
+//! # REMUS — Reliable Memristive Processing-in-Memory
+//!
+//! A reproduction of *“Making Memristive Processing-in-Memory Reliable”*
+//! (Leitersdorf, Ronen, Kvatinsky, 2021): a cycle-accurate memristive
+//! Memory Processing Unit (mMPU) simulator with the paper's
+//! high-throughput reliability mechanisms — diagonal-parity ECC and
+//! in-memory TMR — plus the neural-network case study, built as a
+//! three-layer Rust + JAX + Pallas stack (see DESIGN.md).
+//!
+//! Layer map:
+//! * [`xbar`], [`isa`], [`arith`], [`errs`] — the crossbar substrate:
+//!   stateful logic, micro-op programs, arithmetic synthesis, soft errors.
+//! * [`ecc`], [`tmr`] — the paper's reliability contributions.
+//! * [`mmpu`], [`coordinator`] — the controller and the request path.
+//! * [`runtime`] — PJRT execution of the AOT-lowered JAX/Pallas kernels.
+//! * [`nn`], [`analysis`], [`bitlet`] — the case study and the
+//!   figure/table reproductions.
+
+pub mod analysis;
+pub mod arith;
+pub mod bench_harness;
+pub mod bitlet;
+pub mod coordinator;
+pub mod ecc;
+pub mod errs;
+pub mod isa;
+pub mod mmpu;
+pub mod nn;
+pub mod runtime;
+pub mod testutil;
+pub mod tmr;
+pub mod util;
+pub mod xbar;

@@ -1,0 +1,235 @@
+//! `remus` — the mMPU reliability launcher.
+//!
+//! Subcommands map to the paper's experiments (see DESIGN.md §3):
+//!
+//! ```text
+//! remus info                          # device / throughput model summary
+//! remus demo                          # quick reliable vector-multiply demo
+//! remus fig4  [--points 13 --trials 4000 --bits 32]
+//! remus fig5  [--tmax 1e8]
+//! remus overhead                      # ECC latency overhead table (E8)
+//! remus tradeoff                      # TMR trade-off table (E9)
+//! remus serve [--requests 4096 --workers 4]   # coordinator load demo
+//! ```
+
+use anyhow::Result;
+
+use remus::analysis::{fig4::MultReliability, overhead};
+use remus::bitlet::BitletModel;
+use remus::coordinator::{Coordinator, CoordinatorConfig};
+use remus::errs::ErrorModel;
+use remus::mmpu::{controller::quick_exec, FunctionKind, ReliabilityPolicy};
+use remus::nn::degradation::DegradationModel;
+use remus::tmr::TmrMode;
+use remus::util::cli::Args;
+use remus::util::stats::logspace;
+use remus::util::table::{sci, Table};
+use remus::xbar::device::DeviceModel;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    match args.subcommand() {
+        Some("info") => info(),
+        Some("demo") => demo(&args),
+        Some("fig4") => fig4(&args),
+        Some("fig5") => fig5(&args),
+        Some("overhead") => overhead_cmd(&args),
+        Some("tradeoff") => tradeoff(&args),
+        Some("serve") => serve(&args),
+        _ => {
+            eprintln!(
+                "usage: remus <info|demo|fig4|fig5|overhead|tradeoff|serve> [--opts]\n\
+                 see doc comments in rust/src/main.rs"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn info() -> Result<()> {
+    let d = DeviceModel::default_rram();
+    println!("REMUS — Reliable Memristive Processing-in-Memory");
+    println!(
+        "device model: Ron={}Ω Roff={}Ω cycle={}ns f={}MHz",
+        d.r_on,
+        d.r_off,
+        d.cycle_ns,
+        d.freq_mhz()
+    );
+    println!("variability-derived p_gate estimate: {:.3e}", d.derived_p_gate());
+    let b = BitletModel::paper();
+    println!(
+        "fleet model: {} crossbars x {}x{} = {} MiB @ {} MHz -> peak {:.1} TB/s",
+        b.crossbars,
+        b.rows,
+        b.cols,
+        b.total_bytes() >> 20,
+        b.freq_mhz,
+        b.peak_tb_per_sec()
+    );
+    Ok(())
+}
+
+fn demo(args: &Args) -> Result<()> {
+    let p_gate = args.get_or("p-gate", 1e-4);
+    let n: Vec<u64> = (0..16).collect();
+    let m: Vec<u64> = (0..16).map(|i| i + 100).collect();
+    println!("vector multiply, 16 elements, p_gate = {p_gate}");
+    for (label, tmr) in
+        [("baseline (unprotected)", TmrMode::Off), ("serial TMR", TmrMode::Serial)]
+    {
+        let r = quick_exec(
+            FunctionKind::Mul(16),
+            ReliabilityPolicy { ecc_m: Some(16), tmr },
+            ErrorModel::direct_only(p_gate),
+            42,
+            &n,
+            &m,
+        )?;
+        let wrong =
+            r.values.iter().zip(n.iter().zip(&m)).filter(|(&v, (&a, &b))| v != a * b).count();
+        println!(
+            "  {label:<24} wrong={wrong}/16  compute_cycles={}  ecc_cycles={}",
+            r.compute_cycles, r.ecc_cycles
+        );
+    }
+    Ok(())
+}
+
+fn fig4(args: &Args) -> Result<()> {
+    let bits = args.get_or("bits", 32u32);
+    let trials = args.get_or("trials", 2000usize);
+    let points = args.get_or("points", 13usize);
+    let rel = MultReliability::measure(bits, trials, 0xF164);
+    println!(
+        "measured masking: alpha={:.3} gamma={:.3} over G={} gates",
+        rel.alpha, rel.gamma, rel.gates
+    );
+    let grid = logspace(1e-10, 1e-4, points);
+    let mut t = Table::new(
+        &format!("Fig 4 (top): {bits}-bit multiplication failure probability"),
+        &["p_gate", "baseline", "tmr", "tmr_ideal"],
+    );
+    for row in rel.series(&grid) {
+        t.row(&[sci(row.p_gate), sci(row.baseline), sci(row.tmr), sci(row.tmr_ideal)]);
+    }
+    t.print();
+    let model = remus::nn::alexnet::AlexNetModel::paper();
+    let mut t = Table::new(
+        "Fig 4 (bottom): NN misclassification probability",
+        &["p_gate", "baseline", "tmr", "tmr_ideal"],
+    );
+    for row in rel.series(&grid) {
+        t.row(&[
+            sci(row.p_gate),
+            sci(model.p_network(row.baseline)),
+            sci(model.p_network(row.tmr)),
+            sci(model.p_network(row.tmr_ideal)),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn fig5(args: &Args) -> Result<()> {
+    let model = DegradationModel::paper();
+    let tmax = args.get_or("tmax", 1e8);
+    let mut t = Table::new(
+        "Fig 5: expected corrupted weights (baseline vs mMPU ECC)",
+        &["batches", "p_input", "baseline", "ecc"],
+    );
+    for &p in &[1e-10, 1e-9, 1e-8] {
+        let mut tt = 1.0;
+        while tt <= tmax {
+            t.row(&[
+                format!("{tt:.0e}"),
+                sci(p),
+                format!("{:.3e}", model.expected_corrupted_baseline(p, tt)),
+                format!("{:.3e}", model.expected_corrupted_ecc(p, tt)),
+            ]);
+            tt *= 10.0;
+        }
+    }
+    t.print();
+    Ok(())
+}
+
+fn overhead_cmd(args: &Args) -> Result<()> {
+    let m = args.get_or("m", 16usize);
+    let (rows, avg) = overhead::suite_overhead(m);
+    let mut t = Table::new(
+        &format!("ECC latency overhead per function (m={m})"),
+        &["function", "base_cycles", "ecc_cycles", "overhead_%"],
+    );
+    for r in rows {
+        t.row(&[
+            r.name,
+            r.base_cycles.to_string(),
+            r.ecc_cycles.to_string(),
+            format!("{:.1}", r.overhead_pct),
+        ]);
+    }
+    t.print();
+    println!("suite average: {avg:.1}%  (paper: 26% average)");
+    Ok(())
+}
+
+fn tradeoff(_args: &Args) -> Result<()> {
+    let mut t = Table::new(
+        "TMR trade-offs (analytical; measured version: cargo bench tab_tmr_tradeoff)",
+        &["function", "mode", "latency_x", "area_x", "throughput_x"],
+    );
+    for (name, prog) in overhead::function_suite() {
+        if !name.starts_with("mul") && !name.starts_with("add32") {
+            continue;
+        }
+        for r in overhead::tmr_tradeoffs(&name, &prog) {
+            t.row(&[
+                r.func,
+                r.mode.to_string(),
+                format!("{:.2}", r.latency_x),
+                format!("{:.2}", r.area_x),
+                format!("{:.2}", r.throughput_x),
+            ]);
+        }
+    }
+    t.print();
+    Ok(())
+}
+
+fn serve(args: &Args) -> Result<()> {
+    let requests = args.get_or("requests", 4096u64);
+    let workers = args.get_or("workers", 4usize);
+    let coord = Coordinator::start(CoordinatorConfig {
+        workers,
+        policy: ReliabilityPolicy { ecc_m: None, tmr: TmrMode::Serial },
+        ..Default::default()
+    })?;
+    let t0 = std::time::Instant::now();
+    let rxs: Vec<_> = (0..requests)
+        .map(|i| (i, coord.submit(FunctionKind::Mul(16), i % 1000, (i * 7) % 1000)))
+        .collect();
+    let mut ok = 0u64;
+    for (i, rx) in rxs {
+        let r = rx.recv()?;
+        if r.value == (i % 1000) * ((i * 7) % 1000) {
+            ok += 1;
+        }
+    }
+    let dt = t0.elapsed();
+    let m = coord.metrics();
+    println!(
+        "served {requests} requests in {:.2?}: {:.0} req/s, correct {ok}/{requests}",
+        dt,
+        requests as f64 / dt.as_secs_f64()
+    );
+    println!(
+        "batches={} mean_batch={:.1} p50={}us p99={}us",
+        m.batches,
+        m.mean_batch_size(),
+        m.latency_percentile_us(50.0),
+        m.latency_percentile_us(99.0)
+    );
+    coord.shutdown();
+    Ok(())
+}

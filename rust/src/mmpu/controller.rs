@@ -1,0 +1,441 @@
+//! The mMPU controller: crossbar fleet + reliability policy + data
+//! marshalling.
+
+use anyhow::{ensure, Result};
+
+use crate::ecc::DiagonalEcc;
+use crate::errs::{ErrorModel, Injector};
+use crate::tmr::{TmrEngine, TmrMode};
+use crate::xbar::crossbar::Crossbar;
+
+use super::functions::{FunctionKind, FunctionSpec};
+
+/// Reliability policy applied to every function execution.
+#[derive(Clone, Copy, Debug)]
+pub struct ReliabilityPolicy {
+    /// Diagonal ECC block size m (None = unprotected storage).
+    pub ecc_m: Option<usize>,
+    /// TMR strategy for computation.
+    pub tmr: TmrMode,
+}
+
+impl ReliabilityPolicy {
+    pub fn none() -> Self {
+        Self { ecc_m: None, tmr: TmrMode::Off }
+    }
+
+    pub fn full() -> Self {
+        Self { ecc_m: Some(16), tmr: TmrMode::Serial }
+    }
+}
+
+/// Fleet configuration.
+#[derive(Clone, Debug)]
+pub struct MmpuConfig {
+    pub rows: usize,
+    pub cols: usize,
+    pub num_crossbars: usize,
+    pub policy: ReliabilityPolicy,
+    pub errors: ErrorModel,
+    pub seed: u64,
+}
+
+impl Default for MmpuConfig {
+    fn default() -> Self {
+        Self {
+            rows: 128,
+            cols: 1024,
+            num_crossbars: 4,
+            policy: ReliabilityPolicy::none(),
+            errors: ErrorModel::none(),
+            seed: 0xACE1,
+        }
+    }
+}
+
+/// One crossbar with its private error stream and ECC extension.
+struct XbarUnit {
+    xbar: Crossbar,
+    inj: Injector,
+    ecc: Option<DiagonalEcc>,
+}
+
+/// Result of a vectored function execution.
+#[derive(Clone, Debug)]
+pub struct VectorResult {
+    pub values: Vec<u64>,
+    /// Compute cycles (stateful logic, incl. TMR voting).
+    pub compute_cycles: u64,
+    /// ECC extension cycles added on the critical path
+    /// (verify-before + update-after).
+    pub ecc_cycles: u64,
+    /// Errors the ECC pre-verification corrected in the input region.
+    pub ecc_corrected: u64,
+}
+
+/// The memristive Memory Processing Unit.
+pub struct Mmpu {
+    cfg: MmpuConfig,
+    units: Vec<XbarUnit>,
+}
+
+impl Mmpu {
+    pub fn new(cfg: MmpuConfig) -> Self {
+        let mut root = Injector::new(cfg.errors, cfg.seed, 0);
+        let units = (0..cfg.num_crossbars)
+            .map(|_| XbarUnit {
+                xbar: Crossbar::new(cfg.rows, cfg.cols),
+                inj: root.split(),
+                ecc: cfg.policy.ecc_m.map(|m| DiagonalEcc::new(cfg.rows, cfg.cols, m)),
+            })
+            .collect();
+        Self { cfg, units }
+    }
+
+    pub fn config(&self) -> &MmpuConfig {
+        &self.cfg
+    }
+
+    pub fn num_crossbars(&self) -> usize {
+        self.units.len()
+    }
+
+    pub fn rows(&self) -> usize {
+        self.cfg.rows
+    }
+
+    pub fn crossbar(&self, id: usize) -> &Crossbar {
+        &self.units[id].xbar
+    }
+
+    pub fn crossbar_mut(&mut self, id: usize) -> &mut Crossbar {
+        &mut self.units[id].xbar
+    }
+
+    pub fn injector_counters(&self, id: usize) -> crate::errs::ErrorCounters {
+        self.units[id].inj.counters
+    }
+
+    /// Execute a vectored function: element i of `a`/`b` occupies row i
+    /// (replicated per the TMR strategy's needs). Returns element
+    /// results in order.
+    pub fn exec_vector(
+        &mut self,
+        xbar_id: usize,
+        func: &FunctionSpec,
+        a: &[u64],
+        b: &[u64],
+    ) -> Result<VectorResult> {
+        ensure!(a.len() == b.len(), "operand length mismatch");
+        ensure!(xbar_id < self.units.len(), "bad crossbar id");
+        let tmr = self.cfg.policy.tmr;
+        let unit = &mut self.units[xbar_id];
+        let rows = unit.xbar.rows();
+        let n = func.kind.operand_bits();
+
+        // Row mapping per strategy.
+        let (items, replicas) = match tmr {
+            TmrMode::SemiParallel => {
+                let k = (rows - 1) / 3;
+                ensure!(a.len() <= k, "too many items for semi-parallel TMR ({k} max)");
+                (a.len(), 3usize)
+            }
+            _ => {
+                ensure!(a.len() <= rows, "too many items ({rows} rows)");
+                (a.len(), 1usize)
+            }
+        };
+
+        // --- load operands (memory-interface writes) -----------------
+        let item_stride = if replicas == 3 { (rows - 1) / 3 } else { 0 };
+        for (i, (&av, &bv)) in a.iter().zip(b).enumerate() {
+            for rep in 0..replicas {
+                let row = i + rep * item_stride;
+                Self::write_operand(&mut unit.xbar, &mut unit.inj, row, &func.a_cols, av, n);
+                Self::write_operand(&mut unit.xbar, &mut unit.inj, row, &func.b_cols, bv, n);
+            }
+        }
+        // Parallel TMR keeps three column-relocated copies of the inputs.
+        if tmr == TmrMode::Parallel {
+            for base in TmrEngine::parallel_copy_bases(&func.prog).into_iter().skip(1) {
+                for (i, (&av, &bv)) in a.iter().zip(b).enumerate() {
+                    let ac: Vec<u32> = func.a_cols.iter().map(|c| c + base).collect();
+                    let bc: Vec<u32> = func.b_cols.iter().map(|c| c + base).collect();
+                    Self::write_operand(&mut unit.xbar, &mut unit.inj, i, &ac, av, n);
+                    Self::write_operand(&mut unit.xbar, &mut unit.inj, i, &bc, bv, n);
+                }
+            }
+        }
+
+        // --- ECC: encode freshly-written inputs, verify before compute -
+        let mut ecc_cycles = 0;
+        let mut ecc_corrected = 0;
+        if let Some(ecc) = unit.ecc.as_mut() {
+            ecc.encode(unit.xbar.state());
+            let v0 = ecc.stats.verify_cycles + ecc.stats.update_cycles;
+            let outcome = ecc.correct(unit.xbar.state_mut());
+            ecc_corrected += outcome.corrected_bits.len() as u64;
+            ecc_cycles += ecc.stats.verify_cycles + ecc.stats.update_cycles - v0;
+        }
+
+        // --- compute under TMR ---------------------------------------
+        let engine = TmrEngine::new(tmr);
+        let inj = if self.cfg.errors.is_silent() { None } else { Some(&mut unit.inj) };
+        let run = engine.execute(&mut unit.xbar, &func.prog, inj)?;
+
+        // --- ECC: update check bits for the produced outputs ----------
+        if let Some(ecc) = unit.ecc.as_mut() {
+            for &c in &run.output_cols {
+                let col = unit.xbar.state().col_bitvec(c as usize);
+                // parity' = parity ^ old ^ new; the controller models the
+                // old column as it was before compute — the engine tracks
+                // only cycle cost here, then re-syncs the block parities.
+                ecc.note_col_write(c as usize, &col, &col);
+            }
+            // Re-sync (outputs & intermediates changed during compute).
+            ecc.encode(unit.xbar.state());
+            ecc_cycles += ecc.update_cost(run.output_cols.len() as u64);
+        }
+
+        // --- read back -------------------------------------------------
+        let mask = func.result_mask();
+        let values = (0..items)
+            .map(|i| {
+                run.output_cols.iter().enumerate().fold(0u64, |acc, (k, &c)| {
+                    acc | ((unit.xbar.get(i, c as usize) as u64) << k)
+                }) & mask
+            })
+            .collect();
+        Ok(VectorResult {
+            values,
+            compute_cycles: run.cycles,
+            ecc_cycles,
+            ecc_corrected,
+        })
+    }
+
+    fn write_operand(
+        xbar: &mut Crossbar,
+        inj: &mut Injector,
+        row: usize,
+        cols: &[u32],
+        value: u64,
+        n: u32,
+    ) {
+        for (k, &c) in cols.iter().enumerate().take(n as usize) {
+            xbar.write_bit(row, c as usize, (value >> k) & 1 == 1, Some(inj));
+        }
+    }
+
+    /// Periodic ECC scrub of a crossbar (correct accumulated indirect
+    /// errors). Returns corrected data-bit count.
+    pub fn scrub(&mut self, xbar_id: usize) -> Result<u64> {
+        let unit = &mut self.units[xbar_id];
+        match unit.ecc.as_mut() {
+            Some(ecc) => {
+                let out = ecc.correct(unit.xbar.state_mut());
+                Ok(out.corrected_bits.len() as u64)
+            }
+            None => Ok(0),
+        }
+    }
+
+    /// Expose accumulated crossbar stats (cycles, energy, ...).
+    pub fn stats(&self, xbar_id: usize) -> crate::xbar::crossbar::XbarStats {
+        self.units[xbar_id].xbar.stats
+    }
+
+    /// Age the stored data by `dt` seconds (retention + abrupt events) —
+    /// drives the Fig. 5 style degradation experiments.
+    pub fn age(&mut self, xbar_id: usize, dt: f64) {
+        let unit = &mut self.units[xbar_id];
+        let rows = unit.xbar.rows();
+        let cols = unit.xbar.cols();
+        let bits = rows * cols;
+        let state = unit.xbar.state_mut();
+        unit.inj.retention(bits, dt, |i| state.flip(i / cols, i % cols));
+        unit.inj.abrupt(bits, dt, |i| state.flip(i / cols, i % cols));
+    }
+}
+
+/// Convenience: build a spec and run it on crossbar 0 of a fresh
+/// single-purpose mMPU (used by examples/tests).
+pub fn quick_exec(
+    kind: FunctionKind,
+    policy: ReliabilityPolicy,
+    errors: ErrorModel,
+    seed: u64,
+    a: &[u64],
+    b: &[u64],
+) -> Result<VectorResult> {
+    let func = FunctionSpec::build(kind);
+    let need = match policy.tmr {
+        TmrMode::Serial => TmrEngine::serial_layout(&func.prog).width,
+        TmrMode::Parallel => 3 * func.prog.width + func.out_bits + 2,
+        _ => func.prog.width,
+    };
+    let mut cols = need.next_power_of_two().max(64) as usize;
+    if let Some(m) = policy.ecc_m {
+        cols = cols.div_ceil(m) * m;
+    }
+    let mut rows = a.len().max(4);
+    if policy.tmr == TmrMode::SemiParallel {
+        rows = 3 * a.len() + 1;
+    }
+    if let Some(m) = policy.ecc_m {
+        rows = rows.div_ceil(m) * m;
+    }
+    let cfg = MmpuConfig {
+        rows,
+        cols,
+        num_crossbars: 1,
+        policy,
+        errors,
+        seed,
+    };
+    let mut mmpu = Mmpu::new(cfg);
+    mmpu.exec_vector(0, &func, a, b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vector_add_clean() {
+        let a: Vec<u64> = (0..32).map(|i| i * 31 % 256).collect();
+        let b: Vec<u64> = (0..32).map(|i| i * 17 % 256).collect();
+        let r = quick_exec(
+            FunctionKind::Add(8),
+            ReliabilityPolicy::none(),
+            ErrorModel::none(),
+            1,
+            &a,
+            &b,
+        )
+        .unwrap();
+        for i in 0..32 {
+            assert_eq!(r.values[i], a[i] + b[i], "{i}");
+        }
+        assert_eq!(r.ecc_cycles, 0);
+    }
+
+    #[test]
+    fn vector_mul_clean_all_policies() {
+        let a: Vec<u64> = (0..16).map(|i| i * 131 % 65536).collect();
+        let b: Vec<u64> = (0..16).map(|i| i * 77 % 65536).collect();
+        for tmr in [TmrMode::Off, TmrMode::Serial] {
+            let r = quick_exec(
+                FunctionKind::Mul(16),
+                ReliabilityPolicy { ecc_m: None, tmr },
+                ErrorModel::none(),
+                2,
+                &a,
+                &b,
+            )
+            .unwrap();
+            for i in 0..16 {
+                assert_eq!(r.values[i], a[i] * b[i], "{tmr:?} {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn vector_xor_with_ecc() {
+        let a: Vec<u64> = (0..16).collect();
+        let b: Vec<u64> = (16..32).collect();
+        let r = quick_exec(
+            FunctionKind::Xor(8),
+            ReliabilityPolicy { ecc_m: Some(16), tmr: TmrMode::Off },
+            ErrorModel::none(),
+            3,
+            &a,
+            &b,
+        )
+        .unwrap();
+        for i in 0..16 {
+            assert_eq!(r.values[i], a[i] ^ b[i]);
+        }
+        assert!(r.ecc_cycles > 0, "ECC path must account extension cycles");
+    }
+
+    #[test]
+    fn semi_parallel_policy_roundtrip() {
+        let a: Vec<u64> = (0..10).map(|i| i * 3).collect();
+        let b: Vec<u64> = (0..10).map(|i| i * 5).collect();
+        let r = quick_exec(
+            FunctionKind::Add(8),
+            ReliabilityPolicy { ecc_m: None, tmr: TmrMode::SemiParallel },
+            ErrorModel::none(),
+            4,
+            &a,
+            &b,
+        )
+        .unwrap();
+        for i in 0..10 {
+            assert_eq!(r.values[i], a[i] + b[i]);
+        }
+    }
+
+    #[test]
+    fn aging_corrupts_and_scrub_repairs() {
+        let cfg = MmpuConfig {
+            rows: 32,
+            cols: 32,
+            num_crossbars: 1,
+            policy: ReliabilityPolicy { ecc_m: Some(8), tmr: TmrMode::Off },
+            errors: ErrorModel { lambda_retention: 2e-5, ..ErrorModel::none() },
+            seed: 5,
+        };
+        let mut mmpu = Mmpu::new(cfg);
+        // Write a known pattern, encode.
+        for r in 0..32 {
+            for c in 0..32 {
+                let v = (r * c) % 3 == 0;
+                mmpu.crossbar_mut(0).state_mut().set(r, c, v);
+            }
+        }
+        let snapshot = mmpu.crossbar(0).state().clone();
+        // (encode happens inside exec; here drive the ECC directly)
+        mmpu.units[0].ecc.as_mut().unwrap().encode(&snapshot);
+        mmpu.age(0, 1000.0); // expect ~ 32*32*2e-2 ~ 20 flips? (2e-5*1000=2e-2/bit)
+        let flips = {
+            let now = mmpu.crossbar(0).state();
+            (0..32)
+                .flat_map(|r| (0..32).map(move |c| (r, c)))
+                .filter(|&(r, c)| now.get(r, c) != snapshot.get(r, c))
+                .count()
+        };
+        assert!(flips > 0, "aging must corrupt some bits");
+        let corrected = mmpu.scrub(0).unwrap();
+        assert!(corrected > 0);
+        // Every block with exactly one flip is now clean; with ~20 flips
+        // over 16 blocks some blocks may be uncorrectable — just require
+        // that scrubbing reduced the damage.
+        let remaining = {
+            let now = mmpu.crossbar(0).state();
+            (0..32)
+                .flat_map(|r| (0..32).map(move |c| (r, c)))
+                .filter(|&(r, c)| now.get(r, c) != snapshot.get(r, c))
+                .count()
+        };
+        assert!(remaining < flips, "scrub must repair: {remaining} vs {flips}");
+    }
+
+    #[test]
+    fn injected_gate_errors_reach_results() {
+        let a: Vec<u64> = vec![7; 64];
+        let b: Vec<u64> = vec![9; 64];
+        let r = quick_exec(
+            FunctionKind::Mul(8),
+            ReliabilityPolicy::none(),
+            ErrorModel::direct_only(1e-3),
+            6,
+            &a,
+            &b,
+        )
+        .unwrap();
+        let wrong = r.values.iter().filter(|&&v| v != 63).count();
+        assert!(wrong > 0, "p_gate=1e-3 over ~800 gates must corrupt something");
+    }
+}

@@ -1,0 +1,133 @@
+//! Function registry: the arithmetic functions the mMPU controller can
+//! schedule, each synthesized once and cached (paper §III-B: the
+//! controller converts CPU instructions into pre-mapped stateful-logic
+//! sequences).
+
+use crate::arith::adder::ripple_adder;
+use crate::arith::multiplier::{multpim_program, naive_mult_program};
+use crate::arith::{layout::ColAlloc, logic};
+use crate::isa::program::{Program, RowProgramBuilder};
+
+/// A function-level mMPU instruction.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum FunctionKind {
+    /// n-bit + n-bit -> (n+1)-bit vector addition.
+    Add(u32),
+    /// n x n -> 2n-bit vector multiplication (partition-parallel MultPIM).
+    Mul(u32),
+    /// n x n -> 2n-bit serial baseline multiplication.
+    MulNaive(u32),
+    /// n-bit bitwise XOR.
+    Xor(u32),
+}
+
+impl FunctionKind {
+    pub fn name(&self) -> String {
+        match self {
+            FunctionKind::Add(n) => format!("add{n}"),
+            FunctionKind::Mul(n) => format!("mul{n}"),
+            FunctionKind::MulNaive(n) => format!("mul_naive{n}"),
+            FunctionKind::Xor(n) => format!("xor{n}"),
+        }
+    }
+
+    pub fn operand_bits(&self) -> u32 {
+        match self {
+            FunctionKind::Add(n)
+            | FunctionKind::Mul(n)
+            | FunctionKind::MulNaive(n)
+            | FunctionKind::Xor(n) => *n,
+        }
+    }
+}
+
+/// A synthesized function: program + operand/result column map.
+#[derive(Clone, Debug)]
+pub struct FunctionSpec {
+    pub kind: FunctionKind,
+    pub prog: Program,
+    /// Columns of operand A bits (little-endian order).
+    pub a_cols: Vec<u32>,
+    /// Columns of operand B bits.
+    pub b_cols: Vec<u32>,
+    /// Result width in bits (result columns come from the TMR run, since
+    /// voting may retarget them).
+    pub out_bits: u32,
+}
+
+impl FunctionSpec {
+    pub fn build(kind: FunctionKind) -> Self {
+        match kind {
+            FunctionKind::Add(n) => {
+                let (prog, lay) = ripple_adder(n);
+                FunctionSpec {
+                    kind,
+                    prog,
+                    a_cols: lay.a.cols(),
+                    b_cols: lay.b.cols(),
+                    out_bits: n + 1,
+                }
+            }
+            FunctionKind::Mul(n) => {
+                let (prog, lay) = multpim_program(n);
+                FunctionSpec { kind, prog, a_cols: lay.a_cols, b_cols: lay.b_cols, out_bits: 2 * n }
+            }
+            FunctionKind::MulNaive(n) => {
+                let (prog, lay) = naive_mult_program(n);
+                FunctionSpec { kind, prog, a_cols: lay.a_cols, b_cols: lay.b_cols, out_bits: 2 * n }
+            }
+            FunctionKind::Xor(n) => {
+                let mut b = RowProgramBuilder::new(&format!("xor{n}"));
+                let a_cols: Vec<u32> = (0..n).collect();
+                let b_cols: Vec<u32> = (n..2 * n).collect();
+                let out: Vec<u32> = (2 * n..3 * n).collect();
+                let mut alloc = ColAlloc::new(3 * n, 3 * n + 8);
+                b.inputs(&a_cols);
+                b.inputs(&b_cols);
+                for i in 0..n as usize {
+                    logic::xor2(&mut b, &mut alloc, a_cols[i], b_cols[i], out[i]);
+                }
+                b.outputs(&out);
+                FunctionSpec { kind, prog: b.finish(), a_cols, b_cols, out_bits: n }
+            }
+        }
+    }
+
+    /// Decode the result value from output bit columns read LSB-first.
+    pub fn result_mask(&self) -> u64 {
+        if self.out_bits >= 64 {
+            u64::MAX
+        } else {
+            (1u64 << self.out_bits) - 1
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn build_all_kinds() {
+        for kind in [
+            FunctionKind::Add(8),
+            FunctionKind::Mul(8),
+            FunctionKind::MulNaive(8),
+            FunctionKind::Xor(8),
+        ] {
+            let f = FunctionSpec::build(kind);
+            assert_eq!(f.a_cols.len(), 8, "{kind:?}");
+            assert_eq!(f.b_cols.len(), 8);
+            assert!(f.prog.cycles() > 0);
+            assert!(!f.prog.output_cols.is_empty());
+            assert_eq!(f.prog.output_cols.len() as u32, f.out_bits);
+        }
+    }
+
+    #[test]
+    fn names_and_bits() {
+        assert_eq!(FunctionKind::Mul(32).name(), "mul32");
+        assert_eq!(FunctionKind::Mul(32).operand_bits(), 32);
+        assert_eq!(FunctionSpec::build(FunctionKind::Xor(4)).result_mask(), 0xF);
+    }
+}

@@ -1,0 +1,13 @@
+//! The memristive Memory Processing Unit (paper §III) — substrate S8.
+//!
+//! The controller owns a fleet of crossbars, converts function-level
+//! instructions (vector add / multiply / xor) into micro-op programs via
+//! `arith`, executes them under the configured reliability policy
+//! (ECC verify-before / update-after + TMR strategy), and marshals data
+//! in and out of the bit-plane layout.
+
+pub mod controller;
+pub mod functions;
+
+pub use controller::{Mmpu, MmpuConfig, ReliabilityPolicy, VectorResult};
+pub use functions::{FunctionKind, FunctionSpec};

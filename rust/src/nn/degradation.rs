@@ -1,0 +1,97 @@
+//! Weight degradation over time (paper §VI-B2, Fig. 5).
+//!
+//! Every batch, the accelerator accesses all W weights; each accessed bit
+//! drifts with probability `p_input`. Unprotected, a 32-bit weight
+//! corrupts in one batch with `1-(1-p_input)^32`; over T batches the
+//! expected number of corrupted weights is
+//! `W * (1-(1-p_w)^T)`.
+//!
+//! With the diagonal ECC, every access is verified and single errors per
+//! m x m block are corrected, so a weight survives unless >= 2 errors
+//! land in the same block within one batch (before the next scrub):
+//! `p_block = P[Bin(m^2, p_input) >= 2]`, and a failing block corrupts
+//! ~1.87 weights in expectation (two errors hit two distinct 32-bit
+//! weights w.p. (m^2-32)/(m^2-1)).
+
+use crate::util::stats::{one_minus_pow, prob_at_least_two};
+
+/// Model parameters for the Fig. 5 sweep.
+#[derive(Clone, Copy, Debug)]
+pub struct DegradationModel {
+    /// Total weights (paper: 62e6).
+    pub weights: f64,
+    /// Bits per weight (32).
+    pub bits: f64,
+    /// ECC block side m (16).
+    pub m: f64,
+}
+
+impl DegradationModel {
+    pub fn paper() -> Self {
+        Self { weights: 62e6, bits: 32.0, m: 16.0 }
+    }
+
+    /// Probability one weight corrupts during one batch, unprotected.
+    pub fn p_weight_batch(&self, p_input: f64) -> f64 {
+        one_minus_pow(p_input, self.bits)
+    }
+
+    /// Expected corrupted weights after T batches, no ECC (baseline).
+    pub fn expected_corrupted_baseline(&self, p_input: f64, t: f64) -> f64 {
+        self.weights * one_minus_pow(self.p_weight_batch(p_input), t)
+    }
+
+    /// Expected corrupted weights after T batches with diagonal ECC.
+    pub fn expected_corrupted_ecc(&self, p_input: f64, t: f64) -> f64 {
+        let block_bits = self.m * self.m;
+        let blocks = self.weights * self.bits / block_bits;
+        let p_block = prob_at_least_two(block_bits, p_input);
+        // expected weights hit by a (>=2)-error block ~ 1 + (m^2-32)/(m^2-1)
+        let w_per_block = 1.0 + (block_bits - self.bits) / (block_bits - 1.0);
+        blocks * one_minus_pow(p_block, t) * w_per_block
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_anchor_points() {
+        let m = DegradationModel::paper();
+        // p_input = 1e-8: "nearly all weights corrupted after 1e7 batches".
+        let base = m.expected_corrupted_baseline(1e-8, 1e7);
+        assert!(base / m.weights > 0.9, "baseline@1e-8: {base}");
+        // ECC @ p_input = 1e-9, T = 1e7: ~ a single corrupted weight.
+        let ecc = m.expected_corrupted_ecc(1e-9, 1e7);
+        assert!((0.1..30.0).contains(&ecc), "ecc@1e-9: {ecc}");
+        // And the baseline at the same point is ~7 orders worse.
+        let base9 = m.expected_corrupted_baseline(1e-9, 1e7);
+        assert!(base9 / ecc > 1e5, "gap {base9} vs {ecc}");
+    }
+
+    #[test]
+    fn monotone_in_t_and_p() {
+        let m = DegradationModel::paper();
+        assert!(
+            m.expected_corrupted_baseline(1e-9, 1e6)
+                < m.expected_corrupted_baseline(1e-9, 1e7)
+        );
+        assert!(
+            m.expected_corrupted_ecc(1e-10, 1e7) < m.expected_corrupted_ecc(1e-9, 1e7)
+        );
+    }
+
+    #[test]
+    fn ecc_never_worse() {
+        let m = DegradationModel::paper();
+        for &p in &[1e-11, 1e-10, 1e-9, 1e-8] {
+            for &t in &[1e3, 1e5, 1e7, 1e8] {
+                assert!(
+                    m.expected_corrupted_ecc(p, t) <= m.expected_corrupted_baseline(p, t) + 1e-9,
+                    "p={p} t={t}"
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,274 @@
+//! MicroNet: the executable end-to-end case study.
+//!
+//! Weights are trained once at build time (python/compile/train.py) and
+//! loaded from `artifacts/weights.bin`; inference can run three ways:
+//!
+//! 1. [`MicroNet::forward_f32`] — float reference;
+//! 2. [`MicroNet::forward_mmpu`] — every multiplication executed on the
+//!    crossbar simulator as a Q8.8 x Q8.8 -> Q16.16 MultPIM-style
+//!    in-memory multiplication under the configured reliability policy
+//!    (row-parallel batches of multiplications — the FloatPIM execution
+//!    style), with soft errors injected in the gate stream;
+//! 3. through the PJRT `micronet_fwd` artifact with value-level fault
+//!    masks (`runtime::Runtime::run_micronet`) for fast campaigns.
+
+use anyhow::{ensure, Context, Result};
+
+use crate::mmpu::{FunctionKind, FunctionSpec, Mmpu};
+use crate::runtime::artifacts::{read_f32_blob, Manifest};
+
+use super::quant::{acc_to_f32, Fixed};
+
+/// Loaded MicroNet parameters.
+#[derive(Clone, Debug)]
+pub struct MicroNet {
+    pub indim: usize,
+    pub hidden: usize,
+    pub classes: usize,
+    /// (indim x hidden) row-major.
+    pub w1: Vec<f32>,
+    pub b1: Vec<f32>,
+    /// (hidden x classes) row-major.
+    pub w2: Vec<f32>,
+    pub b2: Vec<f32>,
+}
+
+/// Held-out evaluation set exported at build time.
+#[derive(Clone, Debug)]
+pub struct EvalSet {
+    pub n: usize,
+    pub indim: usize,
+    /// (n x indim) row-major pixels.
+    pub x: Vec<f32>,
+    pub labels: Vec<usize>,
+}
+
+impl MicroNet {
+    /// Load from the artifacts manifest.
+    pub fn load(manifest: &Manifest) -> Result<Self> {
+        let rec = manifest.record("weights")?;
+        let (indim, hidden, classes) =
+            (rec.get_usize("indim")?, rec.get_usize("h")?, rec.get_usize("classes")?);
+        let blob = read_f32_blob(&manifest.file_path(rec)?)?;
+        let expect = indim * hidden + hidden + hidden * classes + classes;
+        ensure!(blob.len() == expect, "weights.bin length {} != {expect}", blob.len());
+        let mut off = 0;
+        let mut take = |n: usize| {
+            let v = blob[off..off + n].to_vec();
+            off += n;
+            v
+        };
+        Ok(Self {
+            indim,
+            hidden,
+            classes,
+            w1: take(indim * hidden),
+            b1: take(hidden),
+            w2: take(hidden * classes),
+            b2: take(classes),
+        })
+    }
+
+    pub fn load_default() -> Result<Self> {
+        Self::load(&Manifest::load_default()?)
+    }
+
+    /// Float reference forward pass -> logits (batch x classes).
+    pub fn forward_f32(&self, x: &[f32], batch: usize) -> Vec<f32> {
+        assert_eq!(x.len(), batch * self.indim);
+        let mut h = vec![0f32; batch * self.hidden];
+        for s in 0..batch {
+            for j in 0..self.hidden {
+                let mut acc = self.b1[j];
+                for i in 0..self.indim {
+                    acc += x[s * self.indim + i] * self.w1[i * self.hidden + j];
+                }
+                h[s * self.hidden + j] = acc.max(0.0);
+            }
+        }
+        let mut out = vec![0f32; batch * self.classes];
+        for s in 0..batch {
+            for j in 0..self.classes {
+                let mut acc = self.b2[j];
+                for i in 0..self.hidden {
+                    acc += h[s * self.hidden + i] * self.w2[i * self.classes + j];
+                }
+                out[s * self.classes + j] = acc;
+            }
+        }
+        out
+    }
+
+    /// Forward pass with EVERY multiplication executed in-memory on the
+    /// mMPU (Q8.8 fixed point). Within a layer all products are
+    /// independent, so they are batched row-parallel across the crossbar
+    /// — the FloatPIM high-throughput execution style. The mMPU's
+    /// reliability policy / error model applies to each multiplication.
+    pub fn forward_mmpu(&self, mmpu: &mut Mmpu, x: &[f32], batch: usize) -> Result<Vec<f32>> {
+        assert_eq!(x.len(), batch * self.indim);
+        let func = FunctionSpec::build(FunctionKind::Mul(16));
+
+        let xq: Vec<Fixed> = x.iter().map(|&v| Fixed::from_f32(v)).collect();
+        let w1q: Vec<Fixed> = self.w1.iter().map(|&v| Fixed::from_f32(v)).collect();
+        let w2q: Vec<Fixed> = self.w2.iter().map(|&v| Fixed::from_f32(v)).collect();
+
+        // Layer 1: products x[s,i] * w1[i,j], all independent.
+        let pairs1: Vec<(Fixed, Fixed)> = (0..batch)
+            .flat_map(|s| {
+                let xq = &xq;
+                let w1q = &w1q;
+                (0..self.hidden).flat_map(move |j| {
+                    (0..self.indim)
+                        .map(move |i| (xq[s * self.indim + i], w1q[i * self.hidden + j]))
+                })
+            })
+            .collect();
+        let prods1 = batched_products(mmpu, &func, &pairs1)?;
+        let mut h = vec![0f32; batch * self.hidden];
+        let mut it = prods1.iter();
+        for s in 0..batch {
+            for j in 0..self.hidden {
+                let mut acc: i64 = (self.b1[j] * 65536.0) as i64;
+                for _ in 0..self.indim {
+                    acc += *it.next().unwrap();
+                }
+                h[s * self.hidden + j] = acc_to_f32(acc).max(0.0);
+            }
+        }
+        let hq: Vec<Fixed> = h.iter().map(|&v| Fixed::from_f32(v)).collect();
+
+        // Layer 2.
+        let pairs2: Vec<(Fixed, Fixed)> = (0..batch)
+            .flat_map(|s| {
+                let hq = &hq;
+                let w2q = &w2q;
+                (0..self.classes).flat_map(move |j| {
+                    (0..self.hidden)
+                        .map(move |i| (hq[s * self.hidden + i], w2q[i * self.classes + j]))
+                })
+            })
+            .collect();
+        let prods2 = batched_products(mmpu, &func, &pairs2)?;
+        let mut out = vec![0f32; batch * self.classes];
+        let mut it = prods2.iter();
+        for s in 0..batch {
+            for j in 0..self.classes {
+                let mut acc: i64 = (self.b2[j] * 65536.0) as i64;
+                for _ in 0..self.hidden {
+                    acc += *it.next().unwrap();
+                }
+                out[s * self.classes + j] = acc_to_f32(acc);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn argmax(&self, logits: &[f32], batch: usize) -> Vec<usize> {
+        (0..batch)
+            .map(|s| {
+                let row = &logits[s * self.classes..(s + 1) * self.classes];
+                row.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(i, _)| i)
+                    .unwrap()
+            })
+            .collect()
+    }
+
+    pub fn accuracy(&self, logits: &[f32], labels: &[usize]) -> f64 {
+        let preds = self.argmax(logits, labels.len());
+        let hits = preds.iter().zip(labels).filter(|(p, l)| p == l).count();
+        hits as f64 / labels.len() as f64
+    }
+}
+
+impl EvalSet {
+    pub fn load(manifest: &Manifest) -> Result<Self> {
+        let rec = manifest.record("evalset")?;
+        let (n, indim) = (rec.get_usize("n")?, rec.get_usize("indim")?);
+        let blob = read_f32_blob(&manifest.file_path(rec)?)?;
+        ensure!(blob.len() == n * indim + n, "evalset.bin length mismatch");
+        let x = blob[..n * indim].to_vec();
+        let labels = blob[n * indim..].iter().map(|&v| v as usize).collect();
+        Ok(Self { n, indim, x, labels })
+    }
+
+    pub fn load_default() -> Result<Self> {
+        Self::load(&Manifest::load_default()?)
+    }
+
+    /// First `k` samples (for faster campaigns).
+    pub fn take(&self, k: usize) -> EvalSet {
+        let k = k.min(self.n);
+        EvalSet {
+            n: k,
+            indim: self.indim,
+            x: self.x[..k * self.indim].to_vec(),
+            labels: self.labels[..k].to_vec(),
+        }
+    }
+}
+
+/// Run a list of fixed-point products through the mMPU in row-parallel
+/// chunks (one crossbar execution per `rows` products). The crossbar
+/// multiplies Q8.8 magnitudes to Q16.16; signs are resolved here
+/// (sign-magnitude, FloatPIM style).
+pub fn batched_products(
+    mmpu: &mut Mmpu,
+    func: &FunctionSpec,
+    pairs: &[(Fixed, Fixed)],
+) -> Result<Vec<i64>> {
+    let capacity = match mmpu.config().policy.tmr {
+        crate::tmr::TmrMode::SemiParallel => (mmpu.rows() - 1) / 3,
+        _ => mmpu.rows(),
+    };
+    let mut out = Vec::with_capacity(pairs.len());
+    for chunk in pairs.chunks(capacity) {
+        let a: Vec<u64> = chunk.iter().map(|(x, _)| x.mag as u64).collect();
+        let b: Vec<u64> = chunk.iter().map(|(_, y)| y.mag as u64).collect();
+        let r = mmpu.exec_vector(0, func, &a, &b).context("mmpu multiplication batch")?;
+        for (i, &v) in r.values.iter().enumerate() {
+            let neg = chunk[i].0.neg != chunk[i].1.neg;
+            out.push(if neg { -(v as i64) } else { v as i64 });
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_and_accuracy() {
+        let net = MicroNet {
+            indim: 2,
+            hidden: 2,
+            classes: 3,
+            w1: vec![0.0; 4],
+            b1: vec![0.0; 2],
+            w2: vec![0.0; 6],
+            b2: vec![0.0; 3],
+        };
+        let logits = vec![0.1, 0.9, 0.0, /* s1 */ 2.0, -1.0, 0.5];
+        assert_eq!(net.argmax(&logits, 2), vec![1, 0]);
+        assert_eq!(net.accuracy(&logits, &[1, 2]), 0.5);
+    }
+
+    #[test]
+    fn forward_f32_linear_sanity() {
+        // Identity-ish network: one input passes through.
+        let net = MicroNet {
+            indim: 1,
+            hidden: 1,
+            classes: 1,
+            w1: vec![2.0],
+            b1: vec![0.0],
+            w2: vec![3.0],
+            b2: vec![1.0],
+        };
+        let y = net.forward_f32(&[4.0], 1);
+        assert_eq!(y, vec![25.0]); // relu(4*2)*3+1
+    }
+}

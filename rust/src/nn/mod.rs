@@ -1,0 +1,21 @@
+//! Neural-network case study (paper §VI) — substrate S10/S11.
+//!
+//! Two tiers, mirroring the paper:
+//! * **Analytical AlexNet/FloatPIM** (`alexnet`, `degradation`): the
+//!   paper's constants (M = 612e6 multiplications/sample, W = 62M
+//!   weights, p_mask = 0.03 %, inherent top-1 error 27 %) and its
+//!   extrapolation formulas — these regenerate Fig. 4 (bottom) and Fig. 5.
+//! * **Executable MicroNet** (`micronet`, `quant`): the small MLP trained
+//!   at build time (python/compile/train.py), whose inference actually
+//!   runs through the mMPU simulator multiplication by multiplication —
+//!   validating the error-propagation mechanism end-to-end on real
+//!   hardware-path code (examples/nn_inference.rs).
+
+pub mod alexnet;
+pub mod degradation;
+pub mod micronet;
+pub mod quant;
+
+pub use alexnet::AlexNetModel;
+pub use micronet::{EvalSet, MicroNet};
+pub use quant::Fixed;

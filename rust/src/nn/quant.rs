@@ -1,0 +1,94 @@
+//! Fixed-point arithmetic (Q8.8 in 16-bit words) for running MicroNet on
+//! the mMPU's unsigned integer multiplier. Signs are handled
+//! sign-magnitude style by the layer code (the crossbar multiplies
+//! magnitudes; FloatPIM-style accelerators handle exponent/sign in
+//! separate bit fields the same way).
+
+/// Q8.8 fixed-point value held as sign + 16-bit magnitude.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Fixed {
+    pub neg: bool,
+    /// Magnitude in Q8.8 (0..=65535, i.e. |x| < 256.0).
+    pub mag: u16,
+}
+
+pub const FRAC_BITS: u32 = 8;
+pub const SCALE: f32 = 256.0;
+
+impl Fixed {
+    pub fn from_f32(x: f32) -> Self {
+        let neg = x < 0.0;
+        let mag = (x.abs() * SCALE).round().min(u16::MAX as f32) as u16;
+        Self { neg, mag }
+    }
+
+    pub fn to_f32(self) -> f32 {
+        let v = self.mag as f32 / SCALE;
+        if self.neg {
+            -v
+        } else {
+            v
+        }
+    }
+
+    pub fn zero() -> Self {
+        Self { neg: false, mag: 0 }
+    }
+
+    /// The signed Q16.16 product of two Q8.8 magnitudes as computed by a
+    /// 16x16 -> 32-bit unsigned in-memory multiplication.
+    pub fn product_i64(self, other: Fixed) -> i64 {
+        let p = (self.mag as i64) * (other.mag as i64); // Q16.16
+        if self.neg != other.neg {
+            -p
+        } else {
+            p
+        }
+    }
+}
+
+/// Accumulate Q16.16 products and convert back to f32.
+pub fn acc_to_f32(acc: i64) -> f32 {
+    acc as f32 / (SCALE * SCALE)
+}
+
+/// Quantize an f32 slice.
+pub fn quantize(xs: &[f32]) -> Vec<Fixed> {
+    xs.iter().map(|&x| Fixed::from_f32(x)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::prop::Cases;
+
+    #[test]
+    fn roundtrip_error_bounded() {
+        Cases::new(200).run(|g| {
+            let x = g.f64_in(-100.0, 100.0) as f32;
+            let q = Fixed::from_f32(x);
+            assert!((q.to_f32() - x).abs() <= 0.5 / SCALE + 1e-6, "{x}");
+        });
+    }
+
+    #[test]
+    fn product_matches_float() {
+        Cases::new(200).run(|g| {
+            let a = g.f64_in(-10.0, 10.0) as f32;
+            let b = g.f64_in(-10.0, 10.0) as f32;
+            let qa = Fixed::from_f32(a);
+            let qb = Fixed::from_f32(b);
+            let got = acc_to_f32(qa.product_i64(qb));
+            assert!((got - a * b).abs() < 0.1, "{a}*{b} = {got}");
+        });
+    }
+
+    #[test]
+    fn sign_handling() {
+        let a = Fixed::from_f32(-2.0);
+        let b = Fixed::from_f32(3.0);
+        assert_eq!(acc_to_f32(a.product_i64(b)), -6.0);
+        assert_eq!(acc_to_f32(a.product_i64(a)), 4.0);
+        assert_eq!(Fixed::zero().to_f32(), 0.0);
+    }
+}

@@ -1,0 +1,78 @@
+//! The XLA-backed crossbar backend: runs whole micro-op programs on the
+//! AOT gate-scan executor in ONE PJRT call (the Layer-2 `lax.scan` over
+//! the Layer-1 Pallas gate kernel).
+//!
+//! Used as a cross-validation oracle for the native simulator and as the
+//! demonstration that the three-layer architecture composes: the same
+//! `EncodedProgram` bytes drive both backends to identical final states.
+
+use anyhow::{ensure, Result};
+
+use crate::errs::Injector;
+use crate::isa::encode::{encode, EncodedProgram};
+use crate::isa::program::Program;
+use crate::util::bitmat::BitMatrix;
+
+use super::executor::Runtime;
+
+/// A crossbar whose program execution happens on the PJRT executor.
+pub struct XlaCrossbar {
+    state: BitMatrix,
+}
+
+impl XlaCrossbar {
+    pub fn new(rows: usize, cols: usize) -> Self {
+        Self { state: BitMatrix::zeros(rows, cols) }
+    }
+
+    pub fn state(&self) -> &BitMatrix {
+        &self.state
+    }
+
+    pub fn state_mut(&mut self) -> &mut BitMatrix {
+        &mut self.state
+    }
+
+    /// Encode `prog` for the smallest fitting artifact.
+    pub fn encode_for(&self, rt: &Runtime, prog: &Program) -> Result<EncodedProgram> {
+        let flat_len = prog.flatten().len();
+        let shape = rt.gate_scan_shape(self.state.rows(), self.state.cols(), flat_len)?;
+        encode(prog, shape.s)
+    }
+
+    /// Run a program cleanly (no injected errors).
+    pub fn run_program(&mut self, rt: &mut Runtime, prog: &Program) -> Result<()> {
+        let enc = self.encode_for(rt, prog)?;
+        let masks = vec![0f32; enc.steps * self.state.rows()];
+        self.state = rt.run_gate_scan(&self.state, &enc, &masks)?;
+        Ok(())
+    }
+
+    /// Run with direct soft errors sampled from `inj` (same model as the
+    /// native path: p_gate on logic gates, p_write on init writes).
+    pub fn run_program_with_errors(
+        &mut self,
+        rt: &mut Runtime,
+        prog: &Program,
+        inj: &mut Injector,
+    ) -> Result<()> {
+        let enc = self.encode_for(rt, prog)?;
+        let masks = Runtime::sample_err_masks(&enc, self.state.rows(), inj);
+        self.state = rt.run_gate_scan(&self.state, &enc, &masks)?;
+        Ok(())
+    }
+
+    /// Run with explicit (steps x rows) masks — used by the
+    /// cross-validation tests to drive both backends identically.
+    pub fn run_program_with_masks(
+        &mut self,
+        rt: &mut Runtime,
+        prog: &Program,
+        masks: &[f32],
+    ) -> Result<()> {
+        let enc = self.encode_for(rt, prog)?;
+        ensure!(masks.len() == enc.steps * self.state.rows(), "mask shape");
+        self.state = rt.run_gate_scan(&self.state, &enc, masks)?;
+        Ok(())
+    }
+}

@@ -1,0 +1,141 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and
+//! the rust runtime. Plain `key=value` lines — no serde needed.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+/// One manifest entry (an HLO artifact or a data blob).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Entry {
+    pub record: String,
+    pub fields: BTreeMap<String, String>,
+}
+
+impl Entry {
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.fields.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, key: &str) -> Result<usize> {
+        self.get(key)
+            .with_context(|| format!("missing field {key}"))?
+            .parse()
+            .with_context(|| format!("bad usize field {key}"))
+    }
+}
+
+/// Parsed manifest plus the directory it lives in.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub entries: Vec<Entry>,
+}
+
+impl Manifest {
+    /// Locate the artifacts directory: `$REMUS_ARTIFACTS` or `artifacts/`
+    /// relative to the current directory (the repo root under
+    /// cargo test/bench/run).
+    pub fn default_dir() -> PathBuf {
+        std::env::var("REMUS_ARTIFACTS").map(PathBuf::from).unwrap_or_else(|_| "artifacts".into())
+    }
+
+    pub fn load_default() -> Result<Self> {
+        Self::load(&Self::default_dir())
+    }
+
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?}; run `make artifacts` first"))?;
+        Self::parse(dir, &text)
+    }
+
+    pub fn parse(dir: &Path, text: &str) -> Result<Self> {
+        let mut entries = vec![];
+        for (lno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut parts = line.split_whitespace();
+            let record = parts.next().unwrap().to_string();
+            let mut fields = BTreeMap::new();
+            for kv in parts {
+                let Some((k, v)) = kv.split_once('=') else {
+                    bail!("manifest line {}: bad field {kv:?}", lno + 1);
+                };
+                fields.insert(k.to_string(), v.to_string());
+            }
+            entries.push(Entry { record, fields });
+        }
+        Ok(Self { dir: dir.to_path_buf(), entries })
+    }
+
+    /// All artifacts of a given kind.
+    pub fn artifacts_of_kind<'a>(&'a self, kind: &'a str) -> impl Iterator<Item = &'a Entry> {
+        self.entries
+            .iter()
+            .filter(move |e| e.record == "artifact" && e.get("kind") == Some(kind))
+    }
+
+    /// A unique non-artifact record (weights, evalset).
+    pub fn record(&self, name: &str) -> Result<&Entry> {
+        self.entries
+            .iter()
+            .find(|e| e.record == name)
+            .with_context(|| format!("manifest has no {name:?} record"))
+    }
+
+    pub fn file_path(&self, entry: &Entry) -> Result<PathBuf> {
+        Ok(self.dir.join(entry.get("file").context("entry has no file field")?))
+    }
+}
+
+/// Read a little-endian f32 binary blob.
+pub fn read_f32_blob(path: &Path) -> Result<Vec<f32>> {
+    let bytes = std::fs::read(path).with_context(|| format!("reading {path:?}"))?;
+    anyhow::ensure!(bytes.len() % 4 == 0, "blob not a multiple of 4 bytes");
+    Ok(bytes.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+artifact name=gate_scan_r64_c64_s64 file=gate_scan_r64_c64_s64.hlo.txt kind=gate_scan r=64 c=64 s=64
+artifact name=vote3_r64_c64 file=vote3_r64_c64.hlo.txt kind=vote3 r=64 c=64
+
+# comment
+weights file=weights.bin h=32 indim=64 classes=10 train_acc=1.0000
+";
+
+    #[test]
+    fn parse_sample() {
+        let m = Manifest::parse(Path::new("/tmp/x"), SAMPLE).unwrap();
+        assert_eq!(m.entries.len(), 3);
+        let gs: Vec<_> = m.artifacts_of_kind("gate_scan").collect();
+        assert_eq!(gs.len(), 1);
+        assert_eq!(gs[0].get_usize("s").unwrap(), 64);
+        let w = m.record("weights").unwrap();
+        assert_eq!(w.get_usize("h").unwrap(), 32);
+        assert!(m.record("nonexistent").is_err());
+    }
+
+    #[test]
+    fn rejects_bad_fields() {
+        assert!(Manifest::parse(Path::new("/tmp"), "artifact garbage").is_err());
+    }
+
+    #[test]
+    fn real_manifest_loads_if_built() {
+        // Soft dependency: validate the real artifacts when present.
+        if let Ok(m) = Manifest::load_default() {
+            assert!(m.artifacts_of_kind("gate_scan").count() >= 1);
+            assert!(m.artifacts_of_kind("micronet").count() >= 1);
+            assert!(m.record("weights").is_ok());
+        }
+    }
+}

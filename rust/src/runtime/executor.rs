@@ -1,0 +1,250 @@
+//! PJRT execution of the AOT-lowered JAX/Pallas artifacts.
+//!
+//! One `Runtime` holds the PJRT CPU client plus lazily-compiled
+//! executables (HLO text -> XlaComputation -> PjRtLoadedExecutable, the
+//! /opt/xla-example/load_hlo pattern). Python never runs here: the HLO
+//! text was produced once by `make artifacts`.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::errs::Injector;
+use crate::isa::encode::EncodedProgram;
+use crate::isa::microop::Gate;
+use crate::util::bitmat::BitMatrix;
+
+use super::artifacts::Manifest;
+
+/// Key for the executable cache.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+struct ExeKey(String);
+
+/// The PJRT runtime: client + compiled executables + manifest.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: HashMap<ExeKey, xla::PjRtLoadedExecutable>,
+}
+
+/// Shape of a gate-scan executor artifact.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct GateScanShape {
+    pub r: usize,
+    pub c: usize,
+    pub s: usize,
+}
+
+impl Runtime {
+    /// Create against the default artifacts directory.
+    pub fn new() -> Result<Self> {
+        Self::with_manifest(Manifest::load_default()?)
+    }
+
+    pub fn with_manifest(manifest: Manifest) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self { client, manifest, cache: HashMap::new() })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn compile(&mut self, name: &str, file: &std::path::Path) -> Result<()> {
+        let key = ExeKey(name.to_string());
+        if self.cache.contains_key(&key) {
+            return Ok(());
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            file.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {file:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).with_context(|| format!("compiling {name}"))?;
+        self.cache.insert(key, exe);
+        Ok(())
+    }
+
+    fn exe(&self, name: &str) -> &xla::PjRtLoadedExecutable {
+        &self.cache[&ExeKey(name.to_string())]
+    }
+
+    /// Pick the smallest gate-scan artifact that fits (r, c, >= steps).
+    pub fn gate_scan_shape(&self, r: usize, c: usize, min_steps: usize) -> Result<GateScanShape> {
+        let mut best: Option<GateScanShape> = None;
+        for e in self.manifest.artifacts_of_kind("gate_scan") {
+            let (ar, ac, as_) = (e.get_usize("r")?, e.get_usize("c")?, e.get_usize("s")?);
+            if ar == r && ac == c && as_ >= min_steps && best.map(|b| as_ < b.s).unwrap_or(true) {
+                best = Some(GateScanShape { r: ar, c: ac, s: as_ });
+            }
+        }
+        best.with_context(|| {
+            format!("no gate_scan artifact for r={r} c={c} steps>={min_steps}; see manifest")
+        })
+    }
+
+    fn artifact_entry(&self, kind: &str, matcher: impl Fn(&super::artifacts::Entry) -> bool) -> Result<(String, std::path::PathBuf)> {
+        for e in self.manifest.artifacts_of_kind(kind) {
+            if matcher(e) {
+                let name = e.get("name").context("artifact without name")?.to_string();
+                let path = self.manifest.file_path(e)?;
+                return Ok((name, path));
+            }
+        }
+        bail!("no matching {kind} artifact")
+    }
+
+    /// Execute an encoded micro-op program on a crossbar state through
+    /// the AOT gate-scan executor. `err_masks` is (steps x rows) f32
+    /// {0,1} — per-step output flip masks (the direct soft-error model);
+    /// pass an all-zero slice for a clean run.
+    pub fn run_gate_scan(
+        &mut self,
+        state: &BitMatrix,
+        enc: &EncodedProgram,
+        err_masks: &[f32],
+    ) -> Result<BitMatrix> {
+        let (r, c) = (state.rows(), state.cols());
+        let s = enc.steps;
+        ensure!(err_masks.len() == s * r, "err mask shape mismatch");
+        let shape = self.gate_scan_shape(r, c, s)?;
+        ensure!(shape.s == s, "encoded program capacity {s} != artifact {}", shape.s);
+        let (name, path) = self.artifact_entry("gate_scan", |e| {
+            e.get_usize("r").ok() == Some(r)
+                && e.get_usize("c").ok() == Some(c)
+                && e.get_usize("s").ok() == Some(s)
+        })?;
+        self.compile(&name, &path)?;
+
+        let state_lit =
+            xla::Literal::vec1(&state.to_f32_row_major()).reshape(&[r as i64, c as i64])?;
+        let ops_lit = xla::Literal::vec1(&enc.ops).reshape(&[s as i64])?;
+        let idx_lit = xla::Literal::vec1(&enc.idxs).reshape(&[s as i64, 4])?;
+        let err_lit = xla::Literal::vec1(err_masks).reshape(&[s as i64, r as i64])?;
+
+        let result = self
+            .exe(&name)
+            .execute::<xla::Literal>(&[state_lit, ops_lit, idx_lit, err_lit])?[0][0]
+            .to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        let values = out.to_vec::<f32>()?;
+        ensure!(values.len() == r * c, "result shape mismatch");
+        Ok(BitMatrix::from_f32_row_major(r, c, &values))
+    }
+
+    /// Build the (steps x rows) error-mask matrix for an encoded program
+    /// from an injector — logic gates flip with p_gate, init writes with
+    /// p_write, NOP never (mirrors the native simulator's model).
+    pub fn sample_err_masks(enc: &EncodedProgram, rows: usize, inj: &mut Injector) -> Vec<f32> {
+        let mut masks = vec![0f32; enc.steps * rows];
+        for step in 0..enc.real_steps {
+            let gate = Gate::from_opcode(enc.ops[step] as u8).expect("valid opcode");
+            let base = step * rows;
+            if gate.is_logic() {
+                inj.gate_flips(rows, |i| masks[base + i] = 1.0);
+            } else if gate.is_init() {
+                inj.write_fails(rows, |i| masks[base + i] = 1.0);
+            }
+        }
+        masks
+    }
+
+    /// Per-bit TMR vote of three (r x c) planes with faulty-gate masks.
+    pub fn run_vote3(
+        &mut self,
+        a: &BitMatrix,
+        b: &BitMatrix,
+        c: &BitMatrix,
+        err_min: &[f32],
+        err_not: &[f32],
+    ) -> Result<BitMatrix> {
+        let (r, cc) = (a.rows(), a.cols());
+        let (name, path) = self.artifact_entry("vote3", |e| {
+            e.get_usize("r").ok() == Some(r) && e.get_usize("c").ok() == Some(cc)
+        })?;
+        self.compile(&name, &path)?;
+        let lit = |m: &BitMatrix| -> Result<xla::Literal> {
+            Ok(xla::Literal::vec1(&m.to_f32_row_major()).reshape(&[r as i64, cc as i64])?)
+        };
+        let err = |e: &[f32]| -> Result<xla::Literal> {
+            ensure!(e.len() == r * cc, "err shape");
+            Ok(xla::Literal::vec1(e).reshape(&[r as i64, cc as i64])?)
+        };
+        let result = self
+            .exe(&name)
+            .execute::<xla::Literal>(&[lit(a)?, lit(b)?, lit(c)?, err(err_min)?, err(err_not)?])?
+            [0][0]
+            .to_literal_sync()?;
+        let values = result.to_tuple1()?.to_vec::<f32>()?;
+        Ok(BitMatrix::from_f32_row_major(r, cc, &values))
+    }
+
+    /// Diagonal-parity extraction for a batch of m x m blocks:
+    /// input (bsz x m x m) {0,1} floats, output (bsz x 2m).
+    pub fn run_diag_parity(&mut self, blocks: &[f32], bsz: usize, m: usize) -> Result<Vec<f32>> {
+        ensure!(blocks.len() == bsz * m * m, "block shape");
+        let (name, path) = self.artifact_entry("diag_parity", |e| {
+            e.get_usize("b").ok() == Some(bsz) && e.get_usize("m").ok() == Some(m)
+        })?;
+        self.compile(&name, &path)?;
+        let lit = xla::Literal::vec1(blocks).reshape(&[bsz as i64, m as i64, m as i64])?;
+        let result = self.exe(&name).execute::<xla::Literal>(&[lit])?[0][0].to_literal_sync()?;
+        Ok(result.to_tuple1()?.to_vec::<f32>()?)
+    }
+
+    /// MicroNet forward pass with per-layer weight fault masks.
+    /// Shapes follow the manifest (b, indim, h, classes).
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_micronet(
+        &mut self,
+        batch: usize,
+        x: &[f32],
+        w1: &[f32],
+        b1: &[f32],
+        w2: &[f32],
+        b2: &[f32],
+        m1: &[f32],
+        a1: &[f32],
+        m2: &[f32],
+        a2: &[f32],
+    ) -> Result<Vec<f32>> {
+        let (name, path) =
+            self.artifact_entry("micronet", |e| e.get_usize("b").ok() == Some(batch))?;
+        let entry = self
+            .manifest
+            .artifacts_of_kind("micronet")
+            .find(|e| e.get_usize("b").ok() == Some(batch))
+            .unwrap()
+            .clone();
+        let (ind, h, classes) = (
+            entry.get_usize("indim")?,
+            entry.get_usize("h")?,
+            entry.get_usize("classes")?,
+        );
+        ensure!(x.len() == batch * ind, "x shape");
+        ensure!(w1.len() == ind * h && m1.len() == ind * h && a1.len() == ind * h, "w1 shape");
+        ensure!(w2.len() == h * classes && m2.len() == h * classes && a2.len() == h * classes);
+        ensure!(b1.len() == h && b2.len() == classes);
+        self.compile(&name, &path)?;
+        let l = |v: &[f32], dims: &[i64]| -> Result<xla::Literal> {
+            Ok(xla::Literal::vec1(v).reshape(dims)?)
+        };
+        let args = [
+            l(x, &[batch as i64, ind as i64])?,
+            l(w1, &[ind as i64, h as i64])?,
+            l(b1, &[h as i64])?,
+            l(w2, &[h as i64, classes as i64])?,
+            l(b2, &[classes as i64])?,
+            l(m1, &[ind as i64, h as i64])?,
+            l(a1, &[ind as i64, h as i64])?,
+            l(m2, &[h as i64, classes as i64])?,
+            l(a2, &[h as i64, classes as i64])?,
+        ];
+        let result = self.exe(&name).execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        Ok(result.to_tuple1()?.to_vec::<f32>()?)
+    }
+}

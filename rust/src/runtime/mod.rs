@@ -1,0 +1,15 @@
+//! PJRT runtime (Layer 3 <-> Layer 1/2 bridge): loads the HLO-text
+//! artifacts produced once by `make artifacts` and executes them through
+//! the `xla` crate's PJRT CPU client. Python is never on this path.
+//!
+//! `accel::XlaCrossbar` wraps the gate-scan executor as an alternative
+//! crossbar backend, cross-validated against the native bit-packed
+//! simulator in `rust/tests/integration_runtime.rs`.
+
+pub mod accel;
+pub mod artifacts;
+pub mod executor;
+
+pub use accel::XlaCrossbar;
+pub use artifacts::{read_f32_blob, Manifest};
+pub use executor::{GateScanShape, Runtime};

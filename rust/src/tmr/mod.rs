@@ -1,0 +1,18 @@
+//! High-throughput in-memory TMR (paper §V, Fig. 3).
+//!
+//! Three execution strategies for a single-row function repeated across
+//! all crossbar rows, each voting **per-bit** with the in-memory
+//! Minority3 gate (itself fallible):
+//!
+//! * [`serial`]   — run the function three times, inputs and
+//!   intermediates shared, outputs in three copies: ~3x latency, ~1x area;
+//! * [`parallel`] — three partition-isolated copies in the same cycles:
+//!   ~1x latency, 3x area;
+//! * [`semi-parallel`] — three copies across *rows* (no partitions):
+//!   ~1x latency, 1x area, 1/3 throughput, voting via in-column gates.
+
+pub mod engine;
+pub mod voting;
+
+pub use engine::{TmrEngine, TmrMode, TmrRun};
+pub use voting::{per_bit_vote_program, per_element_vote, VoteKind};

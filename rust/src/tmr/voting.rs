@@ -1,0 +1,150 @@
+//! Voting between TMR copies (paper §V).
+//!
+//! Per-bit voting: for every output bit position, `maj(o1, o2, o3)` is
+//! realized as Minority3 followed by NOT — two stateful gates, repeated
+//! with full row parallelism, so voting any number of output words costs
+//! 2 gates per bit regardless of row count. Per-bit voting strictly
+//! dominates per-element voting: they differ only where per-element
+//! voting is undefined (no two copies agree on the whole element), where
+//! per-bit still recovers every bit on which some two copies agree — the
+//! paper's 1000/0100/0010 -> 0000 example.
+
+use crate::isa::program::{Program, RowProgramBuilder};
+use crate::xbar::gate::Gate;
+
+/// Voting flavor (for the comparison study E10).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum VoteKind {
+    /// In-memory Minority3 + NOT per bit (fallible gates).
+    PerBit,
+    /// Whole-element agreement (reference model, not in-memory).
+    PerElement,
+    /// Idealized error-free per-bit majority (the dashed line of Fig. 4).
+    IdealPerBit,
+}
+
+/// Synthesize the per-bit voting program: for each bit position k,
+/// `out[k] = maj(c1[k], c2[k], c3[k])` via Min3 + NOT (2 logic gates +
+/// 2 init writes per bit with auto-init).
+///
+/// `c1/c2/c3/out` are equal-length column lists (the three output copies
+/// and the final destination); `scratch` is one work column.
+pub fn per_bit_vote_program(
+    c1: &[u32],
+    c2: &[u32],
+    c3: &[u32],
+    out: &[u32],
+    scratch: u32,
+) -> Program {
+    assert!(c1.len() == c2.len() && c2.len() == c3.len() && c3.len() == out.len());
+    let mut b = RowProgramBuilder::new("vote3");
+    b.inputs(c1);
+    b.inputs(c2);
+    b.inputs(c3);
+    for k in 0..c1.len() {
+        b.gate(Gate::Min3, &[c1[k], c2[k], c3[k]], scratch);
+        b.gate(Gate::Not, &[scratch], out[k]);
+    }
+    b.outputs(out);
+    b.finish()
+}
+
+/// Reference per-element vote: the value on which at least two copies
+/// agree entirely, or `None` when all three disagree (undefined — the
+/// case where per-bit voting still recovers agreeing bits).
+pub fn per_element_vote(a: u64, b: u64, c: u64) -> Option<u64> {
+    if a == b || a == c {
+        Some(a)
+    } else if b == c {
+        Some(b)
+    } else {
+        None
+    }
+}
+
+/// Reference per-bit majority of three words.
+pub fn per_bit_vote_word(a: u64, b: u64, c: u64) -> u64 {
+    (a & b) | (a & c) | (b & c)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::prop::Cases;
+    use crate::xbar::crossbar::Crossbar;
+
+    #[test]
+    fn paper_example_1000_0100_0010() {
+        // Per-element: undefined. Per-bit: 0000 (correct when the true
+        // value is 0000 and each copy took one distinct bit flip).
+        assert_eq!(per_element_vote(0b1000, 0b0100, 0b0010), None);
+        assert_eq!(per_bit_vote_word(0b1000, 0b0100, 0b0010), 0);
+    }
+
+    #[test]
+    fn per_bit_dominates_per_element() {
+        // Whenever per-element voting is defined, per-bit agrees with it;
+        // per-bit additionally resolves the undefined cases.
+        Cases::new(500).run(|g| {
+            let a = g.u64() & 0xFF;
+            let b = g.u64() & 0xFF;
+            let c = g.u64() & 0xFF;
+            if let Some(e) = per_element_vote(a, b, c) {
+                assert_eq!(per_bit_vote_word(a, b, c), e);
+            }
+        });
+    }
+
+    #[test]
+    fn vote_program_computes_majority_row_parallel() {
+        // 8 output bits x 3 copies, across 32 rows at once.
+        let w = 8usize;
+        let c1: Vec<u32> = (0..w as u32).collect();
+        let c2: Vec<u32> = (w as u32..2 * w as u32).collect();
+        let c3: Vec<u32> = (2 * w as u32..3 * w as u32).collect();
+        let out: Vec<u32> = (3 * w as u32..4 * w as u32).collect();
+        let prog = per_bit_vote_program(&c1, &c2, &c3, &out, 4 * w as u32);
+        let mut x = Crossbar::new(32, 4 * w + 1);
+        let mut rng = crate::util::rng::Pcg64::new(5, 0);
+        let mut words = vec![];
+        for r in 0..32 {
+            let (a, b, c) = (rng.next_u64() & 0xFF, rng.next_u64() & 0xFF, rng.next_u64() & 0xFF);
+            words.push((a, b, c));
+            for k in 0..w {
+                x.state_mut().set(r, c1[k] as usize, (a >> k) & 1 == 1);
+                x.state_mut().set(r, c2[k] as usize, (b >> k) & 1 == 1);
+                x.state_mut().set(r, c3[k] as usize, (c >> k) & 1 == 1);
+            }
+        }
+        x.run_program(&prog, None).unwrap();
+        for (r, &(a, b, c)) in words.iter().enumerate() {
+            let want = per_bit_vote_word(a, b, c);
+            for k in 0..w {
+                assert_eq!(x.get(r, out[k] as usize), (want >> k) & 1 == 1, "row {r} bit {k}");
+            }
+        }
+        // Cost: 2 logic gates per bit, independent of the 32 rows.
+        assert_eq!(prog.logic_gates_per_lane(), 2 * w);
+    }
+
+    #[test]
+    fn vote_corrects_one_faulty_copy() {
+        // Fig 3(b): each copy wrong in a different row/bit -> vote fixes.
+        let c1 = [0u32];
+        let c2 = [1u32];
+        let c3 = [2u32];
+        let out = [3u32];
+        let prog = per_bit_vote_program(&c1, &c2, &c3, &out, 4);
+        let mut x = Crossbar::new(3, 5);
+        // truth = 1; one copy flipped per row (different copy each row)
+        for r in 0..3 {
+            for c in 0..3 {
+                x.state_mut().set(r, c, c != r);
+            }
+        }
+        x.run_program(&prog, None).unwrap();
+        for r in 0..3 {
+            assert!(x.get(r, 3), "row {r} majority must be 1");
+        }
+    }
+}

@@ -1,0 +1,434 @@
+//! Bit-packed matrices — the storage substrate of the crossbar simulator.
+//!
+//! `BitMatrix` stores the crossbar state **column-major**: each column is a
+//! contiguous run of `u64` words over the rows. This layout makes the
+//! dominant operation — an in-row stateful gate repeated across *all* rows
+//! (Fig. 1a of the paper) — a handful of word-wide bitwise ops:
+//! a 1024-row NOR touches 3 columns x 16 words. In-column gates (Fig. 1b)
+//! operate on rows; they go through `row_word`-style gather or a cached
+//! transpose (see `xbar::Crossbar`), which the perf pass (§Perf) covers.
+
+/// A fixed-length packed bit vector.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BitVec {
+    words: Vec<u64>,
+    len: usize,
+}
+
+#[inline]
+pub fn words_for(bits: usize) -> usize {
+    bits.div_ceil(64)
+}
+
+/// Mask selecting the valid bits of the last word of a `len`-bit vector.
+#[inline]
+pub fn tail_mask(len: usize) -> u64 {
+    let r = len % 64;
+    if r == 0 {
+        u64::MAX
+    } else {
+        (1u64 << r) - 1
+    }
+}
+
+impl BitVec {
+    pub fn zeros(len: usize) -> Self {
+        Self { words: vec![0; words_for(len)], len }
+    }
+
+    pub fn ones(len: usize) -> Self {
+        let mut v = Self { words: vec![u64::MAX; words_for(len)], len };
+        v.mask_tail();
+        v
+    }
+
+    pub fn from_fn(len: usize, mut f: impl FnMut(usize) -> bool) -> Self {
+        let mut v = Self::zeros(len);
+        for i in 0..len {
+            if f(i) {
+                v.set(i, true);
+            }
+        }
+        v
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize) -> bool {
+        debug_assert!(i < self.len);
+        (self.words[i / 64] >> (i % 64)) & 1 == 1
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, v: bool) {
+        debug_assert!(i < self.len);
+        let w = &mut self.words[i / 64];
+        if v {
+            *w |= 1 << (i % 64);
+        } else {
+            *w &= !(1 << (i % 64));
+        }
+    }
+
+    #[inline]
+    pub fn flip(&mut self, i: usize) {
+        self.words[i / 64] ^= 1 << (i % 64);
+    }
+
+    pub fn count_ones(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    pub fn words(&self) -> &[u64] {
+        &self.words
+    }
+
+    pub fn words_mut(&mut self) -> &mut [u64] {
+        &mut self.words
+    }
+
+    fn mask_tail(&mut self) {
+        if let Some(last) = self.words.last_mut() {
+            *last &= tail_mask(self.len);
+        }
+    }
+
+    pub fn xor_with(&mut self, other: &BitVec) {
+        debug_assert_eq!(self.len, other.len);
+        for (a, b) in self.words.iter_mut().zip(&other.words) {
+            *a ^= b;
+        }
+    }
+
+    /// Parity (XOR-reduce) of all bits.
+    pub fn parity(&self) -> bool {
+        self.words.iter().fold(0u64, |acc, w| acc ^ w).count_ones() % 2 == 1
+    }
+
+    pub fn iter_ones(&self) -> impl Iterator<Item = usize> + '_ {
+        self.words.iter().enumerate().flat_map(|(wi, &w)| {
+            let mut w = w;
+            std::iter::from_fn(move || {
+                if w == 0 {
+                    None
+                } else {
+                    let b = w.trailing_zeros() as usize;
+                    w &= w - 1;
+                    Some(wi * 64 + b)
+                }
+            })
+        })
+    }
+}
+
+/// Column-major packed bit matrix (rows x cols).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BitMatrix {
+    rows: usize,
+    cols: usize,
+    /// words per column
+    wpc: usize,
+    /// cols * wpc words, column-major
+    words: Vec<u64>,
+}
+
+impl BitMatrix {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        let wpc = words_for(rows);
+        Self { rows, cols, wpc, words: vec![0; wpc * cols] }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> bool) -> Self {
+        let mut m = Self::zeros(rows, cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                if f(r, c) {
+                    m.set(r, c, true);
+                }
+            }
+        }
+        m
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn words_per_col(&self) -> usize {
+        self.wpc
+    }
+
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> bool {
+        debug_assert!(r < self.rows && c < self.cols, "({r},{c}) in {}x{}", self.rows, self.cols);
+        (self.words[c * self.wpc + r / 64] >> (r % 64)) & 1 == 1
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: bool) {
+        debug_assert!(r < self.rows && c < self.cols);
+        let w = &mut self.words[c * self.wpc + r / 64];
+        if v {
+            *w |= 1 << (r % 64);
+        } else {
+            *w &= !(1 << (r % 64));
+        }
+    }
+
+    #[inline]
+    pub fn flip(&mut self, r: usize, c: usize) {
+        self.words[c * self.wpc + r / 64] ^= 1 << (r % 64);
+    }
+
+    /// The packed words of column `c` (length = words_per_col).
+    #[inline]
+    pub fn col(&self, c: usize) -> &[u64] {
+        &self.words[c * self.wpc..(c + 1) * self.wpc]
+    }
+
+    #[inline]
+    pub fn col_mut(&mut self, c: usize) -> &mut [u64] {
+        &mut self.words[c * self.wpc..(c + 1) * self.wpc]
+    }
+
+    /// Three disjoint column views (a, b, out) for gate application.
+    /// Panics if any two indices alias.
+    #[inline]
+    pub fn cols3_mut(&mut self, a: usize, b: usize, out: usize) -> (&[u64], &[u64], &mut [u64]) {
+        assert!(a != out && b != out, "output column aliases an input");
+        let wpc = self.wpc;
+        let ptr = self.words.as_mut_ptr();
+        // SAFETY: a, b != out, so the mutable slice is disjoint from both
+        // shared slices; all ranges are in-bounds (checked below).
+        assert!(a < self.cols && b < self.cols && out < self.cols);
+        unsafe {
+            let sa = std::slice::from_raw_parts(ptr.add(a * wpc), wpc);
+            let sb = std::slice::from_raw_parts(ptr.add(b * wpc), wpc);
+            let so = std::slice::from_raw_parts_mut(ptr.add(out * wpc), wpc);
+            (sa, sb, so)
+        }
+    }
+
+    /// Three shared column views plus one mutable (gate application hot
+    /// path: out = gate(a, b, c) without copies). Inputs may alias each
+    /// other; the output must not alias any input (panics otherwise).
+    #[inline]
+    pub fn cols_gate(
+        &mut self,
+        a: usize,
+        b: usize,
+        c: usize,
+        out: usize,
+    ) -> (&[u64], &[u64], &[u64], &mut [u64]) {
+        assert!(a != out && b != out && c != out, "output column aliases an input");
+        assert!(a < self.cols && b < self.cols && c < self.cols && out < self.cols);
+        let wpc = self.wpc;
+        let ptr = self.words.as_mut_ptr();
+        // SAFETY: out differs from a, b and c, so the mutable slice is
+        // disjoint from every shared slice; all ranges are in-bounds.
+        unsafe {
+            (
+                std::slice::from_raw_parts(ptr.add(a * wpc), wpc),
+                std::slice::from_raw_parts(ptr.add(b * wpc), wpc),
+                std::slice::from_raw_parts(ptr.add(c * wpc), wpc),
+                std::slice::from_raw_parts_mut(ptr.add(out * wpc), wpc),
+            )
+        }
+    }
+
+    /// Extract column `c` as a BitVec.
+    pub fn col_bitvec(&self, c: usize) -> BitVec {
+        BitVec { words: self.col(c).to_vec(), len: self.rows }
+    }
+
+    /// Store a BitVec into column `c`.
+    pub fn set_col(&mut self, c: usize, v: &BitVec) {
+        assert_eq!(v.len, self.rows);
+        self.col_mut(c).copy_from_slice(&v.words);
+    }
+
+    /// Extract row `r` as a BitVec (bit-gather across columns; slow path —
+    /// used by in-column operations and tests).
+    pub fn row_bitvec(&self, r: usize) -> BitVec {
+        BitVec::from_fn(self.cols, |c| self.get(r, c))
+    }
+
+    pub fn set_row(&mut self, r: usize, v: &BitVec) {
+        assert_eq!(v.len, self.cols);
+        for c in 0..self.cols {
+            self.set(r, c, v.get(c));
+        }
+    }
+
+    /// Full transpose (used by in-column execution).
+    pub fn transpose(&self) -> BitMatrix {
+        let mut t = BitMatrix::zeros(self.cols, self.rows);
+        for c in 0..self.cols {
+            for (wi, &w) in self.col(c).iter().enumerate() {
+                let mut bits = w;
+                while bits != 0 {
+                    let b = bits.trailing_zeros() as usize;
+                    bits &= bits - 1;
+                    t.set(c, wi * 64 + b, true);
+                }
+            }
+        }
+        t
+    }
+
+    pub fn count_ones(&self) -> usize {
+        // Tail bits beyond `rows` are maintained as zero.
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    /// XOR a packed row-mask into column `c` (error injection hot path).
+    pub fn xor_col_words(&mut self, c: usize, mask: &[u64]) {
+        let tm = tail_mask(self.rows);
+        let col = self.col_mut(c);
+        for (w, m) in col.iter_mut().zip(mask) {
+            *w ^= m;
+        }
+        // Keep tail invariant.
+        if let Some(last) = col.last_mut() {
+            *last &= tm;
+        }
+    }
+
+    /// Dense f32 {0,1} export in row-major order (PJRT literal interchange).
+    pub fn to_f32_row_major(&self) -> Vec<f32> {
+        let mut out = vec![0f32; self.rows * self.cols];
+        for c in 0..self.cols {
+            for (wi, &w) in self.col(c).iter().enumerate() {
+                let mut bits = w;
+                while bits != 0 {
+                    let b = bits.trailing_zeros() as usize;
+                    bits &= bits - 1;
+                    out[(wi * 64 + b) * self.cols + c] = 1.0;
+                }
+            }
+        }
+        out
+    }
+
+    /// Import from dense f32 {0,1} row-major (PJRT literal interchange).
+    pub fn from_f32_row_major(rows: usize, cols: usize, data: &[f32]) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        BitMatrix::from_fn(rows, cols, |r, c| data[r * cols + c] > 0.5)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn bitvec_set_get_flip() {
+        let mut v = BitVec::zeros(130);
+        assert_eq!(v.count_ones(), 0);
+        v.set(0, true);
+        v.set(64, true);
+        v.set(129, true);
+        assert!(v.get(0) && v.get(64) && v.get(129));
+        assert!(!v.get(1));
+        assert_eq!(v.count_ones(), 3);
+        v.flip(129);
+        assert_eq!(v.count_ones(), 2);
+        assert_eq!(v.iter_ones().collect::<Vec<_>>(), vec![0, 64]);
+    }
+
+    #[test]
+    fn bitvec_ones_tail_masked() {
+        let v = BitVec::ones(70);
+        assert_eq!(v.count_ones(), 70);
+        assert!(!v.parity()); // 70 ones -> even parity
+        assert!(BitVec::ones(71).parity());
+    }
+
+    #[test]
+    fn bitvec_parity() {
+        let mut v = BitVec::zeros(100);
+        assert!(!v.parity());
+        v.set(3, true);
+        assert!(v.parity());
+        v.set(99, true);
+        assert!(!v.parity());
+    }
+
+    #[test]
+    fn matrix_roundtrip_row_col() {
+        let mut r = Pcg64::new(1, 0);
+        let m = BitMatrix::from_fn(67, 33, |_, _| r.bernoulli(0.5));
+        for row in 0..67 {
+            let rv = m.row_bitvec(row);
+            for col in 0..33 {
+                assert_eq!(rv.get(col), m.get(row, col));
+            }
+        }
+        let t = m.transpose();
+        for row in 0..67 {
+            for col in 0..33 {
+                assert_eq!(m.get(row, col), t.get(col, row));
+            }
+        }
+        assert_eq!(m.count_ones(), t.count_ones());
+    }
+
+    #[test]
+    fn f32_roundtrip() {
+        let mut r = Pcg64::new(2, 0);
+        let m = BitMatrix::from_fn(40, 24, |_, _| r.bernoulli(0.3));
+        let dense = m.to_f32_row_major();
+        let back = BitMatrix::from_f32_row_major(40, 24, &dense);
+        assert_eq!(m, back);
+    }
+
+    #[test]
+    fn cols3_mut_disjoint() {
+        let mut m = BitMatrix::zeros(128, 8);
+        for r in 0..128 {
+            m.set(r, 1, r % 2 == 0);
+            m.set(r, 2, r % 3 == 0);
+        }
+        let (a, b, out) = m.cols3_mut(1, 2, 5);
+        let nor: Vec<u64> = a.iter().zip(b).map(|(x, y)| !(x | y)).collect();
+        out.copy_from_slice(&nor);
+        // col 5 now holds NOR(col1, col2) (up to tail bits)
+        for r in 0..128 {
+            let want = !(r % 2 == 0 || r % 3 == 0);
+            assert_eq!(m.get(r, 5), want, "row {r}");
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn cols3_mut_alias_panics() {
+        let mut m = BitMatrix::zeros(8, 4);
+        let _ = m.cols3_mut(1, 2, 1);
+    }
+
+    #[test]
+    fn xor_col_words_keeps_tail_zero() {
+        let mut m = BitMatrix::zeros(70, 3);
+        m.xor_col_words(1, &[u64::MAX, u64::MAX]);
+        assert_eq!(m.count_ones(), 70);
+        let col = m.col(1);
+        assert_eq!(col[1] >> 6, 0, "tail bits must stay zero");
+    }
+}

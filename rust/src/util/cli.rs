@@ -1,0 +1,105 @@
+//! Minimal CLI argument parsing (clap is not in the offline vendor set).
+//!
+//! Supports the subcommand + `--key value` / `--flag` style used by the
+//! `remus` binary and the examples:
+//!
+//! ```text
+//! remus fig4 --pgate-lo 1e-10 --pgate-hi 1e-4 --points 13 --trials 2000
+//! ```
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    /// Positional arguments (subcommand first).
+    pub positional: Vec<String>,
+    /// `--key value` options and `--flag` booleans (value "true").
+    pub options: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Self {
+        let mut args = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                if let Some((k, v)) = key.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    args.options.insert(key.to_string(), v);
+                } else {
+                    args.options.insert(key.to_string(), "true".to_string());
+                }
+            } else {
+                args.positional.push(a);
+            }
+        }
+        args
+    }
+
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.options.get(name).map(|v| v == "true" || v == "1").unwrap_or(false)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<T: std::str::FromStr>(&self, name: &str, default: T) -> T {
+        match self.options.get(name) {
+            Some(v) => v.parse().unwrap_or_else(|_| {
+                eprintln!("warning: could not parse --{name} {v:?}; using default");
+                default
+            }),
+            None => default,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse("fig4 --trials 500 --pgate-lo 1e-10 --verbose");
+        assert_eq!(a.subcommand(), Some("fig4"));
+        assert_eq!(a.get_or("trials", 0u64), 500);
+        assert_eq!(a.get_or("pgate-lo", 0.0f64), 1e-10);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse("run --n=128 --mode=ecc");
+        assert_eq!(a.get_or("n", 0usize), 128);
+        assert_eq!(a.get("mode"), Some("ecc"));
+    }
+
+    #[test]
+    fn bad_value_falls_back() {
+        let a = parse("x --n abc");
+        assert_eq!(a.get_or("n", 7usize), 7);
+    }
+
+    #[test]
+    fn empty() {
+        let a = parse("");
+        assert_eq!(a.subcommand(), None);
+    }
+}

@@ -1,0 +1,8 @@
+//! Foundation utilities: deterministic RNG, bit-packed matrices,
+//! statistics, CLI parsing and table rendering.
+
+pub mod bitmat;
+pub mod cli;
+pub mod rng;
+pub mod stats;
+pub mod table;

@@ -1,0 +1,270 @@
+//! Deterministic pseudo-random number generation for simulation.
+//!
+//! The offline vendor set has no `rand` crate, so REMUS ships its own
+//! PCG64 (O'Neill's PCG XSL RR 128/64) plus SplitMix64 for seeding and
+//! stream derivation. Every stochastic component (error injectors,
+//! workload generators, Monte-Carlo campaigns) takes an explicit seed so
+//! every experiment in EXPERIMENTS.md is bit-reproducible.
+
+/// SplitMix64: tiny, high-quality seed expander.
+#[derive(Clone, Debug)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+}
+
+/// PCG XSL RR 128/64 — the simulation workhorse RNG.
+#[derive(Clone, Debug)]
+pub struct Pcg64 {
+    state: u128,
+    inc: u128,
+}
+
+const PCG_MULT: u128 = 0x2360ED051FC65DA44385DF649FCCF645;
+
+impl Pcg64 {
+    /// Seed a generator; `stream` selects an independent sequence, so
+    /// parallel workers can share a seed without sharing a stream.
+    pub fn new(seed: u64, stream: u64) -> Self {
+        let mut sm = SplitMix64::new(seed ^ 0xA02B_DBF7_BB3C_0A7C);
+        let s0 = sm.next_u64() as u128;
+        let s1 = sm.next_u64() as u128;
+        let mut smi = SplitMix64::new(stream ^ 0x6A09_E667_F3BC_C909);
+        let i0 = smi.next_u64() as u128;
+        let i1 = smi.next_u64() as u128;
+        let mut rng = Self {
+            state: (s0 << 64) | s1,
+            inc: (((i0 << 64) | i1) << 1) | 1,
+        };
+        rng.next_u64();
+        rng
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let rot = (self.state >> 122) as u32;
+        let xsl = ((self.state >> 64) as u64) ^ (self.state as u64);
+        xsl.rotate_right(rot)
+    }
+
+    /// Uniform f64 in [0, 1).
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in [0, n) (Lemire's multiply-shift with rejection).
+    #[inline]
+    pub fn below(&mut self, n: u64) -> u64 {
+        assert!(n > 0);
+        loop {
+            let x = self.next_u64();
+            let m = (x as u128).wrapping_mul(n as u128);
+            let lo = m as u64;
+            if lo >= n || lo >= lo.wrapping_neg() % n {
+                return (m >> 64) as u64;
+            }
+        }
+    }
+
+    /// Bernoulli(p) draw.
+    #[inline]
+    pub fn bernoulli(&mut self, p: f64) -> bool {
+        self.next_f64() < p
+    }
+
+    /// Geometric skip sampling: number of Bernoulli(p) failures before the
+    /// next success, i.e. the gap to the next "hit" when scanning a long
+    /// sequence of independent trials. Returns `u64::MAX` when p <= 0.
+    ///
+    /// This is the hot-path trick that turns O(R) per-row error sampling
+    /// into O(R * p): sample the index of the next flipped bit directly.
+    #[inline]
+    pub fn geometric(&mut self, p: f64) -> u64 {
+        if p <= 0.0 {
+            return u64::MAX;
+        }
+        if p >= 1.0 {
+            return 0;
+        }
+        let u = self.next_f64().max(f64::MIN_POSITIVE);
+        (u.ln() / (1.0 - p).ln()) as u64
+    }
+
+    /// Binomial(n, p) sample. Uses direct geometric skipping for small
+    /// n*p, normal approximation for large n*p — accurate enough for the
+    /// Monte-Carlo campaign sizes used here.
+    pub fn binomial(&mut self, n: u64, p: f64) -> u64 {
+        if p <= 0.0 || n == 0 {
+            return 0;
+        }
+        if p >= 1.0 {
+            return n;
+        }
+        let np = n as f64 * p;
+        if np < 64.0 || n < 256 {
+            // Geometric skipping: expected O(np) iterations.
+            let mut count = 0u64;
+            let mut i = self.geometric(p);
+            while i < n {
+                count += 1;
+                i = i.saturating_add(1 + self.geometric(p));
+            }
+            count
+        } else {
+            // Normal approximation with continuity correction, clamped.
+            let sd = (np * (1.0 - p)).sqrt();
+            let z = self.gaussian();
+            let x = (np + sd * z + 0.5).floor();
+            x.clamp(0.0, n as f64) as u64
+        }
+    }
+
+    /// Standard normal via Box-Muller (one value; no caching for simplicity).
+    #[inline]
+    pub fn gaussian(&mut self) -> f64 {
+        let u1 = self.next_f64().max(f64::MIN_POSITIVE);
+        let u2 = self.next_f64();
+        (-2.0 * u1.ln()).sqrt() * (std::f64::consts::TAU * u2).cos()
+    }
+
+    /// A random 64-bit word with each bit set independently with prob p.
+    /// Fast paths: p == 0 -> 0, p == 0.5 -> raw word.
+    pub fn bit_mask(&mut self, p: f64) -> u64 {
+        if p <= 0.0 {
+            return 0;
+        }
+        if (p - 0.5).abs() < 1e-12 {
+            return self.next_u64();
+        }
+        let mut w = 0u64;
+        let mut i = self.geometric(p);
+        while i < 64 {
+            w |= 1 << i;
+            i = i.saturating_add(1 + self.geometric(p));
+        }
+        w
+    }
+
+    /// Derive a child RNG (independent stream) — used to give each worker
+    /// thread / crossbar its own sequence.
+    pub fn split(&mut self) -> Pcg64 {
+        Pcg64::new(self.next_u64(), self.next_u64())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_seed() {
+        let mut a = Pcg64::new(42, 0);
+        let mut b = Pcg64::new(42, 0);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn streams_differ() {
+        let mut a = Pcg64::new(42, 0);
+        let mut b = Pcg64::new(42, 1);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn uniform_mean_is_half() {
+        let mut r = Pcg64::new(7, 7);
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| r.next_f64()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn below_bounds_and_coverage() {
+        let mut r = Pcg64::new(3, 0);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            let v = r.below(10) as usize;
+            assert!(v < 10);
+            seen[v] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn bernoulli_rate_matches_p() {
+        let mut r = Pcg64::new(9, 1);
+        let n = 200_000;
+        let hits = (0..n).filter(|_| r.bernoulli(0.125)).count();
+        let rate = hits as f64 / n as f64;
+        assert!((rate - 0.125).abs() < 0.005, "rate={rate}");
+    }
+
+    #[test]
+    fn geometric_mean_matches() {
+        let mut r = Pcg64::new(11, 0);
+        let p = 0.02;
+        let n = 50_000;
+        let mean: f64 = (0..n).map(|_| r.geometric(p) as f64).sum::<f64>() / n as f64;
+        let expect = (1.0 - p) / p;
+        assert!((mean - expect).abs() < expect * 0.05, "mean={mean} expect={expect}");
+    }
+
+    #[test]
+    fn geometric_degenerate() {
+        let mut r = Pcg64::new(1, 0);
+        assert_eq!(r.geometric(0.0), u64::MAX);
+        assert_eq!(r.geometric(1.0), 0);
+    }
+
+    #[test]
+    fn binomial_small_and_large_consistent() {
+        let mut r = Pcg64::new(5, 5);
+        let trials = 20_000;
+        let mean_small: f64 =
+            (0..trials).map(|_| r.binomial(1000, 1e-3) as f64).sum::<f64>() / trials as f64;
+        assert!((mean_small - 1.0).abs() < 0.05, "small {mean_small}");
+        let mean_large: f64 =
+            (0..trials).map(|_| r.binomial(10_000, 0.25) as f64).sum::<f64>() / trials as f64;
+        assert!((mean_large - 2500.0).abs() < 10.0, "large {mean_large}");
+    }
+
+    #[test]
+    fn bit_mask_density() {
+        let mut r = Pcg64::new(13, 2);
+        let p = 0.1;
+        let total: u32 = (0..10_000).map(|_| r.bit_mask(p).count_ones()).sum();
+        let rate = total as f64 / (10_000.0 * 64.0);
+        assert!((rate - p).abs() < 0.01, "rate={rate}");
+        assert_eq!(r.bit_mask(0.0), 0);
+    }
+
+    #[test]
+    fn gaussian_moments() {
+        let mut r = Pcg64::new(17, 0);
+        let n = 100_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.gaussian()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+}

@@ -1,0 +1,154 @@
+//! Small statistics toolkit for the reliability analysis
+//! (Monte-Carlo estimates, confidence intervals, extrapolation helpers).
+
+/// Wilson score interval for a binomial proportion (95 % by default z).
+pub fn wilson_interval(successes: u64, trials: u64, z: f64) -> (f64, f64) {
+    if trials == 0 {
+        return (0.0, 1.0);
+    }
+    let n = trials as f64;
+    let p = successes as f64 / n;
+    let z2 = z * z;
+    let denom = 1.0 + z2 / n;
+    let center = (p + z2 / (2.0 * n)) / denom;
+    let half = (z / denom) * (p * (1.0 - p) / n + z2 / (4.0 * n * n)).sqrt();
+    ((center - half).max(0.0), (center + half).min(1.0))
+}
+
+/// `1 - (1 - p)^n` computed without catastrophic cancellation for tiny p
+/// (the paper's extrapolation formula, e.g. `1-(1-p_mask*p_mult)^M`).
+pub fn one_minus_pow(p: f64, n: f64) -> f64 {
+    if p <= 0.0 {
+        return 0.0;
+    }
+    if p >= 1.0 {
+        return 1.0;
+    }
+    // 1 - exp(n * ln(1-p)); ln_1p for accuracy.
+    let x = n * (-p).ln_1p();
+    -x.exp_m1()
+}
+
+/// Binomial tail P[X >= 2] for X ~ Bin(n, p), numerically stable for tiny p.
+pub fn prob_at_least_two(n: f64, p: f64) -> f64 {
+    if p <= 0.0 {
+        return 0.0;
+    }
+    let p0_ln = n * (-p).ln_1p();
+    let p0 = p0_ln.exp();
+    let p1 = if p < 1.0 { n * p * ((n - 1.0) * (-p).ln_1p()).exp() } else { 0.0 };
+    (1.0 - p0 - p1).clamp(0.0, 1.0)
+}
+
+/// Online mean/variance accumulator (Welford).
+#[derive(Clone, Debug, Default)]
+pub struct Running {
+    n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl Running {
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn stddev(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    pub fn stderr(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.stddev() / (self.n as f64).sqrt()
+        }
+    }
+}
+
+/// Log-spaced sweep points (inclusive of both ends), e.g. for p_gate axes.
+pub fn logspace(lo: f64, hi: f64, n: usize) -> Vec<f64> {
+    assert!(lo > 0.0 && hi > lo && n >= 2);
+    let (l0, l1) = (lo.log10(), hi.log10());
+    (0..n).map(|i| 10f64.powf(l0 + (l1 - l0) * i as f64 / (n - 1) as f64)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wilson_contains_truth() {
+        let (lo, hi) = wilson_interval(50, 100, 1.96);
+        assert!(lo < 0.5 && 0.5 < hi);
+        let (lo, hi) = wilson_interval(0, 100, 1.96);
+        assert_eq!(lo, 0.0);
+        assert!(hi < 0.05);
+    }
+
+    #[test]
+    fn one_minus_pow_matches_naive_in_moderate_range() {
+        for &(p, n) in &[(0.01, 10.0), (0.1, 3.0), (0.5, 2.0)] {
+            let naive = 1.0 - (1.0f64 - p).powf(n);
+            assert!((one_minus_pow(p, n) - naive).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn one_minus_pow_tiny_p() {
+        // 1-(1-1e-15)^1e6 ~= 1e-9; the naive form loses all precision.
+        let v = one_minus_pow(1e-15, 1e6);
+        assert!((v - 1e-9).abs() / 1e-9 < 1e-6, "v={v}");
+        // Paper Fig 4-bottom operating point: p_mask*p_mult with M=612e6.
+        let v = one_minus_pow(3e-4 * 7.3e-6, 612e6);
+        assert!(v > 0.5 && v < 1.0, "v={v}");
+    }
+
+    #[test]
+    fn prob_at_least_two_small_p_is_quadratic() {
+        let n = 1000.0;
+        let p = 1e-8;
+        let v = prob_at_least_two(n, p);
+        let approx = 0.5 * n * (n - 1.0) * p * p;
+        assert!((v - approx).abs() / approx < 1e-3, "v={v} approx={approx}");
+    }
+
+    #[test]
+    fn running_moments() {
+        let mut r = Running::default();
+        for x in [1.0, 2.0, 3.0, 4.0, 5.0] {
+            r.push(x);
+        }
+        assert_eq!(r.count(), 5);
+        assert!((r.mean() - 3.0).abs() < 1e-12);
+        assert!((r.variance() - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn logspace_endpoints() {
+        let v = logspace(1e-10, 1e-4, 7);
+        assert_eq!(v.len(), 7);
+        assert!((v[0] - 1e-10).abs() / 1e-10 < 1e-9);
+        assert!((v[6] - 1e-4).abs() / 1e-4 < 1e-9);
+        assert!((v[1] / v[0] - 10.0).abs() < 1e-6);
+    }
+}

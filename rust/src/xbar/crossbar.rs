@@ -1,0 +1,657 @@
+//! The memristive crossbar array simulator — substrate S2.
+//!
+//! Executes micro-op programs with cycle accounting, partition validation,
+//! and soft-error injection. The dominant path — an in-row gate across all
+//! rows — runs word-parallel on the column-major `BitMatrix` (64 rows per
+//! bitwise op); error injection uses geometric skipping, so reliability
+//! simulation stays O(lanes * p) per gate.
+
+use anyhow::{ensure, Result};
+
+use crate::errs::Injector;
+use crate::isa::microop::{Dir, MicroOp};
+use crate::isa::program::{Program, Step};
+use crate::util::bitmat::{tail_mask, BitMatrix};
+
+use super::device::DeviceModel;
+#[cfg(test)]
+use super::gate::Gate;
+use super::partition::Partitions;
+
+/// Cycle / energy / operation statistics.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct XbarStats {
+    /// Crossbar cycles elapsed (each `Step` = 1 cycle; reconfigs = 1).
+    pub cycles: u64,
+    /// Logic micro-ops executed.
+    pub logic_ops: u64,
+    /// Init/write micro-ops executed.
+    pub init_ops: u64,
+    /// Gate *instances* = micro-ops x lanes (soft-error sites).
+    pub gate_instances: u64,
+    /// Memristor state transitions (energy proxy).
+    pub switched_bits: u64,
+    /// Partition reconfigurations.
+    pub reconfigs: u64,
+    /// Accumulated energy, picojoules.
+    pub energy_pj: f64,
+}
+
+impl XbarStats {
+    pub fn add(&mut self, other: &XbarStats) {
+        self.cycles += other.cycles;
+        self.logic_ops += other.logic_ops;
+        self.init_ops += other.init_ops;
+        self.gate_instances += other.gate_instances;
+        self.switched_bits += other.switched_bits;
+        self.reconfigs += other.reconfigs;
+        self.energy_pj += other.energy_pj;
+    }
+}
+
+/// A single crossbar array with stateful-logic execution.
+#[derive(Clone, Debug)]
+pub struct Crossbar {
+    state: BitMatrix,
+    /// Partitioning of columns (constrains in-row ops).
+    col_parts: Partitions,
+    /// Partitioning of rows (constrains in-column ops).
+    row_parts: Partitions,
+    pub device: DeviceModel,
+    pub stats: XbarStats,
+    /// All-zero word buffer (operand stand-in for arity-0 gates).
+    zeros: Vec<u64>,
+}
+
+impl Crossbar {
+    pub fn new(rows: usize, cols: usize) -> Self {
+        let state = BitMatrix::zeros(rows, cols);
+        let wpc = state.words_per_col();
+        Self {
+            state,
+            col_parts: Partitions::whole(cols as u32),
+            row_parts: Partitions::whole(rows as u32),
+            device: DeviceModel::default_rram(),
+            stats: XbarStats::default(),
+            zeros: vec![0; wpc],
+        }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.state.rows()
+    }
+
+    pub fn cols(&self) -> usize {
+        self.state.cols()
+    }
+
+    pub fn state(&self) -> &BitMatrix {
+        &self.state
+    }
+
+    pub fn state_mut(&mut self) -> &mut BitMatrix {
+        &mut self.state
+    }
+
+    pub fn get(&self, r: usize, c: usize) -> bool {
+        self.state.get(r, c)
+    }
+
+    /// Direct write (memory interface, not stateful logic). One cycle per
+    /// call; write failures apply when an injector is given.
+    pub fn write_bit(&mut self, r: usize, c: usize, v: bool, inj: Option<&mut Injector>) {
+        let mut v = v;
+        if let Some(inj) = inj {
+            let mut fail = false;
+            inj.write_fails(1, |_| fail = true);
+            if fail {
+                v = !v;
+            }
+        }
+        if self.state.get(r, c) != v {
+            self.stats.switched_bits += 1;
+        }
+        self.state.set(r, c, v);
+        self.stats.cycles += 1;
+    }
+
+    /// Reconfigure column partitions (1 cycle, FELIX-style dynamic).
+    pub fn set_col_partitions(&mut self, parts: Partitions) {
+        assert_eq!(parts.lines() as usize, self.cols());
+        self.col_parts = parts;
+        self.stats.reconfigs += 1;
+        self.stats.cycles += 1;
+    }
+
+    pub fn set_row_partitions(&mut self, parts: Partitions) {
+        assert_eq!(parts.lines() as usize, self.rows());
+        self.row_parts = parts;
+        self.stats.reconfigs += 1;
+        self.stats.cycles += 1;
+    }
+
+    pub fn col_partitions(&self) -> &Partitions {
+        &self.col_parts
+    }
+
+    /// Execute one cycle (a `Step` of concurrent micro-ops).
+    pub fn apply_step(&mut self, step: &Step, mut inj: Option<&mut Injector>) -> Result<()> {
+        ensure!(!step.ops.is_empty(), "empty step");
+        if step.ops.len() > 1 {
+            self.validate_concurrency(&step.ops)?;
+        }
+        for op in &step.ops {
+            self.exec_op(op, inj.as_deref_mut())?;
+        }
+        self.stats.cycles += 1;
+        Ok(())
+    }
+
+    /// Execute a whole program.
+    pub fn run_program(&mut self, prog: &Program, mut inj: Option<&mut Injector>) -> Result<()> {
+        for step in &prog.steps {
+            self.apply_step(step, inj.as_deref_mut())?;
+        }
+        Ok(())
+    }
+
+    /// Concurrency rules for one cycle (Fig. 1c):
+    /// * all ops share a direction;
+    /// * **fan-out**: if every op applies the same gate to the same
+    ///   operands (distinct outputs), the step is a single multi-output
+    ///   gate (MAGIC/FELIX support fan-out by connecting several output
+    ///   memristors) — always legal;
+    /// * otherwise each op's touched partition *set* must be pairwise
+    ///   disjoint from every other op's. An op may span adjacent
+    ///   partitions (transistors between them closed for this cycle, the
+    ///   MultPIM neighbor-transfer pattern) as long as no other
+    ///   concurrent op uses those partitions.
+    fn validate_concurrency(&self, ops: &[MicroOp]) -> Result<()> {
+        let dir = ops[0].dir;
+        ensure!(
+            ops.iter().all(|o| o.dir == dir),
+            "concurrent ops must share direction"
+        );
+        // Group ops into fan-out bundles: ops applying the same gate to
+        // the same operands form ONE multi-output gate (distinct outputs
+        // required). Groups then claim partition ranges; ranges must be
+        // pairwise disjoint across groups.
+        let mut groups: Vec<(usize, Vec<usize>)> = Vec::new(); // (rep idx, member idxs)
+        'op: for (i, op) in ops.iter().enumerate() {
+            for (rep, members) in groups.iter_mut() {
+                let r = &ops[*rep];
+                if op.gate == r.gate
+                    && op.gate.arity() > 0
+                    && op.a == r.a
+                    && op.b == r.b
+                    && op.c == r.c
+                {
+                    members.push(i);
+                    continue 'op;
+                }
+            }
+            groups.push((i, vec![i]));
+        }
+        for (_, members) in &groups {
+            if members.len() > 1 {
+                let mut outs: Vec<u32> = members.iter().map(|&i| ops[i].out).collect();
+                outs.sort_unstable();
+                outs.dedup();
+                ensure!(outs.len() == members.len(), "fan-out outputs must be distinct");
+            }
+        }
+        let parts = match dir {
+            Dir::InRow => &self.col_parts,
+            Dir::InCol => &self.row_parts,
+        };
+        let mut used = vec![false; parts.count()];
+        for (_, members) in &groups {
+            let mut lo = u32::MAX;
+            let mut hi = 0u32;
+            for &i in members {
+                let (l, h) = ops[i].line_span();
+                lo = lo.min(l);
+                hi = hi.max(h);
+            }
+            let (p_lo, p_hi) = (parts.partition_of(lo), parts.partition_of(hi));
+            for p in p_lo..=p_hi {
+                ensure!(
+                    !used[p],
+                    "concurrent op groups conflict on partition {p} (lines {lo}..={hi})"
+                );
+                used[p] = true;
+            }
+        }
+        Ok(())
+    }
+
+    fn exec_op(&mut self, op: &MicroOp, inj: Option<&mut Injector>) -> Result<()> {
+        match op.dir {
+            Dir::InRow => self.exec_in_row(op, inj),
+            Dir::InCol => self.exec_in_col(op, inj),
+        }
+    }
+
+    /// Row-parallel in-row gate: word-wide over the packed columns.
+    fn exec_in_row(&mut self, op: &MicroOp, mut inj: Option<&mut Injector>) -> Result<()> {
+        let rows = self.rows();
+        let cols = self.cols();
+        let (s, e) = op.lanes.resolve(rows);
+        let lanes = e - s;
+        for &line in &[op.a, op.b, op.c, op.out] {
+            ensure!((line as usize) < cols, "column {line} out of range");
+        }
+
+        let arity = op.gate.arity();
+        // Indirect input drift: accessed input bits may flip *in place*
+        // (read/logic disturb — paper §II-B1).
+        if let Some(inj) = inj.as_deref_mut() {
+            if inj.model.p_input > 0.0 && arity > 0 {
+                let input_cols = [op.a as usize, op.b as usize, op.c as usize];
+                let state = &mut self.state;
+                inj.input_drifts(arity * lanes, |i| {
+                    let which = i / lanes;
+                    let r = s + (i % lanes);
+                    state.flip(r, input_cols[which]);
+                });
+            }
+        }
+
+        // Word-parallel gate application, copy-free: the output column
+        // never aliases an input (MicroOp invariant), so we take three
+        // shared column views + one mutable (§Perf: this replaced three
+        // per-op scratch memcpys).
+        let wpc = self.state.words_per_col();
+        let w_lo = s / 64;
+        let w_hi = (e - 1) / 64;
+        let mut switched = 0u64;
+        let gate = op.gate;
+        let mut apply = |col_a: &[u64], col_b: &[u64], col_c: &[u64], out_col: &mut [u64]| {
+            for wi in w_lo..=w_hi {
+                // Lane mask for this word.
+                let mut mask = u64::MAX;
+                if wi == s / 64 {
+                    mask &= u64::MAX << (s % 64);
+                }
+                if wi == (e - 1) / 64 {
+                    let top = e - wi * 64;
+                    if top < 64 {
+                        mask &= (1u64 << top) - 1;
+                    }
+                }
+                if wi == wpc - 1 {
+                    mask &= tail_mask(rows);
+                }
+                let prev = out_col[wi];
+                let val = gate.eval_word(col_a[wi], col_b[wi], col_c[wi], prev);
+                let next = (prev & !mask) | (val & mask);
+                switched += (prev ^ next).count_ones() as u64;
+                out_col[wi] = next;
+            }
+        };
+        if arity == 0 {
+            // SET1 / SET0 / NOP read no operands (and their a/b/c mirror
+            // `out` by convention, so the aliasing check must be skipped).
+            let z = &self.zeros;
+            let out_col = self.state.col_mut(op.out as usize);
+            apply(z, z, z, out_col);
+        } else {
+            let (ca, cb, cc, out_col) =
+                self.state.cols_gate(op.a as usize, op.b as usize, op.c as usize, op.out as usize);
+            apply(ca, cb, cc, out_col);
+        }
+
+        // Direct errors on the produced output bits.
+        if let Some(inj) = inj {
+            if op.gate.is_logic() {
+                let out = op.out as usize;
+                let state = &mut self.state;
+                let mut flipped = 0u64;
+                inj.gate_flips(lanes, |i| {
+                    state.flip(s + i, out);
+                    flipped += 1;
+                });
+                switched += flipped; // error flips also switch state
+            } else if op.gate.is_init() {
+                let out = op.out as usize;
+                let state = &mut self.state;
+                inj.write_fails(lanes, |i| {
+                    state.flip(s + i, out);
+                });
+            }
+        }
+
+        self.account(op, lanes as u64, switched);
+        Ok(())
+    }
+
+    /// Column-parallel in-column gate: per-column bit path (transpose
+    /// orientation; less common, used by in-column functions and the
+    /// naive-ECC demonstrations).
+    fn exec_in_col(&mut self, op: &MicroOp, inj: Option<&mut Injector>) -> Result<()> {
+        let rows = self.rows();
+        let cols = self.cols();
+        let (s, e) = op.lanes.resolve(cols);
+        let lanes = e - s;
+        for &line in &[op.a, op.b, op.c, op.out] {
+            ensure!((line as usize) < rows, "row {line} out of range");
+        }
+        let (ra, rb, rc, ro) = (op.a as usize, op.b as usize, op.c as usize, op.out as usize);
+
+        let arity = op.gate.arity();
+        let mut switched = 0u64;
+        for col in s..e {
+            let a = self.state.get(ra, col);
+            let b = self.state.get(rb, col);
+            let c = self.state.get(rc, col);
+            let prev = self.state.get(ro, col);
+            let v = op.gate.eval_bit(a, b, c, prev);
+            if v != prev {
+                switched += 1;
+                self.state.set(ro, col, v);
+            }
+        }
+        if let Some(inj) = inj {
+            // Indirect drift on accessed inputs.
+            if inj.model.p_input > 0.0 && arity > 0 {
+                let input_rows = [ra, rb, rc];
+                let state = &mut self.state;
+                inj.input_drifts(arity * lanes, |i| {
+                    let which = i / lanes;
+                    let col = s + (i % lanes);
+                    state.flip(input_rows[which], col);
+                });
+            }
+            if op.gate.is_logic() {
+                let state = &mut self.state;
+                let mut flipped = 0u64;
+                inj.gate_flips(lanes, |i| {
+                    state.flip(ro, s + i);
+                    flipped += 1;
+                });
+                switched += flipped;
+            } else if op.gate.is_init() {
+                let state = &mut self.state;
+                inj.write_fails(lanes, |i| {
+                    state.flip(ro, s + i);
+                });
+            }
+        }
+        self.account(op, lanes as u64, switched);
+        Ok(())
+    }
+
+    fn account(&mut self, op: &MicroOp, lanes: u64, switched: u64) {
+        if op.gate.is_logic() {
+            self.stats.logic_ops += 1;
+            self.stats.gate_instances += lanes;
+        } else if op.gate.is_init() {
+            self.stats.init_ops += 1;
+        }
+        self.stats.switched_bits += switched;
+        self.stats.energy_pj += self.device.op_energy_pj(switched, lanes);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::errs::ErrorModel;
+    use crate::isa::microop::LaneRange;
+    use crate::isa::program::RowProgramBuilder;
+
+    fn xbar_with_inputs(rows: usize, cols: usize, f: impl Fn(usize, usize) -> bool) -> Crossbar {
+        let mut x = Crossbar::new(rows, cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                x.state_mut().set(r, c, f(r, c));
+            }
+        }
+        x
+    }
+
+    #[test]
+    fn in_row_nor_all_rows() {
+        // Fig 1(a): the same NOR in every row, one cycle.
+        let mut x = xbar_with_inputs(130, 8, |r, c| match c {
+            0 => r % 2 == 0,
+            1 => r % 3 == 0,
+            _ => false,
+        });
+        x.apply_step(&Step::one(MicroOp::row(Gate::Nor2, &[0, 1], 2)), None).unwrap();
+        for r in 0..130 {
+            let want = !(r % 2 == 0 || r % 3 == 0);
+            assert_eq!(x.get(r, 2), want, "row {r}");
+        }
+        assert_eq!(x.stats.cycles, 1);
+        assert_eq!(x.stats.gate_instances, 130);
+        assert_eq!(x.stats.logic_ops, 1);
+    }
+
+    #[test]
+    fn in_col_nor_all_cols() {
+        // Fig 1(b): the same NOR in every column, one cycle.
+        let mut x = xbar_with_inputs(8, 70, |r, c| match r {
+            0 => c % 2 == 0,
+            1 => c % 5 == 0,
+            _ => false,
+        });
+        x.apply_step(&Step::one(MicroOp::col(Gate::Nor2, &[0, 1], 2)), None).unwrap();
+        for c in 0..70 {
+            let want = !(c % 2 == 0 || c % 5 == 0);
+            assert_eq!(x.get(2, c), want, "col {c}");
+        }
+        assert_eq!(x.stats.gate_instances, 70);
+    }
+
+    #[test]
+    fn lane_range_restricts_rows() {
+        // col 0 all zeros -> NOT writes 1, but only in lanes 10..20.
+        let mut x = xbar_with_inputs(128, 4, |_, _| false);
+        let op = MicroOp::row(Gate::Not, &[0], 1).over(LaneRange::new(10, 20));
+        x.apply_step(&Step::one(op), None).unwrap();
+        for r in 0..128 {
+            assert_eq!(x.get(r, 1), (10..20).contains(&r), "row {r}");
+        }
+        assert_eq!(x.stats.gate_instances, 10);
+    }
+
+    #[test]
+    fn partition_parallel_step() {
+        // Fig 1(c): two NORs in the same row cycle, different partitions.
+        let mut x = xbar_with_inputs(16, 8, |r, c| (r + c) % 2 == 0);
+        x.set_col_partitions(Partitions::uniform(8, 4));
+        let ops = vec![
+            MicroOp::row(Gate::Nor2, &[0, 1], 2),
+            MicroOp::row(Gate::Nor2, &[4, 5], 6),
+        ];
+        let cycles0 = x.stats.cycles;
+        x.apply_step(&Step::many(ops), None).unwrap();
+        assert_eq!(x.stats.cycles - cycles0, 1, "concurrent ops cost one cycle");
+        for r in 0..16 {
+            let a = (r) % 2 == 0;
+            let b = (r + 1) % 2 == 0;
+            assert_eq!(x.get(r, 2), !(a | b));
+            assert_eq!(x.get(r, 6), !(a | b));
+        }
+    }
+
+    #[test]
+    fn cross_partition_op_rejected() {
+        let mut x = Crossbar::new(8, 8);
+        x.set_col_partitions(Partitions::uniform(8, 4));
+        // NOR reading col 3 and col 4 crosses the boundary.
+        let ops = vec![
+            MicroOp::row(Gate::Nor2, &[3, 4], 5),
+            MicroOp::row(Gate::Not, &[0], 1),
+        ];
+        assert!(x.apply_step(&Step::many(ops), None).is_err());
+    }
+
+    #[test]
+    fn same_partition_concurrency_rejected() {
+        let mut x = Crossbar::new(8, 8);
+        let ops = vec![
+            MicroOp::row(Gate::Not, &[0], 1),
+            MicroOp::row(Gate::Not, &[2], 3),
+        ];
+        assert!(x.apply_step(&Step::many(ops), None).is_err(), "single partition");
+        x.set_col_partitions(Partitions::uniform(8, 4));
+        let ops = vec![
+            MicroOp::row(Gate::Not, &[0], 1),
+            MicroOp::row(Gate::Not, &[2], 3),
+        ];
+        assert!(x.apply_step(&Step::many(ops), None).is_err(), "same partition twice");
+    }
+
+    #[test]
+    fn fan_out_not_is_one_cycle() {
+        // Multi-output NOT: broadcast !col0 into one column per partition
+        // (the MultPIM b_i broadcast pattern), one cycle, regardless of
+        // partition boundaries.
+        let mut x = xbar_with_inputs(16, 16, |r, c| c == 0 && r % 2 == 0);
+        x.set_col_partitions(Partitions::uniform(16, 4));
+        let ops: Vec<MicroOp> =
+            (0..4).map(|k| MicroOp::row(Gate::Not, &[0], k * 4 + 1)).collect();
+        let c0 = x.stats.cycles;
+        x.apply_step(&Step::many(ops), None).unwrap();
+        assert_eq!(x.stats.cycles - c0, 1);
+        for r in 0..16 {
+            for k in 0..4usize {
+                assert_eq!(x.get(r, k * 4 + 1), r % 2 != 0, "row {r} part {k}");
+            }
+        }
+    }
+
+    #[test]
+    fn fan_out_requires_distinct_outputs() {
+        let mut x = Crossbar::new(8, 8);
+        let ops = vec![
+            MicroOp::row(Gate::Not, &[0], 1),
+            MicroOp::row(Gate::Not, &[0], 1),
+        ];
+        assert!(x.apply_step(&Step::many(ops), None).is_err());
+    }
+
+    #[test]
+    fn neighbor_span_allowed_when_disjoint() {
+        // Two neighbor-transfer NOTs, each spanning its own pair of
+        // partitions: {0,1} and {2,3} — legal in one cycle.
+        let mut x = Crossbar::new(8, 16);
+        x.set_col_partitions(Partitions::uniform(16, 4));
+        let ops = vec![
+            MicroOp::row(Gate::Not, &[4], 1),  // partition 1 -> 0
+            MicroOp::row(Gate::Not, &[12], 9), // partition 3 -> 2
+        ];
+        x.apply_step(&Step::many(ops), None).unwrap();
+        // Overlapping pairs {0,1} and {1,2} must be rejected.
+        let ops = vec![
+            MicroOp::row(Gate::Not, &[4], 1),
+            MicroOp::row(Gate::Not, &[8], 5),
+        ];
+        assert!(x.apply_step(&Step::many(ops), None).is_err());
+    }
+
+    #[test]
+    fn mixed_direction_concurrency_rejected() {
+        let mut x = Crossbar::new(8, 8);
+        let ops = vec![
+            MicroOp::row(Gate::Not, &[0], 1),
+            MicroOp::col(Gate::Not, &[2], 3),
+        ];
+        assert!(x.apply_step(&Step::many(ops), None).is_err());
+    }
+
+    #[test]
+    fn imply_semantics() {
+        // IMPLY: out' = !a | out (output doubles as operand).
+        let mut x = xbar_with_inputs(4, 2, |r, c| match c {
+            0 => r & 1 == 1,      // a = row parity
+            _ => r & 2 == 2,      // out initial
+        });
+        x.apply_step(&Step::one(MicroOp::row(Gate::Imply, &[0], 1)), None).unwrap();
+        for r in 0..4 {
+            let a = r & 1 == 1;
+            let out0 = r & 2 == 2;
+            assert_eq!(x.get(r, 1), !a | out0, "row {r}");
+        }
+    }
+
+    #[test]
+    fn gate_error_injection_flips_outputs() {
+        let mut x = xbar_with_inputs(1024, 4, |_, _| false);
+        let mut inj = Injector::new(ErrorModel::direct_only(0.25), 42, 0);
+        // NOR(0,0) = 1 everywhere; with p=0.25 about a quarter flip to 0.
+        x.apply_step(&Step::one(MicroOp::row(Gate::Nor2, &[0, 1], 2)), Some(&mut inj))
+            .unwrap();
+        let ones = (0..1024).filter(|&r| x.get(r, 2)).count();
+        let flips = inj.counters.gate_flips as usize;
+        assert_eq!(ones, 1024 - flips);
+        assert!(flips > 150 && flips < 370, "flips={flips}");
+    }
+
+    #[test]
+    fn input_drift_corrupts_stored_inputs() {
+        let mut x = xbar_with_inputs(512, 4, |_, c| c == 0);
+        let mut inj = Injector::new(ErrorModel::indirect_only(0.1), 7, 0);
+        x.apply_step(&Step::one(MicroOp::row(Gate::Not, &[0], 1)), Some(&mut inj)).unwrap();
+        let zeros_in_input = (0..512).filter(|&r| !x.get(r, 0)).count();
+        assert_eq!(zeros_in_input as u64, inj.counters.input_drifts);
+        assert!(zeros_in_input > 20, "drift should have corrupted inputs");
+    }
+
+    #[test]
+    fn run_program_full_adder_rowwise() {
+        // The same 6-gate Min3 full adder as the python test, all 8 input
+        // combinations at once (one per row).
+        let mut x = Crossbar::new(8, 16);
+        for r in 0..8 {
+            x.state_mut().set(r, 0, (r >> 2) & 1 == 1);
+            x.state_mut().set(r, 1, (r >> 1) & 1 == 1);
+            x.state_mut().set(r, 2, r & 1 == 1);
+        }
+        let mut b = RowProgramBuilder::no_init("fa");
+        b.gate(Gate::Min3, &[0, 1, 2], 3);
+        b.gate(Gate::Not, &[3], 4);
+        b.gate(Gate::Min3, &[0, 1, 3], 5);
+        b.gate(Gate::Min3, &[0, 2, 3], 6);
+        b.gate(Gate::Min3, &[1, 2, 3], 7);
+        b.gate(Gate::Min3, &[5, 6, 7], 8);
+        let prog = b.finish();
+        x.run_program(&prog, None).unwrap();
+        for r in 0..8 {
+            let (a, bb, c) = ((r >> 2) & 1, (r >> 1) & 1, r & 1);
+            assert_eq!(x.get(r, 4), a + bb + c >= 2, "cout row {r}");
+            assert_eq!(x.get(r, 8), (a + bb + c) % 2 == 1, "sum row {r}");
+        }
+        assert_eq!(x.stats.cycles, 6);
+        assert_eq!(x.stats.gate_instances, 6 * 8);
+    }
+
+    #[test]
+    fn write_bit_counts_cycles_and_switches() {
+        let mut x = Crossbar::new(4, 4);
+        x.write_bit(1, 1, true, None);
+        x.write_bit(1, 1, true, None); // no switch
+        assert_eq!(x.stats.cycles, 2);
+        assert_eq!(x.stats.switched_bits, 1);
+    }
+
+    #[test]
+    fn energy_accumulates_with_ops() {
+        let mut x = xbar_with_inputs(64, 4, |r, _| r % 2 == 0);
+        x.apply_step(&Step::one(MicroOp::row(Gate::Not, &[0], 1)), None).unwrap();
+        assert!(x.stats.energy_pj > 0.0);
+        assert!(x.stats.switched_bits > 0);
+    }
+
+    #[test]
+    fn stats_add() {
+        let mut a = XbarStats { cycles: 1, logic_ops: 2, ..Default::default() };
+        let b = XbarStats { cycles: 3, energy_pj: 1.5, ..Default::default() };
+        a.add(&b);
+        assert_eq!(a.cycles, 4);
+        assert_eq!(a.logic_ops, 2);
+        assert!((a.energy_pj - 1.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,118 @@
+//! Memristor device / crossbar timing-energy model.
+//!
+//! The paper evaluates at the architecture level (probabilities per gate /
+//! per access), but latency and energy accounting need physical constants.
+//! Values follow the VTEAM-style parameters used across the mMPU
+//! literature (MAGIC/FELIX/MultPIM evaluations): ~1 ns gate pulses, ~fJ
+//! switching energy, Ron/Roff two-decade separation.
+
+/// Physical device + array parameters.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DeviceModel {
+    /// Low-resistance ("1") state, ohms.
+    pub r_on: f64,
+    /// High-resistance ("0") state, ohms.
+    pub r_off: f64,
+    /// Gate/write pulse width — one crossbar cycle, nanoseconds.
+    pub cycle_ns: f64,
+    /// Energy to switch one memristor's state, picojoules.
+    pub e_switch_pj: f64,
+    /// Energy of half-selected cells per gate instance, picojoules.
+    pub e_half_select_pj: f64,
+    /// Lognormal sigma of the resistance distributions (variability) —
+    /// used to *derive* an indicative p_gate for documentation/examples.
+    pub sigma_r: f64,
+}
+
+impl DeviceModel {
+    pub fn default_rram() -> Self {
+        Self {
+            r_on: 1e3,
+            r_off: 1e5,
+            cycle_ns: 1.0,
+            e_switch_pj: 0.1,
+            e_half_select_pj: 0.01,
+            sigma_r: 0.15,
+        }
+    }
+
+    /// Clock frequency implied by the cycle time, MHz.
+    pub fn freq_mhz(&self) -> f64 {
+        1e3 / self.cycle_ns
+    }
+
+    /// Rough probability that resistance variability flips a gate output:
+    /// the overlap of the lognormal Ron / Roff distributions at the
+    /// read margin (geometric mean of Ron, Roff). This is *indicative* —
+    /// the reliability experiments sweep p_gate explicitly.
+    pub fn derived_p_gate(&self) -> f64 {
+        let margin = (self.r_on.ln() + self.r_off.ln()) / 2.0;
+        // P[lognormal(ln r_on, sigma) > margin] = Q(d/sigma), d in log-space.
+        let d = (margin - self.r_on.ln()) / self.sigma_r;
+        q_function(d)
+    }
+
+    /// Energy of one micro-op: `switched` state transitions plus
+    /// half-select overhead across `instances` gate instances.
+    pub fn op_energy_pj(&self, switched: u64, instances: u64) -> f64 {
+        switched as f64 * self.e_switch_pj + instances as f64 * self.e_half_select_pj
+    }
+}
+
+impl Default for DeviceModel {
+    fn default() -> Self {
+        Self::default_rram()
+    }
+}
+
+/// Gaussian tail Q(x) via Abramowitz-Stegun erfc approximation.
+fn q_function(x: f64) -> f64 {
+    0.5 * erfc(x / std::f64::consts::SQRT_2)
+}
+
+fn erfc(x: f64) -> f64 {
+    // A&S 7.1.26, |eps| < 1.5e-7; erfc(-x) = 2 - erfc(x).
+    if x < 0.0 {
+        return 2.0 - erfc(-x);
+    }
+    let t = 1.0 / (1.0 + 0.3275911 * x);
+    let poly = t
+        * (0.254829592
+            + t * (-0.284496736 + t * (1.421413741 + t * (-1.453152027 + t * 1.061405429))));
+    poly * (-x * x).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_sane() {
+        let d = DeviceModel::default_rram();
+        assert!(d.r_off > d.r_on);
+        assert_eq!(d.freq_mhz(), 1000.0);
+    }
+
+    #[test]
+    fn erfc_reference_points() {
+        assert!((erfc(0.0) - 1.0).abs() < 1e-6);
+        assert!((erfc(1.0) - 0.157299).abs() < 1e-5);
+        assert!((erfc(-1.0) - 1.842701).abs() < 1e-5);
+        assert!(erfc(5.0) < 1e-10);
+    }
+
+    #[test]
+    fn derived_p_gate_decreases_with_margin() {
+        let tight = DeviceModel { sigma_r: 0.5, ..DeviceModel::default_rram() };
+        let loose = DeviceModel { sigma_r: 0.1, ..DeviceModel::default_rram() };
+        assert!(loose.derived_p_gate() < tight.derived_p_gate());
+        assert!(tight.derived_p_gate() < 0.5);
+    }
+
+    #[test]
+    fn energy_accumulates() {
+        let d = DeviceModel::default_rram();
+        let e = d.op_energy_pj(100, 1024);
+        assert!((e - (100.0 * 0.1 + 1024.0 * 0.01)).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,186 @@
+//! Stateful logic gates (paper §II-A).
+//!
+//! The mMPU's logic families: MAGIC (NOT / NOR, including 3-input NOR),
+//! FELIX (OR, NAND, Minority3), plus IMPLY material implication. SET0/SET1
+//! model the output-initialization write cycles that MAGIC/FELIX require
+//! before each gate, and NOP pads encoded programs.
+//!
+//! Gates evaluate on packed 64-bit words: one call computes the gate for
+//! 64 crossbar rows at once — the word-level mirror of the crossbar's
+//! inherent row parallelism.
+
+/// A stateful logic gate. Opcode values MUST match
+/// `python/compile/kernels/ref.py` (the AOT executor's encoding).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+#[repr(u8)]
+pub enum Gate {
+    Nop = 0,
+    Not = 1,
+    Nor2 = 2,
+    Nor3 = 3,
+    Or2 = 4,
+    Nand2 = 5,
+    Min3 = 6,
+    Set1 = 7,
+    Set0 = 8,
+    /// IMPLY: out' = a -> out  (material implication; reuses the output
+    /// memristor as the second operand, as in the IMPLY family).
+    /// Not part of the AOT encoding (the executor covers MAGIC/FELIX);
+    /// `encode` lowers it away.
+    Imply = 9,
+}
+
+pub const NUM_ENCODABLE_OPCODES: u8 = 9;
+
+impl Gate {
+    /// Number of *input* operands read by the gate.
+    pub fn arity(self) -> usize {
+        match self {
+            Gate::Nop | Gate::Set1 | Gate::Set0 => 0,
+            Gate::Not => 1,
+            Gate::Nor2 | Gate::Or2 | Gate::Nand2 => 2,
+            Gate::Nor3 | Gate::Min3 => 3,
+            Gate::Imply => 1, // reads `a` and the current output state
+        }
+    }
+
+    /// Word-parallel evaluation: `a`,`b`,`c` are 64 rows of each operand,
+    /// `out_prev` the current output column word (used by IMPLY/NOP).
+    #[inline]
+    pub fn eval_word(self, a: u64, b: u64, c: u64, out_prev: u64) -> u64 {
+        match self {
+            Gate::Nop => out_prev,
+            Gate::Not => !a,
+            Gate::Nor2 => !(a | b),
+            Gate::Nor3 => !(a | b | c),
+            Gate::Or2 => a | b,
+            Gate::Nand2 => !(a & b),
+            Gate::Min3 => !((a & b) | (a & c) | (b & c)),
+            Gate::Set1 => u64::MAX,
+            Gate::Set0 => 0,
+            Gate::Imply => !a | out_prev,
+        }
+    }
+
+    /// Scalar (single-row) evaluation — used by tests and the slow path.
+    #[inline]
+    pub fn eval_bit(self, a: bool, b: bool, c: bool, out_prev: bool) -> bool {
+        let w = self.eval_word(
+            if a { 1 } else { 0 },
+            if b { 1 } else { 0 },
+            if c { 1 } else { 0 },
+            if out_prev { 1 } else { 0 },
+        );
+        w & 1 == 1
+    }
+
+    /// Whether executing this gate counts as a soft-error site for the
+    /// `p_gate` direct-error model (SET init writes use `p_write`; NOP is
+    /// never a site).
+    pub fn is_logic(self) -> bool {
+        !matches!(self, Gate::Nop | Gate::Set1 | Gate::Set0)
+    }
+
+    pub fn is_init(self) -> bool {
+        matches!(self, Gate::Set1 | Gate::Set0)
+    }
+
+    /// Opcode for the AOT gate-scan executor.
+    pub fn opcode(self) -> u8 {
+        debug_assert!(
+            !matches!(self, Gate::Imply),
+            "IMPLY must be lowered before encoding"
+        );
+        self as u8
+    }
+
+    pub fn from_opcode(op: u8) -> Option<Gate> {
+        Some(match op {
+            0 => Gate::Nop,
+            1 => Gate::Not,
+            2 => Gate::Nor2,
+            3 => Gate::Nor3,
+            4 => Gate::Or2,
+            5 => Gate::Nand2,
+            6 => Gate::Min3,
+            7 => Gate::Set1,
+            8 => Gate::Set0,
+            9 => Gate::Imply,
+            _ => return None,
+        })
+    }
+
+    pub const ALL: [Gate; 10] = [
+        Gate::Nop,
+        Gate::Not,
+        Gate::Nor2,
+        Gate::Nor3,
+        Gate::Or2,
+        Gate::Nand2,
+        Gate::Min3,
+        Gate::Set1,
+        Gate::Set0,
+        Gate::Imply,
+    ];
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn truth_tables() {
+        for a in [false, true] {
+            for b in [false, true] {
+                for c in [false, true] {
+                    assert_eq!(Gate::Not.eval_bit(a, b, c, false), !a);
+                    assert_eq!(Gate::Nor2.eval_bit(a, b, c, false), !(a | b));
+                    assert_eq!(Gate::Nor3.eval_bit(a, b, c, false), !(a | b | c));
+                    assert_eq!(Gate::Or2.eval_bit(a, b, c, false), a | b);
+                    assert_eq!(Gate::Nand2.eval_bit(a, b, c, false), !(a & b));
+                    let maj = (a & b) | (a & c) | (b & c);
+                    assert_eq!(Gate::Min3.eval_bit(a, b, c, false), !maj);
+                    assert!(Gate::Set1.eval_bit(a, b, c, false));
+                    assert!(!Gate::Set0.eval_bit(a, b, c, false));
+                    for prev in [false, true] {
+                        assert_eq!(Gate::Nop.eval_bit(a, b, c, prev), prev);
+                        assert_eq!(Gate::Imply.eval_bit(a, b, c, prev), !a | prev);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn word_matches_bits() {
+        // Words evaluate 64 independent rows: check against per-bit eval.
+        let a = 0xDEAD_BEEF_0123_4567u64;
+        let b = 0xFEED_FACE_89AB_CDEFu64;
+        let c = 0x0F0F_F0F0_AA55_55AAu64;
+        let p = 0x1234_5678_9ABC_DEF0u64;
+        for g in Gate::ALL {
+            let w = g.eval_word(a, b, c, p);
+            for i in 0..64 {
+                let bit = |x: u64| (x >> i) & 1 == 1;
+                assert_eq!(bit(w), g.eval_bit(bit(a), bit(b), bit(c), bit(p)), "{g:?} bit {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn opcode_roundtrip() {
+        for g in Gate::ALL {
+            if g != Gate::Imply {
+                assert_eq!(Gate::from_opcode(g.opcode()), Some(g));
+            }
+        }
+        assert_eq!(Gate::from_opcode(42), None);
+    }
+
+    #[test]
+    fn error_site_classification() {
+        assert!(Gate::Nor2.is_logic() && Gate::Min3.is_logic() && Gate::Imply.is_logic());
+        assert!(!Gate::Set1.is_logic() && !Gate::Nop.is_logic());
+        assert!(Gate::Set0.is_init() && !Gate::Nor2.is_init());
+    }
+}

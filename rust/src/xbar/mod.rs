@@ -1,0 +1,12 @@
+//! The memristive crossbar substrate: stateful gates, partitions, the
+//! cycle-accurate array simulator and the device timing/energy model.
+
+pub mod crossbar;
+pub mod device;
+pub mod gate;
+pub mod partition;
+
+pub use crossbar::{Crossbar, XbarStats};
+pub use device::DeviceModel;
+pub use gate::Gate;
+pub use partition::Partitions;

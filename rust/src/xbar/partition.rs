@@ -1,0 +1,121 @@
+//! Dynamic crossbar partitions (paper §II-A / Fig. 1c).
+//!
+//! Transistors divide the crossbar into electrically isolated segments so
+//! multiple in-row (in-column) gates can fire in the same row (column)
+//! simultaneously. A partition configuration is a sorted list of segment
+//! start lines; reconfiguration is dynamic (FELIX-style) and costs one
+//! cycle (tracked by the crossbar stats).
+
+/// A partition configuration over `lines` lines (columns for in-row ops).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Partitions {
+    /// Sorted segment start indices; always begins with 0.
+    starts: Vec<u32>,
+    lines: u32,
+}
+
+impl Partitions {
+    /// Single segment spanning everything (no partitioning).
+    pub fn whole(lines: u32) -> Self {
+        Self { starts: vec![0], lines }
+    }
+
+    /// Segments of fixed `width` (the MultPIM configuration: one
+    /// partition per bit position).
+    pub fn uniform(lines: u32, width: u32) -> Self {
+        assert!(width > 0 && width <= lines);
+        let starts = (0..lines).step_by(width as usize).collect();
+        Self { starts, lines }
+    }
+
+    /// Arbitrary boundaries. `starts` must be sorted, unique, begin at 0.
+    pub fn new(lines: u32, starts: Vec<u32>) -> Self {
+        assert!(!starts.is_empty() && starts[0] == 0, "first segment must start at 0");
+        assert!(starts.windows(2).all(|w| w[0] < w[1]), "starts must be strictly increasing");
+        assert!(*starts.last().unwrap() < lines, "start beyond line count");
+        Self { starts, lines }
+    }
+
+    pub fn count(&self) -> usize {
+        self.starts.len()
+    }
+
+    pub fn lines(&self) -> u32 {
+        self.lines
+    }
+
+    /// Index of the partition containing `line`.
+    pub fn partition_of(&self, line: u32) -> usize {
+        assert!(line < self.lines, "line {line} out of range");
+        match self.starts.binary_search(&line) {
+            Ok(i) => i,
+            Err(i) => i - 1,
+        }
+    }
+
+    /// [start, end) of partition `i`.
+    pub fn bounds(&self, i: usize) -> (u32, u32) {
+        let start = self.starts[i];
+        let end = self.starts.get(i + 1).copied().unwrap_or(self.lines);
+        (start, end)
+    }
+
+    /// Does the closed line span [lo, hi] sit inside one partition?
+    /// Returns that partition's index, or None if it crosses a boundary.
+    pub fn containing(&self, lo: u32, hi: u32) -> Option<usize> {
+        let p = self.partition_of(lo);
+        let (_, end) = self.bounds(p);
+        if hi < end {
+            Some(p)
+        } else {
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn whole_is_one_partition() {
+        let p = Partitions::whole(64);
+        assert_eq!(p.count(), 1);
+        assert_eq!(p.partition_of(0), 0);
+        assert_eq!(p.partition_of(63), 0);
+        assert_eq!(p.bounds(0), (0, 64));
+        assert_eq!(p.containing(3, 60), Some(0));
+    }
+
+    #[test]
+    fn uniform_partitions() {
+        let p = Partitions::uniform(64, 16);
+        assert_eq!(p.count(), 4);
+        assert_eq!(p.partition_of(15), 0);
+        assert_eq!(p.partition_of(16), 1);
+        assert_eq!(p.bounds(3), (48, 64));
+        assert_eq!(p.containing(16, 31), Some(1));
+        assert_eq!(p.containing(15, 16), None, "span crosses a boundary");
+    }
+
+    #[test]
+    fn custom_boundaries() {
+        let p = Partitions::new(100, vec![0, 10, 50]);
+        assert_eq!(p.count(), 3);
+        assert_eq!(p.bounds(0), (0, 10));
+        assert_eq!(p.bounds(2), (50, 100));
+        assert_eq!(p.partition_of(49), 1);
+    }
+
+    #[test]
+    #[should_panic]
+    fn must_start_at_zero() {
+        Partitions::new(10, vec![1, 5]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn line_oob_panics() {
+        Partitions::whole(10).partition_of(10);
+    }
+}

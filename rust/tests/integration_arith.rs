@@ -1,0 +1,110 @@
+//! Integration: arithmetic synthesis at full width, cross-checked
+//! between the crossbar simulator and the single-lane interpreter.
+
+use remus::analysis::lane::{FaultPlan, LaneSim};
+use remus::arith::adder::ripple_adder;
+use remus::arith::multiplier::{multpim_program, naive_mult_program};
+use remus::util::rng::Pcg64;
+use remus::xbar::{Crossbar, Partitions};
+
+#[test]
+fn multpim32_full_crossbar_128_rows() {
+    // 128 32-bit multiplications in one program run.
+    let (prog, lay) = multpim_program(32);
+    let mut x = Crossbar::new(128, lay.width as usize);
+    x.set_col_partitions(Partitions::new(lay.width, lay.partition_starts.clone()));
+    let mut rng = Pcg64::new(7, 7);
+    let pairs: Vec<(u64, u64)> =
+        (0..128).map(|_| (rng.next_u64() & 0xFFFF_FFFF, rng.next_u64() & 0xFFFF_FFFF)).collect();
+    for (r, &(a, b)) in pairs.iter().enumerate() {
+        for k in 0..32 {
+            x.state_mut().set(r, lay.a_cols[k] as usize, (a >> k) & 1 == 1);
+            x.state_mut().set(r, lay.b_cols[k] as usize, (b >> k) & 1 == 1);
+        }
+    }
+    x.run_program(&prog, None).unwrap();
+    for (r, &(a, b)) in pairs.iter().enumerate() {
+        let mut v = 0u64;
+        for i in 0..64 {
+            if x.get(r, lay.result.col(i) as usize) {
+                v |= 1 << i;
+            }
+        }
+        assert_eq!(v, a * b, "row {r}: {a}*{b}");
+    }
+}
+
+#[test]
+fn lane_sim_equals_crossbar_for_all_functions() {
+    // The MC engine (lane sim) and the array simulator must agree.
+    let mut rng = Pcg64::new(9, 0);
+    for n in [4u32, 8, 16] {
+        for (prog, a_cols, b_cols, out_cols) in [
+            {
+                let (p, l) = multpim_program(n);
+                (p, l.a_cols.clone(), l.b_cols.clone(), l.result.cols())
+            },
+            {
+                let (p, l) = naive_mult_program(n);
+                (p, l.a_cols.clone(), l.b_cols.clone(), l.result.cols())
+            },
+            {
+                let (p, l) = ripple_adder(n);
+                let mut outs = l.sum.cols();
+                outs.push(l.cout);
+                (p, l.a.cols(), l.b.cols(), outs)
+            },
+        ] {
+            let a = rng.next_u64() & ((1 << n) - 1);
+            let b = rng.next_u64() & ((1 << n) - 1);
+            let mut lane = LaneSim::new(prog.width as usize);
+            lane.load(&a_cols, a);
+            lane.load(&b_cols, b);
+            lane.run(&prog, FaultPlan::None);
+            let lane_out = lane.read(&out_cols);
+
+            let mut x = Crossbar::new(4, prog.width as usize);
+            if prog.partition_starts.len() > 1 {
+                x.set_col_partitions(Partitions::new(prog.width, prog.partition_starts.clone()));
+            }
+            for k in 0..n as usize {
+                x.state_mut().set(0, a_cols[k] as usize, (a >> k) & 1 == 1);
+                x.state_mut().set(0, b_cols[k] as usize, (b >> k) & 1 == 1);
+            }
+            x.run_program(&prog, None).unwrap();
+            let mut xbar_out = 0u64;
+            for (i, &c) in out_cols.iter().enumerate() {
+                if x.get(0, c as usize) {
+                    xbar_out |= 1 << i;
+                }
+            }
+            assert_eq!(lane_out, xbar_out, "{} n={n}", prog.name);
+        }
+    }
+}
+
+#[test]
+fn multiplier_latency_hierarchy() {
+    // Partition-parallel MultPIM must scale ~linearly in N (cycles),
+    // the naive baseline ~quadratically.
+    let (m8, _) = multpim_program(8);
+    let (m32, _) = multpim_program(32);
+    let ratio_mp = m32.cycles() as f64 / m8.cycles() as f64;
+    assert!((3.0..6.5).contains(&ratio_mp), "multpim 8->32 cycle ratio {ratio_mp}");
+    let (n8, _) = naive_mult_program(8);
+    let (n32, _) = naive_mult_program(32);
+    let ratio_nv = n32.cycles() as f64 / n8.cycles() as f64;
+    assert!(ratio_nv > 10.0, "naive 8->32 cycle ratio {ratio_nv}");
+}
+
+#[test]
+fn gate_count_drives_fig4_regime() {
+    // The 32-bit multiplier's soft-error site count G, with measured
+    // masking alpha~0.5..0.8, must put the baseline curve in the paper's
+    // regime: p_mult(1e-9) in [2e-6, 2e-5].
+    let (prog, _) = multpim_program(32);
+    let g = prog.logic_gates_per_lane() as f64;
+    let p_low = 1.0 - (1.0 - 0.4 * 1e-9f64).powf(g);
+    let p_high = 1.0 - (1.0 - 0.9 * 1e-9f64).powf(g);
+    assert!(p_low > 1e-6 && p_high < 2e-5, "G={g}: [{p_low}, {p_high}]");
+}

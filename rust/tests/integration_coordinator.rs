@@ -1,0 +1,115 @@
+//! Integration: the coordinator under load — correctness, batching
+//! efficiency, backpressure, reliability policies on the request path.
+
+use std::time::Duration;
+
+use remus::coordinator::{Coordinator, CoordinatorConfig};
+use remus::errs::ErrorModel;
+use remus::mmpu::{FunctionKind, ReliabilityPolicy};
+use remus::tmr::TmrMode;
+
+#[test]
+fn thousand_requests_all_correct() {
+    let coord = Coordinator::start(CoordinatorConfig {
+        workers: 4,
+        rows: 64,
+        cols: 512,
+        max_batch: 64,
+        // Generous window: under `cargo test` CPU contention the submit
+        // loop itself can take hundreds of us; batching behaviour with a
+        // tight window is covered by the unit tests and perf bench.
+        max_wait: Duration::from_millis(20),
+        ..Default::default()
+    })
+    .unwrap();
+    let n = 1000u64;
+    let rxs: Vec<_> =
+        (0..n).map(|i| (i, coord.submit(FunctionKind::Mul(8), i % 251, (i * 3) % 251))).collect();
+    for (i, rx) in rxs {
+        let r = rx.recv_timeout(Duration::from_secs(30)).expect("response");
+        assert_eq!(r.value, (i % 251) * ((i * 3) % 251), "request {i}");
+    }
+    let m = coord.metrics();
+    assert_eq!(m.completed, n);
+    assert!(
+        m.mean_batch_size() > 4.0,
+        "dynamic batching must aggregate: mean={}",
+        m.mean_batch_size()
+    );
+    coord.shutdown();
+}
+
+#[test]
+fn reliable_policy_on_request_path() {
+    let coord = Coordinator::start(CoordinatorConfig {
+        workers: 2,
+        rows: 32,
+        cols: 1024,
+        policy: ReliabilityPolicy { ecc_m: None, tmr: TmrMode::Serial },
+        errors: ErrorModel::direct_only(1e-6),
+        max_batch: 32,
+        max_wait: Duration::from_micros(200),
+        ..Default::default()
+    })
+    .unwrap();
+    let n = 256u64;
+    let rxs: Vec<_> =
+        (0..n).map(|i| (i, coord.submit(FunctionKind::Add(16), i * 17, i * 5))).collect();
+    let mut correct = 0;
+    for (i, rx) in rxs {
+        let r = rx.recv_timeout(Duration::from_secs(30)).expect("response");
+        if r.value == i * 22 {
+            correct += 1;
+        }
+    }
+    // At p=1e-6 with TMR, essentially everything is correct.
+    assert!(correct >= n - 1, "correct {correct}/{n}");
+    coord.shutdown();
+}
+
+#[test]
+fn backpressure_does_not_deadlock_or_drop() {
+    // Tiny queues + one worker + a burst far larger than capacity.
+    let coord = Coordinator::start(CoordinatorConfig {
+        workers: 1,
+        rows: 8,
+        cols: 256,
+        max_batch: 8,
+        max_wait: Duration::from_micros(50),
+        worker_queue: 1,
+        ..Default::default()
+    })
+    .unwrap();
+    let n = 512u64;
+    let rxs: Vec<_> = (0..n).map(|i| coord.submit(FunctionKind::Xor(8), i % 256, 0xAA)).collect();
+    let mut got = 0;
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let r = rx.recv_timeout(Duration::from_secs(60)).expect("no drops under pressure");
+        assert_eq!(r.value, (i as u64 % 256) ^ 0xAA);
+        got += 1;
+    }
+    assert_eq!(got, n);
+    coord.shutdown();
+}
+
+#[test]
+fn latency_histogram_populates() {
+    let coord = Coordinator::start(CoordinatorConfig {
+        workers: 2,
+        rows: 16,
+        cols: 256,
+        max_batch: 16,
+        max_wait: Duration::from_micros(100),
+        ..Default::default()
+    })
+    .unwrap();
+    let rxs: Vec<_> = (0..64u64).map(|i| coord.submit(FunctionKind::Add(8), i, i)).collect();
+    for rx in rxs {
+        rx.recv_timeout(Duration::from_secs(30)).unwrap();
+    }
+    let m = coord.metrics();
+    let p50 = m.latency_percentile_us(50.0);
+    let p99 = m.latency_percentile_us(99.0);
+    assert!(p50 > 0 && p99 >= p50, "p50={p50} p99={p99}");
+    coord.shutdown();
+}

@@ -1,0 +1,135 @@
+//! Integration: ECC under realistic error processes (retention aging,
+//! scrub loops), and the Fig. 2 asymmetry end to end.
+
+use remus::ecc::{DiagonalEcc, HorizontalEcc};
+use remus::errs::{ErrorModel, Injector};
+use remus::util::bitmat::BitMatrix;
+use remus::util::rng::Pcg64;
+
+fn random_state(n: usize, seed: u64) -> BitMatrix {
+    let mut r = Pcg64::new(seed, 0);
+    BitMatrix::from_fn(n, n, |_, _| r.bernoulli(0.5))
+}
+
+#[test]
+fn scrub_loop_under_retention_keeps_data_alive() {
+    // 256x256 array aging in epochs; scrubbing after each epoch keeps
+    // corruption near zero while the unscrubbed copy accumulates damage.
+    let n = 256;
+    let golden = random_state(n, 42);
+    let mut protected = golden.clone();
+    let mut unprotected = golden.clone();
+    let mut ecc = DiagonalEcc::new(n, n, 16);
+    ecc.encode(&protected);
+    let model = ErrorModel { lambda_retention: 4e-9, ..ErrorModel::none() };
+    let mut inj = Injector::new(model, 99, 0);
+    let epochs = 20;
+    let dt = 1000.0; // ~0.26 expected flips/epoch/array... scale up:
+    for _ in 0..epochs {
+        // age both arrays identically (clone the injector stream).
+        let mut flips = vec![];
+        inj.retention(n * n, dt, |i| flips.push(i));
+        for &i in &flips {
+            protected.flip(i / n, i % n);
+            unprotected.flip(i / n, i % n);
+        }
+        ecc.correct(&mut protected);
+    }
+    let diff = |m: &BitMatrix| {
+        (0..n)
+            .flat_map(|r| (0..n).map(move |c| (r, c)))
+            .filter(|&(r, c)| m.get(r, c) != golden.get(r, c))
+            .count()
+    };
+    let d_prot = diff(&protected);
+    let d_unprot = diff(&unprotected);
+    assert!(d_unprot > 0, "aging must corrupt the unprotected copy");
+    assert!(
+        d_prot <= d_unprot / 4,
+        "scrubbed {d_prot} vs unscrubbed {d_unprot}"
+    );
+}
+
+#[test]
+fn burst_beyond_single_error_is_detected_not_miscorrected() {
+    let n = 64;
+    let golden = random_state(n, 5);
+    let mut state = golden.clone();
+    let mut ecc = DiagonalEcc::new(n, n, 16);
+    ecc.encode(&state);
+    // 3 errors in one block: must be flagged, and correction must not
+    // invent new damage beyond the block.
+    state.flip(3, 4);
+    state.flip(5, 9);
+    state.flip(10, 12);
+    let out = ecc.correct(&mut state);
+    assert!(!out.uncorrectable_blocks.is_empty());
+    let wrong: usize = (0..n)
+        .flat_map(|r| (0..n).map(move |c| (r, c)))
+        .filter(|&(r, c)| state.get(r, c) != golden.get(r, c))
+        .count();
+    assert!(wrong <= 4, "correction must not cascade: {wrong}");
+}
+
+#[test]
+fn fig2_asymmetry_in_practice() {
+    // Simulated op sequences: K in-row ops then K in-column ops. The
+    // horizontal code's update cycles blow up on the in-column half;
+    // the diagonal code stays flat. (Cost-model cycles, tracked by the
+    // engines themselves.)
+    let n = 512;
+    let state = random_state(n, 11);
+    let k = 16;
+
+    let mut diag = DiagonalEcc::new(n, n, 16);
+    diag.encode(&state);
+    let mut horiz = HorizontalEcc::new(n, n, 8);
+    horiz.encode(&state);
+    let (d0, h0) = (diag.stats.update_cycles, horiz.stats.update_cycles);
+
+    let col = state.col_bitvec(7);
+    let row = state.row_bitvec(3);
+    for _ in 0..k {
+        diag.note_col_write(7, &col, &col);
+        horiz.note_col_write(7, &col, &col);
+    }
+    let d_inrow = diag.stats.update_cycles - d0;
+    let h_inrow = horiz.stats.update_cycles - h0;
+    for _ in 0..k {
+        diag.note_row_write(3, &row, &row);
+        horiz.note_row_write(3, &row, &row);
+    }
+    let d_total = diag.stats.update_cycles - d0;
+    let h_total = horiz.stats.update_cycles - h0;
+    let d_incol = d_total - d_inrow;
+    let h_incol = h_total - h_inrow;
+    assert_eq!(d_inrow, d_incol, "diagonal: same O(1) cost both ways");
+    assert!(h_incol >= (n as u64) * (k as u64), "horizontal in-column is O(n) per op");
+    assert!(h_incol > 50 * h_inrow, "the Fig. 2 gap");
+}
+
+#[test]
+fn ecc_storage_overheads() {
+    let diag = DiagonalEcc::new(1024, 1024, 16);
+    assert!((diag.overhead_ratio() - 0.1875).abs() < 1e-12, "3m per m^2");
+    let horiz = HorizontalEcc::new(1024, 1024, 8);
+    assert!((horiz.overhead_ratio() - 0.125).abs() < 1e-12);
+}
+
+#[test]
+fn every_single_bit_position_corrects_in_16x16_block() {
+    // Exhaustive over one whole block: all 256 positions.
+    let n = 16;
+    let golden = random_state(n, 17);
+    for r in 0..n {
+        for c in 0..n {
+            let mut state = golden.clone();
+            let mut ecc = DiagonalEcc::new(n, n, 16);
+            ecc.encode(&state);
+            state.flip(r, c);
+            let out = ecc.correct(&mut state);
+            assert_eq!(out.corrected_bits, vec![(r, c)], "position ({r},{c})");
+            assert_eq!(state, golden);
+        }
+    }
+}

@@ -1,0 +1,154 @@
+//! Integration: the mMPU controller across reliability policies.
+
+use remus::errs::ErrorModel;
+use remus::mmpu::{controller::quick_exec, FunctionKind, Mmpu, MmpuConfig, ReliabilityPolicy};
+use remus::mmpu::functions::FunctionSpec;
+use remus::tmr::TmrMode;
+use remus::util::rng::Pcg64;
+
+#[test]
+fn all_functions_all_policies_clean() {
+    let mut rng = Pcg64::new(4, 0);
+    for kind in [FunctionKind::Add(16), FunctionKind::Mul(8), FunctionKind::Xor(16)] {
+        for tmr in [TmrMode::Off, TmrMode::Serial, TmrMode::SemiParallel] {
+            for ecc in [None, Some(16)] {
+                let a: Vec<u64> =
+                    (0..12).map(|_| rng.next_u64() & ((1 << kind.operand_bits()) - 1)).collect();
+                let b: Vec<u64> =
+                    (0..12).map(|_| rng.next_u64() & ((1 << kind.operand_bits()) - 1)).collect();
+                let r = quick_exec(
+                    kind,
+                    ReliabilityPolicy { ecc_m: ecc, tmr },
+                    ErrorModel::none(),
+                    9,
+                    &a,
+                    &b,
+                )
+                .unwrap_or_else(|e| panic!("{kind:?} {tmr:?} ecc={ecc:?}: {e:#}"));
+                for i in 0..12 {
+                    let want = match kind {
+                        FunctionKind::Add(_) => a[i] + b[i],
+                        FunctionKind::Mul(_) | FunctionKind::MulNaive(_) => a[i] * b[i],
+                        FunctionKind::Xor(_) => a[i] ^ b[i],
+                    };
+                    assert_eq!(r.values[i], want, "{kind:?} {tmr:?} ecc={ecc:?} item {i}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn parallel_tmr_through_controller() {
+    let a: Vec<u64> = (0..8).map(|i| i * 3 + 1).collect();
+    let b: Vec<u64> = (0..8).map(|i| i + 200).collect();
+    let r = quick_exec(
+        FunctionKind::Add(16),
+        ReliabilityPolicy { ecc_m: None, tmr: TmrMode::Parallel },
+        ErrorModel::none(),
+        3,
+        &a,
+        &b,
+    )
+    .unwrap();
+    for i in 0..8 {
+        assert_eq!(r.values[i], a[i] + b[i]);
+    }
+}
+
+#[test]
+fn reliability_policy_cycle_accounting() {
+    let a: Vec<u64> = vec![5; 8];
+    let b: Vec<u64> = vec![7; 8];
+    let base = quick_exec(
+        FunctionKind::Mul(8),
+        ReliabilityPolicy::none(),
+        ErrorModel::none(),
+        1,
+        &a,
+        &b,
+    )
+    .unwrap();
+    let tmr = quick_exec(
+        FunctionKind::Mul(8),
+        ReliabilityPolicy { ecc_m: None, tmr: TmrMode::Serial },
+        ErrorModel::none(),
+        1,
+        &a,
+        &b,
+    )
+    .unwrap();
+    let full = quick_exec(
+        FunctionKind::Mul(8),
+        ReliabilityPolicy::full(),
+        ErrorModel::none(),
+        1,
+        &a,
+        &b,
+    )
+    .unwrap();
+    assert!(base.ecc_cycles == 0 && base.compute_cycles > 0);
+    let ratio = tmr.compute_cycles as f64 / base.compute_cycles as f64;
+    assert!((2.5..3.6).contains(&ratio), "serial TMR cycles x{ratio}");
+    assert!(full.ecc_cycles > 0);
+    // The headline combination: ECC cycles are a small fraction of the
+    // multiplier's compute cycles.
+    assert!((full.ecc_cycles as f64) < 0.3 * full.compute_cycles as f64);
+}
+
+#[test]
+fn multi_crossbar_fleet_is_independent() {
+    let cfg = MmpuConfig {
+        rows: 16,
+        cols: 512,
+        num_crossbars: 3,
+        policy: ReliabilityPolicy::none(),
+        errors: ErrorModel::direct_only(1e-3),
+        seed: 5,
+        ..Default::default()
+    };
+    let mut mmpu = Mmpu::new(cfg);
+    let func = FunctionSpec::build(FunctionKind::Mul(8));
+    let a: Vec<u64> = (0..16).collect();
+    let b: Vec<u64> = (0..16).map(|i| i + 3).collect();
+    let mut flip_counts = vec![];
+    for id in 0..3 {
+        mmpu.exec_vector(id, &func, &a, &b).unwrap();
+        flip_counts.push(mmpu.injector_counters(id).gate_flips);
+    }
+    // Independent error streams: overwhelmingly unlikely to be all equal
+    // AND stats accumulate per crossbar.
+    assert!(
+        !(flip_counts[0] == flip_counts[1] && flip_counts[1] == flip_counts[2]),
+        "streams must differ: {flip_counts:?}"
+    );
+    for id in 0..3 {
+        assert!(mmpu.stats(id).cycles > 0);
+    }
+}
+
+#[test]
+fn mul_naive_baseline_agrees_with_multpim() {
+    let a: Vec<u64> = (0..8).map(|i| i * 29 % 256).collect();
+    let b: Vec<u64> = (0..8).map(|i| i * 31 % 256).collect();
+    let fast = quick_exec(
+        FunctionKind::Mul(8),
+        ReliabilityPolicy::none(),
+        ErrorModel::none(),
+        2,
+        &a,
+        &b,
+    )
+    .unwrap();
+    let naive = quick_exec(
+        FunctionKind::MulNaive(8),
+        ReliabilityPolicy::none(),
+        ErrorModel::none(),
+        2,
+        &a,
+        &b,
+    )
+    .unwrap();
+    assert_eq!(fast.values, naive.values);
+    assert!(naive.compute_cycles > 3 * fast.compute_cycles, "partitions win");
+}

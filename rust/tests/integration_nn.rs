@@ -1,0 +1,86 @@
+//! Integration: the MicroNet case study — build-time-trained weights
+//! running through the float reference and the full mMPU path.
+//! Requires `make artifacts`.
+
+use remus::errs::ErrorModel;
+use remus::mmpu::{Mmpu, MmpuConfig, ReliabilityPolicy};
+use remus::nn::micronet::{EvalSet, MicroNet};
+use remus::nn::quant::{acc_to_f32, Fixed};
+use remus::tmr::TmrMode;
+
+#[test]
+fn weights_load_and_reference_accuracy() {
+    let net = MicroNet::load_default().unwrap();
+    let eval = EvalSet::load_default().unwrap();
+    assert_eq!(net.indim, eval.indim);
+    let logits = net.forward_f32(&eval.x, eval.n);
+    let acc = net.accuracy(&logits, &eval.labels);
+    assert!(acc > 0.95, "build-time training must generalize: acc={acc}");
+}
+
+#[test]
+fn mmpu_inference_clean_matches_reference_classes() {
+    let net = MicroNet::load_default().unwrap();
+    let eval = EvalSet::load_default().unwrap().take(16);
+    let mut mmpu = Mmpu::new(MmpuConfig {
+        rows: 128,
+        cols: 512,
+        num_crossbars: 1,
+        policy: ReliabilityPolicy::none(),
+        errors: ErrorModel::none(),
+        seed: 3,
+    });
+    let mmpu_logits = net.forward_mmpu(&mut mmpu, &eval.x, eval.n).unwrap();
+    let ref_logits = net.forward_f32(&eval.x, eval.n);
+    // Q8.8 quantization error is small; classifications must agree.
+    let a = net.argmax(&mmpu_logits, eval.n);
+    let b = net.argmax(&ref_logits, eval.n);
+    assert_eq!(a, b, "clean in-memory inference matches float reference");
+    // And logits are numerically close.
+    for (x, y) in mmpu_logits.iter().zip(&ref_logits) {
+        assert!((x - y).abs() < 0.35, "{x} vs {y}");
+    }
+}
+
+#[test]
+fn gate_errors_degrade_then_tmr_recovers() {
+    let net = MicroNet::load_default().unwrap();
+    let eval = EvalSet::load_default().unwrap().take(12);
+    // ~2368 in-memory mults/sample x G~2.6k gates: at p = 1e-5 the
+    // unprotected net is mostly wrong while TMR still classifies well
+    // (at much higher p, e.g. 2e-4, even TMR collapses — see the
+    // nn_inference example sweep).
+    let p = 1e-5;
+    let run = |tmr: TmrMode, seed: u64| -> f64 {
+        let mut mmpu = Mmpu::new(MmpuConfig {
+            rows: 128,
+            cols: 2048,
+            num_crossbars: 1,
+            policy: ReliabilityPolicy { ecc_m: None, tmr },
+            errors: ErrorModel::direct_only(p),
+            seed,
+        });
+        let logits = net.forward_mmpu(&mut mmpu, &eval.x, eval.n).unwrap();
+        net.accuracy(&logits, &eval.labels)
+    };
+    let noisy = run(TmrMode::Off, 11);
+    let tmr = run(TmrMode::Serial, 11);
+    assert!(
+        tmr > noisy,
+        "TMR accuracy {tmr} must beat unprotected {noisy} at p={p}"
+    );
+    assert!(tmr > 0.5, "TMR keeps the network usable: {tmr}");
+    assert!(noisy < 0.6, "unprotected must visibly degrade: {noisy}");
+}
+
+#[test]
+fn quantization_path_is_sound() {
+    // The Q8.8 product path used by forward_mmpu.
+    let xs = [-3.5f32, 0.0, 1.25, 7.75];
+    for &a in &xs {
+        for &b in &xs {
+            let p = acc_to_f32(Fixed::from_f32(a).product_i64(Fixed::from_f32(b)));
+            assert!((p - a * b).abs() < 0.06, "{a}*{b}={p}");
+        }
+    }
+}

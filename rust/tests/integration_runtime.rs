@@ -1,0 +1,212 @@
+//! Integration: the PJRT path. The same encoded program bytes must drive
+//! the native bit-packed simulator and the AOT (JAX/Pallas -> HLO -> PJRT)
+//! executor to identical final states — clean and under identical
+//! injected error masks. Requires `make artifacts`.
+
+use remus::arith::adder::ripple_adder;
+use remus::arith::multiplier::multpim_program;
+use remus::ecc::DiagonalEcc;
+use remus::errs::{ErrorModel, Injector};
+use remus::isa::microop::Gate;
+use remus::nn::micronet::MicroNet;
+use remus::runtime::{Manifest, Runtime, XlaCrossbar};
+use remus::util::bitmat::BitMatrix;
+use remus::util::rng::Pcg64;
+use remus::xbar::{Crossbar, Partitions};
+
+fn runtime() -> Runtime {
+    Runtime::new().expect("artifacts present? run `make artifacts`")
+}
+
+/// Native replay of an encoded program + explicit masks (reference for
+/// the cross-validation).
+fn native_replay(state: &BitMatrix, prog: &remus::isa::program::Program, masks: &[f32]) -> BitMatrix {
+    let rows = state.rows();
+    let mut out = state.clone();
+    for (s, op) in prog.flatten().iter().enumerate() {
+        // apply gate
+        for r in 0..rows {
+            let a = out.get(r, op.a as usize);
+            let b = out.get(r, op.b as usize);
+            let c = out.get(r, op.c as usize);
+            let prev = out.get(r, op.out as usize);
+            let mut v = op.gate.eval_bit(a, b, c, prev);
+            if op.gate != Gate::Nop && masks[s * rows + r] > 0.5 {
+                v = !v;
+            }
+            out.set(r, op.out as usize, v);
+        }
+    }
+    out
+}
+
+#[test]
+fn pjrt_client_boots() {
+    let rt = runtime();
+    let platform = rt.platform().to_lowercase();
+    assert!(platform == "cpu" || platform == "host", "platform = {platform}");
+    assert!(rt.manifest().artifacts_of_kind("gate_scan").count() >= 2);
+}
+
+#[test]
+fn gate_scan_clean_matches_native_crossbar() {
+    let (prog, lay) = ripple_adder(8);
+    let mut rng = Pcg64::new(21, 0);
+    // shapes must match an artifact exactly: 128x128 (s=256 fits 97 ops)
+    let rows = 128;
+    let mut init = BitMatrix::zeros(rows, 128);
+    let pairs: Vec<(u64, u64)> =
+        (0..rows).map(|_| (rng.next_u64() & 0xFF, rng.next_u64() & 0xFF)).collect();
+    for (r, &(a, b)) in pairs.iter().enumerate() {
+        for k in 0..8 {
+            init.set(r, lay.a.col(k) as usize, (a >> k) & 1 == 1);
+            init.set(r, lay.b.col(k) as usize, (b >> k) & 1 == 1);
+        }
+    }
+    // Native path.
+    let mut x = Crossbar::new(rows, 128);
+    *x.state_mut() = init.clone();
+    x.run_program(&prog, None).unwrap();
+    // PJRT path.
+    let mut rt = runtime();
+    let mut xla = XlaCrossbar::new(rows, 128);
+    *xla.state_mut() = init;
+    xla.run_program(&mut rt, &prog).unwrap();
+    assert_eq!(x.state(), xla.state(), "native and AOT paths must agree bit-exactly");
+    for (r, &(a, b)) in pairs.iter().enumerate() {
+        assert!(xla.state().get(r, lay.sum.col(0) as usize) == ((a + b) & 1 == 1), "row {r}");
+    }
+}
+
+#[test]
+fn gate_scan_with_masks_matches_native_replay() {
+    let (prog, _) = ripple_adder(8);
+    let rows = 128;
+    let mut rng = Pcg64::new(33, 1);
+    let mut init = BitMatrix::zeros(rows, 128);
+    for r in 0..rows {
+        for c in 0..24 {
+            init.set(r, c, rng.bernoulli(0.5));
+        }
+    }
+    let mut rt = runtime();
+    let mut xla = XlaCrossbar::new(rows, 128);
+    *xla.state_mut() = init.clone();
+    let enc = xla.encode_for(&rt, &prog).unwrap();
+    // Random masks at 2 %.
+    let masks: Vec<f32> =
+        (0..enc.steps * rows).map(|_| if rng.bernoulli(0.02) { 1.0 } else { 0.0 }).collect();
+    xla.run_program_with_masks(&mut rt, &prog, &masks).unwrap();
+    let want = native_replay(&init, &prog, &masks);
+    assert_eq!(xla.state(), &want, "masked execution must agree with native replay");
+}
+
+#[test]
+fn gate_scan_multpim8_product_via_pjrt() {
+    let (prog, lay) = multpim_program(8);
+    assert!(lay.width <= 128, "fits the 128-col artifact");
+    let rows = 128;
+    let mut rt = runtime();
+    let mut xla = XlaCrossbar::new(rows, 128);
+    let mut rng = Pcg64::new(55, 0);
+    let pairs: Vec<(u64, u64)> =
+        (0..rows).map(|_| (rng.next_u64() & 0xFF, rng.next_u64() & 0xFF)).collect();
+    for (r, &(a, b)) in pairs.iter().enumerate() {
+        for k in 0..8 {
+            xla.state_mut().set(r, lay.a_cols[k] as usize, (a >> k) & 1 == 1);
+            xla.state_mut().set(r, lay.b_cols[k] as usize, (b >> k) & 1 == 1);
+        }
+    }
+    xla.run_program(&mut rt, &prog).unwrap();
+    for (r, &(a, b)) in pairs.iter().enumerate() {
+        let mut v = 0u64;
+        for i in 0..16 {
+            if xla.state().get(r, lay.result.col(i) as usize) {
+                v |= 1 << i;
+            }
+        }
+        assert_eq!(v, a * b, "row {r}: a whole 8-bit MultPIM through PJRT");
+    }
+}
+
+#[test]
+fn gate_scan_error_sampling_statistics() {
+    // The injector-driven mask generator fires at ~p_gate on logic steps.
+    let (prog, _) = ripple_adder(8);
+    let rows = 128;
+    let rt = runtime();
+    let xla = XlaCrossbar::new(rows, 128);
+    let enc = xla.encode_for(&rt, &prog).unwrap();
+    let mut inj = Injector::new(ErrorModel::direct_only(0.01), 1, 0);
+    let masks = Runtime::sample_err_masks(&enc, rows, &mut inj);
+    let ones: usize = masks.iter().filter(|&&v| v > 0.5).count();
+    let sites = prog.logic_gates_per_lane() * rows;
+    let expect = sites as f64 * 0.01;
+    assert!((ones as f64) > expect * 0.5 && (ones as f64) < expect * 2.0, "{ones} vs {expect}");
+}
+
+#[test]
+fn vote3_artifact_matches_reference() {
+    let mut rt = runtime();
+    let (r, c) = (64, 64);
+    let mut rng = Pcg64::new(77, 0);
+    let mk = |rng: &mut Pcg64| BitMatrix::from_fn(r, c, |_, _| rng.bernoulli(0.5));
+    let a = mk(&mut rng);
+    let b = mk(&mut rng);
+    let cc = mk(&mut rng);
+    let zeros = vec![0f32; r * c];
+    let got = rt.run_vote3(&a, &b, &cc, &zeros, &zeros).unwrap();
+    for i in 0..r {
+        for j in 0..c {
+            let maj = (a.get(i, j) as u8 + b.get(i, j) as u8 + cc.get(i, j) as u8) >= 2;
+            assert_eq!(got.get(i, j), maj, "({i},{j})");
+        }
+    }
+}
+
+#[test]
+fn diag_parity_artifact_matches_rust_ecc() {
+    // The Pallas barrel-shift kernel and the rust DiagonalEcc must
+    // produce identical diagonal parities.
+    let mut rt = runtime();
+    let (bsz, m) = (64, 16);
+    let mut rng = Pcg64::new(88, 0);
+    let blocks: Vec<f32> =
+        (0..bsz * m * m).map(|_| if rng.bernoulli(0.5) { 1.0 } else { 0.0 }).collect();
+    let got = rt.run_diag_parity(&blocks, bsz, m).unwrap();
+    for b in 0..bsz {
+        let bm = BitMatrix::from_f32_row_major(m, m, &blocks[b * m * m..(b + 1) * m * m]);
+        let mut ecc = DiagonalEcc::new(m, m, m);
+        ecc.encode(&bm);
+        // verify through syndromes: a clean encode must match the kernel's
+        // parities; compare via re-derivation.
+        for d in 0..m {
+            let lead: bool = (0..m).fold(false, |acc, i| acc ^ bm.get(i, (i + d) % m));
+            let cnt: bool = (0..m).fold(false, |acc, i| acc ^ bm.get(i, (d + m - i % m) % m));
+            assert_eq!(got[b * 2 * m + d] > 0.5, lead, "block {b} lead {d}");
+            assert_eq!(got[b * 2 * m + m + d] > 0.5, cnt, "block {b} counter {d}");
+        }
+    }
+}
+
+#[test]
+fn micronet_artifact_matches_rust_forward() {
+    let manifest = Manifest::load_default().unwrap();
+    let net = MicroNet::load(&manifest).unwrap();
+    let mut rt = runtime();
+    let batch = 64;
+    let mut rng = Pcg64::new(99, 0);
+    let x: Vec<f32> =
+        (0..batch * net.indim).map(|_| if rng.bernoulli(0.5) { 1.0 } else { 0.0 }).collect();
+    let ones1 = vec![1f32; net.indim * net.hidden];
+    let zeros1 = vec![0f32; net.indim * net.hidden];
+    let ones2 = vec![1f32; net.hidden * net.classes];
+    let zeros2 = vec![0f32; net.hidden * net.classes];
+    let got = rt
+        .run_micronet(batch, &x, &net.w1, &net.b1, &net.w2, &net.b2, &ones1, &zeros1, &ones2, &zeros2)
+        .unwrap();
+    let want = net.forward_f32(&x, batch);
+    for (g, w) in got.iter().zip(&want) {
+        assert!((g - w).abs() < 1e-3, "{g} vs {w}");
+    }
+}

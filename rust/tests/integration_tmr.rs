@@ -1,0 +1,138 @@
+//! Integration: TMR reliability statistics on the crossbar (Fig. 3 at
+//! scale) and the paper's trade-off claims measured end to end.
+
+use remus::arith::multiplier::multpim_program;
+use remus::errs::{ErrorModel, Injector};
+use remus::tmr::{TmrEngine, TmrMode};
+use remus::util::rng::Pcg64;
+use remus::xbar::{Crossbar, Partitions};
+
+/// Run n-bit multiply across rows under a TMR mode; count correct rows.
+fn run_mult_mode(
+    n: u32,
+    rows: usize,
+    mode: TmrMode,
+    p_gate: f64,
+    seed: u64,
+) -> (usize, usize) {
+    let (prog, lay) = multpim_program(n);
+    let width = match mode {
+        TmrMode::Serial => TmrEngine::serial_layout(&prog).width,
+        TmrMode::Parallel => 3 * prog.width + 2 * n + 2,
+        _ => prog.width,
+    } as usize;
+    let mut x = Crossbar::new(rows, width);
+    if mode != TmrMode::Parallel && lay.partition_starts.len() > 1 {
+        x.set_col_partitions(Partitions::new(width as u32, {
+            let mut s = lay.partition_starts.clone();
+            s.retain(|&v| (v as usize) < width);
+            s
+        }));
+    }
+    let mut rng = Pcg64::new(seed, 3);
+    let items = if mode == TmrMode::SemiParallel { (rows - 1) / 3 } else { rows };
+    let pairs: Vec<(u64, u64)> = (0..items)
+        .map(|_| (rng.next_u64() & ((1 << n) - 1), rng.next_u64() & ((1 << n) - 1)))
+        .collect();
+    let reps = if mode == TmrMode::SemiParallel { 3 } else { 1 };
+    let stride = if reps == 3 { items } else { 0 };
+    for (i, &(a, b)) in pairs.iter().enumerate() {
+        for rep in 0..reps {
+            let r = i + rep * stride;
+            for k in 0..n as usize {
+                x.state_mut().set(r, lay.a_cols[k] as usize, (a >> k) & 1 == 1);
+                x.state_mut().set(r, lay.b_cols[k] as usize, (b >> k) & 1 == 1);
+            }
+        }
+    }
+    let mut inj = Injector::new(ErrorModel::direct_only(p_gate), seed, 1);
+    let run = TmrEngine::new(mode).execute(&mut x, &prog, Some(&mut inj)).unwrap();
+    let correct = pairs
+        .iter()
+        .enumerate()
+        .filter(|&(i, &(a, b))| {
+            let mut v = 0u64;
+            for (k, &c) in run.output_cols.iter().enumerate() {
+                if x.get(i, c as usize) {
+                    v |= 1 << k;
+                }
+            }
+            v == a * b
+        })
+        .count();
+    (correct, items)
+}
+
+#[test]
+fn serial_tmr_statistically_beats_baseline() {
+    // p chosen so the baseline fails often but single-copy errors stay
+    // mostly isolated — TMR's sweet spot (Fig. 3b).
+    let p = 3e-5;
+    let mut base_ok = 0;
+    let mut tmr_ok = 0;
+    let mut total = 0;
+    for seed in 0..6 {
+        let (c1, t) = run_mult_mode(8, 128, TmrMode::Off, p, seed);
+        let (c2, _) = run_mult_mode(8, 128, TmrMode::Serial, p, seed + 100);
+        base_ok += c1;
+        tmr_ok += c2;
+        total += t;
+    }
+    let base_fail = total - base_ok;
+    let tmr_fail = total - tmr_ok;
+    assert!(base_fail > 0, "baseline must fail at p={p} over {total} rows");
+    assert!(
+        (tmr_fail as f64) < (base_fail as f64) * 0.5,
+        "TMR {tmr_fail} vs baseline {base_fail} failures"
+    );
+}
+
+#[test]
+fn semi_parallel_tmr_also_corrects() {
+    let p = 3e-5;
+    let mut base_fail = 0usize;
+    let mut semi_fail = 0usize;
+    for seed in 0..6 {
+        let (c1, t1) = run_mult_mode(8, 127, TmrMode::Off, p, seed);
+        let (c2, t2) = run_mult_mode(8, 127, TmrMode::SemiParallel, p, seed + 50);
+        base_fail += t1 - c1;
+        semi_fail += t2 - c2;
+    }
+    assert!(base_fail > 0);
+    assert!(semi_fail * 3 < base_fail * 2, "semi {semi_fail} vs base/3 {base_fail}");
+}
+
+#[test]
+fn clean_runs_identical_across_modes() {
+    for mode in [TmrMode::Off, TmrMode::Serial, TmrMode::SemiParallel] {
+        let (correct, items) = run_mult_mode(8, 64, mode, 0.0, 7);
+        assert_eq!(correct, items, "{mode:?} must be exact without errors");
+    }
+}
+
+#[test]
+fn measured_tradeoffs_on_multiplier() {
+    // The §V headline, measured on the real multiplier program.
+    let (prog, _) = multpim_program(8);
+    let base_width = TmrEngine::serial_layout(&prog).width as usize;
+    let mut xb = Crossbar::new(16, base_width);
+    let base = TmrEngine::new(TmrMode::Off).execute(&mut xb, &prog, None).unwrap();
+    let mut xs = Crossbar::new(16, base_width);
+    let serial = TmrEngine::new(TmrMode::Serial).execute(&mut xs, &prog, None).unwrap();
+    let ratio = serial.cycles as f64 / base.cycles as f64;
+    assert!((2.7..3.5).contains(&ratio), "serial latency x{ratio}");
+    // Serial area stays ~1x: the extra columns are only 4 output copies.
+    assert!((serial.area_cols as f64) < 1.4 * prog.width as f64);
+    // Semi-parallel: area identical, items/run = (rows-1)/3.
+    let mut xsp = Crossbar::new(31, prog.width as usize);
+    for r in 0..31 {
+        for k in 0..8 {
+            // load zeros — we only check accounting here
+            let _ = r;
+            let _ = k;
+        }
+    }
+    let semi = TmrEngine::new(TmrMode::SemiParallel).execute(&mut xsp, &prog, None).unwrap();
+    assert_eq!(semi.area_cols, prog.width);
+    assert_eq!(semi.items, 10);
+}

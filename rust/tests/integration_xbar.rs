@@ -1,0 +1,92 @@
+//! Integration: full-size crossbar behaviour (Fig. 1 demonstrations at
+//! realistic array sizes).
+
+use remus::errs::{ErrorModel, Injector};
+use remus::isa::microop::MicroOp;
+use remus::isa::program::Step;
+use remus::xbar::{Crossbar, Gate, Partitions};
+
+#[test]
+fn fig1a_row_parallel_nor_1024_rows() {
+    // One cycle computes 1024 NORs (Fig. 1a).
+    let mut x = Crossbar::new(1024, 32);
+    for r in 0..1024 {
+        x.state_mut().set(r, 0, r % 3 == 0);
+        x.state_mut().set(r, 1, r % 5 == 0);
+    }
+    x.apply_step(&Step::one(MicroOp::row(Gate::Nor2, &[0, 1], 2)), None).unwrap();
+    assert_eq!(x.stats.cycles, 1);
+    assert_eq!(x.stats.gate_instances, 1024);
+    for r in 0..1024 {
+        assert_eq!(x.get(r, 2), !(r % 3 == 0 || r % 5 == 0));
+    }
+}
+
+#[test]
+fn fig1b_column_parallel_nor_1024_cols() {
+    let mut x = Crossbar::new(32, 1024);
+    for c in 0..1024 {
+        x.state_mut().set(0, c, c % 2 == 0);
+        x.state_mut().set(1, c, c % 7 == 0);
+    }
+    x.apply_step(&Step::one(MicroOp::col(Gate::Nor2, &[0, 1], 2)), None).unwrap();
+    assert_eq!(x.stats.gate_instances, 1024);
+    for c in 0..1024 {
+        assert_eq!(x.get(2, c), !(c % 2 == 0 || c % 7 == 0));
+    }
+}
+
+#[test]
+fn fig1c_64_partitions_concurrent_gates() {
+    // 64 independent in-row NORs in a single cycle via partitions.
+    let mut x = Crossbar::new(256, 1024);
+    x.set_col_partitions(Partitions::uniform(1024, 16));
+    for r in 0..256 {
+        for p in 0..64 {
+            x.state_mut().set(r, p * 16, (r + p) % 2 == 0);
+            x.state_mut().set(r, p * 16 + 1, (r + p) % 3 == 0);
+        }
+    }
+    let ops: Vec<MicroOp> = (0..64u32)
+        .map(|p| MicroOp::row(Gate::Nor2, &[p * 16, p * 16 + 1], p * 16 + 2))
+        .collect();
+    let c0 = x.stats.cycles;
+    x.apply_step(&Step::many(ops), None).unwrap();
+    assert_eq!(x.stats.cycles - c0, 1, "64 gates, one cycle");
+    for r in 0..256usize {
+        for p in 0..64usize {
+            let want = !((r + p) % 2 == 0 || (r + p) % 3 == 0);
+            assert_eq!(x.get(r, p * 16 + 2), want, "r={r} p={p}");
+        }
+    }
+}
+
+#[test]
+fn error_injection_statistics_at_scale() {
+    // 1024-row gate at p_gate = 1e-3, 100 repetitions: flip count within
+    // 5 sigma of binomial expectation.
+    let mut x = Crossbar::new(1024, 8);
+    let mut inj = Injector::new(ErrorModel::direct_only(1e-3), 2024, 0);
+    for _ in 0..100 {
+        x.apply_step(&Step::one(MicroOp::row(Gate::Nor2, &[0, 1], 2)), Some(&mut inj)).unwrap();
+    }
+    let n = 1024.0 * 100.0;
+    let expect = n * 1e-3;
+    let sd = (n * 1e-3f64 * (1.0 - 1e-3)).sqrt();
+    let got = inj.counters.gate_flips as f64;
+    assert!((got - expect).abs() < 5.0 * sd, "flips {got} vs {expect}±{sd}");
+}
+
+#[test]
+fn energy_and_cycles_scale_with_work() {
+    let mut small = Crossbar::new(64, 64);
+    let mut big = Crossbar::new(1024, 64);
+    for x in [&mut small, &mut big] {
+        for r in 0..x.rows() {
+            x.state_mut().set(r, 0, r % 2 == 0);
+        }
+        x.apply_step(&Step::one(MicroOp::row(Gate::Not, &[0], 1)), None).unwrap();
+    }
+    assert_eq!(small.stats.cycles, big.stats.cycles, "latency independent of rows");
+    assert!(big.stats.energy_pj > small.stats.energy_pj * 8.0, "energy scales with rows");
+}

@@ -1,0 +1,195 @@
+//! Property-based invariants across modules (in-tree prop framework;
+//! seeds reproducible via REMUS_PROP_SEED).
+
+use remus::arith::adder::ripple_adder;
+use remus::arith::multiplier::multpim_program;
+use remus::ecc::DiagonalEcc;
+use remus::isa::encode::{decode, encode};
+use remus::testutil::prop::Cases;
+use remus::tmr::voting::{per_bit_vote_word, per_element_vote};
+use remus::util::bitmat::BitMatrix;
+use remus::util::stats::one_minus_pow;
+use remus::xbar::{Crossbar, Gate, Partitions};
+use remus::isa::microop::MicroOp;
+use remus::isa::program::Step;
+
+#[test]
+fn prop_adder_matches_u64_arithmetic() {
+    Cases::new(60).run(|g| {
+        let n = g.usize_in(2..=24) as u32;
+        let (prog, lay) = ripple_adder(n);
+        let a = g.u64() & ((1 << n) - 1);
+        let b = g.u64() & ((1 << n) - 1);
+        let mut x = Crossbar::new(1, lay.width as usize);
+        for k in 0..n {
+            x.state_mut().set(0, lay.a.col(k) as usize, (a >> k) & 1 == 1);
+            x.state_mut().set(0, lay.b.col(k) as usize, (b >> k) & 1 == 1);
+        }
+        x.run_program(&prog, None).unwrap();
+        let mut s = 0u64;
+        for k in 0..n {
+            if x.get(0, lay.sum.col(k) as usize) {
+                s |= 1 << k;
+            }
+        }
+        let cout = x.get(0, lay.cout as usize) as u64;
+        assert_eq!(s | (cout << n), a + b, "{a}+{b} @ n={n}");
+    });
+}
+
+#[test]
+fn prop_multiplier_matches_u128_arithmetic() {
+    Cases::new(25).run(|g| {
+        let n = *g.pick(&[4u32, 8, 12, 16]);
+        let (prog, lay) = multpim_program(n);
+        let a = g.u64() & ((1 << n) - 1);
+        let b = g.u64() & ((1 << n) - 1);
+        let mut x = Crossbar::new(1, lay.width as usize);
+        x.set_col_partitions(Partitions::new(lay.width, lay.partition_starts.clone()));
+        for k in 0..n as usize {
+            x.state_mut().set(0, lay.a_cols[k] as usize, (a >> k) & 1 == 1);
+            x.state_mut().set(0, lay.b_cols[k] as usize, (b >> k) & 1 == 1);
+        }
+        x.run_program(&prog, None).unwrap();
+        let mut v = 0u64;
+        for i in 0..2 * n {
+            if x.get(0, lay.result.col(i) as usize) {
+                v |= 1 << i;
+            }
+        }
+        assert_eq!(v, a * b, "{a}*{b} @ n={n}");
+    });
+}
+
+#[test]
+fn prop_encode_decode_roundtrip() {
+    Cases::new(60).run(|g| {
+        let n = g.usize_in(2..=12) as u32;
+        let (prog, _) = ripple_adder(n);
+        let flat = prog.flatten();
+        let cap = flat.len() + g.usize_in(0..=64);
+        let enc = encode(&prog, cap).unwrap();
+        assert_eq!(decode(&enc).unwrap(), flat);
+    });
+}
+
+#[test]
+fn prop_ecc_single_error_always_corrected() {
+    Cases::new(40).run(|g| {
+        let m = *g.pick(&[8usize, 16]);
+        let n = m * g.usize_in(1..=3);
+        let mut rng = remus::util::rng::Pcg64::new(g.u64(), 0);
+        let mut state = BitMatrix::from_fn(n, n, |_, _| rng.bernoulli(0.5));
+        let mut ecc = DiagonalEcc::new(n, n, m);
+        ecc.encode(&state);
+        let r = g.usize_in(0..=n - 1);
+        let c = g.usize_in(0..=n - 1);
+        state.flip(r, c);
+        let out = ecc.correct(&mut state);
+        assert_eq!(out.corrected_bits, vec![(r, c)], "n={n} m={m}");
+    });
+}
+
+#[test]
+fn prop_ecc_incremental_equals_reencode() {
+    Cases::new(30).run(|g| {
+        let n = 32;
+        let mut rng = remus::util::rng::Pcg64::new(g.u64(), 1);
+        let mut state = BitMatrix::from_fn(n, n, |_, _| rng.bernoulli(0.5));
+        let mut inc = DiagonalEcc::new(n, n, 8);
+        inc.encode(&state);
+        // A random sequence of column/row rewrites, tracked incrementally.
+        for _ in 0..g.usize_in(1..=6) {
+            if g.bool() {
+                let c = g.usize_in(0..=n - 1);
+                let old = state.col_bitvec(c);
+                for r in 0..n {
+                    state.set(r, c, g.bool());
+                }
+                inc.note_col_write(c, &old, &state.col_bitvec(c));
+            } else {
+                let r = g.usize_in(0..=n - 1);
+                let old = state.row_bitvec(r);
+                for c in 0..n {
+                    state.set(r, c, g.bool());
+                }
+                inc.note_row_write(r, &old, &state.row_bitvec(r));
+            }
+        }
+        assert!(inc.verify_all(&state).is_empty());
+    });
+}
+
+#[test]
+fn prop_per_bit_vote_dominates_per_element() {
+    Cases::new(300).run(|g| {
+        let truth = g.u64();
+        // Each copy: truth with random (sparse) bit flips.
+        let mut copy = |g: &mut remus::testutil::prop::Gen| {
+            let mut v = truth;
+            for _ in 0..g.usize_in(0..=2) {
+                v ^= 1 << g.usize_in(0..=63);
+            }
+            v
+        };
+        let (a, b, c) = (copy(g), copy(g), copy(g));
+        let pb = per_bit_vote_word(a, b, c);
+        if let Some(pe) = per_element_vote(a, b, c) {
+            assert_eq!(pb, pe, "agree when per-element defined");
+        }
+        // Per-bit errs only on bits where >=2 copies err together.
+        let pb_err = pb ^ truth;
+        assert_eq!(pb_err, (a ^ truth) & (b ^ truth) | (a ^ truth) & (c ^ truth) | (b ^ truth) & (c ^ truth));
+    });
+}
+
+#[test]
+fn prop_gate_eval_word_bit_consistency() {
+    Cases::new(100).run(|g| {
+        let (a, b, c, p) = (g.u64(), g.u64(), g.u64(), g.u64());
+        for gate in Gate::ALL {
+            let w = gate.eval_word(a, b, c, p);
+            let i = g.usize_in(0..=63);
+            let bit = |x: u64| (x >> i) & 1 == 1;
+            assert_eq!(bit(w), gate.eval_bit(bit(a), bit(b), bit(c), bit(p)), "{gate:?}");
+        }
+    });
+}
+
+#[test]
+fn prop_one_minus_pow_bounds() {
+    Cases::new(200).run(|g| {
+        let p = g.f64_log(1e-15, 0.5);
+        let n = g.f64_in(1.0, 1e9);
+        let v = one_minus_pow(p, n);
+        assert!((0.0..=1.0).contains(&v));
+        // Union bound: v <= n*p; and v >= p for n >= 1.
+        assert!(v <= n * p * (1.0 + 1e-9));
+        assert!(v >= p * 0.99 || n < 1.0);
+    });
+}
+
+#[test]
+fn prop_crossbar_state_untouched_outside_written_columns() {
+    Cases::new(40).run(|g| {
+        let rows = g.usize_in(8..=128);
+        let mut rng = remus::util::rng::Pcg64::new(g.u64(), 2);
+        let mut x = Crossbar::new(rows, 16);
+        for r in 0..rows {
+            for c in 0..16 {
+                x.state_mut().set(r, c, rng.bernoulli(0.5));
+            }
+        }
+        let snapshot = x.state().clone();
+        let out = g.usize_in(4..=15) as u32;
+        x.apply_step(&Step::one(MicroOp::row(Gate::Nor2, &[0, 1], out)), None).unwrap();
+        for c in 0..16u32 {
+            if c == out {
+                continue;
+            }
+            for r in 0..rows {
+                assert_eq!(x.get(r, c as usize), snapshot.get(r, c as usize), "col {c}");
+            }
+        }
+    });
+}
