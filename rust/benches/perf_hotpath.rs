@@ -1,15 +1,20 @@
 //! §Perf — the hot-path microbenchmarks tracked in EXPERIMENTS.md §Perf:
 //! raw row-parallel gate application, error sampling, whole-program
-//! execution (native vs PJRT), and the coordinator request path.
+//! execution (compiled plan vs legacy interpreter vs PJRT), operand
+//! marshalling, and the coordinator request path.
+//!
+//! Writes `BENCH_perf_hotpath.json` (per-bench ns/iter + throughput) for
+//! CI archival — see `bench_harness::json_begin`.
 
 use remus::arith::multiplier::multpim_program;
-use remus::bench_harness::{bench, header, throughput};
+use remus::bench_harness::{bench, header, json_begin, json_end, throughput};
 use remus::errs::{ErrorModel, Injector};
 use remus::isa::microop::MicroOp;
 use remus::isa::program::Step;
 use remus::xbar::{Crossbar, Gate, Partitions};
 
 fn main() {
+    json_begin("perf_hotpath");
     header("perf_hotpath", "EXPERIMENTS.md §Perf: simulator hot paths");
 
     // --- L3 hot path 1: row-parallel gate application ----------------
@@ -47,6 +52,9 @@ fn main() {
     throughput(&r, "row-gate-bit", iters as f64 * rows as f64);
 
     // --- L3 hot path 2: full MultPIM-32 program, 128 rows -------------
+    // The serving path: plan compiled ONCE (validation + operand
+    // resolution hoisted out), then executed via run_plan. The legacy
+    // per-step interpreter line quantifies the §Perf win.
     let (prog, lay) = multpim_program(32);
     let mut x = Crossbar::new(128, lay.width as usize);
     x.set_col_partitions(Partitions::new(lay.width, lay.partition_starts.clone()));
@@ -57,16 +65,56 @@ fn main() {
         }
     }
     let ops = prog.num_ops() as f64;
+    let plan = x.compile_plan(&prog).expect("multpim plan");
     let r = bench("MultPIM-32 program, 128 rows (clean)", 1, || {
-        x.run_program(&prog, None).unwrap();
+        x.run_plan(&plan, None).unwrap();
     });
     throughput(&r, "micro-op", ops);
     throughput(&r, "mult", 128.0);
-    let mut inj = Injector::new(ErrorModel::direct_only(1e-6), 2, 0);
-    let r = bench("MultPIM-32 program, 128 rows (p=1e-6)", 1, || {
-        x.run_program(&prog, Some(&mut inj)).unwrap();
+    let r = bench("MultPIM-32 legacy uncompiled, 128 rows", 1, || {
+        x.run_program_uncompiled(&prog, None).unwrap();
     });
     throughput(&r, "mult", 128.0);
+    let r = bench("MultPIM-32 compile_plan (one-time cost)", 1, || {
+        std::hint::black_box(x.compile_plan(&prog).unwrap());
+    });
+    throughput(&r, "compile", 1.0);
+    let mut inj = Injector::new(ErrorModel::direct_only(1e-6), 2, 0);
+    let r = bench("MultPIM-32 program, 128 rows (p=1e-6)", 1, || {
+        x.run_plan(&plan, Some(&mut inj)).unwrap();
+    });
+    throughput(&r, "mult", 128.0);
+
+    // --- operand marshalling: word-parallel vs per-bit ----------------
+    {
+        use remus::mmpu::{FunctionKind, FunctionSpec, Mmpu, MmpuConfig, ReliabilityPolicy};
+        let cfg = MmpuConfig {
+            rows: 64,
+            cols: 512,
+            num_crossbars: 1,
+            policy: ReliabilityPolicy::none(),
+            errors: ErrorModel::none(),
+            seed: 7,
+        };
+        let func = FunctionSpec::build(FunctionKind::Mul(8));
+        let a: Vec<u64> = (0..64).map(|i| i * 37 % 251).collect();
+        let b: Vec<u64> = (0..64).map(|i| (i * 3 + 11) % 251).collect();
+        let mut mmpu = Mmpu::new(cfg.clone());
+        let iters = 200u64;
+        let r = bench("exec_vector mul8 batch 64 (compiled+word)", iters, || {
+            for _ in 0..iters {
+                mmpu.exec_vector(0, &func, &a, &b).unwrap();
+            }
+        });
+        throughput(&r, "mult", iters as f64 * 64.0);
+        let mut mmpu = Mmpu::new(cfg);
+        let r = bench("exec_vector mul8 batch 64 (legacy per-bit)", iters, || {
+            for _ in 0..iters {
+                mmpu.exec_vector_legacy(0, &func, &a, &b).unwrap();
+            }
+        });
+        throughput(&r, "mult", iters as f64 * 64.0);
+    }
 
     // --- MC engine: single-lane interpreter ---------------------------
     use remus::analysis::lane::{FaultPlan, LaneSim};
@@ -132,10 +180,12 @@ fn main() {
     throughput(&r, "request", n as f64);
     let m = coord.metrics();
     println!(
-        "      mean batch {:.1}, p50 {} us, p99 {} us",
+        "      mean batch {:.1}, p50 {} us, p99 {} us, failed {}",
         m.mean_batch_size(),
         m.latency_percentile_us(50.0),
-        m.latency_percentile_us(99.0)
+        m.latency_percentile_us(99.0),
+        m.failed
     );
     coord.shutdown();
+    json_end();
 }

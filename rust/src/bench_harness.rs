@@ -2,8 +2,95 @@
 //! vendor set). Provides warmup + repeated timed runs, median/MAD
 //! reporting, and throughput lines, with output formatted consistently
 //! across all `rust/benches/*` targets so EXPERIMENTS.md can quote them.
+//!
+//! Machine-readable mode: a bench target calls [`json_begin`] once at
+//! startup and [`json_end`] at exit; every `bench`/`throughput` call in
+//! between is also recorded and written as `BENCH_<name>.json` (used by
+//! CI to archive the §Perf numbers; see EXPERIMENTS.md).
 
+use std::sync::Mutex;
 use std::time::{Duration, Instant};
+
+/// One recorded benchmark for the JSON report.
+struct JsonEntry {
+    name: String,
+    median_ns: u128,
+    mad_ns: u128,
+    iters_per_run: u64,
+    throughput: Vec<(String, f64)>,
+}
+
+/// Active JSON collector: (report name, entries).
+static JSON: Mutex<Option<(String, Vec<JsonEntry>)>> = Mutex::new(None);
+
+/// Start recording benches into a machine-readable report named
+/// `BENCH_<name>.json`. No-op for benches that never call it.
+pub fn json_begin(name: &str) {
+    *JSON.lock().unwrap() = Some((name.to_string(), Vec::new()));
+}
+
+/// Write the recorded report to `BENCH_<name>.json` in the current
+/// directory and stop recording. Returns the path when a report was
+/// active and written.
+pub fn json_end() -> Option<std::path::PathBuf> {
+    let (name, entries) = JSON.lock().unwrap().take()?;
+    let mut out = String::new();
+    out.push_str("{\n");
+    out.push_str(&format!("  \"bench\": \"{}\",\n", escape(&name)));
+    out.push_str("  \"results\": [\n");
+    for (i, e) in entries.iter().enumerate() {
+        let ns_per_iter = e.median_ns as f64 / e.iters_per_run as f64;
+        out.push_str(&format!(
+            "    {{\"name\": \"{}\", \"median_ns\": {}, \"mad_ns\": {}, \
+             \"iters_per_run\": {}, \"ns_per_iter\": {:.3}, \"throughput\": [",
+            escape(&e.name),
+            e.median_ns,
+            e.mad_ns,
+            e.iters_per_run,
+            ns_per_iter
+        ));
+        for (j, (unit, per_sec)) in e.throughput.iter().enumerate() {
+            out.push_str(&format!("{{\"unit\": \"{}\", \"per_sec\": {:e}}}", escape(unit), per_sec));
+            if j + 1 < e.throughput.len() {
+                out.push_str(", ");
+            }
+        }
+        out.push_str("]}");
+        out.push_str(if i + 1 < entries.len() { ",\n" } else { "\n" });
+    }
+    out.push_str("  ]\n}\n");
+    let path = std::path::PathBuf::from(format!("BENCH_{name}.json"));
+    if let Err(e) = std::fs::write(&path, out) {
+        eprintln!("warning: could not write {path:?}: {e}");
+        return None;
+    }
+    println!("(machine-readable results written to {})", path.display());
+    Some(path)
+}
+
+fn escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+fn json_record(r: &BenchResult) {
+    if let Some((_, entries)) = JSON.lock().unwrap().as_mut() {
+        entries.push(JsonEntry {
+            name: r.name.clone(),
+            median_ns: r.median.as_nanos(),
+            mad_ns: r.mad.as_nanos(),
+            iters_per_run: r.iters_per_run,
+            throughput: Vec::new(),
+        });
+    }
+}
+
+fn json_record_throughput(unit: &str, per_sec: f64) {
+    if let Some((_, entries)) = JSON.lock().unwrap().as_mut() {
+        if let Some(last) = entries.last_mut() {
+            last.throughput.push((unit.to_string(), per_sec));
+        }
+    }
+}
 
 pub struct BenchResult {
     pub name: String,
@@ -54,6 +141,7 @@ pub fn bench<F: FnMut()>(name: &str, iters_per_run: u64, mut f: F) -> BenchResul
         r.mad.as_secs_f64() * 1e3,
         r.per_iter_ns()
     );
+    json_record(&r);
     r
 }
 
@@ -61,6 +149,7 @@ pub fn bench<F: FnMut()>(name: &str, iters_per_run: u64, mut f: F) -> BenchResul
 pub fn throughput(r: &BenchResult, unit: &str, units_per_run: f64) {
     let per_sec = units_per_run / r.median.as_secs_f64();
     println!("      -> {:.3e} {unit}/s", per_sec);
+    json_record_throughput(unit, per_sec);
 }
 
 /// Standard bench header so every target announces itself the same way.
@@ -74,6 +163,21 @@ pub fn header(title: &str, paper_ref: &str) {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn json_mode_writes_report() {
+        json_begin("harness_selftest");
+        let r = bench("json-selftest", 10, || {
+            std::hint::black_box(0u64);
+        });
+        throughput(&r, "op", 10.0);
+        let path = json_end().expect("report written");
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("\"bench\": \"harness_selftest\""));
+        assert!(text.contains("json-selftest"));
+        assert!(text.contains("\"unit\": \"op\""));
+        let _ = std::fs::remove_file(path);
+    }
 
     #[test]
     fn bench_reports_sane_numbers() {

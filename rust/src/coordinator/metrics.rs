@@ -10,6 +10,9 @@ const BINS: usize = 24;
 pub struct Metrics {
     pub submitted: AtomicU64,
     pub completed: AtomicU64,
+    /// Requests that received an explicit error result (failed batch
+    /// execution/compilation) instead of a value.
+    pub failed: AtomicU64,
     pub batches: AtomicU64,
     pub batched_items: AtomicU64,
     pub busy_ns: AtomicU64,
@@ -33,6 +36,7 @@ impl Metrics {
         MetricsSnapshot {
             submitted: self.submitted.load(Ordering::Relaxed),
             completed: self.completed.load(Ordering::Relaxed),
+            failed: self.failed.load(Ordering::Relaxed),
             batches: self.batches.load(Ordering::Relaxed),
             batched_items: self.batched_items.load(Ordering::Relaxed),
             busy_ns: self.busy_ns.load(Ordering::Relaxed),
@@ -47,6 +51,7 @@ impl Metrics {
 pub struct MetricsSnapshot {
     pub submitted: u64,
     pub completed: u64,
+    pub failed: u64,
     pub batches: u64,
     pub batched_items: u64,
     pub busy_ns: u64,

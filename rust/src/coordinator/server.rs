@@ -1,6 +1,13 @@
 //! The coordinator front end: submit scalar requests, get results back
 //! through per-request channels; a batcher thread groups them and routes
 //! batches to worker threads (one crossbar each, least-loaded first).
+//!
+//! §Perf: workers share one [`PlanCache`] — each `(function, shape,
+//! TMR mode)` is synthesized, TMR-expanded and plan-compiled exactly
+//! once process-wide (`Arc`-shared), and batch execution goes through
+//! the word-parallel `Mmpu::exec_vector_compiled` path. Failed batches
+//! deliver an explicit error result per item (clients never observe a
+//! silently closed channel) and are counted in `metrics.failed`.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender, SyncSender, TrySendError};
@@ -11,7 +18,7 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use crate::errs::ErrorModel;
-use crate::mmpu::{FunctionKind, FunctionSpec, Mmpu, MmpuConfig, ReliabilityPolicy};
+use crate::mmpu::{FunctionKind, Mmpu, MmpuConfig, PlanCache, ReliabilityPolicy};
 
 use super::batcher::{Batch, Batcher, Pending};
 use super::metrics::{Metrics, MetricsSnapshot};
@@ -19,8 +26,18 @@ use super::metrics::{Metrics, MetricsSnapshot};
 /// Outcome delivered to the submitting client.
 #[derive(Clone, Debug)]
 pub struct RequestResult {
+    /// The function result (0 when `error` is set).
     pub value: u64,
     pub latency: Duration,
+    /// Present when the batch failed to compile or execute: the per-item
+    /// error delivered instead of silently dropping the reply channel.
+    pub error: Option<String>,
+}
+
+impl RequestResult {
+    pub fn is_ok(&self) -> bool {
+        self.error.is_none()
+    }
 }
 
 /// Coordinator configuration.
@@ -70,6 +87,9 @@ pub struct Coordinator {
 impl Coordinator {
     pub fn start(cfg: CoordinatorConfig) -> Result<Self> {
         let metrics = Arc::new(Metrics::new());
+        // One compiled-plan cache shared by every worker: each
+        // (kind, shape, tmr) compiles once process-wide (§Perf).
+        let plans = Arc::new(PlanCache::new());
         // Workers.
         let mut worker_txs: Vec<SyncSender<Batch>> = vec![];
         let mut worker_handles = vec![];
@@ -81,7 +101,8 @@ impl Coordinator {
             let m = metrics.clone();
             let d = depths.clone();
             let cfg2 = cfg.clone();
-            worker_handles.push(std::thread::spawn(move || worker_loop(w, cfg2, rx, m, d)));
+            let p = plans.clone();
+            worker_handles.push(std::thread::spawn(move || worker_loop(w, cfg2, rx, m, d, p)));
         }
         // Batcher / router.
         let (front_tx, front_rx) = channel::<FrontMsg>();
@@ -201,6 +222,7 @@ fn worker_loop(
     rx: Receiver<Batch>,
     metrics: Arc<Metrics>,
     depths: Arc<Vec<AtomicU64>>,
+    plans: Arc<PlanCache>,
 ) {
     let mmpu_cfg = MmpuConfig {
         rows: cfg.rows,
@@ -211,27 +233,54 @@ fn worker_loop(
         seed: cfg.seed.wrapping_add(worker_id as u64),
     };
     let mut mmpu = Mmpu::new(mmpu_cfg);
-    let mut specs: std::collections::HashMap<FunctionKind, FunctionSpec> =
+    // Per-worker memo over the shared cache: the shared PlanCache mutex
+    // is touched once per (worker, kind); steady-state batches resolve
+    // their plan from this local map with no cross-worker
+    // synchronization. (Shape and TMR mode are fixed per coordinator,
+    // so the local key is just the function kind.)
+    let mut local: std::collections::HashMap<FunctionKind, Arc<crate::mmpu::CompiledFunction>> =
         std::collections::HashMap::new();
     while let Ok(batch) = rx.recv() {
         let t0 = Instant::now();
-        let spec =
-            specs.entry(batch.kind).or_insert_with(|| FunctionSpec::build(batch.kind));
         let a: Vec<u64> = batch.items.iter().map(|p| p.a).collect();
         let b: Vec<u64> = batch.items.iter().map(|p| p.b).collect();
-        match mmpu.exec_vector(0, spec, &a, &b) {
+        // Shared compiled plan: synthesized + validated once per
+        // (kind, shape, tmr) process-wide, memoized per worker.
+        let plan = match local.get(&batch.kind) {
+            Some(cf) => Ok(cf.clone()),
+            None => plans.get(batch.kind, cfg.rows, cfg.cols, cfg.policy.tmr).map(|cf| {
+                local.insert(batch.kind, cf.clone());
+                cf
+            }),
+        };
+        let result = plan.and_then(|cf| mmpu.exec_vector_compiled(0, &cf, &a, &b));
+        match result {
             Ok(res) => {
                 for (item, &value) in batch.items.iter().zip(&res.values) {
                     let latency = item.submitted.elapsed();
                     metrics.record_latency(latency);
                     metrics.completed.fetch_add(1, Ordering::Relaxed);
-                    let _ = item.reply.send(RequestResult { value, latency });
+                    let _ = item.reply.send(RequestResult { value, latency, error: None });
                 }
             }
             Err(e) => {
-                // Execution errors drop the replies (client sees a closed
-                // channel); log once per batch.
-                eprintln!("worker {worker_id}: batch failed: {e:#}");
+                // Deliver an explicit error result per item — clients
+                // must never hang on a silently closed channel.
+                let msg = format!("{e:#}");
+                eprintln!(
+                    "worker {worker_id}: batch of {} {:?} failed: {msg}",
+                    batch.items.len(),
+                    batch.kind
+                );
+                for item in &batch.items {
+                    let latency = item.submitted.elapsed();
+                    metrics.failed.fetch_add(1, Ordering::Relaxed);
+                    let _ = item.reply.send(RequestResult {
+                        value: 0,
+                        latency,
+                        error: Some(msg.clone()),
+                    });
+                }
             }
         }
         metrics.busy_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
@@ -286,6 +335,52 @@ mod tests {
         for (i, rx) in muls.into_iter().enumerate() {
             assert_eq!(rx.recv_timeout(Duration::from_secs(5)).unwrap().value, i as u64 * 3);
         }
+        coord.shutdown();
+    }
+
+    #[test]
+    fn failed_batches_deliver_error_results() {
+        // 64 columns cannot hold a 16-bit MultPIM (needs ~256): every
+        // request must come back with an explicit error result instead
+        // of a dropped channel, and be counted in metrics.failed.
+        let coord = Coordinator::start(CoordinatorConfig {
+            workers: 2,
+            rows: 16,
+            cols: 64,
+            max_batch: 8,
+            max_wait: Duration::from_micros(100),
+            ..Default::default()
+        })
+        .unwrap();
+        let rxs: Vec<_> =
+            (0..24u64).map(|i| coord.submit(FunctionKind::Mul(16), i, i + 1)).collect();
+        for rx in rxs {
+            let r = rx.recv_timeout(Duration::from_secs(5)).expect("error result, not a hang");
+            assert!(!r.is_ok(), "expected an error result");
+            let msg = r.error.as_deref().unwrap();
+            assert!(
+                msg.contains("out of range") || msg.contains("too narrow") || msg.contains("beyond"),
+                "unexpected error: {msg:?}"
+            );
+        }
+        let m = coord.metrics();
+        assert_eq!(m.failed, 24);
+        assert_eq!(m.completed, 0);
+        coord.shutdown();
+        // Small functions still work on the same shape (Add(8) fits).
+        let coord = Coordinator::start(CoordinatorConfig {
+            workers: 1,
+            rows: 16,
+            cols: 64,
+            max_batch: 8,
+            max_wait: Duration::from_micros(100),
+            ..Default::default()
+        })
+        .unwrap();
+        let rx = coord.submit(FunctionKind::Add(8), 2, 3);
+        let r = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert!(r.is_ok());
+        assert_eq!(r.value, 5);
         coord.shutdown();
     }
 

@@ -1,10 +1,13 @@
-//! The mMPU micro-op ISA: micro-ops, cycle-grouped programs, and the
-//! dense encoding used by the AOT (PJRT) program executor.
+//! The mMPU micro-op ISA: micro-ops, cycle-grouped programs, compiled
+//! execution plans, and the dense encoding used by the AOT (PJRT)
+//! program executor.
 
 pub mod encode;
 pub mod microop;
+pub mod plan;
 pub mod program;
 
 pub use encode::{encode, EncodedProgram};
 pub use microop::{Dir, LaneRange, MicroOp};
+pub use plan::CompiledPlan;
 pub use program::{Program, RowProgramBuilder, Step};

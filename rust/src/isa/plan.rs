@@ -1,0 +1,372 @@
+//! Compiled execution plans (§Perf).
+//!
+//! `Crossbar::run_program` historically re-did three kinds of scalar work
+//! on every execution of a program that never changes: per-step
+//! concurrency validation (with its per-op partition lookups and
+//! temporary allocations), per-op operand bounds checks, and per-word
+//! lane-mask recomputation. A [`CompiledPlan`] hoists all of it to a
+//! one-time compile against a crossbar shape + partition configuration:
+//!
+//! * concurrency rules (fan-out bundles, partition disjointness) are
+//!   validated exactly once, at build time;
+//! * every micro-op is resolved to a [`PlanOp`]: lane range, word range
+//!   and first/last word masks precomputed;
+//! * execution (`Crossbar::run_plan`) is a tight, allocation-free
+//!   interpreter loop that is bit-identical to the legacy per-step path
+//!   (`Crossbar::run_program_uncompiled`), including the error-injection
+//!   stream — property-tested in `rust/tests/prop_plan_equivalence.rs`.
+//!
+//! Plans are immutable and `Send + Sync`, so the coordinator shares them
+//! across workers behind `Arc` (see `mmpu::PlanCache`).
+
+use anyhow::{ensure, Result};
+
+use crate::util::bitmat::{tail_mask, words_for};
+use crate::xbar::gate::Gate;
+use crate::xbar::partition::Partitions;
+
+use super::microop::{Dir, MicroOp};
+use super::program::Program;
+
+/// A fully resolved micro-op: no bounds checks, lane resolution or mask
+/// arithmetic left for execution time.
+#[derive(Clone, Copy, Debug)]
+pub struct PlanOp {
+    pub gate: Gate,
+    pub dir: Dir,
+    /// Input arity of `gate` (cached: avoids the match per execution).
+    pub arity: u8,
+    pub a: u32,
+    pub b: u32,
+    pub c: u32,
+    pub out: u32,
+    /// Resolved lane range [s, e): rows for `InRow`, columns for `InCol`.
+    pub s: u32,
+    pub e: u32,
+    /// Word range of the lane span within a packed column (`InRow` only).
+    pub w_lo: u32,
+    pub w_hi: u32,
+    /// Lane mask applied to word `w_lo` / `w_hi` (`InRow` only; the last
+    /// mask already folds in the column tail mask).
+    pub first_mask: u64,
+    pub last_mask: u64,
+}
+
+impl PlanOp {
+    /// Resolve an in-row op against a crossbar shape. Mirrors the bounds
+    /// checks of the legacy `exec_in_row`, as `Err` instead of panics.
+    pub(crate) fn resolve_in_row(op: &MicroOp, rows: usize, cols: usize) -> Result<PlanOp> {
+        for &line in &[op.a, op.b, op.c, op.out] {
+            ensure!((line as usize) < cols, "column {line} out of range");
+        }
+        let (s, e) = resolve_lanes(op, rows)?;
+        let w_lo = s / 64;
+        let w_hi = (e - 1) / 64;
+        let first_mask = u64::MAX << (s % 64);
+        let top = e - w_hi * 64;
+        let mut last_mask = if top < 64 { (1u64 << top) - 1 } else { u64::MAX };
+        if w_hi == words_for(rows) - 1 {
+            last_mask &= tail_mask(rows);
+        }
+        Ok(PlanOp {
+            gate: op.gate,
+            dir: Dir::InRow,
+            arity: op.gate.arity() as u8,
+            a: op.a,
+            b: op.b,
+            c: op.c,
+            out: op.out,
+            s: s as u32,
+            e: e as u32,
+            w_lo: w_lo as u32,
+            w_hi: w_hi as u32,
+            first_mask,
+            last_mask,
+        })
+    }
+
+    /// Resolve an in-column op (operands are rows, lanes are columns).
+    pub(crate) fn resolve_in_col(op: &MicroOp, rows: usize, cols: usize) -> Result<PlanOp> {
+        for &line in &[op.a, op.b, op.c, op.out] {
+            ensure!((line as usize) < rows, "row {line} out of range");
+        }
+        let (s, e) = resolve_lanes(op, cols)?;
+        Ok(PlanOp {
+            gate: op.gate,
+            dir: Dir::InCol,
+            arity: op.gate.arity() as u8,
+            a: op.a,
+            b: op.b,
+            c: op.c,
+            out: op.out,
+            s: s as u32,
+            e: e as u32,
+            w_lo: 0,
+            w_hi: 0,
+            first_mask: 0,
+            last_mask: 0,
+        })
+    }
+}
+
+fn resolve_lanes(op: &MicroOp, lanes: usize) -> Result<(usize, usize)> {
+    let start = op.lanes.start as usize;
+    let end = if op.lanes.end == u32::MAX { lanes } else { op.lanes.end as usize };
+    ensure!(
+        end <= lanes && start < end,
+        "lane range {start}..{end} out of bounds for {lanes} lanes"
+    );
+    Ok((start, end))
+}
+
+/// Concurrency rules for one cycle (Fig. 1c) — shared by the legacy
+/// per-step validator and plan compilation so both paths enforce
+/// identical semantics:
+/// * all ops share a direction;
+/// * **fan-out**: ops applying the same gate to the same operands
+///   (distinct outputs) form one multi-output gate — always legal;
+/// * otherwise each group's touched partition range must be pairwise
+///   disjoint from every other group's.
+pub(crate) fn validate_step_concurrency(
+    ops: &[MicroOp],
+    col_parts: &Partitions,
+    row_parts: &Partitions,
+) -> Result<()> {
+    let dir = ops[0].dir;
+    ensure!(ops.iter().all(|o| o.dir == dir), "concurrent ops must share direction");
+    // Group ops into fan-out bundles: ops applying the same gate to the
+    // same operands form ONE multi-output gate (distinct outputs
+    // required). Groups then claim partition ranges; ranges must be
+    // pairwise disjoint across groups.
+    let mut groups: Vec<(usize, Vec<usize>)> = Vec::new(); // (rep idx, member idxs)
+    'op: for (i, op) in ops.iter().enumerate() {
+        for (rep, members) in groups.iter_mut() {
+            let r = &ops[*rep];
+            if op.gate == r.gate && op.gate.arity() > 0 && op.a == r.a && op.b == r.b && op.c == r.c
+            {
+                members.push(i);
+                continue 'op;
+            }
+        }
+        groups.push((i, vec![i]));
+    }
+    for (_, members) in &groups {
+        if members.len() > 1 {
+            let mut outs: Vec<u32> = members.iter().map(|&i| ops[i].out).collect();
+            outs.sort_unstable();
+            outs.dedup();
+            ensure!(outs.len() == members.len(), "fan-out outputs must be distinct");
+        }
+    }
+    let parts = match dir {
+        Dir::InRow => col_parts,
+        Dir::InCol => row_parts,
+    };
+    let mut used = vec![false; parts.count()];
+    for (_, members) in &groups {
+        let mut lo = u32::MAX;
+        let mut hi = 0u32;
+        for &i in members {
+            let (l, h) = ops[i].line_span();
+            lo = lo.min(l);
+            hi = hi.max(h);
+        }
+        let (p_lo, p_hi) = (parts.partition_of(lo), parts.partition_of(hi));
+        for p in p_lo..=p_hi {
+            ensure!(
+                !used[p],
+                "concurrent op groups conflict on partition {p} (lines {lo}..={hi})"
+            );
+            used[p] = true;
+        }
+    }
+    Ok(())
+}
+
+/// A program compiled against a crossbar shape + partition configuration:
+/// validated once, resolved once, executed many times.
+#[derive(Clone, Debug)]
+pub struct CompiledPlan {
+    pub name: String,
+    rows: usize,
+    cols: usize,
+    ops: Vec<PlanOp>,
+    /// One `(start, end)` op range per crossbar cycle.
+    steps: Vec<(u32, u32)>,
+    /// Declared output columns (copied from the program).
+    pub output_cols: Vec<u32>,
+    /// Column partitions the plan's in-row concurrency was validated
+    /// against (`None` when no step needed validation — such plans run
+    /// under any partition configuration).
+    col_parts: Option<Partitions>,
+    /// Row partitions for in-column concurrency, same contract.
+    row_parts: Option<Partitions>,
+}
+
+impl CompiledPlan {
+    /// Compile `prog` for a `rows x cols` crossbar under the given
+    /// partition configuration. Validation errors that the legacy path
+    /// would raise mid-execution are surfaced here instead.
+    pub fn compile(
+        prog: &Program,
+        rows: usize,
+        cols: usize,
+        col_parts: &Partitions,
+        row_parts: &Partitions,
+    ) -> Result<CompiledPlan> {
+        ensure!(col_parts.lines() as usize == cols, "column partition size mismatch");
+        ensure!(row_parts.lines() as usize == rows, "row partition size mismatch");
+        let mut ops = Vec::with_capacity(prog.num_ops());
+        let mut steps = Vec::with_capacity(prog.steps.len());
+        let mut needs_col_parts = false;
+        let mut needs_row_parts = false;
+        for step in &prog.steps {
+            ensure!(!step.ops.is_empty(), "empty step");
+            if step.ops.len() > 1 {
+                validate_step_concurrency(&step.ops, col_parts, row_parts)?;
+                match step.ops[0].dir {
+                    Dir::InRow => needs_col_parts = true,
+                    Dir::InCol => needs_row_parts = true,
+                }
+            }
+            let start = ops.len() as u32;
+            for op in &step.ops {
+                ops.push(match op.dir {
+                    Dir::InRow => PlanOp::resolve_in_row(op, rows, cols)?,
+                    Dir::InCol => PlanOp::resolve_in_col(op, rows, cols)?,
+                });
+            }
+            steps.push((start, ops.len() as u32));
+        }
+        Ok(CompiledPlan {
+            name: prog.name.clone(),
+            rows,
+            cols,
+            ops,
+            steps,
+            output_cols: prog.output_cols.clone(),
+            col_parts: needs_col_parts.then(|| col_parts.clone()),
+            row_parts: needs_row_parts.then(|| row_parts.clone()),
+        })
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Latency in crossbar cycles.
+    pub fn cycles(&self) -> usize {
+        self.steps.len()
+    }
+
+    pub fn num_ops(&self) -> usize {
+        self.ops.len()
+    }
+
+    /// Column partitions required at execution time (`None`: any).
+    pub fn required_col_partitions(&self) -> Option<&Partitions> {
+        self.col_parts.as_ref()
+    }
+
+    pub fn required_row_partitions(&self) -> Option<&Partitions> {
+        self.row_parts.as_ref()
+    }
+
+    /// Iterate `(ops-of-cycle)` slices — the executor's inner loop.
+    #[inline]
+    pub(crate) fn step_ops(&self) -> impl Iterator<Item = &[PlanOp]> + '_ {
+        self.steps.iter().map(move |&(s, e)| &self.ops[s as usize..e as usize])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::microop::LaneRange;
+    use crate::isa::program::{RowProgramBuilder, Step};
+
+    fn whole(rows: usize, cols: usize) -> (Partitions, Partitions) {
+        (Partitions::whole(cols as u32), Partitions::whole(rows as u32))
+    }
+
+    #[test]
+    fn compile_resolves_masks() {
+        let mut b = RowProgramBuilder::no_init("t");
+        b.gate(Gate::Nor2, &[0, 1], 2);
+        let prog = b.finish();
+        let (cp, rp) = whole(130, 8);
+        let plan = CompiledPlan::compile(&prog, 130, 8, &cp, &rp).unwrap();
+        assert_eq!(plan.cycles(), 1);
+        let op = plan.step_ops().next().unwrap()[0];
+        assert_eq!((op.s, op.e), (0, 130));
+        assert_eq!((op.w_lo, op.w_hi), (0, 2));
+        assert_eq!(op.first_mask, u64::MAX);
+        assert_eq!(op.last_mask, (1u64 << 2) - 1, "130 rows -> 2 tail bits");
+    }
+
+    #[test]
+    fn compile_resolves_lane_ranges() {
+        let mut prog = Program::new("lanes");
+        prog.push(MicroOp::row(Gate::Not, &[0], 1).over(LaneRange::new(10, 20)));
+        let (cp, rp) = whole(128, 4);
+        let plan = CompiledPlan::compile(&prog, 128, 4, &cp, &rp).unwrap();
+        let op = plan.step_ops().next().unwrap()[0];
+        assert_eq!((op.s, op.e), (10, 20));
+        assert_eq!((op.w_lo, op.w_hi), (0, 0));
+        assert_eq!(op.first_mask & op.last_mask, ((1u64 << 20) - 1) & !((1u64 << 10) - 1));
+    }
+
+    #[test]
+    fn compile_rejects_out_of_range() {
+        let mut prog = Program::new("oob");
+        prog.push(MicroOp::row(Gate::Not, &[7], 1));
+        let (cp, rp) = whole(8, 4);
+        assert!(CompiledPlan::compile(&prog, 8, 4, &cp, &rp).is_err());
+        let mut prog = Program::new("oob-lanes");
+        prog.push(MicroOp::row(Gate::Not, &[0], 1).over(LaneRange::new(4, 200)));
+        assert!(CompiledPlan::compile(&prog, 8, 4, &cp, &rp).is_err());
+    }
+
+    #[test]
+    fn compile_validates_concurrency_once() {
+        // Two NOTs in one cycle in the same partition: rejected at
+        // compile time (the legacy path rejects at execution time).
+        let mut prog = Program::new("conflict");
+        prog.push_parallel(vec![
+            MicroOp::row(Gate::Not, &[0], 1),
+            MicroOp::row(Gate::Not, &[2], 3),
+        ]);
+        let (cp, rp) = whole(8, 8);
+        assert!(CompiledPlan::compile(&prog, 8, 8, &cp, &rp).is_err());
+        // Legal under 2-column partitions, and the plan records them.
+        let cp4 = Partitions::uniform(8, 4);
+        let plan = CompiledPlan::compile(&prog, 8, 8, &cp4, &rp).unwrap();
+        assert_eq!(plan.required_col_partitions(), Some(&cp4));
+        assert_eq!(plan.required_row_partitions(), None);
+    }
+
+    #[test]
+    fn single_op_steps_need_no_partitions() {
+        let mut b = RowProgramBuilder::new("seq");
+        b.gate(Gate::Nor2, &[0, 1], 2);
+        b.gate(Gate::Not, &[2], 3);
+        let prog = b.finish();
+        let (cp, rp) = whole(16, 8);
+        let plan = CompiledPlan::compile(&prog, 16, 8, &cp, &rp).unwrap();
+        assert!(plan.required_col_partitions().is_none());
+        assert_eq!(plan.cycles(), 4);
+        assert_eq!(plan.num_ops(), 4);
+    }
+
+    #[test]
+    fn empty_step_rejected() {
+        let mut prog = Program::new("empty");
+        prog.steps.push(Step { ops: vec![] });
+        let (cp, rp) = whole(8, 8);
+        assert!(CompiledPlan::compile(&prog, 8, 8, &cp, &rp).is_err());
+    }
+}

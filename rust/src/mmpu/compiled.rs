@@ -1,0 +1,150 @@
+//! Compiled function instances and the shared plan cache (§Perf).
+//!
+//! A [`CompiledFunction`] freezes one `FunctionSpec` + TMR strategy for
+//! one crossbar shape: the program's concurrency is validated once, all
+//! TMR copies are retargeted/relocated once, and every micro-op is
+//! resolved (see `isa::CompiledPlan`). The [`PlanCache`] shares these
+//! behind `Arc` keyed by `(FunctionKind, rows, cols, TmrMode)` — the
+//! coordinator hands one cache to all workers, replacing the per-worker
+//! `FunctionSpec::build` + per-execution program interpretation that
+//! previously dominated the request path.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+
+use crate::tmr::{CompiledTmr, TmrEngine, TmrMode};
+
+use super::functions::{FunctionKind, FunctionSpec};
+
+/// A function compiled for a crossbar shape under a TMR strategy.
+#[derive(Clone, Debug)]
+pub struct CompiledFunction {
+    pub spec: FunctionSpec,
+    pub tmr: CompiledTmr,
+}
+
+impl CompiledFunction {
+    /// Synthesize the spec and compile it in one step.
+    pub fn build(kind: FunctionKind, rows: usize, cols: usize, tmr: TmrMode) -> Result<Self> {
+        Self::from_spec(FunctionSpec::build(kind), rows, cols, tmr)
+    }
+
+    /// Compile an already-synthesized spec.
+    pub fn from_spec(spec: FunctionSpec, rows: usize, cols: usize, tmr: TmrMode) -> Result<Self> {
+        let compiled = TmrEngine::new(tmr).compile(&spec.prog, rows, cols)?;
+        Ok(Self { spec, tmr: compiled })
+    }
+
+    pub fn kind(&self) -> FunctionKind {
+        self.spec.kind
+    }
+
+    pub fn mode(&self) -> TmrMode {
+        self.tmr.mode
+    }
+
+    pub fn rows(&self) -> usize {
+        self.tmr.rows()
+    }
+
+    pub fn cols(&self) -> usize {
+        self.tmr.cols()
+    }
+}
+
+/// Cache key: function + crossbar shape + reliability strategy.
+pub type PlanKey = (FunctionKind, usize, usize, TmrMode);
+
+/// Thread-safe cache of compiled functions, shared across coordinator
+/// workers (and used internally by `Mmpu`). Compilation happens at most
+/// once per key; lookups are a mutex-guarded hash probe returning a
+/// cheap `Arc` clone.
+#[derive(Debug, Default)]
+pub struct PlanCache {
+    inner: Mutex<HashMap<PlanKey, Arc<CompiledFunction>>>,
+}
+
+impl PlanCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Fetch or build the compiled function for `kind` on `rows x cols`
+    /// under `tmr` (spec synthesized via `FunctionSpec::build`).
+    pub fn get(
+        &self,
+        kind: FunctionKind,
+        rows: usize,
+        cols: usize,
+        tmr: TmrMode,
+    ) -> Result<Arc<CompiledFunction>> {
+        self.get_or_compile(kind, rows, cols, tmr, || {
+            CompiledFunction::build(kind, rows, cols, tmr)
+        })
+    }
+
+    /// Fetch or build with a caller-provided builder (used when the
+    /// caller already holds a synthesized `FunctionSpec`).
+    pub fn get_or_compile(
+        &self,
+        kind: FunctionKind,
+        rows: usize,
+        cols: usize,
+        tmr: TmrMode,
+        build: impl FnOnce() -> Result<CompiledFunction>,
+    ) -> Result<Arc<CompiledFunction>> {
+        let key: PlanKey = (kind, rows, cols, tmr);
+        let mut map = self.inner.lock().expect("plan cache poisoned");
+        if let Some(cf) = map.get(&key) {
+            return Ok(cf.clone());
+        }
+        let cf = Arc::new(build()?);
+        map.insert(key, cf.clone());
+        Ok(cf)
+    }
+
+    /// Number of cached entries.
+    pub fn len(&self) -> usize {
+        self.inner.lock().expect("plan cache poisoned").len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cache_compiles_once_and_shares() {
+        let cache = PlanCache::new();
+        let a = cache.get(FunctionKind::Add(8), 16, 256, TmrMode::Off).unwrap();
+        let b = cache.get(FunctionKind::Add(8), 16, 256, TmrMode::Off).unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "second lookup must hit the cache");
+        assert_eq!(cache.len(), 1);
+        // Different shape or mode -> different entry.
+        cache.get(FunctionKind::Add(8), 32, 256, TmrMode::Off).unwrap();
+        cache.get(FunctionKind::Add(8), 16, 256, TmrMode::Serial).unwrap();
+        assert_eq!(cache.len(), 3);
+    }
+
+    #[test]
+    fn compile_errors_surface() {
+        // 8 columns cannot hold an 8-bit adder.
+        let cache = PlanCache::new();
+        assert!(cache.get(FunctionKind::Add(8), 16, 8, TmrMode::Off).is_err());
+        assert_eq!(cache.len(), 0, "failed compiles are not cached");
+    }
+
+    #[test]
+    fn compiled_function_accessors() {
+        let cf = CompiledFunction::build(FunctionKind::Xor(4), 8, 64, TmrMode::Off).unwrap();
+        assert_eq!(cf.kind(), FunctionKind::Xor(4));
+        assert_eq!(cf.mode(), TmrMode::Off);
+        assert_eq!((cf.rows(), cf.cols()), (8, 64));
+    }
+}

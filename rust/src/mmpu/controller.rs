@@ -1,13 +1,27 @@
 //! The mMPU controller: crossbar fleet + reliability policy + data
 //! marshalling.
+//!
+//! §Perf: the serving path is plan-compiled and word-parallel end to end.
+//! [`Mmpu::exec_vector`] resolves a [`CompiledFunction`] from an internal
+//! [`PlanCache`] (the coordinator shares one cache across workers and
+//! calls [`Mmpu::exec_vector_compiled`] directly), loads operands with a
+//! 64x64 bit-transpose scatter — O(bits) word writes instead of
+//! O(items x bits) `write_bit` calls, with write-failure injection
+//! aggregated over the same canonical bit order and cycle/switch
+//! accounting preserved — executes through `Crossbar::run_plan`, and
+//! gathers results with the symmetric word-parallel readback.
+//! [`Mmpu::exec_vector_legacy`] keeps the per-bit path as the bit-exact
+//! reference (`rust/tests/prop_plan_equivalence.rs`).
 
 use anyhow::{ensure, Result};
 
 use crate::ecc::DiagonalEcc;
 use crate::errs::{ErrorModel, Injector};
-use crate::tmr::{TmrEngine, TmrMode};
+use crate::tmr::{TmrEngine, TmrMode, TmrRun};
+use crate::util::bitmat::{transpose64, BitMatrix};
 use crate::xbar::crossbar::Crossbar;
 
+use super::compiled::{CompiledFunction, PlanCache};
 use super::functions::{FunctionKind, FunctionSpec};
 
 /// Reliability policy applied to every function execution.
@@ -73,10 +87,87 @@ pub struct VectorResult {
     pub ecc_corrected: u64,
 }
 
+/// Row/replica layout of a vectored execution (shared by the word and
+/// per-bit marshalling paths so both consume the injector identically).
+struct BatchLayout {
+    items: usize,
+    replicas: usize,
+    item_stride: usize,
+    n: usize,
+    /// Column bases of the extra parallel-TMR input copies.
+    parallel_bases: Vec<u32>,
+}
+
+impl BatchLayout {
+    fn resolve(tmr: TmrMode, rows: usize, n_items: usize, func: &FunctionSpec) -> Result<Self> {
+        let (items, replicas) = match tmr {
+            TmrMode::SemiParallel => {
+                let k = (rows - 1) / 3;
+                ensure!(n_items <= k, "too many items for semi-parallel TMR ({k} max)");
+                (n_items, 3usize)
+            }
+            _ => {
+                ensure!(n_items <= rows, "too many items ({rows} rows)");
+                (n_items, 1usize)
+            }
+        };
+        let item_stride = if replicas == 3 { (rows - 1) / 3 } else { 0 };
+        let parallel_bases: Vec<u32> = if tmr == TmrMode::Parallel {
+            TmrEngine::parallel_copy_bases(&func.prog)[1..].to_vec()
+        } else {
+            vec![]
+        };
+        let n = func.kind.operand_bits() as usize;
+        Ok(Self { items, replicas, item_stride, n, parallel_bases })
+    }
+
+    /// Total operand bits written = injector write-failure sites, in the
+    /// canonical (legacy) order: items-major over the primary replicas
+    /// (`a` bits then `b` bits per copy), then the parallel extras.
+    fn total_bits(&self) -> usize {
+        (self.replicas + self.parallel_bases.len()) * self.items * 2 * self.n
+    }
+
+    /// Decompose a canonical flat bit index into
+    /// `(copy index, item, operand 0=a/1=b, bit)`.
+    fn decode(&self, idx: usize) -> (usize, usize, usize, usize) {
+        let n = self.n;
+        let primary = self.items * self.replicas * 2 * n;
+        if idx < primary {
+            let bit = idx % n;
+            let rest = idx / n;
+            let which = rest % 2;
+            let rest = rest / 2;
+            let rep = rest % self.replicas;
+            let item = rest / self.replicas;
+            (rep, item, which, bit)
+        } else {
+            let idx = idx - primary;
+            let bit = idx % n;
+            let rest = idx / n;
+            let which = rest % 2;
+            let rest = rest / 2;
+            let item = rest % self.items;
+            let base_idx = rest / self.items;
+            (self.replicas + base_idx, item, which, bit)
+        }
+    }
+
+    /// `(row_start, column base)` of each input copy, primary replicas
+    /// first, then the parallel extras.
+    fn copies(&self) -> Vec<(usize, u32)> {
+        let mut out: Vec<(usize, u32)> =
+            (0..self.replicas).map(|rep| (rep * self.item_stride, 0u32)).collect();
+        out.extend(self.parallel_bases.iter().map(|&b| (0usize, b)));
+        out
+    }
+}
+
 /// The memristive Memory Processing Unit.
 pub struct Mmpu {
     cfg: MmpuConfig,
     units: Vec<XbarUnit>,
+    plans: PlanCache,
 }
 
 impl Mmpu {
@@ -89,7 +180,7 @@ impl Mmpu {
                 ecc: cfg.policy.ecc_m.map(|m| DiagonalEcc::new(cfg.rows, cfg.cols, m)),
             })
             .collect();
-        Self { cfg, units }
+        Self { cfg, units, plans: PlanCache::new() }
     }
 
     pub fn config(&self) -> &MmpuConfig {
@@ -118,8 +209,117 @@ impl Mmpu {
 
     /// Execute a vectored function: element i of `a`/`b` occupies row i
     /// (replicated per the TMR strategy's needs). Returns element
-    /// results in order.
+    /// results in order. Compiles (once, cached per kind/shape/mode) and
+    /// dispatches to the word-parallel compiled path.
     pub fn exec_vector(
+        &mut self,
+        xbar_id: usize,
+        func: &FunctionSpec,
+        a: &[u64],
+        b: &[u64],
+    ) -> Result<VectorResult> {
+        let (rows, cols, tmr) = (self.cfg.rows, self.cfg.cols, self.cfg.policy.tmr);
+        // The spec clone happens only inside the builder, i.e. on a cache
+        // miss — hits stay O(1).
+        let cf = self.plans.get_or_compile(func.kind, rows, cols, tmr, || {
+            CompiledFunction::from_spec(func.clone(), rows, cols, tmr)
+        })?;
+        self.exec_vector_compiled(xbar_id, &cf, a, b)
+    }
+
+    /// Execute a pre-compiled function (the coordinator's hot path: the
+    /// `CompiledFunction` comes from a cache shared across workers).
+    pub fn exec_vector_compiled(
+        &mut self,
+        xbar_id: usize,
+        cf: &CompiledFunction,
+        a: &[u64],
+        b: &[u64],
+    ) -> Result<VectorResult> {
+        ensure!(a.len() == b.len(), "operand length mismatch");
+        ensure!(xbar_id < self.units.len(), "bad crossbar id");
+        ensure!(
+            cf.rows() == self.cfg.rows && cf.cols() == self.cfg.cols,
+            "function compiled for {}x{}, mMPU is {}x{}",
+            cf.rows(),
+            cf.cols(),
+            self.cfg.rows,
+            self.cfg.cols
+        );
+        ensure!(
+            cf.mode() == self.cfg.policy.tmr,
+            "function compiled for {:?}, policy is {:?}",
+            cf.mode(),
+            self.cfg.policy.tmr
+        );
+        let unit = &mut self.units[xbar_id];
+        let layout = BatchLayout::resolve(self.cfg.policy.tmr, unit.xbar.rows(), a.len(), &cf.spec)?;
+
+        // --- load operands: word-parallel bit-transpose scatter --------
+        // Write failures are sampled in ONE aggregate pass over the
+        // canonical bit order (identical to the per-bit path), applied to
+        // the staged values, then scattered with whole-word writes.
+        let mut flips: Vec<usize> = Vec::new();
+        unit.inj.write_fails(layout.total_bits(), |i| flips.push(i));
+        let copies = layout.copies();
+        let mut staged: Vec<(Vec<u64>, Vec<u64>)> =
+            copies.iter().map(|_| (a.to_vec(), b.to_vec())).collect();
+        for &f in &flips {
+            let (copy, item, which, bit) = layout.decode(f);
+            let vals = if which == 0 { &mut staged[copy].0 } else { &mut staged[copy].1 };
+            vals[item] ^= 1u64 << bit;
+        }
+        let mut switched = 0u64;
+        for ((row_start, col_base), (av, bv)) in copies.iter().zip(&staged) {
+            switched += scatter_operand(
+                unit.xbar.state_mut(),
+                &cf.spec.a_cols,
+                *col_base,
+                *row_start,
+                av,
+                layout.n,
+            );
+            switched += scatter_operand(
+                unit.xbar.state_mut(),
+                &cf.spec.b_cols,
+                *col_base,
+                *row_start,
+                bv,
+                layout.n,
+            );
+        }
+        // Cycle accounting preserved: one memory-write cycle per operand
+        // bit, as the per-bit interface charges.
+        unit.xbar.stats.switched_bits += switched;
+        unit.xbar.stats.cycles += layout.total_bits() as u64;
+
+        // --- ECC + compute + readback ---------------------------------
+        let silent = self.cfg.errors.is_silent();
+        let (run, ecc_cycles, ecc_corrected) =
+            Self::ecc_and_compute(unit, silent, |x, inj| cf.tmr.run(x, inj))?;
+        let values = gather_results(unit.xbar.state(), &run.output_cols, layout.items, cf.spec.result_mask())?;
+        Ok(VectorResult {
+            values,
+            compute_cycles: run.cycles,
+            ecc_cycles,
+            ecc_corrected,
+        })
+    }
+
+    /// Per-bit reference path: `write_bit` operand loads, uncompiled TMR
+    /// execution, per-bit readback. Consumes the injector identically to
+    /// the word-parallel path (same aggregate write-failure sampling,
+    /// same gate-error stream), so the two are bit-identical under any
+    /// seed — property-tested.
+    ///
+    /// Reproducibility note: both paths sample write failures in ONE
+    /// aggregate `write_fails(total_bits)` pass. The pre-§Perf code drew
+    /// one geometric sample *per bit* (`write_bit(.., Some(inj))`), so
+    /// seeded results with `p_write > 0` differ from v0 recordings (the
+    /// failure distribution is unchanged; only the stream positions
+    /// moved). Models with `p_write == 0` consume no RNG in either
+    /// version and reproduce v0 exactly.
+    pub fn exec_vector_legacy(
         &mut self,
         xbar_id: usize,
         func: &FunctionSpec,
@@ -130,76 +330,45 @@ impl Mmpu {
         ensure!(xbar_id < self.units.len(), "bad crossbar id");
         let tmr = self.cfg.policy.tmr;
         let unit = &mut self.units[xbar_id];
-        let rows = unit.xbar.rows();
-        let n = func.kind.operand_bits();
+        let layout = BatchLayout::resolve(tmr, unit.xbar.rows(), a.len(), func)?;
 
-        // Row mapping per strategy.
-        let (items, replicas) = match tmr {
-            TmrMode::SemiParallel => {
-                let k = (rows - 1) / 3;
-                ensure!(a.len() <= k, "too many items for semi-parallel TMR ({k} max)");
-                (a.len(), 3usize)
-            }
-            _ => {
-                ensure!(a.len() <= rows, "too many items ({rows} rows)");
-                (a.len(), 1usize)
+        let mut flips: Vec<usize> = Vec::new();
+        unit.inj.write_fails(layout.total_bits(), |i| flips.push(i));
+        let flip_set: std::collections::HashSet<usize> = flips.into_iter().collect();
+        // Canonical order: items-major over primary replicas, a then b.
+        let n = layout.n;
+        let mut bit_idx = 0usize;
+        let mut write = |xbar: &mut Crossbar, row: usize, cols: &[u32], base: u32, value: u64| {
+            for (k, &c) in cols.iter().enumerate().take(n) {
+                let mut v = (value >> k) & 1 == 1;
+                if flip_set.contains(&bit_idx) {
+                    v = !v;
+                }
+                bit_idx += 1;
+                xbar.write_bit(row, (c + base) as usize, v, None);
             }
         };
-
-        // --- load operands (memory-interface writes) -----------------
-        let item_stride = if replicas == 3 { (rows - 1) / 3 } else { 0 };
         for (i, (&av, &bv)) in a.iter().zip(b).enumerate() {
-            for rep in 0..replicas {
-                let row = i + rep * item_stride;
-                Self::write_operand(&mut unit.xbar, &mut unit.inj, row, &func.a_cols, av, n);
-                Self::write_operand(&mut unit.xbar, &mut unit.inj, row, &func.b_cols, bv, n);
+            for rep in 0..layout.replicas {
+                let row = i + rep * layout.item_stride;
+                write(&mut unit.xbar, row, &func.a_cols, 0, av);
+                write(&mut unit.xbar, row, &func.b_cols, 0, bv);
             }
         }
-        // Parallel TMR keeps three column-relocated copies of the inputs.
-        if tmr == TmrMode::Parallel {
-            for base in TmrEngine::parallel_copy_bases(&func.prog).into_iter().skip(1) {
-                for (i, (&av, &bv)) in a.iter().zip(b).enumerate() {
-                    let ac: Vec<u32> = func.a_cols.iter().map(|c| c + base).collect();
-                    let bc: Vec<u32> = func.b_cols.iter().map(|c| c + base).collect();
-                    Self::write_operand(&mut unit.xbar, &mut unit.inj, i, &ac, av, n);
-                    Self::write_operand(&mut unit.xbar, &mut unit.inj, i, &bc, bv, n);
-                }
+        for &base in &layout.parallel_bases {
+            for (i, (&av, &bv)) in a.iter().zip(b).enumerate() {
+                write(&mut unit.xbar, i, &func.a_cols, base, av);
+                write(&mut unit.xbar, i, &func.b_cols, base, bv);
             }
         }
 
-        // --- ECC: encode freshly-written inputs, verify before compute -
-        let mut ecc_cycles = 0;
-        let mut ecc_corrected = 0;
-        if let Some(ecc) = unit.ecc.as_mut() {
-            ecc.encode(unit.xbar.state());
-            let v0 = ecc.stats.verify_cycles + ecc.stats.update_cycles;
-            let outcome = ecc.correct(unit.xbar.state_mut());
-            ecc_corrected += outcome.corrected_bits.len() as u64;
-            ecc_cycles += ecc.stats.verify_cycles + ecc.stats.update_cycles - v0;
-        }
-
-        // --- compute under TMR ---------------------------------------
+        let silent = self.cfg.errors.is_silent();
         let engine = TmrEngine::new(tmr);
-        let inj = if self.cfg.errors.is_silent() { None } else { Some(&mut unit.inj) };
-        let run = engine.execute(&mut unit.xbar, &func.prog, inj)?;
-
-        // --- ECC: update check bits for the produced outputs ----------
-        if let Some(ecc) = unit.ecc.as_mut() {
-            for &c in &run.output_cols {
-                let col = unit.xbar.state().col_bitvec(c as usize);
-                // parity' = parity ^ old ^ new; the controller models the
-                // old column as it was before compute — the engine tracks
-                // only cycle cost here, then re-syncs the block parities.
-                ecc.note_col_write(c as usize, &col, &col);
-            }
-            // Re-sync (outputs & intermediates changed during compute).
-            ecc.encode(unit.xbar.state());
-            ecc_cycles += ecc.update_cost(run.output_cols.len() as u64);
-        }
-
-        // --- read back -------------------------------------------------
+        let prog = func.prog.clone();
+        let (run, ecc_cycles, ecc_corrected) =
+            Self::ecc_and_compute(unit, silent, move |x, inj| engine.execute(x, &prog, inj))?;
         let mask = func.result_mask();
-        let values = (0..items)
+        let values = (0..layout.items)
             .map(|i| {
                 run.output_cols.iter().enumerate().fold(0u64, |acc, (k, &c)| {
                     acc | ((unit.xbar.get(i, c as usize) as u64) << k)
@@ -214,17 +383,42 @@ impl Mmpu {
         })
     }
 
-    fn write_operand(
-        xbar: &mut Crossbar,
-        inj: &mut Injector,
-        row: usize,
-        cols: &[u32],
-        value: u64,
-        n: u32,
-    ) {
-        for (k, &c) in cols.iter().enumerate().take(n as usize) {
-            xbar.write_bit(row, c as usize, (value >> k) & 1 == 1, Some(inj));
+    /// Shared middle phase: ECC verify-before, TMR compute, ECC
+    /// update-after — identical for the word and per-bit paths.
+    fn ecc_and_compute(
+        unit: &mut XbarUnit,
+        silent: bool,
+        compute: impl FnOnce(&mut Crossbar, Option<&mut Injector>) -> Result<TmrRun>,
+    ) -> Result<(TmrRun, u64, u64)> {
+        // --- ECC: encode freshly-written inputs, verify before compute -
+        let mut ecc_cycles = 0;
+        let mut ecc_corrected = 0;
+        if let Some(ecc) = unit.ecc.as_mut() {
+            ecc.encode(unit.xbar.state());
+            let v0 = ecc.stats.verify_cycles + ecc.stats.update_cycles;
+            let outcome = ecc.correct(unit.xbar.state_mut());
+            ecc_corrected += outcome.corrected_bits.len() as u64;
+            ecc_cycles += ecc.stats.verify_cycles + ecc.stats.update_cycles - v0;
         }
+
+        // --- compute under TMR ---------------------------------------
+        let inj = if silent { None } else { Some(&mut unit.inj) };
+        let run = compute(&mut unit.xbar, inj)?;
+
+        // --- ECC: update check bits for the produced outputs ----------
+        if let Some(ecc) = unit.ecc.as_mut() {
+            for &c in &run.output_cols {
+                let col = unit.xbar.state().col_bitvec(c as usize);
+                // parity' = parity ^ old ^ new; the controller models the
+                // old column as it was before compute — the engine tracks
+                // only cycle cost here, then re-syncs the block parities.
+                ecc.note_col_write(c as usize, &col, &col);
+            }
+            // Re-sync (outputs & intermediates changed during compute).
+            ecc.encode(unit.xbar.state());
+            ecc_cycles += ecc.update_cost(run.output_cols.len() as u64);
+        }
+        Ok((run, ecc_cycles, ecc_corrected))
     }
 
     /// Periodic ECC scrub of a crossbar (correct accumulated indirect
@@ -256,6 +450,64 @@ impl Mmpu {
         unit.inj.retention(bits, dt, |i| state.flip(i / cols, i % cols));
         unit.inj.abrupt(bits, dt, |i| state.flip(i / cols, i % cols));
     }
+}
+
+/// Scatter one operand's values into its bit-plane columns: per 64-item
+/// block, a 64x64 bit transpose turns item-major values into bit-plane
+/// words, each stored with a single word splice. Returns switched bits.
+fn scatter_operand(
+    state: &mut BitMatrix,
+    cols: &[u32],
+    col_base: u32,
+    row_start: usize,
+    vals: &[u64],
+    n: usize,
+) -> u64 {
+    let mut switched = 0u64;
+    let n = n.min(cols.len());
+    let mut block = 0usize;
+    while block * 64 < vals.len() {
+        let len = (vals.len() - block * 64).min(64);
+        let mut tile = [0u64; 64];
+        tile[..len].copy_from_slice(&vals[block * 64..block * 64 + len]);
+        transpose64(&mut tile);
+        for (k, &col) in cols.iter().enumerate().take(n) {
+            switched += state.splice_col_word(
+                (col + col_base) as usize,
+                row_start + block * 64,
+                len,
+                tile[k],
+            ) as u64;
+        }
+        block += 1;
+    }
+    switched
+}
+
+/// Word-parallel result readback: gather each output bit-plane word,
+/// transpose back to item-major values.
+fn gather_results(
+    state: &BitMatrix,
+    output_cols: &[u32],
+    items: usize,
+    mask: u64,
+) -> Result<Vec<u64>> {
+    ensure!(output_cols.len() <= 64, "result wider than 64 bits");
+    let mut values = Vec::with_capacity(items);
+    let mut block = 0usize;
+    while block * 64 < items {
+        let len = (items - block * 64).min(64);
+        let mut tile = [0u64; 64];
+        for (k, &c) in output_cols.iter().enumerate() {
+            tile[k] = state.gather_col_word(c as usize, block * 64, len);
+        }
+        transpose64(&mut tile);
+        for row in tile.iter().take(len) {
+            values.push(row & mask);
+        }
+        block += 1;
+    }
+    Ok(values)
 }
 
 /// Convenience: build a spec and run it on crossbar 0 of a fresh
@@ -378,6 +630,34 @@ mod tests {
     }
 
     #[test]
+    fn word_marshalling_matches_legacy_reference() {
+        // Same config + same seed: the word-parallel path and the
+        // per-bit reference must agree on values, cycle accounting and
+        // injector consumption — including under write failures.
+        let a: Vec<u64> = (0..48).map(|i| i * 37 % 256).collect();
+        let b: Vec<u64> = (0..48).map(|i| i * 91 % 256).collect();
+        let errors = ErrorModel { p_write: 5e-3, ..ErrorModel::direct_only(1e-3) };
+        let cfg = MmpuConfig {
+            rows: 64,
+            cols: 512,
+            num_crossbars: 1,
+            policy: ReliabilityPolicy::none(),
+            errors,
+            seed: 41,
+        };
+        let func = FunctionSpec::build(FunctionKind::Mul(8));
+        let mut fast = Mmpu::new(cfg.clone());
+        let rf = fast.exec_vector(0, &func, &a, &b).unwrap();
+        let mut slow = Mmpu::new(cfg);
+        let rs = slow.exec_vector_legacy(0, &func, &a, &b).unwrap();
+        assert_eq!(rf.values, rs.values);
+        assert_eq!(rf.compute_cycles, rs.compute_cycles);
+        assert_eq!(fast.stats(0), slow.stats(0));
+        assert_eq!(fast.injector_counters(0), slow.injector_counters(0));
+        assert_eq!(fast.crossbar(0).state(), slow.crossbar(0).state());
+    }
+
+    #[test]
     fn aging_corrupts_and_scrub_repairs() {
         let cfg = MmpuConfig {
             rows: 32,
@@ -437,5 +717,21 @@ mod tests {
         .unwrap();
         let wrong = r.values.iter().filter(|&&v| v != 63).count();
         assert!(wrong > 0, "p_gate=1e-3 over ~800 gates must corrupt something");
+    }
+
+    #[test]
+    fn batch_layout_decode_roundtrip() {
+        let func = FunctionSpec::build(FunctionKind::Add(8));
+        let layout = BatchLayout::resolve(TmrMode::SemiParallel, 64, 15, &func).unwrap();
+        assert_eq!(layout.replicas, 3);
+        assert_eq!(layout.item_stride, 21);
+        // Every canonical index decodes to in-range coordinates, and the
+        // encoding is a bijection.
+        let mut seen = std::collections::HashSet::new();
+        for idx in 0..layout.total_bits() {
+            let (copy, item, which, bit) = layout.decode(idx);
+            assert!(copy < 3 && item < 15 && which < 2 && bit < 8, "idx {idx}");
+            assert!(seen.insert((copy, item, which, bit)), "idx {idx} duplicates");
+        }
     }
 }

@@ -6,8 +6,10 @@
 //! (ECC verify-before / update-after + TMR strategy), and marshals data
 //! in and out of the bit-plane layout.
 
+pub mod compiled;
 pub mod controller;
 pub mod functions;
 
+pub use compiled::{CompiledFunction, PlanCache, PlanKey};
 pub use controller::{Mmpu, MmpuConfig, ReliabilityPolicy, VectorResult};
 pub use functions::{FunctionKind, FunctionSpec};

@@ -75,11 +75,26 @@ impl Runtime {
 
     /// Pick the smallest gate-scan artifact that fits (r, c, >= steps).
     pub fn gate_scan_shape(&self, r: usize, c: usize, min_steps: usize) -> Result<GateScanShape> {
-        let mut best: Option<GateScanShape> = None;
+        self.gate_scan_pick(r, c, min_steps).map(|(shape, _, _)| shape)
+    }
+
+    /// Single-scan artifact selection: shape + compile name + file path
+    /// in one pass over the manifest (run_gate_scan previously scanned
+    /// twice — once in `gate_scan_shape`, once in `artifact_entry`).
+    fn gate_scan_pick(
+        &self,
+        r: usize,
+        c: usize,
+        min_steps: usize,
+    ) -> Result<(GateScanShape, String, std::path::PathBuf)> {
+        let mut best: Option<(GateScanShape, String, std::path::PathBuf)> = None;
         for e in self.manifest.artifacts_of_kind("gate_scan") {
             let (ar, ac, as_) = (e.get_usize("r")?, e.get_usize("c")?, e.get_usize("s")?);
-            if ar == r && ac == c && as_ >= min_steps && best.map(|b| as_ < b.s).unwrap_or(true) {
-                best = Some(GateScanShape { r: ar, c: ac, s: as_ });
+            let better = best.as_ref().map(|(b, _, _)| as_ < b.s).unwrap_or(true);
+            if ar == r && ac == c && as_ >= min_steps && better {
+                let name = e.get("name").context("artifact without name")?.to_string();
+                let path = self.manifest.file_path(e)?;
+                best = Some((GateScanShape { r: ar, c: ac, s: as_ }, name, path));
             }
         }
         best.with_context(|| {
@@ -111,13 +126,8 @@ impl Runtime {
         let (r, c) = (state.rows(), state.cols());
         let s = enc.steps;
         ensure!(err_masks.len() == s * r, "err mask shape mismatch");
-        let shape = self.gate_scan_shape(r, c, s)?;
+        let (shape, name, path) = self.gate_scan_pick(r, c, s)?;
         ensure!(shape.s == s, "encoded program capacity {s} != artifact {}", shape.s);
-        let (name, path) = self.artifact_entry("gate_scan", |e| {
-            e.get_usize("r").ok() == Some(r)
-                && e.get_usize("c").ok() == Some(c)
-                && e.get_usize("s").ok() == Some(s)
-        })?;
         self.compile(&name, &path)?;
 
         let state_lit =

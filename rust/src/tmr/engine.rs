@@ -1,10 +1,19 @@
 //! The TMR execution engine: serial / parallel / semi-parallel strategies
 //! around an arbitrary single-row function program (paper §V, Fig. 3).
+//!
+//! §Perf: each strategy can be **compiled once** into a [`CompiledTmr`]
+//! — the retargeted/relocated copies, the zipped parallel cycles, the
+//! per-item semi-parallel voting schedule and the per-bit vote program
+//! are all synthesized and plan-compiled at build time, then executed
+//! through `Crossbar::run_plan` with no per-execution program cloning or
+//! concurrency re-validation. [`TmrEngine::execute`] remains the
+//! uncompiled reference path (bit-identical by property test).
 
 use anyhow::{bail, ensure, Result};
 
 use crate::errs::Injector;
 use crate::isa::microop::{Dir, LaneRange, MicroOp};
+use crate::isa::plan::CompiledPlan;
 use crate::isa::program::{Program, Step};
 use crate::xbar::crossbar::Crossbar;
 use crate::xbar::gate::Gate;
@@ -13,7 +22,7 @@ use crate::xbar::partition::Partitions;
 use super::voting::per_bit_vote_program;
 
 /// Reliability strategy for function execution.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum TmrMode {
     /// Unreliable baseline (Fig. 3a).
     Off,
@@ -50,10 +59,13 @@ impl TmrEngine {
         Self { mode }
     }
 
-    /// Execute `prog` on `x`. For `Parallel`, the caller must have
-    /// replicated the input values into the relocated copies' input
-    /// columns (`copy_input_cols`); for `SemiParallel`, into the row
-    /// triples (item i at rows {i, i+k, i+2k}, k = (rows-1)/3).
+    /// Execute `prog` on `x` through the **uncompiled** per-step path
+    /// (kept as the bit-exact reference for `CompiledTmr`; hot paths
+    /// should [`TmrEngine::compile`] once and reuse the plan). For
+    /// `Parallel`, the caller must have replicated the input values into
+    /// the relocated copies' input columns (`copy_input_cols`); for
+    /// `SemiParallel`, into the row triples (item i at rows
+    /// {i, i+k, i+2k}, k = (rows-1)/3).
     pub fn execute(
         &self,
         x: &mut Crossbar,
@@ -64,7 +76,7 @@ impl TmrEngine {
         match self.mode {
             TmrMode::Off => {
                 self.configure_partitions(x, std::slice::from_ref(prog))?;
-                x.run_program(prog, inj)?;
+                x.run_program_uncompiled(prog, inj)?;
                 Ok(TmrRun {
                     output_cols: prog.output_cols.clone(),
                     cycles: x.stats.cycles - c0,
@@ -75,6 +87,179 @@ impl TmrEngine {
             TmrMode::Serial => self.execute_serial(x, prog, inj.as_deref_mut(), c0),
             TmrMode::Parallel => self.execute_parallel(x, prog, inj.as_deref_mut(), c0),
             TmrMode::SemiParallel => self.execute_semi(x, prog, inj.as_deref_mut(), c0),
+        }
+    }
+
+    /// Compile this strategy for `prog` on a `rows x cols` crossbar: all
+    /// copy synthesis, partition configuration, concurrency validation
+    /// and operand resolution happen here, once. The returned
+    /// [`CompiledTmr`] executes bit-identically to [`TmrEngine::execute`]
+    /// (same state, stats, and injector stream) at a fraction of the
+    /// per-execution cost.
+    pub fn compile(&self, prog: &Program, rows: usize, cols: usize) -> Result<CompiledTmr> {
+        let row_parts = Partitions::whole(rows as u32);
+        let whole_cols = Partitions::whole(cols as u32);
+        match self.mode {
+            TmrMode::Off => {
+                let parts = single_program_partitions(prog, cols)?;
+                let col_parts = parts.as_ref().unwrap_or(&whole_cols);
+                let plan = CompiledPlan::compile(prog, rows, cols, col_parts, &row_parts)?;
+                Ok(CompiledTmr {
+                    mode: self.mode,
+                    rows,
+                    cols,
+                    parts,
+                    plans: vec![plan],
+                    output_cols: prog.output_cols.clone(),
+                    area_cols: prog.width,
+                    items: rows,
+                })
+            }
+            TmrMode::Serial => {
+                let lay = Self::serial_layout(prog);
+                ensure!((lay.width as usize) <= cols, "crossbar too narrow for serial TMR");
+                let parts = single_program_partitions(prog, cols)?;
+                let col_parts = parts.as_ref().unwrap_or(&whole_cols);
+                let p2 = retarget_outputs(prog, &lay.copy2)?;
+                let p3 = retarget_outputs(prog, &lay.copy3)?;
+                let vote = per_bit_vote_program(
+                    &prog.output_cols,
+                    &lay.copy2,
+                    &lay.copy3,
+                    &lay.voted,
+                    lay.scratch,
+                );
+                let plans = [prog, &p2, &p3, &vote]
+                    .into_iter()
+                    .map(|p| CompiledPlan::compile(p, rows, cols, col_parts, &row_parts))
+                    .collect::<Result<Vec<_>>>()?;
+                Ok(CompiledTmr {
+                    mode: self.mode,
+                    rows,
+                    cols,
+                    parts,
+                    plans,
+                    output_cols: lay.voted,
+                    area_cols: lay.width,
+                    items: rows,
+                })
+            }
+            TmrMode::Parallel => {
+                let w = prog.width;
+                let o = prog.output_cols.len() as u32;
+                let vote_base = 3 * w;
+                ensure!(
+                    (vote_base + o + 1) as usize <= cols,
+                    "crossbar too narrow for parallel TMR"
+                );
+                let p2 = prog.relocate(w);
+                let p3 = prog.relocate(2 * w);
+                let mut starts: Vec<u32> = vec![0, w, 2 * w];
+                for p in [prog, &p2, &p3] {
+                    starts.extend(p.partition_starts.iter().copied());
+                }
+                starts.sort_unstable();
+                starts.dedup();
+                starts.retain(|&s| (s as usize) < cols);
+                let col_parts = Partitions::new(cols as u32, starts);
+                ensure!(
+                    prog.steps.len() == p2.steps.len() && p2.steps.len() == p3.steps.len(),
+                    "copies must share cycle structure"
+                );
+                // Zip the three copies cycle-by-cycle: same latency as
+                // one copy; validated once here instead of per cycle.
+                let mut zipped = Program::new(&format!("{}*tmr3", prog.name));
+                for i in 0..prog.steps.len() {
+                    let mut ops = prog.steps[i].ops.clone();
+                    ops.extend(p2.steps[i].ops.iter().copied());
+                    ops.extend(p3.steps[i].ops.iter().copied());
+                    zipped.steps.push(Step::many(ops));
+                }
+                let voted: Vec<u32> = (vote_base..vote_base + o).collect();
+                let vote = per_bit_vote_program(
+                    &prog.output_cols,
+                    &p2.output_cols,
+                    &p3.output_cols,
+                    &voted,
+                    vote_base + o,
+                );
+                let plans = vec![
+                    CompiledPlan::compile(&zipped, rows, cols, &col_parts, &row_parts)?,
+                    CompiledPlan::compile(&vote, rows, cols, &col_parts, &row_parts)?,
+                ];
+                Ok(CompiledTmr {
+                    mode: self.mode,
+                    rows,
+                    cols,
+                    parts: Some(col_parts),
+                    plans,
+                    output_cols: voted,
+                    area_cols: vote_base + o + 1,
+                    items: rows,
+                })
+            }
+            TmrMode::SemiParallel => {
+                ensure!(rows >= 4, "semi-parallel TMR needs >= 4 rows");
+                let k = (rows - 1) / 3; // items; last row is voting scratch
+                let scratch_row = (rows - 1) as u32;
+                let parts = single_program_partitions(prog, cols)?;
+                let col_parts = parts.as_ref().unwrap_or(&whole_cols);
+                let (lo, hi) = match (prog.output_cols.iter().min(), prog.output_cols.iter().max())
+                {
+                    (Some(&lo), Some(&hi)) => (lo, hi),
+                    _ => bail!("program has no outputs"),
+                };
+                let lanes = LaneRange::new(lo, hi + 1);
+                // Per-item vote schedule: two in-column gates (Min3 + NOT,
+                // each with its Set1 init) spanning the output columns,
+                // copies at rows {i, i+k, i+2k} — one plan for all items.
+                let mut vote = Program::new(&format!("{}*semivote", prog.name));
+                for i in 0..k {
+                    let (r1, r2, r3) = (i as u32, (i + k) as u32, (i + 2 * k) as u32);
+                    vote.steps.push(Step::one(MicroOp::with_dir(
+                        Dir::InCol,
+                        Gate::Set1,
+                        &[],
+                        scratch_row,
+                        lanes,
+                    )));
+                    vote.steps.push(Step::one(MicroOp::with_dir(
+                        Dir::InCol,
+                        Gate::Min3,
+                        &[r1, r2, r3],
+                        scratch_row,
+                        lanes,
+                    )));
+                    vote.steps.push(Step::one(MicroOp::with_dir(
+                        Dir::InCol,
+                        Gate::Set1,
+                        &[],
+                        r1,
+                        lanes,
+                    )));
+                    vote.steps.push(Step::one(MicroOp::with_dir(
+                        Dir::InCol,
+                        Gate::Not,
+                        &[scratch_row],
+                        r1,
+                        lanes,
+                    )));
+                }
+                let plans = vec![
+                    CompiledPlan::compile(prog, rows, cols, col_parts, &row_parts)?,
+                    CompiledPlan::compile(&vote, rows, cols, col_parts, &row_parts)?,
+                ];
+                Ok(CompiledTmr {
+                    mode: self.mode,
+                    rows,
+                    cols,
+                    parts,
+                    plans,
+                    output_cols: prog.output_cols.clone(),
+                    area_cols: prog.width,
+                    items: k,
+                })
+            }
         }
     }
 
@@ -103,13 +288,13 @@ impl TmrEngine {
         ensure!((lay.width as usize) <= x.cols(), "crossbar too narrow for serial TMR");
         self.configure_partitions(x, std::slice::from_ref(prog))?;
         // Copy 1: the original program.
-        x.run_program(prog, inj.as_deref_mut())?;
+        x.run_program_uncompiled(prog, inj.as_deref_mut())?;
         // Copies 2 and 3: same inputs, shared intermediates, retargeted
         // outputs (every gate re-inits its outputs, so reuse is sound).
         let p2 = retarget_outputs(prog, &lay.copy2)?;
         let p3 = retarget_outputs(prog, &lay.copy3)?;
-        x.run_program(&p2, inj.as_deref_mut())?;
-        x.run_program(&p3, inj.as_deref_mut())?;
+        x.run_program_uncompiled(&p2, inj.as_deref_mut())?;
+        x.run_program_uncompiled(&p3, inj.as_deref_mut())?;
         // Per-bit Minority3 voting (fallible).
         let vote = per_bit_vote_program(
             &prog.output_cols,
@@ -118,7 +303,7 @@ impl TmrEngine {
             &lay.voted,
             lay.scratch,
         );
-        x.run_program(&vote, inj)?;
+        x.run_program_uncompiled(&vote, inj)?;
         Ok(TmrRun {
             output_cols: lay.voted,
             cycles: x.stats.cycles - c0,
@@ -174,7 +359,7 @@ impl TmrEngine {
             &voted,
             vote_base + o,
         );
-        x.run_program(&vote, inj)?;
+        x.run_program_uncompiled(&vote, inj)?;
         Ok(TmrRun {
             output_cols: voted,
             cycles: x.stats.cycles - c0,
@@ -197,7 +382,7 @@ impl TmrEngine {
         self.configure_partitions(x, std::slice::from_ref(prog))?;
         // One pass over ALL rows computes all three copies at once —
         // that is the row-parallelism doing the triplication.
-        x.run_program(prog, inj.as_deref_mut())?;
+        x.run_program_uncompiled(prog, inj.as_deref_mut())?;
         // Vote per item: two in-column gates (Min3 + NOT) spanning the
         // output column range, copies at rows {i, i+k, i+2k}.
         let (lo, hi) = match (prog.output_cols.iter().min(), prog.output_cols.iter().max()) {
@@ -253,6 +438,96 @@ impl TmrEngine {
             x.set_col_partitions(Partitions::new(x.cols() as u32, starts));
         }
         Ok(())
+    }
+}
+
+/// Partition configuration a single program requires, mirroring
+/// `TmrEngine::configure_partitions`: `None` when the program carries no
+/// partition structure (the crossbar keeps its current configuration).
+fn single_program_partitions(prog: &Program, cols: usize) -> Result<Option<Partitions>> {
+    let mut starts: Vec<u32> = vec![0];
+    starts.extend(prog.partition_starts.iter().copied());
+    starts.sort_unstable();
+    starts.dedup();
+    if starts.len() > 1 || !prog.partition_starts.is_empty() {
+        ensure!(
+            starts.iter().all(|&s| (s as usize) < cols),
+            "partition start beyond {cols} columns"
+        );
+        Ok(Some(Partitions::new(cols as u32, starts)))
+    } else {
+        Ok(None)
+    }
+}
+
+/// A TMR strategy compiled for one program on one crossbar shape: the
+/// copies, the partition configuration and the vote schedule are frozen
+/// into plans; execution is reduced to partition setup (when required)
+/// plus `run_plan` calls. Immutable and `Send + Sync` — the coordinator
+/// shares these across workers behind `Arc` (`mmpu::PlanCache`).
+#[derive(Clone, Debug)]
+pub struct CompiledTmr {
+    pub mode: TmrMode,
+    rows: usize,
+    cols: usize,
+    /// Column partitions to (re)configure before each execution, exactly
+    /// when the legacy path would (`None`: leave the crossbar as-is).
+    parts: Option<Partitions>,
+    plans: Vec<CompiledPlan>,
+    output_cols: Vec<u32>,
+    area_cols: u32,
+    items: usize,
+}
+
+impl CompiledTmr {
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Columns of the final (voted) outputs.
+    pub fn output_cols(&self) -> &[u32] {
+        &self.output_cols
+    }
+
+    /// Logical items per execution (throughput proxy): `rows` for
+    /// Off/Serial/Parallel, `(rows - 1) / 3` for SemiParallel.
+    pub fn items(&self) -> usize {
+        self.items
+    }
+
+    /// Total compiled micro-ops across all phases (diagnostics).
+    pub fn num_ops(&self) -> usize {
+        self.plans.iter().map(|p| p.num_ops()).sum()
+    }
+
+    /// Execute on a crossbar of the compiled shape. Bit-identical to
+    /// `TmrEngine::execute` with the same injector stream.
+    pub fn run(&self, x: &mut Crossbar, mut inj: Option<&mut Injector>) -> Result<TmrRun> {
+        ensure!(
+            x.rows() == self.rows && x.cols() == self.cols,
+            "compiled for {}x{}, crossbar is {}x{}",
+            self.rows,
+            self.cols,
+            x.rows(),
+            x.cols()
+        );
+        let c0 = x.stats.cycles;
+        if let Some(parts) = &self.parts {
+            x.set_col_partitions(parts.clone());
+        }
+        for plan in &self.plans {
+            x.run_plan(plan, inj.as_deref_mut())?;
+        }
+        Ok(TmrRun {
+            output_cols: self.output_cols.clone(),
+            cycles: x.stats.cycles - c0,
+            area_cols: self.area_cols,
+            items: self.items,
+        })
     }
 }
 
@@ -438,6 +713,84 @@ mod tests {
             tmr_correct > base_correct,
             "TMR must beat baseline: {tmr_correct} vs {base_correct}"
         );
+    }
+
+    #[test]
+    fn compiled_tmr_matches_legacy_all_modes() {
+        // Same crossbar contents + same injector seed: the compiled path
+        // must reproduce the legacy path bit-for-bit — state, stats, and
+        // consumed error stream — for every strategy.
+        let (prog, lay) = ripple_adder(8);
+        let width = (TmrEngine::serial_layout(&prog).width as usize)
+            .max(4 * prog.width as usize + 40);
+        let pairs: Vec<(u64, u64)> = (0..21).map(|i| (i * 13 % 256, i * 57 % 256)).collect();
+        for mode in [TmrMode::Off, TmrMode::Serial, TmrMode::Parallel, TmrMode::SemiParallel] {
+            let rows = match mode {
+                TmrMode::SemiParallel => 3 * pairs.len() + 1,
+                _ => pairs.len(),
+            };
+            let load = |x: &mut Crossbar| match mode {
+                TmrMode::Parallel => {
+                    for base in TmrEngine::parallel_copy_bases(&prog) {
+                        for (r, &(a, b)) in pairs.iter().enumerate() {
+                            for i in 0..8 {
+                                x.state_mut()
+                                    .set(r, (base + lay.a.col(i)) as usize, (a >> i) & 1 == 1);
+                                x.state_mut()
+                                    .set(r, (base + lay.b.col(i)) as usize, (b >> i) & 1 == 1);
+                            }
+                        }
+                    }
+                }
+                TmrMode::SemiParallel => {
+                    for copy in 0..3 {
+                        for (i, &(a, b)) in pairs.iter().enumerate() {
+                            let r = i + copy * pairs.len();
+                            for bit in 0..8 {
+                                x.state_mut().set(r, lay.a.col(bit) as usize, (a >> bit) & 1 == 1);
+                                x.state_mut().set(r, lay.b.col(bit) as usize, (b >> bit) & 1 == 1);
+                            }
+                        }
+                    }
+                }
+                _ => load_adder_inputs(x, &lay, &pairs),
+            };
+            let engine = TmrEngine::new(mode);
+            let mut legacy = Crossbar::new(rows, width);
+            load(&mut legacy);
+            let mut inj_a = Injector::new(ErrorModel::direct_only(1e-3), 77, 0);
+            let run_a = engine.execute(&mut legacy, &prog, Some(&mut inj_a)).unwrap();
+            let mut compiled = Crossbar::new(rows, width);
+            load(&mut compiled);
+            let ct = engine.compile(&prog, rows, width).unwrap();
+            let mut inj_b = Injector::new(ErrorModel::direct_only(1e-3), 77, 0);
+            let run_b = ct.run(&mut compiled, Some(&mut inj_b)).unwrap();
+            assert_eq!(legacy.state(), compiled.state(), "{mode:?} state");
+            assert_eq!(legacy.stats, compiled.stats, "{mode:?} stats");
+            assert_eq!(inj_a.counters, inj_b.counters, "{mode:?} injector");
+            assert_eq!(run_a.output_cols, run_b.output_cols, "{mode:?} outputs");
+            assert_eq!(run_a.cycles, run_b.cycles, "{mode:?} cycles");
+            assert_eq!(run_a.items, run_b.items, "{mode:?} items");
+            assert_eq!(run_a.area_cols, run_b.area_cols, "{mode:?} area");
+        }
+    }
+
+    #[test]
+    fn compiled_tmr_is_reusable() {
+        let (prog, lay) = ripple_adder(8);
+        let width = TmrEngine::serial_layout(&prog).width as usize;
+        let ct = TmrEngine::new(TmrMode::Serial).compile(&prog, 8, width).unwrap();
+        let pairs: Vec<(u64, u64)> = (0..8).map(|i| (i * 9 % 256, i * 5 % 256)).collect();
+        for _ in 0..3 {
+            let mut x = Crossbar::new(8, width);
+            load_adder_inputs(&mut x, &lay, &pairs);
+            let run = ct.run(&mut x, None).unwrap();
+            for (r, &(a, b)) in pairs.iter().enumerate() {
+                let v = read_word(&x, r, &run.output_cols);
+                assert_eq!(v & 0xFF, (a + b) & 0xFF, "row {r}");
+            }
+        }
+        assert!(ct.num_ops() > 0);
     }
 
     #[test]

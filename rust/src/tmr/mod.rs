@@ -14,5 +14,5 @@
 pub mod engine;
 pub mod voting;
 
-pub use engine::{TmrEngine, TmrMode, TmrRun};
+pub use engine::{CompiledTmr, TmrEngine, TmrMode, TmrRun};
 pub use voting::{per_bit_vote_program, per_element_vote, VoteKind};

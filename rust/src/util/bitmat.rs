@@ -310,6 +310,54 @@ impl BitMatrix {
         }
     }
 
+    /// Overwrite `len` (<= 64) bits of column `c` starting at `row_start`
+    /// with the low `len` bits of `bits`. Returns how many stored bits
+    /// changed (switch-energy accounting). §Perf: this is the word-wide
+    /// scatter primitive behind the mMPU's operand marshalling — one or
+    /// two word ops instead of `len` `set` calls.
+    pub fn splice_col_word(&mut self, c: usize, row_start: usize, len: usize, bits: u64) -> u32 {
+        debug_assert!(len >= 1 && len <= 64);
+        debug_assert!(row_start + len <= self.rows && c < self.cols);
+        let mask = if len == 64 { u64::MAX } else { (1u64 << len) - 1 };
+        let bits = bits & mask;
+        let col = self.col_mut(c);
+        let w = row_start / 64;
+        let off = row_start % 64;
+        let mut changed = 0u32;
+        let lo_mask = mask << off;
+        let prev = col[w];
+        let next = (prev & !lo_mask) | ((bits << off) & lo_mask);
+        changed += (prev ^ next).count_ones();
+        col[w] = next;
+        if off != 0 && off + len > 64 {
+            let hi_mask = mask >> (64 - off);
+            let prev = col[w + 1];
+            let next = (prev & !hi_mask) | ((bits >> (64 - off)) & hi_mask);
+            changed += (prev ^ next).count_ones();
+            col[w + 1] = next;
+        }
+        changed
+    }
+
+    /// Read `len` (<= 64) bits of column `c` starting at `row_start` into
+    /// the low bits of a word — the gather mirror of `splice_col_word`,
+    /// used by word-parallel result readback.
+    pub fn gather_col_word(&self, c: usize, row_start: usize, len: usize) -> u64 {
+        debug_assert!(len >= 1 && len <= 64);
+        debug_assert!(row_start + len <= self.rows && c < self.cols);
+        let col = self.col(c);
+        let w = row_start / 64;
+        let off = row_start % 64;
+        let mut bits = col[w] >> off;
+        if off != 0 && w + 1 < col.len() {
+            bits |= col[w + 1] << (64 - off);
+        }
+        if len < 64 {
+            bits &= (1u64 << len) - 1;
+        }
+        bits
+    }
+
     /// Dense f32 {0,1} export in row-major order (PJRT literal interchange).
     pub fn to_f32_row_major(&self) -> Vec<f32> {
         let mut out = vec![0f32; self.rows * self.cols];
@@ -330,6 +378,31 @@ impl BitMatrix {
     pub fn from_f32_row_major(rows: usize, cols: usize, data: &[f32]) -> Self {
         assert_eq!(data.len(), rows * cols);
         BitMatrix::from_fn(rows, cols, |r, c| data[r * cols + c] > 0.5)
+    }
+}
+
+/// In-place 64x64 bit-matrix transpose (Hacker's Delight 7-3, adapted to
+/// LSB-first column numbering: after the call, bit `i` of word `k` holds
+/// what bit `k` of word `i` held). §Perf: the workhorse of word-parallel
+/// operand marshalling — it converts 64 item values (item-major) into 64
+/// bit-plane words (bit-major) in 6 x 64 word ops, so a batch of operands
+/// scatters into crossbar columns with O(bits) word writes instead of
+/// O(items x bits) bit writes.
+pub fn transpose64(a: &mut [u64; 64]) {
+    let mut j: usize = 32;
+    let mut m: u64 = 0x0000_0000_FFFF_FFFF;
+    while j != 0 {
+        let mut k: usize = 0;
+        while k < 64 {
+            for i in k..k + j {
+                let t = ((a[i] >> j) ^ a[i + j]) & m;
+                a[i] ^= t << j;
+                a[i + j] ^= t;
+            }
+            k += 2 * j;
+        }
+        j >>= 1;
+        m ^= m << j;
     }
 }
 
@@ -421,6 +494,75 @@ mod tests {
     fn cols3_mut_alias_panics() {
         let mut m = BitMatrix::zeros(8, 4);
         let _ = m.cols3_mut(1, 2, 1);
+    }
+
+    #[test]
+    fn transpose64_matches_naive() {
+        let mut rng = Pcg64::new(7, 0);
+        let mut a: [u64; 64] = [0; 64];
+        for w in a.iter_mut() {
+            *w = rng.next_u64();
+        }
+        let orig = a;
+        transpose64(&mut a);
+        for i in 0..64 {
+            for k in 0..64 {
+                assert_eq!(
+                    (a[k] >> i) & 1,
+                    (orig[i] >> k) & 1,
+                    "bit ({i},{k}) must transpose"
+                );
+            }
+        }
+        // Involution: transposing twice restores the original.
+        transpose64(&mut a);
+        assert_eq!(a, orig);
+    }
+
+    #[test]
+    fn splice_gather_roundtrip_arbitrary_offsets() {
+        let mut rng = Pcg64::new(11, 0);
+        let rows = 200;
+        for case in 0..200 {
+            let mut m = BitMatrix::from_fn(rows, 3, |_, _| rng.bernoulli(0.5));
+            let reference = m.clone();
+            let len = 1 + (rng.below(64)) as usize;
+            let row_start = rng.below((rows - len + 1) as u64) as usize;
+            let bits = rng.next_u64();
+            let changed = m.splice_col_word(1, row_start, len, bits);
+            // Matches a per-bit reference write, including change count.
+            let mut expect_changed = 0;
+            for k in 0..len {
+                let v = (bits >> k) & 1 == 1;
+                if reference.get(row_start + k, 1) != v {
+                    expect_changed += 1;
+                }
+            }
+            assert_eq!(changed, expect_changed, "case {case}");
+            for r in 0..rows {
+                let want = if (row_start..row_start + len).contains(&r) {
+                    (bits >> (r - row_start)) & 1 == 1
+                } else {
+                    reference.get(r, 1)
+                };
+                assert_eq!(m.get(r, 1), want, "case {case} row {r}");
+            }
+            // Untouched columns stay untouched.
+            for c in [0usize, 2] {
+                for r in 0..rows {
+                    assert_eq!(m.get(r, c), reference.get(r, c));
+                }
+            }
+            assert_eq!(m.gather_col_word(1, row_start, len), bits & tail(len), "case {case}");
+        }
+    }
+
+    fn tail(len: usize) -> u64 {
+        if len == 64 {
+            u64::MAX
+        } else {
+            (1u64 << len) - 1
+        }
     }
 
     #[test]

@@ -5,17 +5,27 @@
 //! rows — runs word-parallel on the column-major `BitMatrix` (64 rows per
 //! bitwise op); error injection uses geometric skipping, so reliability
 //! simulation stays O(lanes * p) per gate.
+//!
+//! §Perf: execution is plan-compiled. [`Crossbar::run_program`] is a thin
+//! wrapper that compiles the program against the current shape/partitions
+//! (`isa::CompiledPlan`) and runs it through the allocation-free
+//! [`Crossbar::run_plan`] interpreter; callers on the serving hot path
+//! compile once and call `run_plan` directly. The pre-compilation
+//! per-step path survives as [`Crossbar::run_program_uncompiled`] — the
+//! bit-exact reference the equivalence property tests compare against.
+//! In-column gates run word-parallel over 64-column gather/scatter tiles
+//! (the transpose orientation of the in-row word path).
 
 use anyhow::{ensure, Result};
 
 use crate::errs::Injector;
 use crate::isa::microop::{Dir, MicroOp};
+use crate::isa::plan::{validate_step_concurrency, CompiledPlan, PlanOp};
 use crate::isa::program::{Program, Step};
-use crate::util::bitmat::{tail_mask, BitMatrix};
+use crate::util::bitmat::BitMatrix;
+use crate::xbar::gate::Gate;
 
 use super::device::DeviceModel;
-#[cfg(test)]
-use super::gate::Gate;
 use super::partition::Partitions;
 
 /// Cycle / energy / operation statistics.
@@ -134,11 +144,22 @@ impl Crossbar {
         &self.col_parts
     }
 
-    /// Execute one cycle (a `Step` of concurrent micro-ops).
+    pub fn row_partitions(&self) -> &Partitions {
+        &self.row_parts
+    }
+
+    /// Compile a program against this crossbar's current shape and
+    /// partition configuration (§Perf: validate once, run many).
+    pub fn compile_plan(&self, prog: &Program) -> Result<CompiledPlan> {
+        CompiledPlan::compile(prog, self.rows(), self.cols(), &self.col_parts, &self.row_parts)
+    }
+
+    /// Execute one cycle (a `Step` of concurrent micro-ops) with
+    /// execution-time validation — the legacy per-step path.
     pub fn apply_step(&mut self, step: &Step, mut inj: Option<&mut Injector>) -> Result<()> {
         ensure!(!step.ops.is_empty(), "empty step");
         if step.ops.len() > 1 {
-            self.validate_concurrency(&step.ops)?;
+            validate_step_concurrency(&step.ops, &self.col_parts, &self.row_parts)?;
         }
         for op in &step.ops {
             self.exec_op(op, inj.as_deref_mut())?;
@@ -147,102 +168,86 @@ impl Crossbar {
         Ok(())
     }
 
-    /// Execute a whole program.
-    pub fn run_program(&mut self, prog: &Program, mut inj: Option<&mut Injector>) -> Result<()> {
+    /// Execute a whole program: compiles against the current
+    /// shape/partitions, then runs the plan. One-shot callers keep this
+    /// convenience; hot paths should `compile_plan` once and `run_plan`.
+    pub fn run_program(&mut self, prog: &Program, inj: Option<&mut Injector>) -> Result<()> {
+        let plan = self.compile_plan(prog)?;
+        self.run_plan(&plan, inj)
+    }
+
+    /// Execute a whole program through the pre-§Perf per-step interpreter
+    /// (re-validates concurrency every cycle). Kept as the bit-exact
+    /// reference for the plan-equivalence property tests.
+    pub fn run_program_uncompiled(
+        &mut self,
+        prog: &Program,
+        mut inj: Option<&mut Injector>,
+    ) -> Result<()> {
         for step in &prog.steps {
             self.apply_step(step, inj.as_deref_mut())?;
         }
         Ok(())
     }
 
-    /// Concurrency rules for one cycle (Fig. 1c):
-    /// * all ops share a direction;
-    /// * **fan-out**: if every op applies the same gate to the same
-    ///   operands (distinct outputs), the step is a single multi-output
-    ///   gate (MAGIC/FELIX support fan-out by connecting several output
-    ///   memristors) — always legal;
-    /// * otherwise each op's touched partition *set* must be pairwise
-    ///   disjoint from every other op's. An op may span adjacent
-    ///   partitions (transistors between them closed for this cycle, the
-    ///   MultPIM neighbor-transfer pattern) as long as no other
-    ///   concurrent op uses those partitions.
-    fn validate_concurrency(&self, ops: &[MicroOp]) -> Result<()> {
-        let dir = ops[0].dir;
+    /// Execute a compiled plan: the allocation-free hot loop. The plan
+    /// must have been compiled for this crossbar's shape, and — when it
+    /// contains concurrent steps — for its current partition
+    /// configuration (checked cheaply here).
+    pub fn run_plan(&mut self, plan: &CompiledPlan, mut inj: Option<&mut Injector>) -> Result<()> {
         ensure!(
-            ops.iter().all(|o| o.dir == dir),
-            "concurrent ops must share direction"
+            plan.rows() == self.rows() && plan.cols() == self.cols(),
+            "plan {} compiled for {}x{}, crossbar is {}x{}",
+            plan.name,
+            plan.rows(),
+            plan.cols(),
+            self.rows(),
+            self.cols()
         );
-        // Group ops into fan-out bundles: ops applying the same gate to
-        // the same operands form ONE multi-output gate (distinct outputs
-        // required). Groups then claim partition ranges; ranges must be
-        // pairwise disjoint across groups.
-        let mut groups: Vec<(usize, Vec<usize>)> = Vec::new(); // (rep idx, member idxs)
-        'op: for (i, op) in ops.iter().enumerate() {
-            for (rep, members) in groups.iter_mut() {
-                let r = &ops[*rep];
-                if op.gate == r.gate
-                    && op.gate.arity() > 0
-                    && op.a == r.a
-                    && op.b == r.b
-                    && op.c == r.c
-                {
-                    members.push(i);
-                    continue 'op;
+        if let Some(parts) = plan.required_col_partitions() {
+            ensure!(
+                parts == &self.col_parts,
+                "plan {} compiled for a different column-partition configuration",
+                plan.name
+            );
+        }
+        if let Some(parts) = plan.required_row_partitions() {
+            ensure!(
+                parts == &self.row_parts,
+                "plan {} compiled for a different row-partition configuration",
+                plan.name
+            );
+        }
+        for ops in plan.step_ops() {
+            for op in ops {
+                match op.dir {
+                    Dir::InRow => self.exec_in_row_resolved(op, inj.as_deref_mut()),
+                    Dir::InCol => self.exec_in_col_resolved(op, inj.as_deref_mut()),
                 }
             }
-            groups.push((i, vec![i]));
-        }
-        for (_, members) in &groups {
-            if members.len() > 1 {
-                let mut outs: Vec<u32> = members.iter().map(|&i| ops[i].out).collect();
-                outs.sort_unstable();
-                outs.dedup();
-                ensure!(outs.len() == members.len(), "fan-out outputs must be distinct");
-            }
-        }
-        let parts = match dir {
-            Dir::InRow => &self.col_parts,
-            Dir::InCol => &self.row_parts,
-        };
-        let mut used = vec![false; parts.count()];
-        for (_, members) in &groups {
-            let mut lo = u32::MAX;
-            let mut hi = 0u32;
-            for &i in members {
-                let (l, h) = ops[i].line_span();
-                lo = lo.min(l);
-                hi = hi.max(h);
-            }
-            let (p_lo, p_hi) = (parts.partition_of(lo), parts.partition_of(hi));
-            for p in p_lo..=p_hi {
-                ensure!(
-                    !used[p],
-                    "concurrent op groups conflict on partition {p} (lines {lo}..={hi})"
-                );
-                used[p] = true;
-            }
+            self.stats.cycles += 1;
         }
         Ok(())
     }
 
     fn exec_op(&mut self, op: &MicroOp, inj: Option<&mut Injector>) -> Result<()> {
+        let resolved = match op.dir {
+            Dir::InRow => PlanOp::resolve_in_row(op, self.rows(), self.cols())?,
+            Dir::InCol => PlanOp::resolve_in_col(op, self.rows(), self.cols())?,
+        };
         match op.dir {
-            Dir::InRow => self.exec_in_row(op, inj),
-            Dir::InCol => self.exec_in_col(op, inj),
+            Dir::InRow => self.exec_in_row_resolved(&resolved, inj),
+            Dir::InCol => self.exec_in_col_resolved(&resolved, inj),
         }
+        Ok(())
     }
 
-    /// Row-parallel in-row gate: word-wide over the packed columns.
-    fn exec_in_row(&mut self, op: &MicroOp, mut inj: Option<&mut Injector>) -> Result<()> {
-        let rows = self.rows();
-        let cols = self.cols();
-        let (s, e) = op.lanes.resolve(rows);
+    /// Row-parallel in-row gate: word-wide over the packed columns, all
+    /// bounds/lanes/masks pre-resolved in the [`PlanOp`].
+    fn exec_in_row_resolved(&mut self, op: &PlanOp, mut inj: Option<&mut Injector>) {
+        let (s, e) = (op.s as usize, op.e as usize);
         let lanes = e - s;
-        for &line in &[op.a, op.b, op.c, op.out] {
-            ensure!((line as usize) < cols, "column {line} out of range");
-        }
-
-        let arity = op.gate.arity();
+        let arity = op.arity as usize;
         // Indirect input drift: accessed input bits may flip *in place*
         // (read/logic disturb — paper §II-B1).
         if let Some(inj) = inj.as_deref_mut() {
@@ -260,27 +265,19 @@ impl Crossbar {
         // Word-parallel gate application, copy-free: the output column
         // never aliases an input (MicroOp invariant), so we take three
         // shared column views + one mutable (§Perf: this replaced three
-        // per-op scratch memcpys).
-        let wpc = self.state.words_per_col();
-        let w_lo = s / 64;
-        let w_hi = (e - 1) / 64;
+        // per-op scratch memcpys; lane masks are precompiled).
+        let (w_lo, w_hi) = (op.w_lo as usize, op.w_hi as usize);
+        let (first_mask, last_mask) = (op.first_mask, op.last_mask);
         let mut switched = 0u64;
         let gate = op.gate;
         let mut apply = |col_a: &[u64], col_b: &[u64], col_c: &[u64], out_col: &mut [u64]| {
             for wi in w_lo..=w_hi {
-                // Lane mask for this word.
                 let mut mask = u64::MAX;
-                if wi == s / 64 {
-                    mask &= u64::MAX << (s % 64);
+                if wi == w_lo {
+                    mask &= first_mask;
                 }
-                if wi == (e - 1) / 64 {
-                    let top = e - wi * 64;
-                    if top < 64 {
-                        mask &= (1u64 << top) - 1;
-                    }
-                }
-                if wi == wpc - 1 {
-                    mask &= tail_mask(rows);
+                if wi == w_hi {
+                    mask &= last_mask;
                 }
                 let prev = out_col[wi];
                 let val = gate.eval_word(col_a[wi], col_b[wi], col_c[wi], prev);
@@ -303,7 +300,7 @@ impl Crossbar {
 
         // Direct errors on the produced output bits.
         if let Some(inj) = inj {
-            if op.gate.is_logic() {
+            if gate.is_logic() {
                 let out = op.out as usize;
                 let state = &mut self.state;
                 let mut flipped = 0u64;
@@ -312,7 +309,7 @@ impl Crossbar {
                     flipped += 1;
                 });
                 switched += flipped; // error flips also switch state
-            } else if op.gate.is_init() {
+            } else if gate.is_init() {
                 let out = op.out as usize;
                 let state = &mut self.state;
                 inj.write_fails(lanes, |i| {
@@ -321,35 +318,46 @@ impl Crossbar {
             }
         }
 
-        self.account(op, lanes as u64, switched);
-        Ok(())
+        self.account(gate, lanes as u64, switched);
     }
 
-    /// Column-parallel in-column gate: per-column bit path (transpose
-    /// orientation; less common, used by in-column functions and the
-    /// naive-ECC demonstrations).
-    fn exec_in_col(&mut self, op: &MicroOp, inj: Option<&mut Injector>) -> Result<()> {
-        let rows = self.rows();
-        let cols = self.cols();
-        let (s, e) = op.lanes.resolve(cols);
+    /// Column-parallel in-column gate, word-parallel over 64-column
+    /// gather/scatter tiles (§Perf: replaced the per-column bit path; the
+    /// four operand rows of a tile are gathered into packed words, the
+    /// gate evaluates 64 columns at once, and only *changed* output bits
+    /// are scattered back).
+    fn exec_in_col_resolved(&mut self, op: &PlanOp, inj: Option<&mut Injector>) {
+        let (s, e) = (op.s as usize, op.e as usize);
         let lanes = e - s;
-        for &line in &[op.a, op.b, op.c, op.out] {
-            ensure!((line as usize) < rows, "row {line} out of range");
-        }
         let (ra, rb, rc, ro) = (op.a as usize, op.b as usize, op.c as usize, op.out as usize);
-
-        let arity = op.gate.arity();
+        let (wa, ba) = (ra / 64, ra % 64);
+        let (wb, bb) = (rb / 64, rb % 64);
+        let (wc, bc) = (rc / 64, rc % 64);
+        let (wo, bo) = (ro / 64, ro % 64);
+        let arity = op.arity as usize;
+        let gate = op.gate;
         let mut switched = 0u64;
-        for col in s..e {
-            let a = self.state.get(ra, col);
-            let b = self.state.get(rb, col);
-            let c = self.state.get(rc, col);
-            let prev = self.state.get(ro, col);
-            let v = op.gate.eval_bit(a, b, c, prev);
-            if v != prev {
-                switched += 1;
-                self.state.set(ro, col, v);
+        let mut col = s;
+        while col < e {
+            let tile = (e - col).min(64);
+            let (mut aw, mut bw, mut cw, mut pw) = (0u64, 0u64, 0u64, 0u64);
+            for j in 0..tile {
+                let packed = self.state.col(col + j);
+                aw |= ((packed[wa] >> ba) & 1) << j;
+                bw |= ((packed[wb] >> bb) & 1) << j;
+                cw |= ((packed[wc] >> bc) & 1) << j;
+                pw |= ((packed[wo] >> bo) & 1) << j;
             }
+            let val = gate.eval_word(aw, bw, cw, pw);
+            let tile_mask = if tile == 64 { u64::MAX } else { (1u64 << tile) - 1 };
+            let mut diff = (pw ^ val) & tile_mask;
+            switched += diff.count_ones() as u64;
+            while diff != 0 {
+                let j = diff.trailing_zeros() as usize;
+                diff &= diff - 1;
+                self.state.flip(ro, col + j);
+            }
+            col += tile;
         }
         if let Some(inj) = inj {
             // Indirect drift on accessed inputs.
@@ -362,7 +370,7 @@ impl Crossbar {
                     state.flip(input_rows[which], col);
                 });
             }
-            if op.gate.is_logic() {
+            if gate.is_logic() {
                 let state = &mut self.state;
                 let mut flipped = 0u64;
                 inj.gate_flips(lanes, |i| {
@@ -370,22 +378,21 @@ impl Crossbar {
                     flipped += 1;
                 });
                 switched += flipped;
-            } else if op.gate.is_init() {
+            } else if gate.is_init() {
                 let state = &mut self.state;
                 inj.write_fails(lanes, |i| {
                     state.flip(ro, s + i);
                 });
             }
         }
-        self.account(op, lanes as u64, switched);
-        Ok(())
+        self.account(gate, lanes as u64, switched);
     }
 
-    fn account(&mut self, op: &MicroOp, lanes: u64, switched: u64) {
-        if op.gate.is_logic() {
+    fn account(&mut self, gate: Gate, lanes: u64, switched: u64) {
+        if gate.is_logic() {
             self.stats.logic_ops += 1;
             self.stats.gate_instances += lanes;
-        } else if op.gate.is_init() {
+        } else if gate.is_init() {
             self.stats.init_ops += 1;
         }
         self.stats.switched_bits += switched;
@@ -442,6 +449,42 @@ mod tests {
             assert_eq!(x.get(2, c), want, "col {c}");
         }
         assert_eq!(x.stats.gate_instances, 70);
+    }
+
+    #[test]
+    fn in_col_word_tiles_match_scalar_reference() {
+        // The 64-column tile path against a per-bit reference, across
+        // tile boundaries (150 cols), high row indices (word 1+ of the
+        // packed columns), every gate, and a restricted lane range.
+        let rows = 130;
+        let cols = 150;
+        let mut rng = crate::util::rng::Pcg64::new(9, 0);
+        let init = BitMatrix::from_fn(rows, cols, |_, _| rng.bernoulli(0.5));
+        for gate in [Gate::Nor2, Gate::Min3, Gate::Not, Gate::Imply, Gate::Set1, Gate::Set0] {
+            let operands: Vec<u32> = match gate.arity() {
+                0 => vec![],
+                1 => vec![70],
+                2 => vec![70, 3],
+                _ => vec![70, 3, 127],
+            };
+            let op = MicroOp::col(gate, &operands, 100).over(LaneRange::new(5, 140));
+            let mut x = Crossbar::new(rows, cols);
+            *x.state_mut() = init.clone();
+            x.apply_step(&Step::one(op), None).unwrap();
+            for c in 0..cols {
+                let expect = if (5..140).contains(&c) {
+                    gate.eval_bit(
+                        init.get(op.a as usize, c),
+                        init.get(op.b as usize, c),
+                        init.get(op.c as usize, c),
+                        init.get(100, c),
+                    )
+                } else {
+                    init.get(100, c)
+                };
+                assert_eq!(x.get(100, c), expect, "{gate:?} col {c}");
+            }
+        }
     }
 
     #[test]
@@ -626,6 +669,58 @@ mod tests {
         }
         assert_eq!(x.stats.cycles, 6);
         assert_eq!(x.stats.gate_instances, 6 * 8);
+    }
+
+    #[test]
+    fn compiled_plan_reuse_matches_run_program() {
+        // Compile once, run twice on two crossbars; identical to two
+        // run_program calls, stats included.
+        let mut b = RowProgramBuilder::new("reuse");
+        b.gate(Gate::Nor2, &[0, 1], 2);
+        b.gate(Gate::Min3, &[0, 1, 2], 3);
+        let prog = b.finish();
+        let init = |x: &mut Crossbar| {
+            for r in 0..96 {
+                x.state_mut().set(r, 0, r % 2 == 0);
+                x.state_mut().set(r, 1, r % 5 == 0);
+            }
+        };
+        let mut xa = Crossbar::new(96, 8);
+        init(&mut xa);
+        let plan = xa.compile_plan(&prog).unwrap();
+        xa.run_plan(&plan, None).unwrap();
+        xa.run_plan(&plan, None).unwrap();
+        let mut xb = Crossbar::new(96, 8);
+        init(&mut xb);
+        xb.run_program(&prog, None).unwrap();
+        xb.run_program(&prog, None).unwrap();
+        assert_eq!(xa.state(), xb.state());
+        assert_eq!(xa.stats, xb.stats);
+    }
+
+    #[test]
+    fn run_plan_rejects_wrong_shape_or_partitions() {
+        let mut prog = Program::new("par");
+        prog.push_parallel(vec![
+            MicroOp::row(Gate::Not, &[0], 1),
+            MicroOp::row(Gate::Not, &[4], 5),
+        ]);
+        let mut x = Crossbar::new(8, 8);
+        x.set_col_partitions(Partitions::uniform(8, 4));
+        let plan = x.compile_plan(&prog).unwrap();
+        // Same shape, different partitions: rejected.
+        let mut y = Crossbar::new(8, 8);
+        assert!(y.run_plan(&plan, None).is_err());
+        y.set_col_partitions(Partitions::uniform(8, 2));
+        assert!(y.run_plan(&plan, None).is_err());
+        // Matching partitions: accepted.
+        let mut z = Crossbar::new(8, 8);
+        z.set_col_partitions(Partitions::uniform(8, 4));
+        z.run_plan(&plan, None).unwrap();
+        // Different shape: rejected.
+        let mut w = Crossbar::new(16, 8);
+        w.set_col_partitions(Partitions::uniform(8, 4));
+        assert!(w.run_plan(&plan, None).is_err());
     }
 
     #[test]

@@ -9,6 +9,7 @@ use remus::nn::quant::{acc_to_f32, Fixed};
 use remus::tmr::TmrMode;
 
 #[test]
+#[ignore = "requires build-time artifacts (weights.bin/evalset.bin); run `make artifacts` first"]
 fn weights_load_and_reference_accuracy() {
     let net = MicroNet::load_default().unwrap();
     let eval = EvalSet::load_default().unwrap();
@@ -19,6 +20,7 @@ fn weights_load_and_reference_accuracy() {
 }
 
 #[test]
+#[ignore = "requires build-time artifacts (weights.bin/evalset.bin); run `make artifacts` first"]
 fn mmpu_inference_clean_matches_reference_classes() {
     let net = MicroNet::load_default().unwrap();
     let eval = EvalSet::load_default().unwrap().take(16);
@@ -43,6 +45,7 @@ fn mmpu_inference_clean_matches_reference_classes() {
 }
 
 #[test]
+#[ignore = "requires build-time artifacts (weights.bin/evalset.bin); run `make artifacts` first"]
 fn gate_errors_degrade_then_tmr_recovers() {
     let net = MicroNet::load_default().unwrap();
     let eval = EvalSet::load_default().unwrap().take(12);

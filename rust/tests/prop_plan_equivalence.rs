@@ -1,0 +1,254 @@
+//! §Perf equivalence properties: the plan-compiled execution path and
+//! the word-parallel marshalling must be **bit-identical** to the legacy
+//! per-bit/per-step paths — same final state, same statistics, same
+//! consumed error-injection stream — across gates, directions, lane
+//! ranges, TMR modes (including `SemiParallel` row-replica layouts), ECC
+//! and injected-error seeds.
+
+use remus::arith::adder::ripple_adder;
+use remus::arith::multiplier::{multpim_program, naive_mult_program};
+use remus::errs::{ErrorModel, Injector};
+use remus::isa::microop::{Dir, LaneRange, MicroOp};
+use remus::isa::program::Program;
+use remus::mmpu::{FunctionKind, FunctionSpec, Mmpu, MmpuConfig, ReliabilityPolicy};
+use remus::testutil::prop::{Cases, Gen};
+use remus::tmr::{TmrEngine, TmrMode};
+use remus::util::rng::Pcg64;
+use remus::xbar::{Crossbar, Gate, Partitions};
+
+/// Every error class that fires on the gate stream, at rates high enough
+/// to exercise the injection plumbing in a few hundred lanes.
+fn noisy_model() -> ErrorModel {
+    ErrorModel {
+        p_gate: 2e-2,
+        p_write: 2e-2,
+        p_input: 1e-2,
+        lambda_retention: 0.0,
+        p_proximity: 0.0,
+        lambda_abrupt: 0.0,
+    }
+}
+
+fn assert_same_execution(
+    name: &str,
+    prog: &Program,
+    rows: usize,
+    cols: usize,
+    parts: Option<&Partitions>,
+    init: &remus::util::bitmat::BitMatrix,
+    seed: u64,
+) {
+    let mut legacy = Crossbar::new(rows, cols);
+    *legacy.state_mut() = init.clone();
+    if let Some(p) = parts {
+        legacy.set_col_partitions(p.clone());
+    }
+    let mut inj_a = Injector::new(noisy_model(), seed, 0);
+    legacy.run_program_uncompiled(prog, Some(&mut inj_a)).unwrap();
+
+    let mut compiled = Crossbar::new(rows, cols);
+    *compiled.state_mut() = init.clone();
+    if let Some(p) = parts {
+        compiled.set_col_partitions(p.clone());
+    }
+    let plan = compiled.compile_plan(prog).unwrap();
+    let mut inj_b = Injector::new(noisy_model(), seed, 0);
+    compiled.run_plan(&plan, Some(&mut inj_b)).unwrap();
+
+    assert_eq!(legacy.state(), compiled.state(), "{name}: state diverged");
+    assert_eq!(legacy.stats, compiled.stats, "{name}: stats diverged");
+    assert_eq!(inj_a.counters, inj_b.counters, "{name}: injector diverged");
+}
+
+#[test]
+fn prop_plan_matches_uncompiled_adder() {
+    Cases::new(25).run(|g| {
+        let n = g.usize_in(2..=16) as u32;
+        let (prog, _) = ripple_adder(n);
+        let rows = g.usize_in(1..=130);
+        let cols = prog.width as usize + 4;
+        let mut rng = Pcg64::new(g.u64(), 3);
+        let init = remus::util::bitmat::BitMatrix::from_fn(rows, cols, |_, _| rng.bernoulli(0.5));
+        assert_same_execution("adder", &prog, rows, cols, None, &init, g.u64());
+    });
+}
+
+#[test]
+fn prop_plan_matches_uncompiled_multpim_partitioned() {
+    // Partition-parallel steps: the concurrency-heavy workload.
+    Cases::new(10).run(|g| {
+        let n = *g.pick(&[4u32, 8]);
+        let (prog, lay) = multpim_program(n);
+        let rows = g.usize_in(1..=96);
+        let cols = lay.width as usize;
+        let parts = Partitions::new(lay.width, lay.partition_starts.clone());
+        let mut rng = Pcg64::new(g.u64(), 4);
+        let init = remus::util::bitmat::BitMatrix::from_fn(rows, cols, |_, _| rng.bernoulli(0.3));
+        assert_same_execution("multpim", &prog, rows, cols, Some(&parts), &init, g.u64());
+    });
+}
+
+/// Random single-op programs mixing directions, gates and lane ranges —
+/// covers the in-column word-tile path and partial-lane masks.
+fn random_program(g: &mut Gen, rows: usize, cols: usize, len: usize) -> Program {
+    let gates = [
+        Gate::Not,
+        Gate::Nor2,
+        Gate::Nor3,
+        Gate::Or2,
+        Gate::Nand2,
+        Gate::Min3,
+        Gate::Set0,
+        Gate::Set1,
+        Gate::Imply,
+        Gate::Nop,
+    ];
+    let mut prog = Program::new("random");
+    for _ in 0..len {
+        let gate = *g.pick(&gates);
+        let in_col = g.bool();
+        let lines = if in_col { rows } else { cols };
+        let lanes_max = if in_col { cols } else { rows };
+        let out = g.usize_in(0..=lines - 1) as u32;
+        let mut operands = Vec::new();
+        for _ in 0..gate.arity() {
+            // Logic operands must not alias the output line.
+            let mut o = g.usize_in(0..=lines - 1) as u32;
+            while gate.is_logic() && o == out {
+                o = g.usize_in(0..=lines - 1) as u32;
+            }
+            operands.push(o);
+        }
+        let lanes = if g.bool() {
+            LaneRange::all()
+        } else {
+            let s = g.usize_in(0..=lanes_max - 1);
+            let e = g.usize_in(s + 1..=lanes_max);
+            LaneRange::new(s as u32, e as u32)
+        };
+        let dir = if in_col { Dir::InCol } else { Dir::InRow };
+        prog.push(MicroOp::with_dir(dir, gate, &operands, out, lanes));
+    }
+    prog
+}
+
+#[test]
+fn prop_plan_matches_uncompiled_random_ops() {
+    Cases::new(40).run(|g| {
+        let rows = g.usize_in(2..=150);
+        let cols = g.usize_in(2..=150);
+        let prog = random_program(g, rows, cols, g.usize_in(1..=30));
+        let mut rng = Pcg64::new(g.u64(), 5);
+        let init = remus::util::bitmat::BitMatrix::from_fn(rows, cols, |_, _| rng.bernoulli(0.5));
+        assert_same_execution("random-ops", &prog, rows, cols, None, &init, g.u64());
+    });
+}
+
+/// mMPU sizing mirroring `quick_exec` (wide enough for every TMR mode).
+fn mmpu_config(func: &FunctionSpec, policy: ReliabilityPolicy, items: usize, seed: u64) -> MmpuConfig {
+    let need = match policy.tmr {
+        TmrMode::Serial => TmrEngine::serial_layout(&func.prog).width,
+        TmrMode::Parallel => 3 * func.prog.width + func.out_bits + 2,
+        _ => func.prog.width,
+    };
+    let mut cols = need.next_power_of_two().max(64) as usize;
+    if let Some(m) = policy.ecc_m {
+        cols = cols.div_ceil(m) * m;
+    }
+    let mut rows = items.max(4);
+    if policy.tmr == TmrMode::SemiParallel {
+        rows = 3 * items + 1;
+    }
+    if let Some(m) = policy.ecc_m {
+        rows = rows.div_ceil(m) * m;
+    }
+    MmpuConfig {
+        rows,
+        cols,
+        num_crossbars: 1,
+        policy,
+        errors: noisy_model(),
+        seed,
+    }
+}
+
+#[test]
+fn prop_exec_vector_word_path_matches_legacy_all_modes() {
+    // The full controller path: word-parallel operand scatter, compiled
+    // TMR execution, word-parallel readback vs per-bit writes, legacy
+    // TMR interpreter, per-bit readback — same seed, identical results,
+    // states, stats and injector consumption. Covers the SemiParallel
+    // row-replica layout and the Parallel relocated input copies.
+    let kinds = [FunctionKind::Add(8), FunctionKind::Mul(8), FunctionKind::Xor(8)];
+    let modes =
+        [TmrMode::Off, TmrMode::Serial, TmrMode::Parallel, TmrMode::SemiParallel];
+    Cases::new(12).run(|g| {
+        let kind = *g.pick(&kinds);
+        let tmr = *g.pick(&modes);
+        let ecc_m = if g.bool() { Some(16) } else { None };
+        let items = g.usize_in(1..=20);
+        let func = FunctionSpec::build(kind);
+        let cfg = mmpu_config(&func, ReliabilityPolicy { ecc_m, tmr }, items, g.u64());
+        let mask = (1u64 << kind.operand_bits()) - 1;
+        let a: Vec<u64> = (0..items).map(|_| g.u64() & mask).collect();
+        let b: Vec<u64> = (0..items).map(|_| g.u64() & mask).collect();
+
+        let mut fast = Mmpu::new(cfg.clone());
+        let rf = fast.exec_vector(0, &func, &a, &b).unwrap();
+        let mut slow = Mmpu::new(cfg);
+        let rs = slow.exec_vector_legacy(0, &func, &a, &b).unwrap();
+
+        assert_eq!(rf.values, rs.values, "{kind:?} {tmr:?} ecc={ecc_m:?} values");
+        assert_eq!(rf.compute_cycles, rs.compute_cycles, "{kind:?} {tmr:?} cycles");
+        assert_eq!(rf.ecc_cycles, rs.ecc_cycles, "{kind:?} {tmr:?} ecc cycles");
+        assert_eq!(rf.ecc_corrected, rs.ecc_corrected, "{kind:?} {tmr:?} ecc corrected");
+        assert_eq!(
+            fast.crossbar(0).state(),
+            slow.crossbar(0).state(),
+            "{kind:?} {tmr:?} state"
+        );
+        assert_eq!(fast.stats(0), slow.stats(0), "{kind:?} {tmr:?} stats");
+        assert_eq!(
+            fast.injector_counters(0),
+            slow.injector_counters(0),
+            "{kind:?} {tmr:?} injector"
+        );
+    });
+}
+
+#[test]
+fn prop_exec_vector_clean_results_correct() {
+    // Sanity anchor: with no errors the word-parallel path computes the
+    // actual arithmetic across every mode (not merely the same as the
+    // reference).
+    let modes =
+        [TmrMode::Off, TmrMode::Serial, TmrMode::Parallel, TmrMode::SemiParallel];
+    Cases::new(10).run(|g| {
+        let tmr = *g.pick(&modes);
+        let items = g.usize_in(1..=24);
+        let func = FunctionSpec::build(FunctionKind::Mul(8));
+        let mut cfg =
+            mmpu_config(&func, ReliabilityPolicy { ecc_m: None, tmr }, items, g.u64());
+        cfg.errors = ErrorModel::none();
+        let a: Vec<u64> = (0..items).map(|_| g.u64() & 0xFF).collect();
+        let b: Vec<u64> = (0..items).map(|_| g.u64() & 0xFF).collect();
+        let mut mmpu = Mmpu::new(cfg);
+        let r = mmpu.exec_vector(0, &func, &a, &b).unwrap();
+        for i in 0..items {
+            assert_eq!(r.values[i], a[i] * b[i], "{tmr:?} item {i}");
+        }
+    });
+}
+
+#[test]
+fn prop_naive_mult_plan_matches_uncompiled() {
+    // Long single-partition serial programs (the O(n^2) baseline).
+    Cases::new(6).run(|g| {
+        let (prog, lay) = naive_mult_program(4);
+        let rows = g.usize_in(1..=40);
+        let cols = lay.width as usize;
+        let mut rng = Pcg64::new(g.u64(), 6);
+        let init = remus::util::bitmat::BitMatrix::from_fn(rows, cols, |_, _| rng.bernoulli(0.5));
+        assert_same_execution("naive-mult", &prog, rows, cols, None, &init, g.u64());
+    });
+}
