@@ -1,0 +1,61 @@
+//! §Lifetime — the long-run degradation harness (EXPERIMENTS.md
+//! §Lifetime): simulated weight corruption on the real ECC machinery vs
+//! the closed-form `nn::degradation` model, plus the wear-out curve of
+//! the health subsystem's endurance process.
+//!
+//! Writes `BENCH_lifetime.json` for CI archival.
+
+use remus::analysis::lifetime::{simulate, LifetimeConfig};
+use remus::bench_harness::{bench, header, json_begin, json_end, throughput};
+use remus::health::WearModel;
+
+fn main() {
+    json_begin("lifetime");
+    header("lifetime", "EXPERIMENTS.md §Lifetime: degradation vs closed form");
+
+    // Smaller than the `remus lifetime` default: the harness executes
+    // the closure ~12 times (warmup + samples).
+    let cfg = LifetimeConfig { cols: 512, batches: 256, record_every: 64, ..Default::default() };
+    println!(
+        "array {}x{} (m={}), p_input={:.1e}, {} batches, scrub every batch",
+        cfg.rows, cfg.cols, cfg.m, cfg.p_input, cfg.batches
+    );
+    let mut report = None;
+    let r = bench("lifetime sim, 128x512, 256 scrubbed batches", 1, || {
+        report = Some(simulate(&cfg));
+    });
+    throughput(&r, "batch", cfg.batches as f64);
+    let report = report.expect("bench ran at least once");
+
+    println!("\n  batch | base sim | base model | blk sim | blk model | eccw sim | eccw model");
+    for p in &report.points {
+        println!(
+            "  {:>5} | {:>8.0} | {:>10.1} | {:>7.0} | {:>9.1} | {:>8.0} | {:>10.1}",
+            p.batch,
+            p.sim_baseline_weights,
+            p.model_baseline_weights,
+            p.sim_failed_blocks,
+            p.model_failed_blocks,
+            p.sim_ecc_weights,
+            p.model_ecc_weights
+        );
+    }
+    let (rel_base, rel_blocks) = report.final_errors();
+    println!(
+        "\n  final relative error vs closed form: baseline {:.1}% (gate <= 10%) | \
+         failed blocks {:.1}% (MC tolerance <= 25%)",
+        rel_base * 100.0,
+        rel_blocks * 100.0
+    );
+
+    // Wear-out curve: dead-cell fraction vs mean switches per cell.
+    let wear = WearModel::rram();
+    println!("\n  endurance model (lognormal, median {:.1e}):", wear.endurance_mean);
+    for exp in [7.0f64, 7.5, 8.0, 8.5, 9.0] {
+        let s = 10f64.powf(exp);
+        let dead = wear.dead_fraction(s) * 100.0;
+        println!("    {s:>9.2e} switches/cell -> {dead:>8.4}% cells dead");
+    }
+
+    json_end();
+}

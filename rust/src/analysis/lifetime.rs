@@ -1,0 +1,223 @@
+//! Lifetime simulation harness: Monte-Carlo weight degradation on the
+//! real ECC machinery, validated against the closed-form
+//! [`crate::nn::degradation::DegradationModel`] (paper §VI-B2, Fig. 5).
+//!
+//! Setup mirrors the closed-form model exactly: a crossbar stores
+//! 32-bit weights; every "batch" accesses all of them, drifting each
+//! stored bit with probability `p_input`; the protected copy is scrubbed
+//! (verify + correct) once per batch. Tracked observables:
+//!
+//! * **baseline corrupted weights** — weights whose bits differ from the
+//!   golden copy (no protection); closed-form
+//!   `W * (1 - (1 - p_w)^T)`.
+//! * **failed ECC blocks** — blocks that ever saw >= 2 errors within one
+//!   scrub interval (the code's uncorrectable regime); closed-form
+//!   `B * (1 - (1 - p_block)^T)`. This is the tight comparison: the
+//!   closed-form weight estimate multiplies it by a constant
+//!   weights-per-block factor.
+//! * **ECC corrupted weights** — distinct weights corrupted in a failed
+//!   block at the moment it first failed (the closed-form's definition:
+//!   damage is assessed at first failure, ~1.87 weights/block).
+//!
+//! The soak acceptance gate ("health disabled matches the closed form")
+//! is asserted by the in-tree test and reported by `remus lifetime` and
+//! `cargo bench --bench lifetime` (-> `BENCH_lifetime.json`).
+
+use std::collections::HashSet;
+
+use crate::ecc::DiagonalEcc;
+use crate::errs::{ErrorModel, Injector};
+use crate::nn::degradation::DegradationModel;
+use crate::util::bitmat::BitMatrix;
+use crate::util::rng::Pcg64;
+use crate::util::stats::{one_minus_pow, prob_at_least_two};
+
+/// Parameters of one lifetime run.
+#[derive(Clone, Copy, Debug)]
+pub struct LifetimeConfig {
+    pub rows: usize,
+    pub cols: usize,
+    /// ECC block size.
+    pub m: usize,
+    /// Per-bit drift probability per batch (access drift).
+    pub p_input: f64,
+    pub batches: u64,
+    pub record_every: u64,
+    pub seed: u64,
+}
+
+impl Default for LifetimeConfig {
+    fn default() -> Self {
+        Self {
+            rows: 128,
+            cols: 1024,
+            m: 16,
+            p_input: 1e-4,
+            batches: 512,
+            record_every: 128,
+            seed: 0x11FE,
+        }
+    }
+}
+
+/// One recorded point of the simulated and closed-form curves.
+#[derive(Clone, Copy, Debug)]
+pub struct LifetimePoint {
+    pub batch: u64,
+    pub sim_baseline_weights: f64,
+    pub model_baseline_weights: f64,
+    pub sim_failed_blocks: f64,
+    pub model_failed_blocks: f64,
+    pub sim_ecc_weights: f64,
+    pub model_ecc_weights: f64,
+}
+
+/// Full run output plus the model it was compared against.
+#[derive(Clone, Debug)]
+pub struct LifetimeReport {
+    pub cfg: LifetimeConfig,
+    pub model: DegradationModel,
+    pub points: Vec<LifetimePoint>,
+}
+
+impl LifetimeReport {
+    /// Relative errors |sim - model| / model at the final point:
+    /// `(baseline weights, failed blocks)`.
+    pub fn final_errors(&self) -> (f64, f64) {
+        let p = self.points.last().expect("at least one recorded point");
+        let rel = |sim: f64, model: f64| {
+            if model <= 0.0 {
+                0.0
+            } else {
+                (sim - model).abs() / model
+            }
+        };
+        (
+            rel(p.sim_baseline_weights, p.model_baseline_weights),
+            rel(p.sim_failed_blocks, p.model_failed_blocks),
+        )
+    }
+}
+
+fn corrupted_weights(now: &BitMatrix, golden: &BitMatrix) -> usize {
+    let cols = now.cols();
+    let mut weights: HashSet<usize> = HashSet::new();
+    for r in 0..now.rows() {
+        for c in 0..cols {
+            if now.get(r, c) != golden.get(r, c) {
+                weights.insert((r * cols + c) / 32);
+            }
+        }
+    }
+    weights.len()
+}
+
+/// Run the lifetime simulation.
+pub fn simulate(cfg: &LifetimeConfig) -> LifetimeReport {
+    let (rows, cols, m) = (cfg.rows, cfg.cols, cfg.m);
+    assert!(rows % m == 0 && cols % m == 0, "m must divide the array");
+    assert!(cols % 32 == 0, "cols must be a multiple of 32 (weights tile each row)");
+    let bits = rows * cols;
+    let total_blocks = (bits / (m * m)) as f64;
+    let p_block = prob_at_least_two((m * m) as f64, cfg.p_input);
+    let model = DegradationModel { weights: bits as f64 / 32.0, bits: 32.0, m: m as f64 };
+
+    let mut seed_rng = Pcg64::new(cfg.seed, 0);
+    let golden = BitMatrix::from_fn(rows, cols, |_, _| seed_rng.bernoulli(0.5));
+    let mut base = golden.clone();
+    let mut prot = golden.clone();
+    let mut ecc = DiagonalEcc::new(rows, cols, m);
+    ecc.encode(&prot);
+    let drift_model = ErrorModel::indirect_only(cfg.p_input);
+    let mut inj_base = Injector::new(drift_model, cfg.seed, 1);
+    let mut inj_prot = Injector::new(drift_model, cfg.seed, 2);
+
+    let mut failed_blocks: HashSet<(usize, usize)> = HashSet::new();
+    let mut frozen_weights: HashSet<usize> = HashSet::new();
+    let mut points = Vec::new();
+    for t in 1..=cfg.batches {
+        inj_base.input_drifts(bits, |i| base.flip(i / cols, i % cols));
+        inj_prot.input_drifts(bits, |i| prot.flip(i / cols, i % cols));
+        let out = ecc.correct(&mut prot);
+        for &(bi, bj) in &out.uncorrectable_blocks {
+            if failed_blocks.insert((bi, bj)) {
+                // Assess the damage at first failure (the closed-form's
+                // per-block weight estimate).
+                for r in bi * m..(bi + 1) * m {
+                    for c in bj * m..(bj + 1) * m {
+                        if prot.get(r, c) != golden.get(r, c) {
+                            frozen_weights.insert((r * cols + c) / 32);
+                        }
+                    }
+                }
+            }
+        }
+        if t % cfg.record_every == 0 || t == cfg.batches {
+            points.push(LifetimePoint {
+                batch: t,
+                sim_baseline_weights: corrupted_weights(&base, &golden) as f64,
+                model_baseline_weights: model.expected_corrupted_baseline(cfg.p_input, t as f64),
+                sim_failed_blocks: failed_blocks.len() as f64,
+                model_failed_blocks: total_blocks * one_minus_pow(p_block, t as f64),
+                sim_ecc_weights: frozen_weights.len() as f64,
+                model_ecc_weights: model.expected_corrupted_ecc(cfg.p_input, t as f64),
+            });
+        }
+    }
+    LifetimeReport { cfg: *cfg, model, points }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn simulated_curves_track_closed_form() {
+        // Acceptance gate: with health disabled, simulated degradation
+        // matches the closed-form model. Sized so expectations are large
+        // enough that the (seeded, deterministic) Monte-Carlo noise sits
+        // far inside the tolerance.
+        let cfg = LifetimeConfig {
+            rows: 64,
+            cols: 256,
+            m: 16,
+            p_input: 4e-4,
+            batches: 256,
+            record_every: 64,
+            seed: 7,
+        };
+        let rep = simulate(&cfg);
+        assert_eq!(rep.points.len(), 4);
+        let last = rep.points.last().unwrap();
+        assert!(last.model_baseline_weights > 100.0, "regime check");
+        assert!(last.model_failed_blocks > 10.0, "regime check");
+        let (rel_base, rel_blocks) = rep.final_errors();
+        assert!(rel_base < 0.10, "baseline rel err {rel_base}");
+        assert!(rel_blocks < 0.25, "failed-block rel err {rel_blocks}");
+        // The ECC weight count agrees with the closed form up to its
+        // constant weights-per-block approximation.
+        assert!(last.sim_ecc_weights > 0.0);
+        assert!(last.sim_ecc_weights < 4.0 * last.model_ecc_weights);
+        assert!(4.0 * last.sim_ecc_weights > last.model_ecc_weights);
+        // And protection helps: ECC loses far fewer weights.
+        assert!(last.sim_ecc_weights < 0.5 * last.sim_baseline_weights);
+        // Curves are monotone in t (cumulative failure definitions).
+        for w in rep.points.windows(2) {
+            assert!(w[1].sim_failed_blocks >= w[0].sim_failed_blocks);
+            assert!(w[1].sim_ecc_weights >= w[0].sim_ecc_weights);
+            assert!(w[1].model_baseline_weights >= w[0].model_baseline_weights);
+        }
+    }
+
+    #[test]
+    fn corrupted_weight_counting() {
+        let golden = BitMatrix::zeros(4, 64);
+        let mut now = golden.clone();
+        assert_eq!(corrupted_weights(&now, &golden), 0);
+        now.flip(0, 3);
+        now.flip(0, 17); // same 32-bit weight
+        now.flip(0, 40); // second weight of row 0
+        now.flip(2, 0); // row 2, weight index 4
+        assert_eq!(corrupted_weights(&now, &golden), 3);
+    }
+}

@@ -1,11 +1,15 @@
 //! Reliability analysis (paper §VI) — Monte-Carlo fault injection on the
 //! real micro-code plus the paper's analytical extrapolations. These are
 //! the engines behind every Fig. 4 / Fig. 5 / table reproduction in
-//! `rust/benches/`.
+//! `rust/benches/`, and the [`lifetime`] harness that validates the
+//! simulated long-run degradation against the closed-form
+//! `nn::degradation` model (§Health acceptance gate).
 
 pub mod fig4;
 pub mod lane;
+pub mod lifetime;
 pub mod overhead;
 
 pub use fig4::{Fig4Row, MultReliability};
 pub use lane::{FaultPlan, LaneSim};
+pub use lifetime::{LifetimeConfig, LifetimePoint, LifetimeReport};

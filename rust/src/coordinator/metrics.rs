@@ -1,28 +1,64 @@
-//! Lock-free coordinator metrics (atomics + log-scale latency histogram).
+//! Lock-free coordinator metrics (atomics + log-scale latency histogram)
+//! plus per-worker health reports (§Health; mutex-guarded, updated once
+//! per batch by the owning worker only).
 
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
 use std::time::Duration;
 
 /// Number of log2 latency bins (1us ... ~1s).
 const BINS: usize = 24;
+
+/// Per-worker health summary exported through [`MetricsSnapshot`].
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct WorkerHealth {
+    pub batches: u64,
+    pub scrubs: u64,
+    /// Drift bits corrected (serving-path ECC + scrub ECC).
+    pub corrected: u64,
+    /// Uncorrectable ECC blocks observed by scrubbing.
+    pub uncorrectable: u64,
+    pub stuck_detected: u64,
+    pub remapped_rows: u64,
+    pub spares_left: u64,
+    /// Protection mechanisms active in the worker's *live* policy
+    /// (ECC counts 1, TMR counts 1) — base protections included.
+    pub policy_level: u8,
+    pub retired: bool,
+}
 
 #[derive(Default)]
 pub struct Metrics {
     pub submitted: AtomicU64,
     pub completed: AtomicU64,
     /// Requests that received an explicit error result (failed batch
-    /// execution/compilation) instead of a value.
+    /// execution/compilation, retirement, shutdown) instead of a value.
     pub failed: AtomicU64,
+    /// Batches *dispatched* by the router. A batch redistributed after a
+    /// worker retirement is dispatched again and counts again, so
+    /// `batched_items` can exceed `submitted` during retirement storms.
     pub batches: AtomicU64,
     pub batched_items: AtomicU64,
     pub busy_ns: AtomicU64,
     pub queue_depth: AtomicU64,
     lat_bins: [AtomicU64; BINS],
+    worker_health: Mutex<Vec<WorkerHealth>>,
 }
 
 impl Metrics {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Size the per-worker health table (done once at coordinator start).
+    pub fn init_workers(&self, n: usize) {
+        *self.worker_health.lock().unwrap() = vec![WorkerHealth::default(); n];
+    }
+
+    pub fn set_worker_health(&self, worker: usize, h: WorkerHealth) {
+        if let Some(slot) = self.worker_health.lock().unwrap().get_mut(worker) {
+            *slot = h;
+        }
     }
 
     pub fn record_latency(&self, d: Duration) {
@@ -42,6 +78,7 @@ impl Metrics {
             busy_ns: self.busy_ns.load(Ordering::Relaxed),
             queue_depth: self.queue_depth.load(Ordering::Relaxed),
             lat_bins: bins,
+            worker_health: self.worker_health.lock().unwrap().clone(),
         }
     }
 }
@@ -56,10 +93,17 @@ pub struct MetricsSnapshot {
     pub batched_items: u64,
     pub busy_ns: u64,
     pub queue_depth: u64,
+    /// Per-worker health (§Health; empty when no health manager is on).
+    pub worker_health: Vec<WorkerHealth>,
     lat_bins: Vec<u64>,
 }
 
 impl MetricsSnapshot {
+    /// Workers that retired their crossbar.
+    pub fn retired_workers(&self) -> usize {
+        self.worker_health.iter().filter(|w| w.retired).count()
+    }
+
     pub fn mean_batch_size(&self) -> f64 {
         if self.batches == 0 {
             0.0
@@ -111,5 +155,19 @@ mod tests {
         m.batches.store(4, Ordering::Relaxed);
         m.batched_items.store(100, Ordering::Relaxed);
         assert_eq!(m.snapshot().mean_batch_size(), 25.0);
+    }
+
+    #[test]
+    fn worker_health_roundtrip() {
+        let m = Metrics::new();
+        m.init_workers(2);
+        assert_eq!(m.snapshot().retired_workers(), 0);
+        let h = WorkerHealth { retired: true, stuck_detected: 3, ..Default::default() };
+        m.set_worker_health(1, h.clone());
+        m.set_worker_health(9, WorkerHealth::default()); // out of range: ignored
+        let s = m.snapshot();
+        assert_eq!(s.worker_health.len(), 2);
+        assert_eq!(s.worker_health[1], h);
+        assert_eq!(s.retired_workers(), 1);
     }
 }

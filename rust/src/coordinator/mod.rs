@@ -7,6 +7,10 @@
 //! worker; each **worker** thread owns one crossbar (its own error
 //! stream and ECC extension) and executes batches under the configured
 //! reliability policy. Bounded queues give natural backpressure.
+//! With `CoordinatorConfig::health` set, workers additionally run the
+//! §Health fault manager: background scrubbing, adaptive policy
+//! escalation, and crossbar retirement with request redistribution
+//! (per-worker health lands in [`MetricsSnapshot`]).
 //!
 //! tokio is not in the offline vendor set (DESIGN.md substitutions):
 //! the implementation uses std threads + mpsc channels; the
@@ -16,5 +20,5 @@ pub mod batcher;
 pub mod metrics;
 pub mod server;
 
-pub use metrics::MetricsSnapshot;
+pub use metrics::{MetricsSnapshot, WorkerHealth};
 pub use server::{Coordinator, CoordinatorConfig, RequestResult};

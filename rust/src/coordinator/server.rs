@@ -8,8 +8,16 @@
 //! the word-parallel `Mmpu::exec_vector_compiled` path. Failed batches
 //! deliver an explicit error result per item (clients never observe a
 //! silently closed channel) and are counted in `metrics.failed`.
+//!
+//! §Health: with `CoordinatorConfig::health` set, each worker runs an
+//! online fault manager on its crossbar — scrubbing between batches,
+//! adaptive policy escalation (None -> ECC -> ECC+TMR), and crossbar
+//! **retirement**: a retired worker drops out of routing and sends its
+//! queued batches back through the front channel for redistribution to
+//! healthy workers. When no healthy worker remains (or during shutdown
+//! drain), requests receive explicit error results — never a hang.
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender, SyncSender, TrySendError};
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -18,10 +26,12 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use crate::errs::ErrorModel;
-use crate::mmpu::{FunctionKind, Mmpu, MmpuConfig, PlanCache, ReliabilityPolicy};
+use crate::health::HealthConfig;
+use crate::mmpu::{CompiledFunction, FunctionKind, Mmpu, MmpuConfig, PlanCache, ReliabilityPolicy};
+use crate::tmr::TmrMode;
 
 use super::batcher::{Batch, Batcher, Pending};
-use super::metrics::{Metrics, MetricsSnapshot};
+use super::metrics::{Metrics, MetricsSnapshot, WorkerHealth};
 
 /// Outcome delivered to the submitting client.
 #[derive(Clone, Debug)]
@@ -53,6 +63,9 @@ pub struct CoordinatorConfig {
     pub max_wait: Duration,
     /// Bounded per-worker queue (backpressure).
     pub worker_queue: usize,
+    /// Per-crossbar online fault management (§Health). `None` preserves
+    /// the pre-health behavior exactly.
+    pub health: Option<HealthConfig>,
 }
 
 impl Default for CoordinatorConfig {
@@ -67,6 +80,7 @@ impl Default for CoordinatorConfig {
             max_batch: 64,
             max_wait: Duration::from_micros(500),
             worker_queue: 8,
+            health: None,
         }
     }
 }
@@ -87,29 +101,38 @@ pub struct Coordinator {
 impl Coordinator {
     pub fn start(cfg: CoordinatorConfig) -> Result<Self> {
         let metrics = Arc::new(Metrics::new());
+        metrics.init_workers(cfg.workers);
         // One compiled-plan cache shared by every worker: each
         // (kind, shape, tmr) compiles once process-wide (§Perf).
         let plans = Arc::new(PlanCache::new());
+        // Front channel first: retiring workers send their queued
+        // batches back through it for redistribution (§Health).
+        let (front_tx, front_rx) = channel::<FrontMsg>();
         // Workers.
         let mut worker_txs: Vec<SyncSender<Batch>> = vec![];
         let mut worker_handles = vec![];
         let depths: Arc<Vec<AtomicU64>> =
             Arc::new((0..cfg.workers).map(|_| AtomicU64::new(0)).collect());
+        let healthy: Arc<Vec<AtomicBool>> =
+            Arc::new((0..cfg.workers).map(|_| AtomicBool::new(true)).collect());
         for w in 0..cfg.workers {
             let (tx, rx) = std::sync::mpsc::sync_channel::<Batch>(cfg.worker_queue);
             worker_txs.push(tx);
             let m = metrics.clone();
             let d = depths.clone();
+            let h = healthy.clone();
             let cfg2 = cfg.clone();
             let p = plans.clone();
-            worker_handles.push(std::thread::spawn(move || worker_loop(w, cfg2, rx, m, d, p)));
+            let f = front_tx.clone();
+            worker_handles
+                .push(std::thread::spawn(move || worker_loop(w, cfg2, rx, m, d, p, f, h)));
         }
         // Batcher / router.
-        let (front_tx, front_rx) = channel::<FrontMsg>();
         let m = metrics.clone();
         let cfg2 = cfg.clone();
-        let batcher_handle =
-            std::thread::spawn(move || batcher_loop(cfg2, front_rx, worker_txs, m, depths));
+        let batcher_handle = std::thread::spawn(move || {
+            batcher_loop(cfg2, front_rx, worker_txs, m, depths, healthy)
+        });
         Ok(Self { front_tx, metrics, batcher_handle: Some(batcher_handle), worker_handles })
     }
 
@@ -140,26 +163,45 @@ impl Coordinator {
     }
 }
 
+/// Deliver an explicit error result to every item of a batch.
+fn fail_batch(batch: Batch, metrics: &Metrics, why: &str) {
+    for item in batch.items {
+        let latency = item.submitted.elapsed();
+        metrics.failed.fetch_add(1, Ordering::Relaxed);
+        let _ = item.reply.send(RequestResult { value: 0, latency, error: Some(why.to_string()) });
+    }
+}
+
 fn batcher_loop(
     cfg: CoordinatorConfig,
     rx: Receiver<FrontMsg>,
     worker_txs: Vec<SyncSender<Batch>>,
     metrics: Arc<Metrics>,
     depths: Arc<Vec<AtomicU64>>,
+    healthy: Arc<Vec<AtomicBool>>,
 ) {
-    let mut batcher = Batcher::new(cfg.max_batch.min(cfg.rows), cfg.max_wait);
+    // §Health: spare rows are reserved out of the batchable row space.
+    let data_rows =
+        cfg.rows.saturating_sub(cfg.health.as_ref().map_or(0, |h| h.spare_rows)).max(1);
+    let mut batcher = Batcher::new(cfg.max_batch.min(data_rows), cfg.max_wait);
     let dispatch = |batch: Batch, depths: &Arc<Vec<AtomicU64>>, metrics: &Arc<Metrics>| {
         metrics.batches.fetch_add(1, Ordering::Relaxed);
         metrics.batched_items.fetch_add(batch.items.len() as u64, Ordering::Relaxed);
-        // Route to the least-loaded worker; block if all queues are full
-        // (backpressure propagates to the batcher, then to clients).
+        // Route to the least-loaded *healthy* worker; spin while all
+        // healthy queues are full (backpressure propagates to the
+        // batcher, then to clients). With no healthy worker left the
+        // batch fails explicitly — clients must never hang.
         let mut batch = batch;
         loop {
-            let (widx, _) = depths
+            let pick = depths
                 .iter()
                 .enumerate()
-                .min_by_key(|(_, d)| d.load(Ordering::Relaxed))
-                .expect("workers");
+                .filter(|(i, _)| healthy[*i].load(Ordering::Relaxed))
+                .min_by_key(|(_, d)| d.load(Ordering::Relaxed));
+            let Some((widx, _)) = pick else {
+                fail_batch(batch, metrics, "no healthy workers (all crossbars retired)");
+                return;
+            };
             depths[widx].fetch_add(1, Ordering::Relaxed);
             match worker_txs[widx].try_send(batch) {
                 Ok(()) => return,
@@ -168,7 +210,11 @@ fn batcher_loop(
                     batch = b;
                     std::thread::yield_now();
                 }
-                Err(TrySendError::Disconnected(_)) => return,
+                Err(TrySendError::Disconnected(b)) => {
+                    depths[widx].fetch_sub(1, Ordering::Relaxed);
+                    fail_batch(b, metrics, "worker queue disconnected");
+                    return;
+                }
             }
         }
     };
@@ -213,9 +259,70 @@ fn batcher_loop(
     for batch in batcher.flush_all() {
         dispatch(batch, &depths, &metrics);
     }
-    // Dropping worker_txs closes worker queues.
+    // Quiesce: close the worker queues, then wait until every in-flight
+    // batch has been fully processed — a retiring worker decrements its
+    // depth only AFTER requeueing, so depth 0 everywhere means no more
+    // sends can arrive on the front channel (shutdown consumes the
+    // Coordinator, so no client can be submitting concurrently either).
+    // Bounded: a crashed worker never decrements, and must not turn
+    // shutdown into a hang — after the deadline we drain what we have.
+    drop(worker_txs);
+    let quiesce_deadline = Instant::now() + Duration::from_secs(5);
+    while depths.iter().any(|d| d.load(Ordering::Acquire) > 0) {
+        if Instant::now() >= quiesce_deadline {
+            eprintln!("coordinator: quiesce timed out with in-flight batches; draining anyway");
+            break;
+        }
+        std::thread::sleep(Duration::from_micros(50));
+    }
+    // Final drain: requeued / raced-in submissions get an explicit error
+    // result instead of a silently dropped reply channel.
+    while let Ok(FrontMsg::Submit { kind, pending }) = rx.try_recv() {
+        let batch = Batch { kind, items: vec![pending] };
+        fail_batch(batch, &metrics, "coordinator shutting down");
+    }
 }
 
+/// Send a retired worker's batch back for redistribution; if the batcher
+/// is gone (shutdown), deliver explicit error results instead.
+fn requeue_batch(batch: Batch, front: &Sender<FrontMsg>, metrics: &Metrics) {
+    let kind = batch.kind;
+    let mut undeliverable = Vec::new();
+    for p in batch.items {
+        if let Err(err) = front.send(FrontMsg::Submit { kind, pending: p }) {
+            if let FrontMsg::Submit { pending, .. } = err.0 {
+                undeliverable.push(pending);
+            }
+        }
+    }
+    if !undeliverable.is_empty() {
+        let batch = Batch { kind, items: undeliverable };
+        fail_batch(batch, metrics, "worker retired during shutdown");
+    }
+}
+
+/// Worker-local memo over the shared [`PlanCache`].
+type PlanMemo = std::collections::HashMap<(FunctionKind, TmrMode), Arc<CompiledFunction>>;
+
+/// Resolve the compiled plan for `(kind, tmr)` through the worker-local
+/// memo, filling it from the process-wide cache on a miss.
+fn resolve_plan(
+    local: &mut PlanMemo,
+    plans: &PlanCache,
+    kind: FunctionKind,
+    rows: usize,
+    cols: usize,
+    tmr: TmrMode,
+) -> Result<Arc<CompiledFunction>> {
+    if let Some(cf) = local.get(&(kind, tmr)) {
+        return Ok(cf.clone());
+    }
+    let cf = plans.get(kind, rows, cols, tmr)?;
+    local.insert((kind, tmr), cf.clone());
+    Ok(cf)
+}
+
+#[allow(clippy::too_many_arguments)]
 fn worker_loop(
     worker_id: usize,
     cfg: CoordinatorConfig,
@@ -223,6 +330,8 @@ fn worker_loop(
     metrics: Arc<Metrics>,
     depths: Arc<Vec<AtomicU64>>,
     plans: Arc<PlanCache>,
+    front_tx: Sender<FrontMsg>,
+    healthy: Arc<Vec<AtomicBool>>,
 ) {
     let mmpu_cfg = MmpuConfig {
         rows: cfg.rows,
@@ -233,26 +342,61 @@ fn worker_loop(
         seed: cfg.seed.wrapping_add(worker_id as u64),
     };
     let mut mmpu = Mmpu::new(mmpu_cfg);
+    if let Some(h) = &cfg.health {
+        let mut hcfg = h.clone();
+        // Independent fault streams per worker.
+        hcfg.seed = hcfg.seed.wrapping_add(worker_id as u64).wrapping_mul(0x9E37_79B9);
+        mmpu.enable_health(hcfg);
+    }
+    // The live policy: starts at the configured base, escalated by the
+    // health manager as telemetry accumulates (never de-escalated,
+    // except when an escalated TMR mode turns out not to fit a served
+    // function on this crossbar shape — then TMR escalation is blocked
+    // and the worker keeps its ECC escalation only).
+    let mut policy = cfg.policy;
+    let mut tmr_escalation_blocked = false;
+    let mut escalation_err_logged = false;
+    let mut retired = false;
     // Per-worker memo over the shared cache: the shared PlanCache mutex
-    // is touched once per (worker, kind); steady-state batches resolve
-    // their plan from this local map with no cross-worker
-    // synchronization. (Shape and TMR mode are fixed per coordinator,
-    // so the local key is just the function kind.)
-    let mut local: std::collections::HashMap<FunctionKind, Arc<crate::mmpu::CompiledFunction>> =
-        std::collections::HashMap::new();
+    // is touched once per (worker, kind, mode); steady-state batches
+    // resolve their plan from this local map with no cross-worker
+    // synchronization. (Keyed by TMR mode too: escalation switches it.)
+    let mut local = PlanMemo::new();
     while let Ok(batch) = rx.recv() {
+        if retired {
+            // §Health: redistribute — this crossbar no longer executes.
+            // The depth decrement comes AFTER the requeue sends: the
+            // batcher's shutdown quiesce loop waits for all depths to
+            // hit zero before its final front-channel drain, so every
+            // requeued item is guaranteed to be drained, not dropped.
+            requeue_batch(batch, &front_tx, &metrics);
+            depths[worker_id].fetch_sub(1, Ordering::Release);
+            continue;
+        }
         let t0 = Instant::now();
         let a: Vec<u64> = batch.items.iter().map(|p| p.a).collect();
         let b: Vec<u64> = batch.items.iter().map(|p| p.b).collect();
         // Shared compiled plan: synthesized + validated once per
         // (kind, shape, tmr) process-wide, memoized per worker.
-        let plan = match local.get(&batch.kind) {
-            Some(cf) => Ok(cf.clone()),
-            None => plans.get(batch.kind, cfg.rows, cfg.cols, cfg.policy.tmr).map(|cf| {
-                local.insert(batch.kind, cf.clone());
-                cf
-            }),
-        };
+        let mut plan = resolve_plan(&mut local, &plans, batch.kind, cfg.rows, cfg.cols, policy.tmr);
+        // §Health: an escalated TMR mode may not fit every function on
+        // this crossbar shape (e.g. serial TMR's extra output copies on
+        // narrow arrays). Rather than bricking a previously working
+        // worker, drop the TMR escalation (keep ECC) and retry.
+        if plan.is_err() && policy.tmr != cfg.policy.tmr {
+            eprintln!(
+                "worker {worker_id}: escalated {:?} does not fit {:?}; \
+                 blocking TMR escalation",
+                policy.tmr, batch.kind
+            );
+            tmr_escalation_blocked = true;
+            let fallback = ReliabilityPolicy { ecc_m: policy.ecc_m, tmr: cfg.policy.tmr };
+            if mmpu.set_policy(fallback).is_ok() {
+                policy = fallback;
+                plan =
+                    resolve_plan(&mut local, &plans, batch.kind, cfg.rows, cfg.cols, policy.tmr);
+            }
+        }
         let result = plan.and_then(|cf| mmpu.exec_vector_compiled(0, &cf, &a, &b));
         match result {
             Ok(res) => {
@@ -283,8 +427,61 @@ fn worker_loop(
                 }
             }
         }
+        // §Health maintenance between batches: scrub on schedule,
+        // escalate the policy when telemetry warrants, publish the
+        // per-worker report, and retire when the manager says so.
+        if cfg.health.is_some() {
+            if mmpu.scrub_due(0) {
+                let _ = mmpu.health_scrub(0);
+            }
+            let decision = mmpu.health(0).map(|h| {
+                (h.recommended_policy(policy), h.stats(), h.should_retire())
+            });
+            if let Some((mut rec, hstats, retire)) = decision {
+                if tmr_escalation_blocked {
+                    rec.tmr = policy.tmr;
+                }
+                if rec.ecc_m != policy.ecc_m || rec.tmr != policy.tmr {
+                    match mmpu.set_policy(rec) {
+                        Ok(()) => {
+                            eprintln!("worker {worker_id}: escalation {policy:?} -> {rec:?}");
+                            policy = rec;
+                        }
+                        Err(e) if !escalation_err_logged => {
+                            escalation_err_logged = true;
+                            eprintln!("worker {worker_id}: cannot escalate to {rec:?}: {e:#}");
+                        }
+                        Err(_) => {}
+                    }
+                }
+                if retire && !retired {
+                    retired = true;
+                    healthy[worker_id].store(false, Ordering::Relaxed);
+                    eprintln!(
+                        "worker {worker_id}: crossbar retired \
+                         ({} stuck cells detected, {} spares left)",
+                        hstats.stuck_detected, hstats.spares_left
+                    );
+                }
+                metrics.set_worker_health(
+                    worker_id,
+                    WorkerHealth {
+                        batches: hstats.batches,
+                        scrubs: hstats.scrub_passes,
+                        corrected: hstats.drift_corrected + hstats.scrub_corrected,
+                        uncorrectable: hstats.scrub_uncorrectable,
+                        stuck_detected: hstats.stuck_detected,
+                        remapped_rows: hstats.remapped_rows,
+                        spares_left: hstats.spares_left,
+                        policy_level: (policy.ecc_m.is_some() as u8)
+                            + (policy.tmr != TmrMode::Off) as u8,
+                        retired,
+                    },
+                );
+            }
+        }
         metrics.busy_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
-        depths[worker_id].fetch_sub(1, Ordering::Relaxed);
+        depths[worker_id].fetch_sub(1, Ordering::Release);
     }
 }
 

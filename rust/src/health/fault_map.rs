@@ -1,0 +1,248 @@
+//! Ground-truth persistent-fault state of one crossbar: stuck-at cells
+//! and the endurance wear-out process that creates them.
+//!
+//! Endurance model: each cell has a switches-to-failure budget drawn from
+//! a lognormal distribution (the standard RRAM endurance fit). Rather
+//! than carrying a per-cell switch counter on the hot path, the map
+//! consumes the crossbar's aggregate `switched_bits` accounting: with
+//! `S` total switches over `N` cells the mean per-cell wear is `S / N`,
+//! and the expected dead-cell count is `N * Phi((ln(S/N) - ln mu) /
+//! sigma)`. [`FaultMap::advance_wear`] tops the population up to that
+//! expectation, sampling each new dead cell's position and stuck polarity
+//! from its own deterministic stream — the marginal distribution matches
+//! per-cell sampled budgets under uniform switching, at O(new faults)
+//! cost instead of O(cells) per batch.
+//!
+//! A stuck cell ignores writes: the simulation realizes this by
+//! *clamping* — after any phase that wrote the array, [`FaultMap::clamp`]
+//! forces every stuck cell back to its stuck value.
+
+use std::collections::HashSet;
+
+use crate::util::bitmat::BitMatrix;
+use crate::util::rng::Pcg64;
+use crate::util::stats::normal_cdf;
+
+/// Lognormal per-cell endurance (switches-to-failure) distribution.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct WearModel {
+    /// Median switches-to-failure per cell (RRAM literature: 1e6..1e12).
+    pub endurance_mean: f64,
+    /// Lognormal sigma (log-space spread of per-cell budgets).
+    pub endurance_sigma: f64,
+}
+
+impl WearModel {
+    /// A realistic RRAM endurance point.
+    pub fn rram() -> Self {
+        Self { endurance_mean: 1e8, endurance_sigma: 0.6 }
+    }
+
+    /// Accelerated-aging variant for soak tests and demos.
+    pub fn accelerated(endurance_mean: f64) -> Self {
+        Self { endurance_mean, endurance_sigma: 0.5 }
+    }
+
+    /// No wear-out ever (isolates other fault mechanisms in tests).
+    pub fn immortal() -> Self {
+        Self { endurance_mean: f64::INFINITY, endurance_sigma: 1.0 }
+    }
+
+    /// Fraction of cells dead after `mean_switches` switches per cell.
+    pub fn dead_fraction(&self, mean_switches: f64) -> f64 {
+        if !self.endurance_mean.is_finite() || mean_switches <= 0.0 {
+            return 0.0;
+        }
+        normal_cdf((mean_switches.ln() - self.endurance_mean.ln()) / self.endurance_sigma)
+    }
+}
+
+impl Default for WearModel {
+    fn default() -> Self {
+        Self::rram()
+    }
+}
+
+/// One permanently stuck cell.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct StuckCell {
+    pub row: u32,
+    pub col: u32,
+    /// The value the cell is frozen at.
+    pub value: bool,
+}
+
+/// Sparse ground-truth map of a crossbar's permanent faults, grouped by
+/// physical row so the per-row operations the march scrub leans on stay
+/// O(faults in that row) rather than O(total faults).
+#[derive(Clone, Debug)]
+pub struct FaultMap {
+    rows: usize,
+    cols: usize,
+    wear: WearModel,
+    rng: Pcg64,
+    /// `row -> stuck cells in that row`.
+    by_row: std::collections::HashMap<u32, Vec<StuckCell>>,
+    count: usize,
+    occupied: HashSet<u64>,
+    /// Cells killed by the wear process (excludes manual injections).
+    wear_dead: usize,
+}
+
+impl FaultMap {
+    pub fn new(rows: usize, cols: usize, wear: WearModel, seed: u64) -> Self {
+        Self {
+            rows,
+            cols,
+            wear,
+            rng: Pcg64::new(seed, 0xFA17),
+            by_row: std::collections::HashMap::new(),
+            count: 0,
+            occupied: HashSet::new(),
+            wear_dead: 0,
+        }
+    }
+
+    fn key(&self, row: u32, col: u32) -> u64 {
+        row as u64 * self.cols as u64 + col as u64
+    }
+
+    pub fn len(&self) -> usize {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    pub fn wear(&self) -> &WearModel {
+        &self.wear
+    }
+
+    /// Ground-truth stuck value of a cell, if it is stuck.
+    pub fn stuck_at(&self, row: usize, col: usize) -> Option<bool> {
+        self.by_row
+            .get(&(row as u32))?
+            .iter()
+            .find(|s| s.col as usize == col)
+            .map(|s| s.value)
+    }
+
+    /// Add a stuck cell (manual injection / wear). False if already stuck.
+    pub fn inject(&mut self, row: u32, col: u32, value: bool) -> bool {
+        assert!((row as usize) < self.rows && (col as usize) < self.cols);
+        if !self.occupied.insert(self.key(row, col)) {
+            return false;
+        }
+        self.by_row.entry(row).or_default().push(StuckCell { row, col, value });
+        self.count += 1;
+        true
+    }
+
+    /// Advance endurance wear-out given the crossbar's cumulative
+    /// `switched_bits`. Returns the number of newly dead cells.
+    pub fn advance_wear(&mut self, total_switched: u64) -> usize {
+        let cells_total = self.rows * self.cols;
+        let mean = total_switched as f64 / cells_total as f64;
+        let want = (cells_total as f64 * self.wear.dead_fraction(mean)).floor() as usize;
+        let want = want.min(cells_total);
+        let mut added = 0;
+        while self.wear_dead < want && self.occupied.len() < cells_total {
+            let row = self.rng.below(self.rows as u64) as u32;
+            let col = self.rng.below(self.cols as u64) as u32;
+            let value = self.rng.bernoulli(0.5);
+            if self.inject(row, col, value) {
+                self.wear_dead += 1;
+                added += 1;
+            }
+        }
+        added
+    }
+
+    /// Force every stuck cell to its stuck value; returns bits changed.
+    pub fn clamp(&self, state: &mut BitMatrix) -> u64 {
+        let mut changed = 0;
+        for cells in self.by_row.values() {
+            for s in cells {
+                let (r, c) = (s.row as usize, s.col as usize);
+                if state.get(r, c) != s.value {
+                    state.set(r, c, s.value);
+                    changed += 1;
+                }
+            }
+        }
+        changed
+    }
+
+    /// Clamp only the stuck cells of one physical row
+    /// (O(faults in that row) — the march scrub's inner loop).
+    pub fn clamp_row(&self, state: &mut BitMatrix, row: usize) -> u64 {
+        let mut changed = 0;
+        if let Some(cells) = self.by_row.get(&(row as u32)) {
+            for s in cells {
+                if state.get(row, s.col as usize) != s.value {
+                    state.set(row, s.col as usize, s.value);
+                    changed += 1;
+                }
+            }
+        }
+        changed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wear_fraction_monotone_and_bounded() {
+        let w = WearModel::accelerated(1e4);
+        assert_eq!(w.dead_fraction(0.0), 0.0);
+        let mut last = 0.0;
+        for s in [1e2, 1e3, 1e4, 1e5, 1e6] {
+            let f = w.dead_fraction(s);
+            assert!((0.0..=1.0).contains(&f));
+            assert!(f >= last, "monotone at {s}");
+            last = f;
+        }
+        assert!((w.dead_fraction(1e4) - 0.5).abs() < 1e-6, "median budget");
+        assert_eq!(WearModel::immortal().dead_fraction(1e30), 0.0);
+    }
+
+    #[test]
+    fn advance_wear_tracks_expectation() {
+        let mut fm = FaultMap::new(64, 64, WearModel::accelerated(100.0), 9);
+        assert_eq!(fm.advance_wear(0), 0);
+        // mean 100 switches/cell = the median budget: ~half the cells die.
+        let cells = 64 * 64;
+        fm.advance_wear(100 * cells as u64);
+        let frac = fm.len() as f64 / cells as f64;
+        assert!((frac - 0.5).abs() < 0.01, "dead fraction {frac}");
+        // Monotone: never removes faults.
+        let before = fm.len();
+        fm.advance_wear(100 * cells as u64);
+        assert_eq!(fm.len(), before);
+    }
+
+    #[test]
+    fn clamp_forces_stuck_values() {
+        let mut fm = FaultMap::new(8, 8, WearModel::immortal(), 1);
+        assert!(fm.inject(2, 3, true));
+        assert!(!fm.inject(2, 3, false), "double inject rejected");
+        assert!(fm.inject(5, 1, false));
+        let mut state = BitMatrix::zeros(8, 8);
+        state.set(5, 1, true);
+        let changed = fm.clamp(&mut state);
+        assert_eq!(changed, 2);
+        assert!(state.get(2, 3));
+        assert!(!state.get(5, 1));
+        assert_eq!(fm.clamp(&mut state), 0, "idempotent");
+        assert_eq!(fm.stuck_at(2, 3), Some(true));
+        assert_eq!(fm.stuck_at(0, 0), None);
+        // Row-scoped clamp touches only that row.
+        state.set(2, 3, false);
+        state.set(5, 1, true);
+        assert_eq!(fm.clamp_row(&mut state, 2), 1);
+        assert!(state.get(5, 1), "other rows untouched");
+    }
+}

@@ -1,0 +1,470 @@
+//! # health — online fault management for the mMPU.
+//!
+//! The paper's reliability mechanisms (diagonal ECC, TMR) protect a
+//! single execution; a long-running server additionally needs *ongoing*
+//! management of faults that do not go away: stuck-at cells from
+//! manufacturing defects and endurance wear-out (arXiv:2602.04035), and
+//! drift that accumulates between accesses unless scrubbed
+//! (arXiv:2105.04212). This module provides, per crossbar:
+//!
+//! * [`FaultMap`] — ground-truth persistent faults plus the lognormal
+//!   endurance wear-out process fed by the crossbar's `switched_bits`
+//!   energy/wear accounting;
+//! * [`RowRemap`] — spare-row remapping with transparent address
+//!   translation on the operand marshalling path;
+//! * [`CrossbarHealth`] — the manager: a background **scrub** pass
+//!   (ECC correction of accumulated drift + a march test that detects
+//!   stuck-at cells and triggers remapping), telemetry, **adaptive
+//!   policy escalation** (None -> ECC -> ECC+TMR) and the retirement
+//!   decision once spares are exhausted or the fault population passes
+//!   the configured bound.
+//!
+//! The manager is deliberately *detection-based*: it never reads the
+//! ground-truth [`FaultMap`] to decide anything — stuck cells are found
+//! the way real hardware finds them, by writing test patterns and
+//! reading them back. `FaultMap` only simulates the physics (writes to a
+//! dead cell do not take).
+//!
+//! Integration points: `mmpu::Mmpu` owns an optional `CrossbarHealth`
+//! per crossbar (`Mmpu::enable_health`) and consults it on the
+//! word-parallel serving path; `coordinator` workers drive scrubbing,
+//! escalation and retirement between batches and export per-worker
+//! health in `MetricsSnapshot`; `analysis::lifetime` validates the
+//! simulated degradation against the closed-form `nn::degradation`
+//! model.
+
+pub mod fault_map;
+pub mod remap;
+
+pub use fault_map::{FaultMap, StuckCell, WearModel};
+pub use remap::{BadRowOutcome, RowRemap};
+
+use std::collections::{BTreeSet, HashSet};
+
+use crate::ecc::DiagonalEcc;
+use crate::mmpu::ReliabilityPolicy;
+use crate::tmr::TmrMode;
+use crate::util::bitmat::{BitMatrix, BitVec};
+
+/// Configuration of one crossbar's health manager.
+#[derive(Clone, Debug)]
+pub struct HealthConfig {
+    pub wear: WearModel,
+    /// Physical rows reserved as remap spares (top of the array).
+    pub spare_rows: usize,
+    /// Batches between scrub passes.
+    pub scrub_interval: u64,
+    /// Physical rows march-tested per scrub pass.
+    pub scrub_rows_per_pass: usize,
+    /// ECC block size installed when escalation enables ECC.
+    pub ecc_m: usize,
+    /// ECC-corrected drift count that escalates to TMR: corrections are
+    /// only observable once ECC is installed (base policy or a level-1
+    /// escalation), and a high corrected rate means drift pressure that
+    /// single-error correction will eventually lose to.
+    pub escalate_corrected: u64,
+    /// Uncorrectable-event count that escalates to TMR.
+    pub escalate_uncorrected: u64,
+    /// Detected stuck cells beyond which the crossbar is retired.
+    pub retire_stuck_cells: u64,
+    pub seed: u64,
+}
+
+impl Default for HealthConfig {
+    fn default() -> Self {
+        Self {
+            wear: WearModel::rram(),
+            spare_rows: 4,
+            scrub_interval: 64,
+            scrub_rows_per_pass: 8,
+            ecc_m: 16,
+            escalate_corrected: 64,
+            escalate_uncorrected: 4,
+            retire_stuck_cells: 256,
+            seed: 0x4EA1,
+        }
+    }
+}
+
+/// Point-in-time health counters (exported into coordinator metrics).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct HealthStats {
+    pub batches: u64,
+    pub scrub_passes: u64,
+    /// Drift bits corrected by scrub-time ECC passes.
+    pub scrub_corrected: u64,
+    /// Uncorrectable (>= 2 error) blocks seen by scrub-time ECC passes.
+    pub scrub_uncorrectable: u64,
+    /// Drift bits corrected on the serving path (ECC verify-before).
+    pub drift_corrected: u64,
+    /// Distinct stuck cells found by the march test.
+    pub stuck_detected: u64,
+    /// Ground-truth stuck cells (wear + injected) — simulation-side.
+    pub stuck_cells_true: u64,
+    pub remapped_rows: u64,
+    pub spares_left: u64,
+    /// Modeled extension cycles spent scrubbing (not crossbar cycles).
+    pub scrub_cycles: u64,
+    /// Escalation level: 0 = base policy, 1 = +ECC, 2 = +ECC+TMR.
+    pub level: u8,
+}
+
+/// What one scrub pass found and did.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ScrubReport {
+    /// Drift bits repaired by the ECC pass.
+    pub corrected: u64,
+    /// Uncorrectable blocks flagged by the ECC pass.
+    pub uncorrectable: u64,
+    /// Newly detected stuck cells (march test).
+    pub detected: u64,
+    /// Rows remapped onto spares.
+    pub remapped: u64,
+    /// An active row is bad and the spare pool is empty.
+    pub exhausted: bool,
+}
+
+/// Online reliability manager for one crossbar.
+#[derive(Clone, Debug)]
+pub struct CrossbarHealth {
+    cfg: HealthConfig,
+    fault_map: FaultMap,
+    remap: RowRemap,
+    /// Stuck cells already counted by detection (march re-finds them).
+    known: HashSet<(u32, u32)>,
+    scrub_cursor: usize,
+    last_scrub_batch: u64,
+    exhausted: bool,
+    stats: HealthStats,
+}
+
+impl CrossbarHealth {
+    pub fn new(rows: usize, cols: usize, cfg: HealthConfig, seed: u64) -> Self {
+        let fault_map = FaultMap::new(rows, cols, cfg.wear, seed);
+        let remap = RowRemap::new(rows, cfg.spare_rows);
+        Self {
+            cfg,
+            fault_map,
+            remap,
+            known: HashSet::new(),
+            scrub_cursor: 0,
+            last_scrub_batch: 0,
+            exhausted: false,
+            stats: HealthStats::default(),
+        }
+    }
+
+    pub fn config(&self) -> &HealthConfig {
+        &self.cfg
+    }
+
+    /// Logical row capacity available to batches.
+    pub fn data_rows(&self) -> usize {
+        self.remap.data_rows()
+    }
+
+    /// Non-identity `(logical, physical)` row translations.
+    pub fn remapped_pairs(&self) -> Vec<(u32, u32)> {
+        self.remap.pairs()
+    }
+
+    pub fn fault_map(&self) -> &FaultMap {
+        &self.fault_map
+    }
+
+    /// Inject a ground-truth stuck cell (tests / fault campaigns).
+    pub fn inject_stuck(&mut self, row: u32, col: u32, value: bool) -> bool {
+        self.fault_map.inject(row, col, value)
+    }
+
+    /// Force stuck cells onto the array state; returns bits changed.
+    pub fn clamp(&self, state: &mut BitMatrix) -> u64 {
+        self.fault_map.clamp(state)
+    }
+
+    /// Per-batch bookkeeping: wear advance + serving telemetry.
+    pub fn on_batch(&mut self, total_switched: u64, ecc_corrected: u64) {
+        self.stats.batches += 1;
+        self.stats.drift_corrected += ecc_corrected;
+        self.fault_map.advance_wear(total_switched);
+    }
+
+    pub fn scrub_due(&self) -> bool {
+        self.stats.batches - self.last_scrub_batch >= self.cfg.scrub_interval
+    }
+
+    /// One scrub pass: ECC-correct accumulated drift (when ECC is
+    /// installed), march-test the next window of physical rows for
+    /// stuck-at faults, and remap rows with persistent faults onto
+    /// spares (migrating their contents).
+    pub fn scrub(
+        &mut self,
+        state: &mut BitMatrix,
+        mut ecc: Option<&mut DiagonalEcc>,
+    ) -> ScrubReport {
+        let mut rep = ScrubReport::default();
+        self.stats.scrub_passes += 1;
+        self.last_scrub_batch = self.stats.batches;
+
+        if let Some(ecc) = ecc.as_deref_mut() {
+            let out = ecc.correct(state);
+            rep.corrected = out.corrected_bits.len() as u64;
+            rep.uncorrectable = out.uncorrectable_blocks.len() as u64;
+            self.stats.scrub_corrected += rep.corrected;
+            self.stats.scrub_uncorrectable += rep.uncorrectable;
+            self.stats.scrub_cycles += ecc.verify_cost();
+        }
+
+        // March test: write all-ones then all-zeros to each row of the
+        // window, reading back after each pattern; a cell that cannot
+        // store one of the patterns is stuck. Data is saved/restored, so
+        // the pass is transparent (and ECC parities stay valid: a stuck
+        // cell reads back its stuck value before and after).
+        let rows = state.rows();
+        let cols = state.cols();
+        let window = self.cfg.scrub_rows_per_pass.clamp(1, rows);
+        let ones = BitVec::ones(cols);
+        let zeros = BitVec::zeros(cols);
+        let mut newly: Vec<(u32, u32)> = Vec::new();
+        for k in 0..window {
+            let r = (self.scrub_cursor + k) % rows;
+            let saved = state.row_bitvec(r);
+            state.set_row(r, &ones);
+            self.fault_map.clamp_row(state, r);
+            let after_ones = state.row_bitvec(r);
+            state.set_row(r, &zeros);
+            self.fault_map.clamp_row(state, r);
+            let after_zeros = state.row_bitvec(r);
+            for c in 0..cols {
+                if !after_ones.get(c) || after_zeros.get(c) {
+                    newly.push((r as u32, c as u32));
+                }
+            }
+            state.set_row(r, &saved);
+            self.fault_map.clamp_row(state, r);
+            // Modeled cost: two pattern writes, two reads, one restore.
+            self.stats.scrub_cycles += 5;
+        }
+        self.scrub_cursor = (self.scrub_cursor + window) % rows;
+
+        let mut bad_rows: BTreeSet<u32> = BTreeSet::new();
+        for &(r, c) in &newly {
+            if self.known.insert((r, c)) {
+                self.stats.stuck_detected += 1;
+                rep.detected += 1;
+            }
+            bad_rows.insert(r);
+        }
+        let mut migrated = false;
+        for r in bad_rows {
+            match self.remap.notice_bad_row(r) {
+                BadRowOutcome::Remapped { spare, .. } => {
+                    // Migrate the row's contents to its spare.
+                    for c in 0..cols {
+                        let v = state.get(r as usize, c);
+                        state.set(spare as usize, c, v);
+                    }
+                    self.fault_map.clamp_row(state, spare as usize);
+                    // (cumulative remapped_rows is derived from the map
+                    // in `stats()` — re-remapping a row counts once)
+                    self.stats.scrub_cycles += cols as u64;
+                    rep.remapped += 1;
+                    migrated = true;
+                }
+                BadRowOutcome::Exhausted => {
+                    self.exhausted = true;
+                    rep.exhausted = true;
+                }
+                BadRowOutcome::SparePoisoned | BadRowOutcome::AlreadyKnown => {}
+            }
+        }
+        // Migration rewrote spare rows outside the ECC's incremental
+        // bookkeeping: re-sync the parities.
+        if migrated {
+            if let Some(ecc) = ecc {
+                ecc.encode(state);
+            }
+        }
+        rep
+    }
+
+    /// Escalation level from observed telemetry (never de-escalates).
+    ///
+    /// Level 1 (+ECC) fires on the first detected persistent fault —
+    /// the march test needs no ECC, so this is the only drift-blind
+    /// signal available under an unprotected base policy. Level 2
+    /// (+TMR) fires on signals that single-error correction is losing:
+    /// uncorrectable blocks, spare exhaustion, or a corrected-drift
+    /// count past `escalate_corrected` (observable once ECC is on).
+    fn level(&self) -> u8 {
+        let corrected = self.stats.scrub_corrected + self.stats.drift_corrected;
+        if self.stats.scrub_uncorrectable >= self.cfg.escalate_uncorrected
+            || corrected >= self.cfg.escalate_corrected
+            || self.exhausted
+        {
+            2
+        } else if self.stats.stuck_detected > 0 {
+            1
+        } else {
+            0
+        }
+    }
+
+    /// The reliability policy this crossbar should run, given the
+    /// configured base policy: escalation only ever adds protection.
+    pub fn recommended_policy(&self, base: ReliabilityPolicy) -> ReliabilityPolicy {
+        let mut p = base;
+        let level = self.level();
+        if level >= 1 && p.ecc_m.is_none() {
+            p.ecc_m = Some(self.cfg.ecc_m);
+        }
+        if level >= 2 && p.tmr == TmrMode::Off {
+            p.tmr = TmrMode::Serial;
+        }
+        p
+    }
+
+    /// Retire when an unfixable active-row fault exists or the detected
+    /// fault population passed the configured bound.
+    pub fn should_retire(&self) -> bool {
+        self.exhausted || self.stats.stuck_detected >= self.cfg.retire_stuck_cells
+    }
+
+    pub fn stats(&self) -> HealthStats {
+        HealthStats {
+            stuck_cells_true: self.fault_map.len() as u64,
+            remapped_rows: self.remap.remapped_count() as u64,
+            spares_left: self.remap.spares_left() as u64,
+            level: self.level(),
+            ..self.stats
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn immortal_cfg(spares: usize) -> HealthConfig {
+        HealthConfig {
+            wear: WearModel::immortal(),
+            spare_rows: spares,
+            scrub_interval: 1,
+            scrub_rows_per_pass: 64,
+            ..Default::default()
+        }
+    }
+
+    fn random_state(rows: usize, cols: usize, seed: u64) -> BitMatrix {
+        let mut r = Pcg64::new(seed, 0);
+        BitMatrix::from_fn(rows, cols, |_, _| r.bernoulli(0.5))
+    }
+
+    #[test]
+    fn march_detects_and_remaps_without_disturbing_data() {
+        let mut state = random_state(32, 64, 3);
+        let mut h = CrossbarHealth::new(32, 64, immortal_cfg(4), 11);
+        h.inject_stuck(5, 9, true);
+        h.inject_stuck(5, 40, false);
+        h.inject_stuck(17, 2, false);
+        h.clamp(&mut state);
+        let before = state.clone();
+        let rep = h.scrub(&mut state, None);
+        assert_eq!(rep.detected, 3);
+        assert_eq!(rep.remapped, 2, "rows 5 and 17");
+        assert!(!rep.exhausted);
+        // Everything outside the migrated spare rows is untouched.
+        for r in 0..28 {
+            for c in 0..64 {
+                assert_eq!(state.get(r, c), before.get(r, c), "({r},{c})");
+            }
+        }
+        // Spares now mirror the bad rows' data.
+        let pairs = h.remapped_pairs();
+        assert_eq!(pairs.len(), 2);
+        for &(l, p) in &pairs {
+            for c in 0..64 {
+                assert_eq!(
+                    state.get(p as usize, c),
+                    before.get(l as usize, c),
+                    "migrated ({l}->{p},{c})"
+                );
+            }
+        }
+        // A second scrub detects nothing new and remaps nothing.
+        let rep2 = h.scrub(&mut state, None);
+        assert_eq!(rep2.detected, 0);
+        assert_eq!(rep2.remapped, 0);
+        let s = h.stats();
+        assert_eq!(s.stuck_detected, 3);
+        assert_eq!(s.remapped_rows, 2);
+        assert_eq!(s.spares_left, 2);
+    }
+
+    #[test]
+    fn escalation_levels_follow_telemetry() {
+        let mut h = CrossbarHealth::new(32, 64, immortal_cfg(4), 1);
+        let base = ReliabilityPolicy::none();
+        assert_eq!(h.recommended_policy(base).ecc_m, None);
+        // A detected stuck cell turns ECC on.
+        let mut state = BitMatrix::zeros(32, 64);
+        h.inject_stuck(2, 2, true);
+        h.scrub(&mut state, None);
+        let p1 = h.recommended_policy(base);
+        assert_eq!(p1.ecc_m, Some(16));
+        assert_eq!(p1.tmr, TmrMode::Off);
+        // Uncorrectable pressure turns TMR on.
+        h.stats.scrub_uncorrectable = h.cfg.escalate_uncorrected;
+        let p2 = h.recommended_policy(base);
+        assert_eq!(p2.tmr, TmrMode::Serial);
+        assert_eq!(h.stats().level, 2);
+        // Sustained corrected drift (observable once ECC runs) also
+        // escalates to TMR, independent of stuck-cell detection.
+        let mut hd = CrossbarHealth::new(32, 64, immortal_cfg(4), 2);
+        hd.stats.drift_corrected = hd.cfg.escalate_corrected;
+        let pd = hd.recommended_policy(base);
+        assert_eq!(pd.ecc_m, Some(16));
+        assert_eq!(pd.tmr, TmrMode::Serial);
+        // Escalation never removes protection the base already has.
+        let strong = ReliabilityPolicy { ecc_m: Some(8), tmr: TmrMode::Parallel };
+        let p3 = h.recommended_policy(strong);
+        assert_eq!(p3.ecc_m, Some(8));
+        assert_eq!(p3.tmr, TmrMode::Parallel);
+    }
+
+    #[test]
+    fn retirement_on_exhaustion_and_fault_bound() {
+        let mut state = BitMatrix::zeros(16, 32);
+        let mut cfg = immortal_cfg(1);
+        cfg.retire_stuck_cells = 1000;
+        let mut h = CrossbarHealth::new(16, 32, cfg, 2);
+        h.inject_stuck(1, 1, true);
+        h.inject_stuck(2, 1, true);
+        h.scrub(&mut state, None);
+        assert!(h.should_retire(), "two bad active rows, one spare");
+        let mut cfg = immortal_cfg(8);
+        cfg.retire_stuck_cells = 2;
+        let mut h = CrossbarHealth::new(16, 32, cfg, 2);
+        h.inject_stuck(1, 1, true);
+        h.inject_stuck(1, 5, false);
+        h.scrub(&mut state, None);
+        assert!(h.should_retire(), "fault population bound");
+    }
+
+    #[test]
+    fn scrub_due_follows_interval() {
+        let mut cfg = immortal_cfg(2);
+        cfg.scrub_interval = 3;
+        let mut h = CrossbarHealth::new(16, 32, cfg, 4);
+        assert!(!h.scrub_due());
+        h.on_batch(0, 0);
+        h.on_batch(0, 0);
+        assert!(!h.scrub_due());
+        h.on_batch(0, 0);
+        assert!(h.scrub_due());
+        let mut state = BitMatrix::zeros(16, 32);
+        h.scrub(&mut state, None);
+        assert!(!h.scrub_due());
+    }
+}

@@ -1,0 +1,146 @@
+//! Spare-row remapping: transparent logical-to-physical row translation.
+//!
+//! The top `spare_rows` physical rows of a crossbar are reserved as
+//! spares; batch items address the *logical* row space `0..data_rows`.
+//! When scrubbing detects a persistent fault in a physical row, the
+//! logical row currently mapped there is redirected to a spare — future
+//! operand loads and readbacks follow the map, and the in-row compute is
+//! untouched because stateful in-row micro-ops already execute in every
+//! physical lane (paper Fig. 1a): a remapped item's row participates in
+//! the same cycles as every other row.
+//!
+//! Column faults need no separate spare-column machinery on this path: a
+//! stuck cell at `(r, c)` only corrupts the item occupying row `r`, so
+//! row retirement covers arbitrary single-cell faults. Whole-column
+//! (driver) failures are modeled as crossbar retirement (ROADMAP).
+
+use std::collections::HashSet;
+
+/// Result of reporting one bad physical row.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BadRowOutcome {
+    /// An active logical row was moved to a spare.
+    Remapped { logical: u32, spare: u32 },
+    /// The bad row was an unused spare; it is taken out of the pool.
+    SparePoisoned,
+    /// This physical row was already known bad.
+    AlreadyKnown,
+    /// An active row is bad and no spare is left — retire the crossbar.
+    Exhausted,
+}
+
+/// Logical-to-physical row map with a spare pool.
+#[derive(Clone, Debug)]
+pub struct RowRemap {
+    /// `map[logical] = physical`.
+    map: Vec<u32>,
+    free_spares: Vec<u32>,
+    bad: HashSet<u32>,
+}
+
+impl RowRemap {
+    pub fn new(rows: usize, spare_rows: usize) -> Self {
+        let spare_rows = spare_rows.min(rows.saturating_sub(1));
+        let data_rows = rows - spare_rows;
+        Self {
+            map: (0..data_rows as u32).collect(),
+            free_spares: (data_rows as u32..rows as u32).collect(),
+            bad: HashSet::new(),
+        }
+    }
+
+    /// Logical row capacity (physical rows minus reserved spares).
+    pub fn data_rows(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn spares_left(&self) -> usize {
+        self.free_spares.len()
+    }
+
+    /// Physical row backing a logical row.
+    pub fn physical(&self, logical: u32) -> u32 {
+        self.map[logical as usize]
+    }
+
+    pub fn is_identity(&self) -> bool {
+        self.map.iter().enumerate().all(|(l, &p)| l as u32 == p)
+    }
+
+    /// Non-identity `(logical, physical)` pairs.
+    pub fn pairs(&self) -> Vec<(u32, u32)> {
+        self.map
+            .iter()
+            .enumerate()
+            .filter(|&(l, &p)| l as u32 != p)
+            .map(|(l, &p)| (l as u32, p))
+            .collect()
+    }
+
+    pub fn remapped_count(&self) -> usize {
+        self.map.iter().enumerate().filter(|&(l, &p)| l as u32 != p).count()
+    }
+
+    /// Record that a physical row holds a persistent fault; remap the
+    /// logical row served by it (if any) onto a healthy spare.
+    pub fn notice_bad_row(&mut self, physical: u32) -> BadRowOutcome {
+        if !self.bad.insert(physical) {
+            return BadRowOutcome::AlreadyKnown;
+        }
+        if let Some(logical) = self.map.iter().position(|&p| p == physical) {
+            loop {
+                match self.free_spares.pop() {
+                    Some(s) if self.bad.contains(&s) => continue,
+                    Some(s) => {
+                        self.map[logical] = s;
+                        return BadRowOutcome::Remapped { logical: logical as u32, spare: s };
+                    }
+                    None => return BadRowOutcome::Exhausted,
+                }
+            }
+        }
+        self.free_spares.retain(|&s| s != physical);
+        BadRowOutcome::SparePoisoned
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_until_faults() {
+        let r = RowRemap::new(32, 4);
+        assert_eq!(r.data_rows(), 28);
+        assert_eq!(r.spares_left(), 4);
+        assert!(r.is_identity());
+        assert!(r.pairs().is_empty());
+        assert_eq!(r.physical(10), 10);
+    }
+
+    #[test]
+    fn remap_chain_and_exhaustion() {
+        let mut r = RowRemap::new(8, 2); // data rows 0..6, spares {6, 7}
+        let o = r.notice_bad_row(3);
+        assert_eq!(o, BadRowOutcome::Remapped { logical: 3, spare: 7 });
+        assert_eq!(r.physical(3), 7);
+        assert_eq!(r.notice_bad_row(3), BadRowOutcome::AlreadyKnown);
+        // The spare serving logical 3 dies too: remap again.
+        let o = r.notice_bad_row(7);
+        assert_eq!(o, BadRowOutcome::Remapped { logical: 3, spare: 6 });
+        assert_eq!(r.pairs(), vec![(3, 6)]);
+        assert_eq!(r.remapped_count(), 1);
+        assert_eq!(r.spares_left(), 0);
+        // No spare left for the next active-row fault.
+        assert_eq!(r.notice_bad_row(0), BadRowOutcome::Exhausted);
+    }
+
+    #[test]
+    fn poisoned_spare_is_skipped() {
+        let mut r = RowRemap::new(8, 2);
+        assert_eq!(r.notice_bad_row(7), BadRowOutcome::SparePoisoned);
+        assert_eq!(r.spares_left(), 1);
+        let o = r.notice_bad_row(1);
+        assert_eq!(o, BadRowOutcome::Remapped { logical: 1, spare: 6 });
+    }
+}

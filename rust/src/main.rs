@@ -10,14 +10,22 @@
 //! remus overhead                      # ECC latency overhead table (E8)
 //! remus tradeoff                      # TMR trade-off table (E9)
 //! remus serve [--requests 4096 --workers 4]   # coordinator load demo
+//! remus soak  [--requests 1000000 --workers 4 --endurance 3e4]
+//!                                     # §Health long-running soak:
+//!                                     # nominal errors + wear-out, with
+//!                                     # vs without the health manager
+//! remus lifetime [--batches 512 --p-input 1e-4]
+//!                                     # degradation vs closed form
 //! ```
 
 use anyhow::Result;
 
+use remus::analysis::lifetime::{simulate, LifetimeConfig};
 use remus::analysis::{fig4::MultReliability, overhead};
 use remus::bitlet::BitletModel;
 use remus::coordinator::{Coordinator, CoordinatorConfig};
 use remus::errs::ErrorModel;
+use remus::health::{HealthConfig, WearModel};
 use remus::mmpu::{controller::quick_exec, FunctionKind, ReliabilityPolicy};
 use remus::nn::degradation::DegradationModel;
 use remus::tmr::TmrMode;
@@ -36,10 +44,12 @@ fn main() -> Result<()> {
         Some("overhead") => overhead_cmd(&args),
         Some("tradeoff") => tradeoff(&args),
         Some("serve") => serve(&args),
+        Some("soak") => soak(&args),
+        Some("lifetime") => lifetime_cmd(&args),
         _ => {
             eprintln!(
-                "usage: remus <info|demo|fig4|fig5|overhead|tradeoff|serve> [--opts]\n\
-                 see doc comments in rust/src/main.rs"
+                "usage: remus <info|demo|fig4|fig5|overhead|tradeoff|serve|soak|lifetime> \
+                 [--opts]\n see doc comments in rust/src/main.rs"
             );
             Ok(())
         }
@@ -210,16 +220,21 @@ fn serve(args: &Args) -> Result<()> {
         .map(|i| (i, coord.submit(FunctionKind::Mul(16), i % 1000, (i * 7) % 1000)))
         .collect();
     let mut ok = 0u64;
+    let mut errors = 0u64;
     for (i, rx) in rxs {
         let r = rx.recv()?;
-        if r.value == (i % 1000) * ((i * 7) % 1000) {
+        if !r.is_ok() {
+            // Infrastructure error results are not wrong *values*.
+            errors += 1;
+        } else if r.value == (i % 1000) * ((i * 7) % 1000) {
             ok += 1;
         }
     }
     let dt = t0.elapsed();
     let m = coord.metrics();
     println!(
-        "served {requests} requests in {:.2?}: {:.0} req/s, correct {ok}/{requests}",
+        "served {requests} requests in {:.2?}: {:.0} req/s, correct {ok}/{requests} \
+         ({errors} error results)",
         dt,
         requests as f64 / dt.as_secs_f64()
     );
@@ -231,5 +246,149 @@ fn serve(args: &Args) -> Result<()> {
         m.latency_percentile_us(99.0)
     );
     coord.shutdown();
+    Ok(())
+}
+
+/// One soak configuration: open-loop load in bounded waves, correctness
+/// checked client-side (a wrong value = an uncorrected error escaping to
+/// the user). Adds a table row and returns the throughput in req/s.
+fn soak_run(
+    label: &str,
+    health: Option<HealthConfig>,
+    requests: u64,
+    workers: usize,
+    t: &mut Table,
+) -> Result<f64> {
+    let coord = Coordinator::start(CoordinatorConfig {
+        workers,
+        rows: 64,
+        cols: 1024,
+        errors: ErrorModel::nominal(),
+        max_batch: 64,
+        max_wait: std::time::Duration::from_micros(300),
+        health,
+        ..Default::default()
+    })?;
+    let kind = FunctionKind::Add(8);
+    let (mut ok, mut wrong, mut errs) = (0u64, 0u64, 0u64);
+    let t0 = std::time::Instant::now();
+    let mut sent = 0u64;
+    let chunk = 8192u64;
+    while sent < requests {
+        let n = chunk.min(requests - sent);
+        let rxs: Vec<_> = (0..n)
+            .map(|i| {
+                let v = sent + i;
+                (v, coord.submit(kind, v % 251, (v * 7) % 251))
+            })
+            .collect();
+        for (v, rx) in rxs {
+            match rx.recv() {
+                Ok(r) if r.is_ok() => {
+                    if r.value == v % 251 + (v * 7) % 251 {
+                        ok += 1;
+                    } else {
+                        wrong += 1;
+                    }
+                }
+                _ => errs += 1,
+            }
+        }
+        sent += n;
+    }
+    let dt = t0.elapsed();
+    let tp = requests as f64 / dt.as_secs_f64();
+    let m = coord.metrics();
+    t.row(&[
+        label.into(),
+        format!("{tp:.0}"),
+        ok.to_string(),
+        wrong.to_string(),
+        errs.to_string(),
+        format!("{}/{workers}", m.retired_workers()),
+    ]);
+    for (w, wh) in m.worker_health.iter().enumerate() {
+        if wh.batches > 0 {
+            println!(
+                "  [{label}] worker {w}: {} batches, {} scrubs, corrected {}, \
+                 stuck {} (remapped {} rows, {} spares left), level {}{}",
+                wh.batches,
+                wh.scrubs,
+                wh.corrected,
+                wh.stuck_detected,
+                wh.remapped_rows,
+                wh.spares_left,
+                wh.policy_level,
+                if wh.retired { ", RETIRED" } else { "" }
+            );
+        }
+    }
+    coord.shutdown();
+    Ok(tp)
+}
+
+fn soak(args: &Args) -> Result<()> {
+    let requests = args.get_or("requests", 1_000_000u64);
+    let workers = args.get_or("workers", 4usize);
+    let endurance = args.get_or("endurance", 3e4f64);
+    println!(
+        "soak: {requests} Add(8) requests x2 configs, {workers} workers, \
+         ErrorModel::nominal() + wear-out (median endurance {endurance:.1e} switches)"
+    );
+    let health = HealthConfig {
+        wear: WearModel::accelerated(endurance),
+        spare_rows: 8,
+        scrub_interval: 64,
+        scrub_rows_per_pass: 8,
+        ..Default::default()
+    };
+    let mut t = Table::new(
+        "soak: uncorrected errors stay bounded, throughput within 15%",
+        &["config", "req/s", "ok", "wrong", "error_results", "retired"],
+    );
+    let tp_health = soak_run("health on", Some(health), requests, workers, &mut t)?;
+    let tp_base = soak_run("health off", None, requests, workers, &mut t)?;
+    t.print();
+    println!(
+        "throughput ratio (health on / off): {:.3}  (acceptance: >= 0.85)",
+        tp_health / tp_base
+    );
+    println!("\nclosed-form check (health disabled degradation == Fig. 5 model):");
+    lifetime_cmd(args)
+}
+
+fn lifetime_cmd(args: &Args) -> Result<()> {
+    let cfg = LifetimeConfig {
+        batches: args.get_or("batches", 512u64),
+        p_input: args.get_or("p-input", 1e-4f64),
+        ..Default::default()
+    };
+    let report = simulate(&cfg);
+    let mut t = Table::new(
+        &format!(
+            "lifetime: {}x{} m={} p_input={:.1e} (sim vs closed form)",
+            cfg.rows, cfg.cols, cfg.m, cfg.p_input
+        ),
+        &["batch", "base_sim", "base_mod", "blk_sim", "blk_mod", "eccw_sim", "eccw_mod"],
+    );
+    for p in &report.points {
+        t.row(&[
+            p.batch.to_string(),
+            format!("{:.0}", p.sim_baseline_weights),
+            format!("{:.1}", p.model_baseline_weights),
+            format!("{:.0}", p.sim_failed_blocks),
+            format!("{:.1}", p.model_failed_blocks),
+            format!("{:.0}", p.sim_ecc_weights),
+            format!("{:.1}", p.model_ecc_weights),
+        ]);
+    }
+    t.print();
+    let (rel_base, rel_blocks) = report.final_errors();
+    println!(
+        "final relative error vs closed form: baseline {:.1}% (gate <= 10%), \
+         failed blocks {:.1}% (MC tolerance <= 25%)",
+        rel_base * 100.0,
+        rel_blocks * 100.0
+    );
     Ok(())
 }

@@ -12,11 +12,27 @@
 //! gathers results with the symmetric word-parallel readback.
 //! [`Mmpu::exec_vector_legacy`] keeps the per-bit path as the bit-exact
 //! reference (`rust/tests/prop_plan_equivalence.rs`).
+//!
+//! All six `ErrorModel` classes fire on the serving path: `p_gate`,
+//! `p_input` during compute, `p_write` on operand marshalling,
+//! `p_proximity` as write disturb around the marshalled cells, and
+//! `lambda_retention` / `lambda_abrupt` over the batch's wall-clock time
+//! (crossbar cycles x the device cycle time). Both marshalling paths
+//! consume the injector identically.
+//!
+//! §Health: each crossbar optionally carries a
+//! [`crate::health::CrossbarHealth`] manager ([`Mmpu::enable_health`]).
+//! On the serving path the manager translates remapped logical rows to
+//! their spares during scatter/readback, clamps stuck cells after every
+//! write phase, and advances endurance wear from `switched_bits`;
+//! between batches the owner drives [`Mmpu::health_scrub`] and
+//! [`Mmpu::set_policy`] (adaptive escalation).
 
 use anyhow::{ensure, Result};
 
 use crate::ecc::DiagonalEcc;
 use crate::errs::{ErrorModel, Injector};
+use crate::health::{CrossbarHealth, HealthConfig, ScrubReport};
 use crate::tmr::{TmrEngine, TmrMode, TmrRun};
 use crate::util::bitmat::{transpose64, BitMatrix};
 use crate::xbar::crossbar::Crossbar;
@@ -25,7 +41,7 @@ use super::compiled::{CompiledFunction, PlanCache};
 use super::functions::{FunctionKind, FunctionSpec};
 
 /// Reliability policy applied to every function execution.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct ReliabilityPolicy {
     /// Diagonal ECC block size m (None = unprotected storage).
     pub ecc_m: Option<usize>,
@@ -67,11 +83,13 @@ impl Default for MmpuConfig {
     }
 }
 
-/// One crossbar with its private error stream and ECC extension.
+/// One crossbar with its private error stream, ECC extension and
+/// (optional) online health manager.
 struct XbarUnit {
     xbar: Crossbar,
     inj: Injector,
     ecc: Option<DiagonalEcc>,
+    health: Option<CrossbarHealth>,
 }
 
 /// Result of a vectored function execution.
@@ -83,7 +101,8 @@ pub struct VectorResult {
     /// ECC extension cycles added on the critical path
     /// (verify-before + update-after).
     pub ecc_cycles: u64,
-    /// Errors the ECC pre-verification corrected in the input region.
+    /// Bits the ECC verify-before pass corrected (drift accumulated
+    /// since the previous batch's parity re-sync).
     pub ecc_corrected: u64,
 }
 
@@ -161,6 +180,48 @@ impl BatchLayout {
         out.extend(self.parallel_bases.iter().map(|&b| (0usize, b)));
         out
     }
+
+    /// Physical `(row, col)` of canonical operand bit `idx`, resolved
+    /// against the copy layout from [`BatchLayout::copies`] (the same
+    /// table the scatter path walks, so the two can never diverge).
+    fn site(&self, idx: usize, copies: &[(usize, u32)], func: &FunctionSpec) -> (usize, usize) {
+        let (copy, item, which, bit) = self.decode(idx);
+        let (row_start, col_base) = copies[copy];
+        let cols = if which == 0 { &func.a_cols } else { &func.b_cols };
+        (row_start + item, (cols[bit] + col_base) as usize)
+    }
+}
+
+/// Proximity disturb around the marshalled operand cells: each written
+/// bit may disturb its two horizontally adjacent cells (paper §II-B2).
+/// Consumed identically by the word and per-bit marshalling paths.
+/// `remap` translates logical rows whose writes were redirected to
+/// spare rows (§Health), so disturbs land where the writes physically
+/// did; the injector stream itself is remap-independent.
+fn apply_proximity(
+    inj: &mut Injector,
+    layout: &BatchLayout,
+    func: &FunctionSpec,
+    remap: &[(u32, u32)],
+    state: &mut BitMatrix,
+) {
+    if inj.model.p_proximity <= 0.0 {
+        return;
+    }
+    let copies = layout.copies();
+    let cols = state.cols();
+    let sites = layout.total_bits() * 2;
+    inj.proximity(sites, |i| {
+        let (r, c) = layout.site(i / 2, &copies, func);
+        let r = remap
+            .iter()
+            .find(|&&(l, _)| l as usize == r)
+            .map_or(r, |&(_, p)| p as usize);
+        let nc = if i % 2 == 0 { c.wrapping_sub(1) } else { c + 1 };
+        if nc < cols {
+            state.flip(r, nc);
+        }
+    });
 }
 
 /// The memristive Memory Processing Unit.
@@ -178,6 +239,7 @@ impl Mmpu {
                 xbar: Crossbar::new(cfg.rows, cfg.cols),
                 inj: root.split(),
                 ecc: cfg.policy.ecc_m.map(|m| DiagonalEcc::new(cfg.rows, cfg.cols, m)),
+                health: None,
             })
             .collect();
         Self { cfg, units, plans: PlanCache::new() }
@@ -252,8 +314,28 @@ impl Mmpu {
             cf.mode(),
             self.cfg.policy.tmr
         );
+        let tmr = self.cfg.policy.tmr;
         let unit = &mut self.units[xbar_id];
-        let layout = BatchLayout::resolve(self.cfg.policy.tmr, unit.xbar.rows(), a.len(), &cf.spec)?;
+        let c0 = unit.xbar.stats.cycles;
+        let layout = BatchLayout::resolve(tmr, unit.xbar.rows(), a.len(), &cf.spec)?;
+        // §Health: spare rows are reserved out of the logical row space.
+        // Row remapping is skipped under SemiParallel TMR (its row-triple
+        // voting already outvotes a stuck row — see health/remap.rs).
+        let remapped: Vec<(u32, u32)> = match unit.health.as_ref() {
+            Some(h) if tmr != TmrMode::SemiParallel => {
+                ensure!(
+                    layout.items <= h.data_rows(),
+                    "batch of {} exceeds {} health-managed data rows",
+                    layout.items,
+                    h.data_rows()
+                );
+                h.remapped_pairs()
+            }
+            _ => Vec::new(),
+        };
+
+        // --- ECC verify-before: repair drift since the last batch -----
+        let (mut ecc_cycles, ecc_corrected) = Self::ecc_verify_before(unit);
 
         // --- load operands: word-parallel bit-transpose scatter --------
         // Write failures are sampled in ONE aggregate pass over the
@@ -293,11 +375,67 @@ impl Mmpu {
         unit.xbar.stats.switched_bits += switched;
         unit.xbar.stats.cycles += layout.total_bits() as u64;
 
-        // --- ECC + compute + readback ---------------------------------
+        // §Health: mirror remapped items into their spare rows (the
+        // in-row compute covers every physical lane, so only operand
+        // placement and readback need translation).
+        if !remapped.is_empty() {
+            let mut extra_switched = 0u64;
+            let mut extra_bits = 0u64;
+            for &(l, p) in &remapped {
+                let li = l as usize;
+                if li >= layout.items {
+                    continue;
+                }
+                for ((_, col_base), (av, bv)) in copies.iter().zip(&staged) {
+                    for (operand, vals) in [(&cf.spec.a_cols, av), (&cf.spec.b_cols, bv)] {
+                        for (k, &col) in operand.iter().enumerate().take(layout.n) {
+                            let v = (vals[li] >> k) & 1 == 1;
+                            let c = (col + col_base) as usize;
+                            if unit.xbar.state().get(p as usize, c) != v {
+                                extra_switched += 1;
+                            }
+                            unit.xbar.state_mut().set(p as usize, c, v);
+                            extra_bits += 1;
+                        }
+                    }
+                }
+            }
+            unit.xbar.stats.switched_bits += extra_switched;
+            unit.xbar.stats.cycles += extra_bits;
+        }
+
+        // Proximity disturb around the written cells (translated through
+        // the row remap so disturbs land where the writes physically
+        // did); then stuck cells reassert themselves over the load.
+        apply_proximity(&mut unit.inj, &layout, &cf.spec, &remapped, unit.xbar.state_mut());
+        if let Some(h) = unit.health.as_ref() {
+            h.clamp(unit.xbar.state_mut());
+        }
+
+        // --- compute + ECC re-sync + aging + readback -----------------
         let silent = self.cfg.errors.is_silent();
-        let (run, ecc_cycles, ecc_corrected) =
-            Self::ecc_and_compute(unit, silent, |x, inj| cf.tmr.run(x, inj))?;
-        let values = gather_results(unit.xbar.state(), &run.output_cols, layout.items, cf.spec.result_mask())?;
+        let (run, post_ecc_cycles) =
+            Self::ecc_and_compute(unit, silent, c0, |x, inj| cf.tmr.run(x, inj))?;
+        ecc_cycles += post_ecc_cycles;
+        if let Some(h) = unit.health.as_ref() {
+            h.clamp(unit.xbar.state_mut());
+        }
+        let mask = cf.spec.result_mask();
+        let mut values = gather_results(unit.xbar.state(), &run.output_cols, layout.items, mask)?;
+        for &(l, p) in &remapped {
+            let li = l as usize;
+            if li >= layout.items {
+                continue;
+            }
+            values[li] = run.output_cols.iter().enumerate().fold(0u64, |acc, (k, &c)| {
+                acc | ((unit.xbar.get(p as usize, c as usize) as u64) << k)
+            }) & mask;
+        }
+        // §Health: endurance wear-out + serving telemetry.
+        let switched_total = unit.xbar.stats.switched_bits;
+        if let Some(h) = unit.health.as_mut() {
+            h.on_batch(switched_total, ecc_corrected);
+        }
         Ok(VectorResult {
             values,
             compute_cycles: run.cycles,
@@ -328,9 +466,18 @@ impl Mmpu {
     ) -> Result<VectorResult> {
         ensure!(a.len() == b.len(), "operand length mismatch");
         ensure!(xbar_id < self.units.len(), "bad crossbar id");
+        ensure!(
+            self.units[xbar_id].health.is_none(),
+            "the health manager requires the compiled path (exec_vector)"
+        );
         let tmr = self.cfg.policy.tmr;
         let unit = &mut self.units[xbar_id];
+        let c0 = unit.xbar.stats.cycles;
         let layout = BatchLayout::resolve(tmr, unit.xbar.rows(), a.len(), func)?;
+
+        // ECC verify-before (same position in the stream as the word
+        // path: before marshalling, consuming no injector draws).
+        let (mut ecc_cycles, ecc_corrected) = Self::ecc_verify_before(unit);
 
         let mut flips: Vec<usize> = Vec::new();
         unit.inj.write_fails(layout.total_bits(), |i| flips.push(i));
@@ -361,12 +508,14 @@ impl Mmpu {
                 write(&mut unit.xbar, i, &func.b_cols, base, bv);
             }
         }
+        apply_proximity(&mut unit.inj, &layout, func, &[], unit.xbar.state_mut());
 
         let silent = self.cfg.errors.is_silent();
         let engine = TmrEngine::new(tmr);
         let prog = func.prog.clone();
-        let (run, ecc_cycles, ecc_corrected) =
-            Self::ecc_and_compute(unit, silent, move |x, inj| engine.execute(x, &prog, inj))?;
+        let (run, post_ecc_cycles) =
+            Self::ecc_and_compute(unit, silent, c0, move |x, inj| engine.execute(x, &prog, inj))?;
+        ecc_cycles += post_ecc_cycles;
         let mask = func.result_mask();
         let values = (0..layout.items)
             .map(|i| {
@@ -383,23 +532,38 @@ impl Mmpu {
         })
     }
 
-    /// Shared middle phase: ECC verify-before, TMR compute, ECC
-    /// update-after — identical for the word and per-bit paths.
+    /// ECC verify-before: detect and repair drift accumulated since the
+    /// last batch's parity re-sync. Parities are kept consistent with
+    /// the array at every batch end (post-compute re-sync) and at ECC
+    /// install time, so no re-encode happens here — encoding first
+    /// would absorb the very drift this pass exists to catch, making
+    /// serving-path correction (and its telemetry) a permanent no-op.
+    /// Returns `(ecc cycles, corrected bits)`.
+    fn ecc_verify_before(unit: &mut XbarUnit) -> (u64, u64) {
+        match unit.ecc.as_mut() {
+            Some(ecc) => {
+                let v0 = ecc.stats.verify_cycles + ecc.stats.update_cycles;
+                let outcome = ecc.correct(unit.xbar.state_mut());
+                let cycles = ecc.stats.verify_cycles + ecc.stats.update_cycles - v0;
+                (cycles, outcome.corrected_bits.len() as u64)
+            }
+            None => (0, 0),
+        }
+    }
+
+    /// Shared middle phase: TMR compute, ECC update-after (parity
+    /// re-sync), then time-domain aging (retention + abrupt events) over
+    /// the batch's wall-clock span — identical for the word and per-bit
+    /// paths. `start_cycles` is the crossbar cycle count at the start of
+    /// the batch (marshalling included in the elapsed time). Returns the
+    /// run and the ECC extension cycles of the update phase.
     fn ecc_and_compute(
         unit: &mut XbarUnit,
         silent: bool,
+        start_cycles: u64,
         compute: impl FnOnce(&mut Crossbar, Option<&mut Injector>) -> Result<TmrRun>,
-    ) -> Result<(TmrRun, u64, u64)> {
-        // --- ECC: encode freshly-written inputs, verify before compute -
+    ) -> Result<(TmrRun, u64)> {
         let mut ecc_cycles = 0;
-        let mut ecc_corrected = 0;
-        if let Some(ecc) = unit.ecc.as_mut() {
-            ecc.encode(unit.xbar.state());
-            let v0 = ecc.stats.verify_cycles + ecc.stats.update_cycles;
-            let outcome = ecc.correct(unit.xbar.state_mut());
-            ecc_corrected += outcome.corrected_bits.len() as u64;
-            ecc_cycles += ecc.stats.verify_cycles + ecc.stats.update_cycles - v0;
-        }
 
         // --- compute under TMR ---------------------------------------
         let inj = if silent { None } else { Some(&mut unit.inj) };
@@ -418,7 +582,21 @@ impl Mmpu {
             ecc.encode(unit.xbar.state());
             ecc_cycles += ecc.update_cost(run.output_cols.len() as u64);
         }
-        Ok((run, ecc_cycles, ecc_corrected))
+
+        // --- time-domain aging over the batch's wall-clock span -------
+        // Retention drift and abrupt events accrue while the batch sits
+        // in the array: dt = elapsed cycles x device cycle time. Flips
+        // land after the post-compute ECC re-sync, so the next scrub
+        // (not this batch's bookkeeping) observes them — and before
+        // readback, so long-lived batches can corrupt their own results.
+        let cycles = unit.xbar.stats.cycles - start_cycles;
+        let dt = cycles as f64 * unit.xbar.device.cycle_ns * 1e-9;
+        let cols = unit.xbar.cols();
+        let bits = unit.xbar.rows() * cols;
+        let state = unit.xbar.state_mut();
+        unit.inj.retention(bits, dt, |i| state.flip(i / cols, i % cols));
+        unit.inj.abrupt(bits, dt, |i| state.flip(i / cols, i % cols));
+        Ok((run, ecc_cycles))
     }
 
     /// Periodic ECC scrub of a crossbar (correct accumulated indirect
@@ -449,6 +627,70 @@ impl Mmpu {
         let state = unit.xbar.state_mut();
         unit.inj.retention(bits, dt, |i| state.flip(i / cols, i % cols));
         unit.inj.abrupt(bits, dt, |i| state.flip(i / cols, i % cols));
+    }
+
+    /// Install an online health manager on every crossbar (§Health).
+    /// Each unit gets an independent fault-sampling stream.
+    pub fn enable_health(&mut self, cfg: HealthConfig) {
+        let (rows, cols) = (self.cfg.rows, self.cfg.cols);
+        for (i, unit) in self.units.iter_mut().enumerate() {
+            let seed = cfg.seed ^ (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+            unit.health = Some(CrossbarHealth::new(rows, cols, cfg.clone(), seed));
+        }
+    }
+
+    pub fn health(&self, xbar_id: usize) -> Option<&CrossbarHealth> {
+        self.units[xbar_id].health.as_ref()
+    }
+
+    pub fn health_mut(&mut self, xbar_id: usize) -> Option<&mut CrossbarHealth> {
+        self.units[xbar_id].health.as_mut()
+    }
+
+    /// Whether the crossbar's scrub interval has elapsed.
+    pub fn scrub_due(&self, xbar_id: usize) -> bool {
+        self.units[xbar_id].health.as_ref().is_some_and(|h| h.scrub_due())
+    }
+
+    /// Run one health scrub pass (ECC drift repair + march test +
+    /// spare-row remapping) on a crossbar. `None` without a manager.
+    pub fn health_scrub(&mut self, xbar_id: usize) -> Option<ScrubReport> {
+        let XbarUnit { xbar, ecc, health, .. } = &mut self.units[xbar_id];
+        health.as_mut().map(|h| h.scrub(xbar.state_mut(), ecc.as_mut()))
+    }
+
+    /// Switch the reliability policy at runtime (adaptive escalation).
+    /// Rebuilds the per-crossbar ECC extensions when the ECC setting
+    /// changes; compiled functions for the new TMR mode come from the
+    /// plan cache on the next execution.
+    pub fn set_policy(&mut self, policy: ReliabilityPolicy) -> Result<()> {
+        if let Some(m) = policy.ecc_m {
+            ensure!(
+                m >= 2 && self.cfg.rows % m == 0 && self.cfg.cols % m == 0,
+                "ecc m={m} must divide the {}x{} crossbar",
+                self.cfg.rows,
+                self.cfg.cols
+            );
+        }
+        let old = self.cfg.policy;
+        self.cfg.policy = policy;
+        if old.ecc_m != policy.ecc_m {
+            let (rows, cols) = (self.cfg.rows, self.cfg.cols);
+            for unit in &mut self.units {
+                unit.ecc = match policy.ecc_m {
+                    Some(m) => {
+                        // Freshly installed ECC must start consistent
+                        // with the array: verify-before trusts the
+                        // parities (see `ecc_verify_before`).
+                        let mut ecc = DiagonalEcc::new(rows, cols, m);
+                        ecc.encode(unit.xbar.state());
+                        Some(ecc)
+                    }
+                    None => None,
+                };
+            }
+        }
+        Ok(())
     }
 }
 
@@ -717,6 +959,122 @@ mod tests {
         .unwrap();
         let wrong = r.values.iter().filter(|&&v| v != 63).count();
         assert!(wrong > 0, "p_gate=1e-3 over ~800 gates must corrupt something");
+    }
+
+    #[test]
+    fn proximity_disturb_fires_on_serving_path() {
+        // Satellite audit: p_proximity must be exercised by exec_vector,
+        // not only by the raw injector.
+        let cfg = MmpuConfig {
+            rows: 32,
+            cols: 64,
+            num_crossbars: 1,
+            policy: ReliabilityPolicy::none(),
+            errors: ErrorModel { p_proximity: 0.2, ..ErrorModel::none() },
+            seed: 77,
+        };
+        let mut mmpu = Mmpu::new(cfg);
+        let func = FunctionSpec::build(FunctionKind::Add(8));
+        let a: Vec<u64> = (0..32).collect();
+        let b: Vec<u64> = (0..32).map(|i| 255 - i).collect();
+        mmpu.exec_vector(0, &func, &a, &b).unwrap();
+        let hits = mmpu.injector_counters(0).proximity_flips;
+        // 32 items x 16 operand bits x 2 neighbor sites at p=0.2.
+        assert!(hits > 60, "proximity must fire on the serving path: {hits}");
+    }
+
+    #[test]
+    fn retention_and_abrupt_fire_on_serving_path() {
+        // Satellite audit: the time-domain classes age the array over the
+        // batch's cycles x cycle_ns span during exec_vector.
+        let errors = ErrorModel {
+            lambda_retention: 1e6, // ~0.26/bit over a ~300-cycle batch
+            lambda_abrupt: 1e8,    // ~30 strikes over the same span
+            ..ErrorModel::none()
+        };
+        let cfg = MmpuConfig {
+            rows: 32,
+            cols: 64,
+            num_crossbars: 1,
+            policy: ReliabilityPolicy::none(),
+            errors,
+            seed: 78,
+        };
+        let mut mmpu = Mmpu::new(cfg);
+        let func = FunctionSpec::build(FunctionKind::Add(8));
+        let a: Vec<u64> = vec![1; 16];
+        let b: Vec<u64> = vec![2; 16];
+        mmpu.exec_vector(0, &func, &a, &b).unwrap();
+        let c = mmpu.injector_counters(0);
+        assert!(c.retention_flips > 0, "retention must fire: {c:?}");
+        assert!(c.abrupt_flips > 0, "abrupt must fire: {c:?}");
+    }
+
+    #[test]
+    fn stuck_cell_corrupts_results_until_remapped() {
+        use crate::health::{HealthConfig, WearModel};
+        let cfg = MmpuConfig {
+            rows: 32,
+            cols: 64,
+            num_crossbars: 1,
+            policy: ReliabilityPolicy::none(),
+            errors: ErrorModel::none(),
+            seed: 9,
+        };
+        let func = FunctionSpec::build(FunctionKind::Add(8));
+        let out0 = func.prog.output_cols[0];
+        let a: Vec<u64> = (0..16).collect();
+        let b: Vec<u64> = (0..16).map(|i| 2 * i).collect();
+        let hcfg = HealthConfig {
+            wear: WearModel::immortal(),
+            spare_rows: 4,
+            scrub_rows_per_pass: 32,
+            ..Default::default()
+        };
+        let mut mmpu = Mmpu::new(cfg);
+        mmpu.enable_health(hcfg);
+        // Freeze item 3's low result bit to the wrong value.
+        let want3 = a[3] + b[3];
+        mmpu.health_mut(0).unwrap().inject_stuck(3, out0, (want3 & 1) == 0);
+        let r = mmpu.exec_vector(0, &func, &a, &b).unwrap();
+        assert_ne!(r.values[3], want3, "stuck output bit must corrupt");
+        // A scrub pass detects the fault and remaps row 3 to a spare.
+        let rep = mmpu.health_scrub(0).unwrap();
+        assert!(rep.detected >= 1 && rep.remapped >= 1, "{rep:?}");
+        let r = mmpu.exec_vector(0, &func, &a, &b).unwrap();
+        for i in 0..16 {
+            assert_eq!(r.values[i], a[i] + b[i], "post-remap item {i}");
+        }
+        let s = mmpu.health(0).unwrap().stats();
+        assert_eq!(s.remapped_rows, 1);
+        assert!(s.spares_left < 4);
+    }
+
+    #[test]
+    fn set_policy_swaps_ecc_and_tmr_at_runtime() {
+        let cfg = MmpuConfig {
+            rows: 32,
+            cols: 512,
+            num_crossbars: 1,
+            policy: ReliabilityPolicy::none(),
+            errors: ErrorModel::none(),
+            seed: 10,
+        };
+        let mut mmpu = Mmpu::new(cfg);
+        let func = FunctionSpec::build(FunctionKind::Add(8));
+        let a: Vec<u64> = (0..8).collect();
+        let b: Vec<u64> = (0..8).map(|i| i + 1).collect();
+        let r = mmpu.exec_vector(0, &func, &a, &b).unwrap();
+        assert_eq!(r.ecc_cycles, 0);
+        mmpu.set_policy(ReliabilityPolicy { ecc_m: Some(16), tmr: TmrMode::Serial }).unwrap();
+        let r = mmpu.exec_vector(0, &func, &a, &b).unwrap();
+        assert!(r.ecc_cycles > 0, "escalated policy must engage ECC");
+        for i in 0..8 {
+            assert_eq!(r.values[i], a[i] + b[i]);
+        }
+        // Invalid block size is rejected and leaves the policy alone.
+        assert!(mmpu.set_policy(ReliabilityPolicy { ecc_m: Some(7), tmr: TmrMode::Off }).is_err());
+        assert_eq!(mmpu.config().policy.ecc_m, Some(16));
     }
 
     #[test]

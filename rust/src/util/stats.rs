@@ -29,6 +29,23 @@ pub fn one_minus_pow(p: f64, n: f64) -> f64 {
     -x.exp_m1()
 }
 
+/// Complementary error function (A&S 7.1.26, |eps| < 1.5e-7).
+pub fn erfc(x: f64) -> f64 {
+    if x < 0.0 {
+        return 2.0 - erfc(-x);
+    }
+    let t = 1.0 / (1.0 + 0.3275911 * x);
+    let poly = t
+        * (0.254829592
+            + t * (-0.284496736 + t * (1.421413741 + t * (-1.453152027 + t * 1.061405429))));
+    poly * (-x * x).exp()
+}
+
+/// Standard normal CDF Phi(x) (used by the lognormal endurance model).
+pub fn normal_cdf(x: f64) -> f64 {
+    0.5 * erfc(-x / std::f64::consts::SQRT_2)
+}
+
 /// Binomial tail P[X >= 2] for X ~ Bin(n, p), numerically stable for tiny p.
 pub fn prob_at_least_two(n: f64, p: f64) -> f64 {
     if p <= 0.0 {
@@ -121,6 +138,17 @@ mod tests {
         // Paper Fig 4-bottom operating point: p_mask*p_mult with M=612e6.
         let v = one_minus_pow(3e-4 * 7.3e-6, 612e6);
         assert!(v > 0.5 && v < 1.0, "v={v}");
+    }
+
+    #[test]
+    fn erfc_and_normal_cdf_reference_points() {
+        assert!((erfc(0.0) - 1.0).abs() < 1e-6);
+        assert!((erfc(1.0) - 0.157299).abs() < 1e-5);
+        assert!((erfc(-1.0) - 1.842701).abs() < 1e-5);
+        assert!((normal_cdf(0.0) - 0.5).abs() < 1e-7);
+        assert!((normal_cdf(1.96) - 0.975).abs() < 1e-3);
+        assert!(normal_cdf(-8.0) < 1e-10);
+        assert!(normal_cdf(8.0) > 1.0 - 1e-10);
     }
 
     #[test]

@@ -65,21 +65,9 @@ impl Default for DeviceModel {
     }
 }
 
-/// Gaussian tail Q(x) via Abramowitz-Stegun erfc approximation.
+/// Gaussian tail Q(x) via the shared Abramowitz-Stegun erfc.
 fn q_function(x: f64) -> f64 {
-    0.5 * erfc(x / std::f64::consts::SQRT_2)
-}
-
-fn erfc(x: f64) -> f64 {
-    // A&S 7.1.26, |eps| < 1.5e-7; erfc(-x) = 2 - erfc(x).
-    if x < 0.0 {
-        return 2.0 - erfc(-x);
-    }
-    let t = 1.0 / (1.0 + 0.3275911 * x);
-    let poly = t
-        * (0.254829592
-            + t * (-0.284496736 + t * (1.421413741 + t * (-1.453152027 + t * 1.061405429))));
-    poly * (-x * x).exp()
+    0.5 * crate::util::stats::erfc(x / std::f64::consts::SQRT_2)
 }
 
 #[cfg(test)]
@@ -94,11 +82,10 @@ mod tests {
     }
 
     #[test]
-    fn erfc_reference_points() {
-        assert!((erfc(0.0) - 1.0).abs() < 1e-6);
-        assert!((erfc(1.0) - 0.157299).abs() < 1e-5);
-        assert!((erfc(-1.0) - 1.842701).abs() < 1e-5);
-        assert!(erfc(5.0) < 1e-10);
+    fn q_function_reference_points() {
+        assert!((q_function(0.0) - 0.5).abs() < 1e-6);
+        assert!(q_function(6.0) < 1e-8);
+        assert!((q_function(-6.0) - 1.0).abs() < 1e-8);
     }
 
     #[test]

@@ -1,10 +1,12 @@
 //! Integration: the coordinator under load — correctness, batching
-//! efficiency, backpressure, reliability policies on the request path.
+//! efficiency, backpressure, reliability policies on the request path,
+//! shutdown draining, and §Health retirement/redistribution.
 
 use std::time::Duration;
 
 use remus::coordinator::{Coordinator, CoordinatorConfig};
 use remus::errs::ErrorModel;
+use remus::health::{HealthConfig, WearModel};
 use remus::mmpu::{FunctionKind, ReliabilityPolicy};
 use remus::tmr::TmrMode;
 
@@ -89,6 +91,145 @@ fn backpressure_does_not_deadlock_or_drop() {
         got += 1;
     }
     assert_eq!(got, n);
+    coord.shutdown();
+}
+
+#[test]
+fn shutdown_drains_inflight_batches_to_completion() {
+    // Requests still pending in the batcher at shutdown must drain to the
+    // workers and produce real values — not hangs, not dropped channels.
+    let coord = Coordinator::start(CoordinatorConfig {
+        workers: 2,
+        rows: 64,
+        cols: 256,
+        max_batch: 64,                     // never fills
+        max_wait: Duration::from_secs(60), // never expires
+        ..Default::default()
+    })
+    .unwrap();
+    let rxs: Vec<_> = (0..24u64).map(|i| (i, coord.submit(FunctionKind::Add(8), i, i))).collect();
+    coord.shutdown();
+    for (i, rx) in rxs {
+        let r = rx.recv_timeout(Duration::from_secs(5)).expect("drained result");
+        assert!(r.is_ok(), "request {i}: {:?}", r.error);
+        assert_eq!(r.value, 2 * i, "request {i}");
+    }
+}
+
+#[test]
+fn no_workers_yields_explicit_errors_not_hangs() {
+    // Degenerate fleet (everything retired / zero workers): every request
+    // must come back with RequestResult::error, never a dropped channel.
+    let coord = Coordinator::start(CoordinatorConfig {
+        workers: 0,
+        rows: 16,
+        cols: 256,
+        max_batch: 4,
+        max_wait: Duration::from_micros(50),
+        ..Default::default()
+    })
+    .unwrap();
+    let rxs: Vec<_> = (0..12u64).map(|i| coord.submit(FunctionKind::Add(8), i, 1)).collect();
+    for rx in rxs {
+        let r = rx.recv_timeout(Duration::from_secs(5)).expect("explicit error result");
+        assert!(!r.is_ok());
+        assert!(r.error.as_deref().unwrap().contains("no healthy workers"), "{:?}", r.error);
+    }
+    let m = coord.metrics();
+    assert_eq!(m.failed, 12);
+    assert_eq!(m.completed, 0);
+    coord.shutdown();
+}
+
+#[test]
+fn wear_out_retires_crossbar_and_errors_explicitly() {
+    // §Health end-to-end: an absurdly low endurance budget kills the
+    // (single) worker's crossbar after the first batch; the march scrub
+    // detects the carnage, the worker retires, and later requests get
+    // explicit "no healthy workers" errors instead of wrong values.
+    let coord = Coordinator::start(CoordinatorConfig {
+        workers: 1,
+        rows: 16,
+        cols: 256,
+        max_batch: 1,
+        max_wait: Duration::from_micros(10),
+        health: Some(HealthConfig {
+            wear: WearModel::accelerated(1e-6), // dead after any switching
+            spare_rows: 2,
+            scrub_interval: 1,
+            scrub_rows_per_pass: 16,
+            retire_stuck_cells: 8,
+            ..Default::default()
+        }),
+        ..Default::default()
+    })
+    .unwrap();
+    // First request executes before any wear is applied.
+    let r = coord
+        .submit(FunctionKind::Add(8), 20, 22)
+        .recv_timeout(Duration::from_secs(10))
+        .expect("first result");
+    assert!(r.is_ok());
+    assert_eq!(r.value, 42);
+    // Subsequent requests hit the retired fleet; all must resolve, and
+    // at least one must carry the explicit retirement error.
+    let mut errors = 0;
+    for i in 0..50u64 {
+        let r = coord
+            .submit(FunctionKind::Add(8), i, 1)
+            .recv_timeout(Duration::from_secs(10))
+            .expect("resolved result (value or error), never a hang");
+        if !r.is_ok() {
+            errors += 1;
+        }
+    }
+    assert!(errors > 0, "retirement must surface as explicit errors");
+    let m = coord.metrics();
+    assert_eq!(m.retired_workers(), 1, "worker health must report retirement");
+    let wh = &m.worker_health[0];
+    assert!(wh.stuck_detected >= 8, "march scrub must detect the dead cells");
+    coord.shutdown();
+}
+
+#[test]
+fn health_on_clean_hardware_is_transparent() {
+    // A healthy fleet with the manager enabled must behave exactly like
+    // the plain fleet: correct results, no retirement, no escalation.
+    let coord = Coordinator::start(CoordinatorConfig {
+        workers: 2,
+        rows: 32,
+        cols: 256,
+        max_batch: 16,
+        max_wait: Duration::from_micros(100),
+        health: Some(HealthConfig {
+            wear: WearModel::immortal(),
+            spare_rows: 4,
+            scrub_interval: 4,
+            ..Default::default()
+        }),
+        ..Default::default()
+    })
+    .unwrap();
+    let n = 256u64;
+    let rxs: Vec<_> =
+        (0..n).map(|i| (i, coord.submit(FunctionKind::Mul(8), i % 251, (i * 3) % 251))).collect();
+    for (i, rx) in rxs {
+        let r = rx.recv_timeout(Duration::from_secs(30)).expect("response");
+        assert!(r.is_ok(), "request {i}: {:?}", r.error);
+        assert_eq!(r.value, (i % 251) * ((i * 3) % 251), "request {i}");
+    }
+    let m = coord.metrics();
+    assert_eq!(m.completed, n);
+    assert_eq!(m.retired_workers(), 0);
+    for wh in &m.worker_health {
+        assert_eq!(wh.stuck_detected, 0);
+        assert_eq!(wh.remapped_rows, 0);
+        assert_eq!(wh.policy_level, 0);
+    }
+    assert!(
+        m.worker_health.iter().any(|wh| wh.scrubs > 0),
+        "scrubbing must have run in the background"
+    );
     coord.shutdown();
 }
 

@@ -1,0 +1,145 @@
+//! §Health properties:
+//!
+//! 1. A scrub pass restores an ECC-clean crossbar state: for any random
+//!    state and any drift placement with at most one flip per ECC block,
+//!    `CrossbarHealth::scrub` returns the array to its exact pre-drift
+//!    contents (and the march test itself is transparent).
+//! 2. Spare-row remapping is data-preserving under random fault
+//!    placement: after detection + remapping, vectored executions return
+//!    exact results even though ground-truth stuck cells litter the data
+//!    rows the batch would otherwise use.
+
+use remus::ecc::DiagonalEcc;
+use remus::errs::ErrorModel;
+use remus::health::{CrossbarHealth, HealthConfig, WearModel};
+use remus::mmpu::{FunctionKind, FunctionSpec, Mmpu, MmpuConfig, ReliabilityPolicy};
+use remus::testutil::prop::Cases;
+use remus::util::bitmat::BitMatrix;
+use remus::util::rng::Pcg64;
+
+fn immortal_cfg(spares: usize, rows_per_pass: usize) -> HealthConfig {
+    HealthConfig {
+        wear: WearModel::immortal(),
+        spare_rows: spares,
+        scrub_interval: 1,
+        scrub_rows_per_pass: rows_per_pass,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn prop_scrub_restores_ecc_clean_state() {
+    Cases::new(32).run(|g| {
+        let (rows, cols, m) = (32usize, 64usize, 8usize);
+        let mut rng = Pcg64::new(g.u64(), 0);
+        let golden = BitMatrix::from_fn(rows, cols, |_, _| rng.bernoulli(0.5));
+        let mut state = golden.clone();
+        let mut ecc = DiagonalEcc::new(rows, cols, m);
+        ecc.encode(&state);
+        // Drift: at most one flip per ECC block, in a random subset of
+        // blocks — the single-error regime the code corrects exactly.
+        let mut flips = 0;
+        for bi in 0..rows / m {
+            for bj in 0..cols / m {
+                if g.bool() {
+                    let r = bi * m + g.usize_in(0..=m - 1);
+                    let c = bj * m + g.usize_in(0..=m - 1);
+                    state.flip(r, c);
+                    flips += 1;
+                }
+            }
+        }
+        let mut h = CrossbarHealth::new(rows, cols, immortal_cfg(4, rows), g.u64());
+        let rep = h.scrub(&mut state, Some(&mut ecc));
+        assert_eq!(rep.corrected, flips, "every single-error block repaired");
+        assert_eq!(rep.uncorrectable, 0);
+        assert_eq!(rep.detected, 0, "no stuck cells -> no detections");
+        assert_eq!(state, golden, "scrub (ECC + march) must be transparent");
+        assert!(ecc.verify_all(&state).is_empty(), "ECC-clean after scrub");
+    });
+}
+
+#[test]
+fn prop_spare_row_remap_is_data_preserving() {
+    Cases::new(24).run(|g| {
+        let rows = 32usize;
+        let cols = 256usize;
+        let spares = 6usize;
+        let cfg = MmpuConfig {
+            rows,
+            cols,
+            num_crossbars: 1,
+            policy: ReliabilityPolicy::none(),
+            errors: ErrorModel::none(),
+            seed: g.u64(),
+        };
+        let mut mmpu = Mmpu::new(cfg);
+        mmpu.enable_health(immortal_cfg(spares, rows));
+        // Random persistent faults: up to `spares` distinct data rows,
+        // 1..3 stuck cells each, anywhere in the function's column span.
+        let func = FunctionSpec::build(FunctionKind::Add(8));
+        let width = func.prog.width as usize;
+        let n_rows = g.usize_in(1..=spares);
+        let mut bad_rows = Vec::new();
+        {
+            let h = mmpu.health_mut(0).unwrap();
+            for _ in 0..n_rows {
+                let r = g.usize_in(0..=rows - spares - 1) as u32;
+                for _ in 0..g.usize_in(1..=3) {
+                    let c = g.usize_in(0..=width - 1) as u32;
+                    h.inject_stuck(r, c, g.bool());
+                }
+                bad_rows.push(r);
+            }
+        }
+        // One full-array scrub detects every fault and remaps the rows.
+        let rep = mmpu.health_scrub(0).unwrap();
+        bad_rows.sort_unstable();
+        bad_rows.dedup();
+        assert!(rep.detected >= bad_rows.len() as u64, "{rep:?}");
+        assert_eq!(rep.remapped, bad_rows.len() as u64, "{rep:?}");
+        assert!(!rep.exhausted);
+        // Data-preservation: a full-capacity batch executes exactly.
+        let items = rows - spares;
+        let a: Vec<u64> = (0..items as u64).map(|i| (i * 37) % 256).collect();
+        let b: Vec<u64> = (0..items as u64).map(|i| (i * 91 + 5) % 256).collect();
+        let r = mmpu.exec_vector(0, &func, &a, &b).unwrap();
+        for i in 0..items {
+            assert_eq!(r.values[i], a[i] + b[i], "item {i} after remap");
+        }
+        // And again (remap must be stable across batches).
+        let r = mmpu.exec_vector(0, &func, &b, &a).unwrap();
+        for i in 0..items {
+            assert_eq!(r.values[i], a[i] + b[i], "item {i} second batch");
+        }
+    });
+}
+
+#[test]
+fn prop_wear_population_is_monotone_and_calibrated() {
+    // The statistical wear process: dead-cell population follows the
+    // lognormal CDF of the mean per-cell switch count, never shrinks,
+    // and lands near the expectation for a large array.
+    Cases::new(8).run(|g| {
+        let (rows, cols) = (64usize, 64usize);
+        let cells = (rows * cols) as f64;
+        let wear = WearModel::accelerated(1000.0);
+        let hcfg = HealthConfig { wear, ..Default::default() };
+        let mut h = CrossbarHealth::new(rows, cols, hcfg, g.u64());
+        let mut last = 0;
+        for step in 1..=8u64 {
+            // on_batch consumes cumulative switched_bits.
+            h.on_batch(step * 500 * (rows * cols) as u64 / 8, 0);
+            let now = h.stats().stuck_cells_true;
+            assert!(now >= last, "wear population must be monotone");
+            last = now;
+        }
+        // After 500 mean switches vs a 1000-switch median budget:
+        let expect = cells * wear.dead_fraction(500.0);
+        let got = last as f64;
+        assert!(
+            (got - expect).abs() <= expect * 0.05 + 2.0,
+            "wear calibration: got {got}, expect {expect}"
+        );
+    });
+}

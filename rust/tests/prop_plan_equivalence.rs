@@ -16,16 +16,18 @@ use remus::tmr::{TmrEngine, TmrMode};
 use remus::util::rng::Pcg64;
 use remus::xbar::{Crossbar, Gate, Partitions};
 
-/// Every error class that fires on the gate stream, at rates high enough
-/// to exercise the injection plumbing in a few hundred lanes.
+/// Every error class at rates high enough to exercise the injection
+/// plumbing in a few hundred lanes. The time-domain and proximity
+/// classes fire on the controller (`exec_vector`) paths; the crossbar
+/// paths consume no RNG for them, so one model serves every property.
 fn noisy_model() -> ErrorModel {
     ErrorModel {
         p_gate: 2e-2,
         p_write: 2e-2,
         p_input: 1e-2,
-        lambda_retention: 0.0,
-        p_proximity: 0.0,
-        lambda_abrupt: 0.0,
+        lambda_retention: 2e4, // ~1e-2/bit over a typical microsecond batch
+        p_proximity: 1e-2,
+        lambda_abrupt: 2e5, // a strike every few batches
     }
 }
 
