@@ -2,20 +2,65 @@
 //! mixed request kinds, dynamic batching, least-loaded routing, latency
 //! percentiles, with and without reliability on the request path.
 //!
+//! The load generator is [`Submitter`]-generic: pass `--shards
+//! host:port,host:port` (endpoints running `remus fabric-serve`) and the
+//! same load drives a sharded fabric fleet through the consistent-hash
+//! router instead of an in-process coordinator.
+//!
 //! ```bash
 //! cargo run --release --example serve -- --requests 8192 --workers 4
+//! cargo run --release --example serve -- --shards 127.0.0.1:4870,127.0.0.1:4871
 //! ```
 
 use anyhow::Result;
-use remus::coordinator::{Coordinator, CoordinatorConfig};
+use remus::coordinator::{Coordinator, CoordinatorConfig, Submitter};
 use remus::errs::ErrorModel;
+use remus::fabric::Router;
 use remus::mmpu::{FunctionKind, ReliabilityPolicy};
 use remus::tmr::TmrMode;
 use remus::util::cli::Args;
 use remus::util::table::Table;
 use std::time::{Duration, Instant};
 
-fn run_load(
+fn run_load(label: &str, sub: &dyn Submitter, requests: u64, t: &mut Table) -> Result<()> {
+    let kinds = [FunctionKind::Mul(16), FunctionKind::Add(16), FunctionKind::Xor(16)];
+    let t0 = Instant::now();
+    let rxs: Vec<_> = (0..requests)
+        .map(|i| {
+            let kind = kinds[(i % 3) as usize];
+            (i, kind, sub.submit(kind, i % 1000, (i * 7 + 3) % 1000))
+        })
+        .collect();
+    let mut correct = 0u64;
+    let mut errors = 0u64;
+    for (i, kind, rx) in rxs {
+        let r = rx.recv()?;
+        if !r.is_ok() {
+            // Infrastructure error results are not wrong *values* — keep
+            // them out of the corruption count this demo is about.
+            errors += 1;
+            continue;
+        }
+        let (a, b) = (i % 1000, (i * 7 + 3) % 1000);
+        correct += (r.value == kind.reference(a, b)) as u64;
+    }
+    if errors > 0 {
+        eprintln!("[{label}] {errors} requests returned error results");
+    }
+    let dt = t0.elapsed();
+    let m = sub.metrics();
+    t.row(&[
+        label.into(),
+        format!("{:.0}", requests as f64 / dt.as_secs_f64()),
+        format!("{}/{}", correct, requests),
+        format!("{:.1}", m.mean_batch_size()),
+        m.latency_percentile_us(50.0).to_string(),
+        m.latency_percentile_us(99.0).to_string(),
+    ]);
+    Ok(())
+}
+
+fn run_coordinator(
     label: &str,
     policy: ReliabilityPolicy,
     errors: ErrorModel,
@@ -33,45 +78,7 @@ fn run_load(
         max_wait: Duration::from_micros(300),
         ..Default::default()
     })?;
-    let kinds = [FunctionKind::Mul(16), FunctionKind::Add(16), FunctionKind::Xor(16)];
-    let t0 = Instant::now();
-    let rxs: Vec<_> = (0..requests)
-        .map(|i| {
-            let kind = kinds[(i % 3) as usize];
-            (i, kind, coord.submit(kind, i % 1000, (i * 7 + 3) % 1000))
-        })
-        .collect();
-    let mut correct = 0u64;
-    let mut errors = 0u64;
-    for (i, kind, rx) in rxs {
-        let r = rx.recv()?;
-        if !r.is_ok() {
-            // Infrastructure error results are not wrong *values* — keep
-            // them out of the corruption count this demo is about.
-            errors += 1;
-            continue;
-        }
-        let (a, b) = (i % 1000, (i * 7 + 3) % 1000);
-        let want = match kind {
-            FunctionKind::Mul(_) => a * b,
-            FunctionKind::Add(_) => a + b,
-            _ => a ^ b,
-        };
-        correct += (r.value == want) as u64;
-    }
-    if errors > 0 {
-        eprintln!("[{label}] {errors} requests returned error results");
-    }
-    let dt = t0.elapsed();
-    let m = coord.metrics();
-    t.row(&[
-        label.into(),
-        format!("{:.0}", requests as f64 / dt.as_secs_f64()),
-        format!("{}/{}", correct, requests),
-        format!("{:.1}", m.mean_batch_size()),
-        m.latency_percentile_us(50.0).to_string(),
-        m.latency_percentile_us(99.0).to_string(),
-    ]);
+    run_load(label, &coord, requests, t)?;
     coord.shutdown();
     Ok(())
 }
@@ -80,12 +87,22 @@ fn main() -> Result<()> {
     let args = Args::from_env();
     let requests = args.get_or("requests", 8192u64);
     let workers = args.get_or("workers", 4usize);
-    println!("open-loop load: {requests} mixed requests, {workers} workers\n");
     let mut t = Table::new(
         "coordinator under load",
         &["policy", "req/s", "correct", "mean_batch", "p50_us", "p99_us"],
     );
-    run_load(
+    // Remote mode: the identical load through the fabric router.
+    if let Some(shards) = args.get("shards") {
+        let addrs: Vec<String> = shards.split(',').map(str::to_string).collect();
+        println!("open-loop load: {requests} mixed requests over {} shards\n", addrs.len());
+        let router = Router::connect(&addrs)?;
+        run_load("fabric (remote policy)", &router, requests, &mut t)?;
+        router.shutdown();
+        t.print();
+        return Ok(());
+    }
+    println!("open-loop load: {requests} mixed requests, {workers} workers\n");
+    run_coordinator(
         "unprotected",
         ReliabilityPolicy::none(),
         ErrorModel::none(),
@@ -93,7 +110,7 @@ fn main() -> Result<()> {
         workers,
         &mut t,
     )?;
-    run_load(
+    run_coordinator(
         "p=1e-5, no protection",
         ReliabilityPolicy::none(),
         ErrorModel::direct_only(1e-5),
@@ -101,7 +118,7 @@ fn main() -> Result<()> {
         workers,
         &mut t,
     )?;
-    run_load(
+    run_coordinator(
         "p=1e-5, serial TMR",
         ReliabilityPolicy { ecc_m: None, tmr: TmrMode::Serial },
         ErrorModel::direct_only(1e-5),

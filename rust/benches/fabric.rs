@@ -1,0 +1,91 @@
+//! §Scale — sharded fabric serving over loopback TCP (EXPERIMENTS.md
+//! §Scale): the same open-loop request stream through (a) one
+//! in-process coordinator and (b) a consistent-hash router over two
+//! fabric server shards on loopback sockets. The delta between the two
+//! rows is the wire + framing + fan-out cost; the per-shard row count
+//! scales with the shard fleet.
+//!
+//! Writes `BENCH_fabric.json` for CI archival.
+
+use std::time::Duration;
+
+use remus::bench_harness::{bench, header, json_begin, json_end, throughput};
+use remus::coordinator::{Coordinator, CoordinatorConfig, Submitter};
+use remus::fabric::{FabricServer, Router};
+use remus::mmpu::FunctionKind;
+
+const REQUESTS: u64 = 4096;
+
+fn shard_cfg(seed: u64) -> CoordinatorConfig {
+    CoordinatorConfig {
+        workers: 2,
+        rows: 64,
+        cols: 1024,
+        max_batch: 64,
+        max_wait: Duration::from_micros(300),
+        seed,
+        ..Default::default()
+    }
+}
+
+/// Mixed-kind open-loop wave; returns the count of correct values.
+/// (add8 and xor16 land on different shards of the 2-entry ring, so the
+/// fabric rows exercise both servers.)
+fn drive(sub: &dyn Submitter, requests: u64) -> u64 {
+    let rxs: Vec<_> = (0..requests)
+        .map(|i| {
+            let kind = if i % 2 == 0 { FunctionKind::Add(8) } else { FunctionKind::Xor(16) };
+            let (a, b) = (i % 251, (i * 7) % 251);
+            (kind, a, b, sub.submit(kind, a, b))
+        })
+        .collect();
+    let mut ok = 0u64;
+    for (kind, a, b, rx) in rxs {
+        let want = kind.reference(a, b);
+        if rx.recv().map(|r| r.is_ok() && r.value == want).unwrap_or(false) {
+            ok += 1;
+        }
+    }
+    ok
+}
+
+fn main() {
+    json_begin("fabric");
+    header("fabric", "EXPERIMENTS.md §Scale: sharded serving over a loopback wire");
+
+    // Baseline: the identical load on one in-process coordinator.
+    let coord = Coordinator::start(shard_cfg(1)).expect("coordinator");
+    let r = bench("in-process coordinator: 4096 add8+xor16, 2 workers", REQUESTS, || {
+        assert_eq!(drive(&coord, REQUESTS), REQUESTS);
+    });
+    throughput(&r, "req", REQUESTS as f64);
+    coord.shutdown();
+
+    // Two fabric shards on ephemeral loopback ports, one router.
+    let s1 = FabricServer::start("127.0.0.1:0", shard_cfg(1)).expect("shard 1");
+    let s2 = FabricServer::start("127.0.0.1:0", shard_cfg(2)).expect("shard 2");
+    let addrs = vec![s1.local_addr().to_string(), s2.local_addr().to_string()];
+    let router = Router::connect(&addrs).expect("router");
+    println!(
+        "  (add8 -> shard {:?}, xor16 -> shard {:?})",
+        router.shard_for(FunctionKind::Add(8)),
+        router.shard_for(FunctionKind::Xor(16))
+    );
+    let r = bench("fabric router: 4096 add8+xor16, 2 loopback shards", REQUESTS, || {
+        assert_eq!(drive(&router, REQUESTS), REQUESTS);
+    });
+    throughput(&r, "req", REQUESTS as f64);
+
+    let m = router.metrics();
+    println!(
+        "  fleet after bench: completed={} failed={} mean_batch={:.1}",
+        m.completed,
+        m.failed,
+        m.mean_batch_size()
+    );
+    router.shutdown();
+    s1.shutdown();
+    s2.shutdown();
+
+    json_end();
+}

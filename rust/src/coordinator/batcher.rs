@@ -131,6 +131,25 @@ mod tests {
     }
 
     #[test]
+    fn expiry_boundary_exactly_at_deadline() {
+        // The comparison is `>=`, not `>`: the batcher event loop wakes
+        // at now == submitted + max_wait (next_deadline returns zero
+        // remaining), and that wakeup must flush rather than spin.
+        let wait = Duration::from_millis(5);
+        let mut b = Batcher::new(100, wait);
+        let at = Instant::now();
+        b.push(FunctionKind::Add(8), pending(at));
+        let just_before = at + (wait - Duration::from_nanos(1));
+        assert!(b.flush_expired(just_before).is_empty(), "one ns early must not flush");
+        assert_eq!(b.pending(), 1);
+        assert_eq!(b.next_deadline(at + wait), Some(Duration::ZERO));
+        let flushed = b.flush_expired(at + wait);
+        assert_eq!(flushed.len(), 1, "deadline exactly at now flushes");
+        assert_eq!(flushed[0].items.len(), 1);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
     fn deadline_tracking() {
         let mut b = Batcher::new(100, Duration::from_millis(100));
         assert!(b.next_deadline(Instant::now()).is_none());

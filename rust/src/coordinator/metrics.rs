@@ -83,8 +83,10 @@ impl Metrics {
     }
 }
 
-/// Point-in-time copy for reporting.
-#[derive(Clone, Debug)]
+/// Point-in-time copy for reporting. Public fields (including the raw
+/// latency histogram) so the fabric wire codec can carry snapshots
+/// across processes and the router can merge per-shard copies.
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct MetricsSnapshot {
     pub submitted: u64,
     pub completed: u64,
@@ -95,10 +97,33 @@ pub struct MetricsSnapshot {
     pub queue_depth: u64,
     /// Per-worker health (§Health; empty when no health manager is on).
     pub worker_health: Vec<WorkerHealth>,
-    lat_bins: Vec<u64>,
+    /// Log2-scale latency histogram (bin i counts latencies in
+    /// `[2^i, 2^(i+1))` microseconds; see [`Metrics::record_latency`]).
+    pub lat_bins: Vec<u64>,
 }
 
 impl MetricsSnapshot {
+    /// Fold another snapshot into this one (fabric router: aggregate the
+    /// per-shard snapshots into one fleet view). Counters and latency
+    /// bins add; worker health concatenates, so `worker_health[i]` is no
+    /// longer a process-local worker index but the fleet-wide listing —
+    /// `retired_workers()` et al. keep working on the merged view.
+    pub fn merge(&mut self, other: &MetricsSnapshot) {
+        self.submitted += other.submitted;
+        self.completed += other.completed;
+        self.failed += other.failed;
+        self.batches += other.batches;
+        self.batched_items += other.batched_items;
+        self.busy_ns += other.busy_ns;
+        self.queue_depth += other.queue_depth;
+        if self.lat_bins.len() < other.lat_bins.len() {
+            self.lat_bins.resize(other.lat_bins.len(), 0);
+        }
+        for (i, &b) in other.lat_bins.iter().enumerate() {
+            self.lat_bins[i] += b;
+        }
+        self.worker_health.extend(other.worker_health.iter().cloned());
+    }
     /// Workers that retired their crossbar.
     pub fn retired_workers(&self) -> usize {
         self.worker_health.iter().filter(|w| w.retired).count()
@@ -155,6 +180,34 @@ mod tests {
         m.batches.store(4, Ordering::Relaxed);
         m.batched_items.store(100, Ordering::Relaxed);
         assert_eq!(m.snapshot().mean_batch_size(), 25.0);
+    }
+
+    #[test]
+    fn merge_aggregates_counters_bins_and_health() {
+        let m1 = Metrics::new();
+        m1.init_workers(2);
+        m1.completed.store(10, Ordering::Relaxed);
+        m1.batches.store(2, Ordering::Relaxed);
+        m1.batched_items.store(10, Ordering::Relaxed);
+        m1.record_latency(Duration::from_micros(10));
+        let m2 = Metrics::new();
+        m2.init_workers(1);
+        m2.completed.store(5, Ordering::Relaxed);
+        m2.batches.store(1, Ordering::Relaxed);
+        m2.batched_items.store(20, Ordering::Relaxed);
+        m2.record_latency(Duration::from_micros(10));
+        m2.record_latency(Duration::from_micros(5000));
+        m2.set_worker_health(0, WorkerHealth { retired: true, ..Default::default() });
+
+        let mut merged = MetricsSnapshot::default();
+        merged.merge(&m1.snapshot());
+        merged.merge(&m2.snapshot());
+        assert_eq!(merged.completed, 15);
+        assert_eq!(merged.mean_batch_size(), 10.0);
+        assert_eq!(merged.worker_health.len(), 3);
+        assert_eq!(merged.retired_workers(), 1);
+        assert_eq!(merged.lat_bins.iter().sum::<u64>(), 3);
+        assert!(merged.latency_percentile_us(99.0) >= 4096);
     }
 
     #[test]

@@ -21,4 +21,29 @@ pub mod metrics;
 pub mod server;
 
 pub use metrics::{MetricsSnapshot, WorkerHealth};
-pub use server::{Coordinator, CoordinatorConfig, RequestResult};
+pub use server::{Coordinator, CoordinatorConfig, NO_CAPACITY_ERROR, RequestResult};
+
+use std::sync::mpsc::Receiver;
+
+use crate::mmpu::FunctionKind;
+
+/// Transport-agnostic request submission (§Scale).
+///
+/// Implemented by the in-process [`Coordinator`] and by the remote
+/// [`crate::fabric::Router`], so load generators — `examples/serve.rs`,
+/// `remus soak`, benches — run unchanged against a local fleet or a
+/// sharded multi-process fabric.
+pub trait Submitter {
+    /// Submit one scalar request; the receiver yields exactly one
+    /// [`RequestResult`] (a value or an explicit error — never a hang).
+    fn submit(&self, kind: FunctionKind, a: u64, b: u64) -> Receiver<RequestResult>;
+
+    /// Point-in-time metrics. For a sharded implementation this is the
+    /// merged fleet view (see [`MetricsSnapshot::merge`]).
+    fn metrics(&self) -> MetricsSnapshot;
+
+    /// Non-blocking capacity probe: false once no healthy executor
+    /// remains (all crossbars retired / all shards down), so callers can
+    /// mark the target down without burning a request.
+    fn is_serving(&self) -> bool;
+}

@@ -19,7 +19,7 @@
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender, SyncSender, TrySendError};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -32,6 +32,7 @@ use crate::tmr::TmrMode;
 
 use super::batcher::{Batch, Batcher, Pending};
 use super::metrics::{Metrics, MetricsSnapshot, WorkerHealth};
+use super::Submitter;
 
 /// Outcome delivered to the submitting client.
 #[derive(Clone, Debug)]
@@ -63,6 +64,11 @@ pub struct CoordinatorConfig {
     pub max_wait: Duration,
     /// Bounded per-worker queue (backpressure).
     pub worker_queue: usize,
+    /// Cold hot-spare crossbars (§Health follow-on): spare workers are
+    /// spawned up front but excluded from routing; when a worker retires
+    /// its crossbar, it activates one spare so fleet capacity is
+    /// restored instead of shrinking.
+    pub spare_workers: usize,
     /// Per-crossbar online fault management (§Health). `None` preserves
     /// the pre-health behavior exactly.
     pub health: Option<HealthConfig>,
@@ -80,6 +86,7 @@ impl Default for CoordinatorConfig {
             max_batch: 64,
             max_wait: Duration::from_micros(500),
             worker_queue: 8,
+            spare_workers: 0,
             health: None,
         }
     }
@@ -94,14 +101,22 @@ enum FrontMsg {
 pub struct Coordinator {
     front_tx: Sender<FrontMsg>,
     metrics: Arc<Metrics>,
+    /// Routability per worker slot (shared with batcher + workers):
+    /// active workers start true, cold spares start false, retirement
+    /// flips the retiree off and one spare on.
+    healthy: Arc<Vec<AtomicBool>>,
     batcher_handle: Option<JoinHandle<()>>,
     worker_handles: Vec<JoinHandle<()>>,
 }
 
 impl Coordinator {
     pub fn start(cfg: CoordinatorConfig) -> Result<Self> {
+        // Worker slots cfg.workers.. are cold spares: spawned (so their
+        // crossbars and channels exist) but unroutable until a
+        // retirement activates them.
+        let total_workers = cfg.workers + cfg.spare_workers;
         let metrics = Arc::new(Metrics::new());
-        metrics.init_workers(cfg.workers);
+        metrics.init_workers(total_workers);
         // One compiled-plan cache shared by every worker: each
         // (kind, shape, tmr) compiles once process-wide (§Perf).
         let plans = Arc::new(PlanCache::new());
@@ -112,28 +127,39 @@ impl Coordinator {
         let mut worker_txs: Vec<SyncSender<Batch>> = vec![];
         let mut worker_handles = vec![];
         let depths: Arc<Vec<AtomicU64>> =
-            Arc::new((0..cfg.workers).map(|_| AtomicU64::new(0)).collect());
+            Arc::new((0..total_workers).map(|_| AtomicU64::new(0)).collect());
         let healthy: Arc<Vec<AtomicBool>> =
-            Arc::new((0..cfg.workers).map(|_| AtomicBool::new(true)).collect());
-        for w in 0..cfg.workers {
+            Arc::new((0..total_workers).map(|w| AtomicBool::new(w < cfg.workers)).collect());
+        // LIFO pool of cold spare slots, popped on retirement.
+        let spares: Arc<Mutex<Vec<usize>>> =
+            Arc::new(Mutex::new((cfg.workers..total_workers).collect()));
+        for w in 0..total_workers {
             let (tx, rx) = std::sync::mpsc::sync_channel::<Batch>(cfg.worker_queue);
             worker_txs.push(tx);
             let m = metrics.clone();
             let d = depths.clone();
             let h = healthy.clone();
+            let s = spares.clone();
             let cfg2 = cfg.clone();
             let p = plans.clone();
             let f = front_tx.clone();
             worker_handles
-                .push(std::thread::spawn(move || worker_loop(w, cfg2, rx, m, d, p, f, h)));
+                .push(std::thread::spawn(move || worker_loop(w, cfg2, rx, m, d, p, f, h, s)));
         }
         // Batcher / router.
         let m = metrics.clone();
         let cfg2 = cfg.clone();
-        let batcher_handle = std::thread::spawn(move || {
-            batcher_loop(cfg2, front_rx, worker_txs, m, depths, healthy)
-        });
-        Ok(Self { front_tx, metrics, batcher_handle: Some(batcher_handle), worker_handles })
+        let d = depths.clone();
+        let h = healthy.clone();
+        let batcher_handle =
+            std::thread::spawn(move || batcher_loop(cfg2, front_rx, worker_txs, m, d, h));
+        Ok(Self {
+            front_tx,
+            metrics,
+            healthy,
+            batcher_handle: Some(batcher_handle),
+            worker_handles,
+        })
     }
 
     /// Submit one scalar request; the receiver yields the result.
@@ -151,6 +177,19 @@ impl Coordinator {
         self.metrics.snapshot()
     }
 
+    /// Routable (healthy, activated) workers right now.
+    pub fn healthy_workers(&self) -> usize {
+        self.healthy.iter().filter(|h| h.load(Ordering::Relaxed)).count()
+    }
+
+    /// Non-blocking capacity probe: true while at least one routable
+    /// worker exists. After retire-all this turns false, so the fabric
+    /// router (or any front end) can mark this coordinator down without
+    /// burning a request on an explicit error result.
+    pub fn is_serving(&self) -> bool {
+        self.healthy.iter().any(|h| h.load(Ordering::Relaxed))
+    }
+
     /// Drain and stop all threads.
     pub fn shutdown(mut self) {
         let _ = self.front_tx.send(FrontMsg::Shutdown);
@@ -162,6 +201,26 @@ impl Coordinator {
         }
     }
 }
+
+impl Submitter for Coordinator {
+    fn submit(&self, kind: FunctionKind, a: u64, b: u64) -> Receiver<RequestResult> {
+        Coordinator::submit(self, kind, a, b)
+    }
+
+    fn metrics(&self) -> MetricsSnapshot {
+        Coordinator::metrics(self)
+    }
+
+    fn is_serving(&self) -> bool {
+        Coordinator::is_serving(self)
+    }
+}
+
+/// Error-result text for requests that found no routable worker (all
+/// crossbars retired / zero workers). The fabric router keys shard
+/// failover off this exact text (`fabric::router`), so treat it as part
+/// of the coordinator's API, not freely rewordable prose.
+pub const NO_CAPACITY_ERROR: &str = "no healthy workers (all crossbars retired)";
 
 /// Deliver an explicit error result to every item of a batch.
 fn fail_batch(batch: Batch, metrics: &Metrics, why: &str) {
@@ -199,7 +258,7 @@ fn batcher_loop(
                 .filter(|(i, _)| healthy[*i].load(Ordering::Relaxed))
                 .min_by_key(|(_, d)| d.load(Ordering::Relaxed));
             let Some((widx, _)) = pick else {
-                fail_batch(batch, metrics, "no healthy workers (all crossbars retired)");
+                fail_batch(batch, metrics, NO_CAPACITY_ERROR);
                 return;
             };
             depths[widx].fetch_add(1, Ordering::Relaxed);
@@ -332,6 +391,7 @@ fn worker_loop(
     plans: Arc<PlanCache>,
     front_tx: Sender<FrontMsg>,
     healthy: Arc<Vec<AtomicBool>>,
+    spares: Arc<Mutex<Vec<usize>>>,
 ) {
     let mmpu_cfg = MmpuConfig {
         rows: cfg.rows,
@@ -349,10 +409,11 @@ fn worker_loop(
         mmpu.enable_health(hcfg);
     }
     // The live policy: starts at the configured base, escalated by the
-    // health manager as telemetry accumulates (never de-escalated,
-    // except when an escalated TMR mode turns out not to fit a served
-    // function on this crossbar shape — then TMR escalation is blocked
-    // and the worker keeps its ECC escalation only).
+    // health manager as telemetry accumulates and stepped back when a
+    // configured `deescalate_after` clean streak elapses. (When an
+    // escalated TMR mode turns out not to fit a served function on this
+    // crossbar shape, TMR escalation is blocked and the worker keeps
+    // its ECC escalation only.)
     let mut policy = cfg.policy;
     let mut tmr_escalation_blocked = false;
     let mut escalation_err_logged = false;
@@ -434,8 +495,12 @@ fn worker_loop(
             if mmpu.scrub_due(0) {
                 let _ = mmpu.health_scrub(0);
             }
+            // Recommendations build on the *configured base* policy:
+            // escalation adds to it, and a de-escalation streak walks
+            // back toward it (passing the live escalated policy instead
+            // would make every escalation permanent).
             let decision = mmpu.health(0).map(|h| {
-                (h.recommended_policy(policy), h.stats(), h.should_retire())
+                (h.recommended_policy(cfg.policy), h.stats(), h.should_retire())
             });
             if let Some((mut rec, hstats, retire)) = decision {
                 if tmr_escalation_blocked {
@@ -444,7 +509,7 @@ fn worker_loop(
                 if rec.ecc_m != policy.ecc_m || rec.tmr != policy.tmr {
                     match mmpu.set_policy(rec) {
                         Ok(()) => {
-                            eprintln!("worker {worker_id}: escalation {policy:?} -> {rec:?}");
+                            eprintln!("worker {worker_id}: policy change {policy:?} -> {rec:?}");
                             policy = rec;
                         }
                         Err(e) if !escalation_err_logged => {
@@ -456,11 +521,24 @@ fn worker_loop(
                 }
                 if retire && !retired {
                     retired = true;
+                    // Activate a cold spare (if any) BEFORE dropping out
+                    // of routing, so fleet capacity never transiently
+                    // hits zero while spares remain; this worker's
+                    // queued batches then requeue onto the spare.
+                    let activated = spares.lock().unwrap().pop();
+                    if let Some(spare) = activated {
+                        healthy[spare].store(true, Ordering::Release);
+                    }
                     healthy[worker_id].store(false, Ordering::Relaxed);
                     eprintln!(
                         "worker {worker_id}: crossbar retired \
-                         ({} stuck cells detected, {} spares left)",
-                        hstats.stuck_detected, hstats.spares_left
+                         ({} stuck cells detected, {} spares left){}",
+                        hstats.stuck_detected,
+                        hstats.spares_left,
+                        match activated {
+                            Some(s) => format!("; hot-spare worker {s} activated"),
+                            None => String::new(),
+                        }
                     );
                 }
                 metrics.set_worker_health(
@@ -578,6 +656,44 @@ mod tests {
         let r = rx.recv_timeout(Duration::from_secs(5)).unwrap();
         assert!(r.is_ok());
         assert_eq!(r.value, 5);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn is_serving_tracks_routable_capacity() {
+        let coord = Coordinator::start(CoordinatorConfig {
+            workers: 1,
+            rows: 16,
+            cols: 256,
+            ..Default::default()
+        })
+        .unwrap();
+        assert!(coord.is_serving());
+        assert_eq!(coord.healthy_workers(), 1);
+        coord.shutdown();
+        // Zero workers (and no spares): nothing routable from the start.
+        let coord = Coordinator::start(CoordinatorConfig {
+            workers: 0,
+            rows: 16,
+            cols: 256,
+            ..Default::default()
+        })
+        .unwrap();
+        assert!(!coord.is_serving());
+        assert_eq!(coord.healthy_workers(), 0);
+        coord.shutdown();
+        // Cold spares are not routable capacity until a retirement
+        // activates them.
+        let coord = Coordinator::start(CoordinatorConfig {
+            workers: 0,
+            spare_workers: 2,
+            rows: 16,
+            cols: 256,
+            ..Default::default()
+        })
+        .unwrap();
+        assert!(!coord.is_serving());
+        assert_eq!(coord.metrics().worker_health.len(), 2, "spares visible in health table");
         coord.shutdown();
     }
 

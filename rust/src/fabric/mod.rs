@@ -1,0 +1,37 @@
+//! # fabric — sharded multi-mMPU serving over a wire protocol (§Scale).
+//!
+//! The paper's throughput story (and the fleet-scale ECC work of
+//! arXiv:2105.04212) assumes many crossbar arrays operating in
+//! parallel; a single in-process [`crate::coordinator::Coordinator`]
+//! cannot express that. This subsystem turns one coordinator into one
+//! *shard* of a fleet:
+//!
+//! * [`wire`] — a hand-rolled length-prefixed binary protocol
+//!   (std `TcpListener`/`TcpStream` only; the offline vendor set has no
+//!   serde/tokio) with versioned headers carrying
+//!   submit / result / metrics / health / shutdown messages;
+//! * [`FabricServer`] — a TCP front end over one coordinator per
+//!   process (`remus fabric-serve`);
+//! * [`Router`] — the client-side fan-out: FunctionKind-aware
+//!   consistent hashing across N shard endpoints (same-kind requests
+//!   keep landing on the same shard, preserving dynamic batching),
+//!   health-driven failover (capacity errors and disconnects re-route
+//!   in-flight requests to the next live shard), and merged fleet
+//!   metrics so reliability events — retirement, escalation — are
+//!   observable across processes.
+//!
+//! Both the in-process coordinator and the router implement
+//! [`crate::coordinator::Submitter`], so every load path (the serve
+//! example, `remus soak`, benches) runs unchanged on either. End-to-end
+//! coverage lives in `rust/tests/integration_fabric.rs` (loopback
+//! multi-shard runs, bit-identical to in-process execution) and
+//! `rust/tests/prop_fabric_wire.rs` (codec round-trips and malformed-
+//! frame rejection); `cargo bench --bench fabric` measures the sharded
+//! loopback throughput (`BENCH_fabric.json`).
+
+pub mod router;
+pub mod server;
+pub mod wire;
+
+pub use router::{fetch_metrics, probe_health, shutdown_endpoint, Router};
+pub use server::FabricServer;

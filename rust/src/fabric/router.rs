@@ -1,0 +1,479 @@
+//! The fabric router: a client-side shard fan-out implementing
+//! [`Submitter`] over N fabric servers.
+//!
+//! **Sharding** is FunctionKind-aware consistent hashing: each shard
+//! contributes virtual nodes to a hash ring and a request's kind picks
+//! the first live shard at or after its hash. Same-kind requests land
+//! on the same shard, so the per-shard coordinator's dynamic batching
+//! sees exactly the stream it would see in-process; losing a shard only
+//! remaps the kinds it owned (classic consistent-hashing locality).
+//!
+//! **Failover** is health-driven: a shard is marked down when its
+//! connection drops, when a write fails, or when it answers a request
+//! with an all-workers-retired capacity error. In-flight requests on a
+//! downed shard are re-routed to the next live shard on the ring
+//! (at-least-once execution: a shard that dies after executing but
+//! before replying is re-executed elsewhere — results are deterministic
+//! functions, so replays are safe). Only when every shard has been
+//! tried does a request resolve to an explicit error — clients never
+//! hang, mirroring the in-process coordinator's contract.
+//!
+//! **Metrics** are fetched per shard over short-lived control
+//! connections and merged ([`MetricsSnapshot::merge`]) into one fleet
+//! view, so per-worker health (retirements, escalation levels) of every
+//! shard is observable from one place.
+
+use std::collections::HashMap;
+use std::net::{TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, ensure, Context, Result};
+
+use crate::coordinator::{MetricsSnapshot, NO_CAPACITY_ERROR, RequestResult, Submitter};
+use crate::mmpu::FunctionKind;
+
+use super::wire::{read_msg, write_msg, Msg};
+
+/// Virtual nodes per shard on the hash ring.
+const RING_VNODES: usize = 16;
+
+/// Bound on control-plane connect/read/write, so a hung shard (host
+/// down, blackholed traffic) cannot freeze a fleet metrics or health
+/// call. The data path fails over on *closed* connections (reader EOF /
+/// write error); a silently blackholed peer that keeps its connection
+/// half-open is only caught by the operator or a control probe today —
+/// data-path heartbeats are named multi-machine work in ROADMAP §Scale.
+const CONTROL_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// Short-lived control connection with timeouts applied.
+fn control_connect(addr: &str) -> Result<TcpStream> {
+    let sock = addr
+        .to_socket_addrs()
+        .with_context(|| format!("resolving {addr}"))?
+        .next()
+        .ok_or_else(|| anyhow!("{addr} resolves to no address"))?;
+    let stream = TcpStream::connect_timeout(&sock, CONTROL_TIMEOUT)
+        .with_context(|| format!("connecting to {addr}"))?;
+    let _ = stream.set_read_timeout(Some(CONTROL_TIMEOUT));
+    let _ = stream.set_write_timeout(Some(CONTROL_TIMEOUT));
+    Ok(stream)
+}
+
+/// A request in flight on some shard, retaining everything needed to
+/// replay it elsewhere.
+struct PendingReq {
+    kind: FunctionKind,
+    a: u64,
+    b: u64,
+    reply: Sender<RequestResult>,
+    submitted: Instant,
+    /// Shards already tried (failover never loops).
+    tried: Vec<usize>,
+}
+
+struct ShardState {
+    addr: String,
+    up: AtomicBool,
+    /// Write half of the data connection (`None` once down).
+    writer: Mutex<Option<TcpStream>>,
+    /// In-flight requests keyed by wire id.
+    pending: Mutex<HashMap<u64, PendingReq>>,
+}
+
+struct RouterInner {
+    shards: Vec<ShardState>,
+    /// Sorted (hash, shard) ring. Keyed by shard *index* so the
+    /// kind->shard map is stable across runs regardless of ephemeral
+    /// ports (loopback tests rely on this determinism).
+    ring: Vec<(u64, usize)>,
+    next_id: AtomicU64,
+    closing: AtomicBool,
+}
+
+/// The sharded remote submitter.
+pub struct Router {
+    inner: Arc<RouterInner>,
+    readers: Vec<JoinHandle<()>>,
+}
+
+impl Router {
+    /// Connect to the shard endpoints. Unreachable shards are marked
+    /// down (their kinds fail over); at least one must be reachable.
+    pub fn connect(addrs: &[String]) -> Result<Self> {
+        ensure!(!addrs.is_empty(), "router needs at least one shard address");
+        let shards: Vec<ShardState> = addrs
+            .iter()
+            .map(|a| ShardState {
+                addr: a.clone(),
+                up: AtomicBool::new(false),
+                writer: Mutex::new(None),
+                pending: Mutex::new(HashMap::new()),
+            })
+            .collect();
+        let mut ring = Vec::with_capacity(addrs.len() * RING_VNODES);
+        for shard in 0..addrs.len() {
+            for vnode in 0..RING_VNODES {
+                ring.push((fnv64(format!("shard{shard}/vnode{vnode}").as_bytes()), shard));
+            }
+        }
+        ring.sort_unstable();
+        let inner = Arc::new(RouterInner {
+            shards,
+            ring,
+            next_id: AtomicU64::new(1),
+            closing: AtomicBool::new(false),
+        });
+        let mut readers = Vec::new();
+        for i in 0..addrs.len() {
+            match inner.open_shard(i) {
+                Ok(read_half) => {
+                    let inner = inner.clone();
+                    readers.push(std::thread::spawn(move || reader_loop(inner, i, read_half)));
+                }
+                Err(e) => {
+                    eprintln!("router: shard {i} ({}) unreachable at connect: {e:#}", addrs[i])
+                }
+            }
+        }
+        ensure!(
+            inner.shards.iter().any(|s| s.up.load(Ordering::SeqCst)),
+            "no reachable shard among {addrs:?}"
+        );
+        Ok(Self { inner, readers })
+    }
+
+    /// The shard a kind currently routes to (None with every shard
+    /// down). Exposed for tests and fleet introspection.
+    pub fn shard_for(&self, kind: FunctionKind) -> Option<usize> {
+        self.inner.shard_for(kind)
+    }
+
+    /// Addresses this router was built over, in shard order.
+    pub fn shard_addrs(&self) -> Vec<String> {
+        self.inner.shards.iter().map(|s| s.addr.clone()).collect()
+    }
+
+    /// Live shards right now.
+    pub fn live_shards(&self) -> usize {
+        self.inner.shards.iter().filter(|s| s.up.load(Ordering::SeqCst)).count()
+    }
+
+    pub fn submit(&self, kind: FunctionKind, a: u64, b: u64) -> Receiver<RequestResult> {
+        let (tx, rx) = channel();
+        let id = self.inner.next_id.fetch_add(1, Ordering::Relaxed);
+        self.inner.route(
+            id,
+            PendingReq { kind, a, b, reply: tx, submitted: Instant::now(), tried: Vec::new() },
+        );
+        rx
+    }
+
+    /// Merged fleet metrics: every shard (even one marked down for
+    /// routing — its server may still answer control traffic) is probed
+    /// over a short-lived connection; unreachable shards are skipped.
+    /// Probes run concurrently, so a fleet of dead shards costs one
+    /// `CONTROL_TIMEOUT`, not a serial sum; the merge keeps shard order.
+    pub fn metrics(&self) -> MetricsSnapshot {
+        let probes: Vec<_> = self
+            .inner
+            .shards
+            .iter()
+            .map(|shard| {
+                let addr = shard.addr.clone();
+                std::thread::spawn(move || {
+                    let m = fetch_metrics(&addr);
+                    (addr, m)
+                })
+            })
+            .collect();
+        let mut merged = MetricsSnapshot::default();
+        for probe in probes {
+            match probe.join() {
+                Ok((_, Ok(m))) => merged.merge(&m),
+                Ok((addr, Err(e))) => {
+                    eprintln!("router: metrics from {addr} unavailable: {e:#}")
+                }
+                Err(_) => {}
+            }
+        }
+        merged
+    }
+
+    pub fn is_serving(&self) -> bool {
+        self.live_shards() > 0
+    }
+
+    /// Close every shard connection and join the reader threads.
+    /// In-flight requests resolve with explicit shutdown errors.
+    pub fn shutdown(mut self) {
+        self.inner.closing.store(true, Ordering::SeqCst);
+        for i in 0..self.inner.shards.len() {
+            self.inner.mark_down(i);
+        }
+        for h in self.readers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Submitter for Router {
+    fn submit(&self, kind: FunctionKind, a: u64, b: u64) -> Receiver<RequestResult> {
+        Router::submit(self, kind, a, b)
+    }
+
+    fn metrics(&self) -> MetricsSnapshot {
+        Router::metrics(self)
+    }
+
+    fn is_serving(&self) -> bool {
+        Router::is_serving(self)
+    }
+}
+
+impl RouterInner {
+    /// Open the data connection for shard `i`; returns the read half
+    /// (the write half is stored) and marks the shard up.
+    fn open_shard(&self, i: usize) -> Result<TcpStream> {
+        let shard = &self.shards[i];
+        let stream = TcpStream::connect(shard.addr.as_str())
+            .with_context(|| format!("connecting to shard {}", shard.addr))?;
+        let _ = stream.set_nodelay(true);
+        let write_half = stream.try_clone()?;
+        *shard.writer.lock().unwrap() = Some(write_half);
+        shard.up.store(true, Ordering::SeqCst);
+        Ok(stream)
+    }
+
+    /// Walk shard indices in ring order starting at `hash` (vnodes
+    /// deduplicated), yielding each shard once.
+    fn ring_order(&self, hash: u64) -> Vec<usize> {
+        let start = self.ring.partition_point(|&(h, _)| h < hash);
+        let mut seen = vec![false; self.shards.len()];
+        let mut order = Vec::with_capacity(self.shards.len());
+        for k in 0..self.ring.len() {
+            let shard = self.ring[(start + k) % self.ring.len()].1;
+            if !seen[shard] {
+                seen[shard] = true;
+                order.push(shard);
+            }
+        }
+        order
+    }
+
+    fn shard_for(&self, kind: FunctionKind) -> Option<usize> {
+        self.ring_order(hash_kind(kind))
+            .into_iter()
+            .find(|&s| self.shards[s].up.load(Ordering::SeqCst))
+    }
+
+    /// Dispatch (or re-dispatch) a request to the first live shard on
+    /// its kind's ring walk that hasn't been tried yet; with none left,
+    /// resolve it with an explicit error.
+    fn route(&self, id: u64, mut req: PendingReq) {
+        for shard_idx in self.ring_order(hash_kind(req.kind)) {
+            if req.tried.contains(&shard_idx) {
+                continue;
+            }
+            let shard = &self.shards[shard_idx];
+            if !shard.up.load(Ordering::SeqCst) {
+                continue;
+            }
+            req.tried.push(shard_idx);
+            let msg = Msg::Submit { id, kind: req.kind, a: req.a, b: req.b };
+            // Register before writing so the reader can match a fast
+            // reply; reclaim on write failure.
+            shard.pending.lock().unwrap().insert(id, req);
+            let wrote = match shard.writer.lock().unwrap().as_mut() {
+                Some(stream) => write_msg(stream, &msg).is_ok(),
+                None => false,
+            };
+            if wrote {
+                return;
+            }
+            self.mark_down(shard_idx);
+            req = match shard.pending.lock().unwrap().remove(&id) {
+                Some(r) => r,
+                // The reader drained it first and is re-routing it.
+                None => return,
+            };
+        }
+        let latency = req.submitted.elapsed();
+        let _ = req.reply.send(RequestResult {
+            value: 0,
+            latency,
+            error: Some(format!("no healthy shards (tried {:?})", req.tried)),
+        });
+    }
+
+    /// Take a shard out of routing and unblock its reader.
+    fn mark_down(&self, i: usize) {
+        let was_up = self.shards[i].up.swap(false, Ordering::SeqCst);
+        if was_up && !self.closing.load(Ordering::SeqCst) {
+            eprintln!("router: shard {i} ({}) marked down", self.shards[i].addr);
+        }
+        if let Some(w) = self.shards[i].writer.lock().unwrap().take() {
+            let _ = w.shutdown(std::net::Shutdown::Both);
+        }
+    }
+}
+
+/// Per-shard reader: matches `Result` frames to pending requests, turns
+/// capacity errors into failovers, and on disconnect re-routes whatever
+/// was still in flight.
+fn reader_loop(inner: Arc<RouterInner>, shard_idx: usize, mut read_half: TcpStream) {
+    loop {
+        match read_msg(&mut read_half) {
+            Ok(Some(Msg::Result { id, value, latency_us: _, error })) => {
+                let req = inner.shards[shard_idx].pending.lock().unwrap().remove(&id);
+                let Some(req) = req else { continue };
+                // An all-workers-retired shard answers every request
+                // with the coordinator's capacity error: mark it down
+                // and fail the request over instead of delivering it.
+                let capacity_error =
+                    error.as_deref().is_some_and(|e| e.contains(NO_CAPACITY_ERROR));
+                if capacity_error && !inner.closing.load(Ordering::SeqCst) {
+                    inner.mark_down(shard_idx);
+                    inner.route(id, req);
+                    continue;
+                }
+                let latency = req.submitted.elapsed();
+                let _ = req.reply.send(RequestResult { value, latency, error });
+            }
+            // Control replies ride dedicated connections; anything else
+            // here is a protocol violation — drop the connection.
+            Ok(Some(_)) => break,
+            Ok(None) | Err(_) => break,
+        }
+    }
+    inner.mark_down(shard_idx);
+    // Fail over (or, at router shutdown, resolve) the in-flight tail.
+    let drained: Vec<(u64, PendingReq)> =
+        inner.shards[shard_idx].pending.lock().unwrap().drain().collect();
+    let closing = inner.closing.load(Ordering::SeqCst);
+    if !drained.is_empty() && !closing {
+        eprintln!(
+            "router: shard {shard_idx} disconnected with {} in flight; rerouting",
+            drained.len()
+        );
+    }
+    for (id, req) in drained {
+        if closing {
+            let latency = req.submitted.elapsed();
+            let _ = req.reply.send(RequestResult {
+                value: 0,
+                latency,
+                error: Some("router shutting down".to_string()),
+            });
+        } else {
+            inner.route(id, req);
+        }
+    }
+}
+
+/// Probe a shard endpoint's health over a short-lived connection.
+pub fn probe_health(addr: &str) -> Result<(bool, u32, u32, u32)> {
+    let mut stream = control_connect(addr)?;
+    write_msg(&mut stream, &Msg::HealthReq)?;
+    match read_msg(&mut stream)? {
+        Some(Msg::HealthReply { serving, workers, routable, retired }) => {
+            Ok((serving, workers, routable, retired))
+        }
+        other => bail!("unexpected reply to HealthReq: {other:?}"),
+    }
+}
+
+/// Fetch one shard's metrics over a short-lived connection.
+pub fn fetch_metrics(addr: &str) -> Result<MetricsSnapshot> {
+    let mut stream = control_connect(addr)?;
+    write_msg(&mut stream, &Msg::MetricsReq)?;
+    match read_msg(&mut stream)? {
+        Some(Msg::MetricsReply(m)) => Ok(m),
+        other => bail!("unexpected reply to MetricsReq: {other:?}"),
+    }
+}
+
+/// Ask a fabric server process to stop serving (acked).
+pub fn shutdown_endpoint(addr: &str) -> Result<()> {
+    let mut stream = control_connect(addr)?;
+    write_msg(&mut stream, &Msg::Shutdown)?;
+    match read_msg(&mut stream)? {
+        Some(Msg::ShutdownAck) => Ok(()),
+        other => bail!("unexpected reply to Shutdown: {other:?}"),
+    }
+}
+
+/// FNV-1a — stable across runs and platforms (the ring must not depend
+/// on `DefaultHasher`'s randomized keys).
+fn fnv64(bytes: &[u8]) -> u64 {
+    let mut hash = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        hash ^= b as u64;
+        hash = hash.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    hash
+}
+
+fn hash_kind(kind: FunctionKind) -> u64 {
+    fnv64(kind.name().as_bytes())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_is_deterministic_and_covers_all_shards() {
+        let mut ring = Vec::new();
+        for shard in 0..3usize {
+            for vnode in 0..RING_VNODES {
+                ring.push((fnv64(format!("shard{shard}/vnode{vnode}").as_bytes()), shard));
+            }
+        }
+        ring.sort_unstable();
+        let inner = RouterInner {
+            shards: (0..3)
+                .map(|i| ShardState {
+                    addr: format!("127.0.0.1:{i}"),
+                    up: AtomicBool::new(true),
+                    writer: Mutex::new(None),
+                    pending: Mutex::new(HashMap::new()),
+                })
+                .collect(),
+            ring,
+            next_id: AtomicU64::new(1),
+            closing: AtomicBool::new(false),
+        };
+        // Every walk visits each shard exactly once, and the first hop
+        // is a pure function of the kind.
+        for bits in 1..=32 {
+            let order = inner.ring_order(hash_kind(FunctionKind::Add(bits)));
+            let mut sorted = order.clone();
+            sorted.sort_unstable();
+            assert_eq!(sorted, vec![0, 1, 2], "walk {order:?}");
+            assert_eq!(
+                inner.shard_for(FunctionKind::Add(bits)),
+                Some(order[0]),
+                "shard_for is the walk head"
+            );
+        }
+        // Many kinds spread over more than one shard.
+        let first: Vec<usize> = (1..=32)
+            .map(|bits| inner.shard_for(FunctionKind::Add(bits)).unwrap())
+            .collect();
+        assert!(
+            first.iter().any(|&s| s != first[0]),
+            "32 kinds must not all hash to one shard: {first:?}"
+        );
+        // Downing the preferred shard fails over to the next on the walk.
+        let k = FunctionKind::Xor(8);
+        let preferred = inner.shard_for(k).unwrap();
+        inner.shards[preferred].up.store(false, Ordering::SeqCst);
+        let fallback = inner.shard_for(k).unwrap();
+        assert_ne!(fallback, preferred);
+        assert_eq!(inner.ring_order(hash_kind(k))[1], fallback);
+    }
+}

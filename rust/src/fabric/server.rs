@@ -1,0 +1,265 @@
+//! The fabric server: one process, one [`Coordinator`], many TCP
+//! clients.
+//!
+//! Each accepted connection gets a read thread (decoding frames,
+//! submitting to the coordinator) and a write thread (serializing
+//! replies). Replies are written strictly in request order per
+//! connection: the writer blocks on each submit's coordinator reply
+//! channel in FIFO order, which is safe because the coordinator always
+//! resolves every request (a value or an explicit error — never a
+//! dropped channel, see `coordinator::server`). That FIFO also means a
+//! control request (metrics/health) sent on a busy data connection
+//! queues behind the in-flight submits — latency-sensitive probes
+//! belong on their own short-lived connection, which is exactly what
+//! `fabric::router` does.
+//!
+//! Shutdown has two triggers: a remote [`Msg::Shutdown`] frame flips
+//! the stop flag (acked first) so a `remus fabric-serve` process can be
+//! stopped by its fleet parent, and a local [`FabricServer::shutdown`]
+//! closes the listener and every connection, then drains the
+//! coordinator.
+
+use std::collections::HashMap;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::{Coordinator, CoordinatorConfig, RequestResult};
+
+use super::wire::{read_msg, write_msg, Msg};
+
+/// A reply the connection's writer thread must deliver, in order.
+enum Reply {
+    /// A submitted request: block on the coordinator's reply channel.
+    Pending(u64, Receiver<RequestResult>),
+    /// An immediate control reply (metrics/health/ack).
+    Now(Msg),
+}
+
+/// One fabric endpoint fronting an in-process [`Coordinator`].
+pub struct FabricServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_handle: Option<JoinHandle<()>>,
+    /// Stream clones kept so a local shutdown can unblock the per-
+    /// connection read loops (blocking reads, no timeouts). Keyed by
+    /// connection id; each connection removes itself on exit, so
+    /// short-lived control connections (metrics/health probes) don't
+    /// leak fds over a long-running server's lifetime.
+    conns: Arc<Mutex<HashMap<u64, TcpStream>>>,
+    conn_handles: Arc<Mutex<Vec<JoinHandle<()>>>>,
+    coord: Arc<Coordinator>,
+}
+
+impl FabricServer {
+    /// Bind `addr` (use port 0 for an ephemeral loopback port) and
+    /// start serving a freshly started coordinator.
+    pub fn start(addr: &str, cfg: CoordinatorConfig) -> Result<Self> {
+        let coord = Arc::new(Coordinator::start(cfg)?);
+        let listener =
+            TcpListener::bind(addr).with_context(|| format!("binding fabric server to {addr}"))?;
+        let addr = listener.local_addr()?;
+        // Non-blocking accept so the loop can observe the stop flag.
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let conns: Arc<Mutex<HashMap<u64, TcpStream>>> = Arc::new(Mutex::new(HashMap::new()));
+        let conn_handles: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
+        let accept_handle = {
+            let coord = coord.clone();
+            let stop = stop.clone();
+            let conns = conns.clone();
+            let conn_handles = conn_handles.clone();
+            std::thread::spawn(move || accept_loop(listener, coord, stop, conns, conn_handles))
+        };
+        Ok(Self {
+            addr,
+            stop,
+            accept_handle: Some(accept_handle),
+            conns,
+            conn_handles,
+            coord,
+        })
+    }
+
+    /// The bound address (resolves port 0 to the real ephemeral port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// True once a remote `Shutdown` frame (or a local stop) landed.
+    pub fn is_stopped(&self) -> bool {
+        self.stop.load(Ordering::SeqCst)
+    }
+
+    /// Block until a remote `Shutdown` frame stops this server (the
+    /// `remus fabric-serve` foreground loop).
+    pub fn wait(&self) {
+        while !self.is_stopped() {
+            std::thread::sleep(Duration::from_millis(20));
+        }
+    }
+
+    /// Stop accepting, close every connection, join the threads, and
+    /// drain the coordinator.
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.accept_handle.take() {
+            let _ = h.join();
+        }
+        // Unblock the connection read loops.
+        for (_, conn) in self.conns.lock().unwrap().drain() {
+            let _ = conn.shutdown(std::net::Shutdown::Both);
+        }
+        let handles: Vec<_> = self.conn_handles.lock().unwrap().drain(..).collect();
+        for h in handles {
+            let _ = h.join();
+        }
+        // All connection threads are joined, so this is the last Arc.
+        if let Ok(coord) = Arc::try_unwrap(self.coord) {
+            coord.shutdown();
+        }
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    coord: Arc<Coordinator>,
+    stop: Arc<AtomicBool>,
+    conns: Arc<Mutex<HashMap<u64, TcpStream>>>,
+    conn_handles: Arc<Mutex<Vec<JoinHandle<()>>>>,
+) {
+    let mut next_conn_id = 0u64;
+    while !stop.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                let _ = stream.set_nodelay(true);
+                // The accepted socket is non-blocking (inherited on some
+                // platforms): force blocking semantics for the framed
+                // read/write loops.
+                let _ = stream.set_nonblocking(false);
+                let conn_id = next_conn_id;
+                next_conn_id += 1;
+                if let Ok(clone) = stream.try_clone() {
+                    conns.lock().unwrap().insert(conn_id, clone);
+                }
+                let coord = coord.clone();
+                let stop = stop.clone();
+                let conns = conns.clone();
+                let handle = std::thread::spawn(move || {
+                    conn_loop(stream, coord, stop);
+                    conns.lock().unwrap().remove(&conn_id);
+                });
+                // Reap finished connection threads so a long-running
+                // server doesn't accumulate a handle per short-lived
+                // control connection.
+                let mut handles = conn_handles.lock().unwrap();
+                handles.retain(|h| !h.is_finished());
+                handles.push(handle);
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            Err(e) => {
+                // A persistent accept failure (e.g. fd exhaustion) makes
+                // this endpoint unreachable — including for remote
+                // Shutdown frames — so flip the stop flag too: better a
+                // clean `wait()` return than a zombie shard.
+                eprintln!("fabric server: accept failed, stopping: {e}");
+                stop.store(true, Ordering::SeqCst);
+                break;
+            }
+        }
+    }
+}
+
+fn conn_loop(mut read_half: TcpStream, coord: Arc<Coordinator>, stop: Arc<AtomicBool>) {
+    let write_half = match read_half.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    let (reply_tx, reply_rx) = channel::<Reply>();
+    let writer = std::thread::spawn(move || writer_loop(write_half, reply_rx));
+    loop {
+        let msg = match read_msg(&mut read_half) {
+            Ok(Some(m)) => m,
+            // Clean close, local shutdown, or a malformed frame: either
+            // way this connection is done (malformed peers are dropped,
+            // not served — the codec already refused the frame).
+            Ok(None) | Err(_) => break,
+        };
+        match msg {
+            Msg::Submit { id, kind, a, b } => {
+                let rx = coord.submit(kind, a, b);
+                if reply_tx.send(Reply::Pending(id, rx)).is_err() {
+                    break;
+                }
+            }
+            Msg::MetricsReq => {
+                let reply = Msg::MetricsReply(coord.metrics());
+                if reply_tx.send(Reply::Now(reply)).is_err() {
+                    break;
+                }
+            }
+            Msg::HealthReq => {
+                let m = coord.metrics();
+                let reply = Msg::HealthReply {
+                    serving: coord.is_serving(),
+                    workers: m.worker_health.len() as u32,
+                    routable: coord.healthy_workers() as u32,
+                    retired: m.retired_workers() as u32,
+                };
+                if reply_tx.send(Reply::Now(reply)).is_err() {
+                    break;
+                }
+            }
+            Msg::Shutdown => {
+                let _ = reply_tx.send(Reply::Now(Msg::ShutdownAck));
+                stop.store(true, Ordering::SeqCst);
+                break;
+            }
+            // Server-to-client messages arriving at the server: protocol
+            // violation, drop the connection.
+            Msg::Result { .. }
+            | Msg::MetricsReply(_)
+            | Msg::HealthReply { .. }
+            | Msg::ShutdownAck => break,
+        }
+    }
+    // Closing the reply channel lets the writer drain the pending
+    // results (every coordinator request resolves) and exit.
+    drop(reply_tx);
+    let _ = writer.join();
+}
+
+fn writer_loop(mut write_half: TcpStream, reply_rx: Receiver<Reply>) {
+    while let Ok(reply) = reply_rx.recv() {
+        let msg = match reply {
+            Reply::Now(m) => m,
+            Reply::Pending(id, result_rx) => match result_rx.recv() {
+                Ok(r) => Msg::Result {
+                    id,
+                    value: r.value,
+                    latency_us: r.latency.as_micros() as u64,
+                    error: r.error,
+                },
+                // Defensive: the coordinator guarantees a reply; if the
+                // channel ever drops, surface it as an explicit error.
+                Err(_) => Msg::Result {
+                    id,
+                    value: 0,
+                    latency_us: 0,
+                    error: Some("coordinator dropped the reply channel".to_string()),
+                },
+            },
+        };
+        if write_msg(&mut write_half, &msg).is_err() {
+            // Peer gone: stop writing; the read loop will see EOF.
+            break;
+        }
+    }
+}

@@ -1,0 +1,432 @@
+//! The fabric wire protocol: length-prefixed, versioned binary frames
+//! over a byte stream (std `TcpStream` only — serde/tokio are not in
+//! the offline vendor set, so every message hand-rolls `to_bytes` /
+//! `from_bytes`).
+//!
+//! Frame layout:
+//!
+//! ```text
+//! [len: u32 LE] [version: u8] [type: u8] [body ...]
+//! ```
+//!
+//! `len` counts everything after the prefix (version + type + body).
+//! All multi-byte integers are little-endian. Decoding is strict and
+//! panic-free: unknown versions or types, truncated bodies, trailing
+//! bytes and implausible lengths are all `Err` — a malformed peer can
+//! kill its connection, never the process
+//! (`rust/tests/prop_fabric_wire.rs`).
+
+use std::io::{Read, Write};
+
+use anyhow::{anyhow, bail, ensure, Result};
+
+use crate::coordinator::{MetricsSnapshot, WorkerHealth};
+use crate::mmpu::FunctionKind;
+
+/// Bumped on any incompatible layout change; decoders reject mismatches.
+pub const WIRE_VERSION: u8 = 1;
+
+/// Sanity bound on a frame body: protects against garbage length
+/// prefixes allocating gigabytes (16 MiB is orders of magnitude above
+/// any real fabric message).
+pub const MAX_FRAME: usize = 1 << 24;
+
+/// One fabric message. Submits carry a client-chosen `id` echoed by the
+/// matching `Result`, so responses can be delivered out of order and
+/// retried requests re-keyed across shards.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Msg {
+    /// Client -> server: execute `kind(a, b)`.
+    Submit { id: u64, kind: FunctionKind, a: u64, b: u64 },
+    /// Server -> client: outcome of the `Submit` with the same `id`.
+    /// `error` mirrors [`crate::coordinator::RequestResult::error`].
+    Result { id: u64, value: u64, latency_us: u64, error: Option<String> },
+    /// Client -> server: request a metrics snapshot.
+    MetricsReq,
+    MetricsReply(MetricsSnapshot),
+    /// Client -> server: non-blocking capacity probe.
+    HealthReq,
+    HealthReply { serving: bool, workers: u32, routable: u32, retired: u32 },
+    /// Client -> server: stop serving (acked, then the server exits its
+    /// accept loop; in-flight work still drains).
+    Shutdown,
+    ShutdownAck,
+}
+
+impl Msg {
+    fn type_id(&self) -> u8 {
+        match self {
+            Msg::Submit { .. } => 1,
+            Msg::Result { .. } => 2,
+            Msg::MetricsReq => 3,
+            Msg::MetricsReply(_) => 4,
+            Msg::HealthReq => 5,
+            Msg::HealthReply { .. } => 6,
+            Msg::Shutdown => 7,
+            Msg::ShutdownAck => 8,
+        }
+    }
+
+    /// Encode as a frame payload (version + type + body, no length
+    /// prefix — [`write_msg`] adds that).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(64);
+        out.push(WIRE_VERSION);
+        out.push(self.type_id());
+        match self {
+            Msg::Submit { id, kind, a, b } => {
+                put_u64(&mut out, *id);
+                put_kind(&mut out, *kind);
+                put_u64(&mut out, *a);
+                put_u64(&mut out, *b);
+            }
+            Msg::Result { id, value, latency_us, error } => {
+                put_u64(&mut out, *id);
+                put_u64(&mut out, *value);
+                put_u64(&mut out, *latency_us);
+                match error {
+                    None => out.push(0),
+                    Some(e) => {
+                        out.push(1);
+                        put_string(&mut out, e);
+                    }
+                }
+            }
+            Msg::MetricsReq | Msg::HealthReq | Msg::Shutdown | Msg::ShutdownAck => {}
+            Msg::MetricsReply(s) => put_snapshot(&mut out, s),
+            Msg::HealthReply { serving, workers, routable, retired } => {
+                out.push(*serving as u8);
+                put_u32(&mut out, *workers);
+                put_u32(&mut out, *routable);
+                put_u32(&mut out, *retired);
+            }
+        }
+        out
+    }
+
+    /// Decode a frame payload. Strict: every byte must be consumed.
+    pub fn from_bytes(bytes: &[u8]) -> Result<Msg> {
+        let mut c = Cursor { buf: bytes, pos: 0 };
+        let version = c.u8()?;
+        ensure!(version == WIRE_VERSION, "unsupported wire version {version}");
+        let type_id = c.u8()?;
+        let msg = match type_id {
+            1 => {
+                let id = c.u64()?;
+                let kind = c.kind()?;
+                let a = c.u64()?;
+                let b = c.u64()?;
+                Msg::Submit { id, kind, a, b }
+            }
+            2 => {
+                let id = c.u64()?;
+                let value = c.u64()?;
+                let latency_us = c.u64()?;
+                let error = match c.u8()? {
+                    0 => None,
+                    1 => Some(c.string()?),
+                    f => bail!("invalid option flag {f}"),
+                };
+                Msg::Result { id, value, latency_us, error }
+            }
+            3 => Msg::MetricsReq,
+            4 => Msg::MetricsReply(c.snapshot()?),
+            5 => Msg::HealthReq,
+            6 => {
+                let serving = c.bool()?;
+                let workers = c.u32()?;
+                let routable = c.u32()?;
+                let retired = c.u32()?;
+                Msg::HealthReply { serving, workers, routable, retired }
+            }
+            7 => Msg::Shutdown,
+            8 => Msg::ShutdownAck,
+            t => bail!("unknown message type {t}"),
+        };
+        ensure!(c.pos == bytes.len(), "trailing bytes after {} message", type_name(type_id));
+        Ok(msg)
+    }
+}
+
+fn type_name(t: u8) -> &'static str {
+    match t {
+        1 => "Submit",
+        2 => "Result",
+        3 => "MetricsReq",
+        4 => "MetricsReply",
+        5 => "HealthReq",
+        6 => "HealthReply",
+        7 => "Shutdown",
+        8 => "ShutdownAck",
+        _ => "unknown",
+    }
+}
+
+/// Write one frame: length prefix + payload.
+pub fn write_msg<W: Write>(w: &mut W, msg: &Msg) -> Result<()> {
+    let payload = msg.to_bytes();
+    ensure!(payload.len() <= MAX_FRAME, "frame too large: {} bytes", payload.len());
+    w.write_all(&(payload.len() as u32).to_le_bytes())?;
+    w.write_all(&payload)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read one frame. `Ok(None)` on a clean EOF at a frame boundary;
+/// EOF mid-frame, an implausible length prefix, or a malformed payload
+/// are errors.
+pub fn read_msg<R: Read>(r: &mut R) -> Result<Option<Msg>> {
+    let mut len_buf = [0u8; 4];
+    if !read_exact_or_eof(r, &mut len_buf)? {
+        return Ok(None);
+    }
+    let len = u32::from_le_bytes(len_buf) as usize;
+    ensure!((2..=MAX_FRAME).contains(&len), "implausible frame length {len}");
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload)?;
+    Ok(Some(Msg::from_bytes(&payload)?))
+}
+
+/// Fill `buf` completely; `Ok(false)` when EOF arrives before the first
+/// byte (a peer closing between frames), `Err` when it arrives mid-way.
+fn read_exact_or_eof<R: Read>(r: &mut R, buf: &mut [u8]) -> Result<bool> {
+    let mut got = 0;
+    while got < buf.len() {
+        match r.read(&mut buf[got..]) {
+            Ok(0) => {
+                ensure!(got == 0, "eof mid-frame ({got} of {} header bytes)", buf.len());
+                return Ok(false);
+            }
+            Ok(n) => got += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e.into()),
+        }
+    }
+    Ok(true)
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_string(out: &mut Vec<u8>, s: &str) {
+    put_u32(out, s.len() as u32);
+    out.extend_from_slice(s.as_bytes());
+}
+
+fn put_kind(out: &mut Vec<u8>, kind: FunctionKind) {
+    let (tag, bits) = match kind {
+        FunctionKind::Add(n) => (0u8, n),
+        FunctionKind::Mul(n) => (1, n),
+        FunctionKind::MulNaive(n) => (2, n),
+        FunctionKind::Xor(n) => (3, n),
+    };
+    out.push(tag);
+    put_u32(out, bits);
+}
+
+fn put_snapshot(out: &mut Vec<u8>, s: &MetricsSnapshot) {
+    for v in [s.submitted, s.completed, s.failed, s.batches, s.batched_items, s.busy_ns,
+        s.queue_depth]
+    {
+        put_u64(out, v);
+    }
+    put_u32(out, s.lat_bins.len() as u32);
+    for &b in &s.lat_bins {
+        put_u64(out, b);
+    }
+    put_u32(out, s.worker_health.len() as u32);
+    for w in &s.worker_health {
+        for v in [w.batches, w.scrubs, w.corrected, w.uncorrectable, w.stuck_detected,
+            w.remapped_rows, w.spares_left]
+        {
+            put_u64(out, v);
+        }
+        out.push(w.policy_level);
+        out.push(w.retired as u8);
+    }
+}
+
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        let end = self.pos.checked_add(n).ok_or_else(|| anyhow!("length overflow"))?;
+        ensure!(end <= self.buf.len(), "truncated frame: need {n} bytes at offset {}", self.pos);
+        let s = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn bool(&mut self) -> Result<bool> {
+        match self.u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            b => bail!("invalid bool byte {b}"),
+        }
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+
+    fn string(&mut self) -> Result<String> {
+        let n = self.u32()? as usize;
+        ensure!(n <= MAX_FRAME, "implausible string length {n}");
+        let bytes = self.take(n)?;
+        String::from_utf8(bytes.to_vec()).map_err(|_| anyhow!("invalid utf-8 in string"))
+    }
+
+    fn kind(&mut self) -> Result<FunctionKind> {
+        let tag = self.u8()?;
+        let bits = self.u32()?;
+        ensure!((1..=64).contains(&bits), "operand bits {bits} out of range");
+        Ok(match tag {
+            0 => FunctionKind::Add(bits),
+            1 => FunctionKind::Mul(bits),
+            2 => FunctionKind::MulNaive(bits),
+            3 => FunctionKind::Xor(bits),
+            t => bail!("unknown function kind tag {t}"),
+        })
+    }
+
+    fn snapshot(&mut self) -> Result<MetricsSnapshot> {
+        let submitted = self.u64()?;
+        let completed = self.u64()?;
+        let failed = self.u64()?;
+        let batches = self.u64()?;
+        let batched_items = self.u64()?;
+        let busy_ns = self.u64()?;
+        let queue_depth = self.u64()?;
+        let nbins = self.u32()? as usize;
+        ensure!(nbins <= 256, "implausible latency bin count {nbins}");
+        let mut lat_bins = Vec::with_capacity(nbins);
+        for _ in 0..nbins {
+            lat_bins.push(self.u64()?);
+        }
+        let nworkers = self.u32()? as usize;
+        ensure!(nworkers <= 1 << 20, "implausible worker count {nworkers}");
+        let mut worker_health = Vec::with_capacity(nworkers.min(4096));
+        for _ in 0..nworkers {
+            let batches = self.u64()?;
+            let scrubs = self.u64()?;
+            let corrected = self.u64()?;
+            let uncorrectable = self.u64()?;
+            let stuck_detected = self.u64()?;
+            let remapped_rows = self.u64()?;
+            let spares_left = self.u64()?;
+            let policy_level = self.u8()?;
+            let retired = self.bool()?;
+            worker_health.push(WorkerHealth {
+                batches,
+                scrubs,
+                corrected,
+                uncorrectable,
+                stuck_detected,
+                remapped_rows,
+                spares_left,
+                policy_level,
+                retired,
+            });
+        }
+        Ok(MetricsSnapshot {
+            submitted,
+            completed,
+            failed,
+            batches,
+            batched_items,
+            busy_ns,
+            queue_depth,
+            worker_health,
+            lat_bins,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn submit_roundtrip_and_layout() {
+        let msg = Msg::Submit { id: 7, kind: FunctionKind::Mul(16), a: 123, b: 456 };
+        let bytes = msg.to_bytes();
+        assert_eq!(bytes[0], WIRE_VERSION);
+        assert_eq!(bytes[1], 1);
+        assert_eq!(Msg::from_bytes(&bytes).unwrap(), msg);
+    }
+
+    #[test]
+    fn framing_roundtrip_over_a_byte_stream() {
+        let msgs = vec![
+            Msg::Submit { id: 1, kind: FunctionKind::Add(8), a: 2, b: 3 },
+            Msg::Result { id: 1, value: 5, latency_us: 12, error: None },
+            Msg::Result { id: 2, value: 0, latency_us: 9, error: Some("boom".into()) },
+            Msg::MetricsReq,
+            Msg::HealthReply { serving: true, workers: 4, routable: 3, retired: 1 },
+            Msg::Shutdown,
+            Msg::ShutdownAck,
+        ];
+        let mut stream = Vec::new();
+        for m in &msgs {
+            write_msg(&mut stream, m).unwrap();
+        }
+        let mut r: &[u8] = &stream;
+        for m in &msgs {
+            assert_eq!(&read_msg(&mut r).unwrap().expect("frame"), m);
+        }
+        assert!(read_msg(&mut r).unwrap().is_none(), "clean EOF after the last frame");
+    }
+
+    #[test]
+    fn snapshot_roundtrip() {
+        let snap = MetricsSnapshot {
+            submitted: 10,
+            completed: 8,
+            failed: 2,
+            batches: 3,
+            batched_items: 10,
+            busy_ns: 12345,
+            queue_depth: 1,
+            lat_bins: vec![0, 4, 3, 1],
+            worker_health: vec![
+                WorkerHealth { batches: 3, scrubs: 1, retired: true, ..Default::default() },
+                WorkerHealth::default(),
+            ],
+        };
+        let msg = Msg::MetricsReply(snap);
+        assert_eq!(Msg::from_bytes(&msg.to_bytes()).unwrap(), msg);
+    }
+
+    #[test]
+    fn rejects_version_type_and_trailing_garbage() {
+        let good = Msg::MetricsReq.to_bytes();
+        let mut wrong_version = good.clone();
+        wrong_version[0] = WIRE_VERSION + 1;
+        assert!(Msg::from_bytes(&wrong_version).is_err());
+        let mut wrong_type = good.clone();
+        wrong_type[1] = 200;
+        assert!(Msg::from_bytes(&wrong_type).is_err());
+        let mut trailing = good;
+        trailing.push(0);
+        assert!(Msg::from_bytes(&trailing).is_err());
+        assert!(Msg::from_bytes(&[]).is_err());
+    }
+}

@@ -67,6 +67,14 @@ pub struct HealthConfig {
     pub escalate_uncorrected: u64,
     /// Detected stuck cells beyond which the crossbar is retired.
     pub retire_stuck_cells: u64,
+    /// De-escalation: after this many consecutive *clean* scrub passes
+    /// (no drift corrected on either path since the previous pass, no
+    /// uncorrectable blocks, no new stuck cells), the escalation steps
+    /// back one level (ECC+TMR -> ECC -> base). The telemetry counters
+    /// are floored at each step so only events *after* the step-down
+    /// re-escalate. 0 disables (escalation is then one-way, the
+    /// pre-de-escalation behavior). Spare exhaustion never de-escalates.
+    pub deescalate_after: u64,
     pub seed: u64,
 }
 
@@ -81,6 +89,7 @@ impl Default for HealthConfig {
             escalate_corrected: 64,
             escalate_uncorrected: 4,
             retire_stuck_cells: 256,
+            deescalate_after: 0,
             seed: 0x4EA1,
         }
     }
@@ -135,6 +144,20 @@ pub struct CrossbarHealth {
     scrub_cursor: usize,
     last_scrub_batch: u64,
     exhausted: bool,
+    /// Sticky escalation level: raised whenever telemetry warrants,
+    /// lowered only by the de-escalation path in [`Self::scrub`].
+    esc_level: u8,
+    /// Consecutive clean scrub passes (de-escalation streak).
+    clean_scrubs: u64,
+    /// Telemetry floors, rebased at each de-escalation so only events
+    /// newer than the last step-down count toward re-escalation.
+    floor_corrected: u64,
+    floor_uncorrectable: u64,
+    floor_stuck: u64,
+    /// `drift_corrected` as of the previous scrub pass (a clean interval
+    /// requires zero serving-path corrections too, not just clean scrub
+    /// findings).
+    drift_at_last_scrub: u64,
     stats: HealthStats,
 }
 
@@ -150,6 +173,12 @@ impl CrossbarHealth {
             scrub_cursor: 0,
             last_scrub_batch: 0,
             exhausted: false,
+            esc_level: 0,
+            clean_scrubs: 0,
+            floor_corrected: 0,
+            floor_uncorrectable: 0,
+            floor_stuck: 0,
+            drift_at_last_scrub: 0,
             stats: HealthStats::default(),
         }
     }
@@ -285,10 +314,38 @@ impl CrossbarHealth {
                 ecc.encode(state);
             }
         }
+
+        // De-escalation (§Health follow-on): a fully clean pass — no
+        // drift corrected by scrub OR the serving path since the last
+        // pass, no uncorrectable blocks, no new stuck cells — extends
+        // the streak; once it reaches `deescalate_after`, step the
+        // escalation back one level and rebase the telemetry floors so
+        // only fresh events re-escalate. Any event resets the streak.
+        self.esc_level = self.esc_level.max(self.telemetry_level());
+        let drift_delta = self.stats.drift_corrected - self.drift_at_last_scrub;
+        self.drift_at_last_scrub = self.stats.drift_corrected;
+        let clean = rep.corrected == 0
+            && rep.uncorrectable == 0
+            && rep.detected == 0
+            && drift_delta == 0
+            && !self.exhausted;
+        if !clean {
+            self.clean_scrubs = 0;
+        } else if self.cfg.deescalate_after > 0 {
+            self.clean_scrubs += 1;
+            if self.clean_scrubs >= self.cfg.deescalate_after && self.level() > 0 {
+                self.esc_level = self.level() - 1;
+                self.floor_corrected = self.stats.scrub_corrected + self.stats.drift_corrected;
+                self.floor_uncorrectable = self.stats.scrub_uncorrectable;
+                self.floor_stuck = self.stats.stuck_detected;
+                self.clean_scrubs = 0;
+            }
+        }
         rep
     }
 
-    /// Escalation level from observed telemetry (never de-escalates).
+    /// Escalation level warranted by telemetry accumulated since the
+    /// last de-escalation floor.
     ///
     /// Level 1 (+ECC) fires on the first detected persistent fault —
     /// the march test needs no ECC, so this is the only drift-blind
@@ -296,22 +353,35 @@ impl CrossbarHealth {
     /// (+TMR) fires on signals that single-error correction is losing:
     /// uncorrectable blocks, spare exhaustion, or a corrected-drift
     /// count past `escalate_corrected` (observable once ECC is on).
-    fn level(&self) -> u8 {
-        let corrected = self.stats.scrub_corrected + self.stats.drift_corrected;
-        if self.stats.scrub_uncorrectable >= self.cfg.escalate_uncorrected
+    fn telemetry_level(&self) -> u8 {
+        let corrected = (self.stats.scrub_corrected + self.stats.drift_corrected)
+            .saturating_sub(self.floor_corrected);
+        let uncorrectable =
+            self.stats.scrub_uncorrectable.saturating_sub(self.floor_uncorrectable);
+        let stuck = self.stats.stuck_detected.saturating_sub(self.floor_stuck);
+        if uncorrectable >= self.cfg.escalate_uncorrected
             || corrected >= self.cfg.escalate_corrected
             || self.exhausted
         {
             2
-        } else if self.stats.stuck_detected > 0 {
+        } else if stuck > 0 {
             1
         } else {
             0
         }
     }
 
+    /// The live escalation level: sticky across clean intervals, stepped
+    /// down only by the de-escalation path (spare exhaustion pins it at
+    /// 2 through `telemetry_level`).
+    fn level(&self) -> u8 {
+        self.esc_level.max(self.telemetry_level())
+    }
+
     /// The reliability policy this crossbar should run, given the
-    /// configured base policy: escalation only ever adds protection.
+    /// configured base policy: escalation only ever adds protection on
+    /// top of `base`, and de-escalation (when `deescalate_after` is
+    /// set) only removes what escalation added — never base protection.
     pub fn recommended_policy(&self, base: ReliabilityPolicy) -> ReliabilityPolicy {
         let mut p = base;
         let level = self.level();
@@ -431,6 +501,80 @@ mod tests {
         let p3 = h.recommended_policy(strong);
         assert_eq!(p3.ecc_m, Some(8));
         assert_eq!(p3.tmr, TmrMode::Parallel);
+    }
+
+    #[test]
+    fn deescalation_steps_back_through_the_full_cycle() {
+        // Escalate base(None) -> +ECC -> +ECC+TMR from telemetry, then
+        // watch clean scrub intervals walk it back one level at a time,
+        // and a fresh fault re-escalate from the rebased floors.
+        let mut cfg = immortal_cfg(4);
+        cfg.deescalate_after = 2;
+        let mut h = CrossbarHealth::new(32, 64, cfg, 7);
+        let base = ReliabilityPolicy::none();
+        let mut state = BitMatrix::zeros(32, 64);
+
+        // A detected stuck cell: level 1 (+ECC).
+        h.inject_stuck(3, 3, true);
+        h.scrub(&mut state, None);
+        assert_eq!(h.stats().level, 1);
+        assert_eq!(h.recommended_policy(base).ecc_m, Some(16));
+        assert_eq!(h.recommended_policy(base).tmr, TmrMode::Off);
+
+        // Uncorrectable pressure: level 2 (+TMR). The dirty pass that
+        // found the stuck cell has already reset the clean streak.
+        h.stats.scrub_uncorrectable = h.cfg.escalate_uncorrected;
+        assert_eq!(h.recommended_policy(base).tmr, TmrMode::Serial);
+
+        // Two clean passes (the stuck cell is known + remapped, so the
+        // march finds nothing new): step back to level 1.
+        h.scrub(&mut state, None);
+        assert_eq!(h.stats().level, 2, "one clean pass is not enough");
+        h.scrub(&mut state, None);
+        assert_eq!(h.stats().level, 1, "ECC+TMR -> ECC after the clean streak");
+        let p = h.recommended_policy(base);
+        assert_eq!((p.ecc_m, p.tmr), (Some(16), TmrMode::Off));
+
+        // Two more clean passes: fully back to the base policy.
+        h.scrub(&mut state, None);
+        h.scrub(&mut state, None);
+        assert_eq!(h.stats().level, 0, "ECC -> base after a second streak");
+        assert_eq!(h.recommended_policy(base), base);
+
+        // A fresh fault re-escalates: the floors were rebased, so one
+        // *new* stuck cell suffices even though old telemetry is larger.
+        h.inject_stuck(9, 20, false);
+        h.scrub(&mut state, None);
+        assert_eq!(h.stats().level, 1);
+        assert_eq!(h.recommended_policy(base).ecc_m, Some(16));
+
+        // deescalate_after = 0 disables the path entirely.
+        let mut h1 = CrossbarHealth::new(32, 64, immortal_cfg(4), 9);
+        h1.inject_stuck(2, 2, true);
+        h1.scrub(&mut state, None);
+        for _ in 0..16 {
+            h1.scrub(&mut state, None);
+        }
+        assert_eq!(h1.stats().level, 1, "escalation stays one-way by default");
+    }
+
+    #[test]
+    fn exhaustion_never_deescalates() {
+        // One spare, two bad active rows: the pool exhausts; the level
+        // is pinned at 2 no matter how many clean passes follow.
+        let mut cfg = immortal_cfg(1);
+        cfg.deescalate_after = 1;
+        cfg.retire_stuck_cells = 1000;
+        let mut h = CrossbarHealth::new(16, 32, cfg, 3);
+        let mut state = BitMatrix::zeros(16, 32);
+        h.inject_stuck(1, 1, true);
+        h.inject_stuck(2, 1, true);
+        h.scrub(&mut state, None);
+        assert_eq!(h.stats().level, 2);
+        for _ in 0..4 {
+            h.scrub(&mut state, None);
+        }
+        assert_eq!(h.stats().level, 2, "spare exhaustion is permanent");
     }
 
     #[test]

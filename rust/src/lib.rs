@@ -12,7 +12,8 @@
 //!   stateful logic, micro-op programs, arithmetic synthesis, soft errors.
 //! * [`ecc`], [`tmr`], [`health`] — the paper's reliability contributions
 //!   plus the online fault manager (scrubbing, spare remapping, wear-out).
-//! * [`mmpu`], [`coordinator`] — the controller and the request path.
+//! * [`mmpu`], [`coordinator`], [`fabric`] — the controller, the
+//!   request path, and the sharded multi-process serving layer.
 //! * [`runtime`] — PJRT execution of the AOT-lowered JAX/Pallas kernels.
 //! * [`nn`], [`analysis`], [`bitlet`] — the case study and the
 //!   figure/table reproductions.
@@ -28,6 +29,7 @@ pub mod bitlet;
 pub mod coordinator;
 pub mod ecc;
 pub mod errs;
+pub mod fabric;
 pub mod health;
 pub mod isa;
 pub mod mmpu;

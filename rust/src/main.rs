@@ -9,13 +9,30 @@
 //! remus fig5  [--tmax 1e8]
 //! remus overhead                      # ECC latency overhead table (E8)
 //! remus tradeoff                      # TMR trade-off table (E9)
-//! remus serve [--requests 4096 --workers 4]   # coordinator load demo
+//! remus serve [--requests 4096 --workers 4 --shards a:p,b:p]
+//!                                     # coordinator load demo (with
+//!                                     # --shards: same load through a
+//!                                     # fabric router instead)
 //! remus soak  [--requests 1000000 --workers 4 --endurance 3e4]
 //!                                     # §Health long-running soak:
 //!                                     # nominal errors + wear-out, with
 //!                                     # vs without the health manager
 //! remus lifetime [--batches 512 --p-input 1e-4]
 //!                                     # degradation vs closed form
+//! remus fabric-serve [--addr 127.0.0.1:4870 --workers 4 --spares 0
+//!                     --health --endurance 3e4]
+//!                                     # one fabric shard: TCP front end
+//!                                     # over one coordinator; prints
+//!                                     # "LISTENING <addr>" then serves
+//!                                     # until a Shutdown frame
+//! remus fabric-route --shards a:p,b:p [--requests 8192]
+//!                                     # client-side consistent-hash
+//!                                     # router over running shards
+//! remus fabric-soak [--shards 2 --requests 100000 --workers 2]
+//!                                     # §Scale loopback soak: spawns
+//!                                     # one fabric-serve *process* per
+//!                                     # shard, shards load across them,
+//!                                     # merges fleet health
 //! ```
 
 use anyhow::Result;
@@ -23,8 +40,9 @@ use anyhow::Result;
 use remus::analysis::lifetime::{simulate, LifetimeConfig};
 use remus::analysis::{fig4::MultReliability, overhead};
 use remus::bitlet::BitletModel;
-use remus::coordinator::{Coordinator, CoordinatorConfig};
+use remus::coordinator::{Coordinator, CoordinatorConfig, MetricsSnapshot, Submitter};
 use remus::errs::ErrorModel;
+use remus::fabric::{shutdown_endpoint, FabricServer, Router};
 use remus::health::{HealthConfig, WearModel};
 use remus::mmpu::{controller::quick_exec, FunctionKind, ReliabilityPolicy};
 use remus::nn::degradation::DegradationModel;
@@ -46,10 +64,14 @@ fn main() -> Result<()> {
         Some("serve") => serve(&args),
         Some("soak") => soak(&args),
         Some("lifetime") => lifetime_cmd(&args),
+        Some("fabric-serve") => fabric_serve(&args),
+        Some("fabric-route") => fabric_route(&args),
+        Some("fabric-soak") => fabric_soak(&args),
         _ => {
             eprintln!(
-                "usage: remus <info|demo|fig4|fig5|overhead|tradeoff|serve|soak|lifetime> \
-                 [--opts]\n see doc comments in rust/src/main.rs"
+                "usage: remus <info|demo|fig4|fig5|overhead|tradeoff|serve|soak|lifetime|\
+                 fabric-serve|fabric-route|fabric-soak> [--opts]\n \
+                 see doc comments in rust/src/main.rs"
             );
             Ok(())
         }
@@ -210,14 +232,31 @@ fn tradeoff(_args: &Args) -> Result<()> {
 fn serve(args: &Args) -> Result<()> {
     let requests = args.get_or("requests", 4096u64);
     let workers = args.get_or("workers", 4usize);
+    // The load path is Submitter-generic: --shards swaps the in-process
+    // coordinator for a fabric router over running shard endpoints with
+    // no other change.
+    if let Some(shards) = args.get("shards") {
+        let addrs: Vec<String> = shards.split(',').map(str::to_string).collect();
+        let router = Router::connect(&addrs)?;
+        println!("serving through the fabric router over {} shards", addrs.len());
+        serve_load(&router, requests)?;
+        router.shutdown();
+        return Ok(());
+    }
     let coord = Coordinator::start(CoordinatorConfig {
         workers,
         policy: ReliabilityPolicy { ecc_m: None, tmr: TmrMode::Serial },
         ..Default::default()
     })?;
+    serve_load(&coord, requests)?;
+    coord.shutdown();
+    Ok(())
+}
+
+fn serve_load(sub: &dyn Submitter, requests: u64) -> Result<()> {
     let t0 = std::time::Instant::now();
     let rxs: Vec<_> = (0..requests)
-        .map(|i| (i, coord.submit(FunctionKind::Mul(16), i % 1000, (i * 7) % 1000)))
+        .map(|i| (i, sub.submit(FunctionKind::Mul(16), i % 1000, (i * 7) % 1000)))
         .collect();
     let mut ok = 0u64;
     let mut errors = 0u64;
@@ -231,7 +270,7 @@ fn serve(args: &Args) -> Result<()> {
         }
     }
     let dt = t0.elapsed();
-    let m = coord.metrics();
+    let m = sub.metrics();
     println!(
         "served {requests} requests in {:.2?}: {:.0} req/s, correct {ok}/{requests} \
          ({errors} error results)",
@@ -245,13 +284,72 @@ fn serve(args: &Args) -> Result<()> {
         m.latency_percentile_us(50.0),
         m.latency_percentile_us(99.0)
     );
-    coord.shutdown();
     Ok(())
 }
 
-/// One soak configuration: open-loop load in bounded waves, correctness
-/// checked client-side (a wrong value = an uncorrected error escaping to
-/// the user). Adds a table row and returns the throughput in req/s.
+/// Open-loop load in bounded waves over any [`Submitter`] — the same
+/// generator drives the in-process coordinator (`remus soak`) and the
+/// sharded fabric router (`remus fabric-route` / `fabric-soak`).
+/// Returns (ok, wrong, error_results, elapsed).
+fn drive_load(
+    sub: &dyn Submitter,
+    kinds: &[FunctionKind],
+    requests: u64,
+    chunk: u64,
+) -> (u64, u64, u64, std::time::Duration) {
+    let (mut ok, mut wrong, mut errs) = (0u64, 0u64, 0u64);
+    let t0 = std::time::Instant::now();
+    let mut sent = 0u64;
+    while sent < requests {
+        let n = chunk.min(requests - sent);
+        let rxs: Vec<_> = (0..n)
+            .map(|i| {
+                let v = sent + i;
+                let kind = kinds[(v % kinds.len() as u64) as usize];
+                let (a, b) = (v % 251, (v * 7) % 251);
+                (kind, a, b, sub.submit(kind, a, b))
+            })
+            .collect();
+        for (kind, a, b, rx) in rxs {
+            match rx.recv() {
+                Ok(r) if r.is_ok() => {
+                    // A wrong value = an uncorrected error escaping to
+                    // the user (checked against the library's oracle).
+                    if r.value == kind.reference(a, b) {
+                        ok += 1;
+                    } else {
+                        wrong += 1;
+                    }
+                }
+                _ => errs += 1,
+            }
+        }
+        sent += n;
+    }
+    (ok, wrong, errs, t0.elapsed())
+}
+
+/// Per-worker §Health lines from a (possibly fleet-merged) snapshot.
+fn print_worker_health(label: &str, m: &MetricsSnapshot) {
+    for (w, wh) in m.worker_health.iter().enumerate() {
+        if wh.batches > 0 {
+            println!(
+                "  [{label}] worker {w}: {} batches, {} scrubs, corrected {}, \
+                 stuck {} (remapped {} rows, {} spares left), level {}{}",
+                wh.batches,
+                wh.scrubs,
+                wh.corrected,
+                wh.stuck_detected,
+                wh.remapped_rows,
+                wh.spares_left,
+                wh.policy_level,
+                if wh.retired { ", RETIRED" } else { "" }
+            );
+        }
+    }
+}
+
+/// One soak configuration: adds a table row, returns req/s.
 fn soak_run(
     label: &str,
     health: Option<HealthConfig>,
@@ -269,34 +367,7 @@ fn soak_run(
         health,
         ..Default::default()
     })?;
-    let kind = FunctionKind::Add(8);
-    let (mut ok, mut wrong, mut errs) = (0u64, 0u64, 0u64);
-    let t0 = std::time::Instant::now();
-    let mut sent = 0u64;
-    let chunk = 8192u64;
-    while sent < requests {
-        let n = chunk.min(requests - sent);
-        let rxs: Vec<_> = (0..n)
-            .map(|i| {
-                let v = sent + i;
-                (v, coord.submit(kind, v % 251, (v * 7) % 251))
-            })
-            .collect();
-        for (v, rx) in rxs {
-            match rx.recv() {
-                Ok(r) if r.is_ok() => {
-                    if r.value == v % 251 + (v * 7) % 251 {
-                        ok += 1;
-                    } else {
-                        wrong += 1;
-                    }
-                }
-                _ => errs += 1,
-            }
-        }
-        sent += n;
-    }
-    let dt = t0.elapsed();
+    let (ok, wrong, errs, dt) = drive_load(&coord, &[FunctionKind::Add(8)], requests, 8192);
     let tp = requests as f64 / dt.as_secs_f64();
     let m = coord.metrics();
     t.row(&[
@@ -307,22 +378,7 @@ fn soak_run(
         errs.to_string(),
         format!("{}/{workers}", m.retired_workers()),
     ]);
-    for (w, wh) in m.worker_health.iter().enumerate() {
-        if wh.batches > 0 {
-            println!(
-                "  [{label}] worker {w}: {} batches, {} scrubs, corrected {}, \
-                 stuck {} (remapped {} rows, {} spares left), level {}{}",
-                wh.batches,
-                wh.scrubs,
-                wh.corrected,
-                wh.stuck_detected,
-                wh.remapped_rows,
-                wh.spares_left,
-                wh.policy_level,
-                if wh.retired { ", RETIRED" } else { "" }
-            );
-        }
-    }
+    print_worker_health(label, &m);
     coord.shutdown();
     Ok(tp)
 }
@@ -391,4 +447,193 @@ fn lifetime_cmd(args: &Args) -> Result<()> {
         rel_blocks * 100.0
     );
     Ok(())
+}
+
+/// Build one shard's coordinator config from CLI options (shared by
+/// `fabric-serve`; `fabric-soak` passes the same flags to its children).
+fn shard_config(args: &Args) -> CoordinatorConfig {
+    CoordinatorConfig {
+        workers: args.get_or("workers", 4usize),
+        rows: args.get_or("rows", 64usize),
+        cols: args.get_or("cols", 1024usize),
+        spare_workers: args.get_or("spares", 0usize),
+        errors: if args.flag("nominal-errors") {
+            ErrorModel::nominal()
+        } else {
+            ErrorModel::none()
+        },
+        seed: args.get_or("seed", 0xC0u64),
+        max_batch: args.get_or("max-batch", 64usize),
+        max_wait: std::time::Duration::from_micros(args.get_or("max-wait-us", 300u64)),
+        health: if args.flag("health") {
+            Some(HealthConfig {
+                wear: WearModel::accelerated(args.get_or("endurance", 3e4f64)),
+                spare_rows: 8,
+                ..Default::default()
+            })
+        } else {
+            None
+        },
+        ..Default::default()
+    }
+}
+
+/// One fabric shard process: a TCP front end over one coordinator.
+/// Prints `LISTENING <addr>` (parsed by the `fabric-soak` parent when
+/// binding port 0), then serves until a `Shutdown` frame arrives.
+fn fabric_serve(args: &Args) -> Result<()> {
+    let addr = args.get("addr").unwrap_or("127.0.0.1:4870");
+    let server = FabricServer::start(addr, shard_config(args))?;
+    println!("LISTENING {}", server.local_addr());
+    use std::io::Write as _;
+    std::io::stdout().flush()?;
+    server.wait();
+    eprintln!("fabric-serve: shutdown frame received, draining");
+    server.shutdown();
+    Ok(())
+}
+
+/// Client-side router over already-running shard endpoints.
+fn fabric_route(args: &Args) -> Result<()> {
+    let shards: Vec<String> = args
+        .get("shards")
+        .unwrap_or("127.0.0.1:4870")
+        .split(',')
+        .map(str::to_string)
+        .collect();
+    let requests = args.get_or("requests", 8192u64);
+    let router = Router::connect(&shards)?;
+    // add8 and xor16 land on different shards of a 2-entry ring.
+    let kinds = [FunctionKind::Add(8), FunctionKind::Xor(16), FunctionKind::Mul(8)];
+    for k in kinds {
+        println!("  {} -> shard {:?}", k.name(), router.shard_for(k));
+    }
+    let (ok, wrong, errs, dt) = drive_load(&router, &kinds, requests, 4096);
+    println!(
+        "routed {requests} requests over {}/{} live shards in {dt:.2?}: {:.0} req/s \
+         (ok {ok}, wrong {wrong}, error results {errs})",
+        router.live_shards(),
+        shards.len(),
+        requests as f64 / dt.as_secs_f64()
+    );
+    let m = router.metrics();
+    println!(
+        "fleet: completed={} failed={} mean_batch={:.1} p50={}us p99={}us retired={}",
+        m.completed,
+        m.failed,
+        m.mean_batch_size(),
+        m.latency_percentile_us(50.0),
+        m.latency_percentile_us(99.0),
+        m.retired_workers()
+    );
+    print_worker_health("fleet", &m);
+    router.shutdown();
+    Ok(())
+}
+
+/// One spawned `fabric-serve` shard process: the child plus its stdout
+/// reader (kept open so the child never writes into a closed pipe).
+type ShardProc = (std::process::Child, std::io::BufReader<std::process::ChildStdout>);
+
+/// Spawn one `fabric-serve` child on an ephemeral loopback port and
+/// parse its `LISTENING <addr>` banner.
+fn spawn_shard(args: &Args, exe: &std::path::Path, shard: usize) -> Result<(ShardProc, String)> {
+    let workers = args.get_or("workers", 2usize);
+    let mut cmd = std::process::Command::new(exe);
+    cmd.args(["fabric-serve", "--addr", "127.0.0.1:0"])
+        .args(["--workers", &workers.to_string()])
+        .args(["--seed", &(0xC0 + shard as u64).to_string()])
+        .stdout(std::process::Stdio::piped());
+    // Forward every shard_config option so the children run exactly the
+    // configuration the user asked for.
+    for key in ["rows", "cols", "spares", "max-batch", "max-wait-us", "endurance"] {
+        if let Some(v) = args.get(key) {
+            cmd.arg(format!("--{key}")).arg(v);
+        }
+    }
+    for flag in ["health", "nominal-errors"] {
+        if args.flag(flag) {
+            cmd.arg(format!("--{flag}"));
+        }
+    }
+    let mut child = cmd.spawn()?;
+    use std::io::BufRead as _;
+    let stdout = child.stdout.take().expect("piped child stdout");
+    let mut reader = std::io::BufReader::new(stdout);
+    let mut line = String::new();
+    if let Err(e) = reader.read_line(&mut line) {
+        let _ = child.kill();
+        let _ = child.wait();
+        return Err(e.into());
+    }
+    let Some(addr) = line.trim().strip_prefix("LISTENING ") else {
+        let _ = child.kill();
+        let _ = child.wait();
+        return Err(anyhow::anyhow!("unexpected shard banner: {line:?}"));
+    };
+    let addr = addr.to_string();
+    println!("shard {shard}: pid {} on {addr}", child.id());
+    Ok(((child, reader), addr))
+}
+
+/// §Scale loopback soak: spawn one `fabric-serve` *process* per shard
+/// on an ephemeral loopback port, shard an open-loop load across them
+/// through the router, then stop the fleet over the wire. The fleet is
+/// always torn down — also on error paths — so no child outlives the
+/// parent.
+fn fabric_soak(args: &Args) -> Result<()> {
+    let nshards = args.get_or("shards", 2usize);
+    let requests = args.get_or("requests", 100_000u64);
+    let exe = std::env::current_exe()?;
+    let mut children: Vec<ShardProc> = Vec::new();
+    let mut addrs: Vec<String> = Vec::new();
+    let mut setup_err = None;
+    for shard in 0..nshards {
+        match spawn_shard(args, &exe, shard) {
+            Ok((proc_, addr)) => {
+                children.push(proc_);
+                addrs.push(addr);
+            }
+            Err(e) => {
+                setup_err = Some(e);
+                break;
+            }
+        }
+    }
+    // Drive the load only with a fully spawned fleet; either way, fall
+    // through to the teardown below.
+    let result = match setup_err {
+        Some(e) => Err(e),
+        None => (|| {
+            let router = Router::connect(&addrs)?;
+            let kinds = [FunctionKind::Add(8), FunctionKind::Xor(16)];
+            let (ok, wrong, errs, dt) = drive_load(&router, &kinds, requests, 8192);
+            println!(
+                "fabric soak: {requests} requests over {nshards} shard processes in \
+                 {dt:.2?}: {:.0} req/s (ok {ok}, wrong {wrong}, error results {errs})",
+                requests as f64 / dt.as_secs_f64()
+            );
+            let m = router.metrics();
+            println!(
+                "fleet: completed={} failed={} retired={}/{}",
+                m.completed,
+                m.failed,
+                m.retired_workers(),
+                m.worker_health.len()
+            );
+            print_worker_health("fleet", &m);
+            router.shutdown();
+            Ok(())
+        })(),
+    };
+    // Teardown: graceful Shutdown frame first, kill as the fallback.
+    for (i, (mut child, _reader)) in children.into_iter().enumerate() {
+        let graceful = addrs.get(i).map(|a| shutdown_endpoint(a));
+        if let Some(Err(e)) = graceful {
+            eprintln!("fabric-soak: shard {i} wire shutdown failed ({e:#}); killing");
+            let _ = child.kill();
+        }
+        let _ = child.wait();
+    }
+    result
 }

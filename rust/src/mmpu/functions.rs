@@ -39,6 +39,19 @@ impl FunctionKind {
             | FunctionKind::Xor(n) => *n,
         }
     }
+
+    /// Golden scalar semantics for in-range operands — what a
+    /// fault-free execution returns. Load generators, benches and the
+    /// fabric tests check served values against this single oracle
+    /// instead of each keeping their own copy of the kind -> operator
+    /// mapping.
+    pub fn reference(&self, a: u64, b: u64) -> u64 {
+        match self {
+            FunctionKind::Add(_) => a + b,
+            FunctionKind::Mul(_) | FunctionKind::MulNaive(_) => a * b,
+            FunctionKind::Xor(_) => a ^ b,
+        }
+    }
 }
 
 /// A synthesized function: program + operand/result column map.
@@ -129,5 +142,13 @@ mod tests {
         assert_eq!(FunctionKind::Mul(32).name(), "mul32");
         assert_eq!(FunctionKind::Mul(32).operand_bits(), 32);
         assert_eq!(FunctionSpec::build(FunctionKind::Xor(4)).result_mask(), 0xF);
+    }
+
+    #[test]
+    fn reference_oracle() {
+        assert_eq!(FunctionKind::Add(8).reference(20, 22), 42);
+        assert_eq!(FunctionKind::Mul(8).reference(7, 6), 42);
+        assert_eq!(FunctionKind::MulNaive(8).reference(7, 6), 42);
+        assert_eq!(FunctionKind::Xor(8).reference(0b1100, 0b1010), 0b0110);
     }
 }

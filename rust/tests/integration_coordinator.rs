@@ -192,6 +192,69 @@ fn wear_out_retires_crossbar_and_errors_explicitly() {
 }
 
 #[test]
+fn hot_spare_restores_routing_capacity_after_retirement() {
+    // Same lethal-wear setup as above, but with one cold spare: when
+    // worker 0's crossbar retires, the spare must be activated so
+    // routing capacity is restored (requests keep succeeding) instead
+    // of the fleet shrinking to zero.
+    let coord = Coordinator::start(CoordinatorConfig {
+        workers: 1,
+        spare_workers: 1,
+        rows: 16,
+        cols: 256,
+        max_batch: 1,
+        max_wait: Duration::from_micros(10),
+        health: Some(HealthConfig {
+            wear: WearModel::accelerated(1e-6), // dead after any switching
+            spare_rows: 2,
+            scrub_interval: 1,
+            scrub_rows_per_pass: 16,
+            retire_stuck_cells: 8,
+            ..Default::default()
+        }),
+        ..Default::default()
+    })
+    .unwrap();
+    assert_eq!(coord.healthy_workers(), 1, "the spare is cold, not routable");
+    // Request 1 executes on worker 0 before wear lands; the post-batch
+    // scrub then detects the worn crossbar and retires it, activating
+    // the spare.
+    let r = coord
+        .submit(FunctionKind::Add(8), 20, 22)
+        .recv_timeout(Duration::from_secs(10))
+        .expect("first result");
+    assert!(r.is_ok());
+    assert_eq!(r.value, 42);
+    // Capacity must be restored: the next request lands on the spare's
+    // fresh crossbar (worker 0's queued leftovers requeue onto it too)
+    // and succeeds. The spare then wears out and retires in turn.
+    let r = coord
+        .submit(FunctionKind::Add(8), 7, 8)
+        .recv_timeout(Duration::from_secs(10))
+        .expect("second result");
+    assert!(r.is_ok(), "spare must restore capacity: {:?}", r.error);
+    assert_eq!(r.value, 15);
+    // Drive the spare through its own wear-out/retirement: eventually
+    // the fleet is empty and requests error explicitly.
+    let mut errors = 0;
+    for i in 0..50u64 {
+        let r = coord
+            .submit(FunctionKind::Add(8), i, 1)
+            .recv_timeout(Duration::from_secs(10))
+            .expect("resolved result, never a hang");
+        if !r.is_ok() {
+            errors += 1;
+        }
+    }
+    assert!(errors > 0, "with the spare also retired, errors surface explicitly");
+    assert!(!coord.is_serving(), "retire-all flips the capacity probe");
+    let m = coord.metrics();
+    assert_eq!(m.worker_health.len(), 2, "active + spare in the health table");
+    assert_eq!(m.retired_workers(), 2, "both crossbars retired in the end");
+    coord.shutdown();
+}
+
+#[test]
 fn health_on_clean_hardware_is_transparent() {
     // A healthy fleet with the manager enabled must behave exactly like
     // the plain fleet: correct results, no retirement, no escalation.
