@@ -10,12 +10,15 @@
 //! ```bash
 //! cargo run --release --example serve -- --requests 8192 --workers 4
 //! cargo run --release --example serve -- --shards 127.0.0.1:4870,127.0.0.1:4871
+//! # registration-based discovery: no static shard list, shards
+//! # announce themselves (remus fabric-serve --register <printed addr>)
+//! cargo run --release --example serve -- --listen-reg 127.0.0.1:0
 //! ```
 
 use anyhow::Result;
 use remus::coordinator::{Coordinator, CoordinatorConfig, Submitter};
 use remus::errs::ErrorModel;
-use remus::fabric::Router;
+use remus::fabric::{Router, RouterConfig};
 use remus::mmpu::{FunctionKind, ReliabilityPolicy};
 use remus::tmr::TmrMode;
 use remus::util::cli::Args;
@@ -91,12 +94,27 @@ fn main() -> Result<()> {
         "coordinator under load",
         &["policy", "req/s", "correct", "mean_batch", "p50_us", "p99_us"],
     );
-    // Remote mode: the identical load through the fabric router.
-    if let Some(shards) = args.get("shards") {
-        let addrs: Vec<String> = shards.split(',').map(str::to_string).collect();
-        println!("open-loop load: {requests} mixed requests over {} shards\n", addrs.len());
-        let router = Router::connect(&addrs)?;
+    // Remote mode: the identical load through the fabric router, over a
+    // static shard list and/or registration-discovered shards.
+    if args.get("shards").is_some() || args.get("listen-reg").is_some() {
+        let addrs: Vec<String> = args
+            .get("shards")
+            .map(|s| s.split(',').map(str::to_string).collect())
+            .unwrap_or_default();
+        let cfg = RouterConfig {
+            listen: args.get("listen-reg").map(str::to_string),
+            ..Default::default()
+        };
+        let router = Router::with_config(&addrs, cfg)?;
+        let min = args.get_or("min-shards", addrs.len().max(1));
+        router.announce_and_wait(min, Duration::from_secs(30), "serve example");
+        println!(
+            "open-loop load: {requests} mixed requests over {} shards\n",
+            router.shard_count()
+        );
         run_load("fabric (remote policy)", &router, requests, &mut t)?;
+        let m = router.metrics();
+        println!("fleet shards: {} total, {} down", m.shards_total, m.shards_down);
         router.shutdown();
         t.print();
         return Ok(());

@@ -79,6 +79,8 @@ impl Metrics {
             queue_depth: self.queue_depth.load(Ordering::Relaxed),
             lat_bins: bins,
             worker_health: self.worker_health.lock().unwrap().clone(),
+            shards_total: 0,
+            shards_down: 0,
         }
     }
 }
@@ -100,6 +102,14 @@ pub struct MetricsSnapshot {
     /// Log2-scale latency histogram (bin i counts latencies in
     /// `[2^i, 2^(i+1))` microseconds; see [`Metrics::record_latency`]).
     pub lat_bins: Vec<u64>,
+    /// Fabric fleet membership (§Scale): shards known to the router
+    /// that produced this view. A single coordinator reports 0 — the
+    /// router stamps the merged snapshot, so a degraded fleet is
+    /// distinguishable from a healthy smaller one.
+    pub shards_total: u64,
+    /// Shards currently out of ring routing (marked down, awaiting
+    /// revival).
+    pub shards_down: u64,
 }
 
 impl MetricsSnapshot {
@@ -123,6 +133,10 @@ impl MetricsSnapshot {
             self.lat_bins[i] += b;
         }
         self.worker_health.extend(other.worker_health.iter().cloned());
+        // Membership counters add so nested merges compose; per-shard
+        // snapshots carry 0 and the router stamps the final view.
+        self.shards_total += other.shards_total;
+        self.shards_down += other.shards_down;
     }
     /// Workers that retired their crossbar.
     pub fn retired_workers(&self) -> usize {
@@ -208,6 +222,11 @@ mod tests {
         assert_eq!(merged.retired_workers(), 1);
         assert_eq!(merged.lat_bins.iter().sum::<u64>(), 3);
         assert!(merged.latency_percentile_us(99.0) >= 4096);
+        // Per-coordinator snapshots report no fleet membership; the
+        // router stamps the merged view (and nested merges add).
+        assert_eq!((merged.shards_total, merged.shards_down), (0, 0));
+        merged.merge(&MetricsSnapshot { shards_total: 3, shards_down: 1, ..Default::default() });
+        assert_eq!((merged.shards_total, merged.shards_down), (3, 1));
     }
 
     #[test]

@@ -23,7 +23,7 @@ use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use anyhow::Result;
+use anyhow::{ensure, Result};
 
 use crate::errs::ErrorModel;
 use crate::health::HealthConfig;
@@ -109,8 +109,40 @@ pub struct Coordinator {
     worker_handles: Vec<JoinHandle<()>>,
 }
 
+/// Logical rows available to batches (§Health reserves spare rows).
+fn data_rows(cfg: &CoordinatorConfig) -> usize {
+    cfg.rows.saturating_sub(cfg.health.as_ref().map_or(0, |h| h.spare_rows)).max(1)
+}
+
+/// Items per batch under SemiParallel TMR (`None` for other modes):
+/// the row-triple stride is (rows-1)/3, and with health on, every
+/// triple {i, i+k, i+2k} must fit inside the data rows so the reserved
+/// spares (and the vote scratch row) are never part of a triple.
+fn semi_fit(cfg: &CoordinatorConfig) -> Option<usize> {
+    if cfg.policy.tmr != TmrMode::SemiParallel {
+        return None;
+    }
+    let stride = cfg.rows.saturating_sub(1) / 3;
+    Some(if cfg.health.is_some() {
+        stride.min(data_rows(cfg).saturating_sub(2 * stride))
+    } else {
+        stride
+    })
+}
+
 impl Coordinator {
     pub fn start(cfg: CoordinatorConfig) -> Result<Self> {
+        // An impossible SemiParallel geometry must fail here, loudly —
+        // not start cleanly and then answer every request with a
+        // batch-shape error.
+        if let Some(fit) = semi_fit(&cfg) {
+            ensure!(
+                fit >= 1,
+                "semi-parallel TMR cannot fit one replica triple: rows={}, spare_rows={}",
+                cfg.rows,
+                cfg.health.as_ref().map_or(0, |h| h.spare_rows)
+            );
+        }
         // Worker slots cfg.workers.. are cold spares: spawned (so their
         // crossbars and channels exist) but unroutable until a
         // retirement activates them.
@@ -239,10 +271,11 @@ fn batcher_loop(
     depths: Arc<Vec<AtomicU64>>,
     healthy: Arc<Vec<AtomicBool>>,
 ) {
-    // §Health: spare rows are reserved out of the batchable row space.
-    let data_rows =
-        cfg.rows.saturating_sub(cfg.health.as_ref().map_or(0, |h| h.spare_rows)).max(1);
-    let mut batcher = Batcher::new(cfg.max_batch.min(data_rows), cfg.max_wait);
+    // §Health: spare rows are reserved out of the batchable row space;
+    // SemiParallel TMR caps batches at its triple fit (validated >= 1
+    // at Coordinator::start, see `semi_fit`).
+    let max_items = semi_fit(&cfg).unwrap_or_else(|| data_rows(&cfg));
+    let mut batcher = Batcher::new(cfg.max_batch.min(max_items).max(1), cfg.max_wait);
     let dispatch = |batch: Batch, depths: &Arc<Vec<AtomicU64>>, metrics: &Arc<Metrics>| {
         metrics.batches.fetch_add(1, Ordering::Relaxed);
         metrics.batched_items.fetch_add(batch.items.len() as u64, Ordering::Relaxed);

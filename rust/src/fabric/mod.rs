@@ -13,12 +13,16 @@
 //! * [`FabricServer`] — a TCP front end over one coordinator per
 //!   process (`remus fabric-serve`);
 //! * [`Router`] — the client-side fan-out: FunctionKind-aware
-//!   consistent hashing across N shard endpoints (same-kind requests
-//!   keep landing on the same shard, preserving dynamic batching),
-//!   health-driven failover (capacity errors and disconnects re-route
-//!   in-flight requests to the next live shard), and merged fleet
-//!   metrics so reliability events — retirement, escalation — are
-//!   observable across processes.
+//!   consistent hashing across a *dynamic* shard fleet (same-kind
+//!   requests keep landing on the same shard, preserving dynamic
+//!   batching), health-driven failover (capacity errors and disconnects
+//!   re-route in-flight requests to the next live shard), a supervisor
+//!   that revives downed shards back into their stable ring slots,
+//!   registration-based discovery (`Register`/`Welcome` frames instead
+//!   of a static shard list), hot-spare shard pools promoted on failure
+//!   and demoted on revival, and merged fleet metrics (stamped with
+//!   `shards_total`/`shards_down`) so reliability events — retirement,
+//!   escalation, shard loss — are observable across processes.
 //!
 //! Both the in-process coordinator and the router implement
 //! [`crate::coordinator::Submitter`], so every load path (the serve
@@ -33,5 +37,5 @@ pub mod router;
 pub mod server;
 pub mod wire;
 
-pub use router::{fetch_metrics, probe_health, shutdown_endpoint, Router};
+pub use router::{fetch_metrics, probe_health, shutdown_endpoint, Router, RouterConfig};
 pub use server::FabricServer;

@@ -1,33 +1,52 @@
 //! The fabric router: a client-side shard fan-out implementing
-//! [`Submitter`] over N fabric servers.
+//! [`Submitter`] over a *dynamic* fleet of fabric servers.
 //!
-//! **Sharding** is FunctionKind-aware consistent hashing: each shard
-//! contributes virtual nodes to a hash ring and a request's kind picks
-//! the first live shard at or after its hash. Same-kind requests land
-//! on the same shard, so the per-shard coordinator's dynamic batching
-//! sees exactly the stream it would see in-process; losing a shard only
-//! remaps the kinds it owned (classic consistent-hashing locality).
+//! **Sharding** is FunctionKind-aware consistent hashing: each ring
+//! member contributes virtual nodes to a hash ring and a request's kind
+//! picks the first live shard at or after its hash. Same-kind requests
+//! land on the same shard, so the per-shard coordinator's dynamic
+//! batching sees exactly the stream it would see in-process; losing a
+//! shard only remaps the kinds it owned (classic consistent-hashing
+//! locality). The ring is keyed by *stable shard index*, so placement
+//! after a down/revive cycle is bit-identical to never having failed.
 //!
 //! **Failover** is health-driven: a shard is marked down when its
 //! connection drops, when a write fails, or when it answers a request
 //! with an all-workers-retired capacity error. In-flight requests on a
 //! downed shard are re-routed to the next live shard on the ring
-//! (at-least-once execution: a shard that dies after executing but
-//! before replying is re-executed elsewhere — results are deterministic
-//! functions, so replays are safe). Only when every shard has been
-//! tried does a request resolve to an explicit error — clients never
-//! hang, mirroring the in-process coordinator's contract.
+//! (at-least-once execution: results are deterministic functions, so
+//! replays are safe). During a *total* outage requests are parked for a
+//! bounded [`RouterConfig::retry_window`] — shards are often seconds
+//! from revival — and only resolve to an explicit error once the window
+//! expires. Clients never hang, mirroring the in-process coordinator's
+//! contract.
+//!
+//! **Revival** (§Health, one layer up): membership is not a one-shot
+//! property. A supervisor thread periodically re-probes downed shards
+//! ([`probe_health`] over short-lived control connections), reopens the
+//! data connection, respawns the reader, and atomically returns the
+//! shard to ring routing — the fleet-level analogue of the per-crossbar
+//! scrub -> remap -> activate-spare loop.
+//!
+//! **Discovery** is registration-based when [`RouterConfig::listen`] is
+//! set: `fabric-serve` processes announce themselves with a `Register`
+//! frame (stable `name`, current endpoint, spare flag) instead of a
+//! static `--shards` list; a restarted shard re-registering under the
+//! same name reclaims its ring slot even at a new port. Registered
+//! **hot spares** stay connected but outside the ring until a member is
+//! marked down; then they are promoted in (and demoted back once the
+//! member revives), mirroring `CoordinatorConfig::spare_workers`.
 //!
 //! **Metrics** are fetched per shard over short-lived control
 //! connections and merged ([`MetricsSnapshot::merge`]) into one fleet
-//! view, so per-worker health (retirements, escalation levels) of every
-//! shard is observable from one place.
+//! view stamped with `shards_total`/`shards_down`, so a degraded fleet
+//! is distinguishable from a healthy smaller one.
 
 use std::collections::HashMap;
-use std::net::{TcpStream, ToSocketAddrs};
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, RwLock};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -42,15 +61,16 @@ use super::wire::{read_msg, write_msg, Msg};
 const RING_VNODES: usize = 16;
 
 /// Bound on control-plane connect/read/write, so a hung shard (host
-/// down, blackholed traffic) cannot freeze a fleet metrics or health
-/// call. The data path fails over on *closed* connections (reader EOF /
-/// write error); a silently blackholed peer that keeps its connection
-/// half-open is only caught by the operator or a control probe today —
-/// data-path heartbeats are named multi-machine work in ROADMAP §Scale.
+/// down, blackholed traffic) cannot freeze a fleet metrics, health or
+/// revival probe. The data path fails over on *closed* connections
+/// (reader EOF / write error); a silently blackholed peer that keeps
+/// its connection half-open is only caught by the operator or a control
+/// probe today — data-path heartbeats are named multi-machine work in
+/// ROADMAP §Scale.
 const CONTROL_TIMEOUT: Duration = Duration::from_secs(5);
 
 /// Short-lived control connection with timeouts applied.
-fn control_connect(addr: &str) -> Result<TcpStream> {
+pub(crate) fn control_connect(addr: &str) -> Result<TcpStream> {
     let sock = addr
         .to_socket_addrs()
         .with_context(|| format!("resolving {addr}"))?
@@ -63,6 +83,33 @@ fn control_connect(addr: &str) -> Result<TcpStream> {
     Ok(stream)
 }
 
+/// Tunables for the router's self-healing membership machinery.
+#[derive(Clone, Debug)]
+pub struct RouterConfig {
+    /// Supervisor tick: how often downed shards are re-probed for
+    /// revival, spares reconciled, and parked requests swept.
+    pub probe_period: Duration,
+    /// How long a request submitted during a total outage may wait for
+    /// a revival before resolving to an explicit "no healthy shards"
+    /// error (measured from submission; default a few probe periods).
+    pub retry_window: Duration,
+    /// Bind address of the registration listener (`None`: static
+    /// membership only). Shards announce themselves here with
+    /// `Register` frames; port 0 binds an ephemeral port (see
+    /// [`Router::registration_addr`]).
+    pub listen: Option<String>,
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        Self {
+            probe_period: Duration::from_millis(250),
+            retry_window: Duration::from_millis(1000),
+            listen: None,
+        }
+    }
+}
+
 /// A request in flight on some shard, retaining everything needed to
 /// replay it elsewhere.
 struct PendingReq {
@@ -71,25 +118,78 @@ struct PendingReq {
     b: u64,
     reply: Sender<RequestResult>,
     submitted: Instant,
-    /// Shards already tried (failover never loops).
+    /// Shards already tried (failover never loops within one attempt;
+    /// cleared when a parked request is re-dispatched after a
+    /// membership change).
     tried: Vec<usize>,
 }
 
 struct ShardState {
-    addr: String,
+    /// Stable identity (the registration key; static shards use their
+    /// address). A restarting process re-registers under the same name
+    /// to reclaim this slot.
+    name: String,
+    /// Current endpoint — re-registration after a restart may move it.
+    addr: Mutex<String>,
+    /// Registered as a hot spare: connected but outside the ring until
+    /// promoted to cover a downed member.
+    spare: bool,
+    /// Spare currently promoted into the ring.
+    promoted: AtomicBool,
     up: AtomicBool,
+    /// The previous connection's reader has fully drained its pending
+    /// table — only then may the supervisor open a new connection (no
+    /// two readers ever share one pending table).
+    reader_gone: AtomicBool,
     /// Write half of the data connection (`None` once down).
     writer: Mutex<Option<TcpStream>>,
     /// In-flight requests keyed by wire id.
     pending: Mutex<HashMap<u64, PendingReq>>,
 }
 
+impl ShardState {
+    fn new(name: String, addr: String, spare: bool) -> Arc<Self> {
+        Arc::new(Self {
+            name,
+            addr: Mutex::new(addr),
+            spare,
+            promoted: AtomicBool::new(false),
+            up: AtomicBool::new(false),
+            reader_gone: AtomicBool::new(true),
+            writer: Mutex::new(None),
+            pending: Mutex::new(HashMap::new()),
+        })
+    }
+
+    fn addr(&self) -> String {
+        self.addr.lock().unwrap().clone()
+    }
+
+    /// In the routing ring right now (members always; spares only while
+    /// promoted).
+    fn in_ring(&self) -> bool {
+        !self.spare || self.promoted.load(Ordering::SeqCst)
+    }
+}
+
 struct RouterInner {
-    shards: Vec<ShardState>,
-    /// Sorted (hash, shard) ring. Keyed by shard *index* so the
-    /// kind->shard map is stable across runs regardless of ephemeral
-    /// ports (loopback tests rely on this determinism).
-    ring: Vec<(u64, usize)>,
+    cfg: RouterConfig,
+    /// Shard slots; grows on registration, never shrinks, so indices —
+    /// and therefore ring placement — are stable for the router's
+    /// lifetime.
+    shards: RwLock<Vec<Arc<ShardState>>>,
+    /// Sorted (hash, shard) ring over the current members. Keyed by
+    /// shard *index* so the kind->shard map is stable across runs,
+    /// ports and down/revive cycles.
+    ring: RwLock<Vec<(u64, usize)>>,
+    /// Ring-membership epoch: bumped on every down / revive / promote /
+    /// demote / (re-)register event, so tests and operators can watch
+    /// membership transitions.
+    epoch: AtomicU64,
+    /// Requests that found no live shard, awaiting a revival or their
+    /// retry-window deadline.
+    parked: Mutex<Vec<(u64, PendingReq)>>,
+    readers: Mutex<Vec<JoinHandle<()>>>,
     next_id: AtomicU64,
     closing: AtomicBool,
 }
@@ -97,53 +197,74 @@ struct RouterInner {
 /// The sharded remote submitter.
 pub struct Router {
     inner: Arc<RouterInner>,
-    readers: Vec<JoinHandle<()>>,
+    supervisor: Option<JoinHandle<()>>,
+    reg_handle: Option<JoinHandle<()>>,
+    reg_addr: Option<SocketAddr>,
 }
 
 impl Router {
-    /// Connect to the shard endpoints. Unreachable shards are marked
-    /// down (their kinds fail over); at least one must be reachable.
+    /// Connect to a static list of shard endpoints with default tuning.
+    /// Unreachable shards are marked down (the supervisor keeps probing
+    /// them); at least one must be reachable.
     pub fn connect(addrs: &[String]) -> Result<Self> {
-        ensure!(!addrs.is_empty(), "router needs at least one shard address");
-        let shards: Vec<ShardState> = addrs
-            .iter()
-            .map(|a| ShardState {
-                addr: a.clone(),
-                up: AtomicBool::new(false),
-                writer: Mutex::new(None),
-                pending: Mutex::new(HashMap::new()),
-            })
-            .collect();
-        let mut ring = Vec::with_capacity(addrs.len() * RING_VNODES);
-        for shard in 0..addrs.len() {
-            for vnode in 0..RING_VNODES {
-                ring.push((fnv64(format!("shard{shard}/vnode{vnode}").as_bytes()), shard));
-            }
-        }
-        ring.sort_unstable();
+        Self::with_config(addrs, RouterConfig::default())
+    }
+
+    /// Connect with explicit tuning. `addrs` may be empty when
+    /// `cfg.listen` is set — the fleet is then discovered entirely
+    /// through shard registration.
+    pub fn with_config(addrs: &[String], cfg: RouterConfig) -> Result<Self> {
+        ensure!(
+            !addrs.is_empty() || cfg.listen.is_some(),
+            "router needs at least one shard address or a registration listener"
+        );
+        let shards: Vec<Arc<ShardState>> =
+            addrs.iter().map(|a| ShardState::new(a.clone(), a.clone(), false)).collect();
         let inner = Arc::new(RouterInner {
-            shards,
-            ring,
+            cfg: cfg.clone(),
+            shards: RwLock::new(shards),
+            ring: RwLock::new(Vec::new()),
+            epoch: AtomicU64::new(0),
+            parked: Mutex::new(Vec::new()),
+            readers: Mutex::new(Vec::new()),
             next_id: AtomicU64::new(1),
             closing: AtomicBool::new(false),
         });
-        let mut readers = Vec::new();
+        inner.rebuild_ring();
         for i in 0..addrs.len() {
-            match inner.open_shard(i) {
-                Ok(read_half) => {
-                    let inner = inner.clone();
-                    readers.push(std::thread::spawn(move || reader_loop(inner, i, read_half)));
-                }
-                Err(e) => {
-                    eprintln!("router: shard {i} ({}) unreachable at connect: {e:#}", addrs[i])
-                }
+            if let Err(e) = connect_shard(&inner, i) {
+                eprintln!("router: shard {i} ({}) unreachable at connect: {e:#}", addrs[i]);
             }
         }
-        ensure!(
-            inner.shards.iter().any(|s| s.up.load(Ordering::SeqCst)),
-            "no reachable shard among {addrs:?}"
-        );
-        Ok(Self { inner, readers })
+        if !addrs.is_empty() {
+            ensure!(inner.live_shards() > 0, "no reachable shard among {addrs:?}");
+        }
+        let (reg_addr, reg_handle) = match &cfg.listen {
+            Some(addr) => match spawn_registration_listener(inner.clone(), addr) {
+                Ok((bound, handle)) => (Some(bound), Some(handle)),
+                Err(e) => {
+                    // Unwind the connections already opened so their
+                    // reader threads exit instead of leaking.
+                    inner.closing.store(true, Ordering::SeqCst);
+                    for i in 0..inner.shards.read().unwrap().len() {
+                        inner.mark_down(i);
+                    }
+                    return Err(e);
+                }
+            },
+            None => (None, None),
+        };
+        let supervisor = {
+            let inner = inner.clone();
+            Some(std::thread::spawn(move || supervisor_loop(inner)))
+        };
+        Ok(Self { inner, supervisor, reg_handle, reg_addr })
+    }
+
+    /// The registration listener's bound address (resolves port 0), or
+    /// `None` without one.
+    pub fn registration_addr(&self) -> Option<SocketAddr> {
+        self.reg_addr
     }
 
     /// The shard a kind currently routes to (None with every shard
@@ -152,14 +273,62 @@ impl Router {
         self.inner.shard_for(kind)
     }
 
-    /// Addresses this router was built over, in shard order.
-    pub fn shard_addrs(&self) -> Vec<String> {
-        self.inner.shards.iter().map(|s| s.addr.clone()).collect()
+    /// The kind's full ring preference order over the *current*
+    /// membership, liveness ignored (placement, not routing). After a
+    /// down/revive cycle this must be identical to never having failed.
+    pub fn ring_walk(&self, kind: FunctionKind) -> Vec<usize> {
+        self.inner.ring_order(hash_kind(kind))
     }
 
-    /// Live shards right now.
+    /// Addresses this router currently knows, in stable shard order.
+    pub fn shard_addrs(&self) -> Vec<String> {
+        self.inner.shards.read().unwrap().iter().map(|s| s.addr()).collect()
+    }
+
+    /// Total shard slots (static + registered, spares included).
+    pub fn shard_count(&self) -> usize {
+        self.inner.shards.read().unwrap().len()
+    }
+
+    /// Shards with a live data connection right now (spares included).
     pub fn live_shards(&self) -> usize {
-        self.inner.shards.iter().filter(|s| s.up.load(Ordering::SeqCst)).count()
+        self.inner.live_shards()
+    }
+
+    /// Current ring-membership epoch (bumps on every down / revive /
+    /// promote / demote / register event).
+    pub fn membership_epoch(&self) -> u64 {
+        self.inner.epoch.load(Ordering::SeqCst)
+    }
+
+    /// CLI bootstrap shared by `remus serve`/`fabric-route` and the
+    /// serve example: with a registration listener configured, print
+    /// its address (for `fabric-serve --register`) and wait for
+    /// `min_live` shards before the caller drives load, warning (not
+    /// failing) on timeout. No-op without a listener.
+    pub fn announce_and_wait(&self, min_live: usize, timeout: Duration, ctx: &str) {
+        let Some(reg) = self.registration_addr() else { return };
+        println!("REGISTRATION {reg}");
+        if !self.wait_for_live(min_live, timeout) {
+            eprintln!(
+                "{ctx}: only {}/{min_live} shards live after {timeout:?}; continuing",
+                self.live_shards()
+            );
+        }
+    }
+
+    /// Block until at least `n` shards are live, or `timeout` expires.
+    /// Returns whether the target was reached (used by `fabric-route
+    /// --listen-reg` before driving load, and by tests).
+    pub fn wait_for_live(&self, n: usize, timeout: Duration) -> bool {
+        let deadline = Instant::now() + timeout;
+        while self.live_shards() < n {
+            if Instant::now() >= deadline {
+                return false;
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        true
     }
 
     pub fn submit(&self, kind: FunctionKind, a: u64, b: u64) -> Receiver<RequestResult> {
@@ -174,16 +343,17 @@ impl Router {
 
     /// Merged fleet metrics: every shard (even one marked down for
     /// routing — its server may still answer control traffic) is probed
-    /// over a short-lived connection; unreachable shards are skipped.
-    /// Probes run concurrently, so a fleet of dead shards costs one
+    /// over a short-lived connection; unreachable shards are skipped
+    /// but still counted in `shards_total`/`shards_down`, so a degraded
+    /// fleet never masquerades as a healthy smaller one. Probes run
+    /// concurrently, so a fleet of dead shards costs one
     /// `CONTROL_TIMEOUT`, not a serial sum; the merge keeps shard order.
     pub fn metrics(&self) -> MetricsSnapshot {
-        let probes: Vec<_> = self
-            .inner
-            .shards
+        let shards: Vec<Arc<ShardState>> = self.inner.shards.read().unwrap().clone();
+        let probes: Vec<_> = shards
             .iter()
             .map(|shard| {
-                let addr = shard.addr.clone();
+                let addr = shard.addr();
                 std::thread::spawn(move || {
                     let m = fetch_metrics(&addr);
                     (addr, m)
@@ -200,6 +370,8 @@ impl Router {
                 Err(_) => {}
             }
         }
+        merged.shards_total = shards.len() as u64;
+        merged.shards_down = shards.iter().filter(|s| !s.up.load(Ordering::SeqCst)).count() as u64;
         merged
     }
 
@@ -207,15 +379,39 @@ impl Router {
         self.live_shards() > 0
     }
 
-    /// Close every shard connection and join the reader threads.
-    /// In-flight requests resolve with explicit shutdown errors.
+    /// Close every shard connection, stop the supervisor and
+    /// registration listener, and join the reader threads. In-flight
+    /// and parked requests resolve with explicit shutdown errors.
     pub fn shutdown(mut self) {
         self.inner.closing.store(true, Ordering::SeqCst);
-        for i in 0..self.inner.shards.len() {
+        let n = self.inner.shards.read().unwrap().len();
+        for i in 0..n {
             self.inner.mark_down(i);
         }
-        for h in self.readers.drain(..) {
+        if let Some(h) = self.supervisor.take() {
             let _ = h.join();
+        }
+        if let Some(h) = self.reg_handle.take() {
+            let _ = h.join();
+        }
+        // The supervisor may have completed a revival racing the close
+        // above; with it joined, one more pass closes any connection it
+        // opened so no reader blocks the joins below.
+        for i in 0..self.inner.shards.read().unwrap().len() {
+            self.inner.mark_down(i);
+        }
+        let readers: Vec<_> = self.inner.readers.lock().unwrap().drain(..).collect();
+        for h in readers {
+            let _ = h.join();
+        }
+        let parked: Vec<_> = self.inner.parked.lock().unwrap().drain(..).collect();
+        for (_, req) in parked {
+            let latency = req.submitted.elapsed();
+            let _ = req.reply.send(RequestResult {
+                value: 0,
+                latency,
+                error: Some("router shutting down".to_string()),
+            });
         }
     }
 }
@@ -235,27 +431,54 @@ impl Submitter for Router {
 }
 
 impl RouterInner {
-    /// Open the data connection for shard `i`; returns the read half
-    /// (the write half is stored) and marks the shard up.
-    fn open_shard(&self, i: usize) -> Result<TcpStream> {
-        let shard = &self.shards[i];
-        let stream = TcpStream::connect(shard.addr.as_str())
-            .with_context(|| format!("connecting to shard {}", shard.addr))?;
-        let _ = stream.set_nodelay(true);
-        let write_half = stream.try_clone()?;
-        *shard.writer.lock().unwrap() = Some(write_half);
-        shard.up.store(true, Ordering::SeqCst);
-        Ok(stream)
+    fn shard(&self, i: usize) -> Option<Arc<ShardState>> {
+        self.shards.read().unwrap().get(i).cloned()
+    }
+
+    fn live_shards(&self) -> usize {
+        self.shards.read().unwrap().iter().filter(|s| s.up.load(Ordering::SeqCst)).count()
+    }
+
+    fn bump_epoch(&self) {
+        self.epoch.fetch_add(1, Ordering::SeqCst);
+    }
+
+    /// Regenerate the ring from current membership (members + promoted
+    /// spares). Vnode hashes depend only on the stable shard index, so
+    /// regenerating after a revive/demote cycle reproduces the original
+    /// ring bit for bit.
+    fn rebuild_ring(&self) {
+        let shards = self.shards.read().unwrap();
+        let mut ring = Vec::with_capacity(shards.len() * RING_VNODES);
+        for (i, s) in shards.iter().enumerate() {
+            if !s.in_ring() {
+                continue;
+            }
+            for vnode in 0..RING_VNODES {
+                ring.push((fnv64(format!("shard{i}/vnode{vnode}").as_bytes()), i));
+            }
+        }
+        drop(shards);
+        ring.sort_unstable();
+        *self.ring.write().unwrap() = ring;
     }
 
     /// Walk shard indices in ring order starting at `hash` (vnodes
-    /// deduplicated), yielding each shard once.
+    /// deduplicated), yielding each ring member once.
     fn ring_order(&self, hash: u64) -> Vec<usize> {
-        let start = self.ring.partition_point(|&(h, _)| h < hash);
-        let mut seen = vec![false; self.shards.len()];
-        let mut order = Vec::with_capacity(self.shards.len());
-        for k in 0..self.ring.len() {
-            let shard = self.ring[(start + k) % self.ring.len()].1;
+        let ring = self.ring.read().unwrap();
+        if ring.is_empty() {
+            return Vec::new();
+        }
+        let start = ring.partition_point(|&(h, _)| h < hash);
+        // O(1) dedup bitmap sized from the ring itself (every routing
+        // decision walks this; a linear `contains` would make it
+        // quadratic in fleet size).
+        let max_idx = ring.iter().map(|&(_, s)| s).max().unwrap_or(0);
+        let mut seen = vec![false; max_idx + 1];
+        let mut order = Vec::new();
+        for k in 0..ring.len() {
+            let shard = ring[(start + k) % ring.len()].1;
             if !seen[shard] {
                 seen[shard] = true;
                 order.push(shard);
@@ -265,20 +488,22 @@ impl RouterInner {
     }
 
     fn shard_for(&self, kind: FunctionKind) -> Option<usize> {
+        let shards = self.shards.read().unwrap();
         self.ring_order(hash_kind(kind))
             .into_iter()
-            .find(|&s| self.shards[s].up.load(Ordering::SeqCst))
+            .find(|&s| shards.get(s).is_some_and(|sh| sh.up.load(Ordering::SeqCst)))
     }
 
     /// Dispatch (or re-dispatch) a request to the first live shard on
-    /// its kind's ring walk that hasn't been tried yet; with none left,
-    /// resolve it with an explicit error.
+    /// its kind's ring walk that hasn't been tried yet. With none left:
+    /// park it for the retry window (a revival may be seconds away), or
+    /// resolve it with an explicit error once the window has expired.
     fn route(&self, id: u64, mut req: PendingReq) {
         for shard_idx in self.ring_order(hash_kind(req.kind)) {
             if req.tried.contains(&shard_idx) {
                 continue;
             }
-            let shard = &self.shards[shard_idx];
+            let Some(shard) = self.shard(shard_idx) else { continue };
             if !shard.up.load(Ordering::SeqCst) {
                 continue;
             }
@@ -301,6 +526,15 @@ impl RouterInner {
                 None => return,
             };
         }
+        // Total outage on this walk: hold the request for the bounded
+        // retry window instead of failing instantly — the supervisor
+        // re-dispatches it on the next membership change and expires it
+        // at the deadline.
+        if !self.closing.load(Ordering::SeqCst) && req.submitted.elapsed() < self.cfg.retry_window
+        {
+            self.parked.lock().unwrap().push((id, req));
+            return;
+        }
         let latency = req.submitted.elapsed();
         let _ = req.reply.send(RequestResult {
             value: 0,
@@ -309,26 +543,136 @@ impl RouterInner {
         });
     }
 
-    /// Take a shard out of routing and unblock its reader.
+    /// Take a shard out of routing, unblock its reader, and promote a
+    /// spare to cover it.
     fn mark_down(&self, i: usize) {
-        let was_up = self.shards[i].up.swap(false, Ordering::SeqCst);
-        if was_up && !self.closing.load(Ordering::SeqCst) {
-            eprintln!("router: shard {i} ({}) marked down", self.shards[i].addr);
-        }
-        if let Some(w) = self.shards[i].writer.lock().unwrap().take() {
+        let Some(shard) = self.shard(i) else { return };
+        let was_up = shard.up.swap(false, Ordering::SeqCst);
+        if let Some(w) = shard.writer.lock().unwrap().take() {
             let _ = w.shutdown(std::net::Shutdown::Both);
         }
+        if was_up {
+            self.bump_epoch();
+            if !self.closing.load(Ordering::SeqCst) {
+                eprintln!("router: shard {i} ({}) marked down", shard.addr());
+                self.reconcile_spares();
+            }
+        }
     }
+
+    /// Promote exactly as many (live) spares into the ring as there are
+    /// downed members; demote the rest. Idempotent and deterministic
+    /// (stable index order), called on every membership event — so a
+    /// revival automatically demotes the spare that covered it.
+    fn reconcile_spares(&self) {
+        if self.closing.load(Ordering::SeqCst) {
+            return;
+        }
+        let shards = self.shards.read().unwrap();
+        let mut need =
+            shards.iter().filter(|s| !s.spare && !s.up.load(Ordering::SeqCst)).count();
+        let mut changed = false;
+        for (i, s) in shards.iter().enumerate() {
+            if !s.spare {
+                continue;
+            }
+            let want = need > 0 && s.up.load(Ordering::SeqCst);
+            if want {
+                need -= 1;
+            }
+            if s.promoted.swap(want, Ordering::SeqCst) != want {
+                changed = true;
+                eprintln!(
+                    "router: spare shard {i} ({}) {}",
+                    s.addr(),
+                    if want { "promoted into the ring" } else { "demoted back to the pool" }
+                );
+            }
+        }
+        drop(shards);
+        if changed {
+            self.rebuild_ring();
+            self.bump_epoch();
+        }
+    }
+
+    /// Add (or refresh) a shard from a `Register` frame. Returns the
+    /// stable index and whether the shard is immediately in the ring.
+    fn register(&self, name: String, addr: String, spare: bool) -> (usize, bool) {
+        let mut shards = self.shards.write().unwrap();
+        if let Some((i, s)) = shards.iter().enumerate().find(|(_, s)| s.name == name) {
+            // Re-registration: the shard process restarted (possibly on
+            // a new port) and reclaims its slot; the supervisor
+            // reconnects once the old connection's reader has drained.
+            // The member/spare role is fixed for the slot's lifetime —
+            // the Welcome ack reports the slot's actual state.
+            if s.spare != spare {
+                eprintln!(
+                    "router: shard {i} ({name}) re-registered asking to be a {}, but its \
+                     slot is a {}; role is fixed per name",
+                    if spare { "spare" } else { "member" },
+                    if s.spare { "spare" } else { "member" }
+                );
+            }
+            let active = s.in_ring();
+            *s.addr.lock().unwrap() = addr.clone();
+            drop(shards);
+            self.bump_epoch();
+            eprintln!("router: shard {i} ({name}) re-registered at {addr}");
+            return (i, active);
+        }
+        let idx = shards.len();
+        shards.push(ShardState::new(name.clone(), addr.clone(), spare));
+        drop(shards);
+        if !spare {
+            self.rebuild_ring();
+        }
+        self.bump_epoch();
+        eprintln!(
+            "router: shard {idx} ({name}) registered at {addr}{}",
+            if spare { " as a hot spare" } else { "" }
+        );
+        (idx, !spare)
+    }
+}
+
+/// Open shard `i`'s data connection, store the write half, respawn the
+/// reader, and atomically return the shard to routing.
+fn connect_shard(inner: &Arc<RouterInner>, i: usize) -> Result<()> {
+    ensure!(!inner.closing.load(Ordering::SeqCst), "router shutting down");
+    let shard = inner.shard(i).ok_or_else(|| anyhow!("no shard {i}"))?;
+    ensure!(
+        shard.reader_gone.load(Ordering::SeqCst),
+        "shard {i} still has a reader draining its previous connection"
+    );
+    let addr = shard.addr();
+    let stream =
+        TcpStream::connect(addr.as_str()).with_context(|| format!("connecting to shard {addr}"))?;
+    let _ = stream.set_nodelay(true);
+    let write_half = stream.try_clone()?;
+    *shard.writer.lock().unwrap() = Some(write_half);
+    shard.reader_gone.store(false, Ordering::SeqCst);
+    shard.up.store(true, Ordering::SeqCst);
+    inner.bump_epoch();
+    let inner2 = inner.clone();
+    let handle = std::thread::spawn(move || reader_loop(inner2, i, stream));
+    let mut readers = inner.readers.lock().unwrap();
+    // Reap finished readers so a long-lived router reviving shards many
+    // times does not accumulate a handle per connection.
+    readers.retain(|h| !h.is_finished());
+    readers.push(handle);
+    Ok(())
 }
 
 /// Per-shard reader: matches `Result` frames to pending requests, turns
 /// capacity errors into failovers, and on disconnect re-routes whatever
-/// was still in flight.
+/// was still in flight, then hands the slot back for revival.
 fn reader_loop(inner: Arc<RouterInner>, shard_idx: usize, mut read_half: TcpStream) {
+    let Some(shard) = inner.shard(shard_idx) else { return };
     loop {
         match read_msg(&mut read_half) {
             Ok(Some(Msg::Result { id, value, latency_us: _, error })) => {
-                let req = inner.shards[shard_idx].pending.lock().unwrap().remove(&id);
+                let req = shard.pending.lock().unwrap().remove(&id);
                 let Some(req) = req else { continue };
                 // An all-workers-retired shard answers every request
                 // with the coordinator's capacity error: mark it down
@@ -351,8 +695,7 @@ fn reader_loop(inner: Arc<RouterInner>, shard_idx: usize, mut read_half: TcpStre
     }
     inner.mark_down(shard_idx);
     // Fail over (or, at router shutdown, resolve) the in-flight tail.
-    let drained: Vec<(u64, PendingReq)> =
-        inner.shards[shard_idx].pending.lock().unwrap().drain().collect();
+    let drained: Vec<(u64, PendingReq)> = shard.pending.lock().unwrap().drain().collect();
     let closing = inner.closing.load(Ordering::SeqCst);
     if !drained.is_empty() && !closing {
         eprintln!(
@@ -370,6 +713,136 @@ fn reader_loop(inner: Arc<RouterInner>, shard_idx: usize, mut read_half: TcpStre
             });
         } else {
             inner.route(id, req);
+        }
+    }
+    // Only now may the supervisor open a replacement connection: the
+    // pending table is empty and no other thread will touch it on this
+    // slot's behalf.
+    shard.reader_gone.store(true, Ordering::SeqCst);
+}
+
+/// The router's self-healing loop: revive downed shards, reconcile the
+/// spare pool, and sweep parked requests (re-dispatch on membership
+/// changes, expire past the retry window).
+fn supervisor_loop(inner: Arc<RouterInner>) {
+    while !inner.closing.load(Ordering::SeqCst) {
+        std::thread::sleep(inner.cfg.probe_period);
+        if inner.closing.load(Ordering::SeqCst) {
+            break;
+        }
+        // Revival: re-probe each downed shard whose previous reader has
+        // fully drained; a serving probe reopens the data connection and
+        // returns the shard to its (stable) ring position.
+        let n = inner.shards.read().unwrap().len();
+        for i in 0..n {
+            let Some(shard) = inner.shard(i) else { continue };
+            if shard.up.load(Ordering::SeqCst) || !shard.reader_gone.load(Ordering::SeqCst) {
+                continue;
+            }
+            let addr = shard.addr();
+            match probe_health(&addr) {
+                Ok((true, ..)) => match connect_shard(&inner, i) {
+                    Ok(()) => eprintln!("router: shard {i} ({addr}) revived"),
+                    Err(e) => eprintln!("router: shard {i} ({addr}) revival failed: {e:#}"),
+                },
+                // Unreachable or not serving (all workers retired):
+                // stays down, probed again next tick.
+                _ => {}
+            }
+        }
+        inner.reconcile_spares();
+        sweep_parked(&inner);
+    }
+}
+
+/// Re-dispatch every parked request (with its tried-set cleared, so
+/// revived shards are eligible again) and expire those past the retry
+/// window with an explicit error. Re-dispatch is unconditional, not
+/// gated on an observed membership change: a revival can land between a
+/// failed ring walk and the park, and with nothing else moving the
+/// epoch that request would otherwise sleep through a healthy fleet
+/// until its deadline. A fruitless re-walk per tick is cheap; missing a
+/// wakeup is an avoidable client-visible error.
+fn sweep_parked(inner: &Arc<RouterInner>) {
+    let now = Instant::now();
+    let mut expired = Vec::new();
+    let mut retry = Vec::new();
+    {
+        let mut parked = inner.parked.lock().unwrap();
+        for (id, req) in parked.drain(..) {
+            if now.duration_since(req.submitted) >= inner.cfg.retry_window {
+                expired.push(req);
+            } else {
+                retry.push((id, req));
+            }
+        }
+    }
+    for (id, mut req) in retry {
+        req.tried.clear();
+        inner.route(id, req);
+    }
+    for req in expired {
+        let latency = req.submitted.elapsed();
+        let _ = req.reply.send(RequestResult {
+            value: 0,
+            latency,
+            error: Some(format!(
+                "no healthy shards within the {:?} retry window (tried {:?})",
+                inner.cfg.retry_window, req.tried
+            )),
+        });
+    }
+}
+
+/// Bind the registration listener and serve `Register` frames: each
+/// connection carries one announcement and gets one `Welcome` ack.
+fn spawn_registration_listener(
+    inner: Arc<RouterInner>,
+    addr: &str,
+) -> Result<(SocketAddr, JoinHandle<()>)> {
+    let listener = TcpListener::bind(addr)
+        .with_context(|| format!("binding registration listener to {addr}"))?;
+    let bound = listener.local_addr()?;
+    listener.set_nonblocking(true)?;
+    let handle = std::thread::spawn(move || registration_loop(inner, listener));
+    Ok((bound, handle))
+}
+
+fn registration_loop(inner: Arc<RouterInner>, listener: TcpListener) {
+    while !inner.closing.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((mut stream, _peer)) => {
+                let _ = stream.set_nonblocking(false);
+                let _ = stream.set_read_timeout(Some(CONTROL_TIMEOUT));
+                let _ = stream.set_write_timeout(Some(CONTROL_TIMEOUT));
+                match read_msg(&mut stream) {
+                    Ok(Some(Msg::Register { name, addr, spare })) => {
+                        let (shard, active) = inner.register(name, addr, spare);
+                        let _ =
+                            write_msg(&mut stream, &Msg::Welcome { shard: shard as u32, active });
+                    }
+                    // Malformed or non-Register traffic: drop it — the
+                    // codec already refused the frame.
+                    _ => {}
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            // A registrant that reset before accept completed is its
+            // problem, not the listener's: discovery must keep running
+            // (a dead listener would strand every future restart).
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::ConnectionAborted
+                        | std::io::ErrorKind::ConnectionReset
+                        | std::io::ErrorKind::Interrupted
+                ) => {}
+            Err(e) => {
+                eprintln!("router: registration listener failed, stopping: {e}");
+                break;
+            }
         }
     }
 }
@@ -425,28 +898,34 @@ fn hash_kind(kind: FunctionKind) -> u64 {
 mod tests {
     use super::*;
 
-    #[test]
-    fn ring_is_deterministic_and_covers_all_shards() {
-        let mut ring = Vec::new();
-        for shard in 0..3usize {
-            for vnode in 0..RING_VNODES {
-                ring.push((fnv64(format!("shard{shard}/vnode{vnode}").as_bytes()), shard));
-            }
+    fn test_inner(n: usize, spares: usize) -> RouterInner {
+        let mut shards: Vec<Arc<ShardState>> = (0..n)
+            .map(|i| ShardState::new(format!("m{i}"), format!("127.0.0.1:{i}"), false))
+            .collect();
+        shards.extend(
+            (0..spares)
+                .map(|i| ShardState::new(format!("s{i}"), format!("127.0.0.1:9{i}"), true)),
+        );
+        for s in &shards {
+            s.up.store(true, Ordering::SeqCst);
         }
-        ring.sort_unstable();
         let inner = RouterInner {
-            shards: (0..3)
-                .map(|i| ShardState {
-                    addr: format!("127.0.0.1:{i}"),
-                    up: AtomicBool::new(true),
-                    writer: Mutex::new(None),
-                    pending: Mutex::new(HashMap::new()),
-                })
-                .collect(),
-            ring,
+            cfg: RouterConfig::default(),
+            shards: RwLock::new(shards),
+            ring: RwLock::new(Vec::new()),
+            epoch: AtomicU64::new(0),
+            parked: Mutex::new(Vec::new()),
+            readers: Mutex::new(Vec::new()),
             next_id: AtomicU64::new(1),
             closing: AtomicBool::new(false),
         };
+        inner.rebuild_ring();
+        inner
+    }
+
+    #[test]
+    fn ring_is_deterministic_and_covers_all_shards() {
+        let inner = test_inner(3, 0);
         // Every walk visits each shard exactly once, and the first hop
         // is a pure function of the kind.
         for bits in 1..=32 {
@@ -471,9 +950,56 @@ mod tests {
         // Downing the preferred shard fails over to the next on the walk.
         let k = FunctionKind::Xor(8);
         let preferred = inner.shard_for(k).unwrap();
-        inner.shards[preferred].up.store(false, Ordering::SeqCst);
+        inner.shard(preferred).unwrap().up.store(false, Ordering::SeqCst);
         let fallback = inner.shard_for(k).unwrap();
         assert_ne!(fallback, preferred);
         assert_eq!(inner.ring_order(hash_kind(k))[1], fallback);
+    }
+
+    #[test]
+    fn spares_stay_out_of_the_ring_until_promoted_and_demote_cleanly() {
+        let inner = test_inner(2, 1);
+        let kinds: Vec<FunctionKind> =
+            (1..=32).flat_map(|b| [FunctionKind::Add(b), FunctionKind::Xor(b)]).collect();
+        let walks: Vec<Vec<usize>> =
+            kinds.iter().map(|&k| inner.ring_order(hash_kind(k))).collect();
+        for w in &walks {
+            assert!(!w.contains(&2), "idle spare must stay out of the ring: {w:?}");
+        }
+        // Member 1 goes down: the spare is promoted and appears on
+        // walks; member placement (relative order of 0 and 1) persists.
+        inner.shard(1).unwrap().up.store(false, Ordering::SeqCst);
+        inner.reconcile_spares();
+        assert!(inner.shard(2).unwrap().promoted.load(Ordering::SeqCst));
+        let during: Vec<Vec<usize>> =
+            kinds.iter().map(|&k| inner.ring_order(hash_kind(k))).collect();
+        assert!(during.iter().any(|w| w.contains(&2)), "promoted spare joins the ring");
+        for (before, now) in walks.iter().zip(&during) {
+            let filtered: Vec<usize> = now.iter().copied().filter(|&s| s != 2).collect();
+            assert_eq!(&filtered, before, "members keep their relative ring order");
+        }
+        // Member 1 revives: the spare demotes and every walk is
+        // bit-identical to never having failed.
+        inner.shard(1).unwrap().up.store(true, Ordering::SeqCst);
+        inner.reconcile_spares();
+        assert!(!inner.shard(2).unwrap().promoted.load(Ordering::SeqCst));
+        let after: Vec<Vec<usize>> =
+            kinds.iter().map(|&k| inner.ring_order(hash_kind(k))).collect();
+        assert_eq!(after, walks, "down/revive cycle must not move any kind");
+    }
+
+    #[test]
+    fn registration_assigns_stable_slots_and_reuse_by_name() {
+        let inner = test_inner(1, 0);
+        let (i1, active1) = inner.register("alpha".into(), "127.0.0.1:7001".into(), false);
+        assert_eq!((i1, active1), (1, true));
+        let (i2, active2) = inner.register("sp".into(), "127.0.0.1:7002".into(), true);
+        assert_eq!((i2, active2), (2, false), "spares start outside the ring");
+        // A restarted process re-registers under its name at a new port
+        // and reclaims the same slot.
+        let (i3, _) = inner.register("alpha".into(), "127.0.0.1:7099".into(), false);
+        assert_eq!(i3, 1);
+        assert_eq!(inner.shard(1).unwrap().addr(), "127.0.0.1:7099");
+        assert_eq!(inner.shards.read().unwrap().len(), 3);
     }
 }

@@ -53,6 +53,9 @@ pub struct FabricServer {
     /// leak fds over a long-running server's lifetime.
     conns: Arc<Mutex<HashMap<u64, TcpStream>>>,
     conn_handles: Arc<Mutex<Vec<JoinHandle<()>>>>,
+    /// Background registration client (`register_with`), joined at
+    /// shutdown (it exits on success or when the stop flag flips).
+    reg_handle: Mutex<Option<JoinHandle<()>>>,
     coord: Arc<Coordinator>,
 }
 
@@ -82,8 +85,39 @@ impl FabricServer {
             accept_handle: Some(accept_handle),
             conns,
             conn_handles,
+            reg_handle: Mutex::new(None),
             coord,
         })
+    }
+
+    /// Announce this shard to a router's registration endpoint
+    /// (`fabric-serve --register`): retries in the background until the
+    /// router answers with a `Welcome` or this server stops —
+    /// registration commonly precedes router startup in a real
+    /// deployment, so an unreachable router is not an error. `name` is
+    /// the shard's stable identity (re-registering under the same name
+    /// after a restart reclaims the same ring slot); `spare` joins the
+    /// router's hot-spare pool instead of the active ring.
+    pub fn register_with(&self, router_reg: &str, name: &str, spare: bool) {
+        let stop = self.stop.clone();
+        let msg =
+            Msg::Register { name: name.to_string(), addr: self.addr.to_string(), spare };
+        let router_reg = router_reg.to_string();
+        let handle = std::thread::spawn(move || {
+            while !stop.load(Ordering::SeqCst) {
+                match register_once(&router_reg, &msg) {
+                    Ok((shard, active)) => {
+                        eprintln!(
+                            "fabric server: registered with {router_reg} as shard {shard} ({})",
+                            if active { "active" } else { "spare" }
+                        );
+                        return;
+                    }
+                    Err(_) => std::thread::sleep(Duration::from_millis(200)),
+                }
+            }
+        });
+        *self.reg_handle.lock().unwrap() = Some(handle);
     }
 
     /// The bound address (resolves port 0 to the real ephemeral port).
@@ -108,6 +142,9 @@ impl FabricServer {
     /// drain the coordinator.
     pub fn shutdown(mut self) {
         self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.reg_handle.lock().unwrap().take() {
+            let _ = h.join();
+        }
         if let Some(h) = self.accept_handle.take() {
             let _ = h.join();
         }
@@ -123,6 +160,17 @@ impl FabricServer {
         if let Ok(coord) = Arc::try_unwrap(self.coord) {
             coord.shutdown();
         }
+    }
+}
+
+/// One registration attempt: connect to the router's registration
+/// port, send the `Register`, await the `Welcome`.
+fn register_once(router_reg: &str, msg: &Msg) -> Result<(u32, bool)> {
+    let mut stream = super::router::control_connect(router_reg)?;
+    write_msg(&mut stream, msg)?;
+    match read_msg(&mut stream)? {
+        Some(Msg::Welcome { shard, active }) => Ok((shard, active)),
+        other => anyhow::bail!("unexpected reply to Register: {other:?}"),
     }
 }
 
@@ -222,12 +270,15 @@ fn conn_loop(mut read_half: TcpStream, coord: Arc<Coordinator>, stop: Arc<Atomic
                 stop.store(true, Ordering::SeqCst);
                 break;
             }
-            // Server-to-client messages arriving at the server: protocol
-            // violation, drop the connection.
+            // Server-to-client messages (or registration traffic, which
+            // belongs on the router's registration port) arriving at the
+            // server: protocol violation, drop the connection.
             Msg::Result { .. }
             | Msg::MetricsReply(_)
             | Msg::HealthReply { .. }
-            | Msg::ShutdownAck => break,
+            | Msg::ShutdownAck
+            | Msg::Register { .. }
+            | Msg::Welcome { .. } => break,
         }
     }
     // Closing the reply channel lets the writer drain the pending

@@ -23,8 +23,20 @@ use anyhow::{anyhow, bail, ensure, Result};
 use crate::coordinator::{MetricsSnapshot, WorkerHealth};
 use crate::mmpu::FunctionKind;
 
-/// Bumped on any incompatible layout change; decoders reject mismatches.
-pub const WIRE_VERSION: u8 = 1;
+/// Newest protocol version this peer speaks. v2 added shard
+/// registration (`Register`/`Welcome`) and the fleet-membership
+/// counters (`shards_total`/`shards_down`) trailing the metrics
+/// snapshot body. Each frame is stamped with the *lowest* version that
+/// can represent its message ([`Msg::min_version`]), so v1 peers keep
+/// understanding the unchanged message layouts.
+pub const WIRE_VERSION: u8 = 2;
+
+/// Oldest version this decoder still accepts. v1 frames decode
+/// compatibly (the snapshot's missing membership counters default to
+/// zero); v2-only message types inside a v1 frame are rejected, and
+/// anything outside `MIN_WIRE_VERSION..=WIRE_VERSION` is an error —
+/// never a panic, never a misparse.
+pub const MIN_WIRE_VERSION: u8 = 1;
 
 /// Sanity bound on a frame body: protects against garbage length
 /// prefixes allocating gigabytes (16 MiB is orders of magnitude above
@@ -51,6 +63,17 @@ pub enum Msg {
     /// accept loop; in-flight work still drains).
     Shutdown,
     ShutdownAck,
+    /// Shard -> router (registration port, wire v2): announce a serving
+    /// shard. `name` is the shard's stable identity — a restarted
+    /// process re-registering under the same name reclaims its ring
+    /// slot (possibly at a new `addr`), keeping kind->shard placement
+    /// bit-identical across the restart. `spare` asks to join the
+    /// hot-spare pool instead of the active ring.
+    Register { name: String, addr: String, spare: bool },
+    /// Router -> shard (wire v2): registration ack with the assigned
+    /// stable shard index and whether the shard is immediately part of
+    /// the routing ring (spares start idle).
+    Welcome { shard: u32, active: bool },
 }
 
 impl Msg {
@@ -64,6 +87,21 @@ impl Msg {
             Msg::HealthReply { .. } => 6,
             Msg::Shutdown => 7,
             Msg::ShutdownAck => 8,
+            Msg::Register { .. } => 9,
+            Msg::Welcome { .. } => 10,
+        }
+    }
+
+    /// Lowest protocol version that can represent this message. Frames
+    /// are stamped with this (not blindly with [`WIRE_VERSION`]) so a
+    /// mixed-version fleet interoperates on the data path: a v1 peer
+    /// accepts every message whose layout predates v2, and only the
+    /// genuinely v2 messages (registration; metrics snapshots, whose
+    /// body grew the membership counters) are labeled v2.
+    fn min_version(&self) -> u8 {
+        match self {
+            Msg::MetricsReply(_) | Msg::Register { .. } | Msg::Welcome { .. } => 2,
+            _ => 1,
         }
     }
 
@@ -71,7 +109,7 @@ impl Msg {
     /// prefix — [`write_msg`] adds that).
     pub fn to_bytes(&self) -> Vec<u8> {
         let mut out = Vec::with_capacity(64);
-        out.push(WIRE_VERSION);
+        out.push(self.min_version());
         out.push(self.type_id());
         match self {
             Msg::Submit { id, kind, a, b } => {
@@ -100,15 +138,30 @@ impl Msg {
                 put_u32(&mut out, *routable);
                 put_u32(&mut out, *retired);
             }
+            Msg::Register { name, addr, spare } => {
+                put_string(&mut out, name);
+                put_string(&mut out, addr);
+                out.push(*spare as u8);
+            }
+            Msg::Welcome { shard, active } => {
+                put_u32(&mut out, *shard);
+                out.push(*active as u8);
+            }
         }
         out
     }
 
     /// Decode a frame payload. Strict: every byte must be consumed.
+    /// Accepts `MIN_WIRE_VERSION..=WIRE_VERSION`; older peers' frames
+    /// decode with version-appropriate layouts, newer (or garbage)
+    /// versions are rejected outright.
     pub fn from_bytes(bytes: &[u8]) -> Result<Msg> {
         let mut c = Cursor { buf: bytes, pos: 0 };
         let version = c.u8()?;
-        ensure!(version == WIRE_VERSION, "unsupported wire version {version}");
+        ensure!(
+            (MIN_WIRE_VERSION..=WIRE_VERSION).contains(&version),
+            "unsupported wire version {version} (this peer speaks {MIN_WIRE_VERSION}..={WIRE_VERSION})"
+        );
         let type_id = c.u8()?;
         let msg = match type_id {
             1 => {
@@ -130,7 +183,7 @@ impl Msg {
                 Msg::Result { id, value, latency_us, error }
             }
             3 => Msg::MetricsReq,
-            4 => Msg::MetricsReply(c.snapshot()?),
+            4 => Msg::MetricsReply(c.snapshot(version)?),
             5 => Msg::HealthReq,
             6 => {
                 let serving = c.bool()?;
@@ -141,6 +194,20 @@ impl Msg {
             }
             7 => Msg::Shutdown,
             8 => Msg::ShutdownAck,
+            9 | 10 if version < 2 => {
+                bail!("message type {} requires wire version >= 2 (frame is v{version})", type_id)
+            }
+            9 => {
+                let name = c.string()?;
+                let addr = c.string()?;
+                let spare = c.bool()?;
+                Msg::Register { name, addr, spare }
+            }
+            10 => {
+                let shard = c.u32()?;
+                let active = c.bool()?;
+                Msg::Welcome { shard, active }
+            }
             t => bail!("unknown message type {t}"),
         };
         ensure!(c.pos == bytes.len(), "trailing bytes after {} message", type_name(type_id));
@@ -158,6 +225,8 @@ fn type_name(t: u8) -> &'static str {
         6 => "HealthReply",
         7 => "Shutdown",
         8 => "ShutdownAck",
+        9 => "Register",
+        10 => "Welcome",
         _ => "unknown",
     }
 }
@@ -249,6 +318,10 @@ fn put_snapshot(out: &mut Vec<u8>, s: &MetricsSnapshot) {
         out.push(w.policy_level);
         out.push(w.retired as u8);
     }
+    // Fleet membership counters trail the v1 body so v1 frames decode
+    // compatibly (they simply stop here and the counters default to 0).
+    put_u64(out, s.shards_total);
+    put_u64(out, s.shards_down);
 }
 
 struct Cursor<'a> {
@@ -307,7 +380,7 @@ impl<'a> Cursor<'a> {
         })
     }
 
-    fn snapshot(&mut self) -> Result<MetricsSnapshot> {
+    fn snapshot(&mut self, version: u8) -> Result<MetricsSnapshot> {
         let submitted = self.u64()?;
         let completed = self.u64()?;
         let failed = self.u64()?;
@@ -346,6 +419,10 @@ impl<'a> Cursor<'a> {
                 retired,
             });
         }
+        // v2 appended the fleet membership counters; a v1 peer's
+        // snapshot ends here and reports zeros.
+        let (shards_total, shards_down) =
+            if version >= 2 { (self.u64()?, self.u64()?) } else { (0, 0) };
         Ok(MetricsSnapshot {
             submitted,
             completed,
@@ -356,6 +433,8 @@ impl<'a> Cursor<'a> {
             queue_depth,
             worker_health,
             lat_bins,
+            shards_total,
+            shards_down,
         })
     }
 }
@@ -368,9 +447,13 @@ mod tests {
     fn submit_roundtrip_and_layout() {
         let msg = Msg::Submit { id: 7, kind: FunctionKind::Mul(16), a: 123, b: 456 };
         let bytes = msg.to_bytes();
-        assert_eq!(bytes[0], WIRE_VERSION);
+        assert_eq!(bytes[0], 1, "v1-expressible messages stay v1-labeled for old peers");
         assert_eq!(bytes[1], 1);
         assert_eq!(Msg::from_bytes(&bytes).unwrap(), msg);
+        // Genuinely v2 messages carry the v2 label.
+        let reg = Msg::Register { name: "a".into(), addr: "b".into(), spare: false };
+        assert_eq!(reg.to_bytes()[0], WIRE_VERSION);
+        assert_eq!(Msg::MetricsReply(MetricsSnapshot::default()).to_bytes()[0], WIRE_VERSION);
     }
 
     #[test]
@@ -383,6 +466,8 @@ mod tests {
             Msg::HealthReply { serving: true, workers: 4, routable: 3, retired: 1 },
             Msg::Shutdown,
             Msg::ShutdownAck,
+            Msg::Register { name: "shard-a".into(), addr: "127.0.0.1:4870".into(), spare: true },
+            Msg::Welcome { shard: 3, active: false },
         ];
         let mut stream = Vec::new();
         for m in &msgs {
@@ -410,9 +495,37 @@ mod tests {
                 WorkerHealth { batches: 3, scrubs: 1, retired: true, ..Default::default() },
                 WorkerHealth::default(),
             ],
+            shards_total: 3,
+            shards_down: 1,
         };
         let msg = Msg::MetricsReply(snap);
         assert_eq!(Msg::from_bytes(&msg.to_bytes()).unwrap(), msg);
+    }
+
+    #[test]
+    fn v1_frames_decode_compatibly() {
+        // A v1 MetricsReply lacks the trailing membership counters:
+        // strip them from a v2 encoding and relabel the version byte.
+        let snap = MetricsSnapshot { completed: 9, lat_bins: vec![1, 2], ..Default::default() };
+        let mut v1 = Msg::MetricsReply(snap.clone()).to_bytes();
+        v1.truncate(v1.len() - 16);
+        v1[0] = 1;
+        match Msg::from_bytes(&v1).unwrap() {
+            Msg::MetricsReply(got) => {
+                assert_eq!(got, snap, "membership counters default to 0 for v1 peers")
+            }
+            other => panic!("unexpected decode: {other:?}"),
+        }
+        // Fixed-layout messages are identical across versions.
+        let mut submit =
+            Msg::Submit { id: 1, kind: FunctionKind::Add(8), a: 2, b: 3 }.to_bytes();
+        submit[0] = 1;
+        assert!(Msg::from_bytes(&submit).is_ok());
+        // v2-only types inside a v1 frame are rejected.
+        let mut reg =
+            Msg::Register { name: "x".into(), addr: "y".into(), spare: false }.to_bytes();
+        reg[0] = 1;
+        assert!(Msg::from_bytes(&reg).is_err(), "Register requires wire v2");
     }
 
     #[test]

@@ -206,6 +206,13 @@ impl CrossbarHealth {
         self.fault_map.inject(row, col, value)
     }
 
+    /// Withdraw a physical row from the spare pool (without marking it
+    /// bad): the mMPU reserves the semi-parallel TMR vote scratch row
+    /// this way, since the engine overwrites it every batch.
+    pub fn reserve_spare(&mut self, physical: u32) -> bool {
+        self.remap.reserve(physical)
+    }
+
     /// Force stuck cells onto the array state; returns bits changed.
     pub fn clamp(&self, state: &mut BitMatrix) -> u64 {
         self.fault_map.clamp(state)

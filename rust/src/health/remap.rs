@@ -81,6 +81,16 @@ impl RowRemap {
         self.map.iter().enumerate().filter(|&(l, &p)| l as u32 != p).count()
     }
 
+    /// Take a physical row out of the spare pool without marking it bad
+    /// — e.g. the semi-parallel TMR vote scratch row, which the engine
+    /// overwrites every batch and must never back remapped data.
+    /// Returns whether the row was in the pool.
+    pub fn reserve(&mut self, physical: u32) -> bool {
+        let before = self.free_spares.len();
+        self.free_spares.retain(|&s| s != physical);
+        self.free_spares.len() != before
+    }
+
     /// Record that a physical row holds a persistent fault; remap the
     /// logical row served by it (if any) onto a healthy spare.
     pub fn notice_bad_row(&mut self, physical: u32) -> BadRowOutcome {
@@ -133,6 +143,17 @@ mod tests {
         assert_eq!(r.spares_left(), 0);
         // No spare left for the next active-row fault.
         assert_eq!(r.notice_bad_row(0), BadRowOutcome::Exhausted);
+    }
+
+    #[test]
+    fn reserved_spare_is_never_handed_out() {
+        let mut r = RowRemap::new(8, 2); // spares {6, 7}
+        assert!(r.reserve(7), "7 was in the pool");
+        assert!(!r.reserve(7), "already reserved");
+        assert_eq!(r.spares_left(), 1);
+        let o = r.notice_bad_row(2);
+        assert_eq!(o, BadRowOutcome::Remapped { logical: 2, spare: 6 });
+        assert_eq!(r.notice_bad_row(3), BadRowOutcome::Exhausted, "7 stays reserved");
     }
 
     #[test]

@@ -21,18 +21,33 @@
 //!                                     # degradation vs closed form
 //! remus fabric-serve [--addr 127.0.0.1:4870 --workers 4 --spares 0
 //!                     --health --endurance 3e4]
+//!                    [--register host:port --name id --spare]
 //!                                     # one fabric shard: TCP front end
 //!                                     # over one coordinator; prints
 //!                                     # "LISTENING <addr>" then serves
-//!                                     # until a Shutdown frame
-//! remus fabric-route --shards a:p,b:p [--requests 8192]
+//!                                     # until a Shutdown frame. With
+//!                                     # --register it announces itself
+//!                                     # to a router's registration
+//!                                     # port (--spare: hot-spare pool)
+//! remus fabric-route [--shards a:p,b:p] [--listen-reg host:port]
+//!                    [--requests 8192 --min-shards 1
+//!                     --probe-ms 250 --retry-ms 1000]
 //!                                     # client-side consistent-hash
-//!                                     # router over running shards
+//!                                     # router; shards come from the
+//!                                     # static list, registration, or
+//!                                     # both. Downed shards are
+//!                                     # re-probed and revived
 //! remus fabric-soak [--shards 2 --requests 100000 --workers 2]
+//!                   [--spare-shards 0 --chaos-kill]
 //!                                     # §Scale loopback soak: spawns
 //!                                     # one fabric-serve *process* per
 //!                                     # shard, shards load across them,
-//!                                     # merges fleet health
+//!                                     # merges fleet health.
+//!                                     # --spare-shards: extra children
+//!                                     # registered as hot spares;
+//!                                     # --chaos-kill: SIGKILL one shard
+//!                                     # mid-run, restart it, and prove
+//!                                     # zero lost/wrong replies
 //! ```
 
 use anyhow::Result;
@@ -42,7 +57,7 @@ use remus::analysis::{fig4::MultReliability, overhead};
 use remus::bitlet::BitletModel;
 use remus::coordinator::{Coordinator, CoordinatorConfig, MetricsSnapshot, Submitter};
 use remus::errs::ErrorModel;
-use remus::fabric::{shutdown_endpoint, FabricServer, Router};
+use remus::fabric::{shutdown_endpoint, FabricServer, Router, RouterConfig};
 use remus::health::{HealthConfig, WearModel};
 use remus::mmpu::{controller::quick_exec, FunctionKind, ReliabilityPolicy};
 use remus::nn::degradation::DegradationModel;
@@ -232,14 +247,24 @@ fn tradeoff(_args: &Args) -> Result<()> {
 fn serve(args: &Args) -> Result<()> {
     let requests = args.get_or("requests", 4096u64);
     let workers = args.get_or("workers", 4usize);
-    // The load path is Submitter-generic: --shards swaps the in-process
-    // coordinator for a fabric router over running shard endpoints with
-    // no other change.
-    if let Some(shards) = args.get("shards") {
-        let addrs: Vec<String> = shards.split(',').map(str::to_string).collect();
-        let router = Router::connect(&addrs)?;
-        println!("serving through the fabric router over {} shards", addrs.len());
+    // The load path is Submitter-generic: --shards (and/or --listen-reg,
+    // which discovers shards through registration) swaps the in-process
+    // coordinator for a fabric router with no other change.
+    if args.get("shards").is_some() || args.get("listen-reg").is_some() {
+        let addrs: Vec<String> = args
+            .get("shards")
+            .map(|s| s.split(',').map(str::to_string).collect())
+            .unwrap_or_default();
+        let rcfg = RouterConfig {
+            listen: args.get("listen-reg").map(str::to_string),
+            ..Default::default()
+        };
+        let router = Router::with_config(&addrs, rcfg)?;
+        announce_registration(&router, args, addrs.len(), "serve");
+        println!("serving through the fabric router over {} shards", router.shard_count());
         serve_load(&router, requests)?;
+        let m = router.metrics();
+        println!("fleet shards: {} total, {} down", m.shards_total, m.shards_down);
         router.shutdown();
         return Ok(());
     }
@@ -449,6 +474,13 @@ fn lifetime_cmd(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `Router::announce_and_wait` with the `--min-shards` CLI default (the
+/// static shard count, at least 1). Shared by `serve` and `fabric-route`.
+fn announce_registration(router: &Router, args: &Args, static_shards: usize, ctx: &str) {
+    let min = args.get_or("min-shards", static_shards.max(1));
+    router.announce_and_wait(min, std::time::Duration::from_secs(30), ctx);
+}
+
 /// Build one shard's coordinator config from CLI options (shared by
 /// `fabric-serve`; `fabric-soak` passes the same flags to its children).
 fn shard_config(args: &Args) -> CoordinatorConfig {
@@ -487,22 +519,38 @@ fn fabric_serve(args: &Args) -> Result<()> {
     println!("LISTENING {}", server.local_addr());
     use std::io::Write as _;
     std::io::stdout().flush()?;
+    // Registration-based discovery: announce this shard to a router's
+    // registration port instead of appearing in its --shards list. The
+    // stable --name lets a restarted process reclaim its ring slot.
+    if let Some(reg) = args.get("register") {
+        let name = args
+            .get("name")
+            .map(str::to_string)
+            .unwrap_or_else(|| server.local_addr().to_string());
+        server.register_with(reg, &name, args.flag("spare"));
+    }
     server.wait();
     eprintln!("fabric-serve: shutdown frame received, draining");
     server.shutdown();
     Ok(())
 }
 
-/// Client-side router over already-running shard endpoints.
+/// Client-side router over already-running shard endpoints and/or a
+/// registration listener for shards that announce themselves.
 fn fabric_route(args: &Args) -> Result<()> {
-    let shards: Vec<String> = args
-        .get("shards")
-        .unwrap_or("127.0.0.1:4870")
-        .split(',')
-        .map(str::to_string)
-        .collect();
+    let shards: Vec<String> = match (args.get("shards"), args.get("listen-reg")) {
+        (Some(s), _) => s.split(',').map(str::to_string).collect(),
+        (None, Some(_)) => Vec::new(),
+        (None, None) => vec!["127.0.0.1:4870".to_string()],
+    };
     let requests = args.get_or("requests", 8192u64);
-    let router = Router::connect(&shards)?;
+    let rcfg = RouterConfig {
+        probe_period: std::time::Duration::from_millis(args.get_or("probe-ms", 250u64)),
+        retry_window: std::time::Duration::from_millis(args.get_or("retry-ms", 1000u64)),
+        listen: args.get("listen-reg").map(str::to_string),
+    };
+    let router = Router::with_config(&shards, rcfg)?;
+    announce_registration(&router, args, shards.len(), "fabric-route");
     // add8 and xor16 land on different shards of a 2-entry ring.
     let kinds = [FunctionKind::Add(8), FunctionKind::Xor(16), FunctionKind::Mul(8)];
     for k in kinds {
@@ -513,12 +561,16 @@ fn fabric_route(args: &Args) -> Result<()> {
         "routed {requests} requests over {}/{} live shards in {dt:.2?}: {:.0} req/s \
          (ok {ok}, wrong {wrong}, error results {errs})",
         router.live_shards(),
-        shards.len(),
+        router.shard_count(),
         requests as f64 / dt.as_secs_f64()
     );
     let m = router.metrics();
     println!(
-        "fleet: completed={} failed={} mean_batch={:.1} p50={}us p99={}us retired={}",
+        "fleet: shards {}/{} up ({} down) completed={} failed={} mean_batch={:.1} \
+         p50={}us p99={}us retired={}",
+        m.shards_total - m.shards_down,
+        m.shards_total,
+        m.shards_down,
         m.completed,
         m.failed,
         m.mean_batch_size(),
@@ -535,15 +587,29 @@ fn fabric_route(args: &Args) -> Result<()> {
 /// reader (kept open so the child never writes into a closed pipe).
 type ShardProc = (std::process::Child, std::io::BufReader<std::process::ChildStdout>);
 
-/// Spawn one `fabric-serve` child on an ephemeral loopback port and
-/// parse its `LISTENING <addr>` banner.
-fn spawn_shard(args: &Args, exe: &std::path::Path, shard: usize) -> Result<(ShardProc, String)> {
+/// Spawn one `fabric-serve` child on `addr` (port 0 for ephemeral) and
+/// parse its `LISTENING <addr>` banner. `register` = (router
+/// registration addr, spare flag) makes the child announce itself under
+/// the stable name `shard{shard}`.
+fn spawn_shard(
+    args: &Args,
+    exe: &std::path::Path,
+    shard: usize,
+    addr: &str,
+    register: Option<(&str, bool)>,
+) -> Result<(ShardProc, String)> {
     let workers = args.get_or("workers", 2usize);
     let mut cmd = std::process::Command::new(exe);
-    cmd.args(["fabric-serve", "--addr", "127.0.0.1:0"])
+    cmd.args(["fabric-serve", "--addr", addr])
         .args(["--workers", &workers.to_string()])
         .args(["--seed", &(0xC0 + shard as u64).to_string()])
         .stdout(std::process::Stdio::piped());
+    if let Some((reg, spare)) = register {
+        cmd.args(["--register", reg]).args(["--name", &format!("shard{shard}")]);
+        if spare {
+            cmd.arg("--spare");
+        }
+    }
     // Forward every shard_config option so the children run exactly the
     // configuration the user asked for.
     for key in ["rows", "cols", "spares", "max-batch", "max-wait-us", "endurance"] {
@@ -580,16 +646,25 @@ fn spawn_shard(args: &Args, exe: &std::path::Path, shard: usize) -> Result<(Shar
 /// on an ephemeral loopback port, shard an open-loop load across them
 /// through the router, then stop the fleet over the wire. The fleet is
 /// always torn down — also on error paths — so no child outlives the
-/// parent.
+/// parent. `--spare-shards N` spawns N extra children that register as
+/// hot spares; `--chaos-kill` SIGKILLs shard 0 mid-run, serves through
+/// the outage, restarts it on the same port, waits for the router to
+/// revive it, and proves zero lost/wrong replies (the `CHAOS-OK` line
+/// is machine-checked by `tests/integration_fabric.rs` and CI).
 fn fabric_soak(args: &Args) -> Result<()> {
     let nshards = args.get_or("shards", 2usize);
     let requests = args.get_or("requests", 100_000u64);
+    let spare_shards = args.get_or("spare-shards", 0usize);
+    let chaos = args.flag("chaos-kill");
+    if chaos && nshards < 2 {
+        anyhow::bail!("--chaos-kill needs at least 2 shards to serve through the outage");
+    }
     let exe = std::env::current_exe()?;
     let mut children: Vec<ShardProc> = Vec::new();
     let mut addrs: Vec<String> = Vec::new();
     let mut setup_err = None;
     for shard in 0..nshards {
-        match spawn_shard(args, &exe, shard) {
+        match spawn_shard(args, &exe, shard, "127.0.0.1:0", None) {
             Ok((proc_, addr)) => {
                 children.push(proc_);
                 addrs.push(addr);
@@ -605,9 +680,95 @@ fn fabric_soak(args: &Args) -> Result<()> {
     let result = match setup_err {
         Some(e) => Err(e),
         None => (|| {
-            let router = Router::connect(&addrs)?;
+            let rcfg = RouterConfig {
+                probe_period: std::time::Duration::from_millis(100),
+                retry_window: std::time::Duration::from_secs(3),
+                listen: (spare_shards > 0).then(|| "127.0.0.1:0".to_string()),
+            };
+            let static_addrs = addrs.clone();
+            let router = Router::with_config(&static_addrs, rcfg)?;
+            if spare_shards > 0 {
+                let reg = router
+                    .registration_addr()
+                    .expect("listener configured above")
+                    .to_string();
+                for j in 0..spare_shards {
+                    let (proc_, addr) = spawn_shard(
+                        args,
+                        &exe,
+                        nshards + j,
+                        "127.0.0.1:0",
+                        Some((reg.as_str(), true)),
+                    )?;
+                    children.push(proc_);
+                    addrs.push(addr);
+                }
+                if !router.wait_for_live(
+                    nshards + spare_shards,
+                    std::time::Duration::from_secs(15),
+                ) {
+                    anyhow::bail!(
+                        "only {}/{} shards (incl. spares) live after 15s",
+                        router.live_shards(),
+                        nshards + spare_shards
+                    );
+                }
+                println!("spares: {spare_shards} hot-spare shard(s) registered and connected");
+            }
             let kinds = [FunctionKind::Add(8), FunctionKind::Xor(16)];
-            let (ok, wrong, errs, dt) = drive_load(&router, &kinds, requests, 8192);
+            let total_live = nshards + spare_shards;
+            let (ok, wrong, errs, dt) = if chaos {
+                let seg = requests / 3;
+                let t0 = std::time::Instant::now();
+                let (ok1, w1, e1, _) = drive_load(&router, &kinds, seg, 8192);
+                // SIGKILL shard 0 (abrupt socket death, no goodbye).
+                let _ = children[0].0.kill();
+                let _ = children[0].0.wait();
+                // The router notices via reader EOF within moments.
+                let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+                while router.live_shards() >= total_live {
+                    anyhow::ensure!(
+                        std::time::Instant::now() < deadline,
+                        "router never noticed the killed shard"
+                    );
+                    std::thread::sleep(std::time::Duration::from_millis(5));
+                }
+                let down = router.metrics();
+                println!(
+                    "chaos: killed shard 0; fleet sees {} of {} shards down",
+                    down.shards_down, down.shards_total
+                );
+                // Serve through the outage (failover keeps every reply).
+                let (ok2, w2, e2, _) = drive_load(&router, &kinds, seg, 8192);
+                // Restart on the same port (brief retry: the kernel may
+                // hold the port for a moment after the kill); the
+                // supervisor's probe loop revives it into its original
+                // ring slot.
+                let mut restarted = None;
+                for attempt in 0..20 {
+                    match spawn_shard(args, &exe, 0, &addrs[0], None) {
+                        Ok(p) => {
+                            restarted = Some(p);
+                            break;
+                        }
+                        Err(e) => {
+                            anyhow::ensure!(attempt < 19, "restart of shard 0 failed: {e:#}");
+                            std::thread::sleep(std::time::Duration::from_millis(250));
+                        }
+                    }
+                }
+                let (proc_, _) = restarted.expect("restart loop sets or bails");
+                children[0] = proc_;
+                anyhow::ensure!(
+                    router.wait_for_live(total_live, std::time::Duration::from_secs(15)),
+                    "killed shard was not revived within 15s"
+                );
+                println!("chaos: revived shard 0 into its original ring slot");
+                let (ok3, w3, e3, _) = drive_load(&router, &kinds, requests - 2 * seg, 8192);
+                (ok1 + ok2 + ok3, w1 + w2 + w3, e1 + e2 + e3, t0.elapsed())
+            } else {
+                drive_load(&router, &kinds, requests, 8192)
+            };
             println!(
                 "fabric soak: {requests} requests over {nshards} shard processes in \
                  {dt:.2?}: {:.0} req/s (ok {ok}, wrong {wrong}, error results {errs})",
@@ -615,7 +776,10 @@ fn fabric_soak(args: &Args) -> Result<()> {
             );
             let m = router.metrics();
             println!(
-                "fleet: completed={} failed={} retired={}/{}",
+                "fleet: shards {}/{} up ({} down) completed={} failed={} retired={}/{}",
+                m.shards_total - m.shards_down,
+                m.shards_total,
+                m.shards_down,
                 m.completed,
                 m.failed,
                 m.retired_workers(),
@@ -623,6 +787,16 @@ fn fabric_soak(args: &Args) -> Result<()> {
             );
             print_worker_health("fleet", &m);
             router.shutdown();
+            if chaos {
+                anyhow::ensure!(
+                    wrong == 0 && errs == 0 && ok == requests,
+                    "chaos run lost or corrupted replies: ok {ok}/{requests}, \
+                     wrong {wrong}, error results {errs}"
+                );
+                println!(
+                    "CHAOS-OK requests={requests} ok={ok} wrong={wrong} error_results={errs}"
+                );
+            }
             Ok(())
         })(),
     };

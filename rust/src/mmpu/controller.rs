@@ -28,11 +28,15 @@
 //! between batches the owner drives [`Mmpu::health_scrub`] and
 //! [`Mmpu::set_policy`] (adaptive escalation).
 
+use std::collections::HashMap;
+use std::sync::Arc;
+
 use anyhow::{ensure, Result};
 
 use crate::ecc::DiagonalEcc;
 use crate::errs::{ErrorModel, Injector};
 use crate::health::{CrossbarHealth, HealthConfig, ScrubReport};
+use crate::isa::plan::CompiledPlan;
 use crate::tmr::{TmrEngine, TmrMode, TmrRun};
 use crate::util::bitmat::{transpose64, BitMatrix};
 use crate::xbar::crossbar::Crossbar;
@@ -90,6 +94,11 @@ struct XbarUnit {
     inj: Injector,
     ecc: Option<DiagonalEcc>,
     health: Option<CrossbarHealth>,
+    /// §Health + SemiParallel: per-function vote plans re-addressed
+    /// through this crossbar's spare-row remap, recompiled only when
+    /// the remap state changes (remap events are rare; remapped state
+    /// is permanent, so the batch path must stay compiled).
+    semi_votes: HashMap<FunctionKind, (Vec<(u32, u32)>, Arc<CompiledPlan>)>,
 }
 
 /// Result of a vectored function execution.
@@ -240,6 +249,7 @@ impl Mmpu {
                 inj: root.split(),
                 ecc: cfg.policy.ecc_m.map(|m| DiagonalEcc::new(cfg.rows, cfg.cols, m)),
                 health: None,
+                semi_votes: HashMap::new(),
             })
             .collect();
         Self { cfg, units, plans: PlanCache::new() }
@@ -318,11 +328,28 @@ impl Mmpu {
         let unit = &mut self.units[xbar_id];
         let c0 = unit.xbar.stats.cycles;
         let layout = BatchLayout::resolve(tmr, unit.xbar.rows(), a.len(), &cf.spec)?;
-        // §Health: spare rows are reserved out of the logical row space.
-        // Row remapping is skipped under SemiParallel TMR (its row-triple
-        // voting already outvotes a stuck row — see health/remap.rs).
+        // §Health: spare rows are reserved out of the logical row space,
+        // and scrub-detected stuck rows are routed through the spare-row
+        // remap under every TMR mode. (SemiParallel used to skip the
+        // remap and let row-triple voting absorb the stuck copy — that
+        // silently consumed the triple's voting margin; now the replica
+        // mirrors into its spare and the vote re-addresses it, freeing
+        // the margin for transient faults.)
         let remapped: Vec<(u32, u32)> = match unit.health.as_ref() {
-            Some(h) if tmr != TmrMode::SemiParallel => {
+            Some(h) if tmr == TmrMode::SemiParallel => {
+                // Replica triples {i, i+k, i+2k} must stay inside the
+                // data rows so the reserved spares (and the vote scratch
+                // row) are never part of a triple.
+                let k = layout.item_stride;
+                ensure!(
+                    layout.items + 2 * k <= h.data_rows(),
+                    "semi-parallel batch of {} (stride {k}) exceeds {} health-managed data rows",
+                    layout.items,
+                    h.data_rows()
+                );
+                h.remapped_pairs()
+            }
+            Some(h) => {
                 ensure!(
                     layout.items <= h.data_rows(),
                     "batch of {} exceeds {} health-managed data rows",
@@ -331,7 +358,7 @@ impl Mmpu {
                 );
                 h.remapped_pairs()
             }
-            _ => Vec::new(),
+            None => Vec::new(),
         };
 
         // --- ECC verify-before: repair drift since the last batch -----
@@ -375,28 +402,47 @@ impl Mmpu {
         unit.xbar.stats.switched_bits += switched;
         unit.xbar.stats.cycles += layout.total_bits() as u64;
 
-        // §Health: mirror remapped items into their spare rows (the
-        // in-row compute covers every physical lane, so only operand
-        // placement and readback need translation).
-        if !remapped.is_empty() {
+        // §Health: mirror remapped rows' operand copies into their spare
+        // rows (the in-row compute covers every physical lane, spares
+        // included, so only operand placement, the semi vote schedule
+        // and readback need translation). Each mirror job is
+        // (copy index, item, spare row): one row per item for
+        // Off/Serial/Parallel (every copy shares the row, at its column
+        // base); for SemiParallel, row l backs exactly one replica
+        // (copy l/k of item l%k within the occupied ranges), and that
+        // copy's flip-adjusted staging is what migrates.
+        let mirror_jobs: Vec<(usize, usize, u32)> = remapped
+            .iter()
+            .flat_map(|&(l, p)| {
+                let l = l as usize;
+                if layout.replicas == 3 {
+                    let k = layout.item_stride;
+                    (0..3usize)
+                        .filter(|&rep| l >= rep * k && l - rep * k < layout.items)
+                        .map(|rep| (rep, l - rep * k, p))
+                        .collect::<Vec<_>>()
+                } else if l < layout.items {
+                    (0..copies.len()).map(|c| (c, l, p)).collect()
+                } else {
+                    Vec::new()
+                }
+            })
+            .collect();
+        if !mirror_jobs.is_empty() {
             let mut extra_switched = 0u64;
             let mut extra_bits = 0u64;
-            for &(l, p) in &remapped {
-                let li = l as usize;
-                if li >= layout.items {
-                    continue;
-                }
-                for ((_, col_base), (av, bv)) in copies.iter().zip(&staged) {
-                    for (operand, vals) in [(&cf.spec.a_cols, av), (&cf.spec.b_cols, bv)] {
-                        for (k, &col) in operand.iter().enumerate().take(layout.n) {
-                            let v = (vals[li] >> k) & 1 == 1;
-                            let c = (col + col_base) as usize;
-                            if unit.xbar.state().get(p as usize, c) != v {
-                                extra_switched += 1;
-                            }
-                            unit.xbar.state_mut().set(p as usize, c, v);
-                            extra_bits += 1;
+            for &(copy, item, p) in &mirror_jobs {
+                let (_, col_base) = copies[copy];
+                let (av, bv) = &staged[copy];
+                for (operand, vals) in [(&cf.spec.a_cols, av), (&cf.spec.b_cols, bv)] {
+                    for (k, &col) in operand.iter().enumerate().take(layout.n) {
+                        let v = (vals[item] >> k) & 1 == 1;
+                        let c = (col + col_base) as usize;
+                        if unit.xbar.state().get(p as usize, c) != v {
+                            extra_switched += 1;
                         }
+                        unit.xbar.state_mut().set(p as usize, c, v);
+                        extra_bits += 1;
                     }
                 }
             }
@@ -412,10 +458,33 @@ impl Mmpu {
             h.clamp(unit.xbar.state_mut());
         }
 
+        // §Health + SemiParallel: resolve the vote plan re-addressed
+        // through this crossbar's remap (so a scrubbed-out row stops
+        // consuming one of its triple's votes), recompiling only when
+        // the remap state changed since the last batch of this kind.
+        let semi_vote: Option<Arc<CompiledPlan>> =
+            if tmr == TmrMode::SemiParallel && !remapped.is_empty() {
+                let stale = unit
+                    .semi_votes
+                    .get(&cf.spec.kind)
+                    .is_none_or(|(pairs, _)| *pairs != remapped);
+                if stale {
+                    let plan = Arc::new(cf.tmr.compile_semi_remapped_vote(&remapped)?);
+                    unit.semi_votes.insert(cf.spec.kind, (remapped.clone(), plan));
+                }
+                unit.semi_votes.get(&cf.spec.kind).map(|(_, p)| p.clone())
+            } else {
+                None
+            };
+
         // --- compute + ECC re-sync + aging + readback -----------------
         let silent = self.cfg.errors.is_silent();
-        let (run, post_ecc_cycles) =
-            Self::ecc_and_compute(unit, silent, c0, |x, inj| cf.tmr.run(x, inj))?;
+        let (run, post_ecc_cycles) = Self::ecc_and_compute(unit, silent, c0, |x, inj| {
+            match &semi_vote {
+                Some(vote) => cf.tmr.run_semi_with_vote(x, inj, vote),
+                None => cf.tmr.run(x, inj),
+            }
+        })?;
         ecc_cycles += post_ecc_cycles;
         if let Some(h) = unit.health.as_ref() {
             h.clamp(unit.xbar.state_mut());
@@ -630,12 +699,20 @@ impl Mmpu {
     }
 
     /// Install an online health manager on every crossbar (§Health).
-    /// Each unit gets an independent fault-sampling stream.
+    /// Each unit gets an independent fault-sampling stream. Under
+    /// SemiParallel TMR the vote scratch row (the last physical row) is
+    /// reserved out of the spare pool — the engine overwrites it every
+    /// batch, so it must never back remapped data.
     pub fn enable_health(&mut self, cfg: HealthConfig) {
         let (rows, cols) = (self.cfg.rows, self.cfg.cols);
+        let semi = self.cfg.policy.tmr == TmrMode::SemiParallel;
         for (i, unit) in self.units.iter_mut().enumerate() {
             let seed = cfg.seed ^ (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
-            unit.health = Some(CrossbarHealth::new(rows, cols, cfg.clone(), seed));
+            let mut h = CrossbarHealth::new(rows, cols, cfg.clone(), seed);
+            if semi {
+                h.reserve_spare((rows - 1) as u32);
+            }
+            unit.health = Some(h);
         }
     }
 
@@ -673,6 +750,29 @@ impl Mmpu {
             );
         }
         let old = self.cfg.policy;
+        // Switching into SemiParallel at runtime claims the vote
+        // scratch row from any health manager's spare pool. If a scrub
+        // already remapped data ONTO that row (spares are handed out
+        // top-down, so it goes first), the switch is rejected before any
+        // state changes — the engine would trample the remapped replica
+        // with vote scratch every batch and corrupt results silently.
+        if policy.tmr == TmrMode::SemiParallel && old.tmr != TmrMode::SemiParallel {
+            let scratch = (self.cfg.rows - 1) as u32;
+            for (i, unit) in self.units.iter().enumerate() {
+                if let Some(h) = unit.health.as_ref() {
+                    ensure!(
+                        h.remapped_pairs().iter().all(|&(_, p)| p != scratch),
+                        "cannot switch crossbar {i} to semi-parallel TMR: vote scratch row \
+                         {scratch} already backs remapped data"
+                    );
+                }
+            }
+            for unit in &mut self.units {
+                if let Some(h) = unit.health.as_mut() {
+                    h.reserve_spare(scratch);
+                }
+            }
+        }
         self.cfg.policy = policy;
         if old.ecc_m != policy.ecc_m {
             let (rows, cols) = (self.cfg.rows, self.cfg.cols);
@@ -1048,6 +1148,67 @@ mod tests {
         let s = mmpu.health(0).unwrap().stats();
         assert_eq!(s.remapped_rows, 1);
         assert!(s.spares_left < 4);
+    }
+
+    #[test]
+    fn semi_tmr_stuck_row_remaps_and_frees_the_voting_margin() {
+        use crate::health::{HealthConfig, WearModel};
+        // 32 rows: semi stride k = 10, vote scratch row 31; 4 spare
+        // rows -> 28 data rows, so batches of <= 8 items keep every
+        // replica triple {i, i+10, i+20} inside the data rows.
+        let cfg = MmpuConfig {
+            rows: 32,
+            cols: 64,
+            num_crossbars: 1,
+            policy: ReliabilityPolicy { ecc_m: None, tmr: TmrMode::SemiParallel },
+            errors: ErrorModel::none(),
+            seed: 11,
+        };
+        let hcfg = HealthConfig {
+            wear: WearModel::immortal(),
+            spare_rows: 4,
+            scrub_interval: 1,
+            scrub_rows_per_pass: 32,
+            ..Default::default()
+        };
+        let func = FunctionSpec::build(FunctionKind::Add(8));
+        let a0 = func.a_cols[0];
+        let a: Vec<u64> = (0..8).map(|i| i * 11 % 256).collect();
+        let b: Vec<u64> = (0..8).map(|i| i * 7 % 256).collect();
+        // Stuck value chosen opposite to item 3's a-bit0, so the clamp
+        // after operand load corrupts that replica's input.
+        let stuck = (a[3] & 1) == 0;
+
+        // Margin consumed: two stuck replica rows in item 3's triple
+        // (copies 1 and 2, rows 13 and 23) outvote the healthy copy —
+        // the silent failure mode this fix removes.
+        let mut worn = Mmpu::new(cfg.clone());
+        worn.enable_health(hcfg.clone());
+        worn.health_mut(0).unwrap().inject_stuck(13, a0, stuck);
+        worn.health_mut(0).unwrap().inject_stuck(23, a0, stuck);
+        let r = worn.exec_vector(0, &func, &a, &b).unwrap();
+        assert_ne!(r.values[3], a[3] + b[3], "two bad copies must outvote the good one");
+
+        // Margin freed: the first stuck row goes through the spare-row
+        // remap at scrub time (like the non-TMR path), so the triple
+        // regains its full margin and tolerates a second faulty row.
+        let mut mmpu = Mmpu::new(cfg);
+        mmpu.enable_health(hcfg);
+        mmpu.health_mut(0).unwrap().inject_stuck(13, a0, stuck);
+        let rep = mmpu.health_scrub(0).unwrap();
+        assert!(rep.detected >= 1 && rep.remapped >= 1, "scrub must remap, not absorb: {rep:?}");
+        let pairs = mmpu.health(0).unwrap().remapped_pairs();
+        assert!(pairs.iter().any(|&(l, _)| l == 13), "row 13 remapped: {pairs:?}");
+        assert!(
+            pairs.iter().all(|&(_, p)| p != 31),
+            "the vote scratch row is reserved and never backs data: {pairs:?}"
+        );
+        mmpu.health_mut(0).unwrap().inject_stuck(23, a0, stuck);
+        let r = mmpu.exec_vector(0, &func, &a, &b).unwrap();
+        for i in 0..8 {
+            assert_eq!(r.values[i], a[i] + b[i], "post-remap item {i}");
+        }
+        assert!(mmpu.health(0).unwrap().stats().remapped_rows >= 1);
     }
 
     #[test]

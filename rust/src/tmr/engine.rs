@@ -213,38 +213,13 @@ impl TmrEngine {
                 // Per-item vote schedule: two in-column gates (Min3 + NOT,
                 // each with its Set1 init) spanning the output columns,
                 // copies at rows {i, i+k, i+2k} — one plan for all items.
-                let mut vote = Program::new(&format!("{}*semivote", prog.name));
-                for i in 0..k {
-                    let (r1, r2, r3) = (i as u32, (i + k) as u32, (i + 2 * k) as u32);
-                    vote.steps.push(Step::one(MicroOp::with_dir(
-                        Dir::InCol,
-                        Gate::Set1,
-                        &[],
-                        scratch_row,
-                        lanes,
-                    )));
-                    vote.steps.push(Step::one(MicroOp::with_dir(
-                        Dir::InCol,
-                        Gate::Min3,
-                        &[r1, r2, r3],
-                        scratch_row,
-                        lanes,
-                    )));
-                    vote.steps.push(Step::one(MicroOp::with_dir(
-                        Dir::InCol,
-                        Gate::Set1,
-                        &[],
-                        r1,
-                        lanes,
-                    )));
-                    vote.steps.push(Step::one(MicroOp::with_dir(
-                        Dir::InCol,
-                        Gate::Not,
-                        &[scratch_row],
-                        r1,
-                        lanes,
-                    )));
-                }
+                let vote = semi_vote_program(
+                    &format!("{}*semivote", prog.name),
+                    k,
+                    scratch_row,
+                    lanes,
+                    |r| r,
+                );
                 let plans = vec![
                     CompiledPlan::compile(prog, rows, cols, col_parts, &row_parts)?,
                     CompiledPlan::compile(&vote, rows, cols, col_parts, &row_parts)?,
@@ -441,6 +416,48 @@ impl TmrEngine {
     }
 }
 
+/// The semi-parallel per-item vote schedule: for each item i, Set1 +
+/// Min3(rows {i, i+k, i+2k}) into the scratch row, then Set1 + NOT back
+/// into item i's row — every row operand translated through `phys`
+/// (§Health spare-row remap; the identity for a healthy array). Shared
+/// by the compile-time plan and the runtime remapped path so the two
+/// can never diverge.
+fn semi_vote_program(
+    name: &str,
+    k: usize,
+    scratch_row: u32,
+    lanes: LaneRange,
+    phys: impl Fn(u32) -> u32,
+) -> Program {
+    let mut vote = Program::new(name);
+    for i in 0..k {
+        let (r1, r2, r3) = (phys(i as u32), phys((i + k) as u32), phys((i + 2 * k) as u32));
+        vote.steps.push(Step::one(MicroOp::with_dir(
+            Dir::InCol,
+            Gate::Set1,
+            &[],
+            scratch_row,
+            lanes,
+        )));
+        vote.steps.push(Step::one(MicroOp::with_dir(
+            Dir::InCol,
+            Gate::Min3,
+            &[r1, r2, r3],
+            scratch_row,
+            lanes,
+        )));
+        vote.steps.push(Step::one(MicroOp::with_dir(Dir::InCol, Gate::Set1, &[], r1, lanes)));
+        vote.steps.push(Step::one(MicroOp::with_dir(
+            Dir::InCol,
+            Gate::Not,
+            &[scratch_row],
+            r1,
+            lanes,
+        )));
+    }
+    vote
+}
+
 /// Partition configuration a single program requires, mirroring
 /// `TmrEngine::configure_partitions`: `None` when the program carries no
 /// partition structure (the crossbar keeps its current configuration).
@@ -522,6 +539,71 @@ impl CompiledTmr {
         for plan in &self.plans {
             x.run_plan(plan, inj.as_deref_mut())?;
         }
+        Ok(TmrRun {
+            output_cols: self.output_cols.clone(),
+            cycles: x.stats.cycles - c0,
+            area_cols: self.area_cols,
+            items: self.items,
+        })
+    }
+
+    /// SemiParallel + §Health: compile the per-item vote schedule with
+    /// every row operand translated through a spare-row remap, so a
+    /// scrubbed-out stuck row no longer consumes one of its triple's
+    /// votes (the freed margin is what the remap buys). Remap *events*
+    /// are rare but remapped *state* is permanent, so callers cache the
+    /// returned plan until the remap changes (`mmpu::Mmpu` keeps one
+    /// per crossbar per function) and the per-batch path stays fully
+    /// compiled — same builder the identity plan froze, so the two can
+    /// never diverge.
+    pub fn compile_semi_remapped_vote(&self, remap: &[(u32, u32)]) -> Result<CompiledPlan> {
+        ensure!(
+            self.mode == TmrMode::SemiParallel,
+            "row-remapped voting is a SemiParallel-only path"
+        );
+        let (lo, hi) = match (self.output_cols.iter().min(), self.output_cols.iter().max()) {
+            (Some(&lo), Some(&hi)) => (lo, hi),
+            _ => bail!("compiled semi-parallel strategy has no outputs"),
+        };
+        let lanes = LaneRange::new(lo, hi + 1);
+        let scratch_row = (self.rows - 1) as u32;
+        let phys = |r: u32| remap.iter().find(|&&(l, _)| l == r).map_or(r, |&(_, p)| p);
+        let vote = semi_vote_program("semivote*remapped", self.items, scratch_row, lanes, phys);
+        let row_parts = Partitions::whole(self.rows as u32);
+        let whole_cols = Partitions::whole(self.cols as u32);
+        let col_parts = self.parts.as_ref().unwrap_or(&whole_cols);
+        CompiledPlan::compile(&vote, self.rows, self.cols, col_parts, &row_parts)
+    }
+
+    /// Execute with a replacement vote plan (from
+    /// [`CompiledTmr::compile_semi_remapped_vote`]) instead of the
+    /// frozen identity vote; the function phase is byte-identical to
+    /// [`CompiledTmr::run`] — in-row micro-ops already execute in every
+    /// physical lane, spares included.
+    pub fn run_semi_with_vote(
+        &self,
+        x: &mut Crossbar,
+        mut inj: Option<&mut Injector>,
+        vote: &CompiledPlan,
+    ) -> Result<TmrRun> {
+        ensure!(
+            self.mode == TmrMode::SemiParallel,
+            "row-remapped execution is a SemiParallel-only path"
+        );
+        ensure!(
+            x.rows() == self.rows && x.cols() == self.cols,
+            "compiled for {}x{}, crossbar is {}x{}",
+            self.rows,
+            self.cols,
+            x.rows(),
+            x.cols()
+        );
+        let c0 = x.stats.cycles;
+        if let Some(parts) = &self.parts {
+            x.set_col_partitions(parts.clone());
+        }
+        x.run_plan(&self.plans[0], inj.as_deref_mut())?;
+        x.run_plan(vote, inj)?;
         Ok(TmrRun {
             output_cols: self.output_cols.clone(),
             cycles: x.stats.cycles - c0,

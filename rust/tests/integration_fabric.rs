@@ -1,12 +1,15 @@
 //! Integration: the fabric subsystem end to end over real threads and
-//! loopback sockets (ISSUE 3 acceptance) — sharded serving bit-identical
-//! to the in-process coordinator, health-driven failover with zero lost
-//! replies, and merged fleet metrics.
+//! loopback sockets (ISSUE 3 + ISSUE 4 acceptance) — sharded serving
+//! bit-identical to the in-process coordinator, health-driven failover
+//! with zero lost replies, merged fleet metrics, and the self-healing
+//! membership machinery: shard revival after a kill/restart,
+//! registration-based discovery, hot-spare shard pools, and the bounded
+//! submit retry window during a total outage.
 
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use remus::coordinator::{Coordinator, CoordinatorConfig, Submitter};
-use remus::fabric::{probe_health, shutdown_endpoint, FabricServer, Router};
+use remus::fabric::{probe_health, shutdown_endpoint, FabricServer, Router, RouterConfig};
 use remus::health::{HealthConfig, WearModel};
 use remus::mmpu::FunctionKind;
 
@@ -208,6 +211,290 @@ fn shard_disconnect_reroutes_in_flight_requests() {
 
     router.shutdown();
     s1.shutdown();
+}
+
+/// A fast-reviving router config for the self-healing tests.
+fn fast_cfg(listen: bool) -> RouterConfig {
+    RouterConfig {
+        probe_period: Duration::from_millis(50),
+        retry_window: Duration::from_millis(2000),
+        listen: listen.then(|| "127.0.0.1:0".to_string()),
+    }
+}
+
+/// Rebind a fabric server on an exact address, retrying briefly (the
+/// kernel may hold the port for a moment after the old process/listener
+/// goes away).
+fn restart_server(addr: &str, cfg: CoordinatorConfig) -> FabricServer {
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        match FabricServer::start(addr, cfg.clone()) {
+            Ok(s) => return s,
+            Err(e) => {
+                assert!(Instant::now() < deadline, "could not rebind {addr}: {e:#}");
+                std::thread::sleep(Duration::from_millis(100));
+            }
+        }
+    }
+}
+
+fn wait_until(what: &str, timeout: Duration, mut done: impl FnMut() -> bool) {
+    let deadline = Instant::now() + timeout;
+    while !done() {
+        assert!(Instant::now() < deadline, "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+/// ISSUE 4 acceptance: a 2-shard fleet with one shard killed and
+/// restarted mid-run completes 1200 requests with zero lost replies,
+/// values bit-identical to an uninterrupted in-process run, and the
+/// revived shard returns to its exact ring slot.
+#[test]
+fn killed_and_restarted_shard_revives_bit_identically() {
+    let s1 = FabricServer::start("127.0.0.1:0", shard_cfg(0xA)).unwrap();
+    let s2 = FabricServer::start("127.0.0.1:0", shard_cfg(0xB)).unwrap();
+    let addrs = vec![s1.local_addr().to_string(), s2.local_addr().to_string()];
+    let router = Router::with_config(&addrs, fast_cfg(false)).unwrap();
+    let k0 = kind_on_shard(&router, 0);
+    let k1 = kind_on_shard(&router, 1);
+    let walk_before: Vec<Vec<usize>> =
+        candidate_kinds().iter().map(|&k| router.ring_walk(k)).collect();
+    let epoch0 = router.membership_epoch();
+
+    let reqs: Vec<(FunctionKind, u64, u64)> = (0..1200u64)
+        .map(|i| (if i % 2 == 0 { k0 } else { k1 }, i % 251, (i * 7 + 3) % 251))
+        .collect();
+
+    // Phase 1: healthy fleet.
+    let mut values = run_checked(&router, &reqs[..400]);
+    // Kill shard 1 (server gone, connections die); the fleet keeps
+    // serving through the outage with zero lost replies.
+    s2.shutdown();
+    wait_until("shard 1 marked down", Duration::from_secs(10), || router.live_shards() == 1);
+    let degraded = router.metrics();
+    assert_eq!(degraded.shards_total, 2, "down shards still count in the fleet view");
+    assert_eq!(degraded.shards_down, 1, "a degraded fleet must not look healthy");
+    values.extend(run_checked(&router, &reqs[400..800]));
+
+    // Restart on the same address: the supervisor's probe revives it
+    // into its original slot — placement is bit-identical to never
+    // having failed.
+    let s2b = restart_server(&addrs[1], shard_cfg(0xB));
+    wait_until("shard 1 revived", Duration::from_secs(10), || router.live_shards() == 2);
+    assert_eq!(router.shard_for(k1), Some(1), "revived shard reclaims its kinds");
+    let walk_after: Vec<Vec<usize>> =
+        candidate_kinds().iter().map(|&k| router.ring_walk(k)).collect();
+    assert_eq!(walk_after, walk_before, "ring placement identical after down/revive");
+    assert!(router.membership_epoch() >= epoch0 + 2, "down + revive both bump the epoch");
+
+    // Phase 3: the revived shard serves again.
+    values.extend(run_checked(&router, &reqs[800..]));
+    let m = router.metrics();
+    assert_eq!(m.shards_down, 0);
+    // The restart reset shard 1's process-local counters (its 200
+    // phase-1 completions died with the old process); the survivor +
+    // revived shard still account for everything since.
+    assert!(m.completed >= 1000, "fleet view covers the post-restart work: {}", m.completed);
+
+    // Bit-identical to one uninterrupted in-process coordinator run of
+    // the same sequence (ErrorModel none + immortal wear: exact
+    // arithmetic end to end).
+    let coord = Coordinator::start(shard_cfg(0xA)).unwrap();
+    let local = run_checked(&coord, &reqs);
+    coord.shutdown();
+    assert_eq!(values, local, "kill/restart run must be bit-identical to uninterrupted");
+
+    router.shutdown();
+    s1.shutdown();
+    s2b.shutdown();
+}
+
+/// ISSUE 4 acceptance: a router with *no* static shard list serves from
+/// registration alone — including a request submitted before any shard
+/// exists, held by the retry window until the first registrant lands.
+#[test]
+fn registration_only_router_serves_without_static_shards() {
+    let mut cfg = fast_cfg(true);
+    cfg.retry_window = Duration::from_secs(8);
+    let router = Router::with_config(&[], cfg).unwrap();
+    let reg = router.registration_addr().expect("listener requested").to_string();
+    assert_eq!(router.shard_count(), 0);
+
+    // Submitted into the void: parked, not failed.
+    let early_kind = FunctionKind::Add(8);
+    let early = router.submit(early_kind, 19, 23);
+
+    let s1 = FabricServer::start("127.0.0.1:0", shard_cfg(0xA)).unwrap();
+    s1.register_with(&reg, "alpha", false);
+    assert!(router.wait_for_live(1, Duration::from_secs(10)), "registered shard comes live");
+    assert_eq!(router.shard_count(), 1);
+
+    let r = early.recv_timeout(Duration::from_secs(10)).expect("parked request resolves");
+    assert!(r.is_ok(), "parked request served after registration: {:?}", r.error);
+    assert_eq!(r.value, early_kind.reference(19, 23));
+
+    let k = kind_on_shard(&router, 0);
+    let reqs: Vec<(FunctionKind, u64, u64)> =
+        (0..100u64).map(|i| (k, i % 97, (i * 3) % 97)).collect();
+    run_checked(&router, &reqs);
+    let m = router.metrics();
+    assert_eq!((m.shards_total, m.shards_down), (1, 0));
+    assert_eq!(m.completed, 101);
+
+    router.shutdown();
+    s1.shutdown();
+}
+
+/// Satellite: during a total outage `submit` waits out a bounded retry
+/// window instead of failing instantly — recovering when a shard
+/// revives in time, and resolving to an explicit error (only) once the
+/// deadline is exhausted.
+#[test]
+fn submit_retry_window_recovers_or_expires() {
+    let server = FabricServer::start("127.0.0.1:0", shard_cfg(0x7)).unwrap();
+    let addr = server.local_addr().to_string();
+    let cfg = fast_cfg(false);
+    let window = cfg.retry_window;
+    let router = Router::with_config(&[addr.clone()], cfg).unwrap();
+    let k = kind_on_shard(&router, 0);
+    run_checked(&router, &[(k, 3, 4)]);
+
+    // Total outage.
+    server.shutdown();
+    wait_until("outage detected", Duration::from_secs(10), || router.live_shards() == 0);
+
+    // Recovered path: the request parks, the shard revives inside the
+    // window, and the reply carries the correct value.
+    let rx = router.submit(k, 5, 6);
+    let revived = restart_server(&addr, shard_cfg(0x7));
+    let r = rx.recv_timeout(Duration::from_secs(10)).expect("parked request resolves");
+    assert!(r.is_ok(), "recovered within the window: {:?}", r.error);
+    assert_eq!(r.value, k.reference(5, 6));
+
+    // Exhausted path: no revival this time — the request resolves to an
+    // explicit error, and only after the window has genuinely elapsed.
+    revived.shutdown();
+    wait_until("second outage detected", Duration::from_secs(10), || router.live_shards() == 0);
+    let t0 = Instant::now();
+    let rx = router.submit(k, 7, 8);
+    let r = rx.recv_timeout(Duration::from_secs(10)).expect("expired request resolves");
+    assert!(!r.is_ok(), "no shard ever revived");
+    let msg = r.error.as_deref().unwrap();
+    assert!(msg.contains("retry window"), "error names the window: {msg:?}");
+    assert!(
+        t0.elapsed() >= window - Duration::from_millis(100),
+        "errored only after the window: {:?} < {window:?}",
+        t0.elapsed()
+    );
+
+    router.shutdown();
+}
+
+/// Satellite (hot-spare pools + ring property): a registered spare
+/// stays out of the ring until a member fails, covers it while down,
+/// and demotes on revival — with the ring walk of every FunctionKind
+/// bit-identical before the failure and after the revival.
+#[test]
+fn spare_shard_promotes_on_failure_and_ring_is_identical_after_revival() {
+    let s1 = FabricServer::start("127.0.0.1:0", shard_cfg(0xA)).unwrap();
+    let s2 = FabricServer::start("127.0.0.1:0", shard_cfg(0xB)).unwrap();
+    let addrs = vec![s1.local_addr().to_string(), s2.local_addr().to_string()];
+    let router = Router::with_config(&addrs, fast_cfg(true)).unwrap();
+    let reg = router.registration_addr().unwrap().to_string();
+    let spare = FabricServer::start("127.0.0.1:0", shard_cfg(0xC)).unwrap();
+    spare.register_with(&reg, "spare0", true);
+    assert!(router.wait_for_live(3, Duration::from_secs(10)), "spare connects warm");
+    assert_eq!(router.shard_count(), 3);
+
+    // Every FunctionKind the fleet can express: the idle spare (index
+    // 2) appears on no walk.
+    let all_kinds: Vec<FunctionKind> = (1..=32)
+        .flat_map(|b| {
+            [
+                FunctionKind::Add(b),
+                FunctionKind::Mul(b),
+                FunctionKind::MulNaive(b),
+                FunctionKind::Xor(b),
+            ]
+        })
+        .collect();
+    let before: Vec<Vec<usize>> = all_kinds.iter().map(|&k| router.ring_walk(k)).collect();
+    for w in &before {
+        assert!(!w.contains(&2), "idle spare must stay out of the ring: {w:?}");
+    }
+    let k1 = kind_on_shard(&router, 1);
+
+    // Member 1 fails: the spare is promoted and traffic keeps flowing
+    // with zero lost replies.
+    s2.shutdown();
+    wait_until("spare promoted", Duration::from_secs(10), || {
+        all_kinds.iter().any(|&k| router.ring_walk(k).contains(&2))
+    });
+    let reqs: Vec<(FunctionKind, u64, u64)> =
+        (0..200u64).map(|i| (k1, i % 89, (i * 5) % 89)).collect();
+    run_checked(&router, &reqs);
+    assert_eq!(router.metrics().shards_down, 1);
+
+    // Member 1 revives: the spare demotes and the walk of every kind is
+    // bit-identical to never having failed.
+    let s2b = restart_server(&addrs[1], shard_cfg(0xB));
+    wait_until("member revived + spare demoted", Duration::from_secs(10), || {
+        router.live_shards() == 3
+            && all_kinds.iter().all(|&k| !router.ring_walk(k).contains(&2))
+    });
+    let after: Vec<Vec<usize>> = all_kinds.iter().map(|&k| router.ring_walk(k)).collect();
+    assert_eq!(after, before, "down/revive cycle must not move any kind");
+    assert_eq!(router.shard_for(k1), Some(1));
+
+    router.shutdown();
+    s1.shutdown();
+    s2b.shutdown();
+    spare.shutdown();
+}
+
+/// Satellite (process-level kill/restart): `fabric-soak --chaos-kill`
+/// SIGKILLs one shard *process* mid-run, restarts it, and proves zero
+/// lost replies and zero wrong values (every reply is checked against
+/// the arithmetic oracle, so with ErrorModel::none the values are
+/// bit-identical to an uninterrupted run). Also exercises a registered
+/// hot-spare child end to end.
+#[test]
+fn fabric_soak_chaos_kill_restart_loses_nothing() {
+    let exe = env!("CARGO_BIN_EXE_remus");
+    let out = std::process::Command::new(exe)
+        .args([
+            "fabric-soak",
+            "--shards",
+            "2",
+            "--workers",
+            "2",
+            "--requests",
+            "3000",
+            "--chaos-kill",
+            "--spare-shards",
+            "1",
+        ])
+        .output()
+        .expect("spawn remus fabric-soak");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(
+        out.status.success(),
+        "fabric-soak --chaos-kill failed\nstdout:\n{stdout}\nstderr:\n{stderr}"
+    );
+    assert!(
+        stdout.contains("CHAOS-OK requests=3000 ok=3000 wrong=0 error_results=0"),
+        "missing the zero-loss proof line\nstdout:\n{stdout}\nstderr:\n{stderr}"
+    );
+    assert!(
+        stdout.contains("chaos: revived shard 0"),
+        "revival not reported\nstdout:\n{stdout}\nstderr:\n{stderr}"
+    );
+    assert!(
+        stdout.contains("spares: 1 hot-spare shard(s) registered and connected"),
+        "spare registration not reported\nstdout:\n{stdout}"
+    );
 }
 
 #[test]

@@ -4,7 +4,7 @@
 //! accidental parse (ISSUE 3 satellite).
 
 use remus::coordinator::{MetricsSnapshot, WorkerHealth};
-use remus::fabric::wire::{read_msg, write_msg, Msg, MAX_FRAME, WIRE_VERSION};
+use remus::fabric::wire::{read_msg, write_msg, Msg, MAX_FRAME, MIN_WIRE_VERSION, WIRE_VERSION};
 use remus::mmpu::FunctionKind;
 use remus::testutil::prop::{Cases, Gen};
 
@@ -57,11 +57,13 @@ fn gen_snapshot(g: &mut Gen) -> MetricsSnapshot {
                 retired: g.bool(),
             })
             .collect(),
+        shards_total: g.u64(),
+        shards_down: g.u64(),
     }
 }
 
 fn gen_msg(g: &mut Gen) -> Msg {
-    match g.usize_in(0..=7) {
+    match g.usize_in(0..=9) {
         0 => Msg::Submit { id: g.u64(), kind: gen_kind(g), a: g.u64(), b: g.u64() },
         1 => {
             let error = if g.bool() { Some(gen_string(g)) } else { None };
@@ -77,7 +79,9 @@ fn gen_msg(g: &mut Gen) -> Msg {
             retired: g.u64() as u32,
         },
         6 => Msg::Shutdown,
-        _ => Msg::ShutdownAck,
+        7 => Msg::ShutdownAck,
+        8 => Msg::Register { name: gen_string(g), addr: gen_string(g), spare: g.bool() },
+        _ => Msg::Welcome { shard: g.u64() as u32, active: g.bool() },
     }
 }
 
@@ -130,6 +134,54 @@ fn garbage_frames_error_without_panic() {
         // A wrong version is always rejected outright.
         payload[0] = WIRE_VERSION + 1 + (g.u64_in(0..=200) as u8);
         assert!(Msg::from_bytes(&payload).is_err());
+    });
+}
+
+#[test]
+fn version_mismatch_is_rejected() {
+    // Every message, relabeled to a version outside the supported
+    // range, must fail to decode — cleanly, never a panic or misparse.
+    Cases::new(256).run(|g| {
+        let msg = gen_msg(g);
+        let mut too_new = msg.to_bytes();
+        too_new[0] = WIRE_VERSION + 1 + (g.u64_in(0..=(254 - WIRE_VERSION) as u64) as u8);
+        assert!(
+            Msg::from_bytes(&too_new).is_err(),
+            "version {} must be rejected",
+            too_new[0]
+        );
+        let mut too_old = msg.to_bytes();
+        too_old[0] = MIN_WIRE_VERSION - 1; // 0 is below every supported version
+        assert!(Msg::from_bytes(&too_old).is_err());
+    });
+}
+
+#[test]
+fn v1_frames_decode_compatibly_and_v2_types_need_v2() {
+    // v1 snapshots predate the fleet membership counters: strip the
+    // trailing 16 bytes from a v2 encoding and relabel the version —
+    // the decode must succeed with the counters defaulted to zero.
+    Cases::new(256).run(|g| {
+        let mut snap = gen_snapshot(g);
+        let mut bytes = Msg::MetricsReply(snap.clone()).to_bytes();
+        bytes.truncate(bytes.len() - 16);
+        bytes[0] = 1;
+        snap.shards_total = 0;
+        snap.shards_down = 0;
+        assert_eq!(Msg::from_bytes(&bytes).unwrap(), Msg::MetricsReply(snap));
+        // Fixed-layout messages decode identically under either version.
+        let msg = Msg::Submit { id: g.u64(), kind: gen_kind(g), a: g.u64(), b: g.u64() };
+        let mut v1 = msg.to_bytes();
+        v1[0] = 1;
+        assert_eq!(Msg::from_bytes(&v1).unwrap(), msg);
+        // Registration frames are v2-only: a v1 label is a clean error.
+        let reg = Msg::Register { name: gen_string(g), addr: gen_string(g), spare: g.bool() };
+        let mut v1reg = reg.to_bytes();
+        v1reg[0] = 1;
+        assert!(Msg::from_bytes(&v1reg).is_err());
+        let mut v1wel = Msg::Welcome { shard: g.u64() as u32, active: g.bool() }.to_bytes();
+        v1wel[0] = 1;
+        assert!(Msg::from_bytes(&v1wel).is_err());
     });
 }
 
