@@ -11,6 +11,7 @@ use std::time::Duration;
 
 use remus::bench_harness::{bench, header, json_begin, json_end, throughput};
 use remus::coordinator::{Coordinator, CoordinatorConfig, Submitter};
+use remus::fabric::loadgen::{self, LoadgenConfig};
 use remus::fabric::{FabricServer, Router};
 use remus::mmpu::FunctionKind;
 
@@ -49,6 +50,32 @@ fn drive(sub: &dyn Submitter, requests: u64) -> u64 {
     ok
 }
 
+/// Informational open-loop row (EXPERIMENTS.md §Scale): a short paced
+/// run at a fixed offered rate, reporting the latency percentiles the
+/// closed-loop bench() rows cannot (they measure completion throughput,
+/// which hides queueing). Not a bench() entry — a paced run's wall time
+/// is fixed by its schedule, so median-of-runs is meaningless.
+fn open_loop_row(label: &str, sub: &dyn Submitter) {
+    let cfg = LoadgenConfig { qps: 4000.0, requests: 2048, seed: 0x10AD, ..Default::default() };
+    let rep = loadgen::run(sub, &cfg);
+    assert_eq!(rep.ok, rep.requests, "open-loop replies must all verify");
+    println!(
+        "  open-loop {label}: offered {:.0} qps, achieved {:.0} qps ({} stalls)",
+        rep.offered_qps, rep.achieved_qps, rep.window_stalls
+    );
+    for (kind, k) in &rep.kinds {
+        println!(
+            "    {:<10} p50={}us p90={}us p99={}us max={}us (n={})",
+            kind.name(),
+            k.hist.percentile_us(50.0),
+            k.hist.percentile_us(90.0),
+            k.hist.percentile_us(99.0),
+            k.hist.max_us(),
+            k.hist.count()
+        );
+    }
+}
+
 fn main() {
     json_begin("fabric");
     header("fabric", "EXPERIMENTS.md §Scale: sharded serving over a loopback wire");
@@ -59,6 +86,7 @@ fn main() {
         assert_eq!(drive(&coord, REQUESTS), REQUESTS);
     });
     throughput(&r, "req", REQUESTS as f64);
+    open_loop_row("in-process coordinator", &coord);
     coord.shutdown();
 
     // Two fabric shards on ephemeral loopback ports, one router.
@@ -76,12 +104,17 @@ fn main() {
     });
     throughput(&r, "req", REQUESTS as f64);
 
+    open_loop_row("fabric router (2 shards)", &router);
     let m = router.metrics();
     println!(
-        "  fleet after bench: completed={} failed={} mean_batch={:.1}",
+        "  fleet after bench: completed={} failed={} mean_batch={:.1} \
+         hb pings={} pongs={} timeouts={}",
         m.completed,
         m.failed,
-        m.mean_batch_size()
+        m.mean_batch_size(),
+        m.hb_pings,
+        m.hb_pongs,
+        m.hb_timeouts
     );
     router.shutdown();
     s1.shutdown();

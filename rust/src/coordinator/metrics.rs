@@ -9,6 +9,35 @@ use std::time::Duration;
 /// Number of log2 latency bins (1us ... ~1s).
 const BINS: usize = 24;
 
+/// Log2 bin index for a microsecond latency: bin i counts latencies in
+/// `[2^i, 2^(i+1))`, clamped to `nbins`. Shared by the coordinator
+/// metrics and `fabric::loadgen`'s histograms so their bin edges can
+/// never drift apart.
+pub fn log2_bin_us(us: u64, nbins: usize) -> usize {
+    let us = us.max(1);
+    (63 - us.leading_zeros() as usize).min(nbins - 1)
+}
+
+/// Percentile estimate over log2 latency bins (upper bin edge,
+/// microseconds; 0 when empty) — the single estimator behind
+/// [`MetricsSnapshot::latency_percentile_us`] and
+/// `fabric::loadgen::LatencyHisto::percentile_us`.
+pub fn log2_percentile_us(bins: &[u64], pct: f64) -> u64 {
+    let total: u64 = bins.iter().sum();
+    if total == 0 {
+        return 0;
+    }
+    let target = (total as f64 * pct / 100.0).ceil() as u64;
+    let mut seen = 0;
+    for (i, &c) in bins.iter().enumerate() {
+        seen += c;
+        if seen >= target {
+            return 1u64 << (i + 1);
+        }
+    }
+    1u64 << bins.len()
+}
+
 /// Per-worker health summary exported through [`MetricsSnapshot`].
 #[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct WorkerHealth {
@@ -62,8 +91,7 @@ impl Metrics {
     }
 
     pub fn record_latency(&self, d: Duration) {
-        let us = d.as_micros().max(1) as u64;
-        let bin = (63 - us.leading_zeros() as usize).min(BINS - 1);
+        let bin = log2_bin_us(d.as_micros() as u64, BINS);
         self.lat_bins[bin].fetch_add(1, Ordering::Relaxed);
     }
 
@@ -81,6 +109,9 @@ impl Metrics {
             worker_health: self.worker_health.lock().unwrap().clone(),
             shards_total: 0,
             shards_down: 0,
+            hb_pings: 0,
+            hb_pongs: 0,
+            hb_timeouts: 0,
         }
     }
 }
@@ -110,6 +141,15 @@ pub struct MetricsSnapshot {
     /// Shards currently out of ring routing (marked down, awaiting
     /// revival).
     pub shards_down: u64,
+    /// Data-path heartbeats sent by the router that produced this view
+    /// (§Scale, wire v3). A single coordinator reports 0.
+    pub hb_pings: u64,
+    /// `Pong` echoes received back on shard data connections.
+    pub hb_pongs: u64,
+    /// Shards marked down because a heartbeat deadline expired — the
+    /// half-open-connection detector firing (distinct from disconnect
+    /// or capacity failovers, which close the socket visibly).
+    pub hb_timeouts: u64,
 }
 
 impl MetricsSnapshot {
@@ -133,10 +173,14 @@ impl MetricsSnapshot {
             self.lat_bins[i] += b;
         }
         self.worker_health.extend(other.worker_health.iter().cloned());
-        // Membership counters add so nested merges compose; per-shard
-        // snapshots carry 0 and the router stamps the final view.
+        // Membership and heartbeat counters add so nested merges
+        // compose; per-shard snapshots carry 0 and the router stamps
+        // the final view.
         self.shards_total += other.shards_total;
         self.shards_down += other.shards_down;
+        self.hb_pings += other.hb_pings;
+        self.hb_pongs += other.hb_pongs;
+        self.hb_timeouts += other.hb_timeouts;
     }
     /// Workers that retired their crossbar.
     pub fn retired_workers(&self) -> usize {
@@ -154,19 +198,7 @@ impl MetricsSnapshot {
     /// Approximate latency percentile from the log histogram (upper bin
     /// edge, microseconds).
     pub fn latency_percentile_us(&self, pct: f64) -> u64 {
-        let total: u64 = self.lat_bins.iter().sum();
-        if total == 0 {
-            return 0;
-        }
-        let target = (total as f64 * pct / 100.0).ceil() as u64;
-        let mut seen = 0;
-        for (i, &c) in self.lat_bins.iter().enumerate() {
-            seen += c;
-            if seen >= target {
-                return 1u64 << (i + 1);
-            }
-        }
-        1u64 << BINS
+        log2_percentile_us(&self.lat_bins, pct)
     }
 }
 
@@ -222,11 +254,21 @@ mod tests {
         assert_eq!(merged.retired_workers(), 1);
         assert_eq!(merged.lat_bins.iter().sum::<u64>(), 3);
         assert!(merged.latency_percentile_us(99.0) >= 4096);
-        // Per-coordinator snapshots report no fleet membership; the
-        // router stamps the merged view (and nested merges add).
+        // Per-coordinator snapshots report no fleet membership or
+        // heartbeat traffic; the router stamps the merged view (and
+        // nested merges add).
         assert_eq!((merged.shards_total, merged.shards_down), (0, 0));
-        merged.merge(&MetricsSnapshot { shards_total: 3, shards_down: 1, ..Default::default() });
+        assert_eq!((merged.hb_pings, merged.hb_pongs, merged.hb_timeouts), (0, 0, 0));
+        merged.merge(&MetricsSnapshot {
+            shards_total: 3,
+            shards_down: 1,
+            hb_pings: 8,
+            hb_pongs: 7,
+            hb_timeouts: 1,
+            ..Default::default()
+        });
         assert_eq!((merged.shards_total, merged.shards_down), (3, 1));
+        assert_eq!((merged.hb_pings, merged.hb_pongs, merged.hb_timeouts), (8, 7, 1));
     }
 
     #[test]

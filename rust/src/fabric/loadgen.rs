@@ -1,0 +1,513 @@
+//! Open-loop fleet load generation (§Scale, `remus loadgen`).
+//!
+//! Every load number in the repo before this module came from
+//! *closed-loop* drivers (`drive_load`, the serve example, the
+//! benches): N requests in flight, each completion immediately
+//! replaced. Closed loops self-throttle — when the target saturates,
+//! the offered rate silently drops to match, so queueing collapse
+//! never shows up in the numbers. This generator is **open-loop**: it
+//! offers requests on a seeded Poisson arrival schedule at a fixed
+//! `--qps` regardless of completions (up to a bounded in-flight
+//! window, the safety valve that keeps an overloaded run from
+//! accumulating unbounded state), verifies every reply against
+//! [`FunctionKind::reference`], and records per-kind log-binned
+//! latency histograms. Sweeping the offered rate across points exposes
+//! the *knee* — the highest rate the target sustains before latency
+//! and backlog diverge — which is the end-to-end throughput cost of
+//! the reliability machinery the paper quantifies per-mechanism.
+//!
+//! The generator drives any [`Submitter`] — the in-process coordinator
+//! or one-or-more fabric routers — and is deterministic: the arrival
+//! law and the request content come from two *independent* seeded PCG
+//! streams, so the (kind, a, b) request stream is bit-identical across
+//! QPS points of one sweep and across repeated runs with one seed
+//! (unit-tested below). `remus loadgen` writes the sweep as
+//! `BENCH_loadgen.json` (archived by CI next to the other bench
+//! artifacts; see EXPERIMENTS.md §Scale).
+
+use std::sync::mpsc::{sync_channel, Receiver, TrySendError};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::metrics::{log2_bin_us, log2_percentile_us};
+use crate::coordinator::{RequestResult, Submitter};
+use crate::mmpu::FunctionKind;
+use crate::util::rng::Pcg64;
+
+/// Log2 latency bins: bin i counts latencies in `[2^i, 2^(i+1))`
+/// microseconds. 32 bins reach ~71 minutes — far past any latency an
+/// overloaded sweep point can produce before its window stalls.
+pub const HIST_BINS: usize = 32;
+
+/// A run sustains its offered rate when it achieves at least this
+/// fraction of it; the knee is the highest sustained point of a sweep.
+pub const KNEE_SUSTAIN: f64 = 0.9;
+
+/// Log-binned latency histogram with an exact maximum. The bin math is
+/// a monoid (associative merge, [`LatencyHisto::default`] identity) so
+/// per-kind, per-shard and per-point histograms can be folded in any
+/// grouping — unit-tested below.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct LatencyHisto {
+    bins: [u64; HIST_BINS],
+    max_us: u64,
+}
+
+impl LatencyHisto {
+    pub fn record_us(&mut self, us: u64) {
+        self.bins[log2_bin_us(us, HIST_BINS)] += 1;
+        self.max_us = self.max_us.max(us.max(1));
+    }
+
+    /// Fold another histogram into this one.
+    pub fn merge(&mut self, other: &LatencyHisto) {
+        for (b, o) in self.bins.iter_mut().zip(&other.bins) {
+            *b += o;
+        }
+        self.max_us = self.max_us.max(other.max_us);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.bins.iter().sum()
+    }
+
+    pub fn max_us(&self) -> u64 {
+        self.max_us
+    }
+
+    /// Approximate percentile (upper bin edge, microseconds); 0 when
+    /// empty. Delegates to the coordinator metrics' estimator
+    /// ([`log2_percentile_us`]) so loadgen percentiles are directly
+    /// comparable with the fleet snapshot's.
+    pub fn percentile_us(&self, pct: f64) -> u64 {
+        log2_percentile_us(&self.bins, pct)
+    }
+}
+
+/// One sweep-point configuration.
+#[derive(Clone, Debug)]
+pub struct LoadgenConfig {
+    /// Offered arrival rate (Poisson mean), requests per second.
+    pub qps: f64,
+    /// Requests per run (the schedule length).
+    pub requests: u64,
+    /// Seed for both generator streams.
+    pub seed: u64,
+    /// In-flight cap: the generator blocks once this many requests are
+    /// outstanding (counted as [`RunReport::window_stalls`] — a stalled
+    /// run has degenerated to closed-loop and its point is past the
+    /// knee by construction).
+    pub window: usize,
+    /// Request kinds, drawn uniformly per request.
+    pub kinds: Vec<FunctionKind>,
+}
+
+impl Default for LoadgenConfig {
+    fn default() -> Self {
+        Self {
+            qps: 2000.0,
+            requests: 8192,
+            seed: 0x10AD,
+            window: 1024,
+            kinds: vec![FunctionKind::Add(8), FunctionKind::Xor(16), FunctionKind::Mul(8)],
+        }
+    }
+}
+
+/// One scheduled request: when (relative to the run start) and what.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ScheduledReq {
+    pub at_ns: u64,
+    pub kind: FunctionKind,
+    pub a: u64,
+    pub b: u64,
+}
+
+/// Build the deterministic arrival/request schedule. Arrival gaps are
+/// exponential with mean `1/qps` (inverse-CDF over one PCG stream), so
+/// arrivals are a Poisson process; kinds and operands come from a
+/// *second* independent stream, which makes the (kind, a, b) sequence
+/// a function of the seed alone — bit-identical across the QPS points
+/// of a sweep, so every point offers the same work.
+pub fn schedule(cfg: &LoadgenConfig) -> Vec<ScheduledReq> {
+    assert!(cfg.qps > 0.0, "loadgen qps must be positive (got {})", cfg.qps);
+    assert!(!cfg.kinds.is_empty(), "loadgen needs at least one kind");
+    let mut arrivals = Pcg64::new(cfg.seed, 0xA441);
+    let mut content = Pcg64::new(cfg.seed, 0xC0DE);
+    let mut at_s = 0.0f64;
+    (0..cfg.requests)
+        .map(|_| {
+            let u = (1.0 - arrivals.next_f64()).max(f64::MIN_POSITIVE);
+            at_s += -u.ln() / cfg.qps;
+            let kind = cfg.kinds[content.below(cfg.kinds.len() as u64) as usize];
+            let a = content.below(251);
+            let b = content.below(251);
+            ScheduledReq { at_ns: (at_s * 1e9) as u64, kind, a, b }
+        })
+        .collect()
+}
+
+/// Per-kind outcome of one run.
+#[derive(Clone, Debug, Default)]
+pub struct KindReport {
+    pub hist: LatencyHisto,
+    /// Replies whose value matched [`FunctionKind::reference`].
+    pub ok: u64,
+    /// Replies with a wrong value — an uncorrected error escaping.
+    pub wrong: u64,
+    /// Explicit error results (or dropped reply channels).
+    pub errors: u64,
+}
+
+/// Outcome of one open-loop run at a fixed offered rate.
+#[derive(Clone, Debug)]
+pub struct RunReport {
+    pub offered_qps: f64,
+    pub achieved_qps: f64,
+    pub requests: u64,
+    pub ok: u64,
+    pub wrong: u64,
+    pub errors: u64,
+    /// Times the generator found the in-flight window full and had to
+    /// block — each one a departure from open-loop arrivals.
+    pub window_stalls: u64,
+    pub elapsed: Duration,
+    /// Per-kind reports, aligned with the config's `kinds`.
+    pub kinds: Vec<(FunctionKind, KindReport)>,
+}
+
+impl RunReport {
+    /// Did this point sustain its offered rate (the knee criterion)?
+    pub fn sustained(&self) -> bool {
+        self.achieved_qps >= KNEE_SUSTAIN * self.offered_qps
+    }
+}
+
+/// Sleep (coarsely), then yield (finely), until `target`.
+fn pace_until(target: Instant) {
+    loop {
+        let now = Instant::now();
+        if now >= target {
+            return;
+        }
+        let left = target - now;
+        if left > Duration::from_micros(500) {
+            std::thread::sleep(left - Duration::from_micros(300));
+        } else {
+            std::thread::yield_now();
+        }
+    }
+}
+
+/// Execute one open-loop run: pace the schedule against the submitter,
+/// collect and verify every reply on a companion thread, and fold the
+/// per-request latencies (as measured by the serving side — the
+/// coordinator's completion clock in-process, the router's
+/// submit-to-reply clock over the fabric) into per-kind histograms.
+pub fn run(sub: &dyn Submitter, cfg: &LoadgenConfig) -> RunReport {
+    let sched = schedule(cfg);
+    let window = cfg.window.max(1);
+    let kinds = cfg.kinds.clone();
+    let mut window_stalls = 0u64;
+    let t0 = Instant::now();
+    type InFlight = (usize, u64, u64, Receiver<RequestResult>);
+    let (tx, rx) = sync_channel::<InFlight>(window);
+    let per_kind: Vec<KindReport> = std::thread::scope(|s| {
+        let collector = {
+            let kinds = kinds.clone();
+            s.spawn(move || {
+                let mut stats = vec![KindReport::default(); kinds.len()];
+                while let Ok((ki, a, b, result_rx)) = rx.recv() {
+                    let stat = &mut stats[ki];
+                    match result_rx.recv() {
+                        Ok(r) if r.is_ok() => {
+                            if r.value == kinds[ki].reference(a, b) {
+                                stat.ok += 1;
+                            } else {
+                                stat.wrong += 1;
+                            }
+                            stat.hist.record_us(r.latency.as_micros() as u64);
+                        }
+                        _ => stat.errors += 1,
+                    }
+                }
+                stats
+            })
+        };
+        for req in &sched {
+            pace_until(t0 + Duration::from_nanos(req.at_ns));
+            let ki = kinds.iter().position(|k| *k == req.kind).expect("kind from own schedule");
+            let item = (ki, req.a, req.b, sub.submit(req.kind, req.a, req.b));
+            match tx.try_send(item) {
+                Ok(()) => {}
+                Err(TrySendError::Full(item)) => {
+                    // Window saturated: block (closed-loop from here
+                    // until the backlog drains) and count the departure.
+                    window_stalls += 1;
+                    if tx.send(item).is_err() {
+                        break;
+                    }
+                }
+                Err(TrySendError::Disconnected(_)) => break,
+            }
+        }
+        drop(tx);
+        collector.join().expect("loadgen collector panicked")
+    });
+    let elapsed = t0.elapsed();
+    let (ok, wrong, errors) = per_kind.iter().fold((0, 0, 0), |(o, w, e), k| {
+        (o + k.ok, w + k.wrong, e + k.errors)
+    });
+    RunReport {
+        offered_qps: cfg.qps,
+        achieved_qps: sched.len() as f64 / elapsed.as_secs_f64(),
+        requests: sched.len() as u64,
+        ok,
+        wrong,
+        errors,
+        window_stalls,
+        elapsed,
+        kinds: kinds.into_iter().zip(per_kind).collect(),
+    }
+}
+
+/// A full QPS sweep and its knee.
+#[derive(Clone, Debug)]
+pub struct SweepReport {
+    pub points: Vec<RunReport>,
+    /// Highest offered rate that was sustained
+    /// ([`RunReport::sustained`]); `None` when every point collapsed.
+    pub knee_qps: Option<f64>,
+}
+
+/// The knee of a sweep: the highest offered rate that was sustained
+/// ([`RunReport::sustained`]), `None` when every point collapsed.
+pub fn knee(points: &[RunReport]) -> Option<f64> {
+    points
+        .iter()
+        .filter(|p| p.sustained())
+        .map(|p| p.offered_qps)
+        .fold(None, |acc: Option<f64>, q| Some(acc.map_or(q, |a| a.max(q))))
+}
+
+/// Run the schedule at each offered rate (ascending order recommended)
+/// and locate the knee.
+pub fn sweep(sub: &dyn Submitter, base: &LoadgenConfig, qps_points: &[f64]) -> SweepReport {
+    let points: Vec<RunReport> = qps_points
+        .iter()
+        .map(|&qps| run(sub, &LoadgenConfig { qps, ..base.clone() }))
+        .collect();
+    let knee_qps = knee(&points);
+    SweepReport { points, knee_qps }
+}
+
+/// Write a sweep as machine-readable JSON (the `BENCH_loadgen.json`
+/// artifact CI archives; hand-rolled like `bench_harness` — serde is
+/// not in the offline vendor set).
+pub fn write_json(path: &str, cfg: &LoadgenConfig, sweep: &SweepReport) -> Result<()> {
+    let mut out = String::new();
+    out.push_str("{\n");
+    out.push_str("  \"bench\": \"loadgen\",\n");
+    out.push_str(&format!("  \"seed\": {},\n", cfg.seed));
+    out.push_str(&format!("  \"window\": {},\n", cfg.window));
+    out.push_str(&format!("  \"requests_per_point\": {},\n", cfg.requests));
+    match sweep.knee_qps {
+        Some(q) => out.push_str(&format!("  \"knee_qps\": {q:.1},\n")),
+        None => out.push_str("  \"knee_qps\": null,\n"),
+    }
+    out.push_str("  \"points\": [\n");
+    for (i, p) in sweep.points.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"qps_offered\": {:.1}, \"qps_achieved\": {:.1}, \"sustained\": {}, \
+             \"requests\": {}, \"ok\": {}, \"wrong\": {}, \"errors\": {}, \
+             \"window_stalls\": {}, \"elapsed_s\": {:.3}, \"kinds\": [",
+            p.offered_qps,
+            p.achieved_qps,
+            p.sustained(),
+            p.requests,
+            p.ok,
+            p.wrong,
+            p.errors,
+            p.window_stalls,
+            p.elapsed.as_secs_f64()
+        ));
+        for (j, (kind, k)) in p.kinds.iter().enumerate() {
+            out.push_str(&format!(
+                "{{\"kind\": \"{}\", \"count\": {}, \"p50_us\": {}, \"p90_us\": {}, \
+                 \"p99_us\": {}, \"max_us\": {}}}",
+                kind.name(),
+                k.hist.count(),
+                k.hist.percentile_us(50.0),
+                k.hist.percentile_us(90.0),
+                k.hist.percentile_us(99.0),
+                k.hist.max_us()
+            ));
+            if j + 1 < p.kinds.len() {
+                out.push_str(", ");
+            }
+        }
+        out.push_str("]}");
+        out.push_str(if i + 1 < sweep.points.len() { ",\n" } else { "\n" });
+    }
+    out.push_str("  ]\n}\n");
+    std::fs::write(path, out).with_context(|| format!("writing {path}"))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{Coordinator, CoordinatorConfig};
+
+    fn cfg(qps: f64, requests: u64, seed: u64) -> LoadgenConfig {
+        LoadgenConfig { qps, requests, seed, ..Default::default() }
+    }
+
+    #[test]
+    fn schedule_is_deterministic_per_seed() {
+        let a = schedule(&cfg(1000.0, 500, 7));
+        let b = schedule(&cfg(1000.0, 500, 7));
+        assert_eq!(a, b, "same seed + qps must reproduce the stream bit for bit");
+        let c = schedule(&cfg(1000.0, 500, 8));
+        assert_ne!(a, c, "a different seed must move the stream");
+    }
+
+    #[test]
+    fn request_content_is_invariant_across_qps() {
+        // The arrival and content streams are independent: changing the
+        // offered rate re-times the same requests, so every sweep point
+        // offers identical work.
+        let slow = schedule(&cfg(500.0, 400, 7));
+        let fast = schedule(&cfg(4000.0, 400, 7));
+        for (s, f) in slow.iter().zip(&fast) {
+            assert_eq!((s.kind, s.a, s.b), (f.kind, f.a, f.b));
+        }
+        assert!(
+            slow.last().unwrap().at_ns > 4 * fast.last().unwrap().at_ns,
+            "an 8x slower rate must stretch the schedule"
+        );
+    }
+
+    #[test]
+    fn arrival_gaps_are_exponential_with_the_offered_mean() {
+        let qps = 2000.0;
+        let sched = schedule(&cfg(qps, 20_000, 11));
+        let mean_gap_ns = sched.last().unwrap().at_ns as f64 / sched.len() as f64;
+        let expect = 1e9 / qps;
+        assert!(
+            (mean_gap_ns - expect).abs() < expect * 0.05,
+            "mean gap {mean_gap_ns:.0}ns vs expected {expect:.0}ns"
+        );
+        // Poisson arrivals are bursty: a meaningful fraction of gaps is
+        // under a quarter of the mean (a uniform pacer would have none).
+        let short = sched
+            .windows(2)
+            .filter(|w| ((w[1].at_ns - w[0].at_ns) as f64) < expect * 0.25)
+            .count();
+        assert!(short > sched.len() / 10, "only {short} short gaps — not Poisson");
+    }
+
+    #[test]
+    fn histogram_merge_is_associative_and_has_identity() {
+        use crate::testutil::prop::Cases;
+        Cases::new(128).run(|g| {
+            let mut hs: Vec<LatencyHisto> = (0..3).map(|_| LatencyHisto::default()).collect();
+            for h in hs.iter_mut() {
+                for _ in 0..g.usize_in(0..=64) {
+                    h.record_us(g.u64_in(0..=2_000_000));
+                }
+            }
+            // (a + b) + c == a + (b + c)
+            let mut left = hs[0].clone();
+            left.merge(&hs[1]);
+            left.merge(&hs[2]);
+            let mut bc = hs[1].clone();
+            bc.merge(&hs[2]);
+            let mut right = hs[0].clone();
+            right.merge(&bc);
+            assert_eq!(left, right, "merge must be associative");
+            // a + b == b + a, and the default histogram is the identity.
+            let mut ab = hs[0].clone();
+            ab.merge(&hs[1]);
+            let mut ba = hs[1].clone();
+            ba.merge(&hs[0]);
+            assert_eq!(ab, ba, "merge must be commutative");
+            let mut with_id = hs[0].clone();
+            with_id.merge(&LatencyHisto::default());
+            assert_eq!(with_id, hs[0], "default must be the merge identity");
+            assert_eq!(left.count(), hs.iter().map(|h| h.count()).sum::<u64>());
+        });
+    }
+
+    #[test]
+    fn histogram_percentiles_bracket_the_data() {
+        let mut h = LatencyHisto::default();
+        for _ in 0..90 {
+            h.record_us(10);
+        }
+        for _ in 0..10 {
+            h.record_us(5000);
+        }
+        assert!(h.percentile_us(50.0) <= 32);
+        assert!(h.percentile_us(99.0) >= 4096);
+        assert_eq!(h.max_us(), 5000);
+        assert_eq!(h.count(), 100);
+        assert_eq!(LatencyHisto::default().percentile_us(99.0), 0);
+    }
+
+    #[test]
+    fn open_loop_run_verifies_every_reply_against_the_oracle() {
+        // Default rows/cols so every default kind (Mul(8) included)
+        // fits the crossbar shape.
+        let coord = Coordinator::start(CoordinatorConfig {
+            workers: 2,
+            max_batch: 16,
+            max_wait: Duration::from_micros(200),
+            ..Default::default()
+        })
+        .unwrap();
+        let cfg = LoadgenConfig { qps: 20_000.0, requests: 600, seed: 3, ..Default::default() };
+        let rep = run(&coord, &cfg);
+        coord.shutdown();
+        assert_eq!(rep.requests, 600);
+        assert_eq!(rep.ok, 600, "wrong={} errors={}", rep.wrong, rep.errors);
+        assert_eq!(rep.wrong + rep.errors, 0);
+        let hist_total: u64 = rep.kinds.iter().map(|(_, k)| k.hist.count()).sum();
+        assert_eq!(hist_total, 600, "every ok reply lands in a histogram");
+        assert!(rep.achieved_qps > 0.0);
+        for (_, k) in &rep.kinds {
+            assert!(k.hist.percentile_us(50.0) <= k.hist.percentile_us(99.0));
+        }
+    }
+
+    #[test]
+    fn knee_is_the_highest_sustained_point_and_json_is_written() {
+        let mk = |offered: f64, achieved: f64| RunReport {
+            offered_qps: offered,
+            achieved_qps: achieved,
+            requests: 10,
+            ok: 10,
+            wrong: 0,
+            errors: 0,
+            window_stalls: 0,
+            elapsed: Duration::from_millis(5),
+            kinds: vec![(FunctionKind::Add(8), KindReport::default())],
+        };
+        let points = vec![mk(1000.0, 995.0), mk(2000.0, 1950.0), mk(4000.0, 2500.0)];
+        // The real knee computation (the one sweep() uses), not a copy.
+        let knee_qps = knee(&points);
+        assert_eq!(knee_qps, Some(2000.0), "4000 collapsed (62% of offered), 2000 sustained");
+        assert_eq!(knee(&[mk(1000.0, 500.0)]), None, "a fully collapsed sweep has no knee");
+        let sweep = SweepReport { points, knee_qps };
+        let path = std::env::temp_dir().join("BENCH_loadgen_selftest.json");
+        let path = path.to_str().unwrap().to_string();
+        write_json(&path, &LoadgenConfig::default(), &sweep).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("\"bench\": \"loadgen\""));
+        assert!(text.contains("\"knee_qps\": 2000.0"));
+        assert!(text.contains("\"p99_us\""));
+        assert!(text.contains("\"sustained\": false"));
+        let _ = std::fs::remove_file(&path);
+    }
+}

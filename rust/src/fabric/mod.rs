@@ -15,14 +15,24 @@
 //! * [`Router`] — the client-side fan-out: FunctionKind-aware
 //!   consistent hashing across a *dynamic* shard fleet (same-kind
 //!   requests keep landing on the same shard, preserving dynamic
-//!   batching), health-driven failover (capacity errors and disconnects
-//!   re-route in-flight requests to the next live shard), a supervisor
-//!   that revives downed shards back into their stable ring slots,
-//!   registration-based discovery (`Register`/`Welcome` frames instead
-//!   of a static shard list), hot-spare shard pools promoted on failure
-//!   and demoted on revival, and merged fleet metrics (stamped with
-//!   `shards_total`/`shards_down`) so reliability events — retirement,
-//!   escalation, shard loss — are observable across processes.
+//!   batching), health-driven failover (capacity errors, disconnects
+//!   and missed data-path heartbeats re-route in-flight requests to
+//!   the next live shard — the wire-v3 `Ping`/`Pong` heartbeat is what
+//!   catches *half-open* peers that accept writes but never reply), a
+//!   supervisor that revives downed shards back into their stable ring
+//!   slots, registration-based discovery (`Register`/`Welcome` frames
+//!   instead of a static shard list; shards re-announce themselves
+//!   periodically and remember their assigned slot, so a restarted
+//!   *router* rebuilds the ring bit-identically), hot-spare shard
+//!   pools promoted on failure and demoted on revival, and merged
+//!   fleet metrics (stamped with `shards_total`/`shards_down` and the
+//!   heartbeat counters) so reliability events — retirement,
+//!   escalation, shard loss — are observable across processes;
+//! * [`loadgen`] — the open-loop fleet load generator (`remus
+//!   loadgen`): seeded Poisson arrivals at a fixed offered rate, a
+//!   bounded in-flight window, golden-value verification, per-kind
+//!   log-binned latency histograms, and a QPS sweep that locates the
+//!   saturation knee (`BENCH_loadgen.json`).
 //!
 //! Both the in-process coordinator and the router implement
 //! [`crate::coordinator::Submitter`], so every load path (the serve
@@ -33,6 +43,7 @@
 //! frame rejection); `cargo bench --bench fabric` measures the sharded
 //! loopback throughput (`BENCH_fabric.json`).
 
+pub mod loadgen;
 pub mod router;
 pub mod server;
 pub mod wire;

@@ -11,15 +11,29 @@
 //! after a down/revive cycle is bit-identical to never having failed.
 //!
 //! **Failover** is health-driven: a shard is marked down when its
-//! connection drops, when a write fails, or when it answers a request
-//! with an all-workers-retired capacity error. In-flight requests on a
-//! downed shard are re-routed to the next live shard on the ring
-//! (at-least-once execution: results are deterministic functions, so
-//! replays are safe). During a *total* outage requests are parked for a
-//! bounded [`RouterConfig::retry_window`] — shards are often seconds
-//! from revival — and only resolve to an explicit error once the window
+//! connection drops, when a write fails, when it answers a request
+//! with an all-workers-retired capacity error, or when it misses a
+//! data-path heartbeat deadline. In-flight requests on a downed shard
+//! are re-routed to the next live shard on the ring (at-least-once
+//! execution: results are deterministic functions, so replays are
+//! safe). During a *total* outage requests are parked for a bounded
+//! [`RouterConfig::retry_window`] — shards are often seconds from
+//! revival — and only resolve to an explicit error once the window
 //! expires. Clients never hang, mirroring the in-process coordinator's
 //! contract.
+//!
+//! **Heartbeats** (wire v3) close the half-open failure mode: a peer
+//! whose TCP connection still accepts writes but never replies (wedged
+//! process, blackholed return path) produces no reader EOF and no
+//! write error, so without them its in-flight requests would hang
+//! forever. The supervisor sends `Ping{nonce}` on each idle-too-long
+//! data connection and enforces [`RouterConfig::heartbeat_timeout`];
+//! *any* inbound frame — a `Result` ahead of the `Pong` included —
+//! proves liveness and clears the outstanding ping, so a busy shard
+//! streaming results is never falsely condemned. A missed deadline
+//! marks the shard down exactly like a disconnect: the socket is shut
+//! down, the reader drains the pending table, and every in-flight
+//! request is replayed on the next live shard.
 //!
 //! **Revival** (§Health, one layer up): membership is not a one-shot
 //! property. A supervisor thread periodically re-probes downed shards
@@ -60,13 +74,20 @@ use super::wire::{read_msg, write_msg, Msg};
 /// Virtual nodes per shard on the hash ring.
 const RING_VNODES: usize = 16;
 
+/// Highest slot index a `Register{prev}` hint may claim. The hint
+/// drives slot allocation (placeholders are reserved up to it), so an
+/// unbounded value from a corrupt or malicious registrant — the wire
+/// has no auth yet — could allocate gigabytes under the shards write
+/// lock; a stale hint beyond any plausible fleet is ignored and the
+/// shard simply gets a fresh slot.
+const MAX_PREV_SLOT: usize = 1024;
+
 /// Bound on control-plane connect/read/write, so a hung shard (host
 /// down, blackholed traffic) cannot freeze a fleet metrics, health or
 /// revival probe. The data path fails over on *closed* connections
-/// (reader EOF / write error); a silently blackholed peer that keeps
-/// its connection half-open is only caught by the operator or a control
-/// probe today — data-path heartbeats are named multi-machine work in
-/// ROADMAP §Scale.
+/// (reader EOF / write error) and — since wire v3 — on missed
+/// data-path heartbeats, which catch the half-open peers no closed
+/// connection ever reports (see [`RouterConfig::heartbeat_period`]).
 const CONTROL_TIMEOUT: Duration = Duration::from_secs(5);
 
 /// Short-lived control connection with timeouts applied.
@@ -98,6 +119,27 @@ pub struct RouterConfig {
     /// `Register` frames; port 0 binds an ephemeral port (see
     /// [`Router::registration_addr`]).
     pub listen: Option<String>,
+    /// How long a live data connection may stay silent (no inbound
+    /// frames) before the supervisor sends a `Ping`. Every inbound
+    /// frame pushes the next ping out, so under steady traffic no
+    /// heartbeat bytes flow at all. `Duration::ZERO` disables
+    /// heartbeats entirely (`--hb-ms 0`): `Ping` is a wire-v3 message,
+    /// so a pre-v3 shard drops the connection on its first ping —
+    /// upgrade shards before routers, or disable heartbeats for the
+    /// duration of a mixed-version transition.
+    pub heartbeat_period: Duration,
+    /// How long after a `Ping` the shard has to produce *any* inbound
+    /// frame before it is declared half-open and marked down (its
+    /// in-flight requests replay on the next live shard, exactly like a
+    /// disconnect). Pings are sent and deadlines checked on supervisor
+    /// ticks, so worst-case detection of a peer that goes silent
+    /// mid-connection is `heartbeat_period + heartbeat_timeout` plus up
+    /// to two `probe_period` ticks (~2.5 s at the defaults); a peer
+    /// that is half-open from the moment it connects — the wedged
+    /// process the integration suite stubs — is caught within
+    /// `heartbeat_timeout` plus two ticks, inside two heartbeat
+    /// periods, because the first ping is due immediately on connect.
+    pub heartbeat_timeout: Duration,
 }
 
 impl Default for RouterConfig {
@@ -106,6 +148,8 @@ impl Default for RouterConfig {
             probe_period: Duration::from_millis(250),
             retry_window: Duration::from_millis(1000),
             listen: None,
+            heartbeat_period: Duration::from_millis(1000),
+            heartbeat_timeout: Duration::from_millis(1000),
         }
     }
 }
@@ -124,16 +168,36 @@ struct PendingReq {
     tried: Vec<usize>,
 }
 
+/// Per-shard data-path heartbeat state, driven by the supervisor and
+/// cleared by the reader (wire v3).
+struct HbState {
+    /// Nonce of the unanswered `Ping` (0: none outstanding).
+    outstanding: u64,
+    /// When the outstanding ping expires and the shard is declared
+    /// half-open.
+    deadline: Instant,
+    /// Earliest time the next ping should be sent. Reset by every
+    /// inbound frame: a shard streaming results needs no pinging.
+    next_ping: Instant,
+}
+
 struct ShardState {
     /// Stable identity (the registration key; static shards use their
     /// address). A restarting process re-registers under the same name
-    /// to reclaim this slot.
+    /// to reclaim this slot. Empty on a *placeholder*: a slot reserved
+    /// by a `Register{prev}` claim above the current fleet size, held
+    /// for the member expected to re-register there (see
+    /// [`RouterInner::register`]).
     name: String,
     /// Current endpoint — re-registration after a restart may move it.
     addr: Mutex<String>,
     /// Registered as a hot spare: connected but outside the ring until
     /// promoted to cover a downed member.
     spare: bool,
+    /// The role-is-fixed-per-name warning has been emitted for this
+    /// slot (the registration refresh loop re-announces twice a second;
+    /// one warning is signal, a stream of them is noise).
+    role_warned: AtomicBool,
     /// Spare currently promoted into the ring.
     promoted: AtomicBool,
     up: AtomicBool,
@@ -145,20 +209,31 @@ struct ShardState {
     writer: Mutex<Option<TcpStream>>,
     /// In-flight requests keyed by wire id.
     pending: Mutex<HashMap<u64, PendingReq>>,
+    /// Data-path heartbeat bookkeeping (meaningful only while `up`).
+    hb: Mutex<HbState>,
 }
 
 impl ShardState {
     fn new(name: String, addr: String, spare: bool) -> Arc<Self> {
+        let now = Instant::now();
         Arc::new(Self {
             name,
             addr: Mutex::new(addr),
             spare,
+            role_warned: AtomicBool::new(false),
             promoted: AtomicBool::new(false),
             up: AtomicBool::new(false),
             reader_gone: AtomicBool::new(true),
             writer: Mutex::new(None),
             pending: Mutex::new(HashMap::new()),
+            hb: Mutex::new(HbState { outstanding: 0, deadline: now, next_ping: now }),
         })
+    }
+
+    /// A slot reserved by a `Register{prev}` claim, awaiting the member
+    /// expected to re-register at this index (router-restart recovery).
+    fn is_placeholder(&self) -> bool {
+        self.name.is_empty()
     }
 
     fn addr(&self) -> String {
@@ -166,9 +241,13 @@ impl ShardState {
     }
 
     /// In the routing ring right now (members always; spares only while
-    /// promoted).
+    /// promoted; placeholders never). A reserved slot contributes its
+    /// vnodes only once the real shard claims it — the old router's
+    /// ring never contained a slot that was a spare's or that no one
+    /// owned, so an unclaimed reservation must not either, or the
+    /// rebuilt ring would *not* be bit-identical.
     fn in_ring(&self) -> bool {
-        !self.spare || self.promoted.load(Ordering::SeqCst)
+        !self.is_placeholder() && (!self.spare || self.promoted.load(Ordering::SeqCst))
     }
 }
 
@@ -191,6 +270,12 @@ struct RouterInner {
     parked: Mutex<Vec<(u64, PendingReq)>>,
     readers: Mutex<Vec<JoinHandle<()>>>,
     next_id: AtomicU64,
+    /// Heartbeat nonce source (starts at 1; 0 means "none outstanding").
+    hb_nonce: AtomicU64,
+    /// Fleet-wide heartbeat counters, stamped onto the merged snapshot.
+    hb_pings: AtomicU64,
+    hb_pongs: AtomicU64,
+    hb_timeouts: AtomicU64,
     closing: AtomicBool,
 }
 
@@ -228,6 +313,10 @@ impl Router {
             parked: Mutex::new(Vec::new()),
             readers: Mutex::new(Vec::new()),
             next_id: AtomicU64::new(1),
+            hb_nonce: AtomicU64::new(1),
+            hb_pings: AtomicU64::new(0),
+            hb_pongs: AtomicU64::new(0),
+            hb_timeouts: AtomicU64::new(0),
             closing: AtomicBool::new(false),
         });
         inner.rebuild_ring();
@@ -349,7 +438,19 @@ impl Router {
     /// concurrently, so a fleet of dead shards costs one
     /// `CONTROL_TIMEOUT`, not a serial sum; the merge keeps shard order.
     pub fn metrics(&self) -> MetricsSnapshot {
-        let shards: Vec<Arc<ShardState>> = self.inner.shards.read().unwrap().clone();
+        // Placeholder slots (reserved by a `Register{prev}` claim,
+        // never yet claimed) have no endpoint: they are skipped here
+        // and excluded from the membership counters below, so a stale
+        // reservation cannot make a healthy fleet report down shards.
+        let shards: Vec<Arc<ShardState>> = self
+            .inner
+            .shards
+            .read()
+            .unwrap()
+            .iter()
+            .filter(|s| !s.is_placeholder())
+            .cloned()
+            .collect();
         let probes: Vec<_> = shards
             .iter()
             .map(|shard| {
@@ -372,6 +473,12 @@ impl Router {
         }
         merged.shards_total = shards.len() as u64;
         merged.shards_down = shards.iter().filter(|s| !s.up.load(Ordering::SeqCst)).count() as u64;
+        // Heartbeat traffic is a router-side property (per-shard
+        // snapshots carry zeros), so stamping — like the membership
+        // counters above — composes under nested merges.
+        merged.hb_pings += self.inner.hb_pings.load(Ordering::Relaxed);
+        merged.hb_pongs += self.inner.hb_pongs.load(Ordering::Relaxed);
+        merged.hb_timeouts += self.inner.hb_timeouts.load(Ordering::Relaxed);
         merged
     }
 
@@ -569,8 +676,14 @@ impl RouterInner {
             return;
         }
         let shards = self.shards.read().unwrap();
-        let mut need =
-            shards.iter().filter(|s| !s.spare && !s.up.load(Ordering::SeqCst)).count();
+        // Placeholders are not failed members: a spare must cover a
+        // member that *was* serving and went down, not a slot reserved
+        // for a re-registration that may never come (a stale prev
+        // hint would otherwise pin spares into the ring forever).
+        let mut need = shards
+            .iter()
+            .filter(|s| !s.spare && !s.is_placeholder() && !s.up.load(Ordering::SeqCst))
+            .count();
         let mut changed = false;
         for (i, s) in shards.iter().enumerate() {
             if !s.spare {
@@ -598,15 +711,44 @@ impl RouterInner {
 
     /// Add (or refresh) a shard from a `Register` frame. Returns the
     /// stable index and whether the shard is immediately in the ring.
-    fn register(&self, name: String, addr: String, spare: bool) -> (usize, bool) {
+    ///
+    /// Re-registration under a known name is idempotent — shards
+    /// re-announce themselves every [`super::server::REG_REFRESH`], so
+    /// a restarted *router* rediscovers its whole fleet; an unchanged
+    /// endpoint is a silent refresh, a changed one is adopted and
+    /// logged. An unknown name carrying `prev` (the slot index a
+    /// previous router's `Welcome` assigned) reclaims that exact index,
+    /// reserving placeholder slots below it if its peers have not
+    /// re-registered yet — so the rebuilt ring is bit-identical to the
+    /// old router's regardless of re-registration order. A placeholder
+    /// that is never claimed (a stale hint from an older, larger
+    /// fleet) stays *inert*: it is skipped by revival probing, spare
+    /// reconciliation and the fleet membership counters, and remains
+    /// claimable by a late re-registration.
+    fn register(
+        &self,
+        name: String,
+        addr: String,
+        spare: bool,
+        prev: Option<u32>,
+    ) -> (usize, bool) {
         let mut shards = self.shards.write().unwrap();
-        if let Some((i, s)) = shards.iter().enumerate().find(|(_, s)| s.name == name) {
-            // Re-registration: the shard process restarted (possibly on
-            // a new port) and reclaims its slot; the supervisor
-            // reconnects once the old connection's reader has drained.
-            // The member/spare role is fixed for the slot's lifetime —
-            // the Welcome ack reports the slot's actual state.
-            if s.spare != spare {
+        // Placeholders are excluded from the name match: their name is
+        // the empty string, and an empty-name registrant (already
+        // rejected at the listener) must never hijack a slot reserved
+        // for a re-registering member.
+        if let Some((i, s)) =
+            shards.iter().enumerate().find(|(_, s)| !s.is_placeholder() && s.name == name)
+        {
+            // Known name: the shard restarted (possibly on a new port)
+            // and reclaims its slot, or this is a periodic refresh. The
+            // member/spare role is fixed for the slot's lifetime — the
+            // Welcome ack reports the slot's actual state, and a
+            // flipped role flag is warned about once per slot (on the
+            // silent same-address refresh path too, so pinned-address
+            // deployments see it).
+            let active = s.in_ring();
+            if s.spare != spare && !s.role_warned.swap(true, Ordering::SeqCst) {
                 eprintln!(
                     "router: shard {i} ({name}) re-registered asking to be a {}, but its \
                      slot is a {}; role is fixed per name",
@@ -614,12 +756,40 @@ impl RouterInner {
                     if s.spare { "spare" } else { "member" }
                 );
             }
-            let active = s.in_ring();
-            *s.addr.lock().unwrap() = addr.clone();
+            let mut a = s.addr.lock().unwrap();
+            if *a == addr {
+                return (i, active);
+            }
+            *a = addr.clone();
+            drop(a);
             drop(shards);
             self.bump_epoch();
             eprintln!("router: shard {i} ({name}) re-registered at {addr}");
             return (i, active);
+        }
+        if let Some(p) = prev.map(|p| p as usize).filter(|&p| p <= MAX_PREV_SLOT) {
+            // Router-restart recovery: the shard remembers the slot a
+            // previous router assigned it. Reserve the run of slots up
+            // to it (peers will claim theirs momentarily) and take the
+            // exact index — unless a different live name got there
+            // first, in which case the hint is stale and the shard
+            // falls through to a fresh slot. Hints beyond
+            // [`MAX_PREV_SLOT`] are ignored outright (see the const).
+            while shards.len() <= p {
+                shards.push(ShardState::new(String::new(), String::new(), false));
+            }
+            if shards[p].is_placeholder() {
+                shards[p] = ShardState::new(name.clone(), addr.clone(), spare);
+                let active = shards[p].in_ring();
+                drop(shards);
+                self.rebuild_ring();
+                self.bump_epoch();
+                eprintln!(
+                    "router: shard {p} ({name}) reclaimed its previous slot at {addr}{}",
+                    if spare { " as a hot spare" } else { "" }
+                );
+                return (p, active);
+            }
         }
         let idx = shards.len();
         shards.push(ShardState::new(name.clone(), addr.clone(), spare));
@@ -649,8 +819,26 @@ fn connect_shard(inner: &Arc<RouterInner>, i: usize) -> Result<()> {
     let stream =
         TcpStream::connect(addr.as_str()).with_context(|| format!("connecting to shard {addr}"))?;
     let _ = stream.set_nodelay(true);
+    // Bound data-path writes: a peer wedged with full TCP buffers must
+    // surface as a write error (-> failover) rather than blocking the
+    // submitting thread or the heartbeat sweep. Capped at the heartbeat
+    // timeout (floored for very aggressive test configs) so a blocked
+    // write never stalls the supervisor longer than the detection
+    // deadline it is enforcing. Reads stay unbounded — the reader is
+    // *designed* to block, and half-open silence is the heartbeat
+    // deadline's job, not a read timeout's.
+    let write_timeout = inner.cfg.heartbeat_timeout.max(Duration::from_millis(100));
+    let _ = stream.set_write_timeout(Some(write_timeout));
     let write_half = stream.try_clone()?;
     *shard.writer.lock().unwrap() = Some(write_half);
+    // Fresh heartbeat slate, with the first ping due immediately: a
+    // half-open peer (or one that wedged while down) is condemned
+    // within one heartbeat timeout of connecting, before it can absorb
+    // much traffic.
+    {
+        let now = Instant::now();
+        *shard.hb.lock().unwrap() = HbState { outstanding: 0, deadline: now, next_ping: now };
+    }
     shard.reader_gone.store(false, Ordering::SeqCst);
     shard.up.store(true, Ordering::SeqCst);
     inner.bump_epoch();
@@ -670,8 +858,20 @@ fn connect_shard(inner: &Arc<RouterInner>, i: usize) -> Result<()> {
 fn reader_loop(inner: Arc<RouterInner>, shard_idx: usize, mut read_half: TcpStream) {
     let Some(shard) = inner.shard(shard_idx) else { return };
     loop {
-        match read_msg(&mut read_half) {
-            Ok(Some(Msg::Result { id, value, latency_us: _, error })) => {
+        let msg = match read_msg(&mut read_half) {
+            Ok(Some(m)) => m,
+            Ok(None) | Err(_) => break,
+        };
+        // Any inbound frame proves the data path is alive in both
+        // directions: clear the outstanding ping (a Result racing ahead
+        // of its Pong counts) and push the next one out.
+        {
+            let mut hb = shard.hb.lock().unwrap();
+            hb.outstanding = 0;
+            hb.next_ping = Instant::now() + inner.cfg.heartbeat_period;
+        }
+        match msg {
+            Msg::Result { id, value, latency_us: _, error } => {
                 let req = shard.pending.lock().unwrap().remove(&id);
                 let Some(req) = req else { continue };
                 // An all-workers-retired shard answers every request
@@ -687,10 +887,12 @@ fn reader_loop(inner: Arc<RouterInner>, shard_idx: usize, mut read_half: TcpStre
                 let latency = req.submitted.elapsed();
                 let _ = req.reply.send(RequestResult { value, latency, error });
             }
+            Msg::Pong { nonce: _ } => {
+                inner.hb_pongs.fetch_add(1, Ordering::Relaxed);
+            }
             // Control replies ride dedicated connections; anything else
             // here is a protocol violation — drop the connection.
-            Ok(Some(_)) => break,
-            Ok(None) | Err(_) => break,
+            _ => break,
         }
     }
     inner.mark_down(shard_idx);
@@ -721,22 +923,28 @@ fn reader_loop(inner: Arc<RouterInner>, shard_idx: usize, mut read_half: TcpStre
     shard.reader_gone.store(true, Ordering::SeqCst);
 }
 
-/// The router's self-healing loop: revive downed shards, reconcile the
-/// spare pool, and sweep parked requests (re-dispatch on membership
-/// changes, expire past the retry window).
+/// The router's self-healing loop: enforce data-path heartbeats,
+/// revive downed shards, reconcile the spare pool, and sweep parked
+/// requests (re-dispatch on membership changes, expire past the retry
+/// window).
 fn supervisor_loop(inner: Arc<RouterInner>) {
     while !inner.closing.load(Ordering::SeqCst) {
         std::thread::sleep(inner.cfg.probe_period);
         if inner.closing.load(Ordering::SeqCst) {
             break;
         }
+        heartbeat_sweep(&inner);
         // Revival: re-probe each downed shard whose previous reader has
         // fully drained; a serving probe reopens the data connection and
         // returns the shard to its (stable) ring position.
         let n = inner.shards.read().unwrap().len();
         for i in 0..n {
             let Some(shard) = inner.shard(i) else { continue };
-            if shard.up.load(Ordering::SeqCst) || !shard.reader_gone.load(Ordering::SeqCst) {
+            // Placeholders have no endpoint to probe until claimed.
+            if shard.is_placeholder()
+                || shard.up.load(Ordering::SeqCst)
+                || !shard.reader_gone.load(Ordering::SeqCst)
+            {
                 continue;
             }
             let addr = shard.addr();
@@ -752,6 +960,66 @@ fn supervisor_loop(inner: Arc<RouterInner>) {
         }
         inner.reconcile_spares();
         sweep_parked(&inner);
+    }
+}
+
+/// Data-path heartbeats (wire v3): send a `Ping` on every live data
+/// connection that has been silent past `heartbeat_period`, and mark
+/// down any shard whose outstanding ping outlived `heartbeat_timeout`
+/// — the only way a half-open peer (writes accepted, nothing ever read
+/// back) is ever caught, since it produces neither a reader EOF nor a
+/// write error. The down-mark shuts the socket, so the blocked reader
+/// unblocks, drains the pending table, and replays every in-flight
+/// request on the next live shard, exactly like a disconnect.
+fn heartbeat_sweep(inner: &Arc<RouterInner>) {
+    // Disabled (mixed-version fleets: a pre-v3 shard drops the
+    // connection on its first ping, so during a shard upgrade the
+    // operator turns heartbeats off rather than flapping old peers).
+    if inner.cfg.heartbeat_period.is_zero() {
+        return;
+    }
+    let n = inner.shards.read().unwrap().len();
+    let now = Instant::now();
+    for i in 0..n {
+        let Some(shard) = inner.shard(i) else { continue };
+        if !shard.up.load(Ordering::SeqCst) {
+            continue;
+        }
+        let mut hb = shard.hb.lock().unwrap();
+        if hb.outstanding != 0 {
+            if now >= hb.deadline {
+                hb.outstanding = 0;
+                drop(hb);
+                inner.hb_timeouts.fetch_add(1, Ordering::Relaxed);
+                eprintln!(
+                    "router: shard {i} ({}) missed its heartbeat deadline \
+                     (half-open connection); marking down",
+                    shard.addr()
+                );
+                inner.mark_down(i);
+            }
+        } else if now >= hb.next_ping {
+            // Arm the deadline *before* writing, then release the hb
+            // lock for the (possibly slow) socket write: the reader
+            // must stay free to clear the outstanding ping — the pong
+            // can race back between the write and any later bookkeeping
+            // — and a wedged peer's blocked write must not hold hb
+            // against it.
+            let nonce = inner.hb_nonce.fetch_add(1, Ordering::Relaxed);
+            hb.outstanding = nonce;
+            hb.deadline = now + inner.cfg.heartbeat_timeout;
+            hb.next_ping = now + inner.cfg.heartbeat_period;
+            drop(hb);
+            let wrote = match shard.writer.lock().unwrap().as_mut() {
+                Some(stream) => write_msg(stream, &Msg::Ping { nonce }).is_ok(),
+                None => false,
+            };
+            if wrote {
+                inner.hb_pings.fetch_add(1, Ordering::Relaxed);
+            } else {
+                inner.mark_down(i);
+            }
+        }
     }
 }
 
@@ -815,16 +1083,33 @@ fn registration_loop(inner: Arc<RouterInner>, listener: TcpListener) {
                 let _ = stream.set_nonblocking(false);
                 let _ = stream.set_read_timeout(Some(CONTROL_TIMEOUT));
                 let _ = stream.set_write_timeout(Some(CONTROL_TIMEOUT));
-                match read_msg(&mut stream) {
-                    Ok(Some(Msg::Register { name, addr, spare })) => {
-                        let (shard, active) = inner.register(name, addr, spare);
-                        let _ =
-                            write_msg(&mut stream, &Msg::Welcome { shard: shard as u32, active });
+                // One short-lived thread per announcement: with the
+                // whole fleet refreshing every REG_REFRESH, a single
+                // silent client must not head-of-line-block everyone
+                // else's re-registration for CONTROL_TIMEOUT — during a
+                // router restart that stall would push recovery past
+                // the retry window.
+                let inner = inner.clone();
+                std::thread::spawn(move || {
+                    match read_msg(&mut stream) {
+                        // The empty string is the placeholder sentinel
+                        // in the slot table, so a nameless registrant
+                        // is rejected outright: honoring it would let
+                        // one frame hijack a slot reserved for a
+                        // re-registering member.
+                        Ok(Some(Msg::Register { name, addr, spare, prev }))
+                            if !name.is_empty() && !inner.closing.load(Ordering::SeqCst) =>
+                        {
+                            let (shard, active) = inner.register(name, addr, spare, prev);
+                            let welcome = Msg::Welcome { shard: shard as u32, active };
+                            let _ = write_msg(&mut stream, &welcome);
+                        }
+                        // Malformed, nameless or non-Register traffic:
+                        // drop it — the codec already refused malformed
+                        // frames.
+                        _ => {}
                     }
-                    // Malformed or non-Register traffic: drop it — the
-                    // codec already refused the frame.
-                    _ => {}
-                }
+                });
             }
             Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                 std::thread::sleep(Duration::from_millis(5));
@@ -917,6 +1202,10 @@ mod tests {
             parked: Mutex::new(Vec::new()),
             readers: Mutex::new(Vec::new()),
             next_id: AtomicU64::new(1),
+            hb_nonce: AtomicU64::new(1),
+            hb_pings: AtomicU64::new(0),
+            hb_pongs: AtomicU64::new(0),
+            hb_timeouts: AtomicU64::new(0),
             closing: AtomicBool::new(false),
         };
         inner.rebuild_ring();
@@ -991,15 +1280,99 @@ mod tests {
     #[test]
     fn registration_assigns_stable_slots_and_reuse_by_name() {
         let inner = test_inner(1, 0);
-        let (i1, active1) = inner.register("alpha".into(), "127.0.0.1:7001".into(), false);
+        let (i1, active1) = inner.register("alpha".into(), "127.0.0.1:7001".into(), false, None);
         assert_eq!((i1, active1), (1, true));
-        let (i2, active2) = inner.register("sp".into(), "127.0.0.1:7002".into(), true);
+        let (i2, active2) = inner.register("sp".into(), "127.0.0.1:7002".into(), true, None);
         assert_eq!((i2, active2), (2, false), "spares start outside the ring");
         // A restarted process re-registers under its name at a new port
         // and reclaims the same slot.
-        let (i3, _) = inner.register("alpha".into(), "127.0.0.1:7099".into(), false);
+        let (i3, _) = inner.register("alpha".into(), "127.0.0.1:7099".into(), false, None);
         assert_eq!(i3, 1);
         assert_eq!(inner.shard(1).unwrap().addr(), "127.0.0.1:7099");
         assert_eq!(inner.shards.read().unwrap().len(), 3);
+        // A periodic refresh (same name, same endpoint) is a silent
+        // no-op: same slot, no epoch bump, no membership change.
+        let epoch = inner.epoch.load(Ordering::SeqCst);
+        let (i4, _) = inner.register("alpha".into(), "127.0.0.1:7099".into(), false, Some(1));
+        assert_eq!(i4, 1);
+        assert_eq!(inner.epoch.load(Ordering::SeqCst), epoch, "refresh must not bump the epoch");
+        assert_eq!(inner.shards.read().unwrap().len(), 3);
+    }
+
+    #[test]
+    fn prev_slot_claims_rebuild_identical_rings_in_any_order() {
+        // The ring a 3-member router built, by stable index.
+        let reference = test_inner(3, 0);
+        let kinds: Vec<FunctionKind> =
+            (1..=32).flat_map(|b| [FunctionKind::Add(b), FunctionKind::Xor(b)]).collect();
+        let ref_walks: Vec<Vec<usize>> =
+            kinds.iter().map(|&k| reference.ring_order(hash_kind(k))).collect();
+        // A fresh (restarted) router sees the fleet re-register in an
+        // arbitrary order, each shard carrying its previous index.
+        for order in [[2usize, 0, 1], [1, 2, 0], [0, 1, 2]] {
+            let rebuilt = test_inner(0, 0);
+            for &i in &order {
+                let (got, active) = rebuilt.register(
+                    format!("m{i}"),
+                    format!("127.0.0.1:{i}"),
+                    false,
+                    Some(i as u32),
+                );
+                assert_eq!((got, active), (i, true), "slot reclaimed by prev index");
+            }
+            assert_eq!(rebuilt.shards.read().unwrap().len(), 3);
+            assert!(
+                rebuilt.shards.read().unwrap().iter().all(|s| !s.is_placeholder()),
+                "every placeholder is claimed once the fleet re-registers"
+            );
+            let walks: Vec<Vec<usize>> =
+                kinds.iter().map(|&k| rebuilt.ring_order(hash_kind(k))).collect();
+            assert_eq!(walks, ref_walks, "ring rebuilt bit-identically (order {order:?})");
+        }
+    }
+
+    #[test]
+    fn stale_prev_hints_fall_through_to_fresh_slots() {
+        let inner = test_inner(0, 0);
+        let (i0, _) = inner.register("a".into(), "127.0.0.1:1".into(), false, Some(0));
+        assert_eq!(i0, 0);
+        // A different shard claiming the same previous index cannot
+        // evict the occupant: it gets a fresh slot instead.
+        let (i1, _) = inner.register("b".into(), "127.0.0.1:2".into(), false, Some(0));
+        assert_eq!(i1, 1, "occupied slot is never stolen");
+        // A spare reclaiming a reserved high slot stays out of the ring.
+        let (i3, active3) = inner.register("sp".into(), "127.0.0.1:3".into(), true, Some(3));
+        assert_eq!((i3, active3), (3, false));
+        let shards = inner.shards.read().unwrap();
+        assert!(shards[2].is_placeholder(), "slot 2 stays reserved for its member");
+        assert!(!shards[3].in_ring(), "reclaimed spare slot stays out of the ring");
+        drop(shards);
+        // A hint beyond any plausible fleet (garbage or a hostile
+        // frame) is ignored rather than allocated: fresh slot, no
+        // placeholder flood.
+        let (i4, _) = inner.register("c".into(), "127.0.0.1:4".into(), false, Some(u32::MAX));
+        assert_eq!(i4, 4);
+        assert_eq!(inner.shards.read().unwrap().len(), 5);
+        // Defense in depth behind the listener's empty-name rejection:
+        // an empty name never matches the reserved placeholder at slot
+        // 2 (the empty string is the placeholder sentinel).
+        let (i5, _) = inner.register(String::new(), "127.0.0.1:66".into(), false, None);
+        assert_eq!(i5, 5, "an empty-name registrant must not hijack a reserved slot");
+        assert!(inner.shards.read().unwrap()[2].is_placeholder(), "slot 2 still reserved");
+    }
+
+    #[test]
+    fn unclaimed_placeholders_are_inert_for_spares() {
+        // Member 0 and spare 1, both live; a prev=3 claim reserves a
+        // placeholder at slot 2 that no one ever claims (a stale hint
+        // from an old, larger fleet).
+        let inner = test_inner(1, 1);
+        inner.register("far".into(), "127.0.0.1:9".into(), false, Some(3));
+        inner.shard(3).unwrap().up.store(true, Ordering::SeqCst);
+        inner.reconcile_spares();
+        assert!(
+            !inner.shard(1).unwrap().promoted.load(Ordering::SeqCst),
+            "a reserved-but-unclaimed slot must not consume a hot spare"
+        );
     }
 }

@@ -33,6 +33,14 @@ use crate::coordinator::{Coordinator, CoordinatorConfig, RequestResult};
 
 use super::wire::{read_msg, write_msg, Msg};
 
+/// How often a registered shard re-announces itself to the router
+/// (`fabric-serve --register`). Registration is idempotent on the
+/// router side (an unchanged name+endpoint is a silent refresh), and
+/// the periodic re-announce is what lets a *restarted* router — which
+/// comes up with an empty fleet — rediscover every shard within one
+/// refresh period, each at its previously assigned ring slot.
+pub const REG_REFRESH: Duration = Duration::from_millis(500);
+
 /// A reply the connection's writer thread must deliver, in order.
 enum Reply {
     /// A submitted request: block on the coordinator's reply channel.
@@ -91,29 +99,47 @@ impl FabricServer {
     }
 
     /// Announce this shard to a router's registration endpoint
-    /// (`fabric-serve --register`): retries in the background until the
-    /// router answers with a `Welcome` or this server stops —
+    /// (`fabric-serve --register`): a background loop that retries
+    /// until the router answers with a `Welcome`, then keeps
+    /// re-announcing every [`REG_REFRESH`] until this server stops —
     /// registration commonly precedes router startup in a real
-    /// deployment, so an unreachable router is not an error. `name` is
-    /// the shard's stable identity (re-registering under the same name
-    /// after a restart reclaims the same ring slot); `spare` joins the
-    /// router's hot-spare pool instead of the active ring.
+    /// deployment, so an unreachable router is not an error, and the
+    /// refresh loop is what survives a *router* restart: a fresh router
+    /// has an empty fleet until the next refresh lands. The shard
+    /// remembers the slot index each `Welcome` assigned and sends it
+    /// back as `prev`, so a restarted router reconstructs every shard
+    /// at its old index and the rebuilt ring is bit-identical. `name`
+    /// is the shard's stable identity (re-registering under the same
+    /// name after a shard restart reclaims the same ring slot); `spare`
+    /// joins the router's hot-spare pool instead of the active ring.
     pub fn register_with(&self, router_reg: &str, name: &str, spare: bool) {
         let stop = self.stop.clone();
-        let msg =
-            Msg::Register { name: name.to_string(), addr: self.addr.to_string(), spare };
+        let (name, addr) = (name.to_string(), self.addr.to_string());
         let router_reg = router_reg.to_string();
         let handle = std::thread::spawn(move || {
+            let mut assigned: Option<u32> = None;
             while !stop.load(Ordering::SeqCst) {
+                let msg = Msg::Register {
+                    name: name.clone(),
+                    addr: addr.clone(),
+                    spare,
+                    prev: assigned,
+                };
                 match register_once(&router_reg, &msg) {
                     Ok((shard, active)) => {
-                        eprintln!(
-                            "fabric server: registered with {router_reg} as shard {shard} ({})",
-                            if active { "active" } else { "spare" }
-                        );
-                        return;
+                        // Log first contact and slot moves, not the
+                        // twice-a-second refresh chatter.
+                        if assigned != Some(shard) {
+                            eprintln!(
+                                "fabric server: registered with {router_reg} as shard {shard} \
+                                 ({})",
+                                if active { "active" } else { "spare" }
+                            );
+                            assigned = Some(shard);
+                        }
+                        sleep_unless_stopped(&stop, REG_REFRESH);
                     }
-                    Err(_) => std::thread::sleep(Duration::from_millis(200)),
+                    Err(_) => sleep_unless_stopped(&stop, Duration::from_millis(200)),
                 }
             }
         });
@@ -160,6 +186,19 @@ impl FabricServer {
         if let Ok(coord) = Arc::try_unwrap(self.coord) {
             coord.shutdown();
         }
+    }
+}
+
+/// Sleep in short slices so the registration loop notices a shutdown
+/// within tens of milliseconds instead of a full refresh period.
+fn sleep_unless_stopped(stop: &AtomicBool, total: Duration) {
+    let deadline = std::time::Instant::now() + total;
+    while !stop.load(Ordering::SeqCst) {
+        let left = deadline.saturating_duration_since(std::time::Instant::now());
+        if left.is_zero() {
+            return;
+        }
+        std::thread::sleep(left.min(Duration::from_millis(20)));
     }
 }
 
@@ -265,6 +304,16 @@ fn conn_loop(mut read_half: TcpStream, coord: Arc<Coordinator>, stop: Arc<Atomic
                     break;
                 }
             }
+            Msg::Ping { nonce } => {
+                // Data-path heartbeat (wire v3): echo the nonce through
+                // the ordinary FIFO reply stream. Behind a deep backlog
+                // the pong queues after the pending results — which is
+                // fine, because any frame the router reads (results
+                // included) proves this connection is not half-open.
+                if reply_tx.send(Reply::Now(Msg::Pong { nonce })).is_err() {
+                    break;
+                }
+            }
             Msg::Shutdown => {
                 let _ = reply_tx.send(Reply::Now(Msg::ShutdownAck));
                 stop.store(true, Ordering::SeqCst);
@@ -278,7 +327,8 @@ fn conn_loop(mut read_half: TcpStream, coord: Arc<Coordinator>, stop: Arc<Atomic
             | Msg::HealthReply { .. }
             | Msg::ShutdownAck
             | Msg::Register { .. }
-            | Msg::Welcome { .. } => break,
+            | Msg::Welcome { .. }
+            | Msg::Pong { .. } => break,
         }
     }
     // Closing the reply channel lets the writer drain the pending

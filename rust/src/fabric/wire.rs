@@ -26,16 +26,21 @@ use crate::mmpu::FunctionKind;
 /// Newest protocol version this peer speaks. v2 added shard
 /// registration (`Register`/`Welcome`) and the fleet-membership
 /// counters (`shards_total`/`shards_down`) trailing the metrics
-/// snapshot body. Each frame is stamped with the *lowest* version that
-/// can represent its message ([`Msg::min_version`]), so v1 peers keep
+/// snapshot body. v3 added the data-path heartbeat (`Ping`/`Pong`), the
+/// optional previous-slot index trailing `Register` (so a fleet
+/// re-registering with a restarted router reclaims its exact ring
+/// indices), and the heartbeat counters trailing the snapshot body.
+/// Each frame is stamped with the *lowest* version that can represent
+/// its message ([`Msg::min_version`]), so older peers keep
 /// understanding the unchanged message layouts.
-pub const WIRE_VERSION: u8 = 2;
+pub const WIRE_VERSION: u8 = 3;
 
-/// Oldest version this decoder still accepts. v1 frames decode
-/// compatibly (the snapshot's missing membership counters default to
-/// zero); v2-only message types inside a v1 frame are rejected, and
-/// anything outside `MIN_WIRE_VERSION..=WIRE_VERSION` is an error —
-/// never a panic, never a misparse.
+/// Oldest version this decoder still accepts. v1/v2 frames decode
+/// compatibly (the snapshot's missing membership/heartbeat counters
+/// default to zero, a v2 `Register` carries no previous-slot index);
+/// newer-version-only message types inside an older frame are
+/// rejected, and anything outside `MIN_WIRE_VERSION..=WIRE_VERSION` is
+/// an error — never a panic, never a misparse.
 pub const MIN_WIRE_VERSION: u8 = 1;
 
 /// Sanity bound on a frame body: protects against garbage length
@@ -68,12 +73,25 @@ pub enum Msg {
     /// process re-registering under the same name reclaims its ring
     /// slot (possibly at a new `addr`), keeping kind->shard placement
     /// bit-identical across the restart. `spare` asks to join the
-    /// hot-spare pool instead of the active ring.
-    Register { name: String, addr: String, spare: bool },
+    /// hot-spare pool instead of the active ring. `prev` (wire v3) is
+    /// the slot index a previous `Welcome` assigned, remembered by the
+    /// shard across *router* restarts: a fresh router reconstructs each
+    /// registrant at its old index regardless of re-registration order,
+    /// so the rebuilt ring is bit-identical to the crashed router's.
+    Register { name: String, addr: String, spare: bool, prev: Option<u32> },
     /// Router -> shard (wire v2): registration ack with the assigned
     /// stable shard index and whether the shard is immediately part of
     /// the routing ring (spares start idle).
     Welcome { shard: u32, active: bool },
+    /// Router -> shard (data connection, wire v3): data-path liveness
+    /// probe. Control-plane health probes cannot catch a peer whose TCP
+    /// connection is half-open (accepts writes, never replies); an
+    /// unanswered `Ping` on the *data* path does.
+    Ping { nonce: u64 },
+    /// Shard -> router (wire v3): echo of a `Ping`'s nonce. Rides the
+    /// connection's ordinary FIFO reply stream, so any inbound frame —
+    /// a `Result` ahead of the pong included — proves liveness.
+    Pong { nonce: u64 },
 }
 
 impl Msg {
@@ -89,6 +107,8 @@ impl Msg {
             Msg::ShutdownAck => 8,
             Msg::Register { .. } => 9,
             Msg::Welcome { .. } => 10,
+            Msg::Ping { .. } => 11,
+            Msg::Pong { .. } => 12,
         }
     }
 
@@ -96,11 +116,15 @@ impl Msg {
     /// are stamped with this (not blindly with [`WIRE_VERSION`]) so a
     /// mixed-version fleet interoperates on the data path: a v1 peer
     /// accepts every message whose layout predates v2, and only the
-    /// genuinely v2 messages (registration; metrics snapshots, whose
-    /// body grew the membership counters) are labeled v2.
+    /// genuinely newer messages (registration; heartbeats; metrics
+    /// snapshots, whose body grew the membership then the heartbeat
+    /// counters; a `Register` carrying a previous-slot index) are
+    /// labeled with the version that introduced them.
     fn min_version(&self) -> u8 {
         match self {
-            Msg::MetricsReply(_) | Msg::Register { .. } | Msg::Welcome { .. } => 2,
+            Msg::MetricsReply(_) | Msg::Ping { .. } | Msg::Pong { .. } => 3,
+            Msg::Register { prev: Some(_), .. } => 3,
+            Msg::Register { prev: None, .. } | Msg::Welcome { .. } => 2,
             _ => 1,
         }
     }
@@ -138,15 +162,23 @@ impl Msg {
                 put_u32(&mut out, *routable);
                 put_u32(&mut out, *retired);
             }
-            Msg::Register { name, addr, spare } => {
+            Msg::Register { name, addr, spare, prev } => {
                 put_string(&mut out, name);
                 put_string(&mut out, addr);
                 out.push(*spare as u8);
+                // The previous-slot index trails the v2 body, and only
+                // in v3-stamped frames (prev-less registrations keep the
+                // exact v2 layout for old routers).
+                if let Some(p) = prev {
+                    out.push(1);
+                    put_u32(&mut out, *p);
+                }
             }
             Msg::Welcome { shard, active } => {
                 put_u32(&mut out, *shard);
                 out.push(*active as u8);
             }
+            Msg::Ping { nonce } | Msg::Pong { nonce } => put_u64(&mut out, *nonce),
         }
         out
     }
@@ -197,17 +229,33 @@ impl Msg {
             9 | 10 if version < 2 => {
                 bail!("message type {} requires wire version >= 2 (frame is v{version})", type_id)
             }
+            11 | 12 if version < 3 => {
+                bail!("message type {} requires wire version >= 3 (frame is v{version})", type_id)
+            }
             9 => {
                 let name = c.string()?;
                 let addr = c.string()?;
                 let spare = c.bool()?;
-                Msg::Register { name, addr, spare }
+                // v3 appended the optional previous-slot index; a v2
+                // frame's body ends at the spare flag.
+                let prev = if version >= 3 {
+                    match c.u8()? {
+                        0 => None,
+                        1 => Some(c.u32()?),
+                        f => bail!("invalid option flag {f}"),
+                    }
+                } else {
+                    None
+                };
+                Msg::Register { name, addr, spare, prev }
             }
             10 => {
                 let shard = c.u32()?;
                 let active = c.bool()?;
                 Msg::Welcome { shard, active }
             }
+            11 => Msg::Ping { nonce: c.u64()? },
+            12 => Msg::Pong { nonce: c.u64()? },
             t => bail!("unknown message type {t}"),
         };
         ensure!(c.pos == bytes.len(), "trailing bytes after {} message", type_name(type_id));
@@ -227,6 +275,8 @@ fn type_name(t: u8) -> &'static str {
         8 => "ShutdownAck",
         9 => "Register",
         10 => "Welcome",
+        11 => "Ping",
+        12 => "Pong",
         _ => "unknown",
     }
 }
@@ -322,6 +372,10 @@ fn put_snapshot(out: &mut Vec<u8>, s: &MetricsSnapshot) {
     // compatibly (they simply stop here and the counters default to 0).
     put_u64(out, s.shards_total);
     put_u64(out, s.shards_down);
+    // Heartbeat counters trail the v2 body likewise (v3).
+    put_u64(out, s.hb_pings);
+    put_u64(out, s.hb_pongs);
+    put_u64(out, s.hb_timeouts);
 }
 
 struct Cursor<'a> {
@@ -419,10 +473,13 @@ impl<'a> Cursor<'a> {
                 retired,
             });
         }
-        // v2 appended the fleet membership counters; a v1 peer's
-        // snapshot ends here and reports zeros.
+        // v2 appended the fleet membership counters, v3 the heartbeat
+        // counters; an older peer's snapshot ends earlier and reports
+        // zeros for the fields it predates.
         let (shards_total, shards_down) =
             if version >= 2 { (self.u64()?, self.u64()?) } else { (0, 0) };
+        let (hb_pings, hb_pongs, hb_timeouts) =
+            if version >= 3 { (self.u64()?, self.u64()?, self.u64()?) } else { (0, 0, 0) };
         Ok(MetricsSnapshot {
             submitted,
             completed,
@@ -435,6 +492,9 @@ impl<'a> Cursor<'a> {
             lat_bins,
             shards_total,
             shards_down,
+            hb_pings,
+            hb_pongs,
+            hb_timeouts,
         })
     }
 }
@@ -450,10 +510,15 @@ mod tests {
         assert_eq!(bytes[0], 1, "v1-expressible messages stay v1-labeled for old peers");
         assert_eq!(bytes[1], 1);
         assert_eq!(Msg::from_bytes(&bytes).unwrap(), msg);
-        // Genuinely v2 messages carry the v2 label.
-        let reg = Msg::Register { name: "a".into(), addr: "b".into(), spare: false };
-        assert_eq!(reg.to_bytes()[0], WIRE_VERSION);
+        // Messages keep the lowest version label their layout allows.
+        let reg = Msg::Register { name: "a".into(), addr: "b".into(), spare: false, prev: None };
+        assert_eq!(reg.to_bytes()[0], 2, "a prev-less Register keeps the v2 layout");
+        let reg3 =
+            Msg::Register { name: "a".into(), addr: "b".into(), spare: false, prev: Some(4) };
+        assert_eq!(reg3.to_bytes()[0], WIRE_VERSION);
         assert_eq!(Msg::MetricsReply(MetricsSnapshot::default()).to_bytes()[0], WIRE_VERSION);
+        assert_eq!(Msg::Ping { nonce: 9 }.to_bytes()[0], WIRE_VERSION);
+        assert_eq!(Msg::Pong { nonce: 9 }.to_bytes()[0], WIRE_VERSION);
     }
 
     #[test]
@@ -466,8 +531,21 @@ mod tests {
             Msg::HealthReply { serving: true, workers: 4, routable: 3, retired: 1 },
             Msg::Shutdown,
             Msg::ShutdownAck,
-            Msg::Register { name: "shard-a".into(), addr: "127.0.0.1:4870".into(), spare: true },
+            Msg::Register {
+                name: "shard-a".into(),
+                addr: "127.0.0.1:4870".into(),
+                spare: true,
+                prev: None,
+            },
+            Msg::Register {
+                name: "shard-a".into(),
+                addr: "127.0.0.1:4871".into(),
+                spare: true,
+                prev: Some(7),
+            },
             Msg::Welcome { shard: 3, active: false },
+            Msg::Ping { nonce: 0xDEAD },
+            Msg::Pong { nonce: 0xDEAD },
         ];
         let mut stream = Vec::new();
         for m in &msgs {
@@ -497,22 +575,43 @@ mod tests {
             ],
             shards_total: 3,
             shards_down: 1,
+            hb_pings: 40,
+            hb_pongs: 39,
+            hb_timeouts: 1,
         };
         let msg = Msg::MetricsReply(snap);
         assert_eq!(Msg::from_bytes(&msg.to_bytes()).unwrap(), msg);
     }
 
     #[test]
-    fn v1_frames_decode_compatibly() {
-        // A v1 MetricsReply lacks the trailing membership counters:
-        // strip them from a v2 encoding and relabel the version byte.
-        let snap = MetricsSnapshot { completed: 9, lat_bins: vec![1, 2], ..Default::default() };
+    fn old_version_frames_decode_compatibly() {
+        // A v2 MetricsReply lacks the trailing heartbeat counters, a v1
+        // one also the membership counters: strip them from a v3
+        // encoding and relabel the version byte.
+        let snap = MetricsSnapshot {
+            completed: 9,
+            lat_bins: vec![1, 2],
+            shards_total: 2,
+            shards_down: 1,
+            ..Default::default()
+        };
+        let mut v2 = Msg::MetricsReply(snap.clone()).to_bytes();
+        v2.truncate(v2.len() - 24);
+        v2[0] = 2;
+        match Msg::from_bytes(&v2).unwrap() {
+            Msg::MetricsReply(got) => {
+                assert_eq!(got, snap, "heartbeat counters default to 0 for v2 peers")
+            }
+            other => panic!("unexpected decode: {other:?}"),
+        }
         let mut v1 = Msg::MetricsReply(snap.clone()).to_bytes();
-        v1.truncate(v1.len() - 16);
+        v1.truncate(v1.len() - 40);
         v1[0] = 1;
         match Msg::from_bytes(&v1).unwrap() {
             Msg::MetricsReply(got) => {
-                assert_eq!(got, snap, "membership counters default to 0 for v1 peers")
+                let expect =
+                    MetricsSnapshot { shards_total: 0, shards_down: 0, ..snap.clone() };
+                assert_eq!(got, expect, "membership counters default to 0 for v1 peers")
             }
             other => panic!("unexpected decode: {other:?}"),
         }
@@ -522,10 +621,25 @@ mod tests {
         submit[0] = 1;
         assert!(Msg::from_bytes(&submit).is_ok());
         // v2-only types inside a v1 frame are rejected.
-        let mut reg =
-            Msg::Register { name: "x".into(), addr: "y".into(), spare: false }.to_bytes();
+        let mut reg = Msg::Register { name: "x".into(), addr: "y".into(), spare: false, prev: None }
+            .to_bytes();
         reg[0] = 1;
         assert!(Msg::from_bytes(&reg).is_err(), "Register requires wire v2");
+        // v3-only types inside a v2 frame are rejected.
+        for m in [Msg::Ping { nonce: 1 }, Msg::Pong { nonce: 1 }] {
+            for v in [1u8, 2] {
+                let mut bytes = m.to_bytes();
+                bytes[0] = v;
+                assert!(Msg::from_bytes(&bytes).is_err(), "{m:?} requires wire v3");
+            }
+        }
+        // A prev-carrying Register relabeled v2 has trailing bytes the
+        // v2 layout cannot express: a clean error, not a misparse.
+        let mut reg3 =
+            Msg::Register { name: "x".into(), addr: "y".into(), spare: false, prev: Some(1) }
+                .to_bytes();
+        reg3[0] = 2;
+        assert!(Msg::from_bytes(&reg3).is_err(), "prev index requires wire v3");
     }
 
     #[test]

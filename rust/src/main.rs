@@ -48,6 +48,19 @@
 //!                                     # --chaos-kill: SIGKILL one shard
 //!                                     # mid-run, restart it, and prove
 //!                                     # zero lost/wrong replies
+//! remus loadgen [--qps 1000,2000,4000 --requests 8192 --seed 4269
+//!                --window 1024] [--shards a:p,b:p | --listen-reg addr]
+//!                                     # open-loop generator: seeded
+//!                                     # Poisson arrivals at each
+//!                                     # offered rate, bounded in-flight
+//!                                     # window, every reply verified
+//!                                     # against the arithmetic oracle,
+//!                                     # per-kind p50/p90/p99/max, knee
+//!                                     # detection across the sweep;
+//!                                     # writes BENCH_loadgen.json.
+//!                                     # Default target: an in-process
+//!                                     # coordinator (fabric flags swap
+//!                                     # in a router)
 //! ```
 
 use anyhow::Result;
@@ -57,6 +70,7 @@ use remus::analysis::{fig4::MultReliability, overhead};
 use remus::bitlet::BitletModel;
 use remus::coordinator::{Coordinator, CoordinatorConfig, MetricsSnapshot, Submitter};
 use remus::errs::ErrorModel;
+use remus::fabric::loadgen::{self, LoadgenConfig};
 use remus::fabric::{shutdown_endpoint, FabricServer, Router, RouterConfig};
 use remus::health::{HealthConfig, WearModel};
 use remus::mmpu::{controller::quick_exec, FunctionKind, ReliabilityPolicy};
@@ -82,10 +96,11 @@ fn main() -> Result<()> {
         Some("fabric-serve") => fabric_serve(&args),
         Some("fabric-route") => fabric_route(&args),
         Some("fabric-soak") => fabric_soak(&args),
+        Some("loadgen") => loadgen_cmd(&args),
         _ => {
             eprintln!(
                 "usage: remus <info|demo|fig4|fig5|overhead|tradeoff|serve|soak|lifetime|\
-                 fabric-serve|fabric-route|fabric-soak> [--opts]\n \
+                 fabric-serve|fabric-route|fabric-soak|loadgen> [--opts]\n \
                  see doc comments in rust/src/main.rs"
             );
             Ok(())
@@ -251,16 +266,7 @@ fn serve(args: &Args) -> Result<()> {
     // which discovers shards through registration) swaps the in-process
     // coordinator for a fabric router with no other change.
     if args.get("shards").is_some() || args.get("listen-reg").is_some() {
-        let addrs: Vec<String> = args
-            .get("shards")
-            .map(|s| s.split(',').map(str::to_string).collect())
-            .unwrap_or_default();
-        let rcfg = RouterConfig {
-            listen: args.get("listen-reg").map(str::to_string),
-            ..Default::default()
-        };
-        let router = Router::with_config(&addrs, rcfg)?;
-        announce_registration(&router, args, addrs.len(), "serve");
+        let router = router_from_args(args, shard_addrs_from_args(args), "serve")?;
         println!("serving through the fabric router over {} shards", router.shard_count());
         serve_load(&router, requests)?;
         let m = router.metrics();
@@ -312,9 +318,12 @@ fn serve_load(sub: &dyn Submitter, requests: u64) -> Result<()> {
     Ok(())
 }
 
-/// Open-loop load in bounded waves over any [`Submitter`] — the same
-/// generator drives the in-process coordinator (`remus soak`) and the
-/// sharded fabric router (`remus fabric-route` / `fabric-soak`).
+/// Closed-loop load in bounded waves over any [`Submitter`] — the same
+/// driver feeds the in-process coordinator (`remus soak`) and the
+/// sharded fabric router (`remus fabric-route` / `fabric-soak`). Being
+/// closed-loop it self-throttles at saturation; the *open-loop*
+/// `remus loadgen` (`fabric::loadgen`) is the tool that measures where
+/// that saturation knee actually is.
 /// Returns (ok, wrong, error_results, elapsed).
 fn drive_load(
     sub: &dyn Submitter,
@@ -481,6 +490,29 @@ fn announce_registration(router: &Router, args: &Args, static_shards: usize, ctx
     router.announce_and_wait(min, std::time::Duration::from_secs(30), ctx);
 }
 
+/// Parse the comma-separated `--shards` list (empty when absent).
+fn shard_addrs_from_args(args: &Args) -> Vec<String> {
+    args.get("shards").map(|s| s.split(',').map(str::to_string).collect()).unwrap_or_default()
+}
+
+/// Build a fabric router from the shared CLI flag surface — the one
+/// place `--probe-ms`, `--retry-ms`, `--listen-reg`, `--hb-ms` and
+/// `--hb-timeout-ms` are wired, so `serve`, `fabric-route` and
+/// `loadgen` cannot drift apart — then announce the registration port
+/// and wait for `--min-shards`.
+fn router_from_args(args: &Args, addrs: Vec<String>, ctx: &str) -> Result<Router> {
+    let rcfg = RouterConfig {
+        probe_period: std::time::Duration::from_millis(args.get_or("probe-ms", 250u64)),
+        retry_window: std::time::Duration::from_millis(args.get_or("retry-ms", 1000u64)),
+        listen: args.get("listen-reg").map(str::to_string),
+        heartbeat_period: std::time::Duration::from_millis(args.get_or("hb-ms", 1000u64)),
+        heartbeat_timeout: std::time::Duration::from_millis(args.get_or("hb-timeout-ms", 1000u64)),
+    };
+    let router = Router::with_config(&addrs, rcfg)?;
+    announce_registration(&router, args, addrs.len(), ctx);
+    Ok(router)
+}
+
 /// Build one shard's coordinator config from CLI options (shared by
 /// `fabric-serve`; `fabric-soak` passes the same flags to its children).
 fn shard_config(args: &Args) -> CoordinatorConfig {
@@ -539,18 +571,11 @@ fn fabric_serve(args: &Args) -> Result<()> {
 /// registration listener for shards that announce themselves.
 fn fabric_route(args: &Args) -> Result<()> {
     let shards: Vec<String> = match (args.get("shards"), args.get("listen-reg")) {
-        (Some(s), _) => s.split(',').map(str::to_string).collect(),
-        (None, Some(_)) => Vec::new(),
         (None, None) => vec!["127.0.0.1:4870".to_string()],
+        _ => shard_addrs_from_args(args),
     };
     let requests = args.get_or("requests", 8192u64);
-    let rcfg = RouterConfig {
-        probe_period: std::time::Duration::from_millis(args.get_or("probe-ms", 250u64)),
-        retry_window: std::time::Duration::from_millis(args.get_or("retry-ms", 1000u64)),
-        listen: args.get("listen-reg").map(str::to_string),
-    };
-    let router = Router::with_config(&shards, rcfg)?;
-    announce_registration(&router, args, shards.len(), "fabric-route");
+    let router = router_from_args(args, shards, "fabric-route")?;
     // add8 and xor16 land on different shards of a 2-entry ring.
     let kinds = [FunctionKind::Add(8), FunctionKind::Xor(16), FunctionKind::Mul(8)];
     for k in kinds {
@@ -567,7 +592,7 @@ fn fabric_route(args: &Args) -> Result<()> {
     let m = router.metrics();
     println!(
         "fleet: shards {}/{} up ({} down) completed={} failed={} mean_batch={:.1} \
-         p50={}us p99={}us retired={}",
+         p50={}us p99={}us retired={} hb pings={} pongs={} timeouts={}",
         m.shards_total - m.shards_down,
         m.shards_total,
         m.shards_down,
@@ -576,7 +601,10 @@ fn fabric_route(args: &Args) -> Result<()> {
         m.mean_batch_size(),
         m.latency_percentile_us(50.0),
         m.latency_percentile_us(99.0),
-        m.retired_workers()
+        m.retired_workers(),
+        m.hb_pings,
+        m.hb_pongs,
+        m.hb_timeouts
     );
     print_worker_health("fleet", &m);
     router.shutdown();
@@ -684,6 +712,7 @@ fn fabric_soak(args: &Args) -> Result<()> {
                 probe_period: std::time::Duration::from_millis(100),
                 retry_window: std::time::Duration::from_secs(3),
                 listen: (spare_shards > 0).then(|| "127.0.0.1:0".to_string()),
+                ..Default::default()
             };
             let static_addrs = addrs.clone();
             let router = Router::with_config(&static_addrs, rcfg)?;
@@ -810,4 +839,109 @@ fn fabric_soak(args: &Args) -> Result<()> {
         let _ = child.wait();
     }
     result
+}
+
+/// Run the open-loop sweep against any target, print the per-kind
+/// percentile table + knee verdict, and write the JSON artifact.
+fn run_loadgen_sweep(
+    sub: &dyn Submitter,
+    cfg: &LoadgenConfig,
+    qps_points: &[f64],
+    out: &str,
+) -> Result<()> {
+    println!(
+        "loadgen: {} requests/point at {:?} offered qps, window {}, seed {:#x}",
+        cfg.requests, qps_points, cfg.window, cfg.seed
+    );
+    let sweep = loadgen::sweep(sub, cfg, qps_points);
+    let mut t = Table::new(
+        "open-loop sweep: per-kind latency percentiles (us) per offered rate",
+        &["offered", "achieved", "stalls", "kind", "count", "p50", "p90", "p99", "max"],
+    );
+    for p in &sweep.points {
+        anyhow::ensure!(
+            p.wrong == 0 && p.errors == 0,
+            "loadgen verification failed at {} qps: ok {}/{} wrong {} errors {}",
+            p.offered_qps,
+            p.ok,
+            p.requests,
+            p.wrong,
+            p.errors
+        );
+        for (kind, k) in &p.kinds {
+            t.row(&[
+                format!("{:.0}", p.offered_qps),
+                format!("{:.0}", p.achieved_qps),
+                p.window_stalls.to_string(),
+                kind.name(),
+                k.hist.count().to_string(),
+                k.hist.percentile_us(50.0).to_string(),
+                k.hist.percentile_us(90.0).to_string(),
+                k.hist.percentile_us(99.0).to_string(),
+                k.hist.max_us().to_string(),
+            ]);
+        }
+    }
+    t.print();
+    match sweep.knee_qps {
+        Some(k) => println!(
+            "knee: highest sustained offered rate = {k:.0} qps \
+             (criterion: achieved >= 90% of offered)"
+        ),
+        None => println!("knee: none — every sweep point collapsed below 90% of its offer"),
+    }
+    loadgen::write_json(out, cfg, &sweep)?;
+    println!("(machine-readable results written to {out})");
+    Ok(())
+}
+
+/// Open-loop fleet load generator (§Scale): the measurement tool the
+/// closed-loop drivers above cannot be — it keeps offering requests on
+/// a seeded Poisson schedule when the target saturates, so the sweep
+/// exposes the knee instead of silently throttling to match.
+fn loadgen_cmd(args: &Args) -> Result<()> {
+    // Strict parse: a typo must fail the run, not silently shrink the
+    // sweep (CI archives the artifact — a lost point would go unseen).
+    let mut qps_points: Vec<f64> = Vec::new();
+    for tok in args.get("qps").unwrap_or("1000,2000,4000").split(',') {
+        let q: f64 = tok
+            .trim()
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--qps: cannot parse rate {tok:?}"))?;
+        anyhow::ensure!(q > 0.0, "--qps rates must be positive (got {q})");
+        qps_points.push(q);
+    }
+    anyhow::ensure!(!qps_points.is_empty(), "--qps needs a comma-separated list of rates");
+    let cfg = LoadgenConfig {
+        qps: qps_points[0],
+        requests: args.get_or("requests", 8192u64),
+        seed: args.get_or("seed", 0x10ADu64),
+        window: args.get_or("window", 1024usize),
+        ..Default::default()
+    };
+    let out = args.get("out").unwrap_or("BENCH_loadgen.json").to_string();
+    // Target: a fabric router (static shards and/or registration) when
+    // any fabric flag is given, the in-process coordinator otherwise —
+    // the generator itself is Submitter-generic.
+    if args.get("shards").is_some() || args.get("listen-reg").is_some() {
+        let router = router_from_args(args, shard_addrs_from_args(args), "loadgen")?;
+        let res = run_loadgen_sweep(&router, &cfg, &qps_points, &out);
+        let m = router.metrics();
+        println!(
+            "fleet after sweep: shards {}/{} up, completed={} hb pings={} pongs={} timeouts={}",
+            m.shards_total - m.shards_down,
+            m.shards_total,
+            m.completed,
+            m.hb_pings,
+            m.hb_pongs,
+            m.hb_timeouts
+        );
+        router.shutdown();
+        res
+    } else {
+        let coord = Coordinator::start(shard_config(args))?;
+        let res = run_loadgen_sweep(&coord, &cfg, &qps_points, &out);
+        coord.shutdown();
+        res
+    }
 }

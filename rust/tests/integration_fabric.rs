@@ -1,15 +1,21 @@
 //! Integration: the fabric subsystem end to end over real threads and
-//! loopback sockets (ISSUE 3 + ISSUE 4 acceptance) — sharded serving
-//! bit-identical to the in-process coordinator, health-driven failover
-//! with zero lost replies, merged fleet metrics, and the self-healing
-//! membership machinery: shard revival after a kill/restart,
-//! registration-based discovery, hot-spare shard pools, and the bounded
-//! submit retry window during a total outage.
+//! loopback sockets (ISSUE 3 + ISSUE 4 + ISSUE 5 acceptance) — sharded
+//! serving bit-identical to the in-process coordinator, health-driven
+//! failover with zero lost replies, merged fleet metrics, and the
+//! self-healing membership machinery: shard revival after a
+//! kill/restart, registration-based discovery, hot-spare shard pools,
+//! the bounded submit retry window during a total outage, data-path
+//! heartbeat detection of half-open shards, re-registration across a
+//! *router* restart, and the open-loop load generator over the fabric.
 
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use remus::coordinator::{Coordinator, CoordinatorConfig, Submitter};
-use remus::fabric::{probe_health, shutdown_endpoint, FabricServer, Router, RouterConfig};
+use remus::fabric::wire::{read_msg, write_msg, Msg};
+use remus::fabric::{loadgen, probe_health, shutdown_endpoint, FabricServer, Router, RouterConfig};
 use remus::health::{HealthConfig, WearModel};
 use remus::mmpu::FunctionKind;
 
@@ -219,6 +225,7 @@ fn fast_cfg(listen: bool) -> RouterConfig {
         probe_period: Duration::from_millis(50),
         retry_window: Duration::from_millis(2000),
         listen: listen.then(|| "127.0.0.1:0".to_string()),
+        ..Default::default()
     }
 }
 
@@ -495,6 +502,277 @@ fn fabric_soak_chaos_kill_restart_loses_nothing() {
         stdout.contains("spares: 1 hot-spare shard(s) registered and connected"),
         "spare registration not reported\nstdout:\n{stdout}"
     );
+}
+
+/// ISSUE 5 acceptance: a half-open shard — registration completed,
+/// health probes answered, every submit and ping swallowed, nothing
+/// ever written back — produces no reader EOF and no write error, so
+/// only the data-path heartbeat can catch it. It must be marked down
+/// within 2 heartbeat periods, its in-flight requests replayed on the
+/// live shard with zero lost replies (values bit-identical to a
+/// healthy fleet), and the merged snapshot must show the down-mark and
+/// the heartbeat timeout.
+#[test]
+fn half_open_shard_detected_by_heartbeats_and_failed_over() {
+    let healthy = FabricServer::start("127.0.0.1:0", shard_cfg(0xA)).unwrap();
+    let hb_period = Duration::from_millis(600);
+    let cfg = RouterConfig {
+        probe_period: Duration::from_millis(50),
+        retry_window: Duration::from_millis(2000),
+        listen: Some("127.0.0.1:0".to_string()),
+        heartbeat_period: hb_period,
+        heartbeat_timeout: Duration::from_millis(600),
+    };
+    let router = Router::with_config(&[healthy.local_addr().to_string()], cfg).unwrap();
+    let reg = router.registration_addr().unwrap().to_string();
+
+    // The stub: a wedged process. It answers health probes until its
+    // data path has seen any traffic (so registration-driven discovery
+    // completes and the router opens the data connection), then
+    // swallows everything on every connection — submits, pings, and
+    // further control probes — while keeping the sockets open.
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let stub_addr = listener.local_addr().unwrap().to_string();
+    let wedged = Arc::new(AtomicBool::new(false));
+    {
+        let wedged = wedged.clone();
+        std::thread::spawn(move || {
+            for conn in listener.incoming() {
+                let Ok(mut c) = conn else { return };
+                let wedged = wedged.clone();
+                std::thread::spawn(move || loop {
+                    match read_msg(&mut c) {
+                        Ok(Some(Msg::HealthReq)) if !wedged.load(Ordering::SeqCst) => {
+                            let reply = Msg::HealthReply {
+                                serving: true,
+                                workers: 1,
+                                routable: 1,
+                                retired: 0,
+                            };
+                            if write_msg(&mut c, &reply).is_err() {
+                                return;
+                            }
+                        }
+                        Ok(Some(Msg::Submit { .. })) | Ok(Some(Msg::Ping { .. })) => {
+                            wedged.store(true, Ordering::SeqCst);
+                        }
+                        Ok(Some(_)) => {}
+                        Ok(None) | Err(_) => return,
+                    }
+                });
+            }
+        });
+    }
+    // Complete the stub's registration by hand (a real shard's
+    // register_with loop does exactly this).
+    {
+        let mut s = TcpStream::connect(&reg).unwrap();
+        let announce = Msg::Register {
+            name: "halfopen".into(),
+            addr: stub_addr.clone(),
+            spare: false,
+            prev: None,
+        };
+        write_msg(&mut s, &announce).unwrap();
+        match read_msg(&mut s).unwrap() {
+            Some(Msg::Welcome { shard, active }) => {
+                assert_eq!(shard, 1, "registered after the static shard");
+                assert!(active);
+            }
+            other => panic!("unexpected registration reply: {other:?}"),
+        }
+    }
+    assert!(router.wait_for_live(2, Duration::from_secs(10)), "stub's data connection opens");
+    let k0 = kind_on_shard(&router, 0);
+    let k1 = kind_on_shard(&router, 1); // routes to the half-open stub
+
+    // Submit while the stub is still nominally up: the k1 half lands in
+    // its pending table and must be replayed, not lost.
+    let reqs: Vec<(FunctionKind, u64, u64)> = (0..400u64)
+        .map(|i| (if i % 2 == 0 { k0 } else { k1 }, i % 251, (i * 7 + 3) % 251))
+        .collect();
+    let rxs: Vec<_> = reqs.iter().map(|&(k, a, b)| router.submit(k, a, b)).collect();
+
+    // Detection bound: within 2 heartbeat periods of the connection
+    // going silent (it swallowed from the very first ping).
+    wait_until("half-open shard marked down within 2 heartbeat periods", 2 * hb_period, || {
+        router.live_shards() == 1
+    });
+    assert_eq!(router.shard_for(k1), Some(0), "stub's kinds fail over to the live shard");
+
+    // Zero lost replies, every value correct.
+    let values: Vec<u64> = reqs
+        .iter()
+        .zip(&rxs)
+        .enumerate()
+        .map(|(i, (&(kind, a, b), rx))| {
+            let r = rx
+                .recv_timeout(Duration::from_secs(60))
+                .unwrap_or_else(|e| panic!("request {i} lost across the half-open shard: {e}"));
+            assert!(r.is_ok(), "request {i} errored: {:?}", r.error);
+            assert_eq!(r.value, kind.reference(a, b), "request {i}");
+            r.value
+        })
+        .collect();
+
+    // Bit-identical to a healthy fleet: one in-process coordinator with
+    // the live shard's config serves the same stream.
+    let coord = Coordinator::start(shard_cfg(0xA)).unwrap();
+    let local = run_checked(&coord, &reqs);
+    coord.shutdown();
+    assert_eq!(values, local, "half-open failover must not change a single value");
+
+    // The merged snapshot shows the down-mark and names the cause.
+    let m = router.metrics();
+    assert_eq!(m.shards_total, 2);
+    assert_eq!(m.shards_down, 1, "the half-open shard stays down (its probes are swallowed)");
+    assert!(m.hb_pings >= 1, "heartbeats were sent");
+    assert!(m.hb_timeouts >= 1, "the down-mark came from a heartbeat deadline");
+    assert!(m.hb_pongs >= 1, "the healthy shard answered its pings");
+    assert_eq!(m.completed, 400, "the live shard absorbed the whole load");
+
+    router.shutdown();
+    healthy.shutdown();
+}
+
+/// ISSUE 5 acceptance: when the *router* restarts, every shard
+/// (members and spares) re-registers through its background refresh
+/// loop, each reclaiming the slot index its old `Welcome` assigned —
+/// so the new router's ring walk is bit-identical for every
+/// `FunctionKind`, and a request submitted before re-registration
+/// (parked inside the retry window) completes.
+#[test]
+fn router_restart_shards_reregister_and_ring_rebuilds_bit_identically() {
+    let s1 = FabricServer::start("127.0.0.1:0", shard_cfg(0xA)).unwrap();
+    let s2 = FabricServer::start("127.0.0.1:0", shard_cfg(0xB)).unwrap();
+    let spare = FabricServer::start("127.0.0.1:0", shard_cfg(0xC)).unwrap();
+    let router_a = Router::with_config(&[], fast_cfg(true)).unwrap();
+    let reg = router_a.registration_addr().unwrap().to_string();
+    // Sequential registration pins the slot order: alpha=0, beta=1,
+    // spare0=2 (first registration wins a fresh slot; the restart below
+    // must reproduce these indices in *any* re-registration order).
+    s1.register_with(&reg, "alpha", false);
+    assert!(router_a.wait_for_live(1, Duration::from_secs(10)));
+    s2.register_with(&reg, "beta", false);
+    assert!(router_a.wait_for_live(2, Duration::from_secs(10)));
+    spare.register_with(&reg, "spare0", true);
+    assert!(router_a.wait_for_live(3, Duration::from_secs(10)));
+
+    let all_kinds: Vec<FunctionKind> = (1..=32)
+        .flat_map(|b| {
+            [
+                FunctionKind::Add(b),
+                FunctionKind::Mul(b),
+                FunctionKind::MulNaive(b),
+                FunctionKind::Xor(b),
+            ]
+        })
+        .collect();
+    let walks_a: Vec<Vec<usize>> = all_kinds.iter().map(|&k| router_a.ring_walk(k)).collect();
+    let addrs_a = router_a.shard_addrs();
+    let k0 = kind_on_shard(&router_a, 0);
+    let k1 = kind_on_shard(&router_a, 1);
+    let reqs: Vec<(FunctionKind, u64, u64)> = (0..200u64)
+        .map(|i| (if i % 2 == 0 { k0 } else { k1 }, i % 251, (i * 7 + 3) % 251))
+        .collect();
+    run_checked(&router_a, &reqs);
+
+    // The router process "dies": connections drop, registration port
+    // closes, all membership state is lost.
+    router_a.shutdown();
+
+    // Its replacement binds the same registration port with an empty
+    // fleet (brief retry: the kernel may hold the just-closed port for
+    // a moment, as with restart_server above). A request submitted
+    // before any shard re-registers parks inside the retry window
+    // instead of failing.
+    let mut cfg = fast_cfg(false);
+    cfg.listen = Some(reg.clone());
+    cfg.retry_window = Duration::from_secs(10);
+    let router_b = {
+        let deadline = Instant::now() + Duration::from_secs(10);
+        loop {
+            match Router::with_config(&[], cfg.clone()) {
+                Ok(r) => break r,
+                Err(e) => {
+                    assert!(Instant::now() < deadline, "could not rebind {reg}: {e:#}");
+                    std::thread::sleep(Duration::from_millis(100));
+                }
+            }
+        }
+    };
+    assert_eq!(router_b.shard_count(), 0, "a restarted router starts from nothing");
+    let early = router_b.submit(k0, 19, 23);
+
+    assert!(
+        router_b.wait_for_live(3, Duration::from_secs(10)),
+        "every shard re-registers on its own (refresh loop), incl. the spare"
+    );
+    let r = early.recv_timeout(Duration::from_secs(10)).expect("parked request resolves");
+    assert!(r.is_ok(), "parked submit served after re-registration: {:?}", r.error);
+    assert_eq!(r.value, k0.reference(19, 23));
+
+    // Identical membership: same slot indices, same endpoints, and a
+    // ring walk bit-identical for every kind the fleet can express.
+    assert_eq!(router_b.shard_count(), 3);
+    assert_eq!(router_b.shard_addrs(), addrs_a, "each shard reclaimed its exact slot");
+    let walks_b: Vec<Vec<usize>> = all_kinds.iter().map(|&k| router_b.ring_walk(k)).collect();
+    assert_eq!(walks_b, walks_a, "rebuilt ring must be bit-identical to the old router's");
+    assert_eq!(router_b.shard_for(k0), Some(0));
+    assert_eq!(router_b.shard_for(k1), Some(1));
+    for w in &walks_b {
+        assert!(!w.contains(&2), "the re-registered spare stays out of the ring");
+    }
+
+    // And the rebuilt fleet serves the same stream correctly.
+    run_checked(&router_b, &reqs);
+    let m = router_b.metrics();
+    assert_eq!((m.shards_total, m.shards_down), (3, 0));
+
+    router_b.shutdown();
+    s1.shutdown();
+    s2.shutdown();
+    spare.shutdown();
+}
+
+/// ISSUE 5 satellite: the open-loop generator drives a sharded fleet
+/// through the router, verifies every reply against the arithmetic
+/// oracle, and its per-kind histograms account for every request.
+#[test]
+fn open_loop_loadgen_over_the_fabric_verifies_all_replies() {
+    let s1 = FabricServer::start("127.0.0.1:0", shard_cfg(0xA)).unwrap();
+    let s2 = FabricServer::start("127.0.0.1:0", shard_cfg(0xB)).unwrap();
+    let addrs = vec![s1.local_addr().to_string(), s2.local_addr().to_string()];
+    let router = Router::connect(&addrs).unwrap();
+    let cfg = loadgen::LoadgenConfig {
+        qps: 5000.0,
+        requests: 1000,
+        seed: 0x5EED,
+        window: 256,
+        kinds: vec![kind_on_shard(&router, 0), kind_on_shard(&router, 1)],
+    };
+    // Determinism holds end to end, not just in the unit tests: the
+    // schedule regenerates bit-identically while the fleet is live.
+    assert_eq!(loadgen::schedule(&cfg), loadgen::schedule(&cfg));
+
+    let rep = loadgen::run(&router, &cfg);
+    assert_eq!(rep.requests, 1000);
+    assert_eq!(rep.ok, 1000, "wrong={} errors={}", rep.wrong, rep.errors);
+    assert_eq!(rep.wrong + rep.errors, 0);
+    let per_kind_total: u64 = rep.kinds.iter().map(|(_, k)| k.hist.count()).sum();
+    assert_eq!(per_kind_total, 1000, "every verified reply lands in exactly one histogram");
+    for (_, k) in &rep.kinds {
+        if k.hist.count() > 0 {
+            assert!(k.hist.percentile_us(50.0) <= k.hist.percentile_us(99.0));
+            assert!(k.hist.max_us() >= 1);
+        }
+    }
+    // The fleet saw the whole stream (both shards participated).
+    let m = router.metrics();
+    assert_eq!(m.completed, 1000);
+    router.shutdown();
+    s1.shutdown();
+    s2.shutdown();
 }
 
 #[test]

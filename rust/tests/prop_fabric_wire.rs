@@ -1,7 +1,9 @@
 //! Property tests for the fabric wire codec: every message type
-//! survives encode -> frame -> decode bit-exactly, and truncated or
-//! corrupted frames are rejected with errors — never a panic, never an
-//! accidental parse (ISSUE 3 satellite).
+//! (the v3 heartbeat `Ping`/`Pong` included) survives encode -> frame
+//! -> decode bit-exactly, v1/v2 frames still decode under the v3
+//! codec, and truncated or corrupted frames — truncated pings included
+//! — are rejected with errors: never a panic, never an accidental
+//! parse (ISSUE 3 + ISSUE 5 satellites).
 
 use remus::coordinator::{MetricsSnapshot, WorkerHealth};
 use remus::fabric::wire::{read_msg, write_msg, Msg, MAX_FRAME, MIN_WIRE_VERSION, WIRE_VERSION};
@@ -59,11 +61,14 @@ fn gen_snapshot(g: &mut Gen) -> MetricsSnapshot {
             .collect(),
         shards_total: g.u64(),
         shards_down: g.u64(),
+        hb_pings: g.u64(),
+        hb_pongs: g.u64(),
+        hb_timeouts: g.u64(),
     }
 }
 
 fn gen_msg(g: &mut Gen) -> Msg {
-    match g.usize_in(0..=9) {
+    match g.usize_in(0..=11) {
         0 => Msg::Submit { id: g.u64(), kind: gen_kind(g), a: g.u64(), b: g.u64() },
         1 => {
             let error = if g.bool() { Some(gen_string(g)) } else { None };
@@ -80,8 +85,15 @@ fn gen_msg(g: &mut Gen) -> Msg {
         },
         6 => Msg::Shutdown,
         7 => Msg::ShutdownAck,
-        8 => Msg::Register { name: gen_string(g), addr: gen_string(g), spare: g.bool() },
-        _ => Msg::Welcome { shard: g.u64() as u32, active: g.bool() },
+        8 => Msg::Register {
+            name: gen_string(g),
+            addr: gen_string(g),
+            spare: g.bool(),
+            prev: if g.bool() { Some(g.u64() as u32) } else { None },
+        },
+        9 => Msg::Welcome { shard: g.u64() as u32, active: g.bool() },
+        10 => Msg::Ping { nonce: g.u64() },
+        _ => Msg::Pong { nonce: g.u64() },
     }
 }
 
@@ -157,31 +169,87 @@ fn version_mismatch_is_rejected() {
 }
 
 #[test]
-fn v1_frames_decode_compatibly_and_v2_types_need_v2() {
-    // v1 snapshots predate the fleet membership counters: strip the
-    // trailing 16 bytes from a v2 encoding and relabel the version —
-    // the decode must succeed with the counters defaulted to zero.
+fn v1_and_v2_frames_decode_compatibly_under_v3() {
+    // v2 snapshots predate the heartbeat counters (strip the trailing
+    // 24 bytes), v1 ones also the fleet membership counters (strip 40):
+    // relabel the version and the decode must succeed with the missing
+    // fields defaulted to zero.
     Cases::new(256).run(|g| {
         let mut snap = gen_snapshot(g);
-        let mut bytes = Msg::MetricsReply(snap.clone()).to_bytes();
-        bytes.truncate(bytes.len() - 16);
-        bytes[0] = 1;
+        let mut v2 = Msg::MetricsReply(snap.clone()).to_bytes();
+        v2.truncate(v2.len() - 24);
+        v2[0] = 2;
+        snap.hb_pings = 0;
+        snap.hb_pongs = 0;
+        snap.hb_timeouts = 0;
+        assert_eq!(Msg::from_bytes(&v2).unwrap(), Msg::MetricsReply(snap.clone()));
+        let mut v1 = Msg::MetricsReply(snap.clone()).to_bytes();
+        v1.truncate(v1.len() - 40);
+        v1[0] = 1;
         snap.shards_total = 0;
         snap.shards_down = 0;
-        assert_eq!(Msg::from_bytes(&bytes).unwrap(), Msg::MetricsReply(snap));
-        // Fixed-layout messages decode identically under either version.
+        assert_eq!(Msg::from_bytes(&v1).unwrap(), Msg::MetricsReply(snap));
+        // Fixed-layout messages decode identically under any version.
         let msg = Msg::Submit { id: g.u64(), kind: gen_kind(g), a: g.u64(), b: g.u64() };
         let mut v1 = msg.to_bytes();
         v1[0] = 1;
         assert_eq!(Msg::from_bytes(&v1).unwrap(), msg);
+        // A prev-less Register still decodes as the v2 layout it keeps.
+        let reg2 =
+            Msg::Register { name: gen_string(g), addr: gen_string(g), spare: g.bool(), prev: None };
+        assert_eq!(reg2.to_bytes()[0], 2, "prev-less Register stays v2-labeled");
+        assert_eq!(Msg::from_bytes(&reg2.to_bytes()).unwrap(), reg2);
         // Registration frames are v2-only: a v1 label is a clean error.
-        let reg = Msg::Register { name: gen_string(g), addr: gen_string(g), spare: g.bool() };
-        let mut v1reg = reg.to_bytes();
+        let mut v1reg = reg2.to_bytes();
         v1reg[0] = 1;
         assert!(Msg::from_bytes(&v1reg).is_err());
         let mut v1wel = Msg::Welcome { shard: g.u64() as u32, active: g.bool() }.to_bytes();
         v1wel[0] = 1;
         assert!(Msg::from_bytes(&v1wel).is_err());
+        // Heartbeats and prev-carrying registrations are v3-only: older
+        // labels are clean errors, never misparses.
+        let reg3 = Msg::Register {
+            name: gen_string(g),
+            addr: gen_string(g),
+            spare: g.bool(),
+            prev: Some(g.u64() as u32),
+        };
+        assert_eq!(reg3.to_bytes()[0], WIRE_VERSION);
+        for v in [1u8, 2] {
+            let mut bytes = reg3.to_bytes();
+            bytes[0] = v;
+            assert!(Msg::from_bytes(&bytes).is_err(), "prev index needs v3 (label v{v})");
+            for hb in [Msg::Ping { nonce: g.u64() }, Msg::Pong { nonce: g.u64() }] {
+                let mut bytes = hb.to_bytes();
+                bytes[0] = v;
+                assert!(Msg::from_bytes(&bytes).is_err(), "{hb:?} needs v3 (label v{v})");
+            }
+        }
+    });
+}
+
+#[test]
+fn heartbeat_frames_roundtrip_and_truncated_pings_error() {
+    Cases::new(256).run(|g| {
+        let nonce = g.u64();
+        for msg in [Msg::Ping { nonce }, Msg::Pong { nonce }] {
+            let mut buf = Vec::new();
+            write_msg(&mut buf, &msg).unwrap();
+            let mut r: &[u8] = &buf;
+            assert_eq!(read_msg(&mut r).unwrap().expect("one frame"), msg);
+            assert!(read_msg(&mut r).unwrap().is_none());
+            // Every strictly-internal cut — mid-prefix, mid-header, or
+            // mid-nonce — must surface as Err, never a panic or a
+            // short parse.
+            let cut = g.usize_in(1..=buf.len() - 1);
+            let mut r: &[u8] = &buf[..cut];
+            assert!(read_msg(&mut r).is_err(), "cut at {cut}/{} must error", buf.len());
+            let payload = msg.to_bytes();
+            let pcut = g.usize_in(0..=payload.len() - 1);
+            assert!(Msg::from_bytes(&payload[..pcut]).is_err(), "payload cut at {pcut}");
+            // A nonce-less Ping body (header only) is also rejected.
+            assert!(Msg::from_bytes(&payload[..2]).is_err());
+        }
     });
 }
 
