@@ -112,6 +112,7 @@ impl Metrics {
             hb_pings: 0,
             hb_pongs: 0,
             hb_timeouts: 0,
+            auth_rejects: 0,
         }
     }
 }
@@ -150,6 +151,11 @@ pub struct MetricsSnapshot {
     /// half-open-connection detector firing (distinct from disconnect
     /// or capacity failovers, which close the socket visibly).
     pub hb_timeouts: u64,
+    /// Peers rejected by the fabric's authentication layer (§Security,
+    /// wire v4): failed PSK handshakes, tampered/replayed sealed frames,
+    /// plaintext traffic on an authenticated port. Counted by both the
+    /// shard server and the router; a single coordinator reports 0.
+    pub auth_rejects: u64,
 }
 
 impl MetricsSnapshot {
@@ -181,6 +187,7 @@ impl MetricsSnapshot {
         self.hb_pings += other.hb_pings;
         self.hb_pongs += other.hb_pongs;
         self.hb_timeouts += other.hb_timeouts;
+        self.auth_rejects += other.auth_rejects;
     }
     /// Workers that retired their crossbar.
     pub fn retired_workers(&self) -> usize {
@@ -259,16 +266,19 @@ mod tests {
         // nested merges add).
         assert_eq!((merged.shards_total, merged.shards_down), (0, 0));
         assert_eq!((merged.hb_pings, merged.hb_pongs, merged.hb_timeouts), (0, 0, 0));
+        assert_eq!(merged.auth_rejects, 0);
         merged.merge(&MetricsSnapshot {
             shards_total: 3,
             shards_down: 1,
             hb_pings: 8,
             hb_pongs: 7,
             hb_timeouts: 1,
+            auth_rejects: 2,
             ..Default::default()
         });
         assert_eq!((merged.shards_total, merged.shards_down), (3, 1));
         assert_eq!((merged.hb_pings, merged.hb_pongs, merged.hb_timeouts), (8, 7, 1));
+        assert_eq!(merged.auth_rejects, 2);
     }
 
     #[test]

@@ -1,0 +1,1037 @@
+//! Mutual authentication and per-frame integrity for the fabric.
+//!
+//! The fabric's reliability story (golden-value verification, zero-loss
+//! failover) is only as strong as the integrity of the frames carrying
+//! it: on a hostile network a rogue `Register` can claim a ring slot and
+//! black-hole a `FunctionKind`, and an on-path peer can replay a
+//! `Welcome` or flip a bit in a `Result` undetected. This module closes
+//! that gap with **no external dependencies** — the offline vendor set
+//! has no TLS or crypto crate, so the primitives are hand-rolled from
+//! their specs:
+//!
+//! * SHA-256 (FIPS 180-4) + HMAC-SHA256 (RFC 2104) + a single-block
+//!   HKDF (RFC 5869) for key derivation,
+//! * ChaCha20 (RFC 8439) as the stream cipher,
+//! * a 3-message noise-style pre-shared-key handshake with fresh
+//!   per-connection nonces and constant-time MAC comparison,
+//! * an encrypt-then-MAC seal with **implicit monotonic per-direction
+//!   frame counters**: the counter is never transmitted, both sides
+//!   count frames independently (TCP preserves ordering), so a replayed,
+//!   reordered, or dropped-and-reinserted frame fails its MAC.
+//!
+//! Handshake (client = connecting side, server = accepting side):
+//!
+//! ```text
+//! C -> S  [HS_MAGIC, CLIENT_HELLO,  cn (32 bytes)]
+//! S -> C  [HS_MAGIC, SERVER_HELLO,  sn (32) , HMAC(k_auth, "srv" || cn || sn)]
+//! C -> S  [HS_MAGIC, CLIENT_CONFIRM,          HMAC(k_auth, "cli" || cn || sn)]
+//! ```
+//!
+//! where `k_auth = HMAC(psk, hs-label)`. Both MACs cover both nonces, so
+//! a replayed transcript (either direction) fails against the fresh
+//! nonce the honest side just generated. Session keys come from
+//! `HKDF-Extract(salt = cn || sn, ikm = psk)` followed by four
+//! single-block expands (c2s/s2c x cipher/mac), giving each direction an
+//! independent cipher and MAC key.
+//!
+//! Sealed frames ride inside the existing length-prefixed transport:
+//!
+//! ```text
+//! [len u32 LE][0xE4 marker][ChaCha20 ciphertext][16-byte truncated HMAC tag]
+//! ```
+//!
+//! The MAC covers `[direction byte] || counter (LE u64) || ciphertext`;
+//! the ChaCha20 nonce is `[dir, 0, 0, 0, counter LE u64]`, so a
+//! (key, nonce) pair is never reused. Marker bytes 0xE4/0xE5 are
+//! disjoint from every plaintext wire version (1..=4), so a plaintext
+//! endpoint can reject sealed traffic with a helpful error and vice
+//! versa — there is no byte sequence that parses both ways.
+//!
+//! All reads here are **deadline-bounded** (see [`read_frame_bounded`]):
+//! once the first byte of a frame arrives, the rest must follow within
+//! [`FRAME_DEADLINE`], which is what defeats slowloris-style tricklers
+//! on both fabric ports.
+
+use crate::fabric::wire::{Msg, MAX_FRAME};
+use anyhow::{bail, Context, Result};
+use std::io::{ErrorKind, Read, Write};
+use std::net::TcpStream;
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+/// First payload byte of a sealed frame. Deliberately outside the
+/// plaintext wire-version range so the two framings cannot be confused.
+pub const SEALED_MARKER: u8 = 0xE4;
+/// First payload byte of every handshake message.
+pub const HS_MAGIC: u8 = 0xE5;
+
+const HS_CLIENT_HELLO: u8 = 1;
+const HS_SERVER_HELLO: u8 = 2;
+const HS_CLIENT_CONFIRM: u8 = 3;
+
+/// Truncated HMAC-SHA256 tag appended to every sealed frame.
+pub const TAG_LEN: usize = 16;
+/// Per-connection ephemeral nonce length (client and server).
+pub const NONCE_LEN: usize = 32;
+/// Full handshake MAC length.
+pub const MAC_LEN: usize = 32;
+/// Bytes a seal adds to a payload: marker + truncated tag.
+pub const SEAL_OVERHEAD: usize = 1 + TAG_LEN;
+
+/// A whole handshake message must arrive within this budget, and each
+/// handshake write gets the same bound.
+pub const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(2);
+/// Once the first byte of a frame has arrived, the remainder must land
+/// within this deadline — a 1 byte/sec trickler is cut off here instead
+/// of wedging a reader thread (or the registration accept loop) forever.
+pub const FRAME_DEADLINE: Duration = Duration::from_secs(2);
+
+/// Direction bytes: they salt both the MAC input and the cipher nonce so
+/// the two half-duplex streams can never be cross-spliced.
+const DIR_C2S: u8 = 0xC1;
+const DIR_S2C: u8 = 0x51;
+
+const HS_AUTH_LABEL: &[u8] = b"remus-fabric-hs-auth-v1";
+const HS_SRV_LABEL: &[u8] = b"remus-fabric-hs-srv-v1";
+const HS_CLI_LABEL: &[u8] = b"remus-fabric-hs-cli-v1";
+const PSK_LABEL: &[u8] = b"remus-fabric-psk-v1";
+
+// ---------------------------------------------------------------------------
+// SHA-256 (FIPS 180-4)
+// ---------------------------------------------------------------------------
+
+const SHA_K: [u32; 64] = [
+    0x428a2f98, 0x71374491, 0xb5c0fbcf, 0xe9b5dba5, 0x3956c25b, 0x59f111f1, 0x923f82a4, 0xab1c5ed5,
+    0xd807aa98, 0x12835b01, 0x243185be, 0x550c7dc3, 0x72be5d74, 0x80deb1fe, 0x9bdc06a7, 0xc19bf174,
+    0xe49b69c1, 0xefbe4786, 0x0fc19dc6, 0x240ca1cc, 0x2de92c6f, 0x4a7484aa, 0x5cb0a9dc, 0x76f988da,
+    0x983e5152, 0xa831c66d, 0xb00327c8, 0xbf597fc7, 0xc6e00bf3, 0xd5a79147, 0x06ca6351, 0x14292967,
+    0x27b70a85, 0x2e1b2138, 0x4d2c6dfc, 0x53380d13, 0x650a7354, 0x766a0abb, 0x81c2c92e, 0x92722c85,
+    0xa2bfe8a1, 0xa81a664b, 0xc24b8b70, 0xc76c51a3, 0xd192e819, 0xd6990624, 0xf40e3585, 0x106aa070,
+    0x19a4c116, 0x1e376c08, 0x2748774c, 0x34b0bcb5, 0x391c0cb3, 0x4ed8aa4a, 0x5b9cca4f, 0x682e6ff3,
+    0x748f82ee, 0x78a5636f, 0x84c87814, 0x8cc70208, 0x90befffa, 0xa4506ceb, 0xbef9a3f7, 0xc67178f2,
+];
+
+/// Streaming SHA-256.
+struct Sha256 {
+    state: [u32; 8],
+    buf: [u8; 64],
+    buf_len: usize,
+    total_len: u64,
+}
+
+impl Sha256 {
+    fn new() -> Self {
+        Self {
+            state: [
+                0x6a09e667, 0xbb67ae85, 0x3c6ef372, 0xa54ff53a, 0x510e527f, 0x9b05688c,
+                0x1f83d9ab, 0x5be0cd19,
+            ],
+            buf: [0u8; 64],
+            buf_len: 0,
+            total_len: 0,
+        }
+    }
+
+    fn update(&mut self, mut data: &[u8]) {
+        self.total_len = self.total_len.wrapping_add(data.len() as u64);
+        if self.buf_len > 0 {
+            let take = (64 - self.buf_len).min(data.len());
+            self.buf[self.buf_len..self.buf_len + take].copy_from_slice(&data[..take]);
+            self.buf_len += take;
+            data = &data[take..];
+            if self.buf_len == 64 {
+                let block = self.buf;
+                self.compress(&block);
+                self.buf_len = 0;
+            }
+        }
+        while data.len() >= 64 {
+            let mut block = [0u8; 64];
+            block.copy_from_slice(&data[..64]);
+            self.compress(&block);
+            data = &data[64..];
+        }
+        if !data.is_empty() {
+            self.buf[..data.len()].copy_from_slice(data);
+            self.buf_len = data.len();
+        }
+    }
+
+    fn finalize(mut self) -> [u8; 32] {
+        let bit_len = self.total_len.wrapping_mul(8);
+        self.update(&[0x80]);
+        while self.buf_len != 56 {
+            self.update(&[0]);
+        }
+        // Length padding bypasses `update` so total_len stays untouched.
+        self.buf[56..64].copy_from_slice(&bit_len.to_be_bytes());
+        let block = self.buf;
+        self.compress(&block);
+        let mut out = [0u8; 32];
+        for (i, w) in self.state.iter().enumerate() {
+            out[i * 4..i * 4 + 4].copy_from_slice(&w.to_be_bytes());
+        }
+        out
+    }
+
+    fn compress(&mut self, block: &[u8; 64]) {
+        let mut w = [0u32; 64];
+        for (i, word) in w.iter_mut().take(16).enumerate() {
+            *word = u32::from_be_bytes(block[i * 4..i * 4 + 4].try_into().unwrap());
+        }
+        for i in 16..64 {
+            let s0 = w[i - 15].rotate_right(7) ^ w[i - 15].rotate_right(18) ^ (w[i - 15] >> 3);
+            let s1 = w[i - 2].rotate_right(17) ^ w[i - 2].rotate_right(19) ^ (w[i - 2] >> 10);
+            w[i] = w[i - 16]
+                .wrapping_add(s0)
+                .wrapping_add(w[i - 7])
+                .wrapping_add(s1);
+        }
+        let [mut a, mut b, mut c, mut d, mut e, mut f, mut g, mut h] = self.state;
+        for i in 0..64 {
+            let s1 = e.rotate_right(6) ^ e.rotate_right(11) ^ e.rotate_right(25);
+            let ch = (e & f) ^ (!e & g);
+            let t1 = h
+                .wrapping_add(s1)
+                .wrapping_add(ch)
+                .wrapping_add(SHA_K[i])
+                .wrapping_add(w[i]);
+            let s0 = a.rotate_right(2) ^ a.rotate_right(13) ^ a.rotate_right(22);
+            let maj = (a & b) ^ (a & c) ^ (b & c);
+            let t2 = s0.wrapping_add(maj);
+            h = g;
+            g = f;
+            f = e;
+            e = d.wrapping_add(t1);
+            d = c;
+            c = b;
+            b = a;
+            a = t1.wrapping_add(t2);
+        }
+        self.state[0] = self.state[0].wrapping_add(a);
+        self.state[1] = self.state[1].wrapping_add(b);
+        self.state[2] = self.state[2].wrapping_add(c);
+        self.state[3] = self.state[3].wrapping_add(d);
+        self.state[4] = self.state[4].wrapping_add(e);
+        self.state[5] = self.state[5].wrapping_add(f);
+        self.state[6] = self.state[6].wrapping_add(g);
+        self.state[7] = self.state[7].wrapping_add(h);
+    }
+}
+
+/// SHA-256 over the concatenation of `parts`.
+pub fn sha256(parts: &[&[u8]]) -> [u8; 32] {
+    let mut h = Sha256::new();
+    for p in parts {
+        h.update(p);
+    }
+    h.finalize()
+}
+
+/// HMAC-SHA256 over the concatenation of `parts` (RFC 2104).
+pub fn hmac_sha256(key: &[u8], parts: &[&[u8]]) -> [u8; 32] {
+    let mut k = [0u8; 64];
+    if key.len() > 64 {
+        k[..32].copy_from_slice(&sha256(&[key]));
+    } else {
+        k[..key.len()].copy_from_slice(key);
+    }
+    let mut ipad = [0x36u8; 64];
+    let mut opad = [0x5cu8; 64];
+    for i in 0..64 {
+        ipad[i] ^= k[i];
+        opad[i] ^= k[i];
+    }
+    let mut inner = Sha256::new();
+    inner.update(&ipad);
+    for p in parts {
+        inner.update(p);
+    }
+    let inner_hash = inner.finalize();
+    let mut outer = Sha256::new();
+    outer.update(&opad);
+    outer.update(&inner_hash);
+    outer.finalize()
+}
+
+// ---------------------------------------------------------------------------
+// ChaCha20 (RFC 8439)
+// ---------------------------------------------------------------------------
+
+#[inline]
+fn quarter_round(s: &mut [u32; 16], a: usize, b: usize, c: usize, d: usize) {
+    s[a] = s[a].wrapping_add(s[b]);
+    s[d] = (s[d] ^ s[a]).rotate_left(16);
+    s[c] = s[c].wrapping_add(s[d]);
+    s[b] = (s[b] ^ s[c]).rotate_left(12);
+    s[a] = s[a].wrapping_add(s[b]);
+    s[d] = (s[d] ^ s[a]).rotate_left(8);
+    s[c] = s[c].wrapping_add(s[d]);
+    s[b] = (s[b] ^ s[c]).rotate_left(7);
+}
+
+fn chacha20_block(key: &[u8; 32], nonce: &[u8; 12], counter: u32) -> [u8; 64] {
+    let mut state = [0u32; 16];
+    state[0] = 0x61707865;
+    state[1] = 0x3320646e;
+    state[2] = 0x79622d32;
+    state[3] = 0x6b206574;
+    for i in 0..8 {
+        state[4 + i] = u32::from_le_bytes(key[i * 4..i * 4 + 4].try_into().unwrap());
+    }
+    state[12] = counter;
+    for i in 0..3 {
+        state[13 + i] = u32::from_le_bytes(nonce[i * 4..i * 4 + 4].try_into().unwrap());
+    }
+    let mut work = state;
+    for _ in 0..10 {
+        quarter_round(&mut work, 0, 4, 8, 12);
+        quarter_round(&mut work, 1, 5, 9, 13);
+        quarter_round(&mut work, 2, 6, 10, 14);
+        quarter_round(&mut work, 3, 7, 11, 15);
+        quarter_round(&mut work, 0, 5, 10, 15);
+        quarter_round(&mut work, 1, 6, 11, 12);
+        quarter_round(&mut work, 2, 7, 8, 13);
+        quarter_round(&mut work, 3, 4, 9, 14);
+    }
+    let mut out = [0u8; 64];
+    for i in 0..16 {
+        let word = work[i].wrapping_add(state[i]);
+        out[i * 4..i * 4 + 4].copy_from_slice(&word.to_le_bytes());
+    }
+    out
+}
+
+/// XOR `data` in place with the ChaCha20 keystream starting at block
+/// `counter_start`.
+pub fn chacha20_xor(key: &[u8; 32], nonce: &[u8; 12], counter_start: u32, data: &mut [u8]) {
+    let mut counter = counter_start;
+    for chunk in data.chunks_mut(64) {
+        let block = chacha20_block(key, nonce, counter);
+        for (b, k) in chunk.iter_mut().zip(block.iter()) {
+            *b ^= k;
+        }
+        counter = counter.wrapping_add(1);
+    }
+}
+
+/// Constant-time byte comparison: the XOR-accumulate loop runs to the
+/// end regardless of where the first mismatch is.
+pub fn ct_eq(a: &[u8], b: &[u8]) -> bool {
+    if a.len() != b.len() {
+        return false;
+    }
+    let mut acc = 0u8;
+    for (x, y) in a.iter().zip(b.iter()) {
+        acc |= x ^ y;
+    }
+    acc == 0
+}
+
+// ---------------------------------------------------------------------------
+// Pre-shared key
+// ---------------------------------------------------------------------------
+
+/// The fleet-wide pre-shared key, normalised to 32 bytes by hashing the
+/// raw key-file material under a fixed label. Cloned freely (it is just
+/// 32 bytes); `Debug` never prints key bytes.
+#[derive(Clone)]
+pub struct Psk {
+    key: [u8; 32],
+}
+
+impl std::fmt::Debug for Psk {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str("Psk(<redacted>)")
+    }
+}
+
+impl Psk {
+    /// Derive the key from raw material (the bytes of a `--psk-file`).
+    /// Leading/trailing ASCII whitespace is trimmed so `echo secret >
+    /// psk` and `printf secret > psk` produce the same key.
+    pub fn from_material(material: &[u8]) -> Result<Self> {
+        let start = material.iter().position(|b| !b.is_ascii_whitespace());
+        let trimmed = match start {
+            Some(s) => {
+                let end = material.iter().rposition(|b| !b.is_ascii_whitespace()).unwrap();
+                &material[s..=end]
+            }
+            None => &[][..],
+        };
+        if trimmed.is_empty() {
+            bail!("PSK material is empty (the key file must contain a non-whitespace secret)");
+        }
+        Ok(Self { key: sha256(&[PSK_LABEL, trimmed]) })
+    }
+
+    /// Load the key from a file.
+    pub fn load<P: AsRef<Path>>(path: P) -> Result<Self> {
+        let path = path.as_ref();
+        let material = std::fs::read(path)
+            .with_context(|| format!("read PSK file {}", path.display()))?;
+        Self::from_material(&material)
+            .with_context(|| format!("derive PSK from {}", path.display()))
+    }
+}
+
+/// A fresh 32-byte per-connection nonce. Prefers `/dev/urandom`; falls
+/// back to SplitMix64 over (time, pid, global counter) — the handshake
+/// only needs uniqueness per connection, not secrecy, for replayed
+/// transcripts to fail.
+fn fresh_nonce() -> [u8; 32] {
+    let mut nonce = [0u8; 32];
+    if let Ok(mut f) = std::fs::File::open("/dev/urandom") {
+        if f.read_exact(&mut nonce).is_ok() {
+            return nonce;
+        }
+    }
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static COUNTER: AtomicU64 = AtomicU64::new(0);
+    let t = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_nanos() as u64)
+        .unwrap_or(0);
+    let seed = t ^ (std::process::id() as u64).rotate_left(32) ^ COUNTER.fetch_add(1, Ordering::Relaxed);
+    let mut sm = crate::util::rng::SplitMix64::new(seed);
+    for chunk in nonce.chunks_mut(8) {
+        chunk.copy_from_slice(&sm.next_u64().to_le_bytes());
+    }
+    nonce
+}
+
+// ---------------------------------------------------------------------------
+// AEAD seal (encrypt-then-MAC with implicit frame counters)
+// ---------------------------------------------------------------------------
+
+/// One direction of a sealed connection. `seal`/`open` advance an
+/// implicit monotonic frame counter: both sides count independently, so
+/// a replayed or reordered frame computes its MAC over the wrong
+/// counter and is rejected.
+#[derive(Clone)]
+pub struct Seal {
+    cipher_key: [u8; 32],
+    mac_key: [u8; 32],
+    dir: u8,
+    counter: u64,
+}
+
+impl std::fmt::Debug for Seal {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Seal(dir={:#04x}, counter={})", self.dir, self.counter)
+    }
+}
+
+impl Seal {
+    fn new(cipher_key: [u8; 32], mac_key: [u8; 32], dir: u8) -> Self {
+        Self { cipher_key, mac_key, dir, counter: 0 }
+    }
+
+    fn nonce(&self) -> [u8; 12] {
+        let mut n = [0u8; 12];
+        n[0] = self.dir;
+        n[4..12].copy_from_slice(&self.counter.to_le_bytes());
+        n
+    }
+
+    /// Seal a plaintext payload: `[marker][ciphertext][tag16]`.
+    pub fn seal(&mut self, plain: &[u8]) -> Vec<u8> {
+        let mut ct = plain.to_vec();
+        chacha20_xor(&self.cipher_key, &self.nonce(), 1, &mut ct);
+        let tag = hmac_sha256(
+            &self.mac_key,
+            &[&[self.dir], &self.counter.to_le_bytes(), &ct],
+        );
+        let mut out = Vec::with_capacity(SEAL_OVERHEAD + ct.len());
+        out.push(SEALED_MARKER);
+        out.extend_from_slice(&ct);
+        out.extend_from_slice(&tag[..TAG_LEN]);
+        self.counter += 1;
+        out
+    }
+
+    /// Verify and decrypt a sealed payload. The counter only advances on
+    /// success, so one garbage frame does not desync an honest peer that
+    /// never gets to send again anyway (the connection is dropped).
+    pub fn open(&mut self, sealed: &[u8]) -> Result<Vec<u8>> {
+        // Smallest sealed frame: marker + 2-byte header ciphertext + tag.
+        if sealed.len() < SEAL_OVERHEAD + 2 {
+            bail!("sealed frame too short ({} bytes)", sealed.len());
+        }
+        if sealed[0] != SEALED_MARKER {
+            bail!(
+                "expected a sealed frame, got leading byte {:#04x} (plaintext peer on an authenticated port?)",
+                sealed[0]
+            );
+        }
+        let ct = &sealed[1..sealed.len() - TAG_LEN];
+        let tag = &sealed[sealed.len() - TAG_LEN..];
+        let want = hmac_sha256(
+            &self.mac_key,
+            &[&[self.dir], &self.counter.to_le_bytes(), ct],
+        );
+        if !ct_eq(tag, &want[..TAG_LEN]) {
+            bail!("frame failed integrity check (tampered, replayed, or out of order)");
+        }
+        let mut plain = ct.to_vec();
+        chacha20_xor(&self.cipher_key, &self.nonce(), 1, &mut plain);
+        self.counter += 1;
+        Ok(plain)
+    }
+}
+
+/// Both directions of a freshly keyed connection, from this endpoint's
+/// point of view: `tx` seals what we send, `rx` opens what we receive.
+pub struct Channel {
+    pub tx: Seal,
+    pub rx: Seal,
+}
+
+/// Directional session keys in canonical (client-to-server /
+/// server-to-client) orientation, before an endpoint picks sides.
+pub struct SessionKeys {
+    pub c2s: Seal,
+    pub s2c: Seal,
+}
+
+/// HKDF-style session-key derivation: extract with the two handshake
+/// nonces as salt, then four single-block expands.
+pub fn derive_keys(psk: &Psk, client_nonce: &[u8; 32], server_nonce: &[u8; 32]) -> SessionKeys {
+    let mut salt = [0u8; 64];
+    salt[..32].copy_from_slice(client_nonce);
+    salt[32..].copy_from_slice(server_nonce);
+    let prk = hmac_sha256(&salt, &[&psk.key]);
+    let expand = |info: &[u8]| hmac_sha256(&prk, &[info, &[1u8]]);
+    SessionKeys {
+        c2s: Seal::new(
+            expand(b"remus c2s cipher v1"),
+            expand(b"remus c2s mac v1"),
+            DIR_C2S,
+        ),
+        s2c: Seal::new(
+            expand(b"remus s2c cipher v1"),
+            expand(b"remus s2c mac v1"),
+            DIR_S2C,
+        ),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Deadline-bounded frame transport
+// ---------------------------------------------------------------------------
+
+/// Write one length-prefixed frame.
+fn write_frame(stream: &mut TcpStream, payload: &[u8]) -> Result<()> {
+    if payload.len() > MAX_FRAME + SEAL_OVERHEAD {
+        bail!("frame too large: {} bytes", payload.len());
+    }
+    stream.write_all(&(payload.len() as u32).to_le_bytes())?;
+    stream.write_all(payload)?;
+    stream.flush()?;
+    Ok(())
+}
+
+/// Read exactly `buf.len()` bytes. `idle` bounds the wait for the
+/// *first* byte (`None` = block indefinitely between frames); once any
+/// byte has arrived, `deadline` is armed and every subsequent wait is
+/// clamped to the time remaining. Returns `Ok(false)` on a clean EOF
+/// before the first byte (only when `allow_eof`).
+fn read_exact_bounded(
+    stream: &mut TcpStream,
+    buf: &mut [u8],
+    idle: Option<Duration>,
+    deadline: &mut Option<Instant>,
+    allow_eof: bool,
+) -> Result<bool> {
+    let mut got = 0usize;
+    while got < buf.len() {
+        let timeout = match *deadline {
+            Some(d) => {
+                let remaining = d.saturating_duration_since(Instant::now());
+                if remaining.is_zero() {
+                    bail!("frame incomplete after {:?} (slow or stalled peer)", FRAME_DEADLINE);
+                }
+                // set_read_timeout rejects a zero Duration; clamp up.
+                Some(remaining.max(Duration::from_millis(1)))
+            }
+            None => idle,
+        };
+        stream.set_read_timeout(timeout).context("set read timeout")?;
+        match stream.read(&mut buf[got..]) {
+            Ok(0) => {
+                if allow_eof && got == 0 && deadline.is_none() {
+                    return Ok(false);
+                }
+                bail!("connection closed mid-frame ({got} of {} bytes)", buf.len());
+            }
+            Ok(n) => {
+                if deadline.is_none() {
+                    *deadline = Some(Instant::now() + FRAME_DEADLINE);
+                }
+                got += n;
+            }
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(e) if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut => {
+                bail!("read timed out ({got} of {} bytes)", buf.len());
+            }
+            Err(e) => return Err(e).context("frame read"),
+        }
+    }
+    Ok(true)
+}
+
+/// Read one length-prefixed frame payload with slowloris protection:
+/// `idle` bounds the wait between frames, [`FRAME_DEADLINE`] bounds the
+/// time from a frame's first byte to its last. `Ok(None)` is a clean
+/// EOF at a frame boundary.
+pub fn read_frame_bounded(
+    stream: &mut TcpStream,
+    idle: Option<Duration>,
+) -> Result<Option<Vec<u8>>> {
+    let mut deadline = None;
+    let mut len_buf = [0u8; 4];
+    if !read_exact_bounded(stream, &mut len_buf, idle, &mut deadline, true)? {
+        return Ok(None);
+    }
+    let len = u32::from_le_bytes(len_buf) as usize;
+    if len < 2 || len > MAX_FRAME + SEAL_OVERHEAD {
+        bail!("implausible frame length {len}");
+    }
+    let mut payload = vec![0u8; len];
+    read_exact_bounded(stream, &mut payload, idle, &mut deadline, false)?;
+    Ok(Some(payload))
+}
+
+// ---------------------------------------------------------------------------
+// Handshake
+// ---------------------------------------------------------------------------
+
+/// Run the connecting side of the PSK handshake. On success the peer
+/// has proven knowledge of the PSK and fresh session keys are derived.
+/// Sets a [`HANDSHAKE_TIMEOUT`] write timeout on the stream; callers
+/// that want a different steady-state write timeout must reset it.
+pub fn client_handshake(stream: &mut TcpStream, psk: &Psk) -> Result<Channel> {
+    stream.set_write_timeout(Some(HANDSHAKE_TIMEOUT)).context("set write timeout")?;
+    let cn = fresh_nonce();
+    let mut hello = Vec::with_capacity(2 + NONCE_LEN);
+    hello.push(HS_MAGIC);
+    hello.push(HS_CLIENT_HELLO);
+    hello.extend_from_slice(&cn);
+    write_frame(stream, &hello).context("send ClientHello")?;
+
+    let reply = read_frame_bounded(stream, Some(HANDSHAKE_TIMEOUT))
+        .context("read ServerHello")?
+        .context("peer closed during handshake")?;
+    if reply.len() != 2 + NONCE_LEN + MAC_LEN
+        || reply[0] != HS_MAGIC
+        || reply[1] != HS_SERVER_HELLO
+    {
+        bail!("unexpected handshake reply (is the peer running with the same --psk-file?)");
+    }
+    let sn: [u8; 32] = reply[2..2 + NONCE_LEN].try_into().unwrap();
+    let srv_mac = &reply[2 + NONCE_LEN..];
+    let k_auth = hmac_sha256(&psk.key, &[HS_AUTH_LABEL]);
+    let want = hmac_sha256(&k_auth, &[HS_SRV_LABEL, &cn, &sn]);
+    if !ct_eq(srv_mac, &want) {
+        bail!("server failed PSK authentication (wrong key or replayed transcript)");
+    }
+
+    let cli_mac = hmac_sha256(&k_auth, &[HS_CLI_LABEL, &cn, &sn]);
+    let mut confirm = Vec::with_capacity(2 + MAC_LEN);
+    confirm.push(HS_MAGIC);
+    confirm.push(HS_CLIENT_CONFIRM);
+    confirm.extend_from_slice(&cli_mac);
+    write_frame(stream, &confirm).context("send ClientConfirm")?;
+
+    let keys = derive_keys(psk, &cn, &sn);
+    Ok(Channel { tx: keys.c2s, rx: keys.s2c })
+}
+
+/// Run the accepting side of the PSK handshake. A plaintext or
+/// wrong-key peer fails here within [`HANDSHAKE_TIMEOUT`] without ever
+/// reaching the wire codec.
+pub fn server_handshake(stream: &mut TcpStream, psk: &Psk) -> Result<Channel> {
+    stream.set_write_timeout(Some(HANDSHAKE_TIMEOUT)).context("set write timeout")?;
+    let hello = read_frame_bounded(stream, Some(HANDSHAKE_TIMEOUT))
+        .context("read ClientHello")?
+        .context("peer closed before handshake")?;
+    if hello.len() != 2 + NONCE_LEN || hello[0] != HS_MAGIC || hello[1] != HS_CLIENT_HELLO {
+        bail!(
+            "peer did not start a PSK handshake (leading byte {:#04x}; plaintext peer on an authenticated port?)",
+            hello[0]
+        );
+    }
+    let cn: [u8; 32] = hello[2..].try_into().unwrap();
+    let sn = fresh_nonce();
+    let k_auth = hmac_sha256(&psk.key, &[HS_AUTH_LABEL]);
+    let srv_mac = hmac_sha256(&k_auth, &[HS_SRV_LABEL, &cn, &sn]);
+    let mut reply = Vec::with_capacity(2 + NONCE_LEN + MAC_LEN);
+    reply.push(HS_MAGIC);
+    reply.push(HS_SERVER_HELLO);
+    reply.extend_from_slice(&sn);
+    reply.extend_from_slice(&srv_mac);
+    write_frame(stream, &reply).context("send ServerHello")?;
+
+    let confirm = read_frame_bounded(stream, Some(HANDSHAKE_TIMEOUT))
+        .context("read ClientConfirm")?
+        .context("peer closed mid-handshake")?;
+    if confirm.len() != 2 + MAC_LEN || confirm[0] != HS_MAGIC || confirm[1] != HS_CLIENT_CONFIRM {
+        bail!("malformed ClientConfirm");
+    }
+    let want = hmac_sha256(&k_auth, &[HS_CLI_LABEL, &cn, &sn]);
+    if !ct_eq(&confirm[2..], &want) {
+        bail!("client failed PSK authentication (wrong key or replayed transcript)");
+    }
+
+    let keys = derive_keys(psk, &cn, &sn);
+    Ok(Channel { tx: keys.s2c, rx: keys.c2s })
+}
+
+// ---------------------------------------------------------------------------
+// Framed message streams (sealed or plaintext)
+// ---------------------------------------------------------------------------
+
+/// Reads wire messages off a stream, opening the seal when one is
+/// configured, with deadline-bounded reads either way.
+pub struct FrameReader {
+    stream: TcpStream,
+    seal: Option<Seal>,
+    idle: Option<Duration>,
+}
+
+impl FrameReader {
+    /// `idle` bounds the wait *between* frames (`None` = block); the
+    /// per-frame [`FRAME_DEADLINE`] always applies.
+    pub fn new(stream: TcpStream, seal: Option<Seal>, idle: Option<Duration>) -> Self {
+        Self { stream, seal, idle }
+    }
+
+    pub fn is_sealed(&self) -> bool {
+        self.seal.is_some()
+    }
+
+    pub fn stream(&self) -> &TcpStream {
+        &self.stream
+    }
+
+    /// Read the next message. `Ok(None)` is a clean EOF at a frame
+    /// boundary; every tamper/replay/timeout path is an `Err`.
+    pub fn recv(&mut self) -> Result<Option<Msg>> {
+        let payload = match read_frame_bounded(&mut self.stream, self.idle)? {
+            Some(p) => p,
+            None => return Ok(None),
+        };
+        let plain = match &mut self.seal {
+            Some(seal) => seal.open(&payload)?,
+            None => {
+                match payload[0] {
+                    SEALED_MARKER => bail!(
+                        "received a sealed frame on a plaintext endpoint (peer uses --psk-file, we do not)"
+                    ),
+                    HS_MAGIC => bail!(
+                        "received a PSK handshake on a plaintext endpoint (peer uses --psk-file, we do not)"
+                    ),
+                    _ => payload,
+                }
+            }
+        };
+        Ok(Some(Msg::from_bytes(&plain)?))
+    }
+}
+
+/// Writes wire messages onto a stream, sealing when configured.
+pub struct FrameWriter {
+    stream: TcpStream,
+    seal: Option<Seal>,
+}
+
+impl FrameWriter {
+    pub fn new(stream: TcpStream, seal: Option<Seal>) -> Self {
+        Self { stream, seal }
+    }
+
+    pub fn is_sealed(&self) -> bool {
+        self.seal.is_some()
+    }
+
+    pub fn stream(&self) -> &TcpStream {
+        &self.stream
+    }
+
+    pub fn send(&mut self, msg: &Msg) -> Result<()> {
+        let payload = msg.to_bytes();
+        match &mut self.seal {
+            Some(seal) => {
+                let sealed = seal.seal(&payload);
+                write_frame(&mut self.stream, &sealed)
+            }
+            None => write_frame(&mut self.stream, &payload),
+        }
+    }
+}
+
+fn split(
+    mut stream: TcpStream,
+    psk: Option<&Psk>,
+    idle: Option<Duration>,
+    is_client: bool,
+) -> Result<(FrameReader, FrameWriter)> {
+    let channel = match psk {
+        Some(p) => Some(if is_client {
+            client_handshake(&mut stream, p)?
+        } else {
+            server_handshake(&mut stream, p)?
+        }),
+        None => None,
+    };
+    let write_half = stream.try_clone().context("clone stream for writer")?;
+    let (tx, rx) = match channel {
+        Some(c) => (Some(c.tx), Some(c.rx)),
+        None => (None, None),
+    };
+    Ok((FrameReader::new(stream, rx, idle), FrameWriter::new(write_half, tx)))
+}
+
+/// Handshake (when a PSK is configured) as the connecting side, then
+/// split the stream into a reader and a writer sharing the session.
+pub fn client_split(
+    stream: TcpStream,
+    psk: Option<&Psk>,
+    idle: Option<Duration>,
+) -> Result<(FrameReader, FrameWriter)> {
+    split(stream, psk, idle, true)
+}
+
+/// Handshake (when a PSK is configured) as the accepting side, then
+/// split the stream into a reader and a writer sharing the session.
+pub fn server_split(
+    stream: TcpStream,
+    psk: Option<&Psk>,
+    idle: Option<Duration>,
+) -> Result<(FrameReader, FrameWriter)> {
+    split(stream, psk, idle, false)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::TcpListener;
+
+    fn hex(bytes: &[u8]) -> String {
+        bytes.iter().map(|b| format!("{b:02x}")).collect()
+    }
+
+    #[test]
+    fn sha256_known_vectors() {
+        assert_eq!(
+            hex(&sha256(&[b"abc"])),
+            "ba7816bf8f01cfea414140de5dae2223b00361a396177a9cb410ff61f20015ad"
+        );
+        assert_eq!(
+            hex(&sha256(&[b""])),
+            "e3b0c44298fc1c149afbf4c8996fb92427ae41e4649b934ca495991b7852b855"
+        );
+        assert_eq!(
+            hex(&sha256(&[b"abcdbcdecdefdefgefghfghighijhijkijkljklmklmnlmnomnopnopq"])),
+            "248d6a61d20638b8e5c026930c3e6039a33ce45964ff2167f6ecedd419db06c1"
+        );
+        // Streaming across arbitrary chunk boundaries matches one-shot.
+        let data: Vec<u8> = (0..1000u32).map(|i| (i % 251) as u8).collect();
+        let oneshot = sha256(&[&data]);
+        let mut h = Sha256::new();
+        for chunk in data.chunks(7) {
+            h.update(chunk);
+        }
+        assert_eq!(h.finalize(), oneshot);
+    }
+
+    #[test]
+    fn hmac_sha256_rfc4231_case2() {
+        let mac = hmac_sha256(b"Jefe", &[b"what do ya want for nothing?"]);
+        assert_eq!(
+            hex(&mac),
+            "5bdcc146bf60754e6a042426089575c75a003f089d2739839dec58b964ec3843"
+        );
+        // Split parts hash identically to the concatenation.
+        let split = hmac_sha256(b"Jefe", &[b"what do ya want", b" for nothing?"]);
+        assert_eq!(mac, split);
+    }
+
+    #[test]
+    fn chacha20_rfc8439_keystream() {
+        let key: [u8; 32] = std::array::from_fn(|i| i as u8);
+        let nonce: [u8; 12] = [0, 0, 0, 9, 0, 0, 0, 0x4a, 0, 0, 0, 0];
+        let mut data = [0u8; 64];
+        chacha20_xor(&key, &nonce, 1, &mut data);
+        assert_eq!(
+            hex(&data),
+            "10f1e7e4d13b5915500fdd1fa32071c4c7d1f4c733c068030422aa9ac3d46c4e\
+             d2826446079faa0914c2d705d98b02a2b5129cd1de164eb9cbd083e8a2503c4e"
+        );
+    }
+
+    #[test]
+    fn ct_eq_basics() {
+        assert!(ct_eq(b"same", b"same"));
+        assert!(!ct_eq(b"same", b"sama"));
+        assert!(!ct_eq(b"short", b"longer"));
+        assert!(ct_eq(b"", b""));
+    }
+
+    #[test]
+    fn psk_is_stable_and_trimmed() {
+        let a = Psk::from_material(b"secret\n").unwrap();
+        let b = Psk::from_material(b"  secret  ").unwrap();
+        let c = Psk::from_material(b"other").unwrap();
+        assert_eq!(a.key, b.key);
+        assert_ne!(a.key, c.key);
+        assert!(Psk::from_material(b"  \n\t ").is_err());
+        assert_eq!(format!("{a:?}"), "Psk(<redacted>)");
+    }
+
+    #[test]
+    fn seal_roundtrip_and_counter_advance() {
+        let psk = Psk::from_material(b"k").unwrap();
+        let keys_a = derive_keys(&psk, &[1u8; 32], &[2u8; 32]);
+        let keys_b = derive_keys(&psk, &[1u8; 32], &[2u8; 32]);
+        let mut tx = keys_a.c2s;
+        let mut rx = keys_b.c2s;
+        for i in 0..10u64 {
+            let msg = format!("frame {i}");
+            let sealed = tx.seal(msg.as_bytes());
+            assert_eq!(sealed[0], SEALED_MARKER);
+            assert_eq!(rx.open(&sealed).unwrap(), msg.as_bytes());
+        }
+        // Distinct nonces mean two frames with identical plaintext get
+        // different ciphertexts.
+        let mut tx2 = derive_keys(&psk, &[1u8; 32], &[2u8; 32]).c2s;
+        let s1 = tx2.seal(b"same payload 00");
+        let s2 = tx2.seal(b"same payload 00");
+        assert_ne!(s1, s2);
+    }
+
+    #[test]
+    fn seal_rejects_tamper_replay_truncation_and_cross_direction() {
+        let psk = Psk::from_material(b"k").unwrap();
+        let keys = derive_keys(&psk, &[3u8; 32], &[4u8; 32]);
+        let mut tx = keys.c2s;
+        let mut rx = derive_keys(&psk, &[3u8; 32], &[4u8; 32]).c2s;
+        let sealed = tx.seal(b"payload-0");
+        // Single-bit flips anywhere (marker, ct, tag) must be rejected.
+        for byte in 0..sealed.len() {
+            let mut bad = sealed.clone();
+            bad[byte] ^= 1;
+            assert!(rx.open(&bad).is_err(), "flip at byte {byte} must fail");
+        }
+        // The pristine frame still opens (counter untouched by failures).
+        assert_eq!(rx.open(&sealed).unwrap(), b"payload-0");
+        // Replay: counter has advanced, same bytes must now fail.
+        assert!(rx.open(&sealed).is_err(), "replayed frame must fail");
+        // Truncations.
+        for cut in 0..sealed.len() {
+            assert!(rx.open(&sealed[..cut]).is_err());
+        }
+        // Cross-direction splice: a c2s frame must not open as s2c.
+        let mut tx3 = derive_keys(&psk, &[3u8; 32], &[4u8; 32]).c2s;
+        let mut rx_s2c = derive_keys(&psk, &[3u8; 32], &[4u8; 32]).s2c;
+        assert!(rx_s2c.open(&tx3.seal(b"payload-0")).is_err());
+    }
+
+    #[test]
+    fn loopback_handshake_seals_both_directions() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let psk = Psk::from_material(b"fleet-secret").unwrap();
+        let psk_srv = psk.clone();
+        let server = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let (mut r, mut w) = server_split(stream, Some(&psk_srv), Some(HANDSHAKE_TIMEOUT)).unwrap();
+            let got = r.recv().unwrap().expect("one message");
+            assert_eq!(got, Msg::HealthReq);
+            w.send(&Msg::Shutdown).unwrap();
+            assert!(r.recv().unwrap().is_none(), "clean EOF");
+        });
+        let stream = TcpStream::connect(addr).unwrap();
+        let (mut r, mut w) = client_split(stream, Some(&psk), Some(HANDSHAKE_TIMEOUT)).unwrap();
+        assert!(r.is_sealed() && w.is_sealed());
+        w.send(&Msg::HealthReq).unwrap();
+        assert_eq!(r.recv().unwrap().expect("one message"), Msg::Shutdown);
+        drop(w);
+        drop(r);
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn wrong_psk_fails_both_ends() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            let (mut stream, _) = listener.accept().unwrap();
+            let psk = Psk::from_material(b"right").unwrap();
+            assert!(server_handshake(&mut stream, &psk).is_err());
+        });
+        let mut stream = TcpStream::connect(addr).unwrap();
+        let psk = Psk::from_material(b"wrong").unwrap();
+        assert!(client_handshake(&mut stream, &psk).is_err());
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn plaintext_peer_is_rejected_by_sealed_endpoint_and_vice_versa() {
+        // Sealed server, plaintext client: the server handshake must
+        // reject the plaintext frame (which starts with a version byte).
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            let (mut stream, _) = listener.accept().unwrap();
+            let psk = Psk::from_material(b"k").unwrap();
+            assert!(server_handshake(&mut stream, &psk).is_err());
+        });
+        let stream = TcpStream::connect(addr).unwrap();
+        let (_r, mut w) = client_split(stream, None, None).unwrap();
+        let _ = w.send(&Msg::HealthReq);
+        server.join().unwrap();
+
+        // Plaintext reader, sealed-looking bytes: helpful rejection.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let mut r = FrameReader::new(stream, None, Some(HANDSHAKE_TIMEOUT));
+            let err = r.recv().unwrap_err().to_string();
+            assert!(err.contains("plaintext endpoint"), "got: {err}");
+        });
+        let mut stream = TcpStream::connect(addr).unwrap();
+        write_frame(&mut stream, &[SEALED_MARKER, 0, 0, 0]).unwrap();
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn trickled_frame_hits_the_deadline() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let reader = std::thread::spawn(move || {
+            let (mut stream, _) = listener.accept().unwrap();
+            let start = Instant::now();
+            let err = read_frame_bounded(&mut stream, Some(Duration::from_secs(10)));
+            (start.elapsed(), err)
+        });
+        let mut stream = TcpStream::connect(addr).unwrap();
+        // Announce a 64-byte frame, then trickle one byte at a time —
+        // slower than the deadline allows in total.
+        stream.write_all(&64u32.to_le_bytes()).unwrap();
+        let trickle_start = Instant::now();
+        while trickle_start.elapsed() < FRAME_DEADLINE + Duration::from_secs(2) {
+            if stream.write_all(&[0u8]).is_err() {
+                break; // reader gave up and closed — expected
+            }
+            std::thread::sleep(Duration::from_millis(100));
+        }
+        let (elapsed, result) = reader.join().unwrap();
+        assert!(result.is_err(), "trickled frame must error");
+        assert!(
+            elapsed < FRAME_DEADLINE + Duration::from_secs(2),
+            "reader must give up near the deadline, took {elapsed:?}"
+        );
+    }
+}

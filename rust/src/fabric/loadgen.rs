@@ -32,6 +32,8 @@ use anyhow::{Context, Result};
 
 use crate::coordinator::metrics::{log2_bin_us, log2_percentile_us};
 use crate::coordinator::{RequestResult, Submitter};
+use crate::fabric::auth::{derive_keys, Psk};
+use crate::fabric::wire::Msg;
 use crate::mmpu::FunctionKind;
 use crate::util::rng::Pcg64;
 
@@ -302,10 +304,74 @@ pub fn sweep(sub: &dyn Submitter, base: &LoadgenConfig, qps_points: &[f64]) -> S
     SweepReport { points, knee_qps }
 }
 
+/// Sealed-vs-plaintext frame-processing cost (§Security): CPU time per
+/// frame through the wire codec alone vs the codec plus the
+/// authenticated seal. Purely informational — it bounds the per-frame
+/// crypto tax independent of network and batching effects, which
+/// dominate end-to-end latency.
+#[derive(Clone, Debug)]
+pub struct SealOverhead {
+    /// Frames measured per arm.
+    pub frames: u64,
+    /// Mean encode+decode nanoseconds per plaintext frame.
+    pub plain_ns_per_frame: f64,
+    /// Mean encode+seal+open+decode nanoseconds per sealed frame.
+    pub sealed_ns_per_frame: f64,
+    /// `(sealed - plain) / plain`, percent.
+    pub overhead_pct: f64,
+}
+
+/// Measure [`SealOverhead`] over a representative request/reply mix
+/// (`Submit` and `Result` frames — the data-path hot loop). Both arms
+/// run the same codec work; the sealed arm adds one `seal` + one
+/// `open` per frame with session keys derived from a throwaway PSK.
+pub fn measure_seal_overhead(frames: u64) -> SealOverhead {
+    let msgs = [
+        Msg::Submit { id: 7, kind: FunctionKind::Mul(8), a: 113, b: 223 },
+        Msg::Result { id: 7, value: 25199, latency_us: 180, error: None },
+    ];
+    let psk = Psk::from_material(b"loadgen seal-overhead probe").expect("static material");
+    let keys = derive_keys(&psk, &[0x11; 32], &[0x22; 32]);
+    let (mut tx, mut rx) = (keys.c2s.clone(), keys.c2s);
+    let mut sink = 0u64;
+    let t0 = Instant::now();
+    for i in 0..frames {
+        let bytes = msgs[(i % 2) as usize].to_bytes();
+        let msg = Msg::from_bytes(&bytes).expect("own encoding");
+        sink = sink.wrapping_add(bytes.len() as u64 + msg.to_bytes()[0] as u64);
+    }
+    let plain = t0.elapsed();
+    let t1 = Instant::now();
+    for i in 0..frames {
+        let sealed = tx.seal(&msgs[(i % 2) as usize].to_bytes());
+        let bytes = rx.open(&sealed).expect("own seal");
+        let msg = Msg::from_bytes(&bytes).expect("own encoding");
+        sink = sink.wrapping_add(sealed.len() as u64 + msg.to_bytes()[0] as u64);
+    }
+    let sealed = t1.elapsed();
+    std::hint::black_box(sink);
+    let frames_f = frames.max(1) as f64;
+    let plain_ns = plain.as_nanos() as f64 / frames_f;
+    let sealed_ns = sealed.as_nanos() as f64 / frames_f;
+    SealOverhead {
+        frames,
+        plain_ns_per_frame: plain_ns,
+        sealed_ns_per_frame: sealed_ns,
+        overhead_pct: if plain_ns > 0.0 { (sealed_ns - plain_ns) / plain_ns * 100.0 } else { 0.0 },
+    }
+}
+
 /// Write a sweep as machine-readable JSON (the `BENCH_loadgen.json`
 /// artifact CI archives; hand-rolled like `bench_harness` — serde is
-/// not in the offline vendor set).
-pub fn write_json(path: &str, cfg: &LoadgenConfig, sweep: &SweepReport) -> Result<()> {
+/// not in the offline vendor set). `seal` adds the informational
+/// sealed-vs-plaintext frame cost row (`"seal_overhead"`; `null` when
+/// not measured).
+pub fn write_json(
+    path: &str,
+    cfg: &LoadgenConfig,
+    sweep: &SweepReport,
+    seal: Option<&SealOverhead>,
+) -> Result<()> {
     let mut out = String::new();
     out.push_str("{\n");
     out.push_str("  \"bench\": \"loadgen\",\n");
@@ -315,6 +381,14 @@ pub fn write_json(path: &str, cfg: &LoadgenConfig, sweep: &SweepReport) -> Resul
     match sweep.knee_qps {
         Some(q) => out.push_str(&format!("  \"knee_qps\": {q:.1},\n")),
         None => out.push_str("  \"knee_qps\": null,\n"),
+    }
+    match seal {
+        Some(s) => out.push_str(&format!(
+            "  \"seal_overhead\": {{\"frames\": {}, \"plain_ns_per_frame\": {:.1}, \
+             \"sealed_ns_per_frame\": {:.1}, \"overhead_pct\": {:.1}}},\n",
+            s.frames, s.plain_ns_per_frame, s.sealed_ns_per_frame, s.overhead_pct
+        )),
+        None => out.push_str("  \"seal_overhead\": null,\n"),
     }
     out.push_str("  \"points\": [\n");
     for (i, p) in sweep.points.iter().enumerate() {
@@ -502,12 +576,35 @@ mod tests {
         let sweep = SweepReport { points, knee_qps };
         let path = std::env::temp_dir().join("BENCH_loadgen_selftest.json");
         let path = path.to_str().unwrap().to_string();
-        write_json(&path, &LoadgenConfig::default(), &sweep).unwrap();
+        write_json(&path, &LoadgenConfig::default(), &sweep, None).unwrap();
         let text = std::fs::read_to_string(&path).unwrap();
         assert!(text.contains("\"bench\": \"loadgen\""));
         assert!(text.contains("\"knee_qps\": 2000.0"));
         assert!(text.contains("\"p99_us\""));
         assert!(text.contains("\"sustained\": false"));
+        assert!(text.contains("\"seal_overhead\": null"));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn seal_overhead_measures_and_serializes() {
+        let s = measure_seal_overhead(512);
+        assert_eq!(s.frames, 512);
+        assert!(s.plain_ns_per_frame > 0.0);
+        assert!(
+            s.sealed_ns_per_frame >= s.plain_ns_per_frame * 0.5,
+            "sealing cannot plausibly be 2x faster than not sealing: \
+             plain {:.1}ns sealed {:.1}ns",
+            s.plain_ns_per_frame,
+            s.sealed_ns_per_frame
+        );
+        let sweep = SweepReport { points: Vec::new(), knee_qps: None };
+        let path = std::env::temp_dir().join("BENCH_loadgen_sealtest.json");
+        let path = path.to_str().unwrap().to_string();
+        write_json(&path, &LoadgenConfig::default(), &sweep, Some(&s)).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("\"seal_overhead\": {\"frames\": 512"));
+        assert!(text.contains("\"overhead_pct\""));
         let _ = std::fs::remove_file(&path);
     }
 }

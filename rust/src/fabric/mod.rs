@@ -32,7 +32,16 @@
 //!   loadgen`): seeded Poisson arrivals at a fixed offered rate, a
 //!   bounded in-flight window, golden-value verification, per-kind
 //!   log-binned latency histograms, and a QPS sweep that locates the
-//!   saturation knee (`BENCH_loadgen.json`).
+//!   saturation knee (`BENCH_loadgen.json`);
+//! * [`auth`] — mutual authentication and per-frame integrity
+//!   (§Security, wire v4): a pre-shared-key handshake with per-
+//!   connection ephemeral nonces, HKDF-style session-key derivation,
+//!   and an authenticated stream seal (ChaCha20 + truncated
+//!   HMAC-SHA256, implicit monotonic frame counters) wrapped around
+//!   the plaintext codec. All hand-rolled from FIPS 180-4 / RFC 2104 /
+//!   RFC 8439 primitives — the offline vendor set has no TLS — and
+//!   enabled fleet-wide by `--psk-file`; without it the wire stays
+//!   plaintext v3-compatible.
 //!
 //! Both the in-process coordinator and the router implement
 //! [`crate::coordinator::Submitter`], so every load path (the serve
@@ -43,10 +52,15 @@
 //! frame rejection); `cargo bench --bench fabric` measures the sharded
 //! loopback throughput (`BENCH_fabric.json`).
 
+pub mod auth;
 pub mod loadgen;
 pub mod router;
 pub mod server;
 pub mod wire;
 
-pub use router::{fetch_metrics, probe_health, shutdown_endpoint, Router, RouterConfig};
+pub use auth::Psk;
+pub use router::{
+    fetch_metrics, fetch_metrics_auth, probe_health, probe_health_auth, shutdown_endpoint,
+    shutdown_endpoint_auth, Router, RouterConfig,
+};
 pub use server::FabricServer;

@@ -55,6 +55,16 @@
 //! connections and merged ([`MetricsSnapshot::merge`]) into one fleet
 //! view stamped with `shards_total`/`shards_down`, so a degraded fleet
 //! is distinguishable from a healthy smaller one.
+//!
+//! **Authentication** (§Security, wire v4): when [`RouterConfig::psk`]
+//! is set, every connection the router makes or accepts — data, control
+//! and registration — runs the PSK handshake from [`super::auth`] and
+//! is sealed end-to-end. Unauthenticated registrants are rejected
+//! before their `Register` frame can touch the ring or the spare pool,
+//! tampered or replayed sealed frames fail the MAC and drop the
+//! connection (failover then replays in-flight requests exactly like a
+//! disconnect), and every rejection is counted in
+//! `MetricsSnapshot::auth_rejects` instead of wedging an accept loop.
 
 use std::collections::HashMap;
 use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
@@ -69,7 +79,8 @@ use anyhow::{anyhow, bail, ensure, Context, Result};
 use crate::coordinator::{MetricsSnapshot, NO_CAPACITY_ERROR, RequestResult, Submitter};
 use crate::mmpu::FunctionKind;
 
-use super::wire::{read_msg, write_msg, Msg};
+use super::auth::{client_split, server_split, FrameReader, FrameWriter, Psk};
+use super::wire::Msg;
 
 /// Virtual nodes per shard on the hash ring.
 const RING_VNODES: usize = 16;
@@ -77,9 +88,9 @@ const RING_VNODES: usize = 16;
 /// Highest slot index a `Register{prev}` hint may claim. The hint
 /// drives slot allocation (placeholders are reserved up to it), so an
 /// unbounded value from a corrupt or malicious registrant — the wire
-/// has no auth yet — could allocate gigabytes under the shards write
-/// lock; a stale hint beyond any plausible fleet is ignored and the
-/// shard simply gets a fresh slot.
+/// runs plaintext unless [`RouterConfig::psk`] is set — could allocate
+/// gigabytes under the shards write lock; a stale hint beyond any
+/// plausible fleet is ignored and the shard simply gets a fresh slot.
 const MAX_PREV_SLOT: usize = 1024;
 
 /// Bound on control-plane connect/read/write, so a hung shard (host
@@ -88,7 +99,7 @@ const MAX_PREV_SLOT: usize = 1024;
 /// (reader EOF / write error) and — since wire v3 — on missed
 /// data-path heartbeats, which catch the half-open peers no closed
 /// connection ever reports (see [`RouterConfig::heartbeat_period`]).
-const CONTROL_TIMEOUT: Duration = Duration::from_secs(5);
+pub(crate) const CONTROL_TIMEOUT: Duration = Duration::from_secs(5);
 
 /// Short-lived control connection with timeouts applied.
 pub(crate) fn control_connect(addr: &str) -> Result<TcpStream> {
@@ -140,6 +151,12 @@ pub struct RouterConfig {
     /// `heartbeat_timeout` plus two ticks, inside two heartbeat
     /// periods, because the first ping is due immediately on connect.
     pub heartbeat_timeout: Duration,
+    /// Fleet PSK (`--psk-file`). `Some` authenticates and seals every
+    /// connection this router makes or accepts: shard data connections,
+    /// control probes, and the registration listener (an unauthenticated
+    /// `Register` never touches the ring or spare pool). `None` keeps
+    /// the plaintext v3 behaviour for mixed-version transitions.
+    pub psk: Option<Psk>,
 }
 
 impl Default for RouterConfig {
@@ -150,6 +167,7 @@ impl Default for RouterConfig {
             listen: None,
             heartbeat_period: Duration::from_millis(1000),
             heartbeat_timeout: Duration::from_millis(1000),
+            psk: None,
         }
     }
 }
@@ -205,8 +223,9 @@ struct ShardState {
     /// table — only then may the supervisor open a new connection (no
     /// two readers ever share one pending table).
     reader_gone: AtomicBool,
-    /// Write half of the data connection (`None` once down).
-    writer: Mutex<Option<TcpStream>>,
+    /// Write half of the data connection (`None` once down), sealing
+    /// frames when the fleet runs authenticated.
+    writer: Mutex<Option<FrameWriter>>,
     /// In-flight requests keyed by wire id.
     pending: Mutex<HashMap<u64, PendingReq>>,
     /// Data-path heartbeat bookkeeping (meaningful only while `up`).
@@ -276,6 +295,11 @@ struct RouterInner {
     hb_pings: AtomicU64,
     hb_pongs: AtomicU64,
     hb_timeouts: AtomicU64,
+    /// Peers this router rejected: failed registration handshakes,
+    /// tampered/replayed sealed frames on shard data connections.
+    /// Stamped onto the merged snapshot alongside the shards' own
+    /// counters.
+    auth_rejects: AtomicU64,
     closing: AtomicBool,
 }
 
@@ -317,6 +341,7 @@ impl Router {
             hb_pings: AtomicU64::new(0),
             hb_pongs: AtomicU64::new(0),
             hb_timeouts: AtomicU64::new(0),
+            auth_rejects: AtomicU64::new(0),
             closing: AtomicBool::new(false),
         });
         inner.rebuild_ring();
@@ -455,8 +480,9 @@ impl Router {
             .iter()
             .map(|shard| {
                 let addr = shard.addr();
+                let psk = self.inner.cfg.psk.clone();
                 std::thread::spawn(move || {
-                    let m = fetch_metrics(&addr);
+                    let m = fetch_metrics_auth(&addr, psk.as_ref());
                     (addr, m)
                 })
             })
@@ -479,6 +505,10 @@ impl Router {
         merged.hb_pings += self.inner.hb_pings.load(Ordering::Relaxed);
         merged.hb_pongs += self.inner.hb_pongs.load(Ordering::Relaxed);
         merged.hb_timeouts += self.inner.hb_timeouts.load(Ordering::Relaxed);
+        // Auth rejects *add*: the shards count the peers they turned
+        // away, the router adds its own (registration handshakes,
+        // tampered data frames).
+        merged.auth_rejects += self.inner.auth_rejects.load(Ordering::Relaxed);
         merged
     }
 
@@ -620,7 +650,7 @@ impl RouterInner {
             // reply; reclaim on write failure.
             shard.pending.lock().unwrap().insert(id, req);
             let wrote = match shard.writer.lock().unwrap().as_mut() {
-                Some(stream) => write_msg(stream, &msg).is_ok(),
+                Some(writer) => writer.send(&msg).is_ok(),
                 None => false,
             };
             if wrote {
@@ -656,7 +686,7 @@ impl RouterInner {
         let Some(shard) = self.shard(i) else { return };
         let was_up = shard.up.swap(false, Ordering::SeqCst);
         if let Some(w) = shard.writer.lock().unwrap().take() {
-            let _ = w.shutdown(std::net::Shutdown::Both);
+            let _ = w.stream().shutdown(std::net::Shutdown::Both);
         }
         if was_up {
             self.bump_epoch();
@@ -819,18 +849,24 @@ fn connect_shard(inner: &Arc<RouterInner>, i: usize) -> Result<()> {
     let stream =
         TcpStream::connect(addr.as_str()).with_context(|| format!("connecting to shard {addr}"))?;
     let _ = stream.set_nodelay(true);
+    // Authenticate first (when the fleet runs with a PSK): a shard that
+    // cannot complete the handshake never gets a writer, a reader, or a
+    // ring slot back.
+    let (reader, writer) = client_split(stream, inner.cfg.psk.as_ref(), None)
+        .with_context(|| format!("authenticating to shard {addr}"))?;
     // Bound data-path writes: a peer wedged with full TCP buffers must
     // surface as a write error (-> failover) rather than blocking the
     // submitting thread or the heartbeat sweep. Capped at the heartbeat
     // timeout (floored for very aggressive test configs) so a blocked
     // write never stalls the supervisor longer than the detection
-    // deadline it is enforcing. Reads stay unbounded — the reader is
-    // *designed* to block, and half-open silence is the heartbeat
-    // deadline's job, not a read timeout's.
+    // deadline it is enforcing. Set *after* the handshake (which uses
+    // its own short bound). Idle reads stay unbounded — the reader is
+    // *designed* to block between frames, and half-open silence is the
+    // heartbeat deadline's job; only a frame started and never finished
+    // trips the reader's deadline.
     let write_timeout = inner.cfg.heartbeat_timeout.max(Duration::from_millis(100));
-    let _ = stream.set_write_timeout(Some(write_timeout));
-    let write_half = stream.try_clone()?;
-    *shard.writer.lock().unwrap() = Some(write_half);
+    let _ = writer.stream().set_write_timeout(Some(write_timeout));
+    *shard.writer.lock().unwrap() = Some(writer);
     // Fresh heartbeat slate, with the first ping due immediately: a
     // half-open peer (or one that wedged while down) is condemned
     // within one heartbeat timeout of connecting, before it can absorb
@@ -843,7 +879,7 @@ fn connect_shard(inner: &Arc<RouterInner>, i: usize) -> Result<()> {
     shard.up.store(true, Ordering::SeqCst);
     inner.bump_epoch();
     let inner2 = inner.clone();
-    let handle = std::thread::spawn(move || reader_loop(inner2, i, stream));
+    let handle = std::thread::spawn(move || reader_loop(inner2, i, reader));
     let mut readers = inner.readers.lock().unwrap();
     // Reap finished readers so a long-lived router reviving shards many
     // times does not accumulate a handle per connection.
@@ -855,12 +891,26 @@ fn connect_shard(inner: &Arc<RouterInner>, i: usize) -> Result<()> {
 /// Per-shard reader: matches `Result` frames to pending requests, turns
 /// capacity errors into failovers, and on disconnect re-routes whatever
 /// was still in flight, then hands the slot back for revival.
-fn reader_loop(inner: Arc<RouterInner>, shard_idx: usize, mut read_half: TcpStream) {
+fn reader_loop(inner: Arc<RouterInner>, shard_idx: usize, mut reader: FrameReader) {
     let Some(shard) = inner.shard(shard_idx) else { return };
     loop {
-        let msg = match read_msg(&mut read_half) {
+        let msg = match reader.recv() {
             Ok(Some(m)) => m,
-            Ok(None) | Err(_) => break,
+            Ok(None) => break,
+            Err(e) => {
+                // On a sealed connection a recv error past the clean-EOF
+                // path is a tampered, replayed or reordered frame: count
+                // it, then fail over exactly like a disconnect — the
+                // drain below replays every in-flight request on the
+                // next live shard, so the attack costs zero replies.
+                if reader.is_sealed() && !inner.closing.load(Ordering::SeqCst) {
+                    inner.auth_rejects.fetch_add(1, Ordering::SeqCst);
+                    eprintln!(
+                        "router: shard {shard_idx} data connection failed integrity: {e:#}"
+                    );
+                }
+                break;
+            }
         };
         // Any inbound frame proves the data path is alive in both
         // directions: clear the outstanding ping (a Result racing ahead
@@ -948,7 +998,7 @@ fn supervisor_loop(inner: Arc<RouterInner>) {
                 continue;
             }
             let addr = shard.addr();
-            match probe_health(&addr) {
+            match probe_health_auth(&addr, inner.cfg.psk.as_ref()) {
                 Ok((true, ..)) => match connect_shard(&inner, i) {
                     Ok(()) => eprintln!("router: shard {i} ({addr}) revived"),
                     Err(e) => eprintln!("router: shard {i} ({addr}) revival failed: {e:#}"),
@@ -1011,7 +1061,7 @@ fn heartbeat_sweep(inner: &Arc<RouterInner>) {
             hb.next_ping = now + inner.cfg.heartbeat_period;
             drop(hb);
             let wrote = match shard.writer.lock().unwrap().as_mut() {
-                Some(stream) => write_msg(stream, &Msg::Ping { nonce }).is_ok(),
+                Some(writer) => writer.send(&Msg::Ping { nonce }).is_ok(),
                 None => false,
             };
             if wrote {
@@ -1079,19 +1129,34 @@ fn spawn_registration_listener(
 fn registration_loop(inner: Arc<RouterInner>, listener: TcpListener) {
     while !inner.closing.load(Ordering::SeqCst) {
         match listener.accept() {
-            Ok((mut stream, _peer)) => {
+            Ok((stream, _peer)) => {
                 let _ = stream.set_nonblocking(false);
-                let _ = stream.set_read_timeout(Some(CONTROL_TIMEOUT));
-                let _ = stream.set_write_timeout(Some(CONTROL_TIMEOUT));
                 // One short-lived thread per announcement: with the
                 // whole fleet refreshing every REG_REFRESH, a single
                 // silent client must not head-of-line-block everyone
-                // else's re-registration for CONTROL_TIMEOUT — during a
-                // router restart that stall would push recovery past
-                // the retry window.
+                // else's re-registration — the handshake and the framed
+                // read below are both deadline-bounded, so a slowloris
+                // trickler costs one thread for a couple of seconds,
+                // never the accept loop. During a router restart a
+                // head-of-line stall would push recovery past the retry
+                // window.
                 let inner = inner.clone();
                 std::thread::spawn(move || {
-                    match read_msg(&mut stream) {
+                    // Authenticate before the Register frame can touch
+                    // the ring or the spare pool: an unauthenticated
+                    // registrant is rejected here, counted, and never
+                    // reaches `RouterInner::register`.
+                    let pair = server_split(stream, inner.cfg.psk.as_ref(), Some(CONTROL_TIMEOUT));
+                    let (mut reader, mut writer) = match pair {
+                        Ok(p) => p,
+                        Err(e) => {
+                            inner.auth_rejects.fetch_add(1, Ordering::SeqCst);
+                            eprintln!("router: rejected registrant: {e:#}");
+                            return;
+                        }
+                    };
+                    let _ = writer.stream().set_write_timeout(Some(CONTROL_TIMEOUT));
+                    match reader.recv() {
                         // The empty string is the placeholder sentinel
                         // in the slot table, so a nameless registrant
                         // is rejected outright: honoring it would let
@@ -1102,12 +1167,19 @@ fn registration_loop(inner: Arc<RouterInner>, listener: TcpListener) {
                         {
                             let (shard, active) = inner.register(name, addr, spare, prev);
                             let welcome = Msg::Welcome { shard: shard as u32, active };
-                            let _ = write_msg(&mut stream, &welcome);
+                            let _ = writer.send(&welcome);
                         }
-                        // Malformed, nameless or non-Register traffic:
-                        // drop it — the codec already refused malformed
-                        // frames.
-                        _ => {}
+                        // Nameless or non-Register traffic: drop it.
+                        Ok(_) => {}
+                        // Malformed — or, on a sealed connection,
+                        // tampered/replayed — frames count as rejects
+                        // when auth is on; the codec already refused
+                        // the frame either way.
+                        Err(_) => {
+                            if reader.is_sealed() {
+                                inner.auth_rejects.fetch_add(1, Ordering::SeqCst);
+                            }
+                        }
                     }
                 });
             }
@@ -1132,12 +1204,29 @@ fn registration_loop(inner: Arc<RouterInner>, listener: TcpListener) {
     }
 }
 
+/// One control request/reply over a short-lived, optionally
+/// authenticated connection — the shared transport behind the
+/// `probe_health` / `fetch_metrics` / `shutdown_endpoint` family.
+fn control_roundtrip(addr: &str, psk: Option<&Psk>, req: &Msg) -> Result<Msg> {
+    let stream = control_connect(addr)?;
+    let (mut reader, mut writer) = client_split(stream, psk, Some(CONTROL_TIMEOUT))?;
+    let _ = writer.stream().set_write_timeout(Some(CONTROL_TIMEOUT));
+    writer.send(req)?;
+    match reader.recv()? {
+        Some(msg) => Ok(msg),
+        None => bail!("peer closed the connection before replying"),
+    }
+}
+
 /// Probe a shard endpoint's health over a short-lived connection.
 pub fn probe_health(addr: &str) -> Result<(bool, u32, u32, u32)> {
-    let mut stream = control_connect(addr)?;
-    write_msg(&mut stream, &Msg::HealthReq)?;
-    match read_msg(&mut stream)? {
-        Some(Msg::HealthReply { serving, workers, routable, retired }) => {
+    probe_health_auth(addr, None)
+}
+
+/// [`probe_health`] over an authenticated connection when a PSK is given.
+pub fn probe_health_auth(addr: &str, psk: Option<&Psk>) -> Result<(bool, u32, u32, u32)> {
+    match control_roundtrip(addr, psk, &Msg::HealthReq)? {
+        Msg::HealthReply { serving, workers, routable, retired } => {
             Ok((serving, workers, routable, retired))
         }
         other => bail!("unexpected reply to HealthReq: {other:?}"),
@@ -1146,20 +1235,27 @@ pub fn probe_health(addr: &str) -> Result<(bool, u32, u32, u32)> {
 
 /// Fetch one shard's metrics over a short-lived connection.
 pub fn fetch_metrics(addr: &str) -> Result<MetricsSnapshot> {
-    let mut stream = control_connect(addr)?;
-    write_msg(&mut stream, &Msg::MetricsReq)?;
-    match read_msg(&mut stream)? {
-        Some(Msg::MetricsReply(m)) => Ok(m),
+    fetch_metrics_auth(addr, None)
+}
+
+/// [`fetch_metrics`] over an authenticated connection when a PSK is given.
+pub fn fetch_metrics_auth(addr: &str, psk: Option<&Psk>) -> Result<MetricsSnapshot> {
+    match control_roundtrip(addr, psk, &Msg::MetricsReq)? {
+        Msg::MetricsReply(m) => Ok(m),
         other => bail!("unexpected reply to MetricsReq: {other:?}"),
     }
 }
 
 /// Ask a fabric server process to stop serving (acked).
 pub fn shutdown_endpoint(addr: &str) -> Result<()> {
-    let mut stream = control_connect(addr)?;
-    write_msg(&mut stream, &Msg::Shutdown)?;
-    match read_msg(&mut stream)? {
-        Some(Msg::ShutdownAck) => Ok(()),
+    shutdown_endpoint_auth(addr, None)
+}
+
+/// [`shutdown_endpoint`] over an authenticated connection when a PSK is
+/// given.
+pub fn shutdown_endpoint_auth(addr: &str, psk: Option<&Psk>) -> Result<()> {
+    match control_roundtrip(addr, psk, &Msg::Shutdown)? {
+        Msg::ShutdownAck => Ok(()),
         other => bail!("unexpected reply to Shutdown: {other:?}"),
     }
 }
@@ -1206,6 +1302,7 @@ mod tests {
             hb_pings: AtomicU64::new(0),
             hb_pongs: AtomicU64::new(0),
             hb_timeouts: AtomicU64::new(0),
+            auth_rejects: AtomicU64::new(0),
             closing: AtomicBool::new(false),
         };
         inner.rebuild_ring();

@@ -21,7 +21,7 @@
 
 use std::collections::HashMap;
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -31,7 +31,8 @@ use anyhow::{Context, Result};
 
 use crate::coordinator::{Coordinator, CoordinatorConfig, RequestResult};
 
-use super::wire::{read_msg, write_msg, Msg};
+use super::auth::{client_split, server_split, FrameReader, FrameWriter, Psk};
+use super::wire::Msg;
 
 /// How often a registered shard re-announces itself to the router
 /// (`fabric-serve --register`). Registration is idempotent on the
@@ -65,12 +66,27 @@ pub struct FabricServer {
     /// shutdown (it exits on success or when the stop flag flips).
     reg_handle: Mutex<Option<JoinHandle<()>>>,
     coord: Arc<Coordinator>,
+    /// Fleet PSK (`--psk-file`). `Some` makes every connection — data
+    /// and registration — handshake and seal; `None` keeps the
+    /// plaintext v3 behaviour for mixed-version transitions.
+    psk: Arc<Option<Psk>>,
+    /// Peers this server rejected: failed handshakes, plaintext clients
+    /// on a sealed port, tampered frames. Stamped onto metrics replies.
+    auth_rejects: Arc<AtomicU64>,
 }
 
 impl FabricServer {
     /// Bind `addr` (use port 0 for an ephemeral loopback port) and
-    /// start serving a freshly started coordinator.
+    /// start serving a freshly started coordinator, plaintext.
     pub fn start(addr: &str, cfg: CoordinatorConfig) -> Result<Self> {
+        Self::start_with_auth(addr, cfg, None)
+    }
+
+    /// [`FabricServer::start`] with an optional fleet PSK: when `Some`,
+    /// every accepted connection must complete the PSK handshake before
+    /// a single frame reaches the coordinator, and all traffic is
+    /// sealed (see [`crate::fabric::auth`]).
+    pub fn start_with_auth(addr: &str, cfg: CoordinatorConfig, psk: Option<Psk>) -> Result<Self> {
         let coord = Arc::new(Coordinator::start(cfg)?);
         let listener =
             TcpListener::bind(addr).with_context(|| format!("binding fabric server to {addr}"))?;
@@ -80,12 +96,18 @@ impl FabricServer {
         let stop = Arc::new(AtomicBool::new(false));
         let conns: Arc<Mutex<HashMap<u64, TcpStream>>> = Arc::new(Mutex::new(HashMap::new()));
         let conn_handles: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
+        let psk = Arc::new(psk);
+        let auth_rejects = Arc::new(AtomicU64::new(0));
         let accept_handle = {
             let coord = coord.clone();
             let stop = stop.clone();
             let conns = conns.clone();
             let conn_handles = conn_handles.clone();
-            std::thread::spawn(move || accept_loop(listener, coord, stop, conns, conn_handles))
+            let psk = psk.clone();
+            let auth_rejects = auth_rejects.clone();
+            std::thread::spawn(move || {
+                accept_loop(listener, coord, stop, conns, conn_handles, psk, auth_rejects)
+            })
         };
         Ok(Self {
             addr,
@@ -95,6 +117,8 @@ impl FabricServer {
             conn_handles,
             reg_handle: Mutex::new(None),
             coord,
+            psk,
+            auth_rejects,
         })
     }
 
@@ -116,6 +140,7 @@ impl FabricServer {
         let stop = self.stop.clone();
         let (name, addr) = (name.to_string(), self.addr.to_string());
         let router_reg = router_reg.to_string();
+        let psk = self.psk.clone();
         let handle = std::thread::spawn(move || {
             let mut assigned: Option<u32> = None;
             while !stop.load(Ordering::SeqCst) {
@@ -125,7 +150,7 @@ impl FabricServer {
                     spare,
                     prev: assigned,
                 };
-                match register_once(&router_reg, &msg) {
+                match register_once(&router_reg, &msg, (*psk).as_ref()) {
                     Ok((shard, active)) => {
                         // Log first contact and slot moves, not the
                         // twice-a-second refresh chatter.
@@ -203,11 +228,14 @@ fn sleep_unless_stopped(stop: &AtomicBool, total: Duration) {
 }
 
 /// One registration attempt: connect to the router's registration
-/// port, send the `Register`, await the `Welcome`.
-fn register_once(router_reg: &str, msg: &Msg) -> Result<(u32, bool)> {
-    let mut stream = super::router::control_connect(router_reg)?;
-    write_msg(&mut stream, msg)?;
-    match read_msg(&mut stream)? {
+/// port, handshake when a PSK is configured, send the `Register`,
+/// await the `Welcome`.
+fn register_once(router_reg: &str, msg: &Msg, psk: Option<&Psk>) -> Result<(u32, bool)> {
+    let stream = super::router::control_connect(router_reg)?;
+    let (mut reader, mut writer) =
+        client_split(stream, psk, Some(super::router::CONTROL_TIMEOUT))?;
+    writer.send(msg)?;
+    match reader.recv()? {
         Some(Msg::Welcome { shard, active }) => Ok((shard, active)),
         other => anyhow::bail!("unexpected reply to Register: {other:?}"),
     }
@@ -219,6 +247,8 @@ fn accept_loop(
     stop: Arc<AtomicBool>,
     conns: Arc<Mutex<HashMap<u64, TcpStream>>>,
     conn_handles: Arc<Mutex<Vec<JoinHandle<()>>>>,
+    psk: Arc<Option<Psk>>,
+    auth_rejects: Arc<AtomicU64>,
 ) {
     let mut next_conn_id = 0u64;
     while !stop.load(Ordering::SeqCst) {
@@ -237,8 +267,22 @@ fn accept_loop(
                 let coord = coord.clone();
                 let stop = stop.clone();
                 let conns = conns.clone();
+                let psk = psk.clone();
+                let auth_rejects = auth_rejects.clone();
+                // The handshake runs inside the connection thread, never
+                // here: a hostile peer that stalls its handshake (or
+                // trickles bytes) costs one bounded thread, not the
+                // accept loop.
                 let handle = std::thread::spawn(move || {
-                    conn_loop(stream, coord, stop);
+                    match server_split(stream, (*psk).as_ref(), None) {
+                        Ok((reader, writer)) => {
+                            conn_loop(reader, writer, coord, stop, &auth_rejects)
+                        }
+                        Err(e) => {
+                            auth_rejects.fetch_add(1, Ordering::SeqCst);
+                            eprintln!("fabric server: rejected peer: {e:#}");
+                        }
+                    }
                     conns.lock().unwrap().remove(&conn_id);
                 });
                 // Reap finished connection threads so a long-running
@@ -264,20 +308,34 @@ fn accept_loop(
     }
 }
 
-fn conn_loop(mut read_half: TcpStream, coord: Arc<Coordinator>, stop: Arc<AtomicBool>) {
-    let write_half = match read_half.try_clone() {
-        Ok(w) => w,
-        Err(_) => return,
-    };
+fn conn_loop(
+    mut reader: FrameReader,
+    writer: FrameWriter,
+    coord: Arc<Coordinator>,
+    stop: Arc<AtomicBool>,
+    auth_rejects: &AtomicU64,
+) {
+    // The handshake (when one ran) left a short write timeout on the
+    // socket; the data path writes replies however long the peer takes
+    // to drain them, as before.
+    let _ = writer.stream().set_write_timeout(None);
+    let sealed = reader.is_sealed();
     let (reply_tx, reply_rx) = channel::<Reply>();
-    let writer = std::thread::spawn(move || writer_loop(write_half, reply_rx));
+    let writer = std::thread::spawn(move || writer_loop(writer, reply_rx));
     loop {
-        let msg = match read_msg(&mut read_half) {
+        let msg = match reader.recv() {
             Ok(Some(m)) => m,
-            // Clean close, local shutdown, or a malformed frame: either
-            // way this connection is done (malformed peers are dropped,
-            // not served — the codec already refused the frame).
-            Ok(None) | Err(_) => break,
+            // Clean close or local shutdown: this connection is done.
+            Ok(None) => break,
+            Err(_) => {
+                // A malformed frame drops the connection, never the
+                // process; on a sealed connection it is a tampered or
+                // replayed frame and counts as an auth reject.
+                if sealed {
+                    auth_rejects.fetch_add(1, Ordering::SeqCst);
+                }
+                break;
+            }
         };
         match msg {
             Msg::Submit { id, kind, a, b } => {
@@ -287,7 +345,9 @@ fn conn_loop(mut read_half: TcpStream, coord: Arc<Coordinator>, stop: Arc<Atomic
                 }
             }
             Msg::MetricsReq => {
-                let reply = Msg::MetricsReply(coord.metrics());
+                let mut m = coord.metrics();
+                m.auth_rejects = auth_rejects.load(Ordering::SeqCst);
+                let reply = Msg::MetricsReply(m);
                 if reply_tx.send(Reply::Now(reply)).is_err() {
                     break;
                 }
@@ -337,7 +397,7 @@ fn conn_loop(mut read_half: TcpStream, coord: Arc<Coordinator>, stop: Arc<Atomic
     let _ = writer.join();
 }
 
-fn writer_loop(mut write_half: TcpStream, reply_rx: Receiver<Reply>) {
+fn writer_loop(mut writer: FrameWriter, reply_rx: Receiver<Reply>) {
     while let Ok(reply) = reply_rx.recv() {
         let msg = match reply {
             Reply::Now(m) => m,
@@ -358,7 +418,7 @@ fn writer_loop(mut write_half: TcpStream, reply_rx: Receiver<Reply>) {
                 },
             },
         };
-        if write_msg(&mut write_half, &msg).is_err() {
+        if writer.send(&msg).is_err() {
             // Peer gone: stop writing; the read loop will see EOF.
             break;
         }

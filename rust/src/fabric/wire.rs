@@ -30,10 +30,13 @@ use crate::mmpu::FunctionKind;
 /// optional previous-slot index trailing `Register` (so a fleet
 /// re-registering with a restarted router reclaims its exact ring
 /// indices), and the heartbeat counters trailing the snapshot body.
-/// Each frame is stamped with the *lowest* version that can represent
-/// its message ([`Msg::min_version`]), so older peers keep
-/// understanding the unchanged message layouts.
-pub const WIRE_VERSION: u8 = 3;
+/// v4 added the authentication-reject counter (`auth_rejects`) trailing
+/// the snapshot body; sealed transport (see [`crate::fabric::auth`])
+/// wraps these same frames and is negotiated per connection, not per
+/// version byte. Each frame is stamped with the *lowest* version that
+/// can represent its message ([`Msg::min_version`]), so older peers
+/// keep understanding the unchanged message layouts.
+pub const WIRE_VERSION: u8 = 4;
 
 /// Oldest version this decoder still accepts. v1/v2 frames decode
 /// compatibly (the snapshot's missing membership/heartbeat counters
@@ -122,7 +125,8 @@ impl Msg {
     /// labeled with the version that introduced them.
     fn min_version(&self) -> u8 {
         match self {
-            Msg::MetricsReply(_) | Msg::Ping { .. } | Msg::Pong { .. } => 3,
+            Msg::MetricsReply(_) => 4,
+            Msg::Ping { .. } | Msg::Pong { .. } => 3,
             Msg::Register { prev: Some(_), .. } => 3,
             Msg::Register { prev: None, .. } | Msg::Welcome { .. } => 2,
             _ => 1,
@@ -376,6 +380,8 @@ fn put_snapshot(out: &mut Vec<u8>, s: &MetricsSnapshot) {
     put_u64(out, s.hb_pings);
     put_u64(out, s.hb_pongs);
     put_u64(out, s.hb_timeouts);
+    // The authentication-reject counter trails the v3 body (v4).
+    put_u64(out, s.auth_rejects);
 }
 
 struct Cursor<'a> {
@@ -480,6 +486,7 @@ impl<'a> Cursor<'a> {
             if version >= 2 { (self.u64()?, self.u64()?) } else { (0, 0) };
         let (hb_pings, hb_pongs, hb_timeouts) =
             if version >= 3 { (self.u64()?, self.u64()?, self.u64()?) } else { (0, 0, 0) };
+        let auth_rejects = if version >= 4 { self.u64()? } else { 0 };
         Ok(MetricsSnapshot {
             submitted,
             completed,
@@ -495,6 +502,7 @@ impl<'a> Cursor<'a> {
             hb_pings,
             hb_pongs,
             hb_timeouts,
+            auth_rejects,
         })
     }
 }
@@ -515,10 +523,10 @@ mod tests {
         assert_eq!(reg.to_bytes()[0], 2, "a prev-less Register keeps the v2 layout");
         let reg3 =
             Msg::Register { name: "a".into(), addr: "b".into(), spare: false, prev: Some(4) };
-        assert_eq!(reg3.to_bytes()[0], WIRE_VERSION);
+        assert_eq!(reg3.to_bytes()[0], 3, "prev-carrying Register keeps the v3 layout");
         assert_eq!(Msg::MetricsReply(MetricsSnapshot::default()).to_bytes()[0], WIRE_VERSION);
-        assert_eq!(Msg::Ping { nonce: 9 }.to_bytes()[0], WIRE_VERSION);
-        assert_eq!(Msg::Pong { nonce: 9 }.to_bytes()[0], WIRE_VERSION);
+        assert_eq!(Msg::Ping { nonce: 9 }.to_bytes()[0], 3, "heartbeats keep the v3 layout");
+        assert_eq!(Msg::Pong { nonce: 9 }.to_bytes()[0], 3, "heartbeats keep the v3 layout");
     }
 
     #[test]
@@ -578,6 +586,7 @@ mod tests {
             hb_pings: 40,
             hb_pongs: 39,
             hb_timeouts: 1,
+            auth_rejects: 2,
         };
         let msg = Msg::MetricsReply(snap);
         assert_eq!(Msg::from_bytes(&msg.to_bytes()).unwrap(), msg);
@@ -585,18 +594,32 @@ mod tests {
 
     #[test]
     fn old_version_frames_decode_compatibly() {
-        // A v2 MetricsReply lacks the trailing heartbeat counters, a v1
-        // one also the membership counters: strip them from a v3
-        // encoding and relabel the version byte.
+        // A v3 MetricsReply lacks the trailing auth-reject counter, a v2
+        // one also the heartbeat counters, a v1 one also the membership
+        // counters: strip them from a v4 encoding and relabel the
+        // version byte.
         let snap = MetricsSnapshot {
             completed: 9,
             lat_bins: vec![1, 2],
             shards_total: 2,
             shards_down: 1,
+            hb_pings: 5,
+            hb_pongs: 4,
+            hb_timeouts: 1,
             ..Default::default()
         };
+        let mut v3 = Msg::MetricsReply(snap.clone()).to_bytes();
+        v3.truncate(v3.len() - 8);
+        v3[0] = 3;
+        match Msg::from_bytes(&v3).unwrap() {
+            Msg::MetricsReply(got) => {
+                assert_eq!(got, snap, "auth-reject counter defaults to 0 for v3 peers")
+            }
+            other => panic!("unexpected decode: {other:?}"),
+        }
+        let snap = MetricsSnapshot { hb_pings: 0, hb_pongs: 0, hb_timeouts: 0, ..snap };
         let mut v2 = Msg::MetricsReply(snap.clone()).to_bytes();
-        v2.truncate(v2.len() - 24);
+        v2.truncate(v2.len() - 32);
         v2[0] = 2;
         match Msg::from_bytes(&v2).unwrap() {
             Msg::MetricsReply(got) => {
@@ -605,7 +628,7 @@ mod tests {
             other => panic!("unexpected decode: {other:?}"),
         }
         let mut v1 = Msg::MetricsReply(snap.clone()).to_bytes();
-        v1.truncate(v1.len() - 40);
+        v1.truncate(v1.len() - 48);
         v1[0] = 1;
         match Msg::from_bytes(&v1).unwrap() {
             Msg::MetricsReply(got) => {

@@ -62,6 +62,13 @@
 //!                                     # coordinator (fabric flags swap
 //!                                     # in a router)
 //! ```
+//!
+//! Every fabric role additionally accepts `--psk-file <path>`
+//! (§Security, wire v4): the file's contents become the fleet's
+//! pre-shared key, every connection runs a mutual-authentication
+//! handshake, and all frames are sealed (encrypted + integrity-tagged,
+//! replay-protected). Without the flag the wire stays plaintext and
+//! rejects sealed peers — mixed fleets fail loudly, never silently.
 
 use anyhow::Result;
 
@@ -71,7 +78,7 @@ use remus::bitlet::BitletModel;
 use remus::coordinator::{Coordinator, CoordinatorConfig, MetricsSnapshot, Submitter};
 use remus::errs::ErrorModel;
 use remus::fabric::loadgen::{self, LoadgenConfig};
-use remus::fabric::{shutdown_endpoint, FabricServer, Router, RouterConfig};
+use remus::fabric::{shutdown_endpoint_auth, FabricServer, Psk, Router, RouterConfig};
 use remus::health::{HealthConfig, WearModel};
 use remus::mmpu::{controller::quick_exec, FunctionKind, ReliabilityPolicy};
 use remus::nn::degradation::DegradationModel;
@@ -495,11 +502,22 @@ fn shard_addrs_from_args(args: &Args) -> Vec<String> {
     args.get("shards").map(|s| s.split(',').map(str::to_string).collect()).unwrap_or_default()
 }
 
+/// Load the fabric pre-shared key named by `--psk-file` (§Security,
+/// wire v4). `None` without the flag: the wire stays plaintext. Every
+/// fabric role — `fabric-serve`, `fabric-route`, `fabric-soak`,
+/// `loadgen`, `serve --shards` — takes the same flag, and mixed fleets
+/// refuse each other by construction (sealed peers reject plaintext
+/// frames and vice versa), so a partially-authenticated fleet cannot
+/// silently serve.
+fn psk_from_args(args: &Args) -> Result<Option<Psk>> {
+    args.get("psk-file").map(Psk::load).transpose()
+}
+
 /// Build a fabric router from the shared CLI flag surface — the one
-/// place `--probe-ms`, `--retry-ms`, `--listen-reg`, `--hb-ms` and
-/// `--hb-timeout-ms` are wired, so `serve`, `fabric-route` and
-/// `loadgen` cannot drift apart — then announce the registration port
-/// and wait for `--min-shards`.
+/// place `--probe-ms`, `--retry-ms`, `--listen-reg`, `--hb-ms`,
+/// `--hb-timeout-ms` and `--psk-file` are wired, so `serve`,
+/// `fabric-route` and `loadgen` cannot drift apart — then announce the
+/// registration port and wait for `--min-shards`.
 fn router_from_args(args: &Args, addrs: Vec<String>, ctx: &str) -> Result<Router> {
     let rcfg = RouterConfig {
         probe_period: std::time::Duration::from_millis(args.get_or("probe-ms", 250u64)),
@@ -507,6 +525,7 @@ fn router_from_args(args: &Args, addrs: Vec<String>, ctx: &str) -> Result<Router
         listen: args.get("listen-reg").map(str::to_string),
         heartbeat_period: std::time::Duration::from_millis(args.get_or("hb-ms", 1000u64)),
         heartbeat_timeout: std::time::Duration::from_millis(args.get_or("hb-timeout-ms", 1000u64)),
+        psk: psk_from_args(args)?,
     };
     let router = Router::with_config(&addrs, rcfg)?;
     announce_registration(&router, args, addrs.len(), ctx);
@@ -547,7 +566,7 @@ fn shard_config(args: &Args) -> CoordinatorConfig {
 /// binding port 0), then serves until a `Shutdown` frame arrives.
 fn fabric_serve(args: &Args) -> Result<()> {
     let addr = args.get("addr").unwrap_or("127.0.0.1:4870");
-    let server = FabricServer::start(addr, shard_config(args))?;
+    let server = FabricServer::start_with_auth(addr, shard_config(args), psk_from_args(args)?)?;
     println!("LISTENING {}", server.local_addr());
     use std::io::Write as _;
     std::io::stdout().flush()?;
@@ -640,7 +659,7 @@ fn spawn_shard(
     }
     // Forward every shard_config option so the children run exactly the
     // configuration the user asked for.
-    for key in ["rows", "cols", "spares", "max-batch", "max-wait-us", "endurance"] {
+    for key in ["rows", "cols", "spares", "max-batch", "max-wait-us", "endurance", "psk-file"] {
         if let Some(v) = args.get(key) {
             cmd.arg(format!("--{key}")).arg(v);
         }
@@ -712,6 +731,7 @@ fn fabric_soak(args: &Args) -> Result<()> {
                 probe_period: std::time::Duration::from_millis(100),
                 retry_window: std::time::Duration::from_secs(3),
                 listen: (spare_shards > 0).then(|| "127.0.0.1:0".to_string()),
+                psk: psk_from_args(args)?,
                 ..Default::default()
             };
             let static_addrs = addrs.clone();
@@ -830,8 +850,9 @@ fn fabric_soak(args: &Args) -> Result<()> {
         })(),
     };
     // Teardown: graceful Shutdown frame first, kill as the fallback.
+    let psk = psk_from_args(args)?;
     for (i, (mut child, _reader)) in children.into_iter().enumerate() {
-        let graceful = addrs.get(i).map(|a| shutdown_endpoint(a));
+        let graceful = addrs.get(i).map(|a| shutdown_endpoint_auth(a, psk.as_ref()));
         if let Some(Err(e)) = graceful {
             eprintln!("fabric-soak: shard {i} wire shutdown failed ({e:#}); killing");
             let _ = child.kill();
@@ -890,7 +911,17 @@ fn run_loadgen_sweep(
         ),
         None => println!("knee: none — every sweep point collapsed below 90% of its offer"),
     }
-    loadgen::write_json(out, cfg, &sweep)?;
+    // Informational sealed-vs-plaintext frame cost (§Security): always
+    // measured in-process so the artifact carries the crypto tax next
+    // to the latency data it contextualizes, whether or not this sweep
+    // itself ran sealed.
+    let seal = loadgen::measure_seal_overhead(4096);
+    println!(
+        "seal overhead (codec-only, {} frames): plain {:.0}ns/frame, sealed {:.0}ns/frame \
+         ({:+.1}%)",
+        seal.frames, seal.plain_ns_per_frame, seal.sealed_ns_per_frame, seal.overhead_pct
+    );
+    loadgen::write_json(out, cfg, &sweep, Some(&seal))?;
     println!("(machine-readable results written to {out})");
     Ok(())
 }

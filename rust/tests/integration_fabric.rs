@@ -522,6 +522,7 @@ fn half_open_shard_detected_by_heartbeats_and_failed_over() {
         listen: Some("127.0.0.1:0".to_string()),
         heartbeat_period: hb_period,
         heartbeat_timeout: Duration::from_millis(600),
+        ..Default::default()
     };
     let router = Router::with_config(&[healthy.local_addr().to_string()], cfg).unwrap();
     let reg = router.registration_addr().unwrap().to_string();

@@ -1,11 +1,16 @@
 //! Property tests for the fabric wire codec: every message type
 //! (the v3 heartbeat `Ping`/`Pong` included) survives encode -> frame
-//! -> decode bit-exactly, v1/v2 frames still decode under the v3
-//! codec, and truncated or corrupted frames — truncated pings included
-//! — are rejected with errors: never a panic, never an accidental
-//! parse (ISSUE 3 + ISSUE 5 satellites).
+//! -> decode bit-exactly, v1/v2/v3 frames still decode under the v4
+//! codec, and truncated or corrupted frames — truncated pings,
+//! length-prefix lies and single-bit flips included — are rejected
+//! with errors: never a panic, never an accidental parse. Sealed
+//! frames (wire v4, `fabric::auth`) additionally detect *every*
+//! single-bit flip, truncation and replay: a tampered sealed frame can
+//! never open, so it can never decode to a different valid message
+//! undetected (ISSUE 3 + ISSUE 5 + ISSUE 6 satellites).
 
 use remus::coordinator::{MetricsSnapshot, WorkerHealth};
+use remus::fabric::auth::{derive_keys, Psk, SEAL_OVERHEAD};
 use remus::fabric::wire::{read_msg, write_msg, Msg, MAX_FRAME, MIN_WIRE_VERSION, WIRE_VERSION};
 use remus::mmpu::FunctionKind;
 use remus::testutil::prop::{Cases, Gen};
@@ -64,6 +69,7 @@ fn gen_snapshot(g: &mut Gen) -> MetricsSnapshot {
         hb_pings: g.u64(),
         hb_pongs: g.u64(),
         hb_timeouts: g.u64(),
+        auth_rejects: g.u64(),
     }
 }
 
@@ -169,22 +175,28 @@ fn version_mismatch_is_rejected() {
 }
 
 #[test]
-fn v1_and_v2_frames_decode_compatibly_under_v3() {
-    // v2 snapshots predate the heartbeat counters (strip the trailing
-    // 24 bytes), v1 ones also the fleet membership counters (strip 40):
-    // relabel the version and the decode must succeed with the missing
-    // fields defaulted to zero.
+fn v1_v2_and_v3_frames_decode_compatibly_under_v4() {
+    // v3 snapshots predate the auth-reject counter (strip the trailing
+    // 8 bytes), v2 ones also the heartbeat counters (strip 32), v1
+    // ones also the fleet membership counters (strip 48): relabel the
+    // version and the decode must succeed with the missing fields
+    // defaulted to zero.
     Cases::new(256).run(|g| {
         let mut snap = gen_snapshot(g);
+        let mut v3 = Msg::MetricsReply(snap.clone()).to_bytes();
+        v3.truncate(v3.len() - 8);
+        v3[0] = 3;
+        snap.auth_rejects = 0;
+        assert_eq!(Msg::from_bytes(&v3).unwrap(), Msg::MetricsReply(snap.clone()));
         let mut v2 = Msg::MetricsReply(snap.clone()).to_bytes();
-        v2.truncate(v2.len() - 24);
+        v2.truncate(v2.len() - 32);
         v2[0] = 2;
         snap.hb_pings = 0;
         snap.hb_pongs = 0;
         snap.hb_timeouts = 0;
         assert_eq!(Msg::from_bytes(&v2).unwrap(), Msg::MetricsReply(snap.clone()));
         let mut v1 = Msg::MetricsReply(snap.clone()).to_bytes();
-        v1.truncate(v1.len() - 40);
+        v1.truncate(v1.len() - 48);
         v1[0] = 1;
         snap.shards_total = 0;
         snap.shards_down = 0;
@@ -214,7 +226,7 @@ fn v1_and_v2_frames_decode_compatibly_under_v3() {
             spare: g.bool(),
             prev: Some(g.u64() as u32),
         };
-        assert_eq!(reg3.to_bytes()[0], WIRE_VERSION);
+        assert_eq!(reg3.to_bytes()[0], 3, "prev-carrying Register stays v3-labeled");
         for v in [1u8, 2] {
             let mut bytes = reg3.to_bytes();
             bytes[0] = v;
@@ -271,4 +283,91 @@ fn implausible_length_prefixes_are_rejected() {
     let zero = 0u32.to_le_bytes().to_vec();
     let mut r: &[u8] = &zero;
     assert!(read_msg(&mut r).is_err());
+}
+
+#[test]
+fn bit_flips_and_length_lies_never_panic_the_plaintext_codec() {
+    // Plaintext has no integrity: a flipped frame may decode to a
+    // different valid message (that is exactly the gap the seal
+    // closes), but it must never panic, hang, or over-allocate.
+    Cases::new(512).run(|g| {
+        let msg = gen_msg(g);
+        let mut buf = Vec::new();
+        write_msg(&mut buf, &msg).unwrap();
+        // Single-bit flip anywhere in the frame, length prefix included.
+        let byte = g.usize_in(0..=buf.len() - 1);
+        let bit = g.usize_in(0..=7) as u8;
+        let mut flipped = buf.clone();
+        flipped[byte] ^= 1 << bit;
+        let mut r: &[u8] = &flipped;
+        let _ = read_msg(&mut r); // Ok or Err — just never a panic
+        let _ = Msg::from_bytes(&flipped[4..]);
+        // A lying length prefix: any u32, same body bytes behind it.
+        let mut lied = buf.clone();
+        let lie = (g.u64() as u32).to_le_bytes();
+        lied[..4].copy_from_slice(&lie);
+        let mut r: &[u8] = &lied;
+        let _ = read_msg(&mut r);
+    });
+}
+
+#[test]
+fn sealed_frames_detect_every_flip_truncation_and_replay() {
+    // The wire-v4 seal in front of the codec: a sealed frame that was
+    // tampered with in *any* single bit, truncated to *any* length, or
+    // replayed verbatim must fail to open — so a tampered frame can
+    // never decode to a different valid message undetected, because it
+    // never reaches the codec at all.
+    let psk = Psk::from_material(b"prop fabric wire seal").unwrap();
+    // Exhaustive single-bit sweep over one small fixed frame.
+    {
+        let keys = derive_keys(&psk, &[0xA1; 32], &[0xB2; 32]);
+        let (mut tx, rx) = (keys.c2s.clone(), keys.c2s);
+        let sealed = tx.seal(&Msg::Ping { nonce: 0xDEAD_BEEF }.to_bytes());
+        for byte in 0..sealed.len() {
+            for bit in 0..8 {
+                let mut t = sealed.clone();
+                t[byte] ^= 1 << bit;
+                assert!(
+                    rx.clone().open(&t).is_err(),
+                    "flip at byte {byte} bit {bit} must not open"
+                );
+            }
+        }
+        for cut in 0..sealed.len() {
+            assert!(rx.clone().open(&sealed[..cut]).is_err(), "truncation to {cut} bytes");
+        }
+        let mut rx = rx;
+        let opened = rx.open(&sealed).unwrap();
+        assert_eq!(Msg::from_bytes(&opened).unwrap(), Msg::Ping { nonce: 0xDEAD_BEEF });
+        assert!(rx.open(&sealed).is_err(), "verbatim replay must be rejected");
+    }
+    // Randomized sweep over arbitrary messages (every type, arbitrary
+    // sizes): sampled flips and cuts, plus the counter-advance law —
+    // failed opens must not desync an honest sender/receiver pair.
+    Cases::new(128).run(|g| {
+        let keys = derive_keys(&psk, &[g.u64() as u8; 32], &[g.u64() as u8; 32]);
+        let (mut tx, mut rx) = (keys.s2c.clone(), keys.s2c);
+        let msg = gen_msg(g);
+        let payload = msg.to_bytes();
+        let sealed = tx.seal(&payload);
+        assert_eq!(sealed.len(), payload.len() + SEAL_OVERHEAD);
+        for _ in 0..16 {
+            let byte = g.usize_in(0..=sealed.len() - 1);
+            let bit = g.usize_in(0..=7) as u8;
+            let mut t = sealed.clone();
+            t[byte] ^= 1 << bit;
+            assert!(rx.open(&t).is_err(), "flip at byte {byte} bit {bit}");
+            let cut = g.usize_in(0..=sealed.len() - 1);
+            assert!(rx.open(&sealed[..cut]).is_err(), "truncation to {cut}");
+        }
+        // All those failures left the receive counter untouched: the
+        // honest frame still opens, exactly once.
+        assert_eq!(rx.open(&sealed).unwrap(), payload);
+        assert!(rx.open(&sealed).is_err(), "replay after success");
+        // And the stream keeps flowing afterwards.
+        let msg2 = gen_msg(g);
+        let sealed2 = tx.seal(&msg2.to_bytes());
+        assert_eq!(Msg::from_bytes(&rx.open(&sealed2).unwrap()).unwrap(), msg2);
+    });
 }
