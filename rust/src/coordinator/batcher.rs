@@ -18,6 +18,9 @@ pub struct Pending {
     pub b: u64,
     pub reply: Sender<super::server::RequestResult>,
     pub submitted: Instant,
+    /// Trace id minted at the submitter (0 = untraced). Carried through
+    /// the batch so the worker can attribute stage spans to the request.
+    pub trace: u64,
 }
 
 /// A flushed batch ready for a worker.
@@ -96,7 +99,7 @@ mod tests {
 
     fn pending(at: Instant) -> Pending {
         let (tx, _rx) = channel();
-        Pending { a: 1, b: 2, reply: tx, submitted: at }
+        Pending { a: 1, b: 2, reply: tx, submitted: at, trace: 0 }
     }
 
     #[test]

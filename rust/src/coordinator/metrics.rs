@@ -4,7 +4,9 @@
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
-use std::time::Duration;
+use std::time::{Duration, Instant};
+
+use crate::mmpu::functions::{FunctionKind, KIND_FAMILIES};
 
 /// Number of log2 latency bins (1us ... ~1s).
 const BINS: usize = 24;
@@ -12,10 +14,19 @@ const BINS: usize = 24;
 /// Log2 bin index for a microsecond latency: bin i counts latencies in
 /// `[2^i, 2^(i+1))`, clamped to `nbins`. Shared by the coordinator
 /// metrics and `fabric::loadgen`'s histograms so their bin edges can
-/// never drift apart.
+/// never drift apart. The clamp silently folds latencies ≥ the top bin
+/// edge into the top bin — callers that care (both histogram owners)
+/// check [`log2_bin_overflows`] and keep an explicit overflow count
+/// plus the exact observed max alongside the bins.
 pub fn log2_bin_us(us: u64, nbins: usize) -> usize {
     let us = us.max(1);
     (63 - us.leading_zeros() as usize).min(nbins - 1)
+}
+
+/// True when `us` lands past the top bin edge (`2^nbins` µs) and
+/// [`log2_bin_us`] would clamp it — i.e. the histogram under-reports.
+pub fn log2_bin_overflows(us: u64, nbins: usize) -> bool {
+    nbins < 64 && us >= 1u64 << nbins
 }
 
 /// Percentile estimate over log2 latency bins (upper bin edge,
@@ -38,6 +49,31 @@ pub fn log2_percentile_us(bins: &[u64], pct: f64) -> u64 {
     1u64 << bins.len()
 }
 
+/// [`log2_percentile_us`] made honest about the histogram's edges
+/// using the exact observed max and the top-bin overflow count kept
+/// alongside the bins (by both `Metrics` and `fabric::loadgen`):
+/// a percentile rank that falls among the `overflow` clamped samples
+/// reports the exact max (the bins genuinely don't know better), and
+/// any estimate is capped at the exact max (an upper bin edge can
+/// never beat the true extreme). With `max_us == 0` (pre-v5 peers)
+/// this degrades to the raw estimate.
+pub fn log2_percentile_exact_us(bins: &[u64], pct: f64, overflow: u64, max_us: u64) -> u64 {
+    let total: u64 = bins.iter().sum();
+    if total == 0 {
+        return 0;
+    }
+    let target = (total as f64 * pct / 100.0).ceil() as u64;
+    if max_us > 0 && overflow > 0 && target > total - overflow.min(total) {
+        return max_us;
+    }
+    let est = log2_percentile_us(bins, pct);
+    if max_us > 0 {
+        est.min(max_us)
+    } else {
+        est
+    }
+}
+
 /// Per-worker health summary exported through [`MetricsSnapshot`].
 #[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct WorkerHealth {
@@ -56,7 +92,6 @@ pub struct WorkerHealth {
     pub retired: bool,
 }
 
-#[derive(Default)]
 pub struct Metrics {
     pub submitted: AtomicU64,
     pub completed: AtomicU64,
@@ -70,13 +105,46 @@ pub struct Metrics {
     pub batched_items: AtomicU64,
     pub busy_ns: AtomicU64,
     pub queue_depth: AtomicU64,
+    /// Latencies that overflowed the top histogram bin (would have been
+    /// silently clamped before this counter existed).
+    pub lat_overflow: AtomicU64,
+    /// Exact maximum latency observed, microseconds.
+    pub lat_max_us: AtomicU64,
     lat_bins: [AtomicU64; BINS],
+    kind_submitted: [AtomicU64; KIND_FAMILIES],
+    kind_completed: [AtomicU64; KIND_FAMILIES],
+    kind_failed: [AtomicU64; KIND_FAMILIES],
+    /// When this process started serving; snapshots stamp the elapsed
+    /// time so readers can compute honest rates over a real interval.
+    epoch: Instant,
     worker_health: Mutex<Vec<WorkerHealth>>,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self::new()
+    }
 }
 
 impl Metrics {
     pub fn new() -> Self {
-        Self::default()
+        Self {
+            submitted: AtomicU64::new(0),
+            completed: AtomicU64::new(0),
+            failed: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            batched_items: AtomicU64::new(0),
+            busy_ns: AtomicU64::new(0),
+            queue_depth: AtomicU64::new(0),
+            lat_overflow: AtomicU64::new(0),
+            lat_max_us: AtomicU64::new(0),
+            lat_bins: std::array::from_fn(|_| AtomicU64::new(0)),
+            kind_submitted: std::array::from_fn(|_| AtomicU64::new(0)),
+            kind_completed: std::array::from_fn(|_| AtomicU64::new(0)),
+            kind_failed: std::array::from_fn(|_| AtomicU64::new(0)),
+            epoch: Instant::now(),
+            worker_health: Mutex::new(Vec::new()),
+        }
     }
 
     /// Size the per-worker health table (done once at coordinator start).
@@ -91,12 +159,36 @@ impl Metrics {
     }
 
     pub fn record_latency(&self, d: Duration) {
-        let bin = log2_bin_us(d.as_micros() as u64, BINS);
+        let us = d.as_micros() as u64;
+        if log2_bin_overflows(us, BINS) {
+            self.lat_overflow.fetch_add(1, Ordering::Relaxed);
+        }
+        self.lat_max_us.fetch_max(us, Ordering::Relaxed);
+        let bin = log2_bin_us(us, BINS);
         self.lat_bins[bin].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Per-kind load attribution (indexed by [`FunctionKind::index`]).
+    pub fn record_kind_submitted(&self, kind: FunctionKind) {
+        self.kind_submitted[kind.index()].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_kind_completed(&self, kind: FunctionKind) {
+        self.kind_completed[kind.index()].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_kind_failed(&self, kind: FunctionKind, n: u64) {
+        self.kind_failed[kind.index()].fetch_add(n, Ordering::Relaxed);
     }
 
     pub fn snapshot(&self) -> MetricsSnapshot {
         let bins: Vec<u64> = self.lat_bins.iter().map(|b| b.load(Ordering::Relaxed)).collect();
+        let mut kind_stats = [KindStats::default(); KIND_FAMILIES];
+        for (i, ks) in kind_stats.iter_mut().enumerate() {
+            ks.submitted = self.kind_submitted[i].load(Ordering::Relaxed);
+            ks.completed = self.kind_completed[i].load(Ordering::Relaxed);
+            ks.failed = self.kind_failed[i].load(Ordering::Relaxed);
+        }
         MetricsSnapshot {
             submitted: self.submitted.load(Ordering::Relaxed),
             completed: self.completed.load(Ordering::Relaxed),
@@ -105,7 +197,11 @@ impl Metrics {
             batched_items: self.batched_items.load(Ordering::Relaxed),
             busy_ns: self.busy_ns.load(Ordering::Relaxed),
             queue_depth: self.queue_depth.load(Ordering::Relaxed),
+            lat_overflow: self.lat_overflow.load(Ordering::Relaxed),
+            lat_max_us: self.lat_max_us.load(Ordering::Relaxed),
             lat_bins: bins,
+            kind_stats,
+            uptime_ns: self.epoch.elapsed().as_nanos() as u64,
             worker_health: self.worker_health.lock().unwrap().clone(),
             shards_total: 0,
             shards_down: 0,
@@ -115,6 +211,15 @@ impl Metrics {
             auth_rejects: 0,
         }
     }
+}
+
+/// Per-[`FunctionKind`]-family request counters (indexed by
+/// [`FunctionKind::index`]; merge-additive across shards).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct KindStats {
+    pub submitted: u64,
+    pub completed: u64,
+    pub failed: u64,
 }
 
 /// Point-in-time copy for reporting. Public fields (including the raw
@@ -134,6 +239,18 @@ pub struct MetricsSnapshot {
     /// Log2-scale latency histogram (bin i counts latencies in
     /// `[2^i, 2^(i+1))` microseconds; see [`Metrics::record_latency`]).
     pub lat_bins: Vec<u64>,
+    /// Latencies ≥ the top bin edge (clamped into the top bin above);
+    /// nonzero means the histogram tail under-reports — read
+    /// [`MetricsSnapshot::lat_max_us`] for the true extreme.
+    pub lat_overflow: u64,
+    /// Exact maximum observed latency, microseconds (max-merged).
+    pub lat_max_us: u64,
+    /// Time this process had been serving when the snapshot was taken
+    /// (max-merged across shards, so a fleet view carries the oldest
+    /// member's interval — honest QPS is `completed / uptime`).
+    pub uptime_ns: u64,
+    /// Per-kind-family submitted/completed/failed (merge-additive).
+    pub kind_stats: [KindStats; KIND_FAMILIES],
     /// Fabric fleet membership (§Scale): shards known to the router
     /// that produced this view. A single coordinator reports 0 — the
     /// router stamps the merged snapshot, so a degraded fleet is
@@ -178,6 +295,14 @@ impl MetricsSnapshot {
         for (i, &b) in other.lat_bins.iter().enumerate() {
             self.lat_bins[i] += b;
         }
+        self.lat_overflow += other.lat_overflow;
+        self.lat_max_us = self.lat_max_us.max(other.lat_max_us);
+        self.uptime_ns = self.uptime_ns.max(other.uptime_ns);
+        for (s, o) in self.kind_stats.iter_mut().zip(other.kind_stats.iter()) {
+            s.submitted += o.submitted;
+            s.completed += o.completed;
+            s.failed += o.failed;
+        }
         self.worker_health.extend(other.worker_health.iter().cloned());
         // Membership and heartbeat counters add so nested merges
         // compose; per-shard snapshots carry 0 and the router stamps
@@ -203,9 +328,20 @@ impl MetricsSnapshot {
     }
 
     /// Approximate latency percentile from the log histogram (upper bin
-    /// edge, microseconds).
+    /// edge, microseconds), made honest at the edges by the overflow
+    /// count and exact observed max (see [`log2_percentile_exact_us`]).
     pub fn latency_percentile_us(&self, pct: f64) -> u64 {
-        log2_percentile_us(&self.lat_bins, pct)
+        log2_percentile_exact_us(&self.lat_bins, pct, self.lat_overflow, self.lat_max_us)
+    }
+
+    /// Completed-requests rate over the snapshot's serving interval
+    /// (0.0 when the snapshot carries no uptime, e.g. a pre-v5 peer).
+    pub fn qps_over_uptime(&self) -> f64 {
+        if self.uptime_ns == 0 {
+            0.0
+        } else {
+            self.completed as f64 / (self.uptime_ns as f64 / 1e9)
+        }
     }
 }
 
@@ -279,6 +415,60 @@ mod tests {
         assert_eq!((merged.shards_total, merged.shards_down), (3, 1));
         assert_eq!((merged.hb_pings, merged.hb_pongs, merged.hb_timeouts), (8, 7, 1));
         assert_eq!(merged.auth_rejects, 2);
+    }
+
+    #[test]
+    fn top_bin_overflow_is_counted_and_percentiles_use_the_exact_max() {
+        let m = Metrics::new();
+        m.record_latency(Duration::from_micros(100));
+        // 40s = 40e6 us, past the 2^24 us (~16.8s) top bin edge.
+        m.record_latency(Duration::from_secs(40));
+        let s = m.snapshot();
+        assert_eq!(s.lat_overflow, 1);
+        assert_eq!(s.lat_max_us, 40_000_000);
+        // p100 falls among the overflowed samples: the exact max, not
+        // the fictitious 2^BINS edge.
+        assert_eq!(s.latency_percentile_us(100.0), 40_000_000);
+        // p50 is the 100us sample: plain upper bin edge.
+        assert_eq!(s.latency_percentile_us(50.0), 128);
+        assert!(s.uptime_ns > 0, "snapshot stamps serving uptime");
+    }
+
+    #[test]
+    fn percentile_estimate_never_exceeds_the_exact_max() {
+        let m = Metrics::new();
+        for _ in 0..10 {
+            m.record_latency(Duration::from_micros(700));
+        }
+        let s = m.snapshot();
+        // Raw upper bin edge would be 1024; the observed max is 700.
+        assert_eq!(s.latency_percentile_us(99.0), 700);
+    }
+
+    #[test]
+    fn kind_stats_count_and_merge_additively() {
+        use crate::mmpu::functions::FunctionKind;
+        let m1 = Metrics::new();
+        m1.record_kind_submitted(FunctionKind::Add(8));
+        m1.record_kind_submitted(FunctionKind::Add(8));
+        m1.record_kind_completed(FunctionKind::Add(8));
+        m1.record_kind_failed(FunctionKind::Xor(16), 3);
+        let m2 = Metrics::new();
+        m2.record_kind_submitted(FunctionKind::Mul(4));
+        m2.record_kind_completed(FunctionKind::Mul(4));
+
+        let mut merged = m1.snapshot();
+        merged.merge(&m2.snapshot());
+        let add = merged.kind_stats[FunctionKind::Add(8).index()];
+        assert_eq!((add.submitted, add.completed, add.failed), (2, 1, 0));
+        let mul = merged.kind_stats[FunctionKind::Mul(4).index()];
+        assert_eq!((mul.submitted, mul.completed), (1, 1));
+        let xor = merged.kind_stats[FunctionKind::Xor(16).index()];
+        assert_eq!(xor.failed, 3);
+        // Uptime is max-merged (both nonzero here), never summed.
+        let a = m1.snapshot().uptime_ns;
+        let b = m2.snapshot().uptime_ns;
+        assert!(merged.uptime_ns <= a.max(b) + 1_000_000_000);
     }
 
     #[test]

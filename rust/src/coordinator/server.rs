@@ -27,7 +27,12 @@ use anyhow::{ensure, Result};
 
 use crate::errs::ErrorModel;
 use crate::health::HealthConfig;
-use crate::mmpu::{CompiledFunction, FunctionKind, Mmpu, MmpuConfig, PlanCache, ReliabilityPolicy};
+use crate::mmpu::{
+    CompiledFunction, FunctionKind, Mmpu, MmpuConfig, PlanCache, ReliabilityPolicy, VectorResult,
+};
+use crate::telemetry::{
+    EventJournal, EventKind, Stage, Tracer, DEFAULT_JOURNAL_CAPACITY, DEFAULT_SPAN_CAPACITY,
+};
 use crate::tmr::TmrMode;
 
 use super::batcher::{Batch, Batcher, Pending};
@@ -72,6 +77,9 @@ pub struct CoordinatorConfig {
     /// Per-crossbar online fault management (§Health). `None` preserves
     /// the pre-health behavior exactly.
     pub health: Option<HealthConfig>,
+    /// §Telemetry: sample 1 in `trace_sample` requests for stage-span
+    /// tracing (0 disables tracing; the disabled path is one branch).
+    pub trace_sample: u64,
 }
 
 impl Default for CoordinatorConfig {
@@ -88,6 +96,7 @@ impl Default for CoordinatorConfig {
             worker_queue: 8,
             spare_workers: 0,
             health: None,
+            trace_sample: 0,
         }
     }
 }
@@ -107,6 +116,12 @@ pub struct Coordinator {
     healthy: Arc<Vec<AtomicBool>>,
     batcher_handle: Option<JoinHandle<()>>,
     worker_handles: Vec<JoinHandle<()>>,
+    /// §Telemetry: mints trace ids and holds the sampled stage spans
+    /// recorded by this coordinator's workers.
+    tracer: Arc<Tracer>,
+    /// §Telemetry: this process's reliability event journal (scrubs,
+    /// policy moves, retirements — workers record into it directly).
+    journal: Arc<EventJournal>,
 }
 
 /// Logical rows available to batches (§Health reserves spare rows).
@@ -149,6 +164,8 @@ impl Coordinator {
         let total_workers = cfg.workers + cfg.spare_workers;
         let metrics = Arc::new(Metrics::new());
         metrics.init_workers(total_workers);
+        let tracer = Arc::new(Tracer::new(cfg.trace_sample, DEFAULT_SPAN_CAPACITY));
+        let journal = Arc::new(EventJournal::new(DEFAULT_JOURNAL_CAPACITY));
         // One compiled-plan cache shared by every worker: each
         // (kind, shape, tmr) compiles once process-wide (§Perf).
         let plans = Arc::new(PlanCache::new());
@@ -175,8 +192,10 @@ impl Coordinator {
             let cfg2 = cfg.clone();
             let p = plans.clone();
             let f = front_tx.clone();
+            let tr = tracer.clone();
+            let j = journal.clone();
             worker_handles
-                .push(std::thread::spawn(move || worker_loop(w, cfg2, rx, m, d, p, f, h, s)));
+                .push(std::thread::spawn(move || worker_loop(w, cfg2, rx, m, d, p, f, h, s, tr, j)));
         }
         // Batcher / router.
         let m = metrics.clone();
@@ -191,18 +210,48 @@ impl Coordinator {
             healthy,
             batcher_handle: Some(batcher_handle),
             worker_handles,
+            tracer,
+            journal,
         })
     }
 
-    /// Submit one scalar request; the receiver yields the result.
+    /// Submit one scalar request; the receiver yields the result. A
+    /// trace id is minted here (0 / untraced unless `trace_sample` is
+    /// configured).
     pub fn submit(&self, kind: FunctionKind, a: u64, b: u64) -> Receiver<RequestResult> {
+        let trace = self.tracer.mint();
+        self.submit_traced(kind, a, b, trace)
+    }
+
+    /// Submit with a caller-supplied trace id (0 = untraced): the
+    /// fabric shard path, where the id was minted at the router so
+    /// router- and shard-side spans share one trace.
+    pub fn submit_traced(
+        &self,
+        kind: FunctionKind,
+        a: u64,
+        b: u64,
+        trace: u64,
+    ) -> Receiver<RequestResult> {
         let (tx, rx) = channel();
         self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
+        self.metrics.record_kind_submitted(kind);
         let _ = self.front_tx.send(FrontMsg::Submit {
             kind,
-            pending: Pending { a, b, reply: tx, submitted: Instant::now() },
+            pending: Pending { a, b, reply: tx, submitted: Instant::now(), trace },
         });
         rx
+    }
+
+    /// §Telemetry: the span tracer shared with this coordinator's
+    /// workers (sampled stage spans live here).
+    pub fn tracer(&self) -> &Arc<Tracer> {
+        &self.tracer
+    }
+
+    /// §Telemetry: this process's reliability event journal.
+    pub fn journal(&self) -> &Arc<EventJournal> {
+        &self.journal
     }
 
     pub fn metrics(&self) -> MetricsSnapshot {
@@ -256,6 +305,7 @@ pub const NO_CAPACITY_ERROR: &str = "no healthy workers (all crossbars retired)"
 
 /// Deliver an explicit error result to every item of a batch.
 fn fail_batch(batch: Batch, metrics: &Metrics, why: &str) {
+    metrics.record_kind_failed(batch.kind, batch.items.len() as u64);
     for item in batch.items {
         let latency = item.submitted.elapsed();
         metrics.failed.fetch_add(1, Ordering::Relaxed);
@@ -414,6 +464,36 @@ fn resolve_plan(
     Ok(cf)
 }
 
+/// Record the worker-side stage spans for one sampled request: the
+/// batcher wait, then the execution window split into its disjoint
+/// reliability stages (ECC verify, the possibly-TMR-replicated
+/// compute, readback) with marshalling as the [`Stage::WorkerExec`]
+/// remainder — laid end to end, so the request's stage durations sum
+/// to at most its end-to-end latency.
+fn record_exec_spans(
+    tracer: &Tracer,
+    item: &Pending,
+    exec_start: Instant,
+    exec_ns: u64,
+    res: &VectorResult,
+) {
+    let wait_start = tracer.ns_of(item.submitted);
+    let exec_start_ns = tracer.ns_of(exec_start);
+    let wait = exec_start_ns.saturating_sub(wait_start);
+    tracer.record(item.trace, Stage::BatcherWait, wait_start, wait);
+    let reliability = res.ecc_ns + res.compute_ns + res.readback_ns;
+    let mut at = exec_start_ns;
+    for (stage, dur) in [
+        (Stage::WorkerExec, exec_ns.saturating_sub(reliability)),
+        (Stage::EccVerify, res.ecc_ns),
+        (Stage::TmrVote, res.compute_ns),
+        (Stage::Readback, res.readback_ns),
+    ] {
+        tracer.record(item.trace, stage, at, dur);
+        at += dur;
+    }
+}
+
 #[allow(clippy::too_many_arguments)]
 fn worker_loop(
     worker_id: usize,
@@ -425,6 +505,8 @@ fn worker_loop(
     front_tx: Sender<FrontMsg>,
     healthy: Arc<Vec<AtomicBool>>,
     spares: Arc<Mutex<Vec<usize>>>,
+    tracer: Arc<Tracer>,
+    journal: Arc<EventJournal>,
 ) {
     let mmpu_cfg = MmpuConfig {
         rows: cfg.rows,
@@ -494,10 +576,16 @@ fn worker_loop(
         let result = plan.and_then(|cf| mmpu.exec_vector_compiled(0, &cf, &a, &b));
         match result {
             Ok(res) => {
+                let exec_ns = t0.elapsed().as_nanos() as u64;
+                let tracing = tracer.sample_n() != 0;
                 for (item, &value) in batch.items.iter().zip(&res.values) {
                     let latency = item.submitted.elapsed();
                     metrics.record_latency(latency);
+                    metrics.record_kind_completed(batch.kind);
                     metrics.completed.fetch_add(1, Ordering::Relaxed);
+                    if tracing && tracer.sampled(item.trace) {
+                        record_exec_spans(&tracer, item, t0, exec_ns, &res);
+                    }
                     let _ = item.reply.send(RequestResult { value, latency, error: None });
                 }
             }
@@ -510,6 +598,7 @@ fn worker_loop(
                     batch.items.len(),
                     batch.kind
                 );
+                metrics.record_kind_failed(batch.kind, batch.items.len() as u64);
                 for item in &batch.items {
                     let latency = item.submitted.elapsed();
                     metrics.failed.fetch_add(1, Ordering::Relaxed);
@@ -526,7 +615,25 @@ fn worker_loop(
         // per-worker report, and retire when the manager says so.
         if cfg.health.is_some() {
             if mmpu.scrub_due(0) {
-                let _ = mmpu.health_scrub(0);
+                if let Some(rep) = mmpu.health_scrub(0) {
+                    let w = worker_id as u32;
+                    let eventful =
+                        rep.corrected + rep.uncorrectable + rep.detected + rep.remapped > 0;
+                    if eventful {
+                        journal.record(EventKind::Scrub {
+                            worker: w,
+                            corrected: rep.corrected,
+                            detected: rep.detected.min(u32::MAX as u64) as u32,
+                            remapped: rep.remapped.min(u32::MAX as u64) as u32,
+                        });
+                    }
+                    if rep.detected > 0 {
+                        journal.record(EventKind::StuckCell { worker: w, cells: rep.detected });
+                    }
+                    if rep.remapped > 0 {
+                        journal.record(EventKind::RowRemap { worker: w, rows: rep.remapped });
+                    }
+                }
             }
             // Recommendations build on the *configured base* policy:
             // escalation adds to it, and a de-escalation streak walks
@@ -543,6 +650,17 @@ fn worker_loop(
                     match mmpu.set_policy(rec) {
                         Ok(()) => {
                             eprintln!("worker {worker_id}: policy change {policy:?} -> {rec:?}");
+                            let level = |p: &ReliabilityPolicy| {
+                                (p.ecc_m.is_some() as u8) + (p.tmr != TmrMode::Off) as u8
+                            };
+                            let (old, new) = (level(&policy), level(&rec));
+                            let w = worker_id as u32;
+                            if new > old {
+                                journal.record(EventKind::PolicyEscalate { worker: w, level: new });
+                            } else if new < old {
+                                journal
+                                    .record(EventKind::PolicyDeescalate { worker: w, level: new });
+                            }
                             policy = rec;
                         }
                         Err(e) if !escalation_err_logged => {
@@ -563,6 +681,10 @@ fn worker_loop(
                         healthy[spare].store(true, Ordering::Release);
                     }
                     healthy[worker_id].store(false, Ordering::Relaxed);
+                    journal.record(EventKind::WorkerRetire { worker: worker_id as u32 });
+                    if let Some(spare) = activated {
+                        journal.record(EventKind::SparePromote { unit: spare as u32 });
+                    }
                     eprintln!(
                         "worker {worker_id}: crossbar retired \
                          ({} stuck cells detected, {} spares left){}",

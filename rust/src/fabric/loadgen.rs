@@ -327,7 +327,7 @@ pub struct SealOverhead {
 /// `open` per frame with session keys derived from a throwaway PSK.
 pub fn measure_seal_overhead(frames: u64) -> SealOverhead {
     let msgs = [
-        Msg::Submit { id: 7, kind: FunctionKind::Mul(8), a: 113, b: 223 },
+        Msg::Submit { id: 7, kind: FunctionKind::Mul(8), a: 113, b: 223, trace: 0 },
         Msg::Result { id: 7, value: 25199, latency_us: 180, error: None },
     ];
     let psk = Psk::from_material(b"loadgen seal-overhead probe").expect("static material");
@@ -361,16 +361,107 @@ pub fn measure_seal_overhead(frames: u64) -> SealOverhead {
     }
 }
 
+/// Telemetry hot-path cost (§Telemetry): per-request CPU time through
+/// the data-path frame work alone, with a *disabled* tracer (sample 0
+/// — the single-branch path every untraced request pays), and with
+/// 1-in-64 sampling (mint + sample check + span recording). Purely
+/// informational, like [`SealOverhead`]: it bounds the per-request
+/// telemetry tax independent of network and batching effects. The
+/// acceptance bar is that the disabled arm stays within measurement
+/// noise of the baseline.
+#[derive(Clone, Debug)]
+pub struct TelemetryOverhead {
+    /// Requests measured per arm.
+    pub requests: u64,
+    /// Mean nanoseconds per request with no tracer at all.
+    pub baseline_ns_per_req: f64,
+    /// Mean nanoseconds per request with a disabled tracer (sample 0).
+    pub disabled_ns_per_req: f64,
+    /// Mean nanoseconds per request at 1-in-64 sampling.
+    pub sampled_ns_per_req: f64,
+    /// `(disabled - baseline) / baseline`, percent (noise-level).
+    pub disabled_overhead_pct: f64,
+    /// `(sampled - baseline) / baseline`, percent.
+    pub sampled_overhead_pct: f64,
+}
+
+/// Sampling rate of the measured arm in [`measure_telemetry_overhead`].
+pub const TELEMETRY_PROBE_SAMPLE: u64 = 64;
+
+/// Measure [`TelemetryOverhead`] over the data-path hot loop: every
+/// arm encodes and decodes one `Submit` frame per request (the real
+/// per-request wire work); the tracer arms add exactly what the router
+/// adds — a mint, a sample check, and (when sampled) two span records.
+pub fn measure_telemetry_overhead(requests: u64) -> TelemetryOverhead {
+    use crate::telemetry::{Stage, Tracer, DEFAULT_SPAN_CAPACITY};
+    fn frame_work(trace: u64, sink: &mut u64) {
+        let msg = Msg::Submit { id: 7, kind: FunctionKind::Mul(8), a: 113, b: 223, trace };
+        let bytes = msg.to_bytes();
+        let back = Msg::from_bytes(&bytes).expect("own encoding");
+        *sink = sink.wrapping_add(bytes.len() as u64 + matches!(back, Msg::Submit { .. }) as u64);
+    }
+    let mut sink = 0u64;
+    let t0 = Instant::now();
+    for _ in 0..requests {
+        frame_work(0, &mut sink);
+    }
+    let baseline = t0.elapsed();
+    let off = Tracer::new(0, DEFAULT_SPAN_CAPACITY);
+    let t1 = Instant::now();
+    for _ in 0..requests {
+        let trace = off.mint();
+        frame_work(trace, &mut sink);
+        if off.sampled(trace) {
+            off.record(trace, Stage::RouterQueue, 0, 1);
+            off.record(trace, Stage::WireTransit, 1, 1);
+        }
+    }
+    let disabled = t1.elapsed();
+    let on = Tracer::new(TELEMETRY_PROBE_SAMPLE, DEFAULT_SPAN_CAPACITY);
+    let t2 = Instant::now();
+    for _ in 0..requests {
+        let trace = on.mint();
+        frame_work(trace, &mut sink);
+        if on.sampled(trace) {
+            on.record(trace, Stage::RouterQueue, 0, 1);
+            on.record(trace, Stage::WireTransit, 1, 1);
+        }
+    }
+    let sampled = t2.elapsed();
+    std::hint::black_box(sink);
+    let n = requests.max(1) as f64;
+    let base_ns = baseline.as_nanos() as f64 / n;
+    let off_ns = disabled.as_nanos() as f64 / n;
+    let on_ns = sampled.as_nanos() as f64 / n;
+    let pct = |arm: f64| {
+        if base_ns > 0.0 {
+            (arm - base_ns) / base_ns * 100.0
+        } else {
+            0.0
+        }
+    };
+    TelemetryOverhead {
+        requests,
+        baseline_ns_per_req: base_ns,
+        disabled_ns_per_req: off_ns,
+        sampled_ns_per_req: on_ns,
+        disabled_overhead_pct: pct(off_ns),
+        sampled_overhead_pct: pct(on_ns),
+    }
+}
+
 /// Write a sweep as machine-readable JSON (the `BENCH_loadgen.json`
 /// artifact CI archives; hand-rolled like `bench_harness` — serde is
 /// not in the offline vendor set). `seal` adds the informational
-/// sealed-vs-plaintext frame cost row (`"seal_overhead"`; `null` when
-/// not measured).
+/// sealed-vs-plaintext frame cost row (`"seal_overhead"`), `telemetry`
+/// the disabled-vs-sampled tracing cost row (`"telemetry_overhead"`);
+/// both are `null` when not measured.
 pub fn write_json(
     path: &str,
     cfg: &LoadgenConfig,
     sweep: &SweepReport,
     seal: Option<&SealOverhead>,
+    telemetry: Option<&TelemetryOverhead>,
 ) -> Result<()> {
     let mut out = String::new();
     out.push_str("{\n");
@@ -389,6 +480,20 @@ pub fn write_json(
             s.frames, s.plain_ns_per_frame, s.sealed_ns_per_frame, s.overhead_pct
         )),
         None => out.push_str("  \"seal_overhead\": null,\n"),
+    }
+    match telemetry {
+        Some(t) => out.push_str(&format!(
+            "  \"telemetry_overhead\": {{\"requests\": {}, \"baseline_ns_per_req\": {:.1}, \
+             \"disabled_ns_per_req\": {:.1}, \"sampled_ns_per_req\": {:.1}, \
+             \"disabled_overhead_pct\": {:.1}, \"sampled_overhead_pct\": {:.1}}},\n",
+            t.requests,
+            t.baseline_ns_per_req,
+            t.disabled_ns_per_req,
+            t.sampled_ns_per_req,
+            t.disabled_overhead_pct,
+            t.sampled_overhead_pct
+        )),
+        None => out.push_str("  \"telemetry_overhead\": null,\n"),
     }
     out.push_str("  \"points\": [\n");
     for (i, p) in sweep.points.iter().enumerate() {
@@ -576,13 +681,14 @@ mod tests {
         let sweep = SweepReport { points, knee_qps };
         let path = std::env::temp_dir().join("BENCH_loadgen_selftest.json");
         let path = path.to_str().unwrap().to_string();
-        write_json(&path, &LoadgenConfig::default(), &sweep, None).unwrap();
+        write_json(&path, &LoadgenConfig::default(), &sweep, None, None).unwrap();
         let text = std::fs::read_to_string(&path).unwrap();
         assert!(text.contains("\"bench\": \"loadgen\""));
         assert!(text.contains("\"knee_qps\": 2000.0"));
         assert!(text.contains("\"p99_us\""));
         assert!(text.contains("\"sustained\": false"));
         assert!(text.contains("\"seal_overhead\": null"));
+        assert!(text.contains("\"telemetry_overhead\": null"));
         let _ = std::fs::remove_file(&path);
     }
 
@@ -601,10 +707,37 @@ mod tests {
         let sweep = SweepReport { points: Vec::new(), knee_qps: None };
         let path = std::env::temp_dir().join("BENCH_loadgen_sealtest.json");
         let path = path.to_str().unwrap().to_string();
-        write_json(&path, &LoadgenConfig::default(), &sweep, Some(&s)).unwrap();
+        write_json(&path, &LoadgenConfig::default(), &sweep, Some(&s), None).unwrap();
         let text = std::fs::read_to_string(&path).unwrap();
         assert!(text.contains("\"seal_overhead\": {\"frames\": 512"));
         assert!(text.contains("\"overhead_pct\""));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn telemetry_overhead_measures_and_serializes() {
+        let t = measure_telemetry_overhead(512);
+        assert_eq!(t.requests, 512);
+        assert!(t.baseline_ns_per_req > 0.0);
+        assert!(t.disabled_ns_per_req > 0.0);
+        assert!(t.sampled_ns_per_req > 0.0);
+        // A hard upper bound, not a noise assertion (CI machines are
+        // noisy): the disabled single-branch path cannot plausibly
+        // double the per-request frame cost.
+        assert!(
+            t.disabled_ns_per_req < t.baseline_ns_per_req * 2.0,
+            "disabled tracer path too expensive: baseline {:.1}ns disabled {:.1}ns",
+            t.baseline_ns_per_req,
+            t.disabled_ns_per_req
+        );
+        let sweep = SweepReport { points: Vec::new(), knee_qps: None };
+        let path = std::env::temp_dir().join("BENCH_loadgen_telemetrytest.json");
+        let path = path.to_str().unwrap().to_string();
+        write_json(&path, &LoadgenConfig::default(), &sweep, None, Some(&t)).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("\"telemetry_overhead\": {\"requests\": 512"));
+        assert!(text.contains("\"disabled_overhead_pct\""));
+        assert!(text.contains("\"sampled_overhead_pct\""));
         let _ = std::fs::remove_file(&path);
     }
 }

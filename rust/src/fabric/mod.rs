@@ -43,6 +43,14 @@
 //!   enabled fleet-wide by `--psk-file`; without it the wire stays
 //!   plaintext v3-compatible.
 //!
+//! **Telemetry** (§Telemetry, wire v5): submits optionally carry a
+//! router-minted trace id (`--trace-sample`), shards answer
+//! `Events{since}` / `SpansReq` control frames from their coordinator's
+//! reliability journal and span ring, and the router merges per-shard
+//! journals into one causally ordered fleet timeline
+//! ([`Router::fleet_events`]) and collects fleet-wide stage spans
+//! ([`Router::fleet_spans`]) for `remus top` / `remus trace`.
+//!
 //! Both the in-process coordinator and the router implement
 //! [`crate::coordinator::Submitter`], so every load path (the serve
 //! example, `remus soak`, benches) runs unchanged on either. End-to-end
@@ -60,7 +68,8 @@ pub mod wire;
 
 pub use auth::Psk;
 pub use router::{
-    fetch_metrics, fetch_metrics_auth, probe_health, probe_health_auth, shutdown_endpoint,
-    shutdown_endpoint_auth, Router, RouterConfig,
+    fetch_events, fetch_events_auth, fetch_metrics, fetch_metrics_auth, fetch_spans,
+    fetch_spans_auth, probe_health, probe_health_auth, shutdown_endpoint, shutdown_endpoint_auth,
+    Router, RouterConfig,
 };
 pub use server::FabricServer;

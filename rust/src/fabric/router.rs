@@ -78,6 +78,10 @@ use anyhow::{anyhow, bail, ensure, Context, Result};
 
 use crate::coordinator::{MetricsSnapshot, NO_CAPACITY_ERROR, RequestResult, Submitter};
 use crate::mmpu::FunctionKind;
+use crate::telemetry::{
+    merge_events, Event, EventJournal, EventKind, Stage, TraceSpan, Tracer,
+    DEFAULT_JOURNAL_CAPACITY, DEFAULT_SPAN_CAPACITY, SHARD_NONE,
+};
 
 use super::auth::{client_split, server_split, FrameReader, FrameWriter, Psk};
 use super::wire::Msg;
@@ -157,6 +161,13 @@ pub struct RouterConfig {
     /// `Register` never touches the ring or spare pool). `None` keeps
     /// the plaintext v3 behaviour for mixed-version transitions.
     pub psk: Option<Psk>,
+    /// §Telemetry (wire v5): sample 1 in `trace_sample` requests for
+    /// end-to-end stage tracing. Trace ids are minted here and carried
+    /// to the shards, whose coordinators must run the *same* rate for
+    /// the fleet to record complementary stages of one timeline
+    /// (`fabric-serve --trace-sample`). 0 disables tracing: submits
+    /// stay v1-layout frames and the hot path costs one branch.
+    pub trace_sample: u64,
 }
 
 impl Default for RouterConfig {
@@ -168,6 +179,7 @@ impl Default for RouterConfig {
             heartbeat_period: Duration::from_millis(1000),
             heartbeat_timeout: Duration::from_millis(1000),
             psk: None,
+            trace_sample: 0,
         }
     }
 }
@@ -180,6 +192,13 @@ struct PendingReq {
     b: u64,
     reply: Sender<RequestResult>,
     submitted: Instant,
+    /// §Telemetry: trace id minted at submit (0 = untraced), carried
+    /// on the wire so the shard records complementary stage spans.
+    trace: u64,
+    /// When the request's frame last hit the socket (== `submitted`
+    /// until the first successful write). Splits the router-side time
+    /// into queue (submitted -> sent) and wire transit.
+    sent: Instant,
     /// Shards already tried (failover never loops within one attempt;
     /// cleared when a parked request is re-dispatched after a
     /// membership change).
@@ -300,8 +319,31 @@ struct RouterInner {
     /// Stamped onto the merged snapshot alongside the shards' own
     /// counters.
     auth_rejects: AtomicU64,
+    /// §Telemetry: mints trace ids and records the router-side stage
+    /// spans (ring queue, wire transit) of sampled requests.
+    tracer: Tracer,
+    /// §Telemetry: the router's own reliability events (shard down /
+    /// revive, heartbeat timeouts, failover replays, spare moves,
+    /// auth rejects), recorded with true fleet slot attribution.
+    journal: EventJournal,
+    /// Fleet-merged journal state: per-shard pull cursors plus the
+    /// merged, causally ordered cache (see [`Router::fleet_events`]).
+    fleet: Mutex<FleetEvents>,
     closing: AtomicBool,
 }
+
+/// Cursor + cache state behind [`Router::fleet_events`].
+#[derive(Default)]
+struct FleetEvents {
+    /// Next `Events{since}` cursor per shard slot.
+    cursors: HashMap<usize, u64>,
+    /// The merged fleet timeline pulled so far (bounded: oldest
+    /// entries are dropped past [`FLEET_EVENT_CACHE`]).
+    cache: Vec<Event>,
+}
+
+/// Upper bound on the router's merged fleet-event cache.
+const FLEET_EVENT_CACHE: usize = 8192;
 
 /// The sharded remote submitter.
 pub struct Router {
@@ -342,6 +384,9 @@ impl Router {
             hb_pongs: AtomicU64::new(0),
             hb_timeouts: AtomicU64::new(0),
             auth_rejects: AtomicU64::new(0),
+            tracer: Tracer::new(cfg.trace_sample, DEFAULT_SPAN_CAPACITY),
+            journal: EventJournal::new(DEFAULT_JOURNAL_CAPACITY),
+            fleet: Mutex::new(FleetEvents::default()),
             closing: AtomicBool::new(false),
         });
         inner.rebuild_ring();
@@ -448,11 +493,140 @@ impl Router {
     pub fn submit(&self, kind: FunctionKind, a: u64, b: u64) -> Receiver<RequestResult> {
         let (tx, rx) = channel();
         let id = self.inner.next_id.fetch_add(1, Ordering::Relaxed);
+        let trace = self.inner.tracer.mint();
+        let now = Instant::now();
         self.inner.route(
             id,
-            PendingReq { kind, a, b, reply: tx, submitted: Instant::now(), tried: Vec::new() },
+            PendingReq {
+                kind,
+                a,
+                b,
+                reply: tx,
+                submitted: now,
+                trace,
+                sent: now,
+                tried: Vec::new(),
+            },
         );
         rx
+    }
+
+    /// §Telemetry: the router-side tracer (router queue and wire
+    /// transit spans of sampled requests; see `remus trace`).
+    pub fn tracer(&self) -> &Tracer {
+        &self.inner.tracer
+    }
+
+    /// §Telemetry: the router's own reliability event journal (shard
+    /// membership, heartbeat timeouts, failover replays, auth rejects).
+    pub fn journal(&self) -> &EventJournal {
+        &self.inner.journal
+    }
+
+    /// Router-side stage spans recorded so far.
+    pub fn spans(&self) -> Vec<TraceSpan> {
+        self.inner.tracer.spans()
+    }
+
+    /// Fleet-wide stage spans: the router's own plus every reachable
+    /// shard's, pulled over short-lived control connections
+    /// (`SpansReq`, wire v5). Unreachable shards are skipped — a trace
+    /// is best-effort observability, never a liveness dependency.
+    pub fn fleet_spans(&self) -> Vec<TraceSpan> {
+        let shards: Vec<Arc<ShardState>> = self
+            .inner
+            .shards
+            .read()
+            .unwrap()
+            .iter()
+            .filter(|s| !s.is_placeholder())
+            .cloned()
+            .collect();
+        let probes: Vec<_> = shards
+            .iter()
+            .map(|shard| {
+                let addr = shard.addr();
+                let psk = self.inner.cfg.psk.clone();
+                std::thread::spawn(move || fetch_spans_auth(&addr, psk.as_ref()))
+            })
+            .collect();
+        let mut spans = self.inner.tracer.spans();
+        for probe in probes {
+            if let Ok(Ok(mut s)) = probe.join() {
+                spans.append(&mut s);
+            }
+        }
+        spans
+    }
+
+    /// The merged fleet-wide reliability journal: the router's own
+    /// events plus every reachable shard's, pulled incrementally with
+    /// per-shard `Events{since}` cursors and merged into one causally
+    /// ordered timeline (wall-clock order with a total tiebreak — see
+    /// [`merge_events`]). Imported events are re-stamped with the
+    /// shard's fleet slot so `shard` attribution is fleet-truthful
+    /// (shard-local journals record themselves as shard 0).
+    /// Unreachable shards are skipped this pull; their cursor is
+    /// untouched, so nothing is lost — only delayed.
+    pub fn fleet_events(&self) -> Vec<Event> {
+        let shards: Vec<(usize, Arc<ShardState>)> = self
+            .inner
+            .shards
+            .read()
+            .unwrap()
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| !s.is_placeholder())
+            .map(|(i, s)| (i, s.clone()))
+            .collect();
+        let cursors: Vec<u64> = {
+            let fleet = self.inner.fleet.lock().unwrap();
+            shards.iter().map(|(i, _)| fleet.cursors.get(i).copied().unwrap_or(0)).collect()
+        };
+        let probes: Vec<_> = shards
+            .iter()
+            .zip(&cursors)
+            .map(|((slot, shard), &since)| {
+                let slot = *slot;
+                let addr = shard.addr();
+                let psk = self.inner.cfg.psk.clone();
+                std::thread::spawn(move || (slot, fetch_events_auth(&addr, psk.as_ref(), since)))
+            })
+            .collect();
+        let mut fresh: Vec<Event> = Vec::new();
+        let mut advanced: Vec<(usize, u64)> = Vec::new();
+        for probe in probes {
+            let Ok((slot, fetched)) = probe.join() else { continue };
+            match fetched {
+                Ok((events, latest)) => {
+                    for mut e in events {
+                        // Shard-local journals self-identify as shard 0
+                        // (a shard does not know its fleet slot); the
+                        // router is the one place that does.
+                        e.shard = slot as u32;
+                        fresh.push(e);
+                    }
+                    advanced.push((slot, latest));
+                }
+                Err(e) => {
+                    if !self.inner.closing.load(Ordering::SeqCst) {
+                        eprintln!("router: events from shard {slot} unavailable: {e:#}");
+                    }
+                }
+            }
+        }
+        fresh.extend(self.inner.journal.events());
+        let mut fleet = self.inner.fleet.lock().unwrap();
+        for (slot, latest) in advanced {
+            fleet.cursors.insert(slot, latest);
+        }
+        let cache = std::mem::take(&mut fleet.cache);
+        let mut merged = merge_events(cache, fresh);
+        if merged.len() > FLEET_EVENT_CACHE {
+            merged.drain(..merged.len() - FLEET_EVENT_CACHE);
+        }
+        fleet.cache = merged.clone();
+        merged
     }
 
     /// Merged fleet metrics: every shard (even one marked down for
@@ -645,7 +819,11 @@ impl RouterInner {
                 continue;
             }
             req.tried.push(shard_idx);
-            let msg = Msg::Submit { id, kind: req.kind, a: req.a, b: req.b };
+            let msg = Msg::Submit { id, kind: req.kind, a: req.a, b: req.b, trace: req.trace };
+            // Stamp the queue->wire boundary now (the write happens a
+            // lock acquisition later): submitted -> sent is the
+            // RouterQueue span of a sampled request.
+            req.sent = Instant::now();
             // Register before writing so the reader can match a fast
             // reply; reclaim on write failure.
             shard.pending.lock().unwrap().insert(id, req);
@@ -692,6 +870,7 @@ impl RouterInner {
             self.bump_epoch();
             if !self.closing.load(Ordering::SeqCst) {
                 eprintln!("router: shard {i} ({}) marked down", shard.addr());
+                self.journal.record_for(i as u32, EventKind::ShardDown { shard: i as u32 });
                 self.reconcile_spares();
             }
         }
@@ -730,6 +909,12 @@ impl RouterInner {
                     s.addr(),
                     if want { "promoted into the ring" } else { "demoted back to the pool" }
                 );
+                let kind = if want {
+                    EventKind::SparePromote { unit: i as u32 }
+                } else {
+                    EventKind::SpareDemote { unit: i as u32 }
+                };
+                self.journal.record_for(i as u32, kind);
             }
         }
         drop(shards);
@@ -905,6 +1090,7 @@ fn reader_loop(inner: Arc<RouterInner>, shard_idx: usize, mut reader: FrameReade
                 // next live shard, so the attack costs zero replies.
                 if reader.is_sealed() && !inner.closing.load(Ordering::SeqCst) {
                     inner.auth_rejects.fetch_add(1, Ordering::SeqCst);
+                    inner.journal.record_for(SHARD_NONE, EventKind::AuthReject);
                     eprintln!(
                         "router: shard {shard_idx} data connection failed integrity: {e:#}"
                     );
@@ -921,7 +1107,7 @@ fn reader_loop(inner: Arc<RouterInner>, shard_idx: usize, mut reader: FrameReade
             hb.next_ping = Instant::now() + inner.cfg.heartbeat_period;
         }
         match msg {
-            Msg::Result { id, value, latency_us: _, error } => {
+            Msg::Result { id, value, latency_us, error } => {
                 let req = shard.pending.lock().unwrap().remove(&id);
                 let Some(req) = req else { continue };
                 // An all-workers-retired shard answers every request
@@ -935,6 +1121,22 @@ fn reader_loop(inner: Arc<RouterInner>, shard_idx: usize, mut reader: FrameReade
                     continue;
                 }
                 let latency = req.submitted.elapsed();
+                if inner.tracer.sampled(req.trace) {
+                    // Router-side stages of a sampled request: queue
+                    // (submitted -> last socket write) and wire transit
+                    // (everything the shard's own spans don't cover).
+                    // The shard reported its service time truncated to
+                    // whole µs; rounding it *up* here keeps the
+                    // fleet-wide invariant sum(stages) <= e2e.
+                    let e2e = latency.as_nanos() as u64;
+                    let queue =
+                        req.sent.saturating_duration_since(req.submitted).as_nanos() as u64;
+                    let service = (latency_us + 1) * 1000;
+                    let transit = e2e.saturating_sub(queue).saturating_sub(service);
+                    let t0 = inner.tracer.ns_of(req.submitted);
+                    inner.tracer.record(req.trace, Stage::RouterQueue, t0, queue);
+                    inner.tracer.record(req.trace, Stage::WireTransit, t0 + queue, transit);
+                }
                 let _ = req.reply.send(RequestResult { value, latency, error });
             }
             Msg::Pong { nonce: _ } => {
@@ -953,6 +1155,10 @@ fn reader_loop(inner: Arc<RouterInner>, shard_idx: usize, mut reader: FrameReade
         eprintln!(
             "router: shard {shard_idx} disconnected with {} in flight; rerouting",
             drained.len()
+        );
+        inner.journal.record_for(
+            shard_idx as u32,
+            EventKind::FailoverReplay { shard: shard_idx as u32, replayed: drained.len() as u64 },
         );
     }
     for (id, req) in drained {
@@ -1000,7 +1206,12 @@ fn supervisor_loop(inner: Arc<RouterInner>) {
             let addr = shard.addr();
             match probe_health_auth(&addr, inner.cfg.psk.as_ref()) {
                 Ok((true, ..)) => match connect_shard(&inner, i) {
-                    Ok(()) => eprintln!("router: shard {i} ({addr}) revived"),
+                    Ok(()) => {
+                        eprintln!("router: shard {i} ({addr}) revived");
+                        inner
+                            .journal
+                            .record_for(i as u32, EventKind::ShardRevive { shard: i as u32 });
+                    }
                     Err(e) => eprintln!("router: shard {i} ({addr}) revival failed: {e:#}"),
                 },
                 // Unreachable or not serving (all workers retired):
@@ -1041,6 +1252,9 @@ fn heartbeat_sweep(inner: &Arc<RouterInner>) {
                 hb.outstanding = 0;
                 drop(hb);
                 inner.hb_timeouts.fetch_add(1, Ordering::Relaxed);
+                inner
+                    .journal
+                    .record_for(i as u32, EventKind::HeartbeatTimeout { shard: i as u32 });
                 eprintln!(
                     "router: shard {i} ({}) missed its heartbeat deadline \
                      (half-open connection); marking down",
@@ -1151,6 +1365,7 @@ fn registration_loop(inner: Arc<RouterInner>, listener: TcpListener) {
                         Ok(p) => p,
                         Err(e) => {
                             inner.auth_rejects.fetch_add(1, Ordering::SeqCst);
+                            inner.journal.record_for(SHARD_NONE, EventKind::AuthReject);
                             eprintln!("router: rejected registrant: {e:#}");
                             return;
                         }
@@ -1178,6 +1393,7 @@ fn registration_loop(inner: Arc<RouterInner>, listener: TcpListener) {
                         Err(_) => {
                             if reader.is_sealed() {
                                 inner.auth_rejects.fetch_add(1, Ordering::SeqCst);
+                                inner.journal.record_for(SHARD_NONE, EventKind::AuthReject);
                             }
                         }
                     }
@@ -1246,6 +1462,37 @@ pub fn fetch_metrics_auth(addr: &str, psk: Option<&Psk>) -> Result<MetricsSnapsh
     }
 }
 
+/// Pull one shard's reliability events past `since` over a short-lived
+/// connection (wire v5). Returns the events and the shard's next
+/// cursor (pass it back as `since` on the next pull).
+pub fn fetch_events(addr: &str, since: u64) -> Result<(Vec<Event>, u64)> {
+    fetch_events_auth(addr, None, since)
+}
+
+/// [`fetch_events`] over an authenticated connection when a PSK is
+/// given.
+pub fn fetch_events_auth(addr: &str, psk: Option<&Psk>, since: u64) -> Result<(Vec<Event>, u64)> {
+    match control_roundtrip(addr, psk, &Msg::Events { since })? {
+        Msg::EventsReply { latest, events } => Ok((events, latest)),
+        other => bail!("unexpected reply to Events: {other:?}"),
+    }
+}
+
+/// Pull one shard's recorded stage spans over a short-lived connection
+/// (wire v5).
+pub fn fetch_spans(addr: &str) -> Result<Vec<TraceSpan>> {
+    fetch_spans_auth(addr, None)
+}
+
+/// [`fetch_spans`] over an authenticated connection when a PSK is
+/// given.
+pub fn fetch_spans_auth(addr: &str, psk: Option<&Psk>) -> Result<Vec<TraceSpan>> {
+    match control_roundtrip(addr, psk, &Msg::SpansReq)? {
+        Msg::SpansReply { spans } => Ok(spans),
+        other => bail!("unexpected reply to SpansReq: {other:?}"),
+    }
+}
+
 /// Ask a fabric server process to stop serving (acked).
 pub fn shutdown_endpoint(addr: &str) -> Result<()> {
     shutdown_endpoint_auth(addr, None)
@@ -1303,6 +1550,9 @@ mod tests {
             hb_pongs: AtomicU64::new(0),
             hb_timeouts: AtomicU64::new(0),
             auth_rejects: AtomicU64::new(0),
+            tracer: Tracer::new(0, 16),
+            journal: EventJournal::new(16),
+            fleet: Mutex::new(FleetEvents::default()),
             closing: AtomicBool::new(false),
         };
         inner.rebuild_ring();

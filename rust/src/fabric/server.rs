@@ -338,8 +338,12 @@ fn conn_loop(
             }
         };
         match msg {
-            Msg::Submit { id, kind, a, b } => {
-                let rx = coord.submit(kind, a, b);
+            Msg::Submit { id, kind, a, b, trace } => {
+                // The trace id (wire v5, 0 = untraced) was minted by
+                // the router; carrying it into the coordinator lets
+                // this shard record the worker-side stage spans of the
+                // same end-to-end timeline.
+                let rx = coord.submit_traced(kind, a, b, trace);
                 if reply_tx.send(Reply::Pending(id, rx)).is_err() {
                     break;
                 }
@@ -374,6 +378,25 @@ fn conn_loop(
                     break;
                 }
             }
+            Msg::Events { since } => {
+                // §Telemetry (wire v5): incremental journal pull. The
+                // reply carries this shard's events at-or-past the
+                // caller's cursor plus the next cursor value; the
+                // router merges replies fleet-wide with per-shard
+                // cursors (`Router::fleet_events`).
+                let (events, latest) = coord.journal().since(since);
+                if reply_tx.send(Reply::Now(Msg::EventsReply { latest, events })).is_err() {
+                    break;
+                }
+            }
+            Msg::SpansReq => {
+                // §Telemetry (wire v5): dump this shard's recorded
+                // stage spans (empty unless `--trace-sample` is on).
+                let spans = coord.tracer().spans();
+                if reply_tx.send(Reply::Now(Msg::SpansReply { spans })).is_err() {
+                    break;
+                }
+            }
             Msg::Shutdown => {
                 let _ = reply_tx.send(Reply::Now(Msg::ShutdownAck));
                 stop.store(true, Ordering::SeqCst);
@@ -388,7 +411,9 @@ fn conn_loop(
             | Msg::ShutdownAck
             | Msg::Register { .. }
             | Msg::Welcome { .. }
-            | Msg::Pong { .. } => break,
+            | Msg::Pong { .. }
+            | Msg::EventsReply { .. }
+            | Msg::SpansReply { .. } => break,
         }
     }
     // Closing the reply channel lets the writer drain the pending

@@ -20,8 +20,10 @@ use std::io::{Read, Write};
 
 use anyhow::{anyhow, bail, ensure, Result};
 
-use crate::coordinator::{MetricsSnapshot, WorkerHealth};
+use crate::coordinator::{KindStats, MetricsSnapshot, WorkerHealth};
+use crate::mmpu::functions::KIND_FAMILIES;
 use crate::mmpu::FunctionKind;
+use crate::telemetry::{Event, EventKind, Stage, TraceSpan};
 
 /// Newest protocol version this peer speaks. v2 added shard
 /// registration (`Register`/`Welcome`) and the fleet-membership
@@ -33,10 +35,16 @@ use crate::mmpu::FunctionKind;
 /// v4 added the authentication-reject counter (`auth_rejects`) trailing
 /// the snapshot body; sealed transport (see [`crate::fabric::auth`])
 /// wraps these same frames and is negotiated per connection, not per
-/// version byte. Each frame is stamped with the *lowest* version that
-/// can represent its message ([`Msg::min_version`]), so older peers
-/// keep understanding the unchanged message layouts.
-pub const WIRE_VERSION: u8 = 4;
+/// version byte. v5 added telemetry (see [`crate::telemetry`]): an
+/// optional trace id trailing `Submit` (only present — and only
+/// v5-stamped — when nonzero), the observability counters trailing the
+/// snapshot body (`uptime_ns`, latency overflow/exact max, per-kind
+/// counters), and the control-plane `Events`/`EventsReply` +
+/// `SpansReq`/`SpansReply` messages. Each frame is stamped with the
+/// *lowest* version that can represent its message
+/// ([`Msg::min_version`]), so older peers keep understanding the
+/// unchanged message layouts.
+pub const WIRE_VERSION: u8 = 5;
 
 /// Oldest version this decoder still accepts. v1/v2 frames decode
 /// compatibly (the snapshot's missing membership/heartbeat counters
@@ -56,8 +64,11 @@ pub const MAX_FRAME: usize = 1 << 24;
 /// retried requests re-keyed across shards.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Msg {
-    /// Client -> server: execute `kind(a, b)`.
-    Submit { id: u64, kind: FunctionKind, a: u64, b: u64 },
+    /// Client -> server: execute `kind(a, b)`. `trace` (wire v5) is the
+    /// request's fleet-wide trace id — 0 means untraced, and an
+    /// untraced submit keeps the exact v1 layout so old shards
+    /// interoperate (see [`crate::telemetry`]).
+    Submit { id: u64, kind: FunctionKind, a: u64, b: u64, trace: u64 },
     /// Server -> client: outcome of the `Submit` with the same `id`.
     /// `error` mirrors [`crate::coordinator::RequestResult::error`].
     Result { id: u64, value: u64, latency_us: u64, error: Option<String> },
@@ -95,6 +106,18 @@ pub enum Msg {
     /// connection's ordinary FIFO reply stream, so any inbound frame —
     /// a `Result` ahead of the pong included — proves liveness.
     Pong { nonce: u64 },
+    /// Client/router -> shard (wire v5): pull the shard's reliability
+    /// event journal from sequence number `since` on (a resumable
+    /// cursor — see `telemetry::EventJournal::since`).
+    Events { since: u64 },
+    /// Shard -> client (wire v5): journal slice plus the cursor to
+    /// resume from (`latest` always advances, even past entries the
+    /// bounded journal already overwrote).
+    EventsReply { latest: u64, events: Vec<Event> },
+    /// Client/router -> shard (wire v5): pull the shard's retained
+    /// sampled trace spans.
+    SpansReq,
+    SpansReply { spans: Vec<TraceSpan> },
 }
 
 impl Msg {
@@ -112,6 +135,10 @@ impl Msg {
             Msg::Welcome { .. } => 10,
             Msg::Ping { .. } => 11,
             Msg::Pong { .. } => 12,
+            Msg::Events { .. } => 13,
+            Msg::EventsReply { .. } => 14,
+            Msg::SpansReq => 15,
+            Msg::SpansReply { .. } => 16,
         }
     }
 
@@ -125,7 +152,14 @@ impl Msg {
     /// labeled with the version that introduced them.
     fn min_version(&self) -> u8 {
         match self {
-            Msg::MetricsReply(_) => 4,
+            Msg::MetricsReply(_)
+            | Msg::Events { .. }
+            | Msg::EventsReply { .. }
+            | Msg::SpansReq
+            | Msg::SpansReply { .. } => 5,
+            // A traced submit carries the trailing trace id; an
+            // untraced one keeps the exact v1 layout for old shards.
+            Msg::Submit { trace, .. } if *trace != 0 => 5,
             Msg::Ping { .. } | Msg::Pong { .. } => 3,
             Msg::Register { prev: Some(_), .. } => 3,
             Msg::Register { prev: None, .. } | Msg::Welcome { .. } => 2,
@@ -140,11 +174,17 @@ impl Msg {
         out.push(self.min_version());
         out.push(self.type_id());
         match self {
-            Msg::Submit { id, kind, a, b } => {
+            Msg::Submit { id, kind, a, b, trace } => {
                 put_u64(&mut out, *id);
                 put_kind(&mut out, *kind);
                 put_u64(&mut out, *a);
                 put_u64(&mut out, *b);
+                // The trace id trails the v1 body, and only in
+                // v5-stamped frames (untraced submits keep the exact
+                // v1 layout for old shards).
+                if *trace != 0 {
+                    put_u64(&mut out, *trace);
+                }
             }
             Msg::Result { id, value, latency_us, error } => {
                 put_u64(&mut out, *id);
@@ -183,6 +223,21 @@ impl Msg {
                 out.push(*active as u8);
             }
             Msg::Ping { nonce } | Msg::Pong { nonce } => put_u64(&mut out, *nonce),
+            Msg::Events { since } => put_u64(&mut out, *since),
+            Msg::EventsReply { latest, events } => {
+                put_u64(&mut out, *latest);
+                put_u32(&mut out, events.len() as u32);
+                for e in events {
+                    put_event(&mut out, e);
+                }
+            }
+            Msg::SpansReq => {}
+            Msg::SpansReply { spans } => {
+                put_u32(&mut out, spans.len() as u32);
+                for s in spans {
+                    put_span(&mut out, s);
+                }
+            }
         }
         out
     }
@@ -205,7 +260,10 @@ impl Msg {
                 let kind = c.kind()?;
                 let a = c.u64()?;
                 let b = c.u64()?;
-                Msg::Submit { id, kind, a, b }
+                // v5 appended the trace id; only traced submits are
+                // v5-stamped, so the field is present iff version >= 5.
+                let trace = if version >= 5 { c.u64()? } else { 0 };
+                Msg::Submit { id, kind, a, b, trace }
             }
             2 => {
                 let id = c.u64()?;
@@ -236,6 +294,9 @@ impl Msg {
             11 | 12 if version < 3 => {
                 bail!("message type {} requires wire version >= 3 (frame is v{version})", type_id)
             }
+            13..=16 if version < 5 => {
+                bail!("message type {} requires wire version >= 5 (frame is v{version})", type_id)
+            }
             9 => {
                 let name = c.string()?;
                 let addr = c.string()?;
@@ -260,6 +321,27 @@ impl Msg {
             }
             11 => Msg::Ping { nonce: c.u64()? },
             12 => Msg::Pong { nonce: c.u64()? },
+            13 => Msg::Events { since: c.u64()? },
+            14 => {
+                let latest = c.u64()?;
+                let n = c.u32()? as usize;
+                ensure!(n <= 1 << 16, "implausible event count {n}");
+                let mut events = Vec::with_capacity(n.min(4096));
+                for _ in 0..n {
+                    events.push(c.event()?);
+                }
+                Msg::EventsReply { latest, events }
+            }
+            15 => Msg::SpansReq,
+            16 => {
+                let n = c.u32()? as usize;
+                ensure!(n <= 1 << 20, "implausible span count {n}");
+                let mut spans = Vec::with_capacity(n.min(4096));
+                for _ in 0..n {
+                    spans.push(c.span()?);
+                }
+                Msg::SpansReply { spans }
+            }
             t => bail!("unknown message type {t}"),
         };
         ensure!(c.pos == bytes.len(), "trailing bytes after {} message", type_name(type_id));
@@ -281,6 +363,10 @@ fn type_name(t: u8) -> &'static str {
         10 => "Welcome",
         11 => "Ping",
         12 => "Pong",
+        13 => "Events",
+        14 => "EventsReply",
+        15 => "SpansReq",
+        16 => "SpansReply",
         _ => "unknown",
     }
 }
@@ -382,6 +468,35 @@ fn put_snapshot(out: &mut Vec<u8>, s: &MetricsSnapshot) {
     put_u64(out, s.hb_timeouts);
     // The authentication-reject counter trails the v3 body (v4).
     put_u64(out, s.auth_rejects);
+    // The observability counters trail the v4 body (v5): uptime,
+    // latency-histogram honesty (overflow count + exact max), and the
+    // fixed-width per-kind-family attribution counters.
+    put_u64(out, s.uptime_ns);
+    put_u64(out, s.lat_overflow);
+    put_u64(out, s.lat_max_us);
+    for ks in &s.kind_stats {
+        put_u64(out, ks.submitted);
+        put_u64(out, ks.completed);
+        put_u64(out, ks.failed);
+    }
+}
+
+fn put_event(out: &mut Vec<u8>, e: &Event) {
+    put_u64(out, e.seq);
+    put_u32(out, e.shard);
+    put_u64(out, e.at_ns);
+    let (tag, a, b, c) = e.kind.to_words();
+    out.push(tag);
+    put_u64(out, a);
+    put_u64(out, b);
+    put_u64(out, c);
+}
+
+fn put_span(out: &mut Vec<u8>, s: &TraceSpan) {
+    put_u64(out, s.trace);
+    out.push(s.stage as u8);
+    put_u64(out, s.start_ns);
+    put_u64(out, s.dur_ns);
 }
 
 struct Cursor<'a> {
@@ -487,6 +602,18 @@ impl<'a> Cursor<'a> {
         let (hb_pings, hb_pongs, hb_timeouts) =
             if version >= 3 { (self.u64()?, self.u64()?, self.u64()?) } else { (0, 0, 0) };
         let auth_rejects = if version >= 4 { self.u64()? } else { 0 };
+        // v5 appended the observability counters; older snapshots
+        // report zeros (readers treat 0 uptime / 0 max as "unknown").
+        let (uptime_ns, lat_overflow, lat_max_us) =
+            if version >= 5 { (self.u64()?, self.u64()?, self.u64()?) } else { (0, 0, 0) };
+        let mut kind_stats = [KindStats::default(); KIND_FAMILIES];
+        if version >= 5 {
+            for ks in kind_stats.iter_mut() {
+                ks.submitted = self.u64()?;
+                ks.completed = self.u64()?;
+                ks.failed = self.u64()?;
+            }
+        }
         Ok(MetricsSnapshot {
             submitted,
             completed,
@@ -497,6 +624,10 @@ impl<'a> Cursor<'a> {
             queue_depth,
             worker_health,
             lat_bins,
+            lat_overflow,
+            lat_max_us,
+            uptime_ns,
+            kind_stats,
             shards_total,
             shards_down,
             hb_pings,
@@ -504,6 +635,27 @@ impl<'a> Cursor<'a> {
             hb_timeouts,
             auth_rejects,
         })
+    }
+
+    fn event(&mut self) -> Result<Event> {
+        let seq = self.u64()?;
+        let shard = self.u32()?;
+        let at_ns = self.u64()?;
+        let tag = self.u8()?;
+        let (a, b, cc) = (self.u64()?, self.u64()?, self.u64()?);
+        let kind = EventKind::from_words(tag, a, b, cc)
+            .ok_or_else(|| anyhow!("unknown event kind tag {tag}"))?;
+        Ok(Event { seq, shard, at_ns, kind })
+    }
+
+    fn span(&mut self) -> Result<TraceSpan> {
+        let trace = self.u64()?;
+        let stage_byte = self.u8()?;
+        let stage = Stage::from_u8(stage_byte)
+            .ok_or_else(|| anyhow!("unknown trace stage {stage_byte}"))?;
+        let start_ns = self.u64()?;
+        let dur_ns = self.u64()?;
+        Ok(TraceSpan { trace, stage, start_ns, dur_ns })
     }
 }
 
@@ -513,11 +665,18 @@ mod tests {
 
     #[test]
     fn submit_roundtrip_and_layout() {
-        let msg = Msg::Submit { id: 7, kind: FunctionKind::Mul(16), a: 123, b: 456 };
+        let msg = Msg::Submit { id: 7, kind: FunctionKind::Mul(16), a: 123, b: 456, trace: 0 };
         let bytes = msg.to_bytes();
         assert_eq!(bytes[0], 1, "v1-expressible messages stay v1-labeled for old peers");
         assert_eq!(bytes[1], 1);
         assert_eq!(Msg::from_bytes(&bytes).unwrap(), msg);
+        // A traced submit carries the trailing id and is v5-stamped.
+        let traced =
+            Msg::Submit { id: 7, kind: FunctionKind::Mul(16), a: 123, b: 456, trace: 0xBEEF };
+        let tb = traced.to_bytes();
+        assert_eq!(tb[0], 5, "traced submits need the v5 trailing field");
+        assert_eq!(tb.len(), bytes.len() + 8);
+        assert_eq!(Msg::from_bytes(&tb).unwrap(), traced);
         // Messages keep the lowest version label their layout allows.
         let reg = Msg::Register { name: "a".into(), addr: "b".into(), spare: false, prev: None };
         assert_eq!(reg.to_bytes()[0], 2, "a prev-less Register keeps the v2 layout");
@@ -527,12 +686,15 @@ mod tests {
         assert_eq!(Msg::MetricsReply(MetricsSnapshot::default()).to_bytes()[0], WIRE_VERSION);
         assert_eq!(Msg::Ping { nonce: 9 }.to_bytes()[0], 3, "heartbeats keep the v3 layout");
         assert_eq!(Msg::Pong { nonce: 9 }.to_bytes()[0], 3, "heartbeats keep the v3 layout");
+        assert_eq!(Msg::Events { since: 0 }.to_bytes()[0], 5, "telemetry messages are v5");
+        assert_eq!(Msg::SpansReq.to_bytes()[0], 5, "telemetry messages are v5");
     }
 
     #[test]
     fn framing_roundtrip_over_a_byte_stream() {
         let msgs = vec![
-            Msg::Submit { id: 1, kind: FunctionKind::Add(8), a: 2, b: 3 },
+            Msg::Submit { id: 1, kind: FunctionKind::Add(8), a: 2, b: 3, trace: 0 },
+            Msg::Submit { id: 9, kind: FunctionKind::Xor(16), a: 4, b: 5, trace: 77 },
             Msg::Result { id: 1, value: 5, latency_us: 12, error: None },
             Msg::Result { id: 2, value: 0, latency_us: 9, error: Some("boom".into()) },
             Msg::MetricsReq,
@@ -554,6 +716,31 @@ mod tests {
             Msg::Welcome { shard: 3, active: false },
             Msg::Ping { nonce: 0xDEAD },
             Msg::Pong { nonce: 0xDEAD },
+            Msg::Events { since: 42 },
+            Msg::EventsReply {
+                latest: 3,
+                events: vec![
+                    Event {
+                        seq: 1,
+                        shard: 0,
+                        at_ns: 123,
+                        kind: EventKind::Scrub {
+                            worker: 0,
+                            corrected: 5,
+                            detected: 1,
+                            remapped: 1,
+                        },
+                    },
+                    Event { seq: 2, shard: 1, at_ns: 456, kind: EventKind::AuthReject },
+                ],
+            },
+            Msg::SpansReq,
+            Msg::SpansReply {
+                spans: vec![
+                    TraceSpan { trace: 77, stage: Stage::RouterQueue, start_ns: 1, dur_ns: 2 },
+                    TraceSpan { trace: 77, stage: Stage::Readback, start_ns: 9, dur_ns: 3 },
+                ],
+            },
         ];
         let mut stream = Vec::new();
         for m in &msgs {
@@ -581,6 +768,15 @@ mod tests {
                 WorkerHealth { batches: 3, scrubs: 1, retired: true, ..Default::default() },
                 WorkerHealth::default(),
             ],
+            lat_overflow: 2,
+            lat_max_us: 40_000_000,
+            uptime_ns: 9_876_543_210,
+            kind_stats: [
+                KindStats { submitted: 5, completed: 4, failed: 1 },
+                KindStats::default(),
+                KindStats { submitted: 1, completed: 1, failed: 0 },
+                KindStats::default(),
+            ],
             shards_total: 3,
             shards_down: 1,
             hb_pings: 40,
@@ -594,10 +790,11 @@ mod tests {
 
     #[test]
     fn old_version_frames_decode_compatibly() {
-        // A v3 MetricsReply lacks the trailing auth-reject counter, a v2
-        // one also the heartbeat counters, a v1 one also the membership
-        // counters: strip them from a v4 encoding and relabel the
-        // version byte.
+        // A v4 MetricsReply lacks the trailing observability counters
+        // (uptime + histogram honesty + per-kind stats: 15 u64s), a v3
+        // one also the auth-reject counter, a v2 one also the heartbeat
+        // counters, a v1 one also the membership counters: strip them
+        // from a v5 encoding and relabel the version byte.
         let snap = MetricsSnapshot {
             completed: 9,
             lat_bins: vec![1, 2],
@@ -606,10 +803,36 @@ mod tests {
             hb_pings: 5,
             hb_pongs: 4,
             hb_timeouts: 1,
+            auth_rejects: 3,
+            uptime_ns: 777,
+            lat_overflow: 1,
+            lat_max_us: 123,
             ..Default::default()
         };
+        let mut v4 = Msg::MetricsReply(snap.clone()).to_bytes();
+        v4.truncate(v4.len() - 120);
+        v4[0] = 4;
+        match Msg::from_bytes(&v4).unwrap() {
+            Msg::MetricsReply(got) => {
+                let expect = MetricsSnapshot {
+                    uptime_ns: 0,
+                    lat_overflow: 0,
+                    lat_max_us: 0,
+                    ..snap.clone()
+                };
+                assert_eq!(got, expect, "v5 observability fields default to 0 for v4 peers")
+            }
+            other => panic!("unexpected decode: {other:?}"),
+        }
+        let snap = MetricsSnapshot {
+            uptime_ns: 0,
+            lat_overflow: 0,
+            lat_max_us: 0,
+            auth_rejects: 0,
+            ..snap
+        };
         let mut v3 = Msg::MetricsReply(snap.clone()).to_bytes();
-        v3.truncate(v3.len() - 8);
+        v3.truncate(v3.len() - 128);
         v3[0] = 3;
         match Msg::from_bytes(&v3).unwrap() {
             Msg::MetricsReply(got) => {
@@ -619,7 +842,7 @@ mod tests {
         }
         let snap = MetricsSnapshot { hb_pings: 0, hb_pongs: 0, hb_timeouts: 0, ..snap };
         let mut v2 = Msg::MetricsReply(snap.clone()).to_bytes();
-        v2.truncate(v2.len() - 32);
+        v2.truncate(v2.len() - 152);
         v2[0] = 2;
         match Msg::from_bytes(&v2).unwrap() {
             Msg::MetricsReply(got) => {
@@ -628,7 +851,7 @@ mod tests {
             other => panic!("unexpected decode: {other:?}"),
         }
         let mut v1 = Msg::MetricsReply(snap.clone()).to_bytes();
-        v1.truncate(v1.len() - 48);
+        v1.truncate(v1.len() - 168);
         v1[0] = 1;
         match Msg::from_bytes(&v1).unwrap() {
             Msg::MetricsReply(got) => {
@@ -640,9 +863,29 @@ mod tests {
         }
         // Fixed-layout messages are identical across versions.
         let mut submit =
-            Msg::Submit { id: 1, kind: FunctionKind::Add(8), a: 2, b: 3 }.to_bytes();
+            Msg::Submit { id: 1, kind: FunctionKind::Add(8), a: 2, b: 3, trace: 0 }.to_bytes();
         submit[0] = 1;
         assert!(Msg::from_bytes(&submit).is_ok());
+        // A traced submit relabeled v4 has trailing bytes the v4
+        // layout cannot express: a clean error, not a misparse.
+        let mut traced =
+            Msg::Submit { id: 1, kind: FunctionKind::Add(8), a: 2, b: 3, trace: 9 }.to_bytes();
+        traced[0] = 4;
+        assert!(Msg::from_bytes(&traced).is_err(), "trace id requires wire v5");
+        // v5-only types inside a v4 frame are rejected.
+        let v5_only = [
+            Msg::Events { since: 0 },
+            Msg::EventsReply { latest: 0, events: vec![] },
+            Msg::SpansReq,
+            Msg::SpansReply { spans: vec![] },
+        ];
+        for m in v5_only {
+            for v in [1u8, 4] {
+                let mut bytes = m.to_bytes();
+                bytes[0] = v;
+                assert!(Msg::from_bytes(&bytes).is_err(), "{m:?} requires wire v5");
+            }
+        }
         // v2-only types inside a v1 frame are rejected.
         let mut reg = Msg::Register { name: "x".into(), addr: "y".into(), spare: false, prev: None }
             .to_bytes();

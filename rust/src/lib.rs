@@ -14,6 +14,8 @@
 //!   plus the online fault manager (scrubbing, spare remapping, wear-out).
 //! * [`mmpu`], [`coordinator`], [`fabric`] — the controller, the
 //!   request path, and the sharded multi-process serving layer.
+//! * [`telemetry`] — per-request trace spans and the reliability
+//!   event journal (fleet-wide observability).
 //! * [`runtime`] — PJRT execution of the AOT-lowered JAX/Pallas kernels.
 //! * [`nn`], [`analysis`], [`bitlet`] — the case study and the
 //!   figure/table reproductions.
@@ -35,6 +37,7 @@ pub mod isa;
 pub mod mmpu;
 pub mod nn;
 pub mod runtime;
+pub mod telemetry;
 pub mod testutil;
 pub mod tmr;
 pub mod util;

@@ -61,6 +61,29 @@
 //!                                     # Default target: an in-process
 //!                                     # coordinator (fabric flags swap
 //!                                     # in a router)
+//! remus top [--shards a:p,b:p | --listen-reg addr] [--watch
+//!            --interval-ms 1000 --rounds N]
+//!                                     # §Telemetry live fleet
+//!                                     # inspection: merged metrics,
+//!                                     # per-kind counters, worker
+//!                                     # health, and the fleet-merged
+//!                                     # reliability event journal.
+//!                                     # One-shot by default (--once is
+//!                                     # accepted as an explicit
+//!                                     # synonym); --watch refreshes
+//!                                     # every --interval-ms
+//! remus trace [--requests 2048 --trace-sample 16]
+//!             [--shards a:p,b:p | --listen-reg addr]
+//!             [--json --out BENCH_telemetry.json]
+//!                                     # §Telemetry stage tracing:
+//!                                     # drive sampled load, collect
+//!                                     # the per-stage spans (router
+//!                                     # queue, wire transit, batcher
+//!                                     # wait, worker exec, ECC, TMR
+//!                                     # vote, readback), and print
+//!                                     # per-stage percentiles.
+//!                                     # Fabric shards must run the
+//!                                     # same --trace-sample rate
 //! ```
 //!
 //! Every fabric role additionally accepts `--psk-file <path>`
@@ -82,6 +105,7 @@ use remus::fabric::{shutdown_endpoint_auth, FabricServer, Psk, Router, RouterCon
 use remus::health::{HealthConfig, WearModel};
 use remus::mmpu::{controller::quick_exec, FunctionKind, ReliabilityPolicy};
 use remus::nn::degradation::DegradationModel;
+use remus::telemetry::{stage_summaries, unix_now_ns, StageSummary, SHARD_NONE};
 use remus::tmr::TmrMode;
 use remus::util::cli::Args;
 use remus::util::stats::logspace;
@@ -104,10 +128,12 @@ fn main() -> Result<()> {
         Some("fabric-route") => fabric_route(&args),
         Some("fabric-soak") => fabric_soak(&args),
         Some("loadgen") => loadgen_cmd(&args),
+        Some("top") => top_cmd(&args),
+        Some("trace") => trace_cmd(&args),
         _ => {
             eprintln!(
                 "usage: remus <info|demo|fig4|fig5|overhead|tradeoff|serve|soak|lifetime|\
-                 fabric-serve|fabric-route|fabric-soak|loadgen> [--opts]\n \
+                 fabric-serve|fabric-route|fabric-soak|loadgen|top|trace> [--opts]\n \
                  see doc comments in rust/src/main.rs"
             );
             Ok(())
@@ -273,7 +299,7 @@ fn serve(args: &Args) -> Result<()> {
     // which discovers shards through registration) swaps the in-process
     // coordinator for a fabric router with no other change.
     if args.get("shards").is_some() || args.get("listen-reg").is_some() {
-        let router = router_from_args(args, shard_addrs_from_args(args), "serve")?;
+        let router = router_from_args(args, shard_addrs_from_args(args), "serve", 0)?;
         println!("serving through the fabric router over {} shards", router.shard_count());
         serve_load(&router, requests)?;
         let m = router.metrics();
@@ -515,10 +541,17 @@ fn psk_from_args(args: &Args) -> Result<Option<Psk>> {
 
 /// Build a fabric router from the shared CLI flag surface — the one
 /// place `--probe-ms`, `--retry-ms`, `--listen-reg`, `--hb-ms`,
-/// `--hb-timeout-ms` and `--psk-file` are wired, so `serve`,
-/// `fabric-route` and `loadgen` cannot drift apart — then announce the
-/// registration port and wait for `--min-shards`.
-fn router_from_args(args: &Args, addrs: Vec<String>, ctx: &str) -> Result<Router> {
+/// `--hb-timeout-ms`, `--psk-file` and `--trace-sample` are wired, so
+/// `serve`, `fabric-route`, `loadgen`, `top` and `trace` cannot drift
+/// apart — then announce the registration port and wait for
+/// `--min-shards`. `trace_default` is the `--trace-sample` fallback
+/// (0 everywhere except `remus trace`, which samples by default).
+fn router_from_args(
+    args: &Args,
+    addrs: Vec<String>,
+    ctx: &str,
+    trace_default: u64,
+) -> Result<Router> {
     let rcfg = RouterConfig {
         probe_period: std::time::Duration::from_millis(args.get_or("probe-ms", 250u64)),
         retry_window: std::time::Duration::from_millis(args.get_or("retry-ms", 1000u64)),
@@ -526,6 +559,7 @@ fn router_from_args(args: &Args, addrs: Vec<String>, ctx: &str) -> Result<Router
         heartbeat_period: std::time::Duration::from_millis(args.get_or("hb-ms", 1000u64)),
         heartbeat_timeout: std::time::Duration::from_millis(args.get_or("hb-timeout-ms", 1000u64)),
         psk: psk_from_args(args)?,
+        trace_sample: args.get_or("trace-sample", trace_default),
     };
     let router = Router::with_config(&addrs, rcfg)?;
     announce_registration(&router, args, addrs.len(), ctx);
@@ -548,6 +582,7 @@ fn shard_config(args: &Args) -> CoordinatorConfig {
         seed: args.get_or("seed", 0xC0u64),
         max_batch: args.get_or("max-batch", 64usize),
         max_wait: std::time::Duration::from_micros(args.get_or("max-wait-us", 300u64)),
+        trace_sample: args.get_or("trace-sample", 0u64),
         health: if args.flag("health") {
             Some(HealthConfig {
                 wear: WearModel::accelerated(args.get_or("endurance", 3e4f64)),
@@ -594,7 +629,7 @@ fn fabric_route(args: &Args) -> Result<()> {
         _ => shard_addrs_from_args(args),
     };
     let requests = args.get_or("requests", 8192u64);
-    let router = router_from_args(args, shards, "fabric-route")?;
+    let router = router_from_args(args, shards, "fabric-route", 0)?;
     // add8 and xor16 land on different shards of a 2-entry ring.
     let kinds = [FunctionKind::Add(8), FunctionKind::Xor(16), FunctionKind::Mul(8)];
     for k in kinds {
@@ -659,7 +694,17 @@ fn spawn_shard(
     }
     // Forward every shard_config option so the children run exactly the
     // configuration the user asked for.
-    for key in ["rows", "cols", "spares", "max-batch", "max-wait-us", "endurance", "psk-file"] {
+    let keys = [
+        "rows",
+        "cols",
+        "spares",
+        "max-batch",
+        "max-wait-us",
+        "endurance",
+        "psk-file",
+        "trace-sample",
+    ];
+    for key in keys {
         if let Some(v) = args.get(key) {
             cmd.arg(format!("--{key}")).arg(v);
         }
@@ -921,7 +966,23 @@ fn run_loadgen_sweep(
          ({:+.1}%)",
         seal.frames, seal.plain_ns_per_frame, seal.sealed_ns_per_frame, seal.overhead_pct
     );
-    loadgen::write_json(out, cfg, &sweep, Some(&seal))?;
+    // Informational telemetry hot-path cost (§Telemetry): the same
+    // methodology for the tracing tax — the disabled arm must stay
+    // within noise of the baseline, which is the acceptance bar for
+    // shipping tracing machinery on the data path at all.
+    let telemetry = loadgen::measure_telemetry_overhead(4096);
+    println!(
+        "telemetry overhead ({} requests): baseline {:.0}ns/req, disabled tracer {:.0}ns/req \
+         ({:+.1}%), 1-in-{} sampling {:.0}ns/req ({:+.1}%)",
+        telemetry.requests,
+        telemetry.baseline_ns_per_req,
+        telemetry.disabled_ns_per_req,
+        telemetry.disabled_overhead_pct,
+        loadgen::TELEMETRY_PROBE_SAMPLE,
+        telemetry.sampled_ns_per_req,
+        telemetry.sampled_overhead_pct
+    );
+    loadgen::write_json(out, cfg, &sweep, Some(&seal), Some(&telemetry))?;
     println!("(machine-readable results written to {out})");
     Ok(())
 }
@@ -955,7 +1016,7 @@ fn loadgen_cmd(args: &Args) -> Result<()> {
     // any fabric flag is given, the in-process coordinator otherwise —
     // the generator itself is Submitter-generic.
     if args.get("shards").is_some() || args.get("listen-reg").is_some() {
-        let router = router_from_args(args, shard_addrs_from_args(args), "loadgen")?;
+        let router = router_from_args(args, shard_addrs_from_args(args), "loadgen", 0)?;
         let res = run_loadgen_sweep(&router, &cfg, &qps_points, &out);
         let m = router.metrics();
         println!(
@@ -975,4 +1036,204 @@ fn loadgen_cmd(args: &Args) -> Result<()> {
         coord.shutdown();
         res
     }
+}
+
+/// One `remus top` frame: merged fleet metrics, per-kind counters,
+/// per-worker health, and the newest entries of the fleet-merged
+/// reliability event journal (each pulled over the wire with per-shard
+/// cursors, so repeated frames are incremental).
+fn print_top_frame(router: &Router) {
+    let m = router.metrics();
+    let uptime_s = m.uptime_ns as f64 / 1e9;
+    let qps = if uptime_s > 0.0 {
+        m.completed as f64 / uptime_s
+    } else {
+        0.0
+    };
+    println!(
+        "== remus top: {}/{} shards up ({} down), fleet uptime {:.1}s ==",
+        m.shards_total - m.shards_down,
+        m.shards_total,
+        m.shards_down,
+        uptime_s
+    );
+    println!(
+        "requests: submitted={} completed={} failed={} (~{qps:.0} req/s over the uptime)",
+        m.submitted, m.completed, m.failed
+    );
+    println!(
+        "latency: p50={}us p99={}us max={}us ({} samples past the top histogram bin)",
+        m.latency_percentile_us(50.0),
+        m.latency_percentile_us(99.0),
+        m.lat_max_us,
+        m.lat_overflow
+    );
+    for (family, k) in m.kind_stats.iter().enumerate() {
+        if k.submitted + k.completed + k.failed > 0 {
+            println!(
+                "  kind {:<9} submitted={} completed={} failed={}",
+                FunctionKind::family_name(family),
+                k.submitted,
+                k.completed,
+                k.failed
+            );
+        }
+    }
+    print_worker_health("fleet", &m);
+    let events = router.fleet_events();
+    let now = unix_now_ns();
+    let tail = events.len().saturating_sub(16);
+    println!(
+        "events: {} in the merged fleet journal (newest {} shown)",
+        events.len(),
+        events.len() - tail
+    );
+    for e in &events[tail..] {
+        let origin = if e.shard == SHARD_NONE {
+            "fabric".to_string()
+        } else {
+            format!("shard {}", e.shard)
+        };
+        let age_s = now.saturating_sub(e.at_ns) as f64 / 1e9;
+        println!("  [{age_s:>9.3}s ago] {origin:<8} {}", e.kind.describe());
+    }
+}
+
+/// §Telemetry live fleet inspection (`remus top`): attach a read-only
+/// router to a running fleet and print dashboard frames. One-shot by
+/// default (`--once` is accepted as the explicit synonym); `--watch`
+/// redraws every `--interval-ms`, bounded by `--rounds` so CI can
+/// smoke-test the watch loop without hanging.
+fn top_cmd(args: &Args) -> Result<()> {
+    let shards = shard_addrs_from_args(args);
+    anyhow::ensure!(
+        !shards.is_empty() || args.get("listen-reg").is_some(),
+        "remus top needs a fleet: --shards a:p,b:p and/or --listen-reg host:port"
+    );
+    let router = router_from_args(args, shards, "top", 0)?;
+    let rounds = if args.flag("watch") {
+        args.get_or("rounds", u64::MAX)
+    } else {
+        1
+    };
+    let interval = std::time::Duration::from_millis(args.get_or("interval-ms", 1000u64));
+    for round in 0..rounds {
+        if round > 0 {
+            std::thread::sleep(interval);
+        }
+        print_top_frame(&router);
+    }
+    router.shutdown();
+    Ok(())
+}
+
+/// The `remus trace` JSON artifact (CI archives it next to the bench
+/// JSON files): sampling config, span/trace counts, and the per-stage
+/// percentile summaries.
+fn write_trace_json(
+    path: &str,
+    sample: u64,
+    requests: u64,
+    spans: usize,
+    traces: usize,
+    summaries: &[StageSummary],
+) -> Result<()> {
+    let mut out = String::new();
+    out.push_str("{\n");
+    out.push_str("  \"bench\": \"telemetry\",\n");
+    out.push_str(&format!("  \"trace_sample\": {sample},\n"));
+    out.push_str(&format!("  \"requests\": {requests},\n"));
+    out.push_str(&format!("  \"spans\": {spans},\n"));
+    out.push_str(&format!("  \"traces\": {traces},\n"));
+    out.push_str("  \"stages\": [\n");
+    for (i, s) in summaries.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"stage\": \"{}\", \"count\": {}, \"p50_ns\": {}, \"p90_ns\": {}, \
+             \"p99_ns\": {}, \"max_ns\": {}, \"total_ns\": {}}}{}\n",
+            s.stage.name(),
+            s.count,
+            s.p50_ns,
+            s.p90_ns,
+            s.p99_ns,
+            s.max_ns,
+            s.total_ns,
+            if i + 1 < summaries.len() { "," } else { "" }
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    std::fs::write(path, out)?;
+    Ok(())
+}
+
+/// §Telemetry stage tracing (`remus trace`): drive sampled closed-loop
+/// load, collect the per-request stage spans (router queue and wire
+/// transit on the router side; batcher wait, worker exec, ECC verify,
+/// TMR vote and readback on the shard side), and print per-stage
+/// latency percentiles. Fabric flags pull spans fleet-wide over the
+/// wire; without them an in-process coordinator records the five
+/// worker-side stages. Fabric shards must run the same --trace-sample
+/// rate (sampling is deterministic in the trace id, so agreeing rates
+/// make every hop keep the same requests). `--json` writes the
+/// machine-readable artifact to `--out` (default BENCH_telemetry.json).
+fn trace_cmd(args: &Args) -> Result<()> {
+    let sample = args.get_or("trace-sample", 16u64);
+    anyhow::ensure!(sample > 0, "remus trace needs --trace-sample >= 1 (1 = trace everything)");
+    let requests = args.get_or("requests", 2048u64);
+    let kinds = [FunctionKind::Add(8), FunctionKind::Xor(16), FunctionKind::Mul(8)];
+    let fabric = args.get("shards").is_some() || args.get("listen-reg").is_some();
+    let (spans, label) = if fabric {
+        let router = router_from_args(args, shard_addrs_from_args(args), "trace", 16)?;
+        let (ok, wrong, errs, dt) = drive_load(&router, &kinds, requests, 2048);
+        println!(
+            "traced {requests} requests over {} live shards in {dt:.2?} (ok {ok}, wrong {wrong}, \
+             error results {errs})",
+            router.live_shards()
+        );
+        let spans = router.fleet_spans();
+        router.shutdown();
+        (spans, "fleet")
+    } else {
+        let mut cfg = shard_config(args);
+        cfg.trace_sample = sample;
+        let coord = Coordinator::start(cfg)?;
+        let (ok, wrong, errs, dt) = drive_load(&coord, &kinds, requests, 2048);
+        println!(
+            "traced {requests} in-process requests in {dt:.2?} (ok {ok}, wrong {wrong}, \
+             error results {errs})"
+        );
+        let spans = coord.tracer().spans();
+        coord.shutdown();
+        (spans, "in-process")
+    };
+    let mut traces: Vec<u64> = spans.iter().map(|s| s.trace).collect();
+    traces.sort_unstable();
+    traces.dedup();
+    println!(
+        "collected {} stage spans from {} sampled traces ({label}, 1-in-{sample} sampling)",
+        spans.len(),
+        traces.len()
+    );
+    let summaries = stage_summaries(&spans);
+    let mut t = Table::new(
+        "per-stage latency across sampled traces (us)",
+        &["stage", "count", "p50", "p90", "p99", "max", "total_ms"],
+    );
+    for s in &summaries {
+        t.row(&[
+            s.stage.name().to_string(),
+            s.count.to_string(),
+            format!("{:.1}", s.p50_ns as f64 / 1e3),
+            format!("{:.1}", s.p90_ns as f64 / 1e3),
+            format!("{:.1}", s.p99_ns as f64 / 1e3),
+            format!("{:.1}", s.max_ns as f64 / 1e3),
+            format!("{:.2}", s.total_ns as f64 / 1e6),
+        ]);
+    }
+    t.print();
+    if args.flag("json") {
+        let out = args.get("out").unwrap_or("BENCH_telemetry.json");
+        write_trace_json(out, sample, requests, spans.len(), traces.len(), &summaries)?;
+        println!("(machine-readable results written to {out})");
+    }
+    Ok(())
 }

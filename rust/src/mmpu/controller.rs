@@ -30,6 +30,7 @@
 
 use std::collections::HashMap;
 use std::sync::Arc;
+use std::time::Instant;
 
 use anyhow::{ensure, Result};
 
@@ -113,6 +114,17 @@ pub struct VectorResult {
     /// Bits the ECC verify-before pass corrected (drift accumulated
     /// since the previous batch's parity re-sync).
     pub ecc_corrected: u64,
+    /// §Telemetry: host wall-clock ns spent in the ECC extension
+    /// (verify-before + parity update-after) during this execution.
+    /// Simulator time, not modeled device time — `ecc_cycles` is the
+    /// modeled cost; these ns feed the request-path stage spans.
+    pub ecc_ns: u64,
+    /// §Telemetry: host wall-clock ns of the (possibly TMR-replicated)
+    /// in-crossbar compute phase.
+    pub compute_ns: u64,
+    /// §Telemetry: host wall-clock ns of result gather + remapped-row
+    /// readback overrides.
+    pub readback_ns: u64,
 }
 
 /// Row/replica layout of a vectored execution (shared by the word and
@@ -362,7 +374,9 @@ impl Mmpu {
         };
 
         // --- ECC verify-before: repair drift since the last batch -----
+        let t_ecc = Instant::now();
         let (mut ecc_cycles, ecc_corrected) = Self::ecc_verify_before(unit);
+        let mut ecc_ns = t_ecc.elapsed().as_nanos() as u64;
 
         // --- load operands: word-parallel bit-transpose scatter --------
         // Write failures are sampled in ONE aggregate pass over the
@@ -479,16 +493,17 @@ impl Mmpu {
 
         // --- compute + ECC re-sync + aging + readback -----------------
         let silent = self.cfg.errors.is_silent();
-        let (run, post_ecc_cycles) = Self::ecc_and_compute(unit, silent, c0, |x, inj| {
-            match &semi_vote {
+        let (run, post_ecc_cycles, compute_ns, ecc_update_ns) =
+            Self::ecc_and_compute(unit, silent, c0, |x, inj| match &semi_vote {
                 Some(vote) => cf.tmr.run_semi_with_vote(x, inj, vote),
                 None => cf.tmr.run(x, inj),
-            }
-        })?;
+            })?;
         ecc_cycles += post_ecc_cycles;
+        ecc_ns += ecc_update_ns;
         if let Some(h) = unit.health.as_ref() {
             h.clamp(unit.xbar.state_mut());
         }
+        let t_readback = Instant::now();
         let mask = cf.spec.result_mask();
         let mut values = gather_results(unit.xbar.state(), &run.output_cols, layout.items, mask)?;
         for &(l, p) in &remapped {
@@ -500,6 +515,7 @@ impl Mmpu {
                 acc | ((unit.xbar.get(p as usize, c as usize) as u64) << k)
             }) & mask;
         }
+        let readback_ns = t_readback.elapsed().as_nanos() as u64;
         // §Health: endurance wear-out + serving telemetry.
         let switched_total = unit.xbar.stats.switched_bits;
         if let Some(h) = unit.health.as_mut() {
@@ -510,6 +526,9 @@ impl Mmpu {
             compute_cycles: run.cycles,
             ecc_cycles,
             ecc_corrected,
+            ecc_ns,
+            compute_ns,
+            readback_ns,
         })
     }
 
@@ -546,7 +565,9 @@ impl Mmpu {
 
         // ECC verify-before (same position in the stream as the word
         // path: before marshalling, consuming no injector draws).
+        let t_ecc = Instant::now();
         let (mut ecc_cycles, ecc_corrected) = Self::ecc_verify_before(unit);
+        let mut ecc_ns = t_ecc.elapsed().as_nanos() as u64;
 
         let mut flips: Vec<usize> = Vec::new();
         unit.inj.write_fails(layout.total_bits(), |i| flips.push(i));
@@ -582,9 +603,11 @@ impl Mmpu {
         let silent = self.cfg.errors.is_silent();
         let engine = TmrEngine::new(tmr);
         let prog = func.prog.clone();
-        let (run, post_ecc_cycles) =
+        let (run, post_ecc_cycles, compute_ns, ecc_update_ns) =
             Self::ecc_and_compute(unit, silent, c0, move |x, inj| engine.execute(x, &prog, inj))?;
         ecc_cycles += post_ecc_cycles;
+        ecc_ns += ecc_update_ns;
+        let t_readback = Instant::now();
         let mask = func.result_mask();
         let values = (0..layout.items)
             .map(|i| {
@@ -593,11 +616,15 @@ impl Mmpu {
                 }) & mask
             })
             .collect();
+        let readback_ns = t_readback.elapsed().as_nanos() as u64;
         Ok(VectorResult {
             values,
             compute_cycles: run.cycles,
             ecc_cycles,
             ecc_corrected,
+            ecc_ns,
+            compute_ns,
+            readback_ns,
         })
     }
 
@@ -625,20 +652,26 @@ impl Mmpu {
     /// the batch's wall-clock span — identical for the word and per-bit
     /// paths. `start_cycles` is the crossbar cycle count at the start of
     /// the batch (marshalling included in the elapsed time). Returns the
-    /// run and the ECC extension cycles of the update phase.
+    /// run, the ECC extension cycles of the update phase, and the host
+    /// wall-clock split `(compute_ns, ecc_update_ns)` for the telemetry
+    /// stage spans (aging stays untimed: it lands in the worker-exec
+    /// remainder).
     fn ecc_and_compute(
         unit: &mut XbarUnit,
         silent: bool,
         start_cycles: u64,
         compute: impl FnOnce(&mut Crossbar, Option<&mut Injector>) -> Result<TmrRun>,
-    ) -> Result<(TmrRun, u64)> {
+    ) -> Result<(TmrRun, u64, u64, u64)> {
         let mut ecc_cycles = 0;
 
         // --- compute under TMR ---------------------------------------
+        let t_compute = Instant::now();
         let inj = if silent { None } else { Some(&mut unit.inj) };
         let run = compute(&mut unit.xbar, inj)?;
+        let compute_ns = t_compute.elapsed().as_nanos() as u64;
 
         // --- ECC: update check bits for the produced outputs ----------
+        let t_ecc = Instant::now();
         if let Some(ecc) = unit.ecc.as_mut() {
             for &c in &run.output_cols {
                 let col = unit.xbar.state().col_bitvec(c as usize);
@@ -651,6 +684,7 @@ impl Mmpu {
             ecc.encode(unit.xbar.state());
             ecc_cycles += ecc.update_cost(run.output_cols.len() as u64);
         }
+        let ecc_update_ns = t_ecc.elapsed().as_nanos() as u64;
 
         // --- time-domain aging over the batch's wall-clock span -------
         // Retention drift and abrupt events accrue while the batch sits
@@ -665,7 +699,7 @@ impl Mmpu {
         let state = unit.xbar.state_mut();
         unit.inj.retention(bits, dt, |i| state.flip(i / cols, i % cols));
         unit.inj.abrupt(bits, dt, |i| state.flip(i / cols, i % cols));
-        Ok((run, ecc_cycles))
+        Ok((run, ecc_cycles, compute_ns, ecc_update_ns))
     }
 
     /// Periodic ECC scrub of a crossbar (correct accumulated indirect

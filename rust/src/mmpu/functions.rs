@@ -8,6 +8,11 @@ use crate::arith::multiplier::{multpim_program, naive_mult_program};
 use crate::arith::{layout::ColAlloc, logic};
 use crate::isa::program::{Program, RowProgramBuilder};
 
+/// Number of [`FunctionKind`] families (see [`FunctionKind::index`]) —
+/// sizes the per-kind counter arrays in `coordinator::metrics` and
+/// their fixed-width wire encoding.
+pub const KIND_FAMILIES: usize = 4;
+
 /// A function-level mMPU instruction.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum FunctionKind {
@@ -29,6 +34,23 @@ impl FunctionKind {
             FunctionKind::MulNaive(n) => format!("mul_naive{n}"),
             FunctionKind::Xor(n) => format!("xor{n}"),
         }
+    }
+
+    /// Dense family index in `0..KIND_FAMILIES`, ignoring operand
+    /// width — the key for per-kind load attribution counters.
+    pub fn index(&self) -> usize {
+        match self {
+            FunctionKind::Add(_) => 0,
+            FunctionKind::Mul(_) => 1,
+            FunctionKind::MulNaive(_) => 2,
+            FunctionKind::Xor(_) => 3,
+        }
+    }
+
+    /// Family name for the dense [`FunctionKind::index`] (fleet views
+    /// label per-kind counter rows with this).
+    pub fn family_name(index: usize) -> &'static str {
+        ["add", "mul", "mul_naive", "xor"].get(index).copied().unwrap_or("?")
     }
 
     pub fn operand_bits(&self) -> u32 {
@@ -142,6 +164,23 @@ mod tests {
         assert_eq!(FunctionKind::Mul(32).name(), "mul32");
         assert_eq!(FunctionKind::Mul(32).operand_bits(), 32);
         assert_eq!(FunctionSpec::build(FunctionKind::Xor(4)).result_mask(), 0xF);
+    }
+
+    #[test]
+    fn family_index_is_dense_and_width_independent() {
+        let kinds = [
+            FunctionKind::Add(8),
+            FunctionKind::Mul(8),
+            FunctionKind::MulNaive(8),
+            FunctionKind::Xor(8),
+        ];
+        for (i, k) in kinds.iter().enumerate() {
+            assert_eq!(k.index(), i);
+            assert!(k.index() < KIND_FAMILIES);
+        }
+        assert_eq!(FunctionKind::Add(4).index(), FunctionKind::Add(32).index());
+        assert_eq!(FunctionKind::family_name(FunctionKind::MulNaive(8).index()), "mul_naive");
+        assert_eq!(FunctionKind::family_name(99), "?");
     }
 
     #[test]

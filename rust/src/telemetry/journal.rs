@@ -1,0 +1,339 @@
+//! The reliability event journal: a bounded ring of structured
+//! events with monotonic sequence numbers, recording every
+//! reliability-relevant transition the stack makes — scrub results,
+//! stuck-cell detections, row remaps, policy moves, worker
+//! retirement and spare promotion, shard membership changes,
+//! heartbeat timeouts, failover replays, auth rejects.
+//!
+//! Each process keeps its own journal; the router pulls shard
+//! journals over the control plane (`Events{since}` with a per-shard
+//! cursor) and merges them with its own into one fleet-wide,
+//! causally ordered view. Timestamps are unix-epoch nanoseconds so
+//! events from different processes sort into one timeline.
+
+use std::time::{SystemTime, UNIX_EPOCH};
+
+use super::ring::SlotRing;
+
+/// Default journal capacity (most recent events kept).
+pub const DEFAULT_JOURNAL_CAPACITY: usize = 1024;
+
+/// `Event.shard` value for events that are about the fleet fabric
+/// itself rather than any one shard (e.g. an auth reject observed at
+/// the router's front door).
+pub const SHARD_NONE: u32 = u32::MAX;
+
+/// A structured reliability event. `worker` fields are worker/unit
+/// indices within the recording shard; `shard` fields are fleet
+/// shard slots. Counters are clamped to u32 on the wire where packed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EventKind {
+    /// A scrub pass completed on `worker` with these totals.
+    Scrub { worker: u32, corrected: u64, detected: u32, remapped: u32 },
+    /// Scrub found `cells` newly stuck cells on `worker`.
+    StuckCell { worker: u32, cells: u64 },
+    /// `rows` faulty rows were remapped to spares on `worker`.
+    RowRemap { worker: u32, rows: u64 },
+    /// Reliability policy for `worker` escalated to `level`.
+    PolicyEscalate { worker: u32, level: u8 },
+    /// Reliability policy for `worker` relaxed to `level`.
+    PolicyDeescalate { worker: u32, level: u8 },
+    /// `worker` was retired from serving (spares exhausted or worn).
+    WorkerRetire { worker: u32 },
+    /// A spare unit was promoted into serving slot `unit`.
+    SparePromote { unit: u32 },
+    /// Serving unit `unit` was demoted back to the spare pool.
+    SpareDemote { unit: u32 },
+    /// Shard `shard` was marked down.
+    ShardDown { shard: u32 },
+    /// Shard `shard` revived and rejoined the ring.
+    ShardRevive { shard: u32 },
+    /// Shard `shard` missed its heartbeat deadline.
+    HeartbeatTimeout { shard: u32 },
+    /// `replayed` in-flight requests were re-routed after shard
+    /// `shard` failed.
+    FailoverReplay { shard: u32, replayed: u64 },
+    /// A peer failed authentication (handshake or sealed-frame
+    /// integrity) and was rejected.
+    AuthReject,
+}
+
+impl EventKind {
+    /// Stable wire tag. Unknown tags on decode are a clean error,
+    /// never a panic.
+    pub fn tag(&self) -> u8 {
+        match self {
+            EventKind::Scrub { .. } => 1,
+            EventKind::StuckCell { .. } => 2,
+            EventKind::RowRemap { .. } => 3,
+            EventKind::PolicyEscalate { .. } => 4,
+            EventKind::PolicyDeescalate { .. } => 5,
+            EventKind::WorkerRetire { .. } => 6,
+            EventKind::SparePromote { .. } => 7,
+            EventKind::SpareDemote { .. } => 8,
+            EventKind::ShardDown { .. } => 9,
+            EventKind::ShardRevive { .. } => 10,
+            EventKind::HeartbeatTimeout { .. } => 11,
+            EventKind::FailoverReplay { .. } => 12,
+            EventKind::AuthReject => 13,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            EventKind::Scrub { .. } => "scrub",
+            EventKind::StuckCell { .. } => "stuck_cell",
+            EventKind::RowRemap { .. } => "row_remap",
+            EventKind::PolicyEscalate { .. } => "policy_escalate",
+            EventKind::PolicyDeescalate { .. } => "policy_deescalate",
+            EventKind::WorkerRetire { .. } => "worker_retire",
+            EventKind::SparePromote { .. } => "spare_promote",
+            EventKind::SpareDemote { .. } => "spare_demote",
+            EventKind::ShardDown { .. } => "shard_down",
+            EventKind::ShardRevive { .. } => "shard_revive",
+            EventKind::HeartbeatTimeout { .. } => "heartbeat_timeout",
+            EventKind::FailoverReplay { .. } => "failover_replay",
+            EventKind::AuthReject => "auth_reject",
+        }
+    }
+
+    /// Pack into `(tag, a, b, c)` payload words for the slot ring and
+    /// the wire. Inverse of [`EventKind::from_words`].
+    pub fn to_words(&self) -> (u8, u64, u64, u64) {
+        match *self {
+            EventKind::Scrub { worker, corrected, detected, remapped } => {
+                (1, worker as u64, corrected, ((detected as u64) << 32) | remapped as u64)
+            }
+            EventKind::StuckCell { worker, cells } => (2, worker as u64, cells, 0),
+            EventKind::RowRemap { worker, rows } => (3, worker as u64, rows, 0),
+            EventKind::PolicyEscalate { worker, level } => (4, worker as u64, level as u64, 0),
+            EventKind::PolicyDeescalate { worker, level } => (5, worker as u64, level as u64, 0),
+            EventKind::WorkerRetire { worker } => (6, worker as u64, 0, 0),
+            EventKind::SparePromote { unit } => (7, unit as u64, 0, 0),
+            EventKind::SpareDemote { unit } => (8, unit as u64, 0, 0),
+            EventKind::ShardDown { shard } => (9, shard as u64, 0, 0),
+            EventKind::ShardRevive { shard } => (10, shard as u64, 0, 0),
+            EventKind::HeartbeatTimeout { shard } => (11, shard as u64, 0, 0),
+            EventKind::FailoverReplay { shard, replayed } => (12, shard as u64, replayed, 0),
+            EventKind::AuthReject => (13, 0, 0, 0),
+        }
+    }
+
+    /// Decode from payload words; `None` for an unknown tag.
+    pub fn from_words(tag: u8, a: u64, b: u64, c: u64) -> Option<EventKind> {
+        Some(match tag {
+            1 => EventKind::Scrub {
+                worker: a as u32,
+                corrected: b,
+                detected: (c >> 32) as u32,
+                remapped: c as u32,
+            },
+            2 => EventKind::StuckCell { worker: a as u32, cells: b },
+            3 => EventKind::RowRemap { worker: a as u32, rows: b },
+            4 => EventKind::PolicyEscalate { worker: a as u32, level: b as u8 },
+            5 => EventKind::PolicyDeescalate { worker: a as u32, level: b as u8 },
+            6 => EventKind::WorkerRetire { worker: a as u32 },
+            7 => EventKind::SparePromote { unit: a as u32 },
+            8 => EventKind::SpareDemote { unit: a as u32 },
+            9 => EventKind::ShardDown { shard: a as u32 },
+            10 => EventKind::ShardRevive { shard: a as u32 },
+            11 => EventKind::HeartbeatTimeout { shard: a as u32 },
+            12 => EventKind::FailoverReplay { shard: a as u32, replayed: b },
+            13 => EventKind::AuthReject,
+            _ => return None,
+        })
+    }
+
+    /// Human-readable one-liner for `remus top`.
+    pub fn describe(&self) -> String {
+        match *self {
+            EventKind::Scrub { worker, corrected, detected, remapped } => format!(
+                "scrub w{worker}: corrected={corrected} detected={detected} remapped={remapped}"
+            ),
+            EventKind::StuckCell { worker, cells } => {
+                format!("stuck cells w{worker}: {cells} new")
+            }
+            EventKind::RowRemap { worker, rows } => format!("row remap w{worker}: {rows} rows"),
+            EventKind::PolicyEscalate { worker, level } => {
+                format!("policy escalate w{worker} -> level {level}")
+            }
+            EventKind::PolicyDeescalate { worker, level } => {
+                format!("policy de-escalate w{worker} -> level {level}")
+            }
+            EventKind::WorkerRetire { worker } => format!("worker retire w{worker}"),
+            EventKind::SparePromote { unit } => format!("spare promote -> slot {unit}"),
+            EventKind::SpareDemote { unit } => format!("spare demote slot {unit}"),
+            EventKind::ShardDown { shard } => format!("shard {shard} DOWN"),
+            EventKind::ShardRevive { shard } => format!("shard {shard} revived"),
+            EventKind::HeartbeatTimeout { shard } => format!("shard {shard} heartbeat timeout"),
+            EventKind::FailoverReplay { shard, replayed } => {
+                format!("failover replay from shard {shard}: {replayed} in-flight")
+            }
+            EventKind::AuthReject => "auth reject".to_string(),
+        }
+    }
+}
+
+/// One journal entry: the kind plus where (shard slot) and when
+/// (unix ns) it happened, under a journal-local monotonic `seq`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Event {
+    pub seq: u64,
+    /// Fleet shard slot the event is about ([`SHARD_NONE`] when the
+    /// event is about the fabric itself). A shard-local journal
+    /// records its own events with `shard == 0`; the router stamps
+    /// the true slot when it imports them.
+    pub shard: u32,
+    /// Unix-epoch nanoseconds at record time: comparable across
+    /// processes, which is what makes the fleet-merged timeline
+    /// causally ordered.
+    pub at_ns: u64,
+    pub kind: EventKind,
+}
+
+/// Unix-epoch nanoseconds now (0 if the clock is before the epoch).
+pub fn unix_now_ns() -> u64 {
+    SystemTime::now().duration_since(UNIX_EPOCH).map(|d| d.as_nanos() as u64).unwrap_or(0)
+}
+
+/// Bounded multi-producer journal of [`Event`]s.
+///
+/// Slot layout: `[shard<<8 | tag, at_ns, a, b, c]`.
+pub struct EventJournal {
+    ring: SlotRing<5>,
+}
+
+impl EventJournal {
+    pub fn new(capacity: usize) -> Self {
+        Self { ring: SlotRing::new(capacity) }
+    }
+
+    /// Record an event about this process (shard slot 0 — the
+    /// recorder's own identity; the router re-stamps on import).
+    pub fn record(&self, kind: EventKind) -> u64 {
+        self.record_for(0, kind)
+    }
+
+    /// Record an event attributed to fleet shard slot `shard`.
+    pub fn record_for(&self, shard: u32, kind: EventKind) -> u64 {
+        let (tag, a, b, c) = kind.to_words();
+        self.ring.push([((shard as u64) << 8) | tag as u64, unix_now_ns(), a, b, c])
+    }
+
+    /// The next sequence number (== total events ever recorded).
+    pub fn next_seq(&self) -> u64 {
+        self.ring.pushed()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.ring.capacity()
+    }
+
+    /// All retained events, oldest first by sequence number.
+    pub fn events(&self) -> Vec<Event> {
+        self.ring
+            .snapshot()
+            .into_iter()
+            .filter_map(|(seq, [shard_tag, at_ns, a, b, c])| {
+                let kind = EventKind::from_words(shard_tag as u8, a, b, c)?;
+                Some(Event { seq, shard: (shard_tag >> 8) as u32, at_ns, kind })
+            })
+            .collect()
+    }
+
+    /// Events with `seq >= cursor`, plus the cursor to resume from
+    /// (`next_seq`). The cursor always advances past ring-overwritten
+    /// gaps: a reader that falls more than `capacity` behind misses
+    /// the overwritten middle but never stalls.
+    pub fn since(&self, cursor: u64) -> (Vec<Event>, u64) {
+        let latest = self.next_seq();
+        let mut evs = self.events();
+        evs.retain(|e| e.seq >= cursor);
+        (evs, latest)
+    }
+}
+
+/// Total order for the fleet-merged view: wall clock first, then
+/// shard, then per-journal sequence, then payload as a tiebreak so
+/// the order is total (merge associativity depends on it).
+fn total_key(e: &Event) -> (u64, u32, u64, u8, u64, u64, u64) {
+    let (tag, a, b, c) = e.kind.to_words();
+    (e.at_ns, e.shard, e.seq, tag, a, b, c)
+}
+
+/// Merge two event sets into one causally ordered, deduplicated
+/// timeline. Pure, associative, and idempotent: re-importing events
+/// a cursor already delivered cannot duplicate them.
+pub fn merge_events(a: Vec<Event>, b: Vec<Event>) -> Vec<Event> {
+    let mut out = a;
+    out.extend(b);
+    out.sort_unstable_by_key(total_key);
+    out.dedup();
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kinds_roundtrip_through_words() {
+        let kinds = [
+            EventKind::Scrub { worker: 3, corrected: 99, detected: 7, remapped: 2 },
+            EventKind::StuckCell { worker: 1, cells: 12 },
+            EventKind::RowRemap { worker: 0, rows: 4 },
+            EventKind::PolicyEscalate { worker: 2, level: 2 },
+            EventKind::PolicyDeescalate { worker: 2, level: 1 },
+            EventKind::WorkerRetire { worker: 5 },
+            EventKind::SparePromote { unit: 5 },
+            EventKind::SpareDemote { unit: 6 },
+            EventKind::ShardDown { shard: 1 },
+            EventKind::ShardRevive { shard: 1 },
+            EventKind::HeartbeatTimeout { shard: 0 },
+            EventKind::FailoverReplay { shard: 1, replayed: 17 },
+            EventKind::AuthReject,
+        ];
+        for k in kinds {
+            let (tag, a, b, c) = k.to_words();
+            assert_eq!(tag, k.tag());
+            assert_eq!(EventKind::from_words(tag, a, b, c), Some(k), "roundtrip {}", k.name());
+        }
+        assert_eq!(EventKind::from_words(0, 0, 0, 0), None);
+        assert_eq!(EventKind::from_words(99, 1, 2, 3), None);
+    }
+
+    #[test]
+    fn since_returns_exactly_the_gap_and_advances() {
+        let j = EventJournal::new(64);
+        for i in 0..10 {
+            j.record(EventKind::ShardDown { shard: i });
+        }
+        let (all, latest) = j.since(0);
+        assert_eq!(all.len(), 10);
+        assert_eq!(latest, 10);
+        let (gap, latest2) = j.since(7);
+        assert_eq!(gap.len(), 3);
+        assert_eq!(gap[0].seq, 7);
+        assert_eq!(latest2, 10);
+        let (none, _) = j.since(latest2);
+        assert!(none.is_empty());
+    }
+
+    #[test]
+    fn merge_orders_by_wall_clock_and_dedups() {
+        let mk = |seq, shard, at_ns| Event {
+            seq,
+            shard,
+            at_ns,
+            kind: EventKind::ShardDown { shard },
+        };
+        let a = vec![mk(0, 0, 50), mk(1, 0, 150)];
+        let b = vec![mk(0, 1, 100), mk(0, 0, 50)];
+        let m = merge_events(a.clone(), b.clone());
+        assert_eq!(m.len(), 3, "duplicate (shard 0, seq 0) collapses");
+        assert_eq!(m[0].at_ns, 50);
+        assert_eq!(m[1].at_ns, 100);
+        assert_eq!(m[2].at_ns, 150);
+        assert_eq!(merge_events(m.clone(), b), m, "idempotent");
+    }
+}

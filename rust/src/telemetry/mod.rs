@@ -1,0 +1,64 @@
+//! Fleet observability: per-request trace spans, the reliability
+//! event journal, and the lock-free ring they share.
+//!
+//! The paper's reliability mechanisms (ECC, TMR, scrubbing, remap)
+//! only earn trust at scale if they are observable *in operation* —
+//! not just as lifetime aggregate counters, but as *when*, *where in
+//! the request path*, and *in what causal order* things happened.
+//! This module is that layer, with the same constraints as the rest
+//! of the stack: zero dependencies, no allocation on the hot path,
+//! and a disabled path that costs a single branch.
+//!
+//! - [`ring`]: the seqlock-style multi-producer [`ring::SlotRing`].
+//! - [`spans`]: u64 trace ids minted at the submitter, deterministic
+//!   1-in-N sampling keyed off the id, per-stage [`TraceSpan`]s.
+//! - [`journal`]: the bounded [`EventJournal`] of structured
+//!   reliability [`Event`]s with monotonic sequence numbers, pulled
+//!   fleet-wide over `Events{since}` cursors and merged by the
+//!   router with [`merge_events`].
+
+pub mod journal;
+pub mod ring;
+pub mod spans;
+
+pub use journal::{
+    merge_events, unix_now_ns, Event, EventJournal, EventKind, DEFAULT_JOURNAL_CAPACITY,
+    SHARD_NONE,
+};
+pub use spans::{
+    stage_summaries, Stage, StageSummary, TraceSpan, Tracer, DEFAULT_SPAN_CAPACITY,
+};
+
+/// The splitmix64 finalizer: a cheap, statistically strong u64 mixer.
+/// Used both to mint trace ids from a counter and as the sampling
+/// hash, so the 1-in-N keep/drop decision is a pure function of the
+/// trace id — every hop in the fleet agrees without coordination.
+pub fn splitmix64(x: u64) -> u64 {
+    let mut z = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_is_a_bijection_probe() {
+        // Distinct inputs must map to distinct outputs (splitmix64 is
+        // invertible); probe a window.
+        let mut seen = std::collections::HashSet::new();
+        for x in 0..4096u64 {
+            assert!(seen.insert(splitmix64(x)));
+        }
+    }
+
+    #[test]
+    fn sampling_rate_is_roughly_one_in_n() {
+        let n = 64u64;
+        let hits = (0..64_000u64).filter(|&x| splitmix64(splitmix64(x)) % n == 0).count();
+        // Expect ~1000; allow a generous band.
+        assert!((500..2000).contains(&hits), "1-in-64 sampling badly off: {hits}/64000");
+    }
+}

@@ -1,0 +1,136 @@
+//! The lock-free slot ring shared by the span buffer and the event
+//! journal: a fixed-capacity array of seqlock-style slots written by
+//! any number of concurrent producers and snapshotted by readers
+//! without ever blocking a writer.
+//!
+//! Each record is `W` payload words plus a marker. A writer claims a
+//! globally unique, monotonically increasing sequence number with one
+//! `fetch_add`, picks its slot as `seq % capacity`, parks the marker at
+//! 0 ("being written"), stores the payload, then publishes the marker
+//! as `seq + 1`. A reader loads the marker, copies the payload, and
+//! re-checks the marker: any concurrent overwrite moved it (markers
+//! per slot strictly increase by `capacity` per wrap and pass through
+//! 0 mid-write), so a torn read is detected and discarded rather than
+//! surfaced. Below capacity no two writers ever share a slot, so no
+//! record is lost — the property `tests/prop_telemetry.rs` checks
+//! under real thread contention.
+//!
+//! Everything is `SeqCst`: this ring runs only on sampled requests and
+//! journal-worthy reliability events (a few per scrub pass), so the
+//! fence cost is irrelevant next to the guarantee that the marker
+//! protocol is sound under any interleaving.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// One seqlock-style slot: `marker == 0` means empty or mid-write,
+/// `marker == seq + 1` means the payload is record `seq`, complete.
+struct Slot<const W: usize> {
+    marker: AtomicU64,
+    words: [AtomicU64; W],
+}
+
+impl<const W: usize> Slot<W> {
+    fn new() -> Self {
+        Self { marker: AtomicU64::new(0), words: std::array::from_fn(|_| AtomicU64::new(0)) }
+    }
+}
+
+/// Fixed-capacity multi-producer ring of `W`-word records.
+pub struct SlotRing<const W: usize> {
+    slots: Box<[Slot<W>]>,
+    next: AtomicU64,
+}
+
+impl<const W: usize> SlotRing<W> {
+    /// A ring holding the most recent `capacity` records (at least 1).
+    pub fn new(capacity: usize) -> Self {
+        let capacity = capacity.max(1);
+        Self {
+            slots: (0..capacity).map(|_| Slot::new()).collect(),
+            next: AtomicU64::new(0),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Total records ever pushed (the next sequence number).
+    pub fn pushed(&self) -> u64 {
+        self.next.load(Ordering::SeqCst)
+    }
+
+    /// Append a record; returns its sequence number. Never blocks:
+    /// past capacity the oldest record in the slot is overwritten.
+    pub fn push(&self, words: [u64; W]) -> u64 {
+        let seq = self.next.fetch_add(1, Ordering::SeqCst);
+        let slot = &self.slots[(seq % self.slots.len() as u64) as usize];
+        // Park the marker through 0 so a reader overlapping this write
+        // sees the marker move and discards its torn copy.
+        slot.marker.store(0, Ordering::SeqCst);
+        for (w, &v) in slot.words.iter().zip(&words) {
+            w.store(v, Ordering::SeqCst);
+        }
+        slot.marker.store(seq + 1, Ordering::SeqCst);
+        seq
+    }
+
+    /// Copy out every complete record, oldest first by sequence number.
+    /// Records being overwritten at snapshot time are skipped (their
+    /// markers moved), never misread.
+    pub fn snapshot(&self) -> Vec<(u64, [u64; W])> {
+        let mut out = Vec::with_capacity(self.slots.len());
+        for slot in self.slots.iter() {
+            let before = slot.marker.load(Ordering::SeqCst);
+            if before == 0 {
+                continue;
+            }
+            let words: [u64; W] = std::array::from_fn(|i| slot.words[i].load(Ordering::SeqCst));
+            if slot.marker.load(Ordering::SeqCst) == before {
+                out.push((before - 1, words));
+            }
+        }
+        out.sort_unstable_by_key(|&(seq, _)| seq);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn below_capacity_keeps_every_record_in_order() {
+        let ring: SlotRing<2> = SlotRing::new(8);
+        for i in 0..8u64 {
+            assert_eq!(ring.push([i, i * 10]), i);
+        }
+        let snap = ring.snapshot();
+        assert_eq!(snap.len(), 8);
+        for (i, (seq, words)) in snap.iter().enumerate() {
+            assert_eq!(*seq, i as u64);
+            assert_eq!(*words, [i as u64, i as u64 * 10]);
+        }
+    }
+
+    #[test]
+    fn past_capacity_keeps_the_newest_records() {
+        let ring: SlotRing<1> = SlotRing::new(4);
+        for i in 0..10u64 {
+            ring.push([i]);
+        }
+        let snap = ring.snapshot();
+        assert_eq!(snap.len(), 4);
+        let seqs: Vec<u64> = snap.iter().map(|&(s, _)| s).collect();
+        assert_eq!(seqs, vec![6, 7, 8, 9], "ring keeps the most recent capacity records");
+        assert_eq!(ring.pushed(), 10);
+    }
+
+    #[test]
+    fn zero_capacity_is_clamped() {
+        let ring: SlotRing<1> = SlotRing::new(0);
+        assert_eq!(ring.capacity(), 1);
+        ring.push([42]);
+        assert_eq!(ring.snapshot(), vec![(0, [42])]);
+    }
+}

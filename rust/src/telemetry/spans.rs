@@ -1,0 +1,277 @@
+//! Per-request trace spans: a u64 trace id is minted at the
+//! submitter, carried end-to-end on the wire, and — for the
+//! deterministic 1-in-N sampled subset — each stage of the request
+//! path records a `(trace, stage, start, duration)` span into a
+//! fixed-capacity [`SlotRing`]. The disabled path (`sample == 0`)
+//! is a single branch in [`Tracer::sampled`]; no allocation, no
+//! atomic traffic, no clock read.
+//!
+//! Sampling is keyed off the trace id itself (`splitmix64(trace) %
+//! sample == 0`), so every hop of the fleet makes the *same*
+//! keep/drop decision for a given request without coordination —
+//! the router and each shard record complementary stages of one
+//! timeline as long as they agree on the sampling rate.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+use super::ring::SlotRing;
+use super::splitmix64;
+
+/// Default span-ring capacity (most recent sampled spans kept).
+pub const DEFAULT_SPAN_CAPACITY: usize = 4096;
+
+/// The stages of the request path, in causal order. Stages are
+/// *disjoint* slices of a request's end-to-end latency (worker exec
+/// is the marshalling remainder after ECC / TMR / readback are
+/// carved out), so a request's stage durations sum to at most its
+/// end-to-end latency.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Stage {
+    /// Submit accepted by the router until its frame hit the socket.
+    RouterQueue = 0,
+    /// On the wire + shard connection handling: router-observed
+    /// round trip minus the shard-reported service time.
+    WireTransit = 1,
+    /// Queued in the coordinator batcher awaiting dispatch.
+    BatcherWait = 2,
+    /// Worker execution outside the reliability stages: operand
+    /// marshalling, fault scatter, plan interpretation overhead.
+    WorkerExec = 3,
+    /// ECC codeword verify/correct passes around the computation.
+    EccVerify = 4,
+    /// The (possibly TMR-replicated) in-crossbar computation itself.
+    TmrVote = 5,
+    /// Result gather + remapped-row readback overrides.
+    Readback = 6,
+}
+
+impl Stage {
+    /// Every stage, in causal order.
+    pub const ALL: [Stage; 7] = [
+        Stage::RouterQueue,
+        Stage::WireTransit,
+        Stage::BatcherWait,
+        Stage::WorkerExec,
+        Stage::EccVerify,
+        Stage::TmrVote,
+        Stage::Readback,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::RouterQueue => "router_queue",
+            Stage::WireTransit => "wire_transit",
+            Stage::BatcherWait => "batcher_wait",
+            Stage::WorkerExec => "worker_exec",
+            Stage::EccVerify => "ecc_verify",
+            Stage::TmrVote => "tmr_vote",
+            Stage::Readback => "readback",
+        }
+    }
+
+    pub fn from_u8(v: u8) -> Option<Stage> {
+        Some(match v {
+            0 => Stage::RouterQueue,
+            1 => Stage::WireTransit,
+            2 => Stage::BatcherWait,
+            3 => Stage::WorkerExec,
+            4 => Stage::EccVerify,
+            5 => Stage::TmrVote,
+            6 => Stage::Readback,
+            _ => return None,
+        })
+    }
+}
+
+/// One recorded stage span of a sampled request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TraceSpan {
+    /// The request's trace id (never 0 for a recorded span).
+    pub trace: u64,
+    pub stage: Stage,
+    /// Start offset in ns since the recording tracer's epoch. Only
+    /// comparable between spans recorded by the *same* tracer;
+    /// durations are comparable everywhere.
+    pub start_ns: u64,
+    pub dur_ns: u64,
+}
+
+/// Mints trace ids and records sampled stage spans.
+pub struct Tracer {
+    /// Sample 1 in `sample` traces; 0 disables tracing entirely.
+    sample: u64,
+    next: AtomicU64,
+    ring: SlotRing<4>,
+    epoch: Instant,
+}
+
+impl Tracer {
+    pub fn new(sample: u64, capacity: usize) -> Self {
+        Self {
+            sample,
+            next: AtomicU64::new(0),
+            ring: SlotRing::new(capacity),
+            epoch: Instant::now(),
+        }
+    }
+
+    /// The configured 1-in-N sampling rate (0 = disabled).
+    pub fn sample_n(&self) -> u64 {
+        self.sample
+    }
+
+    /// Mint a fresh trace id: a splitmix64-mixed counter, never 0
+    /// (0 on the wire means "untraced"). Returns 0 when tracing is
+    /// disabled so downstream hops skip all telemetry with one
+    /// branch and the wire frame stays v1-compatible.
+    pub fn mint(&self) -> u64 {
+        if self.sample == 0 {
+            return 0;
+        }
+        let t = splitmix64(self.next.fetch_add(1, Ordering::Relaxed));
+        if t == 0 { 1 } else { t }
+    }
+
+    /// The deterministic keep/drop decision for `trace`. This is the
+    /// entire overhead of the disabled path.
+    #[inline]
+    pub fn sampled(&self, trace: u64) -> bool {
+        self.sample != 0 && trace != 0 && splitmix64(trace) % self.sample == 0
+    }
+
+    /// Nanoseconds since this tracer's epoch for an externally
+    /// captured instant (e.g. a request's submit time).
+    pub fn ns_of(&self, t: Instant) -> u64 {
+        t.saturating_duration_since(self.epoch).as_nanos() as u64
+    }
+
+    pub fn now_ns(&self) -> u64 {
+        self.epoch.elapsed().as_nanos() as u64
+    }
+
+    /// Record one stage span if `trace` is sampled.
+    pub fn record(&self, trace: u64, stage: Stage, start_ns: u64, dur_ns: u64) {
+        if !self.sampled(trace) {
+            return;
+        }
+        self.ring.push([trace, stage as u64, start_ns, dur_ns]);
+    }
+
+    /// Copy out the retained spans, oldest first.
+    pub fn spans(&self) -> Vec<TraceSpan> {
+        self.ring
+            .snapshot()
+            .into_iter()
+            .filter_map(|(_, [trace, stage, start_ns, dur_ns])| {
+                Stage::from_u8(stage as u8).map(|stage| TraceSpan { trace, stage, start_ns, dur_ns })
+            })
+            .collect()
+    }
+
+    /// Total spans ever recorded (recorded − capacity = overwritten).
+    pub fn recorded(&self) -> u64 {
+        self.ring.pushed()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.ring.capacity()
+    }
+}
+
+/// Exact per-stage duration percentiles over a span set (spans are
+/// ring-bounded, so sorting is cheap). Returns one summary per stage
+/// that appears, in causal stage order.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct StageSummary {
+    pub stage: Stage,
+    pub count: usize,
+    pub p50_ns: u64,
+    pub p90_ns: u64,
+    pub p99_ns: u64,
+    pub max_ns: u64,
+    pub total_ns: u64,
+}
+
+pub fn stage_summaries(spans: &[TraceSpan]) -> Vec<StageSummary> {
+    let mut out = Vec::new();
+    for stage in Stage::ALL {
+        let mut durs: Vec<u64> =
+            spans.iter().filter(|s| s.stage == stage).map(|s| s.dur_ns).collect();
+        if durs.is_empty() {
+            continue;
+        }
+        durs.sort_unstable();
+        let pct = |p: f64| durs[((durs.len() - 1) as f64 * p).round() as usize];
+        out.push(StageSummary {
+            stage,
+            count: durs.len(),
+            p50_ns: pct(0.50),
+            p90_ns: pct(0.90),
+            p99_ns: pct(0.99),
+            max_ns: *durs.last().unwrap(),
+            total_ns: durs.iter().sum(),
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_tracer_mints_zero_and_records_nothing() {
+        let t = Tracer::new(0, 16);
+        assert_eq!(t.mint(), 0);
+        assert!(!t.sampled(12345));
+        t.record(12345, Stage::WorkerExec, 0, 10);
+        assert!(t.spans().is_empty());
+        assert_eq!(t.recorded(), 0);
+    }
+
+    #[test]
+    fn sample_one_keeps_every_minted_trace() {
+        let t = Tracer::new(1, 64);
+        for _ in 0..32 {
+            let id = t.mint();
+            assert_ne!(id, 0);
+            assert!(t.sampled(id));
+            t.record(id, Stage::TmrVote, t.now_ns(), 5);
+        }
+        assert_eq!(t.spans().len(), 32);
+    }
+
+    #[test]
+    fn sampling_is_deterministic_in_the_trace_id() {
+        let a = Tracer::new(8, 4);
+        let b = Tracer::new(8, 4);
+        for id in 1..200u64 {
+            assert_eq!(a.sampled(id), b.sampled(id));
+            assert_eq!(a.sampled(id), a.sampled(id));
+        }
+    }
+
+    #[test]
+    fn stage_roundtrips_through_u8() {
+        for s in Stage::ALL {
+            assert_eq!(Stage::from_u8(s as u8), Some(s));
+        }
+        assert_eq!(Stage::from_u8(7), None);
+        assert_eq!(Stage::from_u8(255), None);
+    }
+
+    #[test]
+    fn summaries_are_exact_over_small_sets() {
+        let spans: Vec<TraceSpan> = (1..=100u64)
+            .map(|i| TraceSpan { trace: 1, stage: Stage::EccVerify, start_ns: 0, dur_ns: i })
+            .collect();
+        let s = stage_summaries(&spans);
+        assert_eq!(s.len(), 1);
+        assert_eq!(s[0].stage, Stage::EccVerify);
+        assert_eq!(s[0].count, 100);
+        assert_eq!(s[0].p50_ns, 51);
+        assert_eq!(s[0].max_ns, 100);
+        assert_eq!(s[0].total_ns, 5050);
+    }
+}

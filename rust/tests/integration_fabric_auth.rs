@@ -194,8 +194,8 @@ fn unauthenticated_registrant_is_rejected_without_touching_the_ring() {
     {
         let mut s = TcpStream::connect(&addrs[0]).unwrap();
         s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
-        write_msg(&mut s, &Msg::Submit { id: 1, kind: FunctionKind::Add(8), a: 1, b: 2 })
-            .unwrap();
+        let probe = Msg::Submit { id: 1, kind: FunctionKind::Add(8), a: 1, b: 2, trace: 0 };
+        write_msg(&mut s, &probe).unwrap();
         match read_msg(&mut s) {
             Ok(Some(msg)) => panic!("sealed shard answered a plaintext Submit: {msg:?}"),
             Ok(None) | Err(_) => {}

@@ -1,0 +1,325 @@
+//! Integration: fleet-wide telemetry (ISSUE 7 acceptance) over real
+//! threads and loopback sockets. A 2-shard authenticated fleet is
+//! driven through a forced reliability incident — wear-driven scrub
+//! detection, stuck cells, spare-row remapping, policy escalation,
+//! worker retirement, a shard kill and its revival — and the router's
+//! merged journal must tell that story as one causally ordered
+//! timeline with fleet-truthful shard attribution. Separately, a
+//! sampled request's trace must cover every pipeline stage with
+//! non-zero spans whose durations fit inside the router-measured
+//! end-to-end latency.
+
+use std::collections::HashSet;
+use std::time::{Duration, Instant};
+
+use remus::coordinator::{CoordinatorConfig, Submitter};
+use remus::fabric::auth::Psk;
+use remus::fabric::{shutdown_endpoint_auth, FabricServer, Router, RouterConfig};
+use remus::health::{HealthConfig, WearModel};
+use remus::mmpu::{FunctionKind, ReliabilityPolicy};
+use remus::telemetry::{Event, EventKind, Stage, TraceSpan};
+
+/// A healthy shard: immortal wear, scrubbing on, nothing to report.
+fn healthy_cfg(seed: u64) -> CoordinatorConfig {
+    CoordinatorConfig {
+        workers: 2,
+        rows: 32,
+        cols: 512,
+        max_batch: 16,
+        max_wait: Duration::from_millis(5),
+        seed,
+        health: Some(HealthConfig {
+            wear: WearModel::immortal(),
+            spare_rows: 4,
+            scrub_interval: 8,
+            ..Default::default()
+        }),
+        ..Default::default()
+    }
+}
+
+/// The doomed shard: a lethal endurance budget (same §Health recipe as
+/// `integration_coordinator::wear_out_retires_crossbar_and_errors_explicitly`)
+/// so the first batch kills the crossbar and the next march scrub
+/// detects it, remaps into (and exhausts) the spare rows, escalates the
+/// policy, and retires the worker — the full reliability causal chain
+/// in one deterministic pass.
+fn lethal_cfg(seed: u64) -> CoordinatorConfig {
+    CoordinatorConfig {
+        workers: 1,
+        rows: 16,
+        cols: 256,
+        max_batch: 1,
+        max_wait: Duration::from_micros(10),
+        seed,
+        health: Some(HealthConfig {
+            wear: WearModel::accelerated(1e-6), // dead after any switching
+            spare_rows: 2,
+            scrub_interval: 1,
+            scrub_rows_per_pass: 16,
+            retire_stuck_cells: 8,
+            ..Default::default()
+        }),
+        ..Default::default()
+    }
+}
+
+fn test_psk(tag: &str) -> Psk {
+    Psk::from_material(format!("integration telemetry psk {tag}").as_bytes()).unwrap()
+}
+
+/// Router tunables fast enough for test-scale failover/revival.
+fn fast_cfg(psk: Psk, trace_sample: u64) -> RouterConfig {
+    RouterConfig {
+        probe_period: Duration::from_millis(100),
+        retry_window: Duration::from_secs(3),
+        psk: Some(psk),
+        trace_sample,
+        ..Default::default()
+    }
+}
+
+fn candidate_kinds() -> Vec<FunctionKind> {
+    (4..=16).flat_map(|n| [FunctionKind::Add(n), FunctionKind::Xor(n)]).collect()
+}
+
+fn kind_on_shard(router: &Router, shard: usize) -> FunctionKind {
+    *candidate_kinds()
+        .iter()
+        .find(|&&k| router.shard_for(k) == Some(shard))
+        .unwrap_or_else(|| panic!("no candidate kind routes to shard {shard}"))
+}
+
+/// Submit the whole sequence, then collect every reply (a lost reply
+/// fails the `recv_timeout`). Asserts values, returns them.
+fn run_checked(sub: &dyn Submitter, reqs: &[(FunctionKind, u64, u64)]) -> Vec<u64> {
+    let rxs: Vec<_> = reqs.iter().map(|&(k, a, b)| sub.submit(k, a, b)).collect();
+    reqs.iter()
+        .zip(rxs)
+        .enumerate()
+        .map(|(i, (&(kind, a, b), rx))| {
+            let r = rx
+                .recv_timeout(Duration::from_secs(60))
+                .unwrap_or_else(|e| panic!("request {i} lost its reply: {e}"));
+            assert!(r.is_ok(), "request {i} errored: {:?}", r.error);
+            assert_eq!(r.value, kind.reference(a, b), "request {i} ({kind:?} {a} {b})");
+            r.value
+        })
+        .collect()
+}
+
+fn wait_until(what: &str, timeout: Duration, mut cond: impl FnMut() -> bool) {
+    let deadline = Instant::now() + timeout;
+    while !cond() {
+        assert!(Instant::now() < deadline, "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+}
+
+/// Rebind an authenticated fabric server on an exact address, retrying
+/// briefly (the kernel may hold the port for a moment after the old
+/// listener goes away).
+fn restart_with_auth(addr: &str, cfg: CoordinatorConfig, psk: &Psk) -> FabricServer {
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        match FabricServer::start_with_auth(addr, cfg.clone(), Some(psk.clone())) {
+            Ok(s) => return s,
+            Err(e) => {
+                assert!(Instant::now() < deadline, "could not rebind {addr}: {e:#}");
+                std::thread::sleep(Duration::from_millis(100));
+            }
+        }
+    }
+}
+
+/// Index of the first event on `shard` matching `pred` in the merged
+/// timeline — merged order IS the causal claim under test.
+fn first_idx(timeline: &[Event], shard: u32, pred: impl Fn(&EventKind) -> bool) -> usize {
+    timeline
+        .iter()
+        .position(|e| e.shard == shard && pred(&e.kind))
+        .unwrap_or_else(|| panic!("no matching event for shard {shard} in {timeline:#?}"))
+}
+
+/// ISSUE 7 acceptance (journal): drive a 2-shard authenticated fleet
+/// through scrub -> stuck-cell detection -> remap -> escalation ->
+/// retirement -> shard kill -> revival, and assert the merged fleet
+/// journal contains the whole causal chain in order, each event
+/// attributed to the shard it actually happened on.
+#[test]
+fn fleet_journal_captures_the_reliability_causal_chain() {
+    let psk = test_psk("journal");
+    let wear = FabricServer::start_with_auth("127.0.0.1:0", lethal_cfg(0xB), Some(psk.clone()))
+        .unwrap();
+    let healthy = FabricServer::start_with_auth("127.0.0.1:0", healthy_cfg(0xA), Some(psk.clone()))
+        .unwrap();
+    let addrs = vec![wear.local_addr().to_string(), healthy.local_addr().to_string()];
+    let router = Router::with_config(&addrs, fast_cfg(psk.clone(), 0)).unwrap();
+    let k_wear = kind_on_shard(&router, 0);
+    let k_ok = kind_on_shard(&router, 1);
+
+    // Phase 1: mixed load. The wear shard's crossbar dies under it; the
+    // march scrub detects the stuck cells, remaps into the spares,
+    // escalates the policy, and retires the worker. The router converts
+    // the resulting capacity errors into failover — values stay correct
+    // throughout (nothing here asserts less than full correctness).
+    let reqs: Vec<(FunctionKind, u64, u64)> = (0..600u64)
+        .map(|i| {
+            let k = if i % 2 == 0 { k_wear } else { k_ok };
+            (k, i % 13, (i * 5) % 13)
+        })
+        .collect();
+    run_checked(&router, &reqs);
+    assert_eq!(router.live_shards(), 1, "retire-all must drop the wear shard from routing");
+
+    // The merged journal pulls the (down but still listening) wear
+    // shard's events over the authenticated control plane, re-stamped
+    // with its fleet slot.
+    wait_until("reliability chain in the fleet journal", Duration::from_secs(10), || {
+        let t = router.fleet_events();
+        let has = |f: fn(&EventKind) -> bool| t.iter().any(|e| e.shard == 0 && f(&e.kind));
+        has(|k| matches!(k, EventKind::Scrub { .. }))
+            && has(|k| matches!(k, EventKind::StuckCell { .. }))
+            && has(|k| matches!(k, EventKind::RowRemap { .. }))
+            && has(|k| matches!(k, EventKind::PolicyEscalate { .. }))
+            && has(|k| matches!(k, EventKind::WorkerRetire { .. }))
+            && has(|k| matches!(k, EventKind::ShardDown { .. }))
+    });
+
+    // Phase 2: kill the wear shard's process outright, then revive the
+    // slot with a healthy replacement on the exact same address.
+    shutdown_endpoint_auth(&addrs[0], Some(&psk)).unwrap();
+    let revived = restart_with_auth(&addrs[0], healthy_cfg(0xC), &psk);
+    wait_until("wear slot revived", Duration::from_secs(10), || router.live_shards() == 2);
+    wait_until("ShardRevive in the fleet journal", Duration::from_secs(10), || {
+        router
+            .fleet_events()
+            .iter()
+            .any(|e| e.shard == 0 && matches!(e.kind, EventKind::ShardRevive { .. }))
+    });
+    assert_eq!(router.shard_for(k_wear), Some(0), "revived slot reclaims its kinds");
+    run_checked(&router, &[(k_wear, 20, 22), (k_ok, 7, 8)]);
+
+    // The merged timeline tells the whole story, in causal order.
+    let timeline = router.fleet_events();
+    let scrub = first_idx(&timeline, 0, |k| matches!(k, EventKind::Scrub { .. }));
+    let stuck = first_idx(&timeline, 0, |k| matches!(k, EventKind::StuckCell { .. }));
+    let remap = first_idx(&timeline, 0, |k| matches!(k, EventKind::RowRemap { .. }));
+    let escalate = first_idx(&timeline, 0, |k| matches!(k, EventKind::PolicyEscalate { .. }));
+    let retire = first_idx(&timeline, 0, |k| matches!(k, EventKind::WorkerRetire { .. }));
+    let down = first_idx(&timeline, 0, |k| matches!(k, EventKind::ShardDown { .. }));
+    let revive = first_idx(&timeline, 0, |k| matches!(k, EventKind::ShardRevive { .. }));
+    assert!(scrub < stuck && stuck < remap, "scrub detects, then remaps: {timeline:#?}");
+    assert!(remap < escalate, "escalation follows the scrub findings: {timeline:#?}");
+    assert!(escalate < retire, "retirement is the last in-shard step: {timeline:#?}");
+    assert!(retire < down, "the shard goes down after its worker retires: {timeline:#?}");
+    assert!(down < revive, "revival concludes the chain: {timeline:#?}");
+
+    // Attribution: the healthy (immortal) shard can never produce the
+    // in-shard incident events — every one of them names the wear
+    // slot, and only it. (Shard down/revive are asserted on slot 0 via
+    // `first_idx` above; a CI scheduler stall can legitimately blip
+    // the healthy shard's heartbeat, so membership events are not
+    // required to be slot-0-exclusive.)
+    for e in &timeline {
+        let incident = matches!(
+            e.kind,
+            EventKind::Scrub { .. }
+                | EventKind::StuckCell { .. }
+                | EventKind::RowRemap { .. }
+                | EventKind::PolicyEscalate { .. }
+                | EventKind::WorkerRetire { .. }
+        );
+        if incident {
+            assert_eq!(e.shard, 0, "misattributed event {e:?}");
+        }
+    }
+    // And the chain survives re-pulling: re-importing already-delivered
+    // shard events must not duplicate them in the merged view.
+    let count = |t: &[Event], f: fn(&EventKind) -> bool| -> usize {
+        t.iter().filter(|e| e.shard == 0 && f(&e.kind)).count()
+    };
+    let again = router.fleet_events();
+    assert_eq!(
+        count(&again, |k| matches!(k, EventKind::Scrub { .. })),
+        count(&timeline, |k| matches!(k, EventKind::Scrub { .. })),
+        "a second pull must not duplicate scrub events"
+    );
+    assert_eq!(
+        count(&again, |k| matches!(k, EventKind::WorkerRetire { .. })),
+        count(&timeline, |k| matches!(k, EventKind::WorkerRetire { .. })),
+        "a second pull must not duplicate retirement events"
+    );
+
+    router.shutdown();
+    revived.shutdown();
+    healthy.shutdown();
+}
+
+/// ISSUE 7 acceptance (tracing): with 1-in-1 sampling on an otherwise
+/// idle authenticated fleet, a single request's trace must contain all
+/// seven pipeline stages — router queue, wire transit, batcher wait,
+/// worker exec, ECC verify, TMR vote, readback — each with a non-zero
+/// duration, and their sum must fit inside the router-measured
+/// end-to-end latency.
+#[test]
+fn sampled_trace_covers_every_stage_within_e2e() {
+    let psk = test_psk("trace");
+    let traced = |seed| CoordinatorConfig {
+        // The full reliability policy makes every exec-side stage real
+        // work: ECC verification, TMR voting and readback all non-zero.
+        policy: ReliabilityPolicy::full(),
+        trace_sample: 1,
+        ..healthy_cfg(seed)
+    };
+    let s1 = FabricServer::start_with_auth("127.0.0.1:0", traced(0xA), Some(psk.clone())).unwrap();
+    let s2 = FabricServer::start_with_auth("127.0.0.1:0", traced(0xB), Some(psk.clone())).unwrap();
+    let addrs = vec![s1.local_addr().to_string(), s2.local_addr().to_string()];
+    let router = Router::with_config(&addrs, fast_cfg(psk, 1)).unwrap();
+    let k0 = kind_on_shard(&router, 0);
+    let k1 = kind_on_shard(&router, 1);
+
+    // Warm both shards (plan caches, connections) so the solo request
+    // below measures the steady-state pipeline.
+    let warmup: Vec<(FunctionKind, u64, u64)> = (0..64u64)
+        .map(|i| {
+            let k = if i % 2 == 0 { k0 } else { k1 };
+            (k, i % 19, (i * 3 + 1) % 19)
+        })
+        .collect();
+    run_checked(&router, &warmup);
+
+    // Every trace id visible before the solo request; shard-side spans
+    // are recorded before the reply is sent, so this set is complete.
+    let before: HashSet<u64> = router.fleet_spans().iter().map(|s| s.trace).collect();
+
+    let r = router
+        .submit(k0, 41, 1)
+        .recv_timeout(Duration::from_secs(30))
+        .expect("solo request reply");
+    assert!(r.is_ok(), "solo request errored: {:?}", r.error);
+    assert_eq!(r.value, k0.reference(41, 1));
+    let e2e = r.latency.as_nanos() as u64;
+
+    let spans = router.fleet_spans();
+    let fresh: HashSet<u64> =
+        spans.iter().map(|s| s.trace).filter(|t| !before.contains(t)).collect();
+    assert_eq!(fresh.len(), 1, "exactly one new trace on an idle fleet: {fresh:?}");
+    let trace = *fresh.iter().next().unwrap();
+    let mine: Vec<&TraceSpan> = spans.iter().filter(|s| s.trace == trace).collect();
+
+    for stage in Stage::ALL {
+        let hits: Vec<_> = mine.iter().filter(|s| s.stage == stage).collect();
+        assert_eq!(hits.len(), 1, "stage {} recorded exactly once: {mine:#?}", stage.name());
+        assert!(hits[0].dur_ns > 0, "stage {} must be non-zero: {mine:#?}", stage.name());
+    }
+    let sum: u64 = mine.iter().map(|s| s.dur_ns).sum();
+    assert!(
+        sum <= e2e,
+        "stage durations ({sum} ns) must fit inside the end-to-end latency ({e2e} ns)"
+    );
+
+    router.shutdown();
+    s1.shutdown();
+    s2.shutdown();
+}

@@ -1,18 +1,22 @@
 //! Property tests for the fabric wire codec: every message type
-//! (the v3 heartbeat `Ping`/`Pong` included) survives encode -> frame
-//! -> decode bit-exactly, v1/v2/v3 frames still decode under the v4
-//! codec, and truncated or corrupted frames — truncated pings,
-//! length-prefix lies and single-bit flips included — are rejected
-//! with errors: never a panic, never an accidental parse. Sealed
-//! frames (wire v4, `fabric::auth`) additionally detect *every*
-//! single-bit flip, truncation and replay: a tampered sealed frame can
-//! never open, so it can never decode to a different valid message
-//! undetected (ISSUE 3 + ISSUE 5 + ISSUE 6 satellites).
+//! (the v3 heartbeat `Ping`/`Pong` and the v5 telemetry frames —
+//! traced submits, `Events`/`EventsReply`, `SpansReq`/`SpansReply` —
+//! included) survives encode -> frame -> decode bit-exactly, v1..v4
+//! frames still decode under the v5 codec, and truncated or corrupted
+//! frames — truncated pings, length-prefix lies and single-bit flips
+//! included — are rejected with errors: never a panic, never an
+//! accidental parse. Sealed frames (wire v4, `fabric::auth`)
+//! additionally detect *every* single-bit flip, truncation and replay:
+//! a tampered sealed frame can never open, so it can never decode to a
+//! different valid message undetected (ISSUE 3 + ISSUE 5 + ISSUE 6 +
+//! ISSUE 7 satellites).
 
-use remus::coordinator::{MetricsSnapshot, WorkerHealth};
+use remus::coordinator::{KindStats, MetricsSnapshot, WorkerHealth};
 use remus::fabric::auth::{derive_keys, Psk, SEAL_OVERHEAD};
 use remus::fabric::wire::{read_msg, write_msg, Msg, MAX_FRAME, MIN_WIRE_VERSION, WIRE_VERSION};
+use remus::mmpu::functions::KIND_FAMILIES;
 use remus::mmpu::FunctionKind;
+use remus::telemetry::{Event, EventKind, Stage, TraceSpan};
 use remus::testutil::prop::{Cases, Gen};
 
 fn gen_kind(g: &mut Gen) -> FunctionKind {
@@ -64,6 +68,14 @@ fn gen_snapshot(g: &mut Gen) -> MetricsSnapshot {
                 retired: g.bool(),
             })
             .collect(),
+        lat_overflow: g.u64(),
+        lat_max_us: g.u64(),
+        uptime_ns: g.u64(),
+        kind_stats: std::array::from_fn(|_| KindStats {
+            submitted: g.u64(),
+            completed: g.u64(),
+            failed: g.u64(),
+        }),
         shards_total: g.u64(),
         shards_down: g.u64(),
         hb_pings: g.u64(),
@@ -73,9 +85,47 @@ fn gen_snapshot(g: &mut Gen) -> MetricsSnapshot {
     }
 }
 
+fn gen_event_kind(g: &mut Gen) -> EventKind {
+    match g.usize_in(0..=12) {
+        0 => EventKind::Scrub {
+            worker: g.u64() as u32,
+            corrected: g.u64(),
+            detected: g.u64() as u32,
+            remapped: g.u64() as u32,
+        },
+        1 => EventKind::StuckCell { worker: g.u64() as u32, cells: g.u64() },
+        2 => EventKind::RowRemap { worker: g.u64() as u32, rows: g.u64() },
+        3 => EventKind::PolicyEscalate { worker: g.u64() as u32, level: g.u64() as u8 },
+        4 => EventKind::PolicyDeescalate { worker: g.u64() as u32, level: g.u64() as u8 },
+        5 => EventKind::WorkerRetire { worker: g.u64() as u32 },
+        6 => EventKind::SparePromote { unit: g.u64() as u32 },
+        7 => EventKind::SpareDemote { unit: g.u64() as u32 },
+        8 => EventKind::ShardDown { shard: g.u64() as u32 },
+        9 => EventKind::ShardRevive { shard: g.u64() as u32 },
+        10 => EventKind::HeartbeatTimeout { shard: g.u64() as u32 },
+        11 => EventKind::FailoverReplay { shard: g.u64() as u32, replayed: g.u64() },
+        _ => EventKind::AuthReject,
+    }
+}
+
+fn gen_event(g: &mut Gen) -> Event {
+    Event { seq: g.u64(), shard: g.u64() as u32, at_ns: g.u64(), kind: gen_event_kind(g) }
+}
+
+fn gen_span(g: &mut Gen) -> TraceSpan {
+    TraceSpan { trace: g.u64(), stage: *g.pick(&Stage::ALL), start_ns: g.u64(), dur_ns: g.u64() }
+}
+
 fn gen_msg(g: &mut Gen) -> Msg {
-    match g.usize_in(0..=11) {
-        0 => Msg::Submit { id: g.u64(), kind: gen_kind(g), a: g.u64(), b: g.u64() },
+    match g.usize_in(0..=15) {
+        0 => Msg::Submit {
+            id: g.u64(),
+            kind: gen_kind(g),
+            a: g.u64(),
+            b: g.u64(),
+            // Half untraced (v1-labeled frames), half traced (v5).
+            trace: if g.bool() { g.u64() } else { 0 },
+        },
         1 => {
             let error = if g.bool() { Some(gen_string(g)) } else { None };
             Msg::Result { id: g.u64(), value: g.u64(), latency_us: g.u64(), error }
@@ -99,7 +149,17 @@ fn gen_msg(g: &mut Gen) -> Msg {
         },
         9 => Msg::Welcome { shard: g.u64() as u32, active: g.bool() },
         10 => Msg::Ping { nonce: g.u64() },
-        _ => Msg::Pong { nonce: g.u64() },
+        11 => Msg::Pong { nonce: g.u64() },
+        12 => Msg::Events { since: g.u64() },
+        13 => {
+            let n = g.usize_in(0..=8);
+            Msg::EventsReply { latest: g.u64(), events: (0..n).map(|_| gen_event(g)).collect() }
+        }
+        14 => Msg::SpansReq,
+        _ => {
+            let n = g.usize_in(0..=8);
+            Msg::SpansReply { spans: (0..n).map(|_| gen_span(g)).collect() }
+        }
     }
 }
 
@@ -175,37 +235,78 @@ fn version_mismatch_is_rejected() {
 }
 
 #[test]
-fn v1_v2_and_v3_frames_decode_compatibly_under_v4() {
-    // v3 snapshots predate the auth-reject counter (strip the trailing
-    // 8 bytes), v2 ones also the heartbeat counters (strip 32), v1
-    // ones also the fleet membership counters (strip 48): relabel the
-    // version and the decode must succeed with the missing fields
-    // defaulted to zero.
+fn v1_through_v4_frames_decode_compatibly_under_v5() {
+    // v4 snapshots predate the observability counters (strip the
+    // trailing 120 bytes: uptime + histogram honesty + per-kind
+    // stats), v3 ones also the auth-reject counter (strip 128), v2
+    // ones also the heartbeat counters (strip 152), v1 ones also the
+    // fleet membership counters (strip 168): relabel the version and
+    // the decode must succeed with the missing fields defaulted to
+    // zero.
     Cases::new(256).run(|g| {
         let mut snap = gen_snapshot(g);
+        let mut v4 = Msg::MetricsReply(snap.clone()).to_bytes();
+        v4.truncate(v4.len() - 120);
+        v4[0] = 4;
+        snap.uptime_ns = 0;
+        snap.lat_overflow = 0;
+        snap.lat_max_us = 0;
+        snap.kind_stats = [KindStats::default(); KIND_FAMILIES];
+        assert_eq!(Msg::from_bytes(&v4).unwrap(), Msg::MetricsReply(snap.clone()));
         let mut v3 = Msg::MetricsReply(snap.clone()).to_bytes();
-        v3.truncate(v3.len() - 8);
+        v3.truncate(v3.len() - 128);
         v3[0] = 3;
         snap.auth_rejects = 0;
         assert_eq!(Msg::from_bytes(&v3).unwrap(), Msg::MetricsReply(snap.clone()));
         let mut v2 = Msg::MetricsReply(snap.clone()).to_bytes();
-        v2.truncate(v2.len() - 32);
+        v2.truncate(v2.len() - 152);
         v2[0] = 2;
         snap.hb_pings = 0;
         snap.hb_pongs = 0;
         snap.hb_timeouts = 0;
         assert_eq!(Msg::from_bytes(&v2).unwrap(), Msg::MetricsReply(snap.clone()));
         let mut v1 = Msg::MetricsReply(snap.clone()).to_bytes();
-        v1.truncate(v1.len() - 48);
+        v1.truncate(v1.len() - 168);
         v1[0] = 1;
         snap.shards_total = 0;
         snap.shards_down = 0;
         assert_eq!(Msg::from_bytes(&v1).unwrap(), Msg::MetricsReply(snap));
         // Fixed-layout messages decode identically under any version.
-        let msg = Msg::Submit { id: g.u64(), kind: gen_kind(g), a: g.u64(), b: g.u64() };
+        let msg = Msg::Submit { id: g.u64(), kind: gen_kind(g), a: g.u64(), b: g.u64(), trace: 0 };
         let mut v1 = msg.to_bytes();
         v1[0] = 1;
         assert_eq!(Msg::from_bytes(&v1).unwrap(), msg);
+        // A traced submit relabeled v1..v4 has trailing bytes those
+        // layouts cannot express: a clean error, never a misparse.
+        let traced = Msg::Submit {
+            id: g.u64(),
+            kind: gen_kind(g),
+            a: g.u64(),
+            b: g.u64(),
+            trace: g.u64() | 1,
+        };
+        assert_eq!(traced.to_bytes()[0], 5, "traced submits are v5-stamped");
+        for v in [1u8, 2, 3, 4] {
+            let mut bytes = traced.to_bytes();
+            bytes[0] = v;
+            assert!(Msg::from_bytes(&bytes).is_err(), "trace id needs v5 (label v{v})");
+        }
+        // Telemetry control frames are v5-only: an older label is a
+        // clean error, never a misparse.
+        let v5_only = [
+            Msg::Events { since: g.u64() },
+            Msg::EventsReply { latest: g.u64(), events: vec![gen_event(g)] },
+            Msg::SpansReq,
+            Msg::SpansReply { spans: vec![gen_span(g)] },
+        ];
+        for m in v5_only {
+            assert_eq!(m.to_bytes()[0], 5, "telemetry frames are v5-stamped");
+            for v in [1u8, 2, 3, 4] {
+                let mut bytes = m.to_bytes();
+                bytes[0] = v;
+                assert!(Msg::from_bytes(&bytes).is_err(), "{m:?} needs v5 (label v{v})");
+            }
+        }
         // A prev-less Register still decodes as the v2 layout it keeps.
         let reg2 =
             Msg::Register { name: gen_string(g), addr: gen_string(g), spare: g.bool(), prev: None };
@@ -263,6 +364,32 @@ fn heartbeat_frames_roundtrip_and_truncated_pings_error() {
             assert!(Msg::from_bytes(&payload[..2]).is_err());
         }
     });
+}
+
+#[test]
+fn unknown_event_tags_and_stage_bytes_are_rejected() {
+    // A peer speaking a *future* v5 dialect could ship event kinds or
+    // stages this decoder has no variant for: the unknown byte must be
+    // a clean decode error, never a panic or a silently-dropped entry.
+    let reply = Msg::EventsReply {
+        latest: 1,
+        events: vec![Event { seq: 0, shard: 0, at_ns: 1, kind: EventKind::AuthReject }],
+    };
+    let mut bytes = reply.to_bytes();
+    // [ver][type][latest u64][count u32][seq u64][shard u32][at u64][tag]
+    let tag_at = 2 + 8 + 4 + 8 + 4 + 8;
+    assert_eq!(bytes[tag_at], 13, "layout check: AuthReject wire tag");
+    bytes[tag_at] = 99;
+    assert!(Msg::from_bytes(&bytes).is_err(), "unknown event tag must be rejected");
+    let reply = Msg::SpansReply {
+        spans: vec![TraceSpan { trace: 1, stage: Stage::TmrVote, start_ns: 2, dur_ns: 3 }],
+    };
+    let mut bytes = reply.to_bytes();
+    // [ver][type][count u32][trace u64][stage]
+    let stage_at = 2 + 4 + 8;
+    assert_eq!(bytes[stage_at], Stage::TmrVote as u8, "layout check: stage byte");
+    bytes[stage_at] = 77;
+    assert!(Msg::from_bytes(&bytes).is_err(), "unknown stage byte must be rejected");
 }
 
 #[test]

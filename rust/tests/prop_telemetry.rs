@@ -1,0 +1,245 @@
+//! Property tests for the telemetry subsystem (ISSUE 7): the lock-free
+//! slot ring loses nothing below capacity under real thread
+//! contention, journal sequence numbers are globally unique and
+//! monotonic under concurrent writers, `since` cursors return exactly
+//! the gap, [`merge_events`] is associative / commutative / idempotent
+//! (the algebra the router's fleet merge relies on), sampling is a
+//! deterministic pure function of the trace id with a bounded rate,
+//! event kinds roundtrip through their wire words, and the disabled
+//! tracer is observably free (mints 0, records nothing).
+
+use std::collections::HashSet;
+use std::sync::Arc;
+
+use remus::telemetry::ring::SlotRing;
+use remus::telemetry::{merge_events, Event, EventJournal, EventKind, Stage, Tracer};
+use remus::testutil::prop::{Cases, Gen};
+
+#[test]
+fn ring_below_capacity_loses_nothing_under_contention() {
+    // 4 producers race into one ring sized to hold everything: every
+    // record must survive, with dense unique sequence numbers — the
+    // guarantee that makes "the journal cannot lose events below
+    // capacity" true no matter which threads record them.
+    let threads = 4u64;
+    let per = 512u64;
+    let total = threads * per;
+    let ring: Arc<SlotRing<2>> = Arc::new(SlotRing::new(total as usize));
+    let handles: Vec<_> = (0..threads)
+        .map(|t| {
+            let ring = Arc::clone(&ring);
+            std::thread::spawn(move || {
+                for i in 0..per {
+                    ring.push([t, i]);
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    assert_eq!(ring.pushed(), total);
+    let snap = ring.snapshot();
+    assert_eq!(snap.len(), total as usize, "below capacity no record may be lost");
+    let seqs: Vec<u64> = snap.iter().map(|&(s, _)| s).collect();
+    assert_eq!(seqs, (0..total).collect::<Vec<_>>(), "sequence numbers are dense and ordered");
+    let mut seen = HashSet::new();
+    for &(_, [t, i]) in &snap {
+        assert!(seen.insert((t, i)), "payload ({t}, {i}) duplicated");
+        assert!(t < threads && i < per, "payload ({t}, {i}) corrupted");
+    }
+}
+
+#[test]
+fn journal_seqs_are_unique_and_monotonic_under_concurrent_writers() {
+    let journal = Arc::new(EventJournal::new(4096));
+    let threads = 4u32;
+    let per = 256u64;
+    let handles: Vec<_> = (0..threads)
+        .map(|t| {
+            let journal = Arc::clone(&journal);
+            std::thread::spawn(move || {
+                let mut got = Vec::new();
+                for _ in 0..per {
+                    got.push(journal.record(EventKind::WorkerRetire { worker: t }));
+                }
+                got
+            })
+        })
+        .collect();
+    let mut all: Vec<u64> = Vec::new();
+    for h in handles {
+        let seqs = h.join().unwrap();
+        // Each writer's own seqs strictly increase (fetch_add order).
+        assert!(seqs.windows(2).all(|w| w[0] < w[1]), "per-writer seqs must increase");
+        all.extend(seqs);
+    }
+    all.sort_unstable();
+    let total = threads as u64 * per;
+    assert_eq!(all, (0..total).collect::<Vec<_>>(), "seqs globally unique and dense");
+    assert_eq!(journal.next_seq(), total);
+    let events = journal.events();
+    assert_eq!(events.len(), total as usize);
+    assert!(events.windows(2).all(|w| w[0].seq < w[1].seq), "events sorted by seq");
+}
+
+#[test]
+fn journal_cursor_returns_exactly_the_gap() {
+    Cases::new(64).run(|g| {
+        let n = g.u64_in(1..=200);
+        let journal = EventJournal::new(256);
+        for i in 0..n {
+            journal.record(EventKind::ShardDown { shard: i as u32 });
+        }
+        let cursor = g.u64_in(0..=n);
+        let (gap, latest) = journal.since(cursor);
+        assert_eq!(latest, n, "cursor always advances to next_seq");
+        assert_eq!(gap.len(), (n - cursor) as usize, "exactly the gap, nothing else");
+        for (i, e) in gap.iter().enumerate() {
+            assert_eq!(e.seq, cursor + i as u64);
+        }
+        let (none, latest2) = journal.since(latest);
+        assert!(none.is_empty(), "a caught-up cursor gets nothing");
+        assert_eq!(latest2, latest);
+    });
+}
+
+#[test]
+fn journal_cursor_skips_overwritten_middle_but_never_stalls() {
+    // A reader more than `capacity` behind misses the overwritten
+    // entries but still drains to the head — the cursor is based on
+    // `next_seq`, not on what happens to be retained.
+    let journal = EventJournal::new(16);
+    for i in 0..100u32 {
+        journal.record(EventKind::SparePromote { unit: i });
+    }
+    let (events, latest) = journal.since(0);
+    assert_eq!(latest, 100);
+    assert_eq!(events.len(), 16, "only the retained tail survives");
+    assert_eq!(events.first().unwrap().seq, 84);
+    assert_eq!(events.last().unwrap().seq, 99);
+    let (none, _) = journal.since(latest);
+    assert!(none.is_empty());
+}
+
+/// Events drawn from deliberately small ranges so duplicates and
+/// timestamp ties actually occur — the cases where merge ordering and
+/// dedup can go wrong.
+fn gen_colliding_event(g: &mut Gen) -> Event {
+    let kind = match g.usize_in(0..=3) {
+        0 => EventKind::ShardDown { shard: g.u64_in(0..=2) as u32 },
+        1 => EventKind::ShardRevive { shard: g.u64_in(0..=2) as u32 },
+        2 => EventKind::StuckCell { worker: g.u64_in(0..=1) as u32, cells: g.u64_in(0..=3) },
+        _ => EventKind::AuthReject,
+    };
+    Event { seq: g.u64_in(0..=7), shard: g.u64_in(0..=2) as u32, at_ns: g.u64_in(0..=7), kind }
+}
+
+#[test]
+fn merge_events_is_associative_commutative_and_idempotent() {
+    // The router folds per-shard journals in whatever order the pull
+    // threads finish, re-merging cached events every refresh. That is
+    // only correct if merge is order-insensitive and re-importing
+    // already-delivered events cannot duplicate them.
+    Cases::new(128).run(|g| {
+        let vec_of = |g: &mut Gen, n: usize| -> Vec<Event> {
+            (0..n).map(|_| gen_colliding_event(g)).collect()
+        };
+        let na = g.usize_in(0..=12);
+        let a = vec_of(g, na);
+        let nb = g.usize_in(0..=12);
+        let b = vec_of(g, nb);
+        let nc = g.usize_in(0..=12);
+        let c = vec_of(g, nc);
+        let left = merge_events(merge_events(a.clone(), b.clone()), c.clone());
+        let right = merge_events(a.clone(), merge_events(b.clone(), c.clone()));
+        assert_eq!(left, right, "associative");
+        assert_eq!(merge_events(a.clone(), b.clone()), merge_events(b.clone(), a.clone()));
+        let m = merge_events(a, b);
+        assert_eq!(merge_events(m.clone(), m.clone()), m, "idempotent");
+        assert!(m.windows(2).all(|w| w[0].at_ns <= w[1].at_ns), "wall-clock ordered");
+    });
+}
+
+#[test]
+fn sampling_is_deterministic_and_rate_bounded() {
+    // Every hop keeps/drops the same requests without coordination:
+    // the decision is a pure function of (trace id, rate).
+    let a = Tracer::new(64, 16);
+    let b = Tracer::new(64, 16);
+    let mut kept = 0u64;
+    for _ in 0..64_000 {
+        let id = a.mint();
+        assert_ne!(id, 0, "enabled tracers never mint the untraced sentinel");
+        assert_eq!(a.sampled(id), b.sampled(id), "same rate => same decision");
+        if a.sampled(id) {
+            kept += 1;
+        }
+    }
+    // Expect ~1000 of 64k at 1-in-64; allow a generous band.
+    assert!((500..2000).contains(&kept), "1-in-64 sampling badly off: {kept}/64000");
+    assert!(!a.sampled(0), "trace 0 (untraced) is never sampled");
+    let always = Tracer::new(1, 16);
+    for _ in 0..256 {
+        assert!(always.sampled(always.mint()), "1-in-1 keeps everything");
+    }
+}
+
+#[test]
+fn event_kinds_roundtrip_through_words_and_unknown_tags_rejected() {
+    Cases::new(512).run(|g| {
+        let kind = match g.usize_in(0..=12) {
+            0 => EventKind::Scrub {
+                worker: g.u64() as u32,
+                corrected: g.u64(),
+                detected: g.u64() as u32,
+                remapped: g.u64() as u32,
+            },
+            1 => EventKind::StuckCell { worker: g.u64() as u32, cells: g.u64() },
+            2 => EventKind::RowRemap { worker: g.u64() as u32, rows: g.u64() },
+            3 => EventKind::PolicyEscalate { worker: g.u64() as u32, level: g.u64() as u8 },
+            4 => EventKind::PolicyDeescalate { worker: g.u64() as u32, level: g.u64() as u8 },
+            5 => EventKind::WorkerRetire { worker: g.u64() as u32 },
+            6 => EventKind::SparePromote { unit: g.u64() as u32 },
+            7 => EventKind::SpareDemote { unit: g.u64() as u32 },
+            8 => EventKind::ShardDown { shard: g.u64() as u32 },
+            9 => EventKind::ShardRevive { shard: g.u64() as u32 },
+            10 => EventKind::HeartbeatTimeout { shard: g.u64() as u32 },
+            11 => EventKind::FailoverReplay { shard: g.u64() as u32, replayed: g.u64() },
+            _ => EventKind::AuthReject,
+        };
+        let (tag, a, b, c) = kind.to_words();
+        assert_eq!(tag, kind.tag());
+        assert_eq!(EventKind::from_words(tag, a, b, c), Some(kind), "roundtrip {}", kind.name());
+        // Tags outside 1..=13 are unknown: clean None, whatever the
+        // payload words claim.
+        let bad = match g.u64_in(0..=1) {
+            0 => 0u8,
+            _ => g.u64_in(14..=255) as u8,
+        };
+        assert_eq!(EventKind::from_words(bad, a, b, c), None, "unknown tag {bad}");
+    });
+}
+
+#[test]
+fn disabled_tracer_is_free_and_span_ring_is_bounded() {
+    let off = Tracer::new(0, 64);
+    for _ in 0..256 {
+        assert_eq!(off.mint(), 0, "disabled tracers mint the untraced sentinel");
+    }
+    assert!(!off.sampled(12345));
+    off.record(12345, Stage::WorkerExec, 0, 10);
+    assert!(off.spans().is_empty(), "disabled tracers record nothing");
+    assert_eq!(off.recorded(), 0);
+    // An enabled tracer's ring is bounded: overflow keeps the newest.
+    let on = Tracer::new(4, 32);
+    let traced = (1u64..).find(|&id| on.sampled(id)).unwrap();
+    for i in 0..100u64 {
+        on.record(traced, Stage::EccVerify, i, 1);
+    }
+    assert_eq!(on.recorded(), 100);
+    let spans = on.spans();
+    assert_eq!(spans.len(), on.capacity(), "ring keeps exactly capacity spans");
+    assert_eq!(spans.first().unwrap().start_ns, 68, "oldest retained span");
+    assert_eq!(spans.last().unwrap().start_ns, 99, "newest span");
+}
