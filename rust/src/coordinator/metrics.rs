@@ -345,6 +345,93 @@ impl MetricsSnapshot {
     }
 }
 
+/// Render a snapshot in the Prometheus text exposition format
+/// (version 0.0.4 — what `GET /metrics` serves and any standard
+/// scraper or `curl` understands). Counter/gauge naming follows
+/// Prometheus conventions (`_total` suffix on monotonic counters);
+/// the log2 latency histogram is exported with cumulative `le`
+/// bucket edges in microseconds (`_count` is the true sample total —
+/// overflowed samples are clamped into the top bin at record time,
+/// with `remus_latency_overflow_total` counting the clamps).
+/// `boot_epoch` is the
+/// serving process's random per-boot identity (0 when the WAL /
+/// epoch machinery is off) — a scraper seeing it change knows the
+/// process restarted, the same signal `Router::fleet_events` uses.
+pub fn render_prometheus(s: &MetricsSnapshot, boot_epoch: u64) -> String {
+    let mut out = String::with_capacity(2048);
+    let mut counter = |name: &str, help: &str, value: u64| {
+        out.push_str(&format!(
+            "# HELP {name} {help}\n# TYPE {name} counter\n{name} {value}\n"
+        ));
+    };
+    counter("remus_requests_submitted_total", "Requests submitted", s.submitted);
+    counter("remus_requests_completed_total", "Requests completed", s.completed);
+    counter("remus_requests_failed_total", "Requests with explicit error results", s.failed);
+    counter("remus_batches_total", "Batches dispatched to workers", s.batches);
+    counter("remus_batched_items_total", "Requests dispatched inside batches", s.batched_items);
+    counter("remus_hb_pings_total", "Data-path heartbeat pings sent", s.hb_pings);
+    counter("remus_hb_pongs_total", "Data-path heartbeat pongs received", s.hb_pongs);
+    counter("remus_hb_timeouts_total", "Heartbeat deadlines missed", s.hb_timeouts);
+    counter("remus_auth_rejects_total", "Peers rejected by authentication", s.auth_rejects);
+    counter(
+        "remus_latency_overflow_total",
+        "Latency samples past the top histogram bin",
+        s.lat_overflow,
+    );
+    let mut gauge = |name: &str, help: &str, value: u64| {
+        out.push_str(&format!(
+            "# HELP {name} {help}\n# TYPE {name} gauge\n{name} {value}\n"
+        ));
+    };
+    gauge("remus_queue_depth", "Requests queued, not yet dispatched", s.queue_depth);
+    gauge("remus_shards_total", "Shards known to this router", s.shards_total);
+    gauge("remus_shards_down", "Shards currently out of ring routing", s.shards_down);
+    gauge("remus_workers_retired", "Workers retired from serving", s.retired_workers() as u64);
+    gauge("remus_latency_max_us", "Exact maximum latency observed (us)", s.lat_max_us);
+    gauge("remus_boot_epoch", "Random per-boot process identity (0 = off)", boot_epoch);
+    out.push_str(&format!(
+        "# HELP remus_uptime_seconds Serving uptime\n\
+         # TYPE remus_uptime_seconds gauge\n\
+         remus_uptime_seconds {:.3}\n",
+        s.uptime_ns as f64 / 1e9
+    ));
+    // Per-kind-family request attribution.
+    out.push_str(
+        "# HELP remus_kind_requests_total Per-kind-family request counters\n\
+         # TYPE remus_kind_requests_total counter\n",
+    );
+    for (family, ks) in s.kind_stats.iter().enumerate() {
+        let name = FunctionKind::family_name(family);
+        for (state, v) in
+            [("submitted", ks.submitted), ("completed", ks.completed), ("failed", ks.failed)]
+        {
+            out.push_str(&format!(
+                "remus_kind_requests_total{{kind=\"{name}\",state=\"{state}\"}} {v}\n"
+            ));
+        }
+    }
+    // The log2 latency histogram, Prometheus-style: cumulative counts
+    // at each upper bin edge (us). Overflowed samples are already
+    // clamped into the top bin, so the final cumulative count is the
+    // true sample total; remus_latency_overflow_total says how many
+    // of the top-bin samples were clamps.
+    out.push_str(
+        "# HELP remus_latency_us Request latency histogram (microseconds)\n\
+         # TYPE remus_latency_us histogram\n",
+    );
+    let mut cumulative = 0u64;
+    for (i, &b) in s.lat_bins.iter().enumerate() {
+        cumulative += b;
+        out.push_str(&format!(
+            "remus_latency_us_bucket{{le=\"{}\"}} {cumulative}\n",
+            1u64 << (i + 1)
+        ));
+    }
+    out.push_str(&format!("remus_latency_us_bucket{{le=\"+Inf\"}} {cumulative}\n"));
+    out.push_str(&format!("remus_latency_us_count {cumulative}\n"));
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -469,6 +556,49 @@ mod tests {
         let a = m1.snapshot().uptime_ns;
         let b = m2.snapshot().uptime_ns;
         assert!(merged.uptime_ns <= a.max(b) + 1_000_000_000);
+    }
+
+    #[test]
+    fn prometheus_exposition_is_well_formed_and_exact() {
+        let m = Metrics::new();
+        m.submitted.store(42, Ordering::Relaxed);
+        m.completed.store(40, Ordering::Relaxed);
+        m.failed.store(2, Ordering::Relaxed);
+        m.record_latency(Duration::from_micros(10));
+        m.record_latency(Duration::from_micros(5000));
+        m.record_kind_submitted(crate::mmpu::functions::FunctionKind::Add(8));
+        let mut s = m.snapshot();
+        s.shards_total = 2;
+        s.shards_down = 1;
+        let text = render_prometheus(&s, 0xBEEF);
+        assert!(text.contains("remus_requests_submitted_total 42\n"));
+        assert!(text.contains("remus_requests_completed_total 40\n"));
+        assert!(text.contains("remus_requests_failed_total 2\n"));
+        assert!(text.contains("remus_shards_total 2\n"));
+        assert!(text.contains("remus_shards_down 1\n"));
+        assert!(text.contains(&format!("remus_boot_epoch {}\n", 0xBEEFu64)));
+        assert!(text.contains("remus_kind_requests_total{kind=\"add\",state=\"submitted\"} 1\n"));
+        assert!(text.contains("remus_latency_us_bucket{le=\"+Inf\"} 2\n"));
+        assert!(text.contains("remus_latency_us_count 2\n"));
+        // Every non-comment line is `name[{labels}] value` — the
+        // well-formedness contract the CI scrape smoke re-checks via
+        // curl against a live endpoint.
+        for line in text.lines() {
+            if line.starts_with('#') {
+                assert!(line.starts_with("# HELP ") || line.starts_with("# TYPE "));
+                continue;
+            }
+            let (name, value) = line.rsplit_once(' ').expect("metric line has a value");
+            assert!(!name.is_empty());
+            assert!(value.parse::<f64>().is_ok(), "unparseable value in {line:?}");
+        }
+        // Cumulative buckets are monotonic.
+        let mut last = 0u64;
+        for line in text.lines().filter(|l| l.starts_with("remus_latency_us_bucket")) {
+            let v: u64 = line.rsplit_once(' ').unwrap().1.parse().unwrap();
+            assert!(v >= last, "bucket counts must be cumulative: {line}");
+            last = v;
+        }
     }
 
     #[test]

@@ -20,7 +20,7 @@ pub mod batcher;
 pub mod metrics;
 pub mod server;
 
-pub use metrics::{KindStats, MetricsSnapshot, WorkerHealth};
+pub use metrics::{render_prometheus, KindStats, MetricsSnapshot, WorkerHealth};
 pub use server::{Coordinator, CoordinatorConfig, NO_CAPACITY_ERROR, RequestResult};
 
 use std::sync::mpsc::Receiver;

@@ -450,18 +450,113 @@ pub fn measure_telemetry_overhead(requests: u64) -> TelemetryOverhead {
     }
 }
 
+/// Journal persistence cost (§Observability): per-event CPU time
+/// through the reliability journal's record + cursor-drain loop with
+/// no WAL at all, with buffered WAL appends (the `--journal-dir`
+/// default), and with an fsync after every batch. Purely
+/// informational, like [`SealOverhead`]: the flusher runs off the hot
+/// path, so this bounds the *flusher thread's* cost per event, not a
+/// request-path tax — the acceptance bar is that the buffered arm
+/// stays cheap enough for any plausible event rate.
+#[derive(Clone, Debug)]
+pub struct JournalPersistenceOverhead {
+    /// Events recorded and drained per arm.
+    pub events: u64,
+    /// Mean nanoseconds per event with no WAL (journal ring only).
+    pub off_ns_per_event: f64,
+    /// Mean nanoseconds per event with buffered WAL appends.
+    pub buffered_ns_per_event: f64,
+    /// Mean nanoseconds per event with an fsync per drained batch.
+    pub fsync_ns_per_event: f64,
+    /// `(buffered - off) / off`, percent.
+    pub buffered_overhead_pct: f64,
+    /// `(fsync - off) / off`, percent.
+    pub fsync_overhead_pct: f64,
+}
+
+/// Events drained per WAL append in [`measure_journal_overhead`] — the
+/// batch shape a busy flusher tick sees.
+pub const JOURNAL_PROBE_BATCH: u64 = 64;
+
+/// Measure [`JournalPersistenceOverhead`]: every arm records `events`
+/// reliability events and drains them in [`JOURNAL_PROBE_BATCH`]-sized
+/// batches through a journal cursor (exactly the flusher's loop); the
+/// WAL arms additionally append each drained batch to a real segment
+/// file in a throwaway temp directory, buffered or fsynced per batch.
+pub fn measure_journal_overhead(events: u64) -> Result<JournalPersistenceOverhead> {
+    use crate::telemetry::{EventJournal, EventKind, FsyncMode, WalConfig, WalWriter};
+
+    fn run_arm(events: u64, mut wal: Option<WalWriter>) -> Result<Duration> {
+        // Capacity past the batch size so no event is overwritten
+        // between drains.
+        let journal = EventJournal::new(4 * JOURNAL_PROBE_BATCH as usize);
+        let mut cursor = 0u64;
+        let t0 = Instant::now();
+        for i in 0..events {
+            journal.record(EventKind::Scrub {
+                worker: (i % 7) as u32,
+                corrected: i % 3,
+                detected: (i % 5) as u32,
+                remapped: 0,
+            });
+            if (i + 1) % JOURNAL_PROBE_BATCH == 0 {
+                let (batch, next) = journal.since(cursor);
+                cursor = next;
+                if let Some(w) = wal.as_mut() {
+                    w.append_batch(&batch).context("WAL append during overhead probe")?;
+                }
+            }
+        }
+        let (tail, _) = journal.since(cursor);
+        if let Some(w) = wal.as_mut() {
+            w.append_batch(&tail).context("WAL final append during overhead probe")?;
+        }
+        Ok(t0.elapsed())
+    }
+
+    let off = run_arm(events, None)?;
+    let timed_wal_arm = |tag: &str, fsync: FsyncMode| -> Result<Duration> {
+        let dir = std::env::temp_dir()
+            .join(format!("remus_wal_probe_{}_{tag}", std::process::id()));
+        let cfg = WalConfig { fsync, ..WalConfig::default() };
+        let writer = WalWriter::create(&dir, crate::telemetry::mint_boot_epoch(), cfg)
+            .with_context(|| format!("opening probe WAL in {}", dir.display()))?;
+        let elapsed = run_arm(events, Some(writer));
+        let _ = std::fs::remove_dir_all(&dir);
+        elapsed
+    };
+    let buffered = timed_wal_arm("buffered", FsyncMode::Buffered)?;
+    let fsynced = timed_wal_arm("fsync", FsyncMode::PerBatch)?;
+    let n = events.max(1) as f64;
+    let off_ns = off.as_nanos() as f64 / n;
+    let buf_ns = buffered.as_nanos() as f64 / n;
+    let sync_ns = fsynced.as_nanos() as f64 / n;
+    let pct = |arm: f64| if off_ns > 0.0 { (arm - off_ns) / off_ns * 100.0 } else { 0.0 };
+    Ok(JournalPersistenceOverhead {
+        events,
+        off_ns_per_event: off_ns,
+        buffered_ns_per_event: buf_ns,
+        fsync_ns_per_event: sync_ns,
+        buffered_overhead_pct: pct(buf_ns),
+        fsync_overhead_pct: pct(sync_ns),
+    })
+}
+
 /// Write a sweep as machine-readable JSON (the `BENCH_loadgen.json`
 /// artifact CI archives; hand-rolled like `bench_harness` — serde is
 /// not in the offline vendor set). `seal` adds the informational
 /// sealed-vs-plaintext frame cost row (`"seal_overhead"`), `telemetry`
-/// the disabled-vs-sampled tracing cost row (`"telemetry_overhead"`);
-/// both are `null` when not measured.
+/// the disabled-vs-sampled tracing cost row (`"telemetry_overhead"`),
+/// `journal` the WAL-off/buffered/fsync persistence cost row
+/// (`"journal_persistence_overhead"`); each is `null` when not
+/// measured.
 pub fn write_json(
     path: &str,
     cfg: &LoadgenConfig,
     sweep: &SweepReport,
     seal: Option<&SealOverhead>,
     telemetry: Option<&TelemetryOverhead>,
+    journal: Option<&JournalPersistenceOverhead>,
 ) -> Result<()> {
     let mut out = String::new();
     out.push_str("{\n");
@@ -494,6 +589,21 @@ pub fn write_json(
             t.sampled_overhead_pct
         )),
         None => out.push_str("  \"telemetry_overhead\": null,\n"),
+    }
+    match journal {
+        Some(j) => out.push_str(&format!(
+            "  \"journal_persistence_overhead\": {{\"events\": {}, \
+             \"off_ns_per_event\": {:.1}, \"buffered_ns_per_event\": {:.1}, \
+             \"fsync_ns_per_event\": {:.1}, \"buffered_overhead_pct\": {:.1}, \
+             \"fsync_overhead_pct\": {:.1}}},\n",
+            j.events,
+            j.off_ns_per_event,
+            j.buffered_ns_per_event,
+            j.fsync_ns_per_event,
+            j.buffered_overhead_pct,
+            j.fsync_overhead_pct
+        )),
+        None => out.push_str("  \"journal_persistence_overhead\": null,\n"),
     }
     out.push_str("  \"points\": [\n");
     for (i, p) in sweep.points.iter().enumerate() {
@@ -681,7 +791,7 @@ mod tests {
         let sweep = SweepReport { points, knee_qps };
         let path = std::env::temp_dir().join("BENCH_loadgen_selftest.json");
         let path = path.to_str().unwrap().to_string();
-        write_json(&path, &LoadgenConfig::default(), &sweep, None, None).unwrap();
+        write_json(&path, &LoadgenConfig::default(), &sweep, None, None, None).unwrap();
         let text = std::fs::read_to_string(&path).unwrap();
         assert!(text.contains("\"bench\": \"loadgen\""));
         assert!(text.contains("\"knee_qps\": 2000.0"));
@@ -689,6 +799,7 @@ mod tests {
         assert!(text.contains("\"sustained\": false"));
         assert!(text.contains("\"seal_overhead\": null"));
         assert!(text.contains("\"telemetry_overhead\": null"));
+        assert!(text.contains("\"journal_persistence_overhead\": null"));
         let _ = std::fs::remove_file(&path);
     }
 
@@ -707,7 +818,7 @@ mod tests {
         let sweep = SweepReport { points: Vec::new(), knee_qps: None };
         let path = std::env::temp_dir().join("BENCH_loadgen_sealtest.json");
         let path = path.to_str().unwrap().to_string();
-        write_json(&path, &LoadgenConfig::default(), &sweep, Some(&s), None).unwrap();
+        write_json(&path, &LoadgenConfig::default(), &sweep, Some(&s), None, None).unwrap();
         let text = std::fs::read_to_string(&path).unwrap();
         assert!(text.contains("\"seal_overhead\": {\"frames\": 512"));
         assert!(text.contains("\"overhead_pct\""));
@@ -733,11 +844,37 @@ mod tests {
         let sweep = SweepReport { points: Vec::new(), knee_qps: None };
         let path = std::env::temp_dir().join("BENCH_loadgen_telemetrytest.json");
         let path = path.to_str().unwrap().to_string();
-        write_json(&path, &LoadgenConfig::default(), &sweep, None, Some(&t)).unwrap();
+        write_json(&path, &LoadgenConfig::default(), &sweep, None, Some(&t), None).unwrap();
         let text = std::fs::read_to_string(&path).unwrap();
         assert!(text.contains("\"telemetry_overhead\": {\"requests\": 512"));
         assert!(text.contains("\"disabled_overhead_pct\""));
         assert!(text.contains("\"sampled_overhead_pct\""));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn journal_overhead_measures_and_serializes() {
+        let j = measure_journal_overhead(512).unwrap();
+        assert_eq!(j.events, 512);
+        assert!(j.off_ns_per_event > 0.0);
+        assert!(j.buffered_ns_per_event > 0.0);
+        assert!(j.fsync_ns_per_event > 0.0);
+        // Physics, not a tight noise bound: persisting to a file
+        // cannot plausibly be 2x faster than not persisting at all.
+        assert!(
+            j.buffered_ns_per_event >= j.off_ns_per_event * 0.5,
+            "buffered WAL cheaper than no WAL: off {:.1}ns buffered {:.1}ns",
+            j.off_ns_per_event,
+            j.buffered_ns_per_event
+        );
+        let sweep = SweepReport { points: Vec::new(), knee_qps: None };
+        let path = std::env::temp_dir().join("BENCH_loadgen_journaltest.json");
+        let path = path.to_str().unwrap().to_string();
+        write_json(&path, &LoadgenConfig::default(), &sweep, None, None, Some(&j)).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("\"journal_persistence_overhead\": {\"events\": 512"));
+        assert!(text.contains("\"buffered_overhead_pct\""));
+        assert!(text.contains("\"fsync_overhead_pct\""));
         let _ = std::fs::remove_file(&path);
     }
 }

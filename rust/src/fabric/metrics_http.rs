@@ -1,0 +1,183 @@
+//! Minimal hand-rolled HTTP/1.0 `GET /metrics` responder over std
+//! TCP (`--metrics-addr` on `fabric-serve` and `fabric-route`) —
+//! just enough HTTP for any standard Prometheus scraper or `curl`
+//! to read the text exposition rendered by
+//! [`crate::coordinator::render_prometheus`]. No external HTTP
+//! stack exists in the offline vendor set, and none is needed: one
+//! request per connection, response, close — the HTTP/1.0 model.
+//!
+//! This port is deliberately *outside* the PSK trust domain: the
+//! exposition carries only aggregate counters (no request data), and
+//! standard scrapers cannot speak the fabric's sealed framing. Bind
+//! it to loopback or a scrape VLAN, exactly as you would any
+//! `/metrics` port. Requests are served sequentially under a bounded
+//! read timeout, so a stalled scraper delays — never wedges — the
+//! endpoint.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+/// Longest request head we accept (a scrape GET is ~100 bytes).
+const MAX_HEAD: usize = 8 * 1024;
+/// Per-connection socket timeout: a trickling client is cut, not
+/// served forever.
+const CONN_TIMEOUT: Duration = Duration::from_secs(2);
+
+/// A running `/metrics` endpoint. Dropping it (or calling
+/// [`MetricsHttp::shutdown`]) closes the listener and joins the
+/// serving thread.
+pub struct MetricsHttp {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl MetricsHttp {
+    /// Bind `addr` (port 0 for ephemeral) and serve `GET /metrics`
+    /// with the text `render` produces per scrape.
+    pub fn serve<F>(addr: &str, render: F) -> Result<MetricsHttp>
+    where
+        F: Fn() -> String + Send + 'static,
+    {
+        let listener = TcpListener::bind(addr)
+            .with_context(|| format!("binding /metrics endpoint to {addr}"))?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let handle = std::thread::Builder::new()
+            .name("metrics-http".into())
+            .spawn(move || {
+                while !stop2.load(Ordering::SeqCst) {
+                    match listener.accept() {
+                        Ok((stream, _peer)) => {
+                            let _ = serve_one(stream, &render);
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(Duration::from_millis(5));
+                        }
+                        Err(e) => {
+                            eprintln!("metrics endpoint: accept failed, stopping: {e}");
+                            break;
+                        }
+                    }
+                }
+            })
+            .expect("spawn metrics-http");
+        Ok(MetricsHttp { addr, stop, handle: Some(handle) })
+    }
+
+    /// The bound address (resolves port 0 to the real port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting and join the serving thread.
+    pub fn shutdown(mut self) {
+        self.stop_and_join();
+    }
+
+    fn stop_and_join(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for MetricsHttp {
+    fn drop(&mut self) {
+        self.stop_and_join();
+    }
+}
+
+/// Handle one connection: read the request head, answer, close.
+fn serve_one<F: Fn() -> String>(mut stream: TcpStream, render: &F) -> std::io::Result<()> {
+    stream.set_read_timeout(Some(CONN_TIMEOUT))?;
+    stream.set_write_timeout(Some(CONN_TIMEOUT))?;
+    let mut head = Vec::with_capacity(256);
+    let mut buf = [0u8; 512];
+    // Read until the blank line ending the request head (we ignore
+    // headers and never read a body — scrape GETs have none).
+    while !head.windows(4).any(|w| w == b"\r\n\r\n") && !head.windows(2).any(|w| w == b"\n\n") {
+        if head.len() > MAX_HEAD {
+            return respond(&mut stream, "400 Bad Request", "request head too large\n");
+        }
+        match stream.read(&mut buf) {
+            Ok(0) => break,
+            Ok(n) => head.extend_from_slice(&buf[..n]),
+            Err(e) => return Err(e),
+        }
+    }
+    let head = String::from_utf8_lossy(&head);
+    let mut parts = head.lines().next().unwrap_or("").split_whitespace();
+    let (method, path) = (parts.next().unwrap_or(""), parts.next().unwrap_or(""));
+    if method != "GET" {
+        return respond(&mut stream, "405 Method Not Allowed", "only GET is served\n");
+    }
+    // Accept an optional query string; serve the one path we have.
+    if path != "/metrics" && !path.starts_with("/metrics?") {
+        return respond(&mut stream, "404 Not Found", "try /metrics\n");
+    }
+    let body = render();
+    let header = format!(
+        "HTTP/1.0 200 OK\r\n\
+         Content-Type: text/plain; version=0.0.4; charset=utf-8\r\n\
+         Content-Length: {}\r\n\
+         Connection: close\r\n\r\n",
+        body.len()
+    );
+    stream.write_all(header.as_bytes())?;
+    stream.write_all(body.as_bytes())?;
+    stream.flush()
+}
+
+fn respond(stream: &mut TcpStream, status: &str, body: &str) -> std::io::Result<()> {
+    let reply = format!(
+        "HTTP/1.0 {status}\r\nContent-Type: text/plain\r\nContent-Length: {}\r\n\
+         Connection: close\r\n\r\n{body}",
+        body.len()
+    );
+    stream.write_all(reply.as_bytes())?;
+    stream.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn http_get(addr: SocketAddr, path: &str) -> String {
+        let mut stream = TcpStream::connect(addr).unwrap();
+        stream
+            .write_all(format!("GET {path} HTTP/1.0\r\nHost: test\r\n\r\n").as_bytes())
+            .unwrap();
+        let mut out = String::new();
+        stream.read_to_string(&mut out).unwrap();
+        out
+    }
+
+    #[test]
+    fn serves_metrics_and_rejects_other_paths() {
+        let ep = MetricsHttp::serve("127.0.0.1:0", || "remus_test_metric 7\n".to_string())
+            .unwrap();
+        let addr = ep.local_addr();
+        let ok = http_get(addr, "/metrics");
+        assert!(ok.starts_with("HTTP/1.0 200 OK\r\n"), "got: {ok}");
+        assert!(ok.contains("text/plain; version=0.0.4"));
+        assert!(ok.ends_with("remus_test_metric 7\n"), "got: {ok}");
+        let missing = http_get(addr, "/other");
+        assert!(missing.starts_with("HTTP/1.0 404"), "got: {missing}");
+        let mut stream = TcpStream::connect(addr).unwrap();
+        stream.write_all(b"POST /metrics HTTP/1.0\r\n\r\n").unwrap();
+        let mut out = String::new();
+        stream.read_to_string(&mut out).unwrap();
+        assert!(out.starts_with("HTTP/1.0 405"), "got: {out}");
+        ep.shutdown();
+    }
+}

@@ -51,6 +51,17 @@
 //! ([`Router::fleet_events`]) and collects fleet-wide stage spans
 //! ([`Router::fleet_spans`]) for `remus top` / `remus trace`.
 //!
+//! **Flight recorder** (§Observability, wire v6): every role mints a
+//! random non-zero *boot epoch* at startup and stamps it into its
+//! `EventsReply` frames, so the router can tell a restarted shard
+//! (journal sequence numbers restarted at 0) from a quiet one — it
+//! resets the slot's cursor and synthesizes a `ShardRestarted` event
+//! instead of stalling. With `--journal-dir` a background
+//! [`crate::telemetry::WalFlusher`] spills the journal into a
+//! checksummed, segment-rotated WAL that `remus postmortem`
+//! reconstructs after a crash; `--metrics-addr` serves the Prometheus
+//! text exposition over [`metrics_http`].
+//!
 //! Both the in-process coordinator and the router implement
 //! [`crate::coordinator::Submitter`], so every load path (the serve
 //! example, `remus soak`, benches) runs unchanged on either. End-to-end
@@ -62,14 +73,16 @@
 
 pub mod auth;
 pub mod loadgen;
+pub mod metrics_http;
 pub mod router;
 pub mod server;
 pub mod wire;
 
 pub use auth::Psk;
+pub use metrics_http::MetricsHttp;
 pub use router::{
     fetch_events, fetch_events_auth, fetch_metrics, fetch_metrics_auth, fetch_spans,
     fetch_spans_auth, probe_health, probe_health_auth, shutdown_endpoint, shutdown_endpoint_auth,
-    Router, RouterConfig,
+    RouteOptions, Router, RouterConfig,
 };
-pub use server::FabricServer;
+pub use server::{FabricServer, ServeOptions};

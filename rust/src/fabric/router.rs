@@ -68,6 +68,7 @@
 
 use std::collections::HashMap;
 use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex, RwLock};
@@ -76,14 +77,17 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, ensure, Context, Result};
 
-use crate::coordinator::{MetricsSnapshot, NO_CAPACITY_ERROR, RequestResult, Submitter};
+use crate::coordinator::{
+    render_prometheus, MetricsSnapshot, NO_CAPACITY_ERROR, RequestResult, Submitter,
+};
 use crate::mmpu::FunctionKind;
 use crate::telemetry::{
-    merge_events, Event, EventJournal, EventKind, Stage, TraceSpan, Tracer,
-    DEFAULT_JOURNAL_CAPACITY, DEFAULT_SPAN_CAPACITY, SHARD_NONE,
+    merge_events, mint_boot_epoch, Event, EventJournal, EventKind, Stage, TraceSpan, Tracer,
+    WalConfig, WalFlusher, DEFAULT_JOURNAL_CAPACITY, DEFAULT_SPAN_CAPACITY, SHARD_NONE,
 };
 
 use super::auth::{client_split, server_split, FrameReader, FrameWriter, Psk};
+use super::metrics_http::MetricsHttp;
 use super::wire::Msg;
 
 /// Virtual nodes per shard on the hash ring.
@@ -325,7 +329,8 @@ struct RouterInner {
     /// §Telemetry: the router's own reliability events (shard down /
     /// revive, heartbeat timeouts, failover replays, spare moves,
     /// auth rejects), recorded with true fleet slot attribution.
-    journal: EventJournal,
+    /// Shared (`Arc`) so the `--journal-dir` WAL flusher can drain it.
+    journal: Arc<EventJournal>,
     /// Fleet-merged journal state: per-shard pull cursors plus the
     /// merged, causally ordered cache (see [`Router::fleet_events`]).
     fleet: Mutex<FleetEvents>,
@@ -337,6 +342,12 @@ struct RouterInner {
 struct FleetEvents {
     /// Next `Events{since}` cursor per shard slot.
     cursors: HashMap<usize, u64>,
+    /// Last `boot_epoch` each slot reported (wire v6; absent or 0 for
+    /// pre-v6 shards). A *changed* non-zero epoch means the process
+    /// behind the slot restarted and its journal sequence numbers
+    /// restarted at 0 — the cursor must reset with it, or the new
+    /// boot's prefix is silently skipped (the pre-v6 stall bug).
+    epochs: HashMap<usize, u64>,
     /// The merged fleet timeline pulled so far (bounded: oldest
     /// entries are dropped past [`FLEET_EVENT_CACHE`]).
     cache: Vec<Event>,
@@ -345,12 +356,35 @@ struct FleetEvents {
 /// Upper bound on the router's merged fleet-event cache.
 const FLEET_EVENT_CACHE: usize = 8192;
 
+/// Observability options for a router (§Observability, wire v6),
+/// mirroring [`super::server::ServeOptions`]: the durable flight
+/// recorder and the `/metrics` scrape endpoint, both off by default.
+#[derive(Default)]
+pub struct RouteOptions {
+    /// `--journal-dir`: spill the router's own reliability journal
+    /// (shard membership, failovers, synthesized restarts) into a
+    /// checksummed segment WAL under this directory.
+    pub journal_dir: Option<PathBuf>,
+    /// `--metrics-addr`: serve the *merged fleet* Prometheus text
+    /// exposition over plain HTTP at this address.
+    pub metrics_addr: Option<String>,
+    /// WAL tuning (segment size, footprint bound, fsync policy).
+    pub wal: WalConfig,
+}
+
 /// The sharded remote submitter.
 pub struct Router {
     inner: Arc<RouterInner>,
     supervisor: Option<JoinHandle<()>>,
     reg_handle: Option<JoinHandle<()>>,
     reg_addr: Option<SocketAddr>,
+    /// This boot's random non-zero epoch (wire v6): stamped onto the
+    /// router's WAL segments and the `/metrics` exposition.
+    boot_epoch: u64,
+    /// Background journal→WAL flusher (`--journal-dir`).
+    wal: Option<WalFlusher>,
+    /// The `/metrics` scrape endpoint (`--metrics-addr`).
+    metrics_http: Option<MetricsHttp>,
 }
 
 impl Router {
@@ -365,6 +399,13 @@ impl Router {
     /// `cfg.listen` is set — the fleet is then discovered entirely
     /// through shard registration.
     pub fn with_config(addrs: &[String], cfg: RouterConfig) -> Result<Self> {
+        Self::with_options(addrs, cfg, RouteOptions::default())
+    }
+
+    /// [`Router::with_config`] plus the flight-recorder options: the
+    /// journal WAL and the `/metrics` endpoint spawn only when their
+    /// options are set; the boot epoch is always minted.
+    pub fn with_options(addrs: &[String], cfg: RouterConfig, opts: RouteOptions) -> Result<Self> {
         ensure!(
             !addrs.is_empty() || cfg.listen.is_some(),
             "router needs at least one shard address or a registration listener"
@@ -385,11 +426,32 @@ impl Router {
             hb_timeouts: AtomicU64::new(0),
             auth_rejects: AtomicU64::new(0),
             tracer: Tracer::new(cfg.trace_sample, DEFAULT_SPAN_CAPACITY),
-            journal: EventJournal::new(DEFAULT_JOURNAL_CAPACITY),
+            journal: Arc::new(EventJournal::new(DEFAULT_JOURNAL_CAPACITY)),
             fleet: Mutex::new(FleetEvents::default()),
             closing: AtomicBool::new(false),
         });
         inner.rebuild_ring();
+        // Flight recorder first: created before any connection or
+        // listener, so every later error path drops (and joins) these
+        // cleanly, and the WAL captures the fleet's story from frame
+        // one.
+        let boot_epoch = mint_boot_epoch();
+        let wal = match &opts.journal_dir {
+            Some(dir) => Some(
+                WalFlusher::spawn(Arc::clone(&inner.journal), dir, boot_epoch, opts.wal)
+                    .with_context(|| format!("opening journal WAL in {}", dir.display()))?,
+            ),
+            None => None,
+        };
+        let metrics_http = match &opts.metrics_addr {
+            Some(maddr) => {
+                let inner = inner.clone();
+                Some(MetricsHttp::serve(maddr, move || {
+                    render_prometheus(&inner.merged_metrics(), boot_epoch)
+                })?)
+            }
+            None => None,
+        };
         for i in 0..addrs.len() {
             if let Err(e) = connect_shard(&inner, i) {
                 eprintln!("router: shard {i} ({}) unreachable at connect: {e:#}", addrs[i]);
@@ -417,7 +479,17 @@ impl Router {
             let inner = inner.clone();
             Some(std::thread::spawn(move || supervisor_loop(inner)))
         };
-        Ok(Self { inner, supervisor, reg_handle, reg_addr })
+        Ok(Self { inner, supervisor, reg_handle, reg_addr, boot_epoch, wal, metrics_http })
+    }
+
+    /// This boot's random non-zero epoch (wire v6).
+    pub fn boot_epoch(&self) -> u64 {
+        self.boot_epoch
+    }
+
+    /// The `/metrics` endpoint address, when one was configured.
+    pub fn metrics_addr(&self) -> Option<SocketAddr> {
+        self.metrics_http.as_ref().map(|m| m.local_addr())
     }
 
     /// The registration listener's bound address (resolves port 0), or
@@ -568,6 +640,16 @@ impl Router {
     /// (shard-local journals record themselves as shard 0).
     /// Unreachable shards are skipped this pull; their cursor is
     /// untouched, so nothing is lost — only delayed.
+    ///
+    /// **Restart detection** (wire v6): every reply carries the
+    /// shard's `boot_epoch`. When a slot's epoch *changes*, the
+    /// process behind it restarted and its journal sequence numbers
+    /// restarted at 0 — the stale cursor would silently skip the new
+    /// boot's entire prefix (`since` self-heals the cursor *value*,
+    /// but loses the events). The router resets the cursor, re-pulls
+    /// that shard from 0, and synthesizes a
+    /// [`EventKind::ShardRestarted`] marker into its own journal so
+    /// the merged timeline shows the discontinuity.
     pub fn fleet_events(&self) -> Vec<Event> {
         let shards: Vec<(usize, Arc<ShardState>)> = self
             .inner
@@ -579,26 +661,59 @@ impl Router {
             .filter(|(_, s)| !s.is_placeholder())
             .map(|(i, s)| (i, s.clone()))
             .collect();
-        let cursors: Vec<u64> = {
+        let (cursors, known_epochs): (Vec<u64>, Vec<u64>) = {
             let fleet = self.inner.fleet.lock().unwrap();
-            shards.iter().map(|(i, _)| fleet.cursors.get(i).copied().unwrap_or(0)).collect()
+            shards
+                .iter()
+                .map(|(i, _)| {
+                    (
+                        fleet.cursors.get(i).copied().unwrap_or(0),
+                        fleet.epochs.get(i).copied().unwrap_or(0),
+                    )
+                })
+                .unzip()
         };
         let probes: Vec<_> = shards
             .iter()
-            .zip(&cursors)
-            .map(|((slot, shard), &since)| {
+            .zip(cursors.iter().zip(&known_epochs))
+            .map(|((slot, shard), (&since, &known))| {
                 let slot = *slot;
                 let addr = shard.addr();
                 let psk = self.inner.cfg.psk.clone();
-                std::thread::spawn(move || (slot, fetch_events_auth(&addr, psk.as_ref(), since)))
+                std::thread::spawn(move || {
+                    let mut fetched = fetch_events_auth(&addr, psk.as_ref(), since);
+                    let mut restarted = false;
+                    if let Ok((_, _, epoch)) = &fetched {
+                        if *epoch != 0 && known != 0 && *epoch != known {
+                            // Epoch changed mid-stream: the first pull
+                            // used a cursor from the previous boot and
+                            // missed the new journal's prefix. Re-pull
+                            // from 0 — one extra round-trip, only on a
+                            // restart.
+                            restarted = true;
+                            fetched = fetch_events_auth(&addr, psk.as_ref(), 0);
+                        }
+                    }
+                    (slot, restarted, fetched)
+                })
             })
             .collect();
         let mut fresh: Vec<Event> = Vec::new();
-        let mut advanced: Vec<(usize, u64)> = Vec::new();
+        let mut advanced: Vec<(usize, u64, u64)> = Vec::new();
         for probe in probes {
-            let Ok((slot, fetched)) = probe.join() else { continue };
+            let Ok((slot, restarted, fetched)) = probe.join() else { continue };
             match fetched {
-                Ok((events, latest)) => {
+                Ok((events, latest, epoch)) => {
+                    if restarted {
+                        self.inner.journal.record_for(
+                            slot as u32,
+                            EventKind::ShardRestarted { shard: slot as u32, epoch },
+                        );
+                        eprintln!(
+                            "router: shard {slot} journal restarted (boot epoch {epoch:#x}); \
+                             cursor reset"
+                        );
+                    }
                     for mut e in events {
                         // Shard-local journals self-identify as shard 0
                         // (a shard does not know its fleet slot); the
@@ -606,7 +721,7 @@ impl Router {
                         e.shard = slot as u32;
                         fresh.push(e);
                     }
-                    advanced.push((slot, latest));
+                    advanced.push((slot, latest, epoch));
                 }
                 Err(e) => {
                     if !self.inner.closing.load(Ordering::SeqCst) {
@@ -617,8 +732,11 @@ impl Router {
         }
         fresh.extend(self.inner.journal.events());
         let mut fleet = self.inner.fleet.lock().unwrap();
-        for (slot, latest) in advanced {
+        for (slot, latest, epoch) in advanced {
             fleet.cursors.insert(slot, latest);
+            if epoch != 0 {
+                fleet.epochs.insert(slot, epoch);
+            }
         }
         let cache = std::mem::take(&mut fleet.cache);
         let mut merged = merge_events(cache, fresh);
@@ -629,6 +747,13 @@ impl Router {
         merged
     }
 
+    /// The last `boot_epoch` observed per fleet slot (wire v6; slots
+    /// that never reported one are absent). `remus top` diffs this
+    /// between pulls to flag restarted shards.
+    pub fn fleet_epochs(&self) -> HashMap<usize, u64> {
+        self.inner.fleet.lock().unwrap().epochs.clone()
+    }
+
     /// Merged fleet metrics: every shard (even one marked down for
     /// routing — its server may still answer control traffic) is probed
     /// over a short-lived connection; unreachable shards are skipped
@@ -637,53 +762,7 @@ impl Router {
     /// concurrently, so a fleet of dead shards costs one
     /// `CONTROL_TIMEOUT`, not a serial sum; the merge keeps shard order.
     pub fn metrics(&self) -> MetricsSnapshot {
-        // Placeholder slots (reserved by a `Register{prev}` claim,
-        // never yet claimed) have no endpoint: they are skipped here
-        // and excluded from the membership counters below, so a stale
-        // reservation cannot make a healthy fleet report down shards.
-        let shards: Vec<Arc<ShardState>> = self
-            .inner
-            .shards
-            .read()
-            .unwrap()
-            .iter()
-            .filter(|s| !s.is_placeholder())
-            .cloned()
-            .collect();
-        let probes: Vec<_> = shards
-            .iter()
-            .map(|shard| {
-                let addr = shard.addr();
-                let psk = self.inner.cfg.psk.clone();
-                std::thread::spawn(move || {
-                    let m = fetch_metrics_auth(&addr, psk.as_ref());
-                    (addr, m)
-                })
-            })
-            .collect();
-        let mut merged = MetricsSnapshot::default();
-        for probe in probes {
-            match probe.join() {
-                Ok((_, Ok(m))) => merged.merge(&m),
-                Ok((addr, Err(e))) => {
-                    eprintln!("router: metrics from {addr} unavailable: {e:#}")
-                }
-                Err(_) => {}
-            }
-        }
-        merged.shards_total = shards.len() as u64;
-        merged.shards_down = shards.iter().filter(|s| !s.up.load(Ordering::SeqCst)).count() as u64;
-        // Heartbeat traffic is a router-side property (per-shard
-        // snapshots carry zeros), so stamping — like the membership
-        // counters above — composes under nested merges.
-        merged.hb_pings += self.inner.hb_pings.load(Ordering::Relaxed);
-        merged.hb_pongs += self.inner.hb_pongs.load(Ordering::Relaxed);
-        merged.hb_timeouts += self.inner.hb_timeouts.load(Ordering::Relaxed);
-        // Auth rejects *add*: the shards count the peers they turned
-        // away, the router adds its own (registration handshakes,
-        // tampered data frames).
-        merged.auth_rejects += self.inner.auth_rejects.load(Ordering::Relaxed);
-        merged
+        self.inner.merged_metrics()
     }
 
     pub fn is_serving(&self) -> bool {
@@ -724,6 +803,15 @@ impl Router {
                 error: Some("router shutting down".to_string()),
             });
         }
+        // Last: the WAL flusher's stop path performs a final journal
+        // drain, so the shutdown-time membership events above are on
+        // disk before the process exits.
+        if let Some(wal) = self.wal.take() {
+            wal.stop();
+        }
+        if let Some(m) = self.metrics_http.take() {
+            m.shutdown();
+        }
     }
 }
 
@@ -744,6 +832,52 @@ impl Submitter for Router {
 impl RouterInner {
     fn shard(&self, i: usize) -> Option<Arc<ShardState>> {
         self.shards.read().unwrap().get(i).cloned()
+    }
+
+    /// Merged fleet metrics (the body behind [`Router::metrics`] —
+    /// also rendered by the `/metrics` endpoint, which holds only an
+    /// `Arc<RouterInner>`). Placeholder slots (reserved by a
+    /// `Register{prev}` claim, never yet claimed) have no endpoint:
+    /// they are skipped and excluded from the membership counters, so
+    /// a stale reservation cannot make a healthy fleet report down
+    /// shards.
+    fn merged_metrics(&self) -> MetricsSnapshot {
+        let shards: Vec<Arc<ShardState>> =
+            self.shards.read().unwrap().iter().filter(|s| !s.is_placeholder()).cloned().collect();
+        let probes: Vec<_> = shards
+            .iter()
+            .map(|shard| {
+                let addr = shard.addr();
+                let psk = self.cfg.psk.clone();
+                std::thread::spawn(move || {
+                    let m = fetch_metrics_auth(&addr, psk.as_ref());
+                    (addr, m)
+                })
+            })
+            .collect();
+        let mut merged = MetricsSnapshot::default();
+        for probe in probes {
+            match probe.join() {
+                Ok((_, Ok(m))) => merged.merge(&m),
+                Ok((addr, Err(e))) => {
+                    eprintln!("router: metrics from {addr} unavailable: {e:#}")
+                }
+                Err(_) => {}
+            }
+        }
+        merged.shards_total = shards.len() as u64;
+        merged.shards_down = shards.iter().filter(|s| !s.up.load(Ordering::SeqCst)).count() as u64;
+        // Heartbeat traffic is a router-side property (per-shard
+        // snapshots carry zeros), so stamping — like the membership
+        // counters above — composes under nested merges.
+        merged.hb_pings += self.hb_pings.load(Ordering::Relaxed);
+        merged.hb_pongs += self.hb_pongs.load(Ordering::Relaxed);
+        merged.hb_timeouts += self.hb_timeouts.load(Ordering::Relaxed);
+        // Auth rejects *add*: the shards count the peers they turned
+        // away, the router adds its own (registration handshakes,
+        // tampered data frames).
+        merged.auth_rejects += self.auth_rejects.load(Ordering::Relaxed);
+        merged
     }
 
     fn live_shards(&self) -> usize {
@@ -1463,17 +1597,23 @@ pub fn fetch_metrics_auth(addr: &str, psk: Option<&Psk>) -> Result<MetricsSnapsh
 }
 
 /// Pull one shard's reliability events past `since` over a short-lived
-/// connection (wire v5). Returns the events and the shard's next
-/// cursor (pass it back as `since` on the next pull).
-pub fn fetch_events(addr: &str, since: u64) -> Result<(Vec<Event>, u64)> {
+/// connection (wire v5). Returns the events, the shard's next cursor
+/// (pass it back as `since` on the next pull), and the shard's
+/// `boot_epoch` (wire v6; 0 from a pre-v6 shard). A *changed* epoch
+/// means the shard restarted and the cursor must reset to 0.
+pub fn fetch_events(addr: &str, since: u64) -> Result<(Vec<Event>, u64, u64)> {
     fetch_events_auth(addr, None, since)
 }
 
 /// [`fetch_events`] over an authenticated connection when a PSK is
 /// given.
-pub fn fetch_events_auth(addr: &str, psk: Option<&Psk>, since: u64) -> Result<(Vec<Event>, u64)> {
+pub fn fetch_events_auth(
+    addr: &str,
+    psk: Option<&Psk>,
+    since: u64,
+) -> Result<(Vec<Event>, u64, u64)> {
     match control_roundtrip(addr, psk, &Msg::Events { since })? {
-        Msg::EventsReply { latest, events } => Ok((events, latest)),
+        Msg::EventsReply { latest, events, boot_epoch } => Ok((events, latest, boot_epoch)),
         other => bail!("unexpected reply to Events: {other:?}"),
     }
 }
@@ -1551,7 +1691,7 @@ mod tests {
             hb_timeouts: AtomicU64::new(0),
             auth_rejects: AtomicU64::new(0),
             tracer: Tracer::new(0, 16),
-            journal: EventJournal::new(16),
+            journal: Arc::new(EventJournal::new(16)),
             fleet: Mutex::new(FleetEvents::default()),
             closing: AtomicBool::new(false),
         };

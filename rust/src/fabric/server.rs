@@ -21,6 +21,7 @@
 
 use std::collections::HashMap;
 use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver};
 use std::sync::{Arc, Mutex};
@@ -29,9 +30,11 @@ use std::time::Duration;
 
 use anyhow::{Context, Result};
 
-use crate::coordinator::{Coordinator, CoordinatorConfig, RequestResult};
+use crate::coordinator::{render_prometheus, Coordinator, CoordinatorConfig, RequestResult};
+use crate::telemetry::{mint_boot_epoch, WalConfig, WalFlusher};
 
 use super::auth::{client_split, server_split, FrameReader, FrameWriter, Psk};
+use super::metrics_http::MetricsHttp;
 use super::wire::Msg;
 
 /// How often a registered shard re-announces itself to the router
@@ -41,6 +44,25 @@ use super::wire::Msg;
 /// comes up with an empty fleet — rediscover every shard within one
 /// refresh period, each at its previously assigned ring slot.
 pub const REG_REFRESH: Duration = Duration::from_millis(500);
+
+/// Observability options for a fabric server (§Observability, wire
+/// v6): the durable flight recorder and the scrape endpoint. Both are
+/// off by default; [`FabricServer::start_with_auth`] keeps its exact
+/// pre-v6 behaviour apart from the (always minted) boot epoch.
+#[derive(Default)]
+pub struct ServeOptions {
+    /// Fleet PSK (see [`FabricServer::start_with_auth`]).
+    pub psk: Option<Psk>,
+    /// `--journal-dir`: spill the reliability journal into a
+    /// checksummed segment WAL under this directory (a fresh segment
+    /// stamped with this boot's epoch; nothing is ever replayed).
+    pub journal_dir: Option<PathBuf>,
+    /// `--metrics-addr`: serve the Prometheus text exposition over
+    /// plain HTTP at this address (see [`super::metrics_http`]).
+    pub metrics_addr: Option<String>,
+    /// WAL tuning (segment size, footprint bound, fsync policy).
+    pub wal: WalConfig,
+}
 
 /// A reply the connection's writer thread must deliver, in order.
 enum Reply {
@@ -73,6 +95,15 @@ pub struct FabricServer {
     /// Peers this server rejected: failed handshakes, plaintext clients
     /// on a sealed port, tampered frames. Stamped onto metrics replies.
     auth_rejects: Arc<AtomicU64>,
+    /// This boot's random non-zero epoch (wire v6), stamped into every
+    /// `EventsReply` so the router can tell a restart from a quiet
+    /// shard, and onto any WAL segments this process writes.
+    boot_epoch: u64,
+    /// Background journal→WAL flusher (`--journal-dir`), stopped with
+    /// a final drain at shutdown.
+    wal: Option<WalFlusher>,
+    /// The `/metrics` scrape endpoint (`--metrics-addr`).
+    metrics_http: Option<MetricsHttp>,
 }
 
 impl FabricServer {
@@ -87,6 +118,18 @@ impl FabricServer {
     /// a single frame reaches the coordinator, and all traffic is
     /// sealed (see [`crate::fabric::auth`]).
     pub fn start_with_auth(addr: &str, cfg: CoordinatorConfig, psk: Option<Psk>) -> Result<Self> {
+        Self::start_with_options(addr, cfg, ServeOptions { psk, ..ServeOptions::default() })
+    }
+
+    /// The full constructor: PSK plus the flight-recorder options. A
+    /// boot epoch is always minted (epoch-aware `EventsReply` costs 8
+    /// bytes per pull); the WAL flusher and the `/metrics` endpoint
+    /// spawn only when their options are set.
+    pub fn start_with_options(
+        addr: &str,
+        cfg: CoordinatorConfig,
+        opts: ServeOptions,
+    ) -> Result<Self> {
         let coord = Arc::new(Coordinator::start(cfg)?);
         let listener =
             TcpListener::bind(addr).with_context(|| format!("binding fabric server to {addr}"))?;
@@ -96,8 +139,28 @@ impl FabricServer {
         let stop = Arc::new(AtomicBool::new(false));
         let conns: Arc<Mutex<HashMap<u64, TcpStream>>> = Arc::new(Mutex::new(HashMap::new()));
         let conn_handles: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
-        let psk = Arc::new(psk);
+        let psk = Arc::new(opts.psk);
         let auth_rejects = Arc::new(AtomicU64::new(0));
+        let boot_epoch = mint_boot_epoch();
+        let wal = match &opts.journal_dir {
+            Some(dir) => Some(
+                WalFlusher::spawn(Arc::clone(coord.journal()), dir, boot_epoch, opts.wal)
+                    .with_context(|| format!("opening journal WAL in {}", dir.display()))?,
+            ),
+            None => None,
+        };
+        let metrics_http = match &opts.metrics_addr {
+            Some(maddr) => {
+                let coord = coord.clone();
+                let auth_rejects = auth_rejects.clone();
+                Some(MetricsHttp::serve(maddr, move || {
+                    let mut m = coord.metrics();
+                    m.auth_rejects = auth_rejects.load(Ordering::SeqCst);
+                    render_prometheus(&m, boot_epoch)
+                })?)
+            }
+            None => None,
+        };
         let accept_handle = {
             let coord = coord.clone();
             let stop = stop.clone();
@@ -106,7 +169,16 @@ impl FabricServer {
             let psk = psk.clone();
             let auth_rejects = auth_rejects.clone();
             std::thread::spawn(move || {
-                accept_loop(listener, coord, stop, conns, conn_handles, psk, auth_rejects)
+                accept_loop(
+                    listener,
+                    coord,
+                    stop,
+                    conns,
+                    conn_handles,
+                    psk,
+                    auth_rejects,
+                    boot_epoch,
+                )
             })
         };
         Ok(Self {
@@ -119,7 +191,20 @@ impl FabricServer {
             coord,
             psk,
             auth_rejects,
+            boot_epoch,
+            wal,
+            metrics_http,
         })
+    }
+
+    /// This boot's random non-zero epoch (wire v6).
+    pub fn boot_epoch(&self) -> u64 {
+        self.boot_epoch
+    }
+
+    /// The `/metrics` endpoint address, when one was configured.
+    pub fn metrics_addr(&self) -> Option<SocketAddr> {
+        self.metrics_http.as_ref().map(|m| m.local_addr())
     }
 
     /// Announce this shard to a router's registration endpoint
@@ -211,6 +296,15 @@ impl FabricServer {
         if let Ok(coord) = Arc::try_unwrap(self.coord) {
             coord.shutdown();
         }
+        // Stop the flusher *after* the coordinator drained, so any
+        // final reliability events make it into the WAL; its stop path
+        // performs one last journal drain.
+        if let Some(wal) = self.wal.take() {
+            wal.stop();
+        }
+        if let Some(m) = self.metrics_http.take() {
+            m.shutdown();
+        }
     }
 }
 
@@ -241,6 +335,7 @@ fn register_once(router_reg: &str, msg: &Msg, psk: Option<&Psk>) -> Result<(u32,
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn accept_loop(
     listener: TcpListener,
     coord: Arc<Coordinator>,
@@ -249,6 +344,7 @@ fn accept_loop(
     conn_handles: Arc<Mutex<Vec<JoinHandle<()>>>>,
     psk: Arc<Option<Psk>>,
     auth_rejects: Arc<AtomicU64>,
+    boot_epoch: u64,
 ) {
     let mut next_conn_id = 0u64;
     while !stop.load(Ordering::SeqCst) {
@@ -276,7 +372,7 @@ fn accept_loop(
                 let handle = std::thread::spawn(move || {
                     match server_split(stream, (*psk).as_ref(), None) {
                         Ok((reader, writer)) => {
-                            conn_loop(reader, writer, coord, stop, &auth_rejects)
+                            conn_loop(reader, writer, coord, stop, &auth_rejects, boot_epoch)
                         }
                         Err(e) => {
                             auth_rejects.fetch_add(1, Ordering::SeqCst);
@@ -314,6 +410,7 @@ fn conn_loop(
     coord: Arc<Coordinator>,
     stop: Arc<AtomicBool>,
     auth_rejects: &AtomicU64,
+    boot_epoch: u64,
 ) {
     // The handshake (when one ran) left a short write timeout on the
     // socket; the data path writes replies however long the peer takes
@@ -383,9 +480,13 @@ fn conn_loop(
                 // reply carries this shard's events at-or-past the
                 // caller's cursor plus the next cursor value; the
                 // router merges replies fleet-wide with per-shard
-                // cursors (`Router::fleet_events`).
+                // cursors (`Router::fleet_events`). The boot epoch
+                // (wire v6) lets the router detect that this process
+                // restarted — sequence numbers restarted at 0 — and
+                // reset its cursor instead of stalling.
                 let (events, latest) = coord.journal().since(since);
-                if reply_tx.send(Reply::Now(Msg::EventsReply { latest, events })).is_err() {
+                let reply = Msg::EventsReply { latest, events, boot_epoch };
+                if reply_tx.send(Reply::Now(reply)).is_err() {
                     break;
                 }
             }

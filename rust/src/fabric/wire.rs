@@ -40,11 +40,15 @@ use crate::telemetry::{Event, EventKind, Stage, TraceSpan};
 /// v5-stamped — when nonzero), the observability counters trailing the
 /// snapshot body (`uptime_ns`, latency overflow/exact max, per-kind
 /// counters), and the control-plane `Events`/`EventsReply` +
-/// `SpansReq`/`SpansReply` messages. Each frame is stamped with the
-/// *lowest* version that can represent its message
-/// ([`Msg::min_version`]), so older peers keep understanding the
-/// unchanged message layouts.
-pub const WIRE_VERSION: u8 = 5;
+/// `SpansReq`/`SpansReply` messages. v6 added the durable flight
+/// recorder's epoch awareness (see [`crate::telemetry::wal`]): an
+/// optional `boot_epoch` trailing `EventsReply` (only present — and
+/// only v6-stamped — when nonzero), letting the router detect that a
+/// shard restarted and its journal sequence numbers started over.
+/// Each frame is stamped with the *lowest* version that can represent
+/// its message ([`Msg::min_version`]), so older peers keep
+/// understanding the unchanged message layouts.
+pub const WIRE_VERSION: u8 = 6;
 
 /// Oldest version this decoder still accepts. v1/v2 frames decode
 /// compatibly (the snapshot's missing membership/heartbeat counters
@@ -112,8 +116,13 @@ pub enum Msg {
     Events { since: u64 },
     /// Shard -> client (wire v5): journal slice plus the cursor to
     /// resume from (`latest` always advances, even past entries the
-    /// bounded journal already overwrote).
-    EventsReply { latest: u64, events: Vec<Event> },
+    /// bounded journal already overwrote). `boot_epoch` (wire v6) is
+    /// the replying process's random per-boot identity — a change on
+    /// the same slot means the process restarted and its journal
+    /// restarted at seq 0, so the puller must reset its cursor. 0
+    /// means "not epoch-aware", and an epoch-less reply keeps the
+    /// exact v5 layout so old pullers interoperate.
+    EventsReply { latest: u64, events: Vec<Event>, boot_epoch: u64 },
     /// Client/router -> shard (wire v5): pull the shard's retained
     /// sampled trace spans.
     SpansReq,
@@ -152,6 +161,10 @@ impl Msg {
     /// labeled with the version that introduced them.
     fn min_version(&self) -> u8 {
         match self {
+            // An epoch-stamped journal reply carries the trailing
+            // boot epoch; an epoch-less one keeps the exact v5 layout
+            // for old pullers.
+            Msg::EventsReply { boot_epoch, .. } if *boot_epoch != 0 => 6,
             Msg::MetricsReply(_)
             | Msg::Events { .. }
             | Msg::EventsReply { .. }
@@ -224,11 +237,17 @@ impl Msg {
             }
             Msg::Ping { nonce } | Msg::Pong { nonce } => put_u64(&mut out, *nonce),
             Msg::Events { since } => put_u64(&mut out, *since),
-            Msg::EventsReply { latest, events } => {
+            Msg::EventsReply { latest, events, boot_epoch } => {
                 put_u64(&mut out, *latest);
                 put_u32(&mut out, events.len() as u32);
                 for e in events {
                     put_event(&mut out, e);
+                }
+                // The boot epoch trails the v5 body, and only in
+                // v6-stamped frames (epoch-less replies keep the
+                // exact v5 layout for old pullers).
+                if *boot_epoch != 0 {
+                    put_u64(&mut out, *boot_epoch);
                 }
             }
             Msg::SpansReq => {}
@@ -330,7 +349,11 @@ impl Msg {
                 for _ in 0..n {
                     events.push(c.event()?);
                 }
-                Msg::EventsReply { latest, events }
+                // v6 appended the boot epoch; only epoch-stamped
+                // replies are v6-stamped, so the field is present iff
+                // version >= 6.
+                let boot_epoch = if version >= 6 { c.u64()? } else { 0 };
+                Msg::EventsReply { latest, events, boot_epoch }
             }
             15 => Msg::SpansReq,
             16 => {
@@ -683,11 +706,25 @@ mod tests {
         let reg3 =
             Msg::Register { name: "a".into(), addr: "b".into(), spare: false, prev: Some(4) };
         assert_eq!(reg3.to_bytes()[0], 3, "prev-carrying Register keeps the v3 layout");
-        assert_eq!(Msg::MetricsReply(MetricsSnapshot::default()).to_bytes()[0], WIRE_VERSION);
+        assert_eq!(
+            Msg::MetricsReply(MetricsSnapshot::default()).to_bytes()[0],
+            5,
+            "snapshot layout is unchanged in v6, so MetricsReply stays v5-stamped"
+        );
         assert_eq!(Msg::Ping { nonce: 9 }.to_bytes()[0], 3, "heartbeats keep the v3 layout");
         assert_eq!(Msg::Pong { nonce: 9 }.to_bytes()[0], 3, "heartbeats keep the v3 layout");
         assert_eq!(Msg::Events { since: 0 }.to_bytes()[0], 5, "telemetry messages are v5");
         assert_eq!(Msg::SpansReq.to_bytes()[0], 5, "telemetry messages are v5");
+        // An epoch-stamped EventsReply carries the trailing boot
+        // epoch and is v6-stamped; an epoch-less one stays v5.
+        let plain = Msg::EventsReply { latest: 4, events: vec![], boot_epoch: 0 };
+        let pb = plain.to_bytes();
+        assert_eq!(pb[0], 5, "epoch-less journal replies keep the v5 layout");
+        let stamped = Msg::EventsReply { latest: 4, events: vec![], boot_epoch: 0xA11CE };
+        let sb = stamped.to_bytes();
+        assert_eq!(sb[0], 6, "epoch-stamped journal replies need the v6 trailing field");
+        assert_eq!(sb.len(), pb.len() + 8);
+        assert_eq!(Msg::from_bytes(&sb).unwrap(), stamped);
     }
 
     #[test]
@@ -733,6 +770,17 @@ mod tests {
                     },
                     Event { seq: 2, shard: 1, at_ns: 456, kind: EventKind::AuthReject },
                 ],
+                boot_epoch: 0,
+            },
+            Msg::EventsReply {
+                latest: 9,
+                events: vec![Event {
+                    seq: 8,
+                    shard: 2,
+                    at_ns: 789,
+                    kind: EventKind::ShardRestarted { shard: 2, epoch: 0xFEED },
+                }],
+                boot_epoch: 0xFEED_F00D,
             },
             Msg::SpansReq,
             Msg::SpansReply {
@@ -875,7 +923,7 @@ mod tests {
         // v5-only types inside a v4 frame are rejected.
         let v5_only = [
             Msg::Events { since: 0 },
-            Msg::EventsReply { latest: 0, events: vec![] },
+            Msg::EventsReply { latest: 0, events: vec![], boot_epoch: 0 },
             Msg::SpansReq,
             Msg::SpansReply { spans: vec![] },
         ];
@@ -886,6 +934,13 @@ mod tests {
                 assert!(Msg::from_bytes(&bytes).is_err(), "{m:?} requires wire v5");
             }
         }
+        // An epoch-stamped EventsReply relabeled v5 has trailing
+        // bytes the v5 layout cannot express: a clean error, not a
+        // misparse.
+        let mut stamped =
+            Msg::EventsReply { latest: 1, events: vec![], boot_epoch: 7 }.to_bytes();
+        stamped[0] = 5;
+        assert!(Msg::from_bytes(&stamped).is_err(), "boot epoch requires wire v6");
         // v2-only types inside a v1 frame are rejected.
         let mut reg = Msg::Register { name: "x".into(), addr: "y".into(), spare: false, prev: None }
             .to_bytes();

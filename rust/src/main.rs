@@ -84,6 +84,16 @@
 //!                                     # per-stage percentiles.
 //!                                     # Fabric shards must run the
 //!                                     # same --trace-sample rate
+//! remus postmortem --journal-dir d [--json --out BENCH_postmortem.json]
+//!                                     # §Observability crash
+//!                                     # forensics: reconstruct a dead
+//!                                     # process's reliability
+//!                                     # timeline from its on-disk
+//!                                     # journal WAL — per-boot-epoch
+//!                                     # event tables in causal order
+//!                                     # plus a scrub / escalation /
+//!                                     # remap / retirement summary.
+//!                                     # Needs no running fleet
 //! ```
 //!
 //! Every fabric role additionally accepts `--psk-file <path>`
@@ -92,6 +102,21 @@
 //! handshake, and all frames are sealed (encrypted + integrity-tagged,
 //! replay-protected). Without the flag the wire stays plaintext and
 //! rejects sealed peers — mixed fleets fail loudly, never silently.
+//!
+//! `fabric-serve` and `fabric-route` also take the flight-recorder
+//! flags (§Observability, wire v6): `--journal-dir <dir>` spills the
+//! reliability journal into a checksummed, segment-rotated WAL that
+//! `remus postmortem` reads back after a crash (`fabric-soak` forwards
+//! it to its children as per-shard subdirectories), and
+//! `--metrics-addr <host:port>` serves the Prometheus text exposition
+//! at `GET /metrics` — the shard's own counters on `fabric-serve`, the
+//! merged fleet snapshot on `fabric-route`. The WAL is tunable with
+//! `--wal-segment-bytes` (rotation threshold), `--wal-max-bytes`
+//! (total per-directory footprint; oldest closed segments are deleted
+//! past it) and `--wal-fsync` (fsync per drained batch instead of
+//! OS-buffered appends).
+
+use std::collections::HashMap;
 
 use anyhow::Result;
 
@@ -101,11 +126,16 @@ use remus::bitlet::BitletModel;
 use remus::coordinator::{Coordinator, CoordinatorConfig, MetricsSnapshot, Submitter};
 use remus::errs::ErrorModel;
 use remus::fabric::loadgen::{self, LoadgenConfig};
-use remus::fabric::{shutdown_endpoint_auth, FabricServer, Psk, Router, RouterConfig};
+use remus::fabric::{
+    shutdown_endpoint_auth, FabricServer, Psk, RouteOptions, Router, RouterConfig, ServeOptions,
+};
 use remus::health::{HealthConfig, WearModel};
 use remus::mmpu::{controller::quick_exec, FunctionKind, ReliabilityPolicy};
 use remus::nn::degradation::DegradationModel;
-use remus::telemetry::{stage_summaries, unix_now_ns, StageSummary, SHARD_NONE};
+use remus::telemetry::{
+    read_wal_dir, stage_summaries, unix_now_ns, EpochTimeline, EventKind, FsyncMode, StageSummary,
+    WalConfig, SHARD_NONE,
+};
 use remus::tmr::TmrMode;
 use remus::util::cli::Args;
 use remus::util::stats::logspace;
@@ -130,10 +160,11 @@ fn main() -> Result<()> {
         Some("loadgen") => loadgen_cmd(&args),
         Some("top") => top_cmd(&args),
         Some("trace") => trace_cmd(&args),
+        Some("postmortem") => postmortem_cmd(&args),
         _ => {
             eprintln!(
                 "usage: remus <info|demo|fig4|fig5|overhead|tradeoff|serve|soak|lifetime|\
-                 fabric-serve|fabric-route|fabric-soak|loadgen|top|trace> [--opts]\n \
+                 fabric-serve|fabric-route|fabric-soak|loadgen|top|trace|postmortem> [--opts]\n \
                  see doc comments in rust/src/main.rs"
             );
             Ok(())
@@ -539,13 +570,29 @@ fn psk_from_args(args: &Args) -> Result<Option<Psk>> {
     args.get("psk-file").map(Psk::load).transpose()
 }
 
+/// WAL tuning from the shared flag surface (inert without
+/// `--journal-dir`): `--wal-segment-bytes` sets the rotation
+/// threshold, `--wal-max-bytes` the per-directory footprint bound,
+/// and `--wal-fsync` trades a syscall per drained batch for
+/// power-loss durability.
+fn wal_from_args(args: &Args) -> WalConfig {
+    let dflt = WalConfig::default();
+    WalConfig {
+        segment_bytes: args.get_or("wal-segment-bytes", dflt.segment_bytes),
+        max_total_bytes: args.get_or("wal-max-bytes", dflt.max_total_bytes),
+        fsync: if args.flag("wal-fsync") { FsyncMode::PerBatch } else { FsyncMode::Buffered },
+        ..dflt
+    }
+}
+
 /// Build a fabric router from the shared CLI flag surface — the one
 /// place `--probe-ms`, `--retry-ms`, `--listen-reg`, `--hb-ms`,
-/// `--hb-timeout-ms`, `--psk-file` and `--trace-sample` are wired, so
-/// `serve`, `fabric-route`, `loadgen`, `top` and `trace` cannot drift
-/// apart — then announce the registration port and wait for
-/// `--min-shards`. `trace_default` is the `--trace-sample` fallback
-/// (0 everywhere except `remus trace`, which samples by default).
+/// `--hb-timeout-ms`, `--psk-file`, `--trace-sample`, `--journal-dir`
+/// and `--metrics-addr` are wired, so `serve`, `fabric-route`,
+/// `loadgen`, `top` and `trace` cannot drift apart — then announce the
+/// registration port and wait for `--min-shards`. `trace_default` is
+/// the `--trace-sample` fallback (0 everywhere except `remus trace`,
+/// which samples by default).
 fn router_from_args(
     args: &Args,
     addrs: Vec<String>,
@@ -561,7 +608,15 @@ fn router_from_args(
         psk: psk_from_args(args)?,
         trace_sample: args.get_or("trace-sample", trace_default),
     };
-    let router = Router::with_config(&addrs, rcfg)?;
+    let opts = RouteOptions {
+        journal_dir: args.get("journal-dir").map(std::path::PathBuf::from),
+        metrics_addr: args.get("metrics-addr").map(str::to_string),
+        wal: wal_from_args(args),
+    };
+    let router = Router::with_options(&addrs, rcfg, opts)?;
+    if let Some(m) = router.metrics_addr() {
+        println!("METRICS http://{m}/metrics");
+    }
     announce_registration(&router, args, addrs.len(), ctx);
     Ok(router)
 }
@@ -601,8 +656,20 @@ fn shard_config(args: &Args) -> CoordinatorConfig {
 /// binding port 0), then serves until a `Shutdown` frame arrives.
 fn fabric_serve(args: &Args) -> Result<()> {
     let addr = args.get("addr").unwrap_or("127.0.0.1:4870");
-    let server = FabricServer::start_with_auth(addr, shard_config(args), psk_from_args(args)?)?;
+    let opts = ServeOptions {
+        psk: psk_from_args(args)?,
+        journal_dir: args.get("journal-dir").map(std::path::PathBuf::from),
+        metrics_addr: args.get("metrics-addr").map(str::to_string),
+        wal: wal_from_args(args),
+    };
+    let server = FabricServer::start_with_options(addr, shard_config(args), opts)?;
+    // The LISTENING banner must stay the first stdout line: the
+    // fabric-soak parent parses it to learn an ephemeral port.
     println!("LISTENING {}", server.local_addr());
+    if let Some(m) = server.metrics_addr() {
+        println!("METRICS http://{m}/metrics");
+    }
+    println!("boot epoch {:#018x}", server.boot_epoch());
     use std::io::Write as _;
     std::io::stdout().flush()?;
     // Registration-based discovery: announce this shard to a router's
@@ -703,16 +770,24 @@ fn spawn_shard(
         "endurance",
         "psk-file",
         "trace-sample",
+        "wal-segment-bytes",
+        "wal-max-bytes",
     ];
     for key in keys {
         if let Some(v) = args.get(key) {
             cmd.arg(format!("--{key}")).arg(v);
         }
     }
-    for flag in ["health", "nominal-errors"] {
+    for flag in ["health", "nominal-errors", "wal-fsync"] {
         if args.flag(flag) {
             cmd.arg(format!("--{flag}"));
         }
+    }
+    // Flight recorder: each child journals into its own subdirectory —
+    // the WAL footprint bound is per-directory, so a shared dir would
+    // let one shard's rotation delete another's segments.
+    if let Some(dir) = args.get("journal-dir") {
+        cmd.arg("--journal-dir").arg(std::path::Path::new(dir).join(format!("shard{shard}")));
     }
     let mut child = cmd.spawn()?;
     use std::io::BufRead as _;
@@ -982,7 +1057,22 @@ fn run_loadgen_sweep(
         telemetry.sampled_ns_per_req,
         telemetry.sampled_overhead_pct
     );
-    loadgen::write_json(out, cfg, &sweep, Some(&seal), Some(&telemetry))?;
+    // Informational flight-recorder cost (§Observability): what
+    // --journal-dir adds per recorded journal event — no WAL vs
+    // buffered appends vs an fsync per drained batch — so the artifact
+    // records the persistence tax before anyone enables it fleet-wide.
+    let journal = loadgen::measure_journal_overhead(4096)?;
+    println!(
+        "journal persistence overhead ({} events): off {:.0}ns/event, buffered WAL \
+         {:.0}ns/event ({:+.1}%), fsync-per-batch {:.0}ns/event ({:+.1}%)",
+        journal.events,
+        journal.off_ns_per_event,
+        journal.buffered_ns_per_event,
+        journal.buffered_overhead_pct,
+        journal.fsync_ns_per_event,
+        journal.fsync_overhead_pct
+    );
+    loadgen::write_json(out, cfg, &sweep, Some(&seal), Some(&telemetry), Some(&journal))?;
     println!("(machine-readable results written to {out})");
     Ok(())
 }
@@ -1041,8 +1131,10 @@ fn loadgen_cmd(args: &Args) -> Result<()> {
 /// One `remus top` frame: merged fleet metrics, per-kind counters,
 /// per-worker health, and the newest entries of the fleet-merged
 /// reliability event journal (each pulled over the wire with per-shard
-/// cursors, so repeated frames are incremental).
-fn print_top_frame(router: &Router) {
+/// cursors, so repeated frames are incremental). `prev_epochs` carries
+/// the per-slot boot epochs seen by the previous frame so a shard that
+/// restarted between frames is flagged explicitly (wire v6).
+fn print_top_frame(router: &Router, prev_epochs: &mut HashMap<usize, u64>) {
     let m = router.metrics();
     let uptime_s = m.uptime_ns as f64 / 1e9;
     let qps = if uptime_s > 0.0 {
@@ -1097,6 +1189,22 @@ fn print_top_frame(router: &Router) {
         let age_s = now.saturating_sub(e.at_ns) as f64 / 1e9;
         println!("  [{age_s:>9.3}s ago] {origin:<8} {}", e.kind.describe());
     }
+    // Boot-epoch watch (wire v6): a changed epoch means the shard
+    // process restarted between frames — its journal cursor was reset
+    // and a shard_restarted marker merged above.
+    let epochs = router.fleet_epochs();
+    let mut restarted: Vec<(usize, u64, u64)> = epochs
+        .iter()
+        .filter_map(|(&slot, &ep)| match prev_epochs.get(&slot) {
+            Some(&old) if old != 0 && old != ep => Some((slot, old, ep)),
+            _ => None,
+        })
+        .collect();
+    restarted.sort_unstable();
+    for (slot, old, new) in restarted {
+        println!("  !! shard {slot} RESTARTED since last frame (boot epoch {old:#x} -> {new:#x})");
+    }
+    *prev_epochs = epochs;
 }
 
 /// §Telemetry live fleet inspection (`remus top`): attach a read-only
@@ -1117,11 +1225,12 @@ fn top_cmd(args: &Args) -> Result<()> {
         1
     };
     let interval = std::time::Duration::from_millis(args.get_or("interval-ms", 1000u64));
+    let mut epochs = HashMap::new();
     for round in 0..rounds {
         if round > 0 {
             std::thread::sleep(interval);
         }
-        print_top_frame(&router);
+        print_top_frame(&router, &mut epochs);
     }
     router.shutdown();
     Ok(())
@@ -1235,5 +1344,191 @@ fn trace_cmd(args: &Args) -> Result<()> {
         write_trace_json(out, sample, requests, spans.len(), traces.len(), &summaries)?;
         println!("(machine-readable results written to {out})");
     }
+    Ok(())
+}
+
+/// Newest events shown per epoch on stdout; the `--json` artifact
+/// always carries the full log.
+const POSTMORTEM_TAIL: usize = 32;
+
+/// Per-epoch reliability summary accumulated from a recovered WAL
+/// timeline — the numbers a post-mortem reads first.
+#[derive(Default)]
+struct PmSummary {
+    scrubs: u64,
+    corrected: u64,
+    stuck_cells: u64,
+    remapped_rows: u64,
+    escalations: u64,
+    peak_level: u8,
+    deescalations: u64,
+    retired_workers: u64,
+    membership_events: u64,
+    auth_rejects: u64,
+    shard_restarts: u64,
+}
+
+fn summarize_epoch(tl: &EpochTimeline) -> PmSummary {
+    let mut s = PmSummary::default();
+    let mut retired: Vec<u32> = Vec::new();
+    for e in &tl.events {
+        match e.kind {
+            EventKind::Scrub { corrected, detected, remapped, .. } => {
+                s.scrubs += 1;
+                s.corrected += corrected;
+                s.stuck_cells += detected as u64;
+                s.remapped_rows += remapped as u64;
+            }
+            EventKind::StuckCell { cells, .. } => s.stuck_cells += cells,
+            EventKind::RowRemap { rows, .. } => s.remapped_rows += rows,
+            EventKind::PolicyEscalate { level, .. } => {
+                s.escalations += 1;
+                s.peak_level = s.peak_level.max(level);
+            }
+            EventKind::PolicyDeescalate { .. } => s.deescalations += 1,
+            EventKind::WorkerRetire { worker } => {
+                if !retired.contains(&worker) {
+                    retired.push(worker);
+                }
+            }
+            EventKind::SparePromote { .. }
+            | EventKind::SpareDemote { .. }
+            | EventKind::ShardDown { .. }
+            | EventKind::ShardRevive { .. }
+            | EventKind::HeartbeatTimeout { .. }
+            | EventKind::FailoverReplay { .. } => s.membership_events += 1,
+            EventKind::AuthReject => s.auth_rejects += 1,
+            EventKind::ShardRestarted { .. } => s.shard_restarts += 1,
+        }
+    }
+    s.retired_workers = retired.len() as u64;
+    s
+}
+
+/// §Observability crash forensics (`remus postmortem`): read a dead
+/// process's `--journal-dir` WAL back from disk — no fleet, no socket,
+/// just the segment files — and reconstruct its reliability timeline.
+/// Epochs print oldest boot first; within an epoch events are in
+/// journal (causal) order. A torn tail is called out, never fatal:
+/// a crash mid-record loses at most that suffix.
+fn postmortem_cmd(args: &Args) -> Result<()> {
+    let dir = args
+        .get("journal-dir")
+        .ok_or_else(|| anyhow::anyhow!("remus postmortem needs --journal-dir <dir>"))?;
+    let timelines = read_wal_dir(std::path::Path::new(dir))?;
+    anyhow::ensure!(!timelines.is_empty(), "no readable WAL segments under {dir}");
+    println!("postmortem: {} boot epoch(s) recovered from {dir}", timelines.len());
+    for (i, tl) in timelines.iter().enumerate() {
+        let s = summarize_epoch(tl);
+        let t0 = tl.events.first().map(|e| e.at_ns).unwrap_or(0);
+        let wall_s = tl
+            .events
+            .last()
+            .map(|last| last.at_ns.saturating_sub(t0) as f64 / 1e9)
+            .unwrap_or(0.0);
+        println!(
+            "\n== boot {}/{}: epoch {:#018x} — {} event(s) over {:.3}s across {} segment(s){} ==",
+            i + 1,
+            timelines.len(),
+            tl.epoch,
+            tl.events.len(),
+            wall_s,
+            tl.segments,
+            if tl.torn_tail { ", TORN TAIL (crash mid-record; suffix lost)" } else { "" }
+        );
+        println!(
+            "  scrubs {} (corrected {}), stuck cells {}, remapped rows {}, escalations {} \
+             (peak level {}), de-escalations {}, retired workers {}, membership events {}, \
+             auth rejects {}, shard restarts seen {}",
+            s.scrubs,
+            s.corrected,
+            s.stuck_cells,
+            s.remapped_rows,
+            s.escalations,
+            s.peak_level,
+            s.deescalations,
+            s.retired_workers,
+            s.membership_events,
+            s.auth_rejects,
+            s.shard_restarts
+        );
+        let tail = tl.events.len().saturating_sub(POSTMORTEM_TAIL);
+        if tail > 0 {
+            println!("  ... {tail} earlier event(s) elided (full log in the --json artifact)");
+        }
+        let mut t = Table::new(
+            "causal event chain (oldest shown first)",
+            &["seq", "shard", "t+ms", "event"],
+        );
+        for e in &tl.events[tail..] {
+            let origin =
+                if e.shard == SHARD_NONE { "fabric".to_string() } else { e.shard.to_string() };
+            t.row(&[
+                e.seq.to_string(),
+                origin,
+                format!("{:.3}", e.at_ns.saturating_sub(t0) as f64 / 1e6),
+                e.kind.describe(),
+            ]);
+        }
+        t.print();
+    }
+    if args.flag("json") {
+        let out = args.get("out").unwrap_or("BENCH_postmortem.json");
+        write_postmortem_json(out, dir, &timelines)?;
+        println!("(machine-readable results written to {out})");
+    }
+    Ok(())
+}
+
+/// Escape for embedding in a hand-rolled JSON string (the journal's
+/// describe() strings are plain ASCII, but a journal dir path is
+/// user-controlled).
+fn json_escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+/// The `remus postmortem --json` artifact: per-epoch summary counters
+/// plus the complete recovered event log (CI machine-checks the
+/// escalation story from it and archives it next to the bench JSONs).
+fn write_postmortem_json(path: &str, dir: &str, timelines: &[EpochTimeline]) -> Result<()> {
+    let mut out = String::new();
+    out.push_str("{\n");
+    out.push_str("  \"bench\": \"postmortem\",\n");
+    out.push_str(&format!("  \"journal_dir\": \"{}\",\n", json_escape(dir)));
+    out.push_str("  \"epochs\": [\n");
+    for (i, tl) in timelines.iter().enumerate() {
+        let s = summarize_epoch(tl);
+        out.push_str("    {\n");
+        out.push_str(&format!("      \"epoch\": \"{:#018x}\",\n", tl.epoch));
+        out.push_str(&format!("      \"segments\": {},\n", tl.segments));
+        out.push_str(&format!("      \"torn_tail\": {},\n", tl.torn_tail));
+        out.push_str(&format!("      \"events\": {},\n", tl.events.len()));
+        out.push_str(&format!("      \"scrubs\": {},\n", s.scrubs));
+        out.push_str(&format!("      \"corrected\": {},\n", s.corrected));
+        out.push_str(&format!("      \"stuck_cells\": {},\n", s.stuck_cells));
+        out.push_str(&format!("      \"remapped_rows\": {},\n", s.remapped_rows));
+        out.push_str(&format!("      \"escalations\": {},\n", s.escalations));
+        out.push_str(&format!("      \"peak_policy_level\": {},\n", s.peak_level));
+        out.push_str(&format!("      \"deescalations\": {},\n", s.deescalations));
+        out.push_str(&format!("      \"retired_workers\": {},\n", s.retired_workers));
+        out.push_str(&format!("      \"membership_events\": {},\n", s.membership_events));
+        out.push_str(&format!("      \"auth_rejects\": {},\n", s.auth_rejects));
+        out.push_str(&format!("      \"shard_restarts\": {},\n", s.shard_restarts));
+        out.push_str("      \"log\": [\n");
+        for (j, e) in tl.events.iter().enumerate() {
+            out.push_str(&format!(
+                "        {{\"seq\": {}, \"shard\": {}, \"at_ns\": {}, \"event\": \"{}\"}}{}\n",
+                e.seq,
+                e.shard,
+                e.at_ns,
+                json_escape(&e.kind.describe()),
+                if j + 1 < tl.events.len() { "," } else { "" }
+            ));
+        }
+        out.push_str("      ]\n");
+        out.push_str(&format!("    }}{}\n", if i + 1 < timelines.len() { "," } else { "" }));
+    }
+    out.push_str("  ]\n}\n");
+    std::fs::write(path, out)?;
     Ok(())
 }

@@ -56,6 +56,10 @@ pub enum EventKind {
     /// A peer failed authentication (handshake or sealed-frame
     /// integrity) and was rejected.
     AuthReject,
+    /// Shard `shard` came back with a new `boot_epoch` (process
+    /// restart): its journal restarted at seq 0, so the router reset
+    /// its cursor. Synthesized by the router, never by a shard.
+    ShardRestarted { shard: u32, epoch: u64 },
 }
 
 impl EventKind {
@@ -76,6 +80,7 @@ impl EventKind {
             EventKind::HeartbeatTimeout { .. } => 11,
             EventKind::FailoverReplay { .. } => 12,
             EventKind::AuthReject => 13,
+            EventKind::ShardRestarted { .. } => 14,
         }
     }
 
@@ -94,6 +99,7 @@ impl EventKind {
             EventKind::HeartbeatTimeout { .. } => "heartbeat_timeout",
             EventKind::FailoverReplay { .. } => "failover_replay",
             EventKind::AuthReject => "auth_reject",
+            EventKind::ShardRestarted { .. } => "shard_restarted",
         }
     }
 
@@ -116,6 +122,7 @@ impl EventKind {
             EventKind::HeartbeatTimeout { shard } => (11, shard as u64, 0, 0),
             EventKind::FailoverReplay { shard, replayed } => (12, shard as u64, replayed, 0),
             EventKind::AuthReject => (13, 0, 0, 0),
+            EventKind::ShardRestarted { shard, epoch } => (14, shard as u64, epoch, 0),
         }
     }
 
@@ -140,6 +147,7 @@ impl EventKind {
             11 => EventKind::HeartbeatTimeout { shard: a as u32 },
             12 => EventKind::FailoverReplay { shard: a as u32, replayed: b },
             13 => EventKind::AuthReject,
+            14 => EventKind::ShardRestarted { shard: a as u32, epoch: b },
             _ => return None,
         })
     }
@@ -170,6 +178,9 @@ impl EventKind {
                 format!("failover replay from shard {shard}: {replayed} in-flight")
             }
             EventKind::AuthReject => "auth reject".to_string(),
+            EventKind::ShardRestarted { shard, epoch } => {
+                format!("shard {shard} RESTARTED (boot epoch {epoch:#x}, cursor reset)")
+            }
         }
     }
 }
@@ -292,6 +303,7 @@ mod tests {
             EventKind::HeartbeatTimeout { shard: 0 },
             EventKind::FailoverReplay { shard: 1, replayed: 17 },
             EventKind::AuthReject,
+            EventKind::ShardRestarted { shard: 1, epoch: 0xDEAD_BEEF },
         ];
         for k in kinds {
             let (tag, a, b, c) = k.to_words();

@@ -16,10 +16,16 @@
 //!   reliability [`Event`]s with monotonic sequence numbers, pulled
 //!   fleet-wide over `Events{since}` cursors and merged by the
 //!   router with [`merge_events`].
+//! - [`wal`]: the durable flight recorder — a checksummed,
+//!   segment-rotated append-only log a background flusher spills the
+//!   journal into, so a crashed process's story survives for
+//!   `remus postmortem`. Each boot mints a fresh random
+//!   [`wal::mint_boot_epoch`]; the WAL is forensic, never replayed.
 
 pub mod journal;
 pub mod ring;
 pub mod spans;
+pub mod wal;
 
 pub use journal::{
     merge_events, unix_now_ns, Event, EventJournal, EventKind, DEFAULT_JOURNAL_CAPACITY,
@@ -27,6 +33,9 @@ pub use journal::{
 };
 pub use spans::{
     stage_summaries, Stage, StageSummary, TraceSpan, Tracer, DEFAULT_SPAN_CAPACITY,
+};
+pub use wal::{
+    mint_boot_epoch, read_wal_dir, EpochTimeline, FsyncMode, WalConfig, WalFlusher, WalWriter,
 };
 
 /// The splitmix64 finalizer: a cheap, statistically strong u64 mixer.

@@ -1,0 +1,528 @@
+//! Durable flight recorder: an append-only write-ahead log that
+//! spills the in-memory [`EventJournal`] ring to disk, so a crashed
+//! shard's reliability story survives the process (ROADMAP
+//! §Telemetry carryover: "events die with the process today").
+//!
+//! The WAL is **forensic, not state**: a rebooting process never
+//! replays it. On boot it mints a random non-zero `boot_epoch`,
+//! opens a fresh segment stamped with that epoch, and a background
+//! flusher thread drains the journal ring through its ordinary
+//! `since(cursor)` API — event *emission* stays exactly as lock-free
+//! as before; only the flusher ever touches the filesystem.
+//!
+//! On-disk format (all integers little-endian):
+//!
+//! ```text
+//! segment file  wal-<epoch:016x>-<index:08>.seg
+//!   header      "REMUSWAL" magic ‖ u32 format version ‖ u64 boot_epoch
+//!   record*     u32 len ‖ u32 crc32(payload) ‖ payload
+//!   payload     u64 seq ‖ u32 shard ‖ u64 at_ns ‖ u8 tag ‖ u64 a ‖ u64 b ‖ u64 c
+//! ```
+//!
+//! A torn or bit-flipped tail record fails its length bound or CRC
+//! and cleanly ends the segment read — everything before the damage
+//! is recovered verbatim (property-tested in
+//! `tests/prop_telemetry.rs`). A CRC-valid record whose event tag is
+//! unknown (written by a newer build) is skipped, not fatal.
+//! Segments rotate at a size threshold and the writer deletes the
+//! oldest closed segments to keep the directory under a total
+//! footprint bound.
+
+use std::fs;
+use std::io::{self, Read, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use super::journal::{unix_now_ns, Event, EventJournal, EventKind};
+use super::splitmix64;
+
+/// Segment header magic.
+pub const WAL_MAGIC: [u8; 8] = *b"REMUSWAL";
+/// On-disk format version (bumped only on incompatible layout change).
+pub const WAL_FORMAT: u32 = 1;
+/// Header size: magic + format + boot_epoch.
+pub const WAL_HEADER_LEN: usize = 8 + 4 + 8;
+/// Fixed payload size of one event record (see module docs).
+pub const WAL_RECORD_LEN: usize = 8 + 4 + 8 + 1 + 8 + 8 + 8;
+/// Upper bound a record length prefix may claim before the reader
+/// declares the tail torn (guards against reading garbage lengths).
+pub const WAL_MAX_RECORD: u32 = 4096;
+
+const CRC_TABLE: [u32; 256] = crc32_table();
+
+const fn crc32_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0usize;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+/// CRC-32 (IEEE 802.3, the zlib/PNG polynomial), hand-rolled — the
+/// offline vendor set has no checksum crate.
+pub fn crc32(data: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in data {
+        c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    !c
+}
+
+/// Mint a random non-zero boot epoch: splitmix64 over the boot
+/// clock, pid, and a process-local counter (no rand crate in the
+/// vendor set; uniqueness across restarts of the same process image
+/// is what matters, not unpredictability).
+pub fn mint_boot_epoch() -> u64 {
+    static SALT: AtomicU64 = AtomicU64::new(0);
+    let salt = SALT.fetch_add(1, Ordering::Relaxed);
+    let mut x = unix_now_ns() ^ ((std::process::id() as u64) << 32) ^ (salt << 17);
+    loop {
+        x = splitmix64(x.wrapping_add(0x9E37_79B9));
+        if x != 0 {
+            return x;
+        }
+    }
+}
+
+/// Durability mode for WAL appends. The loadgen
+/// `journal_persistence_overhead` row measures all three arms (off /
+/// buffered / per-batch fsync) so the durability-vs-latency trade is
+/// a recorded number, not a guess.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FsyncMode {
+    /// OS-buffered writes, flushed to the file per batch; survives
+    /// process crashes (the forensic case) but not power loss.
+    Buffered,
+    /// `fsync` after every appended batch; survives power loss at a
+    /// per-batch syscall cost.
+    PerBatch,
+}
+
+/// WAL tuning knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct WalConfig {
+    /// Rotate to a new segment once the current one exceeds this.
+    pub segment_bytes: u64,
+    /// Delete oldest closed segments to keep the directory under
+    /// this total footprint.
+    pub max_total_bytes: u64,
+    pub fsync: FsyncMode,
+    /// How often the flusher thread drains the journal ring.
+    pub flush_interval: Duration,
+}
+
+impl Default for WalConfig {
+    fn default() -> Self {
+        Self {
+            segment_bytes: 256 * 1024,
+            max_total_bytes: 4 * 1024 * 1024,
+            fsync: FsyncMode::Buffered,
+            flush_interval: Duration::from_millis(50),
+        }
+    }
+}
+
+fn segment_path(dir: &Path, epoch: u64, index: u32) -> PathBuf {
+    dir.join(format!("wal-{epoch:016x}-{index:08}.seg"))
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Encode one event's record payload (without the len/crc framing).
+fn encode_payload(e: &Event) -> Vec<u8> {
+    let (tag, a, b, c) = e.kind.to_words();
+    let mut out = Vec::with_capacity(WAL_RECORD_LEN);
+    put_u64(&mut out, e.seq);
+    put_u32(&mut out, e.shard);
+    put_u64(&mut out, e.at_ns);
+    out.push(tag);
+    put_u64(&mut out, a);
+    put_u64(&mut out, b);
+    put_u64(&mut out, c);
+    out
+}
+
+/// Decode a record payload; `None` when the length is wrong or the
+/// event tag is unknown (a newer writer's kind — skippable).
+fn decode_payload(p: &[u8]) -> Option<Event> {
+    if p.len() != WAL_RECORD_LEN {
+        return None;
+    }
+    let u64_at = |i: usize| u64::from_le_bytes(p[i..i + 8].try_into().expect("8 bytes"));
+    let seq = u64_at(0);
+    let shard = u32::from_le_bytes(p[8..12].try_into().expect("4 bytes"));
+    let at_ns = u64_at(12);
+    let tag = p[20];
+    let kind = EventKind::from_words(tag, u64_at(21), u64_at(29), u64_at(37))?;
+    Some(Event { seq, shard, at_ns, kind })
+}
+
+/// Append-only segment writer for one process lifetime (one epoch).
+pub struct WalWriter {
+    dir: PathBuf,
+    epoch: u64,
+    cfg: WalConfig,
+    file: fs::File,
+    seg_index: u32,
+    seg_bytes: u64,
+}
+
+impl WalWriter {
+    /// Create the directory if needed and open a fresh segment
+    /// stamped with `epoch`. Nothing is replayed: the WAL is
+    /// forensic output only.
+    pub fn create(dir: &Path, epoch: u64, cfg: WalConfig) -> io::Result<WalWriter> {
+        fs::create_dir_all(dir)?;
+        let mut w = WalWriter {
+            dir: dir.to_path_buf(),
+            epoch,
+            cfg,
+            file: Self::open_segment(dir, epoch, 0)?,
+            seg_index: 0,
+            seg_bytes: WAL_HEADER_LEN as u64,
+        };
+        w.enforce_footprint()?;
+        Ok(w)
+    }
+
+    fn open_segment(dir: &Path, epoch: u64, index: u32) -> io::Result<fs::File> {
+        let mut file = fs::File::create(segment_path(dir, epoch, index))?;
+        let mut header = Vec::with_capacity(WAL_HEADER_LEN);
+        header.extend_from_slice(&WAL_MAGIC);
+        put_u32(&mut header, WAL_FORMAT);
+        put_u64(&mut header, epoch);
+        file.write_all(&header)?;
+        Ok(file)
+    }
+
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Append a batch of events as checksummed records, flush once,
+    /// fsync if configured, then rotate/garbage-collect if the
+    /// segment grew past its threshold.
+    pub fn append_batch(&mut self, events: &[Event]) -> io::Result<()> {
+        if events.is_empty() {
+            return Ok(());
+        }
+        let mut buf = Vec::with_capacity(events.len() * (WAL_RECORD_LEN + 8));
+        for e in events {
+            let payload = encode_payload(e);
+            put_u32(&mut buf, payload.len() as u32);
+            put_u32(&mut buf, crc32(&payload));
+            buf.extend_from_slice(&payload);
+        }
+        self.file.write_all(&buf)?;
+        self.file.flush()?;
+        if self.cfg.fsync == FsyncMode::PerBatch {
+            self.file.sync_data()?;
+        }
+        self.seg_bytes += buf.len() as u64;
+        if self.seg_bytes >= self.cfg.segment_bytes {
+            self.rotate()?;
+        }
+        Ok(())
+    }
+
+    fn rotate(&mut self) -> io::Result<()> {
+        self.file.flush()?;
+        if self.cfg.fsync == FsyncMode::PerBatch {
+            self.file.sync_data()?;
+        }
+        self.seg_index += 1;
+        self.file = Self::open_segment(&self.dir, self.epoch, self.seg_index)?;
+        self.seg_bytes = WAL_HEADER_LEN as u64;
+        self.enforce_footprint()
+    }
+
+    /// Delete the oldest *closed* segments (never the active one)
+    /// until the directory's total WAL footprint fits the bound.
+    fn enforce_footprint(&self) -> io::Result<()> {
+        let active = segment_path(&self.dir, self.epoch, self.seg_index);
+        let mut segs: Vec<(std::time::SystemTime, PathBuf, u64)> = Vec::new();
+        let mut total = 0u64;
+        for entry in fs::read_dir(&self.dir)? {
+            let entry = entry?;
+            let path = entry.path();
+            if !is_segment_name(&path) {
+                continue;
+            }
+            let meta = entry.metadata()?;
+            total += meta.len();
+            if path != active {
+                let mtime = meta.modified().unwrap_or(std::time::UNIX_EPOCH);
+                segs.push((mtime, path, meta.len()));
+            }
+        }
+        segs.sort();
+        for (_, path, len) in segs {
+            if total <= self.cfg.max_total_bytes {
+                break;
+            }
+            fs::remove_file(&path)?;
+            total -= len;
+        }
+        Ok(())
+    }
+}
+
+fn is_segment_name(path: &Path) -> bool {
+    path.file_name()
+        .and_then(|n| n.to_str())
+        .map(|n| n.starts_with("wal-") && n.ends_with(".seg"))
+        .unwrap_or(false)
+}
+
+/// One segment, read back: its stamped epoch and every record
+/// recovered before the first torn/corrupt one.
+#[derive(Clone, Debug)]
+pub struct SegmentRead {
+    pub epoch: u64,
+    pub events: Vec<Event>,
+    /// True when the read ended at a damaged record rather than a
+    /// clean EOF — the expected state of a SIGKILLed writer's last
+    /// segment, worth surfacing in a post-mortem report.
+    pub torn_tail: bool,
+}
+
+/// Read one segment file. Bad magic / header is an error (not a WAL
+/// segment at all); a damaged record merely ends the read, keeping
+/// every record before it.
+pub fn read_segment(path: &Path) -> io::Result<SegmentRead> {
+    let mut data = Vec::new();
+    fs::File::open(path)?.read_to_end(&mut data)?;
+    if data.len() < WAL_HEADER_LEN || data[..8] != WAL_MAGIC {
+        return Err(io::Error::new(io::ErrorKind::InvalidData, "not a WAL segment"));
+    }
+    let format = u32::from_le_bytes(data[8..12].try_into().expect("4 bytes"));
+    if format != WAL_FORMAT {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("unsupported WAL format {format}"),
+        ));
+    }
+    let epoch = u64::from_le_bytes(data[12..20].try_into().expect("8 bytes"));
+    let mut events = Vec::new();
+    let mut torn_tail = false;
+    let mut at = WAL_HEADER_LEN;
+    while at < data.len() {
+        if data.len() - at < 8 {
+            torn_tail = true;
+            break;
+        }
+        let len = u32::from_le_bytes(data[at..at + 4].try_into().expect("4 bytes"));
+        let crc = u32::from_le_bytes(data[at + 4..at + 8].try_into().expect("4 bytes"));
+        if len > WAL_MAX_RECORD || data.len() - at - 8 < len as usize {
+            torn_tail = true;
+            break;
+        }
+        let payload = &data[at + 8..at + 8 + len as usize];
+        if crc32(payload) != crc {
+            torn_tail = true;
+            break;
+        }
+        at += 8 + len as usize;
+        // CRC-valid but undecodable = a newer writer's kind: skip the
+        // record, keep reading — unlike damage, the framing is intact.
+        if let Some(e) = decode_payload(payload) {
+            events.push(e);
+        }
+    }
+    Ok(SegmentRead { epoch, events, torn_tail })
+}
+
+/// One process lifetime reconstructed from a WAL directory: all
+/// recovered events of one boot epoch, in append order.
+#[derive(Clone, Debug)]
+pub struct EpochTimeline {
+    pub epoch: u64,
+    pub events: Vec<Event>,
+    pub segments: usize,
+    pub torn_tail: bool,
+}
+
+/// Read every segment in `dir`, grouped per boot epoch, epochs
+/// ordered by their first recovered timestamp (wall clock — the
+/// epochs themselves are random). Non-segment files are ignored;
+/// unreadable segments are skipped rather than failing the whole
+/// post-mortem (the directory may hold a live writer's file).
+pub fn read_wal_dir(dir: &Path) -> io::Result<Vec<EpochTimeline>> {
+    let mut paths: Vec<PathBuf> = fs::read_dir(dir)?
+        .flatten()
+        .map(|e| e.path())
+        .filter(|p| is_segment_name(p))
+        .collect();
+    // Name order = segment index order within an epoch (zero-padded).
+    paths.sort();
+    let mut timelines: Vec<EpochTimeline> = Vec::new();
+    for path in paths {
+        let Ok(seg) = read_segment(&path) else { continue };
+        match timelines.iter_mut().find(|t| t.epoch == seg.epoch) {
+            Some(t) => {
+                t.events.extend(seg.events);
+                t.segments += 1;
+                t.torn_tail |= seg.torn_tail;
+            }
+            None => timelines.push(EpochTimeline {
+                epoch: seg.epoch,
+                events: seg.events,
+                segments: 1,
+                torn_tail: seg.torn_tail,
+            }),
+        }
+    }
+    timelines.sort_by_key(|t| t.events.first().map(|e| e.at_ns).unwrap_or(u64::MAX));
+    Ok(timelines)
+}
+
+/// Background flusher: drains the journal ring through its ordinary
+/// cursor API into a [`WalWriter`], so event emission never sees the
+/// filesystem. Dropped batches are impossible below ring capacity;
+/// past it the ring's own newest-wins policy applies (same contract
+/// as every other journal reader).
+pub struct WalFlusher {
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl WalFlusher {
+    /// Open the WAL in `dir` under `epoch` and start the flusher
+    /// thread.
+    pub fn spawn(
+        journal: Arc<EventJournal>,
+        dir: &Path,
+        epoch: u64,
+        cfg: WalConfig,
+    ) -> io::Result<WalFlusher> {
+        let mut writer = WalWriter::create(dir, epoch, cfg)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let handle = std::thread::Builder::new()
+            .name("wal-flusher".into())
+            .spawn(move || {
+                let mut cursor = 0u64;
+                loop {
+                    let stopping = stop2.load(Ordering::Acquire);
+                    let (events, latest) = journal.since(cursor);
+                    cursor = latest;
+                    if writer.append_batch(&events).is_err() {
+                        // Disk trouble must never take down serving:
+                        // the WAL is forensic. Stop flushing; the
+                        // in-memory journal keeps working.
+                        return;
+                    }
+                    if stopping {
+                        return;
+                    }
+                    std::thread::park_timeout(cfg.flush_interval);
+                }
+            })
+            .expect("spawn wal-flusher");
+        Ok(WalFlusher { stop, handle: Some(handle) })
+    }
+
+    /// Signal the flusher, let it run one final drain, and join.
+    pub fn stop(mut self) {
+        self.shutdown();
+    }
+
+    fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        if let Some(h) = self.handle.take() {
+            h.thread().unpark();
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for WalFlusher {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crc32_matches_the_check_vector() {
+        // The canonical CRC-32/IEEE check value.
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn boot_epochs_are_nonzero_and_distinct() {
+        let a = mint_boot_epoch();
+        let b = mint_boot_epoch();
+        assert_ne!(a, 0);
+        assert_ne!(b, 0);
+        assert_ne!(a, b, "two mints in one process must differ");
+    }
+
+    #[test]
+    fn writer_reader_roundtrip_and_torn_tail_is_clean() {
+        let dir = std::env::temp_dir().join(format!("remus-wal-test-{}", mint_boot_epoch()));
+        let epoch = 0x1234_5678_9ABC_DEF0u64;
+        let events: Vec<Event> = (0..10)
+            .map(|i| Event {
+                seq: i,
+                shard: 0,
+                at_ns: 1000 + i,
+                kind: EventKind::StuckCell { worker: i as u32, cells: i * 3 },
+            })
+            .collect();
+        let mut w = WalWriter::create(&dir, epoch, WalConfig::default()).unwrap();
+        w.append_batch(&events).unwrap();
+        drop(w);
+        let path = segment_path(&dir, epoch, 0);
+        let seg = read_segment(&path).unwrap();
+        assert_eq!(seg.epoch, epoch);
+        assert_eq!(seg.events, events);
+        assert!(!seg.torn_tail);
+        // Truncate mid-record: everything before the cut survives.
+        let data = fs::read(&path).unwrap();
+        fs::write(&path, &data[..data.len() - 3]).unwrap();
+        let seg = read_segment(&path).unwrap();
+        assert_eq!(seg.events, events[..events.len() - 1]);
+        assert!(seg.torn_tail);
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn flusher_drains_the_journal_to_disk() {
+        let dir = std::env::temp_dir().join(format!("remus-wal-test-{}", mint_boot_epoch()));
+        let journal = Arc::new(EventJournal::new(64));
+        let epoch = mint_boot_epoch();
+        let cfg = WalConfig { flush_interval: Duration::from_millis(5), ..Default::default() };
+        let flusher = WalFlusher::spawn(Arc::clone(&journal), &dir, epoch, cfg).unwrap();
+        for i in 0..5 {
+            journal.record(EventKind::RowRemap { worker: i, rows: 2 });
+        }
+        flusher.stop();
+        let timelines = read_wal_dir(&dir).unwrap();
+        assert_eq!(timelines.len(), 1);
+        assert_eq!(timelines[0].epoch, epoch);
+        assert_eq!(timelines[0].events.len(), 5);
+        assert!(!timelines[0].torn_tail);
+        fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -1,0 +1,406 @@
+//! Integration: the durable flight recorder (ISSUE 8 acceptance) over
+//! real threads and loopback sockets.
+//!
+//! * The epoch-aware cursor-reset regression test kills and revives a
+//!   shard and asserts the router's merged journal carries BOTH boot
+//!   epochs' events plus a synthesized `ShardRestarted` marker — the
+//!   ROADMAP carryover bug was a router cursor pointing past a
+//!   restarted shard's fresh (seq-0) journal, silently losing the new
+//!   boot's prefix.
+//! * The acceptance test drives a 2-shard authenticated fleet with
+//!   `--journal-dir` through the full reliability incident
+//!   (scrub -> stuck -> remap -> escalate -> retire -> kill ->
+//!   revive), then reconstructs the pre-kill event chain in causal
+//!   order from the on-disk WAL alone (what `remus postmortem` does),
+//!   and scrapes the router's `/metrics` endpoint, whose
+//!   submitted/completed counters must match the merged
+//!   `MetricsSnapshot` exactly.
+
+use std::collections::HashSet;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+use remus::coordinator::{CoordinatorConfig, Submitter};
+use remus::fabric::auth::Psk;
+use remus::fabric::{
+    shutdown_endpoint_auth, FabricServer, RouteOptions, Router, RouterConfig, ServeOptions,
+};
+use remus::health::{HealthConfig, WearModel};
+use remus::mmpu::FunctionKind;
+use remus::telemetry::{mint_boot_epoch, read_wal_dir, unix_now_ns, EventKind, WalConfig};
+
+/// A healthy shard: immortal wear, scrubbing on, nothing to report.
+fn healthy_cfg(seed: u64) -> CoordinatorConfig {
+    CoordinatorConfig {
+        workers: 2,
+        rows: 32,
+        cols: 512,
+        max_batch: 16,
+        max_wait: Duration::from_millis(5),
+        seed,
+        health: Some(HealthConfig {
+            wear: WearModel::immortal(),
+            spare_rows: 4,
+            scrub_interval: 8,
+            ..Default::default()
+        }),
+        ..Default::default()
+    }
+}
+
+/// The doomed shard (same §Health recipe as `integration_telemetry`):
+/// a lethal endurance budget so the first batches kill the crossbar
+/// and the scrub detects, remaps, escalates, and retires — the full
+/// reliability causal chain in one deterministic pass.
+fn lethal_cfg(seed: u64) -> CoordinatorConfig {
+    CoordinatorConfig {
+        workers: 1,
+        rows: 16,
+        cols: 256,
+        max_batch: 1,
+        max_wait: Duration::from_micros(10),
+        seed,
+        health: Some(HealthConfig {
+            wear: WearModel::accelerated(1e-6), // dead after any switching
+            spare_rows: 2,
+            scrub_interval: 1,
+            scrub_rows_per_pass: 16,
+            retire_stuck_cells: 8,
+            ..Default::default()
+        }),
+        ..Default::default()
+    }
+}
+
+fn test_psk(tag: &str) -> Psk {
+    Psk::from_material(format!("integration flight recorder psk {tag}").as_bytes()).unwrap()
+}
+
+/// Router tunables fast enough for test-scale failover/revival.
+fn fast_cfg(psk: Psk) -> RouterConfig {
+    RouterConfig {
+        probe_period: Duration::from_millis(100),
+        retry_window: Duration::from_secs(3),
+        psk: Some(psk),
+        ..Default::default()
+    }
+}
+
+/// A WAL that flushes fast enough for test-scale assertions.
+fn fast_wal() -> WalConfig {
+    WalConfig { flush_interval: Duration::from_millis(5), ..WalConfig::default() }
+}
+
+/// A fresh temp directory (epoch mints double as collision-free names).
+fn temp_dir(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("remus-flight-{tag}-{}", mint_boot_epoch()))
+}
+
+fn candidate_kinds() -> Vec<FunctionKind> {
+    (4..=16).flat_map(|n| [FunctionKind::Add(n), FunctionKind::Xor(n)]).collect()
+}
+
+fn kind_on_shard(router: &Router, shard: usize) -> FunctionKind {
+    *candidate_kinds()
+        .iter()
+        .find(|&&k| router.shard_for(k) == Some(shard))
+        .unwrap_or_else(|| panic!("no candidate kind routes to shard {shard}"))
+}
+
+/// Submit the whole sequence, then collect every reply (a lost reply
+/// fails the `recv_timeout`). Asserts values.
+fn run_checked(sub: &dyn Submitter, reqs: &[(FunctionKind, u64, u64)]) {
+    let rxs: Vec<_> = reqs.iter().map(|&(k, a, b)| sub.submit(k, a, b)).collect();
+    for (i, (&(kind, a, b), rx)) in reqs.iter().zip(rxs).enumerate() {
+        let r = rx
+            .recv_timeout(Duration::from_secs(60))
+            .unwrap_or_else(|e| panic!("request {i} lost its reply: {e}"));
+        assert!(r.is_ok(), "request {i} errored: {:?}", r.error);
+        assert_eq!(r.value, kind.reference(a, b), "request {i} ({kind:?} {a} {b})");
+    }
+}
+
+/// The standard incident load: half on the doomed shard's kind, half
+/// on the healthy one's.
+fn incident_load(
+    k_wear: FunctionKind,
+    k_ok: FunctionKind,
+    n: u64,
+) -> Vec<(FunctionKind, u64, u64)> {
+    (0..n)
+        .map(|i| {
+            let k = if i % 2 == 0 { k_wear } else { k_ok };
+            (k, i % 13, (i * 5) % 13)
+        })
+        .collect()
+}
+
+fn wait_until(what: &str, timeout: Duration, mut cond: impl FnMut() -> bool) {
+    let deadline = Instant::now() + timeout;
+    while !cond() {
+        assert!(Instant::now() < deadline, "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+}
+
+/// Rebind an authenticated fabric server (flight-recorder options
+/// included) on an exact address, retrying briefly — the kernel may
+/// hold the port for a moment after the old listener goes away.
+fn restart_shard(
+    addr: &str,
+    cfg: CoordinatorConfig,
+    psk: &Psk,
+    journal_dir: Option<&PathBuf>,
+) -> FabricServer {
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let opts = ServeOptions {
+            psk: Some(psk.clone()),
+            journal_dir: journal_dir.cloned(),
+            metrics_addr: None,
+            wal: fast_wal(),
+        };
+        match FabricServer::start_with_options(addr, cfg.clone(), opts) {
+            Ok(s) => return s,
+            Err(e) => {
+                assert!(Instant::now() < deadline, "could not rebind {addr}: {e:#}");
+                std::thread::sleep(Duration::from_millis(100));
+            }
+        }
+    }
+}
+
+/// One plain-HTTP scrape, exactly what `curl http://addr/metrics` does.
+fn http_get(addr: std::net::SocketAddr, path: &str) -> String {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream.write_all(format!("GET {path} HTTP/1.0\r\nHost: test\r\n\r\n").as_bytes()).unwrap();
+    let mut out = String::new();
+    stream.read_to_string(&mut out).unwrap();
+    out
+}
+
+/// The value of a single-sample metric line (`name value`) in a
+/// Prometheus text exposition.
+fn metric_value(exposition: &str, name: &str) -> u64 {
+    exposition
+        .lines()
+        .find_map(|l| l.strip_prefix(&format!("{name} ")))
+        .unwrap_or_else(|| panic!("metric {name} missing from exposition:\n{exposition}"))
+        .trim()
+        .parse()
+        .unwrap_or_else(|e| panic!("metric {name} is not a u64: {e}"))
+}
+
+/// ISSUE 8 regression (the ROADMAP §Telemetry carryover): a restarted
+/// shard's journal starts over at seq 0 while the router's cursor
+/// points far past it — the old code silently lost the new boot's
+/// event prefix. The v6 boot epoch lets the router detect the restart,
+/// reset the cursor to 0, and synthesize a `ShardRestarted` marker, so
+/// the merged journal carries BOTH epochs' events with no duplicates.
+#[test]
+fn router_cursor_resets_on_shard_restart_instead_of_losing_events() {
+    let psk = test_psk("cursor");
+    let wear =
+        FabricServer::start_with_auth("127.0.0.1:0", lethal_cfg(0xB), Some(psk.clone())).unwrap();
+    let healthy =
+        FabricServer::start_with_auth("127.0.0.1:0", healthy_cfg(0xA), Some(psk.clone())).unwrap();
+    let first_epoch = wear.boot_epoch();
+    assert_ne!(first_epoch, 0, "every server boot mints a non-zero epoch");
+    let addrs = vec![wear.local_addr().to_string(), healthy.local_addr().to_string()];
+    let router = Router::with_config(&addrs, fast_cfg(psk.clone())).unwrap();
+    let k_wear = kind_on_shard(&router, 0);
+    let k_ok = kind_on_shard(&router, 1);
+
+    // First boot: drive the incident so shard 0's journal fills, then
+    // pull it — the router's slot-0 cursor now points far past seq 0.
+    run_checked(&router, &incident_load(k_wear, k_ok, 600));
+    wait_until("first boot's chain in the fleet journal", Duration::from_secs(10), || {
+        router
+            .fleet_events()
+            .iter()
+            .any(|e| e.shard == 0 && matches!(e.kind, EventKind::WorkerRetire { .. }))
+    });
+    assert_eq!(
+        router.fleet_epochs().get(&0),
+        Some(&first_epoch),
+        "the pull learns the shard's boot epoch"
+    );
+    let pulled = router.fleet_events().iter().filter(|e| e.shard == 0).count();
+    assert!(pulled > 2, "cursor must be well past the fresh journal's seqs (got {pulled})");
+
+    // Kill shard 0 and restart it on the same address: a fresh journal
+    // (seq 0) under a fresh boot epoch.
+    shutdown_endpoint_auth(&addrs[0], Some(&psk)).unwrap();
+    wear.shutdown();
+    let cut_ns = unix_now_ns();
+    let revived = restart_shard(&addrs[0], lethal_cfg(0xD), &psk, None);
+    let second_epoch = revived.boot_epoch();
+    assert_ne!(second_epoch, first_epoch, "restart mints a different epoch");
+    wait_until("wear slot revived", Duration::from_secs(10), || router.live_shards() == 2);
+    assert_eq!(router.shard_for(k_wear), Some(0), "revived slot reclaims its kinds");
+
+    // Second boot: generate journal events whose seqs (0, 1, ...) sit
+    // *below* the router's stale cursor — exactly the events the old
+    // code lost.
+    run_checked(&router, &incident_load(k_wear, k_ok, 600));
+    wait_until("second boot's events in the merged journal", Duration::from_secs(10), || {
+        router
+            .fleet_events()
+            .iter()
+            .any(|e| e.shard == 0 && e.at_ns > cut_ns && matches!(e.kind, EventKind::Scrub { .. }))
+    });
+
+    let timeline = router.fleet_events();
+    // Both epochs' stories are present...
+    let slot0_has = |after_cut: bool, f: fn(&EventKind) -> bool| {
+        timeline.iter().any(|e| e.shard == 0 && (e.at_ns > cut_ns) == after_cut && f(&e.kind))
+    };
+    assert!(
+        slot0_has(false, |k| matches!(k, EventKind::WorkerRetire { .. })),
+        "first boot's events survive the restart: {timeline:#?}"
+    );
+    assert!(
+        slot0_has(true, |k| matches!(k, EventKind::Scrub { .. })),
+        "second boot's sub-cursor events were recovered: {timeline:#?}"
+    );
+    // ...the router marked the restart explicitly, naming the new epoch...
+    let marker = timeline.iter().any(|e| {
+        matches!(e.kind, EventKind::ShardRestarted { shard: 0, epoch } if epoch == second_epoch)
+    });
+    assert!(marker, "a ShardRestarted marker names slot 0 and the new epoch: {timeline:#?}");
+    assert_eq!(router.fleet_epochs().get(&0), Some(&second_epoch), "the slot tracks the new epoch");
+    // ...and the merge introduced no duplicates: within one boot epoch
+    // (same shard + same timestamp) a journal seq appears once.
+    let mut seen = HashSet::new();
+    for e in &timeline {
+        assert!(seen.insert((e.shard, e.seq, e.at_ns)), "duplicate merged event {e:?}");
+    }
+
+    router.shutdown();
+    revived.shutdown();
+    healthy.shutdown();
+}
+
+/// ISSUE 8 acceptance: a 2-shard authenticated fleet with
+/// `--journal-dir` everywhere and `--metrics-addr` on the router,
+/// driven through scrub -> escalate -> remap -> retire -> kill ->
+/// revive. The dead shard's pre-kill chain is reconstructed in causal
+/// order from its WAL alone; the revived shard's fresh epoch shows up
+/// as a second WAL timeline and as a router-detected restart; the
+/// `/metrics` exposition matches the merged snapshot exactly.
+#[test]
+fn wal_postmortem_reconstructs_the_chain_and_metrics_match_the_snapshot() {
+    let psk = test_psk("wal");
+    let dir_wear = temp_dir("wear");
+    let dir_ok = temp_dir("ok");
+    let dir_router = temp_dir("router");
+    let wear = restart_shard("127.0.0.1:0", lethal_cfg(0xB), &psk, Some(&dir_wear));
+    let healthy = restart_shard("127.0.0.1:0", healthy_cfg(0xA), &psk, Some(&dir_ok));
+    let first_epoch = wear.boot_epoch();
+    let addrs = vec![wear.local_addr().to_string(), healthy.local_addr().to_string()];
+    let router = Router::with_options(
+        &addrs,
+        fast_cfg(psk.clone()),
+        RouteOptions {
+            journal_dir: Some(dir_router.clone()),
+            metrics_addr: Some("127.0.0.1:0".to_string()),
+            wal: fast_wal(),
+        },
+    )
+    .unwrap();
+    let metrics_addr = router.metrics_addr().expect("metrics endpoint configured");
+    let k_wear = kind_on_shard(&router, 0);
+    let k_ok = kind_on_shard(&router, 1);
+
+    // Drive the incident, then let the WAL flusher catch up until the
+    // retirement (the chain's last in-shard step) is on disk.
+    run_checked(&router, &incident_load(k_wear, k_ok, 600));
+    wait_until("the chain reaches shard 0's WAL", Duration::from_secs(10), || {
+        read_wal_dir(&dir_wear).is_ok_and(|t| {
+            t.iter().any(|tl| {
+                tl.epoch == first_epoch
+                    && tl.events.iter().any(|e| matches!(e.kind, EventKind::WorkerRetire { .. }))
+            })
+        })
+    });
+
+    // Scrape /metrics while the fleet is quiescent: the submitted and
+    // completed counters must equal the merged snapshot's exactly.
+    let m = router.metrics();
+    let scrape = http_get(metrics_addr, "/metrics");
+    assert!(scrape.starts_with("HTTP/1.0 200 OK\r\n"), "scrape failed:\n{scrape}");
+    assert!(scrape.contains("text/plain; version=0.0.4"), "wrong content type:\n{scrape}");
+    let body = scrape.split("\r\n\r\n").nth(1).expect("exposition body");
+    assert!(body.contains("# TYPE remus_requests_submitted_total counter"));
+    assert_eq!(metric_value(body, "remus_requests_submitted_total"), m.submitted);
+    assert_eq!(metric_value(body, "remus_requests_completed_total"), m.completed);
+    // Failover retries may re-submit a request to a second shard, so
+    // the merged counter is a lower-bounded sum, not an exact 600.
+    assert!(m.submitted >= 600, "the incident load was counted (got {})", m.submitted);
+
+    // Kill shard 0. Its story must now be reconstructible from disk
+    // alone — this is exactly what `remus postmortem` runs on the
+    // directory.
+    shutdown_endpoint_auth(&addrs[0], Some(&psk)).unwrap();
+    wear.shutdown();
+    let timelines = read_wal_dir(&dir_wear).unwrap();
+    assert_eq!(timelines.len(), 1, "one boot so far");
+    let tl = &timelines[0];
+    assert_eq!(tl.epoch, first_epoch, "segments are stamped with the boot epoch");
+    assert!(!tl.torn_tail, "a drained shutdown leaves a clean tail");
+    assert!(
+        tl.events.windows(2).all(|w| w[0].seq < w[1].seq),
+        "WAL events are in journal order: {tl:#?}"
+    );
+    let pos = |pred: fn(&EventKind) -> bool| {
+        tl.events
+            .iter()
+            .position(|e| pred(&e.kind))
+            .unwrap_or_else(|| panic!("event missing from the WAL: {tl:#?}"))
+    };
+    let scrub = pos(|k| matches!(k, EventKind::Scrub { .. }));
+    let stuck = pos(|k| matches!(k, EventKind::StuckCell { .. }));
+    let remap = pos(|k| matches!(k, EventKind::RowRemap { .. }));
+    let escalate = pos(|k| matches!(k, EventKind::PolicyEscalate { .. }));
+    let retire = pos(|k| matches!(k, EventKind::WorkerRetire { .. }));
+    assert!(scrub < stuck && stuck < remap, "scrub detects, then remaps");
+    assert!(remap < escalate && escalate < retire, "escalate precedes retirement");
+
+    // Revive on the same address with the same journal dir: a second
+    // epoch appears on disk, and the router flags the restart.
+    let revived = restart_shard(&addrs[0], healthy_cfg(0xC), &psk, Some(&dir_wear));
+    let second_epoch = revived.boot_epoch();
+    wait_until("wear slot revived", Duration::from_secs(10), || router.live_shards() == 2);
+    run_checked(&router, &[(k_wear, 20, 22), (k_ok, 7, 8)]);
+    wait_until("router detects the new epoch", Duration::from_secs(10), || {
+        router.fleet_events();
+        router.fleet_epochs().get(&0) == Some(&second_epoch)
+    });
+    wait_until("second epoch reaches the WAL", Duration::from_secs(10), || {
+        read_wal_dir(&dir_wear).is_ok_and(|t| t.len() == 2)
+    });
+    let timelines = read_wal_dir(&dir_wear).unwrap();
+    assert_eq!(timelines[0].epoch, first_epoch, "epochs ordered oldest boot first");
+    assert_eq!(timelines[1].epoch, second_epoch);
+
+    // Shut the fleet down; the router's own WAL (final-drained on
+    // shutdown) must carry the membership story including the
+    // synthesized restart marker.
+    router.shutdown();
+    revived.shutdown();
+    healthy.shutdown();
+    let router_tl = read_wal_dir(&dir_router).unwrap();
+    assert_eq!(router_tl.len(), 1, "one router boot");
+    let has = |pred: fn(&EventKind) -> bool| router_tl[0].events.iter().any(|e| pred(&e.kind));
+    assert!(has(|k| matches!(k, EventKind::ShardDown { .. })), "kill reached the router WAL");
+    assert!(
+        has(|k| matches!(k, EventKind::ShardRestarted { .. })),
+        "the synthesized restart marker reached the router WAL: {router_tl:#?}"
+    );
+
+    for d in [dir_wear, dir_ok, dir_router] {
+        let _ = std::fs::remove_dir_all(d);
+    }
+}

@@ -1,15 +1,16 @@
 //! Property tests for the fabric wire codec: every message type
-//! (the v3 heartbeat `Ping`/`Pong` and the v5 telemetry frames —
+//! (the v3 heartbeat `Ping`/`Pong`, the v5 telemetry frames —
 //! traced submits, `Events`/`EventsReply`, `SpansReq`/`SpansReply` —
-//! included) survives encode -> frame -> decode bit-exactly, v1..v4
-//! frames still decode under the v5 codec, and truncated or corrupted
-//! frames — truncated pings, length-prefix lies and single-bit flips
-//! included — are rejected with errors: never a panic, never an
-//! accidental parse. Sealed frames (wire v4, `fabric::auth`)
-//! additionally detect *every* single-bit flip, truncation and replay:
-//! a tampered sealed frame can never open, so it can never decode to a
-//! different valid message undetected (ISSUE 3 + ISSUE 5 + ISSUE 6 +
-//! ISSUE 7 satellites).
+//! and the v6 epoch-stamped `EventsReply` included) survives
+//! encode -> frame -> decode bit-exactly, v1..v5 frames still decode
+//! under the v6 codec, and truncated or corrupted frames — truncated
+//! pings, length-prefix lies and single-bit flips included — are
+//! rejected with errors: never a panic, never an accidental parse.
+//! Sealed frames (wire v4, `fabric::auth`) additionally detect
+//! *every* single-bit flip, truncation and replay: a tampered sealed
+//! frame can never open, so it can never decode to a different valid
+//! message undetected (ISSUE 3 + ISSUE 5 + ISSUE 6 + ISSUE 7 + ISSUE
+//! 8 satellites).
 
 use remus::coordinator::{KindStats, MetricsSnapshot, WorkerHealth};
 use remus::fabric::auth::{derive_keys, Psk, SEAL_OVERHEAD};
@@ -86,7 +87,7 @@ fn gen_snapshot(g: &mut Gen) -> MetricsSnapshot {
 }
 
 fn gen_event_kind(g: &mut Gen) -> EventKind {
-    match g.usize_in(0..=12) {
+    match g.usize_in(0..=13) {
         0 => EventKind::Scrub {
             worker: g.u64() as u32,
             corrected: g.u64(),
@@ -104,7 +105,8 @@ fn gen_event_kind(g: &mut Gen) -> EventKind {
         9 => EventKind::ShardRevive { shard: g.u64() as u32 },
         10 => EventKind::HeartbeatTimeout { shard: g.u64() as u32 },
         11 => EventKind::FailoverReplay { shard: g.u64() as u32, replayed: g.u64() },
-        _ => EventKind::AuthReject,
+        12 => EventKind::AuthReject,
+        _ => EventKind::ShardRestarted { shard: g.u64() as u32, epoch: g.u64() },
     }
 }
 
@@ -153,7 +155,13 @@ fn gen_msg(g: &mut Gen) -> Msg {
         12 => Msg::Events { since: g.u64() },
         13 => {
             let n = g.usize_in(0..=8);
-            Msg::EventsReply { latest: g.u64(), events: (0..n).map(|_| gen_event(g)).collect() }
+            Msg::EventsReply {
+                latest: g.u64(),
+                events: (0..n).map(|_| gen_event(g)).collect(),
+                // Half epoch-less (v5-labeled frames), half epoch-
+                // stamped (v6).
+                boot_epoch: if g.bool() { g.u64_in(1..=u64::MAX) } else { 0 },
+            }
         }
         14 => Msg::SpansReq,
         _ => {
@@ -235,7 +243,7 @@ fn version_mismatch_is_rejected() {
 }
 
 #[test]
-fn v1_through_v4_frames_decode_compatibly_under_v5() {
+fn v1_through_v5_frames_decode_compatibly_under_v6() {
     // v4 snapshots predate the observability counters (strip the
     // trailing 120 bytes: uptime + histogram honesty + per-kind
     // stats), v3 ones also the auth-reject counter (strip 128), v2
@@ -295,7 +303,7 @@ fn v1_through_v4_frames_decode_compatibly_under_v5() {
         // clean error, never a misparse.
         let v5_only = [
             Msg::Events { since: g.u64() },
-            Msg::EventsReply { latest: g.u64(), events: vec![gen_event(g)] },
+            Msg::EventsReply { latest: g.u64(), events: vec![gen_event(g)], boot_epoch: 0 },
             Msg::SpansReq,
             Msg::SpansReply { spans: vec![gen_span(g)] },
         ];
@@ -307,6 +315,45 @@ fn v1_through_v4_frames_decode_compatibly_under_v5() {
                 assert!(Msg::from_bytes(&bytes).is_err(), "{m:?} needs v5 (label v{v})");
             }
         }
+        // The v6 trailing field (exact truncation offset: 8 bytes of
+        // boot epoch behind the v5 body). An epoch-stamped reply is
+        // v6-labeled and exactly 8 bytes longer than its epoch-less
+        // twin; stripping those 8 bytes and relabeling v5 decodes to
+        // the same reply with the epoch defaulted to 0 — how a v5
+        // puller sees a v6 shard.
+        let n = g.usize_in(0..=6);
+        let latest = g.u64();
+        let events: Vec<Event> = (0..n).map(|_| gen_event(g)).collect();
+        let plain = Msg::EventsReply { latest, events: events.clone(), boot_epoch: 0 };
+        let stamped = Msg::EventsReply {
+            latest,
+            events: events.clone(),
+            boot_epoch: g.u64_in(1..=u64::MAX),
+        };
+        let pb = plain.to_bytes();
+        let sb = stamped.to_bytes();
+        assert_eq!(pb[0], 5, "epoch-less journal replies keep the v5 layout");
+        assert_eq!(sb[0], 6, "epoch-stamped journal replies are v6-stamped");
+        assert_eq!(sb.len(), pb.len() + 8, "the boot epoch is exactly 8 trailing bytes");
+        assert_eq!(Msg::from_bytes(&sb).unwrap(), stamped);
+        let mut stripped = sb.clone();
+        stripped.truncate(sb.len() - 8);
+        stripped[0] = 5;
+        assert_eq!(Msg::from_bytes(&stripped).unwrap(), plain, "v6 -> v5 strips the epoch");
+        // An epoch-stamped reply relabeled v1..v5 has trailing bytes
+        // those layouts cannot express: a clean error, never a
+        // misparse; and a v6 label *requires* the trailing field.
+        for v in [1u8, 2, 3, 4, 5] {
+            let mut bytes = sb.clone();
+            bytes[0] = v;
+            assert!(Msg::from_bytes(&bytes).is_err(), "boot epoch needs v6 (label v{v})");
+        }
+        let mut epochless_v6 = pb.clone();
+        epochless_v6[0] = 6;
+        assert!(
+            Msg::from_bytes(&epochless_v6).is_err(),
+            "a v6 label without the trailing epoch is a short frame"
+        );
         // A prev-less Register still decodes as the v2 layout it keeps.
         let reg2 =
             Msg::Register { name: gen_string(g), addr: gen_string(g), spare: g.bool(), prev: None };
@@ -374,6 +421,7 @@ fn unknown_event_tags_and_stage_bytes_are_rejected() {
     let reply = Msg::EventsReply {
         latest: 1,
         events: vec![Event { seq: 0, shard: 0, at_ns: 1, kind: EventKind::AuthReject }],
+        boot_epoch: 0,
     };
     let mut bytes = reply.to_bytes();
     // [ver][type][latest u64][count u32][seq u64][shard u32][at u64][tag]
@@ -381,6 +429,18 @@ fn unknown_event_tags_and_stage_bytes_are_rejected() {
     assert_eq!(bytes[tag_at], 13, "layout check: AuthReject wire tag");
     bytes[tag_at] = 99;
     assert!(Msg::from_bytes(&bytes).is_err(), "unknown event tag must be rejected");
+    // The v6 trailing epoch sits *behind* the events, so the event
+    // layout — and the unknown-tag rejection — is identical in an
+    // epoch-stamped reply.
+    let reply6 = Msg::EventsReply {
+        latest: 1,
+        events: vec![Event { seq: 0, shard: 0, at_ns: 1, kind: EventKind::AuthReject }],
+        boot_epoch: 0xB007,
+    };
+    let mut bytes6 = reply6.to_bytes();
+    assert_eq!(bytes6[tag_at], 13, "layout check: same tag offset under v6");
+    bytes6[tag_at] = 99;
+    assert!(Msg::from_bytes(&bytes6).is_err(), "unknown event tag rejected under v6 too");
     let reply = Msg::SpansReply {
         spans: vec![TraceSpan { trace: 1, stage: Stage::TmrVote, start_ns: 2, dur_ns: 3 }],
     };
