@@ -7,7 +7,7 @@
 //! CI archival — see `bench_harness::json_begin`.
 
 use remus::arith::multiplier::multpim_program;
-use remus::bench_harness::{bench, header, json_begin, json_end, throughput};
+use remus::bench_harness::{bench, header, json_begin, json_end, json_scalar, throughput};
 use remus::errs::{ErrorModel, Injector};
 use remus::isa::microop::MicroOp;
 use remus::isa::program::Step;
@@ -95,6 +95,7 @@ fn main() {
             policy: ReliabilityPolicy::none(),
             errors: ErrorModel::none(),
             seed: 7,
+            ..Default::default()
         };
         let func = FunctionSpec::build(FunctionKind::Mul(8));
         let a: Vec<u64> = (0..64).map(|i| i * 37 % 251).collect();
@@ -114,6 +115,76 @@ fn main() {
             }
         });
         throughput(&r, "mult", iters as f64 * 64.0);
+    }
+
+    // --- §Perf list scheduling: scheduled vs serial per kind ----------
+    // The tracked `scheduled_vs_serial` family (EXPERIMENTS.md §Perf):
+    // identical inputs through the same Mmpu shape, once with the
+    // serial program-order plans and once list-scheduled on a 64-way
+    // uniform partition grid (8-col segments at 512 cols — fine enough
+    // that narrow functions span several segments). The packing-factor
+    // scalars come from the
+    // compiled plans themselves (micro-ops / bundles), so the
+    // acceptance bar (> 1.0 for multi-gate arithmetic kinds) is
+    // checked against the schedule, not against timing noise.
+    {
+        use remus::isa::ScheduleConfig;
+        use remus::mmpu::{
+            CompiledFunction, FunctionKind, FunctionSpec, Mmpu, MmpuConfig, ReliabilityPolicy,
+        };
+        use remus::tmr::TmrMode;
+        let kinds: &[(&str, FunctionKind, u64)] = &[
+            ("add8", FunctionKind::Add(8), 0xFF),
+            ("mul8", FunctionKind::Mul(8), 0xFF),
+            ("mul4-naive", FunctionKind::MulNaive(4), 0xF),
+            ("xor8", FunctionKind::Xor(8), 0xFF),
+        ];
+        let (rows, cols) = (64usize, 512usize);
+        let mk = |sched: ScheduleConfig| MmpuConfig {
+            rows,
+            cols,
+            num_crossbars: 1,
+            policy: ReliabilityPolicy::none(),
+            errors: ErrorModel::none(),
+            seed: 9,
+            schedule: sched,
+            ..Default::default()
+        };
+        for &(name, kind, mask) in kinds {
+            let func = FunctionSpec::build(kind);
+            let a: Vec<u64> = (0..64).map(|i| (i * 37 + 3) & mask).collect();
+            let b: Vec<u64> = (0..64).map(|i| (i * 3 + 11) & mask).collect();
+            let iters = 100u64;
+            let mut serial = Mmpu::new(mk(ScheduleConfig::off()));
+            let r = bench(&format!("sched {name} batch 64 (serial)"), iters, || {
+                for _ in 0..iters {
+                    serial.exec_vector(0, &func, &a, &b).unwrap();
+                }
+            });
+            throughput(&r, "op", iters as f64 * 64.0);
+            let mut packed = Mmpu::new(mk(ScheduleConfig::packed(64)));
+            let r = bench(&format!("sched {name} batch 64 (packed64)"), iters, || {
+                for _ in 0..iters {
+                    packed.exec_vector(0, &func, &a, &b).unwrap();
+                }
+            });
+            throughput(&r, "op", iters as f64 * 64.0);
+            let cs = CompiledFunction::build(kind, rows, cols, TmrMode::Off, ScheduleConfig::off())
+                .unwrap();
+            let cp =
+                CompiledFunction::build(kind, rows, cols, TmrMode::Off, ScheduleConfig::packed(64))
+                    .unwrap();
+            json_scalar(
+                &format!("sched packing factor {name}"),
+                "ops/bundle",
+                cp.tmr.num_ops() as f64 / cp.tmr.num_bundles() as f64,
+            );
+            json_scalar(
+                &format!("sched cycles saved {name}"),
+                "cycle",
+                cs.tmr.num_bundles().saturating_sub(cp.tmr.num_bundles()) as f64,
+            );
+        }
     }
 
     // --- MC engine: single-lane interpreter ---------------------------

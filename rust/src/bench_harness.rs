@@ -20,20 +20,44 @@ struct JsonEntry {
     throughput: Vec<(String, f64)>,
 }
 
-/// Active JSON collector: (report name, entries).
-static JSON: Mutex<Option<(String, Vec<JsonEntry>)>> = Mutex::new(None);
+/// One recorded named scalar (a derived quantity that is not a timing,
+/// e.g. a packing factor or a knee QPS) for the JSON report.
+struct JsonScalar {
+    name: String,
+    unit: String,
+    value: f64,
+}
+
+/// Active JSON collector: (report name, entries, scalars).
+static JSON: Mutex<Option<(String, Vec<JsonEntry>, Vec<JsonScalar>)>> = Mutex::new(None);
 
 /// Start recording benches into a machine-readable report named
 /// `BENCH_<name>.json`. No-op for benches that never call it.
 pub fn json_begin(name: &str) {
-    *JSON.lock().unwrap() = Some((name.to_string(), Vec::new()));
+    *JSON.lock().unwrap() = Some((name.to_string(), Vec::new(), Vec::new()));
+}
+
+/// Record a named scalar into the active JSON report (top-level
+/// `"scalars"` array) and print it in the standard bench format. Used
+/// for derived, dimensionless-or-not quantities CI wants to diff that
+/// are not wall-clock timings — e.g. packing factors. No-op (print
+/// only) when no report is active.
+pub fn json_scalar(name: &str, unit: &str, value: f64) {
+    println!("scalar {name:<43} {value:>12.4} {unit}");
+    if let Some((_, _, scalars)) = JSON.lock().unwrap().as_mut() {
+        scalars.push(JsonScalar {
+            name: name.to_string(),
+            unit: unit.to_string(),
+            value,
+        });
+    }
 }
 
 /// Write the recorded report to `BENCH_<name>.json` in the current
 /// directory and stop recording. Returns the path when a report was
 /// active and written.
 pub fn json_end() -> Option<std::path::PathBuf> {
-    let (name, entries) = JSON.lock().unwrap().take()?;
+    let (name, entries, scalars) = JSON.lock().unwrap().take()?;
     let mut out = String::new();
     out.push_str("{\n");
     out.push_str(&format!("  \"bench\": \"{}\",\n", escape(&name)));
@@ -58,6 +82,17 @@ pub fn json_end() -> Option<std::path::PathBuf> {
         out.push_str("]}");
         out.push_str(if i + 1 < entries.len() { ",\n" } else { "\n" });
     }
+    out.push_str("  ],\n");
+    out.push_str("  \"scalars\": [\n");
+    for (i, s) in scalars.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"name\": \"{}\", \"unit\": \"{}\", \"value\": {:e}}}",
+            escape(&s.name),
+            escape(&s.unit),
+            s.value
+        ));
+        out.push_str(if i + 1 < scalars.len() { ",\n" } else { "\n" });
+    }
     out.push_str("  ]\n}\n");
     let path = std::path::PathBuf::from(format!("BENCH_{name}.json"));
     if let Err(e) = std::fs::write(&path, out) {
@@ -73,7 +108,7 @@ fn escape(s: &str) -> String {
 }
 
 fn json_record(r: &BenchResult) {
-    if let Some((_, entries)) = JSON.lock().unwrap().as_mut() {
+    if let Some((_, entries, _)) = JSON.lock().unwrap().as_mut() {
         entries.push(JsonEntry {
             name: r.name.clone(),
             median_ns: r.median.as_nanos(),
@@ -85,7 +120,7 @@ fn json_record(r: &BenchResult) {
 }
 
 fn json_record_throughput(unit: &str, per_sec: f64) {
-    if let Some((_, entries)) = JSON.lock().unwrap().as_mut() {
+    if let Some((_, entries, _)) = JSON.lock().unwrap().as_mut() {
         if let Some(last) = entries.last_mut() {
             last.throughput.push((unit.to_string(), per_sec));
         }
@@ -171,11 +206,16 @@ mod tests {
             std::hint::black_box(0u64);
         });
         throughput(&r, "op", 10.0);
+        json_scalar("selftest packing factor", "ops/bundle", 2.5);
         let path = json_end().expect("report written");
         let text = std::fs::read_to_string(&path).unwrap();
         assert!(text.contains("\"bench\": \"harness_selftest\""));
         assert!(text.contains("json-selftest"));
         assert!(text.contains("\"unit\": \"op\""));
+        assert!(text.contains("\"scalars\""));
+        assert!(text.contains("selftest packing factor"));
+        assert!(text.contains("\"unit\": \"ops/bundle\""));
+        assert!(text.contains("2.5e0"));
         let _ = std::fs::remove_file(path);
     }
 

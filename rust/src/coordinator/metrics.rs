@@ -110,6 +110,12 @@ pub struct Metrics {
     pub lat_overflow: AtomicU64,
     /// Exact maximum latency observed, microseconds.
     pub lat_max_us: AtomicU64,
+    /// §Perf list scheduling: micro-ops in the plans of executed
+    /// batches (one increment per batch, by the plan's op count).
+    pub plan_ops: AtomicU64,
+    /// Cycle bundles those same plans issued; `plan_ops / plan_bundles`
+    /// is the traffic-weighted packing factor (1.0 = serial plans).
+    pub plan_bundles: AtomicU64,
     lat_bins: [AtomicU64; BINS],
     kind_submitted: [AtomicU64; KIND_FAMILIES],
     kind_completed: [AtomicU64; KIND_FAMILIES],
@@ -138,6 +144,8 @@ impl Metrics {
             queue_depth: AtomicU64::new(0),
             lat_overflow: AtomicU64::new(0),
             lat_max_us: AtomicU64::new(0),
+            plan_ops: AtomicU64::new(0),
+            plan_bundles: AtomicU64::new(0),
             lat_bins: std::array::from_fn(|_| AtomicU64::new(0)),
             kind_submitted: std::array::from_fn(|_| AtomicU64::new(0)),
             kind_completed: std::array::from_fn(|_| AtomicU64::new(0)),
@@ -181,6 +189,13 @@ impl Metrics {
         self.kind_failed[kind.index()].fetch_add(n, Ordering::Relaxed);
     }
 
+    /// §Perf: account one executed batch's plan — its micro-op count
+    /// and the cycle bundles the scheduler issued them in.
+    pub fn record_plan(&self, ops: u64, bundles: u64) {
+        self.plan_ops.fetch_add(ops, Ordering::Relaxed);
+        self.plan_bundles.fetch_add(bundles, Ordering::Relaxed);
+    }
+
     pub fn snapshot(&self) -> MetricsSnapshot {
         let bins: Vec<u64> = self.lat_bins.iter().map(|b| b.load(Ordering::Relaxed)).collect();
         let mut kind_stats = [KindStats::default(); KIND_FAMILIES];
@@ -199,6 +214,8 @@ impl Metrics {
             queue_depth: self.queue_depth.load(Ordering::Relaxed),
             lat_overflow: self.lat_overflow.load(Ordering::Relaxed),
             lat_max_us: self.lat_max_us.load(Ordering::Relaxed),
+            plan_ops: self.plan_ops.load(Ordering::Relaxed),
+            plan_bundles: self.plan_bundles.load(Ordering::Relaxed),
             lat_bins: bins,
             kind_stats,
             uptime_ns: self.epoch.elapsed().as_nanos() as u64,
@@ -273,6 +290,12 @@ pub struct MetricsSnapshot {
     /// plaintext traffic on an authenticated port. Counted by both the
     /// shard server and the router; a single coordinator reports 0.
     pub auth_rejects: u64,
+    /// §Perf list scheduling (wire v7): micro-ops in the plans of
+    /// executed batches (merge-additive; 0 from pre-v7 peers).
+    pub plan_ops: u64,
+    /// Cycle bundles those plans issued (merge-additive); see
+    /// [`MetricsSnapshot::packing_factor`].
+    pub plan_bundles: u64,
 }
 
 impl MetricsSnapshot {
@@ -313,6 +336,8 @@ impl MetricsSnapshot {
         self.hb_pongs += other.hb_pongs;
         self.hb_timeouts += other.hb_timeouts;
         self.auth_rejects += other.auth_rejects;
+        self.plan_ops += other.plan_ops;
+        self.plan_bundles += other.plan_bundles;
     }
     /// Workers that retired their crossbar.
     pub fn retired_workers(&self) -> usize {
@@ -332,6 +357,17 @@ impl MetricsSnapshot {
     /// count and exact observed max (see [`log2_percentile_exact_us`]).
     pub fn latency_percentile_us(&self, pct: f64) -> u64 {
         log2_percentile_exact_us(&self.lat_bins, pct, self.lat_overflow, self.lat_max_us)
+    }
+
+    /// Traffic-weighted packing factor: micro-ops executed per cycle
+    /// bundle across all served batches (1.0 with serial plans or no
+    /// traffic; > 1.0 means list scheduling packed independent ops).
+    pub fn packing_factor(&self) -> f64 {
+        if self.plan_bundles == 0 {
+            1.0
+        } else {
+            self.plan_ops as f64 / self.plan_bundles as f64
+        }
     }
 
     /// Completed-requests rate over the snapshot's serving interval
@@ -373,6 +409,8 @@ pub fn render_prometheus(s: &MetricsSnapshot, boot_epoch: u64) -> String {
     counter("remus_hb_pongs_total", "Data-path heartbeat pongs received", s.hb_pongs);
     counter("remus_hb_timeouts_total", "Heartbeat deadlines missed", s.hb_timeouts);
     counter("remus_auth_rejects_total", "Peers rejected by authentication", s.auth_rejects);
+    counter("remus_plan_ops_total", "Micro-ops in executed batches' plans", s.plan_ops);
+    counter("remus_plan_bundles_total", "Cycle bundles issued for those plans", s.plan_bundles);
     counter(
         "remus_latency_overflow_total",
         "Latency samples past the top histogram bin",
@@ -567,11 +605,14 @@ mod tests {
         m.record_latency(Duration::from_micros(10));
         m.record_latency(Duration::from_micros(5000));
         m.record_kind_submitted(crate::mmpu::functions::FunctionKind::Add(8));
+        m.record_plan(120, 40);
         let mut s = m.snapshot();
         s.shards_total = 2;
         s.shards_down = 1;
         let text = render_prometheus(&s, 0xBEEF);
         assert!(text.contains("remus_requests_submitted_total 42\n"));
+        assert!(text.contains("remus_plan_ops_total 120\n"));
+        assert!(text.contains("remus_plan_bundles_total 40\n"));
         assert!(text.contains("remus_requests_completed_total 40\n"));
         assert!(text.contains("remus_requests_failed_total 2\n"));
         assert!(text.contains("remus_shards_total 2\n"));
@@ -599,6 +640,21 @@ mod tests {
             assert!(v >= last, "bucket counts must be cumulative: {line}");
             last = v;
         }
+    }
+
+    #[test]
+    fn plan_packing_counters_merge_and_ratio() {
+        let m1 = Metrics::new();
+        m1.record_plan(300, 100); // 3.0 packing on this shard
+        let m2 = Metrics::new();
+        m2.record_plan(100, 100); // serial shard
+        let mut merged = m1.snapshot();
+        assert_eq!(merged.packing_factor(), 3.0);
+        merged.merge(&m2.snapshot());
+        assert_eq!((merged.plan_ops, merged.plan_bundles), (400, 200));
+        assert_eq!(merged.packing_factor(), 2.0, "traffic-weighted across shards");
+        // No traffic (or a pre-v7 peer's zeros) reads as serial.
+        assert_eq!(MetricsSnapshot::default().packing_factor(), 1.0);
     }
 
     #[test]

@@ -27,6 +27,7 @@ use anyhow::{ensure, Result};
 
 use crate::errs::ErrorModel;
 use crate::health::HealthConfig;
+use crate::isa::ScheduleConfig;
 use crate::mmpu::{
     CompiledFunction, FunctionKind, Mmpu, MmpuConfig, PlanCache, ReliabilityPolicy, VectorResult,
 };
@@ -80,6 +81,11 @@ pub struct CoordinatorConfig {
     /// §Telemetry: sample 1 in `trace_sample` requests for stage-span
     /// tracing (0 disables tracing; the disabled path is one branch).
     pub trace_sample: u64,
+    /// §Perf: list-scheduling configuration for every compiled plan
+    /// (`off` = the serial program-order reference). Threaded into the
+    /// shared [`PlanCache`] key, so fleets with different schedules can
+    /// share a cache without mixing plans.
+    pub schedule: ScheduleConfig,
 }
 
 impl Default for CoordinatorConfig {
@@ -97,6 +103,7 @@ impl Default for CoordinatorConfig {
             spare_workers: 0,
             health: None,
             trace_sample: 0,
+            schedule: ScheduleConfig::off(),
         }
     }
 }
@@ -455,11 +462,15 @@ fn resolve_plan(
     rows: usize,
     cols: usize,
     tmr: TmrMode,
+    sched: ScheduleConfig,
 ) -> Result<Arc<CompiledFunction>> {
+    // The memo key omits `sched`: it is coordinator-config-constant for
+    // the life of the worker, unlike the TMR mode (escalation switches
+    // that at runtime).
     if let Some(cf) = local.get(&(kind, tmr)) {
         return Ok(cf.clone());
     }
-    let cf = plans.get(kind, rows, cols, tmr)?;
+    let cf = plans.get(kind, rows, cols, tmr, sched)?;
     local.insert((kind, tmr), cf.clone());
     Ok(cf)
 }
@@ -515,6 +526,7 @@ fn worker_loop(
         policy: cfg.policy,
         errors: cfg.errors,
         seed: cfg.seed.wrapping_add(worker_id as u64),
+        schedule: cfg.schedule,
     };
     let mut mmpu = Mmpu::new(mmpu_cfg);
     if let Some(h) = &cfg.health {
@@ -554,7 +566,15 @@ fn worker_loop(
         let b: Vec<u64> = batch.items.iter().map(|p| p.b).collect();
         // Shared compiled plan: synthesized + validated once per
         // (kind, shape, tmr) process-wide, memoized per worker.
-        let mut plan = resolve_plan(&mut local, &plans, batch.kind, cfg.rows, cfg.cols, policy.tmr);
+        let mut plan = resolve_plan(
+            &mut local,
+            &plans,
+            batch.kind,
+            cfg.rows,
+            cfg.cols,
+            policy.tmr,
+            cfg.schedule,
+        );
         // §Health: an escalated TMR mode may not fit every function on
         // this crossbar shape (e.g. serial TMR's extra output copies on
         // narrow arrays). Rather than bricking a previously working
@@ -569,13 +589,26 @@ fn worker_loop(
             let fallback = ReliabilityPolicy { ecc_m: policy.ecc_m, tmr: cfg.policy.tmr };
             if mmpu.set_policy(fallback).is_ok() {
                 policy = fallback;
-                plan =
-                    resolve_plan(&mut local, &plans, batch.kind, cfg.rows, cfg.cols, policy.tmr);
+                plan = resolve_plan(
+                    &mut local,
+                    &plans,
+                    batch.kind,
+                    cfg.rows,
+                    cfg.cols,
+                    policy.tmr,
+                    cfg.schedule,
+                );
             }
         }
-        let result = plan.and_then(|cf| mmpu.exec_vector_compiled(0, &cf, &a, &b));
+        let result = plan.and_then(|cf| {
+            let res = mmpu.exec_vector_compiled(0, &cf, &a, &b)?;
+            Ok((cf, res))
+        });
         match result {
-            Ok(res) => {
+            Ok((cf, res)) => {
+                // §Perf packing telemetry: micro-ops vs. cycles actually
+                // issued for this batch's plan (ratio = packing factor).
+                metrics.record_plan(cf.tmr.num_ops() as u64, cf.tmr.num_bundles() as u64);
                 let exec_ns = t0.elapsed().as_nanos() as u64;
                 let tracing = tracer.sample_n() != 0;
                 for (item, &value) in batch.items.iter().zip(&res.values) {

@@ -45,10 +45,12 @@ use crate::telemetry::{Event, EventKind, Stage, TraceSpan};
 /// optional `boot_epoch` trailing `EventsReply` (only present — and
 /// only v6-stamped — when nonzero), letting the router detect that a
 /// shard restarted and its journal sequence numbers started over.
+/// v7 added the §Perf list-scheduling packing counters (`plan_ops`,
+/// `plan_bundles`) trailing the snapshot body.
 /// Each frame is stamped with the *lowest* version that can represent
 /// its message ([`Msg::min_version`]), so older peers keep
 /// understanding the unchanged message layouts.
-pub const WIRE_VERSION: u8 = 6;
+pub const WIRE_VERSION: u8 = 7;
 
 /// Oldest version this decoder still accepts. v1/v2 frames decode
 /// compatibly (the snapshot's missing membership/heartbeat counters
@@ -165,8 +167,10 @@ impl Msg {
             // boot epoch; an epoch-less one keeps the exact v5 layout
             // for old pullers.
             Msg::EventsReply { boot_epoch, .. } if *boot_epoch != 0 => 6,
-            Msg::MetricsReply(_)
-            | Msg::Events { .. }
+            // The snapshot body always carries the trailing packing
+            // counters now, so a metrics reply is a v7 message.
+            Msg::MetricsReply(_) => 7,
+            Msg::Events { .. }
             | Msg::EventsReply { .. }
             | Msg::SpansReq
             | Msg::SpansReply { .. } => 5,
@@ -502,6 +506,9 @@ fn put_snapshot(out: &mut Vec<u8>, s: &MetricsSnapshot) {
         put_u64(out, ks.completed);
         put_u64(out, ks.failed);
     }
+    // The list-scheduling packing counters trail the v5 body (v7).
+    put_u64(out, s.plan_ops);
+    put_u64(out, s.plan_bundles);
 }
 
 fn put_event(out: &mut Vec<u8>, e: &Event) {
@@ -637,6 +644,9 @@ impl<'a> Cursor<'a> {
                 ks.failed = self.u64()?;
             }
         }
+        // v7 appended the list-scheduling packing counters; a pre-v7
+        // peer's snapshot reads as all-serial (packing factor 1.0).
+        let (plan_ops, plan_bundles) = if version >= 7 { (self.u64()?, self.u64()?) } else { (0, 0) };
         Ok(MetricsSnapshot {
             submitted,
             completed,
@@ -657,6 +667,8 @@ impl<'a> Cursor<'a> {
             hb_pongs,
             hb_timeouts,
             auth_rejects,
+            plan_ops,
+            plan_bundles,
         })
     }
 
@@ -708,8 +720,8 @@ mod tests {
         assert_eq!(reg3.to_bytes()[0], 3, "prev-carrying Register keeps the v3 layout");
         assert_eq!(
             Msg::MetricsReply(MetricsSnapshot::default()).to_bytes()[0],
-            5,
-            "snapshot layout is unchanged in v6, so MetricsReply stays v5-stamped"
+            7,
+            "the snapshot body carries the v7 trailing packing counters"
         );
         assert_eq!(Msg::Ping { nonce: 9 }.to_bytes()[0], 3, "heartbeats keep the v3 layout");
         assert_eq!(Msg::Pong { nonce: 9 }.to_bytes()[0], 3, "heartbeats keep the v3 layout");
@@ -831,6 +843,8 @@ mod tests {
             hb_pongs: 39,
             hb_timeouts: 1,
             auth_rejects: 2,
+            plan_ops: 900,
+            plan_bundles: 300,
         };
         let msg = Msg::MetricsReply(snap);
         assert_eq!(Msg::from_bytes(&msg.to_bytes()).unwrap(), msg);
@@ -838,11 +852,12 @@ mod tests {
 
     #[test]
     fn old_version_frames_decode_compatibly() {
-        // A v4 MetricsReply lacks the trailing observability counters
-        // (uptime + histogram honesty + per-kind stats: 15 u64s), a v3
-        // one also the auth-reject counter, a v2 one also the heartbeat
+        // A v6 MetricsReply lacks the trailing packing counters (2
+        // u64s), a v4 one also the observability counters (uptime +
+        // histogram honesty + per-kind stats: 15 u64s), a v3 one also
+        // the auth-reject counter, a v2 one also the heartbeat
         // counters, a v1 one also the membership counters: strip them
-        // from a v5 encoding and relabel the version byte.
+        // from a v7 encoding and relabel the version byte.
         let snap = MetricsSnapshot {
             completed: 9,
             lat_bins: vec![1, 2],
@@ -855,10 +870,23 @@ mod tests {
             uptime_ns: 777,
             lat_overflow: 1,
             lat_max_us: 123,
+            plan_ops: 200,
+            plan_bundles: 50,
             ..Default::default()
         };
+        let mut v6 = Msg::MetricsReply(snap.clone()).to_bytes();
+        v6.truncate(v6.len() - 16);
+        v6[0] = 6;
+        match Msg::from_bytes(&v6).unwrap() {
+            Msg::MetricsReply(got) => {
+                let expect = MetricsSnapshot { plan_ops: 0, plan_bundles: 0, ..snap.clone() };
+                assert_eq!(got, expect, "v7 packing counters default to 0 for v6 peers")
+            }
+            other => panic!("unexpected decode: {other:?}"),
+        }
+        let snap = MetricsSnapshot { plan_ops: 0, plan_bundles: 0, ..snap };
         let mut v4 = Msg::MetricsReply(snap.clone()).to_bytes();
-        v4.truncate(v4.len() - 120);
+        v4.truncate(v4.len() - 136);
         v4[0] = 4;
         match Msg::from_bytes(&v4).unwrap() {
             Msg::MetricsReply(got) => {
@@ -880,7 +908,7 @@ mod tests {
             ..snap
         };
         let mut v3 = Msg::MetricsReply(snap.clone()).to_bytes();
-        v3.truncate(v3.len() - 128);
+        v3.truncate(v3.len() - 144);
         v3[0] = 3;
         match Msg::from_bytes(&v3).unwrap() {
             Msg::MetricsReply(got) => {
@@ -890,7 +918,7 @@ mod tests {
         }
         let snap = MetricsSnapshot { hb_pings: 0, hb_pongs: 0, hb_timeouts: 0, ..snap };
         let mut v2 = Msg::MetricsReply(snap.clone()).to_bytes();
-        v2.truncate(v2.len() - 152);
+        v2.truncate(v2.len() - 168);
         v2[0] = 2;
         match Msg::from_bytes(&v2).unwrap() {
             Msg::MetricsReply(got) => {
@@ -899,7 +927,7 @@ mod tests {
             other => panic!("unexpected decode: {other:?}"),
         }
         let mut v1 = Msg::MetricsReply(snap.clone()).to_bytes();
-        v1.truncate(v1.len() - 168);
+        v1.truncate(v1.len() - 184);
         v1[0] = 1;
         match Msg::from_bytes(&v1).unwrap() {
             Msg::MetricsReply(got) => {

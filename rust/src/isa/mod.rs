@@ -9,5 +9,5 @@ pub mod program;
 
 pub use encode::{encode, EncodedProgram};
 pub use microop::{Dir, LaneRange, MicroOp};
-pub use plan::CompiledPlan;
+pub use plan::{BundleFootprint, CompiledPlan, ScheduleConfig};
 pub use program::{Program, RowProgramBuilder, Step};

@@ -18,6 +18,24 @@
 //!
 //! Plans are immutable and `Send + Sync`, so the coordinator shares them
 //! across workers behind `Arc` (see `mmpu::PlanCache`).
+//!
+//! §Perf, list scheduling: beyond the serial program-order plan,
+//! [`CompiledPlan::compile_scheduled`] runs compile-time dependency
+//! analysis (RAW/WAR/WAW over the lines each micro-op reads and writes,
+//! intersected with its lane span) and greedily packs independent ops
+//! into shared cycles — *bundles* — subject to the same partition
+//! disjointness and fan-out rules the per-step validator enforces
+//! (paper Fig. 1c; PartitionPIM-style packing). The bundle schedule is
+//! deterministic (greedy earliest-fit over the fixed program order),
+//! never slower than the serial plan (it falls back to the serial step
+//! structure when packing removes no cycles), and bit-identical to the
+//! program-order reference in the clean model: independent ops touch
+//! disjoint (line, lane) sets, so every op sees the same inputs and
+//! writes the same output no matter which cycle it shares. Under error
+//! injection the *serial* plan remains the bit-exact reference — the
+//! injector stream is consumed in execution order, so packing legally
+//! re-seats where transient faults land (`tests/prop_plan_equivalence.rs`
+//! pins both contracts).
 
 use anyhow::{ensure, Result};
 
@@ -183,6 +201,178 @@ pub(crate) fn validate_step_concurrency(
     Ok(())
 }
 
+/// §Perf: compile-time list-scheduling configuration, threaded from
+/// `MmpuConfig`/`CoordinatorConfig` through the `PlanCache` key down to
+/// [`CompiledPlan::compile_scheduled`]. Off by default everywhere: the
+/// serial program-order plan stays the shipped behavior (and the
+/// bit-exact noisy reference) until a caller opts in.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct ScheduleConfig {
+    /// Pack independent micro-ops into shared cycles when true;
+    /// otherwise compile the program-order serial plan.
+    pub enabled: bool,
+    /// Uniform column-partition grid (segment count) unioned with the
+    /// boundaries the program/TMR layout already requires, licensing
+    /// same-cycle in-row gates. `<= 1`: only the existing boundaries.
+    pub partitions: u32,
+}
+
+impl ScheduleConfig {
+    /// Serial program-order compilation (the default).
+    pub fn off() -> Self {
+        Self { enabled: false, partitions: 0 }
+    }
+
+    /// Dependency-scheduled packing over `partitions` column segments.
+    pub fn packed(partitions: u32) -> Self {
+        Self { enabled: true, partitions }
+    }
+}
+
+impl Default for ScheduleConfig {
+    fn default() -> Self {
+        Self::off()
+    }
+}
+
+/// Lines `op` reads: live operands plus the output line — the stateful
+/// gate folds over the output's previous contents, so `out` is an input
+/// too (`eval_word` consumes `prev`). Arity-0 ops mirror `out` into
+/// every operand slot, collapsing to `{out}`.
+fn reads(op: &MicroOp) -> Vec<u32> {
+    op.lines()
+}
+
+/// Resolved lane interval [s, e) of `op` against its lane count. Only
+/// called after serial compilation validated the range, so the clamp
+/// cannot underflow.
+fn lane_interval(op: &MicroOp, lanes: usize) -> (u32, u32) {
+    let e = if op.lanes.end == u32::MAX { lanes as u32 } else { op.lanes.end };
+    (op.lanes.start, e)
+}
+
+/// Compile-time dependency test: must `later` stay ordered after
+/// `earlier`? True on any RAW/WAR/WAW hazard — one op's write line in
+/// the other's read set — restricted to overlapping lane spans (two ops
+/// on the same line but disjoint lanes touch disjoint cells). Ops of
+/// different directions always conflict: an in-row op's cell footprint
+/// is (its lanes x its columns) while an in-column op's is (its rows x
+/// its lanes), and a precise cross product is not worth the risk — the
+/// conservative order preserves the reference semantics.
+fn conflicts(earlier: &MicroOp, later: &MicroOp, rows: usize, cols: usize) -> bool {
+    if earlier.dir != later.dir {
+        return true;
+    }
+    let lanes = match earlier.dir {
+        Dir::InRow => rows,
+        Dir::InCol => cols,
+    };
+    let (s1, e1) = lane_interval(earlier, lanes);
+    let (s2, e2) = lane_interval(later, lanes);
+    if s1.max(s2) >= e1.min(e2) {
+        return false;
+    }
+    reads(later).contains(&earlier.out) || reads(earlier).contains(&later.out)
+}
+
+/// Greedy earliest-fit list scheduler: walk the flattened program in
+/// order; each op lands in the first cycle at or after all of its
+/// dependencies whose bundle admits it under the frozen concurrency
+/// rules ([`validate_step_concurrency`] — shared direction, fan-out
+/// grouping, pairwise-disjoint partition claims). Deterministic by
+/// construction: no hashing, no tie-breaking, fixed iteration order.
+/// Returns op indices per bundle (program order within each bundle).
+fn schedule_ops(
+    flat: &[MicroOp],
+    rows: usize,
+    cols: usize,
+    col_parts: &Partitions,
+    row_parts: &Partitions,
+) -> Vec<Vec<usize>> {
+    let mut cycle_of: Vec<usize> = Vec::with_capacity(flat.len());
+    let mut bundles: Vec<Vec<MicroOp>> = Vec::new();
+    let mut members: Vec<Vec<usize>> = Vec::new();
+    for (i, op) in flat.iter().enumerate() {
+        let mut earliest = 0usize;
+        for (j, done) in flat[..i].iter().enumerate() {
+            if conflicts(done, op, rows, cols) {
+                earliest = earliest.max(cycle_of[j] + 1);
+            }
+        }
+        // Ops already placed in a candidate bundle never conflict with
+        // `op` (a conflicting predecessor would have pushed `earliest`
+        // past its cycle), so admission is purely the concurrency rules.
+        let mut placed = None;
+        for c in earliest..bundles.len() {
+            bundles[c].push(*op);
+            if validate_step_concurrency(&bundles[c], col_parts, row_parts).is_ok() {
+                placed = Some(c);
+                break;
+            }
+            bundles[c].pop();
+        }
+        let c = placed.unwrap_or_else(|| {
+            bundles.push(vec![*op]);
+            members.push(Vec::new());
+            bundles.len() - 1
+        });
+        members[c].push(i);
+        cycle_of.push(c);
+    }
+    members
+}
+
+/// Per-cycle driver footprint of one bundle (§Perf): the union of the
+/// member lane spans and, for in-row bundles, the fused word range +
+/// boundary masks their word-parallel drivers activate together. Not
+/// consulted by the interpreter (each member keeps its own resolved
+/// masks, preserving bit-exactness) — this is the schedule's shape,
+/// used by the packing telemetry and pinned by tests.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BundleFootprint {
+    pub dir: Dir,
+    /// Fused lane span [lane_lo, lane_hi) across the members.
+    pub lane_lo: u32,
+    pub lane_hi: u32,
+    /// Fused word range + boundary masks (`InRow` only; zero otherwise).
+    pub w_lo: u32,
+    pub w_hi: u32,
+    pub first_mask: u64,
+    pub last_mask: u64,
+}
+
+impl BundleFootprint {
+    fn of(ops: &[PlanOp]) -> BundleFootprint {
+        let dir = ops[0].dir;
+        let lane_lo = ops.iter().map(|o| o.s).min().unwrap();
+        let lane_hi = ops.iter().map(|o| o.e).max().unwrap();
+        if dir == Dir::InCol {
+            return BundleFootprint {
+                dir,
+                lane_lo,
+                lane_hi,
+                w_lo: 0,
+                w_hi: 0,
+                first_mask: 0,
+                last_mask: 0,
+            };
+        }
+        let w_lo = ops.iter().map(|o| o.w_lo).min().unwrap();
+        let w_hi = ops.iter().map(|o| o.w_hi).max().unwrap();
+        // Fused boundary masks: which lanes of the extremal words any
+        // member drives this cycle.
+        let first_mask = ops
+            .iter()
+            .filter(|o| o.w_lo == w_lo)
+            .fold(0u64, |m, o| m | if o.w_lo == o.w_hi { o.first_mask & o.last_mask } else { o.first_mask });
+        let last_mask = ops
+            .iter()
+            .filter(|o| o.w_hi == w_hi)
+            .fold(0u64, |m, o| m | if o.w_lo == o.w_hi { o.first_mask & o.last_mask } else { o.last_mask });
+        BundleFootprint { dir, lane_lo, lane_hi, w_lo, w_hi, first_mask, last_mask }
+    }
+}
+
 /// A program compiled against a crossbar shape + partition configuration:
 /// validated once, resolved once, executed many times.
 #[derive(Clone, Debug)]
@@ -191,8 +381,14 @@ pub struct CompiledPlan {
     rows: usize,
     cols: usize,
     ops: Vec<PlanOp>,
-    /// One `(start, end)` op range per crossbar cycle.
+    /// One `(start, end)` op range per crossbar cycle — the bundle
+    /// schedule. Serial plans are the 1-step-per-program-step case.
     steps: Vec<(u32, u32)>,
+    /// Per-bundle fused driver footprints, parallel to `steps`.
+    footprints: Vec<BundleFootprint>,
+    /// Whether dependency scheduling reordered/packed the ops (false:
+    /// program order, the bit-exact noisy reference).
+    scheduled: bool,
     /// Declared output columns (copied from the program).
     pub output_cols: Vec<u32>,
     /// Column partitions the plan's in-row concurrency was validated
@@ -218,6 +414,7 @@ impl CompiledPlan {
         ensure!(row_parts.lines() as usize == rows, "row partition size mismatch");
         let mut ops = Vec::with_capacity(prog.num_ops());
         let mut steps = Vec::with_capacity(prog.steps.len());
+        let mut footprints = Vec::with_capacity(prog.steps.len());
         let mut needs_col_parts = false;
         let mut needs_row_parts = false;
         for step in &prog.steps {
@@ -237,6 +434,7 @@ impl CompiledPlan {
                 });
             }
             steps.push((start, ops.len() as u32));
+            footprints.push(BundleFootprint::of(&ops[start as usize..]));
         }
         Ok(CompiledPlan {
             name: prog.name.clone(),
@@ -244,8 +442,81 @@ impl CompiledPlan {
             cols,
             ops,
             steps,
+            footprints,
+            scheduled: false,
             output_cols: prog.output_cols.clone(),
             col_parts: needs_col_parts.then(|| col_parts.clone()),
+            row_parts: needs_row_parts.then(|| row_parts.clone()),
+        })
+    }
+
+    /// Compile `prog` with dependency scheduling (§Perf): pack
+    /// independent micro-ops into shared cycles across the column
+    /// partitions of `sched` (refined over `col_parts`, so every
+    /// boundary the program/TMR layout already requires survives and
+    /// originally-parallel steps stay valid). Falls back to the serial
+    /// plan — byte-for-byte, including its (unrefined) partition
+    /// requirements — when scheduling is off or packing removes no
+    /// cycles, which makes `cycles(scheduled) <= cycles(serial)`
+    /// mechanical rather than probabilistic.
+    pub fn compile_scheduled(
+        prog: &Program,
+        rows: usize,
+        cols: usize,
+        col_parts: &Partitions,
+        row_parts: &Partitions,
+        sched: ScheduleConfig,
+    ) -> Result<CompiledPlan> {
+        // Serial compilation first: it owns validation (bounds, lane
+        // ranges, declared concurrency) and is the fallback plan.
+        let serial = Self::compile(prog, rows, cols, col_parts, row_parts)?;
+        if !sched.enabled {
+            return Ok(serial);
+        }
+        let packed_parts = if sched.partitions > 1 {
+            col_parts.refined_with_grid(sched.partitions)
+        } else {
+            col_parts.clone()
+        };
+        let flat: Vec<MicroOp> =
+            prog.steps.iter().flat_map(|s| s.ops.iter().copied()).collect();
+        let members = schedule_ops(&flat, rows, cols, &packed_parts, row_parts);
+        if members.len() >= serial.cycles() {
+            return Ok(serial);
+        }
+        let mut ops = Vec::with_capacity(flat.len());
+        let mut steps = Vec::with_capacity(members.len());
+        let mut footprints = Vec::with_capacity(members.len());
+        let mut needs_col_parts = false;
+        let mut needs_row_parts = false;
+        for bundle in &members {
+            if bundle.len() > 1 {
+                match flat[bundle[0]].dir {
+                    Dir::InRow => needs_col_parts = true,
+                    Dir::InCol => needs_row_parts = true,
+                }
+            }
+            let start = ops.len() as u32;
+            for &i in bundle {
+                let op = &flat[i];
+                ops.push(match op.dir {
+                    Dir::InRow => PlanOp::resolve_in_row(op, rows, cols)?,
+                    Dir::InCol => PlanOp::resolve_in_col(op, rows, cols)?,
+                });
+            }
+            steps.push((start, ops.len() as u32));
+            footprints.push(BundleFootprint::of(&ops[start as usize..]));
+        }
+        Ok(CompiledPlan {
+            name: prog.name.clone(),
+            rows,
+            cols,
+            ops,
+            steps,
+            footprints,
+            scheduled: true,
+            output_cols: prog.output_cols.clone(),
+            col_parts: needs_col_parts.then(|| packed_parts.clone()),
             row_parts: needs_row_parts.then(|| row_parts.clone()),
         })
     }
@@ -265,6 +536,32 @@ impl CompiledPlan {
 
     pub fn num_ops(&self) -> usize {
         self.ops.len()
+    }
+
+    /// Whether dependency scheduling packed this plan (false: serial
+    /// program order, the bit-exact noisy reference).
+    pub fn is_scheduled(&self) -> bool {
+        self.scheduled
+    }
+
+    /// Micro-ops per cycle — the schedule's packing factor (1.0 for a
+    /// fully serial plan; > 1.0 when bundles share cycles).
+    pub fn packing_factor(&self) -> f64 {
+        if self.steps.is_empty() {
+            return 1.0;
+        }
+        self.ops.len() as f64 / self.steps.len() as f64
+    }
+
+    /// Ops per bundle, in schedule order (determinism is asserted over
+    /// this shape: same program + config -> same sizes every compile).
+    pub fn bundle_sizes(&self) -> Vec<u32> {
+        self.steps.iter().map(|&(s, e)| e - s).collect()
+    }
+
+    /// Per-bundle fused driver footprints, parallel to the schedule.
+    pub fn footprints(&self) -> &[BundleFootprint] {
+        &self.footprints
     }
 
     /// Column partitions required at execution time (`None`: any).
@@ -368,5 +665,129 @@ mod tests {
         prog.steps.push(Step { ops: vec![] });
         let (cp, rp) = whole(8, 8);
         assert!(CompiledPlan::compile(&prog, 8, 8, &cp, &rp).is_err());
+    }
+
+    #[test]
+    fn scheduler_packs_independent_ops_across_partitions() {
+        // Two independent NOTs in separate program steps: serial takes 2
+        // cycles, the scheduler packs them into 1 under a 2-segment grid.
+        let mut prog = Program::new("pack");
+        prog.push(MicroOp::row(Gate::Not, &[0], 1));
+        prog.push(MicroOp::row(Gate::Not, &[4], 5));
+        let (cp, rp) = whole(8, 8);
+        let serial = CompiledPlan::compile(&prog, 8, 8, &cp, &rp).unwrap();
+        assert_eq!(serial.cycles(), 2);
+        assert!(!serial.is_scheduled());
+        let plan =
+            CompiledPlan::compile_scheduled(&prog, 8, 8, &cp, &rp, ScheduleConfig::packed(2))
+                .unwrap();
+        assert!(plan.is_scheduled());
+        assert_eq!(plan.cycles(), 1);
+        assert_eq!(plan.num_ops(), 2, "packing never drops ops");
+        assert_eq!(plan.bundle_sizes(), vec![2]);
+        assert!((plan.packing_factor() - 2.0).abs() < 1e-12);
+        // The packed plan requires the refined grid it was scheduled for.
+        let grid = cp.refined_with_grid(2);
+        assert_eq!(plan.required_col_partitions(), Some(&grid));
+    }
+
+    #[test]
+    fn dependent_chain_falls_back_to_serial_plan() {
+        // RAW chain: nothing can pack, so compile_scheduled returns the
+        // serial plan itself — including its (unrefined) partition
+        // requirements. This is the mechanical cycles(sched) <= serial.
+        let mut prog = Program::new("chain");
+        prog.push(MicroOp::row(Gate::Not, &[0], 1));
+        prog.push(MicroOp::row(Gate::Not, &[1], 2));
+        prog.push(MicroOp::row(Gate::Not, &[2], 3));
+        let (cp, rp) = whole(8, 8);
+        let plan =
+            CompiledPlan::compile_scheduled(&prog, 8, 8, &cp, &rp, ScheduleConfig::packed(8))
+                .unwrap();
+        assert!(!plan.is_scheduled(), "no packing possible -> serial fallback");
+        assert_eq!(plan.cycles(), 3);
+        assert!(
+            plan.required_col_partitions().is_none(),
+            "fallback keeps the serial plan's partition requirements"
+        );
+    }
+
+    #[test]
+    fn scheduling_is_deterministic_and_never_slower() {
+        let mut prog = Program::new("mix");
+        prog.push(MicroOp::row(Gate::Nor2, &[0, 1], 2));
+        prog.push(MicroOp::row(Gate::Not, &[4], 5));
+        prog.push(MicroOp::row(Gate::Nor2, &[2, 5], 6));
+        prog.push(MicroOp::row(Gate::Not, &[3], 7));
+        let (cp, rp) = whole(16, 16);
+        let sched = ScheduleConfig::packed(4);
+        let a = CompiledPlan::compile_scheduled(&prog, 16, 16, &cp, &rp, sched).unwrap();
+        let b = CompiledPlan::compile_scheduled(&prog, 16, 16, &cp, &rp, sched).unwrap();
+        assert_eq!(a.bundle_sizes(), b.bundle_sizes());
+        assert_eq!(a.footprints(), b.footprints());
+        assert_eq!(a.cycles(), b.cycles());
+        let serial = CompiledPlan::compile(&prog, 16, 16, &cp, &rp).unwrap();
+        assert!(a.cycles() <= serial.cycles());
+        assert_eq!(a.num_ops(), serial.num_ops());
+        // ops 0+1 are independent (cycle 0); op 2 reads both outputs
+        // (cycle 1); op 3 is independent but its span straddles the
+        // claimed segments, so it lands alone (cycle 2).
+        assert_eq!(a.cycles(), 3);
+        assert_eq!(a.bundle_sizes(), vec![2, 1, 1]);
+    }
+
+    #[test]
+    fn bundle_footprints_fuse_word_masks() {
+        // Members in different words of the packed column: the fused
+        // footprint spans both words, with each boundary mask showing
+        // only the lanes actually driven there.
+        let mut prog = Program::new("fuse");
+        prog.push(MicroOp::row(Gate::Not, &[0], 1).over(LaneRange::new(0, 10)));
+        prog.push(MicroOp::row(Gate::Not, &[4], 5).over(LaneRange::new(64, 70)));
+        let (cp, rp) = whole(128, 8);
+        let plan =
+            CompiledPlan::compile_scheduled(&prog, 128, 8, &cp, &rp, ScheduleConfig::packed(2))
+                .unwrap();
+        assert!(plan.is_scheduled());
+        assert_eq!(plan.cycles(), 1);
+        let fp = plan.footprints()[0];
+        assert_eq!(fp.dir, Dir::InRow);
+        assert_eq!((fp.lane_lo, fp.lane_hi), (0, 70));
+        assert_eq!((fp.w_lo, fp.w_hi), (0, 1));
+        assert_eq!(fp.first_mask, (1u64 << 10) - 1, "word 0: lanes 0..10 only");
+        assert_eq!(fp.last_mask, (1u64 << 6) - 1, "word 1: lanes 64..70 only");
+    }
+
+    #[test]
+    fn schedule_off_returns_the_serial_plan() {
+        let mut b = RowProgramBuilder::new("seq");
+        b.gate(Gate::Nor2, &[0, 1], 2);
+        b.gate(Gate::Not, &[2], 3);
+        let prog = b.finish();
+        let (cp, rp) = whole(16, 8);
+        let serial = CompiledPlan::compile(&prog, 16, 8, &cp, &rp).unwrap();
+        let off =
+            CompiledPlan::compile_scheduled(&prog, 16, 8, &cp, &rp, ScheduleConfig::off())
+                .unwrap();
+        assert!(!off.is_scheduled());
+        assert_eq!(off.bundle_sizes(), serial.bundle_sizes());
+        assert_eq!(off.footprints(), serial.footprints());
+        assert_eq!(off.cycles(), serial.cycles());
+    }
+
+    #[test]
+    fn in_col_ops_keep_program_order_under_whole_row_partitions() {
+        // The scheduler only refines the *column* grid; in-column ops
+        // pack only as far as the existing row partitions allow. Under a
+        // whole-array row configuration they stay serial.
+        let mut prog = Program::new("col");
+        prog.push(MicroOp::col(Gate::Not, &[0], 1));
+        prog.push(MicroOp::col(Gate::Not, &[4], 5));
+        let (cp, rp) = whole(8, 8);
+        let plan =
+            CompiledPlan::compile_scheduled(&prog, 8, 8, &cp, &rp, ScheduleConfig::packed(8))
+                .unwrap();
+        assert!(!plan.is_scheduled());
+        assert_eq!(plan.cycles(), 2);
     }
 }

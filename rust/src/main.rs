@@ -115,6 +115,15 @@
 //! (total per-directory footprint; oldest closed segments are deleted
 //! past it) and `--wal-fsync` (fsync per drained batch instead of
 //! OS-buffered appends).
+//!
+//! Every serving role — `fabric-serve`, the `fabric-soak` children,
+//! and the in-process coordinator behind `loadgen` — also takes
+//! `--schedule` (§Perf list scheduling, wire v7): compiled plans are
+//! packed across a uniform partition grid of `--partitions` segments
+//! (default 16), so independent micro-ops share cycles. Without the
+//! flag plans stay the serial program-order reference. The achieved
+//! packing shows up as `plan_ops`/`plan_bundles` in the fleet
+//! snapshot and as `remus_plan_*_total` on `/metrics`.
 
 use std::collections::HashMap;
 
@@ -130,6 +139,7 @@ use remus::fabric::{
     shutdown_endpoint_auth, FabricServer, Psk, RouteOptions, Router, RouterConfig, ServeOptions,
 };
 use remus::health::{HealthConfig, WearModel};
+use remus::isa::ScheduleConfig;
 use remus::mmpu::{controller::quick_exec, FunctionKind, ReliabilityPolicy};
 use remus::nn::degradation::DegradationModel;
 use remus::telemetry::{
@@ -638,6 +648,15 @@ fn shard_config(args: &Args) -> CoordinatorConfig {
         max_batch: args.get_or("max-batch", 64usize),
         max_wait: std::time::Duration::from_micros(args.get_or("max-wait-us", 300u64)),
         trace_sample: args.get_or("trace-sample", 0u64),
+        // §Perf list scheduling: --schedule packs every compiled plan
+        // across a uniform partition grid (--partitions, default 16);
+        // without the flag plans stay the serial program-order
+        // reference, bit-identical to every pre-PR-9 run.
+        schedule: if args.flag("schedule") {
+            ScheduleConfig::packed(args.get_or("partitions", 16u32))
+        } else {
+            ScheduleConfig::off()
+        },
         health: if args.flag("health") {
             Some(HealthConfig {
                 wear: WearModel::accelerated(args.get_or("endurance", 3e4f64)),
@@ -770,6 +789,7 @@ fn spawn_shard(
         "endurance",
         "psk-file",
         "trace-sample",
+        "partitions",
         "wal-segment-bytes",
         "wal-max-bytes",
     ];
@@ -778,7 +798,7 @@ fn spawn_shard(
             cmd.arg(format!("--{key}")).arg(v);
         }
     }
-    for flag in ["health", "nominal-errors", "wal-fsync"] {
+    for flag in ["health", "nominal-errors", "wal-fsync", "schedule"] {
         if args.flag(flag) {
             cmd.arg(format!("--{flag}"));
         }

@@ -4,16 +4,19 @@
 //! one crossbar shape: the program's concurrency is validated once, all
 //! TMR copies are retargeted/relocated once, and every micro-op is
 //! resolved (see `isa::CompiledPlan`). The [`PlanCache`] shares these
-//! behind `Arc` keyed by `(FunctionKind, rows, cols, TmrMode)` — the
-//! coordinator hands one cache to all workers, replacing the per-worker
-//! `FunctionSpec::build` + per-execution program interpretation that
-//! previously dominated the request path.
+//! behind `Arc` keyed by `(FunctionKind, rows, cols, TmrMode,
+//! ScheduleConfig)` — the coordinator hands one cache to all workers,
+//! replacing the per-worker `FunctionSpec::build` + per-execution
+//! program interpretation that previously dominated the request path.
+//! Keying on the [`ScheduleConfig`] lets serial and list-scheduled
+//! compilations of the same function coexist (§Perf).
 
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
 use anyhow::Result;
 
+use crate::isa::ScheduleConfig;
 use crate::tmr::{CompiledTmr, TmrEngine, TmrMode};
 
 use super::functions::{FunctionKind, FunctionSpec};
@@ -23,18 +26,33 @@ use super::functions::{FunctionKind, FunctionSpec};
 pub struct CompiledFunction {
     pub spec: FunctionSpec,
     pub tmr: CompiledTmr,
+    /// The schedule this compilation was requested under (part of the
+    /// cache key; `off` = the serial program-order reference).
+    sched: ScheduleConfig,
 }
 
 impl CompiledFunction {
     /// Synthesize the spec and compile it in one step.
-    pub fn build(kind: FunctionKind, rows: usize, cols: usize, tmr: TmrMode) -> Result<Self> {
-        Self::from_spec(FunctionSpec::build(kind), rows, cols, tmr)
+    pub fn build(
+        kind: FunctionKind,
+        rows: usize,
+        cols: usize,
+        tmr: TmrMode,
+        sched: ScheduleConfig,
+    ) -> Result<Self> {
+        Self::from_spec(FunctionSpec::build(kind), rows, cols, tmr, sched)
     }
 
     /// Compile an already-synthesized spec.
-    pub fn from_spec(spec: FunctionSpec, rows: usize, cols: usize, tmr: TmrMode) -> Result<Self> {
-        let compiled = TmrEngine::new(tmr).compile(&spec.prog, rows, cols)?;
-        Ok(Self { spec, tmr: compiled })
+    pub fn from_spec(
+        spec: FunctionSpec,
+        rows: usize,
+        cols: usize,
+        tmr: TmrMode,
+        sched: ScheduleConfig,
+    ) -> Result<Self> {
+        let compiled = TmrEngine::new(tmr).compile_with(&spec.prog, rows, cols, sched)?;
+        Ok(Self { spec, tmr: compiled, sched })
     }
 
     pub fn kind(&self) -> FunctionKind {
@@ -43,6 +61,11 @@ impl CompiledFunction {
 
     pub fn mode(&self) -> TmrMode {
         self.tmr.mode
+    }
+
+    /// The schedule this compilation was requested under.
+    pub fn schedule(&self) -> ScheduleConfig {
+        self.sched
     }
 
     pub fn rows(&self) -> usize {
@@ -54,8 +77,9 @@ impl CompiledFunction {
     }
 }
 
-/// Cache key: function + crossbar shape + reliability strategy.
-pub type PlanKey = (FunctionKind, usize, usize, TmrMode);
+/// Cache key: function + crossbar shape + reliability strategy +
+/// schedule.
+pub type PlanKey = (FunctionKind, usize, usize, TmrMode, ScheduleConfig);
 
 /// Thread-safe cache of compiled functions, shared across coordinator
 /// workers (and used internally by `Mmpu`). Compilation happens at most
@@ -72,16 +96,17 @@ impl PlanCache {
     }
 
     /// Fetch or build the compiled function for `kind` on `rows x cols`
-    /// under `tmr` (spec synthesized via `FunctionSpec::build`).
+    /// under `tmr` + `sched` (spec synthesized via `FunctionSpec::build`).
     pub fn get(
         &self,
         kind: FunctionKind,
         rows: usize,
         cols: usize,
         tmr: TmrMode,
+        sched: ScheduleConfig,
     ) -> Result<Arc<CompiledFunction>> {
-        self.get_or_compile(kind, rows, cols, tmr, || {
-            CompiledFunction::build(kind, rows, cols, tmr)
+        self.get_or_compile(kind, rows, cols, tmr, sched, || {
+            CompiledFunction::build(kind, rows, cols, tmr, sched)
         })
     }
 
@@ -93,9 +118,10 @@ impl PlanCache {
         rows: usize,
         cols: usize,
         tmr: TmrMode,
+        sched: ScheduleConfig,
         build: impl FnOnce() -> Result<CompiledFunction>,
     ) -> Result<Arc<CompiledFunction>> {
-        let key: PlanKey = (kind, rows, cols, tmr);
+        let key: PlanKey = (kind, rows, cols, tmr, sched);
         let mut map = self.inner.lock().expect("plan cache poisoned");
         if let Some(cf) = map.get(&key) {
             return Ok(cf.clone());
@@ -121,30 +147,58 @@ mod tests {
 
     #[test]
     fn cache_compiles_once_and_shares() {
+        let off = ScheduleConfig::off();
         let cache = PlanCache::new();
-        let a = cache.get(FunctionKind::Add(8), 16, 256, TmrMode::Off).unwrap();
-        let b = cache.get(FunctionKind::Add(8), 16, 256, TmrMode::Off).unwrap();
+        let a = cache.get(FunctionKind::Add(8), 16, 256, TmrMode::Off, off).unwrap();
+        let b = cache.get(FunctionKind::Add(8), 16, 256, TmrMode::Off, off).unwrap();
         assert!(Arc::ptr_eq(&a, &b), "second lookup must hit the cache");
         assert_eq!(cache.len(), 1);
-        // Different shape or mode -> different entry.
-        cache.get(FunctionKind::Add(8), 32, 256, TmrMode::Off).unwrap();
-        cache.get(FunctionKind::Add(8), 16, 256, TmrMode::Serial).unwrap();
-        assert_eq!(cache.len(), 3);
+        // Different shape, mode, or schedule -> different entry.
+        cache.get(FunctionKind::Add(8), 32, 256, TmrMode::Off, off).unwrap();
+        cache.get(FunctionKind::Add(8), 16, 256, TmrMode::Serial, off).unwrap();
+        cache
+            .get(FunctionKind::Add(8), 16, 256, TmrMode::Off, ScheduleConfig::packed(8))
+            .unwrap();
+        assert_eq!(cache.len(), 4);
     }
 
     #[test]
     fn compile_errors_surface() {
         // 8 columns cannot hold an 8-bit adder.
         let cache = PlanCache::new();
-        assert!(cache.get(FunctionKind::Add(8), 16, 8, TmrMode::Off).is_err());
+        assert!(cache
+            .get(FunctionKind::Add(8), 16, 8, TmrMode::Off, ScheduleConfig::off())
+            .is_err());
         assert_eq!(cache.len(), 0, "failed compiles are not cached");
     }
 
     #[test]
     fn compiled_function_accessors() {
-        let cf = CompiledFunction::build(FunctionKind::Xor(4), 8, 64, TmrMode::Off).unwrap();
+        let cf = CompiledFunction::build(
+            FunctionKind::Xor(4),
+            8,
+            64,
+            TmrMode::Off,
+            ScheduleConfig::off(),
+        )
+        .unwrap();
         assert_eq!(cf.kind(), FunctionKind::Xor(4));
         assert_eq!(cf.mode(), TmrMode::Off);
+        assert_eq!(cf.schedule(), ScheduleConfig::off());
         assert_eq!((cf.rows(), cf.cols()), (8, 64));
+    }
+
+    #[test]
+    fn scheduled_entry_coexists_with_serial() {
+        let cache = PlanCache::new();
+        let serial =
+            cache.get(FunctionKind::Mul(8), 32, 640, TmrMode::Off, ScheduleConfig::off()).unwrap();
+        let sched = cache
+            .get(FunctionKind::Mul(8), 32, 640, TmrMode::Off, ScheduleConfig::packed(8))
+            .unwrap();
+        assert!(!Arc::ptr_eq(&serial, &sched));
+        assert_eq!(cache.len(), 2);
+        assert_eq!(serial.tmr.num_ops(), sched.tmr.num_ops(), "packing drops no ops");
+        assert!(sched.tmr.num_bundles() <= serial.tmr.num_bundles());
     }
 }

@@ -37,7 +37,7 @@ use anyhow::{ensure, Result};
 use crate::ecc::DiagonalEcc;
 use crate::errs::{ErrorModel, Injector};
 use crate::health::{CrossbarHealth, HealthConfig, ScrubReport};
-use crate::isa::plan::CompiledPlan;
+use crate::isa::plan::{CompiledPlan, ScheduleConfig};
 use crate::tmr::{TmrEngine, TmrMode, TmrRun};
 use crate::util::bitmat::{transpose64, BitMatrix};
 use crate::xbar::crossbar::Crossbar;
@@ -73,6 +73,9 @@ pub struct MmpuConfig {
     pub policy: ReliabilityPolicy,
     pub errors: ErrorModel,
     pub seed: u64,
+    /// §Perf: list-scheduling configuration threaded into every plan
+    /// compilation (`off` = the serial program-order reference).
+    pub schedule: ScheduleConfig,
 }
 
 impl Default for MmpuConfig {
@@ -84,6 +87,7 @@ impl Default for MmpuConfig {
             policy: ReliabilityPolicy::none(),
             errors: ErrorModel::none(),
             seed: 0xACE1,
+            schedule: ScheduleConfig::off(),
         }
     }
 }
@@ -303,10 +307,11 @@ impl Mmpu {
         b: &[u64],
     ) -> Result<VectorResult> {
         let (rows, cols, tmr) = (self.cfg.rows, self.cfg.cols, self.cfg.policy.tmr);
+        let sched = self.cfg.schedule;
         // The spec clone happens only inside the builder, i.e. on a cache
         // miss — hits stay O(1).
-        let cf = self.plans.get_or_compile(func.kind, rows, cols, tmr, || {
-            CompiledFunction::from_spec(func.clone(), rows, cols, tmr)
+        let cf = self.plans.get_or_compile(func.kind, rows, cols, tmr, sched, || {
+            CompiledFunction::from_spec(func.clone(), rows, cols, tmr, sched)
         })?;
         self.exec_vector_compiled(xbar_id, &cf, a, b)
     }
@@ -335,6 +340,12 @@ impl Mmpu {
             "function compiled for {:?}, policy is {:?}",
             cf.mode(),
             self.cfg.policy.tmr
+        );
+        ensure!(
+            cf.schedule() == self.cfg.schedule,
+            "function compiled under schedule {:?}, mMPU wants {:?}",
+            cf.schedule(),
+            self.cfg.schedule
         );
         let tmr = self.cfg.policy.tmr;
         let unit = &mut self.units[xbar_id];
@@ -920,6 +931,7 @@ pub fn quick_exec(
         policy,
         errors,
         seed,
+        schedule: ScheduleConfig::off(),
     };
     let mut mmpu = Mmpu::new(cfg);
     mmpu.exec_vector(0, &func, a, b)
@@ -1020,6 +1032,7 @@ mod tests {
             policy: ReliabilityPolicy::none(),
             errors,
             seed: 41,
+            schedule: ScheduleConfig::off(),
         };
         let func = FunctionSpec::build(FunctionKind::Mul(8));
         let mut fast = Mmpu::new(cfg.clone());
@@ -1042,6 +1055,7 @@ mod tests {
             policy: ReliabilityPolicy { ecc_m: Some(8), tmr: TmrMode::Off },
             errors: ErrorModel { lambda_retention: 2e-5, ..ErrorModel::none() },
             seed: 5,
+            schedule: ScheduleConfig::off(),
         };
         let mut mmpu = Mmpu::new(cfg);
         // Write a known pattern, encode.
@@ -1106,6 +1120,7 @@ mod tests {
             policy: ReliabilityPolicy::none(),
             errors: ErrorModel { p_proximity: 0.2, ..ErrorModel::none() },
             seed: 77,
+            schedule: ScheduleConfig::off(),
         };
         let mut mmpu = Mmpu::new(cfg);
         let func = FunctionSpec::build(FunctionKind::Add(8));
@@ -1133,6 +1148,7 @@ mod tests {
             policy: ReliabilityPolicy::none(),
             errors,
             seed: 78,
+            schedule: ScheduleConfig::off(),
         };
         let mut mmpu = Mmpu::new(cfg);
         let func = FunctionSpec::build(FunctionKind::Add(8));
@@ -1154,6 +1170,7 @@ mod tests {
             policy: ReliabilityPolicy::none(),
             errors: ErrorModel::none(),
             seed: 9,
+            schedule: ScheduleConfig::off(),
         };
         let func = FunctionSpec::build(FunctionKind::Add(8));
         let out0 = func.prog.output_cols[0];
@@ -1197,6 +1214,7 @@ mod tests {
             policy: ReliabilityPolicy { ecc_m: None, tmr: TmrMode::SemiParallel },
             errors: ErrorModel::none(),
             seed: 11,
+            schedule: ScheduleConfig::off(),
         };
         let hcfg = HealthConfig {
             wear: WearModel::immortal(),
@@ -1254,6 +1272,7 @@ mod tests {
             policy: ReliabilityPolicy::none(),
             errors: ErrorModel::none(),
             seed: 10,
+            schedule: ScheduleConfig::off(),
         };
         let mut mmpu = Mmpu::new(cfg);
         let func = FunctionSpec::build(FunctionKind::Add(8));

@@ -13,7 +13,7 @@ use anyhow::{bail, ensure, Result};
 
 use crate::errs::Injector;
 use crate::isa::microop::{Dir, LaneRange, MicroOp};
-use crate::isa::plan::CompiledPlan;
+use crate::isa::plan::{CompiledPlan, ScheduleConfig};
 use crate::isa::program::{Program, Step};
 use crate::xbar::crossbar::Crossbar;
 use crate::xbar::gate::Gate;
@@ -97,29 +97,103 @@ impl TmrEngine {
     /// (same state, stats, and injector stream) at a fraction of the
     /// per-execution cost.
     pub fn compile(&self, prog: &Program, rows: usize, cols: usize) -> Result<CompiledTmr> {
+        self.compile_with(prog, rows, cols, ScheduleConfig::off())
+    }
+
+    /// [`TmrEngine::compile`] with §Perf list scheduling: every phase
+    /// plan (copies, zipped cycles, votes) is recompiled through
+    /// [`CompiledPlan::compile_scheduled`] against one column grid
+    /// refined from the strategy's frozen partition configuration —
+    /// refining once at the strategy level keeps all phases runnable
+    /// back to back under a single reconfiguration. Falls back to the
+    /// serial compilation whenever packing (net of the extra reconfig
+    /// cycle the grid may cost) saves nothing, so
+    /// `cycles(scheduled) <= cycles(serial)` holds at the strategy
+    /// level, reconfiguration included.
+    pub fn compile_with(
+        &self,
+        prog: &Program,
+        rows: usize,
+        cols: usize,
+        sched: ScheduleConfig,
+    ) -> Result<CompiledTmr> {
+        let bp = self.blueprint(prog, rows, cols)?;
         let row_parts = Partitions::whole(rows as u32);
         let whole_cols = Partitions::whole(cols as u32);
+        let base_parts = bp.parts.clone().unwrap_or_else(|| whole_cols.clone());
+        let serial_plans = bp
+            .progs
+            .iter()
+            .map(|p| CompiledPlan::compile(p, rows, cols, &base_parts, &row_parts))
+            .collect::<Result<Vec<_>>>()?;
+        let serial = CompiledTmr {
+            mode: self.mode,
+            rows,
+            cols,
+            parts: bp.parts.clone(),
+            plans: serial_plans,
+            sched: ScheduleConfig::off(),
+            output_cols: bp.output_cols.clone(),
+            area_cols: bp.area_cols,
+            items: bp.items,
+        };
+        if !sched.enabled {
+            return Ok(serial);
+        }
+        let refined = if sched.partitions > 1 {
+            base_parts.refined_with_grid(sched.partitions)
+        } else {
+            base_parts
+        };
+        // The grid is already refined; the plan-level scheduler must not
+        // refine again, so it packs over `refined` as-is.
+        let inner = ScheduleConfig { enabled: true, partitions: 0 };
+        let sched_plans = bp
+            .progs
+            .iter()
+            .map(|p| CompiledPlan::compile_scheduled(p, rows, cols, &refined, &row_parts, inner))
+            .collect::<Result<Vec<_>>>()?;
+        let needs_grid = sched_plans.iter().any(|p| p.required_col_partitions().is_some());
+        let sched_parts = if needs_grid { Some(refined) } else { bp.parts.clone() };
+        // Run cost = one reconfiguration cycle (when partitions are set)
+        // plus the plan cycles; compare honestly, reconfig included.
+        let total = |parts: &Option<Partitions>, plans: &[CompiledPlan]| {
+            parts.is_some() as usize + plans.iter().map(|p| p.cycles()).sum::<usize>()
+        };
+        if total(&sched_parts, &sched_plans) >= total(&serial.parts, &serial.plans) {
+            return Ok(serial);
+        }
+        Ok(CompiledTmr {
+            mode: self.mode,
+            rows,
+            cols,
+            parts: sched_parts,
+            plans: sched_plans,
+            sched,
+            output_cols: bp.output_cols,
+            area_cols: bp.area_cols,
+            items: bp.items,
+        })
+    }
+
+    /// Mode-specific synthesis shared by the serial and scheduled
+    /// compilations (§Perf refactor: *what programs run* is split from
+    /// *how their plans are compiled*): the phase programs in execution
+    /// order, the column partitions the strategy configures, and the
+    /// run accounting.
+    fn blueprint(&self, prog: &Program, rows: usize, cols: usize) -> Result<TmrBlueprint> {
         match self.mode {
-            TmrMode::Off => {
-                let parts = single_program_partitions(prog, cols)?;
-                let col_parts = parts.as_ref().unwrap_or(&whole_cols);
-                let plan = CompiledPlan::compile(prog, rows, cols, col_parts, &row_parts)?;
-                Ok(CompiledTmr {
-                    mode: self.mode,
-                    rows,
-                    cols,
-                    parts,
-                    plans: vec![plan],
-                    output_cols: prog.output_cols.clone(),
-                    area_cols: prog.width,
-                    items: rows,
-                })
-            }
+            TmrMode::Off => Ok(TmrBlueprint {
+                progs: vec![prog.clone()],
+                parts: single_program_partitions(prog, cols)?,
+                output_cols: prog.output_cols.clone(),
+                area_cols: prog.width,
+                items: rows,
+            }),
             TmrMode::Serial => {
                 let lay = Self::serial_layout(prog);
                 ensure!((lay.width as usize) <= cols, "crossbar too narrow for serial TMR");
                 let parts = single_program_partitions(prog, cols)?;
-                let col_parts = parts.as_ref().unwrap_or(&whole_cols);
                 let p2 = retarget_outputs(prog, &lay.copy2)?;
                 let p3 = retarget_outputs(prog, &lay.copy3)?;
                 let vote = per_bit_vote_program(
@@ -129,16 +203,9 @@ impl TmrEngine {
                     &lay.voted,
                     lay.scratch,
                 );
-                let plans = [prog, &p2, &p3, &vote]
-                    .into_iter()
-                    .map(|p| CompiledPlan::compile(p, rows, cols, col_parts, &row_parts))
-                    .collect::<Result<Vec<_>>>()?;
-                Ok(CompiledTmr {
-                    mode: self.mode,
-                    rows,
-                    cols,
+                Ok(TmrBlueprint {
+                    progs: vec![prog.clone(), p2, p3, vote],
                     parts,
-                    plans,
                     output_cols: lay.voted,
                     area_cols: lay.width,
                     items: rows,
@@ -183,16 +250,9 @@ impl TmrEngine {
                     &voted,
                     vote_base + o,
                 );
-                let plans = vec![
-                    CompiledPlan::compile(&zipped, rows, cols, &col_parts, &row_parts)?,
-                    CompiledPlan::compile(&vote, rows, cols, &col_parts, &row_parts)?,
-                ];
-                Ok(CompiledTmr {
-                    mode: self.mode,
-                    rows,
-                    cols,
+                Ok(TmrBlueprint {
+                    progs: vec![zipped, vote],
                     parts: Some(col_parts),
-                    plans,
                     output_cols: voted,
                     area_cols: vote_base + o + 1,
                     items: rows,
@@ -203,7 +263,6 @@ impl TmrEngine {
                 let k = (rows - 1) / 3; // items; last row is voting scratch
                 let scratch_row = (rows - 1) as u32;
                 let parts = single_program_partitions(prog, cols)?;
-                let col_parts = parts.as_ref().unwrap_or(&whole_cols);
                 let (lo, hi) = match (prog.output_cols.iter().min(), prog.output_cols.iter().max())
                 {
                     (Some(&lo), Some(&hi)) => (lo, hi),
@@ -220,16 +279,9 @@ impl TmrEngine {
                     lanes,
                     |r| r,
                 );
-                let plans = vec![
-                    CompiledPlan::compile(prog, rows, cols, col_parts, &row_parts)?,
-                    CompiledPlan::compile(&vote, rows, cols, col_parts, &row_parts)?,
-                ];
-                Ok(CompiledTmr {
-                    mode: self.mode,
-                    rows,
-                    cols,
+                Ok(TmrBlueprint {
+                    progs: vec![prog.clone(), vote],
                     parts,
-                    plans,
                     output_cols: prog.output_cols.clone(),
                     area_cols: prog.width,
                     items: k,
@@ -477,6 +529,18 @@ fn single_program_partitions(prog: &Program, cols: usize) -> Result<Option<Parti
     }
 }
 
+/// Mode-specific synthesis output ([`TmrEngine::blueprint`]): the phase
+/// programs and strategy metadata, before any plan compilation.
+struct TmrBlueprint {
+    /// Phase programs, in execution order.
+    progs: Vec<Program>,
+    /// Column partitions the strategy configures before running.
+    parts: Option<Partitions>,
+    output_cols: Vec<u32>,
+    area_cols: u32,
+    items: usize,
+}
+
 /// A TMR strategy compiled for one program on one crossbar shape: the
 /// copies, the partition configuration and the vote schedule are frozen
 /// into plans; execution is reduced to partition setup (when required)
@@ -489,8 +553,12 @@ pub struct CompiledTmr {
     cols: usize,
     /// Column partitions to (re)configure before each execution, exactly
     /// when the legacy path would (`None`: leave the crossbar as-is).
+    /// For a scheduled compilation this is the refined packing grid.
     parts: Option<Partitions>,
     plans: Vec<CompiledPlan>,
+    /// The schedule the plans were compiled under (`off` for serial —
+    /// including scheduled compilations that fell back to serial).
+    sched: ScheduleConfig,
     output_cols: Vec<u32>,
     area_cols: u32,
     items: usize,
@@ -519,6 +587,18 @@ impl CompiledTmr {
     /// Total compiled micro-ops across all phases (diagnostics).
     pub fn num_ops(&self) -> usize {
         self.plans.iter().map(|p| p.num_ops()).sum()
+    }
+
+    /// Total schedule cycles (bundles) across all phases — the packing
+    /// telemetry's denominator: `num_ops / num_bundles` is the measured
+    /// ops-per-cycle of this strategy.
+    pub fn num_bundles(&self) -> usize {
+        self.plans.iter().map(|p| p.cycles()).sum()
+    }
+
+    /// Whether any phase plan was packed by the list scheduler.
+    pub fn is_scheduled(&self) -> bool {
+        self.plans.iter().any(|p| p.is_scheduled())
     }
 
     /// Execute on a crossbar of the compiled shape. Bit-identical to
@@ -572,7 +652,12 @@ impl CompiledTmr {
         let row_parts = Partitions::whole(self.rows as u32);
         let whole_cols = Partitions::whole(self.cols as u32);
         let col_parts = self.parts.as_ref().unwrap_or(&whole_cols);
-        CompiledPlan::compile(&vote, self.rows, self.cols, col_parts, &row_parts)
+        // Same compilation mode as the frozen identity vote: a scheduled
+        // strategy reschedules the remapped vote over its (already
+        // refined) grid, a serial one compiles it serially — the two
+        // vote plans can never diverge structurally from `plans[1]`.
+        let inner = ScheduleConfig { enabled: self.sched.enabled, partitions: 0 };
+        CompiledPlan::compile_scheduled(&vote, self.rows, self.cols, col_parts, &row_parts, inner)
     }
 
     /// Execute with a replacement vote plan (from
@@ -873,6 +958,116 @@ mod tests {
             }
         }
         assert!(ct.num_ops() > 0);
+    }
+
+    #[test]
+    fn scheduled_tmr_matches_serial_all_modes_clean() {
+        // §Perf list scheduling at the strategy level: for every mode,
+        // the scheduled compilation produces bit-identical final state
+        // and wear (switched_bits) in the clean model, and never takes
+        // more cycles than the serial compilation — partition
+        // reconfiguration included.
+        let (prog, lay) = ripple_adder(8);
+        let width = (TmrEngine::serial_layout(&prog).width as usize)
+            .max(4 * prog.width as usize + 40);
+        let pairs: Vec<(u64, u64)> = (0..15).map(|i| (i * 13 % 256, i * 57 % 256)).collect();
+        for mode in [TmrMode::Off, TmrMode::Serial, TmrMode::Parallel, TmrMode::SemiParallel] {
+            let rows = match mode {
+                TmrMode::SemiParallel => 3 * pairs.len() + 1,
+                _ => pairs.len(),
+            };
+            let load = |x: &mut Crossbar| match mode {
+                TmrMode::Parallel => {
+                    for base in TmrEngine::parallel_copy_bases(&prog) {
+                        for (r, &(a, b)) in pairs.iter().enumerate() {
+                            for i in 0..8 {
+                                x.state_mut()
+                                    .set(r, (base + lay.a.col(i)) as usize, (a >> i) & 1 == 1);
+                                x.state_mut()
+                                    .set(r, (base + lay.b.col(i)) as usize, (b >> i) & 1 == 1);
+                            }
+                        }
+                    }
+                }
+                TmrMode::SemiParallel => {
+                    for copy in 0..3 {
+                        for (i, &(a, b)) in pairs.iter().enumerate() {
+                            let r = i + copy * pairs.len();
+                            for bit in 0..8 {
+                                x.state_mut().set(r, lay.a.col(bit) as usize, (a >> bit) & 1 == 1);
+                                x.state_mut().set(r, lay.b.col(bit) as usize, (b >> bit) & 1 == 1);
+                            }
+                        }
+                    }
+                }
+                _ => load_adder_inputs(x, &lay, &pairs),
+            };
+            let engine = TmrEngine::new(mode);
+            let serial = engine.compile(&prog, rows, width).unwrap();
+            let sched =
+                engine.compile_with(&prog, rows, width, ScheduleConfig::packed(16)).unwrap();
+            assert_eq!(sched.num_ops(), serial.num_ops(), "{mode:?}: packing drops no ops");
+            assert!(sched.num_bundles() <= serial.num_bundles(), "{mode:?} bundles");
+            let mut xs = Crossbar::new(rows, width);
+            load(&mut xs);
+            let run_s = serial.run(&mut xs, None).unwrap();
+            let mut xp = Crossbar::new(rows, width);
+            load(&mut xp);
+            let run_p = sched.run(&mut xp, None).unwrap();
+            assert_eq!(xs.state(), xp.state(), "{mode:?} final state");
+            assert_eq!(xs.stats.switched_bits, xp.stats.switched_bits, "{mode:?} wear");
+            assert_eq!(run_s.output_cols, run_p.output_cols, "{mode:?} outputs");
+            assert!(
+                run_p.cycles <= run_s.cycles,
+                "{mode:?}: scheduled {} cycles vs serial {}",
+                run_p.cycles,
+                run_s.cycles
+            );
+            // Outputs stay correct through the scheduled path.
+            for (i, &(a, b)) in pairs.iter().enumerate().take(sched.items()) {
+                let v = read_word(&xp, i, &run_p.output_cols);
+                assert_eq!(v & 0xFF, (a + b) & 0xFF, "{mode:?} item {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn scheduled_semi_remapped_vote_stays_consistent() {
+        // The remapped vote of a *scheduled* semi-parallel strategy goes
+        // through the same compilation mode as its frozen identity vote;
+        // with an identity remap the two runs are bit-identical.
+        let (prog, lay) = ripple_adder(8);
+        let rows = 16;
+        let items = (rows - 1) / 3;
+        let pairs: Vec<(u64, u64)> =
+            (0..items as u64).map(|i| (i * 13 % 256, i * 29 % 256)).collect();
+        let load = |x: &mut Crossbar| {
+            for copy in 0..3 {
+                for (i, &(a, b)) in pairs.iter().enumerate() {
+                    let r = i + copy * items;
+                    for bit in 0..8 {
+                        x.state_mut().set(r, lay.a.col(bit) as usize, (a >> bit) & 1 == 1);
+                        x.state_mut().set(r, lay.b.col(bit) as usize, (b >> bit) & 1 == 1);
+                    }
+                }
+            }
+        };
+        let ct = TmrEngine::new(TmrMode::SemiParallel)
+            .compile_with(&prog, rows, prog.width as usize, ScheduleConfig::packed(8))
+            .unwrap();
+        let vote = ct.compile_semi_remapped_vote(&[]).unwrap();
+        let mut xa = Crossbar::new(rows, prog.width as usize);
+        load(&mut xa);
+        let run_a = ct.run(&mut xa, None).unwrap();
+        let mut xb = Crossbar::new(rows, prog.width as usize);
+        load(&mut xb);
+        let run_b = ct.run_semi_with_vote(&mut xb, None, &vote).unwrap();
+        assert_eq!(xa.state(), xb.state());
+        assert_eq!(run_a.cycles, run_b.cycles);
+        for (i, &(a, b)) in pairs.iter().enumerate() {
+            let v = read_word(&xb, i, &run_b.output_cols);
+            assert_eq!(v & 0xFF, (a + b) & 0xFF, "item {i}");
+        }
     }
 
     #[test]

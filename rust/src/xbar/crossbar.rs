@@ -20,7 +20,7 @@ use anyhow::{ensure, Result};
 
 use crate::errs::Injector;
 use crate::isa::microop::{Dir, MicroOp};
-use crate::isa::plan::{validate_step_concurrency, CompiledPlan, PlanOp};
+use crate::isa::plan::{validate_step_concurrency, CompiledPlan, PlanOp, ScheduleConfig};
 use crate::isa::program::{Program, Step};
 use crate::util::bitmat::BitMatrix;
 use crate::xbar::gate::Gate;
@@ -154,6 +154,28 @@ impl Crossbar {
         CompiledPlan::compile(prog, self.rows(), self.cols(), &self.col_parts, &self.row_parts)
     }
 
+    /// Compile with the §Perf list scheduler: packs independent
+    /// micro-ops into shared cycles over a column grid refined from this
+    /// crossbar's current configuration. A scheduled plan may *require*
+    /// that refined grid — consult `required_col_partitions()` and
+    /// `set_col_partitions` before `run_plan`, so the reconfiguration
+    /// cycle stays visible in the stats. Falls back to the serial plan
+    /// when packing removes no cycles.
+    pub fn compile_plan_scheduled(
+        &self,
+        prog: &Program,
+        sched: ScheduleConfig,
+    ) -> Result<CompiledPlan> {
+        CompiledPlan::compile_scheduled(
+            prog,
+            self.rows(),
+            self.cols(),
+            &self.col_parts,
+            &self.row_parts,
+            sched,
+        )
+    }
+
     /// Execute one cycle (a `Step` of concurrent micro-ops) with
     /// execution-time validation — the legacy per-step path.
     pub fn apply_step(&mut self, step: &Step, mut inj: Option<&mut Injector>) -> Result<()> {
@@ -190,10 +212,13 @@ impl Crossbar {
         Ok(())
     }
 
-    /// Execute a compiled plan: the allocation-free hot loop. The plan
-    /// must have been compiled for this crossbar's shape, and — when it
-    /// contains concurrent steps — for its current partition
-    /// configuration (checked cheaply here).
+    /// Execute a compiled plan: the allocation-free hot loop. Each step
+    /// slice is one *bundle* — a cycle's worth of concurrent ops (a
+    /// serial plan is the 1-op-bundle case; a scheduled plan packs
+    /// several, see `compile_plan_scheduled`). The plan must have been
+    /// compiled for this crossbar's shape, and — when it contains
+    /// concurrent bundles — for its current partition configuration
+    /// (checked cheaply here).
     pub fn run_plan(&mut self, plan: &CompiledPlan, mut inj: Option<&mut Injector>) -> Result<()> {
         ensure!(
             plan.rows() == self.rows() && plan.cols() == self.cols(),
@@ -721,6 +746,86 @@ mod tests {
         let mut w = Crossbar::new(16, 8);
         w.set_col_partitions(Partitions::uniform(8, 4));
         assert!(w.run_plan(&plan, None).is_err());
+    }
+
+    #[test]
+    fn serial_scheduled_plan_matches_legacy_wear_accounting() {
+        // Cycle-accounting parity pin: a schedule that packs nothing (a
+        // pure dependency chain) falls back to the serial plan, and even
+        // under error injection its execution is bit- and stats-identical
+        // to the legacy per-step path. The wear model that
+        // `health`/`lifetime` read (cycles, switched_bits) cannot drift
+        // through the bundled interpreter.
+        let mut b = RowProgramBuilder::no_init("wear");
+        b.gate(Gate::Nor2, &[0, 1], 2);
+        b.gate(Gate::Not, &[2], 3);
+        b.gate(Gate::Min3, &[0, 2, 3], 4);
+        let prog = b.finish();
+        let init = |x: &mut Crossbar| {
+            for r in 0..96 {
+                x.state_mut().set(r, 0, r % 3 == 0);
+                x.state_mut().set(r, 1, r % 5 == 0);
+            }
+        };
+        let mut xa = Crossbar::new(96, 8);
+        init(&mut xa);
+        let plan = xa.compile_plan_scheduled(&prog, ScheduleConfig::packed(4)).unwrap();
+        assert!(!plan.is_scheduled(), "a RAW chain packs nothing");
+        let mut ia = Injector::new(ErrorModel::direct_only(0.05), 99, 0);
+        xa.run_plan(&plan, Some(&mut ia)).unwrap();
+        let mut xb = Crossbar::new(96, 8);
+        init(&mut xb);
+        let mut ib = Injector::new(ErrorModel::direct_only(0.05), 99, 0);
+        xb.run_program_uncompiled(&prog, Some(&mut ib)).unwrap();
+        assert_eq!(xa.state(), xb.state());
+        assert_eq!(xa.stats, xb.stats);
+        assert_eq!(ia.counters.gate_flips, ib.counters.gate_flips);
+    }
+
+    #[test]
+    fn scheduled_plan_matches_reference_and_saves_cycles() {
+        // Independent gates on disjoint columns: the scheduler packs
+        // them. In the clean model the packed execution is bit-identical
+        // to the program-order reference — same state, switches, energy —
+        // and only the cycle count shrinks (even after paying the
+        // partition-reconfiguration cycle).
+        let mut b = RowProgramBuilder::no_init("pack");
+        b.gate(Gate::Not, &[0], 1);
+        b.gate(Gate::Not, &[4], 5);
+        b.gate(Gate::Nor2, &[8, 9], 10);
+        b.gate(Gate::Nor2, &[1, 5], 2);
+        let prog = b.finish();
+        let init = |x: &mut Crossbar| {
+            for r in 0..64 {
+                x.state_mut().set(r, 0, r % 2 == 0);
+                x.state_mut().set(r, 4, r % 3 == 0);
+                x.state_mut().set(r, 8, r % 5 == 0);
+                x.state_mut().set(r, 9, r % 7 == 0);
+            }
+        };
+        let mut xa = Crossbar::new(64, 16);
+        init(&mut xa);
+        let plan = xa.compile_plan_scheduled(&prog, ScheduleConfig::packed(4)).unwrap();
+        assert!(plan.is_scheduled());
+        assert_eq!(plan.cycles(), 2, "ops 0..3 pack, op 3 depends on both NOTs");
+        if let Some(parts) = plan.required_col_partitions() {
+            xa.set_col_partitions(parts.clone());
+        }
+        xa.run_plan(&plan, None).unwrap();
+        let mut xb = Crossbar::new(64, 16);
+        init(&mut xb);
+        xb.run_program_uncompiled(&prog, None).unwrap();
+        assert_eq!(xa.state(), xb.state());
+        assert_eq!(xa.stats.switched_bits, xb.stats.switched_bits);
+        assert_eq!(xa.stats.logic_ops, xb.stats.logic_ops);
+        assert_eq!(xa.stats.gate_instances, xb.stats.gate_instances);
+        assert!((xa.stats.energy_pj - xb.stats.energy_pj).abs() < 1e-9);
+        assert!(
+            xa.stats.cycles < xb.stats.cycles,
+            "reconfig + packed cycles ({}) must beat serial ({})",
+            xa.stats.cycles,
+            xb.stats.cycles
+        );
     }
 
     #[test]

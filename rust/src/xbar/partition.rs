@@ -6,8 +6,10 @@
 //! start lines; reconfiguration is dynamic (FELIX-style) and costs one
 //! cycle (tracked by the crossbar stats).
 
+use anyhow::{ensure, Result};
+
 /// A partition configuration over `lines` lines (columns for in-row ops).
-#[derive(Clone, Debug, PartialEq, Eq)]
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
 pub struct Partitions {
     /// Sorted segment start indices; always begins with 0.
     starts: Vec<u32>,
@@ -23,17 +25,67 @@ impl Partitions {
     /// Segments of fixed `width` (the MultPIM configuration: one
     /// partition per bit position).
     pub fn uniform(lines: u32, width: u32) -> Self {
-        assert!(width > 0 && width <= lines);
+        Self::try_uniform(lines, width).expect("invalid uniform partitioning")
+    }
+
+    /// Fallible [`Partitions::uniform`]: rejects a zero-width segment
+    /// grid and a grid wider than the line count with explicit errors.
+    pub fn try_uniform(lines: u32, width: u32) -> Result<Self> {
+        ensure!(width > 0, "partition width must be nonzero");
+        ensure!(
+            width <= lines,
+            "partition width {width} exceeds {lines} lines"
+        );
         let starts = (0..lines).step_by(width as usize).collect();
-        Self { starts, lines }
+        Ok(Self { starts, lines })
     }
 
     /// Arbitrary boundaries. `starts` must be sorted, unique, begin at 0.
     pub fn new(lines: u32, starts: Vec<u32>) -> Self {
-        assert!(!starts.is_empty() && starts[0] == 0, "first segment must start at 0");
-        assert!(starts.windows(2).all(|w| w[0] < w[1]), "starts must be strictly increasing");
-        assert!(*starts.last().unwrap() < lines, "start beyond line count");
-        Self { starts, lines }
+        Self::try_new(lines, starts).expect("invalid partition boundaries")
+    }
+
+    /// Fallible [`Partitions::new`]: every malformed segment list — empty,
+    /// not starting at 0 (non-covering), zero-width or out-of-order
+    /// (duplicate/decreasing starts, i.e. overlapping segments), or a
+    /// start past the line count — is an explicit `Err`, so callers
+    /// building configurations from untrusted data (schedulers, the
+    /// wire) can reject instead of aborting.
+    pub fn try_new(lines: u32, starts: Vec<u32>) -> Result<Self> {
+        ensure!(lines > 0, "partitions need at least one line");
+        ensure!(!starts.is_empty(), "partition start list is empty");
+        ensure!(
+            starts[0] == 0,
+            "first segment must start at 0 (got {}): segments would not cover the array",
+            starts[0]
+        );
+        for w in starts.windows(2) {
+            ensure!(
+                w[0] < w[1],
+                "segment starts must be strictly increasing ({} then {}): \
+                 zero-width or overlapping segment",
+                w[0],
+                w[1]
+            );
+        }
+        let last = *starts.last().unwrap();
+        ensure!(last < lines, "segment start {last} beyond {lines} lines");
+        Ok(Self { starts, lines })
+    }
+
+    /// This configuration refined by a uniform grid of (at most)
+    /// `segments` equal segments: the union of both boundary sets. Every
+    /// existing boundary is preserved, so any op group that was legal
+    /// under `self` stays legal — disjoint coarse partition ranges map
+    /// to disjoint refined ranges (§Perf list scheduling builds its
+    /// packing configuration this way).
+    pub fn refined_with_grid(&self, segments: u32) -> Partitions {
+        let width = (self.lines / segments.max(1)).max(1);
+        let mut starts = self.starts.clone();
+        starts.extend((0..self.lines).step_by(width as usize));
+        starts.sort_unstable();
+        starts.dedup();
+        Self { starts, lines: self.lines }
     }
 
     pub fn count(&self) -> usize {
@@ -70,6 +122,13 @@ impl Partitions {
         } else {
             None
         }
+    }
+
+    /// Alias of [`Partitions::containing`] under the scheduler's
+    /// vocabulary: whether a driver span stays within one electrically
+    /// isolated segment.
+    pub fn span_within(&self, lo: u32, hi: u32) -> Option<usize> {
+        self.containing(lo, hi)
     }
 }
 
@@ -117,5 +176,78 @@ mod tests {
     #[should_panic]
     fn line_oob_panics() {
         Partitions::whole(10).partition_of(10);
+    }
+
+    #[test]
+    fn try_new_rejects_malformed_segment_lists() {
+        // Empty list: nothing covers the array.
+        assert!(Partitions::try_new(10, vec![]).is_err());
+        // Non-covering: the prefix [0, first) belongs to no segment.
+        assert!(Partitions::try_new(10, vec![1, 5]).is_err());
+        // Zero-width segment (duplicate start).
+        assert!(Partitions::try_new(10, vec![0, 4, 4]).is_err());
+        // Overlapping (decreasing) starts.
+        assert!(Partitions::try_new(10, vec![0, 6, 3]).is_err());
+        // Start at / beyond the line count.
+        assert!(Partitions::try_new(10, vec![0, 10]).is_err());
+        assert!(Partitions::try_new(10, vec![0, 11]).is_err());
+        // Degenerate array.
+        assert!(Partitions::try_new(0, vec![0]).is_err());
+        // The well-formed case still round-trips.
+        let p = Partitions::try_new(10, vec![0, 4, 9]).unwrap();
+        assert_eq!(p.count(), 3);
+        assert_eq!(p.bounds(2), (9, 10));
+    }
+
+    #[test]
+    fn try_uniform_rejects_degenerate_widths() {
+        assert!(Partitions::try_uniform(16, 0).is_err());
+        assert!(Partitions::try_uniform(16, 17).is_err());
+        assert_eq!(Partitions::try_uniform(16, 16).unwrap().count(), 1);
+        // Non-dividing width: a short tail segment, still covering.
+        let p = Partitions::try_uniform(10, 4).unwrap();
+        assert_eq!(p.count(), 3);
+        assert_eq!(p.bounds(2), (8, 10));
+    }
+
+    #[test]
+    fn partition_of_and_span_within_pin_boundaries() {
+        let p = Partitions::new(100, vec![0, 10, 50]);
+        // partition_of at every segment's first and last line.
+        assert_eq!(p.partition_of(0), 0);
+        assert_eq!(p.partition_of(9), 0);
+        assert_eq!(p.partition_of(10), 1);
+        assert_eq!(p.partition_of(49), 1);
+        assert_eq!(p.partition_of(50), 2);
+        assert_eq!(p.partition_of(99), 2);
+        // span_within: full-segment spans, single lines at boundaries,
+        // and one-past spans that cross.
+        assert_eq!(p.span_within(0, 9), Some(0));
+        assert_eq!(p.span_within(10, 49), Some(1));
+        assert_eq!(p.span_within(50, 99), Some(2));
+        assert_eq!(p.span_within(9, 9), Some(0));
+        assert_eq!(p.span_within(10, 10), Some(1));
+        assert_eq!(p.span_within(9, 10), None, "crosses the 10 boundary");
+        assert_eq!(p.span_within(49, 50), None, "crosses the 50 boundary");
+        assert_eq!(p.span_within(0, 99), None, "spans every segment");
+    }
+
+    #[test]
+    fn grid_refinement_preserves_existing_boundaries() {
+        let base = Partitions::new(64, vec![0, 10, 40]);
+        let fine = base.refined_with_grid(8); // width 8 grid
+        // Every base boundary survives, plus the grid lines.
+        for b in [0u32, 10, 40] {
+            assert_eq!(fine.bounds(fine.partition_of(b)).0, b, "boundary {b} kept");
+        }
+        assert_eq!(fine.lines(), 64);
+        assert!(fine.count() >= base.count());
+        // A span legal under base that stays inside one fine segment is
+        // still legal; spans disjoint under base remain disjoint (their
+        // refined partition ranges cannot merge).
+        assert_eq!(fine.span_within(40, 47), Some(fine.partition_of(40)));
+        // Refinement with more segments than lines degrades to width 1.
+        let unit = base.refined_with_grid(1000);
+        assert_eq!(unit.count(), 64);
     }
 }

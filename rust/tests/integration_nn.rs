@@ -31,6 +31,7 @@ fn mmpu_inference_clean_matches_reference_classes() {
         policy: ReliabilityPolicy::none(),
         errors: ErrorModel::none(),
         seed: 3,
+        ..Default::default()
     });
     let mmpu_logits = net.forward_mmpu(&mut mmpu, &eval.x, eval.n).unwrap();
     let ref_logits = net.forward_f32(&eval.x, eval.n);
@@ -62,6 +63,7 @@ fn gate_errors_degrade_then_tmr_recovers() {
             policy: ReliabilityPolicy { ecc_m: None, tmr },
             errors: ErrorModel::direct_only(p),
             seed,
+            ..Default::default()
         });
         let logits = net.forward_mmpu(&mut mmpu, &eval.x, eval.n).unwrap();
         net.accuracy(&logits, &eval.labels)

@@ -83,6 +83,8 @@ fn gen_snapshot(g: &mut Gen) -> MetricsSnapshot {
         hb_pongs: g.u64(),
         hb_timeouts: g.u64(),
         auth_rejects: g.u64(),
+        plan_ops: g.u64(),
+        plan_bundles: g.u64(),
     }
 }
 
@@ -243,18 +245,24 @@ fn version_mismatch_is_rejected() {
 }
 
 #[test]
-fn v1_through_v5_frames_decode_compatibly_under_v6() {
-    // v4 snapshots predate the observability counters (strip the
-    // trailing 120 bytes: uptime + histogram honesty + per-kind
-    // stats), v3 ones also the auth-reject counter (strip 128), v2
-    // ones also the heartbeat counters (strip 152), v1 ones also the
-    // fleet membership counters (strip 168): relabel the version and
-    // the decode must succeed with the missing fields defaulted to
-    // zero.
+fn v1_through_v6_frames_decode_compatibly_under_v7() {
+    // v6 snapshots predate the packing counters (strip the trailing
+    // 16 bytes), v4 ones also the observability counters (uptime +
+    // histogram honesty + per-kind stats: strip 136), v3 ones also
+    // the auth-reject counter (strip 144), v2 ones also the heartbeat
+    // counters (strip 168), v1 ones also the fleet membership
+    // counters (strip 184): relabel the version and the decode must
+    // succeed with the missing fields defaulted to zero.
     Cases::new(256).run(|g| {
         let mut snap = gen_snapshot(g);
+        let mut v6 = Msg::MetricsReply(snap.clone()).to_bytes();
+        v6.truncate(v6.len() - 16);
+        v6[0] = 6;
+        snap.plan_ops = 0;
+        snap.plan_bundles = 0;
+        assert_eq!(Msg::from_bytes(&v6).unwrap(), Msg::MetricsReply(snap.clone()));
         let mut v4 = Msg::MetricsReply(snap.clone()).to_bytes();
-        v4.truncate(v4.len() - 120);
+        v4.truncate(v4.len() - 136);
         v4[0] = 4;
         snap.uptime_ns = 0;
         snap.lat_overflow = 0;
@@ -262,19 +270,19 @@ fn v1_through_v5_frames_decode_compatibly_under_v6() {
         snap.kind_stats = [KindStats::default(); KIND_FAMILIES];
         assert_eq!(Msg::from_bytes(&v4).unwrap(), Msg::MetricsReply(snap.clone()));
         let mut v3 = Msg::MetricsReply(snap.clone()).to_bytes();
-        v3.truncate(v3.len() - 128);
+        v3.truncate(v3.len() - 144);
         v3[0] = 3;
         snap.auth_rejects = 0;
         assert_eq!(Msg::from_bytes(&v3).unwrap(), Msg::MetricsReply(snap.clone()));
         let mut v2 = Msg::MetricsReply(snap.clone()).to_bytes();
-        v2.truncate(v2.len() - 152);
+        v2.truncate(v2.len() - 168);
         v2[0] = 2;
         snap.hb_pings = 0;
         snap.hb_pongs = 0;
         snap.hb_timeouts = 0;
         assert_eq!(Msg::from_bytes(&v2).unwrap(), Msg::MetricsReply(snap.clone()));
         let mut v1 = Msg::MetricsReply(snap.clone()).to_bytes();
-        v1.truncate(v1.len() - 168);
+        v1.truncate(v1.len() - 184);
         v1[0] = 1;
         snap.shards_total = 0;
         snap.shards_down = 0;

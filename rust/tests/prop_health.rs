@@ -72,6 +72,7 @@ fn prop_spare_row_remap_is_data_preserving() {
             policy: ReliabilityPolicy::none(),
             errors: ErrorModel::none(),
             seed: g.u64(),
+            ..Default::default()
         };
         let mut mmpu = Mmpu::new(cfg);
         mmpu.enable_health(immortal_cfg(spares, rows));

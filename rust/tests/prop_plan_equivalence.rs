@@ -10,6 +10,7 @@ use remus::arith::multiplier::{multpim_program, naive_mult_program};
 use remus::errs::{ErrorModel, Injector};
 use remus::isa::microop::{Dir, LaneRange, MicroOp};
 use remus::isa::program::Program;
+use remus::isa::ScheduleConfig;
 use remus::mmpu::{FunctionKind, FunctionSpec, Mmpu, MmpuConfig, ReliabilityPolicy};
 use remus::testutil::prop::{Cases, Gen};
 use remus::tmr::{TmrEngine, TmrMode};
@@ -171,6 +172,7 @@ fn mmpu_config(func: &FunctionSpec, policy: ReliabilityPolicy, items: usize, see
         policy,
         errors: noisy_model(),
         seed,
+        ..Default::default()
     }
 }
 
@@ -239,6 +241,143 @@ fn prop_exec_vector_clean_results_correct() {
         for i in 0..items {
             assert_eq!(r.values[i], a[i] * b[i], "{tmr:?} item {i}");
         }
+    });
+}
+
+/// A random but valid column partition configuration over `cols`.
+fn random_col_partitions(g: &mut Gen, cols: usize) -> Partitions {
+    let mut starts = vec![0u32];
+    let mut at = 0usize;
+    loop {
+        at += g.usize_in(1..=cols.div_ceil(3));
+        if at >= cols {
+            break;
+        }
+        starts.push(at as u32);
+    }
+    Partitions::new(cols as u32, starts)
+}
+
+#[test]
+fn prop_scheduled_plan_matches_reference_random_programs() {
+    // §Perf list scheduling, the clean-model contract: for any program,
+    // any base partition configuration and any schedule, the bundled
+    // plan reaches the exact program-order final state with the exact
+    // program-order wear accounting — only cycles may shrink — and the
+    // scheduler is deterministic.
+    Cases::new(40).run(|g| {
+        let rows = g.usize_in(2..=150);
+        let cols = g.usize_in(2..=150);
+        let prog = random_program(g, rows, cols, g.usize_in(1..=30));
+        let parts = if g.bool() { Some(random_col_partitions(g, cols)) } else { None };
+        let sched = ScheduleConfig::packed(*g.pick(&[0u32, 1, 2, 4, 8, 16]));
+        let mut rng = Pcg64::new(g.u64(), 7);
+        let init = remus::util::bitmat::BitMatrix::from_fn(rows, cols, |_, _| rng.bernoulli(0.5));
+
+        // Program-order reference: uncompiled, clean.
+        let mut reference = Crossbar::new(rows, cols);
+        *reference.state_mut() = init.clone();
+        if let Some(p) = &parts {
+            reference.set_col_partitions(p.clone());
+        }
+        reference.run_program_uncompiled(&prog, None).unwrap();
+
+        // Compile both plans against the same base configuration.
+        let mut base = Crossbar::new(rows, cols);
+        if let Some(p) = &parts {
+            base.set_col_partitions(p.clone());
+        }
+        let serial = base.compile_plan(&prog).unwrap();
+        let plan = base.compile_plan_scheduled(&prog, sched).unwrap();
+        assert!(
+            plan.cycles() <= serial.cycles(),
+            "scheduling must never add cycles: {} > {}",
+            plan.cycles(),
+            serial.cycles()
+        );
+        assert_eq!(plan.num_ops(), serial.num_ops(), "packing drops no ops");
+
+        // Deterministic: an identical compilation is an identical plan.
+        let again = base.compile_plan_scheduled(&prog, sched).unwrap();
+        assert_eq!(plan.cycles(), again.cycles(), "cycle count must be deterministic");
+        assert_eq!(plan.bundle_sizes(), again.bundle_sizes(), "bundles must be deterministic");
+        assert_eq!(
+            plan.required_col_partitions(),
+            again.required_col_partitions(),
+            "required grid must be deterministic"
+        );
+
+        // Execute the bundled plan and compare bit-for-bit.
+        let mut run = Crossbar::new(rows, cols);
+        *run.state_mut() = init.clone();
+        match plan.required_col_partitions() {
+            Some(p) => run.set_col_partitions(p.clone()),
+            None => {
+                if let Some(p) = &parts {
+                    run.set_col_partitions(p.clone());
+                }
+            }
+        }
+        run.run_plan(&plan, None).unwrap();
+        assert_eq!(reference.state(), run.state(), "scheduled state diverged");
+        let (a, b) = (reference.stats, run.stats);
+        assert_eq!(a.switched_bits, b.switched_bits, "wear model drifted");
+        assert_eq!(a.logic_ops, b.logic_ops);
+        assert_eq!(a.init_ops, b.init_ops);
+        assert_eq!(a.gate_instances, b.gate_instances);
+        assert!((a.energy_pj - b.energy_pj).abs() < 1e-6, "{} vs {}", a.energy_pj, b.energy_pj);
+        // Cycle accounting: exactly one cycle per bundle (reconfigs
+        // are tracked separately and stay visible).
+        assert_eq!(b.cycles - b.reconfigs, plan.cycles() as u64);
+    });
+}
+
+#[test]
+fn prop_mmpu_scheduled_matches_serial_every_kind_and_mode_clean() {
+    // The full controller path under a schedule: for every FunctionKind
+    // family and TmrMode, scheduled plans return the same values, final
+    // state and wear as the serial reference — in no more compute
+    // cycles — and the arithmetic stays correct.
+    let kinds =
+        [FunctionKind::Add(8), FunctionKind::Mul(8), FunctionKind::MulNaive(4), FunctionKind::Xor(8)];
+    let modes = [TmrMode::Off, TmrMode::Serial, TmrMode::Parallel, TmrMode::SemiParallel];
+    Cases::new(16).run(|g| {
+        let kind = *g.pick(&kinds);
+        let tmr = *g.pick(&modes);
+        let items = g.usize_in(1..=16);
+        let func = FunctionSpec::build(kind);
+        let mut cfg = mmpu_config(&func, ReliabilityPolicy { ecc_m: None, tmr }, items, g.u64());
+        cfg.errors = ErrorModel::none();
+        let mask = (1u64 << kind.operand_bits()) - 1;
+        let a: Vec<u64> = (0..items).map(|_| g.u64() & mask).collect();
+        let b: Vec<u64> = (0..items).map(|_| g.u64() & mask).collect();
+
+        let mut serial = Mmpu::new(cfg.clone());
+        let rs = serial.exec_vector(0, &func, &a, &b).unwrap();
+        let mut sched_cfg = cfg;
+        sched_cfg.schedule = ScheduleConfig::packed(*g.pick(&[2u32, 4, 8, 16]));
+        let mut sched = Mmpu::new(sched_cfg);
+        let rf = sched.exec_vector(0, &func, &a, &b).unwrap();
+
+        assert_eq!(rf.values, rs.values, "{kind:?} {tmr:?} values");
+        for i in 0..items {
+            assert_eq!(rf.values[i], kind.reference(a[i], b[i]), "{kind:?} {tmr:?} item {i}");
+        }
+        assert!(
+            rf.compute_cycles <= rs.compute_cycles,
+            "{kind:?} {tmr:?}: scheduled {} > serial {}",
+            rf.compute_cycles,
+            rs.compute_cycles
+        );
+        assert_eq!(
+            sched.crossbar(0).state(),
+            serial.crossbar(0).state(),
+            "{kind:?} {tmr:?} state"
+        );
+        let (x, y) = (serial.stats(0), sched.stats(0));
+        assert_eq!(x.switched_bits, y.switched_bits, "{kind:?} {tmr:?} wear");
+        assert_eq!(x.logic_ops, y.logic_ops, "{kind:?} {tmr:?} logic ops");
+        assert_eq!(x.gate_instances, y.gate_instances, "{kind:?} {tmr:?} gate instances");
     });
 }
 
