@@ -52,7 +52,7 @@
 //! [`FRAME_DEADLINE`], which is what defeats slowloris-style tricklers
 //! on both fabric ports.
 
-use crate::fabric::wire::{Msg, MAX_FRAME};
+use crate::fabric::wire::{Msg, FRAME_HEADER_LEN, MAX_FRAME};
 use anyhow::{bail, Context, Result};
 use std::io::{ErrorKind, Read, Write};
 use std::net::TcpStream;
@@ -721,22 +721,116 @@ impl FrameReader {
             Some(p) => p,
             None => return Ok(None),
         };
-        let plain = match &mut self.seal {
-            Some(seal) => seal.open(&payload)?,
-            None => {
-                match payload[0] {
-                    SEALED_MARKER => bail!(
-                        "received a sealed frame on a plaintext endpoint (peer uses --psk-file, we do not)"
-                    ),
-                    HS_MAGIC => bail!(
-                        "received a PSK handshake on a plaintext endpoint (peer uses --psk-file, we do not)"
-                    ),
-                    _ => payload,
-                }
-            }
-        };
+        let plain = decode_payload(&mut self.seal, payload)?;
         Ok(Some(Msg::from_bytes(&plain)?))
     }
+
+    /// Take the reader apart for a nonblocking transport: the raw stream
+    /// plus the receive seal, preserving the seal's frame counter so an
+    /// established session can move onto a reactor mid-stream.
+    pub fn into_parts(self) -> (TcpStream, Option<Seal>) {
+        (self.stream, self.seal)
+    }
+}
+
+/// Unseal (or plaintext-validate) one frame payload — the single
+/// decode path shared by the blocking [`FrameReader`] and the
+/// incremental [`FrameDecoder`], so both transports reject sealed,
+/// handshake, and tampered frames with identical semantics.
+fn decode_payload(seal: &mut Option<Seal>, payload: Vec<u8>) -> Result<Vec<u8>> {
+    match seal {
+        Some(seal) => seal.open(&payload),
+        None => match payload[0] {
+            SEALED_MARKER => bail!(
+                "received a sealed frame on a plaintext endpoint (peer uses --psk-file, we do not)"
+            ),
+            HS_MAGIC => bail!(
+                "received a PSK handshake on a plaintext endpoint (peer uses --psk-file, we do not)"
+            ),
+            _ => Ok(payload),
+        },
+    }
+}
+
+/// Incremental frame decoder for nonblocking sockets: bytes go in as
+/// they arrive ([`FrameDecoder::push`]), complete messages come out
+/// ([`FrameDecoder::try_next`]). Length validation, seal opening (with
+/// the same implicit counter discipline), and plaintext marker
+/// rejection are byte-for-byte identical to [`FrameReader::recv`] —
+/// only the blocking strategy differs. The caller owns the slowloris
+/// deadline: [`FrameDecoder::mid_frame`] says when a partial frame is
+/// buffered and [`FRAME_DEADLINE`] should be armed.
+pub struct FrameDecoder {
+    seal: Option<Seal>,
+    buf: Vec<u8>,
+}
+
+impl FrameDecoder {
+    pub fn new(seal: Option<Seal>) -> Self {
+        Self { seal, buf: Vec::new() }
+    }
+
+    pub fn is_sealed(&self) -> bool {
+        self.seal.is_some()
+    }
+
+    /// Feed bytes read off the socket.
+    pub fn push(&mut self, data: &[u8]) {
+        self.buf.extend_from_slice(data);
+    }
+
+    /// True while a partially received frame sits in the buffer — the
+    /// transport should be holding a [`FRAME_DEADLINE`] against the peer.
+    pub fn mid_frame(&self) -> bool {
+        !self.buf.is_empty()
+    }
+
+    /// Bytes currently buffered but not yet decoded.
+    pub fn buffered(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// Decode the next complete message, or `Ok(None)` if more bytes are
+    /// needed. Errors are terminal for the connection, exactly as a
+    /// [`FrameReader::recv`] error would be.
+    pub fn try_next(&mut self) -> Result<Option<Msg>> {
+        if self.buf.len() < FRAME_HEADER_LEN {
+            return Ok(None);
+        }
+        let len =
+            u32::from_le_bytes(self.buf[..FRAME_HEADER_LEN].try_into().unwrap()) as usize;
+        if len < 2 || len > MAX_FRAME + SEAL_OVERHEAD {
+            bail!("implausible frame length {len}");
+        }
+        if self.buf.len() < FRAME_HEADER_LEN + len {
+            return Ok(None);
+        }
+        let payload: Vec<u8> = self.buf[FRAME_HEADER_LEN..FRAME_HEADER_LEN + len].to_vec();
+        self.buf.drain(..FRAME_HEADER_LEN + len);
+        let plain = decode_payload(&mut self.seal, payload)?;
+        Ok(Some(Msg::from_bytes(&plain)?))
+    }
+}
+
+/// Encode one message into its full wire bytes (`[len u32 LE][payload]`),
+/// sealing when a seal is configured. Sealing happens at encode time so
+/// the implicit frame counters advance in *enqueue* order even when the
+/// actual socket writes are coalesced and batched later — the bytes a
+/// reactor queues are exactly the bytes [`FrameWriter::send`] would have
+/// written.
+pub fn encode_frame(msg: &Msg, seal: &mut Option<Seal>) -> Result<Vec<u8>> {
+    let payload = msg.to_bytes();
+    let payload = match seal {
+        Some(s) => s.seal(&payload),
+        None => payload,
+    };
+    if payload.len() > MAX_FRAME + SEAL_OVERHEAD {
+        bail!("frame too large: {} bytes", payload.len());
+    }
+    let mut out = Vec::with_capacity(4 + payload.len());
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(&payload);
+    Ok(out)
 }
 
 /// Writes wire messages onto a stream, sealing when configured.
@@ -767,6 +861,14 @@ impl FrameWriter {
             }
             None => write_frame(&mut self.stream, &payload),
         }
+    }
+
+    /// Take the writer apart for a nonblocking transport: the raw
+    /// stream plus the transmit seal, preserving the seal's frame
+    /// counter so an established session can move onto a reactor
+    /// mid-stream (the counterpart of [`FrameReader::into_parts`]).
+    pub fn into_parts(self) -> (TcpStream, Option<Seal>) {
+        (self.stream, self.seal)
     }
 }
 
@@ -1033,5 +1135,78 @@ mod tests {
             elapsed < FRAME_DEADLINE + Duration::from_secs(2),
             "reader must give up near the deadline, took {elapsed:?}"
         );
+    }
+
+    #[test]
+    fn incremental_decoder_matches_blocking_framing() {
+        let msgs = [
+            Msg::HealthReq,
+            Msg::Ping { nonce: 42 },
+            Msg::Submit {
+                id: 7,
+                kind: crate::mmpu::FunctionKind::Add(8),
+                a: 123,
+                b: 45,
+                trace: 0,
+            },
+            Msg::Shutdown,
+        ];
+        // Sealed: encode with the tx seal, trickle the bytes one at a
+        // time through a decoder holding the rx seal.
+        let psk = Psk::from_material(b"k").unwrap();
+        let keys = derive_keys(&psk, &[5u8; 32], &[6u8; 32]);
+        let mut tx = Some(keys.c2s);
+        let mut dec = FrameDecoder::new(Some(derive_keys(&psk, &[5u8; 32], &[6u8; 32]).c2s));
+        let mut wire = Vec::new();
+        for m in &msgs {
+            wire.extend_from_slice(&encode_frame(m, &mut tx).unwrap());
+        }
+        let mut got = Vec::new();
+        for b in &wire {
+            dec.push(std::slice::from_ref(b));
+            while let Some(m) = dec.try_next().unwrap() {
+                got.push(m);
+            }
+        }
+        assert_eq!(got, msgs);
+        assert!(!dec.mid_frame(), "no partial frame left over");
+
+        // Plaintext: same trickle, no seal.
+        let mut dec = FrameDecoder::new(None);
+        for m in &msgs {
+            dec.push(&encode_frame(m, &mut None).unwrap());
+        }
+        let mut got = Vec::new();
+        while let Some(m) = dec.try_next().unwrap() {
+            got.push(m);
+        }
+        assert_eq!(got, msgs);
+    }
+
+    #[test]
+    fn incremental_decoder_rejects_bad_frames_like_the_reader() {
+        // Implausible length.
+        let mut dec = FrameDecoder::new(None);
+        dec.push(&(MAX_FRAME as u32 + 64).to_le_bytes());
+        dec.push(&[0u8; 8]);
+        let err = dec.try_next().unwrap_err().to_string();
+        assert!(err.contains("implausible frame length"), "got: {err}");
+
+        // Sealed marker on a plaintext decoder.
+        let mut dec = FrameDecoder::new(None);
+        dec.push(&4u32.to_le_bytes());
+        dec.push(&[SEALED_MARKER, 0, 0, 0]);
+        let err = dec.try_next().unwrap_err().to_string();
+        assert!(err.contains("plaintext endpoint"), "got: {err}");
+
+        // Tampered sealed frame fails the MAC exactly as Seal::open does.
+        let psk = Psk::from_material(b"k").unwrap();
+        let mut tx = Some(derive_keys(&psk, &[7u8; 32], &[8u8; 32]).c2s);
+        let mut dec = FrameDecoder::new(Some(derive_keys(&psk, &[7u8; 32], &[8u8; 32]).c2s));
+        let mut frame = encode_frame(&Msg::HealthReq, &mut tx).unwrap();
+        let last = frame.len() - 1;
+        frame[last] ^= 1;
+        dec.push(&frame);
+        assert!(dec.try_next().is_err(), "tampered frame must fail");
     }
 }

@@ -25,13 +25,14 @@
 //! `BENCH_loadgen.json` (archived by CI next to the other bench
 //! artifacts; see EXPERIMENTS.md §Scale).
 
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, TrySendError};
 use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
 use crate::coordinator::metrics::{log2_bin_us, log2_percentile_us};
-use crate::coordinator::{RequestResult, Submitter};
+use crate::coordinator::{MetricsSnapshot, RequestResult, Submitter};
 use crate::fabric::auth::{derive_keys, Psk};
 use crate::fabric::wire::Msg;
 use crate::mmpu::FunctionKind;
@@ -302,6 +303,81 @@ pub fn sweep(sub: &dyn Submitter, base: &LoadgenConfig, qps_points: &[f64]) -> S
         .collect();
     let knee_qps = knee(&points);
     SweepReport { points, knee_qps }
+}
+
+/// Round-robin fan-out over N independent connections to one fleet:
+/// each submit goes to the next inner [`Submitter`] in turn. `remus
+/// loadgen --connections` models N concurrent clients with one
+/// [`crate::fabric::Router`] per slot, so the serving side carries N
+/// real data connections (its per-connection threads or reactor
+/// registrations), not one multiplexed session — the connection count
+/// is what the §Scale knee-vs-connections sweep varies.
+pub struct MultiConn<S: Submitter> {
+    subs: Vec<S>,
+    next: AtomicUsize,
+}
+
+impl<S: Submitter> MultiConn<S> {
+    /// Fan out over `subs` (at least one).
+    pub fn new(subs: Vec<S>) -> Self {
+        assert!(!subs.is_empty(), "MultiConn needs at least one connection");
+        Self { subs, next: AtomicUsize::new(0) }
+    }
+
+    /// The number of fanned-out connections.
+    pub fn connections(&self) -> usize {
+        self.subs.len()
+    }
+
+    /// Take the inner submitters back (to shut them down).
+    pub fn into_inner(self) -> Vec<S> {
+        self.subs
+    }
+}
+
+impl<S: Submitter> Submitter for MultiConn<S> {
+    fn submit(&self, kind: FunctionKind, a: u64, b: u64) -> Receiver<RequestResult> {
+        let i = self.next.fetch_add(1, Ordering::Relaxed) % self.subs.len();
+        self.subs[i].submit(kind, a, b)
+    }
+
+    /// The fleet view through the first connection — every connection
+    /// reaches the same shards, so any of them is representative.
+    fn metrics(&self) -> MetricsSnapshot {
+        self.subs[0].metrics()
+    }
+
+    fn is_serving(&self) -> bool {
+        self.subs.iter().any(|s| s.is_serving())
+    }
+}
+
+/// One connection count of a knee-vs-connections sweep: the full QPS
+/// sweep that was run at this fan-out, and its knee.
+#[derive(Clone, Debug)]
+pub struct ConnPoint {
+    pub connections: usize,
+    pub points: Vec<RunReport>,
+    pub knee_qps: Option<f64>,
+}
+
+/// A knee-vs-connections sweep under one data plane (§Scale,
+/// `--data-plane`): the same QPS sweep repeated at each connection
+/// count, so the artifact shows where each plane's knee moves as
+/// per-connection serving state multiplies.
+#[derive(Clone, Debug)]
+pub struct ConnSweepReport {
+    /// The data plane the serving side ran (`"threads"` / `"epoll"`).
+    pub plane: String,
+    pub points: Vec<ConnPoint>,
+}
+
+impl ConnSweepReport {
+    /// The knee at a given connection count, when that count was swept
+    /// and sustained at all.
+    pub fn knee_at(&self, connections: usize) -> Option<f64> {
+        self.points.iter().find(|p| p.connections == connections).and_then(|p| p.knee_qps)
+    }
 }
 
 /// Sealed-vs-plaintext frame-processing cost (§Security): CPU time per
@@ -644,6 +720,71 @@ pub fn write_json(
     Ok(())
 }
 
+/// Write a knee-vs-connections sweep (both planes of one run) as
+/// machine-readable JSON — the `BENCH_loadgen_epoll.json` artifact CI
+/// archives and gates on (epoll knee at 64 connections must be at
+/// least the threads knee measured in the same run). Hand-rolled like
+/// [`write_json`].
+pub fn write_connections_json(
+    path: &str,
+    cfg: &LoadgenConfig,
+    qps_points: &[f64],
+    planes: &[ConnSweepReport],
+) -> Result<()> {
+    let mut out = String::new();
+    out.push_str("{\n");
+    out.push_str("  \"bench\": \"loadgen_connections\",\n");
+    out.push_str(&format!("  \"seed\": {},\n", cfg.seed));
+    out.push_str(&format!("  \"window\": {},\n", cfg.window));
+    out.push_str(&format!("  \"requests_per_point\": {},\n", cfg.requests));
+    let qps: Vec<String> = qps_points.iter().map(|q| format!("{q:.1}")).collect();
+    out.push_str(&format!("  \"qps_points\": [{}],\n", qps.join(", ")));
+    out.push_str("  \"planes\": [\n");
+    for (pi, plane) in planes.iter().enumerate() {
+        out.push_str(&format!("    {{\"plane\": \"{}\", \"points\": [\n", plane.plane));
+        for (ci, cp) in plane.points.iter().enumerate() {
+            let knee = match cp.knee_qps {
+                Some(q) => format!("{q:.1}"),
+                None => "null".to_string(),
+            };
+            out.push_str(&format!(
+                "      {{\"connections\": {}, \"knee_qps\": {knee}, \"runs\": [",
+                cp.connections
+            ));
+            for (ri, r) in cp.points.iter().enumerate() {
+                let mut hist = LatencyHisto::default();
+                for (_, k) in &r.kinds {
+                    hist.merge(&k.hist);
+                }
+                out.push_str(&format!(
+                    "{{\"qps_offered\": {:.1}, \"qps_achieved\": {:.1}, \"sustained\": {}, \
+                     \"ok\": {}, \"wrong\": {}, \"errors\": {}, \"window_stalls\": {}, \
+                     \"p50_us\": {}, \"p99_us\": {}}}",
+                    r.offered_qps,
+                    r.achieved_qps,
+                    r.sustained(),
+                    r.ok,
+                    r.wrong,
+                    r.errors,
+                    r.window_stalls,
+                    hist.percentile_us(50.0),
+                    hist.percentile_us(99.0)
+                ));
+                if ri + 1 < cp.points.len() {
+                    out.push_str(", ");
+                }
+            }
+            out.push_str("]}");
+            out.push_str(if ci + 1 < plane.points.len() { ",\n" } else { "\n" });
+        }
+        out.push_str("    ]}");
+        out.push_str(if pi + 1 < planes.len() { ",\n" } else { "\n" });
+    }
+    out.push_str("  ]\n}\n");
+    std::fs::write(path, out).with_context(|| format!("writing {path}"))?;
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -800,6 +941,61 @@ mod tests {
         assert!(text.contains("\"seal_overhead\": null"));
         assert!(text.contains("\"telemetry_overhead\": null"));
         assert!(text.contains("\"journal_persistence_overhead\": null"));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn multi_conn_round_robins_and_connections_json_is_written() {
+        // Two in-process coordinators behind one MultiConn: the
+        // round-robin must spread requests across both of them.
+        let mk = || {
+            Coordinator::start(CoordinatorConfig { workers: 1, ..Default::default() }).unwrap()
+        };
+        let multi = MultiConn::new(vec![mk(), mk()]);
+        assert_eq!(multi.connections(), 2);
+        assert!(multi.is_serving());
+        let cfg = LoadgenConfig { qps: 50_000.0, requests: 64, seed: 5, ..Default::default() };
+        let rep = run(&multi, &cfg);
+        assert_eq!(rep.ok, 64, "wrong={} errors={}", rep.wrong, rep.errors);
+        let counts: Vec<u64> = multi
+            .into_inner()
+            .into_iter()
+            .map(|c| {
+                let done = Submitter::metrics(&c).completed;
+                c.shutdown();
+                done
+            })
+            .collect();
+        assert!(
+            counts.iter().all(|&c| c > 0),
+            "round-robin must hit every connection: {counts:?}"
+        );
+        let point = |conns: usize, knee: Option<f64>| ConnPoint {
+            connections: conns,
+            points: vec![rep.clone()],
+            knee_qps: knee,
+        };
+        let planes = vec![
+            ConnSweepReport {
+                plane: "threads".into(),
+                points: vec![point(1, Some(2000.0)), point(64, Some(4000.0))],
+            },
+            ConnSweepReport { plane: "epoll".into(), points: vec![point(64, None)] },
+        ];
+        assert_eq!(planes[0].knee_at(64), Some(4000.0));
+        assert_eq!(planes[0].knee_at(8), None, "unswept counts have no knee");
+        assert_eq!(planes[1].knee_at(64), None, "a collapsed sweep has no knee");
+        let path = std::env::temp_dir().join("BENCH_loadgen_connstest.json");
+        let path = path.to_str().unwrap().to_string();
+        write_connections_json(&path, &cfg, &[2000.0, 4000.0], &planes).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("\"bench\": \"loadgen_connections\""));
+        assert!(text.contains("\"plane\": \"threads\""));
+        assert!(text.contains("\"plane\": \"epoll\""));
+        assert!(text.contains("\"connections\": 64"));
+        assert!(text.contains("\"knee_qps\": 4000.0"));
+        assert!(text.contains("\"knee_qps\": null"));
+        assert!(text.contains("\"qps_points\": [2000.0, 4000.0]"));
         let _ = std::fs::remove_file(&path);
     }
 

@@ -10,24 +10,35 @@
 //! exposition carries only aggregate counters (no request data), and
 //! standard scrapers cannot speak the fabric's sealed framing. Bind
 //! it to loopback or a scrape VLAN, exactly as you would any
-//! `/metrics` port. Requests are served sequentially under a bounded
-//! read timeout, so a stalled scraper delays — never wedges — the
-//! endpoint.
+//! `/metrics` port. Each connection is served on its own short-lived
+//! thread under an overall [`CONN_DEADLINE`], so a trickling client
+//! (one byte per read-timeout — the slowloris pattern) is cut off and
+//! cannot starve a concurrent scraper; transient `accept` failures
+//! back off and retry instead of silently killing the endpoint.
 
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
+use super::server::{
+    sleep_unless_stopped, transient_accept_error, ACCEPT_BACKOFF_MAX, ACCEPT_BACKOFF_START,
+};
+
 /// Longest request head we accept (a scrape GET is ~100 bytes).
 const MAX_HEAD: usize = 8 * 1024;
-/// Per-connection socket timeout: a trickling client is cut, not
-/// served forever.
+/// Per-read socket timeout within a connection.
 const CONN_TIMEOUT: Duration = Duration::from_secs(2);
+/// Overall per-connection deadline: the whole request must be read
+/// within this budget, however the client paces its bytes. Without it
+/// a client trickling one byte per <[`CONN_TIMEOUT`] holds its
+/// serving thread forever (and, before connections got their own
+/// threads, monopolized the whole endpoint).
+const CONN_DEADLINE: Duration = Duration::from_secs(5);
 
 /// A running `/metrics` endpoint. Dropping it (or calling
 /// [`MetricsHttp::shutdown`]) closes the listener and joins the
@@ -43,7 +54,7 @@ impl MetricsHttp {
     /// with the text `render` produces per scrape.
     pub fn serve<F>(addr: &str, render: F) -> Result<MetricsHttp>
     where
-        F: Fn() -> String + Send + 'static,
+        F: Fn() -> String + Send + Sync + 'static,
     {
         let listener = TcpListener::bind(addr)
             .with_context(|| format!("binding /metrics endpoint to {addr}"))?;
@@ -51,22 +62,48 @@ impl MetricsHttp {
         listener.set_nonblocking(true)?;
         let stop = Arc::new(AtomicBool::new(false));
         let stop2 = Arc::clone(&stop);
+        let render = Arc::new(render);
         let handle = std::thread::Builder::new()
             .name("metrics-http".into())
             .spawn(move || {
+                // One short-lived thread per connection (each bounded by
+                // CONN_DEADLINE), so a slowloris trickler costs one
+                // thread for a few seconds — never the accept loop, and
+                // never a concurrent scraper's answer.
+                let mut workers: Vec<JoinHandle<()>> = Vec::new();
+                let mut backoff = ACCEPT_BACKOFF_START;
                 while !stop2.load(Ordering::SeqCst) {
                     match listener.accept() {
                         Ok((stream, _peer)) => {
-                            let _ = serve_one(stream, &render);
+                            backoff = ACCEPT_BACKOFF_START;
+                            let render = Arc::clone(&render);
+                            workers.retain(|h| !h.is_finished());
+                            workers.push(std::thread::spawn(move || {
+                                let _ = serve_one(stream, &*render);
+                            }));
                         }
                         Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                             std::thread::sleep(Duration::from_millis(5));
                         }
+                        // A reset mid-accept or a transient fd-limit
+                        // squeeze must not kill the scrape endpoint:
+                        // back off (bounded) and keep accepting.
+                        Err(e) if transient_accept_error(&e) => {
+                            eprintln!(
+                                "metrics endpoint: transient accept error (retrying in \
+                                 {backoff:?}): {e}"
+                            );
+                            sleep_unless_stopped(&stop2, backoff);
+                            backoff = (backoff * 2).min(ACCEPT_BACKOFF_MAX);
+                        }
                         Err(e) => {
-                            eprintln!("metrics endpoint: accept failed, stopping: {e}");
+                            eprintln!("metrics endpoint: FATAL: accept failed, stopping: {e}");
                             break;
                         }
                     }
+                }
+                for h in workers {
+                    let _ = h.join();
                 }
             })
             .expect("spawn metrics-http");
@@ -97,9 +134,13 @@ impl Drop for MetricsHttp {
     }
 }
 
-/// Handle one connection: read the request head, answer, close.
+/// Handle one connection: read the request head, answer, close. The
+/// whole head must arrive within [`CONN_DEADLINE`]: every read timeout
+/// is clamped to the time remaining, so a client pacing one byte per
+/// read-timeout hits the overall deadline instead of extending it
+/// indefinitely (the slowloris pattern).
 fn serve_one<F: Fn() -> String>(mut stream: TcpStream, render: &F) -> std::io::Result<()> {
-    stream.set_read_timeout(Some(CONN_TIMEOUT))?;
+    let deadline = Instant::now() + CONN_DEADLINE;
     stream.set_write_timeout(Some(CONN_TIMEOUT))?;
     let mut head = Vec::with_capacity(256);
     let mut buf = [0u8; 512];
@@ -109,6 +150,12 @@ fn serve_one<F: Fn() -> String>(mut stream: TcpStream, render: &F) -> std::io::R
         if head.len() > MAX_HEAD {
             return respond(&mut stream, "400 Bad Request", "request head too large\n");
         }
+        let remaining = deadline.saturating_duration_since(Instant::now());
+        if remaining.is_zero() {
+            return respond(&mut stream, "408 Request Timeout", "request too slow\n");
+        }
+        // set_read_timeout rejects a zero Duration; clamp up.
+        stream.set_read_timeout(Some(remaining.min(CONN_TIMEOUT).max(Duration::from_millis(1))))?;
         match stream.read(&mut buf) {
             Ok(0) => break,
             Ok(n) => head.extend_from_slice(&buf[..n]),
@@ -178,6 +225,44 @@ mod tests {
         let mut out = String::new();
         stream.read_to_string(&mut out).unwrap();
         assert!(out.starts_with("HTTP/1.0 405"), "got: {out}");
+        ep.shutdown();
+    }
+
+    /// Regression: a slowloris client dribbling one byte at a time must
+    /// neither starve a concurrent well-formed scrape nor hold its
+    /// connection past [`CONN_DEADLINE`].
+    #[test]
+    fn slow_trickler_cannot_starve_concurrent_scrapes() {
+        let ep = MetricsHttp::serve("127.0.0.1:0", || "remus_up 1\n".to_string()).unwrap();
+        let addr = ep.local_addr();
+        let trickler = std::thread::spawn(move || {
+            let mut stream = TcpStream::connect(addr).unwrap();
+            let started = Instant::now();
+            // Dribble a request that never completes its head; the
+            // endpoint must cut us off at the overall deadline.
+            for b in b"GET /metrics HTTP/1.0\r\n".iter().cycle() {
+                if stream.write_all(&[*b]).is_err() {
+                    break;
+                }
+                std::thread::sleep(Duration::from_millis(50));
+                assert!(
+                    started.elapsed() < CONN_DEADLINE + Duration::from_secs(5),
+                    "trickler connection was never cut off"
+                );
+            }
+        });
+        // While the trickler is mid-dribble, a normal scrape must be
+        // answered promptly — not after the trickler's deadline.
+        std::thread::sleep(Duration::from_millis(200));
+        let started = Instant::now();
+        let ok = http_get(addr, "/metrics");
+        assert!(ok.starts_with("HTTP/1.0 200 OK\r\n"), "got: {ok}");
+        assert!(
+            started.elapsed() < CONN_TIMEOUT,
+            "concurrent scrape starved for {:?}",
+            started.elapsed()
+        );
+        trickler.join().unwrap();
         ep.shutdown();
     }
 }

@@ -62,6 +62,16 @@
 //! reconstructs after a crash; `--metrics-addr` serves the Prometheus
 //! text exposition over [`metrics_http`].
 //!
+//! **Data planes** (§Scale, `--data-plane`): every fabric data
+//! connection rides one of two transports. `threads` is the original
+//! blocking thread-per-connection pair and remains the bit-exact
+//! reference; `epoll` ([`reactor`]) multiplexes all connections onto a
+//! single readiness loop with nonblocking sockets, incremental frame
+//! decode, vectored/coalesced writes, and bounded per-connection
+//! backpressure — same frames, same FIFO reply order, same rejection
+//! semantics, selectable per process and overridable in tests via the
+//! `REMUS_DATA_PLANE` environment variable.
+//!
 //! Both the in-process coordinator and the router implement
 //! [`crate::coordinator::Submitter`], so every load path (the serve
 //! example, `remus soak`, benches) runs unchanged on either. End-to-end
@@ -74,12 +84,14 @@
 pub mod auth;
 pub mod loadgen;
 pub mod metrics_http;
+pub mod reactor;
 pub mod router;
 pub mod server;
 pub mod wire;
 
 pub use auth::Psk;
 pub use metrics_http::MetricsHttp;
+pub use reactor::DataPlane;
 pub use router::{
     fetch_events, fetch_events_auth, fetch_metrics, fetch_metrics_auth, fetch_spans,
     fetch_spans_auth, probe_health, probe_health_auth, shutdown_endpoint, shutdown_endpoint_auth,

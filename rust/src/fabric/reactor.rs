@@ -1,0 +1,970 @@
+//! Event-driven fabric data plane (§Scale): a hand-rolled epoll
+//! readiness loop over nonblocking sockets.
+//!
+//! The threads plane (one blocking reader/writer thread pair per
+//! connection) is simple and stays as the bit-exact reference, but it
+//! saturates on *connection count* long before the shards saturate on
+//! compute: every idle connection pins two stacks, and every reply
+//! write can block a thread. This module multiplexes all of a server's
+//! data connections onto **one** thread:
+//!
+//! * readiness via raw `epoll` syscalls (declared here — the offline
+//!   vendor set has no `libc` crate, but the symbols live in the same
+//!   C library every Linux `std` binary already links);
+//! * per-connection read buffers feeding the incremental
+//!   [`FrameDecoder`], which preserves the v7 codec and the PSK sealed
+//!   framing byte-for-byte (same length validation, same marker
+//!   rejection, same implicit seal counters);
+//! * per-connection write queues flushed with **vectored writes**
+//!   (up to [`WRITE_BATCH`] frames per `writev` — the coalescing
+//!   rule), so a burst of ready replies costs one syscall, not one
+//!   per frame;
+//! * **bounded backpressure**: a peer that stops draining its replies
+//!   accumulates at most [`MAX_CONN_BACKLOG`] queued bytes and is then
+//!   disconnected — the byte-bound analogue of the threads plane's
+//!   bounded reply write timeout;
+//! * submit pipelining falls out naturally: every decodable frame is
+//!   dispatched to the coordinator immediately, replies resolve out of
+//!   band and are still written in strict FIFO per connection (the
+//!   queue head blocks the queue, exactly like the threads writer).
+//!
+//! PSK handshakes stay on short-lived helper threads (bounded by
+//! [`HANDSHAKE_TIMEOUT`]): the handshake is a 3-message blocking
+//! exchange whose bytes must not change, and running it off-loop keeps
+//! a stalling peer from freezing every other connection. The reactor
+//! adopts the socket once the session keys exist.
+//!
+//! Everything here is Linux-only ([`supported`]); on other platforms
+//! the server falls back to the threads plane with a loud warning.
+
+use std::collections::{HashMap, VecDeque};
+use std::io::{ErrorKind, IoSlice, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::os::unix::io::{AsRawFd, RawFd};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Sender, TryRecvError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::Coordinator;
+
+use super::auth::{
+    encode_frame, server_handshake, Channel, FrameDecoder, Psk, Seal, FRAME_DEADLINE,
+    HANDSHAKE_TIMEOUT,
+};
+use super::server::{
+    dispatch_msg, dropped_result_msg, result_msg, transient_accept_error, Dispatch, Reply,
+    ACCEPT_BACKOFF_MAX, ACCEPT_BACKOFF_START,
+};
+use super::wire::Msg;
+
+/// Which transport carries fabric data connections (§Scale).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum DataPlane {
+    /// One blocking reader/writer thread pair per connection — the
+    /// bit-exact reference plane.
+    #[default]
+    Threads,
+    /// One readiness loop (Linux epoll) multiplexing every connection
+    /// over nonblocking sockets.
+    Epoll,
+}
+
+impl DataPlane {
+    /// Parse a `--data-plane` value.
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "threads" => Ok(Self::Threads),
+            "epoll" => Ok(Self::Epoll),
+            other => anyhow::bail!("unknown data plane {other:?} (expected `epoll` or `threads`)"),
+        }
+    }
+
+    /// Resolve the `REMUS_DATA_PLANE` environment override, falling
+    /// back to `default` when unset. This is how the integration and
+    /// chaos suites re-run their exact scenarios under the reactor:
+    /// `ServeOptions::default()` and `RouterConfig::default()` both
+    /// call this, so every test fleet follows the variable.
+    pub fn from_env_or(default: Self) -> Self {
+        match std::env::var("REMUS_DATA_PLANE") {
+            Ok(v) => match Self::parse(&v) {
+                Ok(p) => p,
+                Err(e) => {
+                    eprintln!("warning: ignoring REMUS_DATA_PLANE: {e}");
+                    default
+                }
+            },
+            Err(_) => default,
+        }
+    }
+}
+
+impl std::fmt::Display for DataPlane {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            Self::Threads => "threads",
+            Self::Epoll => "epoll",
+        })
+    }
+}
+
+/// True when the epoll plane can run on this platform.
+pub fn supported() -> bool {
+    cfg!(target_os = "linux")
+}
+
+/// A slow consumer may owe at most this many undelivered reply bytes
+/// before its connection is closed — the reactor's backpressure bound.
+pub const MAX_CONN_BACKLOG: usize = 4 << 20;
+
+/// Most frames coalesced into one vectored write.
+pub(crate) const WRITE_BATCH: usize = 64;
+
+// Readiness flags (bits of `epoll_event.events`). Values are part of
+// the Linux ABI.
+pub(crate) const EPOLLIN: u32 = 0x1;
+pub(crate) const EPOLLOUT: u32 = 0x4;
+pub(crate) const EPOLLERR: u32 = 0x8;
+pub(crate) const EPOLLHUP: u32 = 0x10;
+pub(crate) const EPOLLRDHUP: u32 = 0x2000;
+
+/// Any readiness bit that means "the read side has news" — data,
+/// peer half-close, or an error the next read will surface.
+pub(crate) const EPOLL_READ_EVENTS: u32 = EPOLLIN | EPOLLRDHUP | EPOLLERR | EPOLLHUP;
+
+const MAX_EVENTS: usize = 128;
+
+#[cfg(target_os = "linux")]
+mod sys {
+    pub const EPOLL_CTL_ADD: i32 = 1;
+    pub const EPOLL_CTL_DEL: i32 = 2;
+    pub const EPOLL_CTL_MOD: i32 = 3;
+    pub const EPOLL_CLOEXEC: i32 = 0x80000;
+
+    /// `struct epoll_event`. Packed on x86-64 (and only there) to
+    /// match the kernel/glibc ABI exactly; fields are only ever read
+    /// by value, never by reference.
+    #[repr(C)]
+    #[cfg_attr(target_arch = "x86_64", repr(packed))]
+    #[derive(Clone, Copy)]
+    pub struct EpollEvent {
+        pub events: u32,
+        pub data: u64,
+    }
+
+    // No `libc` crate in the offline vendor set, but these symbols are
+    // in the C library every Linux std binary links anyway.
+    extern "C" {
+        pub fn epoll_create1(flags: i32) -> i32;
+        pub fn epoll_ctl(epfd: i32, op: i32, fd: i32, event: *mut EpollEvent) -> i32;
+        pub fn epoll_wait(epfd: i32, events: *mut EpollEvent, maxevents: i32, timeout: i32) -> i32;
+        pub fn close(fd: i32) -> i32;
+    }
+}
+
+/// Minimal safe wrapper over an epoll instance. Tokens are caller-
+/// chosen `u64`s handed back verbatim with each readiness event.
+pub(crate) struct Epoll {
+    #[cfg(target_os = "linux")]
+    fd: RawFd,
+}
+
+#[cfg(target_os = "linux")]
+impl Epoll {
+    pub(crate) fn new() -> Result<Self> {
+        let fd = unsafe { sys::epoll_create1(sys::EPOLL_CLOEXEC) };
+        if fd < 0 {
+            return Err(std::io::Error::last_os_error()).context("epoll_create1");
+        }
+        Ok(Self { fd })
+    }
+
+    fn ctl(&self, op: i32, fd: RawFd, events: u32, token: u64) -> Result<()> {
+        let mut ev = sys::EpollEvent { events, data: token };
+        let rc = unsafe { sys::epoll_ctl(self.fd, op, fd, &mut ev) };
+        if rc < 0 {
+            return Err(std::io::Error::last_os_error()).context("epoll_ctl");
+        }
+        Ok(())
+    }
+
+    pub(crate) fn add(&self, fd: RawFd, events: u32, token: u64) -> Result<()> {
+        self.ctl(sys::EPOLL_CTL_ADD, fd, events, token)
+    }
+
+    pub(crate) fn modify(&self, fd: RawFd, events: u32, token: u64) -> Result<()> {
+        self.ctl(sys::EPOLL_CTL_MOD, fd, events, token)
+    }
+
+    pub(crate) fn del(&self, fd: RawFd) -> Result<()> {
+        self.ctl(sys::EPOLL_CTL_DEL, fd, 0, 0)
+    }
+
+    /// Wait up to `timeout` for readiness, appending `(token, events)`
+    /// pairs to `out` (cleared first). `EINTR` is an empty wake-up,
+    /// never an error.
+    pub(crate) fn wait(&self, timeout: Duration, out: &mut Vec<(u64, u32)>) {
+        out.clear();
+        let mut buf = [sys::EpollEvent { events: 0, data: 0 }; MAX_EVENTS];
+        let ms = timeout.as_millis().min(i32::MAX as u128) as i32;
+        let n = unsafe { sys::epoll_wait(self.fd, buf.as_mut_ptr(), MAX_EVENTS as i32, ms) };
+        for ev in buf.iter().take(n.max(0) as usize) {
+            out.push((ev.data, ev.events));
+        }
+    }
+}
+
+#[cfg(target_os = "linux")]
+impl Drop for Epoll {
+    fn drop(&mut self) {
+        unsafe {
+            sys::close(self.fd);
+        }
+    }
+}
+
+#[cfg(not(target_os = "linux"))]
+impl Epoll {
+    pub(crate) fn new() -> Result<Self> {
+        anyhow::bail!("the epoll data plane is only available on Linux")
+    }
+
+    pub(crate) fn add(&self, _fd: RawFd, _events: u32, _token: u64) -> Result<()> {
+        unreachable!("Epoll cannot be constructed off-Linux")
+    }
+
+    pub(crate) fn modify(&self, _fd: RawFd, _events: u32, _token: u64) -> Result<()> {
+        unreachable!("Epoll cannot be constructed off-Linux")
+    }
+
+    pub(crate) fn del(&self, _fd: RawFd) -> Result<()> {
+        unreachable!("Epoll cannot be constructed off-Linux")
+    }
+
+    pub(crate) fn wait(&self, _timeout: Duration, _out: &mut Vec<(u64, u32)>) {
+        unreachable!("Epoll cannot be constructed off-Linux")
+    }
+}
+
+/// One vectored write over up to [`WRITE_BATCH`] queued frames,
+/// starting `front` bytes into the first — the coalescing rule shared
+/// by the server reactor and [`ConnTx`].
+fn write_queued(stream: &TcpStream, out: &VecDeque<Vec<u8>>, front: usize) -> std::io::Result<usize> {
+    let mut slices: Vec<IoSlice<'_>> = Vec::with_capacity(out.len().min(WRITE_BATCH));
+    let mut it = out.iter();
+    if let Some(first) = it.next() {
+        slices.push(IoSlice::new(&first[front..]));
+    }
+    for frame in it.take(WRITE_BATCH - 1) {
+        slices.push(IoSlice::new(frame));
+    }
+    let mut w = stream;
+    w.write_vectored(&slices)
+}
+
+/// Drop `n` freshly written bytes off the front of the queue; returns
+/// the new offset into the (possibly new) first frame.
+fn advance_queued(out: &mut VecDeque<Vec<u8>>, mut front: usize, mut n: usize) -> usize {
+    while n > 0 {
+        let rem = out[0].len() - front;
+        if n >= rem {
+            n -= rem;
+            front = 0;
+            out.pop_front();
+        } else {
+            front += n;
+            n = 0;
+        }
+    }
+    front
+}
+
+// ---------------------------------------------------------------------------
+// Client-side transmit handle (the router's epoll-mode shard writer)
+// ---------------------------------------------------------------------------
+
+/// Transmit handle for a reactor-managed *outbound* connection (the
+/// router's data connection to a shard). `send` seals and enqueues
+/// under a lock — preserving the seal's implicit counter order — then
+/// opportunistically flushes without blocking; whatever `WouldBlock`
+/// leaves behind is drained by the owning reactor's tick (and bounded
+/// by [`MAX_CONN_BACKLOG`], after which the connection is condemned).
+#[derive(Clone)]
+pub(crate) struct ConnTx {
+    inner: Arc<Mutex<TxState>>,
+}
+
+struct TxState {
+    stream: TcpStream,
+    seal: Option<Seal>,
+    out: VecDeque<Vec<u8>>,
+    front: usize,
+    bytes: usize,
+    closed: bool,
+}
+
+impl ConnTx {
+    /// `stream` must already be nonblocking; `seal` is the established
+    /// session's transmit half (counter state preserved).
+    pub(crate) fn new(stream: TcpStream, seal: Option<Seal>) -> Self {
+        Self {
+            inner: Arc::new(Mutex::new(TxState {
+                stream,
+                seal,
+                out: VecDeque::new(),
+                front: 0,
+                bytes: 0,
+                closed: false,
+            })),
+        }
+    }
+
+    /// Seal + enqueue + best-effort flush. An error condemns the
+    /// connection (the socket is shut down so the reactor's read side
+    /// notices and runs the normal failover path).
+    pub(crate) fn send(&self, msg: &Msg) -> Result<()> {
+        let mut st = self.inner.lock().unwrap();
+        if st.closed {
+            anyhow::bail!("connection closed");
+        }
+        let frame = encode_frame(msg, &mut st.seal)?;
+        if st.bytes + frame.len() > MAX_CONN_BACKLOG {
+            st.close();
+            anyhow::bail!(
+                "shard connection exceeded its {MAX_CONN_BACKLOG} byte write backlog \
+                 (closing slow consumer)"
+            );
+        }
+        st.bytes += frame.len();
+        st.out.push_back(frame);
+        st.flush()
+    }
+
+    /// Drain whatever the socket will take right now (reactor tick).
+    pub(crate) fn flush(&self) -> Result<()> {
+        self.inner.lock().unwrap().flush()
+    }
+
+    /// Condemn the connection (e.g. on router shutdown).
+    pub(crate) fn shutdown(&self) {
+        self.inner.lock().unwrap().close();
+    }
+}
+
+impl TxState {
+    fn close(&mut self) {
+        self.closed = true;
+        let _ = self.stream.shutdown(std::net::Shutdown::Both);
+    }
+
+    fn flush(&mut self) -> Result<()> {
+        loop {
+            if self.out.is_empty() {
+                return Ok(());
+            }
+            match write_queued(&self.stream, &self.out, self.front) {
+                Ok(0) => {
+                    self.close();
+                    anyhow::bail!("connection closed while flushing");
+                }
+                Ok(n) => {
+                    self.bytes -= n;
+                    self.front = advance_queued(&mut self.out, self.front, n);
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => return Ok(()),
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(e) => {
+                    self.close();
+                    return Err(e).context("shard connection write");
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Server reactor
+// ---------------------------------------------------------------------------
+
+/// Reactor token reserved for the listener.
+const LISTENER_TOKEN: u64 = u64::MAX;
+
+/// Tick when at least one pending coordinator reply is unresolved: poll
+/// the reply channels at millisecond granularity.
+const TICK_BUSY: Duration = Duration::from_millis(1);
+/// Idle tick: just often enough to observe the stop flag and finished
+/// handshakes promptly.
+const TICK_IDLE: Duration = Duration::from_millis(10);
+
+/// Bounded best-effort flush window after the stop flag flips, so a
+/// remote `Shutdown` still gets its `ShutdownAck` delivered.
+const DRAIN_DEADLINE: Duration = Duration::from_millis(500);
+
+/// A completed PSK handshake handing its connection to the reactor.
+struct HsDone {
+    conn_id: u64,
+    stream: TcpStream,
+    chan: Channel,
+}
+
+/// Per-connection reactor state. Mirrors the threads plane exactly:
+/// `replies` is the FIFO the writer thread would have walked, `out` is
+/// the bytes it would have written.
+struct Conn {
+    stream: TcpStream,
+    dec: FrameDecoder,
+    tx_seal: Option<Seal>,
+    replies: VecDeque<Reply>,
+    out: VecDeque<Vec<u8>>,
+    out_front: usize,
+    out_bytes: usize,
+    /// Armed while a partial frame is buffered ([`FRAME_DEADLINE`]).
+    frame_deadline: Option<Instant>,
+    /// Peer closed its write side: stop reading, drain what we owe.
+    peer_eof: bool,
+    /// Stop reading (decode error / violation / shutdown ack queued);
+    /// drain `replies` + `out`, then close — the same drain the
+    /// threads plane's writer performs after its reader exits.
+    closing: bool,
+    /// Close immediately, no drain (write failure or backpressure).
+    dead: bool,
+    /// Readiness bits currently registered with the epoll instance.
+    interest: u32,
+    token: u64,
+}
+
+impl Conn {
+    fn finished(&self) -> bool {
+        self.dead
+            || ((self.peer_eof || self.closing) && self.replies.is_empty() && self.out.is_empty())
+    }
+
+    fn desired_interest(&self) -> u32 {
+        if self.dead {
+            return 0;
+        }
+        let mut ev = 0;
+        if !self.closing && !self.peer_eof {
+            ev |= EPOLLIN | EPOLLRDHUP;
+        }
+        if !self.out.is_empty() {
+            ev |= EPOLLOUT;
+        }
+        ev
+    }
+}
+
+/// The epoll data plane's counterpart of `server::accept_loop` +
+/// `conn_loop` + `writer_loop`: one thread, every connection. Spawned
+/// by `FabricServer::start_with_options` when `--data-plane epoll`.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn serve_reactor(
+    listener: TcpListener,
+    coord: Arc<Coordinator>,
+    stop: Arc<AtomicBool>,
+    conns: Arc<Mutex<HashMap<u64, TcpStream>>>,
+    conn_handles: Arc<Mutex<Vec<JoinHandle<()>>>>,
+    psk: Arc<Option<Psk>>,
+    auth_rejects: Arc<AtomicU64>,
+    boot_epoch: u64,
+) {
+    let ep = match Epoll::new() {
+        Ok(ep) => ep,
+        Err(e) => {
+            eprintln!("fabric server: FATAL: cannot start epoll reactor, stopping: {e:#}");
+            stop.store(true, Ordering::SeqCst);
+            return;
+        }
+    };
+    if let Err(e) = ep.add(listener.as_raw_fd(), EPOLLIN, LISTENER_TOKEN) {
+        eprintln!("fabric server: FATAL: cannot watch listener, stopping: {e:#}");
+        stop.store(true, Ordering::SeqCst);
+        return;
+    }
+    let (hs_tx, hs_rx) = channel::<HsDone>();
+    let mut table: HashMap<u64, Conn> = HashMap::new();
+    let mut events: Vec<(u64, u32)> = Vec::new();
+    let mut next_conn_id = 0u64;
+    let mut accept_backoff = ACCEPT_BACKOFF_START;
+    // While Some, the listener is deregistered (transient accept error
+    // backoff) and re-armed when the pause expires.
+    let mut accept_paused_until: Option<Instant> = None;
+
+    while !stop.load(Ordering::SeqCst) {
+        // Re-arm the listener once an accept-error backoff expires.
+        if let Some(until) = accept_paused_until {
+            if Instant::now() >= until {
+                accept_paused_until = None;
+                if ep.add(listener.as_raw_fd(), EPOLLIN, LISTENER_TOKEN).is_err() {
+                    eprintln!("fabric server: FATAL: cannot re-arm listener, stopping");
+                    stop.store(true, Ordering::SeqCst);
+                    break;
+                }
+            }
+        }
+        // Adopt connections whose PSK handshake just completed.
+        while let Ok(done) = hs_rx.try_recv() {
+            adopt(&ep, &mut table, &conns, done.conn_id, done.stream, Some(done.chan));
+        }
+        // Resolve ready coordinator replies (FIFO per connection),
+        // flush, retire finished connections.
+        let mut waiting = false;
+        let now = Instant::now();
+        let finished: Vec<u64> = {
+            let mut finished = Vec::new();
+            for (&id, conn) in table.iter_mut() {
+                if let Some(deadline) = conn.frame_deadline {
+                    if now >= deadline && !conn.closing {
+                        // Same slowloris semantics as the blocking
+                        // reader's FRAME_DEADLINE error.
+                        if conn.dec.is_sealed() {
+                            auth_rejects.fetch_add(1, Ordering::SeqCst);
+                        }
+                        conn.closing = true;
+                    }
+                }
+                waiting |= drain_replies(conn);
+                flush_conn(conn);
+                update_interest(&ep, conn);
+                if conn.finished() {
+                    finished.push(id);
+                }
+            }
+            finished
+        };
+        for id in finished {
+            if let Some(conn) = table.remove(&id) {
+                retire(&ep, &conns, id, conn);
+            }
+        }
+        // Wait for readiness; poll faster while replies are pending.
+        let tick = if waiting { TICK_BUSY } else { TICK_IDLE };
+        ep.wait(tick, &mut events);
+        for &(token, evs) in &events {
+            if token == LISTENER_TOKEN {
+                if accept_paused_until.is_some() {
+                    continue;
+                }
+                accept_burst(
+                    &ep,
+                    &listener,
+                    &mut table,
+                    &conns,
+                    &conn_handles,
+                    &psk,
+                    &auth_rejects,
+                    &stop,
+                    &hs_tx,
+                    &mut next_conn_id,
+                    &mut accept_backoff,
+                    &mut accept_paused_until,
+                );
+                continue;
+            }
+            let Some(conn) = table.get_mut(&token) else {
+                continue;
+            };
+            if evs & EPOLL_READ_EVENTS != 0 && !conn.closing && !conn.peer_eof {
+                read_ready(conn, &coord, &stop, &auth_rejects, boot_epoch);
+            }
+            if evs & (EPOLLOUT | EPOLLERR | EPOLLHUP) != 0 {
+                flush_conn(conn);
+            }
+            update_interest(&ep, conn);
+        }
+    }
+
+    // Stop flag flipped (locally, or by a Shutdown frame we just
+    // queued the ack for): give pending replies a bounded window to
+    // resolve and flush, so remote shutdowns observe their ack.
+    let deadline = Instant::now() + DRAIN_DEADLINE;
+    loop {
+        let mut outstanding = false;
+        let finished: Vec<u64> = {
+            let mut finished = Vec::new();
+            for (&id, conn) in table.iter_mut() {
+                drain_replies(conn);
+                flush_conn(conn);
+                if conn.finished() {
+                    finished.push(id);
+                } else if !conn.replies.is_empty() || !conn.out.is_empty() {
+                    outstanding = true;
+                }
+            }
+            finished
+        };
+        for id in finished {
+            if let Some(conn) = table.remove(&id) {
+                retire(&ep, &conns, id, conn);
+            }
+        }
+        if !outstanding || Instant::now() >= deadline {
+            break;
+        }
+        std::thread::sleep(TICK_BUSY);
+    }
+    for (id, conn) in table.drain() {
+        retire(&ep, &conns, id, conn);
+    }
+}
+
+/// Register an established (plaintext or freshly handshaken)
+/// connection with the loop.
+fn adopt(
+    ep: &Epoll,
+    table: &mut HashMap<u64, Conn>,
+    conns: &Mutex<HashMap<u64, TcpStream>>,
+    conn_id: u64,
+    stream: TcpStream,
+    chan: Option<Channel>,
+) {
+    if stream.set_nonblocking(true).is_err() {
+        // Socket already dead: drop it and its shutdown-registry dup.
+        conns.lock().unwrap().remove(&conn_id);
+        return;
+    }
+    let (tx_seal, rx_seal) = match chan {
+        Some(c) => (Some(c.tx), Some(c.rx)),
+        None => (None, None),
+    };
+    let mut conn = Conn {
+        stream,
+        dec: FrameDecoder::new(rx_seal),
+        tx_seal,
+        replies: VecDeque::new(),
+        out: VecDeque::new(),
+        out_front: 0,
+        out_bytes: 0,
+        frame_deadline: None,
+        peer_eof: false,
+        closing: false,
+        dead: false,
+        interest: 0,
+        token: conn_id,
+    };
+    update_interest(ep, &mut conn);
+    table.insert(conn_id, conn);
+}
+
+/// Deregister + drop a connection. The explicit `EPOLL_CTL_DEL`
+/// matters: the shutdown registry holds a dup of this socket, so
+/// closing our fd alone would leave a stale interest entry behind.
+fn retire(ep: &Epoll, conns: &Mutex<HashMap<u64, TcpStream>>, id: u64, conn: Conn) {
+    if conn.interest != 0 {
+        let _ = ep.del(conn.stream.as_raw_fd());
+    }
+    conns.lock().unwrap().remove(&id);
+}
+
+fn update_interest(ep: &Epoll, conn: &mut Conn) {
+    let want = conn.desired_interest();
+    if want == conn.interest {
+        return;
+    }
+    let fd = conn.stream.as_raw_fd();
+    let outcome = if conn.interest == 0 {
+        ep.add(fd, want, conn.token)
+    } else if want == 0 {
+        ep.del(fd)
+    } else {
+        ep.modify(fd, want, conn.token)
+    };
+    if outcome.is_ok() {
+        conn.interest = want;
+    } else {
+        conn.dead = true;
+    }
+}
+
+/// Accept everything currently queued on the listener. Transient
+/// errors pause accepting with bounded backoff (the listener is taken
+/// off the loop so a level-triggered event can't spin); persistent
+/// errors stop the server loudly, exactly like the threads plane.
+#[allow(clippy::too_many_arguments)]
+fn accept_burst(
+    ep: &Epoll,
+    listener: &TcpListener,
+    table: &mut HashMap<u64, Conn>,
+    conns: &Arc<Mutex<HashMap<u64, TcpStream>>>,
+    conn_handles: &Mutex<Vec<JoinHandle<()>>>,
+    psk: &Arc<Option<Psk>>,
+    auth_rejects: &Arc<AtomicU64>,
+    stop: &Arc<AtomicBool>,
+    hs_tx: &Sender<HsDone>,
+    next_conn_id: &mut u64,
+    backoff: &mut Duration,
+    paused_until: &mut Option<Instant>,
+) {
+    loop {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                *backoff = ACCEPT_BACKOFF_START;
+                let _ = stream.set_nodelay(true);
+                let conn_id = *next_conn_id;
+                *next_conn_id += 1;
+                if let Ok(clone) = stream.try_clone() {
+                    conns.lock().unwrap().insert(conn_id, clone);
+                }
+                match (**psk).as_ref() {
+                    None => adopt(ep, table, conns, conn_id, stream, None),
+                    Some(_) => {
+                        // The 3-message blocking handshake runs on a
+                        // short-lived thread (bounded by
+                        // HANDSHAKE_TIMEOUT both ways), so a stalling
+                        // peer can't freeze the loop; the reactor
+                        // adopts the socket once keys exist.
+                        let _ = stream.set_nonblocking(false);
+                        let psk = psk.clone();
+                        let auth_rejects = auth_rejects.clone();
+                        let conns = conns.clone();
+                        let hs_tx = hs_tx.clone();
+                        let handle = std::thread::spawn(move || {
+                            let mut stream = stream;
+                            let _ = stream.set_read_timeout(Some(HANDSHAKE_TIMEOUT));
+                            let p = (*psk).as_ref().expect("psk checked by caller");
+                            match server_handshake(&mut stream, p) {
+                                Ok(chan) => {
+                                    if hs_tx.send(HsDone { conn_id, stream, chan }).is_err() {
+                                        // Reactor already gone: drop the
+                                        // socket and its registry entry.
+                                        conns.lock().unwrap().remove(&conn_id);
+                                    }
+                                }
+                                Err(e) => {
+                                    auth_rejects.fetch_add(1, Ordering::SeqCst);
+                                    eprintln!("fabric server: rejected peer: {e:#}");
+                                    conns.lock().unwrap().remove(&conn_id);
+                                }
+                            }
+                        });
+                        let mut handles = conn_handles.lock().unwrap();
+                        handles.retain(|h| !h.is_finished());
+                        handles.push(handle);
+                    }
+                }
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => return,
+            Err(e) if transient_accept_error(&e) => {
+                eprintln!(
+                    "fabric server: transient accept error (retrying in {:?}): {e}",
+                    *backoff
+                );
+                let _ = ep.del(listener.as_raw_fd());
+                *paused_until = Some(Instant::now() + *backoff);
+                *backoff = (*backoff * 2).min(ACCEPT_BACKOFF_MAX);
+                return;
+            }
+            Err(e) => {
+                eprintln!("fabric server: FATAL: accept failed, stopping listener: {e}");
+                stop.store(true, Ordering::SeqCst);
+                return;
+            }
+        }
+    }
+}
+
+/// Drain the socket into the decoder and dispatch every complete
+/// message. Mirrors `conn_loop`'s read-side behaviour, including which
+/// failures count as auth rejects on a sealed connection.
+fn read_ready(
+    conn: &mut Conn,
+    coord: &Coordinator,
+    stop: &AtomicBool,
+    auth_rejects: &AtomicU64,
+    boot_epoch: u64,
+) {
+    let mut buf = [0u8; 16 * 1024];
+    'read: loop {
+        let n = {
+            let mut r = &conn.stream;
+            match r.read(&mut buf) {
+                Ok(0) => {
+                    conn.peer_eof = true;
+                    break 'read;
+                }
+                Ok(n) => n,
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break 'read,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    // Same accounting as the blocking reader: any read
+                    // error on a sealed connection is an auth reject.
+                    if conn.dec.is_sealed() {
+                        auth_rejects.fetch_add(1, Ordering::SeqCst);
+                    }
+                    conn.closing = true;
+                    break 'read;
+                }
+            }
+        };
+        conn.dec.push(&buf[..n]);
+        loop {
+            match conn.dec.try_next() {
+                Ok(Some(msg)) => match dispatch_msg(msg, coord, auth_rejects, boot_epoch) {
+                    Dispatch::Reply(reply) => conn.replies.push_back(reply),
+                    Dispatch::Shutdown(ack) => {
+                        conn.replies.push_back(ack);
+                        stop.store(true, Ordering::SeqCst);
+                        conn.closing = true;
+                    }
+                    Dispatch::Violation => conn.closing = true,
+                },
+                Ok(None) => break,
+                Err(_) => {
+                    // Tampered/replayed/malformed frame: drop the
+                    // connection (after draining what we owe), count
+                    // the reject when sealed.
+                    if conn.dec.is_sealed() {
+                        auth_rejects.fetch_add(1, Ordering::SeqCst);
+                    }
+                    conn.closing = true;
+                }
+            }
+            if conn.closing {
+                break 'read;
+            }
+        }
+    }
+    // Slowloris accounting: arm the frame deadline while a partial
+    // frame is buffered, clear it at every frame boundary.
+    conn.frame_deadline = if conn.dec.mid_frame() && !conn.closing && !conn.peer_eof {
+        Some(conn.frame_deadline.unwrap_or_else(|| Instant::now() + FRAME_DEADLINE))
+    } else {
+        None
+    };
+}
+
+/// Walk the FIFO reply queue, encoding every reply that has resolved.
+/// Returns true when the queue head is an unresolved coordinator
+/// reply (the reactor should poll soon).
+fn drain_replies(conn: &mut Conn) -> bool {
+    if conn.dead {
+        return false;
+    }
+    while let Some(reply) = conn.replies.pop_front() {
+        let msg = match reply {
+            Reply::Now(m) => m,
+            Reply::Pending(id, rx) => match rx.try_recv() {
+                Ok(r) => result_msg(id, r),
+                Err(TryRecvError::Empty) => {
+                    // FIFO: the head blocks the queue, exactly like
+                    // the threads plane's writer.
+                    conn.replies.push_front(Reply::Pending(id, rx));
+                    return true;
+                }
+                Err(TryRecvError::Disconnected) => dropped_result_msg(id),
+            },
+        };
+        let frame = match encode_frame(&msg, &mut conn.tx_seal) {
+            Ok(f) => f,
+            Err(e) => {
+                eprintln!("fabric server: dropping connection (encode failed): {e:#}");
+                conn.dead = true;
+                return false;
+            }
+        };
+        if conn.out_bytes + frame.len() > MAX_CONN_BACKLOG {
+            eprintln!(
+                "fabric server: closing slow consumer (> {MAX_CONN_BACKLOG} bytes of \
+                 undelivered replies)"
+            );
+            conn.dead = true;
+            return false;
+        }
+        conn.out_bytes += frame.len();
+        conn.out.push_back(frame);
+    }
+    false
+}
+
+/// Write as much of the out-queue as the socket will take.
+fn flush_conn(conn: &mut Conn) {
+    if conn.dead {
+        return;
+    }
+    loop {
+        if conn.out.is_empty() {
+            return;
+        }
+        match write_queued(&conn.stream, &conn.out, conn.out_front) {
+            Ok(0) => {
+                conn.dead = true;
+                return;
+            }
+            Ok(n) => {
+                conn.out_bytes -= n;
+                conn.out_front = advance_queued(&mut conn.out, conn.out_front, n);
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => return,
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(_) => {
+                // Peer gone mid-write: same as the threads writer
+                // erroring out — close without draining the rest.
+                conn.dead = true;
+                return;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn data_plane_parses_and_displays() {
+        assert_eq!(DataPlane::parse("epoll").unwrap(), DataPlane::Epoll);
+        assert_eq!(DataPlane::parse("threads").unwrap(), DataPlane::Threads);
+        assert!(DataPlane::parse("io_uring").is_err());
+        assert_eq!(DataPlane::Epoll.to_string(), "epoll");
+        assert_eq!(DataPlane::default(), DataPlane::Threads);
+    }
+
+    #[test]
+    fn advance_queued_walks_frame_boundaries() {
+        let mut out: VecDeque<Vec<u8>> = VecDeque::new();
+        out.push_back(vec![0u8; 4]);
+        out.push_back(vec![0u8; 6]);
+        out.push_back(vec![0u8; 2]);
+        // Partial first frame.
+        let front = advance_queued(&mut out, 0, 3);
+        assert_eq!((front, out.len()), (3, 3));
+        // Finish frame one, eat into frame two.
+        let front = advance_queued(&mut out, front, 3);
+        assert_eq!((front, out.len()), (2, 2));
+        // Everything else.
+        let front = advance_queued(&mut out, front, 6);
+        assert_eq!((front, out.len()), (0, 0));
+    }
+
+    #[cfg(target_os = "linux")]
+    #[test]
+    fn epoll_reports_readable_socket() {
+        use std::io::Write as _;
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let mut client = TcpStream::connect(addr).unwrap();
+        let (server, _) = listener.accept().unwrap();
+        server.set_nonblocking(true).unwrap();
+
+        let ep = Epoll::new().unwrap();
+        ep.add(server.as_raw_fd(), EPOLLIN | EPOLLRDHUP, 7).unwrap();
+        let mut events = Vec::new();
+        // Nothing to read yet.
+        ep.wait(Duration::from_millis(10), &mut events);
+        assert!(events.is_empty(), "unexpected events: {events:?}");
+        // One byte makes the socket readable with our token.
+        client.write_all(&[1]).unwrap();
+        client.flush().unwrap();
+        let deadline = Instant::now() + Duration::from_secs(2);
+        while events.is_empty() && Instant::now() < deadline {
+            ep.wait(Duration::from_millis(50), &mut events);
+        }
+        assert_eq!(events.len(), 1);
+        assert_eq!(events[0].0, 7);
+        assert_ne!(events[0].1 & EPOLLIN, 0);
+        ep.del(server.as_raw_fd()).unwrap();
+    }
+}

@@ -67,10 +67,12 @@
 //! `MetricsSnapshot::auth_rejects` instead of wedging an accept loop.
 
 use std::collections::HashMap;
+use std::io::{ErrorKind, Read};
 use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::os::unix::io::AsRawFd;
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 use std::sync::{Arc, Mutex, RwLock};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -86,8 +88,11 @@ use crate::telemetry::{
     WalConfig, WalFlusher, DEFAULT_JOURNAL_CAPACITY, DEFAULT_SPAN_CAPACITY, SHARD_NONE,
 };
 
-use super::auth::{client_split, server_split, FrameReader, FrameWriter, Psk};
+use super::auth::{
+    client_split, server_split, FrameDecoder, FrameReader, FrameWriter, Psk, Seal, FRAME_DEADLINE,
+};
 use super::metrics_http::MetricsHttp;
+use super::reactor::{self, ConnTx, DataPlane, Epoll, EPOLLIN, EPOLLRDHUP};
 use super::wire::Msg;
 
 /// Virtual nodes per shard on the hash ring.
@@ -172,6 +177,15 @@ pub struct RouterConfig {
     /// (`fabric-serve --trace-sample`). 0 disables tracing: submits
     /// stay v1-layout frames and the hot path costs one branch.
     pub trace_sample: u64,
+    /// §Scale (`--data-plane`): which transport carries the shard data
+    /// connections. `Threads` keeps the original blocking
+    /// reader-thread-per-shard pairs; `Epoll` multiplexes every shard
+    /// connection (reads, heartbeat writes, reply decode) onto one
+    /// reactor thread. The control plane (probes, metrics, events,
+    /// registration) stays blocking either way. The default follows
+    /// the `REMUS_DATA_PLANE` environment variable, so existing
+    /// integration/chaos suites re-run under the reactor unchanged.
+    pub data_plane: DataPlane,
 }
 
 impl Default for RouterConfig {
@@ -184,6 +198,7 @@ impl Default for RouterConfig {
             heartbeat_timeout: Duration::from_millis(1000),
             psk: None,
             trace_sample: 0,
+            data_plane: DataPlane::from_env_or(DataPlane::Threads),
         }
     }
 }
@@ -207,6 +222,39 @@ struct PendingReq {
     /// cleared when a parked request is re-dispatched after a
     /// membership change).
     tried: Vec<usize>,
+}
+
+/// The write half of a shard data connection, one variant per data
+/// plane. Both seal frames in enqueue order, so the implicit seal
+/// counters — and therefore the bytes on the wire — are identical
+/// across planes.
+enum DataTx {
+    /// Threads plane: a blocking writer with a bounded write timeout.
+    Blocking(FrameWriter),
+    /// Epoll plane: a reactor-managed nonblocking transmit queue
+    /// (bounded by [`reactor::MAX_CONN_BACKLOG`]; a wedged peer costs
+    /// an error here instead of a blocked thread).
+    Reactor(ConnTx),
+}
+
+impl DataTx {
+    fn send(&mut self, msg: &Msg) -> Result<()> {
+        match self {
+            DataTx::Blocking(w) => w.send(msg),
+            DataTx::Reactor(tx) => tx.send(msg),
+        }
+    }
+
+    /// Shut the underlying socket down in both directions, unblocking
+    /// (threads) or waking (epoll) the read side.
+    fn shutdown(&self) {
+        match self {
+            DataTx::Blocking(w) => {
+                let _ = w.stream().shutdown(std::net::Shutdown::Both);
+            }
+            DataTx::Reactor(tx) => tx.shutdown(),
+        }
+    }
 }
 
 /// Per-shard data-path heartbeat state, driven by the supervisor and
@@ -248,7 +296,7 @@ struct ShardState {
     reader_gone: AtomicBool,
     /// Write half of the data connection (`None` once down), sealing
     /// frames when the fleet runs authenticated.
-    writer: Mutex<Option<FrameWriter>>,
+    writer: Mutex<Option<DataTx>>,
     /// In-flight requests keyed by wire id.
     pending: Mutex<HashMap<u64, PendingReq>>,
     /// Data-path heartbeat bookkeeping (meaningful only while `up`).
@@ -311,6 +359,10 @@ struct RouterInner {
     /// retry-window deadline.
     parked: Mutex<Vec<(u64, PendingReq)>>,
     readers: Mutex<Vec<JoinHandle<()>>>,
+    /// Epoll plane only: hands freshly authenticated shard connections
+    /// to the router reactor thread. `None` on the threads plane (each
+    /// connection gets its own blocking reader thread instead).
+    reactor_tx: Mutex<Option<Sender<ReactorReg>>>,
     next_id: AtomicU64,
     /// Heartbeat nonce source (starts at 1; 0 means "none outstanding").
     hb_nonce: AtomicU64,
@@ -355,6 +407,21 @@ struct FleetEvents {
 
 /// Upper bound on the router's merged fleet-event cache.
 const FLEET_EVENT_CACHE: usize = 8192;
+
+/// A freshly connected (and, with a PSK, freshly authenticated) shard
+/// data connection handed from [`connect_shard`] to the router
+/// reactor. The stream is already nonblocking; the seals carry the
+/// established session's counters.
+struct ReactorReg {
+    shard_idx: usize,
+    stream: TcpStream,
+    rx_seal: Option<Seal>,
+    tx: ConnTx,
+}
+
+/// Router reactor tick: bounds how late a registration, a heartbeat
+/// flush, or a frame-deadline expiry can be observed.
+const ROUTER_TICK: Duration = Duration::from_millis(10);
 
 /// Observability options for a router (§Observability, wire v6),
 /// mirroring [`super::server::ServeOptions`]: the durable flight
@@ -419,6 +486,7 @@ impl Router {
             epoch: AtomicU64::new(0),
             parked: Mutex::new(Vec::new()),
             readers: Mutex::new(Vec::new()),
+            reactor_tx: Mutex::new(None),
             next_id: AtomicU64::new(1),
             hb_nonce: AtomicU64::new(1),
             hb_pings: AtomicU64::new(0),
@@ -431,6 +499,26 @@ impl Router {
             closing: AtomicBool::new(false),
         });
         inner.rebuild_ring();
+        // Data plane: the reactor thread must exist before the first
+        // shard connection is opened (connect_shard hands connections
+        // to it). Its handle joins with the reader handles at shutdown.
+        if cfg.data_plane == DataPlane::Epoll {
+            if reactor::supported() {
+                let (reg_tx, reg_rx) = channel();
+                *inner.reactor_tx.lock().unwrap() = Some(reg_tx);
+                let inner2 = inner.clone();
+                inner
+                    .readers
+                    .lock()
+                    .unwrap()
+                    .push(std::thread::spawn(move || router_reactor(inner2, reg_rx)));
+            } else {
+                eprintln!(
+                    "router: warning: the epoll data plane is not supported on this \
+                     platform; falling back to threads"
+                );
+            }
+        }
         // Flight recorder first: created before any connection or
         // listener, so every later error path drops (and joins) these
         // cleanly, and the WAL captures the fleet's story from frame
@@ -998,7 +1086,7 @@ impl RouterInner {
         let Some(shard) = self.shard(i) else { return };
         let was_up = shard.up.swap(false, Ordering::SeqCst);
         if let Some(w) = shard.writer.lock().unwrap().take() {
-            let _ = w.stream().shutdown(std::net::Shutdown::Both);
+            w.shutdown();
         }
         if was_up {
             self.bump_epoch();
@@ -1155,8 +1243,10 @@ impl RouterInner {
     }
 }
 
-/// Open shard `i`'s data connection, store the write half, respawn the
-/// reader, and atomically return the shard to routing.
+/// Open shard `i`'s data connection, store the write half, hand the
+/// read half to a reader (a dedicated thread on the threads plane, the
+/// shared reactor on the epoll plane), and atomically return the shard
+/// to routing.
 fn connect_shard(inner: &Arc<RouterInner>, i: usize) -> Result<()> {
     ensure!(!inner.closing.load(Ordering::SeqCst), "router shutting down");
     let shard = inner.shard(i).ok_or_else(|| anyhow!("no shard {i}"))?;
@@ -1170,46 +1260,92 @@ fn connect_shard(inner: &Arc<RouterInner>, i: usize) -> Result<()> {
     let _ = stream.set_nodelay(true);
     // Authenticate first (when the fleet runs with a PSK): a shard that
     // cannot complete the handshake never gets a writer, a reader, or a
-    // ring slot back.
+    // ring slot back. The handshake itself is blocking on both planes —
+    // its bytes must be identical — and bounded by its own timeouts.
     let (reader, writer) = client_split(stream, inner.cfg.psk.as_ref(), None)
         .with_context(|| format!("authenticating to shard {addr}"))?;
-    // Bound data-path writes: a peer wedged with full TCP buffers must
-    // surface as a write error (-> failover) rather than blocking the
-    // submitting thread or the heartbeat sweep. Capped at the heartbeat
-    // timeout (floored for very aggressive test configs) so a blocked
-    // write never stalls the supervisor longer than the detection
-    // deadline it is enforcing. Set *after* the handshake (which uses
-    // its own short bound). Idle reads stay unbounded — the reader is
-    // *designed* to block between frames, and half-open silence is the
-    // heartbeat deadline's job; only a frame started and never finished
-    // trips the reader's deadline.
-    let write_timeout = inner.cfg.heartbeat_timeout.max(Duration::from_millis(100));
-    let _ = writer.stream().set_write_timeout(Some(write_timeout));
-    *shard.writer.lock().unwrap() = Some(writer);
-    // Fresh heartbeat slate, with the first ping due immediately: a
-    // half-open peer (or one that wedged while down) is condemned
-    // within one heartbeat timeout of connecting, before it can absorb
-    // much traffic.
-    {
-        let now = Instant::now();
-        *shard.hb.lock().unwrap() = HbState { outstanding: 0, deadline: now, next_ping: now };
+    let reg_tx = inner.reactor_tx.lock().unwrap().clone();
+    match reg_tx {
+        None => {
+            // Threads plane. Bound data-path writes: a peer wedged with
+            // full TCP buffers must surface as a write error (->
+            // failover) rather than blocking the submitting thread or
+            // the heartbeat sweep. Capped at the heartbeat timeout
+            // (floored for very aggressive test configs) so a blocked
+            // write never stalls the supervisor longer than the
+            // detection deadline it is enforcing. Set *after* the
+            // handshake (which uses its own short bound). Idle reads
+            // stay unbounded — the reader is *designed* to block
+            // between frames, and half-open silence is the heartbeat
+            // deadline's job; only a frame started and never finished
+            // trips the reader's deadline.
+            let write_timeout = inner.cfg.heartbeat_timeout.max(Duration::from_millis(100));
+            let _ = writer.stream().set_write_timeout(Some(write_timeout));
+            *shard.writer.lock().unwrap() = Some(DataTx::Blocking(writer));
+            // Fresh heartbeat slate, with the first ping due
+            // immediately: a half-open peer (or one that wedged while
+            // down) is condemned within one heartbeat timeout of
+            // connecting, before it can absorb much traffic.
+            {
+                let now = Instant::now();
+                *shard.hb.lock().unwrap() =
+                    HbState { outstanding: 0, deadline: now, next_ping: now };
+            }
+            shard.reader_gone.store(false, Ordering::SeqCst);
+            shard.up.store(true, Ordering::SeqCst);
+            inner.bump_epoch();
+            let inner2 = inner.clone();
+            let handle = std::thread::spawn(move || reader_loop(inner2, i, reader));
+            let mut readers = inner.readers.lock().unwrap();
+            // Reap finished readers so a long-lived router reviving
+            // shards many times does not accumulate a handle per
+            // connection.
+            readers.retain(|h| !h.is_finished());
+            readers.push(handle);
+        }
+        Some(reg_tx) => {
+            // Epoll plane: take the blocking halves apart (preserving
+            // the seals' frame counters) and go nonblocking. O_NONBLOCK
+            // lives on the shared open file description, so one call
+            // covers both dup'd halves; write timeouts are moot — a
+            // full socket buffer queues into the ConnTx backlog instead
+            // of blocking, bounded by `reactor::MAX_CONN_BACKLOG`.
+            let (read_stream, rx_seal) = reader.into_parts();
+            let (write_stream, tx_seal) = writer.into_parts();
+            read_stream
+                .set_nonblocking(true)
+                .with_context(|| format!("nonblocking mode for shard {addr}"))?;
+            let tx = ConnTx::new(write_stream, tx_seal);
+            {
+                let now = Instant::now();
+                *shard.hb.lock().unwrap() =
+                    HbState { outstanding: 0, deadline: now, next_ping: now };
+            }
+            shard.reader_gone.store(false, Ordering::SeqCst);
+            *shard.writer.lock().unwrap() = Some(DataTx::Reactor(tx.clone()));
+            let reg = ReactorReg { shard_idx: i, stream: read_stream, rx_seal, tx };
+            if reg_tx.send(reg).is_err() {
+                // Reactor gone (failed at startup, or shutdown raced
+                // this connect): undo and fail the connect loudly.
+                if let Some(w) = shard.writer.lock().unwrap().take() {
+                    w.shutdown();
+                }
+                shard.reader_gone.store(true, Ordering::SeqCst);
+                bail!("router reactor is not running");
+            }
+            shard.up.store(true, Ordering::SeqCst);
+            inner.bump_epoch();
+        }
     }
-    shard.reader_gone.store(false, Ordering::SeqCst);
-    shard.up.store(true, Ordering::SeqCst);
-    inner.bump_epoch();
-    let inner2 = inner.clone();
-    let handle = std::thread::spawn(move || reader_loop(inner2, i, reader));
-    let mut readers = inner.readers.lock().unwrap();
-    // Reap finished readers so a long-lived router reviving shards many
-    // times does not accumulate a handle per connection.
-    readers.retain(|h| !h.is_finished());
-    readers.push(handle);
     Ok(())
 }
 
-/// Per-shard reader: matches `Result` frames to pending requests, turns
-/// capacity errors into failovers, and on disconnect re-routes whatever
-/// was still in flight, then hands the slot back for revival.
+/// Per-shard reader (threads plane): matches `Result` frames to pending
+/// requests, turns capacity errors into failovers, and on disconnect
+/// re-routes whatever was still in flight, then hands the slot back for
+/// revival. The message handling and the exit drain are shared with the
+/// epoll plane ([`handle_shard_msg`], [`shard_conn_closed`]), so both
+/// planes fail over identically by construction.
 fn reader_loop(inner: Arc<RouterInner>, shard_idx: usize, mut reader: FrameReader) {
     let Some(shard) = inner.shard(shard_idx) else { return };
     loop {
@@ -1222,67 +1358,99 @@ fn reader_loop(inner: Arc<RouterInner>, shard_idx: usize, mut reader: FrameReade
                 // it, then fail over exactly like a disconnect — the
                 // drain below replays every in-flight request on the
                 // next live shard, so the attack costs zero replies.
-                if reader.is_sealed() && !inner.closing.load(Ordering::SeqCst) {
-                    inner.auth_rejects.fetch_add(1, Ordering::SeqCst);
-                    inner.journal.record_for(SHARD_NONE, EventKind::AuthReject);
-                    eprintln!(
-                        "router: shard {shard_idx} data connection failed integrity: {e:#}"
-                    );
+                if reader.is_sealed() {
+                    shard_integrity_reject(&inner, shard_idx, &e);
                 }
                 break;
             }
         };
-        // Any inbound frame proves the data path is alive in both
-        // directions: clear the outstanding ping (a Result racing ahead
-        // of its Pong counts) and push the next one out.
-        {
-            let mut hb = shard.hb.lock().unwrap();
-            hb.outstanding = 0;
-            hb.next_ping = Instant::now() + inner.cfg.heartbeat_period;
-        }
-        match msg {
-            Msg::Result { id, value, latency_us, error } => {
-                let req = shard.pending.lock().unwrap().remove(&id);
-                let Some(req) = req else { continue };
-                // An all-workers-retired shard answers every request
-                // with the coordinator's capacity error: mark it down
-                // and fail the request over instead of delivering it.
-                let capacity_error =
-                    error.as_deref().is_some_and(|e| e.contains(NO_CAPACITY_ERROR));
-                if capacity_error && !inner.closing.load(Ordering::SeqCst) {
-                    inner.mark_down(shard_idx);
-                    inner.route(id, req);
-                    continue;
-                }
-                let latency = req.submitted.elapsed();
-                if inner.tracer.sampled(req.trace) {
-                    // Router-side stages of a sampled request: queue
-                    // (submitted -> last socket write) and wire transit
-                    // (everything the shard's own spans don't cover).
-                    // The shard reported its service time truncated to
-                    // whole µs; rounding it *up* here keeps the
-                    // fleet-wide invariant sum(stages) <= e2e.
-                    let e2e = latency.as_nanos() as u64;
-                    let queue =
-                        req.sent.saturating_duration_since(req.submitted).as_nanos() as u64;
-                    let service = (latency_us + 1) * 1000;
-                    let transit = e2e.saturating_sub(queue).saturating_sub(service);
-                    let t0 = inner.tracer.ns_of(req.submitted);
-                    inner.tracer.record(req.trace, Stage::RouterQueue, t0, queue);
-                    inner.tracer.record(req.trace, Stage::WireTransit, t0 + queue, transit);
-                }
-                let _ = req.reply.send(RequestResult { value, latency, error });
-            }
-            Msg::Pong { nonce: _ } => {
-                inner.hb_pongs.fetch_add(1, Ordering::Relaxed);
-            }
-            // Control replies ride dedicated connections; anything else
-            // here is a protocol violation — drop the connection.
-            _ => break,
+        if !handle_shard_msg(&inner, &shard, shard_idx, msg) {
+            break;
         }
     }
+    shard_conn_closed(&inner, shard_idx, &shard);
+}
+
+/// Count (and journal) a tampered/replayed/trickled frame on a sealed
+/// shard data connection — shared by both planes' read paths.
+fn shard_integrity_reject(inner: &RouterInner, shard_idx: usize, e: &anyhow::Error) {
+    if inner.closing.load(Ordering::SeqCst) {
+        return;
+    }
+    inner.auth_rejects.fetch_add(1, Ordering::SeqCst);
+    inner.journal.record_for(SHARD_NONE, EventKind::AuthReject);
+    eprintln!("router: shard {shard_idx} data connection failed integrity: {e:#}");
+}
+
+/// Handle one inbound frame on a shard data connection. Returns `false`
+/// on a protocol violation (the connection must be dropped). This is
+/// the single message path for both data planes: the threads reader and
+/// the epoll reactor produce bit-identical routing, failover, heartbeat
+/// and tracing behaviour because they run exactly this code.
+fn handle_shard_msg(
+    inner: &RouterInner,
+    shard: &ShardState,
+    shard_idx: usize,
+    msg: Msg,
+) -> bool {
+    // Any inbound frame proves the data path is alive in both
+    // directions: clear the outstanding ping (a Result racing ahead
+    // of its Pong counts) and push the next one out.
+    {
+        let mut hb = shard.hb.lock().unwrap();
+        hb.outstanding = 0;
+        hb.next_ping = Instant::now() + inner.cfg.heartbeat_period;
+    }
+    match msg {
+        Msg::Result { id, value, latency_us, error } => {
+            let req = shard.pending.lock().unwrap().remove(&id);
+            let Some(req) = req else { return true };
+            // An all-workers-retired shard answers every request
+            // with the coordinator's capacity error: mark it down
+            // and fail the request over instead of delivering it.
+            let capacity_error = error.as_deref().is_some_and(|e| e.contains(NO_CAPACITY_ERROR));
+            if capacity_error && !inner.closing.load(Ordering::SeqCst) {
+                inner.mark_down(shard_idx);
+                inner.route(id, req);
+                return true;
+            }
+            let latency = req.submitted.elapsed();
+            if inner.tracer.sampled(req.trace) {
+                // Router-side stages of a sampled request: queue
+                // (submitted -> last socket write) and wire transit
+                // (everything the shard's own spans don't cover).
+                // The shard reported its service time truncated to
+                // whole µs; rounding it *up* here keeps the
+                // fleet-wide invariant sum(stages) <= e2e.
+                let e2e = latency.as_nanos() as u64;
+                let queue = req.sent.saturating_duration_since(req.submitted).as_nanos() as u64;
+                let service = (latency_us + 1) * 1000;
+                let transit = e2e.saturating_sub(queue).saturating_sub(service);
+                let t0 = inner.tracer.ns_of(req.submitted);
+                inner.tracer.record(req.trace, Stage::RouterQueue, t0, queue);
+                inner.tracer.record(req.trace, Stage::WireTransit, t0 + queue, transit);
+            }
+            let _ = req.reply.send(RequestResult { value, latency, error });
+            true
+        }
+        Msg::Pong { nonce: _ } => {
+            inner.hb_pongs.fetch_add(1, Ordering::Relaxed);
+            true
+        }
+        // Control replies ride dedicated connections; anything else
+        // here is a protocol violation — drop the connection.
+        _ => false,
+    }
+}
+
+/// The shared reader exit path: mark the shard down, fail over (or, at
+/// router shutdown, resolve) the in-flight tail, and only then hand the
+/// slot back for revival. On the threads plane this runs as the reader
+/// thread's tail; on the epoll plane the reactor runs it when it
+/// retires a connection — either way the pending table is empty before
+/// `reader_gone` flips, so no two readers ever share one table.
+fn shard_conn_closed(inner: &RouterInner, shard_idx: usize, shard: &ShardState) {
     inner.mark_down(shard_idx);
-    // Fail over (or, at router shutdown, resolve) the in-flight tail.
     let drained: Vec<(u64, PendingReq)> = shard.pending.lock().unwrap().drain().collect();
     let closing = inner.closing.load(Ordering::SeqCst);
     if !drained.is_empty() && !closing {
@@ -1307,10 +1475,165 @@ fn reader_loop(inner: Arc<RouterInner>, shard_idx: usize, mut reader: FrameReade
             inner.route(id, req);
         }
     }
-    // Only now may the supervisor open a replacement connection: the
-    // pending table is empty and no other thread will touch it on this
-    // slot's behalf.
     shard.reader_gone.store(true, Ordering::SeqCst);
+}
+
+/// One reactor-managed shard data connection (epoll plane).
+struct ShardConn {
+    shard_idx: usize,
+    stream: TcpStream,
+    dec: FrameDecoder,
+    tx: ConnTx,
+    /// Armed while a partial frame is buffered — the nonblocking
+    /// equivalent of the blocking reader's [`FRAME_DEADLINE`].
+    frame_deadline: Option<Instant>,
+}
+
+/// The epoll plane's counterpart of every [`reader_loop`] thread: one
+/// loop multiplexing all shard data connections. Reads and decodes
+/// inbound frames (dispatching through [`handle_shard_msg`]), enforces
+/// the per-frame deadline, flushes transmit backlogs the nonblocking
+/// writes left behind, and runs [`shard_conn_closed`] when a connection
+/// dies — so failover, replay, and shutdown resolution are identical to
+/// the threads plane.
+fn router_reactor(inner: Arc<RouterInner>, reg_rx: Receiver<ReactorReg>) {
+    let ep = match Epoll::new() {
+        Ok(ep) => ep,
+        Err(e) => {
+            // Dropping reg_rx makes every subsequent connect_shard fail
+            // loudly instead of silently queueing into nowhere.
+            eprintln!("router: FATAL: cannot start epoll reactor: {e:#}");
+            return;
+        }
+    };
+    let mut table: HashMap<u64, ShardConn> = HashMap::new();
+    let mut next_token = 0u64;
+    let mut events: Vec<(u64, u32)> = Vec::new();
+    while !inner.closing.load(Ordering::SeqCst) {
+        // Adopt freshly connected shards.
+        loop {
+            match reg_rx.try_recv() {
+                Ok(reg) => {
+                    let token = next_token;
+                    next_token += 1;
+                    if ep.add(reg.stream.as_raw_fd(), EPOLLIN | EPOLLRDHUP, token).is_err() {
+                        let _ = reg.stream.shutdown(std::net::Shutdown::Both);
+                        if let Some(shard) = inner.shard(reg.shard_idx) {
+                            shard_conn_closed(&inner, reg.shard_idx, &shard);
+                        }
+                        continue;
+                    }
+                    table.insert(
+                        token,
+                        ShardConn {
+                            shard_idx: reg.shard_idx,
+                            stream: reg.stream,
+                            dec: FrameDecoder::new(reg.rx_seal),
+                            tx: reg.tx,
+                            frame_deadline: None,
+                        },
+                    );
+                }
+                Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => break,
+            }
+        }
+        ep.wait(ROUTER_TICK, &mut events);
+        let mut closed: Vec<u64> = Vec::new();
+        for &(token, _evs) in &events {
+            let Some(conn) = table.get_mut(&token) else { continue };
+            if !shard_read_ready(&inner, conn) {
+                closed.push(token);
+            }
+        }
+        // Per-tick sweep: frame-deadline expiry and leftover transmit
+        // backlog (bytes a WouldBlock left queued in the ConnTx).
+        let now = Instant::now();
+        for (&token, conn) in table.iter_mut() {
+            if closed.contains(&token) {
+                continue;
+            }
+            if let Some(deadline) = conn.frame_deadline {
+                if now >= deadline {
+                    // Same trickler semantics (and accounting) as the
+                    // blocking reader's FRAME_DEADLINE error.
+                    if conn.dec.is_sealed() {
+                        let e = anyhow!(
+                            "frame incomplete after {FRAME_DEADLINE:?} (slow or stalled peer)"
+                        );
+                        shard_integrity_reject(&inner, conn.shard_idx, &e);
+                    }
+                    closed.push(token);
+                    continue;
+                }
+            }
+            if conn.tx.flush().is_err() {
+                closed.push(token);
+            }
+        }
+        for token in closed {
+            if let Some(conn) = table.remove(&token) {
+                let _ = ep.del(conn.stream.as_raw_fd());
+                let _ = conn.stream.shutdown(std::net::Shutdown::Both);
+                if let Some(shard) = inner.shard(conn.shard_idx) {
+                    shard_conn_closed(&inner, conn.shard_idx, &shard);
+                }
+            }
+        }
+    }
+    // Router shutdown: run the reader exit path for every remaining
+    // connection so in-flight requests resolve with explicit shutdown
+    // errors, exactly as each joined reader thread would have.
+    for (_, conn) in table.drain() {
+        let _ = ep.del(conn.stream.as_raw_fd());
+        let _ = conn.stream.shutdown(std::net::Shutdown::Both);
+        if let Some(shard) = inner.shard(conn.shard_idx) {
+            shard_conn_closed(&inner, conn.shard_idx, &shard);
+        }
+    }
+}
+
+/// Drain a readable shard connection into its decoder and dispatch
+/// every complete message. Returns `false` when the connection must be
+/// retired (EOF, read error, decode failure, protocol violation) — the
+/// same conditions that end a blocking [`reader_loop`].
+fn shard_read_ready(inner: &RouterInner, conn: &mut ShardConn) -> bool {
+    let Some(shard) = inner.shard(conn.shard_idx) else { return false };
+    let mut buf = [0u8; 16 * 1024];
+    'read: loop {
+        let n = {
+            let mut r = &conn.stream;
+            match r.read(&mut buf) {
+                Ok(0) => return false,
+                Ok(n) => n,
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break 'read,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(_) => return false,
+            }
+        };
+        conn.dec.push(&buf[..n]);
+        loop {
+            match conn.dec.try_next() {
+                Ok(Some(msg)) => {
+                    if !handle_shard_msg(inner, &shard, conn.shard_idx, msg) {
+                        return false;
+                    }
+                }
+                Ok(None) => break,
+                Err(e) => {
+                    if conn.dec.is_sealed() {
+                        shard_integrity_reject(inner, conn.shard_idx, &e);
+                    }
+                    return false;
+                }
+            }
+        }
+    }
+    conn.frame_deadline = if conn.dec.mid_frame() {
+        Some(conn.frame_deadline.unwrap_or_else(|| Instant::now() + FRAME_DEADLINE))
+    } else {
+        None
+    };
+    true
 }
 
 /// The router's self-healing loop: enforce data-path heartbeats,
@@ -1684,6 +2007,7 @@ mod tests {
             epoch: AtomicU64::new(0),
             parked: Mutex::new(Vec::new()),
             readers: Mutex::new(Vec::new()),
+            reactor_tx: Mutex::new(None),
             next_id: AtomicU64::new(1),
             hb_nonce: AtomicU64::new(1),
             hb_pings: AtomicU64::new(0),

@@ -1,17 +1,23 @@
 //! The fabric server: one process, one [`Coordinator`], many TCP
-//! clients.
+//! clients, served by one of two data planes (`--data-plane`):
 //!
-//! Each accepted connection gets a read thread (decoding frames,
-//! submitting to the coordinator) and a write thread (serializing
-//! replies). Replies are written strictly in request order per
-//! connection: the writer blocks on each submit's coordinator reply
-//! channel in FIFO order, which is safe because the coordinator always
-//! resolves every request (a value or an explicit error — never a
-//! dropped channel, see `coordinator::server`). That FIFO also means a
-//! control request (metrics/health) sent on a busy data connection
-//! queues behind the in-flight submits — latency-sensitive probes
-//! belong on their own short-lived connection, which is exactly what
-//! `fabric::router` does.
+//! * **threads** (the bit-exact reference): each accepted connection
+//!   gets a read thread (decoding frames, submitting to the
+//!   coordinator) and a write thread (serializing replies).
+//! * **epoll**: a single readiness loop multiplexes every connection
+//!   over nonblocking sockets (see [`super::reactor`]) — same frames,
+//!   same FIFO reply order, same rejection semantics, no thread pair
+//!   per connection.
+//!
+//! Replies are written strictly in request order per connection: the
+//! writer blocks on (or, on the reactor, polls) each submit's
+//! coordinator reply channel in FIFO order, which is safe because the
+//! coordinator always resolves every request (a value or an explicit
+//! error — never a dropped channel, see `coordinator::server`). That
+//! FIFO also means a control request (metrics/health) sent on a busy
+//! data connection queues behind the in-flight submits —
+//! latency-sensitive probes belong on their own short-lived
+//! connection, which is exactly what `fabric::router` does.
 //!
 //! Shutdown has two triggers: a remote [`Msg::Shutdown`] frame flips
 //! the stop flag (acked first) so a `remus fabric-serve` process can be
@@ -35,6 +41,7 @@ use crate::telemetry::{mint_boot_epoch, WalConfig, WalFlusher};
 
 use super::auth::{client_split, server_split, FrameReader, FrameWriter, Psk};
 use super::metrics_http::MetricsHttp;
+use super::reactor::{self, DataPlane};
 use super::wire::Msg;
 
 /// How often a registered shard re-announces itself to the router
@@ -45,11 +52,23 @@ use super::wire::Msg;
 /// refresh period, each at its previously assigned ring slot.
 pub const REG_REFRESH: Duration = Duration::from_millis(500);
 
+/// How long the threads plane lets a reply write block before giving
+/// up on the connection. Without a bound, a peer that stops draining
+/// its socket wedges that connection's writer thread — and the handle
+/// it pins — forever; with it, the writer errors out and shuts the
+/// socket down so the reader unblocks too. (The epoll plane bounds the
+/// same hazard in bytes instead: see
+/// [`super::reactor::MAX_CONN_BACKLOG`].)
+pub const DEFAULT_REPLY_WRITE_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// Exponential accept-error backoff: start here, double up to the cap.
+pub(crate) const ACCEPT_BACKOFF_START: Duration = Duration::from_millis(10);
+pub(crate) const ACCEPT_BACKOFF_MAX: Duration = Duration::from_secs(1);
+
 /// Observability options for a fabric server (§Observability, wire
 /// v6): the durable flight recorder and the scrape endpoint. Both are
 /// off by default; [`FabricServer::start_with_auth`] keeps its exact
 /// pre-v6 behaviour apart from the (always minted) boot epoch.
-#[derive(Default)]
 pub struct ServeOptions {
     /// Fleet PSK (see [`FabricServer::start_with_auth`]).
     pub psk: Option<Psk>,
@@ -62,14 +81,155 @@ pub struct ServeOptions {
     pub metrics_addr: Option<String>,
     /// WAL tuning (segment size, footprint bound, fsync policy).
     pub wal: WalConfig,
+    /// `--data-plane`: the connection transport (§Scale). The default
+    /// honours the `REMUS_DATA_PLANE` environment override so the
+    /// integration suites can re-run unchanged under either plane.
+    pub data_plane: DataPlane,
+    /// Threads-plane reply write bound (see
+    /// [`DEFAULT_REPLY_WRITE_TIMEOUT`]).
+    pub reply_write_timeout: Duration,
 }
 
-/// A reply the connection's writer thread must deliver, in order.
-enum Reply {
+impl Default for ServeOptions {
+    fn default() -> Self {
+        Self {
+            psk: None,
+            journal_dir: None,
+            metrics_addr: None,
+            wal: WalConfig::default(),
+            data_plane: DataPlane::from_env_or(DataPlane::Threads),
+            reply_write_timeout: DEFAULT_REPLY_WRITE_TIMEOUT,
+        }
+    }
+}
+
+/// A reply the connection's writer (thread or reactor) must deliver,
+/// in order.
+pub(crate) enum Reply {
     /// A submitted request: block on the coordinator's reply channel.
     Pending(u64, Receiver<RequestResult>),
     /// An immediate control reply (metrics/health/ack).
     Now(Msg),
+}
+
+/// Outcome of dispatching one inbound message. Both data planes route
+/// every message through [`dispatch_msg`], so the reactor answers
+/// byte-identically to the threads reference.
+pub(crate) enum Dispatch {
+    /// Queue this reply behind everything already queued (FIFO).
+    Reply(Reply),
+    /// Queue the ack, then stop the whole server.
+    Shutdown(Reply),
+    /// Protocol violation: drop the connection.
+    Violation,
+}
+
+/// Handle one inbound message against the coordinator — the single
+/// dispatch path shared by `conn_loop` (threads) and the reactor.
+pub(crate) fn dispatch_msg(
+    msg: Msg,
+    coord: &Coordinator,
+    auth_rejects: &AtomicU64,
+    boot_epoch: u64,
+) -> Dispatch {
+    match msg {
+        Msg::Submit { id, kind, a, b, trace } => {
+            // The trace id (wire v5, 0 = untraced) was minted by the
+            // router; carrying it into the coordinator lets this shard
+            // record the worker-side stage spans of the same
+            // end-to-end timeline.
+            let rx = coord.submit_traced(kind, a, b, trace);
+            Dispatch::Reply(Reply::Pending(id, rx))
+        }
+        Msg::MetricsReq => {
+            let mut m = coord.metrics();
+            m.auth_rejects = auth_rejects.load(Ordering::SeqCst);
+            Dispatch::Reply(Reply::Now(Msg::MetricsReply(m)))
+        }
+        Msg::HealthReq => {
+            let m = coord.metrics();
+            Dispatch::Reply(Reply::Now(Msg::HealthReply {
+                serving: coord.is_serving(),
+                workers: m.worker_health.len() as u32,
+                routable: coord.healthy_workers() as u32,
+                retired: m.retired_workers() as u32,
+            }))
+        }
+        Msg::Ping { nonce } => {
+            // Data-path heartbeat (wire v3): echo the nonce through the
+            // ordinary FIFO reply stream. Behind a deep backlog the
+            // pong queues after the pending results — which is fine,
+            // because any frame the router reads (results included)
+            // proves this connection is not half-open.
+            Dispatch::Reply(Reply::Now(Msg::Pong { nonce }))
+        }
+        Msg::Events { since } => {
+            // §Telemetry (wire v5): incremental journal pull. The reply
+            // carries this shard's events at-or-past the caller's
+            // cursor plus the next cursor value; the router merges
+            // replies fleet-wide with per-shard cursors
+            // (`Router::fleet_events`). The boot epoch (wire v6) lets
+            // the router detect that this process restarted — sequence
+            // numbers restarted at 0 — and reset its cursor instead of
+            // stalling.
+            let (events, latest) = coord.journal().since(since);
+            Dispatch::Reply(Reply::Now(Msg::EventsReply { latest, events, boot_epoch }))
+        }
+        Msg::SpansReq => {
+            // §Telemetry (wire v5): dump this shard's recorded stage
+            // spans (empty unless `--trace-sample` is on).
+            let spans = coord.tracer().spans();
+            Dispatch::Reply(Reply::Now(Msg::SpansReply { spans }))
+        }
+        Msg::Shutdown => Dispatch::Shutdown(Reply::Now(Msg::ShutdownAck)),
+        // Server-to-client messages (or registration traffic, which
+        // belongs on the router's registration port) arriving at the
+        // server: protocol violation, drop the connection.
+        Msg::Result { .. }
+        | Msg::MetricsReply(_)
+        | Msg::HealthReply { .. }
+        | Msg::ShutdownAck
+        | Msg::Register { .. }
+        | Msg::Welcome { .. }
+        | Msg::Pong { .. }
+        | Msg::EventsReply { .. }
+        | Msg::SpansReply { .. } => Dispatch::Violation,
+    }
+}
+
+/// Render a resolved coordinator reply as its wire message.
+pub(crate) fn result_msg(id: u64, r: RequestResult) -> Msg {
+    Msg::Result {
+        id,
+        value: r.value,
+        latency_us: r.latency.as_micros() as u64,
+        error: r.error,
+    }
+}
+
+/// Defensive reply for a dropped coordinator channel. The coordinator
+/// guarantees a reply, so this should never fire — but if it ever
+/// does, the client sees an explicit error, not a hung request.
+pub(crate) fn dropped_result_msg(id: u64) -> Msg {
+    Msg::Result {
+        id,
+        value: 0,
+        latency_us: 0,
+        error: Some("coordinator dropped the reply channel".to_string()),
+    }
+}
+
+/// Classify an `accept` error: transient kinds — aborted/reset
+/// connections racing the accept, signal interruptions, fd exhaustion
+/// (ENFILE/EMFILE, which recovers when connections close) — deserve a
+/// bounded-backoff retry. Anything else is a dead listener.
+pub(crate) fn transient_accept_error(e: &std::io::Error) -> bool {
+    matches!(
+        e.kind(),
+        std::io::ErrorKind::ConnectionAborted
+            | std::io::ErrorKind::ConnectionReset
+            | std::io::ErrorKind::Interrupted
+    ) || matches!(e.raw_os_error(), Some(23) | Some(24)) // ENFILE / EMFILE
 }
 
 /// One fabric endpoint fronting an in-process [`Coordinator`].
@@ -161,6 +321,14 @@ impl FabricServer {
             }
             None => None,
         };
+        let mut data_plane = opts.data_plane;
+        if data_plane == DataPlane::Epoll && !reactor::supported() {
+            eprintln!(
+                "fabric server: --data-plane epoll is not supported on this platform, \
+                 falling back to threads"
+            );
+            data_plane = DataPlane::Threads;
+        }
         let accept_handle = {
             let coord = coord.clone();
             let stop = stop.clone();
@@ -168,18 +336,34 @@ impl FabricServer {
             let conn_handles = conn_handles.clone();
             let psk = psk.clone();
             let auth_rejects = auth_rejects.clone();
-            std::thread::spawn(move || {
-                accept_loop(
-                    listener,
-                    coord,
-                    stop,
-                    conns,
-                    conn_handles,
-                    psk,
-                    auth_rejects,
-                    boot_epoch,
-                )
-            })
+            let reply_write_timeout = opts.reply_write_timeout;
+            match data_plane {
+                DataPlane::Threads => std::thread::spawn(move || {
+                    accept_loop(
+                        listener,
+                        coord,
+                        stop,
+                        conns,
+                        conn_handles,
+                        psk,
+                        auth_rejects,
+                        boot_epoch,
+                        reply_write_timeout,
+                    )
+                }),
+                DataPlane::Epoll => std::thread::spawn(move || {
+                    reactor::serve_reactor(
+                        listener,
+                        coord,
+                        stop,
+                        conns,
+                        conn_handles,
+                        psk,
+                        auth_rejects,
+                        boot_epoch,
+                    )
+                }),
+            }
         };
         Ok(Self {
             addr,
@@ -310,7 +494,7 @@ impl FabricServer {
 
 /// Sleep in short slices so the registration loop notices a shutdown
 /// within tens of milliseconds instead of a full refresh period.
-fn sleep_unless_stopped(stop: &AtomicBool, total: Duration) {
+pub(crate) fn sleep_unless_stopped(stop: &AtomicBool, total: Duration) {
     let deadline = std::time::Instant::now() + total;
     while !stop.load(Ordering::SeqCst) {
         let left = deadline.saturating_duration_since(std::time::Instant::now());
@@ -345,11 +529,14 @@ fn accept_loop(
     psk: Arc<Option<Psk>>,
     auth_rejects: Arc<AtomicU64>,
     boot_epoch: u64,
+    reply_write_timeout: Duration,
 ) {
     let mut next_conn_id = 0u64;
+    let mut backoff = ACCEPT_BACKOFF_START;
     while !stop.load(Ordering::SeqCst) {
         match listener.accept() {
             Ok((stream, _peer)) => {
+                backoff = ACCEPT_BACKOFF_START;
                 let _ = stream.set_nodelay(true);
                 // The accepted socket is non-blocking (inherited on some
                 // platforms): force blocking semantics for the framed
@@ -371,9 +558,15 @@ fn accept_loop(
                 // accept loop.
                 let handle = std::thread::spawn(move || {
                     match server_split(stream, (*psk).as_ref(), None) {
-                        Ok((reader, writer)) => {
-                            conn_loop(reader, writer, coord, stop, &auth_rejects, boot_epoch)
-                        }
+                        Ok((reader, writer)) => conn_loop(
+                            reader,
+                            writer,
+                            coord,
+                            stop,
+                            &auth_rejects,
+                            boot_epoch,
+                            reply_write_timeout,
+                        ),
                         Err(e) => {
                             auth_rejects.fetch_add(1, Ordering::SeqCst);
                             eprintln!("fabric server: rejected peer: {e:#}");
@@ -391,12 +584,23 @@ fn accept_loop(
             Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                 std::thread::sleep(Duration::from_millis(2));
             }
+            Err(e) if transient_accept_error(&e) => {
+                // One aborted connection (or a signal, or a transient
+                // fd-exhaustion spike) must not kill the listener — that
+                // would turn a blip into a permanently dead shard. Back
+                // off and keep accepting.
+                eprintln!(
+                    "fabric server: transient accept error (retrying in {backoff:?}): {e}"
+                );
+                sleep_unless_stopped(&stop, backoff);
+                backoff = (backoff * 2).min(ACCEPT_BACKOFF_MAX);
+            }
             Err(e) => {
-                // A persistent accept failure (e.g. fd exhaustion) makes
-                // this endpoint unreachable — including for remote
-                // Shutdown frames — so flip the stop flag too: better a
-                // clean `wait()` return than a zombie shard.
-                eprintln!("fabric server: accept failed, stopping: {e}");
+                // A persistent accept failure makes this endpoint
+                // unreachable — including for remote Shutdown frames —
+                // so flip the stop flag too: better a clean `wait()`
+                // return than a zombie shard.
+                eprintln!("fabric server: FATAL: accept failed, stopping listener: {e}");
                 stop.store(true, Ordering::SeqCst);
                 break;
             }
@@ -411,11 +615,14 @@ fn conn_loop(
     stop: Arc<AtomicBool>,
     auth_rejects: &AtomicU64,
     boot_epoch: u64,
+    reply_write_timeout: Duration,
 ) {
     // The handshake (when one ran) left a short write timeout on the
-    // socket; the data path writes replies however long the peer takes
-    // to drain them, as before.
-    let _ = writer.stream().set_write_timeout(None);
+    // socket. The data path gets a *bounded* one: a peer that stops
+    // draining its replies must error the writer out (which shuts the
+    // socket down and unblocks this reader), not wedge the connection
+    // pair forever.
+    let _ = writer.stream().set_write_timeout(Some(reply_write_timeout));
     let sealed = reader.is_sealed();
     let (reply_tx, reply_rx) = channel::<Reply>();
     let writer = std::thread::spawn(move || writer_loop(writer, reply_rx));
@@ -434,87 +641,18 @@ fn conn_loop(
                 break;
             }
         };
-        match msg {
-            Msg::Submit { id, kind, a, b, trace } => {
-                // The trace id (wire v5, 0 = untraced) was minted by
-                // the router; carrying it into the coordinator lets
-                // this shard record the worker-side stage spans of the
-                // same end-to-end timeline.
-                let rx = coord.submit_traced(kind, a, b, trace);
-                if reply_tx.send(Reply::Pending(id, rx)).is_err() {
+        match dispatch_msg(msg, &coord, auth_rejects, boot_epoch) {
+            Dispatch::Reply(reply) => {
+                if reply_tx.send(reply).is_err() {
                     break;
                 }
             }
-            Msg::MetricsReq => {
-                let mut m = coord.metrics();
-                m.auth_rejects = auth_rejects.load(Ordering::SeqCst);
-                let reply = Msg::MetricsReply(m);
-                if reply_tx.send(Reply::Now(reply)).is_err() {
-                    break;
-                }
-            }
-            Msg::HealthReq => {
-                let m = coord.metrics();
-                let reply = Msg::HealthReply {
-                    serving: coord.is_serving(),
-                    workers: m.worker_health.len() as u32,
-                    routable: coord.healthy_workers() as u32,
-                    retired: m.retired_workers() as u32,
-                };
-                if reply_tx.send(Reply::Now(reply)).is_err() {
-                    break;
-                }
-            }
-            Msg::Ping { nonce } => {
-                // Data-path heartbeat (wire v3): echo the nonce through
-                // the ordinary FIFO reply stream. Behind a deep backlog
-                // the pong queues after the pending results — which is
-                // fine, because any frame the router reads (results
-                // included) proves this connection is not half-open.
-                if reply_tx.send(Reply::Now(Msg::Pong { nonce })).is_err() {
-                    break;
-                }
-            }
-            Msg::Events { since } => {
-                // §Telemetry (wire v5): incremental journal pull. The
-                // reply carries this shard's events at-or-past the
-                // caller's cursor plus the next cursor value; the
-                // router merges replies fleet-wide with per-shard
-                // cursors (`Router::fleet_events`). The boot epoch
-                // (wire v6) lets the router detect that this process
-                // restarted — sequence numbers restarted at 0 — and
-                // reset its cursor instead of stalling.
-                let (events, latest) = coord.journal().since(since);
-                let reply = Msg::EventsReply { latest, events, boot_epoch };
-                if reply_tx.send(Reply::Now(reply)).is_err() {
-                    break;
-                }
-            }
-            Msg::SpansReq => {
-                // §Telemetry (wire v5): dump this shard's recorded
-                // stage spans (empty unless `--trace-sample` is on).
-                let spans = coord.tracer().spans();
-                if reply_tx.send(Reply::Now(Msg::SpansReply { spans })).is_err() {
-                    break;
-                }
-            }
-            Msg::Shutdown => {
-                let _ = reply_tx.send(Reply::Now(Msg::ShutdownAck));
+            Dispatch::Shutdown(ack) => {
+                let _ = reply_tx.send(ack);
                 stop.store(true, Ordering::SeqCst);
                 break;
             }
-            // Server-to-client messages (or registration traffic, which
-            // belongs on the router's registration port) arriving at the
-            // server: protocol violation, drop the connection.
-            Msg::Result { .. }
-            | Msg::MetricsReply(_)
-            | Msg::HealthReply { .. }
-            | Msg::ShutdownAck
-            | Msg::Register { .. }
-            | Msg::Welcome { .. }
-            | Msg::Pong { .. }
-            | Msg::EventsReply { .. }
-            | Msg::SpansReply { .. } => break,
+            Dispatch::Violation => break,
         }
     }
     // Closing the reply channel lets the writer drain the pending
@@ -528,24 +666,18 @@ fn writer_loop(mut writer: FrameWriter, reply_rx: Receiver<Reply>) {
         let msg = match reply {
             Reply::Now(m) => m,
             Reply::Pending(id, result_rx) => match result_rx.recv() {
-                Ok(r) => Msg::Result {
-                    id,
-                    value: r.value,
-                    latency_us: r.latency.as_micros() as u64,
-                    error: r.error,
-                },
+                Ok(r) => result_msg(id, r),
                 // Defensive: the coordinator guarantees a reply; if the
                 // channel ever drops, surface it as an explicit error.
-                Err(_) => Msg::Result {
-                    id,
-                    value: 0,
-                    latency_us: 0,
-                    error: Some("coordinator dropped the reply channel".to_string()),
-                },
+                Err(_) => dropped_result_msg(id),
             },
         };
         if writer.send(&msg).is_err() {
-            // Peer gone: stop writing; the read loop will see EOF.
+            // Peer gone, or not draining within the bounded write
+            // timeout. Shut the socket down so the read loop unblocks
+            // too (its reads have no timeout) — otherwise a wedged
+            // writer would still pin the connection pair.
+            let _ = writer.stream().shutdown(std::net::Shutdown::Both);
             break;
         }
     }

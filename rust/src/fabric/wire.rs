@@ -65,6 +65,13 @@ pub const MIN_WIRE_VERSION: u8 = 1;
 /// any real fabric message).
 pub const MAX_FRAME: usize = 1 << 24;
 
+/// Bytes of length prefix ahead of every frame body (`u32` LE). The
+/// blocking readers consume it with a fixed-size `read_exact`; the
+/// epoll data plane's incremental decoder
+/// ([`crate::fabric::auth::FrameDecoder`]) buffers until at least this
+/// many bytes have arrived before it can even learn the body length.
+pub const FRAME_HEADER_LEN: usize = 4;
+
 /// One fabric message. Submits carry a client-chosen `id` echoed by the
 /// matching `Result`, so responses can be delivered out of order and
 /// retried requests re-keyed across shards.

@@ -61,6 +61,12 @@
 //!                                     # Default target: an in-process
 //!                                     # coordinator (fabric flags swap
 //!                                     # in a router)
+//! remus loadgen --connections 1,8,64,256
+//!                                     # knee-vs-connection-count mode:
+//!                                     # fresh 2-shard loopback fleets
+//!                                     # swept under each data plane,
+//!                                     # C client routers per point;
+//!                                     # writes BENCH_loadgen_epoll.json
 //! remus top [--shards a:p,b:p | --listen-reg addr] [--watch
 //!            --interval-ms 1000 --rounds N]
 //!                                     # §Telemetry live fleet
@@ -103,6 +109,15 @@
 //! replay-protected). Without the flag the wire stays plaintext and
 //! rejects sealed peers — mixed fleets fail loudly, never silently.
 //!
+//! Every fabric role also accepts `--data-plane epoll|threads`
+//! (§Scale, wire-compatible — frames are identical): which transport
+//! carries the data connections. `threads` (the default) is the
+//! blocking thread-per-connection reference; `epoll` multiplexes all
+//! connections onto one readiness loop per process. The
+//! `REMUS_DATA_PLANE` environment variable overrides the default when
+//! the flag is absent, which is how the integration and chaos suites
+//! re-run unchanged under the reactor.
+//!
 //! `fabric-serve` and `fabric-route` also take the flight-recorder
 //! flags (§Observability, wire v6): `--journal-dir <dir>` spills the
 //! reliability journal into a checksummed, segment-rotated WAL that
@@ -136,7 +151,8 @@ use remus::coordinator::{Coordinator, CoordinatorConfig, MetricsSnapshot, Submit
 use remus::errs::ErrorModel;
 use remus::fabric::loadgen::{self, LoadgenConfig};
 use remus::fabric::{
-    shutdown_endpoint_auth, FabricServer, Psk, RouteOptions, Router, RouterConfig, ServeOptions,
+    shutdown_endpoint_auth, DataPlane, FabricServer, Psk, RouteOptions, Router, RouterConfig,
+    ServeOptions,
 };
 use remus::health::{HealthConfig, WearModel};
 use remus::isa::ScheduleConfig;
@@ -580,6 +596,18 @@ fn psk_from_args(args: &Args) -> Result<Option<Psk>> {
     args.get("psk-file").map(Psk::load).transpose()
 }
 
+/// Resolve `--data-plane` (§Scale): `epoll` or `threads`. Without the
+/// flag the `REMUS_DATA_PLANE` environment override applies, then the
+/// threads default — the same resolution the `ServeOptions` and
+/// `RouterConfig` defaults run, so the flag only needs explicit
+/// forwarding where a config is built field by field.
+fn data_plane_from_args(args: &Args) -> Result<DataPlane> {
+    match args.get("data-plane") {
+        Some(s) => DataPlane::parse(s),
+        None => Ok(DataPlane::from_env_or(DataPlane::Threads)),
+    }
+}
+
 /// WAL tuning from the shared flag surface (inert without
 /// `--journal-dir`): `--wal-segment-bytes` sets the rotation
 /// threshold, `--wal-max-bytes` the per-directory footprint bound,
@@ -617,6 +645,7 @@ fn router_from_args(
         heartbeat_timeout: std::time::Duration::from_millis(args.get_or("hb-timeout-ms", 1000u64)),
         psk: psk_from_args(args)?,
         trace_sample: args.get_or("trace-sample", trace_default),
+        data_plane: data_plane_from_args(args)?,
     };
     let opts = RouteOptions {
         journal_dir: args.get("journal-dir").map(std::path::PathBuf::from),
@@ -680,6 +709,8 @@ fn fabric_serve(args: &Args) -> Result<()> {
         journal_dir: args.get("journal-dir").map(std::path::PathBuf::from),
         metrics_addr: args.get("metrics-addr").map(str::to_string),
         wal: wal_from_args(args),
+        data_plane: data_plane_from_args(args)?,
+        ..ServeOptions::default()
     };
     let server = FabricServer::start_with_options(addr, shard_config(args), opts)?;
     // The LISTENING banner must stay the first stdout line: the
@@ -792,6 +823,7 @@ fn spawn_shard(
         "partitions",
         "wal-segment-bytes",
         "wal-max-bytes",
+        "data-plane",
     ];
     for key in keys {
         if let Some(v) = args.get(key) {
@@ -872,6 +904,7 @@ fn fabric_soak(args: &Args) -> Result<()> {
                 retry_window: std::time::Duration::from_secs(3),
                 listen: (spare_shards > 0).then(|| "127.0.0.1:0".to_string()),
                 psk: psk_from_args(args)?,
+                data_plane: data_plane_from_args(args)?,
                 ..Default::default()
             };
             let static_addrs = addrs.clone();
@@ -1121,6 +1154,13 @@ fn loadgen_cmd(args: &Args) -> Result<()> {
         window: args.get_or("window", 1024usize),
         ..Default::default()
     };
+    // --connections switches to the knee-vs-connection-count mode
+    // (§Scale): self-hosted loopback fleets swept under each data
+    // plane instead of one external target.
+    if args.get("connections").is_some() {
+        let out = args.get("out").unwrap_or("BENCH_loadgen_epoll.json").to_string();
+        return loadgen_connections(args, &qps_points, &cfg, &out);
+    }
     let out = args.get("out").unwrap_or("BENCH_loadgen.json").to_string();
     // Target: a fabric router (static shards and/or registration) when
     // any fabric flag is given, the in-process coordinator otherwise —
@@ -1146,6 +1186,113 @@ fn loadgen_cmd(args: &Args) -> Result<()> {
         coord.shutdown();
         res
     }
+}
+
+/// §Scale knee-vs-connections sweep (`remus loadgen --connections
+/// 1,8,64,256`): for each data plane (threads always, epoll where the
+/// platform supports it) and each connection count C, self-host a
+/// fresh 2-shard loopback fleet on that plane, fan the open-loop QPS
+/// sweep out over C routers — each owning its own data connections,
+/// so the serving side really carries C conn-thread pairs or C
+/// reactor registrations — and record where the knee lands. Writes
+/// `BENCH_loadgen_epoll.json`; CI gates the epoll knee at 64
+/// connections against the threads knee from the *same* run.
+fn loadgen_connections(
+    args: &Args,
+    qps_points: &[f64],
+    cfg: &LoadgenConfig,
+    out: &str,
+) -> Result<()> {
+    let mut conns: Vec<usize> = Vec::new();
+    for tok in args.get("connections").unwrap_or("1,8,64,256").split(',') {
+        let c: usize = tok
+            .trim()
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--connections: cannot parse count {tok:?}"))?;
+        anyhow::ensure!(c >= 1, "--connections counts must be at least 1");
+        conns.push(c);
+    }
+    anyhow::ensure!(!conns.is_empty(), "--connections needs a comma-separated list of counts");
+    let planes = if remus::fabric::reactor::supported() {
+        vec![DataPlane::Threads, DataPlane::Epoll]
+    } else {
+        eprintln!(
+            "loadgen: the epoll data plane is not supported on this platform; \
+             sweeping threads only"
+        );
+        vec![DataPlane::Threads]
+    };
+    let mut reports: Vec<loadgen::ConnSweepReport> = Vec::new();
+    for plane in planes {
+        let mut points = Vec::new();
+        for &c in &conns {
+            // A fresh fleet per point: two shards (so consistent
+            // hashing spreads the kinds) serving C client routers.
+            let mk_server = || {
+                FabricServer::start_with_options(
+                    "127.0.0.1:0",
+                    shard_config(args),
+                    ServeOptions { data_plane: plane, ..ServeOptions::default() },
+                )
+            };
+            let s1 = mk_server()?;
+            let s2 = mk_server()?;
+            let addrs = vec![s1.local_addr().to_string(), s2.local_addr().to_string()];
+            let mut routers = Vec::with_capacity(c);
+            for _ in 0..c {
+                routers.push(Router::with_config(
+                    &addrs,
+                    RouterConfig { data_plane: plane, ..Default::default() },
+                )?);
+            }
+            let multi = loadgen::MultiConn::new(routers);
+            println!("connections sweep [{plane}]: {c} connection(s) at {qps_points:?} qps");
+            let sweep = loadgen::sweep(&multi, cfg, qps_points);
+            for p in &sweep.points {
+                anyhow::ensure!(
+                    p.wrong == 0 && p.errors == 0,
+                    "loadgen verification failed at {c} connections / {} qps: \
+                     ok {}/{} wrong {} errors {}",
+                    p.offered_qps,
+                    p.ok,
+                    p.requests,
+                    p.wrong,
+                    p.errors
+                );
+            }
+            match sweep.knee_qps {
+                Some(k) => println!("  knee at {c} connection(s): {k:.0} qps"),
+                None => println!("  knee at {c} connection(s): none (every point collapsed)"),
+            }
+            for r in multi.into_inner() {
+                r.shutdown();
+            }
+            s1.shutdown();
+            s2.shutdown();
+            points.push(loadgen::ConnPoint {
+                connections: c,
+                points: sweep.points,
+                knee_qps: sweep.knee_qps,
+            });
+        }
+        reports.push(loadgen::ConnSweepReport { plane: plane.to_string(), points });
+    }
+    // Intra-run verdict: both planes measured the same schedule on the
+    // same machine, so their knees are directly comparable.
+    if let [threads, epoll] = &reports[..] {
+        let fmt =
+            |k: Option<f64>| k.map_or_else(|| "none".to_string(), |q| format!("{q:.0} qps"));
+        for &c in &conns {
+            println!(
+                "verdict at {c} connection(s): threads knee {} vs epoll knee {}",
+                fmt(threads.knee_at(c)),
+                fmt(epoll.knee_at(c))
+            );
+        }
+    }
+    loadgen::write_connections_json(out, cfg, qps_points, &reports)?;
+    println!("(machine-readable results written to {out})");
+    Ok(())
 }
 
 /// One `remus top` frame: merged fleet metrics, per-kind counters,

@@ -7,6 +7,12 @@
 //! the bounded submit retry window during a total outage, data-path
 //! heartbeat detection of half-open shards, re-registration across a
 //! *router* restart, and the open-loop load generator over the fabric.
+//!
+//! Every fleet here builds its server and router configs through
+//! `..Default::default()`, whose data plane follows the
+//! `REMUS_DATA_PLANE` environment variable — so the whole suite
+//! re-runs unchanged under the epoll reactor (`REMUS_DATA_PLANE=epoll
+//! cargo test`; CI runs the key scenarios both ways).
 
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -15,7 +21,10 @@ use std::time::{Duration, Instant};
 
 use remus::coordinator::{Coordinator, CoordinatorConfig, Submitter};
 use remus::fabric::wire::{read_msg, write_msg, Msg};
-use remus::fabric::{loadgen, probe_health, shutdown_endpoint, FabricServer, Router, RouterConfig};
+use remus::fabric::{
+    loadgen, probe_health, shutdown_endpoint, DataPlane, FabricServer, Router, RouterConfig,
+    ServeOptions,
+};
 use remus::health::{HealthConfig, WearModel};
 use remus::mmpu::FunctionKind;
 
@@ -774,6 +783,91 @@ fn open_loop_loadgen_over_the_fabric_verifies_all_replies() {
     router.shutdown();
     s1.shutdown();
     s2.shutdown();
+}
+
+/// Tentpole acceptance (§Scale data planes): the same request stream
+/// through a threads fleet and an epoll fleet — both sides of both
+/// fleets explicitly configured, not env-inherited — produces
+/// bit-identical values. The reactor changes scheduling, never bytes.
+#[test]
+fn epoll_and_threads_planes_are_bit_identical() {
+    if !remus::fabric::reactor::supported() {
+        eprintln!("skipping: the epoll data plane is not supported on this platform");
+        return;
+    }
+    let run_plane = |plane: DataPlane| {
+        let opts = || ServeOptions { data_plane: plane, ..ServeOptions::default() };
+        let s1 = FabricServer::start_with_options("127.0.0.1:0", shard_cfg(0xA), opts()).unwrap();
+        let s2 = FabricServer::start_with_options("127.0.0.1:0", shard_cfg(0xB), opts()).unwrap();
+        let addrs = vec![s1.local_addr().to_string(), s2.local_addr().to_string()];
+        let router = Router::with_config(
+            &addrs,
+            RouterConfig { data_plane: plane, ..Default::default() },
+        )
+        .unwrap();
+        let k0 = kind_on_shard(&router, 0);
+        let k1 = kind_on_shard(&router, 1);
+        let reqs: Vec<(FunctionKind, u64, u64)> = (0..800u64)
+            .map(|i| (if i % 2 == 0 { k0 } else { k1 }, i % 251, (i * 7 + 3) % 251))
+            .collect();
+        let values = run_checked(&router, &reqs);
+        let m = router.metrics();
+        assert_eq!(m.completed, 800, "both shards served the whole stream");
+        router.shutdown();
+        s1.shutdown();
+        s2.shutdown();
+        values
+    };
+    assert_eq!(
+        run_plane(DataPlane::Threads),
+        run_plane(DataPlane::Epoll),
+        "the data plane must never change a value"
+    );
+}
+
+/// Regression (bounded reply writes): a peer that floods submits but
+/// never drains its replies used to wedge the threads plane's writer
+/// forever (`set_write_timeout(None)`). With the bounded timeout the
+/// server cuts that connection off, and the shard keeps serving
+/// well-behaved clients.
+#[test]
+fn non_draining_peer_is_disconnected_and_server_keeps_serving() {
+    let opts = ServeOptions {
+        data_plane: DataPlane::Threads,
+        reply_write_timeout: Duration::from_millis(200),
+        ..ServeOptions::default()
+    };
+    let server = FabricServer::start_with_options("127.0.0.1:0", shard_cfg(0x9), opts).unwrap();
+    let addr = server.local_addr().to_string();
+
+    // Flood submits without ever reading a reply: the reply backlog
+    // fills both socket buffers, the server's writer hits its bounded
+    // timeout and shuts the connection down — visible here as a write
+    // error once the reset propagates back.
+    let mut flood = TcpStream::connect(&addr).unwrap();
+    let deadline = Instant::now() + Duration::from_secs(30);
+    let mut cut_off = false;
+    for i in 0..400_000u64 {
+        let msg = Msg::Submit {
+            id: i,
+            kind: FunctionKind::Add(8),
+            a: i % 251,
+            b: (i * 3) % 251,
+            trace: 0,
+        };
+        if write_msg(&mut flood, &msg).is_err() {
+            cut_off = true;
+            break;
+        }
+        assert!(Instant::now() < deadline, "server never cut off the non-draining peer");
+    }
+    assert!(cut_off, "the undrained reply backlog must get this connection closed");
+
+    // The shard is still healthy for clients that actually read.
+    let (serving, workers, routable, _) = probe_health(&addr).unwrap();
+    assert!(serving, "shard must survive the misbehaving peer");
+    assert_eq!((workers, routable), (2, 2));
+    server.shutdown();
 }
 
 #[test]

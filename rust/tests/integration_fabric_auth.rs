@@ -6,6 +6,10 @@
 //! rejected with zero ring effect and zero lost replies. A slowloris
 //! trickler at either port is cut by the bounded frame deadline without
 //! ever stalling the accept loops.
+//!
+//! Server and router configs here use `..Default::default()`, so the
+//! suite re-runs unchanged under the epoll data plane via
+//! `REMUS_DATA_PLANE=epoll` (CI runs the auth rejections both ways).
 
 use std::io::{Read, Write};
 use std::net::{Shutdown, TcpListener, TcpStream};

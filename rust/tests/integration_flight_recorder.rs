@@ -15,6 +15,10 @@
 //!   and scrapes the router's `/metrics` endpoint, whose
 //!   submitted/completed counters must match the merged
 //!   `MetricsSnapshot` exactly.
+//!
+//! Server and router configs here default their data plane, so the
+//! suite re-runs unchanged under the epoll reactor via
+//! `REMUS_DATA_PLANE=epoll`.
 
 use std::collections::HashSet;
 use std::io::{Read, Write};
@@ -161,6 +165,7 @@ fn restart_shard(
             journal_dir: journal_dir.cloned(),
             metrics_addr: None,
             wal: fast_wal(),
+            ..ServeOptions::default()
         };
         match FabricServer::start_with_options(addr, cfg.clone(), opts) {
             Ok(s) => return s,

@@ -8,6 +8,10 @@
 //! sampled request's trace must cover every pipeline stage with
 //! non-zero spans whose durations fit inside the router-measured
 //! end-to-end latency.
+//!
+//! Server and router configs here use `..Default::default()`, so the
+//! suite re-runs unchanged under the epoll data plane via
+//! `REMUS_DATA_PLANE=epoll`.
 
 use std::collections::HashSet;
 use std::time::{Duration, Instant};
